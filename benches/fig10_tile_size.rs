@@ -1,0 +1,43 @@
+//! Experiment E10 — paper Fig. 10: DGEMM performance vs tile size (the
+//! library's only tuning parameter, §V-B) at N = 14336 and 16384 on
+//! simulated Everest (3 GPUs).
+//!
+//! Trade-off under test: large tiles saturate the GPU kernel and the
+//! PCI-E but shrink the task pool (Eq. 2 parallelism); small tiles
+//! starve the kernel. The curve should rise with T and plateau around
+//! T ≈ 1024 — where the paper pins its benchmarks.
+
+use blasx::api::types::Routine;
+use blasx::api::Dtype;
+use blasx::bench::{print_table, write_json};
+use blasx::coordinator::{run_sim, square_workload, Policy, RunConfig};
+use blasx::sim::everest;
+use blasx::util::json::Json;
+
+fn main() {
+    let machine = everest(3);
+    let tiles = [128usize, 256, 512, 768, 1024, 1536, 2048];
+    let mut json = Json::obj();
+    let mut rows = Vec::new();
+    for n in [14336usize, 16384] {
+        let mut arr = Vec::new();
+        let mut row = vec![format!("N={n}")];
+        for &t in &tiles {
+            let w = square_workload(Routine::Gemm, n, t, Dtype::F64);
+            let cfg = RunConfig { t, policy: Policy::Blasx, ..Default::default() };
+            let rep = run_sim(&cfg, &machine, &w);
+            let gf = rep.gflops(w.total_flops());
+            row.push(format!("{gf:.0}"));
+            arr.push(Json::Num(gf));
+        }
+        rows.push(row);
+        json.set(&format!("n{n}"), Json::Arr(arr));
+    }
+    json.set("tiles", Json::Arr(tiles.iter().map(|&t| Json::Num(t as f64)).collect()));
+    let mut header = vec![""];
+    let tile_labels: Vec<String> = tiles.iter().map(|t| format!("T={t}")).collect();
+    header.extend(tile_labels.iter().map(String::as_str));
+    print_table("Fig 10: DGEMM GFLOPS vs tile size (3-GPU Everest)", &header, &rows);
+    write_json("fig10_tile_size", &json);
+    println!("\npaper shape: rising curve, plateau by T≈1024 (the benchmark setting).");
+}

@@ -1,0 +1,67 @@
+//! Experiment E2 — paper Fig. 1: single-GPU DGEMM execution-profile
+//! snapshots. SuperMatrix shows blocking, non-overlapped transfers;
+//! StarPU partial overlap and low occupancy; cuBLAS-XT contiguous
+//! transfer pressure; BLASX tight kernel packing with hidden transfers.
+//!
+//! We render the same four snapshots as ASCII gantts (kernel rows `#`
+//! per stream, transfer rows `>`/`<`/`=`) from the simulated traces, and
+//! quantify each with its COMPT/COMM/OTHER split.
+
+use blasx::api::types::Routine;
+use blasx::api::Dtype;
+use blasx::bench::{print_table, write_json};
+use blasx::coordinator::{run_sim, square_workload, Policy, RunConfig};
+use blasx::sim::everest;
+use blasx::trace::{device_profile, gantt};
+use blasx::util::json::Json;
+
+fn main() {
+    let n = 8192;
+    let t = 1024;
+    let machine = everest(1);
+    let w = square_workload(Routine::Gemm, n, t, Dtype::F64);
+
+    // "StarPU" per the paper's Fig. 1b: partial overlap, low saturation —
+    // its published DGEMM used a single stream per GPU with eager
+    // transfers; we model it as the SuperMatrix central queue but with
+    // async (non-blocking) issue.
+    let scenarios: [(&str, Policy); 4] = [
+        ("SuperMatrix (Fig 1a)", Policy::SuperMatrix),
+        ("StarPU-like (Fig 1b)", Policy::Magma),
+        ("cuBLAS-XT (Fig 1c)", Policy::CublasXt),
+        ("BLASX (Fig 1d)", Policy::Blasx),
+    ];
+
+    let mut rows = Vec::new();
+    let mut json = Json::obj();
+    for (label, policy) in scenarios {
+        let cfg = RunConfig { t, policy, ..Default::default() };
+        let rep = run_sim(&cfg, &machine, &w);
+        println!("\n--- {label}: N={n} 1×K40c ---");
+        print!("{}", gantt::render(&rep.trace, 100));
+        let p = device_profile(&rep.trace, 0);
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.3}", rep.makespan),
+            format!("{:.0}", rep.gflops(w.total_flops())),
+            format!("{:.3}", p.compt),
+            format!("{:.3}", p.comm),
+            format!("{:.3}", p.other),
+        ]);
+        let mut o = Json::obj();
+        o.set("makespan", Json::Num(rep.makespan));
+        o.set("gflops", Json::Num(rep.gflops(w.total_flops())));
+        o.set("compt", Json::Num(p.compt));
+        o.set("comm", Json::Num(p.comm));
+        o.set("other", Json::Num(p.other));
+        json.set(policy.name(), o);
+    }
+    print_table(
+        "Fig 1 quantified: single-GPU DGEMM profile",
+        &["scheduler", "makespan(s)", "GFLOPS", "COMPT", "COMM", "OTHER"],
+        &rows,
+    );
+    write_json("fig1_timeline", &json);
+    println!("\npaper shape: BLASX packs kernels seamlessly (COMM≈0), cuBLAS-XT");
+    println!("saturates the PCI-E (large COMM), SuperMatrix serializes (large OTHER+COMM).");
+}

@@ -1,0 +1,75 @@
+//! Experiment E14 — the Makalu heterogeneity claim (paper §V, Fig. 7
+//! discussion): on 2×K40 + 2×TITAN X (DP-crippled Maxwell), BLASX keeps
+//! tracking the machine's useful DP capacity while static schedulers
+//! collapse — adding slow devices *hurts* cuBLAS-XT.
+
+use blasx::api::types::Routine;
+use blasx::api::Dtype;
+use blasx::bench::{fmt_gf, print_table, write_json};
+use blasx::coordinator::{run_sim, square_workload, Policy, RunConfig};
+use blasx::sim::makalu;
+use blasx::trace::balance_gap;
+use blasx::util::json::Json;
+
+fn main() {
+    let t = 1024;
+    let n = 16384;
+    let w = square_workload(Routine::Gemm, n, t, Dtype::F64);
+    let flops = w.total_flops();
+
+    let mut rows = Vec::new();
+    let mut json = Json::obj();
+    for gpus in 1..=4usize {
+        let machine = makalu(gpus);
+        let mut row = vec![gpus.to_string()];
+        let mut o = Json::obj();
+        for policy in [Policy::Blasx, Policy::CublasXt, Policy::Parsec, Policy::SuperMatrix] {
+            let cfg = RunConfig { t, policy, ..Default::default() };
+            let rep = run_sim(&cfg, &machine, &w);
+            row.push(fmt_gf(rep.feasible, rep.gflops(flops)));
+            if policy == Policy::Blasx && rep.feasible {
+                row.push(format!("{:.3}s", balance_gap(&rep.trace)));
+                row.push(format!("{:?}", rep.tasks_per_worker));
+            }
+            o.set(policy.name(), Json::Num(rep.gflops(flops)));
+        }
+        json.set(&format!("gpus{gpus}"), o);
+        rows.push(row);
+    }
+    print_table(
+        "Fig 7 (Makalu): DGEMM N=16384 across 1-4 heterogeneous GPUs",
+        &["gpus", "blasx", "gap", "tasks/device", "cublasxt", "parsec", "supermatrix"],
+        &rows,
+    );
+    write_json("fig7_makalu", &json);
+    println!("\nuseful DP capacity: 1.2 / 2.4 / 2.59 / 2.78 TFLOPS for 1/2/3/4 GPUs —");
+    println!("BLASX should track it (speed-proportional task counts); static");
+    println!("round-robin must wait for the TITANs and falls *below* its 2-GPU point.");
+
+    // --- the reversal: in single precision the Maxwells are the FAST
+    // devices (5.0 vs 3.3 TFLOPS). Demand-driven scheduling must flip
+    // the task split without any configuration change.
+    let wsp = square_workload(Routine::Gemm, 16384, t, Dtype::F32);
+    let mut rows = Vec::new();
+    let mut jsp = Json::obj();
+    for gpus in [2usize, 4] {
+        let machine = makalu(gpus);
+        let cfg = RunConfig { t, ..Default::default() };
+        let rep = run_sim(&cfg, &machine, &wsp);
+        rows.push(vec![
+            gpus.to_string(),
+            format!("{:.0}", rep.gflops(wsp.total_flops())),
+            format!("{:?}", rep.tasks_per_worker),
+        ]);
+        jsp.set(&format!("gpus{gpus}"), Json::Num(rep.gflops(wsp.total_flops())));
+    }
+    print_table(
+        "SGEMM on Makalu: the TITANs are now the fast devices",
+        &["gpus", "blasx GFLOPS", "tasks/device (K40, K40, TITAN, TITAN)"],
+        &rows,
+    );
+    write_json("fig7_makalu_sgemm", &jsp);
+    println!("\nSP capacity: K40 3.3, TITAN X 5.0 TFLOPS — the task split should");
+    println!("invert (TITANs take MORE) with zero configuration: the queue is the");
+    println!("only load balancer (paper §IV-C).");
+}

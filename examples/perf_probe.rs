@@ -1,0 +1,34 @@
+//! Perf probe: isolate the real-engine overhead vs the raw host kernel.
+use blasx::api::types::Trans;
+use blasx::api::{self, Context};
+use blasx::hostblas;
+use blasx::util::prng::Prng;
+use blasx::util::stats::gflops;
+
+fn main() {
+    let n = 1024;
+    let mut p = Prng::new(1);
+    let mut a = vec![0.0f64; n * n];
+    let mut b = vec![0.0f64; n * n];
+    let mut c = vec![0.0f64; n * n];
+    p.fill_f64(&mut a, -1.0, 1.0);
+    p.fill_f64(&mut b, -1.0, 1.0);
+    let flops = 2.0 * (n as f64).powi(3);
+
+    // raw single-thread blocked kernel (roofline for this box)
+    let t0 = std::time::Instant::now();
+    hostblas::gemm_blocked(Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut c, n);
+    let raw = t0.elapsed().as_secs_f64();
+    println!("hostblas 1-thread:      {:.3}s {:.2} GF", raw, gflops(flops, raw));
+
+    // runtime, 1 device (pure overhead vs raw)
+    for devices in [1usize, 2, 4] {
+        for t in [128usize, 256, 512] {
+            let ctx = Context::new(devices).with_tile(t);
+            let t0 = std::time::Instant::now();
+            api::dgemm(&ctx, Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut c, n).unwrap();
+            let s = t0.elapsed().as_secs_f64();
+            println!("runtime dev={devices} T={t}:  {:.3}s {:.2} GF  (x{:.2} vs raw)", s, gflops(flops, s), s / raw);
+        }
+    }
+}

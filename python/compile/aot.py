@@ -1,0 +1,120 @@
+"""AOT compiler: lower every tile-op variant to HLO text artifacts.
+
+Run once at ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Per (variant, dtype, tile-size) it writes ``<name>_<dtype>_<T>.hlo.txt``
+plus a single ``manifest.json`` describing every artifact's argument
+signature, so the Rust runtime (rust/src/runtime/) can marshal literals
+without any Python at run time.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .model import REGISTRY  # noqa: E402
+
+DTYPES = {"f32": jnp.float32, "f64": jnp.float64}
+
+# The default artifact set the Rust runtime expects. Real-mode tile size
+# is 256 (CPU-budget analogue of the paper's 1024 on K40c — same
+# VMEM-pressure shape, tractable single-core wall-clock); 64 is built for
+# the fast test grid.
+DEFAULT_TILES = (64, 256)
+DEFAULT_DTYPES = ("f32", "f64")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def example_args(sig, t: int, dtype):
+    """ShapeDtypeStructs for one artifact's signature."""
+    tile = jax.ShapeDtypeStruct((t, t), dtype)
+    scalar = jax.ShapeDtypeStruct((), dtype)
+    return tuple(tile if s in ("a", "b", "c") else scalar for s in sig)
+
+
+def lower_variant(name: str, t: int, dt_name: str):
+    """Lower one (variant, tile, dtype) to HLO text. Returns (text, sig)."""
+    fn, sig = REGISTRY[name]
+    args = example_args(sig, t, DTYPES[dt_name])
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered), sig
+
+
+def build(out_dir: str, tiles, dtypes, names=None, quiet=False):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"tile_sizes": sorted(tiles), "dtypes": sorted(dtypes),
+                "kernels": {}}
+    # A partial rebuild (--only) must not orphan the other variants'
+    # artifacts: merge into the existing manifest.
+    man_path = os.path.join(out_dir, "manifest.json")
+    if names is not None and os.path.exists(man_path):
+        with open(man_path) as f:
+            old = json.load(f)
+        manifest["kernels"].update(old.get("kernels", {}))
+        manifest["tile_sizes"] = sorted(set(old.get("tile_sizes", [])) | set(tiles))
+        manifest["dtypes"] = sorted(set(old.get("dtypes", [])) | set(dtypes))
+    todo = sorted(names or REGISTRY.keys())
+    n_done = 0
+    for name in todo:
+        _, sig = REGISTRY[name]
+        manifest["kernels"][name] = {"args": list(sig)}
+        for dt_name in dtypes:
+            for t in tiles:
+                text, _ = lower_variant(name, t, dt_name)
+                fname = f"{name}_{dt_name}_{t}.hlo.txt"
+                with open(os.path.join(out_dir, fname), "w") as f:
+                    f.write(text)
+                n_done += 1
+                if not quiet:
+                    print(f"  [{n_done}] {fname} ({len(text)} chars)",
+                          file=sys.stderr)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    if not quiet:
+        print(f"wrote {n_done} artifacts + manifest.json to {out_dir}",
+              file=sys.stderr)
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts",
+                   help="artifact output directory")
+    p.add_argument("--tiles", default=",".join(str(t) for t in DEFAULT_TILES),
+                   help="comma-separated tile sizes")
+    p.add_argument("--dtypes", default=",".join(DEFAULT_DTYPES),
+                   help="comma-separated dtypes (f32,f64)")
+    p.add_argument("--only", default=None,
+                   help="comma-separated variant names (default: all)")
+    p.add_argument("--quiet", action="store_true")
+    args = p.parse_args()
+    tiles = tuple(int(x) for x in args.tiles.split(","))
+    dtypes = tuple(args.dtypes.split(","))
+    names = args.only.split(",") if args.only else None
+    build(args.out, tiles, dtypes, names, args.quiet)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Layer-1: the Pallas GEMM tile kernel — the paper's compute hot spot.
+
+The paper's hot spot is cuBLAS DGEMM on a K40c (threadblock tiling,
+shared-memory staging, warp-level MMA). This kernel re-expresses the same
+insight for TPU (see DESIGN.md §Hardware-Adaptation):
+
+* the ``pallas_call`` grid over ``(T/bm, T/bn, T/bk)`` plays the role of
+  the CUDA threadblock grid;
+* ``BlockSpec`` index maps express the HBM→VMEM staging schedule that CUDA
+  did with ``cp.async`` into shared memory;
+* the inner ``jnp.dot`` with ``preferred_element_type=f32`` targets the
+  MXU systolic array (bf16/f32-friendly 128-aligned shapes);
+* the accumulator lives in a VMEM scratch buffer across the k-steps of the
+  grid's innermost dimension (double-buffering of the next A/B blocks is
+  what the grid pipelining gives us for free on real hardware).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the artifact runs on
+the Rust CPU client while keeping the *structure* a TPU would execute.
+
+VMEM footprint at the default block (bm, bn, bk) = (128, 128, 128) in f32:
+3 blocks live (A, B, acc) + the next (A, B) in flight = 5 * 64 KiB ≈ 320
+KiB, far below the ~16 MiB VMEM budget — see DESIGN.md §Perf for the MXU
+utilization estimate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    """One (i, j, k) grid step: acc += A[i,k] @ B[k,j]; flush at k == K-1.
+
+    The grid iterates k innermost, so ``acc_ref`` (VMEM scratch) carries
+    the running sum for the (i, j) output block across k steps.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU-shaped block product, accumulated at f32 (or f64 for DP tiles).
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...],
+        preferred_element_type=acc_ref.dtype,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def pick_blocks(m: int, n: int, k: int):
+    """Largest MXU-aligned blocks that divide the tile.
+
+    Tiles are powers of two in BLASX (default T = 1024 on the paper's
+    machines, 256 in real-mode here), so 128-alignment holds whenever
+    T >= 128; smaller tiles fall back to the tile itself (single block).
+    """
+    def pick(d):
+        for b in (256, 128):
+            if d % b == 0:
+                return b
+        return d
+    return pick(m), pick(n), pick(k)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul_tile(a, b, *, interpret: bool = True):
+    """``a @ b`` over one tile pair via the Pallas blocked kernel."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch {k} vs {k2}"
+    bm, bn, bk = pick_blocks(m, n, k)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), a.dtype)],
+        interpret=interpret,
+    )(a, b)
+
+
+def gemm_update(a, b, c, alpha, beta, ta: str = "n", tb: str = "n",
+                *, interpret: bool = True):
+    """The full tile update ``c := alpha * op(a) @ op(b) + beta * c``.
+
+    Transposes are resolved at trace time (the paper's §III-C trick: the
+    runtime hands us the *raw* B_jk tile and asks for the ``t`` variant),
+    the product runs through the Pallas kernel, and the axpby epilogue is
+    fused by XLA into the same program.
+    """
+    at = a.T if ta == "t" else a
+    bt = b.T if tb == "t" else b
+    return alpha * matmul_tile(at, bt, interpret=interpret) + beta * c

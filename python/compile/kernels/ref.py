@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for the tile kernels (the correctness reference).
+
+Each function mirrors one tile-op variant from the Rust side's
+``TileOp::kernel_name()`` vocabulary (see rust/src/task/op.rs): the
+accumulator tile ``c`` is updated semantically in place, a new array is
+returned. These are deliberately written with the most transparent jnp
+expressions possible — no Pallas, no tiling — so they can serve as the
+oracle for both the Pallas kernels (L1) and the lowered tile graphs (L2).
+
+All functions take runtime scalars ``alpha``/``beta`` so a single lowered
+artifact serves every invocation.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def _op(x, trans: str):
+    """Apply a BLAS transpose flag ('n' or 't')."""
+    return x.T if trans == "t" else x
+
+
+def tri(a, uplo: str, diag: str):
+    """Materialize the triangular operand tri(A) that TRMM/TRSM read."""
+    n = a.shape[0]
+    out = jnp.triu(a) if uplo == "up" else jnp.tril(a)
+    if diag == "un":
+        out = out - jnp.diag(jnp.diag(out)) + jnp.eye(n, dtype=a.dtype)
+    return out
+
+
+def sym(a, uplo: str):
+    """Materialize sym(A): read the `uplo` triangle, mirror it."""
+    if uplo == "up":
+        u = jnp.triu(a)
+        return u + u.T - jnp.diag(jnp.diag(a))
+    lo = jnp.tril(a)
+    return lo + lo.T - jnp.diag(jnp.diag(a))
+
+
+# --- the tile-op vocabulary -------------------------------------------------
+
+def gemm(a, b, c, alpha, beta, ta: str = "n", tb: str = "n"):
+    """c := alpha * op(a) @ op(b) + beta * c   (the dominant kernel)."""
+    return alpha * _op(a, ta) @ _op(b, tb) + beta * c
+
+
+def syrk_diag(a, c, alpha, beta, trans: str = "n"):
+    """Diagonal tile of SYRK: c := alpha * op(a) op(a)^T + beta * c.
+
+    trans == 'n': A.A^T ; trans == 't': A^T.A. The full symmetric tile is
+    produced; the Rust side's WriteMask stores only the requested triangle.
+    """
+    p = a @ a.T if trans == "n" else a.T @ a
+    return alpha * p + beta * c
+
+
+def syr2k_diag(a, b, c, alpha, beta, trans: str = "n"):
+    """Diagonal tile of SYR2K: c := alpha*(op(a) op(b)^T + op(b) op(a)^T) + beta*c."""
+    if trans == "n":
+        p = a @ b.T + b @ a.T
+    else:
+        p = a.T @ b + b.T @ a
+    return alpha * p + beta * c
+
+
+def trmm_diag(a, c, alpha, side: str = "l", uplo: str = "up",
+              ta: str = "n", diag: str = "nu"):
+    """Diagonal tile of TRMM: c := alpha * op(tri(a)) @ c (left)
+    or c := alpha * c @ op(tri(a)) (right)."""
+    t = _op(tri(a, uplo, diag), ta)
+    return alpha * (t @ c) if side == "l" else alpha * (c @ t)
+
+
+def trsm_diag(a, c, alpha, side: str = "l", uplo: str = "up",
+              ta: str = "n", diag: str = "nu"):
+    """Diagonal tile of TRSM: solve op(tri(a)) X = alpha*c (left) or
+    X op(tri(a)) = alpha*c (right); returns X.
+
+    tri() already materializes the unit diagonal when diag == 'un', so the
+    solve itself always runs in non-unit mode.
+    """
+    t = _op(tri(a, uplo, diag), ta)
+    rhs = alpha * c
+    lower = (uplo == "lo") != (ta == "t")
+    return lax.linalg.triangular_solve(
+        t, rhs, left_side=(side == "l"), lower=lower, unit_diagonal=False)
+
+
+def symm_diag(a, b, c, alpha, beta, side: str = "l", uplo: str = "up"):
+    """Diagonal tile of SYMM: c := alpha * sym(a) @ b + beta*c (left) or
+    c := alpha * b @ sym(a) + beta*c (right)."""
+    s = sym(a, uplo)
+    p = s @ b if side == "l" else b @ s
+    return alpha * p + beta * c
+
+
+def scal(c, beta):
+    """c := beta * c (alpha == 0 / k == 0 quick path)."""
+    return beta * c

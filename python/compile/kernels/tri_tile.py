@@ -1,0 +1,138 @@
+"""Layer-1/2 boundary: diagonal-tile kernels (SYRK/SYR2K/TRMM/TRSM/SYMM).
+
+Paper Table I shows the full-GEMM kernel dominates every L3 routine
+(74–93% of flops already at N = 5K, rising with N); the diagonal-tile
+specials are the residue. We therefore route every *product* through the
+Pallas matmul kernel (the hot spot) and keep the cheap elementwise
+structure ops — triangle masks, symmetrization, the small triangular
+solve — as plain jnp/lax that XLA fuses around the Pallas call.
+
+The mask construction uses ``broadcasted_iota`` comparisons, which is the
+same row/col-predicate trick a TPU kernel would use in VMEM (there is no
+gather/scatter on the MXU path); see DESIGN.md §Hardware-Adaptation.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+from .gemm_tile import matmul_tile
+
+
+def tri_mask(n: int, uplo: str, dtype):
+    """1 inside the `uplo` triangle (diagonal included), else 0."""
+    r = lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    c = lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    keep = (r <= c) if uplo == "up" else (r >= c)
+    return keep.astype(dtype)
+
+
+def tri_operand(a, uplo: str, diag: str):
+    """tri(A): zero outside the triangle; force unit diagonal if asked."""
+    n = a.shape[0]
+    t = a * tri_mask(n, uplo, a.dtype)
+    if diag == "un":
+        r = lax.broadcasted_iota(jnp.int32, (n, n), 0)
+        c = lax.broadcasted_iota(jnp.int32, (n, n), 1)
+        eye = (r == c).astype(a.dtype)
+        t = t * (1 - eye) + eye
+    return t
+
+
+def sym_operand(a, uplo: str):
+    """sym(A): mirror the `uplo` triangle across the diagonal."""
+    n = a.shape[0]
+    m = tri_mask(n, uplo, a.dtype)
+    r = lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    c = lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    eye = (r == c).astype(a.dtype)
+    t = a * m
+    return t + t.T - a * eye
+
+
+def syrk_diag_update(a, c, alpha, beta, trans: str = "n", *, interpret=True):
+    """c := alpha * op(a) op(a)^T + beta * c (full tile; Rust masks the store)."""
+    at = a if trans == "n" else a.T
+    return alpha * matmul_tile(at, at.T, interpret=interpret) + beta * c
+
+
+def syr2k_diag_update(a, b, c, alpha, beta, trans: str = "n", *, interpret=True):
+    """c := alpha*(op(a) op(b)^T + op(b) op(a)^T) + beta*c."""
+    if trans == "n":
+        p = matmul_tile(a, b.T, interpret=interpret) + matmul_tile(b, a.T, interpret=interpret)
+    else:
+        p = matmul_tile(a.T, b, interpret=interpret) + matmul_tile(b.T, a, interpret=interpret)
+    return alpha * p + beta * c
+
+
+def trmm_diag_update(a, c, alpha, side: str, uplo: str, ta: str, diag: str,
+                     *, interpret=True):
+    """c := alpha * op(tri(a)) @ c (left) or alpha * c @ op(tri(a)) (right)."""
+    t = tri_operand(a, uplo, diag)
+    if ta == "t":
+        t = t.T
+    p = matmul_tile(t, c, interpret=interpret) if side == "l" \
+        else matmul_tile(c, t, interpret=interpret)
+    return alpha * p
+
+
+def _solve_lower_left(t_mat, b):
+    """Forward substitution for lower-triangular ``t_mat @ X = b``.
+
+    Written as a ``fori_loop`` of masked matvecs so it lowers to plain HLO
+    (while + dot). ``lax.linalg.triangular_solve`` would emit a typed-FFI
+    LAPACK custom-call that xla_extension 0.5.1 (the Rust runtime's XLA)
+    refuses to compile; this form round-trips. O(T^3/2) work — the same
+    as a native trsm and a negligible share of any task (paper Table I).
+    """
+    n = t_mat.shape[0]
+    idx = lax.broadcasted_iota(jnp.int32, (n,), 0)
+
+    def body(i, x):
+        row = t_mat[i, :]
+        mask = (idx < i).astype(t_mat.dtype)
+        contrib = (row * mask) @ x  # rows >= i are masked out
+        xi = (b[i, :] - contrib) / t_mat[i, i]
+        return x.at[i, :].set(xi)
+
+    return lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def trsm_diag_update(a, c, alpha, side: str, uplo: str, ta: str, diag: str):
+    """Solve op(tri(a)) X = alpha*c (left) / X op(tri(a)) = alpha*c (right).
+
+    Every case canonicalizes to the lower-left forward substitution:
+    an upper-triangular solve is the reversal-conjugated lower solve
+    (J U J is lower-triangular for the flip matrix J), and a right-side
+    solve is the transposed left-side solve.
+    """
+    t = tri_operand(a, uplo, diag)
+    if ta == "t":
+        t = t.T
+    lower = (uplo == "lo") != (ta == "t")
+    rhs = alpha * c
+    if side == "r":
+        # X op(T) = rhs  <=>  op(T)^T X^T = rhs^T
+        t, rhs, lower = t.T, rhs.T, not lower
+    if not lower:
+        # U x = b  <=>  (JUJ)(Jx) = Jb with J = index reversal
+        t = jnp.flip(t, (0, 1))
+        rhs = jnp.flip(rhs, 0)
+    x = _solve_lower_left(t, rhs)
+    if not lower:
+        x = jnp.flip(x, 0)
+    if side == "r":
+        x = x.T
+    return x
+
+
+def symm_diag_update(a, b, c, alpha, beta, side: str, uplo: str, *, interpret=True):
+    """c := alpha * sym(a) @ b + beta*c (left) / alpha * b @ sym(a) + beta*c."""
+    s = sym_operand(a, uplo)
+    p = matmul_tile(s, b, interpret=interpret) if side == "l" \
+        else matmul_tile(b, s, interpret=interpret)
+    return alpha * p + beta * c
+
+
+def scal_update(c, beta):
+    """c := beta * c."""
+    return beta * c

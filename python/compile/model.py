@@ -1,0 +1,112 @@
+"""Layer-2: the tile-update graphs — one JAX function per tile-op variant.
+
+BLASX's "model" is the tile update of Eq. 1: every k-step of every L3
+routine is one of the functions registered here. The registry key is
+exactly ``TileOp::kernel_name()`` on the Rust side (rust/src/task/op.rs),
+so the coordinator can look artifacts up by name.
+
+Every variant takes its tile operands plus *runtime* scalars alpha/beta —
+one lowered artifact serves all scalar values. Argument order is recorded
+in the manifest that ``aot.py`` writes next to the artifacts.
+
+All product work inside these graphs runs through the Pallas kernel
+(kernels/gemm_tile.py); see kernels/tri_tile.py for the diagonal-tile
+split rationale.
+"""
+
+from .kernels import gemm_tile, tri_tile
+
+# arity signature tags: which tile operands the variant consumes, in order.
+# "a"/"b"/"c" are T x T tiles; scalars follow in the order listed.
+ABC_AB = ("a", "b", "c", "alpha", "beta")   # gemm, syr2k, symm
+AC_AB = ("a", "c", "alpha", "beta")         # syrk
+AC_A = ("a", "c", "alpha")                  # trmm, trsm
+C_B = ("c", "beta")                         # scal
+
+
+def _gemm_variant(ta, tb):
+    def fn(a, b, c, alpha, beta):
+        return (gemm_tile.gemm_update(a, b, c, alpha, beta, ta, tb),)
+    fn.__name__ = f"gemm_{ta}{tb}"
+    return fn, ABC_AB
+
+
+def _syrk_variant(trans):
+    def fn(a, c, alpha, beta):
+        return (tri_tile.syrk_diag_update(a, c, alpha, beta, trans),)
+    fn.__name__ = f"syrk_{trans}"
+    return fn, AC_AB
+
+
+def _syr2k_variant(trans):
+    def fn(a, b, c, alpha, beta):
+        return (tri_tile.syr2k_diag_update(a, b, c, alpha, beta, trans),)
+    fn.__name__ = f"syr2k_{trans}"
+    return fn, ABC_AB
+
+
+def _trmm_variant(side, uplo, ta, diag):
+    def fn(a, c, alpha):
+        return (tri_tile.trmm_diag_update(a, c, alpha, side, uplo, ta, diag),)
+    fn.__name__ = f"trmm_{side}_{uplo}_{ta}_{diag}"
+    return fn, AC_A
+
+
+def _trsm_variant(side, uplo, ta, diag):
+    def fn(a, c, alpha):
+        return (tri_tile.trsm_diag_update(a, c, alpha, side, uplo, ta, diag),)
+    fn.__name__ = f"trsm_{side}_{uplo}_{ta}_{diag}"
+    return fn, AC_A
+
+
+def _symm_variant(side, uplo):
+    def fn(a, b, c, alpha, beta):
+        return (tri_tile.symm_diag_update(a, b, c, alpha, beta, side, uplo),)
+    fn.__name__ = f"symm_{side}_{uplo}"
+    return fn, ABC_AB
+
+
+def _scal():
+    def fn(c, beta):
+        return (tri_tile.scal_update(c, beta),)
+    fn.__name__ = "scal"
+    return fn, C_B
+
+
+def build_registry():
+    """kernel_name -> (jax_fn, arg_signature).
+
+    Names stay in lockstep with ``TileOp::kernel_name()``:
+    gemm_{n|t}{n|t}, syrk_{up|lo}_{n|t}, syr2k_{up|lo}_{n|t},
+    trmm_{l|r}_{up|lo}_{n|t}_{nu|un}, trsm_…, symm_{l|r}_{up|lo}, scal.
+
+    SYRK/SYR2K compute the full symmetric tile (the Rust WriteMask stores
+    only the triangle), so both uplo spellings map to the same graph.
+    """
+    reg = {}
+    for ta in "nt":
+        for tb in "nt":
+            fn, sig = _gemm_variant(ta, tb)
+            reg[f"gemm_{ta}{tb}"] = (fn, sig)
+    for uplo in ("up", "lo"):
+        for trans in "nt":
+            fn, sig = _syrk_variant(trans)
+            reg[f"syrk_{uplo}_{trans}"] = (fn, sig)
+            fn2, sig2 = _syr2k_variant(trans)
+            reg[f"syr2k_{uplo}_{trans}"] = (fn2, sig2)
+    for side in "lr":
+        for uplo in ("up", "lo"):
+            for ta in "nt":
+                for diag in ("nu", "un"):
+                    fn, sig = _trmm_variant(side, uplo, ta, diag)
+                    reg[f"trmm_{side}_{uplo}_{ta}_{diag}"] = (fn, sig)
+                    fn2, sig2 = _trsm_variant(side, uplo, ta, diag)
+                    reg[f"trsm_{side}_{uplo}_{ta}_{diag}"] = (fn2, sig2)
+            fn, sig = _symm_variant(side, uplo)
+            reg[f"symm_{side}_{uplo}"] = (fn, sig)
+    fn, sig = _scal()
+    reg["scal"] = (fn, sig)
+    return reg
+
+
+REGISTRY = build_registry()

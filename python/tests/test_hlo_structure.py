@@ -1,0 +1,71 @@
+"""L2 performance sanity: structural checks on the lowered HLO.
+
+The paper's L2 target (DESIGN.md §Perf): no redundant recomputation, the
+product fused around a single dot per matmul, and the artifact's flop
+content matching the analytic count. We check the HLO text itself — the
+exact artifact the Rust runtime executes.
+"""
+
+import re
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import aot  # noqa: E402
+
+
+def count_ops(hlo: str, op: str) -> int:
+    return len(re.findall(rf"\b{op}\(", hlo))
+
+
+def test_gemm_artifact_has_single_fused_dot():
+    hlo, _ = aot.lower_variant("gemm_nn", 64, "f64")
+    # one dot for the product — no duplicated compute
+    assert count_ops(hlo, "dot") == 1, f"{count_ops(hlo, 'dot')} dots"
+    # the alpha/beta epilogue must not spawn extra full-tile copies of
+    # the product: multiplies stay elementwise (fusable)
+    assert "f64[64,64]" in hlo
+
+
+@pytest.mark.parametrize("name,max_dots", [
+    ("gemm_nt", 1),
+    ("syrk_up_n", 1),      # A·Aᵀ — one dot
+    ("syr2k_up_n", 2),     # A·Bᵀ + B·Aᵀ — XLA CSEs the second product
+                           # to transpose(first), so 1 dot in practice
+    ("symm_l_up", 1),      # sym(A)·B
+    ("trmm_l_up_n_nu", 1), # tri(A)·C
+])
+def test_product_op_counts(name, max_dots):
+    hlo, _ = aot.lower_variant(name, 64, "f64")
+    n = count_ops(hlo, "dot")
+    assert 1 <= n <= max_dots, f"{name}: {n} dots"
+
+
+def test_trsm_artifact_is_loop_not_custom_call():
+    """The solve must lower to a while-loop of dots (pure HLO): a LAPACK
+    custom-call would be rejected by the Rust runtime's XLA 0.5.1."""
+    hlo, _ = aot.lower_variant("trsm_l_up_n_nu", 64, "f64")
+    assert "custom-call" not in hlo, "custom-call cannot round-trip"
+    assert count_ops(hlo, "while") >= 1
+
+
+@pytest.mark.parametrize("t", [64, 256])
+def test_no_custom_calls_anywhere(t):
+    """Every artifact variant must stay custom-call-free (the CPU PJRT
+    plugin cannot execute Mosaic/LAPACK custom calls)."""
+    from compile.model import REGISTRY
+    # spot-check the structurally distinct families (full sweep runs in
+    # test_aot.py::test_every_variant_lowers at t=32)
+    for name in ["gemm_tt", "syrk_lo_t", "syr2k_lo_t", "trmm_r_lo_t_un",
+                 "trsm_r_lo_t_un", "symm_r_lo", "scal"]:
+        assert name in REGISTRY
+        hlo, _ = aot.lower_variant(name, t, "f64")
+        assert "custom-call" not in hlo, name
+
+
+def test_scal_is_trivially_small():
+    hlo, _ = aot.lower_variant("scal", 256, "f64")
+    assert count_ops(hlo, "dot") == 0
+    assert len(hlo) < 2000, "scal artifact should be a single multiply"

@@ -1,0 +1,151 @@
+"""L1 correctness: the Pallas tile kernels vs the pure-jnp oracle.
+
+This is the core numerics signal of the whole stack: the Rust runtime
+executes exactly these graphs (AOT-lowered), so Pallas == ref here means
+the coordinator computes correct tiles there.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from compile.kernels import gemm_tile, ref, tri_tile  # noqa: E402
+
+RNG = np.random.default_rng(0xB1A5)
+
+
+def rand(shape, dtype):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+def tol(dtype):
+    return 2e-4 if dtype == jnp.float32 else 1e-10
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+@pytest.mark.parametrize("t", [32, 64, 128])
+@pytest.mark.parametrize("ta,tb", [("n", "n"), ("n", "t"), ("t", "n"), ("t", "t")])
+def test_gemm_update_matches_ref(t, dtype, ta, tb):
+    a, b, c = (rand((t, t), dtype) for _ in range(3))
+    got = gemm_tile.gemm_update(a, b, c, 1.25, -0.5, ta, tb)
+    want = ref.gemm(a, b, c, 1.25, -0.5, ta, tb)
+    np.testing.assert_allclose(got, want, atol=tol(dtype) * t)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_gemm_nonsquare_blocks(dtype):
+    # matmul_tile itself handles rectangular operands (L2 uses it for
+    # masked triangular products where shapes stay square, but the kernel
+    # must not silently assume m == n == k).
+    a = rand((128, 64), dtype)
+    b = rand((64, 256), dtype)
+    got = gemm_tile.matmul_tile(a, b)
+    np.testing.assert_allclose(got, a @ b, atol=tol(dtype) * 64)
+
+
+@pytest.mark.parametrize("trans", ["n", "t"])
+@pytest.mark.parametrize("t", [32, 64])
+def test_syrk_diag(t, trans):
+    a, c = rand((t, t), jnp.float64), rand((t, t), jnp.float64)
+    got = tri_tile.syrk_diag_update(a, c, 0.7, 1.1, trans)
+    want = ref.syrk_diag(a, c, 0.7, 1.1, trans)
+    np.testing.assert_allclose(got, want, atol=1e-10 * t)
+    # result (at beta=0) must be symmetric
+    sym = tri_tile.syrk_diag_update(a, jnp.zeros_like(c), 1.0, 0.0, trans)
+    np.testing.assert_allclose(sym, sym.T, atol=1e-12 * t)
+
+
+@pytest.mark.parametrize("trans", ["n", "t"])
+@pytest.mark.parametrize("t", [32, 64])
+def test_syr2k_diag(t, trans):
+    a, b, c = (rand((t, t), jnp.float64) for _ in range(3))
+    got = tri_tile.syr2k_diag_update(a, b, c, -0.3, 0.9, trans)
+    want = ref.syr2k_diag(a, b, c, -0.3, 0.9, trans)
+    np.testing.assert_allclose(got, want, atol=1e-10 * t)
+
+
+@pytest.mark.parametrize("side", ["l", "r"])
+@pytest.mark.parametrize("uplo", ["up", "lo"])
+@pytest.mark.parametrize("ta", ["n", "t"])
+@pytest.mark.parametrize("diag", ["nu", "un"])
+def test_trmm_diag(side, uplo, ta, diag):
+    t = 32
+    a, c = rand((t, t), jnp.float64), rand((t, t), jnp.float64)
+    got = tri_tile.trmm_diag_update(a, c, 1.5, side, uplo, ta, diag)
+    want = ref.trmm_diag(a, c, 1.5, side, uplo, ta, diag)
+    np.testing.assert_allclose(got, want, atol=1e-10 * t)
+
+
+@pytest.mark.parametrize("side", ["l", "r"])
+@pytest.mark.parametrize("uplo", ["up", "lo"])
+@pytest.mark.parametrize("ta", ["n", "t"])
+@pytest.mark.parametrize("diag", ["nu", "un"])
+def test_trsm_diag_solves(side, uplo, ta, diag):
+    t = 32
+    a = rand((t, t), jnp.float64) + 4.0 * jnp.eye(t)  # well-conditioned
+    c = rand((t, t), jnp.float64)
+    x = tri_tile.trsm_diag_update(a, c, 2.0, side, uplo, ta, diag)
+    # verify against the defining equation, not another solver
+    tri_a = ref.tri(a, uplo, diag)
+    opa = tri_a.T if ta == "t" else tri_a
+    lhs = opa @ x if side == "l" else x @ opa
+    np.testing.assert_allclose(lhs, 2.0 * c, atol=1e-9 * t)
+
+
+@pytest.mark.parametrize("side", ["l", "r"])
+@pytest.mark.parametrize("uplo", ["up", "lo"])
+def test_symm_diag(side, uplo):
+    t = 64
+    a, b, c = (rand((t, t), jnp.float64) for _ in range(3))
+    got = tri_tile.symm_diag_update(a, b, c, 0.25, -1.0, side, uplo)
+    want = ref.symm_diag(a, b, c, 0.25, -1.0, side, uplo)
+    np.testing.assert_allclose(got, want, atol=1e-10 * t)
+
+
+def test_scal():
+    c = rand((64, 64), jnp.float64)
+    np.testing.assert_allclose(tri_tile.scal_update(c, 0.5), 0.5 * c)
+    np.testing.assert_allclose(tri_tile.scal_update(c, 0.0), jnp.zeros_like(c))
+
+
+def test_operand_builders():
+    a = rand((16, 16), jnp.float64)
+    np.testing.assert_allclose(tri_tile.tri_operand(a, "up", "nu"), jnp.triu(a))
+    np.testing.assert_allclose(tri_tile.sym_operand(a, "lo"), ref.sym(a, "lo"))
+    un = tri_tile.tri_operand(a, "lo", "un")
+    np.testing.assert_allclose(jnp.diag(un), jnp.ones(16))
+    np.testing.assert_allclose(jnp.tril(un, -1), jnp.tril(a, -1))
+    np.testing.assert_allclose(jnp.triu(un, 1), jnp.zeros((16, 16)))
+
+
+def test_identity_padding_is_exact_for_trsm():
+    # The Rust runtime pads edge tiles: zero-pad C, identity-pad the
+    # triangular diagonal tile. The padded solve must embed the unpadded
+    # solve exactly.
+    t, h = 32, 20
+    a = rand((h, h), jnp.float64) + 4.0 * jnp.eye(h)
+    c = rand((h, h), jnp.float64)
+    want = ref.trsm_diag(a, c, 1.0, "l", "up", "n", "nu")
+
+    a_pad = jnp.eye(t, dtype=jnp.float64).at[:h, :h].set(a)
+    c_pad = jnp.zeros((t, t), jnp.float64).at[:h, :h].set(c)
+    got = tri_tile.trsm_diag_update(a_pad, c_pad, 1.0, "l", "up", "n", "nu")
+    np.testing.assert_allclose(got[:h, :h], want, atol=1e-9 * t)
+    np.testing.assert_allclose(got[h:, :], jnp.zeros((t - h, t)), atol=1e-12)
+
+
+def test_zero_padding_is_exact_for_gemm():
+    t, h, w, kk = 32, 20, 24, 16
+    a = rand((h, kk), jnp.float64)
+    b = rand((kk, w), jnp.float64)
+    c = rand((h, w), jnp.float64)
+    a_pad = jnp.zeros((t, t), jnp.float64).at[:h, :kk].set(a)
+    b_pad = jnp.zeros((t, t), jnp.float64).at[:kk, :w].set(b)
+    c_pad = jnp.zeros((t, t), jnp.float64).at[:h, :w].set(c)
+    got = gemm_tile.gemm_update(a_pad, b_pad, c_pad, 1.5, 0.5, "n", "n")
+    want = ref.gemm(a, b, c, 1.5, 0.5)
+    np.testing.assert_allclose(got[:h, :w], want, atol=1e-10 * t)

@@ -1,0 +1,172 @@
+//! xerbla-style argument validation for the L3 routines.
+//!
+//! BLASX's backward-compatibility promise (paper §I) includes faithful
+//! BLAS error semantics: invalid dimension/ld parameters are rejected
+//! with the 1-based parameter index of the reference BLAS.
+
+use crate::api::types::{Side, Trans};
+use crate::error::{illegal, Result};
+
+/// op-dims of A in GEMM: (rows, cols) of op(A).
+fn op_dims(trans: Trans, rows: usize, cols: usize) -> (usize, usize) {
+    match trans {
+        Trans::No => (rows, cols),
+        Trans::Yes => (cols, rows),
+    }
+}
+
+/// Validate GEMM arguments (parameter indices follow reference dgemm).
+pub fn check_gemm(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    lda: usize,
+    ldb: usize,
+    ldc: usize,
+) -> Result<()> {
+    let _ = (m, n, k); // unsigned: negativity unrepresentable, keep names for clarity
+    // A is m×k (No) or k×m (Yes); lda >= its row count
+    let (a_rows, _) = op_dims(ta, m, k);
+    let a_stored_rows = if ta == Trans::No { a_rows } else { k };
+    if lda < a_stored_rows.max(1) {
+        return Err(illegal("gemm", 8, format!("lda {lda} < {}", a_stored_rows.max(1))));
+    }
+    let b_stored_rows = if tb == Trans::No { k } else { n };
+    if ldb < b_stored_rows.max(1) {
+        return Err(illegal("gemm", 10, format!("ldb {ldb} < {}", b_stored_rows.max(1))));
+    }
+    if ldc < m.max(1) {
+        return Err(illegal("gemm", 13, format!("ldc {ldc} < {}", m.max(1))));
+    }
+    Ok(())
+}
+
+/// Validate SYRK/SYR2K arguments. `ldb_opt` is None for SYRK.
+pub fn check_syrk(
+    trans: Trans,
+    n: usize,
+    k: usize,
+    lda: usize,
+    ldb_opt: Option<usize>,
+    ldc: usize,
+    routine: &'static str,
+) -> Result<()> {
+    // A is n×k (No) or k×n (Yes)
+    let a_rows = if trans == Trans::No { n } else { k };
+    if lda < a_rows.max(1) {
+        return Err(illegal(routine, 7, format!("lda {lda} < {}", a_rows.max(1))));
+    }
+    if let Some(ldb) = ldb_opt {
+        if ldb < a_rows.max(1) {
+            return Err(illegal(routine, 9, format!("ldb {ldb} < {}", a_rows.max(1))));
+        }
+    }
+    if ldc < n.max(1) {
+        return Err(illegal(routine, if ldb_opt.is_some() { 12 } else { 10 }, format!("ldc {ldc} < {}", n.max(1))));
+    }
+    Ok(())
+}
+
+/// Validate SYMM arguments.
+pub fn check_symm(
+    side: Side,
+    m: usize,
+    n: usize,
+    lda: usize,
+    ldb: usize,
+    ldc: usize,
+) -> Result<()> {
+    let ka = match side {
+        Side::Left => m,
+        Side::Right => n,
+    };
+    if lda < ka.max(1) {
+        return Err(illegal("symm", 7, format!("lda {lda} < {}", ka.max(1))));
+    }
+    if ldb < m.max(1) {
+        return Err(illegal("symm", 9, format!("ldb {ldb} < {}", m.max(1))));
+    }
+    if ldc < m.max(1) {
+        return Err(illegal("symm", 12, format!("ldc {ldc} < {}", m.max(1))));
+    }
+    Ok(())
+}
+
+/// Validate TRMM/TRSM arguments.
+pub fn check_trxm(
+    side: Side,
+    m: usize,
+    n: usize,
+    lda: usize,
+    ldb: usize,
+    routine: &'static str,
+) -> Result<()> {
+    let ka = match side {
+        Side::Left => m,
+        Side::Right => n,
+    };
+    if lda < ka.max(1) {
+        return Err(illegal(routine, 9, format!("lda {lda} < {}", ka.max(1))));
+    }
+    if ldb < m.max(1) {
+        return Err(illegal(routine, 11, format!("ldb {ldb} < {}", m.max(1))));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::types::{Trans, Side};
+
+    #[test]
+    fn gemm_accepts_valid() {
+        assert!(check_gemm(Trans::No, Trans::No, 4, 5, 6, 4, 6, 4).is_ok());
+        assert!(check_gemm(Trans::Yes, Trans::No, 4, 5, 6, 6, 6, 4).is_ok());
+        assert!(check_gemm(Trans::No, Trans::Yes, 4, 5, 6, 4, 5, 4).is_ok());
+    }
+
+    #[test]
+    fn gemm_rejects_bad_lds() {
+        let e = check_gemm(Trans::No, Trans::No, 4, 5, 6, 3, 6, 4).unwrap_err();
+        assert!(e.to_string().contains("#8"));
+        let e = check_gemm(Trans::No, Trans::No, 4, 5, 6, 4, 5, 4).unwrap_err();
+        assert!(e.to_string().contains("#10"));
+        let e = check_gemm(Trans::No, Trans::No, 4, 5, 6, 4, 6, 3).unwrap_err();
+        assert!(e.to_string().contains("#13"));
+    }
+
+    #[test]
+    fn gemm_degenerate_dims_ok() {
+        // m = 0 and k = 0 are legal quick-return cases in BLAS
+        assert!(check_gemm(Trans::No, Trans::No, 0, 5, 6, 1, 6, 1).is_ok());
+        assert!(check_gemm(Trans::No, Trans::No, 4, 5, 0, 4, 1, 4).is_ok());
+    }
+
+    #[test]
+    fn syrk_checks() {
+        assert!(check_syrk(Trans::No, 4, 6, 4, None, 4, "syrk").is_ok());
+        assert!(check_syrk(Trans::Yes, 4, 6, 6, None, 4, "syrk").is_ok());
+        assert!(check_syrk(Trans::No, 4, 6, 3, None, 4, "syrk").is_err());
+        assert!(check_syrk(Trans::No, 4, 6, 4, Some(3), 4, "syr2k").is_err());
+        assert!(check_syrk(Trans::No, 4, 6, 4, None, 3, "syrk").is_err());
+    }
+
+    #[test]
+    fn symm_checks() {
+        assert!(check_symm(Side::Left, 4, 5, 4, 4, 4).is_ok());
+        assert!(check_symm(Side::Right, 4, 5, 5, 4, 4).is_ok());
+        assert!(check_symm(Side::Right, 4, 5, 4, 4, 4).is_err());
+        assert!(check_symm(Side::Left, 4, 5, 4, 3, 4).is_err());
+    }
+
+    #[test]
+    fn trxm_checks() {
+        assert!(check_trxm(Side::Left, 4, 5, 4, 4, "trsm").is_ok());
+        assert!(check_trxm(Side::Right, 4, 5, 5, 4, "trmm").is_ok());
+        assert!(check_trxm(Side::Left, 4, 5, 3, 4, "trsm").is_err());
+        assert!(check_trxm(Side::Left, 4, 5, 4, 3, "trmm").is_err());
+    }
+}

@@ -1,0 +1,371 @@
+//! The public L3 BLAS API — BLASX's backward-compatibility surface
+//! (paper §I: "all the details … can be ignored by library users").
+//!
+//! Signatures mirror CBLAS column-major conventions: `{s,d}gemm`,
+//! `{s,d}syrk`, `{s,d}syr2k`, `{s,d}trmm`, `{s,d}trsm`, `{s,d}symm`.
+//! Each call taskizes the problem, spins up the multi-device runtime and
+//! returns once C (or B for TRMM/TRSM) holds the result — exactly the
+//! drop-in-replacement contract the paper demonstrates with Caffe and
+//! MATLAB.
+//!
+//! The execution context (device count, arena bytes, tile size, kernel
+//! backend) comes from a [`Context`], with a process-default tuned for
+//! this testbed.
+
+use super::check;
+use super::types::{Diag, Scalar, Side, Trans, Uplo};
+use crate::coordinator::real_engine::{run_real, Mats, RealReport};
+use crate::coordinator::{Backend, RunConfig};
+use crate::error::Result;
+use crate::task::{
+    taskize_gemm, taskize_symm, taskize_syr2k, taskize_syrk, taskize_trmm, taskize_trsm,
+    GemmDesc, SymmDesc, SyrkDesc, TriDesc,
+};
+use crate::tile::{HostMat, MatId};
+
+/// Execution context: how many virtual devices, how much arena each,
+/// which tile size and kernel backend.
+#[derive(Clone, Debug)]
+pub struct Context {
+    pub n_devices: usize,
+    pub arena_bytes: usize,
+    pub cfg: RunConfig,
+}
+
+impl Default for Context {
+    fn default() -> Context {
+        // 2 virtual devices exercises the full multi-device protocol
+        // (P2P path, stealing) while staying sensible on small hosts;
+        // 64 MiB arena each ≈ 128 tiles at T=256/f64.
+        Context {
+            n_devices: 2,
+            arena_bytes: 64 << 20,
+            cfg: RunConfig { t: 256, ..Default::default() },
+        }
+    }
+}
+
+impl Context {
+    pub fn new(n_devices: usize) -> Context {
+        Context { n_devices, ..Default::default() }
+    }
+
+    pub fn with_tile(mut self, t: usize) -> Context {
+        self.cfg.t = t;
+        self
+    }
+
+    pub fn with_backend(mut self, b: Backend) -> Context {
+        self.cfg.backend = b;
+        self
+    }
+
+    /// Tile size floor: degenerate matrices still need one tile.
+    fn tile(&self) -> usize {
+        self.cfg.t
+    }
+}
+
+/// `C := alpha*op(A)*op(B) + beta*C` (column-major, leading dims).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm<T: Scalar>(
+    ctx: &Context,
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) -> Result<RealReport> {
+    check::check_gemm(ta, tb, m, n, k, lda, ldb, ldc)?;
+    let t = ctx.tile();
+    let d = GemmDesc { ta, tb, m, n, k, alpha: alpha.to_f64(), beta: beta.to_f64(), t };
+    let ts = taskize_gemm(&d);
+    let (ar, ac) = if ta == Trans::No { (m, k) } else { (k, m) };
+    let (br, bc) = if tb == Trans::No { (k, n) } else { (n, k) };
+    let am = HostMat::new_ro(a, ar, ac, lda, t, MatId::A);
+    let bm = HostMat::new_ro(b, br, bc, ldb, t, MatId::B);
+    let cm = HostMat::new(c, m, n, ldc, t, MatId::C);
+    run_real(&ctx.cfg, &ts, Mats { a: &am, b: Some(&bm), c: &cm }, ctx.n_devices, ctx.arena_bytes)
+}
+
+/// `C := alpha*op(A)*op(A)^T + beta*C`, C symmetric stored in `uplo`.
+#[allow(clippy::too_many_arguments)]
+pub fn syrk<T: Scalar>(
+    ctx: &Context,
+    uplo: Uplo,
+    trans: Trans,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) -> Result<RealReport> {
+    check::check_syrk(trans, n, k, lda, None, ldc, "syrk")?;
+    let t = ctx.tile();
+    let d = SyrkDesc { uplo, trans, n, k, alpha: alpha.to_f64(), beta: beta.to_f64(), t };
+    let ts = taskize_syrk(&d);
+    let (ar, ac) = if trans == Trans::No { (n, k) } else { (k, n) };
+    let am = HostMat::new_ro(a, ar, ac, lda, t, MatId::A);
+    let cm = HostMat::new(c, n, n, ldc, t, MatId::C);
+    run_real(&ctx.cfg, &ts, Mats { a: &am, b: None, c: &cm }, ctx.n_devices, ctx.arena_bytes)
+}
+
+/// `C := alpha*(op(A)op(B)^T + op(B)op(A)^T) + beta*C`.
+#[allow(clippy::too_many_arguments)]
+pub fn syr2k<T: Scalar>(
+    ctx: &Context,
+    uplo: Uplo,
+    trans: Trans,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) -> Result<RealReport> {
+    check::check_syrk(trans, n, k, lda, Some(ldb), ldc, "syr2k")?;
+    let t = ctx.tile();
+    let d = SyrkDesc { uplo, trans, n, k, alpha: alpha.to_f64(), beta: beta.to_f64(), t };
+    let ts = taskize_syr2k(&d);
+    let (ar, ac) = if trans == Trans::No { (n, k) } else { (k, n) };
+    let am = HostMat::new_ro(a, ar, ac, lda, t, MatId::A);
+    let bm = HostMat::new_ro(b, ar, ac, ldb, t, MatId::B);
+    let cm = HostMat::new(c, n, n, ldc, t, MatId::C);
+    run_real(&ctx.cfg, &ts, Mats { a: &am, b: Some(&bm), c: &cm }, ctx.n_devices, ctx.arena_bytes)
+}
+
+/// `C := alpha*sym(A)*B + beta*C` (Left) / `alpha*B*sym(A) + beta*C`.
+#[allow(clippy::too_many_arguments)]
+pub fn symm<T: Scalar>(
+    ctx: &Context,
+    side: Side,
+    uplo: Uplo,
+    m: usize,
+    n: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) -> Result<RealReport> {
+    check::check_symm(side, m, n, lda, ldb, ldc)?;
+    let t = ctx.tile();
+    let d = SymmDesc { side, uplo, m, n, alpha: alpha.to_f64(), beta: beta.to_f64(), t };
+    let ts = taskize_symm(&d);
+    let na = if side == Side::Left { m } else { n };
+    let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
+    let bm = HostMat::new_ro(b, m, n, ldb, t, MatId::B);
+    let cm = HostMat::new(c, m, n, ldc, t, MatId::C);
+    run_real(&ctx.cfg, &ts, Mats { a: &am, b: Some(&bm), c: &cm }, ctx.n_devices, ctx.arena_bytes)
+}
+
+/// `B := alpha*op(tri(A))*B` (Left) / `alpha*B*op(tri(A))` (Right),
+/// in place in `b`.
+#[allow(clippy::too_many_arguments)]
+pub fn trmm<T: Scalar>(
+    ctx: &Context,
+    side: Side,
+    uplo: Uplo,
+    ta: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &mut [T],
+    ldb: usize,
+) -> Result<RealReport> {
+    check::check_trxm(side, m, n, lda, ldb, "trmm")?;
+    let t = ctx.tile();
+    let d = TriDesc { side, uplo, ta, diag, m, n, alpha: alpha.to_f64(), t };
+    let ts = taskize_trmm(&d);
+    let na = if side == Side::Left { m } else { n };
+    let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
+    let cm = HostMat::new(b, m, n, ldb, t, MatId::C);
+    run_real(&ctx.cfg, &ts, Mats { a: &am, b: None, c: &cm }, ctx.n_devices, ctx.arena_bytes)
+}
+
+/// Solve `op(tri(A))*X = alpha*B` (Left) / `X*op(tri(A)) = alpha*B`,
+/// X overwriting `b`.
+#[allow(clippy::too_many_arguments)]
+pub fn trsm<T: Scalar>(
+    ctx: &Context,
+    side: Side,
+    uplo: Uplo,
+    ta: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &mut [T],
+    ldb: usize,
+) -> Result<RealReport> {
+    check::check_trxm(side, m, n, lda, ldb, "trsm")?;
+    let t = ctx.tile();
+    let d = TriDesc { side, uplo, ta, diag, m, n, alpha: alpha.to_f64(), t };
+    let ts = taskize_trsm(&d);
+    let na = if side == Side::Left { m } else { n };
+    let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
+    let cm = HostMat::new(b, m, n, ldb, t, MatId::C);
+    run_real(&ctx.cfg, &ts, Mats { a: &am, b: None, c: &cm }, ctx.n_devices, ctx.arena_bytes)
+}
+
+// --- CBLAS-flavoured aliases -----------------------------------------
+
+/// Double-precision GEMM with the classic parameter order.
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm(
+    ctx: &Context,
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+) -> Result<RealReport> {
+    gemm(ctx, ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
+}
+
+/// Single-precision GEMM.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm(
+    ctx: &Context,
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    beta: f32,
+    c: &mut [f32],
+    ldc: usize,
+) -> Result<RealReport> {
+    gemm(ctx, ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hostblas;
+    use crate::util::prng::Prng;
+
+    fn small_ctx() -> Context {
+        Context { n_devices: 2, arena_bytes: 4 << 20, cfg: RunConfig { t: 32, ..Default::default() } }
+    }
+
+    #[test]
+    fn dgemm_smoke() {
+        let ctx = small_ctx();
+        let (m, n, k) = (65, 47, 83);
+        let mut p = Prng::new(11);
+        let mut a = vec![0.0; m * k];
+        let mut b = vec![0.0; k * n];
+        let mut c = vec![0.0; m * n];
+        p.fill_f64(&mut a, -1.0, 1.0);
+        p.fill_f64(&mut b, -1.0, 1.0);
+        p.fill_f64(&mut c, -1.0, 1.0);
+        let mut want = c.clone();
+        dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.1, &a, m, &b, k, -0.3, &mut c, m).unwrap();
+        hostblas::gemm_blocked(Trans::No, Trans::No, m, n, k, 1.1, &a, m, &b, k, -0.3, &mut want, m);
+        let diff = c.iter().zip(&want).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+        assert!(diff < 1e-10, "{diff}");
+    }
+
+    #[test]
+    fn sgemm_smoke() {
+        let ctx = small_ctx();
+        let (m, n, k) = (64, 64, 64);
+        let mut p = Prng::new(12);
+        let mut a = vec![0.0f32; m * k];
+        let mut b = vec![0.0f32; k * n];
+        let mut c = vec![0.0f32; m * n];
+        p.fill_f32(&mut a, -1.0, 1.0);
+        p.fill_f32(&mut b, -1.0, 1.0);
+        p.fill_f32(&mut c, -1.0, 1.0);
+        let mut want = c.clone();
+        sgemm(&ctx, Trans::No, Trans::No, m, n, k, 2.0, &a, m, &b, k, 0.5, &mut c, m).unwrap();
+        hostblas::gemm_blocked(Trans::No, Trans::No, m, n, k, 2.0f32, &a, m, &b, k, 0.5, &mut want, m);
+        let diff = c.iter().zip(&want).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+        assert!(diff < 1e-3, "{diff}");
+    }
+
+    #[test]
+    fn ld_larger_than_rows() {
+        let ctx = small_ctx();
+        let (m, n, k, lda) = (30, 20, 25, 40);
+        let mut p = Prng::new(13);
+        let mut a = vec![0.0; lda * k];
+        let mut b = vec![0.0; k * n];
+        let mut c = vec![0.0; m * n];
+        p.fill_f64(&mut a, -1.0, 1.0);
+        p.fill_f64(&mut b, -1.0, 1.0);
+        let mut want = c.clone();
+        dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, lda, &b, k, 0.0, &mut c, m).unwrap();
+        hostblas::gemm_blocked(Trans::No, Trans::No, m, n, k, 1.0, &a, lda, &b, k, 0.0, &mut want, m);
+        assert_eq!(c, want);
+    }
+
+    #[test]
+    fn rejects_bad_ld() {
+        let ctx = small_ctx();
+        let a = vec![0.0; 100];
+        let b = vec![0.0; 100];
+        let mut c = vec![0.0; 100];
+        let err = dgemm(&ctx, Trans::No, Trans::No, 10, 10, 10, 1.0, &a, 5, &b, 10, 0.0, &mut c, 10);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn trsm_roundtrip_with_trmm() {
+        // trmm then trsm with the same triangle is the identity.
+        let ctx = small_ctx();
+        let n = 48;
+        let mut p = Prng::new(14);
+        let mut a = vec![0.0; n * n];
+        p.fill_f64(&mut a, -0.2, 0.2);
+        for i in 0..n {
+            a[i * n + i] = 2.0;
+        }
+        let mut b = vec![0.0; n * n];
+        p.fill_f64(&mut b, -1.0, 1.0);
+        let orig = b.clone();
+        trmm(&ctx, Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, n, n, 2.0, &a, n, &mut b, n)
+            .unwrap();
+        trsm(&ctx, Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, n, n, 0.5, &a, n, &mut b, n)
+            .unwrap();
+        let diff = b.iter().zip(&orig).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+        assert!(diff < 1e-10, "{diff}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Public BLAS-compatible API surface.
+//!
+//! [`types`] defines the CBLAS-style parameter enums and the
+//! [`types::Scalar`] trait; `l3` (added with the coordinator) exposes the
+//! six routines with legacy signatures; `check` implements xerbla-style
+//! argument validation.
+
+pub mod check;
+pub mod l3;
+pub mod types;
+
+pub use l3::{dgemm, gemm, sgemm, symm, syr2k, syrk, trmm, trsm, Context};
+pub use types::{Diag, Dtype, Routine, Scalar, Side, Trans, Uplo};

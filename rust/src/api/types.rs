@@ -1,0 +1,245 @@
+//! BLAS parameter enums and the scalar trait.
+//!
+//! These mirror the CBLAS conventions so that porting legacy BLAS callers
+//! to BLASX (the paper's backward-compatibility goal, §I/§V-C) is a
+//! drop-in rename.
+
+/// Transpose flag. BLASX implements the real-valued routines, so
+/// conjugate-transpose is equivalent to transpose.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Trans {
+    No,
+    Yes,
+}
+
+impl Trans {
+    /// Parse a BLAS character flag ('N'/'T'/'C').
+    pub fn from_char(c: char) -> Option<Trans> {
+        match c.to_ascii_uppercase() {
+            'N' => Some(Trans::No),
+            'T' | 'C' => Some(Trans::Yes),
+            _ => None,
+        }
+    }
+
+    pub fn flipped(self) -> Trans {
+        match self {
+            Trans::No => Trans::Yes,
+            Trans::Yes => Trans::No,
+        }
+    }
+
+    pub fn is_trans(self) -> bool {
+        self == Trans::Yes
+    }
+}
+
+/// Which triangle of a symmetric/triangular matrix is referenced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Uplo {
+    Upper,
+    Lower,
+}
+
+impl Uplo {
+    pub fn from_char(c: char) -> Option<Uplo> {
+        match c.to_ascii_uppercase() {
+            'U' => Some(Uplo::Upper),
+            'L' => Some(Uplo::Lower),
+            _ => None,
+        }
+    }
+
+    pub fn flipped(self) -> Uplo {
+        match self {
+            Uplo::Upper => Uplo::Lower,
+            Uplo::Lower => Uplo::Upper,
+        }
+    }
+}
+
+/// Whether the triangular/symmetric operand multiplies from the left or
+/// the right.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Side {
+    Left,
+    Right,
+}
+
+impl Side {
+    pub fn from_char(c: char) -> Option<Side> {
+        match c.to_ascii_uppercase() {
+            'L' => Some(Side::Left),
+            'R' => Some(Side::Right),
+            _ => None,
+        }
+    }
+}
+
+/// Unit-diagonal flag for triangular routines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Diag {
+    NonUnit,
+    Unit,
+}
+
+impl Diag {
+    pub fn from_char(c: char) -> Option<Diag> {
+        match c.to_ascii_uppercase() {
+            'N' => Some(Diag::NonUnit),
+            'U' => Some(Diag::Unit),
+            _ => None,
+        }
+    }
+}
+
+/// The six level-3 routines BLASX implements (paper §III, Eq. 1a–1f).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Routine {
+    Gemm,
+    Syrk,
+    Syr2k,
+    Trmm,
+    Trsm,
+    Symm,
+}
+
+impl Routine {
+    pub const ALL: [Routine; 6] =
+        [Routine::Gemm, Routine::Syrk, Routine::Syr2k, Routine::Trmm, Routine::Trsm, Routine::Symm];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Routine::Gemm => "gemm",
+            Routine::Syrk => "syrk",
+            Routine::Syr2k => "syr2k",
+            Routine::Trmm => "trmm",
+            Routine::Trsm => "trsm",
+            Routine::Symm => "symm",
+        }
+    }
+
+    /// Double-precision BLAS name, e.g. "DGEMM" (used in reports).
+    pub fn dname(self) -> String {
+        format!("D{}", self.name().to_uppercase())
+    }
+
+    /// Total floating-point operations for the square case of size N
+    /// (standard BLAS flop counts).
+    pub fn flops_square(self, n: f64) -> f64 {
+        match self {
+            Routine::Gemm => 2.0 * n * n * n,
+            Routine::Syrk => n * n * (n + 1.0),
+            Routine::Syr2k => 2.0 * n * n * (n + 1.0),
+            Routine::Trmm => n * n * n,
+            Routine::Trsm => n * n * n,
+            Routine::Symm => 2.0 * n * n * n,
+        }
+    }
+}
+
+/// Element type tag for artifacts and kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F32,
+    F64,
+}
+
+impl Dtype {
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::F64 => "f64",
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F64 => 8,
+        }
+    }
+}
+
+/// Scalar element trait: the two real BLAS precisions.
+pub trait Scalar:
+    Copy
+    + Send
+    + Sync
+    + PartialEq
+    + PartialOrd
+    + std::fmt::Debug
+    + std::fmt::Display
+    + num_traits::Float
+    + num_traits::NumAssign
+    + 'static
+{
+    const DTYPE: Dtype;
+    fn from_f64(x: f64) -> Self;
+    fn to_f64(self) -> f64;
+}
+
+impl Scalar for f32 {
+    const DTYPE: Dtype = Dtype::F32;
+    fn from_f64(x: f64) -> f32 {
+        x as f32
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+impl Scalar for f64 {
+    const DTYPE: Dtype = Dtype::F64;
+    fn from_f64(x: f64) -> f64 {
+        x
+    }
+    fn to_f64(self) -> f64 {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn char_parsing() {
+        assert_eq!(Trans::from_char('n'), Some(Trans::No));
+        assert_eq!(Trans::from_char('T'), Some(Trans::Yes));
+        assert_eq!(Trans::from_char('C'), Some(Trans::Yes));
+        assert_eq!(Trans::from_char('x'), None);
+        assert_eq!(Uplo::from_char('u'), Some(Uplo::Upper));
+        assert_eq!(Side::from_char('R'), Some(Side::Right));
+        assert_eq!(Diag::from_char('U'), Some(Diag::Unit));
+    }
+
+    #[test]
+    fn flips() {
+        assert_eq!(Trans::No.flipped(), Trans::Yes);
+        assert_eq!(Uplo::Upper.flipped(), Uplo::Lower);
+    }
+
+    #[test]
+    fn flop_counts() {
+        let n = 100.0;
+        assert_eq!(Routine::Gemm.flops_square(n), 2e6);
+        assert_eq!(Routine::Trsm.flops_square(n), 1e6);
+        // SYRK is half of GEMM plus lower-order terms.
+        assert!(Routine::Syrk.flops_square(n) < Routine::Gemm.flops_square(n));
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(Routine::Gemm.dname(), "DGEMM");
+        assert_eq!(Dtype::F64.size_bytes(), 8);
+        assert_eq!(Dtype::F32.name(), "f32");
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        assert_eq!(f32::from_f64(1.5).to_f64(), 1.5);
+        assert_eq!(<f64 as Scalar>::DTYPE, Dtype::F64);
+        assert_eq!(<f32 as Scalar>::DTYPE, Dtype::F32);
+    }
+}

@@ -1,0 +1,311 @@
+//! A parameterized DES engine covering the four competitor policies the
+//! paper benchmarks against (§II, §V). Each baseline is the *published
+//! scheduling policy* re-implemented on the same simulated substrate as
+//! BLASX, so comparisons isolate exactly the scheduling/caching variable
+//! (DESIGN.md §1).
+//!
+//! The knobs:
+//! - **assignment**: static per-task owner (round-robin / block-cyclic /
+//!   speed-weighted) or a shared central queue;
+//! - **streams**: how many concurrent stream lanes a device drives
+//!   (cuBLAS-XT uses 2, SuperMatrix effectively 1);
+//! - **caching**: none (every step re-transfers, cuBLAS-XT-style) or a
+//!   per-device ALRU without P2P (MAGMA/PaRSEC-style);
+//! - **blocking**: fork-join transfers (SuperMatrix) vs async overlap;
+//! - **in-core gate**: reject problems larger than device RAM (PaRSEC,
+//!   MAGMA per the paper's partial benchmarks).
+
+use crate::api::Dtype;
+use crate::cache::{Source, TileCacheSet};
+use crate::coordinator::keymap::KeyMap;
+use crate::coordinator::sim_engine::SimReport;
+use crate::coordinator::RunConfig;
+use crate::mem::AllocStrategy;
+use crate::sim::{Dir, EventQueue, Lane, Machine, SimTime, Topology};
+use crate::task::{Task, TaskSet, TileRef};
+use crate::tile::MatId;
+use crate::trace::{EvKind, Trace};
+use std::collections::VecDeque;
+
+/// How tasks map to devices.
+pub enum Assignment {
+    /// task i → device (i mod n): cuBLAS-XT's static tile blocks.
+    RoundRobin,
+    /// Owner by output tile column, block-cyclic: MAGMA's static 1D
+    /// distribution.
+    BlockCyclic,
+    /// Static split proportional to device DP/SP rate: the PaRSEC
+    /// assumption of constant per-device speed.
+    SpeedWeighted,
+    /// Central ready queue, pulled on demand (SuperMatrix's Tomasulo-
+    /// style dispatch — dynamic but blocking).
+    CentralQueue,
+}
+
+/// One baseline's shape.
+pub struct BaselineSpec {
+    pub assignment: Assignment,
+    pub n_streams: usize,
+    /// Per-device tile cache (no P2P). None = re-transfer every step.
+    pub caching: bool,
+    /// Fork-join: the kernel waits for its transfer AND the next
+    /// transfer waits for the kernel (single in-order pipe).
+    pub blocking: bool,
+    /// Reject problems whose three operands exceed one device's RAM.
+    pub in_core_only: bool,
+    /// Per-task runtime overhead, seconds, charged on the device before
+    /// the first kernel (PaRSEC's DAG build/activation cost — §II:
+    /// "building DAGs at runtime ... can be a huge cost"; Tomasulo
+    /// bookkeeping for SuperMatrix).
+    pub per_task_overhead: f64,
+}
+
+struct BWorker {
+    queue: VecDeque<usize>,
+    stream_free: Vec<SimTime>,
+    kernel_lane: Lane,
+    tasks_done: usize,
+    /// Deferred ALRU releases (applied when the device goes idle — the
+    /// baselines have no sync-point reader protocol; releasing at task
+    /// end is the closest analogue).
+    pending_release: Vec<crate::tile::TileKey>,
+}
+
+/// Run a baseline policy over a task set.
+pub fn run_baseline(
+    spec: &BaselineSpec,
+    cfg: &RunConfig,
+    machine: &Machine,
+    ts: &TaskSet,
+    keymap: &KeyMap,
+    dtype: Dtype,
+) -> SimReport {
+    let n = machine.devices.len();
+    if spec.in_core_only {
+        // All three operands must fit in one device's RAM (the paper:
+        // PaRSEC "limits ... to handle matrix sizes N > 22528" on 12 GB).
+        let need: usize = [MatId::A, MatId::B, MatId::C]
+            .iter()
+            .map(|&m| {
+                let g = keymap.grid(m);
+                g.rows * g.cols * keymap.esz
+            })
+            .sum();
+        let vram = cfg.vram_override.unwrap_or(machine.devices[0].vram);
+        if need > vram {
+            return SimReport::infeasible();
+        }
+    }
+
+    let mut topo = Topology::new(machine.topology.clone());
+    let capacities: Vec<usize> =
+        machine.devices.iter().map(|d| cfg.vram_override.unwrap_or(d.vram)).collect();
+    // Baselines never use P2P: empty peer lists.
+    let mut caches = spec
+        .caching
+        .then(|| TileCacheSet::new(&capacities, vec![Vec::new(); n], AllocStrategy::FastHeap));
+
+    // --- distribute tasks
+    let mut workers: Vec<BWorker> = (0..n)
+        .map(|_| BWorker {
+            queue: VecDeque::new(),
+            stream_free: vec![0.0; spec.n_streams],
+            kernel_lane: Lane::new(),
+            tasks_done: 0,
+            pending_release: Vec::new(),
+        })
+        .collect();
+    let mut central: VecDeque<usize> = VecDeque::new();
+    let mut deps: Vec<usize> = ts.tasks.iter().map(|t| t.n_deps).collect();
+    let assign_of = |tid: usize, task: &Task| -> usize {
+        match spec.assignment {
+            Assignment::RoundRobin => tid % n,
+            Assignment::BlockCyclic => task.cj % n,
+            Assignment::SpeedWeighted => {
+                // deterministic proportional split over task ids
+                let rates: Vec<f64> = machine.devices.iter().map(|d| d.rate(dtype)).collect();
+                let total: f64 = rates.iter().sum();
+                let frac = (tid as f64 + 0.5) / ts.tasks.len() as f64;
+                let mut acc = 0.0;
+                for (i, r) in rates.iter().enumerate() {
+                    acc += r / total;
+                    if frac <= acc {
+                        return i;
+                    }
+                }
+                n - 1
+            }
+            Assignment::CentralQueue => usize::MAX,
+        }
+    };
+    for &h in &ts.heads {
+        match spec.assignment {
+            Assignment::CentralQueue => central.push_back(h),
+            _ => workers[assign_of(h, &ts.tasks[h])].queue.push_back(h),
+        }
+    }
+
+    let mut trace = Trace::new();
+    let mut events: EventQueue<usize> = EventQueue::new();
+    // SuperMatrix issues *synchronous* cudaMemcpy from its runtime
+    // thread (paper Fig. 1a): every transfer in the machine serializes
+    // through that one host thread, which is what wrecks its multi-GPU
+    // scaling. Modelled as a shared lane used only by blocking policies.
+    let mut host_thread = Lane::new();
+    let mut idle = vec![false; n];
+    for d in 0..n {
+        events.schedule(0.0, d);
+    }
+    let mut remaining = ts.tasks.len();
+    let mut guard = 0u64;
+
+    // Round-based issue mirroring how a host thread actually drives CUDA
+    // streams: bind up to `n_streams` tasks, then issue their k-steps
+    // interleaved k-major so stream B's step-k transfer overlaps stream
+    // A's step-k kernel. A blocking policy (SuperMatrix) has one stream,
+    // which degenerates to fork-join exactly as the paper's Fig. 1a.
+    while let Some((now, d)) = events.pop() {
+        guard += 1;
+        assert!(guard < 1_000_000_000, "baseline runaway");
+
+        // release cached readers from the previous round (task-end scope)
+        if let Some(c) = caches.as_mut() {
+            for k in std::mem::take(&mut workers[d].pending_release) {
+                c.release(d, &k);
+            }
+        }
+
+        // bind one task per stream
+        let mut bound: Vec<(usize, usize)> = Vec::new(); // (task, stream)
+        for s in 0..spec.n_streams {
+            let tid = match spec.assignment {
+                Assignment::CentralQueue => central.pop_front(),
+                _ => workers[d].queue.pop_front(),
+            };
+            match tid {
+                Some(t) => bound.push((t, s)),
+                None => break,
+            }
+        }
+        if bound.is_empty() {
+            idle[d] = true;
+            continue;
+        }
+        idle[d] = false;
+
+        // C move-ins
+        for &(tid, s) in &bound {
+            let task = &ts.tasks[tid];
+            let mut ready = workers[d].stream_free[s].max(now) + spec.per_task_overhead;
+            if task.reads_c {
+                let bytes = keymap.transfer_bytes(TileRef::new(MatId::C, task.ci, task.cj));
+                let t0 = if spec.blocking { host_thread.book(ready, 0.0).0 } else { ready };
+                let done = topo.book_hd(d, Dir::H2D, bytes, t0);
+                if spec.blocking {
+                    host_thread.book(t0, done - t0);
+                }
+                trace.record(d, s, EvKind::H2d, t0, done, bytes as f64);
+                ready = done;
+            }
+            workers[d].stream_free[s] = ready;
+        }
+
+        // k-major interleaved issue
+        let max_steps = bound.iter().map(|&(t, _)| ts.tasks[t].steps.len()).max().unwrap();
+        for k in 0..max_steps {
+            for &(tid, s) in &bound {
+                let Some(step) = ts.tasks[tid].steps.get(k) else { continue };
+                let mut ready = workers[d].stream_free[s];
+                for tile in step.inputs() {
+                    let bytes = keymap.transfer_bytes(tile);
+                    let hit = if let Some(c) = caches.as_mut() {
+                        let key = keymap.key(tile);
+                        match c.acquire(d, key, keymap.tile_bytes()) {
+                            Some(acq) => {
+                                workers[d].pending_release.push(key);
+                                matches!(acq.source, Source::L1 | Source::Peer { .. })
+                            }
+                            None => false, // cache thrashing: plain transfer
+                        }
+                    } else {
+                        false
+                    };
+                    if !hit {
+                        let t0 = if spec.blocking { host_thread.book(ready, 0.0).0 } else { ready };
+                        let done = topo.book_hd(d, Dir::H2D, bytes, t0);
+                        if spec.blocking {
+                            host_thread.book(t0, done - t0);
+                        }
+                        trace.record(d, s, EvKind::H2d, t0, done, bytes as f64);
+                        ready = done;
+                    }
+                }
+                let secs = machine.devices[d].kernel_secs(step.flops(), cfg.t, dtype)
+                    * crate::coordinator::config::jitter_factor(cfg.jitter, d, tid);
+                let (ks, ke) = workers[d].kernel_lane.book(ready, secs);
+                trace.record(d, s, EvKind::Kernel, ks, ke, step.flops());
+                workers[d].stream_free[s] = ke;
+            }
+        }
+
+        // write-backs + completion bookkeeping
+        for &(tid, s) in &bound {
+            let task = &ts.tasks[tid];
+            let ready = workers[d].stream_free[s];
+            let bytes = keymap.transfer_bytes(TileRef::new(MatId::C, task.ci, task.cj));
+            let t0 = if spec.blocking { host_thread.book(ready, 0.0).0 } else { ready };
+            let done = topo.book_hd(d, Dir::D2H, bytes, t0);
+            if spec.blocking {
+                host_thread.book(t0, done - t0);
+            }
+            trace.record(d, s, EvKind::D2h, t0, done, bytes as f64);
+            workers[d].stream_free[s] = done;
+            workers[d].tasks_done += 1;
+            remaining -= 1;
+
+            if let Some(succ) = task.successor {
+                deps[succ] -= 1;
+                if deps[succ] == 0 {
+                    match spec.assignment {
+                        Assignment::CentralQueue => {
+                            central.push_back(succ);
+                            for (w, is_idle) in idle.iter_mut().enumerate() {
+                                if *is_idle {
+                                    *is_idle = false;
+                                    events.schedule(now, w);
+                                }
+                            }
+                        }
+                        _ => {
+                            let owner = assign_of(succ, &ts.tasks[succ]);
+                            workers[owner].queue.push_back(succ);
+                            if idle[owner] {
+                                idle[owner] = false;
+                                events.schedule(now, owner);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // next round at the sync point
+        let t_sync = workers[d].stream_free.iter().cloned().fold(now, f64::max);
+        events.schedule(t_sync.max(now + 1e-9), d);
+    }
+    assert_eq!(remaining, 0, "baseline stalled");
+
+    trace.makespan = trace.events.iter().map(|e| e.end).fold(0.0, f64::max);
+    SimReport {
+        makespan: trace.makespan,
+        tasks_per_worker: workers.iter().map(|w| w.tasks_done).collect(),
+        alloc_cost: 0.0,
+        cache_stats: (0..n)
+            .map(|d| caches.as_ref().map(|c| c.stats(d)).unwrap_or((0, 0, 0)))
+            .collect(),
+        steals: vec![0; n],
+        dma_throughput: topo.measured_throughput(),
+        trace,
+        feasible: true,
+    }
+}

@@ -1,0 +1,91 @@
+//! Benchmark-harness support (system S18): result tables, JSON export,
+//! and the shared run grids used by the per-figure bench binaries in
+//! `benches/`.
+//!
+//! criterion is unavailable offline, so the binaries are `harness =
+//! false` mains built on these helpers. Every bench prints the paper's
+//! rows to stdout AND writes machine-readable JSON under `bench_out/`.
+
+use crate::util::json::Json;
+use std::io::Write;
+use std::path::PathBuf;
+
+/// Pretty-print a table: header + rows of equal arity.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, cell) in r.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+        }
+        s
+    };
+    let hdr: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    println!("{}", line(&hdr));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for r in rows {
+        println!("{}", line(r));
+    }
+}
+
+/// Output directory for bench artifacts (JSON series for replotting).
+pub fn out_dir() -> PathBuf {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_out");
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+/// Write a JSON value under `bench_out/<name>.json`.
+pub fn write_json(name: &str, value: &Json) {
+    let path = out_dir().join(format!("{name}.json"));
+    match std::fs::File::create(&path) {
+        Ok(mut f) => {
+            let _ = f.write_all(value.to_string_pretty().as_bytes());
+            println!("[bench] wrote {}", path.display());
+        }
+        Err(e) => eprintln!("[bench] cannot write {}: {e}", path.display()),
+    }
+}
+
+/// Is the full paper-scale grid requested? (`BLASX_BENCH_FULL=1`)
+pub fn full_grid() -> bool {
+    std::env::var("BLASX_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// The Fig. 7 matrix-size grid: the paper sweeps 1024..39936 step 1024;
+/// the default grid subsamples it to keep `cargo bench` minutes-scale.
+pub fn size_grid() -> Vec<usize> {
+    if full_grid() {
+        (1..=39).map(|i| i * 1024).collect()
+    } else {
+        vec![2048, 6144, 10240, 14336, 16384, 20480, 24576, 30720]
+    }
+}
+
+/// Format a GFLOPS value or N/A.
+pub fn fmt_gf(feasible: bool, gf: f64) -> String {
+    if feasible {
+        format!("{gf:.0}")
+    } else {
+        "N/A".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids() {
+        assert!(!size_grid().is_empty());
+        assert!(size_grid().windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(fmt_gf(false, 123.0), "N/A");
+        assert_eq!(fmt_gf(true, 123.4), "123");
+    }
+}

@@ -1,0 +1,428 @@
+//! Approximate-LRU tile cache for one device (paper Alg. 2).
+//!
+//! The vanilla LRU cannot accommodate BLASX's asynchronous kernel
+//! launches: a tile may still be referenced by an in-flight stream when
+//! it reaches the LRU tail, and reader counts are only refreshed at
+//! stream-sync points (Alg. 1 line 17). The ALRU therefore evicts the
+//! first *zero-reader* block scanning from the tail — the "approximate"
+//! least-recently-used victim.
+//!
+//! Extension beyond the paper (required for TRMM/TRSM correctness with
+//! the MESI-X write-invalidate): `invalidate` marks a block *doomed* if
+//! it still has readers; a doomed block is unreachable for new lookups
+//! and its memory is reclaimed when the last reader releases it.
+
+use crate::mem::{DeviceAllocator, Offset};
+use crate::tile::TileKey;
+use std::collections::HashMap;
+
+/// A cache block: one tile resident in device memory.
+#[derive(Clone, Debug)]
+pub struct LruBlock {
+    pub key: TileKey,
+    /// Device-arena offset (the paper's "GA").
+    pub offset: Offset,
+    pub len: usize,
+    /// In-flight references; only mutated at sync points (approximate).
+    pub readers: u32,
+    /// Invalidated while readers > 0: free on last release.
+    pub doomed: bool,
+    // intrusive LRU list (indices into `blocks`, NONE = none)
+    prev: usize,
+    next: usize,
+}
+
+const NONE: usize = usize::MAX;
+
+/// Per-device ALRU over a [`DeviceAllocator`].
+pub struct Alru {
+    /// hashmap HA -> block index (paper Alg. 2 line 2)
+    map: HashMap<TileKey, usize>,
+    blocks: Vec<LruBlock>,
+    free_slots: Vec<usize>,
+    /// MRU end (front) and LRU end (back) of the list
+    front: usize,
+    back: usize,
+    /// blocks doomed but unreclaimed (readers > 0), by index
+    doomed: Vec<usize>,
+    pub alloc: DeviceAllocator,
+    /// free()-costs accrued since the last insert (drained into the
+    /// next insert's reported cost — cudaFree is paid on the same
+    /// device timeline as the malloc that triggered the eviction).
+    pending_free_cost: f64,
+    // stats
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl Alru {
+    pub fn new(alloc: DeviceAllocator) -> Alru {
+        Alru {
+            map: HashMap::new(),
+            blocks: Vec::new(),
+            free_slots: Vec::new(),
+            front: NONE,
+            back: NONE,
+            doomed: Vec::new(),
+            alloc,
+            pending_free_cost: 0.0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    fn slot(&mut self, b: LruBlock) -> usize {
+        if let Some(i) = self.free_slots.pop() {
+            self.blocks[i] = b;
+            i
+        } else {
+            self.blocks.push(b);
+            self.blocks.len() - 1
+        }
+    }
+
+    fn unlink(&mut self, i: usize) {
+        let (p, n) = (self.blocks[i].prev, self.blocks[i].next);
+        if p != NONE {
+            self.blocks[p].next = n;
+        } else {
+            self.front = n;
+        }
+        if n != NONE {
+            self.blocks[n].prev = p;
+        } else {
+            self.back = p;
+        }
+        self.blocks[i].prev = NONE;
+        self.blocks[i].next = NONE;
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.blocks[i].prev = NONE;
+        self.blocks[i].next = self.front;
+        if self.front != NONE {
+            self.blocks[self.front].prev = i;
+        }
+        self.front = i;
+        if self.back == NONE {
+            self.back = i;
+        }
+    }
+
+    /// Paper Alg. 2 `Translate`, split for the caller's benefit:
+    /// `lookup` is the cache-hit path (returns the block offset and
+    /// touches the LRU position, incrementing the reader).
+    pub fn lookup(&mut self, key: &TileKey) -> Option<Offset> {
+        let &i = self.map.get(key)?;
+        debug_assert!(!self.blocks[i].doomed);
+        self.blocks[i].readers += 1;
+        self.unlink(i);
+        self.push_front(i);
+        self.hits += 1;
+        Some(self.blocks[i].offset)
+    }
+
+    /// Non-mutating probe (for priority Eq. 3): is the tile resident?
+    pub fn probe(&self, key: &TileKey) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// The miss path of `Translate`: allocate a block for `key`
+    /// (evicting per ALRU policy as needed), insert at MRU, reader = 1.
+    /// Returns `(offset, evicted_keys, alloc_cost)`; `None` if memory
+    /// cannot be found even after eviction (caller syncs & retries or
+    /// reports OOM).
+    pub fn insert(&mut self, key: TileKey, len: usize) -> Option<(Offset, Vec<TileKey>, f64)> {
+        debug_assert!(!self.map.contains_key(&key), "insert of resident tile");
+        self.misses += 1;
+        let mut evicted = Vec::new();
+        let mut total_cost = 0.0;
+        loop {
+            match self.alloc.alloc(len) {
+                Some((off, cost)) => {
+                    total_cost += cost + std::mem::take(&mut self.pending_free_cost);
+                    let b = LruBlock {
+                        key,
+                        offset: off,
+                        len,
+                        readers: 1,
+                        doomed: false,
+                        prev: NONE,
+                        next: NONE,
+                    };
+                    let i = self.slot(b);
+                    self.push_front(i);
+                    self.map.insert(key, i);
+                    return Some((off, evicted, total_cost));
+                }
+                None => {
+                    // Alg. 2 Dequeue: evict first zero-reader from tail
+                    match self.evict_one() {
+                        Some(k) => evicted.push(k),
+                        None => return None,
+                    }
+                }
+            }
+        }
+    }
+
+    /// Alg. 2 `Dequeue`: scan from the LRU end for the first block with
+    /// zero readers, remove and free it. Returns its key.
+    fn evict_one(&mut self) -> Option<TileKey> {
+        let mut i = self.back;
+        while i != NONE {
+            if self.blocks[i].readers == 0 {
+                let key = self.blocks[i].key;
+                self.remove_block(i);
+                self.evictions += 1;
+                return Some(key);
+            }
+            i = self.blocks[i].prev;
+        }
+        None
+    }
+
+    fn remove_block(&mut self, i: usize) {
+        self.unlink(i);
+        self.map.remove(&self.blocks[i].key);
+        let (fcost, _) = self.alloc.free(self.blocks[i].offset);
+        self.pending_free_cost += fcost;
+        self.free_slots.push(i);
+    }
+
+    /// Release one reader reference (at a sync point). Frees the block
+    /// if it was doomed and this was the last reader.
+    ///
+    /// When a doomed and a live block share the key (the tile was
+    /// invalidated and re-fetched while readers were still in flight),
+    /// the release is attributed to the DOOMED block: its references are
+    /// necessarily the older acquires, and the conservative direction —
+    /// freeing doomed memory sooner, pinning the live block longer —
+    /// can never evict data still in use.
+    pub fn release(&mut self, key: &TileKey) {
+        if let Some(pos) = self.doomed.iter().position(|&i| self.blocks[i].key == *key) {
+            let i = self.doomed[pos];
+            debug_assert!(self.blocks[i].readers > 0);
+            self.blocks[i].readers -= 1;
+            if self.blocks[i].readers == 0 {
+                self.doomed.swap_remove(pos);
+                self.alloc.free(self.blocks[i].offset);
+                self.free_slots.push(i);
+            }
+            return;
+        }
+        if let Some(&i) = self.map.get(key) {
+            debug_assert!(self.blocks[i].readers > 0, "release without reader");
+            self.blocks[i].readers -= 1;
+            return;
+        }
+        panic!("release of untracked tile {key:?}");
+    }
+
+    /// MESI-X invalidation: drop the tile from this cache. If readers
+    /// are in flight the block is doomed (unreachable, freed on last
+    /// release). Returns true if the tile was present.
+    pub fn invalidate(&mut self, key: &TileKey) -> bool {
+        let Some(i) = self.map.remove(key) else {
+            return false;
+        };
+        self.unlink(i);
+        if self.blocks[i].readers == 0 {
+            self.alloc.free(self.blocks[i].offset);
+            self.free_slots.push(i);
+        } else {
+            self.blocks[i].doomed = true;
+            self.doomed.push(i);
+        }
+        true
+    }
+
+    /// Remove and free a block the caller owns exclusively (C-tile
+    /// write-back: M → I). Panics if other readers remain.
+    pub fn remove_owned(&mut self, key: &TileKey) {
+        let i = *self.map.get(key).unwrap_or_else(|| panic!("remove of untracked {key:?}"));
+        debug_assert!(self.blocks[i].readers <= 1, "remove_owned with foreign readers");
+        self.map.remove(key);
+        self.unlink(i);
+        self.alloc.free(self.blocks[i].offset);
+        self.free_slots.push(i);
+    }
+
+    /// Number of resident (non-doomed) tiles.
+    pub fn resident(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Offset of a resident tile without touching LRU order or readers
+    /// (peer reads for L2 hits).
+    pub fn peek_offset(&self, key: &TileKey) -> Option<Offset> {
+        self.map.get(key).map(|&i| self.blocks[i].offset)
+    }
+
+    /// Invariant check for tests: list ↔ map consistency, reader sanity.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut count = 0;
+        let mut i = self.front;
+        let mut prev = NONE;
+        while i != NONE {
+            if self.blocks[i].prev != prev {
+                return Err(format!("bad prev at {i}"));
+            }
+            if self.blocks[i].doomed {
+                return Err(format!("doomed block {i} still in list"));
+            }
+            if self.map.get(&self.blocks[i].key) != Some(&i) {
+                return Err(format!("map missing list block {i}"));
+            }
+            count += 1;
+            prev = i;
+            i = self.blocks[i].next;
+        }
+        if count != self.map.len() {
+            return Err(format!("list has {count} blocks, map {}", self.map.len()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::AllocStrategy;
+    use crate::tile::MatId;
+
+    fn key(addr: usize) -> TileKey {
+        TileKey { addr, mat: MatId::A, ti: addr, tj: 0 }
+    }
+
+    fn alru(capacity: usize) -> Alru {
+        Alru::new(DeviceAllocator::new(capacity, AllocStrategy::FastHeap))
+    }
+
+    #[test]
+    fn hit_after_insert() {
+        let mut c = alru(1000);
+        let (off, ev, _) = c.insert(key(1), 100).unwrap();
+        assert!(ev.is_empty());
+        c.release(&key(1));
+        assert_eq!(c.lookup(&key(1)), Some(off));
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn evicts_lru_zero_reader() {
+        let mut c = alru(300);
+        c.insert(key(1), 100).unwrap();
+        c.insert(key(2), 100).unwrap();
+        c.insert(key(3), 100).unwrap();
+        // all have readers=1: nothing evictable
+        assert!(c.insert(key(4), 100).is_none());
+        // release 2 only; 2 is the (approximate) victim even though 1 is older
+        c.release(&key(2));
+        let (_, ev, _) = c.insert(key(4), 100).unwrap();
+        assert_eq!(ev, vec![key(2)]);
+        assert!(c.probe(&key(1)));
+        assert!(!c.probe(&key(2)));
+        assert_eq!(c.evictions, 1);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn lru_order_respects_touch() {
+        let mut c = alru(300);
+        c.insert(key(1), 100).unwrap();
+        c.insert(key(2), 100).unwrap();
+        c.insert(key(3), 100).unwrap();
+        for k in [1, 2, 3] {
+            c.release(&key(k));
+        }
+        // touch 1 so 2 becomes LRU victim
+        c.lookup(&key(1)).unwrap();
+        c.release(&key(1));
+        let (_, ev, _) = c.insert(key(4), 100).unwrap();
+        assert_eq!(ev, vec![key(2)]);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn eviction_cascades_until_fit() {
+        let mut c = alru(300);
+        c.insert(key(1), 100).unwrap();
+        c.insert(key(2), 100).unwrap();
+        c.insert(key(3), 100).unwrap();
+        for k in [1, 2, 3] {
+            c.release(&key(k));
+        }
+        // need 250 -> evicts two blocks (coalesced by the heap)
+        let (_, ev, _) = c.insert(key(5), 250).unwrap();
+        assert!(ev.len() >= 2, "evicted {ev:?}");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn invalidate_with_readers_dooms_then_frees() {
+        let mut c = alru(200);
+        c.insert(key(1), 100).unwrap(); // readers = 1
+        assert!(c.invalidate(&key(1)));
+        assert!(!c.probe(&key(1)), "doomed tile unreachable");
+        // memory not yet reclaimed
+        assert_eq!(c.alloc.heap.in_use(), 100);
+        c.release(&key(1));
+        assert_eq!(c.alloc.heap.in_use(), 0);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn invalidate_absent_is_noop() {
+        let mut c = alru(100);
+        assert!(!c.invalidate(&key(9)));
+    }
+
+    #[test]
+    fn remove_owned_frees_immediately() {
+        let mut c = alru(200);
+        c.insert(key(1), 64).unwrap();
+        c.remove_owned(&key(1));
+        assert_eq!(c.alloc.heap.in_use(), 0);
+        assert_eq!(c.resident(), 0);
+    }
+
+    #[test]
+    fn readers_pin_across_reinsert_pressure() {
+        let mut c = alru(200);
+        c.insert(key(1), 100).unwrap(); // pinned, readers=1
+        c.insert(key(2), 100).unwrap();
+        c.release(&key(2));
+        // pressure: key3 must evict key2, never key1
+        let (_, ev, _) = c.insert(key(3), 100).unwrap();
+        assert_eq!(ev, vec![key(2)]);
+        assert!(c.probe(&key(1)));
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn peek_does_not_touch() {
+        let mut c = alru(300);
+        c.insert(key(1), 100).unwrap();
+        c.insert(key(2), 100).unwrap();
+        c.release(&key(1));
+        c.release(&key(2));
+        let before_hits = c.hits;
+        assert!(c.peek_offset(&key(1)).is_some());
+        assert_eq!(c.hits, before_hits);
+        // key1 is still LRU victim despite the peek
+        let (_, ev, _) = c.insert(key(3), 200).unwrap();
+        assert!(ev.contains(&key(1)));
+    }
+
+    #[test]
+    #[should_panic(expected = "release of untracked")]
+    fn release_unknown_panics() {
+        let mut c = alru(100);
+        c.release(&key(42));
+    }
+}

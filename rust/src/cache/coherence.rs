@@ -1,0 +1,202 @@
+//! MESI-X coherence directory (paper §IV-B, Fig. 3).
+//!
+//! The per-device ALRUs "all together reflect tile states": a tile is
+//! **E** (exclusive) when exactly one ALRU tracks it, **S** (shared) when
+//! several do, **I** (invalid) when none does, and **M** (modified) only
+//! ephemerally — a device that writes a C tile writes it straight back to
+//! host RAM and the tile transitions M → I immediately.
+//!
+//! The directory is the global bookkeeping that makes those states
+//! queryable without scanning every cache: for each tile key it records
+//! the holder set. It is also where the Fig. 3 transitions live:
+//!
+//! - read miss, no holders      ⇒ fetch from host,  I → E
+//! - read miss, holders exist   ⇒ fetch from a peer (P2P) if reachable,
+//!                                 else host; state → S
+//! - write-back (M, ephemeral)  ⇒ data to host; ALL holders invalidate;
+//!                                 state → I
+
+use crate::tile::TileKey;
+use std::collections::HashMap;
+
+/// Observable MESI-X state of a tile (M is never observable at rest —
+/// it collapses to I within `write_back`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileState {
+    Invalid,
+    Exclusive(usize),
+    /// Shared by ≥ 2 devices (holder count tracked in the directory).
+    Shared,
+}
+
+/// Directory entry: which devices hold a valid copy.
+#[derive(Clone, Debug, Default)]
+struct Entry {
+    holders: Vec<usize>,
+}
+
+/// The coherence directory across `n_devices` caches.
+pub struct Directory {
+    n_devices: usize,
+    entries: HashMap<TileKey, Entry>,
+    // stats
+    pub to_exclusive: u64,
+    pub to_shared: u64,
+    pub invalidations: u64,
+}
+
+impl Directory {
+    pub fn new(n_devices: usize) -> Directory {
+        Directory {
+            n_devices,
+            entries: HashMap::new(),
+            to_exclusive: 0,
+            to_shared: 0,
+            invalidations: 0,
+        }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
+    /// Current observable state of a tile.
+    pub fn state(&self, key: &TileKey) -> TileState {
+        match self.entries.get(key) {
+            None => TileState::Invalid,
+            Some(e) => match e.holders.len() {
+                0 => TileState::Invalid,
+                1 => TileState::Exclusive(e.holders[0]),
+                _ => TileState::Shared,
+            },
+        }
+    }
+
+    /// All devices currently holding a valid copy.
+    pub fn holders(&self, key: &TileKey) -> &[usize] {
+        self.entries.get(key).map(|e| e.holders.as_slice()).unwrap_or(&[])
+    }
+
+    /// Record that `dev` gained a valid copy (after its fetch completes).
+    /// Returns the resulting state.
+    pub fn add_holder(&mut self, key: TileKey, dev: usize) -> TileState {
+        debug_assert!(dev < self.n_devices);
+        let e = self.entries.entry(key).or_default();
+        if !e.holders.contains(&dev) {
+            e.holders.push(dev);
+        }
+        match e.holders.len() {
+            1 => {
+                self.to_exclusive += 1;
+                TileState::Exclusive(dev)
+            }
+            _ => {
+                self.to_shared += 1;
+                TileState::Shared
+            }
+        }
+    }
+
+    /// Record that `dev` lost its copy (ALRU eviction). E → I or S → E/S.
+    pub fn drop_holder(&mut self, key: &TileKey, dev: usize) {
+        if let Some(e) = self.entries.get_mut(key) {
+            e.holders.retain(|&d| d != dev);
+            if e.holders.is_empty() {
+                self.entries.remove(key);
+            }
+        }
+    }
+
+    /// The M-state write-back: returns the holder set that must be
+    /// invalidated (the caller invalidates each ALRU and writes the data
+    /// to host); directory entry is removed (→ I).
+    pub fn write_back(&mut self, key: &TileKey) -> Vec<usize> {
+        let holders = self.entries.remove(key).map(|e| e.holders).unwrap_or_default();
+        self.invalidations += holders.len() as u64;
+        holders
+    }
+
+    /// Pick a P2P source for `dev` among current holders restricted to
+    /// `peers` (devices reachable over the same PCI-E switch). Prefers
+    /// the first reachable holder.
+    pub fn peer_source(&self, key: &TileKey, dev: usize, peers: &[usize]) -> Option<usize> {
+        let e = self.entries.get(key)?;
+        e.holders.iter().copied().find(|h| *h != dev && peers.contains(h))
+    }
+
+    /// Number of tracked (non-invalid) tiles.
+    pub fn tracked(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tile::MatId;
+
+    fn key(addr: usize) -> TileKey {
+        TileKey { addr, mat: MatId::B, ti: 0, tj: addr }
+    }
+
+    #[test]
+    fn i_to_e_to_s_transitions() {
+        let mut d = Directory::new(3);
+        assert_eq!(d.state(&key(1)), TileState::Invalid);
+        assert_eq!(d.add_holder(key(1), 0), TileState::Exclusive(0));
+        assert_eq!(d.state(&key(1)), TileState::Exclusive(0));
+        assert_eq!(d.add_holder(key(1), 2), TileState::Shared);
+        assert_eq!(d.state(&key(1)), TileState::Shared);
+        assert_eq!(d.holders(&key(1)), &[0, 2]);
+    }
+
+    #[test]
+    fn drop_holder_degrades_state() {
+        let mut d = Directory::new(3);
+        d.add_holder(key(1), 0);
+        d.add_holder(key(1), 1);
+        d.drop_holder(&key(1), 0);
+        assert_eq!(d.state(&key(1)), TileState::Exclusive(1));
+        d.drop_holder(&key(1), 1);
+        assert_eq!(d.state(&key(1)), TileState::Invalid);
+        assert_eq!(d.tracked(), 0);
+    }
+
+    #[test]
+    fn write_back_invalidates_all_holders() {
+        let mut d = Directory::new(4);
+        d.add_holder(key(7), 1);
+        d.add_holder(key(7), 2);
+        d.add_holder(key(7), 3);
+        let holders = d.write_back(&key(7));
+        assert_eq!(holders, vec![1, 2, 3]);
+        assert_eq!(d.state(&key(7)), TileState::Invalid);
+        assert_eq!(d.invalidations, 3);
+        // idempotent on absent key
+        assert!(d.write_back(&key(7)).is_empty());
+    }
+
+    #[test]
+    fn peer_source_respects_topology() {
+        let mut d = Directory::new(4);
+        d.add_holder(key(1), 0);
+        d.add_holder(key(1), 3);
+        // dev 1's peers are {0}: finds 0
+        assert_eq!(d.peer_source(&key(1), 1, &[0]), Some(0));
+        // dev 2's peers are {3}: finds 3
+        assert_eq!(d.peer_source(&key(1), 2, &[3]), Some(3));
+        // dev 2 with no reachable holders
+        assert_eq!(d.peer_source(&key(1), 2, &[1]), None);
+        // self is never a source
+        assert_eq!(d.peer_source(&key(1), 0, &[0]), None);
+    }
+
+    #[test]
+    fn add_holder_idempotent() {
+        let mut d = Directory::new(2);
+        d.add_holder(key(1), 0);
+        d.add_holder(key(1), 0);
+        assert_eq!(d.holders(&key(1)), &[0]);
+        assert_eq!(d.state(&key(1)), TileState::Exclusive(0));
+    }
+}

@@ -1,0 +1,14 @@
+//! Two-level hierarchical tile caches (paper §IV-B).
+//!
+//! - [`alru`]: the per-device Approximate-LRU (Alg. 2) — L1 tile cache.
+//! - [`coherence`]: the MESI-X directory (Fig. 3).
+//! - [`tile_cache`]: the combined policy — L1 lookup, L2 peer fetch,
+//!   write-back invalidation — shared by both execution engines.
+
+pub mod alru;
+pub mod coherence;
+pub mod tile_cache;
+
+pub use alru::{Alru, LruBlock};
+pub use coherence::{Directory, TileState};
+pub use tile_cache::{Acquire, Source, TileCacheSet};

@@ -1,0 +1,296 @@
+//! The two-level hierarchical tile cache (paper §IV-B, Fig. 2):
+//! per-device ALRUs (L1) + the MESI-X directory that turns the union of
+//! peer caches into an L2.
+//!
+//! `TileCacheSet` is the single entry point both execution engines use:
+//! `acquire` implements the full lookup policy —
+//!
+//! 1. **L1 hit**: the tile is in this device's ALRU → reuse, no traffic;
+//! 2. **L2 hit**: a P2P-reachable peer holds it → fetch over the switch
+//!    (7.8 GB/s beats 6.54 GB/s host DMA, Table IV), state → S;
+//! 3. **miss**: fetch from host RAM, state → E (or S if unreachable
+//!    holders exist elsewhere).
+//!
+//! The caller performs the actual byte movement (or books simulated
+//! time) according to the returned [`Acquire`] plan, which keeps this
+//! module pure policy — shared verbatim by the DES and the threaded
+//! runtime (DESIGN.md §6.1).
+
+use super::alru::Alru;
+use super::coherence::Directory;
+use crate::mem::{AllocStrategy, DeviceAllocator, Offset};
+use crate::tile::TileKey;
+
+/// Where the bytes for an acquired tile come from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Source {
+    /// Already resident in this device's L1 — no transfer.
+    L1,
+    /// Copy from peer device `src` over P2P (L2 hit).
+    Peer { src: usize, src_offset: Offset },
+    /// Copy from host RAM (global miss).
+    Host,
+}
+
+/// The acquisition plan for one tile on one device.
+#[derive(Clone, Debug)]
+pub struct Acquire {
+    /// Device-arena offset of the destination block.
+    pub offset: Offset,
+    /// Where the bytes come from.
+    pub source: Source,
+    /// Tiles evicted to make room (their holders were dropped in the
+    /// directory; the engine may account the eviction, no copies move —
+    /// input tiles are clean by construction, M is ephemeral).
+    pub evicted: Vec<TileKey>,
+    /// Allocator cost in seconds (nonzero only under the CudaMalloc
+    /// strategy — the Fig. 5 experiment).
+    pub alloc_cost: f64,
+}
+
+/// Per-device ALRUs + the global coherence directory.
+pub struct TileCacheSet {
+    alrus: Vec<Alru>,
+    pub dir: Directory,
+    /// P2P peer lists per device (from the topology).
+    peers: Vec<Vec<usize>>,
+}
+
+impl TileCacheSet {
+    /// Build caches for `capacities[i]` bytes on device `i` with the
+    /// given P2P peer lists and allocation strategy.
+    pub fn new(capacities: &[usize], peers: Vec<Vec<usize>>, strategy: AllocStrategy) -> Self {
+        assert_eq!(capacities.len(), peers.len());
+        TileCacheSet {
+            alrus: capacities
+                .iter()
+                .map(|&c| Alru::new(DeviceAllocator::new(c, strategy)))
+                .collect(),
+            dir: Directory::new(capacities.len()),
+            peers,
+        }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.alrus.len()
+    }
+
+    /// Non-mutating locality probe for priority Eq. 3:
+    /// 2 = L1 hit, 1 = L2 hit, 0 = host.
+    pub fn locality_score(&self, dev: usize, key: &TileKey) -> u32 {
+        if self.alrus[dev].probe(key) {
+            return 2;
+        }
+        if self.dir.peer_source(key, dev, &self.peers[dev]).is_some() {
+            return 1;
+        }
+        0
+    }
+
+    /// Acquire a tile for reading on `dev` (paper Alg. 2 Translate +
+    /// MESI-X read transitions). Returns `None` only if the device
+    /// cannot hold the tile even after evicting everything evictable
+    /// (caller must sync streams to release readers and retry).
+    pub fn acquire(&mut self, dev: usize, key: TileKey, len: usize) -> Option<Acquire> {
+        if let Some(offset) = self.alrus[dev].lookup(&key) {
+            return Some(Acquire { offset, source: Source::L1, evicted: Vec::new(), alloc_cost: 0.0 });
+        }
+        // Find a P2P source among current holders *before* inserting
+        // ourselves (we are not a valid source).
+        let peer = self
+            .dir
+            .peer_source(&key, dev, &self.peers[dev])
+            .map(|src| (src, self.alrus[src].peek_offset(&key).expect("directory/ALRU desync")));
+        let (offset, evicted, alloc_cost) = self.alrus[dev].insert(key, len)?;
+        for ek in &evicted {
+            self.dir.drop_holder(ek, dev);
+        }
+        self.dir.add_holder(key, dev);
+        let source = match peer {
+            Some((src, src_offset)) => Source::Peer { src, src_offset },
+            None => Source::Host,
+        };
+        Some(Acquire { offset, source, evicted, alloc_cost })
+    }
+
+    /// Allocate space for a task's C accumulator tile on `dev`. C tiles
+    /// are *not* cached (M is ephemeral, paper Fig. 3): they are tracked
+    /// by the ALRU only while the task runs, then written back and
+    /// dropped via [`Self::writeback`].
+    pub fn acquire_output(&mut self, dev: usize, key: TileKey, len: usize) -> Option<Acquire> {
+        // An output tile may coincide with a cached input tile (TRMM/
+        // TRSM chains read neighbour C tiles): invalidate every cached
+        // copy first — the writer is about to make them stale.
+        for holder in self.dir.write_back(&key) {
+            self.alrus[holder].invalidate(&key);
+        }
+        let (offset, evicted, alloc_cost) = self.alrus[dev].insert(key, len)?;
+        for ek in &evicted {
+            self.dir.drop_holder(ek, dev);
+        }
+        self.dir.add_holder(key, dev);
+        Some(Acquire { offset, source: Source::Host, evicted, alloc_cost })
+    }
+
+    /// Release one reader reference (stream-sync point, Alg. 1 line 17).
+    pub fn release(&mut self, dev: usize, key: &TileKey) {
+        self.alrus[dev].release(key);
+    }
+
+    /// M-state write-back (paper Fig. 3): the device wrote its C tile;
+    /// all cached copies (including the writer's block) invalidate and
+    /// the tile's directory state collapses to I. The caller moves the
+    /// bytes to host before calling this.
+    pub fn writeback(&mut self, dev: usize, key: &TileKey) {
+        for holder in self.dir.write_back(key) {
+            self.alrus[holder].invalidate(key);
+        }
+        // The writer's block may have readers==1 (the task itself); the
+        // invalidate path dooms it and the final release frees it. If the
+        // writer never registered (already invalidated), this is a no-op.
+        let _ = dev;
+    }
+
+    /// Cache statistics of one device: (hits, misses, evictions).
+    pub fn stats(&self, dev: usize) -> (u64, u64, u64) {
+        let a = &self.alrus[dev];
+        (a.hits, a.misses, a.evictions)
+    }
+
+    /// Residency probe for tests.
+    pub fn resident(&self, dev: usize) -> usize {
+        self.alrus[dev].resident()
+    }
+
+    /// Consistency check across ALRUs and the directory (tests).
+    pub fn validate(&self) -> Result<(), String> {
+        for (d, a) in self.alrus.iter().enumerate() {
+            a.validate().map_err(|e| format!("dev {d}: {e}"))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tile::MatId;
+
+    fn key(addr: usize) -> TileKey {
+        TileKey { addr, mat: MatId::A, ti: addr, tj: 0 }
+    }
+
+    /// 3 devices, all peers, 300-byte VRAM each.
+    fn set3() -> TileCacheSet {
+        TileCacheSet::new(
+            &[300, 300, 300],
+            vec![vec![1, 2], vec![0, 2], vec![0, 1]],
+            AllocStrategy::FastHeap,
+        )
+    }
+
+    #[test]
+    fn miss_then_l1_hit() {
+        let mut s = set3();
+        let a = s.acquire(0, key(1), 100).unwrap();
+        assert_eq!(a.source, Source::Host);
+        s.release(0, &key(1));
+        let a2 = s.acquire(0, key(1), 100).unwrap();
+        assert_eq!(a2.source, Source::L1);
+        assert_eq!(s.locality_score(0, &key(1)), 2);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn peer_fetch_is_l2_hit() {
+        let mut s = set3();
+        s.acquire(0, key(1), 100).unwrap();
+        // device 1 misses L1, finds device 0 as P2P source
+        assert_eq!(s.locality_score(1, &key(1)), 1);
+        let a = s.acquire(1, key(1), 100).unwrap();
+        match a.source {
+            Source::Peer { src, .. } => assert_eq!(src, 0),
+            other => panic!("expected peer fetch, got {other:?}"),
+        }
+        // now shared: both hold it
+        assert_eq!(s.dir.holders(&key(1)), &[0, 1]);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn unreachable_peer_is_host_miss() {
+        // device 2 unreachable from 0 and 1
+        let mut s = TileCacheSet::new(
+            &[300, 300, 300],
+            vec![vec![1], vec![0], vec![]],
+            AllocStrategy::FastHeap,
+        );
+        s.acquire(0, key(1), 100).unwrap();
+        assert_eq!(s.locality_score(2, &key(1)), 0);
+        let a = s.acquire(2, key(1), 100).unwrap();
+        assert_eq!(a.source, Source::Host);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn eviction_updates_directory() {
+        let mut s = set3();
+        s.acquire(0, key(1), 100).unwrap();
+        s.acquire(0, key(2), 100).unwrap();
+        s.acquire(0, key(3), 100).unwrap();
+        s.release(0, &key(1));
+        s.release(0, &key(2));
+        s.release(0, &key(3));
+        // inserting key4 evicts key1 (LRU); directory must drop it
+        let a = s.acquire(0, key(4), 100).unwrap();
+        assert!(a.evicted.contains(&key(1)));
+        assert!(s.dir.holders(&key(1)).is_empty());
+        // peer lookup for key1 from dev1 now misses to host
+        assert_eq!(s.locality_score(1, &key(1)), 0);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn writeback_invalidates_all_copies() {
+        let mut s = set3();
+        s.acquire(0, key(9), 100).unwrap();
+        s.acquire(1, key(9), 100).unwrap();
+        assert_eq!(s.dir.holders(&key(9)), &[0, 1]);
+        // device 2 wrote the tile (as a C output): all copies die
+        s.writeback(2, &key(9));
+        assert!(s.dir.holders(&key(9)).is_empty());
+        assert_eq!(s.locality_score(0, &key(9)), 0);
+        // in-flight readers on 0/1 still release safely (doomed blocks)
+        s.release(0, &key(9));
+        s.release(1, &key(9));
+        assert_eq!(s.resident(0), 0);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn acquire_output_invalidates_stale_readers_copies() {
+        let mut s = set3();
+        // dev 0 cached the tile as an *input* earlier
+        s.acquire(0, key(5), 100).unwrap();
+        s.release(0, &key(5));
+        // dev 1 now takes it as its task's *output*
+        let a = s.acquire_output(1, key(5), 100).unwrap();
+        assert_eq!(a.source, Source::Host);
+        // dev 0's copy must be gone (it would read stale data next round)
+        assert_eq!(s.locality_score(0, &key(5)), 1, "only dev1's copy remains");
+        assert_eq!(s.dir.holders(&key(5)), &[1]);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn full_cache_with_pinned_tiles_returns_none() {
+        let mut s = set3();
+        s.acquire(0, key(1), 150).unwrap(); // readers = 1, pinned
+        s.acquire(0, key(2), 150).unwrap(); // readers = 1, pinned
+        assert!(s.acquire(0, key(3), 100).is_none());
+        // after a sync point releases readers, it succeeds
+        s.release(0, &key(1));
+        assert!(s.acquire(0, key(3), 100).is_some());
+        s.validate().unwrap();
+    }
+}

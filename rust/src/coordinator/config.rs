@@ -1,0 +1,164 @@
+//! Runtime configuration for a BLASX run.
+
+use crate::mem::AllocStrategy;
+
+/// Which scheduling policy drives the run (BLASX or a baseline
+//  re-implementation used by the benchmark harness).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// The paper's locality-aware demand-driven runtime (Alg. 1).
+    Blasx,
+    /// cuBLAS-XT-like: static round-robin tile blocks, on-demand
+    /// transfers, no tile cache, 2 streams.
+    CublasXt,
+    /// MAGMA-like: static 1D block-cyclic partition, per-GPU lookahead,
+    /// no inter-GPU cache.
+    Magma,
+    /// SuperMatrix-like: central ready queue, fork-join per tile op,
+    /// blocking (non-overlapped) transfers, 1 stream.
+    SuperMatrix,
+    /// PaRSEC-like: speed-weighted static partition with per-GPU tile
+    /// reuse, in-core only (rejects problems larger than VRAM).
+    Parsec,
+}
+
+impl Policy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Blasx => "blasx",
+            Policy::CublasXt => "cublasxt",
+            Policy::Magma => "magma",
+            Policy::SuperMatrix => "supermatrix",
+            Policy::Parsec => "parsec",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Policy> {
+        match s {
+            "blasx" => Some(Policy::Blasx),
+            "cublasxt" | "cublas-xt" | "xt" => Some(Policy::CublasXt),
+            "magma" => Some(Policy::Magma),
+            "supermatrix" | "sm" => Some(Policy::SuperMatrix),
+            "parsec" => Some(Policy::Parsec),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [Policy; 5] =
+        [Policy::Blasx, Policy::CublasXt, Policy::Magma, Policy::SuperMatrix, Policy::Parsec];
+}
+
+/// Kernel backend for the real (threaded) engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust blocked host kernels (fast on this CPU; oracle-grade).
+    Hostblas,
+    /// AOT artifacts through PJRT — the paper-architecture path
+    /// (L1 Pallas → L2 JAX → HLO → XLA CPU).
+    Pjrt,
+}
+
+/// Everything a run needs to know.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Tile size (the paper's only tuning parameter, §V-B).
+    pub t: usize,
+    /// Streams per device (paper: 4).
+    pub n_streams: usize,
+    /// Reservation-station capacity (paper sizing: 2× streams).
+    pub rs_capacity: usize,
+    /// Scheduling policy.
+    pub policy: Policy,
+    /// Device memory allocator strategy (FastHeap vs the Fig. 5
+    /// cudaMalloc cost model).
+    pub alloc: AllocStrategy,
+    /// Enable the CPU computation thread (paper §IV-C.2).
+    pub use_cpu: bool,
+    /// Enable work stealing between reservation stations.
+    pub work_stealing: bool,
+    /// Real-engine kernel backend.
+    pub backend: Backend,
+    /// Cap the device L1 tile-cache to this many bytes (None = device
+    /// VRAM); used by cache-pressure tests and ablations.
+    pub vram_override: Option<usize>,
+    /// k-steps issued per task between stream-sync points (Alg. 1 line
+    /// 16 closes a *batch* of k-iterations). Larger chunks cut sync
+    /// overhead; smaller chunks react faster to steals — 4 balances
+    /// both (ablation: benches/fig10_tile_size.rs companion).
+    pub k_chunk: usize,
+    /// Relative kernel-duration variance (paper §I: "the realtime
+    /// performance of a GPU varies with ... kernel saturation and GPU
+    /// occupancy"). Deterministic per (device, task): the same workload
+    /// noise hits every policy identically, so dynamic schedulers win
+    /// exactly by absorbing it.
+    pub jitter: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> RunConfig {
+        RunConfig {
+            t: 256,
+            n_streams: 4,
+            rs_capacity: 8,
+            policy: Policy::Blasx,
+            alloc: AllocStrategy::FastHeap,
+            use_cpu: false,
+            work_stealing: true,
+            backend: Backend::Hostblas,
+            vram_override: None,
+            k_chunk: 4,
+            jitter: 0.05,
+        }
+    }
+}
+
+/// Deterministic kernel-duration multiplier in `[1-jitter, 1+jitter]`
+/// for (device, task) — shared by the BLASX engine and every baseline.
+pub fn jitter_factor(jitter: f64, dev: usize, task: usize) -> f64 {
+    if jitter <= 0.0 {
+        return 1.0;
+    }
+    let mut s = (task as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ (dev as u64).wrapping_mul(0xD1B54A32D192ED03);
+    let x = crate::util::prng::splitmix64(&mut s);
+    let u = (x >> 11) as f64 / (1u64 << 53) as f64; // [0,1)
+    1.0 + jitter * (2.0 * u - 1.0)
+}
+
+impl RunConfig {
+    /// Paper-benchmark defaults: T=1024 tiles, 4 streams, stealing on.
+    pub fn paper() -> RunConfig {
+        RunConfig { t: 1024, ..Default::default() }
+    }
+
+    pub fn with_policy(mut self, p: Policy) -> RunConfig {
+        self.policy = p;
+        self
+    }
+
+    pub fn with_tile(mut self, t: usize) -> RunConfig {
+        self.t = t;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in Policy::ALL {
+            assert_eq!(Policy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Policy::from_name("xt"), Some(Policy::CublasXt));
+        assert_eq!(Policy::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn defaults_sane() {
+        let c = RunConfig::default();
+        assert_eq!(c.n_streams, 4);
+        assert!(c.rs_capacity >= c.n_streams);
+        assert_eq!(RunConfig::paper().t, 1024);
+    }
+}

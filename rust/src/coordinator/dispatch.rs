@@ -1,0 +1,182 @@
+//! Routine dispatch: descriptor → task set + key map → engine.
+
+use super::config::{Policy, RunConfig};
+use super::keymap::KeyMap;
+use super::sim_engine::{simulate, SimReport};
+use crate::api::types::{Routine, Side, Trans};
+use crate::api::Dtype;
+use crate::sim::Machine;
+use crate::task::{
+    taskize_gemm, taskize_symm, taskize_syr2k, taskize_syrk, taskize_trmm, taskize_trsm,
+    GemmDesc, SymmDesc, SyrkDesc, TriDesc,
+};
+use crate::task::TaskSet;
+use crate::tile::TileGrid;
+
+/// A fully-specified simulated workload: the routine, its geometry and
+/// the derived task set.
+pub struct Workload {
+    pub routine: Routine,
+    pub ts: TaskSet,
+    pub keymap: KeyMap,
+    pub dtype: Dtype,
+}
+
+impl Workload {
+    pub fn total_flops(&self) -> f64 {
+        self.ts.total_flops()
+    }
+}
+
+/// Build the task set + key map for a square-size-`n` instance of a
+/// routine — the benchmark harness' standard workload (paper §V-A:
+/// square matrices, `N` from 1024 to 39936).
+pub fn square_workload(routine: Routine, n: usize, t: usize, dtype: Dtype) -> Workload {
+    let esz = dtype.size_bytes();
+    let (ts, a, b, c) = match routine {
+        Routine::Gemm => {
+            let d = GemmDesc {
+                ta: Trans::No,
+                tb: Trans::No,
+                m: n,
+                n,
+                k: n,
+                alpha: 1.2,
+                beta: 0.8,
+                t,
+            };
+            (
+                taskize_gemm(&d),
+                TileGrid::new(n, n, t),
+                TileGrid::new(n, n, t),
+                TileGrid::new(n, n, t),
+            )
+        }
+        Routine::Syrk => {
+            let d = SyrkDesc {
+                uplo: crate::api::types::Uplo::Upper,
+                trans: Trans::No,
+                n,
+                k: n,
+                alpha: 1.2,
+                beta: 0.8,
+                t,
+            };
+            (
+                taskize_syrk(&d),
+                TileGrid::new(n, n, t),
+                TileGrid::new(n, n, t), // unused (B == A)
+                TileGrid::new(n, n, t),
+            )
+        }
+        Routine::Syr2k => {
+            let d = SyrkDesc {
+                uplo: crate::api::types::Uplo::Upper,
+                trans: Trans::No,
+                n,
+                k: n,
+                alpha: 1.2,
+                beta: 0.8,
+                t,
+            };
+            (
+                taskize_syr2k(&d),
+                TileGrid::new(n, n, t),
+                TileGrid::new(n, n, t),
+                TileGrid::new(n, n, t),
+            )
+        }
+        Routine::Symm => {
+            let d = SymmDesc {
+                side: Side::Left,
+                uplo: crate::api::types::Uplo::Upper,
+                m: n,
+                n,
+                alpha: 1.2,
+                beta: 0.8,
+                t,
+            };
+            (
+                taskize_symm(&d),
+                TileGrid::new(n, n, t),
+                TileGrid::new(n, n, t),
+                TileGrid::new(n, n, t),
+            )
+        }
+        Routine::Trmm => {
+            let d = TriDesc {
+                side: Side::Left,
+                uplo: crate::api::types::Uplo::Upper,
+                ta: Trans::No,
+                diag: crate::api::types::Diag::NonUnit,
+                m: n,
+                n,
+                alpha: 1.2,
+                t,
+            };
+            (
+                taskize_trmm(&d),
+                TileGrid::new(n, n, t),
+                TileGrid::new(n, n, t), // unused
+                TileGrid::new(n, n, t),
+            )
+        }
+        Routine::Trsm => {
+            let d = TriDesc {
+                side: Side::Left,
+                uplo: crate::api::types::Uplo::Upper,
+                ta: Trans::No,
+                diag: crate::api::types::Diag::NonUnit,
+                m: n,
+                n,
+                alpha: 1.2,
+                t,
+            };
+            (
+                taskize_trsm(&d),
+                TileGrid::new(n, n, t),
+                TileGrid::new(n, n, t),
+                TileGrid::new(n, n, t),
+            )
+        }
+    };
+    Workload { routine, ts, keymap: KeyMap::new(a, b, c, esz), dtype }
+}
+
+/// Simulate a workload on a machine under a config, routing to the
+/// requested policy (BLASX here; baselines live in `crate::baselines`
+/// and are selected through the same entry point).
+pub fn run_sim(cfg: &RunConfig, machine: &Machine, w: &Workload) -> SimReport {
+    match cfg.policy {
+        Policy::Blasx => simulate(cfg, machine, &w.ts, w.keymap.clone(), w.dtype),
+        _ => crate::baselines::run(cfg, machine, w),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::toy;
+
+    #[test]
+    fn workloads_build_for_all_routines() {
+        for r in Routine::ALL {
+            let w = square_workload(r, 300, 64, Dtype::F64);
+            w.ts.validate().unwrap();
+            assert!(w.total_flops() > 0.0, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn blasx_sim_runs_small_gemm() {
+        let cfg = RunConfig { t: 64, ..Default::default() };
+        let machine = toy(2, 64 * (64 * 64 * 8)); // room for 64 tiles
+        let w = square_workload(Routine::Gemm, 512, 64, Dtype::F64);
+        let rep = run_sim(&cfg, &machine, &w);
+        assert!(rep.makespan > 0.0);
+        // all 64 output tiles done
+        assert_eq!(rep.tasks_per_worker.iter().sum::<usize>(), 64);
+        // both devices contributed (demand-driven sharing)
+        assert!(rep.tasks_per_worker.iter().all(|&c| c > 0), "{:?}", rep.tasks_per_worker);
+    }
+}

@@ -1,0 +1,111 @@
+//! TileRef → (TileKey, geometry) resolution.
+//!
+//! The caches key tiles by host address (paper Alg. 2 "HA"). The real
+//! engine derives keys from the actual `HostMat` pointers; the simulator
+//! runs matrices that are never allocated (N up to 39936 ⇒ 12.7 GB per
+//! operand), so it lays the three operands out in a *virtual* address
+//! space with the same uniqueness and alignment properties.
+
+use crate::task::TileRef;
+use crate::tile::{MatId, TileGrid, TileKey};
+
+/// Geometry of the three operands of one routine invocation, plus the
+/// virtual base addresses the simulator keys tiles by.
+#[derive(Clone, Debug)]
+pub struct KeyMap {
+    grids: [TileGrid; 3],
+    bases: [usize; 3],
+    /// Element size in bytes.
+    pub esz: usize,
+    /// Tile size.
+    pub t: usize,
+}
+
+impl KeyMap {
+    /// Build from operand grids (A, B, C order). `esz` is the element
+    /// byte width; bases are synthetic, spaced far apart.
+    pub fn new(a: TileGrid, b: TileGrid, c: TileGrid, esz: usize) -> KeyMap {
+        let t = c.t;
+        // Space the virtual operands by more than any matrix footprint
+        // (2^44 bytes) so keys can never collide across operands.
+        const SPAN: usize = 1 << 44;
+        KeyMap { grids: [a, b, c], bases: [SPAN, 2 * SPAN, 3 * SPAN], esz, t }
+    }
+
+    fn idx(mat: MatId) -> usize {
+        match mat {
+            MatId::A => 0,
+            MatId::B => 1,
+            MatId::C => 2,
+        }
+    }
+
+    /// The grid of an operand.
+    pub fn grid(&self, mat: MatId) -> &TileGrid {
+        &self.grids[Self::idx(mat)]
+    }
+
+    /// Virtual cache key of a tile (unique per (mat, ti, tj), stable
+    /// across calls — mirrors a host address).
+    pub fn key(&self, r: TileRef) -> TileKey {
+        let g = self.grid(r.mat);
+        let addr = self.bases[Self::idx(r.mat)]
+            + (g.col_origin(r.tj) * g.rows + g.row_origin(r.ti)) * self.esz;
+        TileKey { addr, mat: r.mat, ti: r.ti, tj: r.tj }
+    }
+
+    /// Cache-block bytes of any tile (uniform t×t padding — what the
+    /// FastHeap recycles).
+    pub fn tile_bytes(&self) -> usize {
+        self.t * self.t * self.esz
+    }
+
+    /// *Actual* bytes of a tile (edge tiles are smaller) — what the DMA
+    /// moves and what Table V counts.
+    pub fn transfer_bytes(&self, r: TileRef) -> usize {
+        let (h, w) = self.grid(r.mat).tile_dims(r.ti, r.tj);
+        h * w * self.esz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map() -> KeyMap {
+        KeyMap::new(
+            TileGrid::new(100, 50, 32),
+            TileGrid::new(50, 80, 32),
+            TileGrid::new(100, 80, 32),
+            8,
+        )
+    }
+
+    #[test]
+    fn keys_unique_within_and_across_mats() {
+        let m = map();
+        let mut seen = std::collections::HashSet::new();
+        for mat in [MatId::A, MatId::B, MatId::C] {
+            let g = *m.grid(mat);
+            for (ti, tj) in g.iter() {
+                assert!(seen.insert(m.key(TileRef::new(mat, ti, tj)).addr));
+            }
+        }
+    }
+
+    #[test]
+    fn keys_stable() {
+        let m = map();
+        let r = TileRef::new(MatId::B, 1, 2);
+        assert_eq!(m.key(r), m.key(r));
+    }
+
+    #[test]
+    fn transfer_bytes_shrink_on_edges() {
+        let m = map();
+        // A is 100x50 with t=32: last tile row is 100-3*32 = 4 high
+        assert_eq!(m.transfer_bytes(TileRef::new(MatId::A, 0, 0)), 32 * 32 * 8);
+        assert_eq!(m.transfer_bytes(TileRef::new(MatId::A, 3, 0)), 4 * 32 * 8);
+        assert_eq!(m.tile_bytes(), 32 * 32 * 8);
+    }
+}

@@ -1,0 +1,18 @@
+//! The L3 coordinator (system S11): configuration, routine dispatch and
+//! the two execution engines sharing one scheduling policy —
+//!
+//! - [`sim_engine`]: the DES engine producing paper-scale performance
+//!   numbers on the simulated substrate (benchmark harness);
+//! - [`real_engine`]: the threaded engine computing real numerics
+//!   through PJRT artifacts or the hostblas kernels (public BLAS API).
+
+pub mod config;
+pub mod dispatch;
+pub mod keymap;
+pub mod real_engine;
+pub mod sim_engine;
+
+pub use config::{Backend, Policy, RunConfig};
+pub use dispatch::{run_sim, square_workload, Workload};
+pub use keymap::KeyMap;
+pub use sim_engine::{simulate, SimEngine, SimReport};

@@ -1,0 +1,608 @@
+//! The BLASX scheduling runtime on the simulated substrate (Alg. 1).
+//!
+//! Each simulated GPU runs the per-device loop of Alg. 1 lines 8–25 as a
+//! state machine advanced by sync-point events:
+//!
+//! 1. **wake at a sync point** (line 16 StreamsSynch): apply deferred
+//!    reader releases (line 17 ReaderUpdate), complete finished tasks
+//!    (C write-back = M→I), enqueue unlocked chain successors;
+//! 2. **refill**: top up the reservation station from the global
+//!    non-blocking queue, or steal from the fullest victim RS when both
+//!    the queue and the own RS are empty (work sharing + stealing);
+//! 3. **issue**: bind the top `n_streams` prioritized tasks (Eq. 3) to
+//!    streams and issue every k-step — tile acquisitions through the
+//!    two-level cache (transfers booked on DMA lanes only on miss),
+//!    kernels booked on the device's serial kernel lane;
+//! 4. schedule the next wake at the round's completion time.
+//!
+//! The demand-driven balance emerges exactly as in the paper: a fast
+//! device's round ends sooner, so it returns to the queue sooner and
+//! consumes more tasks. Everything is deterministic.
+//!
+//! The CPU computation thread (§IV-C.2) is a device-like worker that
+//! consumes *whole tasks* from the queue at the host-BLAS rate, with no
+//! transfers (it operates in host RAM).
+
+use super::config::RunConfig;
+use super::keymap::KeyMap;
+use crate::api::Dtype;
+use crate::cache::{Source, TileCacheSet};
+use crate::mem::AllocStrategy;
+use crate::sched::{task_priority, Station};
+use crate::sim::{Dir, EventQueue, Lane, Machine, SimTime, Topology};
+use crate::task::{Task, TaskSet};
+use crate::tile::TileKey;
+use crate::trace::{EvKind, Trace};
+use std::collections::VecDeque;
+
+/// Result of one simulated run.
+#[derive(Debug)]
+pub struct SimReport {
+    /// Virtual seconds from first issue to last write-back.
+    pub makespan: SimTime,
+    /// Full event trace (Fig. 1 / Fig. 8 / Table V raw material).
+    pub trace: Trace,
+    /// Tasks executed per worker (devices then CPU) — load-balance data.
+    pub tasks_per_worker: Vec<usize>,
+    /// Total allocator cost paid (Fig. 5 signal; ~0 under FastHeap).
+    pub alloc_cost: f64,
+    /// L1 hits, misses, evictions per device.
+    pub cache_stats: Vec<(u64, u64, u64)>,
+    /// Steals performed per device.
+    pub steals: Vec<u64>,
+    /// Measured DMA throughputs (hd, p2p) bytes/s — Table IV.
+    pub dma_throughput: (f64, f64),
+    /// False when the policy cannot run the problem at all (e.g. the
+    /// PaRSEC-like baseline is in-core only and the matrices exceed
+    /// VRAM) — rendered as "N/A" by the harness, like the paper's
+    /// partial benchmarks.
+    pub feasible: bool,
+}
+
+impl SimReport {
+    /// Marker report for configurations a policy cannot execute.
+    pub fn infeasible() -> SimReport {
+        SimReport {
+            makespan: f64::NAN,
+            trace: Trace::new(),
+            tasks_per_worker: Vec::new(),
+            alloc_cost: 0.0,
+            cache_stats: Vec::new(),
+            steals: Vec::new(),
+            dma_throughput: (0.0, 0.0),
+            feasible: false,
+        }
+    }
+}
+
+impl SimReport {
+    /// Achieved GFLOP/s given the task set's flop count.
+    pub fn gflops(&self, total_flops: f64) -> f64 {
+        if !self.feasible || self.makespan <= 0.0 {
+            return 0.0;
+        }
+        total_flops / self.makespan / 1e9
+    }
+}
+
+impl std::fmt::Display for SimReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if !self.feasible {
+            return write!(f, "infeasible");
+        }
+        write!(
+            f,
+            "makespan {:.4}s, tasks/worker {:?}, steals {:?}",
+            self.makespan, self.tasks_per_worker, self.steals
+        )
+    }
+}
+
+/// An in-flight task bound to a stream, advancing one k-step per round
+/// (Alg. 1 line 16 syncs *inside* the while loop — rounds are k-steps,
+/// not whole tasks, which keeps slow devices from hoarding work the
+/// fast ones could steal).
+#[derive(Clone, Copy)]
+struct Active {
+    task: usize,
+    stream: usize,
+    /// Next k-step to issue.
+    next_step: usize,
+}
+
+/// Per-device worker state.
+struct Worker {
+    rs: Station,
+    active: Vec<Active>,
+    /// Per-stream ready time.
+    stream_free: Vec<SimTime>,
+    /// Kernel engine (kernels serialize on the SMs).
+    kernel_lane: Lane,
+    /// Reader releases to apply at the next sync.
+    deferred_releases: Vec<TileKey>,
+    /// Write-backs (task id, completion booked) to finalize at sync.
+    finished: Vec<usize>,
+    /// Is a wake event scheduled?
+    scheduled: bool,
+    /// Done issuing (queue drained and nothing active).
+    idle: bool,
+    tasks_done: usize,
+    steals: u64,
+}
+
+/// The simulated BLASX runtime.
+pub struct SimEngine<'a> {
+    cfg: &'a RunConfig,
+    machine: &'a Machine,
+    dtype: Dtype,
+    keymap: KeyMap,
+    tasks: Vec<Task>,
+    /// Remaining predecessor count per task (chains).
+    deps: Vec<usize>,
+    queue: VecDeque<usize>,
+    caches: TileCacheSet,
+    topo: Topology,
+    workers: Vec<Worker>,
+    /// CPU worker (consumes whole tasks) if enabled.
+    cpu: Option<CpuWorker>,
+    events: EventQueue<WakeEvent>,
+    trace: Trace,
+    alloc_cost: f64,
+    remaining: usize,
+}
+
+struct CpuWorker {
+    busy_until: SimTime,
+    scheduled: bool,
+    tasks_done: usize,
+    current: Option<usize>,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum WakeEvent {
+    Device(usize),
+    Cpu,
+}
+
+impl<'a> SimEngine<'a> {
+    pub fn new(
+        cfg: &'a RunConfig,
+        machine: &'a Machine,
+        ts: &TaskSet,
+        keymap: KeyMap,
+        dtype: Dtype,
+    ) -> SimEngine<'a> {
+        let n = machine.devices.len();
+        let capacities: Vec<usize> = machine
+            .devices
+            .iter()
+            .map(|d| cfg.vram_override.unwrap_or(d.vram))
+            .collect();
+        let topo = Topology::new(machine.topology.clone());
+        let peers: Vec<Vec<usize>> = (0..n).map(|d| topo.peers(d)).collect();
+        let caches = TileCacheSet::new(&capacities, peers, cfg.alloc);
+        let workers = (0..n)
+            .map(|d| Worker {
+                rs: Station::new(cfg.rs_capacity),
+                active: Vec::new(),
+                stream_free: vec![0.0; machine.devices[d].n_streams.min(cfg.n_streams)],
+                kernel_lane: Lane::new(),
+                deferred_releases: Vec::new(),
+                finished: Vec::new(),
+                scheduled: false,
+                idle: false,
+                tasks_done: 0,
+                steals: 0,
+            })
+            .collect();
+        let deps: Vec<usize> = ts.tasks.iter().map(|t| t.n_deps).collect();
+        let queue: VecDeque<usize> = ts.heads.iter().copied().collect();
+        let cpu = if cfg.use_cpu && machine.cpu.is_some() {
+            Some(CpuWorker { busy_until: 0.0, scheduled: false, tasks_done: 0, current: None })
+        } else {
+            None
+        };
+        SimEngine {
+            cfg,
+            machine,
+            dtype,
+            keymap,
+            remaining: ts.tasks.len(),
+            tasks: ts.tasks.clone(),
+            deps,
+            queue,
+            caches,
+            topo,
+            workers,
+            cpu,
+            events: EventQueue::new(),
+            trace: Trace::new(),
+            alloc_cost: 0.0,
+        }
+    }
+
+    /// Run to completion, returning the report.
+    pub fn run(mut self) -> SimReport {
+        // Kick every worker at t=0.
+        for d in 0..self.workers.len() {
+            self.workers[d].scheduled = true;
+            self.events.schedule(0.0, WakeEvent::Device(d));
+        }
+        if self.cpu.is_some() {
+            self.cpu.as_mut().unwrap().scheduled = true;
+            self.events.schedule(0.0, WakeEvent::Cpu);
+        }
+        let mut guard = 0u64;
+        let guard_max = 1_000_000_000;
+        while let Some((now, ev)) = self.events.pop() {
+            guard += 1;
+            assert!(guard < guard_max, "simulation runaway");
+            match ev {
+                WakeEvent::Device(d) => self.device_round(d, now),
+                WakeEvent::Cpu => self.cpu_round(now),
+            }
+            if self.remaining == 0 {
+                break;
+            }
+        }
+        assert_eq!(self.remaining, 0, "simulation stalled with {} tasks left", self.remaining);
+        let mut trace = self.trace;
+        trace.makespan = trace
+            .events
+            .iter()
+            .map(|e| e.end)
+            .fold(0.0, f64::max);
+        let mut tasks_per_worker: Vec<usize> =
+            self.workers.iter().map(|w| w.tasks_done).collect();
+        if let Some(cpu) = &self.cpu {
+            tasks_per_worker.push(cpu.tasks_done);
+        }
+        SimReport {
+            makespan: trace.makespan,
+            tasks_per_worker,
+            alloc_cost: self.alloc_cost,
+            cache_stats: (0..self.workers.len()).map(|d| self.caches.stats(d)).collect(),
+            steals: self.workers.iter().map(|w| w.steals).collect(),
+            dma_throughput: self.topo.measured_throughput(),
+            trace,
+            feasible: true,
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // device worker round (Alg. 1 lines 10–25)
+
+    fn device_round(&mut self, d: usize, now: SimTime) {
+        self.workers[d].scheduled = false;
+
+        // -- line 17 ReaderUpdate: releases deferred from the last round
+        let releases = std::mem::take(&mut self.workers[d].deferred_releases);
+        for key in releases {
+            self.caches.release(d, &key);
+        }
+        // -- completed tasks: M→I write-back bookkeeping + chain unlock
+        let finished = std::mem::take(&mut self.workers[d].finished);
+        for tid in finished {
+            let key = self.keymap.key(crate::task::TileRef::new(
+                crate::tile::MatId::C,
+                self.tasks[tid].ci,
+                self.tasks[tid].cj,
+            ));
+            self.caches.writeback(d, &key);
+            self.caches.release(d, &key);
+            self.workers[d].tasks_done += 1;
+            self.remaining -= 1;
+            if let Some(succ) = self.tasks[tid].successor {
+                self.deps[succ] -= 1;
+                if self.deps[succ] == 0 {
+                    self.queue.push_back(succ);
+                    self.wake_idlers(now);
+                }
+            }
+        }
+
+        // -- lines 11–15: refill the RS
+        self.refill_rs(d);
+
+        // Streams whose issued work is done — the only ones this wake
+        // touches. Syncing per stream (not device-wide) is what lets a
+        // finished stream start its next task's transfers while sibling
+        // streams still compute — the paper's "seamless occupancy".
+        let eps = 1e-12;
+        let idle_stream = |w: &Worker, s: usize| w.stream_free[s] <= now + eps;
+
+        // -- bind top-priority tasks to free streams; the C accumulator
+        //    block is acquired at bind time and held until write-back.
+        let n_streams = self.workers[d].stream_free.len();
+        while self.workers[d].active.len() < n_streams {
+            let Some(slot) = self.workers[d].rs.take_best() else { break };
+            let t = &self.tasks[slot.task];
+            let ckey = self
+                .keymap
+                .key(crate::task::TileRef::new(crate::tile::MatId::C, t.ci, t.cj));
+            match self.caches.acquire_output(d, ckey, self.keymap.tile_bytes()) {
+                Some(acq) => {
+                    self.alloc_cost += acq.alloc_cost;
+                    if acq.alloc_cost > 0.0 {
+                        // cudaMalloc/cudaFree stall the device context
+                        self.workers[d].kernel_lane.book(now, acq.alloc_cost);
+                    }
+                    let used: Vec<usize> =
+                        self.workers[d].active.iter().map(|a| a.stream).collect();
+                    let stream = (0..n_streams).find(|s| !used.contains(s)).unwrap();
+                    if t.reads_c {
+                        let bytes = self.keymap.transfer_bytes(
+                            crate::task::TileRef::new(crate::tile::MatId::C, t.ci, t.cj),
+                        );
+                        let ready = self.workers[d].stream_free[stream].max(now);
+                        let done = self.topo.book_hd(d, Dir::H2D, bytes, ready);
+                        self.trace.record(d, stream, EvKind::H2d, ready, done, bytes as f64);
+                        self.workers[d].stream_free[stream] = done;
+                    }
+                    self.workers[d].active.push(Active { task: slot.task, stream, next_step: 0 });
+                }
+                None => {
+                    // cache pressure: task returns to the RS, retried
+                    // after the next sync releases readers
+                    self.workers[d].rs.insert(slot.task, slot.priority);
+                    break;
+                }
+            }
+        }
+
+        if self.workers[d].active.is_empty() {
+            // nothing to do: dormant until new tasks appear
+            self.workers[d].idle = true;
+            return;
+        }
+        self.workers[d].idle = false;
+
+        // -- lines 18–25: issue a batch of k-steps per bound task whose
+        //    stream has drained, k-major interleaved across streams so
+        //    one stream's transfer overlaps another's kernel; each
+        //    stream's own sync point closes its batch.
+        let _ = idle_stream;
+        let mut actives = std::mem::take(&mut self.workers[d].active);
+        let mut still_active: Vec<Active> = Vec::new();
+        for _k in 0..self.cfg.k_chunk.max(1) {
+            for a in actives.iter_mut() {
+                let Some(&step) = self.tasks[a.task].steps.get(a.next_step) else { continue };
+                let mut ready = self.workers[d].stream_free[a.stream].max(now);
+                let mut ok = true;
+                for tile in step.inputs() {
+                    let key = self.keymap.key(tile);
+                    match self.caches.acquire(d, key, self.keymap.tile_bytes()) {
+                        Some(acq) => {
+                            self.alloc_cost += acq.alloc_cost;
+                            if acq.alloc_cost > 0.0 {
+                                let (_, e) = self.workers[d].kernel_lane.book(ready, acq.alloc_cost);
+                                ready = e;
+                            }
+                            let bytes = self.keymap.transfer_bytes(tile);
+                            match acq.source {
+                                Source::L1 => {}
+                                Source::Peer { src, .. } => {
+                                    let done = self.topo.book_p2p(src, d, bytes, ready);
+                                    self.trace.record(d, a.stream, EvKind::P2p, ready, done, bytes as f64);
+                                    ready = done;
+                                }
+                                Source::Host => {
+                                    let done = self.topo.book_hd(d, Dir::H2D, bytes, ready);
+                                    self.trace.record(d, a.stream, EvKind::H2d, ready, done, bytes as f64);
+                                    ready = done;
+                                }
+                            }
+                            self.workers[d].deferred_releases.push(key);
+                        }
+                        None => {
+                            // out of cache even after eviction: stall
+                            // this task; the sync releases readers
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if ok {
+                    let dev = &self.machine.devices[d];
+                    let secs = dev.kernel_secs(step.flops(), self.cfg.t, self.dtype)
+                        * super::config::jitter_factor(self.cfg.jitter, d, a.task);
+                    let (ks, ke) = self.workers[d].kernel_lane.book(ready, secs);
+                    self.trace.record(d, a.stream, EvKind::Kernel, ks, ke, step.flops());
+                    self.workers[d].stream_free[a.stream] = ke;
+                    a.next_step += 1;
+                }
+            }
+        }
+        for a in actives {
+            if a.next_step == self.tasks[a.task].steps.len() {
+                // -- task complete: C write-back after its last kernel
+                let t = &self.tasks[a.task];
+                let bytes = self
+                    .keymap
+                    .transfer_bytes(crate::task::TileRef::new(crate::tile::MatId::C, t.ci, t.cj));
+                let ready = self.workers[d].stream_free[a.stream];
+                let done = self.topo.book_hd(d, Dir::D2H, bytes, ready);
+                self.trace.record(d, a.stream, EvKind::D2h, ready, done, bytes as f64);
+                self.workers[d].stream_free[a.stream] = done;
+                self.workers[d].finished.push(a.task);
+            } else {
+                // -- prefetch the next chunk's first tiles behind this
+                //    stream's last kernel (CUDA-style double buffering):
+                //    the transfers ride out the sync wait, so the next
+                //    round's kernels start on warm tiles. Eviction before
+                //    use is possible under pressure — the next acquire
+                //    simply misses again.
+                if let Some(step) = self.tasks[a.task].steps.get(a.next_step) {
+                    let ready = self.workers[d].stream_free[a.stream];
+                    let mut done_at = ready;
+                    for tile in step.inputs() {
+                        let key = self.keymap.key(tile);
+                        if let Some(acq) = self.caches.acquire(d, key, self.keymap.tile_bytes()) {
+                            self.alloc_cost += acq.alloc_cost;
+                            if acq.alloc_cost > 0.0 {
+                                let (_, e) = self.workers[d].kernel_lane.book(done_at, acq.alloc_cost);
+                                done_at = e;
+                            }
+                            let bytes = self.keymap.transfer_bytes(tile);
+                            match acq.source {
+                                Source::L1 => {}
+                                Source::Peer { src, .. } => {
+                                    let done = self.topo.book_p2p(src, d, bytes, done_at);
+                                    self.trace.record(d, a.stream, EvKind::P2p, done_at, done, bytes as f64);
+                                    done_at = done;
+                                }
+                                Source::Host => {
+                                    let done = self.topo.book_hd(d, Dir::H2D, bytes, done_at);
+                                    self.trace.record(d, a.stream, EvKind::H2d, done_at, done, bytes as f64);
+                                    done_at = done;
+                                }
+                            }
+                            self.workers[d].deferred_releases.push(key);
+                        }
+                    }
+                    // the stream is busy until its prefetches land
+                    self.workers[d].stream_free[a.stream] = done_at;
+                }
+                still_active.push(a);
+            }
+        }
+        self.workers[d].active = still_active;
+
+        // -- line 16: schedule the sync point closing the round; the
+        //    prefetches above keep the barrier off the transfer path.
+        let t_sync = self.workers[d]
+            .stream_free
+            .iter()
+            .cloned()
+            .fold(now, f64::max);
+        self.workers[d].scheduled = true;
+        self.events
+            .schedule(t_sync.max(now + 1e-9), WakeEvent::Device(d));
+    }
+
+    fn priority_of(&self, d: usize, task: usize) -> u32 {
+        task_priority(&self.tasks[task], d, &self.caches, |r| self.keymap.key(r))
+    }
+
+    /// Lines 11–15: fill RS from the global queue; steal if both empty.
+    fn refill_rs(&mut self, d: usize) {
+        // Demand pacing: a wake may claim at most one stream-round's
+        // worth of tasks. Draining the whole queue into the first RS
+        // that wakes would hand slow devices work the fast ones will
+        // want — the queue IS the demand signal (§IV-C).
+        let mut budget = self.workers[d].stream_free.len();
+        while !self.workers[d].rs.is_full() && budget > 0 {
+            match self.queue.pop_front() {
+                Some(t) => {
+                    let p = self.priority_of(d, t);
+                    self.workers[d].rs.insert(t, p);
+                    budget -= 1;
+                }
+                None => break,
+            }
+        }
+        // Paper §IV-C: stealing triggers when the device "exhausts tasks
+        // on RS while the global queue is also empty" — an empty RS is
+        // the demand signal even while earlier tasks still stream.
+        if self.workers[d].rs.is_empty() && self.cfg.work_stealing {
+            // steal from the fullest victim
+            let victim = (0..self.workers.len())
+                .filter(|&v| v != d)
+                .max_by_key(|&v| self.workers[v].rs.len());
+            if let Some(v) = victim {
+                if let Some(slot) = self.workers[v].rs.steal_worst() {
+                    let p = self.priority_of(d, slot.task);
+                    self.workers[d].rs.insert(slot.task, p);
+                    self.workers[d].steals += 1;
+                }
+            }
+        }
+        // refresh priorities after arrivals (paper §IV-C)
+        let keymap = &self.keymap;
+        let caches = &self.caches;
+        let tasks = &self.tasks;
+        self.workers[d]
+            .rs
+            .refresh(|t| task_priority(&tasks[t], d, caches, |r| keymap.key(r)));
+    }
+
+    /// Wake any dormant workers (new tasks became ready).
+    fn wake_idlers(&mut self, now: SimTime) {
+        for d in 0..self.workers.len() {
+            if self.workers[d].idle && !self.workers[d].scheduled {
+                self.workers[d].scheduled = true;
+                self.events.schedule(now, WakeEvent::Device(d));
+            }
+        }
+        if let Some(cpu) = &mut self.cpu {
+            if cpu.current.is_none() && !cpu.scheduled {
+                cpu.scheduled = true;
+                self.events.schedule(now, WakeEvent::Cpu);
+            }
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // CPU computation thread (§IV-C.2): whole tasks, host-rate kernels
+
+    fn cpu_round(&mut self, now: SimTime) {
+        let Some(cpu) = &mut self.cpu else { return };
+        cpu.scheduled = false;
+        // finish the current task
+        if let Some(tid) = cpu.current.take() {
+            cpu.tasks_done += 1;
+            self.remaining -= 1;
+            let succ = self.tasks[tid].successor;
+            if let Some(succ) = succ {
+                self.deps[succ] -= 1;
+                if self.deps[succ] == 0 {
+                    self.queue.push_back(succ);
+                    self.wake_idlers(now);
+                }
+            }
+        }
+        // pull the next one (demand-driven, same queue as the GPUs) —
+        // but only while the GPUs have clearly more queued work than one
+        // CPU task takes: a whole task on the slow host near depletion
+        // would straggle the finish line (§IV-C.2).
+        let model = self.machine.cpu.as_ref().expect("cpu worker without model");
+        let Some(&head) = self.queue.front() else { return };
+        let cpu_secs_est = self.tasks[head].flops / (model.rate(self.dtype) * 1e9);
+        let gpu_rate: f64 = self
+            .machine
+            .devices
+            .iter()
+            .map(|dev| dev.rate(self.dtype) * 1e9 * dev.efficiency(self.cfg.t))
+            .sum();
+        let queued_flops: f64 = self.queue.iter().map(|&t| self.tasks[t].flops).sum();
+        if queued_flops / gpu_rate < 1.2 * cpu_secs_est {
+            return;
+        }
+        let Some(tid) = self.queue.pop_front() else { return };
+        let secs = self.tasks[tid].flops / (model.rate(self.dtype) * 1e9)
+            * super::config::jitter_factor(self.cfg.jitter, self.workers.len(), tid);
+        let dev_idx = self.workers.len(); // CPU traces as the last "device"
+        self.trace.record(dev_idx, 0, EvKind::Kernel, now, now + secs, self.tasks[tid].flops);
+        let cpu = self.cpu.as_mut().unwrap();
+        cpu.current = Some(tid);
+        cpu.busy_until = now + secs;
+        cpu.scheduled = true;
+        self.events.schedule(cpu.busy_until, WakeEvent::Cpu);
+    }
+}
+
+/// Convenience: run a task set under a config on a machine.
+pub fn simulate(
+    cfg: &RunConfig,
+    machine: &Machine,
+    ts: &TaskSet,
+    keymap: KeyMap,
+    dtype: Dtype,
+) -> SimReport {
+    // The Fig. 5 cudaMalloc model needs the allocator cost surfaced; the
+    // engine accumulates it into `alloc_cost` and (approximately) into
+    // the makespan by serializing it on the kernel lane — see
+    // `AllocStrategy::CudaMalloc` handling in `mem`.
+    let _ = AllocStrategy::FastHeap;
+    SimEngine::new(cfg, machine, ts, keymap, dtype).run()
+}

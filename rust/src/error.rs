@@ -1,0 +1,76 @@
+//! BLASX error types.
+
+use thiserror::Error;
+
+/// Library-wide error type.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Invalid argument to a BLAS routine (xerbla-style): the 1-based
+    /// parameter index and a human-readable description.
+    #[error("blasx: illegal parameter #{index} to {routine}: {reason}")]
+    IllegalParam {
+        routine: &'static str,
+        index: usize,
+        reason: String,
+    },
+
+    /// The runtime context is misconfigured (no devices, bad tile size…).
+    #[error("blasx config error: {0}")]
+    Config(String),
+
+    /// PJRT / XLA failure while loading or executing an artifact.
+    #[error("blasx runtime error: {0}")]
+    Runtime(String),
+
+    /// A required AOT artifact is missing — run `make artifacts`.
+    #[error("missing artifact `{0}` (run `make artifacts`)")]
+    MissingArtifact(String),
+
+    /// The artifact store (manifest.json / *.hlo.txt) is unreadable.
+    #[error("blasx artifact error: {0}")]
+    Artifact(String),
+
+    /// Device memory exhausted and nothing evictable.
+    #[error("device {device} out of memory: need {need} bytes, capacity {capacity}")]
+    OutOfDeviceMemory {
+        device: usize,
+        need: usize,
+        capacity: usize,
+    },
+
+    /// Internal invariant violation (a bug in BLASX itself).
+    #[error("blasx internal error: {0}")]
+    Internal(String),
+
+    /// I/O error (artifact files, trace export…).
+    #[error("blasx io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(format!("{e:?}"))
+    }
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Helper to build an IllegalParam error.
+pub fn illegal(routine: &'static str, index: usize, reason: impl Into<String>) -> Error {
+    Error::IllegalParam { routine, index, reason: reason.into() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_messages_render() {
+        let e = illegal("dgemm", 3, "m < 0");
+        assert!(e.to_string().contains("dgemm"));
+        assert!(e.to_string().contains("#3"));
+        let e = Error::MissingArtifact("gemm_nn_f64_256".into());
+        assert!(e.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,264 @@
+//! Host GEMM: a naive oracle and a register/cache-blocked kernel.
+//!
+//! All matrices are column-major. `op(X)` is selected by a `Trans` flag.
+//! The naive version is the *correctness oracle* for everything else in
+//! the repo (its triple loop is simple enough to trust by inspection);
+//! the blocked version is the CPU worker's hot kernel (paper §IV-C.2:
+//! "the CPU cores … solve the task with a multithreaded BLAS kernel").
+
+use crate::api::types::{Scalar, Trans};
+
+/// Read `op(X)[r, c]` from a column-major buffer with leading dim `ld`.
+#[inline(always)]
+fn opx<T: Scalar>(x: &[T], ld: usize, trans: Trans, r: usize, c: usize) -> T {
+    match trans {
+        Trans::No => x[c * ld + r],
+        Trans::Yes => x[r * ld + c],
+    }
+}
+
+/// Naive reference GEMM: `C := alpha * op(A) * op(B) + beta * C` where
+/// op(A) is m×k and op(B) is k×n.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_ref<T: Scalar>(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    for j in 0..n {
+        for i in 0..m {
+            let mut acc = T::zero();
+            for p in 0..k {
+                acc += opx(a, lda, ta, i, p) * opx(b, ldb, tb, p, j);
+            }
+            let old = c[j * ldc + i];
+            c[j * ldc + i] = alpha * acc + beta * old;
+        }
+    }
+}
+
+/// Panel size for the blocked kernel (fits comfortably in L1/L2 for f64).
+const MC: usize = 64;
+const NC: usize = 64;
+const KC: usize = 128;
+
+/// Cache-blocked GEMM with the same semantics as [`gemm_ref`].
+///
+/// Strategy: pack op(A) and op(B) panels into contiguous buffers (which
+/// also normalizes away the transpose), then run a 4-wide unrolled
+/// micro-kernel over columns. ~5-15× faster than naive at T=256 f64 while
+/// staying dependency-free.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_blocked<T: Scalar>(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    if alpha == T::zero() || k == 0 {
+        // C := beta * C
+        for j in 0..n {
+            for i in 0..m {
+                let v = c[j * ldc + i];
+                c[j * ldc + i] = beta * v;
+            }
+        }
+        return;
+    }
+    // apply beta once up front, accumulate with beta=1 afterwards
+    if beta != T::one() {
+        for j in 0..n {
+            for i in 0..m {
+                let v = c[j * ldc + i];
+                c[j * ldc + i] = beta * v;
+            }
+        }
+    }
+    let mut apack = vec![T::zero(); MC * KC];
+    let mut bpack = vec![T::zero(); KC * NC];
+    let mut pc = 0;
+    while pc < k {
+        let kb = KC.min(k - pc);
+        let mut jc = 0;
+        while jc < n {
+            let nb = NC.min(n - jc);
+            // pack op(B)[pc..pc+kb, jc..jc+nb] column-major kb×nb
+            for jj in 0..nb {
+                for pp in 0..kb {
+                    bpack[jj * kb + pp] = opx(b, ldb, tb, pc + pp, jc + jj);
+                }
+            }
+            let mut ic = 0;
+            while ic < m {
+                let mb = MC.min(m - ic);
+                // pack op(A)[ic..ic+mb, pc..pc+kb] column-major mb×kb
+                for pp in 0..kb {
+                    for ii in 0..mb {
+                        apack[pp * mb + ii] = opx(a, lda, ta, ic + ii, pc + pp);
+                    }
+                }
+                // micro-kernel: C[ic.., jc..] += alpha * apack * bpack.
+                // Exact-length slice zips instead of indexed loops: the
+                // compiler drops the bounds checks and autovectorizes
+                // the fused rank-4 update (≈2.5× on this host — see
+                // EXPERIMENTS.md §Perf).
+                for jj in 0..nb {
+                    let ccol = (jc + jj) * ldc + ic;
+                    let bcol = jj * kb;
+                    let cs = &mut c[ccol..ccol + mb];
+                    let mut pp = 0;
+                    // unroll the k loop by 4 over rank-1 updates
+                    while pp + 4 <= kb {
+                        let b0 = alpha * bpack[bcol + pp];
+                        let b1 = alpha * bpack[bcol + pp + 1];
+                        let b2 = alpha * bpack[bcol + pp + 2];
+                        let b3 = alpha * bpack[bcol + pp + 3];
+                        let (a0s, rest) = apack[pp * mb..].split_at(mb);
+                        let (a1s, rest) = rest.split_at(mb);
+                        let (a2s, rest) = rest.split_at(mb);
+                        let a3s = &rest[..mb];
+                        for ((((cv, &x0), &x1), &x2), &x3) in
+                            cs.iter_mut().zip(a0s).zip(a1s).zip(a2s).zip(a3s)
+                        {
+                            *cv += x0 * b0 + x1 * b1 + x2 * b2 + x3 * b3;
+                        }
+                        pp += 4;
+                    }
+                    while pp < kb {
+                        let bv = alpha * bpack[bcol + pp];
+                        let aos = &apack[pp * mb..pp * mb + mb];
+                        for (cv, &x) in cs.iter_mut().zip(aos) {
+                            *cv += x * bv;
+                        }
+                        pp += 1;
+                    }
+                }
+                ic += mb;
+            }
+            jc += nb;
+        }
+        pc += kb;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn rand_mat(rng: &mut Prng, rows: usize, cols: usize, ld: usize) -> Vec<f64> {
+        let mut v = vec![0.0; ld * cols];
+        for c in 0..cols {
+            for r in 0..rows {
+                v[c * ld + r] = rng.range_f64(-1.0, 1.0);
+            }
+        }
+        v
+    }
+
+    fn close(a: &[f64], b: &[f64]) -> bool {
+        a.iter().zip(b).all(|(x, y)| (x - y).abs() <= 1e-9 * x.abs().max(y.abs()).max(1.0))
+    }
+
+    #[test]
+    fn ref_known_small_case() {
+        // A = [[1,3],[2,4]] (col-major [1,2,3,4]), B = I
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![1.0, 0.0, 0.0, 1.0];
+        let mut c = vec![0.5, 0.5, 0.5, 0.5];
+        gemm_ref(Trans::No, Trans::No, 2, 2, 2, 2.0, &a, 2, &b, 2, 1.0, &mut c, 2);
+        assert_eq!(c, vec![2.5, 4.5, 6.5, 8.5]);
+    }
+
+    #[test]
+    fn ref_transpose_semantics() {
+        // op(A)=A^T: A is k×m stored (2×3)
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3 col-major
+        let b = vec![1.0, 1.0]; // 2x1
+        let mut c = vec![0.0; 3];
+        gemm_ref(Trans::Yes, Trans::No, 3, 1, 2, 1.0, &a, 2, &b, 2, 0.0, &mut c, 3);
+        // A^T rows = columns of A: [1,2],[3,4],[5,6] · [1,1] = [3,7,11]
+        assert_eq!(c, vec![3.0, 7.0, 11.0]);
+    }
+
+    #[test]
+    fn blocked_matches_ref_all_trans_combos() {
+        let mut rng = Prng::new(77);
+        for &(ta, tb) in &[
+            (Trans::No, Trans::No),
+            (Trans::No, Trans::Yes),
+            (Trans::Yes, Trans::No),
+            (Trans::Yes, Trans::Yes),
+        ] {
+            for &(m, n, k) in &[(1, 1, 1), (7, 5, 9), (64, 64, 64), (130, 67, 129), (33, 129, 70)] {
+                let (ar, ac) = if ta == Trans::No { (m, k) } else { (k, m) };
+                let (br, bc) = if tb == Trans::No { (k, n) } else { (n, k) };
+                let lda = ar + 3;
+                let ldb = br + 1;
+                let ldc = m + 2;
+                let a = rand_mat(&mut rng, ar, ac, lda);
+                let b = rand_mat(&mut rng, br, bc, ldb);
+                let c0 = rand_mat(&mut rng, m, n, ldc);
+                let mut c_ref = c0.clone();
+                let mut c_blk = c0.clone();
+                gemm_ref(ta, tb, m, n, k, 1.3, &a, lda, &b, ldb, -0.7, &mut c_ref, ldc);
+                gemm_blocked(ta, tb, m, n, k, 1.3, &a, lda, &b, ldb, -0.7, &mut c_blk, ldc);
+                assert!(close(&c_ref, &c_blk), "mismatch ta={ta:?} tb={tb:?} m={m} n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_alpha_zero_scales_only() {
+        let mut rng = Prng::new(3);
+        let a = rand_mat(&mut rng, 8, 8, 8);
+        let b = rand_mat(&mut rng, 8, 8, 8);
+        let c0 = rand_mat(&mut rng, 8, 8, 8);
+        let mut c = c0.clone();
+        gemm_blocked(Trans::No, Trans::No, 8, 8, 8, 0.0, &a, 8, &b, 8, 2.0, &mut c, 8);
+        let expect: Vec<f64> = c0.iter().map(|x| 2.0 * x).collect();
+        assert!(close(&c, &expect));
+    }
+
+    #[test]
+    fn blocked_f32_path() {
+        let a: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0];
+        let b: Vec<f32> = vec![1.0, 1.0, 1.0, 1.0];
+        let mut c: Vec<f32> = vec![0.0; 4];
+        gemm_blocked(Trans::No, Trans::No, 2, 2, 2, 1.0, &a, 2, &b, 2, 0.0, &mut c, 2);
+        assert_eq!(c, vec![4.0, 6.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn blocked_beta_preserved_outside_mn() {
+        // ld padding rows must not be touched
+        let a = vec![1.0; 4];
+        let b = vec![1.0; 4];
+        let mut c = vec![9.0; 6]; // 2x2 with ldc=3: rows 2 are padding
+        gemm_blocked(Trans::No, Trans::No, 2, 2, 2, 1.0, &a, 2, &b, 2, 0.0, &mut c, 3);
+        assert_eq!(c[2], 9.0);
+        assert_eq!(c[5], 9.0);
+    }
+}

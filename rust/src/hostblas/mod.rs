@@ -1,0 +1,20 @@
+//! Pure-Rust host BLAS (system S14 in DESIGN.md).
+//!
+//! Three roles:
+//! 1. **Correctness oracle** — `*_ref` naive kernels are the ground truth
+//!    every other execution path (blocked, PJRT/Pallas, full runtime) is
+//!    tested against.
+//! 2. **CPU worker kernel** — [`threaded::gemm_mt`] / [`gemm::gemm_blocked`]
+//!    execute tasks assigned to the CPU compute thread (paper §IV-C.2).
+//! 3. **Baseline** — the single-threaded CPU numbers in the Table VI
+//!    application speedups.
+
+pub mod gemm;
+pub mod sy;
+pub mod threaded;
+pub mod tri;
+
+pub use gemm::{gemm_blocked, gemm_ref};
+pub use sy::{symm_ref, syr2k_ref, syrk_ref};
+pub use threaded::gemm_mt;
+pub use tri::{trmm_ref, trsm_ref};

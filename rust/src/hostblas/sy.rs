@@ -1,0 +1,295 @@
+//! Host symmetric kernels: SYRK, SYR2K, SYMM naive oracles.
+//!
+//! Column-major. Symmetric operands store one `uplo` triangle; the other
+//! triangle of the buffer is never read (tests fill it with NaN to prove
+//! it).
+
+use crate::api::types::{Scalar, Side, Trans, Uplo};
+
+/// Read `sym(A)[r, c]` from a triangle-stored buffer.
+#[inline]
+fn sym_elem<T: Scalar>(a: &[T], lda: usize, uplo: Uplo, r: usize, c: usize) -> T {
+    let stored = match uplo {
+        Uplo::Upper => r <= c,
+        Uplo::Lower => r >= c,
+    };
+    if stored {
+        a[c * lda + r]
+    } else {
+        a[r * lda + c]
+    }
+}
+
+/// Is `(r, c)` inside the stored triangle?
+#[inline]
+fn in_tri(uplo: Uplo, r: usize, c: usize) -> bool {
+    match uplo {
+        Uplo::Upper => r <= c,
+        Uplo::Lower => r >= c,
+    }
+}
+
+/// SYRK: `C := alpha * op(A) op(A)^T + beta * C` (trans == No, A n×k) or
+/// `C := alpha * op(A)^T op(A) + beta * C` (trans == Yes, A k×n); only
+/// the `uplo` triangle of C is referenced/updated.
+#[allow(clippy::too_many_arguments)]
+pub fn syrk_ref<T: Scalar>(
+    uplo: Uplo,
+    trans: Trans,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    for j in 0..n {
+        for i in 0..n {
+            if !in_tri(uplo, i, j) {
+                continue;
+            }
+            let mut acc = T::zero();
+            for p in 0..k {
+                let (x, y) = match trans {
+                    Trans::No => (a[p * lda + i], a[p * lda + j]),
+                    Trans::Yes => (a[i * lda + p], a[j * lda + p]),
+                };
+                acc += x * y;
+            }
+            let old = c[j * ldc + i];
+            c[j * ldc + i] = alpha * acc + beta * old;
+        }
+    }
+}
+
+/// SYR2K: `C := alpha*(op(A) op(B)^T + op(B) op(A)^T) + beta*C`
+/// (trans == No) or `alpha*(op(A)^T op(B) + op(B)^T op(A)) + beta*C`.
+#[allow(clippy::too_many_arguments)]
+pub fn syr2k_ref<T: Scalar>(
+    uplo: Uplo,
+    trans: Trans,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    for j in 0..n {
+        for i in 0..n {
+            if !in_tri(uplo, i, j) {
+                continue;
+            }
+            let mut acc = T::zero();
+            for p in 0..k {
+                let (ai, aj, bi, bj) = match trans {
+                    Trans::No => {
+                        (a[p * lda + i], a[p * lda + j], b[p * ldb + i], b[p * ldb + j])
+                    }
+                    Trans::Yes => {
+                        (a[i * lda + p], a[j * lda + p], b[i * ldb + p], b[j * ldb + p])
+                    }
+                };
+                acc += ai * bj + bi * aj;
+            }
+            let old = c[j * ldc + i];
+            c[j * ldc + i] = alpha * acc + beta * old;
+        }
+    }
+}
+
+/// SYMM: `C := alpha * sym(A) * B + beta * C` (Left, A m×m) or
+/// `C := alpha * B * sym(A) + beta * C` (Right, A n×n); C is m×n.
+#[allow(clippy::too_many_arguments)]
+pub fn symm_ref<T: Scalar>(
+    side: Side,
+    uplo: Uplo,
+    m: usize,
+    n: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    for j in 0..n {
+        for i in 0..m {
+            let mut acc = T::zero();
+            match side {
+                Side::Left => {
+                    for p in 0..m {
+                        acc += sym_elem(a, lda, uplo, i, p) * b[j * ldb + p];
+                    }
+                }
+                Side::Right => {
+                    for p in 0..n {
+                        acc += b[p * ldb + i] * sym_elem(a, lda, uplo, p, j);
+                    }
+                }
+            }
+            let old = c[j * ldc + i];
+            c[j * ldc + i] = alpha * acc + beta * old;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hostblas::gemm::gemm_ref;
+    use crate::util::prng::Prng;
+
+    fn close(a: &[f64], b: &[f64], tol: f64) -> bool {
+        a.iter().zip(b).all(|(x, y)| {
+            (x.is_nan() && y.is_nan()) || (x - y).abs() <= tol * x.abs().max(y.abs()).max(1.0)
+        })
+    }
+
+    /// Triangle-stored symmetric matrix with NaN in the unread half.
+    fn rand_sym(rng: &mut Prng, n: usize, uplo: Uplo) -> Vec<f64> {
+        let mut a = vec![f64::NAN; n * n];
+        for c in 0..n {
+            for r in 0..n {
+                if in_tri(uplo, r, c) {
+                    a[c * n + r] = rng.range_f64(-1.0, 1.0);
+                }
+            }
+        }
+        a
+    }
+
+    fn densify(a: &[f64], n: usize, uplo: Uplo) -> Vec<f64> {
+        let mut d = vec![0.0; n * n];
+        for c in 0..n {
+            for r in 0..n {
+                d[c * n + r] = sym_elem(a, n, uplo, r, c);
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn syrk_matches_dense_gemm() {
+        let mut rng = Prng::new(11);
+        let (n, k) = (7, 5);
+        for &uplo in &[Uplo::Upper, Uplo::Lower] {
+            for &trans in &[Trans::No, Trans::Yes] {
+                let (ar, ac) = if trans == Trans::No { (n, k) } else { (k, n) };
+                let mut a = vec![0.0; ar * ac];
+                rng.fill_f64(&mut a, -1.0, 1.0);
+                let mut c = vec![f64::NAN; n * n];
+                for j in 0..n {
+                    for i in 0..n {
+                        if in_tri(uplo, i, j) {
+                            c[j * n + i] = rng.range_f64(-1.0, 1.0);
+                        }
+                    }
+                }
+                let c0 = c.clone();
+                syrk_ref(uplo, trans, n, k, 1.2, &a, ar, 0.3, &mut c, n);
+                // dense expectation over full matrix, compare triangle
+                let mut full = vec![0.0; n * n];
+                let (ta, tb) = if trans == Trans::No {
+                    (Trans::No, Trans::Yes)
+                } else {
+                    (Trans::Yes, Trans::No)
+                };
+                gemm_ref(ta, tb, n, n, k, 1.2, &a, ar, &a, ar, 0.0, &mut full, n);
+                for j in 0..n {
+                    for i in 0..n {
+                        if in_tri(uplo, i, j) {
+                            let expect = full[j * n + i] + 0.3 * c0[j * n + i];
+                            assert!(
+                                (c[j * n + i] - expect).abs() < 1e-10,
+                                "{uplo:?} {trans:?} ({i},{j})"
+                            );
+                        } else {
+                            assert!(c[j * n + i].is_nan(), "other triangle must be untouched");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn syr2k_symmetry_of_result() {
+        let mut rng = Prng::new(13);
+        let (n, k) = (6, 4);
+        let mut a = vec![0.0; n * k];
+        let mut b = vec![0.0; n * k];
+        rng.fill_f64(&mut a, -1.0, 1.0);
+        rng.fill_f64(&mut b, -1.0, 1.0);
+        // compute both triangles with beta=0; result must be symmetric
+        let mut cu = vec![0.0; n * n];
+        let mut cl = vec![0.0; n * n];
+        syr2k_ref(Uplo::Upper, Trans::No, n, k, 1.0, &a, n, &b, n, 0.0, &mut cu, n);
+        syr2k_ref(Uplo::Lower, Trans::No, n, k, 1.0, &a, n, &b, n, 0.0, &mut cl, n);
+        for j in 0..n {
+            for i in 0..=j {
+                assert!((cu[j * n + i] - cl[i * n + j]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn syr2k_trans_matches_dense() {
+        let mut rng = Prng::new(17);
+        let (n, k) = (5, 7);
+        let mut a = vec![0.0; k * n];
+        let mut b = vec![0.0; k * n];
+        rng.fill_f64(&mut a, -1.0, 1.0);
+        rng.fill_f64(&mut b, -1.0, 1.0);
+        let mut c = vec![0.0; n * n];
+        syr2k_ref(Uplo::Upper, Trans::Yes, n, k, 2.0, &a, k, &b, k, 0.0, &mut c, n);
+        // dense: 2(AᵀB + BᵀA)
+        let mut d1 = vec![0.0; n * n];
+        let mut d2 = vec![0.0; n * n];
+        gemm_ref(Trans::Yes, Trans::No, n, n, k, 2.0, &a, k, &b, k, 0.0, &mut d1, n);
+        gemm_ref(Trans::Yes, Trans::No, n, n, k, 2.0, &b, k, &a, k, 0.0, &mut d2, n);
+        for j in 0..n {
+            for i in 0..=j {
+                assert!((c[j * n + i] - (d1[j * n + i] + d2[j * n + i])).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn symm_matches_dense_and_never_reads_other_triangle() {
+        let mut rng = Prng::new(19);
+        let (m, n) = (6, 5);
+        for &side in &[Side::Left, Side::Right] {
+            for &uplo in &[Uplo::Upper, Uplo::Lower] {
+                let na = if side == Side::Left { m } else { n };
+                let a = rand_sym(&mut rng, na, uplo);
+                let ad = densify(&a, na, uplo);
+                let mut b = vec![0.0; m * n];
+                rng.fill_f64(&mut b, -1.0, 1.0);
+                let mut c = vec![0.0; m * n];
+                rng.fill_f64(&mut c, -1.0, 1.0);
+                let c0 = c.clone();
+                symm_ref(side, uplo, m, n, 1.1, &a, na, &b, m, 0.4, &mut c, m);
+                let mut expect = c0;
+                match side {
+                    Side::Left => {
+                        gemm_ref(Trans::No, Trans::No, m, n, m, 1.1, &ad, na, &b, m, 0.4, &mut expect, m)
+                    }
+                    Side::Right => {
+                        gemm_ref(Trans::No, Trans::No, m, n, n, 1.1, &b, m, &ad, na, 0.4, &mut expect, m)
+                    }
+                }
+                assert!(close(&c, &expect, 1e-10), "symm {side:?} {uplo:?}");
+                assert!(!c.iter().any(|x| x.is_nan()), "NaN leaked from unread triangle");
+            }
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Multithreaded host GEMM for the CPU compute thread (paper §IV-C.2:
+//! "The CPU cores dequeue one task at each time and solve the task with
+//! a multithreaded BLAS kernel, where the tile is further factorized").
+//!
+//! The tile is split into column panels, one per worker thread; each
+//! panel runs the blocked single-thread kernel. std::thread::scope keeps
+//! lifetimes simple — these are short-lived compute bursts, not a pool.
+
+use super::gemm::gemm_blocked;
+use crate::api::types::{Scalar, Trans};
+
+/// Multithreaded GEMM with [`gemm_blocked`] semantics, splitting the N
+/// dimension across up to `threads` workers.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_mt<T: Scalar>(
+    threads: usize,
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 || n < 64 {
+        gemm_blocked(ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc);
+        return;
+    }
+    // Split C's columns into `threads` contiguous panels. Each panel is a
+    // disjoint &mut slice of C, so this is safe-Rust parallelism.
+    let cols_per = n.div_ceil(threads);
+    // Panel boundaries in elements of C (column-major: col j starts at j*ldc).
+    let mut panels: Vec<(usize, usize, &mut [T])> = Vec::new(); // (j0, ncols, slice)
+    let mut rest = c;
+    let mut consumed_cols = 0usize;
+    for t in 0..threads {
+        let j0 = t * cols_per;
+        if j0 >= n {
+            break;
+        }
+        let ncols = cols_per.min(n - j0);
+        let split_at = ncols * ldc;
+        // `rest` currently starts at column `consumed_cols`
+        debug_assert_eq!(consumed_cols, j0);
+        if rest.len() >= split_at && t + 1 < threads && j0 + ncols < n {
+            let (head, tail) = rest.split_at_mut(split_at);
+            panels.push((j0, ncols, head));
+            rest = tail;
+            consumed_cols += ncols;
+        } else {
+            // last panel takes the remainder
+            let len = rest.len();
+            panels.push((j0, n - j0, &mut rest[..len]));
+            break;
+        }
+    }
+    std::thread::scope(|scope| {
+        for (j0, ncols, cpanel) in panels {
+            scope.spawn(move || {
+                // B panel: op(B)[:, j0..j0+ncols]
+                match tb {
+                    Trans::No => {
+                        let boff = j0 * ldb;
+                        gemm_blocked(
+                            ta,
+                            tb,
+                            m,
+                            ncols,
+                            k,
+                            alpha,
+                            a,
+                            lda,
+                            &b[boff..],
+                            ldb,
+                            beta,
+                            cpanel,
+                            ldc,
+                        );
+                    }
+                    Trans::Yes => {
+                        // op(B)=Bᵀ: columns of op(B) are rows of B; offset rows
+                        gemm_blocked(
+                            ta,
+                            tb,
+                            m,
+                            ncols,
+                            k,
+                            alpha,
+                            a,
+                            lda,
+                            &b[j0..],
+                            ldb,
+                            beta,
+                            cpanel,
+                            ldc,
+                        );
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hostblas::gemm::gemm_ref;
+    use crate::util::prng::Prng;
+
+    fn close(a: &[f64], b: &[f64]) -> bool {
+        a.iter().zip(b).all(|(x, y)| (x - y).abs() <= 1e-9 * x.abs().max(y.abs()).max(1.0))
+    }
+
+    #[test]
+    fn mt_matches_ref_nn_and_nt() {
+        let mut rng = Prng::new(31);
+        for &(ta, tb) in &[
+            (Trans::No, Trans::No),
+            (Trans::No, Trans::Yes),
+            (Trans::Yes, Trans::No),
+            (Trans::Yes, Trans::Yes),
+        ] {
+            let (m, n, k) = (65, 200, 33);
+            let (ar, ac) = if ta == Trans::No { (m, k) } else { (k, m) };
+            let (br, bc) = if tb == Trans::No { (k, n) } else { (n, k) };
+            let mut a = vec![0.0; ar * ac];
+            let mut b = vec![0.0; br * bc];
+            rng.fill_f64(&mut a, -1.0, 1.0);
+            rng.fill_f64(&mut b, -1.0, 1.0);
+            let mut c0 = vec![0.0; m * n];
+            rng.fill_f64(&mut c0, -1.0, 1.0);
+            let mut c_ref = c0.clone();
+            let mut c_mt = c0.clone();
+            gemm_ref(ta, tb, m, n, k, 0.9, &a, ar, &b, br, 1.1, &mut c_ref, m);
+            gemm_mt(4, ta, tb, m, n, k, 0.9, &a, ar, &b, br, 1.1, &mut c_mt, m);
+            assert!(close(&c_ref, &c_mt), "ta={ta:?} tb={tb:?}");
+        }
+    }
+
+    #[test]
+    fn mt_small_n_falls_back() {
+        let a = vec![1.0; 4];
+        let b = vec![1.0; 2];
+        let mut c = vec![0.0; 2];
+        gemm_mt(8, Trans::No, Trans::No, 2, 1, 2, 1.0, &a, 2, &b, 2, 0.0, &mut c, 2);
+        assert_eq!(c, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn mt_thread_counts_agree() {
+        let mut rng = Prng::new(37);
+        let (m, n, k) = (48, 130, 48);
+        let mut a = vec![0.0; m * k];
+        let mut b = vec![0.0; k * n];
+        rng.fill_f64(&mut a, -1.0, 1.0);
+        rng.fill_f64(&mut b, -1.0, 1.0);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        let mut c3 = vec![0.0; m * n];
+        gemm_mt(1, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c1, m);
+        gemm_mt(3, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c2, m);
+        gemm_mt(16, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c3, m);
+        assert!(close(&c1, &c2));
+        assert!(close(&c1, &c3));
+    }
+}

@@ -1,0 +1,319 @@
+//! Host triangular kernels: TRMM and TRSM (naive, trustworthy oracles)
+//! plus the diagonal-tile variants used by the tile executor.
+//!
+//! Column-major throughout. `op(A)` is the `uplo` triangle of A (with
+//! implicit unit diagonal for `Diag::Unit`), optionally transposed.
+
+use crate::api::types::{Diag, Scalar, Side, Trans, Uplo};
+
+/// Read element `(r, c)` of the *logical* triangular operand op(A) from
+/// the stored triangle: zero outside the triangle, one on the diagonal
+/// when `diag == Unit`.
+#[inline]
+fn tri_elem<T: Scalar>(
+    a: &[T],
+    lda: usize,
+    uplo: Uplo,
+    ta: Trans,
+    diag: Diag,
+    r: usize,
+    c: usize,
+) -> T {
+    // logical (r,c) of op(A) = stored (r,c) or (c,r)
+    let (sr, sc) = match ta {
+        Trans::No => (r, c),
+        Trans::Yes => (c, r),
+    };
+    if sr == sc {
+        return match diag {
+            Diag::Unit => T::one(),
+            Diag::NonUnit => a[sc * lda + sr],
+        };
+    }
+    let stored = match uplo {
+        Uplo::Upper => sr < sc,
+        Uplo::Lower => sr > sc,
+    };
+    if stored {
+        a[sc * lda + sr]
+    } else {
+        T::zero()
+    }
+}
+
+/// TRMM: `B := alpha * op(A) * B` (Left, A is m×m) or
+/// `B := alpha * B * op(A)` (Right, A is n×n). Naive reference.
+#[allow(clippy::too_many_arguments)]
+pub fn trmm_ref<T: Scalar>(
+    side: Side,
+    uplo: Uplo,
+    ta: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &mut [T],
+    ldb: usize,
+) {
+    match side {
+        Side::Left => {
+            // column by column: b_col := alpha * op(A) * b_col
+            let mut tmp = vec![T::zero(); m];
+            for j in 0..n {
+                for i in 0..m {
+                    let mut acc = T::zero();
+                    for p in 0..m {
+                        let av = tri_elem(a, lda, uplo, ta, diag, i, p);
+                        if av != T::zero() {
+                            acc += av * b[j * ldb + p];
+                        }
+                    }
+                    tmp[i] = alpha * acc;
+                }
+                for i in 0..m {
+                    b[j * ldb + i] = tmp[i];
+                }
+            }
+        }
+        Side::Right => {
+            // row by row: b_row := alpha * b_row * op(A)
+            let mut tmp = vec![T::zero(); n];
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = T::zero();
+                    for p in 0..n {
+                        let av = tri_elem(a, lda, uplo, ta, diag, p, j);
+                        if av != T::zero() {
+                            acc += b[p * ldb + i] * av;
+                        }
+                    }
+                    tmp[j] = alpha * acc;
+                }
+                for j in 0..n {
+                    b[j * ldb + i] = tmp[j];
+                }
+            }
+        }
+    }
+}
+
+/// TRSM: solve `op(A) * X = alpha * B` (Left) or `X * op(A) = alpha * B`
+/// (Right), overwriting B with X. Naive forward/back substitution.
+#[allow(clippy::too_many_arguments)]
+pub fn trsm_ref<T: Scalar>(
+    side: Side,
+    uplo: Uplo,
+    ta: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &mut [T],
+    ldb: usize,
+) {
+    // scale RHS by alpha first
+    for j in 0..n {
+        for i in 0..m {
+            let v = b[j * ldb + i];
+            b[j * ldb + i] = alpha * v;
+        }
+    }
+    // op(A) acts upper-triangular?
+    let op_upper = matches!(
+        (uplo, ta),
+        (Uplo::Upper, Trans::No) | (Uplo::Lower, Trans::Yes)
+    );
+    match side {
+        Side::Left => {
+            // solve op(A) x = rhs per column
+            for j in 0..n {
+                if op_upper {
+                    // back substitution
+                    for ii in (0..m).rev() {
+                        let mut acc = b[j * ldb + ii];
+                        for p in ii + 1..m {
+                            acc -= tri_elem(a, lda, uplo, ta, diag, ii, p) * b[j * ldb + p];
+                        }
+                        let d = tri_elem(a, lda, uplo, ta, diag, ii, ii);
+                        b[j * ldb + ii] = acc / d;
+                    }
+                } else {
+                    // forward substitution
+                    for ii in 0..m {
+                        let mut acc = b[j * ldb + ii];
+                        for p in 0..ii {
+                            acc -= tri_elem(a, lda, uplo, ta, diag, ii, p) * b[j * ldb + p];
+                        }
+                        let d = tri_elem(a, lda, uplo, ta, diag, ii, ii);
+                        b[j * ldb + ii] = acc / d;
+                    }
+                }
+            }
+        }
+        Side::Right => {
+            // solve x op(A) = rhs per row: column jj of x depends on
+            // columns p<jj (op upper: forward over columns) or p>jj
+            for i in 0..m {
+                if op_upper {
+                    for jj in 0..n {
+                        let mut acc = b[jj * ldb + i];
+                        for p in 0..jj {
+                            acc -= b[p * ldb + i] * tri_elem(a, lda, uplo, ta, diag, p, jj);
+                        }
+                        let d = tri_elem(a, lda, uplo, ta, diag, jj, jj);
+                        b[jj * ldb + i] = acc / d;
+                    }
+                } else {
+                    for jj in (0..n).rev() {
+                        let mut acc = b[jj * ldb + i];
+                        for p in jj + 1..n {
+                            acc -= b[p * ldb + i] * tri_elem(a, lda, uplo, ta, diag, p, jj);
+                        }
+                        let d = tri_elem(a, lda, uplo, ta, diag, jj, jj);
+                        b[jj * ldb + i] = acc / d;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hostblas::gemm::gemm_ref;
+    use crate::util::prng::Prng;
+
+    fn rand_tri(rng: &mut Prng, n: usize, uplo: Uplo) -> Vec<f64> {
+        // well-conditioned triangle: strong diagonal
+        let mut a = vec![0.0; n * n];
+        for c in 0..n {
+            for r in 0..n {
+                let stored = match uplo {
+                    Uplo::Upper => r <= c,
+                    Uplo::Lower => r >= c,
+                };
+                if stored {
+                    a[c * n + r] =
+                        if r == c { 3.0 + rng.next_f64() } else { rng.range_f64(-0.5, 0.5) };
+                } else {
+                    a[c * n + r] = f64::NAN; // must never be read
+                }
+            }
+        }
+        a
+    }
+
+    fn dense_of_tri(a: &[f64], n: usize, uplo: Uplo, ta: Trans, diag: Diag) -> Vec<f64> {
+        let mut d = vec![0.0; n * n];
+        for c in 0..n {
+            for r in 0..n {
+                d[c * n + r] = tri_elem(a, n, uplo, ta, diag, r, c);
+            }
+        }
+        d
+    }
+
+    fn close(a: &[f64], b: &[f64], tol: f64) -> bool {
+        a.iter().zip(b).all(|(x, y)| (x - y).abs() <= tol * x.abs().max(y.abs()).max(1.0))
+    }
+
+    #[test]
+    fn trmm_matches_dense_gemm_all_variants() {
+        let mut rng = Prng::new(101);
+        let (m, n) = (9, 7);
+        for &side in &[Side::Left, Side::Right] {
+            for &uplo in &[Uplo::Upper, Uplo::Lower] {
+                for &ta in &[Trans::No, Trans::Yes] {
+                    for &diag in &[Diag::NonUnit, Diag::Unit] {
+                        let na = if side == Side::Left { m } else { n };
+                        let a = rand_tri(&mut rng, na, uplo);
+                        let mut b = vec![0.0; m * n];
+                        rng.fill_f64(&mut b, -1.0, 1.0);
+                        let b0 = b.clone();
+                        trmm_ref(side, uplo, ta, diag, m, n, 1.5, &a, na, &mut b, m);
+                        // dense check
+                        let ad = dense_of_tri(&a, na, uplo, ta, diag);
+                        let mut expect = vec![0.0; m * n];
+                        match side {
+                            Side::Left => gemm_ref(
+                                Trans::No, Trans::No, m, n, m, 1.5, &ad, na, &b0, m, 0.0,
+                                &mut expect, m,
+                            ),
+                            Side::Right => gemm_ref(
+                                Trans::No, Trans::No, m, n, n, 1.5, &b0, m, &ad, na, 0.0,
+                                &mut expect, m,
+                            ),
+                        }
+                        assert!(
+                            close(&b, &expect, 1e-10),
+                            "trmm {side:?} {uplo:?} {ta:?} {diag:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trsm_inverts_trmm_all_variants() {
+        let mut rng = Prng::new(202);
+        let (m, n) = (8, 6);
+        for &side in &[Side::Left, Side::Right] {
+            for &uplo in &[Uplo::Upper, Uplo::Lower] {
+                for &ta in &[Trans::No, Trans::Yes] {
+                    for &diag in &[Diag::NonUnit, Diag::Unit] {
+                        let na = if side == Side::Left { m } else { n };
+                        let a = rand_tri(&mut rng, na, uplo);
+                        let mut x = vec![0.0; m * n];
+                        rng.fill_f64(&mut x, -1.0, 1.0);
+                        let x0 = x.clone();
+                        // b = op(A)·x (or x·op(A)); then solving must return x
+                        trmm_ref(side, uplo, ta, diag, m, n, 1.0, &a, na, &mut x, m);
+                        trsm_ref(side, uplo, ta, diag, m, n, 1.0, &a, na, &mut x, m);
+                        assert!(
+                            close(&x, &x0, 1e-9),
+                            "trsm·trmm ≠ id: {side:?} {uplo:?} {ta:?} {diag:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trsm_scales_by_alpha() {
+        let mut rng = Prng::new(7);
+        let n = 5;
+        let a = rand_tri(&mut rng, n, Uplo::Upper);
+        let mut b1 = vec![0.0; n * n];
+        rng.fill_f64(&mut b1, -1.0, 1.0);
+        let mut b2 = b1.clone();
+        trsm_ref(Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, n, n, 2.0, &a, n, &mut b1, n);
+        trsm_ref(Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, n, n, 1.0, &a, n, &mut b2, n);
+        let twice: Vec<f64> = b2.iter().map(|x| 2.0 * x).collect();
+        assert!(close(&b1, &twice, 1e-12));
+    }
+
+    #[test]
+    fn unit_diag_ignores_stored_diagonal() {
+        // stored diagonal set to NaN-free junk; Unit must not read it
+        let n = 4;
+        let mut a = vec![0.0; n * n];
+        for c in 0..n {
+            for r in 0..=c {
+                a[c * n + r] = if r == c { 999.0 } else { 0.25 };
+            }
+        }
+        let mut b = vec![1.0f64; n];
+        trmm_ref(Side::Left, Uplo::Upper, Trans::No, Diag::Unit, n, 1, 1.0, &a, n, &mut b, n);
+        // row 3 (last): only diagonal (unit) contributes = 1.0
+        assert_eq!(b[3], 1.0);
+        // row 0: 1 + 0.25*3 = 1.75
+        assert!((b[0] - 1.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,37 @@
+//! # BLASX-RS
+//!
+//! A reproduction of *BLASX: A High Performance Level-3 BLAS Library for
+//! Heterogeneous Multi-GPU Computing* (Wang, Wu, Xiao, Yang — 2015) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! - **Layer 3 (this crate)** — the paper's contribution: a locality-aware
+//!   dynamic scheduling runtime for tiled L3 BLAS with a two-level
+//!   hierarchical tile cache (ALRU + MESI-X), demand-driven load
+//!   balancing with work sharing/stealing, multi-stream
+//!   communication/computation overlap, and a fast device-heap allocator.
+//! - **Layer 2/1 (python/, build-time only)** — tile kernels written in
+//!   Pallas inside JAX update graphs, AOT-lowered to HLO text and
+//!   executed from Rust through PJRT.
+//!
+//! GPUs/PCI-E are simulated (see `sim`); numerics are real. See DESIGN.md
+//! for the full system inventory and experiment index.
+
+pub mod api;
+pub mod baselines;
+pub mod bench;
+pub mod cache;
+pub mod cli;
+pub mod coordinator;
+pub mod error;
+pub mod hostblas;
+pub mod mem;
+pub mod queue;
+pub mod runtime;
+pub mod sim;
+pub mod sched;
+pub mod task;
+pub mod trace;
+pub mod tile;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,8 @@
+//! `blasx` — the leader binary: CLI over the coordinator, simulator and
+//! benchmark machinery. See `blasx --help` / `cli::usage()`.
+
+fn main() {
+    blasx::util::logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(blasx::cli::dispatch(&argv));
+}

@@ -1,0 +1,153 @@
+//! Latency model of `cudaMalloc`/`cudaFree` for the Fig. 5 ablation.
+//!
+//! The paper's Fig. 5 shows DGEMM GFLOPS degrading with matrix size when
+//! tiles are allocated with CUDA's native utilities: each call costs
+//! hundreds of microseconds and `cudaFree` implicitly synchronizes the
+//! device, stalling otherwise-overlapped streams. We model both effects
+//! so the simulator can run the "naive allocator" baseline; the numbers
+//! are calibrated against published microbenchmarks of the K40-era
+//! driver (cudaMalloc ≈ 0.2–1 ms depending on size; cudaFree ≈ 0.1 ms +
+//! sync).
+
+use super::fast_heap::{FastHeap, Offset};
+
+/// Allocation timing model. Times are virtual seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct CudaMallocModel {
+    /// Fixed per-call driver overhead of cudaMalloc.
+    pub malloc_base_s: f64,
+    /// Size-dependent component (per byte) — page-table setup.
+    pub malloc_per_byte_s: f64,
+    /// Fixed per-call overhead of cudaFree.
+    pub free_base_s: f64,
+    /// Does free imply a device-wide synchronization (it does)?
+    pub free_syncs: bool,
+    /// Fragmentation growth: the driver's free-list walk lengthens as
+    /// the heap churns; each prior alloc adds this fraction of the base
+    /// cost (what bends the paper's Fig. 5 curve downward with N).
+    pub frag_per_alloc: f64,
+}
+
+impl Default for CudaMallocModel {
+    fn default() -> Self {
+        CudaMallocModel {
+            malloc_base_s: 220e-6,
+            malloc_per_byte_s: 25e-12, // ~0.2 ms extra for an 8 MB tile
+            free_base_s: 110e-6,
+            free_syncs: true,
+            frag_per_alloc: 1.2e-3,
+        }
+    }
+}
+
+impl CudaMallocModel {
+    /// Virtual cost of one cudaMalloc of `len` bytes.
+    pub fn malloc_cost(&self, len: usize) -> f64 {
+        self.malloc_base_s + self.malloc_per_byte_s * len as f64
+    }
+
+    /// Virtual cost of one cudaFree.
+    pub fn free_cost(&self) -> f64 {
+        self.free_base_s
+    }
+}
+
+/// Device allocator strategy selector (the Fig. 5 A/B sides).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocStrategy {
+    /// The paper's FastHeap: preallocated chunk, ~zero per-call cost.
+    FastHeap,
+    /// cudaMalloc/cudaFree per tile with the latency model above.
+    CudaNative,
+}
+
+/// A device allocator: a `FastHeap` for space accounting in both modes,
+/// plus a virtual-time cost per operation dependent on the strategy.
+pub struct DeviceAllocator {
+    pub heap: FastHeap,
+    pub strategy: AllocStrategy,
+    pub model: CudaMallocModel,
+    /// accumulated virtual seconds spent in allocation calls
+    pub alloc_time_s: f64,
+    /// number of implicit syncs incurred (CudaNative frees)
+    pub syncs: u64,
+    /// lifetime allocation count (fragmentation model input)
+    pub n_allocs: u64,
+}
+
+impl DeviceAllocator {
+    pub fn new(capacity: usize, strategy: AllocStrategy) -> DeviceAllocator {
+        DeviceAllocator {
+            heap: FastHeap::new(capacity),
+            strategy,
+            model: CudaMallocModel::default(),
+            alloc_time_s: 0.0,
+            syncs: 0,
+            n_allocs: 0,
+        }
+    }
+
+    /// Allocate; returns (offset, virtual cost of the call).
+    pub fn alloc(&mut self, len: usize) -> Option<(Offset, f64)> {
+        let off = self.heap.alloc(len)?;
+        let cost = match self.strategy {
+            AllocStrategy::FastHeap => 0.0, // sub-µs list ops; negligible
+            AllocStrategy::CudaNative => {
+                self.n_allocs += 1;
+                self.model.malloc_cost(len)
+                    * (1.0 + self.model.frag_per_alloc * self.n_allocs as f64)
+            }
+        };
+        self.alloc_time_s += cost;
+        Some((off, cost))
+    }
+
+    /// Free; returns (virtual cost, whether this forces a device sync).
+    pub fn free(&mut self, off: Offset) -> (f64, bool) {
+        self.heap.free(off);
+        match self.strategy {
+            AllocStrategy::FastHeap => (0.0, false),
+            AllocStrategy::CudaNative => {
+                self.syncs += u64::from(self.model.free_syncs);
+                self.alloc_time_s += self.model.free_cost();
+                (self.model.free_cost(), self.model.free_syncs)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_costs_scale_with_size() {
+        let m = CudaMallocModel::default();
+        let small = m.malloc_cost(1024);
+        let tile = m.malloc_cost(8 * 1024 * 1024); // 1024² f64 tile
+        assert!(tile > small);
+        assert!(tile > 300e-6 && tile < 1e-3, "tile malloc ~{tile}");
+    }
+
+    #[test]
+    fn fastheap_strategy_is_free_of_cost() {
+        let mut d = DeviceAllocator::new(1 << 20, AllocStrategy::FastHeap);
+        let (off, cost) = d.alloc(4096).unwrap();
+        assert_eq!(cost, 0.0);
+        let (fcost, sync) = d.free(off);
+        assert_eq!(fcost, 0.0);
+        assert!(!sync);
+        assert_eq!(d.alloc_time_s, 0.0);
+    }
+
+    #[test]
+    fn cuda_strategy_accumulates_time_and_syncs() {
+        let mut d = DeviceAllocator::new(1 << 20, AllocStrategy::CudaNative);
+        let (off, cost) = d.alloc(4096).unwrap();
+        assert!(cost > 0.0);
+        let (_, sync) = d.free(off);
+        assert!(sync);
+        assert_eq!(d.syncs, 1);
+        assert!(d.alloc_time_s > cost);
+    }
+}

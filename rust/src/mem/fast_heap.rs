@@ -1,0 +1,351 @@
+//! FastHeap — the paper's `BLASX_Malloc` (§IV-E, Fig. 6).
+//!
+//! GPU tile traffic implies high-frequency allocation/deallocation;
+//! `cudaMalloc`/`cudaFree` carry per-call overhead (and an implicit
+//! device sync) that degrades GFLOPS as the problem grows (paper Fig. 5).
+//! BLASX instead carves allocations out of one preallocated chunk:
+//!
+//! - a *segment list* (the paper's "meta-data list") ordered by offset,
+//!   each node tracking `{offset, len, occupied}`;
+//! - an *empty list* of free segments searched first-fit and split on
+//!   allocation;
+//! - an *occupied table* (hashtable, offset → node) so deallocation is
+//!   O(1) lookup; freed nodes merge with contiguous free neighbours.
+//!
+//! The heap manages *offsets* into an abstract capacity: in real mode the
+//! offsets index a host-backed device arena; in sim mode they track
+//! virtual GPU RAM occupancy without touching memory. That is what lets
+//! the same ALRU/coherence machinery run in both modes.
+
+use std::collections::HashMap;
+
+/// Allocation handle: offset into the device arena.
+pub type Offset = usize;
+
+#[derive(Clone, Copy, Debug)]
+struct Segment {
+    offset: usize,
+    len: usize,
+    occupied: bool,
+    /// doubly-linked by index into `segs` (usize::MAX = none)
+    prev: usize,
+    next: usize,
+}
+
+const NONE: usize = usize::MAX;
+
+/// Allocation statistics (also feed the Fig. 5 bench).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HeapStats {
+    pub allocs: u64,
+    pub frees: u64,
+    pub splits: u64,
+    pub merges: u64,
+    pub failed: u64,
+    pub bytes_in_use: usize,
+    pub high_water: usize,
+}
+
+/// First-fit heap with neighbour coalescing over a fixed capacity.
+pub struct FastHeap {
+    capacity: usize,
+    segs: Vec<Segment>,
+    /// free-slot recycling for `segs`
+    free_slots: Vec<usize>,
+    /// head of the segment list (offset order)
+    head: usize,
+    /// occupied table: offset -> segment index
+    occupied: HashMap<usize, usize>,
+    stats: HeapStats,
+}
+
+impl FastHeap {
+    /// Create a heap over `capacity` bytes.
+    pub fn new(capacity: usize) -> FastHeap {
+        let root = Segment { offset: 0, len: capacity, occupied: false, prev: NONE, next: NONE };
+        FastHeap {
+            capacity,
+            segs: vec![root],
+            free_slots: Vec::new(),
+            head: 0,
+            occupied: HashMap::new(),
+            stats: HeapStats::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn stats(&self) -> HeapStats {
+        self.stats
+    }
+
+    /// Bytes currently allocated.
+    pub fn in_use(&self) -> usize {
+        self.stats.bytes_in_use
+    }
+
+    /// Largest single free segment (for OOM diagnostics).
+    pub fn largest_free(&self) -> usize {
+        let mut best = 0;
+        let mut cur = self.head;
+        while cur != NONE {
+            let s = self.segs[cur];
+            if !s.occupied {
+                best = best.max(s.len);
+            }
+            cur = s.next;
+        }
+        best
+    }
+
+    fn new_seg(&mut self, seg: Segment) -> usize {
+        if let Some(idx) = self.free_slots.pop() {
+            self.segs[idx] = seg;
+            idx
+        } else {
+            self.segs.push(seg);
+            self.segs.len() - 1
+        }
+    }
+
+    /// Allocate `len` bytes; first-fit over the empty list, splitting the
+    /// chosen segment (paper Fig. 6 "split into two nodes").
+    pub fn alloc(&mut self, len: usize) -> Option<Offset> {
+        assert!(len > 0, "zero-size allocation");
+        let mut cur = self.head;
+        while cur != NONE {
+            let s = self.segs[cur];
+            if !s.occupied && s.len >= len {
+                // split if there is residue
+                if s.len > len {
+                    let rest = Segment {
+                        offset: s.offset + len,
+                        len: s.len - len,
+                        occupied: false,
+                        prev: cur,
+                        next: s.next,
+                    };
+                    let rest_idx = self.new_seg(rest);
+                    if s.next != NONE {
+                        self.segs[s.next].prev = rest_idx;
+                    }
+                    self.segs[cur].next = rest_idx;
+                    self.segs[cur].len = len;
+                    self.stats.splits += 1;
+                }
+                self.segs[cur].occupied = true;
+                self.occupied.insert(s.offset, cur);
+                self.stats.allocs += 1;
+                self.stats.bytes_in_use += len;
+                self.stats.high_water = self.stats.high_water.max(self.stats.bytes_in_use);
+                return Some(s.offset);
+            }
+            cur = s.next;
+        }
+        self.stats.failed += 1;
+        None
+    }
+
+    /// Free the allocation at `offset`; merges with free neighbours
+    /// (paper Fig. 6 "if either the node's left or right neighbors are
+    /// contiguous … they merge together").
+    ///
+    /// Panics on double-free / unknown offset (an internal invariant —
+    /// the cache is the only caller).
+    pub fn free(&mut self, offset: Offset) {
+        let idx = self
+            .occupied
+            .remove(&offset)
+            .unwrap_or_else(|| panic!("free of unallocated offset {offset}"));
+        let len = self.segs[idx].len;
+        debug_assert!(self.segs[idx].occupied);
+        self.segs[idx].occupied = false;
+        self.stats.frees += 1;
+        self.stats.bytes_in_use -= len;
+
+        // merge with next if free
+        let next = self.segs[idx].next;
+        if next != NONE && !self.segs[next].occupied {
+            let nlen = self.segs[next].len;
+            let nnext = self.segs[next].next;
+            self.segs[idx].len += nlen;
+            self.segs[idx].next = nnext;
+            if nnext != NONE {
+                self.segs[nnext].prev = idx;
+            }
+            self.free_slots.push(next);
+            self.stats.merges += 1;
+        }
+        // merge with prev if free
+        let prev = self.segs[idx].prev;
+        if prev != NONE && !self.segs[prev].occupied {
+            let ilen = self.segs[idx].len;
+            let inext = self.segs[idx].next;
+            self.segs[prev].len += ilen;
+            self.segs[prev].next = inext;
+            if inext != NONE {
+                self.segs[inext].prev = prev;
+            }
+            self.free_slots.push(idx);
+            self.stats.merges += 1;
+        }
+    }
+
+    /// Internal consistency check (tests + debug assertions): the
+    /// segment list tiles `[0, capacity)` exactly, free neighbours are
+    /// coalesced, and the occupied table matches the list.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut cur = self.head;
+        let mut expect_offset = 0usize;
+        let mut prev = NONE;
+        let mut occupied_seen = 0usize;
+        let mut last_free = false;
+        while cur != NONE {
+            let s = self.segs[cur];
+            if s.offset != expect_offset {
+                return Err(format!("gap/overlap at offset {expect_offset} (seg says {})", s.offset));
+            }
+            if s.prev != prev {
+                return Err(format!("bad prev link at {}", s.offset));
+            }
+            if s.len == 0 {
+                return Err(format!("zero-length segment at {}", s.offset));
+            }
+            if s.occupied {
+                occupied_seen += 1;
+                if self.occupied.get(&s.offset) != Some(&cur) {
+                    return Err(format!("occupied table missing {}", s.offset));
+                }
+                last_free = false;
+            } else {
+                if last_free {
+                    return Err(format!("uncoalesced free neighbours before {}", s.offset));
+                }
+                last_free = true;
+            }
+            expect_offset += s.len;
+            prev = cur;
+            cur = s.next;
+        }
+        if expect_offset != self.capacity {
+            return Err(format!("list covers {expect_offset} of {}", self.capacity));
+        }
+        if occupied_seen != self.occupied.len() {
+            return Err("occupied table size mismatch".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut h = FastHeap::new(1024);
+        let a = h.alloc(100).unwrap();
+        let b = h.alloc(200).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(h.in_use(), 300);
+        h.validate().unwrap();
+        h.free(a);
+        h.free(b);
+        assert_eq!(h.in_use(), 0);
+        assert_eq!(h.largest_free(), 1024); // fully coalesced
+        h.validate().unwrap();
+    }
+
+    #[test]
+    fn exhausts_then_fails_then_recovers() {
+        let mut h = FastHeap::new(100);
+        let a = h.alloc(60).unwrap();
+        assert!(h.alloc(50).is_none());
+        assert_eq!(h.stats().failed, 1);
+        h.free(a);
+        assert!(h.alloc(100).is_some());
+        h.validate().unwrap();
+    }
+
+    #[test]
+    fn first_fit_reuses_hole() {
+        let mut h = FastHeap::new(1000);
+        let a = h.alloc(100).unwrap();
+        let _b = h.alloc(100).unwrap();
+        h.free(a);
+        // a's hole is first-fit for a smaller block
+        let c = h.alloc(50).unwrap();
+        assert_eq!(c, a);
+        h.validate().unwrap();
+    }
+
+    #[test]
+    fn merge_three_way() {
+        let mut h = FastHeap::new(300);
+        let a = h.alloc(100).unwrap();
+        let b = h.alloc(100).unwrap();
+        let c = h.alloc(100).unwrap();
+        h.free(a);
+        h.free(c);
+        h.free(b); // merges with both neighbours
+        assert_eq!(h.largest_free(), 300);
+        assert!(h.stats().merges >= 2);
+        h.validate().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "free of unallocated")]
+    fn double_free_panics() {
+        let mut h = FastHeap::new(100);
+        let a = h.alloc(10).unwrap();
+        h.free(a);
+        h.free(a);
+    }
+
+    #[test]
+    fn stress_random_alloc_free_preserves_invariants() {
+        let mut rng = Prng::new(42);
+        let mut h = FastHeap::new(1 << 20);
+        let mut live: Vec<(Offset, usize)> = Vec::new();
+        for step in 0..5000 {
+            if live.is_empty() || rng.chance(0.6) {
+                let len = rng.range(1, 8192);
+                if let Some(off) = h.alloc(len) {
+                    // no overlap with any live allocation
+                    for &(o, l) in &live {
+                        assert!(off + len <= o || o + l <= off, "overlap at step {step}");
+                    }
+                    live.push((off, len));
+                }
+            } else {
+                let i = rng.below(live.len());
+                let (off, _) = live.swap_remove(i);
+                h.free(off);
+            }
+            if step % 512 == 0 {
+                h.validate().unwrap();
+            }
+        }
+        let total: usize = live.iter().map(|&(_, l)| l).sum();
+        assert_eq!(h.in_use(), total);
+        for (off, _) in live.drain(..) {
+            h.free(off);
+        }
+        assert_eq!(h.in_use(), 0);
+        assert_eq!(h.largest_free(), 1 << 20);
+        h.validate().unwrap();
+    }
+
+    #[test]
+    fn high_water_tracks_peak() {
+        let mut h = FastHeap::new(1000);
+        let a = h.alloc(400).unwrap();
+        let b = h.alloc(300).unwrap();
+        h.free(a);
+        h.free(b);
+        assert_eq!(h.stats().high_water, 700);
+    }
+}

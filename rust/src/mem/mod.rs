@@ -1,0 +1,12 @@
+//! Device memory management (system S4, paper §IV-E).
+//!
+//! [`fast_heap::FastHeap`] is the paper's `BLASX_Malloc` (Fig. 6);
+//! [`cuda_model`] provides the cudaMalloc/cudaFree latency model used by
+//! the Fig. 5 ablation and the `DeviceAllocator` wrapper that the cache
+//! layer allocates tile blocks from.
+
+pub mod cuda_model;
+pub mod fast_heap;
+
+pub use cuda_model::{AllocStrategy, CudaMallocModel, DeviceAllocator};
+pub use fast_heap::{FastHeap, HeapStats, Offset};

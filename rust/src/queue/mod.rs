@@ -1,0 +1,10 @@
+//! Non-blocking task queue (system S3).
+//!
+//! [`ms_queue::MsQueue`] implements Michael & Scott's lock-free FIFO, the
+//! algorithm the paper cites for its global task queue; BLASX's work
+//! sharing is "processors simultaneously pull out tasks … by their
+//! demands" from this queue (§IV-C).
+
+pub mod ms_queue;
+
+pub use ms_queue::MsQueue;

@@ -1,0 +1,200 @@
+//! Artifact store: the AOT output directory written by `make artifacts`.
+//!
+//! `python/compile/aot.py` emits one HLO-text program per (tile-op
+//! variant, dtype, tile size) plus a `manifest.json` recording each
+//! variant's argument signature. This module locates artifacts and parses
+//! the manifest so the executor can marshal arguments without guessing.
+
+use crate::api::Dtype;
+use crate::util::json::{self, Json};
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One operand slot of an artifact's calling convention.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArgSlot {
+    /// T×T tile operand `a`.
+    TileA,
+    /// T×T tile operand `b`.
+    TileB,
+    /// T×T accumulator tile `c`.
+    TileC,
+    /// Runtime scalar `alpha`.
+    Alpha,
+    /// Runtime scalar `beta`.
+    Beta,
+}
+
+impl ArgSlot {
+    fn from_str(s: &str) -> Option<ArgSlot> {
+        match s {
+            "a" => Some(ArgSlot::TileA),
+            "b" => Some(ArgSlot::TileB),
+            "c" => Some(ArgSlot::TileC),
+            "alpha" => Some(ArgSlot::Alpha),
+            "beta" => Some(ArgSlot::Beta),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed manifest: variant name → ordered argument slots.
+#[derive(Debug)]
+pub struct ArtifactStore {
+    dir: PathBuf,
+    sigs: HashMap<String, Vec<ArgSlot>>,
+    /// Tile sizes the artifact set was built for.
+    pub tile_sizes: Vec<usize>,
+    /// Dtypes the artifact set was built for.
+    pub dtypes: Vec<Dtype>,
+}
+
+impl ArtifactStore {
+    /// Open `dir` and parse its `manifest.json`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<ArtifactStore> {
+        let dir = dir.as_ref().to_path_buf();
+        let man_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&man_path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                man_path.display()
+            ))
+        })?;
+        let man = json::parse(&text)
+            .map_err(|e| Error::Artifact(format!("manifest parse error: {e}")))?;
+        let mut sigs = HashMap::new();
+        let kernels = man
+            .get("kernels")
+            .ok_or_else(|| Error::Artifact("manifest missing `kernels`".into()))?;
+        if let Json::Obj(entries) = kernels {
+            for (name, spec) in entries {
+                let args = spec
+                    .get("args")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| Error::Artifact(format!("kernel {name} missing args")))?;
+                let slots = args
+                    .iter()
+                    .map(|a| {
+                        a.as_str().and_then(ArgSlot::from_str).ok_or_else(|| {
+                            Error::Artifact(format!("kernel {name}: bad arg {a:?}"))
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                sigs.insert(name.clone(), slots);
+            }
+        }
+        let tile_sizes = man
+            .get("tile_sizes")
+            .and_then(Json::as_arr)
+            .map(|xs| xs.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or_default();
+        let dtypes = man
+            .get("dtypes")
+            .and_then(Json::as_arr)
+            .map(|xs| {
+                xs.iter()
+                    .filter_map(Json::as_str)
+                    .filter_map(|s| match s {
+                        "f32" => Some(Dtype::F32),
+                        "f64" => Some(Dtype::F64),
+                        _ => None,
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(ArtifactStore { dir, sigs, tile_sizes, dtypes })
+    }
+
+    /// Default location: `$BLASX_ARTIFACTS` or `<repo>/artifacts`.
+    pub fn open_default() -> Result<ArtifactStore> {
+        let dir = std::env::var("BLASX_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| default_dir());
+        ArtifactStore::open(dir)
+    }
+
+    /// The argument signature of a variant.
+    pub fn signature(&self, name: &str) -> Result<&[ArgSlot]> {
+        self.sigs
+            .get(name)
+            .map(Vec::as_slice)
+            .ok_or_else(|| Error::Artifact(format!("unknown kernel variant {name}")))
+    }
+
+    /// Path of the HLO text for `(name, dtype, t)`.
+    pub fn hlo_path(&self, name: &str, dtype: Dtype, t: usize) -> PathBuf {
+        self.dir.join(format!("{name}_{}_{t}.hlo.txt", dtype.name()))
+    }
+
+    /// Does the artifact file exist?
+    pub fn available(&self, name: &str, dtype: Dtype, t: usize) -> bool {
+        self.sigs.contains_key(name) && self.hlo_path(name, dtype, t).exists()
+    }
+
+    /// All variant names in the manifest.
+    pub fn variants(&self) -> impl Iterator<Item = &str> {
+        self.sigs.keys().map(String::as_str)
+    }
+}
+
+/// `<workspace>/artifacts` resolved relative to the crate root at build
+/// time (works from `cargo run/test/bench` in any subdirectory).
+pub fn default_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("blasx_artifact_test_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let d = tmp("parse");
+        write_manifest(
+            &d,
+            r#"{"tile_sizes":[64,256],"dtypes":["f32","f64"],
+               "kernels":{"gemm_nn":{"args":["a","b","c","alpha","beta"]},
+                          "scal":{"args":["c","beta"]}}}"#,
+        );
+        let s = ArtifactStore::open(&d).unwrap();
+        assert_eq!(
+            s.signature("gemm_nn").unwrap(),
+            &[ArgSlot::TileA, ArgSlot::TileB, ArgSlot::TileC, ArgSlot::Alpha, ArgSlot::Beta]
+        );
+        assert_eq!(s.signature("scal").unwrap(), &[ArgSlot::TileC, ArgSlot::Beta]);
+        assert_eq!(s.tile_sizes, vec![64, 256]);
+        assert_eq!(s.dtypes, vec![Dtype::F32, Dtype::F64]);
+        assert!(s.signature("nope").is_err());
+        let p = s.hlo_path("gemm_nn", Dtype::F64, 256);
+        assert!(p.ends_with("gemm_nn_f64_256.hlo.txt"));
+        assert!(!s.available("gemm_nn", Dtype::F64, 256));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let d = tmp("missing");
+        let err = ArtifactStore::open(&d).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_arg() {
+        let d = tmp("badarg");
+        write_manifest(&d, r#"{"kernels":{"x":{"args":["q"]}}}"#);
+        assert!(ArtifactStore::open(&d).is_err());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

@@ -1,0 +1,180 @@
+//! Tile executor: run one tile-op step through a compiled PJRT program.
+//!
+//! The coordinator hands us column-major T×T tile buffers (the device
+//! heap's block layout); XLA literals are row-major, so pack/unpack
+//! transposes — an O(T²) shuffle against the O(T³) kernel, invisible in
+//! the profile (verified in EXPERIMENTS.md §Perf).
+//!
+//! Argument marshalling follows the artifact manifest signature, so this
+//! file knows nothing about individual variants.
+
+use super::artifact::ArgSlot;
+use super::pjrt::PjrtPool;
+use crate::api::{Dtype, Scalar};
+use crate::{Error, Result};
+
+/// Stateless handle over the process-wide PJRT pool.
+pub struct TileExecutor {
+    pool: &'static PjrtPool,
+}
+
+/// Pack a column-major `t×t` tile into a row-major byte vector.
+fn pack_rm<T: Scalar>(src: &[T], t: usize, scratch: &mut Vec<u8>) {
+    let esz = std::mem::size_of::<T>();
+    scratch.clear();
+    scratch.reserve(t * t * esz);
+    for r in 0..t {
+        for c in 0..t {
+            let v = src[c * t + r];
+            scratch.extend_from_slice(unsafe {
+                std::slice::from_raw_parts(&v as *const T as *const u8, esz)
+            });
+        }
+    }
+}
+
+/// Unpack a row-major element slice into a column-major tile buffer.
+fn unpack_cm<T: Scalar>(src: &[T], t: usize, dst: &mut [T]) {
+    for r in 0..t {
+        for c in 0..t {
+            dst[c * t + r] = src[r * t + c];
+        }
+    }
+}
+
+fn elem_type(dtype: Dtype) -> xla::ElementType {
+    match dtype {
+        Dtype::F32 => xla::ElementType::F32,
+        Dtype::F64 => xla::ElementType::F64,
+    }
+}
+
+impl TileExecutor {
+    /// Connect to the process-wide pool (compiling nothing yet).
+    pub fn new() -> Result<TileExecutor> {
+        Ok(TileExecutor { pool: PjrtPool::global()? })
+    }
+
+    /// Artifact availability probe (used by the coordinator to pick
+    /// between the PJRT path and the hostblas fallback).
+    pub fn available(&self, name: &str, dtype: Dtype, t: usize) -> bool {
+        self.pool.store().available(name, dtype, t)
+    }
+
+    /// Execute one tile-op step: `c` is updated in place. `a`/`b` are
+    /// required or forbidden per the variant's manifest signature; all
+    /// tile slices are column-major `t*t`.
+    pub fn run<T: Scalar>(
+        &self,
+        name: &str,
+        t: usize,
+        a: Option<&[T]>,
+        b: Option<&[T]>,
+        c: &mut [T],
+        alpha: T,
+        beta: T,
+    ) -> Result<()> {
+        debug_assert_eq!(c.len(), t * t);
+        let sig = self.pool.store().signature(name)?.to_vec();
+        let exe = self.pool.executable(name, T::DTYPE, t)?;
+        let ety = elem_type(T::DTYPE);
+
+        let mut scratch = Vec::new();
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(sig.len());
+        for slot in &sig {
+            let lit = match slot {
+                ArgSlot::TileA => {
+                    let a = a.ok_or_else(|| {
+                        Error::Runtime(format!("{name}: missing tile operand a"))
+                    })?;
+                    debug_assert_eq!(a.len(), t * t);
+                    pack_rm(a, t, &mut scratch);
+                    xla::Literal::create_from_shape_and_untyped_data(ety, &[t, t], &scratch)
+                        .map_err(|e| Error::Runtime(format!("literal a: {e}")))?
+                }
+                ArgSlot::TileB => {
+                    let b = b.ok_or_else(|| {
+                        Error::Runtime(format!("{name}: missing tile operand b"))
+                    })?;
+                    debug_assert_eq!(b.len(), t * t);
+                    pack_rm(b, t, &mut scratch);
+                    xla::Literal::create_from_shape_and_untyped_data(ety, &[t, t], &scratch)
+                        .map_err(|e| Error::Runtime(format!("literal b: {e}")))?
+                }
+                ArgSlot::TileC => {
+                    pack_rm(c, t, &mut scratch);
+                    xla::Literal::create_from_shape_and_untyped_data(ety, &[t, t], &scratch)
+                        .map_err(|e| Error::Runtime(format!("literal c: {e}")))?
+                }
+                ArgSlot::Alpha => scalar_literal(alpha, ety)?,
+                ArgSlot::Beta => scalar_literal(beta, ety)?,
+            };
+            args.push(lit);
+        }
+
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch {name}: {e}")))?
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("untuple {name}: {e}")))?;
+
+        let mut out = vec![T::zero(); t * t];
+        copy_out(&lit, &mut out)?;
+        unpack_cm(&out, t, c);
+        Ok(())
+    }
+}
+
+fn scalar_literal<T: Scalar>(v: T, ety: xla::ElementType) -> Result<xla::Literal> {
+    let esz = std::mem::size_of::<T>();
+    let bytes =
+        unsafe { std::slice::from_raw_parts(&v as *const T as *const u8, esz) }.to_vec();
+    xla::Literal::create_from_shape_and_untyped_data(ety, &[], &bytes)
+        .map_err(|e| Error::Runtime(format!("scalar literal: {e}")))
+}
+
+fn copy_out<T: Scalar>(lit: &xla::Literal, dst: &mut [T]) -> Result<()> {
+    // Monomorphize through the two concrete ArrayElement impls.
+    match T::DTYPE {
+        Dtype::F32 => {
+            let dst32 = unsafe {
+                std::slice::from_raw_parts_mut(dst.as_mut_ptr() as *mut f32, dst.len())
+            };
+            lit.copy_raw_to::<f32>(dst32)
+                .map_err(|e| Error::Runtime(format!("copy_raw_to: {e}")))
+        }
+        Dtype::F64 => {
+            let dst64 = unsafe {
+                std::slice::from_raw_parts_mut(dst.as_mut_ptr() as *mut f64, dst.len())
+            };
+            lit.copy_raw_to::<f64>(dst64)
+                .map_err(|e| Error::Runtime(format!("copy_raw_to: {e}")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let t = 3;
+        let cm: Vec<f64> = (0..9).map(|x| x as f64).collect();
+        let mut bytes = Vec::new();
+        pack_rm(&cm, t, &mut bytes);
+        let rm: Vec<f64> = bytes
+            .chunks_exact(8)
+            .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        // column-major [0,1,2 | 3,4,5 | 6,7,8] => row-major rows (0,3,6),(1,4,7),(2,5,8)
+        assert_eq!(rm, vec![0.0, 3.0, 6.0, 1.0, 4.0, 7.0, 2.0, 5.0, 8.0]);
+        let mut back = vec![0.0; 9];
+        unpack_cm(&rm, t, &mut back);
+        assert_eq!(back, cm);
+    }
+}

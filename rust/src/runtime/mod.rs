@@ -1,0 +1,15 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt` (AOT output of
+//! `python/compile/aot.py`) and execute tile programs from the L3 hot
+//! path. Python never runs here — the artifacts are the only bridge.
+//!
+//! - [`artifact`]: manifest + artifact discovery
+//! - [`pjrt`]: process-wide CPU client + lazy executable cache
+//! - [`executor`]: per-step literal marshalling and execution
+
+pub mod artifact;
+pub mod executor;
+pub mod pjrt;
+
+pub use artifact::{ArgSlot, ArtifactStore};
+pub use executor::TileExecutor;
+pub use pjrt::PjrtPool;

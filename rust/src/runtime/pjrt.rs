@@ -1,0 +1,101 @@
+//! PJRT plumbing: one process-wide CPU client plus an executable cache.
+//!
+//! Pattern per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Compilation is the expensive step
+//! (tens of ms per artifact), so executables are compiled lazily on first
+//! use and cached for the life of the process, keyed by
+//! `(variant, dtype, tile)`.
+//!
+//! The PJRT CPU client is thread-safe for `execute`; the cache hands out
+//! `Arc`s so worker threads never hold the cache lock across a kernel.
+
+use super::artifact::ArtifactStore;
+use crate::api::Dtype;
+use crate::{Error, Result};
+use once_cell::sync::OnceCell;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Cache key: one compiled tile program.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ExeKey {
+    pub name: String,
+    pub dtype: Dtype,
+    pub t: usize,
+}
+
+/// Lazily-initialized process-wide PJRT CPU client + compiled programs.
+pub struct PjrtPool {
+    client: xla::PjRtClient,
+    store: ArtifactStore,
+    exes: Mutex<HashMap<ExeKey, Arc<xla::PjRtLoadedExecutable>>>,
+    /// Number of compiles performed (observability; tests assert reuse).
+    pub compiles: std::sync::atomic::AtomicU64,
+}
+
+// SAFETY: the PJRT CPU client is internally synchronized; the xla crate
+// merely forgot the auto-traits on its opaque pointers. Execution from
+// multiple threads is the documented PJRT usage model.
+unsafe impl Send for PjrtPool {}
+unsafe impl Sync for PjrtPool {}
+
+static POOL: OnceCell<PjrtPool> = OnceCell::new();
+
+impl PjrtPool {
+    /// The process-wide pool, opening the default artifact directory on
+    /// first use.
+    pub fn global() -> Result<&'static PjrtPool> {
+        POOL.get_or_try_init(|| {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+            let store = ArtifactStore::open_default()?;
+            Ok(PjrtPool {
+                client,
+                store,
+                exes: Mutex::new(HashMap::new()),
+                compiles: std::sync::atomic::AtomicU64::new(0),
+            })
+        })
+    }
+
+    pub fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+
+    /// Fetch (compiling on miss) the executable for a tile program.
+    pub fn executable(
+        &self,
+        name: &str,
+        dtype: Dtype,
+        t: usize,
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let key = ExeKey { name: name.to_string(), dtype, t };
+        if let Some(exe) = self.exes.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        // Compile outside the lock: first-touch compiles of distinct
+        // kernels may proceed concurrently; a duplicate compile of the
+        // same key is benign (last insert wins, both exes are valid).
+        let path = self.store.hlo_path(name, dtype, t);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime(format!("non-utf8 path {}", path.display())))?,
+        )
+        .map_err(|e| Error::Runtime(format!("load {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {name}_{}_{t}: {e}", dtype.name())))?;
+        self.compiles.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let exe = Arc::new(exe);
+        self.exes.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of distinct compiled programs resident.
+    pub fn cached(&self) -> usize {
+        self.exes.lock().unwrap().len()
+    }
+}

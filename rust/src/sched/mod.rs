@@ -1,0 +1,9 @@
+//! Scheduling infrastructure (paper §IV-C): reservation stations,
+//! locality priorities, and the demand-driven load-balancing policy the
+//! execution engines share.
+
+pub mod priority;
+pub mod station;
+
+pub use priority::task_priority;
+pub use station::{Slot, Station};

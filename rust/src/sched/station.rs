@@ -1,0 +1,154 @@
+//! Reservation Station (paper §IV-C.3): per-device buffer of upcoming
+//! tasks, target of priority scheduling and work stealing.
+//!
+//! Each slot carries a task id, its locality priority (Eq. 3, refreshed
+//! whenever new tasks arrive or the cache contents shift), and the
+//! stream index the task will be bound to when it becomes active.
+
+/// One RS slot.
+#[derive(Clone, Copy, Debug)]
+pub struct Slot {
+    pub task: usize,
+    pub priority: u32,
+}
+
+/// A fixed-capacity reservation station.
+#[derive(Clone, Debug)]
+pub struct Station {
+    slots: Vec<Slot>,
+    capacity: usize,
+}
+
+impl Station {
+    /// The paper sizes the RS at twice the stream count (4 active + 4
+    /// staged); capacity is configurable for ablations.
+    pub fn new(capacity: usize) -> Station {
+        Station { slots: Vec::with_capacity(capacity), capacity }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.slots.len() >= self.capacity
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Room for how many more tasks?
+    pub fn vacancies(&self) -> usize {
+        self.capacity - self.slots.len()
+    }
+
+    /// Insert a task (caller computed its priority). Panics if full —
+    /// the worker loop only refills into vacancies.
+    pub fn insert(&mut self, task: usize, priority: u32) {
+        assert!(!self.is_full(), "RS overflow");
+        self.slots.push(Slot { task, priority });
+    }
+
+    /// Pop the highest-priority task (ties: earliest inserted — FIFO
+    /// keeps the taskizer's cache-friendly emission order).
+    pub fn take_best(&mut self) -> Option<Slot> {
+        if self.slots.is_empty() {
+            return None;
+        }
+        let mut best = 0;
+        for (i, s) in self.slots.iter().enumerate().skip(1) {
+            if s.priority > self.slots[best].priority {
+                best = i;
+            }
+        }
+        Some(self.slots.remove(best))
+    }
+
+    /// Steal the *lowest*-priority task (the victim benefits least from
+    /// its locality — DESIGN.md §6.5). Returns `None` if empty.
+    pub fn steal_worst(&mut self) -> Option<Slot> {
+        if self.slots.is_empty() {
+            return None;
+        }
+        let mut worst = 0;
+        for (i, s) in self.slots.iter().enumerate().skip(1) {
+            if s.priority < self.slots[worst].priority {
+                worst = i;
+            }
+        }
+        Some(self.slots.remove(worst))
+    }
+
+    /// Recompute priorities in place (paper: "the runtime refreshes the
+    /// priorities in RS after new tasks coming in").
+    pub fn refresh<F: FnMut(usize) -> u32>(&mut self, mut prio: F) {
+        for s in &mut self.slots {
+            s.priority = prio(s.task);
+        }
+    }
+
+    /// Iterate current slots (tests/metrics).
+    pub fn iter(&self) -> impl Iterator<Item = &Slot> {
+        self.slots.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_and_worst_selection() {
+        let mut rs = Station::new(8);
+        rs.insert(10, 1);
+        rs.insert(11, 5);
+        rs.insert(12, 3);
+        assert_eq!(rs.take_best().unwrap().task, 11);
+        assert_eq!(rs.steal_worst().unwrap().task, 10);
+        assert_eq!(rs.take_best().unwrap().task, 12);
+        assert!(rs.take_best().is_none());
+    }
+
+    #[test]
+    fn ties_resolve_fifo() {
+        let mut rs = Station::new(4);
+        rs.insert(1, 2);
+        rs.insert(2, 2);
+        rs.insert(3, 2);
+        assert_eq!(rs.take_best().unwrap().task, 1);
+        assert_eq!(rs.steal_worst().unwrap().task, 2);
+    }
+
+    #[test]
+    fn refresh_recomputes() {
+        let mut rs = Station::new(4);
+        rs.insert(7, 0);
+        rs.insert(8, 0);
+        rs.refresh(|t| if t == 8 { 9 } else { 1 });
+        assert_eq!(rs.take_best().unwrap().task, 8);
+    }
+
+    #[test]
+    fn vacancy_tracking() {
+        let mut rs = Station::new(2);
+        assert_eq!(rs.vacancies(), 2);
+        rs.insert(1, 0);
+        assert_eq!(rs.vacancies(), 1);
+        assert!(!rs.is_full());
+        rs.insert(2, 0);
+        assert!(rs.is_full());
+    }
+
+    #[test]
+    #[should_panic(expected = "RS overflow")]
+    fn overflow_panics() {
+        let mut rs = Station::new(1);
+        rs.insert(1, 0);
+        rs.insert(2, 0);
+    }
+}

@@ -1,0 +1,268 @@
+//! Virtual time and serial resource timelines for the DES.
+//!
+//! The simulator models every contended hardware unit — a GPU's kernel
+//! engine, each DMA direction, a PCI-E link — as a [`Lane`]: a serial
+//! resource that executes bookings in arrival order. Completion times are
+//! computed greedily at booking time, which is exact for serial resources
+//! and is the whole of the paper's overlap argument: communication is
+//! free exactly when a DMA lane's busy interval hides inside a kernel
+//! lane's busy interval.
+
+/// Virtual time in seconds.
+pub type SimTime = f64;
+
+/// A serial resource: busy until `free_at`; bookings queue FIFO.
+#[derive(Clone, Debug, Default)]
+pub struct Lane {
+    free_at: SimTime,
+    /// Total busy seconds accumulated (for utilization reports).
+    pub busy: f64,
+    /// Total bookings (for launch-overhead accounting).
+    pub bookings: u64,
+}
+
+impl Lane {
+    pub fn new() -> Lane {
+        Lane::default()
+    }
+
+    /// Book `dur` seconds no earlier than `ready`. Returns
+    /// `(start, end)`; the lane is busy until `end` afterwards.
+    pub fn book(&mut self, ready: SimTime, dur: SimTime) -> (SimTime, SimTime) {
+        debug_assert!(dur >= 0.0);
+        let start = ready.max(self.free_at);
+        let end = start + dur;
+        self.free_at = end;
+        self.busy += dur;
+        self.bookings += 1;
+        (start, end)
+    }
+
+    /// When the lane next becomes idle.
+    pub fn free_at(&self) -> SimTime {
+        self.free_at
+    }
+
+    /// Probe the completion time of a hypothetical booking without
+    /// committing it (the scheduler's locality estimates use this).
+    pub fn peek(&self, ready: SimTime, dur: SimTime) -> SimTime {
+        ready.max(self.free_at) + dur
+    }
+}
+
+/// A serial resource that *backfills*: a booking occupies the earliest
+/// gap of sufficient length at-or-after its ready time, so future-dated
+/// reservations (streams book ahead of the clock) never block
+/// earlier-ready work the way a FIFO lane would. Used for the shared
+/// I/O-hub ceiling, where several devices' pre-booked schedules
+/// interleave.
+#[derive(Clone, Debug, Default)]
+pub struct GapLane {
+    /// Sorted, disjoint busy intervals.
+    busy: std::collections::VecDeque<(SimTime, SimTime)>,
+    /// Total busy seconds (utilization reports).
+    pub busy_total: f64,
+}
+
+impl GapLane {
+    pub fn new() -> GapLane {
+        GapLane::default()
+    }
+
+    /// Book `dur` seconds at the earliest gap starting at or after
+    /// `ready`. Returns `(start, end)`.
+    pub fn book(&mut self, ready: SimTime, dur: SimTime) -> (SimTime, SimTime) {
+        debug_assert!(dur >= 0.0);
+        if dur == 0.0 {
+            return (ready, ready);
+        }
+        let mut start = ready;
+        let mut insert_at = self.busy.len();
+        for (i, &(bs, be)) in self.busy.iter().enumerate() {
+            if be <= start {
+                continue;
+            }
+            if bs >= start + dur {
+                // the gap before interval i fits
+                insert_at = i;
+                break;
+            }
+            // overlap: skip past this interval
+            start = be;
+            insert_at = i + 1;
+        }
+        let end = start + dur;
+        // merge with neighbours when adjacent
+        self.busy.insert(insert_at, (start, end));
+        self.coalesce_around(insert_at);
+        self.busy_total += dur;
+        // bound memory: merge the two oldest intervals (conservative —
+        // only ever *overestimates* past contention)
+        while self.busy.len() > 4096 {
+            let (s0, _) = self.busy[0];
+            let (_, e1) = self.busy[1];
+            self.busy.pop_front();
+            self.busy[0] = (s0, e1);
+        }
+        (start, end)
+    }
+
+    fn coalesce_around(&mut self, i: usize) {
+        // right neighbour
+        while i + 1 < self.busy.len() && self.busy[i + 1].0 <= self.busy[i].1 + 1e-15 {
+            let (_, e) = self.busy.remove(i + 1).unwrap();
+            self.busy[i].1 = self.busy[i].1.max(e);
+        }
+        // left neighbour
+        if i > 0 && self.busy[i].0 <= self.busy[i - 1].1 + 1e-15 {
+            let (_, e) = self.busy.remove(i).unwrap();
+            self.busy[i - 1].1 = self.busy[i - 1].1.max(e);
+        }
+    }
+}
+
+/// Monotone event queue keyed by virtual time; ties break by insertion
+/// sequence so the simulation is fully deterministic.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: std::collections::BinaryHeap<Ev<E>>,
+    seq: u64,
+    now: SimTime,
+}
+
+#[derive(Debug)]
+struct Ev<E> {
+    at: SimTime,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Ev<E> {
+    fn eq(&self, o: &Self) -> bool {
+        self.at == o.at && self.seq == o.seq
+    }
+}
+impl<E> Eq for Ev<E> {}
+impl<E> PartialOrd for Ev<E> {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl<E> Ord for Ev<E> {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap: invert for earliest-first.
+        o.at.total_cmp(&self.at).then(o.seq.cmp(&self.seq))
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> EventQueue<E> {
+        EventQueue { heap: std::collections::BinaryHeap::new(), seq: 0, now: 0.0 }
+    }
+
+    /// Current virtual time (the timestamp of the last popped event).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Schedule `payload` at absolute time `at` (>= now).
+    pub fn schedule(&mut self, at: SimTime, payload: E) {
+        debug_assert!(at >= self.now - 1e-12, "schedule into the past: {at} < {}", self.now);
+        self.heap.push(Ev { at: at.max(self.now), seq: self.seq, payload });
+        self.seq += 1;
+    }
+
+    /// Pop the earliest event, advancing the clock to it.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        let ev = self.heap.pop()?;
+        self.now = ev.at;
+        Some((ev.at, ev.payload))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_serializes() {
+        let mut l = Lane::new();
+        let (s1, e1) = l.book(0.0, 2.0);
+        assert_eq!((s1, e1), (0.0, 2.0));
+        // requested earlier than free: queues behind
+        let (s2, e2) = l.book(1.0, 1.0);
+        assert_eq!((s2, e2), (2.0, 3.0));
+        // requested later than free: starts at request
+        let (s3, e3) = l.book(10.0, 0.5);
+        assert_eq!((s3, e3), (10.0, 10.5));
+        assert_eq!(l.busy, 3.5);
+        assert_eq!(l.bookings, 3);
+    }
+
+    #[test]
+    fn peek_does_not_commit() {
+        let mut l = Lane::new();
+        l.book(0.0, 1.0);
+        assert_eq!(l.peek(0.0, 2.0), 3.0);
+        assert_eq!(l.free_at(), 1.0);
+    }
+
+    #[test]
+    fn gap_lane_backfills() {
+        let mut g = GapLane::new();
+        // future-dated booking first
+        assert_eq!(g.book(10.0, 2.0), (10.0, 12.0));
+        // earlier-ready booking backfills BEFORE it (FIFO would queue it)
+        assert_eq!(g.book(0.0, 3.0), (0.0, 3.0));
+        // gap between 3 and 10 takes a 5s booking
+        assert_eq!(g.book(1.0, 5.0), (3.0, 8.0));
+        // too big for the 8..10 gap: lands after 12
+        assert_eq!(g.book(1.0, 3.0), (12.0, 15.0));
+        // exactly fits the 8..10 gap
+        assert_eq!(g.book(0.0, 2.0), (8.0, 10.0));
+        assert_eq!(g.busy_total, 15.0);
+    }
+
+    #[test]
+    fn gap_lane_zero_duration() {
+        let mut g = GapLane::new();
+        assert_eq!(g.book(5.0, 0.0), (5.0, 5.0));
+    }
+
+    #[test]
+    fn events_pop_in_time_then_insertion_order() {
+        let mut q: EventQueue<&str> = EventQueue::new();
+        q.schedule(2.0, "c");
+        q.schedule(1.0, "a");
+        q.schedule(1.0, "b");
+        assert_eq!(q.pop().unwrap(), (1.0, "a"));
+        assert_eq!(q.pop().unwrap(), (1.0, "b"));
+        assert_eq!(q.now(), 1.0);
+        assert_eq!(q.pop().unwrap(), (2.0, "c"));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore)]
+    #[should_panic(expected = "schedule into the past")]
+    fn rejects_past_events() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        q.schedule(5.0, ());
+        q.pop();
+        q.schedule(1.0, ());
+    }
+}

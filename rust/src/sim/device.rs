@@ -1,0 +1,142 @@
+//! Virtual accelerator models calibrated from the paper's own numbers.
+//!
+//! Scheduling behaviour (load balance, overlap quality, cache pressure)
+//! depends only on *relative* compute/transfer rates and capacities, so a
+//! rate-curve device is a faithful substrate for reproducing the paper's
+//! comparisons even though no CUDA hardware exists here (DESIGN.md §1).
+//!
+//! Calibration sources: K40c in-core cuBLAS DGEMM ≈ 1.20 TFLOPS (paper
+//! §V-A: "92.68% of the in-core cuBLAS DGEMM peak" against a 1.43 TFLOPS
+//! DP peak); TITAN X (Maxwell) DP ≈ 0.19 TFLOPS; Fig. 10's tile-size
+//! saturation curve; Fig. 5's cudaMalloc overhead.
+
+use crate::api::Dtype;
+
+/// A virtual GPU (or CPU pool) participating in the runtime.
+#[derive(Clone, Debug)]
+pub struct DeviceModel {
+    /// Human-readable name ("K40c-0", "TITANX-1", "cpu").
+    pub name: String,
+    /// Saturated double-precision GEMM rate, GFLOP/s.
+    pub dp_gflops: f64,
+    /// Saturated single-precision GEMM rate, GFLOP/s.
+    pub sp_gflops: f64,
+    /// Onboard RAM in bytes (the L1 tile-cache capacity).
+    pub vram: usize,
+    /// Tile size at which the kernel reaches half of the saturated rate
+    /// (the Fig. 10 "knee"; efficiency = t² / (t² + knee²)).
+    pub knee: f64,
+    /// Fixed kernel-launch overhead, seconds (stream gaps — the paper's
+    /// OTHER component).
+    pub launch_overhead: f64,
+    /// Number of concurrent streams the worker drives (the paper uses 4).
+    pub n_streams: usize,
+}
+
+impl DeviceModel {
+    /// Kepler K40c per the paper's calibration.
+    pub fn k40c(idx: usize) -> DeviceModel {
+        DeviceModel {
+            name: format!("K40c-{idx}"),
+            dp_gflops: 1200.0,
+            sp_gflops: 3300.0,
+            vram: 12 * (1 << 30),
+            knee: 256.0,
+            launch_overhead: 8e-6,
+            n_streams: 4,
+        }
+    }
+
+    /// Maxwell TITAN X: strong SP, crippled DP (1/32 ratio) — the
+    /// heterogeneity that breaks static schedulers on Makalu.
+    pub fn titan_x(idx: usize) -> DeviceModel {
+        DeviceModel {
+            name: format!("TITANX-{idx}"),
+            dp_gflops: 190.0,
+            sp_gflops: 5000.0,
+            vram: 12 * (1 << 30),
+            knee: 256.0,
+            launch_overhead: 8e-6,
+            n_streams: 4,
+        }
+    }
+
+    /// A CPU worker pool (paper §IV-C.2): consumes whole tasks with a
+    /// multithreaded host BLAS.
+    pub fn cpu_pool(dp_gflops: f64) -> DeviceModel {
+        DeviceModel {
+            name: "cpu".into(),
+            dp_gflops,
+            sp_gflops: dp_gflops * 2.0,
+            vram: usize::MAX, // operates in host RAM directly
+            knee: 64.0,
+            launch_overhead: 0.0,
+            n_streams: 1,
+        }
+    }
+
+    /// Saturated rate for a dtype, GFLOP/s.
+    pub fn rate(&self, dtype: Dtype) -> f64 {
+        match dtype {
+            Dtype::F32 => self.sp_gflops,
+            Dtype::F64 => self.dp_gflops,
+        }
+    }
+
+    /// Kernel-saturation efficiency at square-tile dimension `t`
+    /// (Fig. 10: rises with tile size, plateaus past ~1024).
+    pub fn efficiency(&self, t: usize) -> f64 {
+        let t = t as f64;
+        t * t / (t * t + self.knee * self.knee)
+    }
+
+    /// Wall-clock seconds to execute `flops` at tile dimension `t`.
+    pub fn kernel_secs(&self, flops: f64, t: usize, dtype: Dtype) -> f64 {
+        self.launch_overhead + flops / (self.rate(dtype) * 1e9 * self.efficiency(t))
+    }
+
+    /// Effective GFLOP/s at tile dimension `t` (for reports).
+    pub fn effective_gflops(&self, t: usize, dtype: Dtype) -> f64 {
+        self.rate(dtype) * self.efficiency(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn saturation_curve_matches_fig10_shape() {
+        let d = DeviceModel::k40c(0);
+        // monotone increasing, plateauing
+        let e128 = d.efficiency(128);
+        let e256 = d.efficiency(256);
+        let e512 = d.efficiency(512);
+        let e1024 = d.efficiency(1024);
+        let e2048 = d.efficiency(2048);
+        assert!(e128 < e256 && e256 < e512 && e512 < e1024 && e1024 < e2048);
+        // knee definition: 50% at t == knee
+        assert!((e256 - 0.5).abs() < 1e-12);
+        // plateau: 1024 within 10% of 2048
+        assert!((e2048 - e1024) / e2048 < 0.1);
+    }
+
+    #[test]
+    fn kernel_secs_scales() {
+        let d = DeviceModel::k40c(0);
+        // one 1024³ DGEMM tile-step: 2*1024³ flops at ~94% of 1.2 TF
+        let t = d.kernel_secs(2.0 * 1024f64.powi(3), 1024, Dtype::F64);
+        let expect = 8e-6 + 2.0 * 1024f64.powi(3) / (1200e9 * d.efficiency(1024));
+        assert!((t - expect).abs() < 1e-12);
+        // SP is faster
+        assert!(d.kernel_secs(1e9, 1024, Dtype::F32) < d.kernel_secs(1e9, 1024, Dtype::F64));
+    }
+
+    #[test]
+    fn titan_x_dp_cripple() {
+        let k = DeviceModel::k40c(0);
+        let t = DeviceModel::titan_x(0);
+        assert!(t.dp_gflops < k.dp_gflops / 5.0);
+        assert!(t.sp_gflops > k.sp_gflops);
+    }
+}

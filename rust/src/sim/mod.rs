@@ -1,0 +1,18 @@
+//! Multi-GPU hardware simulator (DESIGN.md §1, system S12).
+//!
+//! The substrate the paper ran on — CUDA GPUs on PCI-E with P2P — does
+//! not exist here, so we simulate it: calibrated device rate curves
+//! ([`device`]), a link/DMA interconnect model ([`topology`]), and a
+//! deterministic discrete-event core ([`clock`]). The scheduler policy
+//! code is *shared* with the real threaded runtime; only time and byte
+//! movement differ (DESIGN.md §6.1).
+
+pub mod clock;
+pub mod device;
+pub mod presets;
+pub mod topology;
+
+pub use clock::{EventQueue, Lane, SimTime};
+pub use device::DeviceModel;
+pub use presets::{everest, makalu, toy, Machine};
+pub use topology::{Dir, Topology, TopologyConfig};

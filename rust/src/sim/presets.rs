@@ -1,0 +1,118 @@
+//! The paper's two testbeds as simulator presets (Table II).
+
+use super::device::DeviceModel;
+use super::topology::TopologyConfig;
+
+/// One simulated machine: devices + interconnect + optional CPU pool.
+#[derive(Clone, Debug)]
+pub struct Machine {
+    pub name: &'static str,
+    pub devices: Vec<DeviceModel>,
+    pub topology: TopologyConfig,
+    /// The CPU worker pool model (None = GPU-only run).
+    pub cpu: Option<DeviceModel>,
+}
+
+/// Everest: 3× Kepler K40c, 2× Xeon E5 4655 v3, 64 GB DDR3. P2P exists
+/// only between GPU 1 and GPU 2 (0-indexed; the paper's GPU2/GPU3 —
+/// Table V footnote).
+pub fn everest(n_gpus: usize) -> Machine {
+    assert!((1..=3).contains(&n_gpus), "Everest has 3 GPUs");
+    let devices: Vec<DeviceModel> = (0..n_gpus).map(DeviceModel::k40c).collect();
+    let groups = match n_gpus {
+        3 => vec![vec![0], vec![1, 2]],
+        2 => vec![vec![0, 1]], // two K40 on one switch for 2-GPU runs
+        _ => vec![vec![0]],
+    };
+    Machine {
+        name: "everest",
+        devices,
+        topology: TopologyConfig::paper_defaults(n_gpus, groups),
+        // 2-socket 12-core Haswell (E5-4655 v3): multithreaded OpenBLAS
+        // sustains ~400 DP GFLOPS — useful, but a third of one K40.
+        cpu: Some(DeviceModel::cpu_pool(400.0)),
+    }
+}
+
+/// Makalu: 2× Kepler K40 + 2× Maxwell TITAN X, Xeon E5 1620 v3. The
+/// heterogeneous testbed: TITAN X DP is 1/6 of a K40, so static
+/// schedulers collapse (paper §V, Fig. 7 analysis).
+pub fn makalu(n_gpus: usize) -> Machine {
+    assert!((1..=4).contains(&n_gpus), "Makalu has 4 GPUs");
+    let mut devices = Vec::new();
+    // Device order K40, K40, TITANX, TITANX; n_gpus trims from the end,
+    // so 2-GPU runs are homogeneous K40s and 3-4 GPU runs mix in Maxwell.
+    for i in 0..n_gpus.min(2) {
+        devices.push(DeviceModel::k40c(i));
+    }
+    for i in 2..n_gpus {
+        devices.push(DeviceModel::titan_x(i));
+    }
+    let groups = match n_gpus {
+        4 => vec![vec![0, 1], vec![2, 3]],
+        3 => vec![vec![0, 1], vec![2]],
+        2 => vec![vec![0, 1]],
+        _ => vec![vec![0]],
+    };
+    Machine {
+        name: "makalu",
+        devices,
+        topology: TopologyConfig::paper_defaults(n_gpus, groups),
+        // single-socket quad-core Haswell (E5-1620 v3): ~150 DP GFLOPS
+        cpu: Some(DeviceModel::cpu_pool(150.0)),
+    }
+}
+
+/// A tiny machine for tests: fast to simulate, small VRAM so cache
+/// pressure and eviction paths actually trigger.
+pub fn toy(n_gpus: usize, vram: usize) -> Machine {
+    let devices: Vec<DeviceModel> = (0..n_gpus)
+        .map(|i| DeviceModel {
+            name: format!("toy-{i}"),
+            dp_gflops: 100.0,
+            sp_gflops: 200.0,
+            vram,
+            knee: 32.0,
+            launch_overhead: 1e-6,
+            n_streams: 4,
+        })
+        .collect();
+    // all devices behind one switch: maximal P2P reach for cache tests
+    let groups = vec![(0..n_gpus).collect()];
+    Machine {
+        name: "toy",
+        devices,
+        topology: TopologyConfig::paper_defaults(n_gpus, groups),
+        cpu: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everest_matches_table2() {
+        let m = everest(3);
+        assert_eq!(m.devices.len(), 3);
+        assert!(m.devices.iter().all(|d| d.name.starts_with("K40c")));
+        assert_eq!(m.topology.switch_groups, vec![vec![0], vec![1, 2]]);
+        assert!(m.cpu.is_some());
+    }
+
+    #[test]
+    fn makalu_is_heterogeneous() {
+        let m = makalu(4);
+        assert_eq!(m.devices.len(), 4);
+        assert!(m.devices[0].name.starts_with("K40c"));
+        assert!(m.devices[3].name.starts_with("TITANX"));
+        let dp: Vec<f64> = m.devices.iter().map(|d| d.dp_gflops).collect();
+        assert!(dp[0] > 5.0 * dp[3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "Everest has 3 GPUs")]
+    fn everest_bounds() {
+        everest(4);
+    }
+}

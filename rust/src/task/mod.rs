@@ -1,0 +1,18 @@
+//! Taskization of L3 BLAS (paper §III, §IV-A).
+//!
+//! - [`op::TileOp`] — tile-kernel vocabulary (GEMM + diagonal specials).
+//! - [`task::Task`] / [`task::Step`] — a task solves one output tile
+//!   `C_ij` as an ordered list of k-steps.
+//! - [`taskize`] — the six routine decompositions of Eq. 1a–1f, including
+//!   the per-column/row dependency chains of TRMM/TRSM.
+
+pub mod op;
+pub mod task;
+pub mod taskize;
+
+pub use op::TileOp;
+pub use task::{Step, Task, TaskSet, TileRef, WriteMask};
+pub use taskize::{
+    taskize_gemm, taskize_symm, taskize_syr2k, taskize_syrk, taskize_trmm, taskize_trsm,
+    GemmDesc, SymmDesc, SyrkDesc, TriDesc,
+};

@@ -1,0 +1,159 @@
+//! Tile-level operation vocabulary.
+//!
+//! Every L3 BLAS routine decomposes into a stream of *tile ops* (paper
+//! §III-B): the overwhelming majority are full GEMM tile updates
+//! (`TileOp::Gemm`), plus a small family of diagonal-tile specials
+//! (triangular multiply/solve, symmetric multiply, rank-k update) — the
+//! "small amount of other BLAS" of Goto & van de Geijn that the paper's
+//! Table I quantifies.
+
+use crate::api::types::{Diag, Side, Trans, Uplo};
+
+/// One tile-kernel invocation type. The accumulator tile (the task's C
+/// tile) is implicit; `a`/`b` operands come from the owning [`super::Step`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TileOp {
+    /// `C := alpha * op(A) * op(B) + beta * C` — the dominant kernel.
+    Gemm { ta: Trans, tb: Trans },
+    /// Diagonal tile of SYRK: `C := alpha * op(A) op(A)^T + beta * C`
+    /// (`trans == No`: A·Aᵀ; `trans == Yes`: Aᵀ·A). Result is symmetric;
+    /// only the `uplo` triangle is written back to the host.
+    SyrkDiag { uplo: Uplo, trans: Trans },
+    /// Diagonal tile of SYR2K: `C := alpha*(op(A) op(B)^T + op(B) op(A)^T) + beta*C`.
+    Syr2kDiag { uplo: Uplo, trans: Trans },
+    /// Diagonal tile of TRMM: `C := alpha * op(Atri) * C` (side = Left)
+    /// or `C := alpha * C * op(Atri)` (side = Right). Must be the FIRST
+    /// step of its task (it consumes the original C value).
+    TrmmDiag { side: Side, uplo: Uplo, ta: Trans, diag: Diag },
+    /// Diagonal tile of TRSM: solve `op(Atri) X = alpha*C` (Left) or
+    /// `X op(Atri) = alpha*C` (Right), X overwriting the accumulator.
+    /// Must be the LAST step of its task.
+    TrsmDiag { side: Side, uplo: Uplo, ta: Trans, diag: Diag },
+    /// Diagonal tile of SYMM: `C := alpha * sym(A) * B + beta * C` (Left)
+    /// or `C := alpha * B * sym(A) + beta * C` (Right); `sym(A)` reads
+    /// only the `uplo` triangle and mirrors it.
+    SymmDiag { side: Side, uplo: Uplo },
+    /// Pure scaling `C := beta * C` (alpha == 0 or k == 0 quick paths).
+    Scal,
+}
+
+impl TileOp {
+    /// Is this the full-GEMM kernel (numerator of the paper's Table I)?
+    pub fn is_gemm(self) -> bool {
+        matches!(self, TileOp::Gemm { .. })
+    }
+
+    /// Floating-point operations for this op at step dims `(m, n, k)`
+    /// (`m`,`n` = accumulator tile dims; `k` = reduction extent where
+    /// applicable). Standard BLAS flop counts.
+    pub fn flops(self, m: usize, n: usize, k: usize) -> f64 {
+        let (m, n, k) = (m as f64, n as f64, k as f64);
+        match self {
+            TileOp::Gemm { .. } => 2.0 * m * n * k,
+            // Symmetric rank-k on an n×n diagonal tile: n(n+1)k.
+            TileOp::SyrkDiag { .. } => n * (n + 1.0) * k,
+            TileOp::Syr2kDiag { .. } => 2.0 * n * (n + 1.0) * k,
+            // Triangular multiply/solve against an m×m (Left) or n×n
+            // (Right) triangle: half the GEMM count.
+            TileOp::TrmmDiag { side, .. } | TileOp::TrsmDiag { side, .. } => match side {
+                Side::Left => m * m * n,
+                Side::Right => m * n * n,
+            },
+            TileOp::SymmDiag { side, .. } => match side {
+                // sym(A) is m×m (Left) / n×n (Right); dense multiply.
+                Side::Left => 2.0 * m * m * n,
+                Side::Right => 2.0 * m * n * n,
+            },
+            TileOp::Scal => m * n,
+        }
+    }
+
+    /// Stable kernel name used for artifact lookup and traces, e.g.
+    /// `gemm_nn`, `gemm_tn`, `trsm_l_up_n_nu`.
+    pub fn kernel_name(self) -> String {
+        fn t(x: Trans) -> &'static str {
+            match x {
+                Trans::No => "n",
+                Trans::Yes => "t",
+            }
+        }
+        fn u(x: Uplo) -> &'static str {
+            match x {
+                Uplo::Upper => "up",
+                Uplo::Lower => "lo",
+            }
+        }
+        fn s(x: Side) -> &'static str {
+            match x {
+                Side::Left => "l",
+                Side::Right => "r",
+            }
+        }
+        fn d(x: Diag) -> &'static str {
+            match x {
+                Diag::NonUnit => "nu",
+                Diag::Unit => "un",
+            }
+        }
+        match self {
+            TileOp::Gemm { ta, tb } => format!("gemm_{}{}", t(ta), t(tb)),
+            TileOp::SyrkDiag { uplo, trans } => format!("syrk_{}_{}", u(uplo), t(trans)),
+            TileOp::Syr2kDiag { uplo, trans } => format!("syr2k_{}_{}", u(uplo), t(trans)),
+            TileOp::TrmmDiag { side, uplo, ta, diag } => {
+                format!("trmm_{}_{}_{}_{}", s(side), u(uplo), t(ta), d(diag))
+            }
+            TileOp::TrsmDiag { side, uplo, ta, diag } => {
+                format!("trsm_{}_{}_{}_{}", s(side), u(uplo), t(ta), d(diag))
+            }
+            TileOp::SymmDiag { side, uplo } => format!("symm_{}_{}", s(side), u(uplo)),
+            TileOp::Scal => "scal".to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_flops() {
+        let op = TileOp::Gemm { ta: Trans::No, tb: Trans::Yes };
+        assert_eq!(op.flops(10, 20, 30), 2.0 * 10.0 * 20.0 * 30.0);
+        assert!(op.is_gemm());
+    }
+
+    #[test]
+    fn diag_ops_cost_less_than_gemm() {
+        let g = TileOp::Gemm { ta: Trans::No, tb: Trans::No }.flops(64, 64, 64);
+        let s = TileOp::SyrkDiag { uplo: Uplo::Upper, trans: Trans::No }.flops(64, 64, 64);
+        let tr = TileOp::TrsmDiag {
+            side: Side::Left,
+            uplo: Uplo::Upper,
+            ta: Trans::No,
+            diag: Diag::NonUnit,
+        }
+        .flops(64, 64, 0);
+        assert!(s < g);
+        assert!(tr < g);
+        assert!(!TileOp::Scal.is_gemm());
+    }
+
+    #[test]
+    fn kernel_names_stable() {
+        assert_eq!(
+            TileOp::Gemm { ta: Trans::Yes, tb: Trans::No }.kernel_name(),
+            "gemm_tn"
+        );
+        assert_eq!(
+            TileOp::TrsmDiag {
+                side: Side::Left,
+                uplo: Uplo::Upper,
+                ta: Trans::No,
+                diag: Diag::NonUnit
+            }
+            .kernel_name(),
+            "trsm_l_up_n_nu"
+        );
+        assert_eq!(TileOp::SymmDiag { side: Side::Right, uplo: Uplo::Lower }.kernel_name(), "symm_r_lo");
+    }
+}

@@ -1,0 +1,298 @@
+//! Task and step definitions (paper §IV-A).
+//!
+//! A *task* solves one output tile `C_ij` of Eq. 1. It carries only
+//! metadata (tile indices, step list, scalars) — "taskizing a L3 BLAS
+//! does not require significant additional memory" (§IV-A). A *step* is
+//! one k-iteration: a tile-kernel invocation with up to two input tiles.
+
+use super::op::TileOp;
+use crate::tile::MatId;
+
+/// Reference to an input tile by operand matrix and tile indices. The
+/// concrete host address (cache key) is resolved against the routine's
+/// `HostMat`s at execution time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TileRef {
+    pub mat: MatId,
+    pub ti: usize,
+    pub tj: usize,
+}
+
+impl TileRef {
+    pub fn new(mat: MatId, ti: usize, tj: usize) -> TileRef {
+        TileRef { mat, ti, tj }
+    }
+}
+
+/// One k-step of a task: `acc := alpha * op_kernel(a [, b]) + beta * acc`
+/// (exact semantics per [`TileOp`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Step {
+    pub op: TileOp,
+    /// Primary input tile (A-side of the kernel). `None` only for Scal.
+    pub a: Option<TileRef>,
+    /// Secondary input tile (B-side), when the kernel takes two.
+    pub b: Option<TileRef>,
+    /// Step scaling of the kernel product.
+    pub alpha: f64,
+    /// Step scaling of the accumulator (folds the routine's beta into
+    /// the first step; 1.0 afterwards).
+    pub beta: f64,
+    /// Step dims (m, n, k): accumulator tile is m×n; k is the reduction
+    /// extent (0 where not applicable).
+    pub dims: (usize, usize, usize),
+}
+
+impl Step {
+    /// Flops of this step.
+    pub fn flops(&self) -> f64 {
+        let (m, n, k) = self.dims;
+        self.op.flops(m, n, k)
+    }
+
+    /// Input tiles of this step (for cache priority, Eq. 3).
+    pub fn inputs(&self) -> impl Iterator<Item = TileRef> + '_ {
+        self.a.into_iter().chain(self.b)
+    }
+}
+
+/// Which part of the accumulator tile is written back to the host
+/// (diagonal tiles of SYRK/SYR2K store only one triangle).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WriteMask {
+    Full,
+    UpperTri,
+    LowerTri,
+}
+
+/// A schedulable task: all work needed to produce output tile
+/// `(ci, cj)`. Paper §IV-A properties: reads are dependency-free within
+/// a task; distinct tasks write distinct tiles; workload varies per task.
+#[derive(Clone, Debug)]
+pub struct Task {
+    /// Dense id within the owning `TaskSet`.
+    pub id: usize,
+    /// Output tile indices into the C (output) grid.
+    pub ci: usize,
+    pub cj: usize,
+    /// Output tile element dims.
+    pub m: usize,
+    pub n: usize,
+    /// Whether the first step's `beta` consumes the original C tile
+    /// value — if false the accumulator may start uninitialised.
+    pub reads_c: bool,
+    /// Write-back mask (triangle-stored diagonal tiles).
+    pub mask: WriteMask,
+    /// Ordered k-steps.
+    pub steps: Vec<Step>,
+    /// Next task in this task's dependency chain (TRMM/TRSM row/column
+    /// ordering); `None` for independent tasks and chain tails.
+    pub successor: Option<usize>,
+    /// Number of unfinished predecessors (0 = initially ready; chains
+    /// give at most 1).
+    pub n_deps: usize,
+    /// Total flops (cached sum over steps).
+    pub flops: f64,
+}
+
+impl Task {
+    /// Recompute `flops` from the step list (taskizers call this once).
+    pub fn seal(mut self) -> Task {
+        self.flops = self.steps.iter().map(Step::flops).sum();
+        self
+    }
+
+    /// All distinct input tiles (for priority Eq. 3 and prefetch).
+    pub fn input_tiles(&self) -> Vec<TileRef> {
+        let mut v: Vec<TileRef> = self.steps.iter().flat_map(|s| s.inputs()).collect();
+        v.sort_by_key(|r| (r.mat, r.ti, r.tj));
+        v.dedup();
+        v
+    }
+
+    /// Flops attributable to full-GEMM steps (Table I numerator).
+    pub fn gemm_flops(&self) -> f64 {
+        self.steps.iter().filter(|s| s.op.is_gemm()).map(Step::flops).sum()
+    }
+}
+
+/// The output of a taskizer: tasks plus the initial ready set.
+#[derive(Clone, Debug)]
+pub struct TaskSet {
+    pub tasks: Vec<Task>,
+    /// Ids of tasks with no predecessors (enqueued at start).
+    pub heads: Vec<usize>,
+}
+
+impl TaskSet {
+    /// Degree of parallelism = number of tasks (paper Eq. 2 for the
+    /// dependency-free routines; chains reduce *instantaneous* but not
+    /// total parallelism).
+    pub fn degree_of_parallelism(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Total flops across tasks.
+    pub fn total_flops(&self) -> f64 {
+        self.tasks.iter().map(|t| t.flops).sum()
+    }
+
+    /// Fraction of flops executed by the full-GEMM kernel — the paper's
+    /// Table I metric.
+    pub fn gemm_fraction(&self) -> f64 {
+        let total = self.total_flops();
+        if total == 0.0 {
+            return 0.0;
+        }
+        self.tasks.iter().map(|t| t.gemm_flops()).sum::<f64>() / total
+    }
+
+    /// Internal consistency check used by tests and debug builds:
+    /// distinct output tiles, chain links in range and acyclic, head set
+    /// consistent with `n_deps`.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.tasks.len();
+        let mut outs = std::collections::HashSet::new();
+        for (idx, t) in self.tasks.iter().enumerate() {
+            if t.id != idx {
+                return Err(format!("task {idx} has id {}", t.id));
+            }
+            if !outs.insert((t.ci, t.cj)) {
+                return Err(format!("duplicate output tile ({}, {})", t.ci, t.cj));
+            }
+            if let Some(s) = t.successor {
+                if s >= n {
+                    return Err(format!("task {idx} successor {s} out of range"));
+                }
+                if self.tasks[s].n_deps == 0 {
+                    return Err(format!("task {s} is a successor but has n_deps 0"));
+                }
+            }
+            if t.steps.is_empty() {
+                return Err(format!("task {idx} has no steps"));
+            }
+        }
+        // heads = exactly the tasks with n_deps == 0
+        let expect: Vec<usize> =
+            self.tasks.iter().filter(|t| t.n_deps == 0).map(|t| t.id).collect();
+        let mut heads = self.heads.clone();
+        heads.sort_unstable();
+        let mut e = expect.clone();
+        e.sort_unstable();
+        if heads != e {
+            return Err("heads inconsistent with n_deps".to_string());
+        }
+        // chains acyclic: follow successors, visits bounded by n
+        for t in &self.tasks {
+            let mut cur = t.successor;
+            let mut hops = 0;
+            while let Some(s) = cur {
+                hops += 1;
+                if hops > n {
+                    return Err("successor cycle".to_string());
+                }
+                cur = self.tasks[s].successor;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::types::Trans;
+
+    fn gemm_step(i: usize, k: usize, j: usize, dims: (usize, usize, usize)) -> Step {
+        Step {
+            op: TileOp::Gemm { ta: Trans::No, tb: Trans::No },
+            a: Some(TileRef::new(MatId::A, i, k)),
+            b: Some(TileRef::new(MatId::B, k, j)),
+            alpha: 1.0,
+            beta: if k == 0 { 0.5 } else { 1.0 },
+            dims,
+        }
+    }
+
+    #[test]
+    fn task_flops_and_inputs() {
+        let t = Task {
+            id: 0,
+            ci: 0,
+            cj: 0,
+            m: 4,
+            n: 4,
+            reads_c: true,
+            mask: WriteMask::Full,
+            steps: vec![gemm_step(0, 0, 0, (4, 4, 4)), gemm_step(0, 1, 0, (4, 4, 4))],
+            successor: None,
+            n_deps: 0,
+            flops: 0.0,
+        }
+        .seal();
+        assert_eq!(t.flops, 2.0 * (2 * 4 * 4 * 4) as f64);
+        assert_eq!(t.input_tiles().len(), 4);
+        assert_eq!(t.gemm_flops(), t.flops);
+    }
+
+    #[test]
+    fn dedups_repeated_inputs() {
+        let mut t = Task {
+            id: 0,
+            ci: 0,
+            cj: 0,
+            m: 2,
+            n: 2,
+            reads_c: false,
+            mask: WriteMask::Full,
+            steps: vec![gemm_step(0, 0, 0, (2, 2, 2)), gemm_step(0, 0, 0, (2, 2, 2))],
+            successor: None,
+            n_deps: 0,
+            flops: 0.0,
+        };
+        t = t.seal();
+        assert_eq!(t.input_tiles().len(), 2);
+    }
+
+    #[test]
+    fn validate_catches_duplicate_outputs() {
+        let mk = |id| Task {
+            id,
+            ci: 0,
+            cj: 0,
+            m: 1,
+            n: 1,
+            reads_c: true,
+            mask: WriteMask::Full,
+            steps: vec![gemm_step(0, 0, 0, (1, 1, 1))],
+            successor: None,
+            n_deps: 0,
+            flops: 0.0,
+        };
+        let ts = TaskSet { tasks: vec![mk(0), mk(1)], heads: vec![0, 1] };
+        assert!(ts.validate().unwrap_err().contains("duplicate"));
+    }
+
+    #[test]
+    fn validate_checks_heads() {
+        let mut t0 = Task {
+            id: 0,
+            ci: 0,
+            cj: 0,
+            m: 1,
+            n: 1,
+            reads_c: true,
+            mask: WriteMask::Full,
+            steps: vec![gemm_step(0, 0, 0, (1, 1, 1))],
+            successor: Some(1),
+            n_deps: 0,
+            flops: 0.0,
+        };
+        t0 = t0.clone().seal();
+        let t1 = Task { id: 1, ci: 1, cj: 0, n_deps: 1, successor: None, ..t0.clone() }.seal();
+        let good = TaskSet { tasks: vec![t0.clone(), t1.clone()], heads: vec![0] };
+        assert!(good.validate().is_ok());
+        let bad = TaskSet { tasks: vec![t0, t1], heads: vec![0, 1] };
+        assert!(bad.validate().is_err());
+    }
+}

@@ -1,0 +1,890 @@
+//! Taskizers: decompose each L3 BLAS routine into tile tasks
+//! (paper §III-B Eq. 1a–1f and §IV-A).
+//!
+//! Conventions
+//! - All matrices are column-major with square tile size `t` (edge tiles
+//!   truncated, see [`crate::tile::TileGrid`]).
+//! - The *output* operand is always registered as `MatId::C` — for
+//!   TRMM/TRSM that is the in/out matrix B of the BLAS signature, whose
+//!   tiles appear both as the task accumulator and as *inputs* of other
+//!   tasks (which is what creates the per-column/row dependency chains).
+//! - GEMM/SYRK/SYR2K/SYMM tasks are fully independent (§IV-A); TRMM and
+//!   TRSM tasks form one chain per output column (Left) or row (Right),
+//!   ordered so every read of a neighbouring C tile happens at the
+//!   correct version. Chains are expressed via `Task::successor`.
+
+use super::op::TileOp;
+use super::task::{Step, Task, TaskSet, TileRef, WriteMask};
+use crate::api::types::{Diag, Side, Trans, Uplo};
+use crate::tile::{MatId, TileGrid};
+
+/// GEMM problem description (dims are element counts).
+#[derive(Clone, Copy, Debug)]
+pub struct GemmDesc {
+    pub ta: Trans,
+    pub tb: Trans,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub alpha: f64,
+    pub beta: f64,
+    pub t: usize,
+}
+
+/// SYRK / SYR2K description: `C` is n×n, reduction extent `k`.
+#[derive(Clone, Copy, Debug)]
+pub struct SyrkDesc {
+    pub uplo: Uplo,
+    pub trans: Trans,
+    pub n: usize,
+    pub k: usize,
+    pub alpha: f64,
+    pub beta: f64,
+    pub t: usize,
+}
+
+/// SYMM description: `C` is m×n; `A` is m×m (Left) or n×n (Right).
+#[derive(Clone, Copy, Debug)]
+pub struct SymmDesc {
+    pub side: Side,
+    pub uplo: Uplo,
+    pub m: usize,
+    pub n: usize,
+    pub alpha: f64,
+    pub beta: f64,
+    pub t: usize,
+}
+
+/// TRMM / TRSM description: `B` (in/out) is m×n; `A` triangular m×m
+/// (Left) or n×n (Right).
+#[derive(Clone, Copy, Debug)]
+pub struct TriDesc {
+    pub side: Side,
+    pub uplo: Uplo,
+    pub ta: Trans,
+    pub diag: Diag,
+    pub m: usize,
+    pub n: usize,
+    pub alpha: f64,
+    pub t: usize,
+}
+
+// ---------------------------------------------------------------------
+// helpers
+
+fn c_grid(m: usize, n: usize, t: usize) -> TileGrid {
+    TileGrid::new(m, n, t)
+}
+
+/// Reduction-extent of tile index `kk` along a dimension of `len`.
+fn kdim(len: usize, t: usize, kk: usize) -> usize {
+    (len - kk * t).min(t)
+}
+
+fn num_ktiles(len: usize, t: usize) -> usize {
+    if len == 0 { 0 } else { len.div_ceil(t) }
+}
+
+/// Build a task with `steps`, defaulting chain fields; caller links
+/// chains afterwards.
+#[allow(clippy::too_many_arguments)]
+fn mk_task(
+    id: usize,
+    ci: usize,
+    cj: usize,
+    m: usize,
+    n: usize,
+    reads_c: bool,
+    mask: WriteMask,
+    steps: Vec<Step>,
+) -> Task {
+    Task { id, ci, cj, m, n, reads_c, mask, steps, successor: None, n_deps: 0, flops: 0.0 }
+        .seal()
+}
+
+/// A `C := beta*C` fallback task (alpha == 0 or empty reduction).
+fn scal_task(id: usize, ci: usize, cj: usize, m: usize, n: usize, beta: f64) -> Task {
+    mk_task(
+        id,
+        ci,
+        cj,
+        m,
+        n,
+        true,
+        WriteMask::Full,
+        vec![Step { op: TileOp::Scal, a: None, b: None, alpha: 0.0, beta, dims: (m, n, 0) }],
+    )
+}
+
+// ---------------------------------------------------------------------
+// GEMM (Eq. 1a)
+
+/// `C := alpha * op(A) * op(B) + beta * C`.
+pub fn taskize_gemm(d: &GemmDesc) -> TaskSet {
+    let grid = c_grid(d.m, d.n, d.t);
+    let z = num_ktiles(d.k, d.t);
+    let mut tasks = Vec::with_capacity(grid.num_tiles());
+    for (ci, cj) in grid.iter() {
+        let (h, w) = grid.tile_dims(ci, cj);
+        let id = tasks.len();
+        if d.alpha == 0.0 || z == 0 {
+            tasks.push(scal_task(id, ci, cj, h, w, d.beta));
+            continue;
+        }
+        let mut steps = Vec::with_capacity(z);
+        for kk in 0..z {
+            let kd = kdim(d.k, d.t, kk);
+            let a = match d.ta {
+                Trans::No => TileRef::new(MatId::A, ci, kk),
+                Trans::Yes => TileRef::new(MatId::A, kk, ci),
+            };
+            let b = match d.tb {
+                Trans::No => TileRef::new(MatId::B, kk, cj),
+                Trans::Yes => TileRef::new(MatId::B, cj, kk),
+            };
+            steps.push(Step {
+                op: TileOp::Gemm { ta: d.ta, tb: d.tb },
+                a: Some(a),
+                b: Some(b),
+                alpha: d.alpha,
+                beta: if kk == 0 { d.beta } else { 1.0 },
+                dims: (h, w, kd),
+            });
+        }
+        tasks.push(mk_task(id, ci, cj, h, w, d.beta != 0.0, WriteMask::Full, steps));
+    }
+    let heads = (0..tasks.len()).collect();
+    TaskSet { tasks, heads }
+}
+
+// ---------------------------------------------------------------------
+// SYRK (Eq. 1b)
+
+/// `C := alpha * op(A) op(A)^T + beta * C`, C symmetric n×n, only the
+/// `uplo` triangle of C is referenced/updated.
+pub fn taskize_syrk(d: &SyrkDesc) -> TaskSet {
+    let grid = c_grid(d.n, d.n, d.t);
+    let z = num_ktiles(d.k, d.t);
+    let mut tasks = Vec::new();
+    for (ci, cj) in grid.iter() {
+        // only the stored triangle has tasks
+        let in_tri = match d.uplo {
+            Uplo::Upper => ci <= cj,
+            Uplo::Lower => ci >= cj,
+        };
+        if !in_tri {
+            continue;
+        }
+        let (h, w) = grid.tile_dims(ci, cj);
+        let id = tasks.len();
+        let mask = if ci == cj {
+            match d.uplo {
+                Uplo::Upper => WriteMask::UpperTri,
+                Uplo::Lower => WriteMask::LowerTri,
+            }
+        } else {
+            WriteMask::Full
+        };
+        if d.alpha == 0.0 || z == 0 {
+            let mut t = scal_task(id, ci, cj, h, w, d.beta);
+            t.mask = mask;
+            tasks.push(t);
+            continue;
+        }
+        let mut steps = Vec::with_capacity(z);
+        for kk in 0..z {
+            let kd = kdim(d.k, d.t, kk);
+            let beta = if kk == 0 { d.beta } else { 1.0 };
+            if ci == cj {
+                // diagonal tile: true rank-k update
+                let a = match d.trans {
+                    Trans::No => TileRef::new(MatId::A, ci, kk),
+                    Trans::Yes => TileRef::new(MatId::A, kk, ci),
+                };
+                steps.push(Step {
+                    op: TileOp::SyrkDiag { uplo: d.uplo, trans: d.trans },
+                    a: Some(a),
+                    b: None,
+                    alpha: d.alpha,
+                    beta,
+                    dims: (h, w, kd),
+                });
+            } else {
+                // off-diagonal: plain GEMM of two A tiles
+                let (op, a, b) = match d.trans {
+                    // C_ij = A_[i,kk] * A_[j,kk]^T
+                    Trans::No => (
+                        TileOp::Gemm { ta: Trans::No, tb: Trans::Yes },
+                        TileRef::new(MatId::A, ci, kk),
+                        TileRef::new(MatId::A, cj, kk),
+                    ),
+                    // C_ij = A_[kk,i]^T * A_[kk,j]
+                    Trans::Yes => (
+                        TileOp::Gemm { ta: Trans::Yes, tb: Trans::No },
+                        TileRef::new(MatId::A, kk, ci),
+                        TileRef::new(MatId::A, kk, cj),
+                    ),
+                };
+                steps.push(Step { op, a: Some(a), b: Some(b), alpha: d.alpha, beta, dims: (h, w, kd) });
+            }
+        }
+        tasks.push(mk_task(id, ci, cj, h, w, d.beta != 0.0, mask, steps));
+    }
+    let heads = (0..tasks.len()).collect();
+    TaskSet { tasks, heads }
+}
+
+// ---------------------------------------------------------------------
+// SYR2K (Eq. 1e)
+
+/// `C := alpha*(op(A) op(B)^T + op(B) op(A)^T) + beta*C`, C n×n.
+pub fn taskize_syr2k(d: &SyrkDesc) -> TaskSet {
+    let grid = c_grid(d.n, d.n, d.t);
+    let z = num_ktiles(d.k, d.t);
+    let mut tasks = Vec::new();
+    for (ci, cj) in grid.iter() {
+        let in_tri = match d.uplo {
+            Uplo::Upper => ci <= cj,
+            Uplo::Lower => ci >= cj,
+        };
+        if !in_tri {
+            continue;
+        }
+        let (h, w) = grid.tile_dims(ci, cj);
+        let id = tasks.len();
+        let mask = if ci == cj {
+            match d.uplo {
+                Uplo::Upper => WriteMask::UpperTri,
+                Uplo::Lower => WriteMask::LowerTri,
+            }
+        } else {
+            WriteMask::Full
+        };
+        if d.alpha == 0.0 || z == 0 {
+            let mut t = scal_task(id, ci, cj, h, w, d.beta);
+            t.mask = mask;
+            tasks.push(t);
+            continue;
+        }
+        let mut steps = Vec::with_capacity(2 * z);
+        for kk in 0..z {
+            let kd = kdim(d.k, d.t, kk);
+            let beta = if kk == 0 { d.beta } else { 1.0 };
+            if ci == cj {
+                let (a, b) = match d.trans {
+                    Trans::No => {
+                        (TileRef::new(MatId::A, ci, kk), TileRef::new(MatId::B, ci, kk))
+                    }
+                    Trans::Yes => {
+                        (TileRef::new(MatId::A, kk, ci), TileRef::new(MatId::B, kk, ci))
+                    }
+                };
+                steps.push(Step {
+                    op: TileOp::Syr2kDiag { uplo: d.uplo, trans: d.trans },
+                    a: Some(a),
+                    b: Some(b),
+                    alpha: d.alpha,
+                    beta,
+                    dims: (h, w, kd),
+                });
+            } else {
+                match d.trans {
+                    Trans::No => {
+                        // alpha * A_[i,kk] B_[j,kk]^T
+                        steps.push(Step {
+                            op: TileOp::Gemm { ta: Trans::No, tb: Trans::Yes },
+                            a: Some(TileRef::new(MatId::A, ci, kk)),
+                            b: Some(TileRef::new(MatId::B, cj, kk)),
+                            alpha: d.alpha,
+                            beta,
+                            dims: (h, w, kd),
+                        });
+                        // alpha * B_[i,kk] A_[j,kk]^T
+                        steps.push(Step {
+                            op: TileOp::Gemm { ta: Trans::No, tb: Trans::Yes },
+                            a: Some(TileRef::new(MatId::B, ci, kk)),
+                            b: Some(TileRef::new(MatId::A, cj, kk)),
+                            alpha: d.alpha,
+                            beta: 1.0,
+                            dims: (h, w, kd),
+                        });
+                    }
+                    Trans::Yes => {
+                        // alpha * A_[kk,i]^T B_[kk,j]
+                        steps.push(Step {
+                            op: TileOp::Gemm { ta: Trans::Yes, tb: Trans::No },
+                            a: Some(TileRef::new(MatId::A, kk, ci)),
+                            b: Some(TileRef::new(MatId::B, kk, cj)),
+                            alpha: d.alpha,
+                            beta,
+                            dims: (h, w, kd),
+                        });
+                        // alpha * B_[kk,i]^T A_[kk,j]
+                        steps.push(Step {
+                            op: TileOp::Gemm { ta: Trans::Yes, tb: Trans::No },
+                            a: Some(TileRef::new(MatId::B, kk, ci)),
+                            b: Some(TileRef::new(MatId::A, kk, cj)),
+                            alpha: d.alpha,
+                            beta: 1.0,
+                            dims: (h, w, kd),
+                        });
+                    }
+                }
+            }
+        }
+        tasks.push(mk_task(id, ci, cj, h, w, d.beta != 0.0, mask, steps));
+    }
+    let heads = (0..tasks.len()).collect();
+    TaskSet { tasks, heads }
+}
+
+// ---------------------------------------------------------------------
+// SYMM (Eq. 1f)
+
+/// `C := alpha * sym(A) * B + beta * C` (Left) or
+/// `C := alpha * B * sym(A) + beta * C` (Right).
+pub fn taskize_symm(d: &SymmDesc) -> TaskSet {
+    let grid = c_grid(d.m, d.n, d.t);
+    // reduction runs over the symmetric dimension
+    let kext = match d.side {
+        Side::Left => d.m,
+        Side::Right => d.n,
+    };
+    let z = num_ktiles(kext, d.t);
+    let mut tasks = Vec::with_capacity(grid.num_tiles());
+    for (ci, cj) in grid.iter() {
+        let (h, w) = grid.tile_dims(ci, cj);
+        let id = tasks.len();
+        if d.alpha == 0.0 || z == 0 {
+            tasks.push(scal_task(id, ci, cj, h, w, d.beta));
+            continue;
+        }
+        let mut steps = Vec::with_capacity(z);
+        for kk in 0..z {
+            let kd = kdim(kext, d.t, kk);
+            let beta = if kk == 0 { d.beta } else { 1.0 };
+            match d.side {
+                Side::Left => {
+                    // C_ij += sym(A)_{ci,kk} * B_{kk,cj}
+                    let b = TileRef::new(MatId::B, kk, cj);
+                    if kk == ci {
+                        steps.push(Step {
+                            op: TileOp::SymmDiag { side: Side::Left, uplo: d.uplo },
+                            a: Some(TileRef::new(MatId::A, ci, ci)),
+                            b: Some(b),
+                            alpha: d.alpha,
+                            beta,
+                            dims: (h, w, kd),
+                        });
+                    } else {
+                        // stored tile + trans decided by uplo
+                        let stored_direct = match d.uplo {
+                            Uplo::Upper => ci < kk,
+                            Uplo::Lower => ci > kk,
+                        };
+                        let (op, a) = if stored_direct {
+                            (
+                                TileOp::Gemm { ta: Trans::No, tb: Trans::No },
+                                TileRef::new(MatId::A, ci, kk),
+                            )
+                        } else {
+                            (
+                                TileOp::Gemm { ta: Trans::Yes, tb: Trans::No },
+                                TileRef::new(MatId::A, kk, ci),
+                            )
+                        };
+                        steps.push(Step {
+                            op,
+                            a: Some(a),
+                            b: Some(b),
+                            alpha: d.alpha,
+                            beta,
+                            dims: (h, w, kd),
+                        });
+                    }
+                }
+                Side::Right => {
+                    // C_ij += B_{ci,kk} * sym(A)_{kk,cj}
+                    let a = TileRef::new(MatId::B, ci, kk);
+                    if kk == cj {
+                        // Kernel convention (hostblas + the PJRT
+                        // registry): slot `a` is ALWAYS the symmetric
+                        // operand, slot `b` the dense one.
+                        steps.push(Step {
+                            op: TileOp::SymmDiag { side: Side::Right, uplo: d.uplo },
+                            a: Some(TileRef::new(MatId::A, cj, cj)),
+                            b: Some(a),
+                            alpha: d.alpha,
+                            beta,
+                            dims: (h, w, kd),
+                        });
+                    } else {
+                        let stored_direct = match d.uplo {
+                            Uplo::Upper => kk < cj,
+                            Uplo::Lower => kk > cj,
+                        };
+                        let (op, b) = if stored_direct {
+                            (
+                                TileOp::Gemm { ta: Trans::No, tb: Trans::No },
+                                TileRef::new(MatId::A, kk, cj),
+                            )
+                        } else {
+                            (
+                                TileOp::Gemm { ta: Trans::No, tb: Trans::Yes },
+                                TileRef::new(MatId::A, cj, kk),
+                            )
+                        };
+                        steps.push(Step {
+                            op,
+                            a: Some(a),
+                            b: Some(b),
+                            alpha: d.alpha,
+                            beta,
+                            dims: (h, w, kd),
+                        });
+                    }
+                }
+            }
+        }
+        tasks.push(mk_task(id, ci, cj, h, w, d.beta != 0.0, WriteMask::Full, steps));
+    }
+    let heads = (0..tasks.len()).collect();
+    TaskSet { tasks, heads }
+}
+
+// ---------------------------------------------------------------------
+// TRMM (Eq. 1d) and TRSM (Eq. 1c)
+
+/// Does `op(A)` act as an *upper* triangular matrix?
+fn op_upper(uplo: Uplo, ta: Trans) -> bool {
+    match (uplo, ta) {
+        (Uplo::Upper, Trans::No) | (Uplo::Lower, Trans::Yes) => true,
+        (Uplo::Lower, Trans::No) | (Uplo::Upper, Trans::Yes) => false,
+    }
+}
+
+/// Off-diagonal tile of op(A) at logical position (r, c), r != c:
+/// the stored tile and whether the kernel transposes it. Storage
+/// validity: callers only request (r, c) inside op(A)'s triangle, which
+/// maps to A's stored triangle per `uplo`.
+fn tri_tile(_uplo: Uplo, ta: Trans, r: usize, c: usize) -> (TileRef, Trans) {
+    match ta {
+        Trans::No => (TileRef::new(MatId::A, r, c), Trans::No),
+        Trans::Yes => (TileRef::new(MatId::A, c, r), Trans::Yes),
+    }
+}
+
+/// TRMM: `B := alpha * op(A) * B` (Left) / `B := alpha * B * op(A)` (Right).
+///
+/// Chains: Left ⇒ one chain per output *column*, ordered so each task
+/// reads neighbour B tiles before their owners overwrite them
+/// (ascending row index when op(A) is upper, descending when lower).
+/// Right ⇒ one chain per output *row* (ascending column when op(A) is
+/// lower, descending when upper).
+pub fn taskize_trmm(d: &TriDesc) -> TaskSet {
+    let grid = c_grid(d.m, d.n, d.t);
+    let tr = grid.tile_rows();
+    let tc = grid.tile_cols();
+    let upper = op_upper(d.uplo, d.ta);
+    let mut tasks: Vec<Task> = Vec::with_capacity(grid.num_tiles());
+    // id layout: column-major (ci + cj * tr), so chain linking is easy.
+    for (ci, cj) in grid.iter() {
+        let (h, w) = grid.tile_dims(ci, cj);
+        let id = tasks.len();
+        debug_assert_eq!(id, ci + cj * tr);
+        if d.alpha == 0.0 {
+            tasks.push(scal_task(id, ci, cj, h, w, 0.0));
+            continue;
+        }
+        let mut steps = Vec::new();
+        match d.side {
+            Side::Left => {
+                // first: diagonal multiply consumes original B_ij
+                steps.push(Step {
+                    op: TileOp::TrmmDiag { side: Side::Left, uplo: d.uplo, ta: d.ta, diag: d.diag },
+                    a: Some(TileRef::new(MatId::A, ci, ci)),
+                    b: None,
+                    alpha: d.alpha,
+                    beta: 0.0,
+                    dims: (h, w, 0),
+                });
+                let ks: Vec<usize> =
+                    if upper { (ci + 1..tr).collect() } else { (0..ci).collect() };
+                for k in ks {
+                    let (a, tak) = tri_tile(d.uplo, d.ta, ci, k);
+                    steps.push(Step {
+                        op: TileOp::Gemm { ta: tak, tb: Trans::No },
+                        a: Some(a),
+                        b: Some(TileRef::new(MatId::C, k, cj)),
+                        alpha: d.alpha,
+                        beta: 1.0,
+                        dims: (h, w, grid.tile_height(k)),
+                    });
+                }
+            }
+            Side::Right => {
+                steps.push(Step {
+                    op: TileOp::TrmmDiag { side: Side::Right, uplo: d.uplo, ta: d.ta, diag: d.diag },
+                    a: Some(TileRef::new(MatId::A, cj, cj)),
+                    b: None,
+                    alpha: d.alpha,
+                    beta: 0.0,
+                    dims: (h, w, 0),
+                });
+                // op(A)_{k,cj} nonzero: upper ⇒ k < cj stored rows above;
+                // wait — for the *multiplication* B·op(A), column cj of
+                // op(A) has nonzeros at k ≤ cj (upper) / k ≥ cj (lower).
+                let ks: Vec<usize> =
+                    if upper { (0..cj).collect() } else { (cj + 1..tc).collect() };
+                for k in ks {
+                    let (b, tak) = tri_tile(d.uplo, d.ta, k, cj);
+                    steps.push(Step {
+                        op: TileOp::Gemm { ta: Trans::No, tb: tak },
+                        a: Some(TileRef::new(MatId::C, ci, k)),
+                        b: Some(b),
+                        alpha: d.alpha,
+                        beta: 1.0,
+                        dims: (h, w, grid.tile_width(k)),
+                    });
+                }
+            }
+        }
+        tasks.push(mk_task(id, ci, cj, h, w, true, WriteMask::Full, steps));
+    }
+    link_chains(&mut tasks, tr, tc, d.side, trmm_order(d.side, upper));
+    finish_chained(tasks)
+}
+
+/// TRSM: solve `op(A) * X = alpha * B` (Left) / `X * op(A) = alpha * B`
+/// (Right), X overwriting B.
+///
+/// Chains: Left ⇒ per column; the *first* task is the one whose diagonal
+/// block has no off-diagonal dependencies (bottom row for upper op(A) —
+/// back substitution — top row for lower). Right ⇒ per row.
+pub fn taskize_trsm(d: &TriDesc) -> TaskSet {
+    let grid = c_grid(d.m, d.n, d.t);
+    let tr = grid.tile_rows();
+    let tc = grid.tile_cols();
+    let upper = op_upper(d.uplo, d.ta);
+    let mut tasks: Vec<Task> = Vec::with_capacity(grid.num_tiles());
+    for (ci, cj) in grid.iter() {
+        let (h, w) = grid.tile_dims(ci, cj);
+        let id = tasks.len();
+        if d.alpha == 0.0 {
+            // op(A) X = 0 ⇒ X = 0
+            tasks.push(scal_task(id, ci, cj, h, w, 0.0));
+            continue;
+        }
+        let mut steps = Vec::new();
+        match d.side {
+            Side::Left => {
+                let ks: Vec<usize> =
+                    if upper { (ci + 1..tr).collect() } else { (0..ci).collect() };
+                for (idx, k) in ks.iter().enumerate() {
+                    let (a, tak) = tri_tile(d.uplo, d.ta, ci, *k);
+                    steps.push(Step {
+                        op: TileOp::Gemm { ta: tak, tb: Trans::No },
+                        a: Some(a),
+                        b: Some(TileRef::new(MatId::C, *k, cj)),
+                        alpha: -1.0,
+                        // fold `alpha * B_ij` into the first accumulation
+                        beta: if idx == 0 { d.alpha } else { 1.0 },
+                        dims: (h, w, grid.tile_height(*k)),
+                    });
+                }
+                steps.push(Step {
+                    op: TileOp::TrsmDiag { side: Side::Left, uplo: d.uplo, ta: d.ta, diag: d.diag },
+                    a: Some(TileRef::new(MatId::A, ci, ci)),
+                    b: None,
+                    // if no gemm steps preceded, alpha scaling happens here
+                    alpha: if steps.is_empty() { d.alpha } else { 1.0 },
+                    beta: 0.0,
+                    dims: (h, w, 0),
+                });
+            }
+            Side::Right => {
+                // X_{i,cj} * op(A)_{cj,cj} = alpha B_{i,cj} - Σ X_{i,k} op(A)_{k,cj}
+                // column cj of op(A): k < cj (upper) / k > cj (lower)
+                let ks: Vec<usize> =
+                    if upper { (0..cj).collect() } else { (cj + 1..tc).collect() };
+                for (idx, k) in ks.iter().enumerate() {
+                    let (b, tak) = tri_tile(d.uplo, d.ta, *k, cj);
+                    steps.push(Step {
+                        op: TileOp::Gemm { ta: Trans::No, tb: tak },
+                        a: Some(TileRef::new(MatId::C, ci, *k)),
+                        b: Some(b),
+                        alpha: -1.0,
+                        beta: if idx == 0 { d.alpha } else { 1.0 },
+                        dims: (h, w, grid.tile_width(*k)),
+                    });
+                }
+                steps.push(Step {
+                    op: TileOp::TrsmDiag { side: Side::Right, uplo: d.uplo, ta: d.ta, diag: d.diag },
+                    a: Some(TileRef::new(MatId::A, cj, cj)),
+                    b: None,
+                    alpha: if steps.is_empty() { d.alpha } else { 1.0 },
+                    beta: 0.0,
+                    dims: (h, w, 0),
+                });
+            }
+        }
+        tasks.push(mk_task(id, ci, cj, h, w, true, WriteMask::Full, steps));
+    }
+    link_chains(&mut tasks, tr, tc, d.side, trsm_order(d.side, upper));
+    finish_chained(tasks)
+}
+
+/// Chain direction: does the chain walk ascending indices?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ChainOrder {
+    Asc,
+    Desc,
+}
+
+/// TRMM execution order (reads ORIGINAL neighbour values, so tasks run
+/// before the neighbours they read are overwritten):
+/// op(A) upper / Left reads rows k > i ⇒ ascending i;
+/// op(A) lower / Left reads rows k < i ⇒ descending i;
+/// Right mirrors over columns: upper reads k < j ⇒ descending j;
+/// lower reads k > j ⇒ ascending j.
+fn trmm_order(side: Side, op_is_upper: bool) -> ChainOrder {
+    match (side, op_is_upper) {
+        (Side::Left, true) => ChainOrder::Asc,
+        (Side::Left, false) => ChainOrder::Desc,
+        (Side::Right, true) => ChainOrder::Desc,
+        (Side::Right, false) => ChainOrder::Asc,
+    }
+}
+
+/// TRSM execution order (reads COMPUTED neighbour values, so tasks run
+/// after their dependencies): exactly the opposite of TRMM.
+fn trsm_order(side: Side, op_is_upper: bool) -> ChainOrder {
+    match trmm_order(side, op_is_upper) {
+        ChainOrder::Asc => ChainOrder::Desc,
+        ChainOrder::Desc => ChainOrder::Asc,
+    }
+}
+
+/// Link per-column (Left) or per-row (Right) chains through
+/// `Task::successor` / `Task::n_deps`. Task ids are column-major
+/// `ci + cj * tile_rows`.
+fn link_chains(tasks: &mut [Task], tr: usize, tc: usize, side: Side, order: ChainOrder) {
+    let idx = |ci: usize, cj: usize| ci + cj * tr;
+    match side {
+        Side::Left => {
+            for cj in 0..tc {
+                let ids: Vec<usize> = match order {
+                    ChainOrder::Asc => (0..tr).map(|ci| idx(ci, cj)).collect(),
+                    ChainOrder::Desc => (0..tr).rev().map(|ci| idx(ci, cj)).collect(),
+                };
+                for win in ids.windows(2) {
+                    tasks[win[0]].successor = Some(win[1]);
+                    tasks[win[1]].n_deps = 1;
+                }
+            }
+        }
+        Side::Right => {
+            for ci in 0..tr {
+                let ids: Vec<usize> = match order {
+                    ChainOrder::Asc => (0..tc).map(|cj| idx(ci, cj)).collect(),
+                    ChainOrder::Desc => (0..tc).rev().map(|cj| idx(ci, cj)).collect(),
+                };
+                for win in ids.windows(2) {
+                    tasks[win[0]].successor = Some(win[1]);
+                    tasks[win[1]].n_deps = 1;
+                }
+            }
+        }
+    }
+}
+
+fn finish_chained(tasks: Vec<Task>) -> TaskSet {
+    let heads = tasks.iter().filter(|t| t.n_deps == 0).map(|t| t.id).collect();
+    TaskSet { tasks, heads }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gemm_desc(m: usize, n: usize, k: usize, t: usize) -> GemmDesc {
+        GemmDesc { ta: Trans::No, tb: Trans::No, m, n, k, alpha: 1.0, beta: 1.0, t }
+    }
+
+    #[test]
+    fn gemm_task_count_matches_eq2() {
+        let ts = taskize_gemm(&gemm_desc(100, 60, 80, 32));
+        // ceil(100/32)*ceil(60/32) = 4*2
+        assert_eq!(ts.degree_of_parallelism(), 8);
+        assert!(ts.validate().is_ok());
+        // every task has ceil(80/32)=3 steps
+        assert!(ts.tasks.iter().all(|t| t.steps.len() == 3));
+    }
+
+    #[test]
+    fn gemm_total_flops_matches_closed_form() {
+        let (m, n, k) = (96, 64, 80);
+        let ts = taskize_gemm(&gemm_desc(m, n, k, 32));
+        let expect = 2.0 * (m * n * k) as f64;
+        assert!((ts.total_flops() - expect).abs() / expect < 1e-12);
+        assert!((ts.gemm_fraction() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gemm_alpha_zero_degenerates_to_scal() {
+        let mut d = gemm_desc(10, 10, 10, 4);
+        d.alpha = 0.0;
+        let ts = taskize_gemm(&d);
+        assert!(ts.tasks.iter().all(|t| t.steps.len() == 1 && t.steps[0].op == TileOp::Scal));
+    }
+
+    #[test]
+    fn gemm_transposed_tile_indices() {
+        let d = GemmDesc { ta: Trans::Yes, tb: Trans::Yes, m: 8, n: 8, k: 8, alpha: 1.0, beta: 0.0, t: 4 };
+        let ts = taskize_gemm(&d);
+        // task for C tile (1,0): steps read A[kk,1], B[0,kk]
+        let t = ts.tasks.iter().find(|t| t.ci == 1 && t.cj == 0).unwrap();
+        let s0 = &t.steps[0];
+        assert_eq!(s0.a.unwrap(), TileRef::new(MatId::A, 0, 1));
+        assert_eq!(s0.b.unwrap(), TileRef::new(MatId::B, 0, 0));
+    }
+
+    #[test]
+    fn syrk_upper_triangle_only() {
+        let d = SyrkDesc { uplo: Uplo::Upper, trans: Trans::No, n: 8, k: 8, alpha: 1.0, beta: 1.0, t: 4 };
+        let ts = taskize_syrk(&d);
+        assert_eq!(ts.tasks.len(), 3); // (0,0), (0,1), (1,1)
+        assert!(ts.validate().is_ok());
+        assert!(ts.tasks.iter().all(|t| t.ci <= t.cj));
+        let diag = ts.tasks.iter().find(|t| t.ci == t.cj && t.ci == 0).unwrap();
+        assert_eq!(diag.mask, WriteMask::UpperTri);
+        assert!(matches!(diag.steps[0].op, TileOp::SyrkDiag { .. }));
+        let off = ts.tasks.iter().find(|t| t.ci != t.cj).unwrap();
+        assert_eq!(off.mask, WriteMask::Full);
+        assert!(off.steps[0].op.is_gemm());
+    }
+
+    #[test]
+    fn syrk_gemm_fraction_grows_with_n() {
+        let frac = |n: usize| {
+            let d = SyrkDesc { uplo: Uplo::Lower, trans: Trans::No, n, k: n, alpha: 1.0, beta: 1.0, t: 1024 };
+            taskize_syrk(&d).gemm_fraction()
+        };
+        let f5 = frac(5120);
+        let f10 = frac(10240);
+        let f20 = frac(20480);
+        assert!(f5 < f10 && f10 < f20, "{f5} {f10} {f20}");
+        // paper Table I band: 74.5% / 86.3% / 92.8%
+        assert!(f5 > 0.6 && f5 < 0.9, "{f5}");
+        assert!(f20 > 0.88, "{f20}");
+    }
+
+    #[test]
+    fn syr2k_has_two_gemms_per_k_offdiag() {
+        let d = SyrkDesc { uplo: Uplo::Upper, trans: Trans::Yes, n: 8, k: 12, alpha: 2.0, beta: 0.5, t: 4 };
+        let ts = taskize_syr2k(&d);
+        assert!(ts.validate().is_ok());
+        let off = ts.tasks.iter().find(|t| t.ci != t.cj).unwrap();
+        assert_eq!(off.steps.len(), 2 * 3);
+        // first step carries routine beta, all others 1.0 within pairs
+        assert_eq!(off.steps[0].beta, 0.5);
+        assert_eq!(off.steps[1].beta, 1.0);
+    }
+
+    #[test]
+    fn symm_left_upper_uses_transposed_below_diag() {
+        let d = SymmDesc { side: Side::Left, uplo: Uplo::Upper, m: 12, n: 8, alpha: 1.0, beta: 0.0, t: 4 };
+        let ts = taskize_symm(&d);
+        assert!(ts.validate().is_ok());
+        // task (2, 0): k = 0,1 are below-diagonal ⇒ A[k,2] transposed;
+        // k == 2 diagonal ⇒ SymmDiag
+        let t = ts.tasks.iter().find(|t| t.ci == 2 && t.cj == 0).unwrap();
+        assert_eq!(t.steps.len(), 3);
+        match t.steps[0].op {
+            TileOp::Gemm { ta, .. } => assert_eq!(ta, Trans::Yes),
+            ref other => panic!("unexpected {:?}", other),
+        }
+        assert_eq!(t.steps[0].a.unwrap(), TileRef::new(MatId::A, 0, 2));
+        assert!(matches!(t.steps[2].op, TileOp::SymmDiag { .. }));
+    }
+
+    #[test]
+    fn trmm_left_upper_chains_ascend() {
+        let d = TriDesc { side: Side::Left, uplo: Uplo::Upper, ta: Trans::No, diag: Diag::NonUnit, m: 12, n: 8, alpha: 1.0, t: 4 };
+        let ts = taskize_trmm(&d);
+        assert!(ts.validate().is_ok());
+        assert_eq!(ts.tasks.len(), 6); // 3x2 tiles
+        // per column: head is ci=0, successor ci=1, then ci=2
+        let heads: Vec<_> = ts.heads.iter().map(|&h| (ts.tasks[h].ci, ts.tasks[h].cj)).collect();
+        assert!(heads.contains(&(0, 0)) && heads.contains(&(0, 1)));
+        let t00 = ts.tasks.iter().find(|t| t.ci == 0 && t.cj == 0).unwrap();
+        let succ = t00.successor.unwrap();
+        assert_eq!((ts.tasks[succ].ci, ts.tasks[succ].cj), (1, 0));
+        // first step is the diagonal multiply
+        assert!(matches!(t00.steps[0].op, TileOp::TrmmDiag { .. }));
+        // task (0,0) accumulates A[0,1] B[1,0] and A[0,2] B[2,0]
+        assert_eq!(t00.steps.len(), 3);
+        assert_eq!(t00.steps[1].b.unwrap(), TileRef::new(MatId::C, 1, 0));
+    }
+
+    #[test]
+    fn trsm_left_upper_chains_descend() {
+        let d = TriDesc { side: Side::Left, uplo: Uplo::Upper, ta: Trans::No, diag: Diag::NonUnit, m: 12, n: 4, alpha: 2.0, t: 4 };
+        let ts = taskize_trsm(&d);
+        assert!(ts.validate().is_ok());
+        // back substitution: head is bottom row ci=2
+        assert_eq!(ts.heads.len(), 1);
+        let head = &ts.tasks[ts.heads[0]];
+        assert_eq!(head.ci, 2);
+        // head task: no gemm steps; TrsmDiag carries alpha
+        assert_eq!(head.steps.len(), 1);
+        assert_eq!(head.steps[0].alpha, 2.0);
+        // interior task ci=0: 2 gemm steps (k=1,2) then solve
+        let t0 = ts.tasks.iter().find(|t| t.ci == 0).unwrap();
+        assert_eq!(t0.steps.len(), 3);
+        assert_eq!(t0.steps[0].alpha, -1.0);
+        assert_eq!(t0.steps[0].beta, 2.0); // folded routine alpha
+        assert_eq!(t0.steps[1].beta, 1.0);
+        assert!(matches!(t0.steps[2].op, TileOp::TrsmDiag { .. }));
+    }
+
+    #[test]
+    fn trsm_right_lower_chains_over_rows_desc() {
+        let d = TriDesc { side: Side::Right, uplo: Uplo::Lower, ta: Trans::No, diag: Diag::Unit, m: 4, n: 12, alpha: 1.0, t: 4 };
+        let ts = taskize_trsm(&d);
+        assert!(ts.validate().is_ok());
+        // op(A) lower, Right: solve runs descending j? lower ⇒ reads k > j
+        // computed ⇒ chain descends columns: head at cj = 2.
+        assert_eq!(ts.heads.len(), 1);
+        assert_eq!(ts.tasks[ts.heads[0]].cj, 2);
+    }
+
+    #[test]
+    fn trmm_chain_directions_cover_all_variants() {
+        for &side in &[Side::Left, Side::Right] {
+            for &uplo in &[Uplo::Upper, Uplo::Lower] {
+                for &ta in &[Trans::No, Trans::Yes] {
+                    let d = TriDesc { side, uplo, ta, diag: Diag::NonUnit, m: 12, n: 12, alpha: 1.0, t: 4 };
+                    let tm = taskize_trmm(&d);
+                    let tsv = taskize_trsm(&d);
+                    assert!(tm.validate().is_ok(), "{side:?} {uplo:?} {ta:?}");
+                    assert!(tsv.validate().is_ok(), "{side:?} {uplo:?} {ta:?}");
+                    // 3 chains of length 3 each ⇒ 3 heads
+                    assert_eq!(tm.heads.len(), 3);
+                    assert_eq!(tsv.heads.len(), 3);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trsm_total_flops_near_closed_form() {
+        // square left-sided solve: n^3 flops
+        let n = 64;
+        let d = TriDesc { side: Side::Left, uplo: Uplo::Lower, ta: Trans::No, diag: Diag::NonUnit, m: n, n, alpha: 1.0, t: 16 };
+        let ts = taskize_trsm(&d);
+        let expect = (n * n * n) as f64;
+        let got = ts.total_flops();
+        assert!((got - expect).abs() / expect < 0.1, "got {got}, expect {expect}");
+    }
+}

@@ -1,0 +1,149 @@
+//! Tile grid geometry (paper §III-A).
+//!
+//! A matrix of `rows × cols` with tile size `t` is partitioned into
+//! `ceil(rows/t) × ceil(cols/t)` tiles; interior tiles are `t × t` and
+//! edge tiles are the remainders. Tiles are indexed `(ti, tj)` by tile
+//! row and tile column.
+
+/// Geometry of a tiled matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileGrid {
+    /// Matrix rows.
+    pub rows: usize,
+    /// Matrix columns.
+    pub cols: usize,
+    /// Tile size (square tiles; edge tiles truncated).
+    pub t: usize,
+}
+
+impl TileGrid {
+    pub fn new(rows: usize, cols: usize, t: usize) -> TileGrid {
+        assert!(t > 0, "tile size must be positive");
+        TileGrid { rows, cols, t }
+    }
+
+    /// Number of tile rows = ceil(rows / t).
+    #[inline]
+    pub fn tile_rows(&self) -> usize {
+        self.rows.div_ceil(self.t)
+    }
+
+    /// Number of tile columns = ceil(cols / t).
+    #[inline]
+    pub fn tile_cols(&self) -> usize {
+        self.cols.div_ceil(self.t)
+    }
+
+    /// Total number of tiles — the paper's degree of parallelism (Eq. 2)
+    /// when applied to the output matrix.
+    #[inline]
+    pub fn num_tiles(&self) -> usize {
+        self.tile_rows() * self.tile_cols()
+    }
+
+    /// Element-row origin of tile row `ti`.
+    #[inline]
+    pub fn row_origin(&self, ti: usize) -> usize {
+        ti * self.t
+    }
+
+    /// Element-column origin of tile column `tj`.
+    #[inline]
+    pub fn col_origin(&self, tj: usize) -> usize {
+        tj * self.t
+    }
+
+    /// Height of tile row `ti` (edge tiles may be short).
+    #[inline]
+    pub fn tile_height(&self, ti: usize) -> usize {
+        debug_assert!(ti < self.tile_rows());
+        (self.rows - ti * self.t).min(self.t)
+    }
+
+    /// Width of tile column `tj`.
+    #[inline]
+    pub fn tile_width(&self, tj: usize) -> usize {
+        debug_assert!(tj < self.tile_cols());
+        (self.cols - tj * self.t).min(self.t)
+    }
+
+    /// Dimensions `(h, w)` of tile `(ti, tj)`.
+    #[inline]
+    pub fn tile_dims(&self, ti: usize, tj: usize) -> (usize, usize) {
+        (self.tile_height(ti), self.tile_width(tj))
+    }
+
+    /// Is `(ti, tj)` a full `t × t` interior tile?
+    #[inline]
+    pub fn is_full(&self, ti: usize, tj: usize) -> bool {
+        self.tile_dims(ti, tj) == (self.t, self.t)
+    }
+
+    /// Number of full square tiles (paper §III-A's `⌊N/T⌋ × ⌊M/T⌋`).
+    pub fn num_full_tiles(&self) -> usize {
+        (self.rows / self.t) * (self.cols / self.t)
+    }
+
+    /// Iterate all tile indices in column-major order (matches the
+    /// column-major element layout used throughout).
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        let tr = self.tile_rows();
+        let tc = self.tile_cols();
+        (0..tc).flat_map(move |tj| (0..tr).map(move |ti| (ti, tj)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_division() {
+        let g = TileGrid::new(8, 6, 2);
+        assert_eq!(g.tile_rows(), 4);
+        assert_eq!(g.tile_cols(), 3);
+        assert_eq!(g.num_tiles(), 12);
+        assert_eq!(g.num_full_tiles(), 12);
+        assert!(g.is_full(3, 2));
+        assert_eq!(g.tile_dims(0, 0), (2, 2));
+    }
+
+    #[test]
+    fn ragged_edges() {
+        let g = TileGrid::new(10, 7, 4);
+        assert_eq!(g.tile_rows(), 3); // 4,4,2
+        assert_eq!(g.tile_cols(), 2); // 4,3
+        assert_eq!(g.tile_height(2), 2);
+        assert_eq!(g.tile_width(1), 3);
+        assert_eq!(g.tile_dims(2, 1), (2, 3));
+        assert!(!g.is_full(2, 0));
+        assert!(g.is_full(1, 0));
+        assert_eq!(g.num_full_tiles(), 2); // floor(10/4)*floor(7/4) = 2*1
+    }
+
+    #[test]
+    fn degenerate_small_matrix() {
+        let g = TileGrid::new(3, 3, 1024);
+        assert_eq!(g.num_tiles(), 1);
+        assert_eq!(g.tile_dims(0, 0), (3, 3));
+    }
+
+    #[test]
+    fn iter_covers_all_tiles_once() {
+        let g = TileGrid::new(5, 5, 2);
+        let all: Vec<_> = g.iter().collect();
+        assert_eq!(all.len(), g.num_tiles());
+        let mut dedup = all.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), all.len());
+    }
+
+    #[test]
+    fn origins() {
+        let g = TileGrid::new(100, 100, 32);
+        assert_eq!(g.row_origin(2), 64);
+        assert_eq!(g.col_origin(3), 96);
+        assert_eq!(g.tile_height(3), 4); // 100 - 96
+    }
+}

@@ -1,0 +1,241 @@
+//! Host matrix wrapper and tile views (paper §III-A, §III-C).
+//!
+//! BLASX is out-of-core: input and output matrices always live in host
+//! memory (a caller-provided column-major buffer, BLAS-style with a
+//! leading dimension). The runtime never copies whole matrices — it
+//! slices *tiles* out of the host buffer on demand.
+//!
+//! `HostMat` wraps a raw pointer + geometry and is shared across worker
+//! threads. Safety rests on the paper's §IV-A task properties: tasks read
+//! arbitrary input tiles concurrently but each task writes a distinct
+//! output tile, so concurrent writes never alias.
+
+use super::layout::TileGrid;
+use crate::api::types::Scalar;
+
+/// Identifies which operand of the current routine a tile belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MatId {
+    A,
+    B,
+    C,
+}
+
+/// Globally-unique key for a tile within one routine invocation: the
+/// paper keys its caches by the tile's *host address*, which is exactly
+/// what `addr` is. `(mat, ti, tj)` is kept for debuggability.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TileKey {
+    /// Host address of the tile origin (the cache key, paper Alg. 2 "HA").
+    pub addr: usize,
+    pub mat: MatId,
+    pub ti: usize,
+    pub tj: usize,
+}
+
+/// A column-major host matrix: base pointer, rows, cols, leading
+/// dimension, and its tile grid.
+pub struct HostMat<T> {
+    ptr: *mut T,
+    pub rows: usize,
+    pub cols: usize,
+    pub ld: usize,
+    pub grid: TileGrid,
+    pub id: MatId,
+}
+
+// SAFETY: see module docs — tile tasks write disjoint regions; reads may
+// race with nothing (inputs are never written during a call).
+unsafe impl<T: Send> Send for HostMat<T> {}
+unsafe impl<T: Sync> Sync for HostMat<T> {}
+
+impl<T: Scalar> HostMat<T> {
+    /// Wrap a caller buffer. `buf.len()` must cover `ld * cols` (the
+    /// standard BLAS requirement) and `ld >= rows`.
+    pub fn new(buf: &mut [T], rows: usize, cols: usize, ld: usize, t: usize, id: MatId) -> Self {
+        assert!(ld >= rows.max(1), "leading dimension {ld} < rows {rows}");
+        assert!(
+            buf.len() >= ld * cols.saturating_sub(1) + rows || cols == 0,
+            "buffer too small: len {} for ld {ld} x cols {cols}",
+            buf.len()
+        );
+        HostMat {
+            ptr: buf.as_mut_ptr(),
+            rows,
+            cols,
+            ld,
+            grid: TileGrid::new(rows, cols, t),
+            id,
+        }
+    }
+
+    /// Wrap a read-only buffer. The runtime never writes through A/B
+    /// operands; `MatId::C` must use [`HostMat::new`].
+    pub fn new_ro(buf: &[T], rows: usize, cols: usize, ld: usize, t: usize, id: MatId) -> Self {
+        assert!(id != MatId::C, "read-only wrap is for input operands");
+        assert!(ld >= rows.max(1), "leading dimension {ld} < rows {rows}");
+        assert!(
+            buf.len() >= ld * cols.saturating_sub(1) + rows || cols == 0,
+            "buffer too small"
+        );
+        HostMat {
+            ptr: buf.as_ptr() as *mut T,
+            rows,
+            cols,
+            ld,
+            grid: TileGrid::new(rows, cols, t),
+            id,
+        }
+    }
+
+    /// Host address (usable as a cache key) of element `(r, c)`.
+    #[inline]
+    fn elem_addr(&self, r: usize, c: usize) -> usize {
+        self.ptr as usize + (c * self.ld + r) * std::mem::size_of::<T>()
+    }
+
+    /// The cache key of tile `(ti, tj)`.
+    #[inline]
+    pub fn tile_key(&self, ti: usize, tj: usize) -> TileKey {
+        TileKey {
+            addr: self.elem_addr(self.grid.row_origin(ti), self.grid.col_origin(tj)),
+            mat: self.id,
+            ti,
+            tj,
+        }
+    }
+
+    /// Copy tile `(ti, tj)` out of the host buffer into `dst`, laid out
+    /// column-major with leading dimension `dst_ld` (≥ tile height). The
+    /// remainder of `dst` (padding up to `dst_ld × dst_cols`) is left
+    /// untouched — callers zero/identity-pad explicitly when needed.
+    pub fn read_tile(&self, ti: usize, tj: usize, dst: &mut [T], dst_ld: usize) {
+        let (h, w) = self.grid.tile_dims(ti, tj);
+        debug_assert!(dst_ld >= h);
+        debug_assert!(dst.len() >= dst_ld * w);
+        let r0 = self.grid.row_origin(ti);
+        let c0 = self.grid.col_origin(tj);
+        for c in 0..w {
+            // SAFETY: geometry checked above; source column segment lies
+            // within the caller-provided buffer per the `new` contract.
+            unsafe {
+                let src = self.ptr.add((c0 + c) * self.ld + r0);
+                std::ptr::copy_nonoverlapping(src, dst.as_mut_ptr().add(c * dst_ld), h);
+            }
+        }
+    }
+
+    /// Write `src` (column-major, leading dim `src_ld`) into tile
+    /// `(ti, tj)` of the host buffer. This is the MESI-X M-state
+    /// write-back path (paper Fig. 3).
+    ///
+    /// # Safety contract
+    /// Only one in-flight task may write a given C tile (paper §IV-A);
+    /// the taskizer guarantees distinct `(ti, tj)` per task.
+    pub fn write_tile(&self, ti: usize, tj: usize, src: &[T], src_ld: usize) {
+        let (h, w) = self.grid.tile_dims(ti, tj);
+        debug_assert!(src_ld >= h);
+        debug_assert!(src.len() >= src_ld * w);
+        let r0 = self.grid.row_origin(ti);
+        let c0 = self.grid.col_origin(tj);
+        for c in 0..w {
+            // SAFETY: as in `read_tile`; disjointness of writers is the
+            // taskizer invariant documented above.
+            unsafe {
+                let dst = self.ptr.add((c0 + c) * self.ld + r0);
+                std::ptr::copy_nonoverlapping(src.as_ptr().add(c * src_ld), dst, h);
+            }
+        }
+    }
+
+    /// Size in bytes of tile `(ti, tj)` as stored in a cache block
+    /// (padded to the full `t × t` footprint so cache blocks are
+    /// uniform, which is what lets the FastHeap recycle them freely).
+    pub fn tile_padded_bytes(&self) -> usize {
+        self.grid.t * self.grid.t * std::mem::size_of::<T>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(rows: usize, cols: usize, ld: usize) -> Vec<f64> {
+        // element (r,c) = r + 100c, padding = -1
+        let mut buf = vec![-1.0; ld * cols];
+        for c in 0..cols {
+            for r in 0..rows {
+                buf[c * ld + r] = r as f64 + 100.0 * c as f64;
+            }
+        }
+        buf
+    }
+
+    #[test]
+    fn read_tile_interior_and_edge() {
+        let mut buf = filled(5, 5, 7);
+        let m = HostMat::new(&mut buf, 5, 5, 7, 2, MatId::A);
+        // interior tile (1,1): rows 2..4, cols 2..4
+        let mut t = vec![0.0; 4];
+        m.read_tile(1, 1, &mut t, 2);
+        assert_eq!(t, vec![2.0 + 200.0, 3.0 + 200.0, 2.0 + 300.0, 3.0 + 300.0]);
+        // edge tile (2,2): single element (4,4)
+        let mut e = vec![0.0; 1];
+        m.read_tile(2, 2, &mut e, 1);
+        assert_eq!(e, vec![4.0 + 400.0]);
+    }
+
+    #[test]
+    fn write_tile_roundtrip() {
+        let mut buf = filled(6, 6, 6);
+        let m = HostMat::new(&mut buf, 6, 6, 6, 4, MatId::C);
+        let src: Vec<f64> = (0..8).map(|x| 1000.0 + x as f64).collect();
+        // tile (1,0): rows 4..6 (h=2), cols 0..4 (w=4), src_ld=2
+        m.write_tile(1, 0, &src, 2);
+        let mut back = vec![0.0; 8];
+        m.read_tile(1, 0, &mut back, 2);
+        assert_eq!(back, src);
+        // Neighbouring tile untouched.
+        let mut other = vec![0.0; 16];
+        m.read_tile(0, 0, &mut other, 4);
+        assert_eq!(other[0], 0.0);
+        assert_eq!(other[5], 1.0 + 100.0);
+    }
+
+    #[test]
+    fn tile_keys_unique_and_stable() {
+        let mut buf = filled(8, 8, 8);
+        let m = HostMat::new(&mut buf, 8, 8, 8, 4, MatId::A);
+        let k00 = m.tile_key(0, 0);
+        let k10 = m.tile_key(1, 0);
+        let k01 = m.tile_key(0, 1);
+        assert_ne!(k00.addr, k10.addr);
+        assert_ne!(k00.addr, k01.addr);
+        assert_eq!(k10.addr - k00.addr, 4 * 8); // 4 rows * 8 bytes
+        assert_eq!(k01.addr - k00.addr, 4 * 8 * 8); // 4 cols * ld(8) * 8 bytes
+        assert_eq!(m.tile_key(0, 0), k00);
+    }
+
+    #[test]
+    fn ro_wrap_reads() {
+        let buf = filled(4, 4, 4);
+        let m = HostMat::<f64>::new_ro(&buf, 4, 4, 4, 2, MatId::B);
+        let mut t = vec![0.0; 4];
+        m.read_tile(0, 1, &mut t, 2);
+        assert_eq!(t, vec![200.0, 201.0, 300.0, 301.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "leading dimension")]
+    fn rejects_bad_ld() {
+        let mut buf = vec![0.0f64; 10];
+        let _ = HostMat::new(&mut buf, 5, 2, 3, 2, MatId::A);
+    }
+
+    #[test]
+    fn padded_bytes() {
+        let mut buf = filled(5, 5, 5);
+        let m = HostMat::new(&mut buf, 5, 5, 5, 2, MatId::C);
+        assert_eq!(m.tile_padded_bytes(), 2 * 2 * 8);
+    }
+}

@@ -1,0 +1,12 @@
+//! Tiled-matrix representation (paper §III).
+//!
+//! - [`layout::TileGrid`] — pure geometry: tile counts, edge-tile dims.
+//! - [`matrix::HostMat`] — a column-major host buffer sliced into tiles;
+//!   tiles are addressed by [`matrix::TileKey`] (the host address the
+//!   paper's caches key on).
+
+pub mod layout;
+pub mod matrix;
+
+pub use layout::TileGrid;
+pub use matrix::{HostMat, MatId, TileKey};

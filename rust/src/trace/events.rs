@@ -1,0 +1,187 @@
+//! Execution-trace events: timed intervals per device classified by what
+//! the hardware unit was doing — the raw material of the paper's Fig. 1
+//! snapshots, Fig. 8 COMPT/COMM/OTHER dissection, and Table IV/V traffic
+//! accounting.
+
+/// What an interval on a device was spent on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvKind {
+    /// Kernel execution (COMPT).
+    Kernel,
+    /// Host→device transfer.
+    H2d,
+    /// Device→host transfer (C write-backs).
+    D2h,
+    /// Peer-to-peer transfer (this device is the destination).
+    P2p,
+}
+
+/// One timed interval.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub dev: usize,
+    pub stream: usize,
+    pub kind: EvKind,
+    pub start: f64,
+    pub end: f64,
+    /// Bytes moved (transfers) or flops executed (kernels).
+    pub amount: f64,
+}
+
+/// Append-only event log for one run.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub events: Vec<Event>,
+    /// Wall/virtual time the run finished.
+    pub makespan: f64,
+}
+
+impl Trace {
+    pub fn new() -> Trace {
+        Trace::default()
+    }
+
+    pub fn push(&mut self, ev: Event) {
+        debug_assert!(ev.end >= ev.start);
+        self.events.push(ev);
+    }
+
+    pub fn record(
+        &mut self,
+        dev: usize,
+        stream: usize,
+        kind: EvKind,
+        start: f64,
+        end: f64,
+        amount: f64,
+    ) {
+        self.push(Event { dev, stream, kind, start, end, amount });
+    }
+
+    /// Events of one device, in recorded order.
+    pub fn of_device(&self, dev: usize) -> impl Iterator<Item = &Event> {
+        self.events.iter().filter(move |e| e.dev == dev)
+    }
+
+    /// Bytes moved into/out of `dev` by kind.
+    pub fn bytes(&self, dev: usize, kind: EvKind) -> f64 {
+        debug_assert!(kind != EvKind::Kernel);
+        self.of_device(dev).filter(|e| e.kind == kind).map(|e| e.amount).sum()
+    }
+
+    /// Flops executed on `dev`.
+    pub fn flops(&self, dev: usize) -> f64 {
+        self.of_device(dev).filter(|e| e.kind == EvKind::Kernel).map(|e| e.amount).sum()
+    }
+
+    /// Highest device index + 1.
+    pub fn n_devices(&self) -> usize {
+        self.events.iter().map(|e| e.dev + 1).max().unwrap_or(0)
+    }
+}
+
+/// Total length of the union of `[start, end)` intervals.
+pub fn union_len(intervals: &mut Vec<(f64, f64)>) -> f64 {
+    if intervals.is_empty() {
+        return 0.0;
+    }
+    intervals.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut total = 0.0;
+    let (mut cs, mut ce) = intervals[0];
+    for &(s, e) in intervals.iter().skip(1) {
+        if s > ce {
+            total += ce - cs;
+            cs = s;
+            ce = e;
+        } else {
+            ce = ce.max(e);
+        }
+    }
+    total + (ce - cs)
+}
+
+/// Length of the part of interval-set `a` not covered by interval-set
+/// `b` (both get sorted/merged). Used for "unoverlapped communication":
+/// COMM = |transfers \ kernels|.
+pub fn uncovered_len(a: &mut Vec<(f64, f64)>, b: &mut Vec<(f64, f64)>) -> f64 {
+    let total_a = union_len(a); // sorts & merges a conceptually
+    if b.is_empty() {
+        return total_a;
+    }
+    // merge b
+    b.sort_by(|x, y| x.0.total_cmp(&y.0));
+    let mut merged_b: Vec<(f64, f64)> = Vec::with_capacity(b.len());
+    for &(s, e) in b.iter() {
+        match merged_b.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => merged_b.push((s, e)),
+        }
+    }
+    // subtract: walk a (already sorted by union_len) against merged_b
+    let mut covered = 0.0;
+    let mut j = 0;
+    // merge a again for a clean pass
+    let mut merged_a: Vec<(f64, f64)> = Vec::with_capacity(a.len());
+    for &(s, e) in a.iter() {
+        match merged_a.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => merged_a.push((s, e)),
+        }
+    }
+    for &(s, e) in &merged_a {
+        while j < merged_b.len() && merged_b[j].1 <= s {
+            j += 1;
+        }
+        let mut k = j;
+        while k < merged_b.len() && merged_b[k].0 < e {
+            let (bs, be) = merged_b[k];
+            covered += (e.min(be) - s.max(bs)).max(0.0);
+            k += 1;
+        }
+    }
+    total_a - covered
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn union_merges_overlaps() {
+        let mut v = vec![(0.0, 2.0), (1.0, 3.0), (5.0, 6.0)];
+        assert_eq!(union_len(&mut v), 4.0);
+        let mut single = vec![(1.0, 1.5)];
+        assert_eq!(union_len(&mut single), 0.5);
+        let mut empty: Vec<(f64, f64)> = vec![];
+        assert_eq!(union_len(&mut empty), 0.0);
+    }
+
+    #[test]
+    fn uncovered_subtracts() {
+        // transfers [0,4), kernels [1,2)+[3,5): uncovered = [0,1)+[2,3) = 2
+        let mut a = vec![(0.0, 4.0)];
+        let mut b = vec![(1.0, 2.0), (3.0, 5.0)];
+        assert_eq!(uncovered_len(&mut a, &mut b), 2.0);
+        // fully covered
+        let mut a2 = vec![(1.0, 2.0)];
+        let mut b2 = vec![(0.0, 3.0)];
+        assert_eq!(uncovered_len(&mut a2, &mut b2), 0.0);
+        // no kernels: everything uncovered
+        let mut a3 = vec![(0.0, 1.0), (2.0, 3.0)];
+        let mut b3: Vec<(f64, f64)> = vec![];
+        assert_eq!(uncovered_len(&mut a3, &mut b3), 2.0);
+    }
+
+    #[test]
+    fn trace_accounting() {
+        let mut t = Trace::new();
+        t.record(0, 0, EvKind::Kernel, 0.0, 1.0, 100.0);
+        t.record(0, 1, EvKind::H2d, 0.5, 0.8, 64.0);
+        t.record(1, 0, EvKind::P2p, 0.0, 0.2, 32.0);
+        t.makespan = 1.0;
+        assert_eq!(t.flops(0), 100.0);
+        assert_eq!(t.bytes(0, EvKind::H2d), 64.0);
+        assert_eq!(t.bytes(1, EvKind::P2p), 32.0);
+        assert_eq!(t.n_devices(), 2);
+    }
+}

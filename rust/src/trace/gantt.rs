@@ -1,0 +1,121 @@
+//! ASCII gantt rendering of a trace — the Fig. 1 "execution profile
+//! snapshot" as a terminal chart, one row per (device, stream/DMA lane).
+
+use super::events::{EvKind, Trace};
+
+/// Render `trace` as an ASCII gantt of `width` columns. Rows: per device
+/// one kernel row per stream plus one row per transfer class. Glyphs:
+/// `#` kernel, `>` H2D, `<` D2H, `=` P2P.
+pub fn render(trace: &Trace, width: usize) -> String {
+    let mut out = String::new();
+    if trace.events.is_empty() || trace.makespan <= 0.0 {
+        return "(empty trace)\n".to_string();
+    }
+    let scale = width as f64 / trace.makespan;
+    let n_dev = trace.n_devices();
+    for dev in 0..n_dev {
+        let streams = trace
+            .of_device(dev)
+            .filter(|e| e.kind == EvKind::Kernel)
+            .map(|e| e.stream + 1)
+            .max()
+            .unwrap_or(0);
+        for s in 0..streams {
+            let mut row = vec![b'.'; width];
+            for e in trace.of_device(dev).filter(|e| e.kind == EvKind::Kernel && e.stream == s) {
+                paint(&mut row, e.start, e.end, scale, b'#');
+            }
+            out.push_str(&format!("gpu{dev} s{s} |{}|\n", String::from_utf8_lossy(&row)));
+        }
+        for (kind, glyph, label) in
+            [(EvKind::H2d, b'>', "h2d"), (EvKind::D2h, b'<', "d2h"), (EvKind::P2p, b'=', "p2p")]
+        {
+            let evs: Vec<_> = trace.of_device(dev).filter(|e| e.kind == kind).collect();
+            if evs.is_empty() {
+                continue;
+            }
+            let mut row = vec![b'.'; width];
+            for e in evs {
+                paint(&mut row, e.start, e.end, scale, glyph);
+            }
+            out.push_str(&format!("gpu{dev} {label} |{}|\n", String::from_utf8_lossy(&row)));
+        }
+    }
+    out.push_str(&format!("scale: {} = {:.4}s\n", width, trace.makespan));
+    out
+}
+
+/// Serialize a trace to JSON (one object per event) for external
+/// replotting — the machine-readable twin of [`render`].
+pub fn to_json(trace: &Trace) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let mut root = Json::obj();
+    root.set("makespan", Json::Num(trace.makespan));
+    let events: Vec<Json> = trace
+        .events
+        .iter()
+        .map(|e| {
+            let mut o = Json::obj();
+            o.set("dev", Json::Num(e.dev as f64));
+            o.set("stream", Json::Num(e.stream as f64));
+            o.set(
+                "kind",
+                Json::Str(
+                    match e.kind {
+                        EvKind::Kernel => "kernel",
+                        EvKind::H2d => "h2d",
+                        EvKind::D2h => "d2h",
+                        EvKind::P2p => "p2p",
+                    }
+                    .to_string(),
+                ),
+            );
+            o.set("start", Json::Num(e.start));
+            o.set("end", Json::Num(e.end));
+            o.set("amount", Json::Num(e.amount));
+            o
+        })
+        .collect();
+    root.set("events", Json::Arr(events));
+    root
+}
+
+fn paint(row: &mut [u8], start: f64, end: f64, scale: f64, glyph: u8) {
+    let w = row.len();
+    let a = ((start * scale) as usize).min(w.saturating_sub(1));
+    let b = ((end * scale).ceil() as usize).clamp(a + 1, w);
+    for c in row.iter_mut().take(b).skip(a) {
+        *c = glyph;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_rows_per_stream_and_lane() {
+        let mut t = Trace::new();
+        t.record(0, 0, EvKind::Kernel, 0.0, 0.5, 1.0);
+        t.record(0, 1, EvKind::Kernel, 0.5, 1.0, 1.0);
+        t.record(0, 0, EvKind::H2d, 0.0, 0.25, 8.0);
+        t.record(1, 0, EvKind::P2p, 0.0, 1.0, 8.0);
+        t.makespan = 1.0;
+        let g = render(&t, 40);
+        assert!(g.contains("gpu0 s0 |"));
+        assert!(g.contains("gpu0 s1 |"));
+        assert!(g.contains("gpu0 h2d"));
+        assert!(g.contains("gpu1 p2p"));
+        assert!(g.contains('#'));
+        assert!(g.contains('>'));
+        assert!(g.contains('='));
+        // first half of s0 painted, second half idle
+        let s0 = g.lines().find(|l| l.starts_with("gpu0 s0")).unwrap();
+        assert!(s0.contains("#."));
+    }
+
+    #[test]
+    fn empty_trace() {
+        assert_eq!(render(&Trace::new(), 10), "(empty trace)\n");
+    }
+}

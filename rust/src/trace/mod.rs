@@ -1,0 +1,11 @@
+//! Trace and metrics (system S16): everything the paper's evaluation
+//! section measures — per-device COMPT/COMM/OTHER (Fig. 8), comm volume
+//! split H↔D vs P2P (Table V), DMA throughput (Table IV), load-balance
+//! gaps, and ASCII gantt snapshots (Fig. 1).
+
+pub mod events;
+pub mod gantt;
+pub mod profile;
+
+pub use events::{EvKind, Event, Trace};
+pub use profile::{all_profiles, balance_gap, comm_volumes, device_profile, CommVolume, DeviceProfile};

@@ -1,0 +1,133 @@
+//! Per-device execution profile: the paper's Fig. 8 dissection into
+//! COMPT (kernel time), COMM (unoverlapped communication) and OTHER
+//! (sync latency + idle gaps between launches), plus the Table V
+//! communication-volume split and the Fig. 8 load-balance gap metric.
+
+use super::events::{uncovered_len, union_len, EvKind, Trace};
+
+/// The Fig. 8 triple for one device, in seconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DeviceProfile {
+    pub compt: f64,
+    pub comm: f64,
+    pub other: f64,
+    /// Device elapsed = COMPT + COMM + OTHER (first to last activity,
+    /// extended to the run makespan — idle tails are OTHER).
+    pub elapsed: f64,
+}
+
+/// Table V row for one device, in bytes.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CommVolume {
+    /// Bidirectional host↔device bytes (the table's black figures).
+    pub hd_bytes: f64,
+    /// P2P bytes received (the table's red figures).
+    pub p2p_bytes: f64,
+}
+
+/// Profile of one device from its trace events.
+pub fn device_profile(trace: &Trace, dev: usize) -> DeviceProfile {
+    let mut kern: Vec<(f64, f64)> = Vec::new();
+    let mut comm: Vec<(f64, f64)> = Vec::new();
+    for e in trace.of_device(dev) {
+        match e.kind {
+            EvKind::Kernel => kern.push((e.start, e.end)),
+            _ => comm.push((e.start, e.end)),
+        }
+    }
+    if kern.is_empty() && comm.is_empty() {
+        return DeviceProfile { elapsed: trace.makespan, other: trace.makespan, ..Default::default() };
+    }
+    let compt = union_len(&mut kern.clone());
+    let comm_unoverlapped = uncovered_len(&mut comm, &mut kern);
+    let elapsed = trace.makespan;
+    DeviceProfile {
+        compt,
+        comm: comm_unoverlapped,
+        other: (elapsed - compt - comm_unoverlapped).max(0.0),
+        elapsed,
+    }
+}
+
+/// Profiles for every device.
+pub fn all_profiles(trace: &Trace) -> Vec<DeviceProfile> {
+    (0..trace.n_devices()).map(|d| device_profile(trace, d)).collect()
+}
+
+/// Table V communication volumes for every device.
+pub fn comm_volumes(trace: &Trace) -> Vec<CommVolume> {
+    (0..trace.n_devices())
+        .map(|d| CommVolume {
+            hd_bytes: trace.bytes(d, EvKind::H2d) + trace.bytes(d, EvKind::D2h),
+            p2p_bytes: trace.bytes(d, EvKind::P2p),
+        })
+        .collect()
+}
+
+/// The paper's load-balance gap: elapsed-time difference between the
+/// busiest and least-busy device (using COMPT+COMM as "busy").
+pub fn balance_gap(trace: &Trace) -> f64 {
+    let profs = all_profiles(trace);
+    if profs.is_empty() {
+        return 0.0;
+    }
+    let busy: Vec<f64> = profs.iter().map(|p| p.compt + p.comm).collect();
+    let max = busy.iter().cloned().fold(f64::MIN, f64::max);
+    let min = busy.iter().cloned().fold(f64::MAX, f64::min);
+    (max - min).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_trace() -> Trace {
+        let mut t = Trace::new();
+        // dev0: kernel [0,2), transfer [1,3) -> 1s overlapped, 1s not
+        t.record(0, 0, EvKind::Kernel, 0.0, 2.0, 1e9);
+        t.record(0, 1, EvKind::H2d, 1.0, 3.0, 8e6);
+        // dev1: only transfers
+        t.record(1, 0, EvKind::P2p, 0.0, 1.0, 4e6);
+        t.makespan = 4.0;
+        t
+    }
+
+    #[test]
+    fn fig8_classification() {
+        let t = mk_trace();
+        let p0 = device_profile(&t, 0);
+        assert_eq!(p0.compt, 2.0);
+        assert_eq!(p0.comm, 1.0);
+        assert_eq!(p0.other, 1.0); // 4.0 makespan - 3.0 busy
+        assert_eq!(p0.elapsed, 4.0);
+        let p1 = device_profile(&t, 1);
+        assert_eq!(p1.compt, 0.0);
+        assert_eq!(p1.comm, 1.0);
+        assert_eq!(p1.other, 3.0);
+    }
+
+    #[test]
+    fn table5_volumes() {
+        let t = mk_trace();
+        let v = comm_volumes(&t);
+        assert_eq!(v[0].hd_bytes, 8e6);
+        assert_eq!(v[0].p2p_bytes, 0.0);
+        assert_eq!(v[1].p2p_bytes, 4e6);
+    }
+
+    #[test]
+    fn gap_metric() {
+        let t = mk_trace();
+        // busy: dev0 = 3.0, dev1 = 1.0
+        assert_eq!(balance_gap(&t), 2.0);
+    }
+
+    #[test]
+    fn empty_device_is_all_other() {
+        let mut t = mk_trace();
+        t.record(2, 0, EvKind::Kernel, 0.0, 0.0, 0.0); // zero-length
+        let p = device_profile(&t, 2);
+        assert_eq!(p.compt, 0.0);
+        assert!(p.other > 3.9);
+    }
+}

@@ -1,0 +1,58 @@
+//! A tiny `log`-facade backend writing to stderr.
+//!
+//! Controlled by `BLASX_LOG` (error|warn|info|debug|trace, default warn).
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::Once;
+
+struct StderrLogger {
+    level: Level,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!(
+                "[blasx {:5} {}] {}",
+                record.level(),
+                record.target(),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+static INIT: Once = Once::new();
+
+/// Install the logger (idempotent). Reads `BLASX_LOG` for the level.
+pub fn init() {
+    INIT.call_once(|| {
+        let level = match std::env::var("BLASX_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("info") => Level::Info,
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            Ok("warn") | _ => Level::Warn,
+        };
+        let logger = Box::leak(Box::new(StderrLogger { level }));
+        if log::set_logger(logger).is_ok() {
+            log::set_max_level(LevelFilter::Trace.min(level.to_level_filter()));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::warn!("logger smoke test");
+    }
+}

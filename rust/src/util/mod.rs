@@ -1,0 +1,11 @@
+//! Shared utilities: PRNG, statistics, JSON, logging, property testing.
+//!
+//! These exist because the offline crate set lacks `rand`, `serde`,
+//! `criterion` and `proptest`; each submodule is a deliberately small,
+//! fully tested replacement for the subset BLASX needs.
+
+pub mod json;
+pub mod logger;
+pub mod prng;
+pub mod prop;
+pub mod stats;

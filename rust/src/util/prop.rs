@@ -1,0 +1,110 @@
+//! Property-based testing helper (proptest is unreachable offline).
+//!
+//! `Cases` drives a closure over many seeded-random inputs; on failure it
+//! reports the case seed so the exact input can be replayed by setting
+//! `BLASX_PROP_SEED`. It deliberately mirrors the parts of proptest that
+//! the coordinator invariants need: lots of random cases, deterministic
+//! replay, and readable failure output. (No shrinking — inputs here are
+//! small configuration tuples, so the failing case is directly readable.)
+
+use crate::util::prng::Prng;
+
+/// A property-test driver.
+pub struct Cases {
+    /// Number of random cases to run.
+    pub n: usize,
+    /// Base seed; each case uses `splitmix(base, index)`.
+    pub seed: u64,
+}
+
+impl Default for Cases {
+    fn default() -> Self {
+        Cases { n: 256, seed: 0xB1A5_F00D }
+    }
+}
+
+impl Cases {
+    pub fn new(n: usize) -> Self {
+        Cases { n, ..Default::default() }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Run `body` for every case. `body` receives a fresh deterministic
+    /// PRNG per case and returns `Err(msg)` to fail the property.
+    ///
+    /// Panics (test-failure style) on the first failing case, printing
+    /// the case index and replay seed.
+    pub fn run<F>(&self, name: &str, mut body: F)
+    where
+        F: FnMut(&mut Prng) -> Result<(), String>,
+    {
+        // Replay support: BLASX_PROP_SEED=<case_seed> runs one case.
+        if let Ok(s) = std::env::var("BLASX_PROP_SEED") {
+            if let Ok(seed) = s.parse::<u64>() {
+                let mut rng = Prng::new(seed);
+                if let Err(msg) = body(&mut rng) {
+                    panic!("property `{name}` failed on replay seed {seed}: {msg}");
+                }
+                return;
+            }
+        }
+        for i in 0..self.n {
+            let case_seed = self.seed.wrapping_add((i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let mut rng = Prng::new(case_seed);
+            if let Err(msg) = body(&mut rng) {
+                panic!(
+                    "property `{name}` failed on case {i}/{} (replay: BLASX_PROP_SEED={case_seed}): {msg}",
+                    self.n
+                );
+            }
+        }
+    }
+}
+
+/// Assert two slices are element-wise close; returns Err with the first
+/// offending index for use inside properties.
+pub fn check_close(a: &[f64], b: &[f64], tol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let scale = x.abs().max(y.abs()).max(1.0);
+        if (x - y).abs() > tol * scale {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        Cases::new(50).run("trivial", |rng| {
+            count += 1;
+            let x = rng.next_f64();
+            if (0.0..1.0).contains(&x) { Ok(()) } else { Err("out of range".into()) }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always_fails` failed")]
+    fn failing_property_panics_with_seed() {
+        Cases::new(4).run("always_fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn check_close_detects_divergence() {
+        assert!(check_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9).is_ok());
+        assert!(check_close(&[1.0], &[1.1], 1e-9).is_err());
+        assert!(check_close(&[1.0], &[1.0, 2.0], 1e-9).is_err());
+    }
+}

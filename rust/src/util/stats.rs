@@ -1,0 +1,163 @@
+//! Small statistics helpers used by the bench harness and metrics.
+
+/// Summary statistics over a sample of f64 values.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    /// Compute summary statistics. Returns a zeroed summary for an empty
+    /// sample (callers treat n == 0 as "no data").
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0, median: 0.0, p95: 0.0 };
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            median: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (pct / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+/// Geometric mean of positive values; 0.0 for empty input.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let logsum: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
+    (logsum / xs.len() as f64).exp()
+}
+
+/// GFLOP/s given flop count and elapsed seconds.
+pub fn gflops(flops: f64, secs: f64) -> f64 {
+    if secs <= 0.0 { 0.0 } else { flops / secs / 1e9 }
+}
+
+/// Parallel efficiency: t1 / (g * tg). Paper Table III's metric.
+pub fn parallel_efficiency(t1: f64, tg: f64, g: usize) -> f64 {
+    if tg <= 0.0 || g == 0 { 0.0 } else { t1 / (g as f64 * tg) }
+}
+
+/// Format a byte count with binary units.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 { format!("{b} B") } else { format!("{v:.2} {}", UNITS[u]) }
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        // sample std of 1..5 = sqrt(2.5)
+        assert!((s.std - 2.5f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty_and_single() {
+        assert_eq!(Summary::of(&[]).n, 0);
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.n, 1);
+        assert_eq!(s.mean, 7.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p95, 7.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile_sorted(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile_sorted(&xs, 95.0) - 9.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_of_powers() {
+        let g = geomean(&[1.0, 100.0]);
+        assert!((g - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gflops_sane() {
+        // 2e9 flops in 1 second = 2 GFLOP/s
+        assert!((gflops(2e9, 1.0) - 2.0).abs() < 1e-12);
+        assert_eq!(gflops(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn efficiency_linear_speedup_is_one() {
+        assert!((parallel_efficiency(9.0, 3.0, 3) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert!(fmt_bytes(8 * 1024 * 1024).contains("MiB"));
+        assert!(fmt_secs(0.5e-3).contains("µs") || fmt_secs(0.5e-3).contains("ms"));
+        assert!(fmt_secs(2.0).contains("s"));
+    }
+}

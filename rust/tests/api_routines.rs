@@ -1,0 +1,160 @@
+//! API-level correctness grid: every public routine through the full
+//! runtime (taskizer → scheduler → caches → kernels → write-back)
+//! against the single-threaded reference, across the parameter space
+//! (uplo/side/trans/diag) and awkward shapes.
+
+use blasx::api::types::{Diag, Side, Trans, Uplo};
+use blasx::api::{self, Context};
+use blasx::coordinator::RunConfig;
+use blasx::hostblas;
+use blasx::util::prng::Prng;
+
+fn ctx() -> Context {
+    Context { n_devices: 2, arena_bytes: 4 << 20, cfg: RunConfig { t: 32, ..Default::default() } }
+}
+
+fn rand(p: &mut Prng, n: usize) -> Vec<f64> {
+    let mut v = vec![0.0; n];
+    p.fill_f64(&mut v, -1.0, 1.0);
+    v
+}
+
+fn diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+#[test]
+fn api_syrk_grid() {
+    let ctx = ctx();
+    let (n, k) = (70, 45);
+    for uplo in [Uplo::Upper, Uplo::Lower] {
+        for trans in [Trans::No, Trans::Yes] {
+            let mut p = Prng::new(31);
+            let (ar, ac) = if trans == Trans::No { (n, k) } else { (k, n) };
+            let a = rand(&mut p, ar * ac);
+            let mut c = rand(&mut p, n * n);
+            let mut want = c.clone();
+            api::syrk(&ctx, uplo, trans, n, k, 0.9, &a, ar, -0.4, &mut c, n).unwrap();
+            hostblas::syrk_ref(uplo, trans, n, k, 0.9, &a, ar, -0.4, &mut want, n);
+            assert!(diff(&c, &want) < 1e-10, "syrk {uplo:?} {trans:?}: {}", diff(&c, &want));
+        }
+    }
+}
+
+#[test]
+fn api_syr2k_grid() {
+    let ctx = ctx();
+    let (n, k) = (64, 40);
+    for uplo in [Uplo::Upper, Uplo::Lower] {
+        for trans in [Trans::No, Trans::Yes] {
+            let mut p = Prng::new(32);
+            let (ar, ac) = if trans == Trans::No { (n, k) } else { (k, n) };
+            let a = rand(&mut p, ar * ac);
+            let b = rand(&mut p, ar * ac);
+            let mut c = rand(&mut p, n * n);
+            let mut want = c.clone();
+            api::syr2k(&ctx, uplo, trans, n, k, 1.3, &a, ar, &b, ar, 0.7, &mut c, n).unwrap();
+            hostblas::syr2k_ref(uplo, trans, n, k, 1.3, &a, ar, &b, ar, 0.7, &mut want, n);
+            assert!(diff(&c, &want) < 1e-10, "syr2k {uplo:?} {trans:?}");
+        }
+    }
+}
+
+#[test]
+fn api_symm_grid() {
+    let ctx = ctx();
+    let (m, n) = (50, 66);
+    for side in [Side::Left, Side::Right] {
+        for uplo in [Uplo::Upper, Uplo::Lower] {
+            let mut p = Prng::new(33);
+            let na = if side == Side::Left { m } else { n };
+            let a = rand(&mut p, na * na);
+            let b = rand(&mut p, m * n);
+            let mut c = rand(&mut p, m * n);
+            let mut want = c.clone();
+            api::symm(&ctx, side, uplo, m, n, -1.1, &a, na, &b, m, 0.2, &mut c, m).unwrap();
+            hostblas::symm_ref(side, uplo, m, n, -1.1, &a, na, &b, m, 0.2, &mut want, m);
+            assert!(diff(&c, &want) < 1e-10, "symm {side:?} {uplo:?}");
+        }
+    }
+}
+
+#[test]
+fn api_trmm_trsm_grid() {
+    let ctx = ctx();
+    let (m, n) = (64, 48);
+    for side in [Side::Left, Side::Right] {
+        for uplo in [Uplo::Upper, Uplo::Lower] {
+            for ta in [Trans::No, Trans::Yes] {
+                for dg in [Diag::NonUnit, Diag::Unit] {
+                    let mut p = Prng::new(34);
+                    let na = if side == Side::Left { m } else { n };
+                    let mut a = rand(&mut p, na * na);
+                    for x in a.iter_mut() {
+                        *x *= 0.3 / (na as f64).sqrt();
+                    }
+                    for i in 0..na {
+                        a[i * na + i] = 1.5;
+                    }
+                    // TRMM
+                    let mut b = rand(&mut p, m * n);
+                    let mut want = b.clone();
+                    api::trmm(&ctx, side, uplo, ta, dg, m, n, 0.8, &a, na, &mut b, m).unwrap();
+                    hostblas::trmm_ref(side, uplo, ta, dg, m, n, 0.8, &a, na, &mut want, m);
+                    assert!(diff(&b, &want) < 1e-10, "trmm {side:?} {uplo:?} {ta:?} {dg:?}");
+                    // TRSM
+                    let mut b2 = rand(&mut p, m * n);
+                    let mut want2 = b2.clone();
+                    api::trsm(&ctx, side, uplo, ta, dg, m, n, 1.2, &a, na, &mut b2, m).unwrap();
+                    hostblas::trsm_ref(side, uplo, ta, dg, m, n, 1.2, &a, na, &mut want2, m);
+                    assert!(diff(&b2, &want2) < 1e-9, "trsm {side:?} {uplo:?} {ta:?} {dg:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn api_degenerate_sizes() {
+    let ctx = ctx();
+    // 1x1, smaller than a tile, exactly one tile
+    for n in [1usize, 7, 32] {
+        let mut p = Prng::new(35);
+        let a = rand(&mut p, n * n);
+        let b = rand(&mut p, n * n);
+        let mut c = rand(&mut p, n * n);
+        let mut want = c.clone();
+        api::dgemm(&ctx, Trans::No, Trans::No, n, n, n, 2.0, &a, n, &b, n, 3.0, &mut c, n).unwrap();
+        hostblas::gemm_blocked(Trans::No, Trans::No, n, n, n, 2.0, &a, n, &b, n, 3.0, &mut want, n);
+        assert!(diff(&c, &want) < 1e-10, "n={n}");
+    }
+}
+
+#[test]
+fn api_alpha_zero_scales_only() {
+    let ctx = ctx();
+    let n = 40;
+    let mut p = Prng::new(36);
+    let a = rand(&mut p, n * n);
+    let b = rand(&mut p, n * n);
+    let mut c = rand(&mut p, n * n);
+    let want: Vec<f64> = c.iter().map(|x| 0.5 * x).collect();
+    api::dgemm(&ctx, Trans::No, Trans::No, n, n, n, 0.0, &a, n, &b, n, 0.5, &mut c, n).unwrap();
+    assert!(diff(&c, &want) < 1e-15);
+}
+
+#[test]
+fn api_beta_zero_ignores_garbage_c() {
+    let ctx = ctx();
+    let n = 48;
+    let mut p = Prng::new(37);
+    let a = rand(&mut p, n * n);
+    let b = rand(&mut p, n * n);
+    // C full of NaN must be overwritten cleanly when beta == 0
+    let mut c = vec![f64::NAN; n * n];
+    let mut want = vec![0.0; n * n];
+    api::dgemm(&ctx, Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut c, n).unwrap();
+    hostblas::gemm_blocked(Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut want, n);
+    assert!(c.iter().all(|x| x.is_finite()), "NaN leaked through beta=0");
+    assert!(diff(&c, &want) < 1e-10);
+}

@@ -1,0 +1,91 @@
+//! Cross-language contract: every tile-op variant the Rust taskizers can
+//! emit must exist in the AOT artifact set (name, signature and file),
+//! for every dtype/tile the manifest advertises. This is the seam
+//! between `TileOp::kernel_name()` (Rust) and `model.REGISTRY` (Python)
+//! — a silent rename on either side fails here, not at 2am in a run.
+
+use blasx::api::types::{Diag, Side, Trans, Uplo};
+use blasx::api::Dtype;
+use blasx::runtime::{ArgSlot, ArtifactStore};
+use blasx::task::TileOp;
+
+fn all_tile_ops() -> Vec<TileOp> {
+    let mut ops = Vec::new();
+    for ta in [Trans::No, Trans::Yes] {
+        for tb in [Trans::No, Trans::Yes] {
+            ops.push(TileOp::Gemm { ta, tb });
+        }
+    }
+    for uplo in [Uplo::Upper, Uplo::Lower] {
+        for trans in [Trans::No, Trans::Yes] {
+            ops.push(TileOp::SyrkDiag { uplo, trans });
+            ops.push(TileOp::Syr2kDiag { uplo, trans });
+        }
+    }
+    for side in [Side::Left, Side::Right] {
+        for uplo in [Uplo::Upper, Uplo::Lower] {
+            for ta in [Trans::No, Trans::Yes] {
+                for diag in [Diag::NonUnit, Diag::Unit] {
+                    ops.push(TileOp::TrmmDiag { side, uplo, ta, diag });
+                    ops.push(TileOp::TrsmDiag { side, uplo, ta, diag });
+                }
+            }
+            ops.push(TileOp::SymmDiag { side, uplo });
+        }
+    }
+    ops.push(TileOp::Scal);
+    ops
+}
+
+#[test]
+fn every_tile_op_has_an_artifact() {
+    let store = ArtifactStore::open_default().expect("run `make artifacts`");
+    let ops = all_tile_ops();
+    assert_eq!(ops.len(), 49, "variant inventory drifted");
+    for op in &ops {
+        let name = op.kernel_name();
+        let sig = store
+            .signature(&name)
+            .unwrap_or_else(|e| panic!("{name}: missing from manifest: {e}"));
+        // tile slots must precede scalars, C is always present
+        assert!(sig.contains(&ArgSlot::TileC), "{name}: no C slot");
+        for (dtype, t) in
+            [(Dtype::F64, 64), (Dtype::F64, 256), (Dtype::F32, 64), (Dtype::F32, 256)]
+        {
+            assert!(
+                store.available(&name, dtype, t),
+                "{name}: artifact file missing for {dtype:?} T={t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn signatures_match_op_arity() {
+    let store = ArtifactStore::open_default().expect("run `make artifacts`");
+    for op in all_tile_ops() {
+        let name = op.kernel_name();
+        let sig = store.signature(&name).unwrap();
+        let has_a = sig.contains(&ArgSlot::TileA);
+        let has_b = sig.contains(&ArgSlot::TileB);
+        match op {
+            TileOp::Gemm { .. } | TileOp::Syr2kDiag { .. } | TileOp::SymmDiag { .. } => {
+                assert!(has_a && has_b, "{name}: needs a and b");
+            }
+            TileOp::SyrkDiag { .. } | TileOp::TrmmDiag { .. } | TileOp::TrsmDiag { .. } => {
+                assert!(has_a && !has_b, "{name}: needs a only");
+            }
+            TileOp::Scal => assert!(!has_a && !has_b, "{name}: takes only c"),
+        }
+        // alpha present except for scal; beta absent for trmm/trsm/scal
+        let has_alpha = sig.contains(&ArgSlot::Alpha);
+        let has_beta = sig.contains(&ArgSlot::Beta);
+        match op {
+            TileOp::Scal => assert!(!has_alpha && has_beta, "{name}"),
+            TileOp::TrmmDiag { .. } | TileOp::TrsmDiag { .. } => {
+                assert!(has_alpha && !has_beta, "{name}")
+            }
+            _ => assert!(has_alpha && has_beta, "{name}"),
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Property tests on the two-level tile cache and the FastHeap: random
+//! operation sequences must preserve every structural invariant (list ↔
+//! map consistency, directory ↔ ALRU agreement, heap non-overlap and
+//! full coalescing).
+
+use blasx::cache::{Source, TileCacheSet};
+use blasx::mem::{AllocStrategy, FastHeap};
+use blasx::tile::{MatId, TileKey};
+use blasx::util::prop::Cases;
+
+fn key(i: usize) -> TileKey {
+    TileKey { addr: 0x1000 + i * 64, mat: MatId::A, ti: i, tj: 0 }
+}
+
+#[test]
+fn tile_cache_random_ops_hold_invariants() {
+    Cases::new(120).run("tile_cache_ops", |rng| {
+        let n_dev = rng.range(1, 5);
+        // all-peers topology stresses the L2 path hardest
+        let peers: Vec<Vec<usize>> =
+            (0..n_dev).map(|d| (0..n_dev).filter(|&x| x != d).collect()).collect();
+        let cap = 64 * (2 + rng.below(6)); // 2..7 blocks of 64 bytes
+        let mut set = TileCacheSet::new(&vec![cap; n_dev], peers, AllocStrategy::FastHeap);
+        let n_keys = rng.range(3, 12);
+        // readers[dev][key] = outstanding acquire count we must release
+        let mut readers = vec![vec![0u32; n_keys]; n_dev];
+
+        for _ in 0..400 {
+            let d = rng.below(n_dev);
+            let k = rng.below(n_keys);
+            match rng.below(4) {
+                0 | 1 => {
+                    // acquire (reads)
+                    if let Some(acq) = set.acquire(d, key(k), 64) {
+                        readers[d][k] += 1;
+                        if let Source::Peer { src, .. } = acq.source {
+                            if src == d {
+                                return Err("self peer".into());
+                            }
+                        }
+                    }
+                }
+                2 => {
+                    // release one outstanding reader
+                    if readers[d][k] > 0 {
+                        set.release(d, &key(k));
+                        readers[d][k] -= 1;
+                    }
+                }
+                _ => {
+                    // write-back invalidation (M -> I)
+                    set.writeback(d, &key(k));
+                    // outstanding readers remain legal (doomed blocks)
+                }
+            }
+            set.validate().map_err(|e| format!("validate: {e}"))?;
+            // directory holders must actually be resident or doomed
+            for kk in 0..n_keys {
+                for &h in set.dir.holders(&key(kk)) {
+                    if h >= n_dev {
+                        return Err(format!("holder {h} out of range"));
+                    }
+                }
+            }
+        }
+        // drain all readers; caches must stay consistent
+        for d in 0..n_dev {
+            for k in 0..n_keys {
+                for _ in 0..readers[d][k] {
+                    set.release(d, &key(k));
+                }
+            }
+        }
+        set.validate().map_err(|e| format!("final validate: {e}"))
+    });
+}
+
+#[test]
+fn locality_scores_track_directory() {
+    Cases::new(60).run("locality_scores", |rng| {
+        let n_dev = 3;
+        let peers = vec![vec![1, 2], vec![0, 2], vec![0, 1]];
+        let mut set = TileCacheSet::new(&vec![1 << 12; n_dev], peers, AllocStrategy::FastHeap);
+        let k = key(rng.below(4));
+        let d = rng.below(n_dev);
+        assert_eq!(set.locality_score(d, &k), 0);
+        set.acquire(d, k, 64).ok_or("acquire failed")?;
+        if set.locality_score(d, &k) != 2 {
+            return Err("own copy must score 2".into());
+        }
+        let other = (d + 1) % n_dev;
+        if set.locality_score(other, &k) != 1 {
+            return Err("peer copy must score 1".into());
+        }
+        set.writeback(d, &k);
+        if set.locality_score(other, &k) != 0 {
+            return Err("invalidated copy must score 0".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fast_heap_random_alloc_free_never_overlaps() {
+    Cases::new(100).run("fast_heap", |rng| {
+        let cap = 1 << 14;
+        let mut heap = FastHeap::new(cap);
+        let mut live: Vec<(usize, usize)> = Vec::new(); // (offset, len)
+        for _ in 0..300 {
+            if rng.chance(0.55) {
+                let len = 16 << rng.below(6); // 16..512
+                if let Some(off) = heap.alloc(len) {
+                    // no overlap with any live block
+                    for &(o, l) in &live {
+                        if off < o + l && o < off + len {
+                            return Err(format!("overlap: [{off},{len}] vs [{o},{l}]"));
+                        }
+                    }
+                    live.push((off, len));
+                }
+            } else if !live.is_empty() {
+                let i = rng.below(live.len());
+                let (off, _) = live.swap_remove(i);
+                heap.free(off);
+            }
+            heap.validate().map_err(|e| format!("validate: {e}"))?;
+        }
+        // free everything: heap must fully coalesce
+        for (off, _) in live.drain(..) {
+            heap.free(off);
+        }
+        if heap.in_use() != 0 {
+            return Err(format!("leak: {} bytes in use", heap.in_use()));
+        }
+        if heap.largest_free() != cap {
+            return Err(format!("fragmentation left: largest {} != {cap}", heap.largest_free()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn real_engine_random_gemm_property() {
+    use blasx::api::types::Trans;
+    use blasx::coordinator::real_engine::{run_real, Mats};
+    use blasx::coordinator::RunConfig;
+    use blasx::hostblas;
+    use blasx::task::{taskize_gemm, GemmDesc};
+    use blasx::tile::HostMat;
+
+    Cases::new(20).run("real_gemm", |rng| {
+        let t = 32;
+        let m = rng.range(16, 100);
+        let n = rng.range(16, 100);
+        let k = rng.range(16, 100);
+        let ta = if rng.chance(0.5) { Trans::No } else { Trans::Yes };
+        let tb = if rng.chance(0.5) { Trans::No } else { Trans::Yes };
+        let alpha = rng.range_f64(-2.0, 2.0);
+        let beta = rng.range_f64(-2.0, 2.0);
+        let (ar, ac) = if ta == Trans::No { (m, k) } else { (k, m) };
+        let (br, bc) = if tb == Trans::No { (k, n) } else { (n, k) };
+        let mut a = vec![0.0; ar * ac];
+        let mut b = vec![0.0; br * bc];
+        let mut c = vec![0.0; m * n];
+        rng.fill_f64(&mut a, -1.0, 1.0);
+        rng.fill_f64(&mut b, -1.0, 1.0);
+        rng.fill_f64(&mut c, -1.0, 1.0);
+        let mut want = c.clone();
+
+        let d = GemmDesc { ta, tb, m, n, k, alpha, beta, t };
+        let ts = taskize_gemm(&d);
+        let am = HostMat::new_ro(&a, ar, ac, ar, t, MatId::A);
+        let bm = HostMat::new_ro(&b, br, bc, br, t, MatId::B);
+        let cm = HostMat::new(&mut c, m, n, m, t, MatId::C);
+        let cfg = RunConfig { t, ..Default::default() };
+        let n_dev = rng.range(1, 4);
+        run_real(&cfg, &ts, Mats { a: &am, b: Some(&bm), c: &cm }, n_dev, 16 * t * t * 8)
+            .map_err(|e| e.to_string())?;
+
+        hostblas::gemm_blocked(ta, tb, m, n, k, alpha, &a, ar, &b, br, beta, &mut want, m);
+        blasx::util::prop::check_close(&c, &want, 1e-9)
+    });
+}

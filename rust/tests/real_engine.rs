@@ -1,0 +1,285 @@
+//! Integration: the threaded real engine computes correct numerics for
+//! every routine, under cache pressure, stealing, chains, and both
+//! kernel backends.
+
+use blasx::api::types::{Diag, Side, Trans, Uplo};
+use blasx::coordinator::real_engine::{run_real, Mats};
+use blasx::coordinator::{Backend, RunConfig};
+use blasx::hostblas;
+use blasx::task::{
+    taskize_gemm, taskize_symm, taskize_syr2k, taskize_syrk, taskize_trmm, taskize_trsm,
+    GemmDesc, SymmDesc, SyrkDesc, TriDesc,
+};
+use blasx::tile::{HostMat, MatId};
+use blasx::util::prng::Prng;
+
+const T: usize = 32;
+
+fn rand_mat(p: &mut Prng, rows: usize, cols: usize) -> Vec<f64> {
+    let mut v = vec![0.0; rows * cols];
+    p.fill_f64(&mut v, -1.0, 1.0);
+    v
+}
+
+fn max_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+fn cfg(n_tiles_arena: usize) -> (RunConfig, usize) {
+    let cfg = RunConfig { t: T, ..Default::default() };
+    (cfg, n_tiles_arena * T * T * 8)
+}
+
+#[test]
+fn gemm_matches_reference_various_shapes() {
+    for (m, n, k) in [(96, 96, 96), (100, 70, 50), (33, 65, 97), (32, 32, 32)] {
+        let mut p = Prng::new(1);
+        let a = rand_mat(&mut p, m, k);
+        let b = rand_mat(&mut p, k, n);
+        let mut c = rand_mat(&mut p, m, n);
+        let mut want = c.clone();
+
+        let d = GemmDesc { ta: Trans::No, tb: Trans::No, m, n, k, alpha: 1.3, beta: -0.4, t: T };
+        let ts = taskize_gemm(&d);
+        let am = HostMat::new_ro(&a, m, k, m, T, MatId::A);
+        let bm = HostMat::new_ro(&b, k, n, k, T, MatId::B);
+        let cm = HostMat::new(&mut c, m, n, m, T, MatId::C);
+        let (cfg, arena) = cfg(16);
+        run_real(&cfg, &ts, Mats { a: &am, b: Some(&bm), c: &cm }, 2, arena).unwrap();
+
+        hostblas::gemm_blocked(Trans::No, Trans::No, m, n, k, 1.3, &a, m, &b, k, -0.4, &mut want, m);
+        assert!(max_diff(&c, &want) < 1e-10, "({m},{n},{k}): {}", max_diff(&c, &want));
+    }
+}
+
+#[test]
+fn gemm_transposes_match() {
+    let (m, n, k) = (70, 60, 50);
+    for (ta, tb) in [(Trans::Yes, Trans::No), (Trans::No, Trans::Yes), (Trans::Yes, Trans::Yes)] {
+        let mut p = Prng::new(2);
+        let (ar, ac) = if ta == Trans::Yes { (k, m) } else { (m, k) };
+        let (br, bc) = if tb == Trans::Yes { (n, k) } else { (k, n) };
+        let a = rand_mat(&mut p, ar, ac);
+        let b = rand_mat(&mut p, br, bc);
+        let mut c = rand_mat(&mut p, m, n);
+        let mut want = c.clone();
+
+        let d = GemmDesc { ta, tb, m, n, k, alpha: 0.7, beta: 0.2, t: T };
+        let ts = taskize_gemm(&d);
+        let am = HostMat::new_ro(&a, ar, ac, ar, T, MatId::A);
+        let bm = HostMat::new_ro(&b, br, bc, br, T, MatId::B);
+        let cm = HostMat::new(&mut c, m, n, m, T, MatId::C);
+        let (cfg, arena) = cfg(16);
+        run_real(&cfg, &ts, Mats { a: &am, b: Some(&bm), c: &cm }, 2, arena).unwrap();
+
+        hostblas::gemm_blocked(ta, tb, m, n, k, 0.7, &a, ar, &b, br, 0.2, &mut want, m);
+        assert!(max_diff(&c, &want) < 1e-10, "({ta:?},{tb:?}): {}", max_diff(&c, &want));
+    }
+}
+
+#[test]
+fn syrk_syr2k_match_reference() {
+    let (n, k) = (80, 60);
+    for uplo in [Uplo::Upper, Uplo::Lower] {
+        for trans in [Trans::No, Trans::Yes] {
+            let mut p = Prng::new(3);
+            let (ar, ac) = if trans == Trans::Yes { (k, n) } else { (n, k) };
+            let a = rand_mat(&mut p, ar, ac);
+            let b = rand_mat(&mut p, ar, ac);
+            let mut c = rand_mat(&mut p, n, n);
+            let mut want = c.clone();
+
+            // SYRK
+            let d = SyrkDesc { uplo, trans, n, k, alpha: 1.1, beta: 0.6, t: T };
+            let ts = taskize_syrk(&d);
+            let am = HostMat::new_ro(&a, ar, ac, ar, T, MatId::A);
+            let cm = HostMat::new(&mut c, n, n, n, T, MatId::C);
+            let (cfg, arena) = cfg(16);
+            run_real(&cfg, &ts, Mats { a: &am, b: None, c: &cm }, 2, arena).unwrap();
+            hostblas::syrk_ref(uplo, trans, n, k, 1.1, &a, ar, 0.6, &mut want, n);
+            assert!(max_diff(&c, &want) < 1e-10, "syrk {uplo:?} {trans:?}");
+
+            // SYR2K
+            let mut c2 = rand_mat(&mut p, n, n);
+            let mut want2 = c2.clone();
+            let ts2 = taskize_syr2k(&d);
+            let bm = HostMat::new_ro(&b, ar, ac, ar, T, MatId::B);
+            let cm2 = HostMat::new(&mut c2, n, n, n, T, MatId::C);
+            run_real(&cfg, &ts2, Mats { a: &am, b: Some(&bm), c: &cm2 }, 2, arena).unwrap();
+            hostblas::syr2k_ref(uplo, trans, n, k, 1.1, &a, ar, &b, ar, 0.6, &mut want2, n);
+            assert!(max_diff(&c2, &want2) < 1e-10, "syr2k {uplo:?} {trans:?}");
+        }
+    }
+}
+
+#[test]
+fn symm_matches_reference() {
+    let (m, n) = (70, 90);
+    for side in [Side::Left, Side::Right] {
+        for uplo in [Uplo::Upper, Uplo::Lower] {
+            let mut p = Prng::new(4);
+            let na = if side == Side::Left { m } else { n };
+            let a = rand_mat(&mut p, na, na);
+            let b = rand_mat(&mut p, m, n);
+            let mut c = rand_mat(&mut p, m, n);
+            let mut want = c.clone();
+
+            let d = SymmDesc { side, uplo, m, n, alpha: -0.8, beta: 0.3, t: T };
+            let ts = taskize_symm(&d);
+            let am = HostMat::new_ro(&a, na, na, na, T, MatId::A);
+            let bm = HostMat::new_ro(&b, m, n, m, T, MatId::B);
+            let cm = HostMat::new(&mut c, m, n, m, T, MatId::C);
+            let (cfg, arena) = cfg(16);
+            run_real(&cfg, &ts, Mats { a: &am, b: Some(&bm), c: &cm }, 2, arena).unwrap();
+
+            hostblas::symm_ref(side, uplo, m, n, -0.8, &a, na, &b, m, 0.3, &mut want, m);
+            assert!(max_diff(&c, &want) < 1e-10, "symm {side:?} {uplo:?}");
+        }
+    }
+}
+
+#[test]
+fn trmm_trsm_chains_match_reference() {
+    let (m, n) = (96, 64);
+    for side in [Side::Left, Side::Right] {
+        for uplo in [Uplo::Upper, Uplo::Lower] {
+            for ta in [Trans::No, Trans::Yes] {
+                let mut p = Prng::new(5);
+                let na = if side == Side::Left { m } else { n };
+                // well-conditioned triangular operand
+                let mut a = rand_mat(&mut p, na, na);
+                for x in a.iter_mut() {
+                    *x *= 0.5 / (na as f64).sqrt();
+                }
+                for i in 0..na {
+                    a[i * na + i] = 2.0;
+                }
+
+                // TRMM
+                let mut b = rand_mat(&mut p, m, n);
+                let mut want = b.clone();
+                let d = TriDesc { side, uplo, ta, diag: Diag::NonUnit, m, n, alpha: 1.4, t: T };
+                let ts = taskize_trmm(&d);
+                ts.validate().unwrap();
+                let am = HostMat::new_ro(&a, na, na, na, T, MatId::A);
+                let cm = HostMat::new(&mut b, m, n, m, T, MatId::C);
+                let (cfg, arena) = cfg(16);
+                run_real(&cfg, &ts, Mats { a: &am, b: None, c: &cm }, 2, arena).unwrap();
+                hostblas::trmm_ref(side, uplo, ta, Diag::NonUnit, m, n, 1.4, &a, na, &mut want, m);
+                assert!(
+                    max_diff(&b, &want) < 1e-9,
+                    "trmm {side:?} {uplo:?} {ta:?}: {}",
+                    max_diff(&b, &want)
+                );
+
+                // TRSM
+                let mut b2 = rand_mat(&mut p, m, n);
+                let mut want2 = b2.clone();
+                let ts2 = taskize_trsm(&d);
+                ts2.validate().unwrap();
+                let cm2 = HostMat::new(&mut b2, m, n, m, T, MatId::C);
+                run_real(&cfg, &ts2, Mats { a: &am, b: None, c: &cm2 }, 2, arena).unwrap();
+                hostblas::trsm_ref(side, uplo, ta, Diag::NonUnit, m, n, 1.4, &a, na, &mut want2, m);
+                assert!(
+                    max_diff(&b2, &want2) < 1e-9,
+                    "trsm {side:?} {uplo:?} {ta:?}: {}",
+                    max_diff(&b2, &want2)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cache_pressure_still_correct() {
+    // Arena of only 9 tiles: constant eviction, every path through the
+    // ALRU doom/release machinery gets exercised.
+    let (m, n, k) = (160, 160, 160);
+    let mut p = Prng::new(6);
+    let a = rand_mat(&mut p, m, k);
+    let b = rand_mat(&mut p, k, n);
+    let mut c = rand_mat(&mut p, m, n);
+    let mut want = c.clone();
+
+    let d = GemmDesc { ta: Trans::No, tb: Trans::No, m, n, k, alpha: 1.0, beta: 1.0, t: T };
+    let ts = taskize_gemm(&d);
+    let am = HostMat::new_ro(&a, m, k, m, T, MatId::A);
+    let bm = HostMat::new_ro(&b, k, n, k, T, MatId::B);
+    let cm = HostMat::new(&mut c, m, n, m, T, MatId::C);
+    let (cfg, arena) = cfg(9);
+    let rep = run_real(&cfg, &ts, Mats { a: &am, b: Some(&bm), c: &cm }, 3, arena).unwrap();
+    // eviction must actually have happened for this test to mean anything
+    assert!(rep.cache_stats.iter().any(|&(_, _, ev)| ev > 0), "{:?}", rep.cache_stats);
+
+    hostblas::gemm_blocked(Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 1.0, &mut want, m);
+    assert!(max_diff(&c, &want) < 1e-10);
+}
+
+#[test]
+fn single_device_and_many_devices_agree() {
+    let (m, n, k) = (128, 96, 64);
+    let mut p = Prng::new(7);
+    let a = rand_mat(&mut p, m, k);
+    let b = rand_mat(&mut p, k, n);
+    let c0 = rand_mat(&mut p, m, n);
+
+    let d = GemmDesc { ta: Trans::No, tb: Trans::No, m, n, k, alpha: 2.0, beta: -1.0, t: T };
+    let mut results = Vec::new();
+    for n_dev in [1, 2, 4] {
+        let mut c = c0.clone();
+        let ts = taskize_gemm(&d);
+        let am = HostMat::new_ro(&a, m, k, m, T, MatId::A);
+        let bm = HostMat::new_ro(&b, k, n, k, T, MatId::B);
+        let cm = HostMat::new(&mut c, m, n, m, T, MatId::C);
+        let (cfg, arena) = cfg(16);
+        let rep = run_real(&cfg, &ts, Mats { a: &am, b: Some(&bm), c: &cm }, n_dev, arena).unwrap();
+        assert_eq!(rep.tasks_per_device.iter().sum::<usize>(), ts.tasks.len());
+        results.push(c);
+    }
+    assert_eq!(results[0], results[1], "1 vs 2 devices");
+    assert_eq!(results[0], results[2], "1 vs 4 devices");
+}
+
+#[test]
+fn pjrt_backend_end_to_end() {
+    // The paper-architecture path: tiles through AOT Pallas artifacts.
+    let (m, n, k) = (96, 64, 64);
+    let mut p = Prng::new(8);
+    let a = rand_mat(&mut p, m, k);
+    let b = rand_mat(&mut p, k, n);
+    let mut c = rand_mat(&mut p, m, n);
+    let mut want = c.clone();
+
+    let d = GemmDesc { ta: Trans::No, tb: Trans::No, m, n, k, alpha: 1.5, beta: 0.5, t: T };
+    let ts = taskize_gemm(&d);
+    let am = HostMat::new_ro(&a, m, k, m, T, MatId::A);
+    let bm = HostMat::new_ro(&b, k, n, k, T, MatId::B);
+    let cm = HostMat::new(&mut c, m, n, m, T, MatId::C);
+    let mut cfg = RunConfig { t: 64, backend: Backend::Pjrt, ..Default::default() };
+    cfg.rs_capacity = 4;
+    run_real(&cfg, &ts, Mats { a: &am, b: Some(&bm), c: &cm }, 2, 16 * 64 * 64 * 8).unwrap();
+
+    hostblas::gemm_blocked(Trans::No, Trans::No, m, n, k, 1.5, &a, m, &b, k, 0.5, &mut want, m);
+    assert!(max_diff(&c, &want) < 1e-9, "pjrt path diff {}", max_diff(&c, &want));
+}
+
+#[test]
+fn stealing_can_be_disabled() {
+    let (m, n, k) = (96, 96, 32);
+    let mut p = Prng::new(9);
+    let a = rand_mat(&mut p, m, k);
+    let b = rand_mat(&mut p, k, n);
+    let mut c = rand_mat(&mut p, m, n);
+    let mut want = c.clone();
+    let d = GemmDesc { ta: Trans::No, tb: Trans::No, m, n, k, alpha: 1.0, beta: 0.0, t: T };
+    let ts = taskize_gemm(&d);
+    let am = HostMat::new_ro(&a, m, k, m, T, MatId::A);
+    let bm = HostMat::new_ro(&b, k, n, k, T, MatId::B);
+    let cm = HostMat::new(&mut c, m, n, m, T, MatId::C);
+    let mut cfg = RunConfig { t: T, ..Default::default() };
+    cfg.work_stealing = false;
+    let rep = run_real(&cfg, &ts, Mats { a: &am, b: Some(&bm), c: &cm }, 2, 16 * T * T * 8).unwrap();
+    assert!(rep.steals.iter().all(|&s| s == 0));
+    hostblas::gemm_blocked(Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut want, m);
+    assert!(max_diff(&c, &want) < 1e-10);
+}

@@ -1,0 +1,180 @@
+//! Integration: artifacts → PJRT → numbers, against the hostblas oracle.
+//!
+//! Requires `make artifacts` to have populated `artifacts/` (the Makefile
+//! `test` target guarantees this). These tests exercise the exact bridge
+//! the coordinator's real mode uses: HLO text → compile → execute.
+
+use blasx::api::types::{Diag, Side, Trans, Uplo};
+use blasx::api::Dtype;
+use blasx::hostblas;
+use blasx::runtime::TileExecutor;
+use blasx::util::prng::Prng;
+
+const T: usize = 64;
+
+fn rand_tile(p: &mut Prng) -> Vec<f64> {
+    let mut v = vec![0.0; T * T];
+    p.fill_f64(&mut v, -1.0, 1.0);
+    v
+}
+
+fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+#[test]
+fn gemm_nn_matches_hostblas() {
+    let ex = TileExecutor::new().expect("pjrt client");
+    let mut p = Prng::new(42);
+    let a = rand_tile(&mut p);
+    let b = rand_tile(&mut p);
+    let c0 = rand_tile(&mut p);
+
+    let mut c = c0.clone();
+    ex.run("gemm_nn", T, Some(&a), Some(&b), &mut c, 1.5, -0.5).unwrap();
+
+    let mut want = c0;
+    hostblas::gemm_blocked(
+        Trans::No, Trans::No, T, T, T, 1.5, &a, T, &b, T, -0.5, &mut want, T,
+    );
+    assert!(max_abs_diff(&c, &want) < 1e-10, "diff {}", max_abs_diff(&c, &want));
+}
+
+#[test]
+fn gemm_transposed_variants_match() {
+    let ex = TileExecutor::new().unwrap();
+    let mut p = Prng::new(7);
+    let a = rand_tile(&mut p);
+    let b = rand_tile(&mut p);
+    let c0 = rand_tile(&mut p);
+
+    for (name, ta, tb) in [
+        ("gemm_nt", Trans::No, Trans::Yes),
+        ("gemm_tn", Trans::Yes, Trans::No),
+        ("gemm_tt", Trans::Yes, Trans::Yes),
+    ] {
+        let mut c = c0.clone();
+        ex.run(name, T, Some(&a), Some(&b), &mut c, 2.0, 1.0).unwrap();
+        let mut want = c0.clone();
+        hostblas::gemm_blocked(ta, tb, T, T, T, 2.0, &a, T, &b, T, 1.0, &mut want, T);
+        assert!(max_abs_diff(&c, &want) < 1e-10, "{name}: diff {}", max_abs_diff(&c, &want));
+    }
+}
+
+#[test]
+fn syrk_diag_matches_hostblas() {
+    let ex = TileExecutor::new().unwrap();
+    let mut p = Prng::new(13);
+    let a = rand_tile(&mut p);
+    let c0 = rand_tile(&mut p);
+
+    let mut c = c0.clone();
+    ex.run("syrk_up_n", T, Some(&a), None, &mut c, 0.7, 1.1).unwrap();
+
+    // Oracle: full symmetric product via gemm (the artifact computes the
+    // whole tile; the triangle mask is applied at write-back, not here).
+    let mut want = c0;
+    hostblas::gemm_blocked(Trans::No, Trans::Yes, T, T, T, 0.7, &a, T, &a, T, 1.1, &mut want, T);
+    assert!(max_abs_diff(&c, &want) < 1e-10);
+}
+
+#[test]
+fn trsm_diag_solves() {
+    let ex = TileExecutor::new().unwrap();
+    let mut p = Prng::new(99);
+    // Well-conditioned triangular tile: damp off-diagonal, boost diagonal.
+    let mut a = rand_tile(&mut p);
+    for x in a.iter_mut() {
+        *x *= 0.1;
+    }
+    for i in 0..T {
+        a[i * T + i] = 2.0 + 0.1 * (i as f64 / T as f64);
+    }
+    let c0 = rand_tile(&mut p);
+
+    let mut x = c0.clone();
+    ex.run("trsm_l_up_n_nu", T, Some(&a), None, &mut x, 1.0, 0.0).unwrap();
+
+    // Residual check against the defining equation: triu(A) * X = C.
+    let mut ax = vec![0.0; T * T];
+    let mut a_up = vec![0.0; T * T];
+    for j in 0..T {
+        for i in 0..=j {
+            a_up[j * T + i] = a[j * T + i];
+        }
+    }
+    hostblas::gemm_blocked(Trans::No, Trans::No, T, T, T, 1.0, &a_up, T, &x, T, 0.0, &mut ax, T);
+    assert!(max_abs_diff(&ax, &c0) < 1e-9, "residual {}", max_abs_diff(&ax, &c0));
+}
+
+#[test]
+fn trmm_symm_scal_match_reference() {
+    let ex = TileExecutor::new().unwrap();
+    let mut p = Prng::new(5);
+    let a = rand_tile(&mut p);
+    let b = rand_tile(&mut p);
+    let c0 = rand_tile(&mut p);
+
+    // trmm_l_lo_n_nu: C := 1.5 * tril(A) @ C
+    let mut c = c0.clone();
+    ex.run("trmm_l_lo_n_nu", T, Some(&a), None, &mut c, 1.5, 0.0).unwrap();
+    let mut want = c0.clone();
+    hostblas::trmm_ref(Side::Left, Uplo::Lower, Trans::No, Diag::NonUnit, T, T, 1.5, &a, T, &mut want, T);
+    assert!(max_abs_diff(&c, &want) < 1e-10);
+
+    // symm_l_up
+    let mut c = c0.clone();
+    ex.run("symm_l_up", T, Some(&a), Some(&b), &mut c, 0.3, -0.2).unwrap();
+    let mut want = c0.clone();
+    hostblas::symm_ref(Side::Left, Uplo::Upper, T, T, 0.3, &a, T, &b, T, -0.2, &mut want, T);
+    assert!(max_abs_diff(&c, &want) < 1e-10);
+
+    // scal
+    let mut c = c0.clone();
+    ex.run("scal", T, None, None, &mut c, 0.0, 0.25).unwrap();
+    let want: Vec<f64> = c0.iter().map(|x| 0.25 * x).collect();
+    assert!(max_abs_diff(&c, &want) < 1e-15);
+}
+
+#[test]
+fn f32_path_works() {
+    let ex = TileExecutor::new().unwrap();
+    let mut p = Prng::new(21);
+    let mut a = vec![0.0f32; T * T];
+    let mut b = vec![0.0f32; T * T];
+    let mut c = vec![0.0f32; T * T];
+    p.fill_f32(&mut a, -1.0, 1.0);
+    p.fill_f32(&mut b, -1.0, 1.0);
+    p.fill_f32(&mut c, -1.0, 1.0);
+    let c0 = c.clone();
+    ex.run("gemm_nn", T, Some(&a), Some(&b), &mut c, 1.0f32, 0.0f32).unwrap();
+    let mut want = c0;
+    hostblas::gemm_blocked(Trans::No, Trans::No, T, T, T, 1.0f32, &a, T, &b, T, 0.0f32, &mut want, T);
+    let diff = c.iter().zip(&want).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    assert!(diff < 1e-3, "diff {diff}");
+}
+
+#[test]
+fn executables_are_cached() {
+    let ex = TileExecutor::new().unwrap();
+    let pool = blasx::runtime::PjrtPool::global().unwrap();
+    let before = pool.cached();
+    let mut p = Prng::new(3);
+    let a = rand_tile(&mut p);
+    let b = rand_tile(&mut p);
+    let mut c = rand_tile(&mut p);
+    ex.run("gemm_nn", T, Some(&a), Some(&b), &mut c, 1.0, 1.0).unwrap();
+    let mid = pool.cached();
+    ex.run("gemm_nn", T, Some(&a), Some(&b), &mut c, 2.0, 0.5).unwrap();
+    assert_eq!(pool.cached(), mid, "second run must not recompile");
+    assert!(mid >= before);
+}
+
+#[test]
+fn missing_artifact_reports_cleanly() {
+    let ex = TileExecutor::new().unwrap();
+    assert!(!ex.available("gemm_nn", Dtype::F64, 123));
+    let mut c = vec![0.0; 9];
+    let err = ex.run::<f64>("gemm_nn", 3, Some(&c.clone()), Some(&c.clone()), &mut c, 1.0, 1.0);
+    assert!(err.is_err());
+}

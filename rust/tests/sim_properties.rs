@@ -1,0 +1,198 @@
+//! Property tests over the scheduling runtime (proptest-style via
+//! `util::prop::Cases`): every policy, routine, machine shape and knob
+//! combination must complete all tasks, keep the trace self-consistent,
+//! conserve communication volume, and be fully deterministic.
+
+use blasx::api::types::Routine;
+use blasx::api::Dtype;
+use blasx::coordinator::{run_sim, square_workload, Policy, RunConfig};
+use blasx::sim::{everest, makalu, toy, Machine};
+use blasx::trace::EvKind;
+use blasx::util::prop::Cases;
+use blasx::util::prng::Prng;
+
+fn random_machine(rng: &mut Prng) -> Machine {
+    match rng.below(3) {
+        0 => everest(rng.range(1, 3)),
+        1 => makalu(rng.range(1, 4)),
+        _ => toy(rng.range(1, 4), (16 + rng.below(64)) << 20),
+    }
+}
+
+fn random_cfg(rng: &mut Prng, t: usize) -> RunConfig {
+    RunConfig {
+        t,
+        n_streams: rng.range(1, 4),
+        rs_capacity: rng.range(4, 11),
+        policy: Policy::Blasx,
+        use_cpu: rng.chance(0.3),
+        work_stealing: rng.chance(0.8),
+        k_chunk: rng.range(1, 7),
+        jitter: if rng.chance(0.5) { 0.1 } else { 0.0 },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn blasx_completes_everything_and_conserves_traffic() {
+    Cases::new(60).run("blasx_completes", |rng| {
+        let t = [64, 128, 256][rng.below(3)];
+        let n = t * rng.range(2, 7);
+        let routine = Routine::ALL[rng.below(6)];
+        let machine = random_machine(rng);
+        let cfg = random_cfg(rng, t);
+        let w = square_workload(routine, n, t, Dtype::F64);
+        let n_tasks = w.ts.tasks.len();
+        let rep = run_sim(&cfg, &machine, &w);
+
+        if !rep.feasible {
+            return Err("BLASX must always be feasible (out-of-core)".into());
+        }
+        if rep.tasks_per_worker.iter().sum::<usize>() != n_tasks {
+            return Err(format!(
+                "{routine:?} N={n} T={t}: {:?} != {n_tasks} tasks",
+                rep.tasks_per_worker
+            ));
+        }
+        if !(rep.makespan > 0.0) {
+            return Err("non-positive makespan".into());
+        }
+        // trace events inside [0, makespan], with sane geometry
+        for e in &rep.trace.events {
+            if e.start < -1e-12 || e.end > rep.makespan + 1e-9 || e.end < e.start {
+                return Err(format!("bad event {e:?} (makespan {})", rep.makespan));
+            }
+        }
+        // conservation: every GPU-executed task's C tile is written back
+        // exactly once => total D2H equals the covered C bytes (the CPU
+        // worker writes host RAM directly, so with use_cpu it's <=).
+        let d2h: f64 = (0..machine.devices.len())
+            .map(|d| rep.trace.bytes(d, EvKind::D2h))
+            .sum();
+        let c_bytes: f64 = w.ts.tasks.iter().map(|t| (t.m * t.n * 8) as f64).sum();
+        if cfg.use_cpu {
+            if d2h > c_bytes * (1.0 + 1e-9) {
+                return Err(format!("D2H {d2h} > covered C bytes {c_bytes}"));
+            }
+        } else if (d2h - c_bytes).abs() > 1e-6 * c_bytes {
+            return Err(format!("D2H {d2h} != covered C bytes {c_bytes}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn baselines_complete_everything() {
+    Cases::new(40).run("baselines_complete", |rng| {
+        let t = 128;
+        let n = t * rng.range(2, 6);
+        let routine = Routine::ALL[rng.below(6)];
+        let machine = random_machine(rng);
+        let policy =
+            [Policy::CublasXt, Policy::Magma, Policy::SuperMatrix, Policy::Parsec][rng.below(4)];
+        let cfg = RunConfig { t, policy, ..random_cfg(rng, t) };
+        let w = square_workload(routine, n, t, Dtype::F64);
+        let rep = run_sim(&cfg, &machine, &w);
+        if !rep.feasible {
+            return Ok(()); // in-core gates may fire on toy machines
+        }
+        if rep.tasks_per_worker.iter().sum::<usize>() != w.ts.tasks.len() {
+            return Err(format!(
+                "{policy:?} {routine:?}: {:?} != {}",
+                rep.tasks_per_worker,
+                w.ts.tasks.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simulation_is_deterministic() {
+    Cases::new(12).run("determinism", |rng| {
+        let t = 128;
+        let n = t * rng.range(2, 6);
+        let routine = Routine::ALL[rng.below(6)];
+        let machine = everest(rng.range(1, 3));
+        let cfg = random_cfg(rng, t);
+        let w = square_workload(routine, n, t, Dtype::F64);
+        let a = run_sim(&cfg, &machine, &w);
+        let b = run_sim(&cfg, &machine, &w);
+        if a.makespan != b.makespan {
+            return Err(format!("makespan {} vs {}", a.makespan, b.makespan));
+        }
+        if a.tasks_per_worker != b.tasks_per_worker {
+            return Err("task split differs".into());
+        }
+        if a.trace.events.len() != b.trace.events.len() {
+            return Err("event count differs".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn p2p_only_between_switch_peers() {
+    Cases::new(25).run("p2p_topology", |rng| {
+        let t = 128;
+        let n = t * rng.range(3, 7);
+        let machine = everest(3); // P2P pair is (1, 2) only
+        let cfg = random_cfg(rng, t);
+        let w = square_workload(Routine::Gemm, n, t, Dtype::F64);
+        let rep = run_sim(&cfg, &machine, &w);
+        // device 0 has no switch peer: must never receive P2P traffic
+        if rep.trace.bytes(0, EvKind::P2p) != 0.0 {
+            return Err("GPU0 received P2P traffic without a switch peer".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn more_devices_never_lose_badly() {
+    // Weak-scaling sanity: on the homogeneous Everest, 3 GPUs must beat
+    // 1 GPU clearly once the problem is large enough.
+    let t = 256;
+    let n = 4096;
+    let w = square_workload(Routine::Gemm, n, t, Dtype::F64);
+    let cfg = RunConfig { t, ..Default::default() };
+    let m1 = run_sim(&cfg, &everest(1), &w);
+    let m3 = run_sim(&cfg, &everest(3), &w);
+    assert!(
+        m3.makespan < m1.makespan * 0.55,
+        "3 GPUs {:.4}s vs 1 GPU {:.4}s",
+        m3.makespan,
+        m1.makespan
+    );
+}
+
+#[test]
+fn stealing_disabled_still_completes() {
+    let t = 128;
+    let w = square_workload(Routine::Syr2k, 1024, t, Dtype::F64);
+    let cfg = RunConfig { t, work_stealing: false, ..Default::default() };
+    let rep = run_sim(&cfg, &makalu(4), &w);
+    assert!(rep.feasible);
+    assert_eq!(rep.tasks_per_worker.iter().sum::<usize>(), w.ts.tasks.len());
+    assert!(rep.steals.iter().all(|&s| s == 0));
+}
+
+#[test]
+fn cpu_worker_contributes_on_demand() {
+    let t = 256;
+    let n = 4096;
+    let w = square_workload(Routine::Gemm, n, t, Dtype::F64);
+    let base = {
+        let cfg = RunConfig { t, use_cpu: false, ..Default::default() };
+        run_sim(&cfg, &everest(2), &w)
+    };
+    let cpu = {
+        let cfg = RunConfig { t, use_cpu: true, ..Default::default() };
+        run_sim(&cfg, &everest(2), &w)
+    };
+    // CPU worker appears as an extra entry and takes at least one task
+    assert_eq!(cpu.tasks_per_worker.len(), base.tasks_per_worker.len() + 1);
+    assert!(*cpu.tasks_per_worker.last().unwrap() > 0, "{:?}", cpu.tasks_per_worker);
+    // and it must not hurt the makespan materially
+    assert!(cpu.makespan <= base.makespan * 1.05);
+}
