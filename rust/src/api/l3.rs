@@ -14,9 +14,10 @@
 
 use super::check;
 use super::types::{Diag, Scalar, Side, Trans, Uplo};
-use crate::coordinator::real_engine::{run_real, Mats, RealReport};
+use crate::batch::{taskize_batch, BatchDesc, BatchedGemm};
+use crate::coordinator::real_engine::{run_real, run_real_batch, Mats, RealReport};
 use crate::coordinator::{Backend, RunConfig};
-use crate::error::Result;
+use crate::error::{illegal, Result};
 use crate::task::{
     taskize_gemm, taskize_symm, taskize_syr2k, taskize_syrk, taskize_trmm, taskize_trsm,
     GemmDesc, SymmDesc, SyrkDesc, TriDesc,
@@ -35,8 +36,13 @@ pub struct Context {
 impl Default for Context {
     fn default() -> Context {
         // 2 virtual devices exercises the full multi-device protocol
-        // (P2P path, stealing) while staying sensible on small hosts;
-        // 64 MiB arena each ≈ 128 tiles at T=256/f64.
+        // (arena-to-arena peer copies, stealing) while staying sensible
+        // on small hosts. The 64 MiB (= 67,108,864 byte) arena holds
+        // exactly 128 f64 tiles at the default T=256 (one tile is
+        // 256·256·8 B = 512 KiB; f32 runs fit 256 tiles) — far above
+        // the 8-tile working-set floor `run_real` enforces, small
+        // enough that big problems still exercise eviction. Size it
+        // explicitly with [`Context::with_arena`].
         Context {
             n_devices: 2,
             arena_bytes: 64 << 20,
@@ -57,6 +63,15 @@ impl Context {
 
     pub fn with_backend(mut self, b: Backend) -> Context {
         self.cfg.backend = b;
+        self
+    }
+
+    /// Size each device's tile-cache arena in bytes. Batch callers in
+    /// particular should budget `n` live tiles as `n · t · t · esz`
+    /// (the runtime needs at least 8 tiles per device; `run_real`
+    /// asserts the floor).
+    pub fn with_arena(mut self, bytes: usize) -> Context {
+        self.arena_bytes = bytes;
         self
     }
 
@@ -231,6 +246,291 @@ pub fn trsm<T: Scalar>(
     run_real(&ctx.cfg, &ts, Mats { a: &am, b: None, c: &cm }, ctx.n_devices, ctx.arena_bytes)
 }
 
+// --- Batched entry points (crate::batch) -----------------------------
+
+/// One problem of a pointer-array GEMM batch: shape, transposes,
+/// scalars and leading dimensions (the data rides in parallel slices).
+#[derive(Clone, Copy, Debug)]
+pub struct GemmBatchEntry {
+    pub ta: Trans,
+    pub tb: Trans,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub alpha: f64,
+    pub beta: f64,
+    pub lda: usize,
+    pub ldb: usize,
+    pub ldc: usize,
+}
+
+impl GemmBatchEntry {
+    /// A plain `C := alpha*A*B + beta*C` entry with tight leading dims.
+    pub fn new(m: usize, n: usize, k: usize, alpha: f64, beta: f64) -> GemmBatchEntry {
+        GemmBatchEntry {
+            ta: Trans::No,
+            tb: Trans::No,
+            m,
+            n,
+            k,
+            alpha,
+            beta,
+            lda: m.max(1),
+            ldb: k.max(1),
+            ldc: m.max(1),
+        }
+    }
+}
+
+/// Stored (rows, cols) of op(A) and op(B) for an entry.
+fn gemm_operand_dims(e: &GemmBatchEntry) -> ((usize, usize), (usize, usize)) {
+    let a = if e.ta == Trans::No { (e.m, e.k) } else { (e.k, e.m) };
+    let b = if e.tb == Trans::No { (e.k, e.n) } else { (e.n, e.k) };
+    (a, b)
+}
+
+/// Column-major footprint of an `rows × cols` operand with leading
+/// dimension `ld` — the minimum buffer length `HostMat` accepts.
+fn footprint(ld: usize, rows: usize, cols: usize) -> usize {
+    if cols == 0 {
+        0
+    } else {
+        ld * (cols - 1) + rows
+    }
+}
+
+/// Batched GEMM, pointer-array flavour: `c[i] := alpha_i * op(A_i) *
+/// op(B_i) + beta_i * c[i]` for every entry, through ONE scheduler
+/// invocation — all problems fused into a single task set with
+/// problem-namespaced tiles (see [`crate::batch`]), so taskization,
+/// cache warm-up and stream setup are paid once for the whole batch
+/// and small problems share devices instead of serializing.
+///
+/// Shapes may vary per entry (variable-size batch). Numerics are
+/// bit-identical to looping [`gemm`] over the entries with the same
+/// context: the per-problem tile decomposition and per-tile summation
+/// order are exactly the single-call ones.
+pub fn gemm_batched<T: Scalar>(
+    ctx: &Context,
+    entries: &[GemmBatchEntry],
+    a: &[&[T]],
+    b: &[&[T]],
+    c: &mut [&mut [T]],
+) -> Result<RealReport> {
+    if a.len() != entries.len() || b.len() != entries.len() || c.len() != entries.len() {
+        return Err(illegal(
+            "gemm_batched",
+            2,
+            format!(
+                "operand count mismatch: {} entries vs {} A / {} B / {} C buffers",
+                entries.len(),
+                a.len(),
+                b.len(),
+                c.len()
+            ),
+        ));
+    }
+    let t = ctx.tile();
+    let mut descs = Vec::with_capacity(entries.len());
+    for (i, e) in entries.iter().enumerate() {
+        check::check_gemm(e.ta, e.tb, e.m, e.n, e.k, e.lda, e.ldb, e.ldc).map_err(|err| {
+            illegal("gemm_batched", 2, format!("entry {i}: {err}"))
+        })?;
+        descs.push(GemmDesc {
+            ta: e.ta,
+            tb: e.tb,
+            m: e.m,
+            n: e.n,
+            k: e.k,
+            alpha: e.alpha,
+            beta: e.beta,
+            t,
+        });
+    }
+    let ts = taskize_batch(&BatchDesc::Gemm(BatchedGemm::variable(descs)), t, ctx.n_devices);
+
+    let mut amats = Vec::with_capacity(entries.len());
+    let mut bmats = Vec::with_capacity(entries.len());
+    let mut cmats = Vec::with_capacity(entries.len());
+    for (i, e) in entries.iter().enumerate() {
+        let ((ar, ac), (br, bc)) = gemm_operand_dims(e);
+        amats.push(HostMat::new_ro(a[i], ar, ac, e.lda, t, MatId::A));
+        bmats.push(HostMat::new_ro(b[i], br, bc, e.ldb, t, MatId::B));
+    }
+    for (e, ci) in entries.iter().zip(c.iter_mut()) {
+        cmats.push(HostMat::new(ci, e.m, e.n, e.ldc, t, MatId::C));
+    }
+    let problems: Vec<Mats<'_, T>> = (0..entries.len())
+        .map(|i| Mats { a: &amats[i], b: Some(&bmats[i]), c: &cmats[i] })
+        .collect();
+    run_real_batch(&ctx.cfg, &ts, problems, ctx.n_devices, ctx.arena_bytes)
+}
+
+/// Batched GEMM, strided flavour: problem `i` reads `a[i*stride_a..]`,
+/// `b[i*stride_b..]` and updates `c[i*stride_c..]`; all problems share
+/// one shape/transpose/scalar set (the cuBLAS
+/// `gemmStridedBatched` contract). `stride_x == 0` is allowed for A/B
+/// when every problem reads the same operand (broadcast — e.g. one
+/// weight matrix against many activation blocks); C strides must be
+/// non-overlapping.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_batched_strided<T: Scalar>(
+    ctx: &Context,
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    stride_a: usize,
+    b: &[T],
+    ldb: usize,
+    stride_b: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+    stride_c: usize,
+    batch: usize,
+) -> Result<RealReport> {
+    check::check_gemm(ta, tb, m, n, k, lda, ldb, ldc)?;
+    let entry = GemmBatchEntry {
+        ta,
+        tb,
+        m,
+        n,
+        k,
+        alpha: alpha.to_f64(),
+        beta: beta.to_f64(),
+        lda,
+        ldb,
+        ldc,
+    };
+    let ((ar, ac), (br, bc)) = gemm_operand_dims(&entry);
+    let need_a = footprint(lda, ar, ac);
+    let need_b = footprint(ldb, br, bc);
+    let need_c = footprint(ldc, m, n);
+    if batch > 1 {
+        if stride_a != 0 && stride_a < need_a {
+            return Err(illegal("gemm_batched_strided", 10, format!("stride_a {stride_a} < operand footprint {need_a}")));
+        }
+        if stride_b != 0 && stride_b < need_b {
+            return Err(illegal("gemm_batched_strided", 13, format!("stride_b {stride_b} < operand footprint {need_b}")));
+        }
+        if stride_c < need_c.max(1) {
+            return Err(illegal("gemm_batched_strided", 17, format!("stride_c {stride_c} overlaps output footprint {need_c}")));
+        }
+    }
+    if batch > 0 {
+        let last = batch - 1;
+        if a.len() < last * stride_a + need_a {
+            return Err(illegal("gemm_batched_strided", 8, format!("A buffer too small: len {} for batch {batch}", a.len())));
+        }
+        if b.len() < last * stride_b + need_b {
+            return Err(illegal("gemm_batched_strided", 11, format!("B buffer too small: len {} for batch {batch}", b.len())));
+        }
+        if c.len() < last * stride_c + need_c {
+            return Err(illegal("gemm_batched_strided", 15, format!("C buffer too small: len {} for batch {batch}", c.len())));
+        }
+    }
+    let entries = vec![entry; batch];
+    let aslices: Vec<&[T]> = (0..batch).map(|i| &a[i * stride_a..]).collect();
+    let bslices: Vec<&[T]> = (0..batch).map(|i| &b[i * stride_b..]).collect();
+    // C must be split into disjoint &mut chunks.
+    let mut cslices: Vec<&mut [T]> = Vec::with_capacity(batch);
+    let mut rest = c;
+    for i in 0..batch {
+        let cur = std::mem::take(&mut rest);
+        if i + 1 == batch {
+            cslices.push(cur);
+        } else {
+            let (head, tail) = cur.split_at_mut(stride_c);
+            cslices.push(head);
+            rest = tail;
+        }
+    }
+    gemm_batched(ctx, &entries, &aslices, &bslices, &mut cslices)
+}
+
+/// Double-precision batched GEMM (pointer-array variant).
+pub fn dgemm_batched(
+    ctx: &Context,
+    entries: &[GemmBatchEntry],
+    a: &[&[f64]],
+    b: &[&[f64]],
+    c: &mut [&mut [f64]],
+) -> Result<RealReport> {
+    gemm_batched(ctx, entries, a, b, c)
+}
+
+/// Single-precision batched GEMM (pointer-array variant).
+pub fn sgemm_batched(
+    ctx: &Context,
+    entries: &[GemmBatchEntry],
+    a: &[&[f32]],
+    b: &[&[f32]],
+    c: &mut [&mut [f32]],
+) -> Result<RealReport> {
+    gemm_batched(ctx, entries, a, b, c)
+}
+
+/// Double-precision strided batched GEMM.
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm_batched_strided(
+    ctx: &Context,
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    stride_a: usize,
+    b: &[f64],
+    ldb: usize,
+    stride_b: usize,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+    stride_c: usize,
+    batch: usize,
+) -> Result<RealReport> {
+    gemm_batched_strided(
+        ctx, ta, tb, m, n, k, alpha, a, lda, stride_a, b, ldb, stride_b, beta, c, ldc, stride_c,
+        batch,
+    )
+}
+
+/// Single-precision strided batched GEMM.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_batched_strided(
+    ctx: &Context,
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    lda: usize,
+    stride_a: usize,
+    b: &[f32],
+    ldb: usize,
+    stride_b: usize,
+    beta: f32,
+    c: &mut [f32],
+    ldc: usize,
+    stride_c: usize,
+    batch: usize,
+) -> Result<RealReport> {
+    gemm_batched_strided(
+        ctx, ta, tb, m, n, k, alpha, a, lda, stride_a, b, ldb, stride_b, beta, c, ldc, stride_c,
+        batch,
+    )
+}
+
 // --- CBLAS-flavoured aliases -----------------------------------------
 
 /// Double-precision GEMM with the classic parameter order.
@@ -344,6 +644,62 @@ mod tests {
         let b = vec![0.0; 100];
         let mut c = vec![0.0; 100];
         let err = dgemm(&ctx, Trans::No, Trans::No, 10, 10, 10, 1.0, &a, 5, &b, 10, 0.0, &mut c, 10);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn with_arena_sizes_the_tile_cache() {
+        let ctx = Context::default().with_arena(16 << 20);
+        assert_eq!(ctx.arena_bytes, 16 << 20);
+        // default: 64 MiB / (256*256*8 B) = exactly 128 f64 tiles
+        let d = Context::default();
+        assert_eq!(d.arena_bytes / (d.cfg.t * d.cfg.t * 8), 128);
+    }
+
+    #[test]
+    fn dgemm_batched_smoke_vs_hostblas() {
+        let ctx = small_ctx();
+        let shapes = [(40usize, 24usize, 33usize), (65, 17, 9), (16, 16, 16)];
+        let mut p = Prng::new(77);
+        let entries: Vec<GemmBatchEntry> =
+            shapes.iter().map(|&(m, n, k)| GemmBatchEntry::new(m, n, k, 1.25, -0.5)).collect();
+        let mut abufs = Vec::new();
+        let mut bbufs = Vec::new();
+        let mut cbufs = Vec::new();
+        for &(m, n, k) in &shapes {
+            let mut a = vec![0.0; m * k];
+            let mut b = vec![0.0; k * n];
+            let mut c = vec![0.0; m * n];
+            p.fill_f64(&mut a, -1.0, 1.0);
+            p.fill_f64(&mut b, -1.0, 1.0);
+            p.fill_f64(&mut c, -1.0, 1.0);
+            abufs.push(a);
+            bbufs.push(b);
+            cbufs.push(c);
+        }
+        let want: Vec<Vec<f64>> = cbufs.clone();
+        let arefs: Vec<&[f64]> = abufs.iter().map(Vec::as_slice).collect();
+        let brefs: Vec<&[f64]> = bbufs.iter().map(Vec::as_slice).collect();
+        let mut crefs: Vec<&mut [f64]> = cbufs.iter_mut().map(Vec::as_mut_slice).collect();
+        dgemm_batched(&ctx, &entries, &arefs, &brefs, &mut crefs).unwrap();
+        for (i, &(m, n, k)) in shapes.iter().enumerate() {
+            let mut w = want[i].clone();
+            hostblas::gemm_blocked(
+                Trans::No, Trans::No, m, n, k, 1.25, &abufs[i], m, &bbufs[i], k, -0.5, &mut w, m,
+            );
+            let diff =
+                cbufs[i].iter().zip(&w).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+            assert!(diff < 1e-10, "problem {i}: {diff}");
+        }
+    }
+
+    #[test]
+    fn gemm_batched_rejects_count_mismatch() {
+        let ctx = small_ctx();
+        let entries = [GemmBatchEntry::new(4, 4, 4, 1.0, 0.0)];
+        let a = vec![0.0f64; 16];
+        let b = vec![0.0f64; 16];
+        let err = dgemm_batched(&ctx, &entries, &[&a, &a], &[&b], &mut []);
         assert!(err.is_err());
     }
 

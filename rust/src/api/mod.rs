@@ -9,5 +9,8 @@ pub mod check;
 pub mod l3;
 pub mod types;
 
-pub use l3::{dgemm, gemm, sgemm, symm, syr2k, syrk, trmm, trsm, Context};
+pub use l3::{
+    dgemm, dgemm_batched, dgemm_batched_strided, gemm, gemm_batched, gemm_batched_strided, sgemm,
+    sgemm_batched, sgemm_batched_strided, symm, syr2k, syrk, trmm, trsm, Context, GemmBatchEntry,
+};
 pub use types::{Diag, Dtype, Routine, Scalar, Side, Trans, Uplo};

@@ -162,6 +162,10 @@ impl Dtype {
 }
 
 /// Scalar element trait: the two real BLAS precisions.
+///
+/// The arithmetic surface is spelled out as std `ops` bounds plus the
+/// two identities the kernels need (`num_traits` is unreachable in the
+/// offline build, and f32/f64 are the only implementors anyway).
 pub trait Scalar:
     Copy
     + Send
@@ -170,13 +174,24 @@ pub trait Scalar:
     + PartialOrd
     + std::fmt::Debug
     + std::fmt::Display
-    + num_traits::Float
-    + num_traits::NumAssign
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + std::ops::AddAssign
+    + std::ops::SubAssign
+    + std::ops::MulAssign
+    + std::ops::DivAssign
     + 'static
 {
     const DTYPE: Dtype;
     fn from_f64(x: f64) -> Self;
     fn to_f64(self) -> f64;
+    /// Additive identity.
+    fn zero() -> Self;
+    /// Multiplicative identity.
+    fn one() -> Self;
 }
 
 impl Scalar for f32 {
@@ -187,6 +202,12 @@ impl Scalar for f32 {
     fn to_f64(self) -> f64 {
         self as f64
     }
+    fn zero() -> f32 {
+        0.0
+    }
+    fn one() -> f32 {
+        1.0
+    }
 }
 
 impl Scalar for f64 {
@@ -196,6 +217,12 @@ impl Scalar for f64 {
     }
     fn to_f64(self) -> f64 {
         self
+    }
+    fn zero() -> f64 {
+        0.0
+    }
+    fn one() -> f64 {
+        1.0
     }
 }
 

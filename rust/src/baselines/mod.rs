@@ -61,7 +61,16 @@ pub fn spec_of(policy: Policy) -> BaselineSpec {
 
 /// Run a baseline policy on a workload (dispatched from
 /// `coordinator::dispatch::run_sim`).
+///
+/// Baselines model *single-problem* schedulers: none of the published
+/// systems expose batched L3 calls, and the engine sizes its in-core
+/// gate and C-tile geometry from problem 0 only. A fused batch
+/// workload is therefore reported infeasible (rendered "N/A" by the
+/// harness) rather than simulated with wrong geometry.
 pub fn run(cfg: &RunConfig, machine: &Machine, w: &Workload) -> SimReport {
+    if w.keymap.n_problems() > 1 {
+        return SimReport::infeasible();
+    }
     let spec = spec_of(cfg.policy);
     run_baseline(&spec, cfg, machine, &w.ts, &w.keymap, w.dtype)
 }

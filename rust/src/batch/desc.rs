@@ -1,0 +1,187 @@
+//! Batch descriptors: per-problem routine descriptions for the three
+//! batched routines (GEMM, SYRK, TRSM — the KBLAS core set).
+//!
+//! A *uniform* batch repeats one prototype descriptor `count` times; a
+//! *variable* batch carries heterogeneous shapes/scalars per problem.
+//! Either way the batch taskizer normalizes every problem to the
+//! runtime's tile size, so the per-problem `t` fields are overwritten
+//! at fusion time and callers may leave them 0.
+
+use crate::api::types::Routine;
+use crate::task::{GemmDesc, SyrkDesc, TriDesc};
+use crate::tile::TileGrid;
+
+/// A batch of GEMM problems `C_i := alpha_i op(A_i) op(B_i) + beta_i C_i`.
+#[derive(Clone, Debug)]
+pub struct BatchedGemm {
+    pub problems: Vec<GemmDesc>,
+}
+
+/// A batch of SYRK problems (rank-k updates).
+#[derive(Clone, Debug)]
+pub struct BatchedSyrk {
+    pub problems: Vec<SyrkDesc>,
+}
+
+/// A batch of TRSM problems (triangular solves).
+#[derive(Clone, Debug)]
+pub struct BatchedTrsm {
+    pub problems: Vec<TriDesc>,
+}
+
+macro_rules! batch_ctors {
+    ($name:ident, $desc:ty) => {
+        impl $name {
+            /// A uniform batch: `count` copies of one prototype.
+            pub fn uniform(proto: $desc, count: usize) -> $name {
+                $name { problems: vec![proto; count] }
+            }
+
+            /// A variable-size batch.
+            pub fn variable(problems: Vec<$desc>) -> $name {
+                $name { problems }
+            }
+
+            pub fn len(&self) -> usize {
+                self.problems.len()
+            }
+
+            pub fn is_empty(&self) -> bool {
+                self.problems.is_empty()
+            }
+        }
+    };
+}
+
+batch_ctors!(BatchedGemm, GemmDesc);
+batch_ctors!(BatchedSyrk, SyrkDesc);
+batch_ctors!(BatchedTrsm, TriDesc);
+
+/// A batch of problems of one routine family.
+#[derive(Clone, Debug)]
+pub enum BatchDesc {
+    Gemm(BatchedGemm),
+    Syrk(BatchedSyrk),
+    Trsm(BatchedTrsm),
+}
+
+impl BatchDesc {
+    /// Number of problems in the batch.
+    pub fn len(&self) -> usize {
+        match self {
+            BatchDesc::Gemm(b) => b.len(),
+            BatchDesc::Syrk(b) => b.len(),
+            BatchDesc::Trsm(b) => b.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The routine family of the batch.
+    pub fn routine(&self) -> Routine {
+        match self {
+            BatchDesc::Gemm(_) => Routine::Gemm,
+            BatchDesc::Syrk(_) => Routine::Syrk,
+            BatchDesc::Trsm(_) => Routine::Trsm,
+        }
+    }
+
+    /// Per-problem operand grids in (A, B, C) order at tile size `t` —
+    /// the geometry a batch [`crate::coordinator::KeyMap`] needs.
+    /// Routines without a distinct B operand reuse A's grid (same
+    /// convention as the single-routine workloads).
+    pub fn grids(&self, t: usize) -> Vec<[TileGrid; 3]> {
+        match self {
+            BatchDesc::Gemm(b) => b
+                .problems
+                .iter()
+                .map(|d| {
+                    let (ar, ac) = if d.ta == crate::api::types::Trans::No {
+                        (d.m, d.k)
+                    } else {
+                        (d.k, d.m)
+                    };
+                    let (br, bc) = if d.tb == crate::api::types::Trans::No {
+                        (d.k, d.n)
+                    } else {
+                        (d.n, d.k)
+                    };
+                    [
+                        TileGrid::new(ar, ac, t),
+                        TileGrid::new(br, bc, t),
+                        TileGrid::new(d.m, d.n, t),
+                    ]
+                })
+                .collect(),
+            BatchDesc::Syrk(b) => b
+                .problems
+                .iter()
+                .map(|d| {
+                    let (ar, ac) = if d.trans == crate::api::types::Trans::No {
+                        (d.n, d.k)
+                    } else {
+                        (d.k, d.n)
+                    };
+                    let a = TileGrid::new(ar, ac, t);
+                    [a, a, TileGrid::new(d.n, d.n, t)]
+                })
+                .collect(),
+            BatchDesc::Trsm(b) => b
+                .problems
+                .iter()
+                .map(|d| {
+                    let na = if d.side == crate::api::types::Side::Left { d.m } else { d.n };
+                    let a = TileGrid::new(na, na, t);
+                    [a, a, TileGrid::new(d.m, d.n, t)]
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::types::{Diag, Side, Trans, Uplo};
+
+    fn gd(m: usize, n: usize, k: usize) -> GemmDesc {
+        GemmDesc { ta: Trans::No, tb: Trans::No, m, n, k, alpha: 1.0, beta: 0.0, t: 0 }
+    }
+
+    #[test]
+    fn uniform_and_variable_batches() {
+        let u = BatchedGemm::uniform(gd(64, 64, 64), 5);
+        assert_eq!(u.len(), 5);
+        let v = BatchedGemm::variable(vec![gd(10, 20, 30), gd(40, 50, 60)]);
+        assert_eq!(v.len(), 2);
+        assert!(!v.is_empty());
+        assert_eq!(BatchDesc::Gemm(v).routine(), Routine::Gemm);
+    }
+
+    #[test]
+    fn grids_follow_transposes() {
+        let mut d = gd(10, 20, 30);
+        d.ta = Trans::Yes;
+        let g = BatchDesc::Gemm(BatchedGemm::variable(vec![d])).grids(8);
+        assert_eq!(g.len(), 1);
+        // op(A) is 10x30, stored A is 30x10
+        assert_eq!((g[0][0].rows, g[0][0].cols), (30, 10));
+        assert_eq!((g[0][1].rows, g[0][1].cols), (30, 20));
+        assert_eq!((g[0][2].rows, g[0][2].cols), (10, 20));
+    }
+
+    #[test]
+    fn trsm_and_syrk_grids() {
+        let s = SyrkDesc { uplo: Uplo::Lower, trans: Trans::Yes, n: 12, k: 8, alpha: 1.0, beta: 1.0, t: 0 };
+        let g = BatchDesc::Syrk(BatchedSyrk::uniform(s, 2)).grids(4);
+        assert_eq!((g[1][0].rows, g[1][0].cols), (8, 12));
+        assert_eq!((g[1][2].rows, g[1][2].cols), (12, 12));
+
+        let t = TriDesc { side: Side::Right, uplo: Uplo::Upper, ta: Trans::No, diag: Diag::NonUnit, m: 6, n: 10, alpha: 1.0, t: 0 };
+        let g = BatchDesc::Trsm(BatchedTrsm::uniform(t, 1)).grids(4);
+        assert_eq!((g[0][0].rows, g[0][0].cols), (10, 10));
+        assert_eq!((g[0][2].rows, g[0][2].cols), (6, 10));
+    }
+}

@@ -1,0 +1,43 @@
+//! Batched L3 BLAS subsystem — many small/irregular problems through
+//! one scheduler invocation.
+//!
+//! The per-call runtime (taskize → queue → reservation stations →
+//! tile caches → kernels) was built for one large problem whose tile
+//! grid dwarfs the device set. Serving-style workloads are the opposite
+//! regime: hundreds of problems, each with a handful of tiles — too
+//! small to fill even one device's streams, so looping single calls
+//! leaves most of the machine idle and pays taskization, cache warm-up
+//! and stream setup per problem (the motivation behind KBLAS's batched
+//! routines and Stream-K's work-centric decomposition).
+//!
+//! This module turns the existing runtime into a throughput engine in
+//! three steps, none of which touch the scheduling policy itself:
+//!
+//! 1. **Descriptors** ([`desc`]): [`BatchedGemm`] / [`BatchedSyrk`] /
+//!    [`BatchedTrsm`] hold per-problem routine descriptors (uniform
+//!    batches are just `vec![proto; count]`), wrapped in [`BatchDesc`].
+//! 2. **Fusion** ([`fuse`]): every problem is taskized with the
+//!    existing per-routine taskizers, then fused into ONE `TaskSet` —
+//!    ids renumbered, dependency chains offset, and every task/tile
+//!    reference tagged with its *problem index* `p`. The `KeyMap` and
+//!    the real engine resolve `(p, mat, ti, tj)` to per-problem
+//!    operands, so the ALRU cache and MESI-X coherence layers work
+//!    unchanged across problems: the batch is just a bigger key space.
+//! 3. **Work-centric quanta** ([`quanta`]): the fused ready set is
+//!    emitted in *scheduling quanta* — flop-balanced groups that
+//!    interleave problems round-robin — so the demand-driven queue
+//!    hands every device useful work from the first round and the
+//!    work-stealing stations stay saturated even when individual
+//!    problems have fewer tiles than the machine has streams.
+//!
+//! Public entry points live in [`crate::api::l3`]
+//! (`{s,d}gemm_batched`, strided and pointer-array variants); the
+//! simulator path is [`crate::coordinator::dispatch::gemm_batch_workload`].
+
+pub mod desc;
+pub mod fuse;
+pub mod quanta;
+
+pub use desc::{BatchDesc, BatchedGemm, BatchedSyrk, BatchedTrsm};
+pub use fuse::{fuse_batch, taskize_batch};
+pub use quanta::{plan_quanta, QuantaPlan, Quantum};

@@ -1,0 +1,188 @@
+//! Work-centric scheduling quanta (the Stream-K idea applied to the
+//! fused ready set).
+//!
+//! Per-problem tiling hands the scheduler work in problem-sized lumps:
+//! if problem 0 has 4 tile tasks and the machine has 4 devices × 4
+//! streams, emitting problem 0's tasks before problem 1's leaves 12
+//! stream slots dry until the queue reaches the next problem, and the
+//! demand-driven refill (one stream-round budget per wake) amplifies
+//! the effect. The splitter instead treats the whole batch as one flat
+//! pool of work and carves it into *quanta* — groups of head tasks
+//! with roughly equal flops, filled round-robin across problems — and
+//! the fused `TaskSet` emits its ready set in quantum order. Devices
+//! then pull balanced, problem-diverse work from the first wake
+//! onward, and the work-stealing stations have meaningfully sized
+//! victims from the start.
+//!
+//! Only *heads* are planned: chained tasks (TRSM) enter the queue
+//! dynamically when their predecessor completes, so a head's cost is
+//! accounted as its whole chain (the chain is sequential work pinned
+//! behind that head).
+
+use crate::task::Task;
+
+/// One scheduling quantum: a group of head tasks emitted contiguously.
+#[derive(Clone, Debug)]
+pub struct Quantum {
+    /// Head task ids (into the fused task vector).
+    pub tasks: Vec<usize>,
+    /// Aggregate chain flops of those heads.
+    pub flops: f64,
+}
+
+/// The splitter's output: the fused emission order plus the quantum
+/// structure (kept for observability and tests).
+#[derive(Clone, Debug)]
+pub struct QuantaPlan {
+    /// All head ids in emission order (quanta concatenated).
+    pub order: Vec<usize>,
+    pub quanta: Vec<Quantum>,
+    /// Flop target per quantum the splitter aimed for.
+    pub target_flops: f64,
+}
+
+/// Quanta per worker the splitter aims for. Mirrors the stream count:
+/// each device can have `n_streams` tasks in flight plus a staged RS,
+/// so ~4 quanta per worker keeps refills non-empty without shredding
+/// locality into single-task quanta.
+const QUANTA_PER_WORKER: usize = 4;
+
+/// Total flops of the chain starting at head `h` (the head itself for
+/// independent tasks).
+fn chain_flops(tasks: &[Task], h: usize) -> f64 {
+    let mut f = 0.0;
+    let mut cur = Some(h);
+    while let Some(i) = cur {
+        f += tasks[i].flops;
+        cur = tasks[i].successor;
+    }
+    f
+}
+
+/// Carve the fused ready set into flop-balanced, problem-interleaved
+/// quanta. `heads_per_problem[p]` lists problem `p`'s initially-ready
+/// task ids (in that problem's natural emission order).
+pub fn plan_quanta(
+    tasks: &[Task],
+    heads_per_problem: &[Vec<usize>],
+    n_workers: usize,
+) -> QuantaPlan {
+    let n_heads: usize = heads_per_problem.iter().map(Vec::len).sum();
+    let total: f64 = heads_per_problem
+        .iter()
+        .flatten()
+        .map(|&h| chain_flops(tasks, h))
+        .sum();
+    let n_quanta = (n_workers.max(1) * QUANTA_PER_WORKER).min(n_heads.max(1));
+    let target = (total / n_quanta as f64).max(1.0);
+
+    let mut order = Vec::with_capacity(n_heads);
+    let mut quanta = Vec::new();
+    let mut cur = Quantum { tasks: Vec::new(), flops: 0.0 };
+    let mut cursors = vec![0usize; heads_per_problem.len()];
+    let mut remaining = n_heads;
+    // Round-robin one head per problem per sweep: a quantum spans
+    // problems (the interleave), and consecutive sweeps keep a
+    // problem's tasks in their cache-friendly emission order.
+    while remaining > 0 {
+        for (p, cursor) in cursors.iter_mut().enumerate() {
+            if *cursor >= heads_per_problem[p].len() {
+                continue;
+            }
+            let h = heads_per_problem[p][*cursor];
+            *cursor += 1;
+            remaining -= 1;
+            order.push(h);
+            cur.tasks.push(h);
+            cur.flops += chain_flops(tasks, h);
+            if cur.flops >= target {
+                quanta.push(std::mem::replace(&mut cur, Quantum { tasks: Vec::new(), flops: 0.0 }));
+            }
+        }
+    }
+    if !cur.tasks.is_empty() {
+        quanta.push(cur);
+    }
+    QuantaPlan { order, quanta, target_flops: target }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::types::Trans;
+    use crate::task::{taskize_gemm, GemmDesc, TaskSet};
+
+    /// Fuse-free helper: N single-task problems of size n (t = n ⇒ one
+    /// tile each), ids offset like the fuser does.
+    fn toy_batch(sizes: &[usize]) -> (Vec<crate::task::Task>, Vec<Vec<usize>>) {
+        let mut tasks = Vec::new();
+        let mut heads = Vec::new();
+        for (p, &n) in sizes.iter().enumerate() {
+            let d = GemmDesc { ta: Trans::No, tb: Trans::No, m: n, n, k: n, alpha: 1.0, beta: 0.0, t: n };
+            let TaskSet { tasks: mut ts, heads: hs } = taskize_gemm(&d);
+            let off = tasks.len();
+            heads.push(hs.iter().map(|h| h + off).collect());
+            for t in &mut ts {
+                t.id += off;
+                t.p = p;
+            }
+            tasks.append(&mut ts);
+        }
+        (tasks, heads)
+    }
+
+    #[test]
+    fn covers_every_head_exactly_once() {
+        let (tasks, heads) = toy_batch(&[8, 16, 32, 8, 24]);
+        let plan = plan_quanta(&tasks, &heads, 4);
+        let mut seen = plan.order.clone();
+        seen.sort_unstable();
+        let mut expect: Vec<usize> = heads.iter().flatten().copied().collect();
+        expect.sort_unstable();
+        assert_eq!(seen, expect);
+        // quanta concatenate to the order
+        let cat: Vec<usize> = plan.quanta.iter().flat_map(|q| q.tasks.iter().copied()).collect();
+        assert_eq!(cat, plan.order);
+    }
+
+    #[test]
+    fn interleaves_problems_round_robin() {
+        let (tasks, heads) = toy_batch(&[8, 8, 8]);
+        let plan = plan_quanta(&tasks, &heads, 2);
+        // first three emitted heads come from three distinct problems
+        let ps: Vec<usize> = plan.order[..3].iter().map(|&h| tasks[h].p).collect();
+        assert_eq!(ps, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn quanta_are_flop_balanced() {
+        // 64 uniform single-tile problems on 4 workers ⇒ ~16 quanta of
+        // ~4 tasks each; no quantum more than double the target.
+        let sizes = vec![16usize; 64];
+        let (tasks, heads) = toy_batch(&sizes);
+        let plan = plan_quanta(&tasks, &heads, 4);
+        assert!(plan.quanta.len() >= 8, "expected many quanta, got {}", plan.quanta.len());
+        for q in &plan.quanta {
+            assert!(q.flops <= 2.0 * plan.target_flops + 1.0, "{} vs {}", q.flops, plan.target_flops);
+        }
+    }
+
+    #[test]
+    fn chains_account_successor_flops() {
+        // two-task chain: head's quantum cost covers both links
+        let (mut tasks, heads) = toy_batch(&[8, 8]);
+        tasks[0].successor = Some(1);
+        tasks[1].n_deps = 1;
+        let only_heads = vec![vec![0], heads[1].clone()];
+        let plan = plan_quanta(&tasks, &only_heads, 1);
+        let chained = plan.quanta.iter().find(|q| q.tasks.contains(&0)).unwrap();
+        assert!(chained.flops >= tasks[0].flops + tasks[1].flops);
+    }
+
+    #[test]
+    fn empty_batch_yields_empty_plan() {
+        let plan = plan_quanta(&[], &[], 4);
+        assert!(plan.order.is_empty());
+        assert!(plan.quanta.is_empty());
+    }
+}

@@ -89,7 +89,7 @@ USAGE:
   blasx gantt [--routine dgemm] [--n 4096] ... (sim flags) [--width 100]
               [--json out.json]
   blasx run   [--routine dgemm] [--n 1024] [--t 256] [--devices 2] [--pjrt]
-  blasx batch <workload.json> [--devices 2] [--t 256] [--pjrt]
+  blasx batch <workload.json> [--devices 2] [--t 256] [--pjrt] [--fused]
   blasx info
 
 `sim` runs the discrete-event engine on a paper machine and prints the
@@ -97,7 +97,11 @@ paper's metrics (GFLOPS, per-GPU profile, comm volume). `run` executes
 real numerics through the threaded runtime and checks them against the
 host oracle. `batch` executes a JSON workload script:
   [{\"routine\": \"dgemm\", \"n\": 1024, \"m\": 512, \"k\": 256}, ...]
-(square defaults when m/k omitted; routines: gemm/syrk/syr2k/symm/trmm/trsm)."
+(square defaults when m/k omitted; routines: gemm/syrk/syr2k/symm/trmm/trsm).
+With `--fused` a gemm-only script runs through `dgemm_batched`: every
+problem fused into ONE scheduler invocation (problem-namespaced tiles,
+work-centric quanta) instead of a per-call loop — the high-throughput
+path for many small problems."
 }
 
 /// Entry point used by main.rs; returns a process exit code.
@@ -152,6 +156,9 @@ fn cmd_batch(args: &Args) -> i32 {
     let mut ctx = api::Context::new(devices).with_tile(t);
     if args.get("pjrt").is_some() {
         ctx = ctx.with_backend(crate::coordinator::Backend::Pjrt);
+    }
+    if args.get("fused").is_some() {
+        return cmd_batch_fused(&ctx, calls);
     }
     let mut rng = Prng::new(7);
     let mut total_flops = 0.0;
@@ -219,6 +226,68 @@ fn cmd_batch(args: &Args) -> i32 {
         calls.len(),
         fmt_secs(secs),
         gflops(total_flops, secs)
+    );
+    0
+}
+
+/// The `--fused` path: a gemm-only workload script through ONE
+/// `dgemm_batched` call — the batch subsystem's throughput mode.
+fn cmd_batch_fused(ctx: &crate::api::Context, calls: &[crate::util::json::Json]) -> i32 {
+    use crate::api::{self, GemmBatchEntry};
+    use crate::util::json::Json;
+    use crate::util::prng::Prng;
+    use crate::util::stats::{fmt_secs, gflops};
+
+    let mut entries = Vec::with_capacity(calls.len());
+    for (i, call) in calls.iter().enumerate() {
+        let routine = call.get("routine").and_then(Json::as_str).unwrap_or("dgemm");
+        if parse_routine(routine) != Some(crate::api::types::Routine::Gemm) {
+            eprintln!("batch[{i}]: --fused supports gemm calls only (got {routine}); drop --fused to loop mixed workloads");
+            return 1;
+        }
+        let n = call.get("n").and_then(Json::as_usize).unwrap_or(512);
+        let m = call.get("m").and_then(Json::as_usize).unwrap_or(n);
+        let k = call.get("k").and_then(Json::as_usize).unwrap_or(n);
+        entries.push(GemmBatchEntry::new(m, n, k, 1.0, 0.0));
+    }
+
+    let mut rng = Prng::new(7);
+    let mut abufs = Vec::with_capacity(entries.len());
+    let mut bbufs = Vec::with_capacity(entries.len());
+    let mut cbufs = Vec::with_capacity(entries.len());
+    let mut total_flops = 0.0;
+    for e in &entries {
+        let mut a = vec![0.0f64; e.m * e.k];
+        let mut b = vec![0.0f64; e.k * e.n];
+        rng.fill_f64(&mut a, -1.0, 1.0);
+        rng.fill_f64(&mut b, -1.0, 1.0);
+        abufs.push(a);
+        bbufs.push(b);
+        cbufs.push(vec![0.0f64; e.m * e.n]);
+        total_flops += 2.0 * (e.m * e.n * e.k) as f64;
+    }
+    let arefs: Vec<&[f64]> = abufs.iter().map(Vec::as_slice).collect();
+    let brefs: Vec<&[f64]> = bbufs.iter().map(Vec::as_slice).collect();
+    let mut crefs: Vec<&mut [f64]> = cbufs.iter_mut().map(Vec::as_mut_slice).collect();
+
+    let start = std::time::Instant::now();
+    let rep = match api::dgemm_batched(ctx, &entries, &arefs, &brefs, &mut crefs) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("batch --fused: {e}");
+            return 1;
+        }
+    };
+    let secs = start.elapsed().as_secs_f64();
+    println!(
+        "batch --fused: {} problems in {} ({:.2} GFLOPS aggregate, one scheduler invocation)",
+        entries.len(),
+        fmt_secs(secs),
+        gflops(total_flops, secs)
+    );
+    println!(
+        "  tasks/device {:?}  steals {:?}  cache (hit,miss,evict) {:?}",
+        rep.tasks_per_device, rep.steals, rep.cache_stats
     );
     0
 }
@@ -422,6 +491,28 @@ mod tests {
         let rc = dispatch(&sv(&["batch", path.to_str().unwrap(), "--t", "32", "--devices", "2"]));
         std::fs::remove_file(&path).unwrap();
         assert_eq!(rc, 0);
+    }
+
+    #[test]
+    fn batch_fused_runs_gemm_script() {
+        let path = std::env::temp_dir().join(format!("blasx_fused_{}.json", std::process::id()));
+        std::fs::write(
+            &path,
+            r#"[{"routine": "dgemm", "n": 64}, {"routine": "dgemm", "n": 48, "m": 33, "k": 17}]"#,
+        )
+        .unwrap();
+        let rc = dispatch(&sv(&["batch", path.to_str().unwrap(), "--t", "32", "--fused"]));
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(rc, 0);
+    }
+
+    #[test]
+    fn batch_fused_rejects_non_gemm() {
+        let path = std::env::temp_dir().join(format!("blasx_fusedbad_{}.json", std::process::id()));
+        std::fs::write(&path, r#"[{"routine": "dtrsm", "n": 64}]"#).unwrap();
+        let rc = dispatch(&sv(&["batch", path.to_str().unwrap(), "--fused"]));
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(rc, 1);
     }
 
     #[test]

@@ -143,6 +143,30 @@ pub fn square_workload(routine: Routine, n: usize, t: usize, dtype: Dtype) -> Wo
     Workload { routine, ts, keymap: KeyMap::new(a, b, c, esz), dtype }
 }
 
+/// Build the fused workload for a GEMM batch: every problem taskized at
+/// tile size `t`, fused with problem-namespaced tiles, heads emitted in
+/// scheduling-quantum order (see `crate::batch`). `n_workers` sizes the
+/// quanta — pass the machine's device count.
+pub fn gemm_batch_workload(
+    problems: Vec<crate::task::GemmDesc>,
+    t: usize,
+    dtype: Dtype,
+    n_workers: usize,
+) -> Workload {
+    use crate::batch::{taskize_batch, BatchDesc, BatchedGemm};
+    let desc = BatchDesc::Gemm(BatchedGemm::variable(problems));
+    let ts = taskize_batch(&desc, t, n_workers);
+    // An empty batch is a valid no-op workload (mirrors the real-engine
+    // API); give the KeyMap a degenerate problem so it has a tile size.
+    let grids = if desc.is_empty() {
+        vec![[crate::tile::TileGrid::new(0, 0, t); 3]]
+    } else {
+        desc.grids(t)
+    };
+    let keymap = KeyMap::for_batch(grids, dtype.size_bytes());
+    Workload { routine: Routine::Gemm, ts, keymap, dtype }
+}
+
 /// Simulate a workload on a machine under a config, routing to the
 /// requested policy (BLASX here; baselines live in `crate::baselines`
 /// and are selected through the same entry point).
@@ -165,6 +189,31 @@ mod tests {
             w.ts.validate().unwrap();
             assert!(w.total_flops() > 0.0, "{r:?}");
         }
+    }
+
+    #[test]
+    fn batch_workload_simulates_on_blasx() {
+        let cfg = RunConfig { t: 64, ..Default::default() };
+        let machine = toy(2, 64 * (64 * 64 * 8));
+        let probs: Vec<GemmDesc> = (0..8)
+            .map(|i| GemmDesc {
+                ta: Trans::No,
+                tb: Trans::No,
+                m: 64 + 32 * (i % 3),
+                n: 64,
+                k: 64,
+                alpha: 1.0,
+                beta: 0.0,
+                t: 0,
+            })
+            .collect();
+        let w = gemm_batch_workload(probs, 64, Dtype::F64, machine.devices.len());
+        w.ts.validate().unwrap();
+        let rep = run_sim(&cfg, &machine, &w);
+        assert!(rep.feasible && rep.makespan > 0.0);
+        assert_eq!(rep.tasks_per_worker.iter().sum::<usize>(), w.ts.tasks.len());
+        // both devices contributed — the quanta interleave feeds both
+        assert!(rep.tasks_per_worker.iter().all(|&c| c > 0), "{:?}", rep.tasks_per_worker);
     }
 
     #[test]

@@ -5,31 +5,52 @@
 //! runs matrices that are never allocated (N up to 39936 ⇒ 12.7 GB per
 //! operand), so it lays the three operands out in a *virtual* address
 //! space with the same uniqueness and alignment properties.
+//!
+//! Batched runs extend the scheme with a *problem index*: each problem
+//! of a fused batch gets its own triple of virtual operand bases, so the
+//! ALRU/MESI-X layers see one flat key space across the whole batch and
+//! need no batching awareness at all.
 
 use crate::task::TileRef;
 use crate::tile::{MatId, TileGrid, TileKey};
 
-/// Geometry of the three operands of one routine invocation, plus the
-/// virtual base addresses the simulator keys tiles by.
+/// Geometry of the operands of one routine invocation — or of every
+/// problem of a fused batch — plus the virtual base addresses the
+/// simulator keys tiles by.
 #[derive(Clone, Debug)]
 pub struct KeyMap {
-    grids: [TileGrid; 3],
-    bases: [usize; 3],
+    /// Per-problem operand grids in (A, B, C) order.
+    grids: Vec<[TileGrid; 3]>,
     /// Element size in bytes.
     pub esz: usize,
     /// Tile size.
     pub t: usize,
 }
 
+/// Virtual span reserved per operand: larger than any matrix footprint
+/// (2^44 bytes ≈ 17 TB) so keys can never collide across operands or
+/// problems.
+const SPAN: usize = 1 << 44;
+
 impl KeyMap {
     /// Build from operand grids (A, B, C order). `esz` is the element
     /// byte width; bases are synthetic, spaced far apart.
     pub fn new(a: TileGrid, b: TileGrid, c: TileGrid, esz: usize) -> KeyMap {
-        let t = c.t;
-        // Space the virtual operands by more than any matrix footprint
-        // (2^44 bytes) so keys can never collide across operands.
-        const SPAN: usize = 1 << 44;
-        KeyMap { grids: [a, b, c], bases: [SPAN, 2 * SPAN, 3 * SPAN], esz, t }
+        Self::for_batch(vec![[a, b, c]], esz)
+    }
+
+    /// Build for a fused batch: one (A, B, C) grid triple per problem.
+    /// All problems must share the output tile size.
+    pub fn for_batch(problems: Vec<[TileGrid; 3]>, esz: usize) -> KeyMap {
+        assert!(!problems.is_empty(), "KeyMap needs at least one problem");
+        // 3 operands × SPAN each per problem must fit the address space.
+        assert!(
+            problems.len() <= usize::MAX / (3 * SPAN) - 1,
+            "batch too large for the virtual key space"
+        );
+        let t = problems[0][2].t;
+        debug_assert!(problems.iter().all(|g| g[2].t == t), "mixed tile sizes in batch");
+        KeyMap { grids: problems, esz, t }
     }
 
     fn idx(mat: MatId) -> usize {
@@ -40,17 +61,29 @@ impl KeyMap {
         }
     }
 
-    /// The grid of an operand.
-    pub fn grid(&self, mat: MatId) -> &TileGrid {
-        &self.grids[Self::idx(mat)]
+    /// Number of problems this map covers (1 for single-routine runs).
+    pub fn n_problems(&self) -> usize {
+        self.grids.len()
     }
 
-    /// Virtual cache key of a tile (unique per (mat, ti, tj), stable
-    /// across calls — mirrors a host address).
+    /// The grid of an operand of problem 0 (single-problem accessor,
+    /// kept for the baseline engines which never run batches).
+    pub fn grid(&self, mat: MatId) -> &TileGrid {
+        &self.grids[0][Self::idx(mat)]
+    }
+
+    /// The grid of an operand of problem `p`.
+    pub fn grid_of(&self, p: usize, mat: MatId) -> &TileGrid {
+        &self.grids[p][Self::idx(mat)]
+    }
+
+    /// Virtual cache key of a tile (unique per (p, mat, ti, tj), stable
+    /// across calls — mirrors a host address). Problem 0's bases match
+    /// the historical single-problem layout exactly.
     pub fn key(&self, r: TileRef) -> TileKey {
-        let g = self.grid(r.mat);
-        let addr = self.bases[Self::idx(r.mat)]
-            + (g.col_origin(r.tj) * g.rows + g.row_origin(r.ti)) * self.esz;
+        let g = self.grid_of(r.p, r.mat);
+        let base = SPAN * (1 + 3 * r.p + Self::idx(r.mat));
+        let addr = base + (g.col_origin(r.tj) * g.rows + g.row_origin(r.ti)) * self.esz;
         TileKey { addr, mat: r.mat, ti: r.ti, tj: r.tj }
     }
 
@@ -63,7 +96,7 @@ impl KeyMap {
     /// *Actual* bytes of a tile (edge tiles are smaller) — what the DMA
     /// moves and what Table V counts.
     pub fn transfer_bytes(&self, r: TileRef) -> usize {
-        let (h, w) = self.grid(r.mat).tile_dims(r.ti, r.tj);
+        let (h, w) = self.grid_of(r.p, r.mat).tile_dims(r.ti, r.tj);
         h * w * self.esz
     }
 }
@@ -107,5 +140,52 @@ mod tests {
         assert_eq!(m.transfer_bytes(TileRef::new(MatId::A, 0, 0)), 32 * 32 * 8);
         assert_eq!(m.transfer_bytes(TileRef::new(MatId::A, 3, 0)), 4 * 32 * 8);
         assert_eq!(m.tile_bytes(), 32 * 32 * 8);
+    }
+
+    #[test]
+    fn batch_keys_unique_across_problems() {
+        let g = |n: usize| TileGrid::new(n, n, 32);
+        let m = KeyMap::for_batch(vec![[g(64), g(64), g(64)], [g(64), g(64), g(64)]], 8);
+        assert_eq!(m.n_problems(), 2);
+        let mut seen = std::collections::HashSet::new();
+        for p in 0..2 {
+            for mat in [MatId::A, MatId::B, MatId::C] {
+                for (ti, tj) in g(64).iter() {
+                    assert!(seen.insert(m.key(TileRef::for_problem(p, mat, ti, tj)).addr));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn problem_zero_matches_single_problem_layout() {
+        // A batch map's problem 0 must key exactly like the plain map,
+        // so caches warmed by a single call stay valid for a batch over
+        // the same operands.
+        let single = map();
+        let batch = KeyMap::for_batch(
+            vec![
+                [
+                    TileGrid::new(100, 50, 32),
+                    TileGrid::new(50, 80, 32),
+                    TileGrid::new(100, 80, 32),
+                ],
+                [TileGrid::new(32, 32, 32); 3],
+            ],
+            8,
+        );
+        let r = TileRef::new(MatId::B, 1, 2);
+        assert_eq!(single.key(r), batch.key(r));
+    }
+
+    #[test]
+    fn batch_transfer_bytes_follow_problem_geometry() {
+        let m = KeyMap::for_batch(
+            vec![[TileGrid::new(64, 64, 32); 3], [TileGrid::new(40, 40, 32); 3]],
+            8,
+        );
+        assert_eq!(m.transfer_bytes(TileRef::for_problem(0, MatId::A, 1, 1)), 32 * 32 * 8);
+        // problem 1's edge tile is 8x8
+        assert_eq!(m.transfer_bytes(TileRef::for_problem(1, MatId::A, 1, 1)), 8 * 8 * 8);
     }
 }

@@ -13,6 +13,7 @@ pub mod real_engine;
 pub mod sim_engine;
 
 pub use config::{Backend, Policy, RunConfig};
-pub use dispatch::{run_sim, square_workload, Workload};
+pub use dispatch::{gemm_batch_workload, run_sim, square_workload, Workload};
 pub use keymap::KeyMap;
+pub use real_engine::{run_real, run_real_batch, Mats, RealReport};
 pub use sim_engine::{simulate, SimEngine, SimReport};

@@ -83,7 +83,9 @@ struct Shared<'m, T: Scalar> {
     caches: Mutex<TileCacheSet>,
     stations: Vec<Mutex<Station>>,
     arenas: Vec<Arena<T>>,
-    mats: Mats<'m, T>,
+    /// Operand sets, indexed by `Task::p` / `TileRef::p` (a single
+    /// routine call is a batch of one).
+    mats: Vec<Mats<'m, T>>,
     executor: Option<TileExecutor>,
     /// First kernel error (poisoning the run).
     failure: Mutex<Option<Error>>,
@@ -102,7 +104,29 @@ pub fn run_real<T: Scalar>(
     n_devices: usize,
     arena_bytes: usize,
 ) -> Result<RealReport> {
+    run_real_batch(cfg, ts, vec![mats], n_devices, arena_bytes)
+}
+
+/// Run a *fused batch* task set: `problems[p]` holds the operands of
+/// every task with `Task::p == p` (see `crate::batch`). The scheduling
+/// machinery is identical to the single-problem path — one queue, one
+/// set of reservation stations, one tile-cache set spanning all
+/// problems — which is exactly what amortizes runtime setup across the
+/// batch. Operands shared between problems (e.g. one weight matrix
+/// multiplied by many activation sets) share cache entries for free,
+/// because tiles are keyed by host address.
+pub fn run_real_batch<'m, T: Scalar>(
+    cfg: &RunConfig,
+    ts: &TaskSet,
+    problems: Vec<Mats<'m, T>>,
+    n_devices: usize,
+    arena_bytes: usize,
+) -> Result<RealReport> {
     assert!(n_devices >= 1);
+    debug_assert!(
+        ts.tasks.iter().all(|t| t.p < problems.len()),
+        "task problem index out of range"
+    );
     let t = cfg.t;
     let tile_bytes = t * t * std::mem::size_of::<T>();
     assert!(
@@ -137,7 +161,7 @@ pub fn run_real<T: Scalar>(
         caches: Mutex::new(caches),
         stations: (0..n_devices).map(|_| Mutex::new(Station::new(cfg.rs_capacity))).collect(),
         arenas,
-        mats,
+        mats: problems,
         executor,
         failure: Mutex::new(None),
         steals: (0..n_devices).map(|_| AtomicUsize::new(0)).collect(),
@@ -195,7 +219,7 @@ fn worker_loop<T: Scalar>(dev: usize, sh: &Shared<'_, T>, tasks_done: &AtomicUsi
                 match sh.queue.dequeue() {
                     Some(t) => {
                         let caches = sh.caches.lock().unwrap();
-                        let p = task_priority(&sh.tasks[t], dev, &caches, |r| sh.mats.key(r));
+                        let p = task_priority(&sh.tasks[t], dev, &caches, |r| sh.mats[r.p].key(r));
                         rs.insert(t, p);
                     }
                     None => break,
@@ -218,7 +242,7 @@ fn worker_loop<T: Scalar>(dev: usize, sh: &Shared<'_, T>, tasks_done: &AtomicUsi
             // refresh priorities after arrivals, then bind top tasks
             {
                 let caches = sh.caches.lock().unwrap();
-                rs.refresh(|t| task_priority(&sh.tasks[t], dev, &caches, |r| sh.mats.key(r)));
+                rs.refresh(|t| task_priority(&sh.tasks[t], dev, &caches, |r| sh.mats[r.p].key(r)));
             }
             for _ in 0..n_streams {
                 match rs.take_best() {
@@ -270,7 +294,7 @@ fn run_task<T: Scalar>(
     let tile_elems = t * t;
     let tile_bytes = tile_elems * std::mem::size_of::<T>();
     let task = &sh.tasks[tid];
-    let cmat = sh.mats.of(MatId::C);
+    let cmat = sh.mats[task.p].of(MatId::C);
     let ckey = cmat.tile_key(task.ci, task.cj);
 
     // -- C accumulator block
@@ -360,8 +384,8 @@ fn acquire_input<T: Scalar>(
     let t = sh.cfg.t;
     let tile_elems = t * t;
     let tile_bytes = tile_elems * std::mem::size_of::<T>();
-    let mat = sh.mats.of(tile.mat);
-    let key = sh.mats.key(tile);
+    let mat = sh.mats[tile.p].of(tile.mat);
+    let key = sh.mats[tile.p].key(tile);
     let mut caches = sh.caches.lock().unwrap();
     let acq = {
         let mut acq = caches.acquire(dev, key, tile_bytes);

@@ -283,11 +283,7 @@ impl<'a> SimEngine<'a> {
         // -- completed tasks: M→I write-back bookkeeping + chain unlock
         let finished = std::mem::take(&mut self.workers[d].finished);
         for tid in finished {
-            let key = self.keymap.key(crate::task::TileRef::new(
-                crate::tile::MatId::C,
-                self.tasks[tid].ci,
-                self.tasks[tid].cj,
-            ));
+            let key = self.keymap.key(self.tasks[tid].c_ref());
             self.caches.writeback(d, &key);
             self.caches.release(d, &key);
             self.workers[d].tasks_done += 1;
@@ -317,9 +313,7 @@ impl<'a> SimEngine<'a> {
         while self.workers[d].active.len() < n_streams {
             let Some(slot) = self.workers[d].rs.take_best() else { break };
             let t = &self.tasks[slot.task];
-            let ckey = self
-                .keymap
-                .key(crate::task::TileRef::new(crate::tile::MatId::C, t.ci, t.cj));
+            let ckey = self.keymap.key(t.c_ref());
             match self.caches.acquire_output(d, ckey, self.keymap.tile_bytes()) {
                 Some(acq) => {
                     self.alloc_cost += acq.alloc_cost;
@@ -331,9 +325,7 @@ impl<'a> SimEngine<'a> {
                         self.workers[d].active.iter().map(|a| a.stream).collect();
                     let stream = (0..n_streams).find(|s| !used.contains(s)).unwrap();
                     if t.reads_c {
-                        let bytes = self.keymap.transfer_bytes(
-                            crate::task::TileRef::new(crate::tile::MatId::C, t.ci, t.cj),
-                        );
+                        let bytes = self.keymap.transfer_bytes(t.c_ref());
                         let ready = self.workers[d].stream_free[stream].max(now);
                         let done = self.topo.book_hd(d, Dir::H2D, bytes, ready);
                         self.trace.record(d, stream, EvKind::H2d, ready, done, bytes as f64);
@@ -417,9 +409,7 @@ impl<'a> SimEngine<'a> {
             if a.next_step == self.tasks[a.task].steps.len() {
                 // -- task complete: C write-back after its last kernel
                 let t = &self.tasks[a.task];
-                let bytes = self
-                    .keymap
-                    .transfer_bytes(crate::task::TileRef::new(crate::tile::MatId::C, t.ci, t.cj));
+                let bytes = self.keymap.transfer_bytes(t.c_ref());
                 let ready = self.workers[d].stream_free[a.stream];
                 let done = self.topo.book_hd(d, Dir::D2H, bytes, ready);
                 self.trace.record(d, a.stream, EvKind::D2h, ready, done, bytes as f64);

@@ -1,13 +1,16 @@
 //! BLASX error types.
+//!
+//! Hand-written `Display`/`Error` impls — the offline crate set has no
+//! `thiserror`, and the surface is small enough that the derive buys
+//! nothing but a dependency.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Library-wide error type.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Invalid argument to a BLAS routine (xerbla-style): the 1-based
     /// parameter index and a human-readable description.
-    #[error("blasx: illegal parameter #{index} to {routine}: {reason}")]
     IllegalParam {
         routine: &'static str,
         index: usize,
@@ -15,23 +18,18 @@ pub enum Error {
     },
 
     /// The runtime context is misconfigured (no devices, bad tile size…).
-    #[error("blasx config error: {0}")]
     Config(String),
 
     /// PJRT / XLA failure while loading or executing an artifact.
-    #[error("blasx runtime error: {0}")]
     Runtime(String),
 
     /// A required AOT artifact is missing — run `make artifacts`.
-    #[error("missing artifact `{0}` (run `make artifacts`)")]
     MissingArtifact(String),
 
     /// The artifact store (manifest.json / *.hlo.txt) is unreadable.
-    #[error("blasx artifact error: {0}")]
     Artifact(String),
 
     /// Device memory exhausted and nothing evictable.
-    #[error("device {device} out of memory: need {need} bytes, capacity {capacity}")]
     OutOfDeviceMemory {
         device: usize,
         need: usize,
@@ -39,12 +37,46 @@ pub enum Error {
     },
 
     /// Internal invariant violation (a bug in BLASX itself).
-    #[error("blasx internal error: {0}")]
     Internal(String),
 
     /// I/O error (artifact files, trace export…).
-    #[error("blasx io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::IllegalParam { routine, index, reason } => {
+                write!(f, "blasx: illegal parameter #{index} to {routine}: {reason}")
+            }
+            Error::Config(msg) => write!(f, "blasx config error: {msg}"),
+            Error::Runtime(msg) => write!(f, "blasx runtime error: {msg}"),
+            Error::MissingArtifact(name) => {
+                write!(f, "missing artifact `{name}` (run `make artifacts`)")
+            }
+            Error::Artifact(msg) => write!(f, "blasx artifact error: {msg}"),
+            Error::OutOfDeviceMemory { device, need, capacity } => {
+                write!(f, "device {device} out of memory: need {need} bytes, capacity {capacity}")
+            }
+            Error::Internal(msg) => write!(f, "blasx internal error: {msg}"),
+            Error::Io(e) => write!(f, "blasx io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -72,5 +104,13 @@ mod tests {
         assert!(e.to_string().contains("#3"));
         let e = Error::MissingArtifact("gemm_nn_f64_256".into());
         assert!(e.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn io_errors_chain_as_source() {
+        use std::error::Error as _;
+        let e = Error::from(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert!(e.to_string().contains("io error"));
+        assert!(e.source().is_some());
     }
 }

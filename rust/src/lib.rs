@@ -15,9 +15,38 @@
 //!
 //! GPUs/PCI-E are simulated (see `sim`); numerics are real. See DESIGN.md
 //! for the full system inventory and experiment index.
+//!
+//! ## Batched execution
+//!
+//! The per-call runtime shines on one large problem; serving workloads
+//! are the opposite regime — hundreds of small/irregular GEMMs whose
+//! tile grids cannot fill the device set alone. The [`batch`] subsystem
+//! turns the same runtime into a throughput engine:
+//!
+//! - [`api::l3::gemm_batched`] / [`api::l3::gemm_batched_strided`]
+//!   (`dgemm_batched`, `sgemm_batched`, … aliases) accept uniform or
+//!   variable-size batches, pointer-array or cuBLAS-style strided;
+//! - every problem is taskized by the existing per-routine taskizers
+//!   and *fused* into one `TaskSet`, with tasks and tile references
+//!   tagged by a problem index — the ALRU cache and MESI-X coherence
+//!   layers work unchanged because the batch is just a larger key
+//!   space (operands shared across problems even share cache entries,
+//!   since tiles are keyed by host address);
+//! - a work-centric splitter (Stream-K flavour, [`batch::quanta`])
+//!   emits the fused ready set in flop-balanced, problem-interleaved
+//!   *scheduling quanta*, so the demand-driven stations stay saturated
+//!   even when single problems are smaller than one device's streams.
+//!
+//! Prefer the batch entry points over looping single calls whenever
+//! problems are small relative to the machine (≲ a few tiles per
+//! device) or numerous; numerics are bit-for-bit identical to the
+//! looped single-call reference on the same backend. See
+//! `benches/batch_throughput.rs` for the throughput comparison and
+//! `examples/batched_inference.rs` for an ANN-serving walkthrough.
 
 pub mod api;
 pub mod baselines;
+pub mod batch;
 pub mod bench;
 pub mod cache;
 pub mod cli;

@@ -13,7 +13,7 @@
 use super::artifact::ArtifactStore;
 use crate::api::Dtype;
 use crate::{Error, Result};
-use once_cell::sync::OnceCell;
+use crate::util::once::OnceCell;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 

@@ -53,6 +53,7 @@ mod tests {
             id: 0,
             ci: 0,
             cj: 0,
+            p: 0,
             m: 4,
             n: 4,
             reads_c: true,

@@ -11,16 +11,29 @@ use crate::tile::MatId;
 /// Reference to an input tile by operand matrix and tile indices. The
 /// concrete host address (cache key) is resolved against the routine's
 /// `HostMat`s at execution time.
+///
+/// `p` is the *problem index*: single-routine calls use 0 throughout;
+/// the batch subsystem (`crate::batch`) namespaces the fused task set
+/// by assigning each problem its own `p`, so the same `(mat, ti, tj)`
+/// coordinates in different problems resolve to different operands
+/// while the cache/coherence layers see ordinary per-key tiles.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct TileRef {
     pub mat: MatId,
     pub ti: usize,
     pub tj: usize,
+    /// Problem index within a fused batch (0 for single-problem runs).
+    pub p: usize,
 }
 
 impl TileRef {
     pub fn new(mat: MatId, ti: usize, tj: usize) -> TileRef {
-        TileRef { mat, ti, tj }
+        TileRef { mat, ti, tj, p: 0 }
+    }
+
+    /// A tile reference inside problem `p` of a fused batch.
+    pub fn for_problem(p: usize, mat: MatId, ti: usize, tj: usize) -> TileRef {
+        TileRef { mat, ti, tj, p }
     }
 }
 
@@ -75,6 +88,9 @@ pub struct Task {
     /// Output tile indices into the C (output) grid.
     pub ci: usize,
     pub cj: usize,
+    /// Problem index within a fused batch (0 for single-problem runs);
+    /// resolves which operand set the task's tiles belong to.
+    pub p: usize,
     /// Output tile element dims.
     pub m: usize,
     pub n: usize,
@@ -105,9 +121,14 @@ impl Task {
     /// All distinct input tiles (for priority Eq. 3 and prefetch).
     pub fn input_tiles(&self) -> Vec<TileRef> {
         let mut v: Vec<TileRef> = self.steps.iter().flat_map(|s| s.inputs()).collect();
-        v.sort_by_key(|r| (r.mat, r.ti, r.tj));
+        v.sort_by_key(|r| (r.p, r.mat, r.ti, r.tj));
         v.dedup();
         v
+    }
+
+    /// Reference to this task's output tile (problem-namespaced).
+    pub fn c_ref(&self) -> TileRef {
+        TileRef { mat: MatId::C, ti: self.ci, tj: self.cj, p: self.p }
     }
 
     /// Flops attributable to full-GEMM steps (Table I numerator).
@@ -157,8 +178,11 @@ impl TaskSet {
             if t.id != idx {
                 return Err(format!("task {idx} has id {}", t.id));
             }
-            if !outs.insert((t.ci, t.cj)) {
-                return Err(format!("duplicate output tile ({}, {})", t.ci, t.cj));
+            if !outs.insert((t.p, t.ci, t.cj)) {
+                return Err(format!(
+                    "duplicate output tile ({}, {}) in problem {}",
+                    t.ci, t.cj, t.p
+                ));
             }
             if let Some(s) = t.successor {
                 if s >= n {
@@ -220,6 +244,7 @@ mod tests {
             id: 0,
             ci: 0,
             cj: 0,
+            p: 0,
             m: 4,
             n: 4,
             reads_c: true,
@@ -241,6 +266,7 @@ mod tests {
             id: 0,
             ci: 0,
             cj: 0,
+            p: 0,
             m: 2,
             n: 2,
             reads_c: false,
@@ -260,6 +286,7 @@ mod tests {
             id,
             ci: 0,
             cj: 0,
+            p: 0,
             m: 1,
             n: 1,
             reads_c: true,
@@ -279,6 +306,7 @@ mod tests {
             id: 0,
             ci: 0,
             cj: 0,
+            p: 0,
             m: 1,
             n: 1,
             reads_c: true,

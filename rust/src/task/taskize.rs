@@ -98,7 +98,7 @@ fn mk_task(
     mask: WriteMask,
     steps: Vec<Step>,
 ) -> Task {
-    Task { id, ci, cj, m, n, reads_c, mask, steps, successor: None, n_deps: 0, flops: 0.0 }
+    Task { id, ci, cj, p: 0, m, n, reads_c, mask, steps, successor: None, n_deps: 0, flops: 0.0 }
         .seal()
 }
 

@@ -1,33 +1,36 @@
-//! A tiny `log`-facade backend writing to stderr.
+//! A tiny self-contained stderr logger (the `log` facade crate is
+//! unreachable offline, and nothing in the crate needs more than a
+//! leveled eprintln).
 //!
 //! Controlled by `BLASX_LOG` (error|warn|info|debug|trace, default warn).
 
-use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::Once;
 
-struct StderrLogger {
-    level: Level,
+/// Log severity, most to least severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
 }
 
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= self.level
-    }
-
-    fn log(&self, record: &Record) {
-        if self.enabled(record.metadata()) {
-            eprintln!(
-                "[blasx {:5} {}] {}",
-                record.level(),
-                record.target(),
-                record.args()
-            );
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
         }
     }
-
-    fn flush(&self) {}
 }
 
+/// Current max level as its numeric value (Warn before init()).
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
 static INIT: Once = Once::new();
 
 /// Install the logger (idempotent). Reads `BLASX_LOG` for the level.
@@ -38,21 +41,38 @@ pub fn init() {
             Ok("info") => Level::Info,
             Ok("debug") => Level::Debug,
             Ok("trace") => Level::Trace,
-            Ok("warn") | _ => Level::Warn,
+            _ => Level::Warn,
         };
-        let logger = Box::leak(Box::new(StderrLogger { level }));
-        if log::set_logger(logger).is_ok() {
-            log::set_max_level(LevelFilter::Trace.min(level.to_level_filter()));
-        }
+        LEVEL.store(level as u8, Ordering::Relaxed);
     });
+}
+
+/// Would a message at `level` be emitted?
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one message (already formatted) if the level is enabled.
+pub fn log(level: Level, target: &str, msg: &str) {
+    if enabled(level) {
+        eprintln!("[blasx {:5} {}] {}", level.tag(), target, msg);
+    }
+}
+
+/// Convenience: warn-level message.
+pub fn warn(target: &str, msg: &str) {
+    log(Level::Warn, target, msg);
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::warn!("logger smoke test");
+        init();
+        init();
+        warn("logger", "logger smoke test");
+        assert!(enabled(Level::Error));
     }
 }

@@ -6,6 +6,7 @@
 
 pub mod json;
 pub mod logger;
+pub mod once;
 pub mod prng;
 pub mod prop;
 pub mod stats;

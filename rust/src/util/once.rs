@@ -1,0 +1,94 @@
+//! A `OnceCell` with fallible initialization (`once_cell` is
+//! unreachable offline; std's `OnceLock::get_or_try_init` is not yet
+//! stable). Built from `OnceLock` + an init mutex: the lock serializes
+//! initializers so a failing one can be retried, while reads after
+//! initialization go through the lock-free `OnceLock` fast path.
+
+use std::sync::{Mutex, OnceLock};
+
+/// A thread-safe cell initialized at most once, with `Result`-returning
+/// initializers.
+pub struct OnceCell<T> {
+    cell: OnceLock<T>,
+    init: Mutex<()>,
+}
+
+impl<T> OnceCell<T> {
+    pub const fn new() -> OnceCell<T> {
+        OnceCell { cell: OnceLock::new(), init: Mutex::new(()) }
+    }
+
+    /// The value, if initialized.
+    pub fn get(&self) -> Option<&T> {
+        self.cell.get()
+    }
+
+    /// Get the value, running `f` to create it if empty. If `f` fails
+    /// the cell stays empty and a later call may retry.
+    pub fn get_or_try_init<F, E>(&self, f: F) -> Result<&T, E>
+    where
+        F: FnOnce() -> Result<T, E>,
+    {
+        if let Some(v) = self.cell.get() {
+            return Ok(v);
+        }
+        let _guard = self.init.lock().unwrap_or_else(|e| e.into_inner());
+        // Re-check under the lock: another thread may have won the race.
+        if self.cell.get().is_none() {
+            let v = f()?;
+            let _ = self.cell.set(v);
+        }
+        Ok(self.cell.get().expect("OnceCell set under init lock"))
+    }
+
+    /// Infallible variant.
+    pub fn get_or_init<F>(&self, f: F) -> &T
+    where
+        F: FnOnce() -> T,
+    {
+        match self.get_or_try_init::<_, std::convert::Infallible>(|| Ok(f())) {
+            Ok(v) => v,
+            Err(never) => match never {},
+        }
+    }
+}
+
+impl<T> Default for OnceCell<T> {
+    fn default() -> Self {
+        OnceCell::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failed_init_can_retry() {
+        let c: OnceCell<u32> = OnceCell::new();
+        assert!(c.get_or_try_init(|| Err::<u32, &str>("nope")).is_err());
+        assert_eq!(c.get(), None);
+        assert_eq!(*c.get_or_try_init(|| Ok::<u32, &str>(7)).unwrap(), 7);
+        // Subsequent initializers are ignored.
+        assert_eq!(*c.get_or_try_init(|| Ok::<u32, &str>(9)).unwrap(), 7);
+        assert_eq!(c.get(), Some(&7));
+    }
+
+    #[test]
+    fn concurrent_init_runs_once() {
+        let c: OnceCell<usize> = OnceCell::new();
+        let hits = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    let v = c.get_or_init(|| {
+                        hits.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                        42
+                    });
+                    assert_eq!(*v, 42);
+                });
+            }
+        });
+        assert_eq!(hits.load(std::sync::atomic::Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,253 @@
+//! Batch-subsystem correctness: the fused runtime against the looped
+//! single-call reference.
+//!
+//! Two oracles, two guarantees:
+//! - vs a loop of single `hostblas::gemm_blocked` calls the batch is
+//!   numerically *close* (different blocking ⇒ different summation
+//!   order, so tolerance-based);
+//! - vs a loop of single `api::dgemm` calls through the same runtime
+//!   (same kernel backend) the batch is **bit-for-bit identical**:
+//!   fusion only renumbers tasks, so every C tile is produced by the
+//!   exact same sequence of tile-kernel invocations.
+
+use blasx::api::types::Trans;
+use blasx::api::{self, Context, GemmBatchEntry};
+use blasx::coordinator::RunConfig;
+use blasx::hostblas;
+use blasx::util::prng::Prng;
+use blasx::util::prop::{check_close, Cases};
+
+fn ctx(t: usize) -> Context {
+    Context { n_devices: 2, arena_bytes: 4 << 20, cfg: RunConfig { t, ..Default::default() } }
+}
+
+/// Stored dims of op(X) given (rows, cols) of the op result.
+fn stored(trans: Trans, r: usize, c: usize) -> (usize, usize) {
+    if trans == Trans::No {
+        (r, c)
+    } else {
+        (c, r)
+    }
+}
+
+struct Problem {
+    e: GemmBatchEntry,
+    a: Vec<f64>,
+    b: Vec<f64>,
+    c: Vec<f64>,
+}
+
+/// A random variable-size batch with edge tiles (dims not multiples of
+/// t), transposes, padded leading dims and alpha/beta corner cases.
+fn random_batch(rng: &mut Prng, max_probs: usize, max_dim: usize) -> Vec<Problem> {
+    let nprob = rng.range(1, max_probs);
+    let alphas = [0.0, 1.0, -1.0, 1.3];
+    let betas = [0.0, 1.0, -0.4];
+    (0..nprob)
+        .map(|_| {
+            let m = rng.range(1, max_dim);
+            let n = rng.range(1, max_dim);
+            let k = rng.range(1, max_dim);
+            let ta = if rng.chance(0.5) { Trans::No } else { Trans::Yes };
+            let tb = if rng.chance(0.5) { Trans::No } else { Trans::Yes };
+            let (asr, asc) = stored(ta, m, k);
+            let (bsr, bsc) = stored(tb, k, n);
+            // leading dims padded past the row count half the time
+            let lda = asr + if rng.chance(0.5) { rng.below(4) } else { 0 };
+            let ldb = bsr + if rng.chance(0.5) { rng.below(4) } else { 0 };
+            let ldc = m + if rng.chance(0.5) { rng.below(4) } else { 0 };
+            let e = GemmBatchEntry {
+                ta,
+                tb,
+                m,
+                n,
+                k,
+                alpha: alphas[rng.below(alphas.len())],
+                beta: betas[rng.below(betas.len())],
+                lda,
+                ldb,
+                ldc,
+            };
+            let mut a = vec![0.0; lda * asc];
+            let mut b = vec![0.0; ldb * bsc];
+            let mut c = vec![0.0; ldc * n];
+            rng.fill_f64(&mut a, -1.0, 1.0);
+            rng.fill_f64(&mut b, -1.0, 1.0);
+            rng.fill_f64(&mut c, -1.0, 1.0);
+            Problem { e, a, b, c }
+        })
+        .collect()
+}
+
+fn run_batched(ctx: &Context, probs: &mut [Problem]) {
+    let entries: Vec<GemmBatchEntry> = probs.iter().map(|p| p.e).collect();
+    // Move the C buffers out first so the mutable borrows don't fight
+    // the shared A/B borrows of the same structs.
+    let mut cbufs: Vec<Vec<f64>> = probs.iter_mut().map(|p| std::mem::take(&mut p.c)).collect();
+    let arefs: Vec<&[f64]> = probs.iter().map(|p| p.a.as_slice()).collect();
+    let brefs: Vec<&[f64]> = probs.iter().map(|p| p.b.as_slice()).collect();
+    let mut crefs: Vec<&mut [f64]> = cbufs.iter_mut().map(Vec::as_mut_slice).collect();
+    api::dgemm_batched(ctx, &entries, &arefs, &brefs, &mut crefs).expect("dgemm_batched");
+    drop(crefs);
+    for (p, c) in probs.iter_mut().zip(cbufs) {
+        p.c = c;
+    }
+}
+
+#[test]
+fn batched_matches_looped_hostblas_property() {
+    let ctx = ctx(16);
+    Cases::new(20).run("dgemm_batched vs looped hostblas", |rng| {
+        let mut probs = random_batch(rng, 8, 50);
+        let want: Vec<Vec<f64>> = probs
+            .iter()
+            .map(|p| {
+                let mut w = p.c.clone();
+                hostblas::gemm_blocked(
+                    p.e.ta, p.e.tb, p.e.m, p.e.n, p.e.k, p.e.alpha, &p.a, p.e.lda, &p.b, p.e.ldb,
+                    p.e.beta, &mut w, p.e.ldc,
+                );
+                w
+            })
+            .collect();
+        run_batched(&ctx, &mut probs);
+        for (i, (p, w)) in probs.iter().zip(&want).enumerate() {
+            check_close(&p.c, w, 1e-10).map_err(|e| format!("problem {i}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batched_64_problems_bitexact_vs_looped_single_calls() {
+    // The acceptance bar: a 64-problem variable-size batch matches the
+    // looped single-call reference bit-for-bit on the same backend.
+    let ctx = ctx(32);
+    let mut rng = Prng::new(2026);
+    let mut probs = random_batch(&mut rng, 64, 96);
+    while probs.len() < 64 {
+        probs.extend(random_batch(&mut rng, 64 - probs.len(), 96));
+    }
+    probs.truncate(64);
+
+    // looped single calls through the same runtime/context
+    let looped: Vec<Vec<f64>> = probs
+        .iter()
+        .map(|p| {
+            let mut c = p.c.clone();
+            api::dgemm(
+                &ctx, p.e.ta, p.e.tb, p.e.m, p.e.n, p.e.k, p.e.alpha, &p.a, p.e.lda, &p.b,
+                p.e.ldb, p.e.beta, &mut c, p.e.ldc,
+            )
+            .expect("dgemm");
+            c
+        })
+        .collect();
+
+    run_batched(&ctx, &mut probs);
+    for (i, (p, w)) in probs.iter().zip(&looped).enumerate() {
+        assert_eq!(p.c, *w, "problem {i} diverged from the looped reference");
+    }
+}
+
+#[test]
+fn strided_matches_pointer_array_bitexact() {
+    let ctx = ctx(16);
+    let (m, n, k, batch) = (33usize, 20, 17, 6);
+    let (lda, ldb, ldc) = (m + 2, k, m);
+    let stride_a = lda * k + 5;
+    let stride_b = ldb * n;
+    let stride_c = ldc * n + 3;
+    let mut rng = Prng::new(9);
+    let mut a = vec![0.0; (batch - 1) * stride_a + lda * k];
+    let mut b = vec![0.0; (batch - 1) * stride_b + ldb * n];
+    let mut c = vec![0.0; (batch - 1) * stride_c + ldc * n];
+    rng.fill_f64(&mut a, -1.0, 1.0);
+    rng.fill_f64(&mut b, -1.0, 1.0);
+    rng.fill_f64(&mut c, -1.0, 1.0);
+    let c0 = c.clone();
+
+    api::dgemm_batched_strided(
+        &ctx, Trans::No, Trans::No, m, n, k, 0.9, &a, lda, stride_a, &b, ldb, stride_b, 0.3,
+        &mut c, ldc, stride_c, batch,
+    )
+    .unwrap();
+
+    // pointer-array over the same strides
+    let entries = vec![
+        GemmBatchEntry { ta: Trans::No, tb: Trans::No, m, n, k, alpha: 0.9, beta: 0.3, lda, ldb, ldc };
+        batch
+    ];
+    let arefs: Vec<&[f64]> = (0..batch).map(|i| &a[i * stride_a..]).collect();
+    let brefs: Vec<&[f64]> = (0..batch).map(|i| &b[i * stride_b..]).collect();
+    let mut cexp = c0;
+    let mut crefs: Vec<&mut [f64]> = Vec::new();
+    let mut rest = cexp.as_mut_slice();
+    for i in 0..batch {
+        let cur = std::mem::take(&mut rest);
+        if i + 1 == batch {
+            crefs.push(cur);
+        } else {
+            let (head, tail) = cur.split_at_mut(stride_c);
+            crefs.push(head);
+            rest = tail;
+        }
+    }
+    api::dgemm_batched(&ctx, &entries, &arefs, &brefs, &mut crefs).unwrap();
+    drop(crefs);
+    assert_eq!(c, cexp);
+}
+
+#[test]
+fn strided_broadcast_shares_one_weight_matrix() {
+    // stride_b == 0: every problem multiplies the same B (one weight
+    // matrix against many activation blocks — the serving pattern).
+    let ctx = ctx(16);
+    let (m, n, k, batch) = (24usize, 18, 32, 5);
+    let mut rng = Prng::new(11);
+    let mut a = vec![0.0; batch * m * k];
+    let mut b = vec![0.0; k * n];
+    let mut c = vec![0.0; batch * m * n];
+    rng.fill_f64(&mut a, -1.0, 1.0);
+    rng.fill_f64(&mut b, -1.0, 1.0);
+
+    api::dgemm_batched_strided(
+        &ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, m * k, &b, k, 0, 0.0, &mut c, m, m * n,
+        batch,
+    )
+    .unwrap();
+
+    for i in 0..batch {
+        let mut want = vec![0.0; m * n];
+        hostblas::gemm_blocked(
+            Trans::No, Trans::No, m, n, k, 1.0, &a[i * m * k..(i + 1) * m * k], m, &b, k, 0.0,
+            &mut want, m,
+        );
+        let got = &c[i * m * n..(i + 1) * m * n];
+        let diff = got.iter().zip(&want).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+        assert!(diff < 1e-10, "problem {i}: {diff}");
+    }
+}
+
+#[test]
+fn batched_error_paths() {
+    let ctx = ctx(16);
+    // bad leading dimension inside one entry poisons the whole batch
+    let bad = GemmBatchEntry { lda: 2, ..GemmBatchEntry::new(8, 8, 8, 1.0, 0.0) };
+    let a = vec![0.0f64; 64];
+    let b = vec![0.0f64; 64];
+    let mut c = vec![0.0f64; 64];
+    let mut crefs: Vec<&mut [f64]> = vec![c.as_mut_slice()];
+    assert!(api::dgemm_batched(&ctx, &[bad], &[&a], &[&b], &mut crefs).is_err());
+
+    // overlapping C strides are rejected
+    let mut cc = vec![0.0f64; 8 * 8 * 2];
+    let err = api::dgemm_batched_strided(
+        &ctx, Trans::No, Trans::No, 8, 8, 8, 1.0, &a, 8, 64, &b, 8, 64, 0.0, &mut cc, 8, 10, 2,
+    );
+    assert!(err.is_err());
+
+    // empty batch is a no-op success
+    let mut none: Vec<&mut [f64]> = Vec::new();
+    assert!(api::dgemm_batched(&ctx, &[], &[], &[], &mut none).is_ok());
+}

@@ -1,0 +1,152 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real BLASX build links the xla-rs bindings and executes AOT HLO
+//! artifacts through a PJRT CPU client. This container has no XLA
+//! runtime, so this stub provides the exact API surface the crate
+//! compiles against (`PjRtClient`, `HloModuleProto`, `XlaComputation`,
+//! `PjRtLoadedExecutable`, `Literal`, `ElementType`) and fails at
+//! *runtime*, at the earliest possible point (`PjRtClient::cpu`), with a
+//! descriptive error. The coordinator's default `Backend::Hostblas`
+//! path never touches this crate; only `Backend::Pjrt` callers see the
+//! error, which they surface as `blasx::Error::Runtime`.
+//!
+//! Keeping the stub a separate path dependency (rather than a feature
+//! gate inside blasx) means swapping the real bindings back in is a
+//! one-line Cargo.toml change with zero source edits.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error`: carries a message, nothing more.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: XLA/PJRT runtime unavailable (offline stub build; \
+         use the hostblas backend or link the real xla bindings)"
+    ))
+}
+
+/// Element dtypes the tile programs use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ElementType {
+    F32,
+    F64,
+}
+
+/// Marker trait for element types `Literal::copy_raw_to` accepts.
+pub trait ArrayElement: Copy {}
+impl ArrayElement for f32 {}
+impl ArrayElement for f64 {}
+
+/// Host-side tensor value (stub: never constructed successfully).
+#[derive(Debug)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(unavailable("Literal::create_from_shape_and_untyped_data"))
+    }
+
+    pub fn copy_raw_to<T: ArrayElement>(&self, _dst: &mut [T]) -> Result<()> {
+        Err(unavailable("Literal::copy_raw_to"))
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Computation wrapper (stub).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device-resident buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client (stub: construction itself reports the missing runtime,
+/// so nothing downstream ever runs).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_fast_with_a_readable_message() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("offline stub"), "{err}");
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F64, &[2, 2], &[0; 32])
+            .is_err());
+    }
+}
