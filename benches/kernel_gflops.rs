@@ -1,0 +1,374 @@
+//! Kernel GFLOPS — the perf trajectory of the packed hostblas engine.
+//!
+//! Measures single-thread GFLOPS per routine and dtype at tile sizes
+//! T ∈ {128, 256, 512} for three kernel generations:
+//!
+//! - **ref**    — the naive `*_ref` oracles (T=128 only; they are
+//!   orders of magnitude off and exist for correctness, not speed);
+//! - **seed**   — a verbatim copy of the seed-era `gemm_blocked`
+//!   (per-call pack allocation, column micro-kernel), embedded here so
+//!   the baseline survives the engine rewrite;
+//! - **packed** — the register-tiled packed engine that now runs every
+//!   real-engine tile task, plus `gemm_mt` at the host's core count.
+//!
+//! Acceptance bars (ISSUE 2): packed ≥ 3× seed for f64 GEMM at T=256,
+//! and packed SYRK/TRSM within 2× of packed GEMM GFLOPS.
+//!
+//! Results print as a table and land in `bench_out/BENCH_kernels.json`
+//! plus the repo-root `BENCH_kernels.json` (the committed snapshot that
+//! seeds the perf trajectory across PRs).
+
+use blasx::api::types::{Diag, Scalar, Side, Trans, Uplo};
+use blasx::bench::{print_table, write_json};
+use blasx::hostblas;
+use blasx::util::json::Json;
+use blasx::util::prng::Prng;
+use std::hint::black_box;
+use std::time::Instant;
+
+/// Verbatim seed-era blocked kernel (PR 0/1 vintage): fixed 64/64/128
+/// blocking, pack buffers allocated per call, column micro-kernel with
+/// the 4-wide k-unroll. Kept private to the bench as the baseline.
+#[allow(clippy::too_many_arguments)]
+fn seed_gemm_blocked<T: Scalar>(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    const MC: usize = 64;
+    const NC: usize = 64;
+    const KC: usize = 128;
+    let opx = |x: &[T], ld: usize, trans: Trans, r: usize, cc: usize| match trans {
+        Trans::No => x[cc * ld + r],
+        Trans::Yes => x[r * ld + cc],
+    };
+    if m == 0 || n == 0 {
+        return;
+    }
+    if alpha == T::zero() || k == 0 {
+        for j in 0..n {
+            for i in 0..m {
+                let v = c[j * ldc + i];
+                c[j * ldc + i] = beta * v;
+            }
+        }
+        return;
+    }
+    if beta != T::one() {
+        for j in 0..n {
+            for i in 0..m {
+                let v = c[j * ldc + i];
+                c[j * ldc + i] = beta * v;
+            }
+        }
+    }
+    let mut apack = vec![T::zero(); MC * KC];
+    let mut bpack = vec![T::zero(); KC * NC];
+    let mut pc = 0;
+    while pc < k {
+        let kb = KC.min(k - pc);
+        let mut jc = 0;
+        while jc < n {
+            let nb = NC.min(n - jc);
+            for jj in 0..nb {
+                for pp in 0..kb {
+                    bpack[jj * kb + pp] = opx(b, ldb, tb, pc + pp, jc + jj);
+                }
+            }
+            let mut ic = 0;
+            while ic < m {
+                let mb = MC.min(m - ic);
+                for pp in 0..kb {
+                    for ii in 0..mb {
+                        apack[pp * mb + ii] = opx(a, lda, ta, ic + ii, pc + pp);
+                    }
+                }
+                for jj in 0..nb {
+                    let ccol = (jc + jj) * ldc + ic;
+                    let bcol = jj * kb;
+                    let cs = &mut c[ccol..ccol + mb];
+                    let mut pp = 0;
+                    while pp + 4 <= kb {
+                        let b0 = alpha * bpack[bcol + pp];
+                        let b1 = alpha * bpack[bcol + pp + 1];
+                        let b2 = alpha * bpack[bcol + pp + 2];
+                        let b3 = alpha * bpack[bcol + pp + 3];
+                        let (a0s, rest) = apack[pp * mb..].split_at(mb);
+                        let (a1s, rest) = rest.split_at(mb);
+                        let (a2s, rest) = rest.split_at(mb);
+                        let a3s = &rest[..mb];
+                        for ((((cv, &x0), &x1), &x2), &x3) in
+                            cs.iter_mut().zip(a0s).zip(a1s).zip(a2s).zip(a3s)
+                        {
+                            *cv += x0 * b0 + x1 * b1 + x2 * b2 + x3 * b3;
+                        }
+                        pp += 4;
+                    }
+                    while pp < kb {
+                        let bv = alpha * bpack[bcol + pp];
+                        let aos = &apack[pp * mb..pp * mb + mb];
+                        for (cv, &x) in cs.iter_mut().zip(aos) {
+                            *cv += x * bv;
+                        }
+                        pp += 1;
+                    }
+                }
+                ic += mb;
+            }
+            jc += nb;
+        }
+        pc += kb;
+    }
+}
+
+/// Best-of-`reps` seconds for `f`.
+fn time_best(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Repetitions sized so each variant gets a few hundred MFLOP of work.
+fn reps_for(flops: f64) -> usize {
+    ((4.0e8 / flops).ceil() as usize).clamp(2, 50)
+}
+
+struct Row {
+    routine: &'static str,
+    dtype: &'static str,
+    t: usize,
+    kernel: &'static str,
+    gflops: f64,
+}
+
+fn gf(flops: f64, secs: f64) -> f64 {
+    flops / secs / 1e9
+}
+
+fn bench_dtype<T: Scalar>(dtype: &'static str, rows: &mut Vec<Row>) {
+    let mut rng = Prng::new(4242);
+    for &t in &[128usize, 256, 512] {
+        let mut a = vec![T::zero(); t * t];
+        let mut b = vec![T::zero(); t * t];
+        let mut c = vec![T::zero(); t * t];
+        for x in a.iter_mut() {
+            *x = T::from_f64(rng.range_f64(-1.0, 1.0));
+        }
+        for x in b.iter_mut() {
+            *x = T::from_f64(rng.range_f64(-1.0, 1.0));
+        }
+        // triangular/symmetric operands want a dominant diagonal
+        let mut tri = a.clone();
+        for i in 0..t {
+            tri[i * t + i] = T::from_f64(4.0);
+        }
+        let gemm_flops = 2.0 * (t * t * t) as f64;
+        let reps = reps_for(gemm_flops);
+
+        // GEMM: packed / seed / (ref at 128 only)
+        let secs = time_best(reps, || {
+            hostblas::gemm_packed(
+                Trans::No, Trans::No, t, t, t, T::one(), &a, t, &b, t, T::zero(), &mut c, t,
+            );
+            black_box(&c);
+        });
+        let packed_gemm = gf(gemm_flops, secs);
+        rows.push(Row { routine: "gemm", dtype, t, kernel: "packed", gflops: packed_gemm });
+        let secs = time_best(reps, || {
+            seed_gemm_blocked(
+                Trans::No, Trans::No, t, t, t, T::one(), &a, t, &b, t, T::zero(), &mut c, t,
+            );
+            black_box(&c);
+        });
+        rows.push(Row { routine: "gemm", dtype, t, kernel: "seed", gflops: gf(gemm_flops, secs) });
+        if t == 128 {
+            let secs = time_best(2, || {
+                hostblas::gemm_ref(
+                    Trans::No, Trans::No, t, t, t, T::one(), &a, t, &b, t, T::zero(), &mut c, t,
+                );
+                black_box(&c);
+            });
+            rows.push(Row { routine: "gemm", dtype, t, kernel: "ref", gflops: gf(gemm_flops, secs) });
+        }
+
+        // gemm_mt at the host's core count
+        let threads = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
+        let secs = time_best(reps, || {
+            hostblas::gemm_mt(
+                threads, Trans::No, Trans::No, t, t, t, T::one(), &a, t, &b, t, T::zero(), &mut c,
+                t,
+            );
+            black_box(&c);
+        });
+        rows.push(Row { routine: "gemm_mt", dtype, t, kernel: "packed", gflops: gf(gemm_flops, secs) });
+
+        // SYRK
+        let flops = (t * t * (t + 1)) as f64;
+        let secs = time_best(reps, || {
+            hostblas::syrk_packed(Uplo::Lower, Trans::No, t, t, T::one(), &a, t, T::zero(), &mut c, t);
+            black_box(&c);
+        });
+        rows.push(Row { routine: "syrk", dtype, t, kernel: "packed", gflops: gf(flops, secs) });
+        if t == 128 {
+            let secs = time_best(2, || {
+                hostblas::syrk_ref(Uplo::Lower, Trans::No, t, t, T::one(), &a, t, T::zero(), &mut c, t);
+                black_box(&c);
+            });
+            rows.push(Row { routine: "syrk", dtype, t, kernel: "ref", gflops: gf(flops, secs) });
+        }
+
+        // SYR2K
+        let flops = 2.0 * (t * t * (t + 1)) as f64;
+        let secs = time_best(reps, || {
+            hostblas::syr2k_packed(
+                Uplo::Lower, Trans::No, t, t, T::one(), &a, t, &b, t, T::zero(), &mut c, t,
+            );
+            black_box(&c);
+        });
+        rows.push(Row { routine: "syr2k", dtype, t, kernel: "packed", gflops: gf(flops, secs) });
+
+        // SYMM
+        let flops = 2.0 * (t * t * t) as f64;
+        let secs = time_best(reps, || {
+            hostblas::symm_packed(
+                Side::Left, Uplo::Upper, t, t, T::one(), &a, t, &b, t, T::zero(), &mut c, t,
+            );
+            black_box(&c);
+        });
+        rows.push(Row { routine: "symm", dtype, t, kernel: "packed", gflops: gf(flops, secs) });
+
+        // TRMM (in place on c; the RHS is re-seeded each rep — an O(T²)
+        // copy against the O(T³) kernel — so repeated multiplies can't
+        // overflow out of the float range across reps)
+        let flops = (t * t * t) as f64;
+        let secs = time_best(reps, || {
+            c.copy_from_slice(&b);
+            hostblas::trmm_packed(
+                Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, t, t, T::one(), &tri, t,
+                &mut c, t,
+            );
+            black_box(&c);
+        });
+        rows.push(Row { routine: "trmm", dtype, t, kernel: "packed", gflops: gf(flops, secs) });
+        if t == 128 {
+            let secs = time_best(2, || {
+                c.copy_from_slice(&b);
+                hostblas::trmm_ref(
+                    Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, t, t, T::one(), &tri, t,
+                    &mut c, t,
+                );
+                black_box(&c);
+            });
+            rows.push(Row { routine: "trmm", dtype, t, kernel: "ref", gflops: gf(flops, secs) });
+        }
+
+        // TRSM (same re-seeding discipline as TRMM)
+        let flops = (t * t * t) as f64;
+        let secs = time_best(reps, || {
+            c.copy_from_slice(&b);
+            hostblas::trsm_packed(
+                Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, t, t, T::one(), &tri, t,
+                &mut c, t,
+            );
+            black_box(&c);
+        });
+        rows.push(Row { routine: "trsm", dtype, t, kernel: "packed", gflops: gf(flops, secs) });
+        if t == 128 {
+            let secs = time_best(2, || {
+                c.copy_from_slice(&b);
+                hostblas::trsm_ref(
+                    Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, t, t, T::one(), &tri, t,
+                    &mut c, t,
+                );
+                black_box(&c);
+            });
+            rows.push(Row { routine: "trsm", dtype, t, kernel: "ref", gflops: gf(flops, secs) });
+        }
+    }
+}
+
+fn find(rows: &[Row], routine: &str, dtype: &str, t: usize, kernel: &str) -> Option<f64> {
+    rows.iter()
+        .find(|r| r.routine == routine && r.dtype == dtype && r.t == t && r.kernel == kernel)
+        .map(|r| r.gflops)
+}
+
+fn main() {
+    let mut rows: Vec<Row> = Vec::new();
+    bench_dtype::<f64>("f64", &mut rows);
+    bench_dtype::<f32>("f32", &mut rows);
+
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.routine.to_string(),
+                r.dtype.to_string(),
+                r.t.to_string(),
+                r.kernel.to_string(),
+                format!("{:.2}", r.gflops),
+            ]
+        })
+        .collect();
+    print_table("kernel GFLOPS", &["routine", "dtype", "T", "kernel", "GFLOPS"], &table);
+
+    let mut json = Json::obj();
+    json.set("bench", Json::Str("kernel_gflops".into()));
+    json.set(
+        "dims",
+        Json::Str("square T x T x T per routine, single thread unless gemm_mt".into()),
+    );
+    let mut arr = Vec::new();
+    for r in &rows {
+        let mut e = Json::obj();
+        e.set("routine", Json::Str(r.routine.into()));
+        e.set("dtype", Json::Str(r.dtype.into()));
+        e.set("t", Json::Num(r.t as f64));
+        e.set("kernel", Json::Str(r.kernel.into()));
+        e.set("gflops", Json::Num((r.gflops * 100.0).round() / 100.0));
+        arr.push(e);
+    }
+    json.set("results", Json::Arr(arr));
+
+    // acceptance summary (ISSUE 2)
+    let mut summary = Json::obj();
+    if let (Some(p), Some(s)) = (
+        find(&rows, "gemm", "f64", 256, "packed"),
+        find(&rows, "gemm", "f64", 256, "seed"),
+    ) {
+        summary.set("gemm_f64_t256_packed_gflops", Json::Num((p * 100.0).round() / 100.0));
+        summary.set("gemm_f64_t256_seed_gflops", Json::Num((s * 100.0).round() / 100.0));
+        summary.set("packed_vs_seed_speedup_t256_f64", Json::Num((p / s * 100.0).round() / 100.0));
+    }
+    if let (Some(g), Some(sy), Some(tr)) = (
+        find(&rows, "gemm", "f64", 256, "packed"),
+        find(&rows, "syrk", "f64", 256, "packed"),
+        find(&rows, "trsm", "f64", 256, "packed"),
+    ) {
+        summary.set("syrk_over_gemm_t256_f64", Json::Num((sy / g * 100.0).round() / 100.0));
+        summary.set("trsm_over_gemm_t256_f64", Json::Num((tr / g * 100.0).round() / 100.0));
+    }
+    json.set("summary", summary);
+
+    write_json("BENCH_kernels", &json);
+    // Repo-root committed snapshot: the perf trajectory across PRs.
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_kernels.json");
+    match std::fs::write(&root, json.to_string_pretty()) {
+        Ok(()) => println!("[bench] wrote {}", root.display()),
+        Err(e) => eprintln!("[bench] cannot write {}: {e}", root.display()),
+    }
+}

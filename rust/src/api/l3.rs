@@ -66,6 +66,14 @@ impl Context {
         self
     }
 
+    /// Threads each device worker may fan a tile kernel across (the
+    /// paper's "multithreaded BLAS kernel", §IV-C.2). Small tiles stay
+    /// serial under `hostblas::gemm_mt`'s flop cutoff regardless.
+    pub fn with_kernel_threads(mut self, threads: usize) -> Context {
+        self.cfg.worker_threads = threads.max(1);
+        self
+    }
+
     /// Size each device's tile-cache arena in bytes. Batch callers in
     /// particular should budget `n` live tiles as `n · t · t · esz`
     /// (the runtime needs at least 8 tiles per device; `run_real`

@@ -89,7 +89,9 @@ USAGE:
   blasx gantt [--routine dgemm] [--n 4096] ... (sim flags) [--width 100]
               [--json out.json]
   blasx run   [--routine dgemm] [--n 1024] [--t 256] [--devices 2] [--pjrt]
+              [--kernel-threads 1]
   blasx batch <workload.json> [--devices 2] [--t 256] [--pjrt] [--fused]
+              [--kernel-threads 1]
   blasx info
 
 `sim` runs the discrete-event engine on a paper machine and prints the
@@ -153,7 +155,9 @@ fn cmd_batch(args: &Args) -> i32 {
 
     let devices = args.get_usize("devices", 2);
     let t = args.get_usize("t", 256);
-    let mut ctx = api::Context::new(devices).with_tile(t);
+    let mut ctx = api::Context::new(devices)
+        .with_tile(t)
+        .with_kernel_threads(args.get_usize("kernel-threads", 1));
     if args.get("pjrt").is_some() {
         ctx = ctx.with_backend(crate::coordinator::Backend::Pjrt);
     }
@@ -363,7 +367,9 @@ fn cmd_run(args: &Args) -> i32 {
     let n = args.get_usize("n", 1024);
     let t = args.get_usize("t", 256);
     let devices = args.get_usize("devices", 2);
-    let mut ctx = api::Context::new(devices).with_tile(t);
+    let mut ctx = api::Context::new(devices)
+        .with_tile(t)
+        .with_kernel_threads(args.get_usize("kernel-threads", 1));
     if args.get("pjrt").is_some() {
         ctx = ctx.with_backend(crate::coordinator::Backend::Pjrt);
     }

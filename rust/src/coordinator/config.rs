@@ -78,6 +78,13 @@ pub struct RunConfig {
     pub work_stealing: bool,
     /// Real-engine kernel backend.
     pub backend: Backend,
+    /// Threads per worker for the hostblas tile kernel (paper §IV-C.2:
+    /// the CPU worker "solves the task with a multithreaded BLAS
+    /// kernel"). 1 = single-threaded kernels; larger values let each
+    /// device worker fan a big GEMM k-step across cores via
+    /// `hostblas::gemm_mt`'s 2D partition (small tiles stay serial
+    /// under its flop cutoff regardless).
+    pub worker_threads: usize,
     /// Cap the device L1 tile-cache to this many bytes (None = device
     /// VRAM); used by cache-pressure tests and ablations.
     pub vram_override: Option<usize>,
@@ -105,6 +112,7 @@ impl Default for RunConfig {
             use_cpu: false,
             work_stealing: true,
             backend: Backend::Hostblas,
+            worker_threads: 1,
             vram_override: None,
             k_chunk: 4,
             jitter: 0.05,
@@ -159,6 +167,7 @@ mod tests {
         let c = RunConfig::default();
         assert_eq!(c.n_streams, 4);
         assert!(c.rs_capacity >= c.n_streams);
+        assert_eq!(c.worker_threads, 1, "kernels single-threaded unless asked");
         assert_eq!(RunConfig::paper().t, 1024);
     }
 }

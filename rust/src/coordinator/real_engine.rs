@@ -17,7 +17,6 @@
 //! §1); *correctness* of the full protocol stack is what runs here.
 
 use super::config::{Backend, RunConfig};
-use crate::api::types::Trans;
 use crate::api::Scalar;
 use crate::cache::{Source, TileCacheSet};
 use crate::error::{Error, Result};
@@ -495,27 +494,34 @@ fn exec_step<T: Scalar>(
         return ex.run(&step.op.kernel_name(), t, a, b, c, alpha, beta);
     }
 
+    // Every tile op dispatches to the packed kernel engine — the naive
+    // `*_ref` oracles are test-only (EXPERIMENTS.md §Perf documents the
+    // order-of-magnitude gap this targets). GEMM k-steps additionally
+    // fan out across `worker_threads` when the tile is big enough
+    // (paper §IV-C.2's "multithreaded BLAS kernel"); `gemm_mt` applies
+    // its flop-based serial cutoff internally.
     let (m, n, k) = step.dims;
     let a = a_off.map(|o| &*sh.arenas[dev].slice(o, tile_elems));
     let b = b_off.map(|o| &*sh.arenas[dev].slice(o, tile_elems));
+    let wt = sh.cfg.worker_threads.max(1);
     match step.op {
         TileOp::Gemm { ta, tb } => {
-            hostblas::gemm_blocked(ta, tb, m, n, k, alpha, a.unwrap(), t, b.unwrap(), t, beta, c, t);
+            hostblas::gemm_mt(wt, ta, tb, m, n, k, alpha, a.unwrap(), t, b.unwrap(), t, beta, c, t);
         }
         TileOp::SyrkDiag { uplo, trans } => {
-            hostblas::syrk_ref(uplo, trans, n, k, alpha, a.unwrap(), t, beta, c, t);
+            hostblas::syrk_packed(uplo, trans, n, k, alpha, a.unwrap(), t, beta, c, t);
         }
         TileOp::Syr2kDiag { uplo, trans } => {
-            hostblas::syr2k_ref(uplo, trans, n, k, alpha, a.unwrap(), t, b.unwrap(), t, beta, c, t);
+            hostblas::syr2k_packed(uplo, trans, n, k, alpha, a.unwrap(), t, b.unwrap(), t, beta, c, t);
         }
         TileOp::TrmmDiag { side, uplo, ta, diag } => {
-            hostblas::trmm_ref(side, uplo, ta, diag, m, n, alpha, a.unwrap(), t, c, t);
+            hostblas::trmm_packed(side, uplo, ta, diag, m, n, alpha, a.unwrap(), t, c, t);
         }
         TileOp::TrsmDiag { side, uplo, ta, diag } => {
-            hostblas::trsm_ref(side, uplo, ta, diag, m, n, alpha, a.unwrap(), t, c, t);
+            hostblas::trsm_packed(side, uplo, ta, diag, m, n, alpha, a.unwrap(), t, c, t);
         }
         TileOp::SymmDiag { side, uplo } => {
-            hostblas::symm_ref(side, uplo, m, n, alpha, a.unwrap(), t, b.unwrap(), t, beta, c, t);
+            hostblas::symm_packed(side, uplo, m, n, alpha, a.unwrap(), t, b.unwrap(), t, beta, c, t);
         }
         TileOp::Scal => {
             for j in 0..n {
@@ -525,6 +531,5 @@ fn exec_step<T: Scalar>(
             }
         }
     }
-    let _ = Trans::No; // keep the import obviously used in both paths
     Ok(())
 }

@@ -1,12 +1,25 @@
-//! Host GEMM: a naive oracle and a register/cache-blocked kernel.
+//! Host GEMM: a naive oracle and the packed register-tiled engine.
 //!
 //! All matrices are column-major. `op(X)` is selected by a `Trans` flag.
 //! The naive version is the *correctness oracle* for everything else in
 //! the repo (its triple loop is simple enough to trust by inspection);
-//! the blocked version is the CPU worker's hot kernel (paper §IV-C.2:
-//! "the CPU cores … solve the task with a multithreaded BLAS kernel").
+//! [`gemm_packed`] is the CPU worker's hot kernel (paper §IV-C.2: "the
+//! CPU cores … solve the task with a multithreaded BLAS kernel").
+//!
+//! The packed engine follows the BLIS decomposition: op(B) is packed
+//! into KC×NC panels of NR-column micro-strips, op(A) into MC×KC blocks
+//! of MR-row micro-strips (both normalizing away the transpose), and an
+//! MR×NR register-tiled micro-kernel with the seed's 4-wide k-unroll
+//! walks the packed panels. Pack buffers live in a per-thread
+//! [`super::pack::PackBuf`], so steady-state tile tasks allocate
+//! nothing; blocking parameters come from [`super::tune::block_dims`]
+//! (startup probe, feature `autotune`). Throughput measurements are
+//! recorded in EXPERIMENTS.md §Perf with machine-readable results in
+//! BENCH_kernels.json.
 
-use crate::api::types::{Scalar, Trans};
+use super::pack::with_pack;
+use super::tune::{block_dims, BlockDims};
+use crate::api::types::{Dtype, Scalar, Trans};
 
 /// Read `op(X)[r, c]` from a column-major buffer with leading dim `ld`.
 #[inline(always)]
@@ -47,19 +60,321 @@ pub fn gemm_ref<T: Scalar>(
     }
 }
 
-/// Panel size for the blocked kernel (fits comfortably in L1/L2 for f64).
-const MC: usize = 64;
-const NC: usize = 64;
-const KC: usize = 128;
+/// Register micro-tile: rows per micro-panel of packed op(A).
+/// f64: 8 lanes = two 4-wide AVX2 vectors per column of the tile.
+const MR_F64: usize = 8;
+/// f32 gets twice the rows for the same register budget.
+const MR_F32: usize = 16;
+/// Columns per micro-panel of packed op(B) (both precisions): 4 columns
+/// × MR rows of accumulators stay comfortably inside 16 vector regs.
+const NR: usize = 4;
 
-/// Cache-blocked GEMM with the same semantics as [`gemm_ref`].
-///
-/// Strategy: pack op(A) and op(B) panels into contiguous buffers (which
-/// also normalizes away the transpose), then run a 4-wide unrolled
-/// micro-kernel over columns. ~5-15× faster than naive at T=256 f64 while
-/// staying dependency-free.
+/// Pack `op(A)[i0..i0+mb, p0..p0+kb]` into `ap` as MR-row strips:
+/// strip `s` holds rows `s*MR..` in k-major order (`ap[s*MR*kb + p*MR +
+/// i]`), zero-padded to MR rows so the micro-kernel never branches on
+/// the row edge.
 #[allow(clippy::too_many_arguments)]
-pub fn gemm_blocked<T: Scalar>(
+fn pack_a<T: Scalar>(
+    ap: &mut [T],
+    a: &[T],
+    lda: usize,
+    ta: Trans,
+    i0: usize,
+    mb: usize,
+    p0: usize,
+    kb: usize,
+    mr_tile: usize,
+) {
+    let nstrips = mb.div_ceil(mr_tile);
+    for s in 0..nstrips {
+        let r0 = s * mr_tile;
+        let rows = mr_tile.min(mb - r0);
+        let dst = &mut ap[s * mr_tile * kb..(s + 1) * mr_tile * kb];
+        match ta {
+            Trans::No => {
+                for p in 0..kb {
+                    let src = &a[(p0 + p) * lda + i0 + r0..];
+                    let out = &mut dst[p * mr_tile..p * mr_tile + mr_tile];
+                    for (o, v) in out[..rows].iter_mut().zip(&src[..rows]) {
+                        *o = *v;
+                    }
+                    for o in out[rows..].iter_mut() {
+                        *o = T::zero();
+                    }
+                }
+            }
+            Trans::Yes => {
+                for ii in 0..rows {
+                    let src = &a[(i0 + r0 + ii) * lda + p0..];
+                    for p in 0..kb {
+                        dst[p * mr_tile + ii] = src[p];
+                    }
+                }
+                if rows < mr_tile {
+                    for p in 0..kb {
+                        for ii in rows..mr_tile {
+                            dst[p * mr_tile + ii] = T::zero();
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pack `op(B)[p0..p0+kb, j0..j0+nb]` into `bp` as NR-column strips
+/// (`bp[s*NR*kb + p*NR + j]`), zero-padded to NR columns.
+#[allow(clippy::too_many_arguments)]
+fn pack_b<T: Scalar>(
+    bp: &mut [T],
+    b: &[T],
+    ldb: usize,
+    tb: Trans,
+    p0: usize,
+    kb: usize,
+    j0: usize,
+    nb: usize,
+) {
+    let nstrips = nb.div_ceil(NR);
+    for s in 0..nstrips {
+        let c0 = s * NR;
+        let cols = NR.min(nb - c0);
+        let dst = &mut bp[s * NR * kb..(s + 1) * NR * kb];
+        match tb {
+            Trans::No => {
+                for jj in 0..cols {
+                    let src = &b[(j0 + c0 + jj) * ldb + p0..];
+                    for p in 0..kb {
+                        dst[p * NR + jj] = src[p];
+                    }
+                }
+                if cols < NR {
+                    for p in 0..kb {
+                        for jj in cols..NR {
+                            dst[p * NR + jj] = T::zero();
+                        }
+                    }
+                }
+            }
+            Trans::Yes => {
+                for p in 0..kb {
+                    let src = &b[(p0 + p) * ldb + j0 + c0..];
+                    let out = &mut dst[p * NR..p * NR + NR];
+                    for (o, v) in out[..cols].iter_mut().zip(&src[..cols]) {
+                        *o = *v;
+                    }
+                    for o in out[cols..].iter_mut() {
+                        *o = T::zero();
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// MR×NR register-tiled micro-kernel over packed micro-panels:
+/// `C[0..mr, 0..nr] += alpha * Ap · Bp` where `c` points at the
+/// tile's top-left element (column-major, leading dim `ldc`).
+///
+/// The accumulator lives in `[[T; MR]; NR]` locals — exact-size array
+/// ops the compiler keeps in vector registers — and the k loop keeps
+/// the seed kernel's 4-wide unroll over rank-1 updates.
+///
+/// # Safety
+/// `c` must be valid for reads/writes of elements `{ j*ldc + i | i <
+/// mr, j < nr }`, and no other thread may touch those elements during
+/// the call.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn micro_kernel<T: Scalar, const MR: usize>(
+    kb: usize,
+    alpha: T,
+    ap: &[T],
+    bp: &[T],
+    c: *mut T,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc = [[T::zero(); MR]; NR];
+    let mut p = 0;
+    while p + 4 <= kb {
+        // 4-wide k-unroll (kept from the seed kernel): four fused
+        // rank-1 updates per iteration.
+        for u in 0..4 {
+            let av = &ap[(p + u) * MR..(p + u) * MR + MR];
+            let bv = &bp[(p + u) * NR..(p + u) * NR + NR];
+            for (j, accj) in acc.iter_mut().enumerate() {
+                let bj = bv[j];
+                for (x, &av_i) in accj.iter_mut().zip(av) {
+                    *x += av_i * bj;
+                }
+            }
+        }
+        p += 4;
+    }
+    while p < kb {
+        let av = &ap[p * MR..p * MR + MR];
+        let bv = &bp[p * NR..p * NR + NR];
+        for (j, accj) in acc.iter_mut().enumerate() {
+            let bj = bv[j];
+            for (x, &av_i) in accj.iter_mut().zip(av) {
+                *x += av_i * bj;
+            }
+        }
+        p += 1;
+    }
+    if mr == MR && nr == NR {
+        for (j, accj) in acc.iter().enumerate() {
+            let col = std::slice::from_raw_parts_mut(c.add(j * ldc), MR);
+            for (cv, &x) in col.iter_mut().zip(accj) {
+                *cv += alpha * x;
+            }
+        }
+    } else {
+        for (j, accj) in acc.iter().enumerate().take(nr) {
+            let col = std::slice::from_raw_parts_mut(c.add(j * ldc), mr);
+            for (cv, &x) in col.iter_mut().zip(&accj[..mr]) {
+                *cv += alpha * x;
+            }
+        }
+    }
+}
+
+/// The packed engine over a raw C pointer — the shared core of
+/// [`gemm_packed_with`] and the threaded 2D partitioner (whose row
+/// splits cannot be expressed as disjoint `&mut` slices of a
+/// column-major C).
+///
+/// # Safety
+/// `c` must be valid for reads/writes of all elements `{ j*ldc + i |
+/// i < m, j < n }`, and no other thread may touch those elements for
+/// the duration of the call. `a`/`b` must cover `op(A)` m×k / `op(B)`
+/// k×n under their leading dims.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn gemm_packed_ptr<T: Scalar>(
+    dims: BlockDims,
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    beta: T,
+    c: *mut T,
+    ldc: usize,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    // Beta pass once up front; the packed loops accumulate with beta=1.
+    if beta == T::zero() {
+        for j in 0..n {
+            let col = std::slice::from_raw_parts_mut(c.add(j * ldc), m);
+            for x in col.iter_mut() {
+                *x = T::zero();
+            }
+        }
+    } else if beta != T::one() {
+        for j in 0..n {
+            let col = std::slice::from_raw_parts_mut(c.add(j * ldc), m);
+            for x in col.iter_mut() {
+                *x *= beta;
+            }
+        }
+    }
+    if alpha == T::zero() || k == 0 {
+        return;
+    }
+    match T::DTYPE {
+        Dtype::F32 => gemm_loops::<T, MR_F32>(dims, ta, tb, m, n, k, alpha, a, lda, b, ldb, c, ldc),
+        Dtype::F64 => gemm_loops::<T, MR_F64>(dims, ta, tb, m, n, k, alpha, a, lda, b, ldb, c, ldc),
+    }
+}
+
+/// The five BLIS loops around [`micro_kernel`]. Caller guarantees
+/// `m, n, k ≥ 1`, that beta has been applied, and (as in
+/// [`gemm_packed_ptr`]) that `c` exclusively covers the m×n extent —
+/// the function is safe to *declare* because it is private and every
+/// caller upholds the pointer contract stated there.
+#[allow(clippy::too_many_arguments)]
+fn gemm_loops<T: Scalar, const MR: usize>(
+    dims: BlockDims,
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    c: *mut T,
+    ldc: usize,
+) {
+    let (mc, nc, kc) = (dims.mc.max(MR), dims.nc.max(NR), dims.kc.max(4));
+    with_pack(|pb: &mut super::pack::PackBuf<T>| {
+        let kb_max = kc.min(k);
+        let a_need = mc.min(m).div_ceil(MR) * MR * kb_max;
+        let b_need = nc.min(n).div_ceil(NR) * NR * kb_max;
+        pb.ensure(a_need, b_need);
+        let (ap, bp) = (&mut pb.a, &mut pb.b);
+        let mut jc = 0;
+        while jc < n {
+            let nb = nc.min(n - jc);
+            let mut pc = 0;
+            while pc < k {
+                let kb = kc.min(k - pc);
+                pack_b(bp, b, ldb, tb, pc, kb, jc, nb);
+                let mut ic = 0;
+                while ic < m {
+                    let mb = mc.min(m - ic);
+                    pack_a(ap, a, lda, ta, ic, mb, pc, kb, MR);
+                    let mut jr = 0;
+                    while jr < nb {
+                        let nr = NR.min(nb - jr);
+                        let bs = &bp[(jr / NR) * NR * kb..];
+                        let mut ir = 0;
+                        while ir < mb {
+                            let mr = MR.min(mb - ir);
+                            let a_strip = &ap[(ir / MR) * MR * kb..];
+                            // SAFETY: the (ic+ir, jc+jr) micro-tile lies
+                            // inside the m×n extent the caller owns.
+                            unsafe {
+                                micro_kernel::<T, MR>(
+                                    kb,
+                                    alpha,
+                                    a_strip,
+                                    bs,
+                                    c.add((jc + jr) * ldc + ic + ir),
+                                    ldc,
+                                    mr,
+                                    nr,
+                                );
+                            }
+                            ir += MR;
+                        }
+                        jr += NR;
+                    }
+                    ic += mb;
+                }
+                pc += kb;
+            }
+            jc += nb;
+        }
+    });
+}
+
+/// Packed GEMM with explicit blocking parameters (the autotune probe
+/// and tests use this; everything else goes through [`gemm_packed`]).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed_with<T: Scalar>(
+    dims: BlockDims,
     ta: Trans,
     tb: Trans,
     m: usize,
@@ -77,90 +392,62 @@ pub fn gemm_blocked<T: Scalar>(
     if m == 0 || n == 0 {
         return;
     }
-    if alpha == T::zero() || k == 0 {
-        // C := beta * C
-        for j in 0..n {
-            for i in 0..m {
-                let v = c[j * ldc + i];
-                c[j * ldc + i] = beta * v;
-            }
-        }
-        return;
+    // Hard asserts, not debug: these two comparisons are the entire
+    // safety boundary between a caller-supplied slice and the
+    // raw-pointer engine. The seed kernel bounds-checked every C index
+    // through the slice; a release-mode caller error must still panic,
+    // never scribble.
+    assert!(ldc >= m, "ldc must cover C's rows");
+    assert!(c.len() >= (n - 1) * ldc + m, "C buffer too small");
+    // SAFETY: `c` is an exclusive slice covering the full m×n extent
+    // (asserted above), so the raw-pointer engine writes only
+    // in-bounds elements no one else can alias.
+    unsafe {
+        gemm_packed_ptr(dims, ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c.as_mut_ptr(), ldc);
     }
-    // apply beta once up front, accumulate with beta=1 afterwards
-    if beta != T::one() {
-        for j in 0..n {
-            for i in 0..m {
-                let v = c[j * ldc + i];
-                c[j * ldc + i] = beta * v;
-            }
-        }
-    }
-    let mut apack = vec![T::zero(); MC * KC];
-    let mut bpack = vec![T::zero(); KC * NC];
-    let mut pc = 0;
-    while pc < k {
-        let kb = KC.min(k - pc);
-        let mut jc = 0;
-        while jc < n {
-            let nb = NC.min(n - jc);
-            // pack op(B)[pc..pc+kb, jc..jc+nb] column-major kb×nb
-            for jj in 0..nb {
-                for pp in 0..kb {
-                    bpack[jj * kb + pp] = opx(b, ldb, tb, pc + pp, jc + jj);
-                }
-            }
-            let mut ic = 0;
-            while ic < m {
-                let mb = MC.min(m - ic);
-                // pack op(A)[ic..ic+mb, pc..pc+kb] column-major mb×kb
-                for pp in 0..kb {
-                    for ii in 0..mb {
-                        apack[pp * mb + ii] = opx(a, lda, ta, ic + ii, pc + pp);
-                    }
-                }
-                // micro-kernel: C[ic.., jc..] += alpha * apack * bpack.
-                // Exact-length slice zips instead of indexed loops: the
-                // compiler drops the bounds checks and autovectorizes
-                // the fused rank-4 update (≈2.5× on this host — see
-                // EXPERIMENTS.md §Perf).
-                for jj in 0..nb {
-                    let ccol = (jc + jj) * ldc + ic;
-                    let bcol = jj * kb;
-                    let cs = &mut c[ccol..ccol + mb];
-                    let mut pp = 0;
-                    // unroll the k loop by 4 over rank-1 updates
-                    while pp + 4 <= kb {
-                        let b0 = alpha * bpack[bcol + pp];
-                        let b1 = alpha * bpack[bcol + pp + 1];
-                        let b2 = alpha * bpack[bcol + pp + 2];
-                        let b3 = alpha * bpack[bcol + pp + 3];
-                        let (a0s, rest) = apack[pp * mb..].split_at(mb);
-                        let (a1s, rest) = rest.split_at(mb);
-                        let (a2s, rest) = rest.split_at(mb);
-                        let a3s = &rest[..mb];
-                        for ((((cv, &x0), &x1), &x2), &x3) in
-                            cs.iter_mut().zip(a0s).zip(a1s).zip(a2s).zip(a3s)
-                        {
-                            *cv += x0 * b0 + x1 * b1 + x2 * b2 + x3 * b3;
-                        }
-                        pp += 4;
-                    }
-                    while pp < kb {
-                        let bv = alpha * bpack[bcol + pp];
-                        let aos = &apack[pp * mb..pp * mb + mb];
-                        for (cv, &x) in cs.iter_mut().zip(aos) {
-                            *cv += x * bv;
-                        }
-                        pp += 1;
-                    }
-                }
-                ic += mb;
-            }
-            jc += nb;
-        }
-        pc += kb;
-    }
+}
+
+/// Packed register-tiled GEMM: `C := alpha * op(A) * op(B) + beta * C`,
+/// same semantics as [`gemm_ref`], blocking chosen by the startup probe.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed<T: Scalar>(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    gemm_packed_with(block_dims(T::DTYPE), ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
+}
+
+/// Compatibility alias for the seed-era name: the cache-blocked kernel
+/// is now the packed engine. Call sites (tests, examples, benches)
+/// keep working; new code should say [`gemm_packed`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_blocked<T: Scalar>(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    gemm_packed(ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
 }
 
 #[cfg(test)]
@@ -204,7 +491,7 @@ mod tests {
     }
 
     #[test]
-    fn blocked_matches_ref_all_trans_combos() {
+    fn packed_matches_ref_all_trans_combos() {
         let mut rng = Prng::new(77);
         for &(ta, tb) in &[
             (Trans::No, Trans::No),
@@ -224,41 +511,86 @@ mod tests {
                 let mut c_ref = c0.clone();
                 let mut c_blk = c0.clone();
                 gemm_ref(ta, tb, m, n, k, 1.3, &a, lda, &b, ldb, -0.7, &mut c_ref, ldc);
-                gemm_blocked(ta, tb, m, n, k, 1.3, &a, lda, &b, ldb, -0.7, &mut c_blk, ldc);
+                gemm_packed(ta, tb, m, n, k, 1.3, &a, lda, &b, ldb, -0.7, &mut c_blk, ldc);
                 assert!(close(&c_ref, &c_blk), "mismatch ta={ta:?} tb={tb:?} m={m} n={n} k={k}");
             }
         }
     }
 
     #[test]
-    fn blocked_alpha_zero_scales_only() {
+    fn packed_awkward_blockings_match_ref() {
+        // Exercise every pack/edge path with blockings that do not
+        // divide the problem (nor the MR/NR tiles).
+        let mut rng = Prng::new(5150);
+        let dims_list = [
+            BlockDims { mc: 8, nc: 4, kc: 4 },
+            BlockDims { mc: 13, nc: 10, kc: 9 },
+            BlockDims { mc: 16, nc: 16, kc: 16 },
+        ];
+        let (m, n, k) = (29, 23, 17);
+        let a = rand_mat(&mut rng, m, k, m);
+        let b = rand_mat(&mut rng, k, n, k);
+        let c0 = rand_mat(&mut rng, m, n, m);
+        let mut want = c0.clone();
+        gemm_ref(Trans::No, Trans::No, m, n, k, 0.9, &a, m, &b, k, 0.3, &mut want, m);
+        for dims in dims_list {
+            let mut c = c0.clone();
+            gemm_packed_with(dims, Trans::No, Trans::No, m, n, k, 0.9, &a, m, &b, k, 0.3, &mut c, m);
+            assert!(close(&want, &c), "dims {dims:?}");
+        }
+    }
+
+    #[test]
+    fn packed_alpha_zero_scales_only() {
         let mut rng = Prng::new(3);
         let a = rand_mat(&mut rng, 8, 8, 8);
         let b = rand_mat(&mut rng, 8, 8, 8);
         let c0 = rand_mat(&mut rng, 8, 8, 8);
         let mut c = c0.clone();
-        gemm_blocked(Trans::No, Trans::No, 8, 8, 8, 0.0, &a, 8, &b, 8, 2.0, &mut c, 8);
+        gemm_packed(Trans::No, Trans::No, 8, 8, 8, 0.0, &a, 8, &b, 8, 2.0, &mut c, 8);
         let expect: Vec<f64> = c0.iter().map(|x| 2.0 * x).collect();
         assert!(close(&c, &expect));
     }
 
     #[test]
-    fn blocked_f32_path() {
+    fn packed_beta_zero_ignores_c_contents() {
+        // beta=0 must overwrite, never read, C (proper BLAS semantics).
+        let a = vec![1.0f64; 4];
+        let b = vec![1.0f64; 4];
+        let mut c = vec![f64::NAN; 4];
+        gemm_packed(Trans::No, Trans::No, 2, 2, 2, 1.0, &a, 2, &b, 2, 0.0, &mut c, 2);
+        assert_eq!(c, vec![2.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn packed_f32_path() {
         let a: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0];
         let b: Vec<f32> = vec![1.0, 1.0, 1.0, 1.0];
         let mut c: Vec<f32> = vec![0.0; 4];
-        gemm_blocked(Trans::No, Trans::No, 2, 2, 2, 1.0, &a, 2, &b, 2, 0.0, &mut c, 2);
+        gemm_packed(Trans::No, Trans::No, 2, 2, 2, 1.0, &a, 2, &b, 2, 0.0, &mut c, 2);
         assert_eq!(c, vec![4.0, 6.0, 4.0, 6.0]);
     }
 
     #[test]
-    fn blocked_beta_preserved_outside_mn() {
+    fn packed_beta_preserved_outside_mn() {
         // ld padding rows must not be touched
         let a = vec![1.0; 4];
         let b = vec![1.0; 4];
         let mut c = vec![9.0; 6]; // 2x2 with ldc=3: rows 2 are padding
-        gemm_blocked(Trans::No, Trans::No, 2, 2, 2, 1.0, &a, 2, &b, 2, 0.0, &mut c, 3);
+        gemm_packed(Trans::No, Trans::No, 2, 2, 2, 1.0, &a, 2, &b, 2, 0.0, &mut c, 3);
         assert_eq!(c[2], 9.0);
         assert_eq!(c[5], 9.0);
+    }
+
+    #[test]
+    fn packed_degenerate_sizes_no_panic() {
+        let a: Vec<f64> = vec![];
+        let b: Vec<f64> = vec![];
+        let mut c: Vec<f64> = vec![];
+        gemm_packed(Trans::No, Trans::No, 0, 0, 0, 1.0, &a, 1, &b, 1, 0.0, &mut c, 1);
+        let mut c1 = vec![3.0f64; 2];
+        // k == 0: pure beta scale
+        gemm_packed(Trans::No, Trans::Yes, 2, 1, 0, 1.0, &a, 1, &b, 1, 0.5, &mut c1, 2);
+        assert_eq!(c1, vec![1.5, 1.5]);
     }
 }

@@ -1,20 +1,35 @@
-//! Pure-Rust host BLAS (system S14 in DESIGN.md).
+//! Pure-Rust host BLAS (system S14 in DESIGN.md) — the packed
+//! register-tiled kernel engine plus its naive oracles.
 //!
 //! Three roles:
 //! 1. **Correctness oracle** — `*_ref` naive kernels are the ground truth
-//!    every other execution path (blocked, PJRT/Pallas, full runtime) is
-//!    tested against.
-//! 2. **CPU worker kernel** — [`threaded::gemm_mt`] / [`gemm::gemm_blocked`]
-//!    execute tasks assigned to the CPU compute thread (paper §IV-C.2).
+//!    every other execution path (packed, PJRT/Pallas, full runtime) is
+//!    tested against. They are *test-only*: nothing in the hot path
+//!    dispatches to them anymore.
+//! 2. **CPU worker kernel** — the packed engine ([`gemm::gemm_packed`],
+//!    the `*_packed` macro-kernels, [`threaded::gemm_mt`]) executes
+//!    every tile task in the real engine (paper §IV-C.2). Structure:
+//!    [`pack`] holds the per-thread pack scratch, [`gemm`] the BLIS-style
+//!    blocked loops + MR×NR micro-kernel, [`sy`]/[`tri`] the symmetric
+//!    and triangular macro-kernels that decompose into panel GEMMs,
+//!    [`tune`] the startup blocking probe (feature `autotune`).
 //! 3. **Baseline** — the single-threaded CPU numbers in the Table VI
 //!    application speedups.
+//!
+//! Measured throughput for all of this lives in EXPERIMENTS.md §Perf /
+//! BENCH_kernels.json (regenerate with `cargo bench --bench
+//! kernel_gflops`).
 
 pub mod gemm;
+pub mod pack;
 pub mod sy;
 pub mod threaded;
 pub mod tri;
+pub mod tune;
 
-pub use gemm::{gemm_blocked, gemm_ref};
-pub use sy::{symm_ref, syr2k_ref, syrk_ref};
-pub use threaded::gemm_mt;
-pub use tri::{trmm_ref, trsm_ref};
+pub use gemm::{gemm_blocked, gemm_packed, gemm_packed_with, gemm_ref};
+pub use pack::{give_buf, take_buf, PackBuf};
+pub use sy::{symm_packed, symm_ref, syr2k_packed, syr2k_ref, syrk_packed, syrk_ref};
+pub use threaded::{gemm_mt, MT_FLOP_CUTOFF};
+pub use tri::{trmm_packed, trmm_ref, trsm_packed, trsm_ref};
+pub use tune::{block_dims, BlockDims, DEFAULT_DIMS};

@@ -1,0 +1,204 @@
+//! Per-thread pack scratch for the packed kernel engine.
+//!
+//! The seed `gemm_blocked` allocated two fresh `Vec`s per call — on a
+//! tile-task workload that is two heap round-trips per *k-step*, easily
+//! thousands per routine call. [`PackBuf`] moves the pack panels into a
+//! thread-local that survives across kernel invocations, so on
+//! long-lived threads (the real engine's device workers, the serial
+//! kernel path) steady-state execution allocates nothing — buffers only
+//! grow, monotonically, to the largest panel the thread has seen.
+//! Caveat: `gemm_mt`'s scoped cells are fresh OS threads, so each cell
+//! packs into a new buffer; that cost is amortized by the flop cutoff
+//! (forking only happens when the O(m·n·k) work dwarfs the O(mc·kc)
+//! pack setup), but a persistent worker pool is the eventual fix.
+//!
+//! [`take_buf`]/[`give_buf`] are the same idea for the macro-kernels'
+//! workspace needs (densified triangles, B copies): a thread-local
+//! free-list of `Vec<T>` keyed by element type. A stack (not a single
+//! slot) so nested macro-kernels each get their own buffer.
+
+use crate::api::types::Scalar;
+use std::any::TypeId;
+use std::cell::RefCell;
+
+/// Reusable pack panels for one thread: `a` holds the packed op(A)
+/// block (MR-row strips), `b` the packed op(B) panel (NR-column
+/// strips).
+pub struct PackBuf<T> {
+    pub a: Vec<T>,
+    pub b: Vec<T>,
+}
+
+impl<T: Scalar> PackBuf<T> {
+    pub const fn new() -> PackBuf<T> {
+        PackBuf { a: Vec::new(), b: Vec::new() }
+    }
+
+    /// Grow (never shrink) the panels to at least the given element
+    /// counts. Newly exposed elements are zeroed; the pack loops
+    /// overwrite everything they read, so stale tails are harmless.
+    pub fn ensure(&mut self, a_elems: usize, b_elems: usize) {
+        if self.a.len() < a_elems {
+            self.a.resize(a_elems, T::zero());
+        }
+        if self.b.len() < b_elems {
+            self.b.resize(b_elems, T::zero());
+        }
+    }
+}
+
+impl<T: Scalar> Default for PackBuf<T> {
+    fn default() -> Self {
+        PackBuf::new()
+    }
+}
+
+thread_local! {
+    static PACK_F32: RefCell<PackBuf<f32>> = const { RefCell::new(PackBuf::new()) };
+    static PACK_F64: RefCell<PackBuf<f64>> = const { RefCell::new(PackBuf::new()) };
+    static BUFS_F32: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+    static BUFS_F64: RefCell<Vec<Vec<f64>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` with this thread's reusable [`PackBuf`] for `T`.
+///
+/// Falls back to a fresh (per-call) buffer if the thread-local is
+/// already borrowed (re-entrant kernel call) or `T` is neither f32 nor
+/// f64 — correctness never depends on the reuse.
+pub fn with_pack<T, R, F>(f: F) -> R
+where
+    T: Scalar,
+    F: FnOnce(&mut PackBuf<T>) -> R,
+{
+    if TypeId::of::<T>() == TypeId::of::<f64>() {
+        PACK_F64.with(|cell| match cell.try_borrow_mut() {
+            Ok(mut pb) => {
+                // SAFETY: TypeId equality above proves T == f64, so
+                // PackBuf<f64> and PackBuf<T> are the same type.
+                let pb: &mut PackBuf<T> =
+                    unsafe { &mut *(&mut *pb as *mut PackBuf<f64>).cast::<PackBuf<T>>() };
+                f(pb)
+            }
+            Err(_) => f(&mut PackBuf::new()),
+        })
+    } else if TypeId::of::<T>() == TypeId::of::<f32>() {
+        PACK_F32.with(|cell| match cell.try_borrow_mut() {
+            Ok(mut pb) => {
+                // SAFETY: as above with T == f32.
+                let pb: &mut PackBuf<T> =
+                    unsafe { &mut *(&mut *pb as *mut PackBuf<f32>).cast::<PackBuf<T>>() };
+                f(pb)
+            }
+            Err(_) => f(&mut PackBuf::new()),
+        })
+    } else {
+        f(&mut PackBuf::new())
+    }
+}
+
+/// Reinterpret a `Vec<A>` as `Vec<B>` where the caller has proven
+/// `A == B` (same `TypeId`).
+fn cast_vec<A: 'static, B: 'static>(v: Vec<A>) -> Vec<B> {
+    debug_assert_eq!(TypeId::of::<A>(), TypeId::of::<B>());
+    let mut v = std::mem::ManuallyDrop::new(v);
+    // SAFETY: A == B per the caller's TypeId check, so ptr/len/capacity
+    // describe a valid Vec<B>.
+    unsafe { Vec::from_raw_parts(v.as_mut_ptr().cast::<B>(), v.len(), v.capacity()) }
+}
+
+/// Take a workspace of `len` elements from this thread's free-list (or
+/// allocate one). **Contents are unspecified** — a recycled buffer
+/// keeps its previous values (only newly grown elements are zeroed), so
+/// callers must fully overwrite before reading; every macro-kernel use
+/// does (densify/copy/beta-0 GEMM). Not re-zeroing avoids an O(len)
+/// memset per kernel task — the same class of waste the tile-acquire
+/// path eliminated (EXPERIMENTS.md §Perf). Return the buffer with
+/// [`give_buf`] so the allocation is reused; dropping it is merely
+/// slower.
+pub fn take_buf<T: Scalar>(len: usize) -> Vec<T> {
+    let recycled: Option<Vec<T>> = if TypeId::of::<T>() == TypeId::of::<f64>() {
+        BUFS_F64.with(|s| s.borrow_mut().pop()).map(cast_vec::<f64, T>)
+    } else if TypeId::of::<T>() == TypeId::of::<f32>() {
+        BUFS_F32.with(|s| s.borrow_mut().pop()).map(cast_vec::<f32, T>)
+    } else {
+        None
+    };
+    let mut v = recycled.unwrap_or_default();
+    if v.len() > len {
+        v.truncate(len);
+    } else {
+        v.resize(len, T::zero());
+    }
+    v
+}
+
+/// Return a workspace taken with [`take_buf`] to the thread free-list.
+pub fn give_buf<T: Scalar>(v: Vec<T>) {
+    if TypeId::of::<T>() == TypeId::of::<f64>() {
+        BUFS_F64.with(|s| s.borrow_mut().push(cast_vec::<T, f64>(v)));
+    } else if TypeId::of::<T>() == TypeId::of::<f32>() {
+        BUFS_F32.with(|s| s.borrow_mut().push(cast_vec::<T, f32>(v)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_buf_grows_monotonically() {
+        let mut pb: PackBuf<f64> = PackBuf::new();
+        pb.ensure(16, 8);
+        assert_eq!(pb.a.len(), 16);
+        assert_eq!(pb.b.len(), 8);
+        pb.a[3] = 7.0;
+        pb.ensure(4, 4); // never shrinks
+        assert_eq!(pb.a.len(), 16);
+        assert_eq!(pb.a[3], 7.0);
+        pb.ensure(32, 8);
+        assert_eq!(pb.a.len(), 32);
+    }
+
+    #[test]
+    fn with_pack_reuses_capacity() {
+        let cap0 = with_pack(|pb: &mut PackBuf<f64>| {
+            pb.ensure(1024, 1024);
+            pb.a.capacity()
+        });
+        let cap1 = with_pack(|pb: &mut PackBuf<f64>| pb.a.capacity());
+        assert!(cap1 >= cap0);
+        assert!(cap1 >= 1024);
+    }
+
+    #[test]
+    fn take_give_roundtrip() {
+        let mut v = take_buf::<f32>(100);
+        // fresh buffers are fully zero-initialized
+        assert!(v.iter().all(|&x| x == 0.0));
+        v[0] = 5.0;
+        let cap = v.capacity();
+        give_buf(v);
+        // recycling keeps the allocation; contents are unspecified (and
+        // deliberately NOT re-zeroed), only the length is guaranteed
+        let v2 = take_buf::<f32>(50);
+        assert_eq!(v2.len(), 50);
+        assert!(v2.capacity() >= cap.min(50));
+        give_buf(v2);
+        // growing past the recycled length zero-fills the new tail
+        let v3 = take_buf::<f32>(200);
+        assert_eq!(v3.len(), 200);
+        assert!(v3[50..].iter().all(|&x| x == 0.0));
+        give_buf(v3);
+    }
+
+    #[test]
+    fn nested_take_is_distinct() {
+        let mut a = take_buf::<f64>(8);
+        let mut b = take_buf::<f64>(8);
+        a[0] = 1.0;
+        b[0] = 2.0;
+        assert_eq!(a[0], 1.0);
+        give_buf(a);
+        give_buf(b);
+    }
+}

@@ -1,9 +1,21 @@
-//! Host symmetric kernels: SYRK, SYR2K, SYMM naive oracles.
+//! Host symmetric kernels: SYRK, SYR2K, SYMM.
 //!
 //! Column-major. Symmetric operands store one `uplo` triangle; the other
 //! triangle of the buffer is never read (tests fill it with NaN to prove
 //! it).
+//!
+//! Two tiers per routine:
+//! - `*_ref` — naive oracles, trusted by inspection, **test-only** since
+//!   the packed engine landed;
+//! - `*_packed` — blocked macro-kernels that decompose into panel GEMMs
+//!   over the packed engine ([`super::gemm::gemm_packed`]): off-diagonal
+//!   panels are plain GEMMs straight into C's stored triangle, diagonal
+//!   blocks are computed as full squares into a thread-reused scratch
+//!   and merged triangle-only (so the unstored triangle of C is never
+//!   touched, same contract as the oracles).
 
+use super::gemm::gemm_packed;
+use super::pack::{give_buf, take_buf};
 use crate::api::types::{Scalar, Side, Trans, Uplo};
 
 /// Read `sym(A)[r, c]` from a triangle-stored buffer.
@@ -140,6 +152,321 @@ pub fn symm_ref<T: Scalar>(
             c[j * ldc + i] = alpha * acc + beta * old;
         }
     }
+}
+
+// ------------------------------------------------------------------
+// packed macro-kernels
+
+/// Default diagonal-block size for the symmetric/triangular macro
+/// kernels: big enough that off-diagonal GEMM panels dominate, small
+/// enough that the `NB×NB` diagonal scratch stays cache-resident.
+pub(crate) const DIAG_NB: usize = 128;
+
+/// `C[tri] := beta * C[tri]` (with BLAS beta-zero semantics: C is
+/// overwritten, never read).
+pub(crate) fn scale_tri<T: Scalar>(uplo: Uplo, n: usize, beta: T, c: &mut [T], ldc: usize) {
+    for j in 0..n {
+        let (lo, hi) = match uplo {
+            Uplo::Upper => (0, j + 1),
+            Uplo::Lower => (j, n),
+        };
+        for i in lo..hi {
+            let idx = j * ldc + i;
+            c[idx] = if beta == T::zero() { T::zero() } else { beta * c[idx] };
+        }
+    }
+}
+
+/// Merge a densely computed `jb×jb` diagonal block (scratch `w`, ld
+/// `jb`) into C's stored triangle at block offset `j0`, applying beta.
+fn merge_tri<T: Scalar>(
+    uplo: Uplo,
+    j0: usize,
+    jb: usize,
+    w: &[T],
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    for jj in 0..jb {
+        let (lo, hi) = match uplo {
+            Uplo::Upper => (0, jj + 1),
+            Uplo::Lower => (jj, jb),
+        };
+        for ii in lo..hi {
+            let idx = (j0 + jj) * ldc + j0 + ii;
+            let v = w[jj * jb + ii];
+            c[idx] = if beta == T::zero() { v } else { v + beta * c[idx] };
+        }
+    }
+}
+
+/// Packed SYRK, same semantics as [`syrk_ref`]: only the `uplo`
+/// triangle of C is referenced/updated.
+#[allow(clippy::too_many_arguments)]
+pub fn syrk_packed<T: Scalar>(
+    uplo: Uplo,
+    trans: Trans,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    syrk_packed_nb(DIAG_NB, uplo, trans, n, k, alpha, a, lda, beta, c, ldc)
+}
+
+/// [`syrk_packed`] with an explicit diagonal-block size (tests sweep
+/// tiny blocks to exercise every edge path).
+#[doc(hidden)]
+#[allow(clippy::too_many_arguments)]
+pub fn syrk_packed_nb<T: Scalar>(
+    nb: usize,
+    uplo: Uplo,
+    trans: Trans,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    if n == 0 {
+        return;
+    }
+    if alpha == T::zero() || k == 0 {
+        scale_tri(uplo, n, beta, c, ldc);
+        return;
+    }
+    let nb = nb.max(1);
+    let mut j0 = 0;
+    while j0 < n {
+        let jb = nb.min(n - j0);
+        let j1 = j0 + jb;
+        // Diagonal block: full square into scratch, merge the triangle.
+        let mut w = take_buf::<T>(jb * jb);
+        match trans {
+            Trans::No => gemm_packed(
+                Trans::No, Trans::Yes, jb, jb, k, alpha, &a[j0..], lda, &a[j0..], lda,
+                T::zero(), &mut w, jb,
+            ),
+            Trans::Yes => gemm_packed(
+                Trans::Yes, Trans::No, jb, jb, k, alpha, &a[j0 * lda..], lda, &a[j0 * lda..], lda,
+                T::zero(), &mut w, jb,
+            ),
+        }
+        merge_tri(uplo, j0, jb, &w, beta, c, ldc);
+        give_buf(w);
+        // Off-diagonal panel of this block column: one plain GEMM whose
+        // rectangular extent lies entirely inside the stored triangle.
+        if uplo == Uplo::Lower && j1 < n {
+            match trans {
+                Trans::No => gemm_packed(
+                    Trans::No, Trans::Yes, n - j1, jb, k, alpha, &a[j1..], lda, &a[j0..], lda,
+                    beta, &mut c[j0 * ldc + j1..], ldc,
+                ),
+                Trans::Yes => gemm_packed(
+                    Trans::Yes, Trans::No, n - j1, jb, k, alpha, &a[j1 * lda..], lda,
+                    &a[j0 * lda..], lda, beta, &mut c[j0 * ldc + j1..], ldc,
+                ),
+            }
+        }
+        if uplo == Uplo::Upper && j0 > 0 {
+            match trans {
+                Trans::No => gemm_packed(
+                    Trans::No, Trans::Yes, j0, jb, k, alpha, a, lda, &a[j0..], lda, beta,
+                    &mut c[j0 * ldc..], ldc,
+                ),
+                Trans::Yes => gemm_packed(
+                    Trans::Yes, Trans::No, j0, jb, k, alpha, a, lda, &a[j0 * lda..], lda, beta,
+                    &mut c[j0 * ldc..], ldc,
+                ),
+            }
+        }
+        j0 = j1;
+    }
+}
+
+/// Packed SYR2K, same semantics as [`syr2k_ref`].
+#[allow(clippy::too_many_arguments)]
+pub fn syr2k_packed<T: Scalar>(
+    uplo: Uplo,
+    trans: Trans,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    syr2k_packed_nb(DIAG_NB, uplo, trans, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
+}
+
+/// [`syr2k_packed`] with an explicit diagonal-block size.
+#[doc(hidden)]
+#[allow(clippy::too_many_arguments)]
+pub fn syr2k_packed_nb<T: Scalar>(
+    nb: usize,
+    uplo: Uplo,
+    trans: Trans,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    if n == 0 {
+        return;
+    }
+    if alpha == T::zero() || k == 0 {
+        scale_tri(uplo, n, beta, c, ldc);
+        return;
+    }
+    let nb = nb.max(1);
+    let mut j0 = 0;
+    while j0 < n {
+        let jb = nb.min(n - j0);
+        let j1 = j0 + jb;
+        let mut w = take_buf::<T>(jb * jb);
+        match trans {
+            Trans::No => {
+                gemm_packed(
+                    Trans::No, Trans::Yes, jb, jb, k, alpha, &a[j0..], lda, &b[j0..], ldb,
+                    T::zero(), &mut w, jb,
+                );
+                gemm_packed(
+                    Trans::No, Trans::Yes, jb, jb, k, alpha, &b[j0..], ldb, &a[j0..], lda,
+                    T::one(), &mut w, jb,
+                );
+            }
+            Trans::Yes => {
+                gemm_packed(
+                    Trans::Yes, Trans::No, jb, jb, k, alpha, &a[j0 * lda..], lda, &b[j0 * ldb..],
+                    ldb, T::zero(), &mut w, jb,
+                );
+                gemm_packed(
+                    Trans::Yes, Trans::No, jb, jb, k, alpha, &b[j0 * ldb..], ldb, &a[j0 * lda..],
+                    lda, T::one(), &mut w, jb,
+                );
+            }
+        }
+        merge_tri(uplo, j0, jb, &w, beta, c, ldc);
+        give_buf(w);
+        if uplo == Uplo::Lower && j1 < n {
+            match trans {
+                Trans::No => {
+                    gemm_packed(
+                        Trans::No, Trans::Yes, n - j1, jb, k, alpha, &a[j1..], lda, &b[j0..], ldb,
+                        beta, &mut c[j0 * ldc + j1..], ldc,
+                    );
+                    gemm_packed(
+                        Trans::No, Trans::Yes, n - j1, jb, k, alpha, &b[j1..], ldb, &a[j0..], lda,
+                        T::one(), &mut c[j0 * ldc + j1..], ldc,
+                    );
+                }
+                Trans::Yes => {
+                    gemm_packed(
+                        Trans::Yes, Trans::No, n - j1, jb, k, alpha, &a[j1 * lda..], lda,
+                        &b[j0 * ldb..], ldb, beta, &mut c[j0 * ldc + j1..], ldc,
+                    );
+                    gemm_packed(
+                        Trans::Yes, Trans::No, n - j1, jb, k, alpha, &b[j1 * ldb..], ldb,
+                        &a[j0 * lda..], lda, T::one(), &mut c[j0 * ldc + j1..], ldc,
+                    );
+                }
+            }
+        }
+        if uplo == Uplo::Upper && j0 > 0 {
+            match trans {
+                Trans::No => {
+                    gemm_packed(
+                        Trans::No, Trans::Yes, j0, jb, k, alpha, a, lda, &b[j0..], ldb, beta,
+                        &mut c[j0 * ldc..], ldc,
+                    );
+                    gemm_packed(
+                        Trans::No, Trans::Yes, j0, jb, k, alpha, b, ldb, &a[j0..], lda, T::one(),
+                        &mut c[j0 * ldc..], ldc,
+                    );
+                }
+                Trans::Yes => {
+                    gemm_packed(
+                        Trans::Yes, Trans::No, j0, jb, k, alpha, a, lda, &b[j0 * ldb..], ldb,
+                        beta, &mut c[j0 * ldc..], ldc,
+                    );
+                    gemm_packed(
+                        Trans::Yes, Trans::No, j0, jb, k, alpha, b, ldb, &a[j0 * lda..], lda,
+                        T::one(), &mut c[j0 * ldc..], ldc,
+                    );
+                }
+            }
+        }
+        j0 = j1;
+    }
+}
+
+/// Packed SYMM, same semantics as [`symm_ref`]: densify the stored
+/// triangle of `sym(A)` into a thread-reused scratch (O(na²) against
+/// the O(m·n·na) multiply), then run one packed GEMM.
+#[allow(clippy::too_many_arguments)]
+pub fn symm_packed<T: Scalar>(
+    side: Side,
+    uplo: Uplo,
+    m: usize,
+    n: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    if alpha == T::zero() {
+        for j in 0..n {
+            for i in 0..m {
+                let idx = j * ldc + i;
+                c[idx] = if beta == T::zero() { T::zero() } else { beta * c[idx] };
+            }
+        }
+        return;
+    }
+    let na = match side {
+        Side::Left => m,
+        Side::Right => n,
+    };
+    let mut w = take_buf::<T>(na * na);
+    for cc in 0..na {
+        for rr in 0..na {
+            w[cc * na + rr] = sym_elem(a, lda, uplo, rr, cc);
+        }
+    }
+    match side {
+        Side::Left => {
+            gemm_packed(Trans::No, Trans::No, m, n, m, alpha, &w, na, b, ldb, beta, c, ldc)
+        }
+        Side::Right => {
+            gemm_packed(Trans::No, Trans::No, m, n, n, alpha, b, ldb, &w, na, beta, c, ldc)
+        }
+    }
+    give_buf(w);
 }
 
 #[cfg(test)]

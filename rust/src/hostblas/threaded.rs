@@ -2,15 +2,70 @@
 //! "The CPU cores dequeue one task at each time and solve the task with
 //! a multithreaded BLAS kernel, where the tile is further factorized").
 //!
-//! The tile is split into column panels, one per worker thread; each
-//! panel runs the blocked single-thread kernel. std::thread::scope keeps
-//! lifetimes simple — these are short-lived compute bursts, not a pool.
+//! Work-centric 2D partitioning (the Stream-K framing, arXiv
+//! 2301.03598): C is cut into a `tr × tc` grid chosen to balance the
+//! per-cell output area, and each cell runs the packed single-thread
+//! engine independently — every worker packs exactly the A/B panels its
+//! cell consumes, so there is no inter-thread pack sharing to
+//! synchronize. The seed's 1D column split left tall-skinny C (large m,
+//! small n) entirely serial; the 2D grid splits whichever dimensions
+//! have the work.
+//!
+//! The serial cutoff is flop-based: a 2·m·n·k budget below
+//! [`MT_FLOP_CUTOFF`] is cheaper to run in-place than to fork for
+//! (see EXPERIMENTS.md §Perf for the sizing rationale).
+//!
+//! std::thread::scope keeps lifetimes simple — these are short-lived
+//! compute bursts, not a pool. That also means each cell's thread-local
+//! `PackBuf` starts empty (spawn + pack-allocation cost is what the
+//! flop cutoff amortizes); replacing the per-call scope with a
+//! persistent worker pool would extend the zero-allocation guarantee to
+//! this path and is the natural follow-up.
 
-use super::gemm::gemm_blocked;
+use super::gemm::{gemm_packed, gemm_packed_ptr};
+use super::tune::block_dims;
 use crate::api::types::{Scalar, Trans};
 
-/// Multithreaded GEMM with [`gemm_blocked`] semantics, splitting the N
-/// dimension across up to `threads` workers.
+/// Minimum flops (2·m·n·k) before forking pays for itself.
+pub const MT_FLOP_CUTOFF: f64 = 8.4e6; // ≈ 2·160³
+
+/// A raw C pointer that may cross the scoped-thread boundary. Each
+/// spawned cell derives from it a pointer to a *disjoint* sub-block of
+/// C, so no element is ever reachable from two threads.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// `(start, len)` of chunk `idx` when `total` splits into `parts`.
+fn chunk(total: usize, parts: usize, idx: usize) -> (usize, usize) {
+    let per = total.div_ceil(parts);
+    let lo = (idx * per).min(total);
+    (lo, per.min(total - lo))
+}
+
+/// Choose a `tr × tc = threads` grid minimizing the largest cell area
+/// (primary) and cell aspect skew (tie-break, for pack reuse).
+fn grid_for(threads: usize, m: usize, n: usize) -> (usize, usize) {
+    let mut best = (1, threads);
+    let mut best_score = (usize::MAX, usize::MAX);
+    for tr in 1..=threads {
+        if threads % tr != 0 {
+            continue;
+        }
+        let tc = threads / tr;
+        let cm = m.div_ceil(tr);
+        let cn = n.div_ceil(tc);
+        let score = (cm * cn, cm.abs_diff(cn));
+        if score < best_score {
+            best_score = score;
+            best = (tr, tc);
+        }
+    }
+    best
+}
+
+/// Multithreaded GEMM with [`gemm_packed`] semantics, partitioning C's
+/// M×N output plane across up to `threads` workers.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_mt<T: Scalar>(
     threads: usize,
@@ -28,82 +83,69 @@ pub fn gemm_mt<T: Scalar>(
     c: &mut [T],
     ldc: usize,
 ) {
-    let threads = threads.max(1).min(n.max(1));
-    if threads == 1 || n < 64 {
-        gemm_blocked(ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc);
+    if m == 0 || n == 0 {
         return;
     }
-    // Split C's columns into `threads` contiguous panels. Each panel is a
-    // disjoint &mut slice of C, so this is safe-Rust parallelism.
-    let cols_per = n.div_ceil(threads);
-    // Panel boundaries in elements of C (column-major: col j starts at j*ldc).
-    let mut panels: Vec<(usize, usize, &mut [T])> = Vec::new(); // (j0, ncols, slice)
-    let mut rest = c;
-    let mut consumed_cols = 0usize;
-    for t in 0..threads {
-        let j0 = t * cols_per;
-        if j0 >= n {
-            break;
-        }
-        let ncols = cols_per.min(n - j0);
-        let split_at = ncols * ldc;
-        // `rest` currently starts at column `consumed_cols`
-        debug_assert_eq!(consumed_cols, j0);
-        if rest.len() >= split_at && t + 1 < threads && j0 + ncols < n {
-            let (head, tail) = rest.split_at_mut(split_at);
-            panels.push((j0, ncols, head));
-            rest = tail;
-            consumed_cols += ncols;
-        } else {
-            // last panel takes the remainder
-            let len = rest.len();
-            panels.push((j0, n - j0, &mut rest[..len]));
-            break;
-        }
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    let threads = threads.max(1).min(m * n);
+    // alpha == 0 joins the serial path: BLAS says A/B are unreferenced
+    // then, so the fork path's &a[aoff..] shrink would be the only
+    // reader — and a legally undersized A/B would make it panic.
+    if threads == 1 || alpha == T::zero() || flops < MT_FLOP_CUTOFF {
+        gemm_packed(ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc);
+        return;
     }
+    // Hard asserts (not debug): the sole safety boundary before C's
+    // pointer crosses into the spawned cells.
+    assert!(ldc >= m, "ldc must cover C's rows");
+    assert!(c.len() >= (n - 1) * ldc + m, "C buffer too small");
+    let (tr, tc) = grid_for(threads, m, n);
+    let dims = block_dims(T::DTYPE);
+    let cptr = SendPtr(c.as_mut_ptr());
     std::thread::scope(|scope| {
-        for (j0, ncols, cpanel) in panels {
-            scope.spawn(move || {
-                // B panel: op(B)[:, j0..j0+ncols]
-                match tb {
-                    Trans::No => {
-                        let boff = j0 * ldb;
-                        gemm_blocked(
+        let cptr = &cptr;
+        for ri in 0..tr {
+            for cj in 0..tc {
+                scope.spawn(move || {
+                    let (i0, ib) = chunk(m, tr, ri);
+                    let (j0, jb) = chunk(n, tc, cj);
+                    if ib == 0 || jb == 0 {
+                        return;
+                    }
+                    let aoff = match ta {
+                        Trans::No => i0,
+                        Trans::Yes => i0 * lda,
+                    };
+                    let boff = match tb {
+                        Trans::No => j0 * ldb,
+                        Trans::Yes => j0,
+                    };
+                    // SAFETY: cells are disjoint rectangles of C (chunk
+                    // ranges never overlap across (ri, cj)), each within
+                    // the extent covered by the caller's &mut slice; a/b
+                    // are shared reads. k ≥ 1 here (k = 0 falls below
+                    // the flop cutoff), so the a/b offsets stay in
+                    // bounds for the shrunken views.
+                    unsafe {
+                        gemm_packed_ptr(
+                            dims,
                             ta,
                             tb,
-                            m,
-                            ncols,
+                            ib,
+                            jb,
                             k,
                             alpha,
-                            a,
+                            &a[aoff..],
                             lda,
                             &b[boff..],
                             ldb,
                             beta,
-                            cpanel,
+                            cptr.0.add(j0 * ldc + i0),
                             ldc,
                         );
                     }
-                    Trans::Yes => {
-                        // op(B)=Bᵀ: columns of op(B) are rows of B; offset rows
-                        gemm_blocked(
-                            ta,
-                            tb,
-                            m,
-                            ncols,
-                            k,
-                            alpha,
-                            a,
-                            lda,
-                            &b[j0..],
-                            ldb,
-                            beta,
-                            cpanel,
-                            ldc,
-                        );
-                    }
-                }
-            });
+                });
+            }
         }
     });
 }
@@ -119,7 +161,7 @@ mod tests {
     }
 
     #[test]
-    fn mt_matches_ref_nn_and_nt() {
+    fn mt_matches_ref_all_trans_combos() {
         let mut rng = Prng::new(31);
         for &(ta, tb) in &[
             (Trans::No, Trans::No),
@@ -127,7 +169,9 @@ mod tests {
             (Trans::Yes, Trans::No),
             (Trans::Yes, Trans::Yes),
         ] {
-            let (m, n, k) = (65, 200, 33);
+            // sized just above MT_FLOP_CUTOFF so every trans combo
+            // exercises the forked 2D path (and its a/b offsets)
+            let (m, n, k) = (256, 260, 64);
             let (ar, ac) = if ta == Trans::No { (m, k) } else { (k, m) };
             let (br, bc) = if tb == Trans::No { (k, n) } else { (n, k) };
             let mut a = vec![0.0; ar * ac];
@@ -154,6 +198,27 @@ mod tests {
     }
 
     #[test]
+    fn mt_tall_skinny_partitions_rows() {
+        // The seed's `n < 64` fallback left this case serial; the 2D
+        // grid must split rows and still agree with the oracle. The
+        // problem is sized above MT_FLOP_CUTOFF so forking engages.
+        let mut rng = Prng::new(41);
+        let (m, n, k) = (2048, 8, 300);
+        assert!(2.0 * (m * n * k) as f64 >= MT_FLOP_CUTOFF);
+        let mut a = vec![0.0; m * k];
+        let mut b = vec![0.0; k * n];
+        rng.fill_f64(&mut a, -1.0, 1.0);
+        rng.fill_f64(&mut b, -1.0, 1.0);
+        let mut c0 = vec![0.0; m * n];
+        rng.fill_f64(&mut c0, -1.0, 1.0);
+        let mut c_ref = c0.clone();
+        let mut c_mt = c0.clone();
+        gemm_ref(Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.5, &mut c_ref, m);
+        gemm_mt(4, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.5, &mut c_mt, m);
+        assert!(close(&c_ref, &c_mt));
+    }
+
+    #[test]
     fn mt_thread_counts_agree() {
         let mut rng = Prng::new(37);
         let (m, n, k) = (48, 130, 48);
@@ -169,5 +234,22 @@ mod tests {
         gemm_mt(16, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c3, m);
         assert!(close(&c1, &c2));
         assert!(close(&c1, &c3));
+    }
+
+    #[test]
+    fn grid_selection_balances_work() {
+        // 4 threads on square C → 2×2; on tall C → 4×1; on wide C → 1×4.
+        assert_eq!(grid_for(4, 100, 100), (2, 2));
+        assert_eq!(grid_for(4, 1000, 8), (4, 1));
+        assert_eq!(grid_for(4, 8, 1000), (1, 4));
+        // chunk covers the whole range without overlap
+        let (m, parts) = (103, 4);
+        let mut covered = 0;
+        for i in 0..parts {
+            let (lo, len) = chunk(m, parts, i);
+            assert_eq!(lo, covered.min(m));
+            covered += len;
+        }
+        assert_eq!(covered, m);
     }
 }

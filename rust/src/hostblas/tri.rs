@@ -1,9 +1,20 @@
-//! Host triangular kernels: TRMM and TRSM (naive, trustworthy oracles)
-//! plus the diagonal-tile variants used by the tile executor.
+//! Host triangular kernels: TRMM and TRSM.
 //!
 //! Column-major throughout. `op(A)` is the `uplo` triangle of A (with
 //! implicit unit diagonal for `Diag::Unit`), optionally transposed.
+//!
+//! `*_ref` are the naive, trustworthy oracles (test-only since the
+//! packed engine landed). `*_packed` are the blocked macro-kernels: the
+//! triangular operand is processed in `NB×NB` diagonal blocks —
+//! densified once per block into a thread-reused scratch so the inner
+//! loops are branch-free — and everything off the block diagonal is a
+//! panel GEMM through [`super::gemm::gemm_packed`]. TRSM solves the
+//! diagonal block by forward/back substitution and folds the rest of
+//! the triangle into rank-NB GEMM updates (the classical right-looking
+//! blocked algorithm).
 
+use super::gemm::gemm_packed;
+use super::pack::{give_buf, take_buf};
 use crate::api::types::{Diag, Scalar, Side, Trans, Uplo};
 
 /// Read element `(r, c)` of the *logical* triangular operand op(A) from
@@ -178,6 +189,367 @@ pub fn trsm_ref<T: Scalar>(
                     }
                 }
             }
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// packed macro-kernels
+
+use super::sy::DIAG_NB;
+
+/// Densify the logical `db×db` diagonal block of op(A) at offset `d0`
+/// into `td` (column-major, ld `db`): zero outside the triangle, unit
+/// diagonal applied. Only the stored triangle of `a` is read.
+#[allow(clippy::too_many_arguments)]
+fn densify_tri<T: Scalar>(
+    td: &mut [T],
+    a: &[T],
+    lda: usize,
+    uplo: Uplo,
+    ta: Trans,
+    diag: Diag,
+    d0: usize,
+    db: usize,
+) {
+    for jj in 0..db {
+        for ii in 0..db {
+            td[jj * db + ii] = tri_elem(a, lda, uplo, ta, diag, d0 + ii, d0 + jj);
+        }
+    }
+}
+
+/// Does op(A) act as an upper triangle?
+fn op_is_upper(uplo: Uplo, ta: Trans) -> bool {
+    matches!((uplo, ta), (Uplo::Upper, Trans::No) | (Uplo::Lower, Trans::Yes))
+}
+
+/// Packed TRMM, same semantics as [`trmm_ref`].
+#[allow(clippy::too_many_arguments)]
+pub fn trmm_packed<T: Scalar>(
+    side: Side,
+    uplo: Uplo,
+    ta: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &mut [T],
+    ldb: usize,
+) {
+    trmm_packed_nb(DIAG_NB, side, uplo, ta, diag, m, n, alpha, a, lda, b, ldb)
+}
+
+/// [`trmm_packed`] with an explicit diagonal-block size.
+#[doc(hidden)]
+#[allow(clippy::too_many_arguments)]
+pub fn trmm_packed_nb<T: Scalar>(
+    nb: usize,
+    side: Side,
+    uplo: Uplo,
+    ta: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &mut [T],
+    ldb: usize,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    if alpha == T::zero() {
+        for j in 0..n {
+            for i in 0..m {
+                b[j * ldb + i] = T::zero();
+            }
+        }
+        return;
+    }
+    let nb = nb.max(1);
+    let op_upper = op_is_upper(uplo, ta);
+    // One full copy of B up front: every block row/column of the result
+    // is then an independent pair of GEMMs out of `w`, with no
+    // read-after-write hazards inside `b`.
+    let mut w = take_buf::<T>(m * n);
+    for j in 0..n {
+        w[j * m..j * m + m].copy_from_slice(&b[j * ldb..j * ldb + m]);
+    }
+    let na = match side {
+        Side::Left => m,
+        Side::Right => n,
+    };
+    let mut td = take_buf::<T>(nb.min(na) * nb.min(na));
+    match side {
+        Side::Left => {
+            // B_i := alpha * (T_ii w_i + op(A)[i, rest] w_rest)
+            let mut i0 = 0;
+            while i0 < m {
+                let ib = nb.min(m - i0);
+                let i1 = i0 + ib;
+                densify_tri(&mut td[..ib * ib], a, lda, uplo, ta, diag, i0, ib);
+                gemm_packed(
+                    Trans::No, Trans::No, ib, n, ib, alpha, &td[..ib * ib], ib, &w[i0..], m,
+                    T::zero(), &mut b[i0..], ldb,
+                );
+                if op_upper && i1 < m {
+                    let aoff = match ta {
+                        Trans::No => i1 * lda + i0,
+                        Trans::Yes => i0 * lda + i1,
+                    };
+                    gemm_packed(
+                        ta, Trans::No, ib, n, m - i1, alpha, &a[aoff..], lda, &w[i1..], m,
+                        T::one(), &mut b[i0..], ldb,
+                    );
+                }
+                if !op_upper && i0 > 0 {
+                    let aoff = match ta {
+                        Trans::No => i0,
+                        Trans::Yes => i0 * lda,
+                    };
+                    gemm_packed(
+                        ta, Trans::No, ib, n, i0, alpha, &a[aoff..], lda, &w, m, T::one(),
+                        &mut b[i0..], ldb,
+                    );
+                }
+                i0 = i1;
+            }
+        }
+        Side::Right => {
+            // B_j := alpha * (w_j T_jj + w_rest op(A)[rest, j])
+            let mut j0 = 0;
+            while j0 < n {
+                let jb = nb.min(n - j0);
+                let j1 = j0 + jb;
+                densify_tri(&mut td[..jb * jb], a, lda, uplo, ta, diag, j0, jb);
+                gemm_packed(
+                    Trans::No, Trans::No, m, jb, jb, alpha, &w[j0 * m..], m, &td[..jb * jb], jb,
+                    T::zero(), &mut b[j0 * ldb..], ldb,
+                );
+                if op_upper && j0 > 0 {
+                    let (boff, tb_g) = match ta {
+                        Trans::No => (j0 * lda, Trans::No),
+                        Trans::Yes => (j0, Trans::Yes),
+                    };
+                    gemm_packed(
+                        Trans::No, tb_g, m, jb, j0, alpha, &w, m, &a[boff..], lda, T::one(),
+                        &mut b[j0 * ldb..], ldb,
+                    );
+                }
+                if !op_upper && j1 < n {
+                    let (boff, tb_g) = match ta {
+                        Trans::No => (j0 * lda + j1, Trans::No),
+                        Trans::Yes => (j1 * lda + j0, Trans::Yes),
+                    };
+                    gemm_packed(
+                        Trans::No, tb_g, m, jb, n - j1, alpha, &w[j1 * m..], m, &a[boff..], lda,
+                        T::one(), &mut b[j0 * ldb..], ldb,
+                    );
+                }
+                j0 = j1;
+            }
+        }
+    }
+    give_buf(td);
+    give_buf(w);
+}
+
+/// Packed TRSM, same semantics as [`trsm_ref`]: blocked forward/back
+/// substitution with rank-NB GEMM trailing updates.
+#[allow(clippy::too_many_arguments)]
+pub fn trsm_packed<T: Scalar>(
+    side: Side,
+    uplo: Uplo,
+    ta: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &mut [T],
+    ldb: usize,
+) {
+    trsm_packed_nb(DIAG_NB, side, uplo, ta, diag, m, n, alpha, a, lda, b, ldb)
+}
+
+/// [`trsm_packed`] with an explicit diagonal-block size.
+#[doc(hidden)]
+#[allow(clippy::too_many_arguments)]
+pub fn trsm_packed_nb<T: Scalar>(
+    nb: usize,
+    side: Side,
+    uplo: Uplo,
+    ta: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &mut [T],
+    ldb: usize,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    // Scale the RHS once; the solve then runs with alpha = 1.
+    for j in 0..n {
+        for i in 0..m {
+            let idx = j * ldb + i;
+            b[idx] = if alpha == T::zero() { T::zero() } else { alpha * b[idx] };
+        }
+    }
+    if alpha == T::zero() {
+        return; // X = 0 solves op(A) X = 0 exactly
+    }
+    let nb = nb.max(1);
+    let op_upper = op_is_upper(uplo, ta);
+    match side {
+        Side::Left => {
+            let nblk = m.div_ceil(nb);
+            let bs = nb.min(m);
+            let mut td = take_buf::<T>(bs * bs);
+            let mut w = take_buf::<T>(bs * n);
+            for step in 0..nblk {
+                // forward over row blocks for a lower op(A), backward
+                // for upper — the direction of substitution.
+                let bi = if op_upper { nblk - 1 - step } else { step };
+                let p0 = bi * nb;
+                let pb = nb.min(m - p0);
+                let p1 = p0 + pb;
+                densify_tri(&mut td[..pb * pb], a, lda, uplo, ta, diag, p0, pb);
+                // Solve T_pp X_p = B_p per RHS column (column-sweep
+                // substitution over the densified, branch-free block).
+                for j in 0..n {
+                    let x = &mut b[j * ldb + p0..j * ldb + p0 + pb];
+                    if !op_upper {
+                        for q in 0..pb {
+                            x[q] /= td[q * pb + q];
+                            let xq = x[q];
+                            for r in q + 1..pb {
+                                x[r] -= xq * td[q * pb + r];
+                            }
+                        }
+                    } else {
+                        for q in (0..pb).rev() {
+                            x[q] /= td[q * pb + q];
+                            let xq = x[q];
+                            for r in 0..q {
+                                x[r] -= xq * td[q * pb + r];
+                            }
+                        }
+                    }
+                }
+                // X_p panel copy: the trailing GEMM reads it while
+                // writing other rows of the same buffer.
+                for j in 0..n {
+                    w[j * pb..j * pb + pb].copy_from_slice(&b[j * ldb + p0..j * ldb + p0 + pb]);
+                }
+                if !op_upper && p1 < m {
+                    let aoff = match ta {
+                        Trans::No => p0 * lda + p1,
+                        Trans::Yes => p1 * lda + p0,
+                    };
+                    gemm_packed(
+                        ta, Trans::No, m - p1, n, pb, -T::one(), &a[aoff..], lda, &w, pb,
+                        T::one(), &mut b[p1..], ldb,
+                    );
+                }
+                if op_upper && p0 > 0 {
+                    let aoff = match ta {
+                        Trans::No => p0 * lda,
+                        Trans::Yes => p0,
+                    };
+                    gemm_packed(
+                        ta, Trans::No, p0, n, pb, -T::one(), &a[aoff..], lda, &w, pb, T::one(),
+                        b, ldb,
+                    );
+                }
+            }
+            give_buf(w);
+            give_buf(td);
+        }
+        Side::Right => {
+            let nblk = n.div_ceil(nb);
+            let bs = nb.min(n);
+            let mut td = take_buf::<T>(bs * bs);
+            let mut w = take_buf::<T>(m * bs);
+            for step in 0..nblk {
+                // X op(A) = B solves columns forward when op(A) is
+                // upper, backward when lower.
+                let bj = if op_upper { step } else { nblk - 1 - step };
+                let p0 = bj * nb;
+                let pb = nb.min(n - p0);
+                let p1 = p0 + pb;
+                densify_tri(&mut td[..pb * pb], a, lda, uplo, ta, diag, p0, pb);
+                // Solve X_p T_pp = B_p by sweeping the block's columns;
+                // each axpy runs over a contiguous m-vector.
+                if op_upper {
+                    for q in 0..pb {
+                        let (head, tail) = b.split_at_mut((p0 + q) * ldb);
+                        let colq = &mut tail[..m];
+                        for r in 0..q {
+                            let colr = &head[(p0 + r) * ldb..(p0 + r) * ldb + m];
+                            let t = td[q * pb + r];
+                            for (x, &y) in colq.iter_mut().zip(colr) {
+                                *x -= t * y;
+                            }
+                        }
+                        let d = td[q * pb + q];
+                        for x in colq.iter_mut() {
+                            *x /= d;
+                        }
+                    }
+                } else {
+                    for q in (0..pb).rev() {
+                        let split = (p0 + q) * ldb + m;
+                        let (head, tail) = b.split_at_mut(split);
+                        let colq = &mut head[(p0 + q) * ldb..];
+                        for r in q + 1..pb {
+                            let off = (p0 + r) * ldb - split;
+                            let colr = &tail[off..off + m];
+                            let t = td[q * pb + r];
+                            for (x, &y) in colq.iter_mut().zip(colr) {
+                                *x -= t * y;
+                            }
+                        }
+                        let d = td[q * pb + q];
+                        for x in colq.iter_mut() {
+                            *x /= d;
+                        }
+                    }
+                }
+                for q in 0..pb {
+                    w[q * m..q * m + m].copy_from_slice(&b[(p0 + q) * ldb..(p0 + q) * ldb + m]);
+                }
+                if op_upper && p1 < n {
+                    let (boff, tb_g) = match ta {
+                        Trans::No => (p1 * lda + p0, Trans::No),
+                        Trans::Yes => (p0 * lda + p1, Trans::Yes),
+                    };
+                    gemm_packed(
+                        Trans::No, tb_g, m, n - p1, pb, -T::one(), &w, m, &a[boff..], lda,
+                        T::one(), &mut b[p1 * ldb..], ldb,
+                    );
+                }
+                if !op_upper && p0 > 0 {
+                    let (boff, tb_g) = match ta {
+                        Trans::No => (p0, Trans::No),
+                        Trans::Yes => (p0 * lda, Trans::Yes),
+                    };
+                    gemm_packed(
+                        Trans::No, tb_g, m, p0, pb, -T::one(), &w, m, &a[boff..], lda, T::one(),
+                        b, ldb,
+                    );
+                }
+            }
+            give_buf(w);
+            give_buf(td);
         }
     }
 }

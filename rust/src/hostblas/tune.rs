@@ -1,0 +1,139 @@
+//! Runtime blocking-parameter selection for the packed kernel engine.
+//!
+//! The seed kernel hard-coded `MC/NC/KC`; the right values depend on the
+//! host's cache sizes (the motivation in the ML-driven BLAS-L3 runtime
+//! work, arXiv 2406.19621 — measured behaviour beats static constants).
+//! With the `autotune` feature (default **on**) the first kernel call
+//! per dtype sweeps a small `KC/MC` candidate grid on a probe-sized GEMM
+//! and caches the winner for the process lifetime; without it (or with
+//! `BLASX_NO_TUNE=1` in the environment) the static defaults are used.
+//!
+//! The probe costs a few tens of milliseconds once per process — noise
+//! against any workload long enough to care about kernel throughput —
+//! and never changes numerics, only blocking.
+
+use crate::api::types::Dtype;
+use std::sync::OnceLock;
+
+/// Cache-blocking parameters of the packed GEMM engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockDims {
+    /// Rows of the packed op(A) block (L2-resident, MR-strip layout).
+    pub mc: usize,
+    /// Columns of the packed op(B) panel.
+    pub nc: usize,
+    /// Depth of both packs (L1-resident micro-panels).
+    pub kc: usize,
+}
+
+/// Static defaults: `MC×KC` f64 ≈ 256 KiB (typical L2), `KC×NR` f64 =
+/// 8 KiB (comfortably L1).
+pub const DEFAULT_DIMS: BlockDims = BlockDims { mc: 128, nc: 2048, kc: 256 };
+
+static DIMS_F32: OnceLock<BlockDims> = OnceLock::new();
+static DIMS_F64: OnceLock<BlockDims> = OnceLock::new();
+
+/// The process-wide blocking for `dt`, probing once on first use.
+pub fn block_dims(dt: Dtype) -> BlockDims {
+    let cell = match dt {
+        Dtype::F32 => &DIMS_F32,
+        Dtype::F64 => &DIMS_F64,
+    };
+    *cell.get_or_init(|| probe(dt))
+}
+
+#[cfg(feature = "autotune")]
+fn probe(dt: Dtype) -> BlockDims {
+    // Debug builds: timing a deoptimized kernel picks garbage and slows
+    // every test binary's first kernel call — static defaults instead.
+    if cfg!(debug_assertions) || std::env::var_os("BLASX_NO_TUNE").is_some() {
+        return DEFAULT_DIMS;
+    }
+    match dt {
+        Dtype::F32 => probe_t::<f32>(),
+        Dtype::F64 => probe_t::<f64>(),
+    }
+}
+
+#[cfg(not(feature = "autotune"))]
+fn probe(_dt: Dtype) -> BlockDims {
+    DEFAULT_DIMS
+}
+
+/// Candidate `(mc, kc)` pairs: the default plus neighbours that win on
+/// hosts with smaller/larger private caches.
+#[cfg(feature = "autotune")]
+const CANDIDATES: [(usize, usize); 4] = [(128, 256), (64, 128), (96, 192), (256, 256)];
+
+#[cfg(feature = "autotune")]
+fn probe_t<T: crate::api::types::Scalar>() -> BlockDims {
+    use super::gemm::gemm_packed_with;
+    use crate::api::types::Trans;
+
+    // Must exceed every candidate mc AND kc, or the clamped run would
+    // be identical work to a smaller blocking and the "winner" would
+    // be one the probe never actually measured. 288 > 256; ~48 MFLOP
+    // per timing, ≲100 ms total once per process per dtype.
+    const N: usize = 288;
+    let a = vec![T::from_f64(0.37); N * N];
+    let b = vec![T::from_f64(-0.81); N * N];
+    let mut c = vec![T::zero(); N * N];
+
+    let mut best = DEFAULT_DIMS;
+    let mut best_ns = u128::MAX;
+    for (i, &(mc, kc)) in CANDIDATES.iter().enumerate() {
+        let dims = BlockDims { mc, nc: DEFAULT_DIMS.nc, kc };
+        // one warm-up (page-in, branch history), then best-of-2
+        let reps = if i == 0 { 3 } else { 2 };
+        let mut cand_ns = u128::MAX;
+        for r in 0..reps {
+            let t0 = std::time::Instant::now();
+            gemm_packed_with(
+                dims,
+                Trans::No,
+                Trans::No,
+                N,
+                N,
+                N,
+                T::one(),
+                &a,
+                N,
+                &b,
+                N,
+                T::zero(),
+                &mut c,
+                N,
+            );
+            let ns = t0.elapsed().as_nanos();
+            if !(i == 0 && r == 0) {
+                cand_ns = cand_ns.min(ns);
+            }
+        }
+        if cand_ns < best_ns {
+            best_ns = cand_ns;
+            best = dims;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_dims_are_cached_and_sane() {
+        let d1 = block_dims(Dtype::F64);
+        let d2 = block_dims(Dtype::F64);
+        assert_eq!(d1, d2, "probe must run at most once per dtype");
+        assert!(d1.mc >= 32 && d1.kc >= 32 && d1.nc >= 128);
+        let f = block_dims(Dtype::F32);
+        assert!(f.mc >= 32);
+    }
+
+    #[test]
+    fn defaults_fit_reasonable_caches() {
+        // MC×KC f64 pack must stay within a plausible L2.
+        assert!(DEFAULT_DIMS.mc * DEFAULT_DIMS.kc * 8 <= 512 << 10);
+    }
+}

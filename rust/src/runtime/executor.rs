@@ -5,13 +5,26 @@
 //! transposes — an O(T²) shuffle against the O(T³) kernel, invisible in
 //! the profile (verified in EXPERIMENTS.md §Perf).
 //!
+//! Marshalling scratch is per-thread and reused across `run` calls
+//! (mirroring the kernel-side `PackBuf`): the row-major staging bytes
+//! live in a thread-local, and the output tile comes from the hostblas
+//! scratch free-list — steady-state execution allocates nothing here.
+//!
 //! Argument marshalling follows the artifact manifest signature, so this
 //! file knows nothing about individual variants.
 
 use super::artifact::ArgSlot;
 use super::pjrt::PjrtPool;
 use crate::api::{Dtype, Scalar};
+use crate::hostblas::pack::{give_buf, take_buf};
 use crate::{Error, Result};
+use std::cell::RefCell;
+
+thread_local! {
+    /// Reusable row-major staging buffer for [`pack_rm`] (one per
+    /// thread; `run` is re-entrant only across threads).
+    static PACK_SCRATCH: RefCell<Vec<u8>> = const { RefCell::new(Vec::new()) };
+}
 
 /// Stateless handle over the process-wide PJRT pool.
 pub struct TileExecutor {
@@ -79,38 +92,42 @@ impl TileExecutor {
         let exe = self.pool.executable(name, T::DTYPE, t)?;
         let ety = elem_type(T::DTYPE);
 
-        let mut scratch = Vec::new();
-        let mut args: Vec<xla::Literal> = Vec::with_capacity(sig.len());
-        for slot in &sig {
-            let lit = match slot {
-                ArgSlot::TileA => {
-                    let a = a.ok_or_else(|| {
-                        Error::Runtime(format!("{name}: missing tile operand a"))
-                    })?;
-                    debug_assert_eq!(a.len(), t * t);
-                    pack_rm(a, t, &mut scratch);
-                    xla::Literal::create_from_shape_and_untyped_data(ety, &[t, t], &scratch)
-                        .map_err(|e| Error::Runtime(format!("literal a: {e}")))?
-                }
-                ArgSlot::TileB => {
-                    let b = b.ok_or_else(|| {
-                        Error::Runtime(format!("{name}: missing tile operand b"))
-                    })?;
-                    debug_assert_eq!(b.len(), t * t);
-                    pack_rm(b, t, &mut scratch);
-                    xla::Literal::create_from_shape_and_untyped_data(ety, &[t, t], &scratch)
-                        .map_err(|e| Error::Runtime(format!("literal b: {e}")))?
-                }
-                ArgSlot::TileC => {
-                    pack_rm(c, t, &mut scratch);
-                    xla::Literal::create_from_shape_and_untyped_data(ety, &[t, t], &scratch)
-                        .map_err(|e| Error::Runtime(format!("literal c: {e}")))?
-                }
-                ArgSlot::Alpha => scalar_literal(alpha, ety)?,
-                ArgSlot::Beta => scalar_literal(beta, ety)?,
-            };
-            args.push(lit);
-        }
+        let args = PACK_SCRATCH.with(|cell| -> Result<Vec<xla::Literal>> {
+            let mut guard = cell.borrow_mut();
+            let scratch = &mut *guard;
+            let mut args: Vec<xla::Literal> = Vec::with_capacity(sig.len());
+            for slot in &sig {
+                let lit = match slot {
+                    ArgSlot::TileA => {
+                        let a = a.ok_or_else(|| {
+                            Error::Runtime(format!("{name}: missing tile operand a"))
+                        })?;
+                        debug_assert_eq!(a.len(), t * t);
+                        pack_rm(a, t, scratch);
+                        xla::Literal::create_from_shape_and_untyped_data(ety, &[t, t], scratch)
+                            .map_err(|e| Error::Runtime(format!("literal a: {e}")))?
+                    }
+                    ArgSlot::TileB => {
+                        let b = b.ok_or_else(|| {
+                            Error::Runtime(format!("{name}: missing tile operand b"))
+                        })?;
+                        debug_assert_eq!(b.len(), t * t);
+                        pack_rm(b, t, scratch);
+                        xla::Literal::create_from_shape_and_untyped_data(ety, &[t, t], scratch)
+                            .map_err(|e| Error::Runtime(format!("literal b: {e}")))?
+                    }
+                    ArgSlot::TileC => {
+                        pack_rm(c, t, scratch);
+                        xla::Literal::create_from_shape_and_untyped_data(ety, &[t, t], scratch)
+                            .map_err(|e| Error::Runtime(format!("literal c: {e}")))?
+                    }
+                    ArgSlot::Alpha => scalar_literal(alpha, ety)?,
+                    ArgSlot::Beta => scalar_literal(beta, ety)?,
+                };
+                args.push(lit);
+            }
+            Ok(args)
+        })?;
 
         let result = exe
             .execute::<xla::Literal>(&args)
@@ -122,9 +139,10 @@ impl TileExecutor {
             .to_tuple1()
             .map_err(|e| Error::Runtime(format!("untuple {name}: {e}")))?;
 
-        let mut out = vec![T::zero(); t * t];
+        let mut out = take_buf::<T>(t * t);
         copy_out(&lit, &mut out)?;
         unpack_cm(&out, t, c);
+        give_buf(out);
         Ok(())
     }
 }
