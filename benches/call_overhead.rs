@@ -1,0 +1,131 @@
+//! Persistent-runtime call overhead: cold (boot + teardown per call)
+//! vs warm (resident workers + cross-call tile-cache reuse) latency
+//! for small repeated DGEMMs — the serving-workload regime the
+//! resident runtime exists for.
+//!
+//! Three configurations per size:
+//! - `one-shot`  — `Context::with_persistent(false)`: fresh scoped
+//!   threads, arenas and caches every call (the pre-runtime engine);
+//! - `cold-boot` — a brand-new persistent `Context` per call: measures
+//!   runtime boot + first-touch transfers;
+//! - `warm`      — one persistent `Context`, repeated calls: resident
+//!   workers, warm tile caches (zero host reads after call 1).
+//!
+//! Results print as a table and land in `bench_out/BENCH_runtime.json`
+//! plus the repo-root `BENCH_runtime.json` (committed snapshot —
+//! regenerate on a host with cargo; the committed numbers are from the
+//! authoring container).
+
+use blasx::api::types::Trans;
+use blasx::api::{self, Context};
+use blasx::bench::{print_table, write_json};
+use blasx::util::json::Json;
+use blasx::util::prng::Prng;
+use std::time::Instant;
+
+const T: usize = 64;
+const REPS: usize = 8;
+
+struct Row {
+    n: usize,
+    mode: &'static str,
+    best_ms: f64,
+    mean_ms: f64,
+    warm_host_reads: usize,
+}
+
+fn ctx() -> Context {
+    Context::new(2).with_arena(32 << 20).with_tile(T)
+}
+
+fn time_call(ctx: &Context, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) -> (f64, usize) {
+    let t0 = Instant::now();
+    let rep = api::dgemm(ctx, Trans::No, Trans::No, n, n, n, 1.0, a, n, b, n, 0.0, c, n)
+        .expect("bench dgemm");
+    (t0.elapsed().as_secs_f64() * 1e3, rep.transfers.total_host_reads())
+}
+
+fn bench_size(n: usize, rows: &mut Vec<Row>) {
+    let mut p = Prng::new(2026);
+    let mut a = vec![0.0; n * n];
+    let mut b = vec![0.0; n * n];
+    let mut c = vec![0.0; n * n];
+    p.fill_f64(&mut a, -1.0, 1.0);
+    p.fill_f64(&mut b, -1.0, 1.0);
+
+    let mut record = |mode: &'static str, samples: &[(f64, usize)]| {
+        let best = samples.iter().map(|s| s.0).fold(f64::INFINITY, f64::min);
+        let mean = samples.iter().map(|s| s.0).sum::<f64>() / samples.len() as f64;
+        let last_reads = samples.last().map_or(0, |s| s.1);
+        rows.push(Row { n, mode, best_ms: best, mean_ms: mean, warm_host_reads: last_reads });
+    };
+
+    // one-shot engine per call
+    let one_shot = ctx().with_persistent(false);
+    let samples: Vec<_> = (0..REPS).map(|_| time_call(&one_shot, n, &a, &b, &mut c)).collect();
+    record("one-shot", &samples);
+
+    // cold persistent boot per call
+    let samples: Vec<_> = (0..REPS)
+        .map(|_| {
+            let cold = ctx();
+            time_call(&cold, n, &a, &b, &mut c)
+        })
+        .collect();
+    record("cold-boot", &samples);
+
+    // warm resident runtime
+    let warm = ctx();
+    let _ = time_call(&warm, n, &a, &b, &mut c); // boot + first touch
+    let samples: Vec<_> = (0..REPS).map(|_| time_call(&warm, n, &a, &b, &mut c)).collect();
+    assert_eq!(samples.last().unwrap().1, 0, "warm calls must be transfer-free");
+    record("warm", &samples);
+}
+
+fn main() {
+    let sizes = [128usize, 256, 512];
+    let mut rows = Vec::new();
+    for &n in &sizes {
+        bench_size(n, &mut rows);
+    }
+
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.n.to_string(),
+                r.mode.to_string(),
+                format!("{:.3}", r.best_ms),
+                format!("{:.3}", r.mean_ms),
+                r.warm_host_reads.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        "call overhead: one-shot vs cold-boot vs warm resident runtime",
+        &["N", "mode", "best ms", "mean ms", "host reads (last call)"],
+        &table,
+    );
+
+    let mut json = Json::obj();
+    json.set("bench", Json::Str("call_overhead".into()));
+    json.set("tile", Json::Num(T as f64));
+    json.set("reps", Json::Num(REPS as f64));
+    let mut arr = Vec::new();
+    for r in &rows {
+        let mut o = Json::obj();
+        o.set("n", Json::Num(r.n as f64));
+        o.set("mode", Json::Str(r.mode.into()));
+        o.set("best_ms", Json::Num(r.best_ms));
+        o.set("mean_ms", Json::Num(r.mean_ms));
+        o.set("last_call_host_reads", Json::Num(r.warm_host_reads as f64));
+        arr.push(o);
+    }
+    json.set("results", Json::Arr(arr));
+    write_json("BENCH_runtime", &json);
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_runtime.json");
+    match std::fs::write(&root, json.to_string_pretty()) {
+        Ok(()) => println!("[bench] wrote {}", root.display()),
+        Err(e) => eprintln!("[bench] cannot write {}: {e}", root.display()),
+    }
+}

@@ -126,6 +126,13 @@ fn main() {
         // --- synthetic batch from the teacher
         let mut x = vec![0.0f32; d * batch];
         rng.fill_f32(&mut x, -1.0, 1.0);
+        // x is a fresh allocation with new contents every step (and the
+        // allocator may reuse last step's address): declare it to the
+        // persistent runtime so no stale tiles survive. Within the
+        // step, the three products reading x then share its cached
+        // tiles for free. (The activations/gradients are outputs first
+        // — their invalidation epochs bump automatically.)
+        ctx.invalidate_host(&x);
         let labels: Vec<usize> = {
             let mut th = vec![0.0f32; teacher.h * batch];
             mm(&ctx, Trans::No, Trans::No, teacher.h, batch, d, 1.0, &teacher.w1, &x, 0.0, &mut th);
@@ -186,6 +193,14 @@ fn main() {
         for (w, g) in net.w3.iter_mut().zip(&dw3) {
             *w -= lr * g;
         }
+        // SGD mutated the weights in place — tell the warm runtime so
+        // the next step's forward pass re-reads them. The fixed teacher
+        // weights are never declared: their tiles stay cached across
+        // every step (that cross-call reuse is the resident runtime's
+        // whole point).
+        ctx.invalidate_host(&net.w1);
+        ctx.invalidate_host(&net.w2);
+        ctx.invalidate_host(&net.w3);
 
         if step < 5 || step % 20 == 0 || step == steps - 1 {
             println!("step {step:4}  loss {loss:.4}  ({:.1}s elapsed)", t0.elapsed().as_secs_f64());

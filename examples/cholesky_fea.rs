@@ -61,6 +61,13 @@ fn potrf_blasx(ctx: &Context, a: &mut Vec<f64>, n: usize, nb: usize) {
             let ajj: Vec<f64> = (0..jb * jb)
                 .map(|idx| a[(j + idx / jb) * ld + j + idx % jb])
                 .collect();
+            // `ajj` is a fresh nb×nb copy every panel — same byte size
+            // each time, so the allocator may hand back the previous
+            // panel's address with new contents. Declare it to the
+            // persistent runtime's cross-call tile cache. (The other
+            // temporaries are either outputs — epoch-bumped
+            // automatically — or change leading dimension per panel.)
+            ctx.invalidate_host(&ajj);
             let mut panel: Vec<f64> = (0..rest * jb)
                 .map(|idx| a[(j + idx / rest) * ld + j + jb + idx % rest])
                 .collect();

@@ -30,7 +30,11 @@ fn time<F: FnMut()>(mut f: F) -> f64 {
 
 fn main() {
     let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(768);
-    let ctx = Context::new(2).with_tile(256);
+    // MATLAB-script style code interleaves host-side elementwise
+    // updates with L3 calls every few lines; the one-shot engine keeps
+    // the example free of `invalidate_host` declarations (see
+    // ann_training.rs for the warm-runtime pattern done properly).
+    let ctx = Context::new(2).with_tile(256).with_persistent(false);
     let mut rng = Prng::new(42);
     println!("NOTE: this box has one CPU core — the multi-device runtime cannot show");
     println!("parallel speedup here (Table VI's shape is reproduced on the simulated");

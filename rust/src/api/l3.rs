@@ -11,26 +11,51 @@
 //! The execution context (device count, arena bytes, tile size, kernel
 //! backend) comes from a [`Context`], with a process-default tuned for
 //! this testbed.
+//!
+//! ## Persistent runtime (default)
+//!
+//! A `Context` lazily boots a resident [`crate::runtime::Runtime`] on
+//! its first call: worker threads, device arenas and the ALRU/MESI-X
+//! tile caches then *survive across calls*, so repeated calls touching
+//! the same host matrices start on a warm cache — the second identical
+//! `dgemm` performs zero host→device tile transfers for unchanged
+//! operands (observable via [`RealReport::transfers`]). Outputs are
+//! invalidation-epoch-bumped automatically each call; if you mutate an
+//! *input* buffer between calls you must tell the runtime via
+//! [`Context::invalidate_host`] (the library cannot observe foreign
+//! writes). Set [`Context::persistent`] to `false` (or build with
+//! [`Context::with_persistent`]) to get the old tear-down-per-call
+//! engine. Clones of a `Context` share the booted runtime; dropping
+//! the last clone shuts it down.
 
 use super::check;
 use super::types::{Diag, Scalar, Side, Trans, Uplo};
 use crate::batch::{taskize_batch, BatchDesc, BatchedGemm};
-use crate::coordinator::real_engine::{run_real, run_real_batch, Mats, RealReport};
+use crate::coordinator::real_engine::{run_real_batch, Mats, RealReport};
 use crate::coordinator::{Backend, RunConfig};
 use crate::error::{illegal, Result};
+use crate::runtime::Runtime;
 use crate::task::{
     taskize_gemm, taskize_symm, taskize_syr2k, taskize_syrk, taskize_trmm, taskize_trsm,
-    GemmDesc, SymmDesc, SyrkDesc, TriDesc,
+    GemmDesc, SymmDesc, SyrkDesc, TaskSet, TriDesc,
 };
 use crate::tile::{HostMat, MatId};
+use std::sync::{Arc, Mutex};
 
 /// Execution context: how many virtual devices, how much arena each,
-/// which tile size and kernel backend.
+/// which tile size and kernel backend — plus the resident runtime the
+/// calls execute on (see module docs).
 #[derive(Clone, Debug)]
 pub struct Context {
     pub n_devices: usize,
     pub arena_bytes: usize,
     pub cfg: RunConfig,
+    /// Keep the engine (workers, arenas, tile caches) alive across
+    /// calls (default). `false` restores the one-shot engine: fresh
+    /// threads and cold caches per call.
+    pub persistent: bool,
+    /// The lazily-booted resident runtime, shared by clones.
+    runtime: Arc<Mutex<Option<Arc<Runtime>>>>,
 }
 
 impl Default for Context {
@@ -47,6 +72,8 @@ impl Default for Context {
             n_devices: 2,
             arena_bytes: 64 << 20,
             cfg: RunConfig { t: 256, ..Default::default() },
+            persistent: true,
+            runtime: Arc::new(Mutex::new(None)),
         }
     }
 }
@@ -58,6 +85,10 @@ impl Context {
 
     pub fn with_tile(mut self, t: usize) -> Context {
         self.cfg.t = t;
+        // Same reasoning as `with_arena`: a derived context with a
+        // different tile size gets its own runtime slot, so alternating
+        // calls on two clones don't ping-pong-purge one shared cache.
+        self.runtime = Arc::new(Mutex::new(None));
         self
     }
 
@@ -68,7 +99,8 @@ impl Context {
 
     /// Threads each device worker may fan a tile kernel across (the
     /// paper's "multithreaded BLAS kernel", §IV-C.2). Small tiles stay
-    /// serial under `hostblas::gemm_mt`'s flop cutoff regardless.
+    /// serial under `hostblas::gemm_mt`'s flop cutoff regardless; big
+    /// ones run their cells on the persistent kernel pool.
     pub fn with_kernel_threads(mut self, threads: usize) -> Context {
         self.cfg.worker_threads = threads.max(1);
         self
@@ -80,12 +112,88 @@ impl Context {
     /// asserts the floor).
     pub fn with_arena(mut self, bytes: usize) -> Context {
         self.arena_bytes = bytes;
+        // Geometry diverged from whatever this context was cloned
+        // from: give the derived context its own runtime slot, so two
+        // differently-sized clones never ping-pong-reboot a shared
+        // engine (each keeps its warm caches).
+        self.runtime = Arc::new(Mutex::new(None));
+        self
+    }
+
+    /// Toggle the resident runtime (see module docs). Default on.
+    pub fn with_persistent(mut self, on: bool) -> Context {
+        self.persistent = on;
         self
     }
 
     /// Tile size floor: degenerate matrices still need one tile.
     fn tile(&self) -> usize {
         self.cfg.t
+    }
+
+    /// The resident runtime, booting it (or rebooting on a geometry
+    /// change) as needed.
+    fn runtime(&self) -> Arc<Runtime> {
+        let mut slot = self.runtime.lock().unwrap_or_else(|e| e.into_inner());
+        match slot.as_ref() {
+            Some(rt)
+                if rt.n_devices() == self.n_devices && rt.arena_bytes() == self.arena_bytes =>
+            {
+                rt.clone()
+            }
+            _ => {
+                let rt =
+                    Arc::new(Runtime::boot(self.n_devices, self.arena_bytes, self.cfg.alloc));
+                *slot = Some(rt.clone());
+                rt
+            }
+        }
+    }
+
+    /// Is the resident runtime currently booted? (Observability/tests —
+    /// boot is lazy, so this is `false` until the first persistent
+    /// call.)
+    pub fn runtime_booted(&self) -> bool {
+        self.runtime.lock().unwrap_or_else(|e| e.into_inner()).is_some()
+    }
+
+    /// Calls served by the resident runtime since it booted (0 when
+    /// not booted).
+    pub fn runtime_calls(&self) -> usize {
+        self.runtime.lock().unwrap_or_else(|e| e.into_inner()).as_ref().map_or(0, |rt| rt.calls())
+    }
+
+    /// Shut the resident runtime down now (it reboots lazily on the
+    /// next call). Equivalent to dropping every clone of this context.
+    pub fn shutdown_runtime(&self) {
+        *self.runtime.lock().unwrap_or_else(|e| e.into_inner()) = None;
+    }
+
+    /// Declare that the host buffer `buf` has been mutated (or freed
+    /// and reallocated) since the last call that read it: every tile
+    /// the resident runtime cached from it is invalidated, so the next
+    /// call re-reads fresh bytes. A no-op when the runtime isn't
+    /// booted and for non-persistent contexts (their caches die with
+    /// each call anyway). Output matrices never need this — each call
+    /// bumps its outputs' epochs automatically.
+    pub fn invalidate_host<T: Scalar>(&self, buf: &[T]) {
+        if let Some(rt) = self.runtime.lock().unwrap_or_else(|e| e.into_inner()).as_ref() {
+            let lo = buf.as_ptr() as usize;
+            rt.invalidate_bytes(lo, lo + std::mem::size_of_val(buf));
+        }
+    }
+
+    /// Route a task set to the resident runtime (persistent) or the
+    /// one-shot engine.
+    pub(crate) fn execute<T: Scalar>(
+        &self,
+        ts: &TaskSet,
+        problems: Vec<Mats<'_, T>>,
+    ) -> Result<RealReport> {
+        if !self.persistent {
+            return run_real_batch(&self.cfg, ts, problems, self.n_devices, self.arena_bytes);
+        }
+        self.runtime().submit(&self.cfg, ts, problems)
     }
 }
 
@@ -116,7 +224,7 @@ pub fn gemm<T: Scalar>(
     let am = HostMat::new_ro(a, ar, ac, lda, t, MatId::A);
     let bm = HostMat::new_ro(b, br, bc, ldb, t, MatId::B);
     let cm = HostMat::new(c, m, n, ldc, t, MatId::C);
-    run_real(&ctx.cfg, &ts, Mats { a: &am, b: Some(&bm), c: &cm }, ctx.n_devices, ctx.arena_bytes)
+    ctx.execute(&ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }])
 }
 
 /// `C := alpha*op(A)*op(A)^T + beta*C`, C symmetric stored in `uplo`.
@@ -141,7 +249,7 @@ pub fn syrk<T: Scalar>(
     let (ar, ac) = if trans == Trans::No { (n, k) } else { (k, n) };
     let am = HostMat::new_ro(a, ar, ac, lda, t, MatId::A);
     let cm = HostMat::new(c, n, n, ldc, t, MatId::C);
-    run_real(&ctx.cfg, &ts, Mats { a: &am, b: None, c: &cm }, ctx.n_devices, ctx.arena_bytes)
+    ctx.execute(&ts, vec![Mats { a: &am, b: None, c: &cm }])
 }
 
 /// `C := alpha*(op(A)op(B)^T + op(B)op(A)^T) + beta*C`.
@@ -169,7 +277,7 @@ pub fn syr2k<T: Scalar>(
     let am = HostMat::new_ro(a, ar, ac, lda, t, MatId::A);
     let bm = HostMat::new_ro(b, ar, ac, ldb, t, MatId::B);
     let cm = HostMat::new(c, n, n, ldc, t, MatId::C);
-    run_real(&ctx.cfg, &ts, Mats { a: &am, b: Some(&bm), c: &cm }, ctx.n_devices, ctx.arena_bytes)
+    ctx.execute(&ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }])
 }
 
 /// `C := alpha*sym(A)*B + beta*C` (Left) / `alpha*B*sym(A) + beta*C`.
@@ -197,7 +305,7 @@ pub fn symm<T: Scalar>(
     let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
     let bm = HostMat::new_ro(b, m, n, ldb, t, MatId::B);
     let cm = HostMat::new(c, m, n, ldc, t, MatId::C);
-    run_real(&ctx.cfg, &ts, Mats { a: &am, b: Some(&bm), c: &cm }, ctx.n_devices, ctx.arena_bytes)
+    ctx.execute(&ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }])
 }
 
 /// `B := alpha*op(tri(A))*B` (Left) / `alpha*B*op(tri(A))` (Right),
@@ -224,7 +332,7 @@ pub fn trmm<T: Scalar>(
     let na = if side == Side::Left { m } else { n };
     let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
     let cm = HostMat::new(b, m, n, ldb, t, MatId::C);
-    run_real(&ctx.cfg, &ts, Mats { a: &am, b: None, c: &cm }, ctx.n_devices, ctx.arena_bytes)
+    ctx.execute(&ts, vec![Mats { a: &am, b: None, c: &cm }])
 }
 
 /// Solve `op(tri(A))*X = alpha*B` (Left) / `X*op(tri(A)) = alpha*B`,
@@ -251,7 +359,7 @@ pub fn trsm<T: Scalar>(
     let na = if side == Side::Left { m } else { n };
     let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
     let cm = HostMat::new(b, m, n, ldb, t, MatId::C);
-    run_real(&ctx.cfg, &ts, Mats { a: &am, b: None, c: &cm }, ctx.n_devices, ctx.arena_bytes)
+    ctx.execute(&ts, vec![Mats { a: &am, b: None, c: &cm }])
 }
 
 // --- Batched entry points (crate::batch) -----------------------------
@@ -371,7 +479,10 @@ pub fn gemm_batched<T: Scalar>(
     let problems: Vec<Mats<'_, T>> = (0..entries.len())
         .map(|i| Mats { a: &amats[i], b: Some(&bmats[i]), c: &cmats[i] })
         .collect();
-    run_real_batch(&ctx.cfg, &ts, problems, ctx.n_devices, ctx.arena_bytes)
+    // Fused batches ride the same doorway as single calls: through the
+    // resident runtime (quanta-ordered heads land in the persistent
+    // workers' stations) or the one-shot engine when persistence is off.
+    ctx.execute(&ts, problems)
 }
 
 /// Batched GEMM, strided flavour: problem `i` reads `a[i*stride_a..]`,
@@ -590,7 +701,7 @@ mod tests {
     use crate::util::prng::Prng;
 
     fn small_ctx() -> Context {
-        Context { n_devices: 2, arena_bytes: 4 << 20, cfg: RunConfig { t: 32, ..Default::default() } }
+        Context::new(2).with_arena(4 << 20).with_tile(32)
     }
 
     #[test]
@@ -662,6 +773,38 @@ mod tests {
         // default: 64 MiB / (256*256*8 B) = exactly 128 f64 tiles
         let d = Context::default();
         assert_eq!(d.arena_bytes / (d.cfg.t * d.cfg.t * 8), 128);
+    }
+
+    #[test]
+    fn persistent_runtime_boots_lazily_and_counts_calls() {
+        let ctx = small_ctx();
+        assert!(ctx.persistent, "persistent engine is the default");
+        assert!(!ctx.runtime_booted(), "boot is lazy");
+        let (m, n, k) = (40, 40, 40);
+        let a = vec![1.0; m * k];
+        let b = vec![1.0; k * n];
+        let mut c = vec![0.0; m * n];
+        dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m).unwrap();
+        assert!(ctx.runtime_booted());
+        assert_eq!(ctx.runtime_calls(), 1);
+        // clones share the warm runtime
+        let clone = ctx.clone();
+        dgemm(&clone, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m).unwrap();
+        assert_eq!(ctx.runtime_calls(), 2);
+        ctx.shutdown_runtime();
+        assert!(!ctx.runtime_booted());
+    }
+
+    #[test]
+    fn non_persistent_path_never_boots() {
+        let ctx = small_ctx().with_persistent(false);
+        let a = vec![1.0; 32 * 32];
+        let b = vec![1.0; 32 * 32];
+        let mut c = vec![0.0; 32 * 32];
+        dgemm(&ctx, Trans::No, Trans::No, 32, 32, 32, 1.0, &a, 32, &b, 32, 0.0, &mut c, 32)
+            .unwrap();
+        assert!(!ctx.runtime_booted());
+        assert!(c.iter().all(|&x| x == 32.0));
     }
 
     #[test]

@@ -294,7 +294,7 @@ mod tests {
     use crate::tile::MatId;
 
     fn key(addr: usize) -> TileKey {
-        TileKey { addr, mat: MatId::A, ti: addr, tj: 0 }
+        TileKey::synthetic(addr, MatId::A, addr, 0)
     }
 
     fn alru(capacity: usize) -> Alru {

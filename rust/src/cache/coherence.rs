@@ -136,7 +136,7 @@ mod tests {
     use crate::tile::MatId;
 
     fn key(addr: usize) -> TileKey {
-        TileKey { addr, mat: MatId::B, ti: 0, tj: addr }
+        TileKey::synthetic(addr, MatId::B, 0, addr)
     }
 
     #[test]

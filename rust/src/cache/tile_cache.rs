@@ -177,7 +177,7 @@ mod tests {
     use crate::tile::MatId;
 
     fn key(addr: usize) -> TileKey {
-        TileKey { addr, mat: MatId::A, ti: addr, tj: 0 }
+        TileKey::synthetic(addr, MatId::A, addr, 0)
     }
 
     /// 3 devices, all peers, 300-byte VRAM each.

@@ -79,12 +79,14 @@ impl KeyMap {
 
     /// Virtual cache key of a tile (unique per (p, mat, ti, tj), stable
     /// across calls — mirrors a host address). Problem 0's bases match
-    /// the historical single-problem layout exactly.
+    /// the historical single-problem layout exactly. Virtual operands
+    /// are laid out tightly, so the stride discriminant is the grid's
+    /// row count; epochs stay 0 (the simulator never runs cross-call).
     pub fn key(&self, r: TileRef) -> TileKey {
         let g = self.grid_of(r.p, r.mat);
         let base = SPAN * (1 + 3 * r.p + Self::idx(r.mat));
         let addr = base + (g.col_origin(r.tj) * g.rows + g.row_origin(r.ti)) * self.esz;
-        TileKey { addr, mat: r.mat, ti: r.ti, tj: r.tj }
+        TileKey { addr, mat: r.mat, ti: r.ti, tj: r.tj, ld: g.rows.max(1), epoch: 0 }
     }
 
     /// Cache-block bytes of any tile (uniform t×t padding — what the

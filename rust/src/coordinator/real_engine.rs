@@ -1,34 +1,59 @@
 //! The real (threaded) execution engine: Alg. 1 with actual bytes.
 //!
-//! One worker thread per virtual device; each device owns a memory arena
-//! (its "VRAM") managed by the same FastHeap + ALRU + MESI-X machinery as
-//! the simulator. Tiles are physically copied host↔arena (and arena↔arena
-//! for L2/P2P hits); kernels execute through either the pure-Rust
-//! hostblas kernels or the PJRT-loaded AOT artifacts (config `Backend`).
+//! One worker per virtual device; each device owns a memory arena (its
+//! "VRAM") managed by the same FastHeap + ALRU + MESI-X machinery as
+//! the simulator. Tiles are physically copied host↔arena (and
+//! arena↔arena for L2/P2P hits); kernels execute through either the
+//! pure-Rust hostblas kernels or the PJRT-loaded AOT artifacts (config
+//! `Backend`).
 //!
 //! Scheduling is the identical policy to the sim engine: demand-driven
 //! pulls from the shared non-blocking queue, reservation stations with
 //! Eq. 3 priorities, lowest-priority work stealing, and reader releases
 //! deferred to the end-of-round sync point (the ALRU "approximation").
 //!
-//! On this testbed the PJRT CPU client executes kernels synchronously, so
-//! "streams" provide issue-order structure rather than physical overlap —
-//! the overlap claim is measured on the simulated substrate (DESIGN.md
-//! §1); *correctness* of the full protocol stack is what runs here.
+//! ## Engine core vs job state
+//!
+//! The engine is split into two halves so the same worker loop serves
+//! both execution modes:
+//!
+//! - [`EngineCore`] — the *persistent* half: device arenas, the
+//!   ALRU/MESI-X [`TileCacheSet`], and the condvar idle workers park
+//!   on. The one-shot [`run_real`]/[`run_real_batch`] entry points
+//!   build a fresh core per call (scoped worker threads, caches die
+//!   with the call); the resident [`crate::runtime::Runtime`] keeps
+//!   one core alive across calls, which is what turns repeated calls
+//!   over the same operands into L1/L2 tile-cache hits instead of
+//!   re-transfers.
+//! - [`JobState`] — the per-call half: the task graph, dependency
+//!   counts, reservation stations, operand wraps and trace counters of
+//!   one submitted call (or fused batch).
+//!
+//! Arenas are byte-granular (8-byte aligned storage) so one persistent
+//! core serves f32 and f64 jobs alike; cache block lengths are rounded
+//! up to 8 bytes to keep FastHeap offsets aligned for either dtype.
+//!
+//! On this testbed the PJRT CPU client executes kernels synchronously,
+//! so "streams" provide issue-order structure rather than physical
+//! overlap — the overlap claim is measured on the simulated substrate
+//! (DESIGN.md §1); *correctness* of the full protocol stack is what
+//! runs here.
 
 use super::config::{Backend, RunConfig};
 use crate::api::Scalar;
 use crate::cache::{Source, TileCacheSet};
 use crate::error::{Error, Result};
 use crate::hostblas;
-use crate::mem::Offset;
+use crate::mem::{AllocStrategy, Offset};
 use crate::queue::MsQueue;
 use crate::runtime::TileExecutor;
 use crate::sched::{task_priority, Station};
 use crate::task::{Step, Task, TaskSet, TileOp, TileRef};
 use crate::tile::{HostMat, MatId, TileKey};
+use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
 
 /// The three operands of a routine call. `b` may be absent (SYRK, TRMM,
 /// TRSM read only A and C).
@@ -52,36 +77,186 @@ impl<'m, T: Scalar> Mats<'m, T> {
     }
 }
 
-/// One device's arena: raw storage indexed by FastHeap offsets.
-struct Arena<T> {
-    buf: *mut T,
-    len: usize,
+/// Cache-block length of a `t × t` tile of `T`, rounded up to 8 bytes
+/// so FastHeap offsets stay aligned for every dtype sharing an arena.
+pub(crate) fn block_bytes<T: Scalar>(t: usize) -> usize {
+    (t * t * std::mem::size_of::<T>() + 7) & !7
 }
-unsafe impl<T: Send> Send for Arena<T> {}
-unsafe impl<T: Sync> Sync for Arena<T> {}
 
-impl<T: Scalar> Arena<T> {
-    fn slice(&self, off: Offset, n: usize) -> &mut [T] {
-        debug_assert!(off + n * std::mem::size_of::<T>() <= self.len * std::mem::size_of::<T>());
+/// One device's arena: byte-granular raw storage indexed by FastHeap
+/// offsets, 8-byte aligned so both f32 and f64 jobs can slice it.
+pub(crate) struct Arena {
+    store: UnsafeCell<Box<[u64]>>,
+    bytes: usize,
+}
+
+// SAFETY: the cache directory serializes access — a block offset is
+// handed to exactly one writer at a time, and cross-thread reads of a
+// peer block happen only under the cache lock while the block is
+// pinned (see `acquire_input`).
+unsafe impl Send for Arena {}
+unsafe impl Sync for Arena {}
+
+impl Arena {
+    fn new(bytes: usize) -> Arena {
+        Arena {
+            store: UnsafeCell::new(vec![0u64; bytes.div_ceil(8)].into_boxed_slice()),
+            bytes,
+        }
+    }
+
+    #[allow(clippy::mut_from_ref)]
+    fn slice<T: Scalar>(&self, off: Offset, n: usize) -> &mut [T] {
+        debug_assert!(off + n * std::mem::size_of::<T>() <= self.bytes);
         debug_assert!(off % std::mem::size_of::<T>() == 0);
         // SAFETY: offsets come from the FastHeap, which never hands out
-        // overlapping live blocks; cross-thread reads of a peer block
-        // happen only under the cache lock while the block is pinned.
+        // overlapping live blocks; storage is 8-byte aligned and `off`
+        // is a multiple of 8 (all block lengths are), so the cast is
+        // aligned for any Scalar.
         unsafe {
-            std::slice::from_raw_parts_mut(self.buf.add(off / std::mem::size_of::<T>()), n)
+            let base = (*self.store.get()).as_mut_ptr() as *mut u8;
+            std::slice::from_raw_parts_mut(base.add(off) as *mut T, n)
         }
     }
 }
 
-struct Shared<'m, T: Scalar> {
+/// The persistent half of the engine: arenas + caches + worker parking.
+/// Exactly one job executes over a core at a time (the one-shot entry
+/// points build a private core; the resident runtime serializes
+/// submissions).
+pub(crate) struct EngineCore {
+    pub(crate) caches: Mutex<TileCacheSet>,
+    arenas: Vec<Arena>,
+    capacities: Vec<usize>,
+    peers: Vec<Vec<usize>>,
+    alloc: AllocStrategy,
+    /// Idle-worker parking: guards the "queue empty" check; notified on
+    /// task enqueue and job completion so sleepers never busy-spin.
+    work_mx: Mutex<()>,
+    work_cv: Condvar,
+}
+
+impl EngineCore {
+    pub(crate) fn new(n_devices: usize, arena_bytes: usize, alloc: AllocStrategy) -> EngineCore {
+        assert!(n_devices >= 1);
+        // All devices are peers in real mode (host RAM is one address
+        // space; the "P2P copy" is an arena→arena memcpy, exercising
+        // the L2 path).
+        let peers: Vec<Vec<usize>> =
+            (0..n_devices).map(|d| (0..n_devices).filter(|&x| x != d).collect()).collect();
+        let capacities = vec![arena_bytes; n_devices];
+        EngineCore {
+            caches: Mutex::new(TileCacheSet::new(&capacities, peers.clone(), alloc)),
+            arenas: (0..n_devices).map(|_| Arena::new(arena_bytes)).collect(),
+            capacities,
+            peers,
+            alloc,
+            work_mx: Mutex::new(()),
+            work_cv: Condvar::new(),
+        }
+    }
+
+    /// The tile caches, recovering a poisoned lock: a contained worker
+    /// panic (see `runtime::service`) may have died mid-update while
+    /// holding it. The panicking job is failed and the error path
+    /// purges the caches, so recovering the guard keeps the resident
+    /// fleet serviceable instead of cascading `PoisonError` panics
+    /// through every later call.
+    pub(crate) fn lock_caches(&self) -> std::sync::MutexGuard<'_, TileCacheSet> {
+        self.caches.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Drop every cached tile (tile-size switch or failed-job
+    /// recovery): the next job starts on a cold cache.
+    pub(crate) fn purge(&self) {
+        let mut caches = self.lock_caches();
+        *caches = TileCacheSet::new(&self.capacities, self.peers.clone(), self.alloc);
+    }
+
+    /// Wake parked workers (new ready tasks, or the job finished). The
+    /// lock round-trip pairs with the sleeper's re-check under the same
+    /// lock, so wakeups cannot be missed.
+    fn notify_work(&self) {
+        let _g = self.work_mx.lock().unwrap_or_else(|e| e.into_inner());
+        self.work_cv.notify_all();
+    }
+}
+
+/// Per-call host→device transfer trace: how each input acquire was
+/// served. This is what makes cross-call cache reuse *observable* — a
+/// warm second call over unchanged operands shows zero host reads.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransferStats {
+    /// Host→arena tile reads per operand (A, B, C order; C counts both
+    /// accumulator pre-loads and chain reads of neighbour C tiles).
+    pub host_reads: [usize; 3],
+    /// Arena→arena copies (L2 peer hits).
+    pub peer_copies: usize,
+    /// Acquires served from the device's own L1 — no bytes moved.
+    pub l1_hits: usize,
+}
+
+impl TransferStats {
+    /// Total host→device tile transfers of the call.
+    pub fn total_host_reads(&self) -> usize {
+        self.host_reads.iter().sum()
+    }
+
+    /// Host reads of the *input* operands A and B only (C is rewritten
+    /// every call, so its reads are expected on warm repeats).
+    pub fn input_host_reads(&self) -> usize {
+        self.host_reads[0] + self.host_reads[1]
+    }
+}
+
+struct TransferCounters {
+    host_reads: [AtomicUsize; 3],
+    peer_copies: AtomicUsize,
+    l1_hits: AtomicUsize,
+}
+
+impl TransferCounters {
+    fn new() -> TransferCounters {
+        TransferCounters {
+            host_reads: [AtomicUsize::new(0), AtomicUsize::new(0), AtomicUsize::new(0)],
+            peer_copies: AtomicUsize::new(0),
+            l1_hits: AtomicUsize::new(0),
+        }
+    }
+
+    fn count_host(&self, mat: MatId) {
+        let i = match mat {
+            MatId::A => 0,
+            MatId::B => 1,
+            MatId::C => 2,
+        };
+        self.host_reads[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> TransferStats {
+        TransferStats {
+            host_reads: [
+                self.host_reads[0].load(Ordering::Relaxed),
+                self.host_reads[1].load(Ordering::Relaxed),
+                self.host_reads[2].load(Ordering::Relaxed),
+            ],
+            peer_copies: self.peer_copies.load(Ordering::Relaxed),
+            l1_hits: self.l1_hits.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The per-call half of the engine: one submitted call (or fused
+/// batch). Borrows the task set and operand wraps for `'m`; the
+/// resident runtime erases that lifetime because the submitting caller
+/// parks until every worker is done with the job.
+pub(crate) struct JobState<'m, T: Scalar> {
     cfg: RunConfig,
-    tasks: Vec<Task>,
+    tasks: &'m [Task],
     deps: Vec<AtomicUsize>,
     remaining: AtomicUsize,
     queue: MsQueue<usize>,
-    caches: Mutex<TileCacheSet>,
     stations: Vec<Mutex<Station>>,
-    arenas: Vec<Arena<T>>,
     /// Operand sets, indexed by `Task::p` / `TileRef::p` (a single
     /// routine call is a batch of one).
     mats: Vec<Mats<'m, T>>,
@@ -90,12 +265,82 @@ struct Shared<'m, T: Scalar> {
     failure: Mutex<Option<Error>>,
     /// Steals per device (observability).
     steals: Vec<AtomicUsize>,
+    tasks_done: Vec<AtomicUsize>,
+    transfers: TransferCounters,
+}
+
+impl<'m, T: Scalar> JobState<'m, T> {
+    pub(crate) fn new(
+        cfg: &RunConfig,
+        ts: &'m TaskSet,
+        problems: Vec<Mats<'m, T>>,
+        n_devices: usize,
+    ) -> Result<JobState<'m, T>> {
+        debug_assert!(
+            ts.tasks.iter().all(|t| t.p < problems.len()),
+            "task problem index out of range"
+        );
+        let executor = match cfg.backend {
+            Backend::Pjrt => Some(TileExecutor::new()?),
+            Backend::Hostblas => None,
+        };
+        let state = JobState {
+            cfg: cfg.clone(),
+            tasks: &ts.tasks,
+            deps: ts.tasks.iter().map(|t| AtomicUsize::new(t.n_deps)).collect(),
+            remaining: AtomicUsize::new(ts.tasks.len()),
+            queue: MsQueue::new(),
+            stations: (0..n_devices).map(|_| Mutex::new(Station::new(cfg.rs_capacity))).collect(),
+            mats: problems,
+            executor,
+            failure: Mutex::new(None),
+            steals: (0..n_devices).map(|_| AtomicUsize::new(0)).collect(),
+            tasks_done: (0..n_devices).map(|_| AtomicUsize::new(0)).collect(),
+            transfers: TransferCounters::new(),
+        };
+        for &h in &ts.heads {
+            state.queue.enqueue(h);
+        }
+        Ok(state)
+    }
+
+    /// Record a failure (first one wins). Used by the worker loop and
+    /// by the resident runtime's panic containment.
+    pub(crate) fn fail(&self, e: Error) {
+        let mut f = self.failure.lock().unwrap();
+        if f.is_none() {
+            *f = Some(e);
+        }
+    }
+
+    /// Assemble the call report after every worker has finished.
+    pub(crate) fn into_report(self, core: &EngineCore) -> Result<RealReport> {
+        if let Some(e) = self.failure.lock().unwrap().take() {
+            return Err(e);
+        }
+        let rem = self.remaining.load(Ordering::SeqCst);
+        if rem != 0 {
+            return Err(Error::Internal(format!("real engine stalled with {rem} tasks")));
+        }
+        let caches = core.lock_caches();
+        Ok(RealReport {
+            tasks_per_device: self.tasks_done.iter().map(|a| a.load(Ordering::SeqCst)).collect(),
+            cache_stats: (0..self.stations.len()).map(|d| caches.stats(d)).collect(),
+            steals: self.steals.iter().map(|a| a.load(Ordering::SeqCst)).collect(),
+            transfers: self.transfers.snapshot(),
+        })
+    }
 }
 
 /// Run a task set over `mats` with `n_devices` worker threads.
 ///
 /// `arena_bytes` is each device's VRAM analogue; small arenas exercise
 /// eviction (tests), large ones behave like the paper's 12 GB cards.
+///
+/// This is the one-shot entry point: engine state (arenas, tile
+/// caches, worker threads) is built for the call and torn down with
+/// it. The warm path — [`crate::api::Context`] with its default
+/// persistent runtime — reuses all of that across calls.
 pub fn run_real<T: Scalar>(
     cfg: &RunConfig,
     ts: &TaskSet,
@@ -113,7 +358,8 @@ pub fn run_real<T: Scalar>(
 /// problems — which is exactly what amortizes runtime setup across the
 /// batch. Operands shared between problems (e.g. one weight matrix
 /// multiplied by many activation sets) share cache entries for free,
-/// because tiles are keyed by host address.
+/// because tiles are keyed by host address (+ stride, so views of one
+/// base pointer with different leading dimensions never alias).
 pub fn run_real_batch<'m, T: Scalar>(
     cfg: &RunConfig,
     ts: &TaskSet,
@@ -122,126 +368,86 @@ pub fn run_real_batch<'m, T: Scalar>(
     arena_bytes: usize,
 ) -> Result<RealReport> {
     assert!(n_devices >= 1);
-    debug_assert!(
-        ts.tasks.iter().all(|t| t.p < problems.len()),
-        "task problem index out of range"
-    );
-    let t = cfg.t;
-    let tile_bytes = t * t * std::mem::size_of::<T>();
     assert!(
-        arena_bytes >= 8 * tile_bytes,
+        arena_bytes >= 8 * block_bytes::<T>(cfg.t),
         "arena must hold at least 8 tiles (working set of a round)"
     );
-    let executor = match cfg.backend {
-        Backend::Pjrt => Some(TileExecutor::new()?),
-        Backend::Hostblas => None,
-    };
-    // All devices are peers in real mode (host RAM is one address space;
-    // the "P2P copy" is an arena→arena memcpy, exercising the L2 path).
-    let peers: Vec<Vec<usize>> =
-        (0..n_devices).map(|d| (0..n_devices).filter(|&x| x != d).collect()).collect();
-    let caches = TileCacheSet::new(&vec![arena_bytes; n_devices], peers, cfg.alloc);
-
-    let mut arena_store: Vec<Vec<T>> = Vec::new();
-    for _ in 0..n_devices {
-        arena_store.push(vec![T::zero(); arena_bytes / std::mem::size_of::<T>()]);
-    }
-    let arenas: Vec<Arena<T>> = arena_store
-        .iter_mut()
-        .map(|v| Arena { buf: v.as_mut_ptr(), len: v.len() })
-        .collect();
-
-    let shared = Shared {
-        cfg: cfg.clone(),
-        tasks: ts.tasks.clone(),
-        deps: ts.tasks.iter().map(|t| AtomicUsize::new(t.n_deps)).collect(),
-        remaining: AtomicUsize::new(ts.tasks.len()),
-        queue: MsQueue::new(),
-        caches: Mutex::new(caches),
-        stations: (0..n_devices).map(|_| Mutex::new(Station::new(cfg.rs_capacity))).collect(),
-        arenas,
-        mats: problems,
-        executor,
-        failure: Mutex::new(None),
-        steals: (0..n_devices).map(|_| AtomicUsize::new(0)).collect(),
-    };
-    for &h in &ts.heads {
-        shared.queue.enqueue(h);
-    }
-
-    let tasks_done: Vec<AtomicUsize> = (0..n_devices).map(|_| AtomicUsize::new(0)).collect();
+    let core = EngineCore::new(n_devices, arena_bytes, cfg.alloc);
+    let job = JobState::new(cfg, ts, problems, n_devices)?;
     std::thread::scope(|scope| {
         for dev in 0..n_devices {
-            let shared = &shared;
-            let done = &tasks_done;
-            scope.spawn(move || worker_loop(dev, shared, &done[dev]));
+            let core = &core;
+            let job = &job;
+            scope.spawn(move || worker_loop(dev, core, job));
         }
     });
-
-    if let Some(e) = shared.failure.lock().unwrap().take() {
-        return Err(e);
-    }
-    let rem = shared.remaining.load(Ordering::SeqCst);
-    if rem != 0 {
-        return Err(Error::Internal(format!("real engine stalled with {rem} tasks")));
-    }
-    let caches = shared.caches.lock().unwrap();
-    Ok(RealReport {
-        tasks_per_device: tasks_done.iter().map(|a| a.load(Ordering::SeqCst)).collect(),
-        cache_stats: (0..n_devices).map(|d| caches.stats(d)).collect(),
-        steals: shared.steals.iter().map(|a| a.load(Ordering::SeqCst)).collect(),
-    })
+    job.into_report(&core)
 }
 
 /// Observability output of a real run (numerics land in the C matrix).
+///
+/// Under the persistent runtime `cache_stats` is *cumulative* since
+/// the runtime booted (the ALRUs live across calls); `transfers`,
+/// `tasks_per_device` and `steals` are per-call.
 #[derive(Debug)]
 pub struct RealReport {
     pub tasks_per_device: Vec<usize>,
     pub cache_stats: Vec<(u64, u64, u64)>,
     pub steals: Vec<usize>,
+    /// Per-call transfer trace (host reads / peer copies / L1 hits).
+    pub transfers: TransferStats,
 }
 
 // -------------------------------------------------------------------
 // worker
 
-fn worker_loop<T: Scalar>(dev: usize, sh: &Shared<'_, T>, tasks_done: &AtomicUsize) {
-    let n_streams = sh.cfg.n_streams;
+/// How long an idle worker sleeps before re-probing for stealable
+/// surplus in sibling stations (the condvar covers queue arrivals and
+/// completion exactly; station-level surplus has no notify hook).
+const PARK_TIMEOUT: Duration = Duration::from_millis(1);
+
+pub(crate) fn worker_loop<T: Scalar>(dev: usize, core: &EngineCore, job: &JobState<'_, T>) {
+    let n_streams = job.cfg.n_streams;
     loop {
-        if sh.failure.lock().unwrap().is_some() {
+        if job.failure.lock().unwrap().is_some() {
+            core.notify_work();
             return;
         }
         // ---- refill the reservation station (lines 11–15)
         let mut bound: Vec<usize> = Vec::new();
         {
-            let mut rs = sh.stations[dev].lock().unwrap();
+            let mut rs = job.stations[dev].lock().unwrap();
             while !rs.is_full() {
-                match sh.queue.dequeue() {
+                match job.queue.dequeue() {
                     Some(t) => {
-                        let caches = sh.caches.lock().unwrap();
-                        let p = task_priority(&sh.tasks[t], dev, &caches, |r| sh.mats[r.p].key(r));
+                        let caches = core.lock_caches();
+                        let p =
+                            task_priority(&job.tasks[t], dev, &caches, |r| job.mats[r.p].key(r));
                         rs.insert(t, p);
                     }
                     None => break,
                 }
             }
-            if rs.is_empty() && sh.cfg.work_stealing {
+            if rs.is_empty() && job.cfg.work_stealing {
                 drop(rs);
                 // steal from the fullest victim
-                let victim = (0..sh.stations.len())
+                let victim = (0..job.stations.len())
                     .filter(|&v| v != dev)
-                    .max_by_key(|&v| sh.stations[v].lock().unwrap().len());
+                    .max_by_key(|&v| job.stations[v].lock().unwrap().len());
                 if let Some(v) = victim {
-                    if let Some(slot) = sh.stations[v].lock().unwrap().steal_worst() {
-                        sh.stations[dev].lock().unwrap().insert(slot.task, slot.priority);
-                        sh.steals[dev].fetch_add(1, Ordering::Relaxed);
+                    if let Some(slot) = job.stations[v].lock().unwrap().steal_worst() {
+                        job.stations[dev].lock().unwrap().insert(slot.task, slot.priority);
+                        job.steals[dev].fetch_add(1, Ordering::Relaxed);
                     }
                 }
-                rs = sh.stations[dev].lock().unwrap();
+                rs = job.stations[dev].lock().unwrap();
             }
             // refresh priorities after arrivals, then bind top tasks
             {
-                let caches = sh.caches.lock().unwrap();
-                rs.refresh(|t| task_priority(&sh.tasks[t], dev, &caches, |r| sh.mats[r.p].key(r)));
+                let caches = core.lock_caches();
+                rs.refresh(|t| {
+                    task_priority(&job.tasks[t], dev, &caches, |r| job.mats[r.p].key(r))
+                });
             }
             for _ in 0..n_streams {
                 match rs.take_best() {
@@ -252,30 +458,45 @@ fn worker_loop<T: Scalar>(dev: usize, sh: &Shared<'_, T>, tasks_done: &AtomicUsi
         }
 
         if bound.is_empty() {
-            if sh.remaining.load(Ordering::SeqCst) == 0 {
+            if job.remaining.load(Ordering::SeqCst) == 0 {
+                core.notify_work();
                 return;
             }
-            std::thread::yield_now();
+            // Park until new tasks enqueue or the job completes. The
+            // re-check under the lock pairs with `notify_work`'s lock
+            // round-trip, so an enqueue between our check and the wait
+            // cannot be missed; the timeout is a backstop that lets us
+            // periodically retry stealing station-held surplus.
+            let guard = core.work_mx.lock().unwrap_or_else(|e| e.into_inner());
+            if job.queue.is_empty() && job.remaining.load(Ordering::SeqCst) != 0 {
+                let _ = core.work_cv.wait_timeout(guard, PARK_TIMEOUT).unwrap();
+            }
             continue;
         }
 
         // ---- the round: solve the bound tasks (lines 18–25)
         let mut releases: Vec<TileKey> = Vec::new();
         for tid in bound {
-            if let Err(e) = run_task(dev, sh, tid, &mut releases) {
-                *sh.failure.lock().unwrap() = Some(e);
+            if let Err(e) = run_task(dev, core, job, tid, &mut releases) {
+                job.fail(e);
+                core.notify_work();
                 return;
             }
-            tasks_done.fetch_add(1, Ordering::Relaxed);
-            sh.remaining.fetch_sub(1, Ordering::SeqCst);
-            if let Some(succ) = sh.tasks[tid].successor {
-                if sh.deps[succ].fetch_sub(1, Ordering::SeqCst) == 1 {
-                    sh.queue.enqueue(succ);
+            job.tasks_done[dev].fetch_add(1, Ordering::Relaxed);
+            if job.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+                // last task: wake parked siblings so they observe
+                // completion and exit promptly
+                core.notify_work();
+            }
+            if let Some(succ) = job.tasks[tid].successor {
+                if job.deps[succ].fetch_sub(1, Ordering::SeqCst) == 1 {
+                    job.queue.enqueue(succ);
+                    core.notify_work();
                 }
             }
         }
         // ---- sync point (line 16/17): release the round's readers
-        let mut caches = sh.caches.lock().unwrap();
+        let mut caches = core.lock_caches();
         for key in releases {
             caches.release(dev, &key);
         }
@@ -285,20 +506,21 @@ fn worker_loop<T: Scalar>(dev: usize, sh: &Shared<'_, T>, tasks_done: &AtomicUsi
 /// Solve one task: acquire C, stream the k-steps, write C back.
 fn run_task<T: Scalar>(
     dev: usize,
-    sh: &Shared<'_, T>,
+    core: &EngineCore,
+    job: &JobState<'_, T>,
     tid: usize,
     releases: &mut Vec<TileKey>,
 ) -> Result<()> {
-    let t = sh.cfg.t;
+    let t = job.cfg.t;
     let tile_elems = t * t;
-    let tile_bytes = tile_elems * std::mem::size_of::<T>();
-    let task = &sh.tasks[tid];
-    let cmat = sh.mats[task.p].of(MatId::C);
+    let tile_bytes = block_bytes::<T>(t);
+    let task = &job.tasks[tid];
+    let cmat = job.mats[task.p].of(MatId::C);
     let ckey = cmat.tile_key(task.ci, task.cj);
 
     // -- C accumulator block
     let c_off = {
-        let mut caches = sh.caches.lock().unwrap();
+        let mut caches = core.lock_caches();
         let acq = {
             let mut acq = caches.acquire_output(dev, ckey, tile_bytes);
             if acq.is_none() {
@@ -322,7 +544,7 @@ fn run_task<T: Scalar>(
                 }
             }
         };
-        let cbuf = sh.arenas[dev].slice(acq.offset, tile_elems);
+        let cbuf = core.arenas[dev].slice::<T>(acq.offset, tile_elems);
         // zero-pad only edge tiles (interior tiles are fully overwritten
         // by read_tile / the kernels — the memset was 15% of small-tile
         // acquire cost, EXPERIMENTS.md §Perf)
@@ -334,6 +556,7 @@ fn run_task<T: Scalar>(
         }
         if task.reads_c {
             cmat.read_tile(task.ci, task.cj, cbuf, t);
+            job.transfers.count_host(MatId::C);
         }
         acq.offset
     };
@@ -347,24 +570,24 @@ fn run_task<T: Scalar>(
         let keep_from = releases.len();
         for (slot, tile) in [(0, step.a), (1, step.b)] {
             let Some(tile) = tile else { continue };
-            let off = acquire_input(dev, sh, tile, releases, keep_from)?;
+            let off = acquire_input(dev, core, job, tile, releases, keep_from)?;
             if slot == 0 {
                 a_off = Some(off);
             } else {
                 b_off = Some(off);
             }
         }
-        exec_step(dev, sh, step, a_off, b_off, c_off)?;
+        exec_step(dev, core, job, step, a_off, b_off, c_off)?;
     }
 
     // -- write-back (M → I): store the masked extent to host RAM
     {
-        let caches = sh.caches.lock().unwrap();
-        let cbuf = sh.arenas[dev].slice(c_off, tile_elems);
+        let caches = core.lock_caches();
+        let cbuf = core.arenas[dev].slice::<T>(c_off, tile_elems);
         write_back_masked(cmat, task, cbuf, t);
         drop(caches);
     }
-    let mut caches = sh.caches.lock().unwrap();
+    let mut caches = core.lock_caches();
     caches.writeback(dev, &ckey);
     caches.release(dev, &ckey);
     Ok(())
@@ -375,17 +598,18 @@ fn run_task<T: Scalar>(
 /// `releases` for the round's sync point.
 fn acquire_input<T: Scalar>(
     dev: usize,
-    sh: &Shared<'_, T>,
+    core: &EngineCore,
+    job: &JobState<'_, T>,
     tile: TileRef,
     releases: &mut Vec<TileKey>,
     keep_from: usize,
 ) -> Result<Offset> {
-    let t = sh.cfg.t;
+    let t = job.cfg.t;
     let tile_elems = t * t;
-    let tile_bytes = tile_elems * std::mem::size_of::<T>();
-    let mat = sh.mats[tile.p].of(tile.mat);
-    let key = sh.mats[tile.p].key(tile);
-    let mut caches = sh.caches.lock().unwrap();
+    let tile_bytes = block_bytes::<T>(t);
+    let mat = job.mats[tile.p].of(tile.mat);
+    let key = job.mats[tile.p].key(tile);
+    let mut caches = core.lock_caches();
     let acq = {
         let mut acq = caches.acquire(dev, key, tile_bytes);
         if acq.is_none() {
@@ -410,16 +634,19 @@ fn acquire_input<T: Scalar>(
     };
     releases.push(key);
     match acq.source {
-        Source::L1 => {}
+        Source::L1 => {
+            job.transfers.l1_hits.fetch_add(1, Ordering::Relaxed);
+        }
         Source::Peer { src, src_offset } => {
             // arena→arena copy under the cache lock (the source block is
             // pinned by the directory entry while we hold the lock).
-            let dst = sh.arenas[dev].slice(acq.offset, tile_elems);
-            let srcbuf = sh.arenas[src].slice(src_offset, tile_elems);
+            let dst = core.arenas[dev].slice::<T>(acq.offset, tile_elems);
+            let srcbuf = core.arenas[src].slice::<T>(src_offset, tile_elems);
             dst.copy_from_slice(srcbuf);
+            job.transfers.peer_copies.fetch_add(1, Ordering::Relaxed);
         }
         Source::Host => {
-            let dst = sh.arenas[dev].slice(acq.offset, tile_elems);
+            let dst = core.arenas[dev].slice::<T>(acq.offset, tile_elems);
             let (h, w) = mat.grid.tile_dims(tile.ti, tile.tj);
             if h < t || w < t {
                 // edge tiles: zero padding is semantically load-bearing
@@ -438,6 +665,7 @@ fn acquire_input<T: Scalar>(
                     dst[j * t + j] = T::one();
                 }
             }
+            job.transfers.count_host(tile.mat);
         }
     }
     Ok(acq.offset)
@@ -474,23 +702,24 @@ fn write_back_masked<T: Scalar>(cmat: &HostMat<T>, task: &Task, cbuf: &[T], t: u
 /// Execute one step's kernel on arena tiles (hostblas or PJRT).
 fn exec_step<T: Scalar>(
     dev: usize,
-    sh: &Shared<'_, T>,
+    core: &EngineCore,
+    job: &JobState<'_, T>,
     step: &Step,
     a_off: Option<Offset>,
     b_off: Option<Offset>,
     c_off: Offset,
 ) -> Result<()> {
-    let t = sh.cfg.t;
+    let t = job.cfg.t;
     let tile_elems = t * t;
     let alpha = T::from_f64(step.alpha);
     let beta = T::from_f64(step.beta);
-    let c = sh.arenas[dev].slice(c_off, tile_elems);
+    let c = core.arenas[dev].slice::<T>(c_off, tile_elems);
 
-    if let Some(ex) = &sh.executor {
+    if let Some(ex) = &job.executor {
         // SAFETY: a/b blocks are pinned for the round; kernels never
         // write them. Slices alias no live &mut.
-        let a = a_off.map(|o| &*sh.arenas[dev].slice(o, tile_elems));
-        let b = b_off.map(|o| &*sh.arenas[dev].slice(o, tile_elems));
+        let a = a_off.map(|o| &*core.arenas[dev].slice::<T>(o, tile_elems));
+        let b = b_off.map(|o| &*core.arenas[dev].slice::<T>(o, tile_elems));
         return ex.run(&step.op.kernel_name(), t, a, b, c, alpha, beta);
     }
 
@@ -499,11 +728,12 @@ fn exec_step<T: Scalar>(
     // order-of-magnitude gap this targets). GEMM k-steps additionally
     // fan out across `worker_threads` when the tile is big enough
     // (paper §IV-C.2's "multithreaded BLAS kernel"); `gemm_mt` applies
-    // its flop-based serial cutoff internally.
+    // its flop-based serial cutoff internally and runs its cells on the
+    // persistent kernel pool, so per-thread pack scratch is reused.
     let (m, n, k) = step.dims;
-    let a = a_off.map(|o| &*sh.arenas[dev].slice(o, tile_elems));
-    let b = b_off.map(|o| &*sh.arenas[dev].slice(o, tile_elems));
-    let wt = sh.cfg.worker_threads.max(1);
+    let a = a_off.map(|o| &*core.arenas[dev].slice::<T>(o, tile_elems));
+    let b = b_off.map(|o| &*core.arenas[dev].slice::<T>(o, tile_elems));
+    let wt = job.cfg.worker_threads.max(1);
     match step.op {
         TileOp::Gemm { ta, tb } => {
             hostblas::gemm_mt(wt, ta, tb, m, n, k, alpha, a.unwrap(), t, b.unwrap(), t, beta, c, t);

@@ -274,6 +274,11 @@ impl<'a> SimEngine<'a> {
 
     fn device_round(&mut self, d: usize, now: SimTime) {
         self.workers[d].scheduled = false;
+        // Progress accounting for the no-spin drain below: a round that
+        // entered with pending releases/write-backs can always change
+        // cache state, so it must re-schedule.
+        let had_pending = !self.workers[d].deferred_releases.is_empty()
+            || !self.workers[d].finished.is_empty();
 
         // -- line 17 ReaderUpdate: releases deferred from the last round
         let releases = std::mem::take(&mut self.workers[d].deferred_releases);
@@ -282,6 +287,7 @@ impl<'a> SimEngine<'a> {
         }
         // -- completed tasks: M→I write-back bookkeeping + chain unlock
         let finished = std::mem::take(&mut self.workers[d].finished);
+        let did_writeback = !finished.is_empty();
         for tid in finished {
             let key = self.keymap.key(self.tasks[tid].c_ref());
             self.caches.writeback(d, &key);
@@ -297,6 +303,13 @@ impl<'a> SimEngine<'a> {
             }
         }
 
+        if did_writeback {
+            // The write-backs invalidated every peer's cached copy of
+            // those C tiles — memory may just have been freed on a
+            // device that parked under cache pressure. Give it a wake.
+            self.wake_idlers(now);
+        }
+
         // -- lines 11–15: refill the RS
         self.refill_rs(d);
 
@@ -310,6 +323,7 @@ impl<'a> SimEngine<'a> {
         // -- bind top-priority tasks to free streams; the C accumulator
         //    block is acquired at bind time and held until write-back.
         let n_streams = self.workers[d].stream_free.len();
+        let mut bound_any = false;
         while self.workers[d].active.len() < n_streams {
             let Some(slot) = self.workers[d].rs.take_best() else { break };
             let t = &self.tasks[slot.task];
@@ -332,6 +346,7 @@ impl<'a> SimEngine<'a> {
                         self.workers[d].stream_free[stream] = done;
                     }
                     self.workers[d].active.push(Active { task: slot.task, stream, next_step: 0 });
+                    bound_any = true;
                 }
                 None => {
                     // cache pressure: task returns to the RS, retried
@@ -340,6 +355,12 @@ impl<'a> SimEngine<'a> {
                     break;
                 }
             }
+        }
+
+        if bound_any {
+            // acquire_output write-invalidated peer copies of the bound
+            // C tiles: parked peers may have memory again.
+            self.wake_idlers(now);
         }
 
         if self.workers[d].active.is_empty() {
@@ -356,6 +377,7 @@ impl<'a> SimEngine<'a> {
         let _ = idle_stream;
         let mut actives = std::mem::take(&mut self.workers[d].active);
         let mut still_active: Vec<Active> = Vec::new();
+        let mut issued_any = false;
         for _k in 0..self.cfg.k_chunk.max(1) {
             for a in actives.iter_mut() {
                 let Some(&step) = self.tasks[a.task].steps.get(a.next_step) else { continue };
@@ -402,6 +424,7 @@ impl<'a> SimEngine<'a> {
                     self.trace.record(d, a.stream, EvKind::Kernel, ks, ke, step.flops());
                     self.workers[d].stream_free[a.stream] = ke;
                     a.next_step += 1;
+                    issued_any = true;
                 }
             }
         }
@@ -457,6 +480,26 @@ impl<'a> SimEngine<'a> {
             }
         }
         self.workers[d].active = still_active;
+
+        // -- drain guard: a round that bound nothing, issued nothing
+        //    and holds nothing to release/write back would repeat
+        //    itself verbatim at now+ε — the old code re-scheduled
+        //    anyway, busy-spinning the event queue under permanent
+        //    cache pressure until the runaway guard tripped. Park
+        //    instead: `wake_idlers` fires on every event that can
+        //    change this device's options (new ready tasks, peer
+        //    write-backs freeing invalidated copies). A genuinely
+        //    wedged run now drains the event queue and surfaces as the
+        //    crisp "simulation stalled" diagnostic.
+        let progressed = had_pending
+            || bound_any
+            || issued_any
+            || !self.workers[d].deferred_releases.is_empty()
+            || !self.workers[d].finished.is_empty();
+        if !progressed {
+            self.workers[d].idle = true;
+            return;
+        }
 
         // -- line 16: schedule the sync point closing the round; the
         //    prefetches above keep the barrier off the transfer path.
@@ -595,4 +638,27 @@ pub fn simulate(
     // `AllocStrategy::CudaMalloc` handling in `mem`.
     let _ = AllocStrategy::FastHeap;
     SimEngine::new(cfg, machine, ts, keymap, dtype).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Dtype, Routine};
+    use crate::coordinator::dispatch::square_workload;
+    use crate::sim::toy;
+
+    #[test]
+    #[should_panic(expected = "simulation stalled")]
+    fn wedged_cache_surfaces_as_stall_not_runaway() {
+        // One tile of VRAM: the bound task's C block pins it and the
+        // k-step's A tile can never be admitted. Before the drain
+        // guard this spun the event queue at now+ε until the 10⁹-event
+        // runaway tripped (minutes); parked workers now drain the
+        // queue immediately and the run surfaces the crisp stall
+        // diagnostic instead.
+        let cfg = RunConfig { t: 64, ..Default::default() };
+        let machine = toy(1, 64 * 64 * 8);
+        let w = square_workload(Routine::Gemm, 128, 64, Dtype::F64);
+        let _ = simulate(&cfg, &machine, &w.ts, w.keymap.clone(), w.dtype);
+    }
 }

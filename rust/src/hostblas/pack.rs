@@ -7,10 +7,9 @@
 //! long-lived threads (the real engine's device workers, the serial
 //! kernel path) steady-state execution allocates nothing — buffers only
 //! grow, monotonically, to the largest panel the thread has seen.
-//! Caveat: `gemm_mt`'s scoped cells are fresh OS threads, so each cell
-//! packs into a new buffer; that cost is amortized by the flop cutoff
-//! (forking only happens when the O(m·n·k) work dwarfs the O(mc·kc)
-//! pack setup), but a persistent worker pool is the eventual fix.
+//! `gemm_mt`'s forked cells get the same guarantee: they run on the
+//! persistent [`crate::runtime::KernelPool`], whose threads — and
+//! therefore these thread-locals — survive across calls.
 //!
 //! [`take_buf`]/[`give_buf`] are the same idea for the macro-kernels'
 //! workspace needs (densified triangles, B copies): a thread-local

@@ -15,23 +15,27 @@
 //! [`MT_FLOP_CUTOFF`] is cheaper to run in-place than to fork for
 //! (see EXPERIMENTS.md §Perf for the sizing rationale).
 //!
-//! std::thread::scope keeps lifetimes simple — these are short-lived
-//! compute bursts, not a pool. That also means each cell's thread-local
-//! `PackBuf` starts empty (spawn + pack-allocation cost is what the
-//! flop cutoff amortizes); replacing the per-call scope with a
-//! persistent worker pool would extend the zero-allocation guarantee to
-//! this path and is the natural follow-up.
+//! Cells execute on the process-wide persistent
+//! [`crate::runtime::KernelPool`] (plus the submitting thread, which
+//! participates): pool threads are long-lived, so each cell's
+//! thread-local `PackBuf` and workspace free-list survive across
+//! kernel invocations and steady-state forked GEMM allocates nothing —
+//! the same zero-allocation guarantee the serial path has always had.
+//! (The seed used fresh `std::thread::scope` threads per call, whose
+//! empty thread-locals forfeited pack reuse on exactly the calls big
+//! enough to fork.)
 
 use super::gemm::{gemm_packed, gemm_packed_ptr};
 use super::tune::block_dims;
 use crate::api::types::{Scalar, Trans};
+use crate::runtime::KernelPool;
 
 /// Minimum flops (2·m·n·k) before forking pays for itself.
 pub const MT_FLOP_CUTOFF: f64 = 8.4e6; // ≈ 2·160³
 
-/// A raw C pointer that may cross the scoped-thread boundary. Each
-/// spawned cell derives from it a pointer to a *disjoint* sub-block of
-/// C, so no element is ever reachable from two threads.
+/// A raw C pointer that may cross into the kernel pool's threads. Each
+/// submitted cell derives from it a pointer to a *disjoint* sub-block
+/// of C, so no element is ever reachable from two threads.
 struct SendPtr<T>(*mut T);
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
@@ -102,11 +106,12 @@ pub fn gemm_mt<T: Scalar>(
     let (tr, tc) = grid_for(threads, m, n);
     let dims = block_dims(T::DTYPE);
     let cptr = SendPtr(c.as_mut_ptr());
-    std::thread::scope(|scope| {
+    {
         let cptr = &cptr;
+        let mut cells: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(tr * tc);
         for ri in 0..tr {
             for cj in 0..tc {
-                scope.spawn(move || {
+                cells.push(Box::new(move || {
                     let (i0, ib) = chunk(m, tr, ri);
                     let (j0, jb) = chunk(n, tc, cj);
                     if ib == 0 || jb == 0 {
@@ -125,7 +130,9 @@ pub fn gemm_mt<T: Scalar>(
                     // the extent covered by the caller's &mut slice; a/b
                     // are shared reads. k ≥ 1 here (k = 0 falls below
                     // the flop cutoff), so the a/b offsets stay in
-                    // bounds for the shrunken views.
+                    // bounds for the shrunken views. The pool's scoped
+                    // contract (KernelPool::run returns only after every
+                    // cell completes) bounds all borrows to this call.
                     unsafe {
                         gemm_packed_ptr(
                             dims,
@@ -144,10 +151,11 @@ pub fn gemm_mt<T: Scalar>(
                             ldc,
                         );
                     }
-                });
+                }));
             }
         }
-    });
+        KernelPool::global().run(cells);
+    }
 }
 
 #[cfg(test)]

@@ -16,6 +16,24 @@
 //! GPUs/PCI-E are simulated (see `sim`); numerics are real. See DESIGN.md
 //! for the full system inventory and experiment index.
 //!
+//! ## Persistent device runtime
+//!
+//! The engine is resident by default: [`api::Context`] lazily boots a
+//! long-lived [`runtime::Runtime`] — per-device worker threads parked
+//! on condvars, device arenas, and the ALRU/MESI-X tile caches — and
+//! every call submits its task set to that warm fleet instead of
+//! rebuilding the world. Consecutive calls touching the same host
+//! matrices get L1/L2 tile-cache hits instead of re-transfers (a
+//! second identical `dgemm` moves zero host bytes for unchanged
+//! operands), and `gemm_mt` fans tile kernels across a persistent
+//! [`runtime::KernelPool`] whose thread-local pack scratch survives
+//! between calls. Coherence across calls is epoch-based: outputs bump
+//! an invalidation generation for their byte range automatically;
+//! mutated *input* buffers must be declared via
+//! [`api::Context::invalidate_host`]. See `runtime::service` for the
+//! full lifecycle (boot, warm calls, invalidation, shutdown) and
+//! `tests/persistent_runtime.rs` for the cross-call guarantees.
+//!
 //! ## Batched execution
 //!
 //! The per-call runtime shines on one large problem; serving workloads

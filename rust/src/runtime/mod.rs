@@ -1,15 +1,25 @@
-//! PJRT runtime: load `artifacts/*.hlo.txt` (AOT output of
-//! `python/compile/aot.py`) and execute tile programs from the L3 hot
-//! path. Python never runs here — the artifacts are the only bridge.
+//! The execution runtime: the resident device service, the persistent
+//! kernel pool, and the PJRT bridge.
 //!
+//! - [`service`]: long-lived per-device worker threads + cross-call
+//!   tile-cache reuse with epoch invalidation (the warm engine behind
+//!   [`crate::api::Context`])
+//! - [`pool`]: the process-wide kernel thread pool `gemm_mt` fans tile
+//!   kernels across (pack-scratch thread-locals survive between calls)
 //! - [`artifact`]: manifest + artifact discovery
 //! - [`pjrt`]: process-wide CPU client + lazy executable cache
 //! - [`executor`]: per-step literal marshalling and execution
+//!
+//! Python never runs here — the AOT artifacts are the only bridge.
 
 pub mod artifact;
 pub mod executor;
 pub mod pjrt;
+pub mod pool;
+pub mod service;
 
 pub use artifact::{ArgSlot, ArtifactStore};
 pub use executor::TileExecutor;
 pub use pjrt::PjrtPool;
+pub use pool::KernelPool;
+pub use service::Runtime;

@@ -1,0 +1,258 @@
+//! Persistent kernel thread pool for intra-tile parallelism.
+//!
+//! `hostblas::gemm_mt` used to fork fresh scoped threads per call,
+//! which meant every cell started with an empty thread-local
+//! [`crate::hostblas::pack::PackBuf`] — the zero-allocation guarantee
+//! of the packed engine never engaged on the forked path (PR 2 open
+//! item). [`KernelPool`] keeps a process-wide set of long-lived worker
+//! threads instead: cells submitted by any caller run on threads whose
+//! pack scratch and free-list thread-locals survive across kernel
+//! invocations, so steady-state multithreaded GEMM allocates nothing.
+//!
+//! The pool is deliberately simple — a mutex-guarded injector deque
+//! plus a condvar — because cells are coarse (a cell is a whole packed
+//! GEMM over a C sub-block, milliseconds of work): queue overhead is
+//! noise. Threads spawn lazily up to the largest parallelism any
+//! caller has requested (capped at [`MAX_POOL_THREADS`]) and park on
+//! the condvar when idle; the pool lives for the process (there is no
+//! teardown — idle parked threads cost nothing).
+//!
+//! ## Scoped submission
+//!
+//! [`KernelPool::run`] accepts non-`'static` closures: the borrow is
+//! sound because `run` does not return until every submitted cell has
+//! finished executing (a per-group completion count, observed under
+//! the group's mutex). The submitting thread participates — it
+//! executes its own group's queued cells while it waits — so a group
+//! always completes even if every pool thread is busy elsewhere, and a
+//! `threads`-way `gemm_mt` needs only `threads - 1` pool workers.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Upper bound on pool threads — far above any sensible
+/// `worker_threads` setting; a runaway-request backstop, not a tuning
+/// knob.
+pub const MAX_POOL_THREADS: usize = 64;
+
+type Cell = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion tracking for one `run` call's batch of cells.
+struct Group {
+    outstanding: AtomicUsize,
+    panicked: AtomicBool,
+    mx: Mutex<()>,
+    cv: Condvar,
+}
+
+struct Injector {
+    jobs: VecDeque<(Arc<Group>, Cell)>,
+}
+
+/// The process-wide persistent kernel pool (see module docs).
+pub struct KernelPool {
+    mx: Mutex<Injector>,
+    cv: Condvar,
+    /// Threads spawned so far (grow-only, under this lock).
+    started: Mutex<usize>,
+}
+
+static POOL: OnceLock<KernelPool> = OnceLock::new();
+
+impl KernelPool {
+    /// The process-wide pool instance.
+    pub fn global() -> &'static KernelPool {
+        POOL.get_or_init(|| KernelPool {
+            mx: Mutex::new(Injector { jobs: VecDeque::new() }),
+            cv: Condvar::new(),
+            started: Mutex::new(0),
+        })
+    }
+
+    /// Number of live pool threads (observability / tests).
+    pub fn threads(&self) -> usize {
+        *self.started.lock().unwrap()
+    }
+
+    /// Grow the pool to at least `want` threads (capped).
+    pub fn ensure_threads(&'static self, want: usize) {
+        let want = want.min(MAX_POOL_THREADS);
+        let mut started = self.started.lock().unwrap();
+        while *started < want {
+            let name = format!("blasx-kern-{}", *started);
+            std::thread::Builder::new()
+                .name(name)
+                .spawn(move || self.worker())
+                .expect("spawn kernel pool thread");
+            *started += 1;
+        }
+    }
+
+    fn worker(&'static self) {
+        loop {
+            let (group, cell) = {
+                let mut q = self.mx.lock().unwrap();
+                loop {
+                    if let Some(j) = q.jobs.pop_front() {
+                        break j;
+                    }
+                    q = self.cv.wait(q).unwrap();
+                }
+            };
+            run_cell(&group, cell);
+        }
+    }
+
+    /// Execute every closure, in parallel across the pool plus the
+    /// calling thread, returning when all have finished. Panics in a
+    /// cell are propagated to the caller after the whole group
+    /// completes (scoped-thread semantics).
+    pub fn run<'s>(&'static self, cells: Vec<Box<dyn FnOnce() + Send + 's>>) {
+        let n = cells.len();
+        if n == 0 {
+            return;
+        }
+        self.ensure_threads(n - 1);
+        let group = Arc::new(Group {
+            outstanding: AtomicUsize::new(n),
+            panicked: AtomicBool::new(false),
+            mx: Mutex::new(()),
+            cv: Condvar::new(),
+        });
+        {
+            let mut q = self.mx.lock().unwrap();
+            for cell in cells {
+                // SAFETY: the closure is executed (and dropped) before
+                // `run` returns — the completion wait below does not
+                // pass until `outstanding` reaches zero, and a cell is
+                // only counted down after it has finished running. No
+                // borrow inside the closure outlives this call.
+                let cell: Cell = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + 's>, Cell>(cell)
+                };
+                q.jobs.push_back((group.clone(), cell));
+            }
+            self.cv.notify_all();
+        }
+        // Help: drain our own group's cells while pool threads chew.
+        loop {
+            let mine = {
+                let mut q = self.mx.lock().unwrap();
+                match q.jobs.iter().position(|(g, _)| Arc::ptr_eq(g, &group)) {
+                    Some(pos) => q.jobs.remove(pos),
+                    None => None,
+                }
+            };
+            match mine {
+                Some((g, cell)) => run_cell(&g, cell),
+                None => break,
+            }
+        }
+        // Wait for cells stolen by pool threads.
+        let mut g = group.mx.lock().unwrap();
+        while group.outstanding.load(Ordering::SeqCst) != 0 {
+            g = group.cv.wait(g).unwrap();
+        }
+        drop(g);
+        if group.panicked.load(Ordering::SeqCst) {
+            panic!("kernel pool cell panicked");
+        }
+    }
+}
+
+fn run_cell(group: &Group, cell: Cell) {
+    if catch_unwind(AssertUnwindSafe(cell)).is_err() {
+        group.panicked.store(true, Ordering::SeqCst);
+    }
+    // Count down under the group lock so the submitter's completion
+    // wait cannot miss the final notify.
+    let _g = group.mx.lock().unwrap();
+    if group.outstanding.fetch_sub(1, Ordering::SeqCst) == 1 {
+        group.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_cells_and_waits() {
+        let sum = AtomicU64::new(0);
+        let cells: Vec<Box<dyn FnOnce() + Send + '_>> = (1..=32u64)
+            .map(|i| {
+                let sum = &sum;
+                Box::new(move || {
+                    sum.fetch_add(i, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        KernelPool::global().run(cells);
+        assert_eq!(sum.load(Ordering::SeqCst), 32 * 33 / 2);
+    }
+
+    #[test]
+    fn borrows_local_state_safely() {
+        // Non-'static borrows: the scoped contract in action.
+        let mut out = vec![0usize; 64];
+        {
+            let cells: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                .chunks_mut(16)
+                .enumerate()
+                .map(|(i, chunk)| {
+                    Box::new(move || {
+                        for (j, x) in chunk.iter_mut().enumerate() {
+                            *x = i * 100 + j;
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            KernelPool::global().run(cells);
+        }
+        for (i, &x) in out.iter().enumerate() {
+            assert_eq!(x, (i / 16) * 100 + i % 16);
+        }
+    }
+
+    #[test]
+    fn threads_grow_monotonically_and_cap() {
+        let pool = KernelPool::global();
+        pool.ensure_threads(3);
+        assert!(pool.threads() >= 3);
+        let before = pool.threads();
+        pool.ensure_threads(1); // never shrinks
+        assert_eq!(pool.threads(), before);
+        pool.ensure_threads(MAX_POOL_THREADS + 50);
+        assert!(pool.threads() <= MAX_POOL_THREADS);
+    }
+
+    #[test]
+    fn empty_group_is_a_noop() {
+        KernelPool::global().run(Vec::new());
+    }
+
+    #[test]
+    fn concurrent_groups_complete_independently() {
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    let count = AtomicU64::new(0);
+                    let cells: Vec<Box<dyn FnOnce() + Send + '_>> = (0..16)
+                        .map(|_| {
+                            let count = &count;
+                            Box::new(move || {
+                                count.fetch_add(1, Ordering::SeqCst);
+                            })
+                                as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    KernelPool::global().run(cells);
+                    assert_eq!(count.load(Ordering::SeqCst), 16);
+                });
+            }
+        });
+    }
+}

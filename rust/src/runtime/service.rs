@@ -1,0 +1,377 @@
+//! The resident device runtime: long-lived worker threads, persistent
+//! arenas/tile-caches, and cross-call invalidation epochs.
+//!
+//! BLASX's headline wins come from a *persistent* dynamic runtime whose
+//! tile cache amortizes transfers across task progression. Tearing the
+//! engine down per API call (the one-shot `run_real` path) forfeits
+//! exactly that: worker threads respawn, arenas reallocate, and every
+//! call re-transfers tiles the previous call already staged. The
+//! [`Runtime`] keeps the [`EngineCore`] — device arenas + ALRU/MESI-X
+//! caches + parked worker threads — alive between calls, so a call
+//! touching host matrices the runtime has seen before starts on a warm
+//! cache (L1/L2 tile hits instead of host DMA).
+//!
+//! ## Lifecycle
+//!
+//! - **Boot** — lazy: the first call through a persistent
+//!   [`crate::api::Context`] spawns one worker thread per virtual
+//!   device and allocates the arenas. Clones of a `Context` share the
+//!   booted runtime.
+//! - **Warm calls** — [`Runtime::submit`] publishes a type-erased job
+//!   to the resident workers over the dispatch slot (a seq-numbered
+//!   mutex/condvar channel) and parks the caller until every worker
+//!   has finished the job. Submissions serialize: the engine runs one
+//!   call at a time, callers queue on the submit mutex.
+//! - **Invalidation** — every output matrix bumps an *epoch* for its
+//!   byte range in the [`EpochRegistry`] at submit time; input wraps
+//!   resolve their epoch from the registry. Epochs are folded into
+//!   [`crate::tile::TileKey`], so tiles cached from a buffer that has
+//!   since been rewritten become unreachable (and age out of the ALRU)
+//!   instead of serving stale bytes. Users who mutate an *input*
+//!   buffer between calls must declare it via
+//!   [`crate::api::Context::invalidate_host`] — the library cannot
+//!   observe foreign writes to host memory.
+//! - **Shutdown** — dropping the last handle (the last `Context`
+//!   clone) signals the workers and joins them.
+//!
+//! Tile-size changes between calls purge the cache wholesale: block
+//! geometry participates in tile addressing, so cross-size reuse would
+//! be incoherent. A failed job also purges (readers may have been left
+//! pinned on the abort path).
+
+use crate::api::Scalar;
+use crate::coordinator::config::RunConfig;
+use crate::coordinator::real_engine::{
+    block_bytes, worker_loop, EngineCore, JobState, Mats, RealReport,
+};
+use crate::error::Result;
+use crate::mem::AllocStrategy;
+use crate::task::TaskSet;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Host-buffer invalidation generations, keyed by byte range.
+///
+/// `bump` opens a fresh generation for a range (outputs at submit
+/// time, or user-declared mutations); `epoch_of` resolves the newest
+/// generation overlapping a range (inputs at submit time). Ranges
+/// fully covered by a newer bump are compacted away, so the registry
+/// stays proportional to the number of *distinct* live output buffers
+/// rather than the call count.
+#[derive(Default)]
+struct EpochRegistry {
+    counter: u64,
+    ranges: Vec<(usize, usize, u64)>,
+}
+
+impl EpochRegistry {
+    fn bump(&mut self, lo: usize, hi: usize) -> u64 {
+        self.counter += 1;
+        if lo < hi {
+            self.ranges.retain(|&(l, h, _)| !(l >= lo && h <= hi));
+            self.ranges.push((lo, hi, self.counter));
+        }
+        self.counter
+    }
+
+    fn epoch_of(&self, lo: usize, hi: usize) -> u64 {
+        self.ranges
+            .iter()
+            .filter(|&&(l, h, _)| l < hi && h > lo)
+            .map(|&(_, _, e)| e)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// A submitted call, erased over its scalar type so one worker fleet
+/// serves f32 and f64 jobs alike.
+trait DeviceJob: Send + Sync {
+    fn run_device(&self, dev: usize, core: &EngineCore);
+    fn poison(&self, msg: String);
+}
+
+struct ErasedJob<T: Scalar> {
+    state: JobState<'static, T>,
+}
+
+impl<T: Scalar> DeviceJob for ErasedJob<T> {
+    fn run_device(&self, dev: usize, core: &EngineCore) {
+        worker_loop(dev, core, &self.state);
+    }
+
+    fn poison(&self, msg: String) {
+        self.state.fail(crate::error::Error::Internal(msg));
+    }
+}
+
+/// The job dispatch slot: a one-deep seq-numbered channel from the
+/// submitting caller to every resident worker.
+struct Slot {
+    seq: u64,
+    job: Option<Arc<dyn DeviceJob>>,
+    /// Workers still executing the current job.
+    left: Arc<AtomicUsize>,
+}
+
+struct Inner {
+    core: EngineCore,
+    n_devices: usize,
+    arena_bytes: usize,
+    /// One call at a time through the engine.
+    submit_mx: Mutex<()>,
+    slot: Mutex<Slot>,
+    slot_cv: Condvar,
+    done_mx: Mutex<()>,
+    done_cv: Condvar,
+    epochs: Mutex<EpochRegistry>,
+    /// Tile size of the cached generation (None = cold).
+    last_t: Mutex<Option<usize>>,
+    shutdown: AtomicBool,
+    /// Calls served since boot (observability).
+    calls: AtomicUsize,
+}
+
+/// The resident device runtime (see module docs). Cloneably shared via
+/// `Arc` by [`crate::api::Context`]; dropping the last handle shuts
+/// the workers down.
+pub struct Runtime {
+    inner: Arc<Inner>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("n_devices", &self.inner.n_devices)
+            .field("arena_bytes", &self.inner.arena_bytes)
+            .field("calls", &self.inner.calls.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl Runtime {
+    /// Spawn the resident workers and allocate the persistent arenas.
+    pub fn boot(n_devices: usize, arena_bytes: usize, alloc: AllocStrategy) -> Runtime {
+        assert!(n_devices >= 1);
+        let inner = Arc::new(Inner {
+            core: EngineCore::new(n_devices, arena_bytes, alloc),
+            n_devices,
+            arena_bytes,
+            submit_mx: Mutex::new(()),
+            slot: Mutex::new(Slot { seq: 0, job: None, left: Arc::new(AtomicUsize::new(0)) }),
+            slot_cv: Condvar::new(),
+            done_mx: Mutex::new(()),
+            done_cv: Condvar::new(),
+            epochs: Mutex::new(EpochRegistry::default()),
+            last_t: Mutex::new(None),
+            shutdown: AtomicBool::new(false),
+            calls: AtomicUsize::new(0),
+        });
+        let handles = (0..n_devices)
+            .map(|dev| {
+                let inner = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("blasx-dev-{dev}"))
+                    .spawn(move || device_worker(inner, dev))
+                    .expect("spawn device worker")
+            })
+            .collect();
+        Runtime { inner, handles }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.inner.n_devices
+    }
+
+    pub fn arena_bytes(&self) -> usize {
+        self.inner.arena_bytes
+    }
+
+    /// Calls served since boot.
+    pub fn calls(&self) -> usize {
+        self.inner.calls.load(Ordering::Relaxed)
+    }
+
+    /// Open a new invalidation generation for `[lo, hi)`: tiles cached
+    /// from host bytes in that range become unreachable. The public
+    /// doorway is [`crate::api::Context::invalidate_host`].
+    pub fn invalidate_bytes(&self, lo: usize, hi: usize) {
+        self.inner.epochs.lock().unwrap_or_else(|e| e.into_inner()).bump(lo, hi);
+    }
+
+    /// Execute a task set over the resident engine; parks the caller
+    /// until the job completes. See the module docs for the coherence
+    /// contract.
+    pub(crate) fn submit<T: Scalar>(
+        &self,
+        cfg: &RunConfig,
+        ts: &TaskSet,
+        problems: Vec<Mats<'_, T>>,
+    ) -> Result<RealReport> {
+        // Precondition check BEFORE taking the submit lock: panicking
+        // while holding it would poison the mutex and brick every
+        // Context clone with PoisonError instead of this diagnostic.
+        assert!(
+            self.inner.arena_bytes >= 8 * block_bytes::<T>(cfg.t),
+            "arena must hold at least 8 tiles (working set of a round)"
+        );
+        let _call = self.inner.submit_mx.lock().unwrap_or_else(|e| e.into_inner());
+        // Tile-size switch: block geometry changed, cached tiles of the
+        // old size must not be reachable at the new one.
+        {
+            let mut last = self.inner.last_t.lock().unwrap_or_else(|e| e.into_inner());
+            if *last != Some(cfg.t) {
+                if last.is_some() {
+                    self.inner.core.purge();
+                }
+                *last = Some(cfg.t);
+            }
+        }
+        // Stamp invalidation epochs: inputs resolve against the current
+        // generation map, then every output range opens a fresh one (so
+        // this call's C tiles can never collide with a stale cached
+        // copy, and the *next* call reading this buffer sees new keys).
+        {
+            let mut reg = self.inner.epochs.lock().unwrap_or_else(|e| e.into_inner());
+            for m in &problems {
+                for hm in [Some(m.a), m.b].into_iter().flatten() {
+                    let (lo, hi) = hm.byte_range();
+                    hm.set_epoch(reg.epoch_of(lo, hi));
+                }
+            }
+            for m in &problems {
+                let (lo, hi) = m.c.byte_range();
+                m.c.set_epoch(reg.bump(lo, hi));
+            }
+        }
+
+        let state = JobState::new(cfg, ts, problems, self.inner.n_devices)?;
+        // SAFETY: the lifetime is erased only for the trait object's
+        // benefit. Every borrow inside `state` (task set, operand
+        // wraps) outlives this function call, and this function does
+        // not return until `left` reaches zero — which each worker
+        // signals only *after* dropping its clone of the job Arc (the
+        // decrement happens-after the drop, both under `done_mx`). The
+        // slot's clone is cleared below before the state is reclaimed,
+        // so no reference to the borrowed data survives the call.
+        let state = unsafe {
+            std::mem::transmute::<JobState<'_, T>, JobState<'static, T>>(state)
+        };
+        let job: Arc<ErasedJob<T>> = Arc::new(ErasedJob { state });
+        let left = Arc::new(AtomicUsize::new(self.inner.n_devices));
+        {
+            let mut s = self.inner.slot.lock().unwrap_or_else(|e| e.into_inner());
+            s.seq += 1;
+            s.job = Some(job.clone() as Arc<dyn DeviceJob>);
+            s.left = left.clone();
+            self.inner.slot_cv.notify_all();
+        }
+        {
+            let mut g = self.inner.done_mx.lock().unwrap_or_else(|e| e.into_inner());
+            while left.load(Ordering::SeqCst) != 0 {
+                g = self.inner.done_cv.wait(g).unwrap();
+            }
+        }
+        {
+            let mut s = self.inner.slot.lock().unwrap_or_else(|e| e.into_inner());
+            s.job = None;
+        }
+        let job = Arc::try_unwrap(job)
+            .unwrap_or_else(|_| unreachable!("job still shared after completion"));
+        self.inner.calls.fetch_add(1, Ordering::Relaxed);
+        let report = job.state.into_report(&self.inner.core);
+        if report.is_err() {
+            // The abort path may leave readers pinned; start the next
+            // call on a clean cache rather than leak arena space.
+            self.inner.core.purge();
+        }
+        report
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        {
+            let _s = self.inner.slot.lock().unwrap_or_else(|e| e.into_inner());
+            self.inner.slot_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn device_worker(inner: Arc<Inner>, dev: usize) {
+    let mut last_seq = 0u64;
+    loop {
+        let (job, left) = {
+            let mut s = inner.slot.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if s.seq > last_seq {
+                    if let Some(job) = &s.job {
+                        last_seq = s.seq;
+                        break (job.clone(), s.left.clone());
+                    }
+                }
+                s = inner.slot_cv.wait(s).unwrap();
+            }
+        };
+        // Contain panics (a poisoned kernel must not kill the resident
+        // worker — the job is failed and the fleet stays serviceable).
+        if catch_unwind(AssertUnwindSafe(|| job.run_device(dev, &inner.core))).is_err() {
+            job.poison(format!("device worker {dev} panicked"));
+        }
+        // Drop our job handle BEFORE signalling: `submit` reclaims the
+        // job (and the borrowed operands inside) once `left` hits zero.
+        drop(job);
+        let _g = inner.done_mx.lock().unwrap_or_else(|e| e.into_inner());
+        if left.fetch_sub(1, Ordering::SeqCst) == 1 {
+            inner.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_registry_bumps_and_resolves() {
+        let mut r = EpochRegistry::default();
+        assert_eq!(r.epoch_of(0, 100), 0);
+        let e1 = r.bump(100, 200);
+        assert_eq!(r.epoch_of(150, 160), e1);
+        assert_eq!(r.epoch_of(0, 100), 0, "adjacent, non-overlapping");
+        assert_eq!(r.epoch_of(199, 300), e1, "partial overlap counts");
+        let e2 = r.bump(150, 180);
+        assert_eq!(r.epoch_of(150, 160), e2);
+        assert_eq!(r.epoch_of(100, 110), e1, "older range still visible outside the new one");
+        assert!(e2 > e1);
+    }
+
+    #[test]
+    fn epoch_registry_compacts_covered_ranges() {
+        let mut r = EpochRegistry::default();
+        for _ in 0..50 {
+            r.bump(1000, 2000); // same output rewritten every call
+        }
+        assert_eq!(r.ranges.len(), 1, "covered ranges compact away");
+        r.bump(0, 10_000); // superset swallows it
+        assert_eq!(r.ranges.len(), 1);
+    }
+
+    #[test]
+    fn boot_and_drop_join_cleanly() {
+        let rt = Runtime::boot(3, 1 << 20, AllocStrategy::FastHeap);
+        assert_eq!(rt.n_devices(), 3);
+        assert_eq!(rt.calls(), 0);
+        drop(rt); // must not hang
+    }
+}

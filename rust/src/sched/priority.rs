@@ -35,7 +35,7 @@ mod tests {
     use crate::tile::MatId;
 
     fn key_of(r: TileRef) -> TileKey {
-        TileKey { addr: r.ti * 1000 + r.tj, mat: r.mat, ti: r.ti, tj: r.tj }
+        TileKey::synthetic(r.ti * 1000 + r.tj, r.mat, r.ti, r.tj)
     }
 
     fn gemm_task(krange: usize) -> Task {

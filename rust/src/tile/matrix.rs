@@ -12,6 +12,7 @@
 
 use super::layout::TileGrid;
 use crate::api::types::Scalar;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Identifies which operand of the current routine a tile belongs to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -21,9 +22,23 @@ pub enum MatId {
     C,
 }
 
-/// Globally-unique key for a tile within one routine invocation: the
-/// paper keys its caches by the tile's *host address*, which is exactly
-/// what `addr` is. `(mat, ti, tj)` is kept for debuggability.
+/// Globally-unique key for a tile: the paper keys its caches by the
+/// tile's *host address*, which is exactly what `addr` is. `(mat, ti,
+/// tj)` is kept for debuggability.
+///
+/// Two extra discriminants make the key safe beyond a single
+/// invocation:
+///
+/// - `ld` — the owning matrix's leading dimension. Two views of one
+///   base pointer with different strides (a pointer-array batch whose
+///   problems share a buffer) hold *different* bytes at the same tile
+///   origin; without `ld` in the key they would alias each other's
+///   cached tiles.
+/// - `epoch` — the host-buffer invalidation generation stamped by the
+///   persistent runtime (see `crate::runtime::service`). Bumping a
+///   buffer's epoch makes every previously-cached tile of it
+///   unreachable, which is how cross-call caching stays coherent when
+///   an output is rewritten or the user mutates an input.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct TileKey {
     /// Host address of the tile origin (the cache key, paper Alg. 2 "HA").
@@ -31,6 +46,19 @@ pub struct TileKey {
     pub mat: MatId,
     pub ti: usize,
     pub tj: usize,
+    /// Leading dimension of the owning matrix (stride discriminant).
+    pub ld: usize,
+    /// Host-buffer invalidation generation (0 = never invalidated /
+    /// non-persistent run).
+    pub epoch: u64,
+}
+
+impl TileKey {
+    /// A key with no stride/epoch discrimination — for unit tests and
+    /// synthetic cache exercises where `addr` is already unique.
+    pub fn synthetic(addr: usize, mat: MatId, ti: usize, tj: usize) -> TileKey {
+        TileKey { addr, mat, ti, tj, ld: 0, epoch: 0 }
+    }
 }
 
 /// A column-major host matrix: base pointer, rows, cols, leading
@@ -42,6 +70,10 @@ pub struct HostMat<T> {
     pub ld: usize,
     pub grid: TileGrid,
     pub id: MatId,
+    /// Cross-call invalidation generation, folded into every
+    /// [`TileKey`] this matrix produces. 0 until the persistent
+    /// runtime stamps it at submit time (one-shot runs never do).
+    epoch: AtomicU64,
 }
 
 // SAFETY: see module docs — tile tasks write disjoint regions; reads may
@@ -66,6 +98,7 @@ impl<T: Scalar> HostMat<T> {
             ld,
             grid: TileGrid::new(rows, cols, t),
             id,
+            epoch: AtomicU64::new(0),
         }
     }
 
@@ -85,6 +118,7 @@ impl<T: Scalar> HostMat<T> {
             ld,
             grid: TileGrid::new(rows, cols, t),
             id,
+            epoch: AtomicU64::new(0),
         }
     }
 
@@ -102,7 +136,29 @@ impl<T: Scalar> HostMat<T> {
             mat: self.id,
             ti,
             tj,
+            ld: self.ld,
+            epoch: self.epoch(),
         }
+    }
+
+    /// The invalidation generation currently stamped on this wrap.
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    /// Stamp the invalidation generation (persistent runtime, at submit
+    /// time — before any tile key is derived by the workers).
+    pub fn set_epoch(&self, e: u64) {
+        self.epoch.store(e, Ordering::Relaxed);
+    }
+
+    /// Byte extent `[lo, hi)` of the wrapped column-major footprint —
+    /// what the epoch registry overlaps against.
+    pub fn byte_range(&self) -> (usize, usize) {
+        let lo = self.ptr as usize;
+        let elems = if self.cols == 0 { 0 } else { self.ld * (self.cols - 1) + self.rows };
+        (lo, lo + elems * std::mem::size_of::<T>())
     }
 
     /// Copy tile `(ti, tj)` out of the host buffer into `dst`, laid out
@@ -230,6 +286,41 @@ mod tests {
     fn rejects_bad_ld() {
         let mut buf = vec![0.0f64; 10];
         let _ = HostMat::new(&mut buf, 5, 2, 3, 2, MatId::A);
+    }
+
+    #[test]
+    fn same_base_different_ld_keys_differ() {
+        // Two views of one buffer with different strides hold different
+        // bytes at the same tile origin — the keys must not alias
+        // (pointer-array batch sharing a base pointer).
+        let buf = vec![0.0f64; 41 * 64];
+        let m40 = HostMat::<f64>::new_ro(&buf, 40, 60, 40, 32, MatId::A);
+        let m41 = HostMat::<f64>::new_ro(&buf, 40, 60, 41, 32, MatId::A);
+        // tile (1,0) origin address is ld-independent …
+        assert_eq!(m40.tile_key(1, 0).addr, m41.tile_key(1, 0).addr);
+        // … but the keys still differ via the stride discriminant
+        assert_ne!(m40.tile_key(1, 0), m41.tile_key(1, 0));
+    }
+
+    #[test]
+    fn epoch_bumps_change_keys() {
+        let buf = vec![0.0f64; 8 * 8];
+        let m = HostMat::<f64>::new_ro(&buf, 8, 8, 8, 4, MatId::B);
+        let before = m.tile_key(0, 1);
+        m.set_epoch(7);
+        let after = m.tile_key(0, 1);
+        assert_eq!(m.epoch(), 7);
+        assert_ne!(before, after);
+        assert_eq!((after.addr, after.ti, after.tj), (before.addr, before.ti, before.tj));
+    }
+
+    #[test]
+    fn byte_range_covers_footprint() {
+        let buf = vec![0.0f64; 10 * 5];
+        let m = HostMat::<f64>::new_ro(&buf, 7, 5, 10, 4, MatId::A);
+        let (lo, hi) = m.byte_range();
+        assert_eq!(lo, buf.as_ptr() as usize);
+        assert_eq!(hi - lo, (10 * 4 + 7) * 8);
     }
 
     #[test]

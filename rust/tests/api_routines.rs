@@ -5,12 +5,11 @@
 
 use blasx::api::types::{Diag, Side, Trans, Uplo};
 use blasx::api::{self, Context};
-use blasx::coordinator::RunConfig;
 use blasx::hostblas;
 use blasx::util::prng::Prng;
 
 fn ctx() -> Context {
-    Context { n_devices: 2, arena_bytes: 4 << 20, cfg: RunConfig { t: 32, ..Default::default() } }
+    Context::new(2).with_arena(4 << 20).with_tile(32)
 }
 
 fn rand(p: &mut Prng, n: usize) -> Vec<f64> {

@@ -12,13 +12,12 @@
 
 use blasx::api::types::Trans;
 use blasx::api::{self, Context, GemmBatchEntry};
-use blasx::coordinator::RunConfig;
 use blasx::hostblas;
 use blasx::util::prng::Prng;
 use blasx::util::prop::{check_close, Cases};
 
 fn ctx(t: usize) -> Context {
-    Context { n_devices: 2, arena_bytes: 4 << 20, cfg: RunConfig { t, ..Default::default() } }
+    Context::new(2).with_arena(4 << 20).with_tile(t)
 }
 
 /// Stored dims of op(X) given (rows, cols) of the op result.
@@ -96,8 +95,13 @@ fn run_batched(ctx: &Context, probs: &mut [Problem]) {
 
 #[test]
 fn batched_matches_looped_hostblas_property() {
-    let ctx = ctx(16);
     Cases::new(20).run("dgemm_batched vs looped hostblas", |rng| {
+        // One engine per case: each case frees its randomly-shaped
+        // operand buffers, and the persistent runtime's cross-call
+        // cache contract requires input buffers to stay live (or be
+        // declared via `invalidate_host`) between calls on one
+        // context. Fresh contexts keep the cases independent.
+        let ctx = ctx(16);
         let mut probs = random_batch(rng, 8, 50);
         let want: Vec<Vec<f64>> = probs
             .iter()

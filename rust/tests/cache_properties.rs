@@ -9,7 +9,7 @@ use blasx::tile::{MatId, TileKey};
 use blasx::util::prop::Cases;
 
 fn key(i: usize) -> TileKey {
-    TileKey { addr: 0x1000 + i * 64, mat: MatId::A, ti: i, tj: 0 }
+    TileKey::synthetic(0x1000 + i * 64, MatId::A, i, 0)
 }
 
 #[test]

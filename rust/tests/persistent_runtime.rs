@@ -1,0 +1,342 @@
+//! Cross-call properties of the persistent device runtime: warm calls
+//! must be bit-for-bit identical to a fresh engine, measurably cheaper
+//! (cache hits instead of host transfers), and coherent under host
+//! mutation, in-place chains, tile-size switches, and concurrent
+//! callers.
+
+use blasx::api::types::{Diag, Side, Trans, Uplo};
+use blasx::api::{self, Context, GemmBatchEntry};
+use blasx::hostblas;
+use blasx::util::prng::Prng;
+
+fn warm_ctx() -> Context {
+    Context::new(2).with_arena(8 << 20).with_tile(32)
+}
+
+fn rand(p: &mut Prng, n: usize) -> Vec<f64> {
+    let mut v = vec![0.0; n];
+    p.fill_f64(&mut v, -1.0, 1.0);
+    v
+}
+
+fn max_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+/// The tentpole acceptance property: a second identical dgemm through a
+/// warm context performs ZERO host→device tile transfers for unchanged
+/// operands, serving everything from the resident tile caches.
+#[test]
+fn warm_second_call_does_zero_host_transfers() {
+    let ctx = warm_ctx();
+    let (m, n, k) = (96, 80, 64);
+    let mut p = Prng::new(71);
+    let a = rand(&mut p, m * k);
+    let b = rand(&mut p, k * n);
+    let mut c = vec![0.0; m * n];
+
+    // beta = 0 ⇒ tasks never read C, so a fully warm call moves nothing.
+    let rep1 = api::dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m)
+        .unwrap();
+    assert!(rep1.transfers.input_host_reads() > 0, "cold call must fetch tiles: {rep1:?}");
+    let c1 = c.clone();
+
+    let rep2 = api::dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m)
+        .unwrap();
+    assert_eq!(
+        rep2.transfers.total_host_reads(),
+        0,
+        "warm call must be transfer-free: {:?}",
+        rep2.transfers
+    );
+    assert!(
+        rep2.transfers.l1_hits + rep2.transfers.peer_copies > 0,
+        "warm call must be served from the tile caches: {:?}",
+        rep2.transfers
+    );
+
+    // …and bit-for-bit identical, both across calls and vs the oracle.
+    assert_eq!(c, c1, "warm call numerics must match the cold call exactly");
+    let mut want = vec![0.0; m * n];
+    hostblas::gemm_blocked(Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut want, m);
+    assert!(max_diff(&c, &want) < 1e-10);
+}
+
+/// Repeated mixed-routine calls through one warm context agree
+/// BIT-FOR-BIT with a fresh one-shot engine per call: cache hits change
+/// where tile bytes come from, never what the kernels compute.
+#[test]
+fn warm_calls_bit_identical_to_fresh_engine() {
+    let warm = warm_ctx();
+    let mut p = Prng::new(72);
+    for round in 0..3 {
+        let (m, n, k) = (64 + 16 * round, 80, 48 + round);
+        let a = rand(&mut p, m * k);
+        let b = rand(&mut p, k * n);
+        let c0 = rand(&mut p, m * n);
+        // The round's input buffers are fresh allocations with new
+        // contents — declare them per the warm runtime's liveness
+        // contract (the allocator may reuse a previous round's
+        // addresses).
+        warm.invalidate_host(&a);
+        warm.invalidate_host(&b);
+
+        let mut c_warm = c0.clone();
+        api::dgemm(&warm, Trans::No, Trans::No, m, n, k, 1.1, &a, m, &b, k, -0.3, &mut c_warm, m)
+            .unwrap();
+
+        let fresh = warm_ctx().with_persistent(false);
+        let mut c_fresh = c0.clone();
+        api::dgemm(&fresh, Trans::No, Trans::No, m, n, k, 1.1, &a, m, &b, k, -0.3, &mut c_fresh, m)
+            .unwrap();
+        assert_eq!(c_warm, c_fresh, "round {round}: warm vs fresh dgemm");
+
+        // a symmetric routine through the same warm engine
+        let nn = 64;
+        let sa = rand(&mut p, nn * k.max(1));
+        let sc0 = rand(&mut p, nn * nn);
+        warm.invalidate_host(&sa);
+        let mut sc_warm = sc0.clone();
+        api::syrk(&warm, Uplo::Lower, Trans::No, nn, k, 0.7, &sa, nn, 0.4, &mut sc_warm, nn)
+            .unwrap();
+        let mut sc_fresh = sc0.clone();
+        api::syrk(&fresh, Uplo::Lower, Trans::No, nn, k, 0.7, &sa, nn, 0.4, &mut sc_fresh, nn)
+            .unwrap();
+        assert_eq!(sc_warm, sc_fresh, "round {round}: warm vs fresh syrk");
+    }
+    assert!(warm.runtime_calls() >= 6, "all calls went through the resident runtime");
+}
+
+/// Mutating an input between calls + `invalidate_host` refreshes
+/// exactly the mutated operand's tiles; untouched operands stay warm.
+#[test]
+fn mutated_input_invalidation_refreshes_stale_tiles() {
+    let ctx = warm_ctx();
+    let (m, n, k) = (96, 64, 64);
+    let mut p = Prng::new(73);
+    let mut a = rand(&mut p, m * k);
+    let b = rand(&mut p, k * n);
+    let mut c = vec![0.0; m * n];
+    api::dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m).unwrap();
+
+    // Rewrite A in place, declare it, and verify the runtime re-reads
+    // it (and only it) while computing the correct new product.
+    p.fill_f64(&mut a, -2.0, 2.0);
+    ctx.invalidate_host(&a);
+    let rep = api::dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m)
+        .unwrap();
+    assert!(rep.transfers.host_reads[0] > 0, "mutated A must be re-fetched: {:?}", rep.transfers);
+    assert_eq!(rep.transfers.host_reads[1], 0, "untouched B stays warm: {:?}", rep.transfers);
+
+    let mut want = vec![0.0; m * n];
+    hostblas::gemm_blocked(Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut want, m);
+    assert!(max_diff(&c, &want) < 1e-10, "stale tiles served after invalidation");
+}
+
+/// Output buffers need no declaration: every call epoch-bumps its C
+/// range, so reading the rewritten buffer in a later call (TRMM twice
+/// in place) can never hit stale tiles.
+#[test]
+fn inplace_outputs_stay_coherent_across_calls() {
+    let ctx = warm_ctx();
+    let n = 64;
+    let mut p = Prng::new(74);
+    // well-conditioned triangle (same recipe as tests/real_engine.rs)
+    let mut a = rand(&mut p, n * n);
+    for x in a.iter_mut() {
+        *x *= 0.5 / (n as f64).sqrt();
+    }
+    for i in 0..n {
+        a[i * n + i] = 2.0;
+    }
+    let mut b = rand(&mut p, n * n);
+    let mut want = b.clone();
+
+    for _ in 0..2 {
+        api::trmm(&ctx, Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, n, n, 1.0, &a, n, &mut b, n)
+            .unwrap();
+        hostblas::trmm_ref(Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, n, n, 1.0, &a, n, &mut want, n);
+    }
+    assert!(max_diff(&b, &want) < 1e-8, "{}", max_diff(&b, &want));
+
+    // …and the round-trip identity through the same warm engine.
+    let orig = b.clone();
+    api::trmm(&ctx, Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, n, n, 2.0, &a, n, &mut b, n)
+        .unwrap();
+    api::trsm(&ctx, Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, n, n, 0.5, &a, n, &mut b, n)
+        .unwrap();
+    assert!(max_diff(&b, &orig) < 1e-8);
+}
+
+/// Two batch problems sharing one base pointer with different leading
+/// dimensions must not alias each other's cached tiles (the `ld`
+/// TileKey discriminant — ROADMAP open item from PR 2 review).
+#[test]
+fn batch_problems_sharing_base_pointer_with_different_ld() {
+    let ctx = warm_ctx();
+    let (m, n, k) = (40, 24, 64);
+    let (lda0, lda1) = (40, 41);
+    let mut p = Prng::new(75);
+    // one buffer, two strided views — big enough for the wider view
+    let a = rand(&mut p, lda1 * k);
+    let b0 = rand(&mut p, k * n);
+    let b1 = rand(&mut p, k * n);
+    let mut c0 = vec![0.0; m * n];
+    let mut c1 = vec![0.0; m * n];
+
+    let mut e0 = GemmBatchEntry::new(m, n, k, 1.0, 0.0);
+    e0.lda = lda0;
+    let mut e1 = GemmBatchEntry::new(m, n, k, 1.0, 0.0);
+    e1.lda = lda1;
+
+    {
+        let mut crefs: Vec<&mut [f64]> = vec![c0.as_mut_slice(), c1.as_mut_slice()];
+        api::dgemm_batched(&ctx, &[e0, e1], &[&a, &a], &[&b0, &b1], &mut crefs).unwrap();
+    }
+
+    for (lda, bb, cc) in [(lda0, &b0, &c0), (lda1, &b1, &c1)] {
+        let mut want = vec![0.0; m * n];
+        hostblas::gemm_blocked(Trans::No, Trans::No, m, n, k, 1.0, &a, lda, bb, k, 0.0, &mut want, m);
+        assert!(
+            max_diff(cc, &want) < 1e-10,
+            "lda={lda}: aliased tile cache entries ({})",
+            max_diff(cc, &want)
+        );
+    }
+}
+
+/// A fused batch repeated through the warm runtime reuses its tiles
+/// like single calls do.
+#[test]
+fn warm_batch_reuses_tiles() {
+    let ctx = warm_ctx();
+    let shapes = [(40usize, 24usize, 33usize), (65, 17, 9), (48, 48, 48)];
+    let entries: Vec<GemmBatchEntry> =
+        shapes.iter().map(|&(m, n, k)| GemmBatchEntry::new(m, n, k, 1.0, 0.0)).collect();
+    let mut p = Prng::new(76);
+    let abufs: Vec<Vec<f64>> = shapes.iter().map(|&(m, _, k)| rand(&mut p, m * k)).collect();
+    let bbufs: Vec<Vec<f64>> = shapes.iter().map(|&(_, n, k)| rand(&mut p, k * n)).collect();
+    let mut cbufs: Vec<Vec<f64>> = shapes.iter().map(|&(m, n, _)| vec![0.0; m * n]).collect();
+    let arefs: Vec<&[f64]> = abufs.iter().map(Vec::as_slice).collect();
+    let brefs: Vec<&[f64]> = bbufs.iter().map(Vec::as_slice).collect();
+
+    let rep1 = {
+        let mut crefs: Vec<&mut [f64]> = cbufs.iter_mut().map(Vec::as_mut_slice).collect();
+        api::dgemm_batched(&ctx, &entries, &arefs, &brefs, &mut crefs).unwrap()
+    };
+    assert!(rep1.transfers.input_host_reads() > 0);
+    let first: Vec<Vec<f64>> = cbufs.clone();
+
+    let rep2 = {
+        let mut crefs: Vec<&mut [f64]> = cbufs.iter_mut().map(Vec::as_mut_slice).collect();
+        api::dgemm_batched(&ctx, &entries, &arefs, &brefs, &mut crefs).unwrap()
+    };
+    assert_eq!(rep2.transfers.total_host_reads(), 0, "{:?}", rep2.transfers);
+    assert_eq!(cbufs, first, "warm batch must be bit-identical");
+}
+
+/// Changing the tile size between calls purges the cache (block
+/// geometry changed) and stays correct.
+#[test]
+fn tile_size_switch_purges_and_recomputes() {
+    let mut ctx = warm_ctx();
+    let (m, n, k) = (96, 96, 96);
+    let mut p = Prng::new(77);
+    let a = rand(&mut p, m * k);
+    let b = rand(&mut p, k * n);
+    let mut c = vec![0.0; m * n];
+    let mut want = vec![0.0; m * n];
+    hostblas::gemm_blocked(Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut want, m);
+
+    api::dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m).unwrap();
+    assert!(max_diff(&c, &want) < 1e-10);
+
+    ctx.cfg.t = 48; // same runtime, new block geometry
+    let rep = api::dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m)
+        .unwrap();
+    assert!(
+        rep.transfers.input_host_reads() > 0,
+        "tile-size switch must refetch (purged cache): {:?}",
+        rep.transfers
+    );
+    assert!(max_diff(&c, &want) < 1e-10);
+}
+
+/// Concurrent callers sharing one Context serialize through the
+/// resident runtime; every call stays correct.
+#[test]
+fn concurrent_callers_share_one_runtime() {
+    let ctx = warm_ctx();
+    let (m, n, k) = (64, 64, 48);
+    std::thread::scope(|scope| {
+        for seed in 0..3u64 {
+            let ctx = ctx.clone();
+            scope.spawn(move || {
+                let mut p = Prng::new(100 + seed);
+                for _ in 0..3 {
+                    let a = rand(&mut p, m * k);
+                    let b = rand(&mut p, k * n);
+                    let mut c = vec![0.0; m * n];
+                    // fresh input allocations each iteration: declare
+                    // them (concurrent invalidations are part of what
+                    // this test exercises)
+                    ctx.invalidate_host(&a);
+                    ctx.invalidate_host(&b);
+                    api::dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m)
+                        .unwrap();
+                    let mut want = vec![0.0; m * n];
+                    hostblas::gemm_blocked(
+                        Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut want, m,
+                    );
+                    assert!(max_diff(&c, &want) < 1e-10);
+                }
+            });
+        }
+    });
+    assert_eq!(ctx.runtime_calls(), 9);
+}
+
+/// Eviction pressure across calls: a small arena keeps the warm path
+/// correct even when the previous call's tiles were partially evicted.
+#[test]
+fn warm_calls_correct_under_cache_pressure() {
+    // 9 tiles/device: constant eviction, cross-call hits are partial.
+    let ctx = Context::new(2).with_arena(9 * 32 * 32 * 8).with_tile(32);
+    let (m, n, k) = (160, 160, 160);
+    let mut p = Prng::new(78);
+    let a = rand(&mut p, m * k);
+    let b = rand(&mut p, k * n);
+    let mut want = vec![0.0; m * n];
+    hostblas::gemm_blocked(Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut want, m);
+    for call in 0..3 {
+        let mut c = vec![0.0; m * n];
+        api::dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m)
+            .unwrap();
+        assert!(max_diff(&c, &want) < 1e-10, "call {call}");
+    }
+}
+
+/// f32 and f64 jobs share one resident engine (byte-granular arenas).
+#[test]
+fn mixed_dtypes_share_the_runtime() {
+    let ctx = warm_ctx();
+    let (m, n, k) = (64, 48, 40);
+    let mut p = Prng::new(79);
+    let ad = rand(&mut p, m * k);
+    let bd = rand(&mut p, k * n);
+    let mut cd = vec![0.0f64; m * n];
+    api::dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &ad, m, &bd, k, 0.0, &mut cd, m).unwrap();
+
+    let mut af = vec![0.0f32; m * k];
+    let mut bf = vec![0.0f32; k * n];
+    p.fill_f32(&mut af, -1.0, 1.0);
+    p.fill_f32(&mut bf, -1.0, 1.0);
+    let mut cf = vec![0.0f32; m * n];
+    api::sgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &af, m, &bf, k, 0.0, &mut cf, m).unwrap();
+
+    let mut wantf = vec![0.0f32; m * n];
+    hostblas::gemm_blocked(Trans::No, Trans::No, m, n, k, 1.0f32, &af, m, &bf, k, 0.0, &mut wantf, m);
+    let df = cf.iter().zip(&wantf).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    assert!(df < 1e-3, "{df}");
+    assert_eq!(ctx.runtime_calls(), 2);
+}
