@@ -1,0 +1,191 @@
+//! Multi-tenant serving throughput: jobs/sec and worker-idle fraction
+//! as the client count grows — the workload the serve subsystem
+//! (`rust/src/serve/`) exists for.
+//!
+//! Each configuration runs `CLIENTS` threads over ONE shared
+//! persistent `Context`, every client issuing `JOBS_PER_CLIENT`
+//! independent same-size DGEMMs on private buffers (disjoint ranges ⇒
+//! the scheduler admits them concurrently and interleaves rounds under
+//! flop-weighted fairness). Reported per client count:
+//!
+//! - **jobs/s** — aggregate completed calls per second;
+//! - **busy/idle fraction** — resident-worker nanoseconds inside
+//!   scheduler rounds vs wall × device count (the under-utilization
+//!   the multi-tenant table removes: with 1 client the workers idle
+//!   between submit gaps, with 4/16 they stay fed);
+//! - **speedup** — jobs/s relative to the 1-client row.
+//!
+//! The overlap acceptance check of the serve PR also lands here: with
+//! 4 clients issuing one identical DGEMM each, total wall time must be
+//! measurably below 4× the warm single-call time. Results print as a
+//! table and land in `bench_out/BENCH_serve.json` plus the repo-root
+//! `BENCH_serve.json` (committed snapshot — regenerate on a host with
+//! cargo; the committed numbers are from the authoring container).
+
+use blasx::api::types::Trans;
+use blasx::api::{self, Context};
+use blasx::bench::{print_table, write_json};
+use blasx::util::json::Json;
+use blasx::util::prng::Prng;
+use std::time::Instant;
+
+const N: usize = 256;
+const T: usize = 64;
+const DEVICES: usize = 2;
+const JOBS_PER_CLIENT: usize = 6;
+const CLIENT_COUNTS: [usize; 3] = [1, 4, 16];
+
+fn ctx() -> Context {
+    Context::new(DEVICES).with_arena(32 << 20).with_tile(T)
+}
+
+struct Row {
+    clients: usize,
+    jobs: usize,
+    wall_ms: f64,
+    jobs_per_sec: f64,
+    busy_frac: f64,
+}
+
+/// One client's buffers (private ⇒ jobs are admission-independent).
+struct Client {
+    a: Vec<f64>,
+    b: Vec<f64>,
+    c: Vec<f64>,
+}
+
+fn client(seed: u64) -> Client {
+    let mut p = Prng::new(seed);
+    let mut a = vec![0.0; N * N];
+    let mut b = vec![0.0; N * N];
+    p.fill_f64(&mut a, -1.0, 1.0);
+    p.fill_f64(&mut b, -1.0, 1.0);
+    Client { a, b, c: vec![0.0; N * N] }
+}
+
+fn run_clients(ctx: &Context, clients: &mut [Client], jobs_each: usize) -> f64 {
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for cl in clients.iter_mut() {
+            let ctx = ctx.clone();
+            scope.spawn(move || {
+                for _ in 0..jobs_each {
+                    api::dgemm(
+                        &ctx, Trans::No, Trans::No, N, N, N, 1.0, &cl.a, N, &cl.b, N, 0.0,
+                        &mut cl.c, N,
+                    )
+                    .expect("serve bench dgemm");
+                }
+            });
+        }
+    });
+    start.elapsed().as_secs_f64()
+}
+
+fn bench_clients(n_clients: usize, rows: &mut Vec<Row>) {
+    let ctx = ctx();
+    let mut clients: Vec<Client> = (0..n_clients).map(|i| client(7 + i as u64)).collect();
+    // Warm: boot the runtime and stage every client's tiles once.
+    let _ = run_clients(&ctx, &mut clients, 1);
+    let busy0: u64 = ctx.runtime_busy_nanos().iter().sum();
+    let wall = run_clients(&ctx, &mut clients, JOBS_PER_CLIENT);
+    let busy1: u64 = ctx.runtime_busy_nanos().iter().sum();
+    let jobs = n_clients * JOBS_PER_CLIENT;
+    let busy_frac = ((busy1.saturating_sub(busy0)) as f64 / 1e9) / (wall * DEVICES as f64);
+    rows.push(Row {
+        clients: n_clients,
+        jobs,
+        wall_ms: wall * 1e3,
+        jobs_per_sec: jobs as f64 / wall,
+        busy_frac: busy_frac.min(1.0),
+    });
+}
+
+/// The serve-PR acceptance probe: 4 concurrent clients, one warm
+/// same-size DGEMM each, against 4× the warm single-call wall time.
+fn overlap_probe() -> (f64, f64, f64) {
+    let ctx = ctx();
+    let mut clients: Vec<Client> = (0..4).map(|i| client(100 + i as u64)).collect();
+    let _ = run_clients(&ctx, &mut clients, 1); // warm all four
+    // warm single-call time (best of 5)
+    let single = (0..5)
+        .map(|_| {
+            let one = &mut clients[0];
+            let t0 = Instant::now();
+            api::dgemm(
+                &ctx, Trans::No, Trans::No, N, N, N, 1.0, &one.a, N, &one.b, N, 0.0, &mut one.c,
+                N,
+            )
+            .expect("probe dgemm");
+            t0.elapsed().as_secs_f64()
+        })
+        .fold(f64::INFINITY, f64::min);
+    // 4 clients, 1 job each, concurrently (best of 5)
+    let four = (0..5)
+        .map(|_| run_clients(&ctx, &mut clients, 1))
+        .fold(f64::INFINITY, f64::min);
+    (single * 1e3, four * 1e3, four / (4.0 * single))
+}
+
+fn main() {
+    let mut rows = Vec::new();
+    for &c in &CLIENT_COUNTS {
+        bench_clients(c, &mut rows);
+    }
+    let base = rows[0].jobs_per_sec;
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.clients.to_string(),
+                r.jobs.to_string(),
+                format!("{:.1}", r.wall_ms),
+                format!("{:.1}", r.jobs_per_sec),
+                format!("{:.2}", r.busy_frac),
+                format!("{:.2}", 1.0 - r.busy_frac),
+                format!("{:.2}x", r.jobs_per_sec / base),
+            ]
+        })
+        .collect();
+    print_table(
+        "serve throughput: concurrent clients over one resident runtime",
+        &["clients", "jobs", "wall ms", "jobs/s", "busy", "idle", "speedup"],
+        &table,
+    );
+
+    let (single_ms, four_ms, ratio) = overlap_probe();
+    println!(
+        "\noverlap probe: warm single call {single_ms:.2} ms, 4 concurrent clients {four_ms:.2} ms \
+         => {ratio:.2} of 4x serial (< 1.0 means the scheduler overlaps independent jobs)"
+    );
+
+    let mut json = Json::obj();
+    json.set("bench", Json::Str("serve_throughput".into()));
+    json.set("n", Json::Num(N as f64));
+    json.set("tile", Json::Num(T as f64));
+    json.set("devices", Json::Num(DEVICES as f64));
+    json.set("jobs_per_client", Json::Num(JOBS_PER_CLIENT as f64));
+    let mut arr = Vec::new();
+    for r in &rows {
+        let mut o = Json::obj();
+        o.set("clients", Json::Num(r.clients as f64));
+        o.set("jobs", Json::Num(r.jobs as f64));
+        o.set("wall_ms", Json::Num(r.wall_ms));
+        o.set("jobs_per_sec", Json::Num(r.jobs_per_sec));
+        o.set("worker_busy_fraction", Json::Num(r.busy_frac));
+        o.set("worker_idle_fraction", Json::Num(1.0 - r.busy_frac));
+        arr.push(o);
+    }
+    json.set("results", Json::Arr(arr));
+    let mut probe = Json::obj();
+    probe.set("warm_single_call_ms", Json::Num(single_ms));
+    probe.set("four_clients_wall_ms", Json::Num(four_ms));
+    probe.set("ratio_vs_4x_serial", Json::Num(ratio));
+    json.set("overlap_probe", probe);
+    write_json("BENCH_serve", &json);
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serve.json");
+    match std::fs::write(&root, json.to_string_pretty()) {
+        Ok(()) => println!("[bench] wrote {}", root.display()),
+        Err(e) => eprintln!("[bench] cannot write {}: {e}", root.display()),
+    }
+}

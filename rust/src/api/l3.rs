@@ -27,14 +27,30 @@
 //! [`Context::with_persistent`]) to get the old tear-down-per-call
 //! engine. Clones of a `Context` share the booted runtime; dropping
 //! the last clone shuts it down.
+//!
+//! ## Serving mode: concurrent calls and `*_async`
+//!
+//! The resident runtime is **multi-tenant** (see [`crate::serve`]):
+//! calls from any number of client threads are admitted as concurrent
+//! *jobs* and interleaved across the device workers under
+//! flop-weighted fairness. Independent calls overlap on the devices;
+//! calls whose operand byte ranges alias are ordered by admission-time
+//! dependency edges and stay bit-for-bit identical to serial
+//! execution. Blocking routines are submit-then-wait; every routine
+//! also has a non-blocking `*_async` variant (e.g. [`gemm_async`])
+//! returning a [`JobHandle`] — call [`JobHandle::wait`] for the
+//! report, and keep the operand buffers untouched until then (the
+//! handle borrows them; dropping it unwaited blocks until the job
+//! completes).
 
 use super::check;
 use super::types::{Diag, Scalar, Side, Trans, Uplo};
 use crate::batch::{taskize_batch, BatchDesc, BatchedGemm};
-use crate::coordinator::real_engine::{run_real_batch, Mats, RealReport};
+use crate::coordinator::real_engine::{run_real_batch, Mats, OwnedProblem, RealReport};
 use crate::coordinator::{Backend, RunConfig};
-use crate::error::{illegal, Result};
+use crate::error::{illegal, Error, Result};
 use crate::runtime::Runtime;
+use crate::serve::JobHandle;
 use crate::task::{
     taskize_gemm, taskize_symm, taskize_syr2k, taskize_syrk, taskize_trmm, taskize_trsm,
     GemmDesc, SymmDesc, SyrkDesc, TaskSet, TriDesc,
@@ -163,6 +179,28 @@ impl Context {
         self.runtime.lock().unwrap_or_else(|e| e.into_inner()).as_ref().map_or(0, |rt| rt.calls())
     }
 
+    /// Cumulative per-device busy nanoseconds of the resident workers
+    /// (empty when not booted). Against wall time × device count this
+    /// yields the worker-idle fraction `benches/serve_throughput.rs`
+    /// reports.
+    pub fn runtime_busy_nanos(&self) -> Vec<u64> {
+        self.runtime
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .as_ref()
+            .map_or_else(Vec::new, |rt| rt.busy_nanos())
+    }
+
+    /// Jobs currently admitted to the resident runtime (running or
+    /// queued behind aliasing dependencies). 0 when not booted.
+    pub fn jobs_in_flight(&self) -> usize {
+        self.runtime
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .as_ref()
+            .map_or(0, |rt| rt.jobs_in_flight())
+    }
+
     /// Shut the resident runtime down now (it reboots lazily on the
     /// next call). Equivalent to dropping every clone of this context.
     pub fn shutdown_runtime(&self) {
@@ -184,7 +222,10 @@ impl Context {
     }
 
     /// Route a task set to the resident runtime (persistent) or the
-    /// one-shot engine.
+    /// one-shot engine. Under the resident runtime this is
+    /// submit-then-wait through the multi-tenant scheduler: the call
+    /// parks, but OTHER threads' calls interleave with it on the
+    /// devices.
     pub(crate) fn execute<T: Scalar>(
         &self,
         ts: &TaskSet,
@@ -194,6 +235,25 @@ impl Context {
             return run_real_batch(&self.cfg, ts, problems, self.n_devices, self.arena_bytes);
         }
         self.runtime().submit(&self.cfg, ts, problems)
+    }
+
+    /// Admit a task set as a non-blocking job and return its handle.
+    /// Requires the persistent runtime (the one-shot engine has no
+    /// workers to return to).
+    fn execute_async<'buf, T: Scalar>(
+        &self,
+        ts: TaskSet,
+        problems: Vec<OwnedProblem<T>>,
+    ) -> Result<JobHandle<'buf>> {
+        if !self.persistent {
+            return Err(Error::Config(
+                "async submission requires the persistent runtime (Context::with_persistent(true))"
+                    .into(),
+            ));
+        }
+        let rt = self.runtime();
+        let (job, ctl) = rt.submit_owned(&self.cfg, ts, problems)?;
+        Ok(JobHandle::new(rt, job, ctl))
     }
 }
 
@@ -360,6 +420,227 @@ pub fn trsm<T: Scalar>(
     let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
     let cm = HostMat::new(b, m, n, ldb, t, MatId::C);
     ctx.execute(&ts, vec![Mats { a: &am, b: None, c: &cm }])
+}
+
+// --- Non-blocking (serving-mode) entry points ------------------------
+//
+// Every routine has an `*_async` twin: same argument validation, same
+// taskization, but the call is ADMITTED to the resident runtime's
+// multi-tenant scheduler and returns a `JobHandle` immediately instead
+// of parking. The handle borrows the operand buffers for its lifetime
+// (`'buf`): the result is in `c` (or `b` for TRMM/TRSM) only after
+// `wait()` returns, and dropping an unwaited handle blocks until the
+// job completes. Jobs whose buffers alias an in-flight job's are
+// ordered by admission — issuing a chain of aliasing `*_async` calls
+// from one thread is therefore exactly as correct as the blocking
+// sequence, just pipelined.
+
+/// Non-blocking [`gemm`]: `C := alpha*op(A)*op(B) + beta*C`, admitted
+/// to the resident runtime; returns immediately with a [`JobHandle`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_async<'buf, T: Scalar>(
+    ctx: &Context,
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &'buf [T],
+    lda: usize,
+    b: &'buf [T],
+    ldb: usize,
+    beta: T,
+    c: &'buf mut [T],
+    ldc: usize,
+) -> Result<JobHandle<'buf>> {
+    check::check_gemm(ta, tb, m, n, k, lda, ldb, ldc)?;
+    let t = ctx.tile();
+    let d = GemmDesc { ta, tb, m, n, k, alpha: alpha.to_f64(), beta: beta.to_f64(), t };
+    let ts = taskize_gemm(&d);
+    let (ar, ac) = if ta == Trans::No { (m, k) } else { (k, m) };
+    let (br, bc) = if tb == Trans::No { (k, n) } else { (n, k) };
+    let am = HostMat::new_ro(a, ar, ac, lda, t, MatId::A);
+    let bm = HostMat::new_ro(b, br, bc, ldb, t, MatId::B);
+    let cm = HostMat::new(c, m, n, ldc, t, MatId::C);
+    ctx.execute_async(ts, vec![OwnedProblem { a: am, b: Some(bm), c: cm }])
+}
+
+/// Non-blocking [`syrk`].
+#[allow(clippy::too_many_arguments)]
+pub fn syrk_async<'buf, T: Scalar>(
+    ctx: &Context,
+    uplo: Uplo,
+    trans: Trans,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &'buf [T],
+    lda: usize,
+    beta: T,
+    c: &'buf mut [T],
+    ldc: usize,
+) -> Result<JobHandle<'buf>> {
+    check::check_syrk(trans, n, k, lda, None, ldc, "syrk")?;
+    let t = ctx.tile();
+    let d = SyrkDesc { uplo, trans, n, k, alpha: alpha.to_f64(), beta: beta.to_f64(), t };
+    let ts = taskize_syrk(&d);
+    let (ar, ac) = if trans == Trans::No { (n, k) } else { (k, n) };
+    let am = HostMat::new_ro(a, ar, ac, lda, t, MatId::A);
+    let cm = HostMat::new(c, n, n, ldc, t, MatId::C);
+    ctx.execute_async(ts, vec![OwnedProblem { a: am, b: None, c: cm }])
+}
+
+/// Non-blocking [`syr2k`].
+#[allow(clippy::too_many_arguments)]
+pub fn syr2k_async<'buf, T: Scalar>(
+    ctx: &Context,
+    uplo: Uplo,
+    trans: Trans,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &'buf [T],
+    lda: usize,
+    b: &'buf [T],
+    ldb: usize,
+    beta: T,
+    c: &'buf mut [T],
+    ldc: usize,
+) -> Result<JobHandle<'buf>> {
+    check::check_syrk(trans, n, k, lda, Some(ldb), ldc, "syr2k")?;
+    let t = ctx.tile();
+    let d = SyrkDesc { uplo, trans, n, k, alpha: alpha.to_f64(), beta: beta.to_f64(), t };
+    let ts = taskize_syr2k(&d);
+    let (ar, ac) = if trans == Trans::No { (n, k) } else { (k, n) };
+    let am = HostMat::new_ro(a, ar, ac, lda, t, MatId::A);
+    let bm = HostMat::new_ro(b, ar, ac, ldb, t, MatId::B);
+    let cm = HostMat::new(c, n, n, ldc, t, MatId::C);
+    ctx.execute_async(ts, vec![OwnedProblem { a: am, b: Some(bm), c: cm }])
+}
+
+/// Non-blocking [`symm`].
+#[allow(clippy::too_many_arguments)]
+pub fn symm_async<'buf, T: Scalar>(
+    ctx: &Context,
+    side: Side,
+    uplo: Uplo,
+    m: usize,
+    n: usize,
+    alpha: T,
+    a: &'buf [T],
+    lda: usize,
+    b: &'buf [T],
+    ldb: usize,
+    beta: T,
+    c: &'buf mut [T],
+    ldc: usize,
+) -> Result<JobHandle<'buf>> {
+    check::check_symm(side, m, n, lda, ldb, ldc)?;
+    let t = ctx.tile();
+    let d = SymmDesc { side, uplo, m, n, alpha: alpha.to_f64(), beta: beta.to_f64(), t };
+    let ts = taskize_symm(&d);
+    let na = if side == Side::Left { m } else { n };
+    let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
+    let bm = HostMat::new_ro(b, m, n, ldb, t, MatId::B);
+    let cm = HostMat::new(c, m, n, ldc, t, MatId::C);
+    ctx.execute_async(ts, vec![OwnedProblem { a: am, b: Some(bm), c: cm }])
+}
+
+/// Non-blocking [`trmm`] (in place in `b`; the handle borrows `b`
+/// mutably until completion).
+#[allow(clippy::too_many_arguments)]
+pub fn trmm_async<'buf, T: Scalar>(
+    ctx: &Context,
+    side: Side,
+    uplo: Uplo,
+    ta: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    alpha: T,
+    a: &'buf [T],
+    lda: usize,
+    b: &'buf mut [T],
+    ldb: usize,
+) -> Result<JobHandle<'buf>> {
+    check::check_trxm(side, m, n, lda, ldb, "trmm")?;
+    let t = ctx.tile();
+    let d = TriDesc { side, uplo, ta, diag, m, n, alpha: alpha.to_f64(), t };
+    let ts = taskize_trmm(&d);
+    let na = if side == Side::Left { m } else { n };
+    let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
+    let cm = HostMat::new(b, m, n, ldb, t, MatId::C);
+    ctx.execute_async(ts, vec![OwnedProblem { a: am, b: None, c: cm }])
+}
+
+/// Non-blocking [`trsm`] (X overwrites `b`; the handle borrows `b`
+/// mutably until completion).
+#[allow(clippy::too_many_arguments)]
+pub fn trsm_async<'buf, T: Scalar>(
+    ctx: &Context,
+    side: Side,
+    uplo: Uplo,
+    ta: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    alpha: T,
+    a: &'buf [T],
+    lda: usize,
+    b: &'buf mut [T],
+    ldb: usize,
+) -> Result<JobHandle<'buf>> {
+    check::check_trxm(side, m, n, lda, ldb, "trsm")?;
+    let t = ctx.tile();
+    let d = TriDesc { side, uplo, ta, diag, m, n, alpha: alpha.to_f64(), t };
+    let ts = taskize_trsm(&d);
+    let na = if side == Side::Left { m } else { n };
+    let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
+    let cm = HostMat::new(b, m, n, ldb, t, MatId::C);
+    ctx.execute_async(ts, vec![OwnedProblem { a: am, b: None, c: cm }])
+}
+
+/// Double-precision non-blocking GEMM.
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm_async<'buf>(
+    ctx: &Context,
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &'buf [f64],
+    lda: usize,
+    b: &'buf [f64],
+    ldb: usize,
+    beta: f64,
+    c: &'buf mut [f64],
+    ldc: usize,
+) -> Result<JobHandle<'buf>> {
+    gemm_async(ctx, ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
+}
+
+/// Single-precision non-blocking GEMM.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_async<'buf>(
+    ctx: &Context,
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &'buf [f32],
+    lda: usize,
+    b: &'buf [f32],
+    ldb: usize,
+    beta: f32,
+    c: &'buf mut [f32],
+    ldc: usize,
+) -> Result<JobHandle<'buf>> {
+    gemm_async(ctx, ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
 }
 
 // --- Batched entry points (crate::batch) -----------------------------
@@ -852,6 +1133,55 @@ mod tests {
         let b = vec![0.0f64; 16];
         let err = dgemm_batched(&ctx, &entries, &[&a, &a], &[&b], &mut []);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn gemm_async_smoke() {
+        let ctx = small_ctx();
+        let (m, n, k) = (64, 48, 40);
+        let mut p = Prng::new(21);
+        let mut a = vec![0.0; m * k];
+        let mut b = vec![0.0; k * n];
+        let mut c = vec![0.0; m * n];
+        p.fill_f64(&mut a, -1.0, 1.0);
+        p.fill_f64(&mut b, -1.0, 1.0);
+        let handle =
+            dgemm_async(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m)
+                .unwrap();
+        let rep = handle.wait().unwrap();
+        assert!(rep.transfers.total_host_reads() > 0);
+        let mut want = vec![0.0; m * n];
+        hostblas::gemm_blocked(Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut want, m);
+        let diff = c.iter().zip(&want).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+        assert!(diff < 1e-10, "{diff}");
+        assert_eq!(ctx.runtime_calls(), 1);
+    }
+
+    #[test]
+    fn async_requires_persistent_runtime() {
+        let ctx = small_ctx().with_persistent(false);
+        let a = vec![0.0; 32 * 32];
+        let b = vec![0.0; 32 * 32];
+        let mut c = vec![0.0; 32 * 32];
+        let err = dgemm_async(&ctx, Trans::No, Trans::No, 32, 32, 32, 1.0, &a, 32, &b, 32, 0.0, &mut c, 32);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn dropping_unwaited_handle_completes_the_job() {
+        let ctx = small_ctx();
+        let n = 64;
+        let a = vec![1.0; n * n];
+        let b = vec![1.0; n * n];
+        let mut c = vec![0.0; n * n];
+        {
+            let _h =
+                dgemm_async(&ctx, Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut c, n)
+                    .unwrap();
+            // dropped unwaited: must block until the workers are done
+        }
+        assert!(c.iter().all(|&x| x == n as f64), "drop is a completion barrier");
+        assert_eq!(ctx.jobs_in_flight(), 0);
     }
 
     #[test]

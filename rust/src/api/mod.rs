@@ -9,8 +9,11 @@ pub mod check;
 pub mod l3;
 pub mod types;
 
+pub use crate::serve::JobHandle;
 pub use l3::{
-    dgemm, dgemm_batched, dgemm_batched_strided, gemm, gemm_batched, gemm_batched_strided, sgemm,
-    sgemm_batched, sgemm_batched_strided, symm, syr2k, syrk, trmm, trsm, Context, GemmBatchEntry,
+    dgemm, dgemm_async, dgemm_batched, dgemm_batched_strided, gemm, gemm_async, gemm_batched,
+    gemm_batched_strided, sgemm, sgemm_async, sgemm_batched, sgemm_batched_strided, symm,
+    symm_async, syr2k, syr2k_async, syrk, syrk_async, trmm, trmm_async, trsm, trsm_async, Context,
+    GemmBatchEntry,
 };
 pub use types::{Diag, Dtype, Routine, Scalar, Side, Trans, Uplo};

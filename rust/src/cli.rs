@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //! - `run`   — execute a routine in the real engine and verify numerics
+//! - `serve` — multi-client stress mode over the resident runtime
 //! - `sim`   — simulate a routine on a paper machine under any policy
 //! - `gantt` — render the Fig. 1-style ASCII execution profile
 //! - `info`  — artifact + machine inventory
@@ -98,6 +99,8 @@ USAGE:
               [--json out.json]
   blasx run   [--routine dgemm] [--n 1024] [--t 256] [--devices 2] [--pjrt]
               [--kernel-threads 1] [--repeat 1] [--no-persistent]
+  blasx serve [--clients 4] [--jobs 8] [--n 512] [--t 256] [--devices 2]
+              [--kernel-threads 1] [--verify]
   blasx batch <workload.json> [--devices 2] [--t 256] [--pjrt] [--fused]
               [--kernel-threads 1] [--no-persistent]
   blasx info
@@ -115,7 +118,14 @@ workload script:
 With `--fused` a gemm-only script runs through `dgemm_batched`: every
 problem fused into ONE scheduler invocation (problem-namespaced tiles,
 work-centric quanta) instead of a per-call loop — the high-throughput
-path for many small problems."
+path for many small problems.
+
+`serve` is the multi-tenant stress mode: `--clients` threads share ONE
+persistent context and each issues `--jobs` DGEMMs concurrently — the
+runtime admits them as concurrent jobs (disjoint buffers overlap on
+the devices; the scheduler interleaves rounds under flop-weighted
+fairness) and reports jobs/sec plus the worker-idle fraction.
+`--verify` checks every client's last result against the host oracle."
 }
 
 /// Entry point used by main.rs; returns a process exit code.
@@ -125,6 +135,7 @@ pub fn dispatch(argv: &[String]) -> i32 {
         Some("sim") => cmd_sim(&args, false),
         Some("gantt") => cmd_sim(&args, true),
         Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
         Some("batch") => cmd_batch(&args),
         Some("info") => cmd_info(),
         _ => {
@@ -132,6 +143,102 @@ pub fn dispatch(argv: &[String]) -> i32 {
             2
         }
     }
+}
+
+/// Multi-client stress mode: N threads share one persistent context
+/// and hammer the multi-tenant scheduler with independent DGEMMs.
+fn cmd_serve(args: &Args) -> i32 {
+    use crate::api::{self, types::Trans};
+    use crate::util::prng::Prng;
+
+    let clients = args.get_usize("clients", 4).max(1);
+    let jobs = args.get_usize("jobs", 8).max(1);
+    let n = args.get_usize("n", 512);
+    let t = args.get_usize("t", 256);
+    let devices = args.get_usize("devices", 2);
+    let verify = args.get("verify").is_some();
+    let ctx = api::Context::new(devices)
+        .with_tile(t)
+        .with_kernel_threads(args.get_usize("kernel-threads", 1));
+
+    println!("SERVE clients={clients} jobs={jobs} DGEMM N={n} T={t} devices={devices}");
+
+    // Warm the runtime (boot + first-touch) outside the timed window.
+    {
+        let a = vec![1.0f64; n * n];
+        let b = vec![1.0f64; n * n];
+        let mut c = vec![0.0f64; n * n];
+        if let Err(e) =
+            api::dgemm(&ctx, Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut c, n)
+        {
+            eprintln!("serve: warm-up failed: {e}");
+            return 1;
+        }
+    }
+    let busy0: u64 = ctx.runtime_busy_nanos().iter().sum();
+    let start = std::time::Instant::now();
+    let failed = std::sync::atomic::AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        for client in 0..clients {
+            let ctx = ctx.clone();
+            let failed = &failed;
+            scope.spawn(move || {
+                let mut p = Prng::new(1000 + client as u64);
+                let mut a = vec![0.0f64; n * n];
+                let mut b = vec![0.0f64; n * n];
+                let mut c = vec![0.0f64; n * n];
+                p.fill_f64(&mut a, -1.0, 1.0);
+                p.fill_f64(&mut b, -1.0, 1.0);
+                ctx.invalidate_host(&a);
+                ctx.invalidate_host(&b);
+                for _ in 0..jobs {
+                    if let Err(e) = api::dgemm(
+                        &ctx, Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut c, n,
+                    ) {
+                        eprintln!("serve[client {client}]: {e}");
+                        failed.store(true, std::sync::atomic::Ordering::SeqCst);
+                        return;
+                    }
+                }
+                if verify {
+                    let mut want = vec![0.0f64; n * n];
+                    crate::hostblas::gemm_blocked(
+                        Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut want, n,
+                    );
+                    let diff = c
+                        .iter()
+                        .zip(&want)
+                        .map(|(x, y)| (x - y).abs())
+                        .fold(0.0f64, f64::max);
+                    if diff > 1e-9 {
+                        eprintln!("serve[client {client}]: verification failed ({diff})");
+                        failed.store(true, std::sync::atomic::Ordering::SeqCst);
+                    }
+                }
+            });
+        }
+    });
+    if failed.load(std::sync::atomic::Ordering::SeqCst) {
+        return 1;
+    }
+    let wall = start.elapsed().as_secs_f64();
+    let busy: u64 = ctx.runtime_busy_nanos().iter().sum();
+    let total_jobs = clients * jobs;
+    let busy_frac = (busy.saturating_sub(busy0) as f64 / 1e9) / (wall * devices as f64);
+    let flops = 2.0 * (n as f64).powi(3) * total_jobs as f64;
+    println!(
+        "  {total_jobs} jobs in {}: {:.1} jobs/s, {:.2} GFLOPS aggregate",
+        fmt_secs(wall),
+        total_jobs as f64 / wall,
+        gflops(flops, wall),
+    );
+    println!(
+        "  worker busy fraction {:.2} (idle {:.2}), runtime calls {}",
+        busy_frac.min(1.0),
+        (1.0 - busy_frac).max(0.0),
+        ctx.runtime_calls(),
+    );
+    0
 }
 
 /// Execute a JSON workload script through the real runtime: the
@@ -558,6 +665,16 @@ mod tests {
         let rc = dispatch(&sv(&["run", "--n", "96", "--t", "32", "--repeat", "2"]));
         assert_eq!(rc, 0);
         let rc = dispatch(&sv(&["run", "--n", "64", "--t", "32", "--no-persistent"]));
+        assert_eq!(rc, 0);
+    }
+
+    #[test]
+    fn serve_stress_mode_smoke() {
+        // 3 clients × 2 jobs of a tiny DGEMM through the multi-tenant
+        // scheduler, with oracle verification of each client's result.
+        let rc = dispatch(&sv(&[
+            "serve", "--clients", "3", "--jobs", "2", "--n", "64", "--t", "32", "--verify",
+        ]));
         assert_eq!(rc, 0);
     }
 

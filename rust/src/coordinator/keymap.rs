@@ -86,7 +86,8 @@ impl KeyMap {
         let g = self.grid_of(r.p, r.mat);
         let base = SPAN * (1 + 3 * r.p + Self::idx(r.mat));
         let addr = base + (g.col_origin(r.tj) * g.rows + g.row_origin(r.ti)) * self.esz;
-        TileKey { addr, mat: r.mat, ti: r.ti, tj: r.tj, ld: g.rows.max(1), epoch: 0 }
+        let (h, w) = g.tile_dims(r.ti, r.tj);
+        TileKey { addr, mat: r.mat, ti: r.ti, tj: r.tj, ld: g.rows.max(1), epoch: 0, h, w }
     }
 
     /// Cache-block bytes of any tile (uniform t×t padding — what the
@@ -178,6 +179,39 @@ mod tests {
         );
         let r = TileRef::new(MatId::B, 1, 2);
         assert_eq!(single.key(r), batch.key(r));
+    }
+
+    #[test]
+    fn per_mat_virtual_spans_stay_disjoint_without_role_in_equality() {
+        // `TileKey` equality no longer includes the operand role, so
+        // the sim's cross-operand safety rests entirely on the SPAN
+        // reservation: every operand's virtual addresses must stay
+        // inside its own span, and keys of different operands must
+        // never compare equal even at identical (ti, tj).
+        let m = KeyMap::for_batch(
+            vec![[TileGrid::new(100, 80, 32); 3], [TileGrid::new(64, 64, 32); 3]],
+            8,
+        );
+        for p in 0..2 {
+            for (idx, mat) in [MatId::A, MatId::B, MatId::C].into_iter().enumerate() {
+                let g = *m.grid_of(p, mat);
+                let base = SPAN * (1 + 3 * p + idx);
+                for (ti, tj) in g.iter() {
+                    let k = m.key(TileRef::for_problem(p, mat, ti, tj));
+                    assert!(
+                        k.addr >= base && k.addr < base + SPAN,
+                        "operand {mat:?} of problem {p} escaped its span"
+                    );
+                }
+            }
+            // Same coordinates across roles: unequal via addr alone.
+            let a = m.key(TileRef::for_problem(p, MatId::A, 0, 0));
+            let b = m.key(TileRef::for_problem(p, MatId::B, 0, 0));
+            let c = m.key(TileRef::for_problem(p, MatId::C, 0, 0));
+            assert_ne!(a, b);
+            assert_ne!(b, c);
+            assert_ne!(a, c);
+        }
     }
 
     #[test]

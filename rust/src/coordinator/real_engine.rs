@@ -63,6 +63,17 @@ pub struct Mats<'m, T> {
     pub c: &'m HostMat<T>,
 }
 
+/// Owned operand wraps of one problem — the async-submission analogue
+/// of [`Mats`]. The wraps (not the user buffers they point into) are
+/// owned by the job itself, so a non-blocking caller can return from
+/// the API while the job is still in flight; the user buffers' liveness
+/// is enforced by [`crate::serve::JobHandle`]'s borrow.
+pub(crate) struct OwnedProblem<T: Scalar> {
+    pub a: HostMat<T>,
+    pub b: Option<HostMat<T>>,
+    pub c: HostMat<T>,
+}
+
 impl<'m, T: Scalar> Mats<'m, T> {
     fn of(&self, id: MatId) -> &HostMat<T> {
         match id {
@@ -121,9 +132,11 @@ impl Arena {
 }
 
 /// The persistent half of the engine: arenas + caches + worker parking.
-/// Exactly one job executes over a core at a time (the one-shot entry
-/// points build a private core; the resident runtime serializes
-/// submissions).
+/// The one-shot entry points build a private core per call; the
+/// resident runtime keeps one core alive and interleaves rounds of
+/// EVERY live job over it (each device still runs one round at a time,
+/// which is what keeps per-arena pin pressure bounded to a single
+/// round).
 pub(crate) struct EngineCore {
     pub(crate) caches: Mutex<TileCacheSet>,
     arenas: Vec<Arena>,
@@ -173,12 +186,40 @@ impl EngineCore {
         *caches = TileCacheSet::new(&self.capacities, self.peers.clone(), self.alloc);
     }
 
-    /// Wake parked workers (new ready tasks, or the job finished). The
-    /// lock round-trip pairs with the sleeper's re-check under the same
-    /// lock, so wakeups cannot be missed.
-    fn notify_work(&self) {
+    /// Wake parked workers (new ready tasks, a job finished, or a new
+    /// job was admitted). The lock round-trip pairs with the sleeper's
+    /// re-check under the same lock, so wakeups cannot be missed.
+    ///
+    /// Lock discipline: callers must NOT hold the resident runtime's
+    /// job-table lock here (parked workers take it inside their
+    /// `still_idle` re-check — see [`EngineCore::park_for_work`]).
+    pub(crate) fn notify_work(&self) {
         let _g = self.work_mx.lock().unwrap_or_else(|e| e.into_inner());
         self.work_cv.notify_all();
+    }
+
+    /// Park the calling worker until [`EngineCore::notify_work`] (or
+    /// the timeout, used as a work-stealing re-probe backstop —
+    /// station-held surplus has no notify hook). `still_idle` is
+    /// re-evaluated under the park lock, pairing with the notifier's
+    /// lock round-trip so a wakeup between the caller's idle check and
+    /// the wait cannot be missed.
+    pub(crate) fn park_for_work(
+        &self,
+        timeout: Option<Duration>,
+        still_idle: impl FnOnce() -> bool,
+    ) {
+        let guard = self.work_mx.lock().unwrap_or_else(|e| e.into_inner());
+        if still_idle() {
+            match timeout {
+                Some(d) => {
+                    let _ = self.work_cv.wait_timeout(guard, d);
+                }
+                None => {
+                    let _ = self.work_cv.wait(guard);
+                }
+            }
+        }
     }
 }
 
@@ -248,8 +289,9 @@ impl TransferCounters {
 
 /// The per-call half of the engine: one submitted call (or fused
 /// batch). Borrows the task set and operand wraps for `'m`; the
-/// resident runtime erases that lifetime because the submitting caller
-/// parks until every worker is done with the job.
+/// resident runtime erases that lifetime — a blocking caller parks
+/// until the job retires, an async caller's borrows are pinned by its
+/// [`crate::serve::JobHandle`] (which waits on drop).
 pub(crate) struct JobState<'m, T: Scalar> {
     cfg: RunConfig,
     tasks: &'m [Task],
@@ -267,6 +309,9 @@ pub(crate) struct JobState<'m, T: Scalar> {
     steals: Vec<AtomicUsize>,
     tasks_done: Vec<AtomicUsize>,
     transfers: TransferCounters,
+    /// Total chain flops of the job (the multi-tenant scheduler's
+    /// fair-share weight; cached at construction).
+    total_flops: f64,
 }
 
 impl<'m, T: Scalar> JobState<'m, T> {
@@ -297,6 +342,7 @@ impl<'m, T: Scalar> JobState<'m, T> {
             steals: (0..n_devices).map(|_| AtomicUsize::new(0)).collect(),
             tasks_done: (0..n_devices).map(|_| AtomicUsize::new(0)).collect(),
             transfers: TransferCounters::new(),
+            total_flops: ts.total_flops(),
         };
         for &h in &ts.heads {
             state.queue.enqueue(h);
@@ -313,8 +359,11 @@ impl<'m, T: Scalar> JobState<'m, T> {
         }
     }
 
-    /// Assemble the call report after every worker has finished.
-    pub(crate) fn into_report(self, core: &EngineCore) -> Result<RealReport> {
+    /// Assemble the call report after every worker has finished. Takes
+    /// `&self` (the failure slot is drained, so call it once): the
+    /// resident runtime's waiters extract the report through a shared
+    /// `Arc` without unwrapping it.
+    pub(crate) fn report(&self, core: &EngineCore) -> Result<RealReport> {
         if let Some(e) = self.failure.lock().unwrap().take() {
             return Err(e);
         }
@@ -329,6 +378,24 @@ impl<'m, T: Scalar> JobState<'m, T> {
             steals: self.steals.iter().map(|a| a.load(Ordering::SeqCst)).collect(),
             transfers: self.transfers.snapshot(),
         })
+    }
+
+    /// The operand sets of this job (admission derives conflict byte
+    /// ranges and stamps invalidation epochs through these).
+    pub(crate) fn problems(&self) -> &[Mats<'m, T>] {
+        &self.mats
+    }
+
+    /// Total chain flops — the fair-share weight under multi-tenant
+    /// interleaving.
+    pub(crate) fn weight(&self) -> f64 {
+        self.total_flops
+    }
+
+    /// Every task executed (a `Progress` round may have finished the
+    /// job without the worker observing `Round::Finished`).
+    pub(crate) fn done(&self) -> bool {
+        self.remaining.load(Ordering::SeqCst) == 0
     }
 }
 
@@ -381,7 +448,7 @@ pub fn run_real_batch<'m, T: Scalar>(
             scope.spawn(move || worker_loop(dev, core, job));
         }
     });
-    job.into_report(&core)
+    job.report(&core)
 }
 
 /// Observability output of a real run (numerics land in the C matrix).
@@ -403,102 +470,154 @@ pub struct RealReport {
 
 /// How long an idle worker sleeps before re-probing for stealable
 /// surplus in sibling stations (the condvar covers queue arrivals and
-/// completion exactly; station-level surplus has no notify hook).
-const PARK_TIMEOUT: Duration = Duration::from_millis(1);
+/// completion exactly; station-level surplus has no notify hook). The
+/// resident runtime's multi-job loop uses the same backstop.
+pub(crate) const PARK_TIMEOUT: Duration = Duration::from_millis(1);
 
-pub(crate) fn worker_loop<T: Scalar>(dev: usize, core: &EngineCore, job: &JobState<'_, T>) {
+/// Outcome of one scheduler round (refill → bind → execute → sync) of
+/// one job on one device. The one-shot [`worker_loop`] reacts by
+/// parking or exiting; the resident runtime's multi-job worker uses it
+/// to interleave rounds across every live job and to charge fair-share
+/// flops.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Round {
+    /// Executed at least one task; `flops` is what the fair-share
+    /// ledger is charged.
+    Progress { flops: f64 },
+    /// No ready task for this device right now (the job is still live:
+    /// tasks are in flight elsewhere or waiting on chain predecessors).
+    Idle,
+    /// Every task of the job has completed.
+    Finished,
+    /// The job is poisoned (kernel error or contained panic).
+    Failed,
+}
+
+/// One scheduler round of `job` on `dev`: refill the reservation
+/// station from the job's queue (stealing intra-job surplus if dry),
+/// bind up to `n_streams` tasks, execute them, and release the round's
+/// readers at the sync point. Never parks — scheduling between rounds
+/// (and between jobs) belongs to the caller.
+pub(crate) fn worker_round<T: Scalar>(
+    dev: usize,
+    core: &EngineCore,
+    job: &JobState<'_, T>,
+) -> Round {
     let n_streams = job.cfg.n_streams;
-    loop {
-        if job.failure.lock().unwrap().is_some() {
-            core.notify_work();
-            return;
+    if job.failure.lock().unwrap().is_some() {
+        core.notify_work();
+        return Round::Failed;
+    }
+    // ---- refill the reservation station (lines 11–15)
+    let mut bound: Vec<usize> = Vec::new();
+    {
+        let mut rs = job.stations[dev].lock().unwrap();
+        while !rs.is_full() {
+            match job.queue.dequeue() {
+                Some(t) => {
+                    let caches = core.lock_caches();
+                    let p = task_priority(&job.tasks[t], dev, &caches, |r| job.mats[r.p].key(r));
+                    rs.insert(t, p);
+                }
+                None => break,
+            }
         }
-        // ---- refill the reservation station (lines 11–15)
-        let mut bound: Vec<usize> = Vec::new();
+        if rs.is_empty() && job.cfg.work_stealing {
+            drop(rs);
+            // steal from the fullest victim (within this job — tasks
+            // of other live jobs are reached by the multi-job loop,
+            // not by cross-job steals)
+            let victim = (0..job.stations.len())
+                .filter(|&v| v != dev)
+                .max_by_key(|&v| job.stations[v].lock().unwrap().len());
+            if let Some(v) = victim {
+                if let Some(slot) = job.stations[v].lock().unwrap().steal_worst() {
+                    job.stations[dev].lock().unwrap().insert(slot.task, slot.priority);
+                    job.steals[dev].fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            rs = job.stations[dev].lock().unwrap();
+        }
+        // refresh priorities after arrivals, then bind top tasks
         {
-            let mut rs = job.stations[dev].lock().unwrap();
-            while !rs.is_full() {
-                match job.queue.dequeue() {
-                    Some(t) => {
-                        let caches = core.lock_caches();
-                        let p =
-                            task_priority(&job.tasks[t], dev, &caches, |r| job.mats[r.p].key(r));
-                        rs.insert(t, p);
-                    }
-                    None => break,
-                }
+            let caches = core.lock_caches();
+            rs.refresh(|t| task_priority(&job.tasks[t], dev, &caches, |r| job.mats[r.p].key(r)));
+        }
+        for _ in 0..n_streams {
+            match rs.take_best() {
+                Some(slot) => bound.push(slot.task),
+                None => break,
             }
-            if rs.is_empty() && job.cfg.work_stealing {
-                drop(rs);
-                // steal from the fullest victim
-                let victim = (0..job.stations.len())
-                    .filter(|&v| v != dev)
-                    .max_by_key(|&v| job.stations[v].lock().unwrap().len());
-                if let Some(v) = victim {
-                    if let Some(slot) = job.stations[v].lock().unwrap().steal_worst() {
-                        job.stations[dev].lock().unwrap().insert(slot.task, slot.priority);
-                        job.steals[dev].fetch_add(1, Ordering::Relaxed);
-                    }
-                }
-                rs = job.stations[dev].lock().unwrap();
+        }
+    }
+
+    if bound.is_empty() {
+        if job.remaining.load(Ordering::SeqCst) == 0 {
+            core.notify_work();
+            return Round::Finished;
+        }
+        return Round::Idle;
+    }
+
+    // ---- the round: solve the bound tasks (lines 18–25)
+    let mut flops = 0.0;
+    let mut releases: Vec<TileKey> = Vec::new();
+    for tid in bound {
+        if let Err(e) = run_task(dev, core, job, tid, &mut releases) {
+            job.fail(e);
+            // Release what this round had pinned (the failed task's C
+            // block stays pinned — the runtime purges after a failed
+            // job retires).
+            let mut caches = core.lock_caches();
+            for key in releases.drain(..) {
+                caches.release(dev, &key);
             }
-            // refresh priorities after arrivals, then bind top tasks
-            {
-                let caches = core.lock_caches();
-                rs.refresh(|t| {
-                    task_priority(&job.tasks[t], dev, &caches, |r| job.mats[r.p].key(r))
+            drop(caches);
+            core.notify_work();
+            return Round::Failed;
+        }
+        flops += job.tasks[tid].flops;
+        job.tasks_done[dev].fetch_add(1, Ordering::Relaxed);
+        if job.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // last task: wake parked siblings so they observe
+            // completion and exit promptly
+            core.notify_work();
+        }
+        if let Some(succ) = job.tasks[tid].successor {
+            if job.deps[succ].fetch_sub(1, Ordering::SeqCst) == 1 {
+                job.queue.enqueue(succ);
+                core.notify_work();
+            }
+        }
+    }
+    // ---- sync point (line 16/17): release the round's readers
+    let mut caches = core.lock_caches();
+    for key in releases {
+        caches.release(dev, &key);
+    }
+    drop(caches);
+    Round::Progress { flops }
+}
+
+/// Drive one job to completion on `dev` — the one-shot engine's worker
+/// body (the resident runtime interleaves [`worker_round`]s across
+/// jobs instead).
+pub(crate) fn worker_loop<T: Scalar>(dev: usize, core: &EngineCore, job: &JobState<'_, T>) {
+    loop {
+        match worker_round(dev, core, job) {
+            Round::Progress { .. } => {}
+            Round::Finished | Round::Failed => return,
+            Round::Idle => {
+                // Park until new tasks enqueue or the job completes.
+                // The re-check under the lock pairs with
+                // `notify_work`'s lock round-trip, so an enqueue
+                // between our check and the wait cannot be missed; the
+                // timeout is a backstop that lets us periodically
+                // retry stealing station-held surplus.
+                core.park_for_work(Some(PARK_TIMEOUT), || {
+                    job.queue.is_empty() && job.remaining.load(Ordering::SeqCst) != 0
                 });
             }
-            for _ in 0..n_streams {
-                match rs.take_best() {
-                    Some(slot) => bound.push(slot.task),
-                    None => break,
-                }
-            }
-        }
-
-        if bound.is_empty() {
-            if job.remaining.load(Ordering::SeqCst) == 0 {
-                core.notify_work();
-                return;
-            }
-            // Park until new tasks enqueue or the job completes. The
-            // re-check under the lock pairs with `notify_work`'s lock
-            // round-trip, so an enqueue between our check and the wait
-            // cannot be missed; the timeout is a backstop that lets us
-            // periodically retry stealing station-held surplus.
-            let guard = core.work_mx.lock().unwrap_or_else(|e| e.into_inner());
-            if job.queue.is_empty() && job.remaining.load(Ordering::SeqCst) != 0 {
-                let _ = core.work_cv.wait_timeout(guard, PARK_TIMEOUT).unwrap();
-            }
-            continue;
-        }
-
-        // ---- the round: solve the bound tasks (lines 18–25)
-        let mut releases: Vec<TileKey> = Vec::new();
-        for tid in bound {
-            if let Err(e) = run_task(dev, core, job, tid, &mut releases) {
-                job.fail(e);
-                core.notify_work();
-                return;
-            }
-            job.tasks_done[dev].fetch_add(1, Ordering::Relaxed);
-            if job.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
-                // last task: wake parked siblings so they observe
-                // completion and exit promptly
-                core.notify_work();
-            }
-            if let Some(succ) = job.tasks[tid].successor {
-                if job.deps[succ].fetch_sub(1, Ordering::SeqCst) == 1 {
-                    job.queue.enqueue(succ);
-                    core.notify_work();
-                }
-            }
-        }
-        // ---- sync point (line 16/17): release the round's readers
-        let mut caches = core.lock_caches();
-        for key in releases {
-            caches.release(dev, &key);
         }
     }
 }
@@ -656,16 +775,24 @@ fn acquire_input<T: Scalar>(
                 }
             }
             mat.read_tile(tile.ti, tile.tj, dst, t);
-            // Identity-pad diagonal A tiles: exact for every consumer
-            // (zero rows/cols elsewhere annihilate the pad 1s) and
-            // required by the TRSM diagonal solve.
-            if tile.mat != MatId::C && tile.ti == tile.tj {
-                let (h, _) = mat.grid.tile_dims(tile.ti, tile.tj);
-                for j in h..t {
-                    dst[j * t + j] = T::one();
-                }
-            }
             job.transfers.count_host(tile.mat);
+        }
+    }
+    // Identity-pad diagonal input tiles of the A/B operands: exact for
+    // every consumer (zero rows/cols elsewhere annihilate the pad 1s)
+    // and required by the TRSM/TRMM diagonal solves. Applied on EVERY
+    // acquire, not just host loads: cache keys ignore the operand role,
+    // so an L1/L2 hit may serve a tile that was cached through a role
+    // (a C chain read) that left zeros on the padded diagonal. The
+    // write is idempotent, runs under the cache lock, and is harmless
+    // to concurrent same-role consumers (they want the same 1s).
+    if tile.mat != MatId::C && tile.ti == tile.tj {
+        let (h, _) = mat.grid.tile_dims(tile.ti, tile.tj);
+        if h < t {
+            let dst = core.arenas[dev].slice::<T>(acq.offset, tile_elems);
+            for j in h..t {
+                dst[j * t + j] = T::one();
+            }
         }
     }
     Ok(acq.offset)

@@ -61,6 +61,22 @@
 //! looped single-call reference on the same backend. See
 //! `benches/batch_throughput.rs` for the throughput comparison and
 //! `examples/batched_inference.rs` for an ANN-serving walkthrough.
+//!
+//! ## Serving mode (multi-tenant scheduling)
+//!
+//! Batching fuses problems the caller already holds in one hand;
+//! *serving* is the case where independent clients issue calls
+//! concurrently. The resident runtime schedules every in-flight call
+//! as a first-class job (the [`serve`] subsystem): admission computes
+//! byte-range conflict edges (aliasing calls run in submission order,
+//! bit-for-bit equal to serial; disjoint calls overlap on the
+//! devices), the device workers interleave scheduler rounds across all
+//! runnable jobs under flop-weighted fairness, and every blocking
+//! routine gains a non-blocking `*_async` twin returning a
+//! [`serve::JobHandle`]. `tests/serve_concurrent.rs` holds the
+//! concurrency guarantees; `benches/serve_throughput.rs` measures
+//! jobs/sec and worker-idle fraction versus client count; `blasx serve
+//! --clients N` is the CLI stress mode.
 
 pub mod api;
 pub mod baselines;
@@ -74,6 +90,7 @@ pub mod hostblas;
 pub mod mem;
 pub mod queue;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod sched;
 pub mod task;

@@ -3,7 +3,9 @@
 //!
 //! - [`service`]: long-lived per-device worker threads + cross-call
 //!   tile-cache reuse with epoch invalidation (the warm engine behind
-//!   [`crate::api::Context`])
+//!   [`crate::api::Context`]), fronted by the multi-tenant job
+//!   scheduler of [`crate::serve`] — concurrent calls interleave on
+//!   the resident workers
 //! - [`pool`]: the process-wide kernel thread pool `gemm_mt` fans tile
 //!   kernels across (pack-scratch thread-locals survive between calls)
 //! - [`artifact`]: manifest + artifact discovery

@@ -1,5 +1,7 @@
 //! The resident device runtime: long-lived worker threads, persistent
-//! arenas/tile-caches, and cross-call invalidation epochs.
+//! arenas/tile-caches, cross-call invalidation epochs — and, since the
+//! serve PR, a **concurrent multi-tenant job scheduler** in front of
+//! them.
 //!
 //! BLASX's headline wins come from a *persistent* dynamic runtime whose
 //! tile cache amortizes transfers across task progression. Tearing the
@@ -17,126 +19,237 @@
 //!   [`crate::api::Context`] spawns one worker thread per virtual
 //!   device and allocates the arenas. Clones of a `Context` share the
 //!   booted runtime.
-//! - **Warm calls** — [`Runtime::submit`] publishes a type-erased job
-//!   to the resident workers over the dispatch slot (a seq-numbered
-//!   mutex/condvar channel) and parks the caller until every worker
-//!   has finished the job. Submissions serialize: the engine runs one
-//!   call at a time, callers queue on the submit mutex.
+//! - **Calls** — every call (blocking or `*_async`) is **admitted** as
+//!   a *job* into the [`crate::serve::admission::JobTable`]: its
+//!   operand byte ranges are compared against every live job's to wire
+//!   dependency edges (aliasing calls run in admission order,
+//!   bit-for-bit equal to serial execution; disjoint calls overlap),
+//!   its input epochs are resolved and output epochs bumped under the
+//!   same lock, and the resident workers then pull scheduler rounds
+//!   across ALL runnable jobs under flop-weighted fair interleaving
+//!   (see [`crate::serve::fairness`]). Blocking calls are
+//!   submit-then-wait; async calls return a
+//!   [`crate::serve::JobHandle`].
 //! - **Invalidation** — every output matrix bumps an *epoch* for its
-//!   byte range in the [`EpochRegistry`] at submit time; input wraps
-//!   resolve their epoch from the registry. Epochs are folded into
-//!   [`crate::tile::TileKey`], so tiles cached from a buffer that has
-//!   since been rewritten become unreachable (and age out of the ALRU)
-//!   instead of serving stale bytes. Users who mutate an *input*
+//!   byte range in the [`EpochRegistry`] at admission time; input
+//!   wraps resolve their epoch from the registry. Epochs are folded
+//!   into [`crate::tile::TileKey`], so tiles cached from a buffer that
+//!   has since been rewritten become unreachable (and age out of the
+//!   ALRU) instead of serving stale bytes. Users who mutate an *input*
 //!   buffer between calls must declare it via
 //!   [`crate::api::Context::invalidate_host`] — the library cannot
 //!   observe foreign writes to host memory.
 //! - **Shutdown** — dropping the last handle (the last `Context`
-//!   clone) signals the workers and joins them.
+//!   clone, plus any outstanding `JobHandle`s, which keep the runtime
+//!   alive) signals the workers and joins them.
 //!
-//! Tile-size changes between calls purge the cache wholesale: block
-//! geometry participates in tile addressing, so cross-size reuse would
-//! be incoherent. A failed job also purges (readers may have been left
-//! pinned on the abort path).
+//! Tile-size changes between calls are admitted as *barrier* jobs: the
+//! switching job waits for every live job, later jobs wait for it, and
+//! the caches are purged wholesale at the quiescent point in between
+//! (block geometry participates in tile addressing, so cross-size
+//! reuse would be incoherent). A failed job also schedules a purge
+//! (readers may have been left pinned on the abort path), executed at
+//! the next globally-quiescent point.
 
 use crate::api::Scalar;
 use crate::coordinator::config::RunConfig;
 use crate::coordinator::real_engine::{
-    block_bytes, worker_loop, EngineCore, JobState, Mats, RealReport,
+    block_bytes, worker_round, EngineCore, JobState, Mats, OwnedProblem, RealReport, Round,
+    PARK_TIMEOUT,
 };
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::mem::AllocStrategy;
+use crate::serve::admission::{JobCtl, JobSpan, JobTable};
+use crate::serve::{fairness, DeviceJob};
 use crate::task::TaskSet;
+use std::collections::{BTreeMap, HashSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Host-buffer invalidation generations, keyed by byte range.
 ///
-/// `bump` opens a fresh generation for a range (outputs at submit
+/// `bump` opens a fresh generation for a range (outputs at admission
 /// time, or user-declared mutations); `epoch_of` resolves the newest
-/// generation overlapping a range (inputs at submit time). Ranges
-/// fully covered by a newer bump are compacted away, so the registry
-/// stays proportional to the number of *distinct* live output buffers
-/// rather than the call count.
+/// generation overlapping a range (inputs at admission time).
+///
+/// The store is an ordered map of **disjoint** intervals (an interval
+/// tree degenerate-cased on non-overlap): each bump removes covered
+/// intervals and trims partial overlaps, so the registry stays
+/// proportional to the number of distinct *live* buffer-range
+/// fragments rather than the call count. A serving daemon cycling
+/// through millions of distinct short-lived output buffers would still
+/// accrete fragments, so past [`MAX_EXACT_RANGES`] the registry falls
+/// back to coarse pages: intervals are rounded out to
+/// [`COARSE_PAGE`]-aligned runs and merged keeping the **max** epoch.
+/// That direction is conservative — `epoch_of` may report a *newer*
+/// generation than the exact answer, costing a spurious tile re-fetch,
+/// never a stale hit.
 #[derive(Default)]
 struct EpochRegistry {
     counter: u64,
-    ranges: Vec<(usize, usize, u64)>,
+    /// Disjoint intervals: start → (end, epoch), ordered by start.
+    ranges: BTreeMap<usize, (usize, u64)>,
 }
+
+/// Interval count that triggers coarse-page compaction.
+const MAX_EXACT_RANGES: usize = 4096;
+/// Compaction granularity (64 KiB — allocators recycle small buffers
+/// within arenas of roughly this locality).
+const COARSE_PAGE: usize = 1 << 16;
 
 impl EpochRegistry {
     fn bump(&mut self, lo: usize, hi: usize) -> u64 {
         self.counter += 1;
         if lo < hi {
-            self.ranges.retain(|&(l, h, _)| !(l >= lo && h <= hi));
-            self.ranges.push((lo, hi, self.counter));
+            self.insert(lo, hi, self.counter);
+            if self.ranges.len() > MAX_EXACT_RANGES {
+                self.compact();
+            }
         }
         self.counter
     }
 
-    fn epoch_of(&self, lo: usize, hi: usize) -> u64 {
-        self.ranges
-            .iter()
-            .filter(|&&(l, h, _)| l < hi && h > lo)
-            .map(|&(_, _, e)| e)
-            .max()
-            .unwrap_or(0)
+    /// Insert `[lo, hi) → e`, trimming/evicting whatever it overlaps
+    /// (the map stays disjoint).
+    fn insert(&mut self, lo: usize, hi: usize, e: u64) {
+        // Only the closest interval starting at or before `lo` can
+        // overlap from the left; everything else overlapping starts in
+        // [lo, hi).
+        let first = self
+            .ranges
+            .range(..=lo)
+            .next_back()
+            .filter(|&(_, &(h, _))| h > lo)
+            .map(|(&l, _)| l)
+            .unwrap_or(lo);
+        let hit: Vec<usize> = self.ranges.range(first..hi).map(|(&l, _)| l).collect();
+        for l in hit {
+            let (h, ep) = self.ranges.remove(&l).expect("interval vanished");
+            if l < lo {
+                self.ranges.insert(l, (lo, ep));
+            }
+            if h > hi {
+                self.ranges.insert(hi, (h, ep));
+            }
+        }
+        self.ranges.insert(lo, (hi, e));
     }
+
+    fn epoch_of(&self, lo: usize, hi: usize) -> u64 {
+        if lo >= hi {
+            return 0;
+        }
+        let first = self
+            .ranges
+            .range(..=lo)
+            .next_back()
+            .filter(|&(_, &(h, _))| h > lo)
+            .map(|(&l, _)| l)
+            .unwrap_or(lo);
+        self.ranges.range(first..hi).map(|(_, &(_, e))| e).max().unwrap_or(0)
+    }
+
+    fn len(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Coarse-page fallback: round intervals out to `page`-aligned
+    /// runs and merge overlapping/adjacent ones, keeping the max
+    /// epoch. Doubles the page until the map is comfortably small.
+    fn compact(&mut self) {
+        let mut page = COARSE_PAGE;
+        loop {
+            self.ranges = Self::coalesce(&self.ranges, page);
+            if self.ranges.len() <= MAX_EXACT_RANGES / 2 || page >= usize::MAX / 8 {
+                return;
+            }
+            page = page.saturating_mul(4);
+        }
+    }
+
+    fn coalesce(
+        ranges: &BTreeMap<usize, (usize, u64)>,
+        page: usize,
+    ) -> BTreeMap<usize, (usize, u64)> {
+        let mut merged: Vec<(usize, usize, u64)> = Vec::new();
+        for (&l, &(h, e)) in ranges {
+            let cl = l - l % page;
+            let ch = h.div_ceil(page).saturating_mul(page).max(h);
+            match merged.last_mut() {
+                // Half-open runs: touching counts as mergeable.
+                Some(last) if cl <= last.1 => {
+                    last.1 = last.1.max(ch);
+                    last.2 = last.2.max(e);
+                }
+                _ => merged.push((cl, ch, e)),
+            }
+        }
+        merged.into_iter().map(|(l, h, e)| (l, (h, e))).collect()
+    }
+}
+
+/// Owned backing of an async submission: the task set and operand
+/// wraps live inside the job itself (a blocking submit's caller frame
+/// owns them instead). Boxed for stable addresses — `JobState` holds
+/// references into both.
+struct JobBacking<T: Scalar> {
+    ts: Box<TaskSet>,
+    problems: Box<[OwnedProblem<T>]>,
 }
 
 /// A submitted call, erased over its scalar type so one worker fleet
 /// serves f32 and f64 jobs alike.
-trait DeviceJob: Send + Sync {
-    fn run_device(&self, dev: usize, core: &EngineCore);
-    fn poison(&self, msg: String);
-}
-
 struct ErasedJob<T: Scalar> {
+    /// Declared (and therefore dropped) BEFORE `_backing`: the state
+    /// holds references into it.
     state: JobState<'static, T>,
+    /// Keep-alive for async submissions; `None` for blocking ones.
+    _backing: Option<JobBacking<T>>,
 }
 
 impl<T: Scalar> DeviceJob for ErasedJob<T> {
-    fn run_device(&self, dev: usize, core: &EngineCore) {
-        worker_loop(dev, core, &self.state);
+    fn run_round(&self, dev: usize, core: &EngineCore) -> Round {
+        worker_round(dev, core, &self.state)
     }
 
     fn poison(&self, msg: String) {
-        self.state.fail(crate::error::Error::Internal(msg));
+        self.state.fail(Error::Internal(msg));
     }
-}
 
-/// The job dispatch slot: a one-deep seq-numbered channel from the
-/// submitting caller to every resident worker.
-struct Slot {
-    seq: u64,
-    job: Option<Arc<dyn DeviceJob>>,
-    /// Workers still executing the current job.
-    left: Arc<AtomicUsize>,
+    fn report(&self, core: &EngineCore) -> Result<RealReport> {
+        self.state.report(core)
+    }
+
+    fn done(&self) -> bool {
+        self.state.done()
+    }
 }
 
 struct Inner {
     core: EngineCore,
     n_devices: usize,
     arena_bytes: usize,
-    /// One call at a time through the engine.
-    submit_mx: Mutex<()>,
-    slot: Mutex<Slot>,
-    slot_cv: Condvar,
-    done_mx: Mutex<()>,
-    done_cv: Condvar,
+    /// The multi-job slot table: the single shared scheduler state.
+    /// Lock order: `table` → `caches` (purges) and `table` → `epochs`;
+    /// never call [`EngineCore::notify_work`] while holding it.
+    table: Mutex<JobTable>,
     epochs: Mutex<EpochRegistry>,
-    /// Tile size of the cached generation (None = cold).
-    last_t: Mutex<Option<usize>>,
     shutdown: AtomicBool,
-    /// Calls served since boot (observability).
+    /// Jobs served since boot (observability).
     calls: AtomicUsize,
+    /// Per-device nanoseconds spent inside scheduler rounds — the
+    /// worker-idle fraction of `benches/serve_throughput.rs` falls out
+    /// of this against wall time.
+    busy_nanos: Vec<AtomicU64>,
 }
 
 /// The resident device runtime (see module docs). Cloneably shared via
-/// `Arc` by [`crate::api::Context`]; dropping the last handle shuts
-/// the workers down.
+/// `Arc` by [`crate::api::Context`] and by in-flight
+/// [`crate::serve::JobHandle`]s; dropping the last handle shuts the
+/// workers down.
 pub struct Runtime {
     inner: Arc<Inner>,
     handles: Vec<JoinHandle<()>>,
@@ -160,15 +273,11 @@ impl Runtime {
             core: EngineCore::new(n_devices, arena_bytes, alloc),
             n_devices,
             arena_bytes,
-            submit_mx: Mutex::new(()),
-            slot: Mutex::new(Slot { seq: 0, job: None, left: Arc::new(AtomicUsize::new(0)) }),
-            slot_cv: Condvar::new(),
-            done_mx: Mutex::new(()),
-            done_cv: Condvar::new(),
+            table: Mutex::new(JobTable::new()),
             epochs: Mutex::new(EpochRegistry::default()),
-            last_t: Mutex::new(None),
             shutdown: AtomicBool::new(false),
             calls: AtomicUsize::new(0),
+            busy_nanos: (0..n_devices).map(|_| AtomicU64::new(0)).collect(),
         });
         let handles = (0..n_devices)
             .map(|dev| {
@@ -190,9 +299,26 @@ impl Runtime {
         self.inner.arena_bytes
     }
 
-    /// Calls served since boot.
+    /// Jobs served since boot.
     pub fn calls(&self) -> usize {
         self.inner.calls.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative per-device busy time (nanoseconds inside scheduler
+    /// rounds) since boot. Compare against wall time × device count
+    /// for the worker-idle fraction.
+    pub fn busy_nanos(&self) -> Vec<u64> {
+        self.inner.busy_nanos.iter().map(|a| a.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Live jobs currently admitted (in flight or queued behind
+    /// dependencies).
+    pub fn jobs_in_flight(&self) -> usize {
+        self.inner.table.lock().unwrap_or_else(|e| e.into_inner()).jobs.len()
+    }
+
+    pub(crate) fn core(&self) -> &EngineCore {
+        &self.inner.core
     }
 
     /// Open a new invalidation generation for `[lo, hi)`: tiles cached
@@ -202,138 +328,243 @@ impl Runtime {
         self.inner.epochs.lock().unwrap_or_else(|e| e.into_inner()).bump(lo, hi);
     }
 
+    fn assert_arena_floor<T: Scalar>(&self, cfg: &RunConfig) {
+        // Checked BEFORE any lock: panicking while holding the table
+        // lock would poison it for every Context clone.
+        assert!(
+            self.inner.arena_bytes >= 8 * block_bytes::<T>(cfg.t),
+            "arena must hold at least 8 tiles (working set of a round)"
+        );
+    }
+
+    /// Admit a constructed job: wire dependency edges, stamp epochs
+    /// (same lock, same order), insert into the table, wake workers.
+    fn admit<T: Scalar>(&self, cfg: &RunConfig, job: &Arc<ErasedJob<T>>) -> Arc<JobCtl> {
+        let mut span = JobSpan::default();
+        for m in job.state.problems() {
+            for hm in [Some(m.a), m.b].into_iter().flatten() {
+                span.ins.push(hm.byte_range());
+            }
+            span.outs.push(m.c.byte_range());
+        }
+        let weight = job.state.weight();
+        let ctl = {
+            let mut table = self.inner.table.lock().unwrap_or_else(|e| e.into_inner());
+            // Epoch stamping under the admission lock: inputs resolve
+            // against the current generation map, then every output
+            // range opens a fresh one. Epoch order == dependency-edge
+            // order, which is what keeps aliasing concurrent jobs
+            // bit-for-bit equal to serial execution.
+            {
+                let mut reg = self.inner.epochs.lock().unwrap_or_else(|e| e.into_inner());
+                for m in job.state.problems() {
+                    for hm in [Some(m.a), m.b].into_iter().flatten() {
+                        let (lo, hi) = hm.byte_range();
+                        hm.set_epoch(reg.epoch_of(lo, hi));
+                    }
+                }
+                for m in job.state.problems() {
+                    let (lo, hi) = m.c.byte_range();
+                    m.c.set_epoch(reg.bump(lo, hi));
+                }
+            }
+            let erased: Arc<dyn DeviceJob> = job.clone();
+            let (ctl, purge_now) = table.admit(erased, span, weight, cfg.t);
+            if purge_now {
+                // Geometry switch into a quiescent table: old-size
+                // blocks must be unreachable before this job runs.
+                self.inner.core.purge();
+            }
+            ctl
+        };
+        self.inner.core.notify_work();
+        ctl
+    }
+
     /// Execute a task set over the resident engine; parks the caller
-    /// until the job completes. See the module docs for the coherence
-    /// contract.
+    /// until the job retires (submit-then-wait). See the module docs
+    /// for the coherence contract.
     pub(crate) fn submit<T: Scalar>(
         &self,
         cfg: &RunConfig,
         ts: &TaskSet,
         problems: Vec<Mats<'_, T>>,
     ) -> Result<RealReport> {
-        // Precondition check BEFORE taking the submit lock: panicking
-        // while holding it would poison the mutex and brick every
-        // Context clone with PoisonError instead of this diagnostic.
-        assert!(
-            self.inner.arena_bytes >= 8 * block_bytes::<T>(cfg.t),
-            "arena must hold at least 8 tiles (working set of a round)"
-        );
-        let _call = self.inner.submit_mx.lock().unwrap_or_else(|e| e.into_inner());
-        // Tile-size switch: block geometry changed, cached tiles of the
-        // old size must not be reachable at the new one.
-        {
-            let mut last = self.inner.last_t.lock().unwrap_or_else(|e| e.into_inner());
-            if *last != Some(cfg.t) {
-                if last.is_some() {
-                    self.inner.core.purge();
-                }
-                *last = Some(cfg.t);
-            }
-        }
-        // Stamp invalidation epochs: inputs resolve against the current
-        // generation map, then every output range opens a fresh one (so
-        // this call's C tiles can never collide with a stale cached
-        // copy, and the *next* call reading this buffer sees new keys).
-        {
-            let mut reg = self.inner.epochs.lock().unwrap_or_else(|e| e.into_inner());
-            for m in &problems {
-                for hm in [Some(m.a), m.b].into_iter().flatten() {
-                    let (lo, hi) = hm.byte_range();
-                    hm.set_epoch(reg.epoch_of(lo, hi));
-                }
-            }
-            for m in &problems {
-                let (lo, hi) = m.c.byte_range();
-                m.c.set_epoch(reg.bump(lo, hi));
-            }
-        }
-
+        self.assert_arena_floor::<T>(cfg);
         let state = JobState::new(cfg, ts, problems, self.inner.n_devices)?;
         // SAFETY: the lifetime is erased only for the trait object's
         // benefit. Every borrow inside `state` (task set, operand
         // wraps) outlives this function call, and this function does
-        // not return until `left` reaches zero — which each worker
-        // signals only *after* dropping its clone of the job Arc (the
-        // decrement happens-after the drop, both under `done_mx`). The
-        // slot's clone is cleared below before the state is reclaimed,
-        // so no reference to the borrowed data survives the call.
-        let state = unsafe {
-            std::mem::transmute::<JobState<'_, T>, JobState<'static, T>>(state)
-        };
-        let job: Arc<ErasedJob<T>> = Arc::new(ErasedJob { state });
-        let left = Arc::new(AtomicUsize::new(self.inner.n_devices));
-        {
-            let mut s = self.inner.slot.lock().unwrap_or_else(|e| e.into_inner());
-            s.seq += 1;
-            s.job = Some(job.clone() as Arc<dyn DeviceJob>);
-            s.left = left.clone();
-            self.inner.slot_cv.notify_all();
-        }
-        {
-            let mut g = self.inner.done_mx.lock().unwrap_or_else(|e| e.into_inner());
-            while left.load(Ordering::SeqCst) != 0 {
-                g = self.inner.done_cv.wait(g).unwrap();
-            }
-        }
-        {
-            let mut s = self.inner.slot.lock().unwrap_or_else(|e| e.into_inner());
-            s.job = None;
-        }
-        let job = Arc::try_unwrap(job)
-            .unwrap_or_else(|_| unreachable!("job still shared after completion"));
-        self.inner.calls.fetch_add(1, Ordering::Relaxed);
-        let report = job.state.into_report(&self.inner.core);
-        if report.is_err() {
-            // The abort path may leave readers pinned; start the next
-            // call on a clean cache rather than leak arena space.
-            self.inner.core.purge();
-        }
+        // not return until the job has RETIRED — retirement is
+        // signalled only after the table has dropped its job reference
+        // and every worker has dropped its round-scoped clone (the
+        // drop happens-before the retire latch, both under the table
+        // lock). Our own Arc is dropped before returning, so no
+        // reference to the borrowed data survives the call.
+        let state =
+            unsafe { std::mem::transmute::<JobState<'_, T>, JobState<'static, T>>(state) };
+        let job = Arc::new(ErasedJob { state, _backing: None });
+        let ctl = self.admit(cfg, &job);
+        ctl.wait_retired();
+        let report = job.state.report(&self.inner.core);
+        drop(job);
         report
+    }
+
+    /// Admit a job that OWNS its task set and operand wraps (the
+    /// `*_async` path) and return the pieces the API layer wraps into
+    /// a [`crate::serve::JobHandle`]. The caller's operand buffers
+    /// must outlive the handle — enforced by the handle's borrow.
+    pub(crate) fn submit_owned<T: Scalar>(
+        &self,
+        cfg: &RunConfig,
+        ts: TaskSet,
+        problems: Vec<OwnedProblem<T>>,
+    ) -> Result<(Arc<dyn DeviceJob>, Arc<JobCtl>)> {
+        self.assert_arena_floor::<T>(cfg);
+        let backing = JobBacking { ts: Box::new(ts), problems: problems.into_boxed_slice() };
+        // SAFETY: the boxes give the task set and operand wraps stable
+        // heap addresses, unaffected by the backing struct moving into
+        // the ErasedJob below. The references created here live inside
+        // the SAME ErasedJob (whose `state` field drops before
+        // `_backing`), and the ErasedJob is dropped only after the job
+        // retires — the JobHandle waits for retirement even on drop.
+        // The user buffers the wraps point into are pinned for the
+        // handle's `'buf`.
+        let ts_ref: &'static TaskSet = unsafe { &*(backing.ts.as_ref() as *const TaskSet) };
+        let mats: Vec<Mats<'static, T>> = backing
+            .problems
+            .iter()
+            .map(|p| {
+                let m = Mats { a: &p.a, b: p.b.as_ref(), c: &p.c };
+                // SAFETY: lifetime erasure only (see above).
+                unsafe { std::mem::transmute::<Mats<'_, T>, Mats<'static, T>>(m) }
+            })
+            .collect();
+        let state = JobState::new(cfg, ts_ref, mats, self.inner.n_devices)?;
+        let job = Arc::new(ErasedJob { state, _backing: Some(backing) });
+        let ctl = self.admit(cfg, &job);
+        Ok((job as Arc<dyn DeviceJob>, ctl))
     }
 }
 
 impl Drop for Runtime {
     fn drop(&mut self) {
         self.inner.shutdown.store(true, Ordering::SeqCst);
-        {
-            let _s = self.inner.slot.lock().unwrap_or_else(|e| e.into_inner());
-            self.inner.slot_cv.notify_all();
-        }
+        self.inner.core.notify_work();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-fn device_worker(inner: Arc<Inner>, dev: usize) {
-    let mut last_seq = 0u64;
-    loop {
-        let (job, left) = {
-            let mut s = inner.slot.lock().unwrap_or_else(|e| e.into_inner());
-            loop {
-                if inner.shutdown.load(Ordering::SeqCst) {
-                    return;
-                }
-                if s.seq > last_seq {
-                    if let Some(job) = &s.job {
-                        last_seq = s.seq;
-                        break (job.clone(), s.left.clone());
-                    }
-                }
-                s = inner.slot_cv.wait(s).unwrap();
-            }
-        };
-        // Contain panics (a poisoned kernel must not kill the resident
-        // worker — the job is failed and the fleet stays serviceable).
-        if catch_unwind(AssertUnwindSafe(|| job.run_device(dev, &inner.core))).is_err() {
-            job.poison(format!("device worker {dev} panicked"));
+/// What a worker does next.
+enum Pick {
+    /// Run one round of this job.
+    Run(u64, Arc<dyn DeviceJob>),
+    /// Nothing runnable; park (indefinitely iff the table is empty —
+    /// admission wakes us; otherwise with the steal-retry backstop).
+    Park { indefinitely: bool },
+}
+
+fn next_round(inner: &Inner, tried: &mut HashSet<u64>, seen_version: &mut u64) -> Pick {
+    let mut table = inner.table.lock().unwrap_or_else(|e| e.into_inner());
+    if table.version != *seen_version {
+        *seen_version = table.version;
+        tried.clear();
+    }
+    if table.purge_pending {
+        if table.rounds_active == 0 {
+            // Globally quiescent: no round holds arena offsets, safe
+            // to rebuild the caches (failed-job pin recovery).
+            inner.core.purge();
+            table.purge_done();
+        } else {
+            // Block new rounds until the in-flight ones drain.
+            return Pick::Park { indefinitely: false };
         }
-        // Drop our job handle BEFORE signalling: `submit` reclaims the
-        // job (and the borrowed operands inside) once `left` hits zero.
-        drop(job);
-        let _g = inner.done_mx.lock().unwrap_or_else(|e| e.into_inner());
-        if left.fetch_sub(1, Ordering::SeqCst) == 1 {
-            inner.done_cv.notify_all();
+    }
+    let shares = table.runnable_shares();
+    match fairness::pick(&shares, tried) {
+        Some(id) => Pick::Run(id, table.start_round(id)),
+        None => Pick::Park { indefinitely: table.is_empty() },
+    }
+}
+
+fn device_worker(inner: Arc<Inner>, dev: usize) {
+    // Jobs this device probed and found idle since the table last
+    // changed (don't re-spin on them; cleared on any table version
+    // bump, progress, or wakeup).
+    let mut tried: HashSet<u64> = HashSet::new();
+    let mut seen_version = u64::MAX;
+    loop {
+        if inner.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match next_round(&inner, &mut tried, &mut seen_version) {
+            Pick::Run(id, job) => {
+                let t0 = Instant::now();
+                // Contain panics (a poisoned kernel must not kill the
+                // resident worker — the job fails, the fleet stays
+                // serviceable).
+                let round =
+                    match catch_unwind(AssertUnwindSafe(|| job.run_round(dev, &inner.core))) {
+                        Ok(r) => r,
+                        Err(_) => {
+                            job.poison(format!("device worker {dev} panicked"));
+                            Round::Failed
+                        }
+                    };
+                inner.busy_nanos[dev].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                let (flops, finished, failed) = match round {
+                    // A Progress round may have executed the job's
+                    // last task — fold that observation in now rather
+                    // than waiting for an extra idle probe.
+                    Round::Progress { flops } => (flops, job.done(), false),
+                    Round::Idle => (0.0, false, false),
+                    Round::Finished => (0.0, true, false),
+                    Round::Failed => (0.0, false, true),
+                };
+                // Drop our job reference BEFORE retirement can become
+                // observable: once the latch is set, the waiter
+                // reclaims the borrows behind the job.
+                drop(job);
+                let retired = {
+                    let mut table = inner.table.lock().unwrap_or_else(|e| e.into_inner());
+                    let actions = table.finish_round(id, flops, finished, failed);
+                    if actions.purge_now {
+                        inner.core.purge();
+                        table.purge_done();
+                    }
+                    actions.retired
+                };
+                if let Some(ctl) = retired {
+                    inner.calls.fetch_add(1, Ordering::Relaxed);
+                    ctl.retire();
+                    // Dependents of the retired job may be runnable now.
+                    inner.core.notify_work();
+                }
+                match round {
+                    Round::Idle => {
+                        tried.insert(id);
+                    }
+                    Round::Progress { .. } => tried.clear(),
+                    _ => {}
+                }
+            }
+            Pick::Park { indefinitely } => {
+                let timeout = if indefinitely { None } else { Some(PARK_TIMEOUT) };
+                inner.core.park_for_work(timeout, || {
+                    !inner.shutdown.load(Ordering::SeqCst)
+                        && (!indefinitely
+                            || inner
+                                .table
+                                .lock()
+                                .unwrap_or_else(|e| e.into_inner())
+                                .is_empty())
+                });
+                tried.clear();
+            }
         }
     }
 }
@@ -353,6 +584,7 @@ mod tests {
         let e2 = r.bump(150, 180);
         assert_eq!(r.epoch_of(150, 160), e2);
         assert_eq!(r.epoch_of(100, 110), e1, "older range still visible outside the new one");
+        assert_eq!(r.epoch_of(185, 300), e1, "right remnant of the split survives");
         assert!(e2 > e1);
     }
 
@@ -362,9 +594,64 @@ mod tests {
         for _ in 0..50 {
             r.bump(1000, 2000); // same output rewritten every call
         }
-        assert_eq!(r.ranges.len(), 1, "covered ranges compact away");
+        assert_eq!(r.len(), 1, "covered ranges compact away");
         r.bump(0, 10_000); // superset swallows it
-        assert_eq!(r.ranges.len(), 1);
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn epoch_registry_trims_partial_overlaps_to_disjoint_fragments() {
+        // The flat-list registry retained partially-overlapped ranges
+        // whole; the interval map trims them, keeping the store
+        // disjoint while every fragment still resolves to the newest
+        // generation that touched it.
+        let mut r = EpochRegistry::default();
+        let e1 = r.bump(0, 100);
+        let e2 = r.bump(50, 150);
+        let e3 = r.bump(25, 75);
+        assert_eq!(r.len(), 3, "[0,25)e1 [25,75)e3 [75,150)e2");
+        assert_eq!(r.epoch_of(0, 10), e1);
+        assert_eq!(r.epoch_of(30, 40), e3);
+        assert_eq!(r.epoch_of(100, 110), e2);
+        assert_eq!(r.epoch_of(60, 80), e3, "max over the queried overlap");
+        // A covering bump collapses everything back to one interval.
+        r.bump(0, 1000);
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn epoch_registry_growth_is_bounded() {
+        // Millions of distinct short-lived output buffers (the serving
+        // regime): the registry must not grow unboundedly.
+        let mut r = EpochRegistry::default();
+        for i in 0..(3 * MAX_EXACT_RANGES) {
+            // Disjoint 128-byte buffers spread over a wide heap.
+            let lo = 0x10_0000 + i * 4096;
+            r.bump(lo, lo + 128);
+        }
+        assert!(
+            r.len() <= MAX_EXACT_RANGES,
+            "registry must stay bounded, got {} ranges",
+            r.len()
+        );
+    }
+
+    #[test]
+    fn epoch_registry_compaction_is_conservative() {
+        // After coarse-page fallback, resolved epochs may only be
+        // NEWER than exact (spurious re-fetch), never older (stale
+        // tiles). Verify every bumped range still resolves at or above
+        // its own generation.
+        let mut r = EpochRegistry::default();
+        let mut bumps = Vec::new();
+        for i in 0..(2 * MAX_EXACT_RANGES) {
+            let lo = i * (COARSE_PAGE / 16);
+            let e = r.bump(lo, lo + 64);
+            bumps.push((lo, e));
+        }
+        for &(lo, e) in &bumps {
+            assert!(r.epoch_of(lo, lo + 64) >= e, "stale epoch after compaction at {lo:#x}");
+        }
     }
 
     #[test]
@@ -372,6 +659,7 @@ mod tests {
         let rt = Runtime::boot(3, 1 << 20, AllocStrategy::FastHeap);
         assert_eq!(rt.n_devices(), 3);
         assert_eq!(rt.calls(), 0);
+        assert_eq!(rt.jobs_in_flight(), 0);
         drop(rt); // must not hang
     }
 }

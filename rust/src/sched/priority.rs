@@ -35,7 +35,15 @@ mod tests {
     use crate::tile::MatId;
 
     fn key_of(r: TileRef) -> TileKey {
-        TileKey::synthetic(r.ti * 1000 + r.tj, r.mat, r.ti, r.tj)
+        // Disjoint per-operand address ranges, mirroring the real
+        // KeyMap's span reservation (TileKey equality ignores the
+        // role, so synthetic addresses must not collide across mats).
+        let base = match r.mat {
+            MatId::A => 0,
+            MatId::B => 100_000,
+            MatId::C => 200_000,
+        };
+        TileKey::synthetic(base + r.ti * 1000 + r.tj, r.mat, r.ti, r.tj)
     }
 
     fn gemm_task(krange: usize) -> Task {

@@ -1,0 +1,486 @@
+//! Admission queue + multi-job slot table.
+//!
+//! Every in-flight API call is a [`JobEntry`] in the [`JobTable`]. The
+//! table is the single piece of shared scheduler state (one mutex in
+//! `runtime::service::Inner` guards it); all methods here are called
+//! under that lock, so the bookkeeping is plain fields, not atomics.
+//!
+//! ## Conflict ordering instead of a global lock
+//!
+//! At admission a job's operand **byte ranges** are compared against
+//! every live job's: a RAW/WAR/WAW overlap on host memory creates a
+//! dependency edge (the new job waits for the live one to retire).
+//! Edges only ever point at earlier-admitted jobs, so the dependency
+//! graph is acyclic by construction and aliasing calls execute in
+//! admission order — bit-for-bit what a serial client would get —
+//! while disjoint jobs overlap freely on the devices.
+//!
+//! Epoch stamping (see `runtime::service`) happens under the same lock
+//! and in the same order as edge creation, which is what keeps the
+//! tile-cache epoch discipline equivalent to the serialized PR 3
+//! runtime.
+//!
+//! ## Tile-size barriers and cache purges
+//!
+//! Block geometry participates in tile addressing, so jobs with
+//! different tile sizes must never share the cache. A job whose `t`
+//! differs from the table's current one is admitted as a **barrier**:
+//! it depends on every live job, every later job depends on it (via
+//! `last_barrier`), and the caches are purged at the quiescent point
+//! where its dependencies have drained (`rounds_active == 0` is
+//! guaranteed there — no other job can be mid-round). A *failed* job
+//! may leave pinned blocks behind (its aborted task's C pin), so its
+//! retirement sets `purge_pending`; workers stop starting rounds and
+//! the first one to observe global quiescence performs the purge.
+
+use super::fairness::JobShare;
+use super::DeviceJob;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Host byte ranges a job reads (`ins`) and writes (`outs`), one entry
+/// per operand per problem.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct JobSpan {
+    pub ins: Vec<(usize, usize)>,
+    pub outs: Vec<(usize, usize)>,
+}
+
+fn overlaps(a: (usize, usize), b: (usize, usize)) -> bool {
+    a.0 < b.1 && b.0 < a.1
+}
+
+impl JobSpan {
+    /// Must a job with span `new` wait for a live job with span `live`?
+    /// True on any write-write, write-read, or read-write overlap
+    /// (read-read sharing is the good case — shared cache tiles).
+    pub fn conflicts(new: &JobSpan, live: &JobSpan) -> bool {
+        new.outs
+            .iter()
+            .any(|&o| live.outs.iter().chain(live.ins.iter()).any(|&x| overlaps(o, x)))
+            || new.ins.iter().any(|&i| live.outs.iter().any(|&o| overlaps(i, o)))
+    }
+}
+
+/// Per-job completion latch, shared by the waiter (a blocking submit or
+/// a [`super::JobHandle`]) and the retiring worker. `retired` means the
+/// job has left the table and no worker holds a reference to it — the
+/// waiter may reclaim the borrows behind the job.
+pub(crate) struct JobCtl {
+    pub id: u64,
+    retired: AtomicBool,
+    mx: Mutex<()>,
+    cv: Condvar,
+}
+
+impl JobCtl {
+    fn new(id: u64) -> JobCtl {
+        JobCtl { id, retired: AtomicBool::new(false), mx: Mutex::new(()), cv: Condvar::new() }
+    }
+
+    pub fn is_retired(&self) -> bool {
+        self.retired.load(Ordering::SeqCst)
+    }
+
+    /// Mark retired and wake the waiter. Called by the retiring worker
+    /// AFTER the table has dropped its job reference.
+    pub fn retire(&self) {
+        let _g = self.mx.lock().unwrap_or_else(|e| e.into_inner());
+        self.retired.store(true, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+
+    /// Park until the job retires.
+    pub fn wait_retired(&self) {
+        let mut g = self.mx.lock().unwrap_or_else(|e| e.into_inner());
+        while !self.retired.load(Ordering::SeqCst) {
+            g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// One live job in the table.
+pub(crate) struct JobEntry {
+    pub id: u64,
+    pub job: Arc<dyn DeviceJob>,
+    pub ctl: Arc<JobCtl>,
+    pub span: JobSpan,
+    /// Earlier live jobs this one must wait for (ids drain at their
+    /// retirement; the job is runnable when empty).
+    pub deps: HashSet<u64>,
+    /// Devices currently inside a round of this job.
+    pub active_rounds: usize,
+    /// All tasks done (or the job failed): retire once `active_rounds`
+    /// reaches zero.
+    pub finishing: bool,
+    /// Poisoned/errored — retirement schedules a cache purge.
+    pub failed: bool,
+    /// Tile-size barrier: purge the caches when this job becomes
+    /// runnable (cleared once the purge has happened).
+    pub needs_purge: bool,
+    /// Fair-share ledger (see `super::fairness`).
+    pub weight: f64,
+    pub charged: f64,
+}
+
+/// What the caller (holding the table lock) must do after
+/// [`JobTable::finish_round`].
+#[derive(Default)]
+pub(crate) struct FinishActions {
+    /// Purge the engine caches NOW, then call [`JobTable::purge_done`]
+    /// (still under the lock). Only set at global quiescence.
+    pub purge_now: bool,
+    /// The retired job's latch: count the call, then (outside the
+    /// table lock) `retire()` it and wake the worker fleet.
+    pub retired: Option<Arc<JobCtl>>,
+}
+
+/// The multi-job slot table (see module docs).
+pub(crate) struct JobTable {
+    pub jobs: Vec<JobEntry>,
+    next_id: u64,
+    /// Bumped on every admission/retirement; workers use it to
+    /// invalidate their "probed idle" memory cheaply.
+    pub version: u64,
+    /// A failed job retired with blocks possibly pinned: purge at the
+    /// next globally-quiescent point; no new rounds start meanwhile.
+    pub purge_pending: bool,
+    /// Rounds in flight across all jobs (Σ active_rounds).
+    pub rounds_active: usize,
+    /// Latest live tile-size barrier; later admissions depend on it.
+    last_barrier: Option<u64>,
+    /// Tile size of the current cache generation.
+    last_t: Option<usize>,
+}
+
+impl Default for JobTable {
+    fn default() -> JobTable {
+        JobTable::new()
+    }
+}
+
+impl JobTable {
+    pub fn new() -> JobTable {
+        JobTable {
+            jobs: Vec::new(),
+            next_id: 0,
+            version: 0,
+            purge_pending: false,
+            rounds_active: 0,
+            last_barrier: None,
+            last_t: None,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    fn entry(&mut self, id: u64) -> &mut JobEntry {
+        self.jobs.iter_mut().find(|e| e.id == id).expect("job id not in table")
+    }
+
+    /// Admit a job: compute its dependency edges (byte-range conflicts
+    /// against every live job, plus barrier ordering), insert it, and
+    /// report whether the caller must purge the caches immediately (a
+    /// barrier admitted into an already-quiescent table).
+    pub fn admit(
+        &mut self,
+        job: Arc<dyn DeviceJob>,
+        span: JobSpan,
+        weight: f64,
+        t: usize,
+    ) -> (Arc<JobCtl>, bool) {
+        let id = self.next_id;
+        self.next_id += 1;
+        let switch = self.last_t != Some(t);
+        let needs_purge = switch && self.last_t.is_some();
+        self.last_t = Some(t);
+        let deps: HashSet<u64> = if needs_purge {
+            // Barrier: wait for everything live, regardless of ranges.
+            self.jobs.iter().map(|e| e.id).collect()
+        } else {
+            let mut d: HashSet<u64> = self
+                .jobs
+                .iter()
+                .filter(|e| JobSpan::conflicts(&span, &e.span))
+                .map(|e| e.id)
+                .collect();
+            // Nothing may overtake a pending geometry barrier: its
+            // purge must not wipe blocks a newer job is computing on.
+            if let Some(b) = self.last_barrier {
+                if self.jobs.iter().any(|e| e.id == b) {
+                    d.insert(b);
+                }
+            }
+            d
+        };
+        if needs_purge {
+            self.last_barrier = Some(id);
+        }
+        let ctl = Arc::new(JobCtl::new(id));
+        let purge_immediately = needs_purge && deps.is_empty();
+        self.jobs.push(JobEntry {
+            id,
+            job,
+            ctl: ctl.clone(),
+            span,
+            deps,
+            active_rounds: 0,
+            finishing: false,
+            failed: false,
+            // An immediate purge (performed by the admitting caller
+            // while it still holds the table lock) discharges the flag.
+            needs_purge: needs_purge && !purge_immediately,
+            weight,
+            charged: 0.0,
+        });
+        self.version += 1;
+        debug_assert!(!purge_immediately || self.rounds_active == 0);
+        (ctl, purge_immediately)
+    }
+
+    /// Fair-share ledgers of the currently runnable jobs (dependencies
+    /// drained, not yet finishing).
+    pub fn runnable_shares(&self) -> Vec<JobShare> {
+        self.jobs
+            .iter()
+            .filter(|e| e.deps.is_empty() && !e.finishing)
+            .map(|e| JobShare { id: e.id, weight: e.weight, charged: e.charged })
+            .collect()
+    }
+
+    /// Begin a round of job `id` on some device: pins the job in the
+    /// table (it cannot retire while `active_rounds > 0`).
+    pub fn start_round(&mut self, id: u64) -> Arc<dyn DeviceJob> {
+        self.rounds_active += 1;
+        let e = self.entry(id);
+        e.active_rounds += 1;
+        e.job.clone()
+    }
+
+    /// End a round of job `id`: charge the fair-share ledger, record a
+    /// finished/failed observation, and retire the job if it is done
+    /// and no device is still inside one of its rounds. The returned
+    /// actions must be applied by the caller (see [`FinishActions`]).
+    pub fn finish_round(
+        &mut self,
+        id: u64,
+        flops: f64,
+        finished: bool,
+        failed: bool,
+    ) -> FinishActions {
+        self.rounds_active -= 1;
+        let (finishing, active_rounds) = {
+            let e = self.entry(id);
+            e.active_rounds -= 1;
+            e.charged += flops;
+            if finished || failed {
+                e.finishing = true;
+                e.failed |= failed;
+            }
+            (e.finishing, e.active_rounds)
+        };
+        let mut actions = FinishActions::default();
+        if finishing && active_rounds == 0 {
+            let idx = self.jobs.iter().position(|e| e.id == id).unwrap();
+            let entry = self.jobs.remove(idx);
+            self.version += 1;
+            if entry.failed {
+                self.purge_pending = true;
+            }
+            if self.last_barrier == Some(id) {
+                self.last_barrier = None;
+            }
+            for other in &mut self.jobs {
+                other.deps.remove(&id);
+            }
+            actions.retired = Some(entry.ctl);
+        }
+        // A geometry barrier whose dependencies just drained purges at
+        // this quiescent point (no other job can be mid-round: all its
+        // predecessors retired, all its successors still dep on it);
+        // a failure purge waits for global quiescence the same way.
+        let barrier_ready = self.jobs.iter().any(|e| e.deps.is_empty() && e.needs_purge);
+        if (barrier_ready || self.purge_pending) && self.rounds_active == 0 {
+            actions.purge_now = true;
+        }
+        actions
+    }
+
+    /// The caller purged the caches (under the table lock, at a
+    /// quiescent point): clear every discharged purge obligation.
+    pub fn purge_done(&mut self) {
+        self.purge_pending = false;
+        for e in &mut self.jobs {
+            if e.deps.is_empty() {
+                e.needs_purge = false;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::real_engine::{EngineCore, RealReport, Round};
+    use crate::error::{Error, Result};
+
+    struct StubJob;
+    impl DeviceJob for StubJob {
+        fn run_round(&self, _dev: usize, _core: &EngineCore) -> Round {
+            Round::Idle
+        }
+        fn poison(&self, _msg: String) {}
+        fn done(&self) -> bool {
+            false
+        }
+        fn report(&self, _core: &EngineCore) -> Result<RealReport> {
+            Err(Error::Internal("stub".into()))
+        }
+    }
+
+    fn stub() -> Arc<dyn DeviceJob> {
+        Arc::new(StubJob)
+    }
+
+    fn span(ins: &[(usize, usize)], outs: &[(usize, usize)]) -> JobSpan {
+        JobSpan { ins: ins.to_vec(), outs: outs.to_vec() }
+    }
+
+    #[test]
+    fn disjoint_jobs_are_concurrently_runnable() {
+        let mut t = JobTable::new();
+        let (c0, p0) = t.admit(stub(), span(&[(0, 100)], &[(100, 200)]), 10.0, 32);
+        let (c1, p1) = t.admit(stub(), span(&[(300, 400)], &[(400, 500)]), 10.0, 32);
+        assert!(!p0 && !p1);
+        let ids: Vec<u64> = t.runnable_shares().iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![c0.id, c1.id]);
+    }
+
+    #[test]
+    fn raw_conflict_orders_by_admission() {
+        let mut t = JobTable::new();
+        // job0 writes [100,200); job1 reads it → dependency edge.
+        let (c0, _) = t.admit(stub(), span(&[(0, 100)], &[(100, 200)]), 10.0, 32);
+        let (c1, _) = t.admit(stub(), span(&[(150, 160)], &[(500, 600)]), 10.0, 32);
+        let ids: Vec<u64> = t.runnable_shares().iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![c0.id], "reader must wait for the live writer");
+        // retire job0: one idle probe then a finished round
+        let _ = t.start_round(c0.id);
+        let a = t.finish_round(c0.id, 0.0, true, false);
+        assert!(a.retired.is_some());
+        assert!(!a.purge_now);
+        let ids: Vec<u64> = t.runnable_shares().iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![c1.id], "dependency drained at retirement");
+    }
+
+    #[test]
+    fn waw_and_war_conflicts_also_order() {
+        let mut t = JobTable::new();
+        let (w0, _) = t.admit(stub(), span(&[], &[(100, 200)]), 1.0, 32);
+        // WAW: same output range
+        let (w1, _) = t.admit(stub(), span(&[], &[(150, 250)]), 1.0, 32);
+        // WAR: writes what job0 reads
+        let (_r, _) = t.admit(stub(), span(&[(0, 50)], &[(300, 400)]), 1.0, 32);
+        let (w2, _) = t.admit(stub(), span(&[], &[(0, 10)]), 1.0, 32);
+        assert!(t.jobs.iter().find(|e| e.id == w1.id).unwrap().deps.contains(&w0.id));
+        assert!(t.jobs.iter().find(|e| e.id == w2.id).unwrap().deps.is_empty());
+        // read-read sharing creates no edge
+        let (rr, _) = t.admit(stub(), span(&[(0, 50)], &[(700, 800)]), 1.0, 32);
+        assert!(t.jobs.iter().find(|e| e.id == rr.id).unwrap().deps.is_empty());
+    }
+
+    #[test]
+    fn retire_waits_for_active_rounds() {
+        let mut t = JobTable::new();
+        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32);
+        let _ = t.start_round(c0.id);
+        let _ = t.start_round(c0.id); // second device mid-round
+        let a = t.finish_round(c0.id, 1.0, true, false);
+        assert!(a.retired.is_none(), "a device is still inside a round");
+        assert!(!c0.is_retired());
+        let a = t.finish_round(c0.id, 0.0, false, false);
+        assert!(a.retired.is_some(), "last round out retires the job");
+        assert!(t.is_empty());
+        assert_eq!(t.rounds_active, 0);
+    }
+
+    #[test]
+    fn tile_size_switch_is_a_full_barrier_with_purge() {
+        let mut t = JobTable::new();
+        let (c0, p) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32);
+        assert!(!p, "first job establishes the geometry, nothing to purge");
+        // disjoint ranges, but a different tile size ⇒ waits for job0
+        let (c1, p) = t.admit(stub(), span(&[], &[(100, 108)]), 1.0, 64);
+        assert!(!p, "job0 is live: purge deferred to the barrier point");
+        assert!(t.jobs.iter().find(|e| e.id == c1.id).unwrap().needs_purge);
+        assert!(t.jobs.iter().find(|e| e.id == c1.id).unwrap().deps.contains(&c0.id));
+        // a same-size job admitted behind the barrier must not overtake it
+        let (c2, _) = t.admit(stub(), span(&[], &[(200, 208)]), 1.0, 64);
+        assert!(t.jobs.iter().find(|e| e.id == c2.id).unwrap().deps.contains(&c1.id));
+        // retiring job0 reaches the barrier's quiescent point → purge now
+        let _ = t.start_round(c0.id);
+        let a = t.finish_round(c0.id, 0.0, true, false);
+        assert!(a.retired.is_some());
+        assert!(a.purge_now, "barrier became runnable at quiescence");
+        t.purge_done();
+        assert!(!t.jobs.iter().any(|e| e.needs_purge));
+        let ids: Vec<u64> = t.runnable_shares().iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![c1.id], "c2 still waits for the barrier job itself");
+    }
+
+    #[test]
+    fn switch_into_empty_table_purges_at_admission() {
+        let mut t = JobTable::new();
+        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32);
+        let _ = t.start_round(c0.id);
+        let _ = t.finish_round(c0.id, 0.0, true, false);
+        assert!(t.is_empty());
+        let (_c1, purge_now) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 64);
+        assert!(purge_now, "stale 32-blocks must go before the 64-job runs");
+        t.purge_done();
+    }
+
+    #[test]
+    fn failed_job_schedules_a_quiescent_purge() {
+        let mut t = JobTable::new();
+        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32);
+        let (c1, _) = t.admit(stub(), span(&[], &[(100, 108)]), 1.0, 32);
+        let _ = t.start_round(c0.id);
+        let _ = t.start_round(c1.id);
+        // job0 fails while job1 is mid-round: purge must wait
+        let a = t.finish_round(c0.id, 0.0, false, true);
+        assert!(a.retired.is_some());
+        assert!(t.purge_pending);
+        assert!(!a.purge_now, "job1 still holds arena offsets");
+        let a = t.finish_round(c1.id, 1.0, false, false);
+        assert!(a.purge_now, "quiescent now");
+        t.purge_done();
+        assert!(!t.purge_pending);
+    }
+
+    #[test]
+    fn version_bumps_on_admission_and_retirement() {
+        let mut t = JobTable::new();
+        let v0 = t.version;
+        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32);
+        assert!(t.version > v0);
+        let v1 = t.version;
+        let _ = t.start_round(c0.id);
+        let _ = t.finish_round(c0.id, 0.0, true, false);
+        assert!(t.version > v1);
+    }
+
+    #[test]
+    fn ctl_latch_round_trip() {
+        let ctl = Arc::new(JobCtl::new(7));
+        assert!(!ctl.is_retired());
+        let c2 = ctl.clone();
+        let h = std::thread::spawn(move || c2.wait_retired());
+        ctl.retire();
+        h.join().unwrap();
+        assert!(ctl.is_retired());
+    }
+}

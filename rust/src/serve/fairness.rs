@@ -1,0 +1,132 @@
+//! Flop-weighted fair interleaving across live jobs.
+//!
+//! The batch subsystem's quanta splitter (`crate::batch::quanta`)
+//! balances *one* fused task set by emitting flop-balanced,
+//! problem-interleaved groups up front. Multi-tenant serving is the
+//! same problem one level up — many independent task sets arriving at
+//! unpredictable times — so the static plan becomes a dynamic ledger:
+//! every job carries a *weight* (its total chain flops) and a *charged*
+//! counter (flops executed on its behalf so far), and each device picks
+//! the runnable job with the smallest `charged / weight` ratio before
+//! pulling its next scheduler round (≤ `n_streams` tasks — the
+//! quantum). Shares converge to proportional progress: concurrent
+//! same-size jobs finish together instead of in admission order, and a
+//! small job admitted next to a giant completes after a bounded number
+//! of rounds instead of waiting for the giant to drain.
+//!
+//! The picker is pure (no clocks, no randomness) so admission-order tie
+//! breaking keeps scheduling reproducible under `RUST_TEST_THREADS=1`.
+
+/// One live job's ledger as the picker sees it.
+#[derive(Clone, Copy, Debug)]
+pub struct JobShare {
+    /// Job id (admission order — also the tie breaker).
+    pub id: u64,
+    /// Fair-share weight: the job's total chain flops (floored at 1.0
+    /// so degenerate zero-flop jobs still get picked and retire).
+    pub weight: f64,
+    /// Flops executed on the job's behalf so far.
+    pub charged: f64,
+}
+
+impl JobShare {
+    /// Normalized progress — the quantity the picker minimizes.
+    fn ratio(&self) -> f64 {
+        self.charged / self.weight.max(1.0)
+    }
+}
+
+/// Pick the next job for a device: the runnable job with the smallest
+/// charged/weight ratio, excluding `skip` (jobs this device already
+/// probed and found idle since the table last changed). Ties break by
+/// id, i.e. admission order. Runs under the job-table lock, so it
+/// allocates nothing and probes `skip` in O(1).
+pub fn pick(shares: &[JobShare], skip: &std::collections::HashSet<u64>) -> Option<u64> {
+    shares
+        .iter()
+        .filter(|s| !skip.contains(&s.id))
+        .min_by(|a, b| {
+            a.ratio()
+                .partial_cmp(&b.ratio())
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.id.cmp(&b.id))
+        })
+        .map(|s| s.id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn share(id: u64, weight: f64, charged: f64) -> JobShare {
+        JobShare { id, weight, charged }
+    }
+
+    fn skip(ids: &[u64]) -> HashSet<u64> {
+        ids.iter().copied().collect()
+    }
+
+    #[test]
+    fn least_served_ratio_wins() {
+        let shares = [share(1, 100.0, 50.0), share(2, 100.0, 10.0), share(3, 1000.0, 400.0)];
+        // ratios: 0.5, 0.1, 0.4
+        assert_eq!(pick(&shares, &skip(&[])), Some(2));
+    }
+
+    #[test]
+    fn weighting_gives_big_jobs_proportional_share() {
+        // A big job charged the same absolute flops as a small one has
+        // the smaller ratio, so it runs next: both progress toward
+        // completion at the same *relative* rate.
+        let shares = [share(1, 10_000.0, 500.0), share(2, 1_000.0, 500.0)];
+        assert_eq!(pick(&shares, &skip(&[])), Some(1));
+    }
+
+    #[test]
+    fn skip_excludes_idle_probed_jobs() {
+        let shares = [share(1, 100.0, 0.0), share(2, 100.0, 90.0)];
+        assert_eq!(pick(&shares, &skip(&[1])), Some(2));
+        assert_eq!(pick(&shares, &skip(&[1, 2])), None);
+    }
+
+    #[test]
+    fn ties_break_by_admission_order() {
+        let shares = [share(7, 100.0, 10.0), share(3, 100.0, 10.0)];
+        assert_eq!(pick(&shares, &skip(&[])), Some(3));
+    }
+
+    #[test]
+    fn zero_weight_jobs_are_still_pickable() {
+        // A degenerate empty job must be picked (and then observed
+        // Finished) rather than dividing by zero or starving.
+        let shares = [share(1, 0.0, 0.0)];
+        assert_eq!(pick(&shares, &skip(&[])), Some(1));
+    }
+
+    #[test]
+    fn proportional_progress_simulation() {
+        // Simulate rounds: two jobs, 3:1 weight ratio, equal per-round
+        // charge. After many picks the big job should have been served
+        // ~3x the rounds of the small one.
+        let mut a = share(1, 300.0, 0.0);
+        let mut b = share(2, 100.0, 0.0);
+        let none = skip(&[]);
+        let (mut picks_a, mut picks_b) = (0u32, 0u32);
+        for _ in 0..200 {
+            match pick(&[a, b], &none) {
+                Some(1) => {
+                    a.charged += 1.0;
+                    picks_a += 1;
+                }
+                Some(2) => {
+                    b.charged += 1.0;
+                    picks_b += 1;
+                }
+                other => panic!("unexpected pick {other:?}"),
+            }
+        }
+        assert!(picks_a > 2 * picks_b, "{picks_a} vs {picks_b}");
+        assert!(picks_b > 0, "small job must not starve");
+    }
+}

@@ -1,0 +1,90 @@
+//! The completion future of an asynchronously submitted job.
+
+use super::admission::JobCtl;
+use super::DeviceJob;
+use crate::coordinator::real_engine::RealReport;
+use crate::error::Result;
+use crate::runtime::Runtime;
+use std::marker::PhantomData;
+use std::sync::Arc;
+
+/// A submitted-but-possibly-unfinished L3 call (returned by the
+/// `*_async` entry points in [`crate::api::l3`]).
+///
+/// The handle keeps the resident runtime alive and pins the borrows of
+/// the caller's operand buffers (`'buf`): the buffers cannot be freed
+/// or mutably reused while the handle exists. [`JobHandle::wait`]
+/// parks until the job retires and returns its [`RealReport`];
+/// **dropping** an unwaited handle also parks until retirement (and
+/// discards the report), so an early `drop` is a barrier, not a
+/// cancellation.
+///
+/// ## Liveness contract
+///
+/// The runtime's workers read and write the operand buffers through
+/// raw pointers until the job retires. The borrow checker enforces the
+/// buffers' liveness through `'buf` *provided the handle is dropped
+/// normally*; leaking it (`std::mem::forget`) while the job is in
+/// flight voids that guarantee and is undefined behavior, exactly like
+/// leaking a guard that lends local buffers to another thread. This is
+/// the same class of contract as `Context::invalidate_host`: the
+/// library cannot observe what the caller does to host memory behind
+/// its back.
+pub struct JobHandle<'buf> {
+    rt: Arc<Runtime>,
+    job: Option<Arc<dyn DeviceJob>>,
+    ctl: Arc<JobCtl>,
+    _buffers: PhantomData<&'buf mut [u8]>,
+}
+
+impl<'buf> JobHandle<'buf> {
+    pub(crate) fn new(
+        rt: Arc<Runtime>,
+        job: Arc<dyn DeviceJob>,
+        ctl: Arc<JobCtl>,
+    ) -> JobHandle<'buf> {
+        JobHandle { rt, job: Some(job), ctl, _buffers: PhantomData }
+    }
+
+    /// Has the job retired? (Non-blocking; `wait` returns immediately
+    /// once this is true.)
+    pub fn is_done(&self) -> bool {
+        self.ctl.is_retired()
+    }
+
+    /// The job's admission id (diagnostics).
+    pub fn job_id(&self) -> u64 {
+        self.ctl.id
+    }
+
+    /// Park until the job completes and return its report. Outputs are
+    /// fully written back to the caller's buffers when this returns.
+    pub fn wait(mut self) -> Result<RealReport> {
+        self.ctl.wait_retired();
+        let job = self.job.take().expect("job already taken");
+        let report = job.report(self.rt.core());
+        // `job` drops here: the last reference into the borrowed
+        // buffers dies before the caller regains use of them.
+        report
+    }
+}
+
+impl Drop for JobHandle<'_> {
+    fn drop(&mut self) {
+        if self.job.is_some() {
+            // Unwaited handle: block until the workers are done with
+            // the borrowed buffers, then let the job (and its report)
+            // drop.
+            self.ctl.wait_retired();
+        }
+    }
+}
+
+impl std::fmt::Debug for JobHandle<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JobHandle")
+            .field("job_id", &self.ctl.id)
+            .field("done", &self.is_done())
+            .finish()
+    }
+}

@@ -1,0 +1,68 @@
+//! Multi-tenant job scheduling for the resident runtime (serving mode).
+//!
+//! PR 3's persistent runtime kept the engine warm between calls but
+//! funnelled every call through a one-at-a-time submit mutex: a serving
+//! daemon with many client threads left the device workers parked
+//! between jobs — exactly the under-utilization BLASX's dynamic
+//! asynchronous runtime exists to remove, re-created one level up. This
+//! subsystem replaces the serializing slot with an **admission queue**
+//! over a **multi-job slot table**:
+//!
+//! - **Admission** ([`admission`]) — each in-flight call becomes a
+//!   *job* with its own task namespace (its private `JobState`: queue,
+//!   dependency counts, reservation stations, transfer counters — the
+//!   whole-job generalization of the batch subsystem's per-problem
+//!   `KeyMap` namespacing; in the real engine, tile addresses are
+//!   already globally namespaced by host address + stride + epoch).
+//!   Jobs whose output byte ranges overlap another live job's inputs
+//!   or outputs are ordered by an admission-time dependency edge —
+//!   aliasing calls execute in submission order, bit-for-bit identical
+//!   to serial execution — while disjoint jobs run concurrently with
+//!   no global lock.
+//! - **Interleaving** ([`fairness`]) — device workers pull scheduler
+//!   *rounds* (up to `n_streams` tasks, the Stream-K-style quantum the
+//!   batch splitter uses intra-batch) across ALL runnable jobs,
+//!   picking the job with the smallest charged-flops/weight ratio so
+//!   every tenant progresses proportionally to its size and small
+//!   jobs are never starved behind a giant one.
+//! - **Completion** ([`handle`]) — [`JobHandle`] is the future returned
+//!   by the `*_async` API entry points; blocking calls are
+//!   submit-then-wait over the same machinery.
+//!
+//! Coherence across tenants needs no new mechanism: the epoch registry
+//! stamps invalidation generations at admission (under the same lock
+//! that computes conflict edges, so epoch order == admission order),
+//! and tile-cache keys already carry address + stride + epoch. A job
+//! that changes the tile size is admitted as a *barrier* (it waits for
+//! every live job, later jobs wait for it) and the caches are purged at
+//! the quiescent point in between.
+
+pub mod admission;
+pub mod fairness;
+pub mod handle;
+
+pub use handle::JobHandle;
+
+use crate::coordinator::real_engine::{EngineCore, RealReport, Round};
+use crate::error::Result;
+
+/// A submitted job, erased over its scalar type so one worker fleet
+/// serves f32 and f64 tenants alike. Implemented by the runtime's
+/// `ErasedJob` (see `crate::runtime::service`).
+pub(crate) trait DeviceJob: Send + Sync {
+    /// Execute one scheduler round of this job on device `dev`.
+    fn run_round(&self, dev: usize, core: &EngineCore) -> Round;
+
+    /// Poison the job (contained worker panic): it fails instead of
+    /// wedging the fleet.
+    fn poison(&self, msg: String);
+
+    /// Have all of the job's tasks completed? (A `Progress` round may
+    /// have executed the last task without observing `Finished`; the
+    /// worker folds this in to retire without an extra idle probe.)
+    fn done(&self) -> bool;
+
+    /// Assemble the job's call report. Call once, after the job has
+    /// retired (the failure slot is drained).
+    fn report(&self, core: &EngineCore) -> Result<RealReport>;
+}

@@ -23,11 +23,20 @@ pub enum MatId {
 }
 
 /// Globally-unique key for a tile: the paper keys its caches by the
-/// tile's *host address*, which is exactly what `addr` is. `(mat, ti,
-/// tj)` is kept for debuggability.
+/// tile's *host address*, which is exactly what `addr` is.
 ///
-/// Two extra discriminants make the key safe beyond a single
-/// invocation:
+/// The operand role `mat` is **not** part of equality or hashing — it
+/// is kept only for debug display and transfer accounting. A buffer
+/// warmed through one role hits when later passed through another (a
+/// weight matrix read as A in one call and as B in the next reuses its
+/// cached tiles), and the real engine's consumer-side invariants
+/// (diagonal identity padding) are re-asserted at acquire time rather
+/// than baked into the key. The simulator's virtual key space keeps
+/// per-role addresses disjoint (`KeyMap` reserves a span per operand),
+/// so dropping `mat` changes nothing there.
+///
+/// The discriminants that *do* participate in equality make the key
+/// safe beyond a single invocation:
 ///
 /// - `ld` — the owning matrix's leading dimension. Two views of one
 ///   base pointer with different strides (a pointer-array batch whose
@@ -39,10 +48,16 @@ pub enum MatId {
 ///   buffer's epoch makes every previously-cached tile of it
 ///   unreachable, which is how cross-call caching stays coherent when
 ///   an output is rewritten or the user mutates an input.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+/// - `h`/`w` — the tile's *actual* (unpadded) extent. Two views of one
+///   buffer with different row/col counts put different zero padding
+///   in the same-origin cache block (an edge tile of the narrow view
+///   is an interior tile of the wide one); without the extent in the
+///   key, cross-role reuse would serve the wrong padding.
+#[derive(Clone, Copy, Debug)]
 pub struct TileKey {
     /// Host address of the tile origin (the cache key, paper Alg. 2 "HA").
     pub addr: usize,
+    /// Operand role — debug/accounting only, excluded from Eq/Hash.
     pub mat: MatId,
     pub ti: usize,
     pub tj: usize,
@@ -51,13 +66,45 @@ pub struct TileKey {
     /// Host-buffer invalidation generation (0 = never invalidated /
     /// non-persistent run).
     pub epoch: u64,
+    /// Actual tile extent (geometry discriminant; 0 for synthetic keys).
+    pub h: usize,
+    pub w: usize,
+}
+
+impl PartialEq for TileKey {
+    fn eq(&self, o: &TileKey) -> bool {
+        // `mat` deliberately excluded — see the type docs.
+        self.addr == o.addr
+            && self.ti == o.ti
+            && self.tj == o.tj
+            && self.ld == o.ld
+            && self.epoch == o.epoch
+            && self.h == o.h
+            && self.w == o.w
+    }
+}
+
+impl Eq for TileKey {}
+
+impl std::hash::Hash for TileKey {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        // Must mirror `eq`: `mat` stays out.
+        self.addr.hash(state);
+        self.ti.hash(state);
+        self.tj.hash(state);
+        self.ld.hash(state);
+        self.epoch.hash(state);
+        self.h.hash(state);
+        self.w.hash(state);
+    }
 }
 
 impl TileKey {
-    /// A key with no stride/epoch discrimination — for unit tests and
-    /// synthetic cache exercises where `addr` is already unique.
+    /// A key with no stride/epoch/extent discrimination — for unit
+    /// tests and synthetic cache exercises where `addr` is already
+    /// unique.
     pub fn synthetic(addr: usize, mat: MatId, ti: usize, tj: usize) -> TileKey {
-        TileKey { addr, mat, ti, tj, ld: 0, epoch: 0 }
+        TileKey { addr, mat, ti, tj, ld: 0, epoch: 0, h: 0, w: 0 }
     }
 }
 
@@ -131,6 +178,7 @@ impl<T: Scalar> HostMat<T> {
     /// The cache key of tile `(ti, tj)`.
     #[inline]
     pub fn tile_key(&self, ti: usize, tj: usize) -> TileKey {
+        let (h, w) = self.grid.tile_dims(ti, tj);
         TileKey {
             addr: self.elem_addr(self.grid.row_origin(ti), self.grid.col_origin(tj)),
             mat: self.id,
@@ -138,6 +186,8 @@ impl<T: Scalar> HostMat<T> {
             tj,
             ld: self.ld,
             epoch: self.epoch(),
+            h,
+            w,
         }
     }
 
@@ -312,6 +362,39 @@ mod tests {
         assert_eq!(m.epoch(), 7);
         assert_ne!(before, after);
         assert_eq!((after.addr, after.ti, after.tj), (before.addr, before.ti, before.tj));
+    }
+
+    #[test]
+    fn operand_role_is_not_part_of_key_equality() {
+        // The same buffer wrapped as A and as B yields EQUAL keys for
+        // the same tile: cross-role cache reuse (ROADMAP item closed by
+        // the serve PR). `mat` survives for debug display only.
+        let buf = vec![0.0f64; 64 * 64];
+        let as_a = HostMat::<f64>::new_ro(&buf, 64, 64, 64, 32, MatId::A);
+        let as_b = HostMat::<f64>::new_ro(&buf, 64, 64, 64, 32, MatId::B);
+        let ka = as_a.tile_key(1, 0);
+        let kb = as_b.tile_key(1, 0);
+        assert_ne!(ka.mat, kb.mat);
+        assert_eq!(ka, kb, "role must not block a warm hit");
+        // …and they hash identically (HashMap lookup is the hit path).
+        let mut set = std::collections::HashSet::new();
+        set.insert(ka);
+        assert!(set.contains(&kb));
+    }
+
+    #[test]
+    fn different_view_extent_keys_differ() {
+        // One buffer viewed with different row counts: tile (2,0) is a
+        // full 32-row tile in the 100-row view but a 16-row edge tile
+        // in the 80-row view — same origin address, different padding
+        // contents. The extent discriminant keeps them apart.
+        let buf = vec![0.0f64; 100 * 4];
+        let wide = HostMat::<f64>::new_ro(&buf, 100, 4, 100, 32, MatId::A);
+        let narrow = HostMat::<f64>::new_ro(&buf, 80, 4, 100, 32, MatId::B);
+        let kw = wide.tile_key(2, 0);
+        let kn = narrow.tile_key(2, 0);
+        assert_eq!(kw.addr, kn.addr);
+        assert_ne!(kw, kn, "edge-vs-interior views must not alias");
     }
 
     #[test]

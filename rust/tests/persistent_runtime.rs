@@ -235,6 +235,47 @@ fn warm_batch_reuses_tiles() {
     assert_eq!(cbufs, first, "warm batch must be bit-identical");
 }
 
+/// Cross-role tile reuse (ROADMAP item closed by the serve PR): a
+/// buffer warmed as the A operand hits when later passed as B — the
+/// operand role is no longer part of `TileKey` equality.
+#[test]
+fn cross_role_warm_hit_a_then_b() {
+    let ctx = warm_ctx();
+    // n = 80 with t = 32 leaves 16-wide edge tiles, exercising the
+    // padding re-assertion on cross-role hits.
+    let n = 80;
+    let mut p = Prng::new(80);
+    let x = rand(&mut p, n * n); // the shared operand
+    let b0 = rand(&mut p, n * n);
+    let a2 = rand(&mut p, n * n);
+    let mut c = vec![0.0; n * n];
+
+    // call 1: X rides as A (warms X's tiles under the A role)
+    let rep1 =
+        api::dgemm(&ctx, Trans::No, Trans::No, n, n, n, 1.0, &x, n, &b0, n, 0.0, &mut c, n)
+            .unwrap();
+    assert!(rep1.transfers.host_reads[0] > 0);
+
+    // call 2: X rides as B — every tile must come from the warm cache
+    let rep2 =
+        api::dgemm(&ctx, Trans::No, Trans::No, n, n, n, 1.0, &a2, n, &x, n, 0.0, &mut c, n)
+            .unwrap();
+    assert_eq!(
+        rep2.transfers.host_reads[1],
+        0,
+        "X was warmed as A and must hit as B: {:?}",
+        rep2.transfers
+    );
+    assert!(rep2.transfers.host_reads[0] > 0, "a2 is cold");
+
+    // …and the numerics match the serial engine exactly.
+    let fresh = warm_ctx().with_persistent(false);
+    let mut want = vec![0.0; n * n];
+    api::dgemm(&fresh, Trans::No, Trans::No, n, n, n, 1.0, &a2, n, &x, n, 0.0, &mut want, n)
+        .unwrap();
+    assert_eq!(c, want, "cross-role reuse changed the numerics");
+}
+
 /// Changing the tile size between calls purges the cache (block
 /// geometry changed) and stays correct.
 #[test]
@@ -262,8 +303,10 @@ fn tile_size_switch_purges_and_recomputes() {
     assert!(max_diff(&c, &want) < 1e-10);
 }
 
-/// Concurrent callers sharing one Context serialize through the
-/// resident runtime; every call stays correct.
+/// Concurrent callers sharing one Context are admitted as concurrent
+/// jobs (disjoint buffers ⇒ no dependency edges) and interleave on the
+/// resident workers; every call stays correct. The deeper concurrency
+/// guarantees live in `tests/serve_concurrent.rs`.
 #[test]
 fn concurrent_callers_share_one_runtime() {
     let ctx = warm_ctx();

@@ -1,0 +1,312 @@
+//! Concurrency guarantees of the multi-tenant resident runtime: N
+//! client threads issuing interleaved mixed-routine calls must get
+//! results bit-for-bit identical to serial execution — on disjoint
+//! buffers (jobs overlap on the devices) and on deliberately-aliasing
+//! buffers (in-place chains and cross-call read-after-write, ordered
+//! by admission dependencies and invalidation epochs).
+//!
+//! Run under both the default test harness and `RUST_TEST_THREADS=1`
+//! (CI does both): the scheduler's fairness picker is deterministic,
+//! so single-threading the harness shakes out ordering assumptions
+//! rather than changing coverage.
+
+use blasx::api::types::{Diag, Side, Trans, Uplo};
+use blasx::api::{self, Context};
+use blasx::hostblas;
+use blasx::util::prng::Prng;
+
+fn serve_ctx() -> Context {
+    Context::new(2).with_arena(8 << 20).with_tile(32)
+}
+
+fn rand(p: &mut Prng, n: usize) -> Vec<f64> {
+    let mut v = vec![0.0; n];
+    p.fill_f64(&mut v, -1.0, 1.0);
+    v
+}
+
+/// A well-conditioned upper triangle for TRSM.
+fn upper_tri(p: &mut Prng, n: usize) -> Vec<f64> {
+    let mut a = rand(p, n * n);
+    for x in a.iter_mut() {
+        *x *= 0.5 / (n as f64).sqrt();
+    }
+    for i in 0..n {
+        a[i * n + i] = 2.0;
+    }
+    a
+}
+
+/// One client's workload: an interleaved dgemm / dsyrk / dtrsm
+/// sequence on private buffers, with a deliberate intra-client
+/// aliasing chain — the dgemm writes `c`, the dtrsm then solves in
+/// place on the same `c` (read-after-write through the epoch
+/// registry), twice over. Returns the final `c` and the syrk output.
+fn client_workload(ctx: &Context, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let (m, n, k) = (96, 64, 48);
+    let mut p = Prng::new(seed);
+    let a = rand(&mut p, m * k);
+    let b = rand(&mut p, k * n);
+    let tri = upper_tri(&mut p, m);
+    let sa = rand(&mut p, n * k);
+    let mut c = vec![0.0; m * n];
+    let mut sc = rand(&mut p, n * n);
+    // Fresh input allocations: a finished client's freed buffers may be
+    // handed to a later client at the same address, so declare them per
+    // the warm runtime's liveness contract (no-op on one-shot contexts;
+    // outputs c/sc are epoch-bumped automatically at admission).
+    ctx.invalidate_host(&a);
+    ctx.invalidate_host(&b);
+    ctx.invalidate_host(&tri);
+    ctx.invalidate_host(&sa);
+    for _ in 0..2 {
+        api::dgemm(ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m)
+            .unwrap();
+        api::syrk(ctx, Uplo::Lower, Trans::No, n, k, 0.7, &sa, n, 0.4, &mut sc, n).unwrap();
+        // aliasing: c is the dgemm's output AND the trsm's in/out
+        api::trsm(ctx, Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, m, n, 1.0, &tri, m, &mut c, m)
+            .unwrap();
+    }
+    (c, sc)
+}
+
+/// The tentpole concurrency property: N clients hammering one shared
+/// persistent runtime with mixed routines produce results bit-for-bit
+/// identical to each client running serially on a fresh one-shot
+/// engine.
+#[test]
+fn concurrent_mixed_routines_match_serial_bit_for_bit() {
+    let ctx = serve_ctx();
+    let results: Vec<(u64, Vec<f64>, Vec<f64>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4u64)
+            .map(|seed| {
+                let ctx = ctx.clone();
+                scope.spawn(move || {
+                    let (c, sc) = client_workload(&ctx, 500 + seed);
+                    (seed, c, sc)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    // 4 clients × 2 rounds × 3 calls
+    assert_eq!(ctx.runtime_calls(), 24, "every call must flow through the resident runtime");
+    assert_eq!(ctx.jobs_in_flight(), 0);
+    for (seed, c, sc) in results {
+        let serial = serve_ctx().with_persistent(false);
+        let (want_c, want_sc) = client_workload(&serial, 500 + seed);
+        assert_eq!(c, want_c, "client {seed}: concurrent dgemm/trsm chain diverged from serial");
+        assert_eq!(sc, want_sc, "client {seed}: concurrent syrk diverged from serial");
+    }
+}
+
+/// Async jobs on disjoint buffers are admitted concurrently, may be
+/// waited out of order, and each lands the exact blocking-call result.
+#[test]
+fn async_jobs_overlap_and_complete_out_of_order() {
+    let ctx = serve_ctx();
+    let (m, n, k) = (64, 64, 48);
+    let jobs = 6;
+    let mut p = Prng::new(900);
+    let abufs: Vec<Vec<f64>> = (0..jobs).map(|_| rand(&mut p, m * k)).collect();
+    let bbufs: Vec<Vec<f64>> = (0..jobs).map(|_| rand(&mut p, k * n)).collect();
+    let mut cbufs: Vec<Vec<f64>> = (0..jobs).map(|_| vec![0.0; m * n]).collect();
+
+    let handles: Vec<_> = cbufs
+        .iter_mut()
+        .enumerate()
+        .map(|(i, c)| {
+            api::dgemm_async(
+                &ctx, Trans::No, Trans::No, m, n, k, 1.0, &abufs[i], m, &bbufs[i], k, 0.0, c, m,
+            )
+            .unwrap()
+        })
+        .collect();
+    assert!(ctx.jobs_in_flight() <= jobs);
+    // Wait newest-first: completion order must not matter.
+    for h in handles.into_iter().rev() {
+        h.wait().unwrap();
+    }
+    assert_eq!(ctx.runtime_calls(), jobs);
+    for i in 0..jobs {
+        let mut want = vec![0.0; m * n];
+        hostblas::gemm_blocked(
+            Trans::No, Trans::No, m, n, k, 1.0, &abufs[i], m, &bbufs[i], k, 0.0, &mut want, m,
+        );
+        let diff =
+            cbufs[i].iter().zip(&want).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+        assert!(diff < 1e-10, "job {i}: {diff}");
+    }
+}
+
+/// A blocking read-after-write chain (call 2 reads call 1's output —
+/// the epoch-dependency path) stays bit-for-bit correct while an
+/// unrelated async job churns the same devices and caches.
+#[test]
+fn raw_chain_stays_coherent_under_concurrent_load() {
+    let ctx = serve_ctx();
+    let n = 64;
+    let mut p = Prng::new(901);
+    let a = rand(&mut p, n * n);
+    let b = rand(&mut p, n * n);
+    let d = rand(&mut p, n * n);
+    // background tenant: a larger independent job
+    let big_a = rand(&mut p, 160 * 160);
+    let big_b = rand(&mut p, 160 * 160);
+    let mut big_c = vec![0.0; 160 * 160];
+    let bg = api::dgemm_async(
+        &ctx, Trans::No, Trans::No, 160, 160, 160, 1.0, &big_a, 160, &big_b, 160, 0.0, &mut big_c,
+        160,
+    )
+    .unwrap();
+
+    // foreground chain: x := a*b, then e := x*d (reads the buffer the
+    // first call just rewrote — served through the bumped epoch, never
+    // from stale tiles)
+    let mut x = vec![0.0; n * n];
+    let mut e = vec![0.0; n * n];
+    api::dgemm(&ctx, Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut x, n).unwrap();
+    api::dgemm(&ctx, Trans::No, Trans::No, n, n, n, 1.0, &x, n, &d, n, 0.0, &mut e, n).unwrap();
+    bg.wait().unwrap();
+
+    let serial = serve_ctx().with_persistent(false);
+    let mut want_x = vec![0.0; n * n];
+    let mut want_e = vec![0.0; n * n];
+    api::dgemm(&serial, Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut want_x, n)
+        .unwrap();
+    api::dgemm(&serial, Trans::No, Trans::No, n, n, n, 1.0, &want_x, n, &d, n, 0.0, &mut want_e, n)
+        .unwrap();
+    assert_eq!(x, want_x);
+    assert_eq!(e, want_e, "RAW chain diverged under concurrent load");
+
+    let mut want_big = vec![0.0; 160 * 160];
+    hostblas::gemm_blocked(
+        Trans::No, Trans::No, 160, 160, 160, 1.0, &big_a, 160, &big_b, 160, 0.0, &mut want_big, 160,
+    );
+    let diff = big_c.iter().zip(&want_big).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+    assert!(diff < 1e-9, "background tenant corrupted: {diff}");
+}
+
+/// Clients sharing one input matrix (read-read aliasing — the good
+/// kind) serve it from the warm tile caches: after a warm-up call, no
+/// client re-reads A from the host.
+#[test]
+fn concurrent_clients_share_warm_input_tiles() {
+    let ctx = serve_ctx();
+    let (m, n, k) = (64, 64, 64);
+    let mut p = Prng::new(902);
+    let shared_a = rand(&mut p, m * k);
+    // warm A's tiles (private B/C so only A stays resident-relevant)
+    {
+        let b = rand(&mut p, k * n);
+        let mut c = vec![0.0; m * n];
+        api::dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &shared_a, m, &b, k, 0.0, &mut c, m)
+            .unwrap();
+    }
+    let a_reads: usize = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..3u64)
+            .map(|seed| {
+                let ctx = ctx.clone();
+                let shared_a = &shared_a;
+                scope.spawn(move || {
+                    let mut p = Prng::new(700 + seed);
+                    let b = rand(&mut p, k * n);
+                    let mut c = vec![0.0; m * n];
+                    ctx.invalidate_host(&b);
+                    let rep = api::dgemm(
+                        &ctx, Trans::No, Trans::No, m, n, k, 1.0, shared_a, m, &b, k, 0.0,
+                        &mut c, m,
+                    )
+                    .unwrap();
+                    // bit-for-bit vs the serial engine (same tile
+                    // decomposition), tolerance vs the host oracle
+                    let fresh = serve_ctx().with_persistent(false);
+                    let mut want = vec![0.0; m * n];
+                    api::dgemm(
+                        &fresh, Trans::No, Trans::No, m, n, k, 1.0, shared_a, m, &b, k, 0.0,
+                        &mut want, m,
+                    )
+                    .unwrap();
+                    assert_eq!(c, want, "client {seed}");
+                    rep.transfers.host_reads[0]
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    assert_eq!(a_reads, 0, "shared A must be served from the warm caches for every client");
+}
+
+/// Stress: many clients × many small jobs; every result verified. The
+/// scheduler must neither starve, deadlock, nor cross-contaminate.
+#[test]
+fn many_clients_many_jobs_stress() {
+    let ctx = serve_ctx();
+    std::thread::scope(|scope| {
+        for seed in 0..6u64 {
+            let ctx = ctx.clone();
+            scope.spawn(move || {
+                let (m, n, k) = (48, 40, 33);
+                let mut p = Prng::new(300 + seed);
+                for _ in 0..4 {
+                    let a = rand(&mut p, m * k);
+                    let b = rand(&mut p, k * n);
+                    let c0 = rand(&mut p, m * n);
+                    ctx.invalidate_host(&a);
+                    ctx.invalidate_host(&b);
+                    let mut c = c0.clone();
+                    api::dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.3, &a, m, &b, k, -0.7, &mut c, m)
+                        .unwrap();
+                    let fresh = serve_ctx().with_persistent(false);
+                    let mut want = c0.clone();
+                    api::dgemm(
+                        &fresh, Trans::No, Trans::No, m, n, k, 1.3, &a, m, &b, k, -0.7, &mut want, m,
+                    )
+                    .unwrap();
+                    assert_eq!(c, want, "client {seed}: diverged from serial");
+                }
+            });
+        }
+    });
+    assert_eq!(ctx.runtime_calls(), 24);
+    assert_eq!(ctx.jobs_in_flight(), 0);
+}
+
+/// Mixed f32/f64 tenants share the byte-granular fleet concurrently.
+#[test]
+fn mixed_dtype_tenants_overlap() {
+    let ctx = serve_ctx();
+    std::thread::scope(|scope| {
+        let ctx_d = ctx.clone();
+        scope.spawn(move || {
+            let (m, n, k) = (64, 48, 40);
+            let mut p = Prng::new(41);
+            let a = rand(&mut p, m * k);
+            let b = rand(&mut p, k * n);
+            let mut c = vec![0.0; m * n];
+            api::dgemm(&ctx_d, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m)
+                .unwrap();
+            let mut want = vec![0.0; m * n];
+            hostblas::gemm_blocked(Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut want, m);
+            let diff = c.iter().zip(&want).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+            assert!(diff < 1e-10, "f64 tenant diverged: {diff}");
+        });
+        let ctx_s = ctx.clone();
+        scope.spawn(move || {
+            let (m, n, k) = (56, 56, 56);
+            let mut p = Prng::new(42);
+            let mut a = vec![0.0f32; m * k];
+            let mut b = vec![0.0f32; k * n];
+            p.fill_f32(&mut a, -1.0, 1.0);
+            p.fill_f32(&mut b, -1.0, 1.0);
+            let mut c = vec![0.0f32; m * n];
+            api::sgemm(&ctx_s, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m)
+                .unwrap();
+            let mut want = vec![0.0f32; m * n];
+            hostblas::gemm_blocked(Trans::No, Trans::No, m, n, k, 1.0f32, &a, m, &b, k, 0.0, &mut want, m);
+            let diff = c.iter().zip(&want).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+            assert!(diff < 1e-3, "f32 tenant diverged: {diff}");
+        });
+    });
+    assert_eq!(ctx.runtime_calls(), 2);
+}
