@@ -1,0 +1,135 @@
+/* smoke.c — drop-in C client for libblasx.
+ *
+ * Exercises the blocking CBLAS surface and the asynchronous job API,
+ * including an aliasing dgemm -> dtrsm chain on one buffer (ordered by
+ * the runtime's admission table). Verifies against naive references;
+ * exits non-zero on any mismatch.
+ *
+ * Build & run (from the repo root, after `cargo build --release`):
+ *   cc examples/c/smoke.c -Iinclude -Lrust/target/release -lblasx \
+ *      -lm -o smoke
+ *   LD_LIBRARY_PATH=rust/target/release ./smoke
+ */
+#include <math.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+
+#include "blasx.h"
+
+#define N 64
+
+/* column-major naive references ------------------------------------- */
+
+static void ref_gemm(int n, double alpha, const double *a, const double *b,
+                     double beta, double *c) {
+    for (int j = 0; j < n; j++)
+        for (int i = 0; i < n; i++) {
+            double acc = 0.0;
+            for (int l = 0; l < n; l++) acc += a[l * n + i] * b[j * n + l];
+            c[j * n + i] = alpha * acc + beta * c[j * n + i];
+        }
+}
+
+/* forward substitution for upper-triangular T x = b, column-wise */
+static void ref_trsm_upper(int n, const double *t, double *b) {
+    for (int j = 0; j < n; j++) {
+        double *col = b + (size_t)j * n;
+        for (int i = n - 1; i >= 0; i--) {
+            double acc = col[i];
+            for (int l = i + 1; l < n; l++) acc -= t[l * n + i] * col[l];
+            col[i] = acc / t[i * n + i];
+        }
+    }
+}
+
+static double max_abs_diff(const double *x, const double *y, size_t n) {
+    double m = 0.0;
+    for (size_t i = 0; i < n; i++) {
+        double d = fabs(x[i] - y[i]);
+        if (d > m) m = d;
+    }
+    return m;
+}
+
+static void fill(double *x, size_t n, unsigned *seed) {
+    for (size_t i = 0; i < n; i++) {
+        *seed = *seed * 1664525u + 1013904223u;
+        x[i] = ((double)(*seed >> 8) / (double)(1u << 24)) - 0.5;
+    }
+}
+
+static int failures = 0;
+static void check(const char *name, double diff, double tol) {
+    printf("  %-34s diff %.3e  %s\n", name, diff, diff < tol ? "OK" : "FAILED");
+    if (!(diff < tol)) failures++;
+}
+
+int main(void) {
+    printf("%s C smoke client\n", blasx_version());
+    unsigned seed = 2015;
+    size_t bytes = (size_t)N * N * sizeof(double);
+    double *a = malloc(bytes), *b = malloc(bytes), *c = malloc(bytes);
+    double *want = malloc(bytes), *t = malloc(bytes);
+    if (!a || !b || !c || !want || !t) return 2;
+    fill(a, (size_t)N * N, &seed);
+    fill(b, (size_t)N * N, &seed);
+    fill(c, (size_t)N * N, &seed);
+
+    /* 1. blocking cblas_dgemm (column-major) */
+    memcpy(want, c, bytes);
+    cblas_dgemm(CblasColMajor, CblasNoTrans, CblasNoTrans, N, N, N, 1.5, a, N,
+                b, N, -0.5, c, N);
+    ref_gemm(N, 1.5, a, b, -0.5, want);
+    check("cblas_dgemm", max_abs_diff(c, want, (size_t)N * N), 1e-10);
+
+    /* 2. asynchronous aliasing chain: C := A*B, then solve T X = C in
+     *    place on the same buffer. The runtime's admission edges order
+     *    the two jobs; waits may complete out of order. */
+    fill(t, (size_t)N * N, &seed);
+    for (int i = 0; i < N; i++) t[i * N + i] = 2.0 + fabs(t[i * N + i]);
+    memset(c, 0, bytes);
+    blasx_job_t *j1 = blasx_dgemm_async(CblasColMajor, CblasNoTrans,
+                                        CblasNoTrans, N, N, N, 1.0, a, N, b, N,
+                                        0.0, c, N);
+    blasx_job_t *j2 = blasx_dtrsm_async(CblasColMajor, CblasLeft, CblasUpper,
+                                        CblasNoTrans, CblasNonUnit, N, N, 1.0,
+                                        t, N, c, N);
+    if (!j1 || !j2) {
+        char msg[256];
+        blasx_last_error(msg, sizeof msg);
+        fprintf(stderr, "async submission failed: %s\n", msg);
+        return 1;
+    }
+    int s2 = blasx_wait(j2); /* newest first: order must not matter */
+    int s1 = blasx_wait(j1);
+    if (s1 != BLASX_OK || s2 != BLASX_OK) {
+        fprintf(stderr, "blasx_wait: %d / %d\n", s1, s2);
+        return 1;
+    }
+    memset(want, 0, bytes);
+    ref_gemm(N, 1.0, a, b, 0.0, want);
+    ref_trsm_upper(N, t, want);
+    check("async dgemm->dtrsm chain", max_abs_diff(c, want, (size_t)N * N),
+          1e-9);
+
+    /* 3. input mutation + declaration (the host-liveness contract) */
+    for (size_t i = 0; i < (size_t)N * N; i++) a[i] *= 2.0;
+    blasx_invalidate_host(a, bytes);
+    memcpy(c, want, bytes);
+    memcpy(want, c, bytes);
+    cblas_dgemm(CblasColMajor, CblasNoTrans, CblasNoTrans, N, N, N, 1.0, a, N,
+                b, N, 0.25, c, N);
+    ref_gemm(N, 1.0, a, b, 0.25, want);
+    check("post-invalidate cblas_dgemm", max_abs_diff(c, want, (size_t)N * N),
+          1e-10);
+
+    blasx_shutdown();
+    free(a); free(b); free(c); free(want); free(t);
+    if (failures) {
+        fprintf(stderr, "%d check(s) FAILED\n", failures);
+        return 1;
+    }
+    printf("all checks passed\n");
+    return 0;
+}

@@ -28,7 +28,7 @@
 //! engine. Clones of a `Context` share the booted runtime; dropping
 //! the last clone shuts it down.
 //!
-//! ## Serving mode: concurrent calls and `*_async`
+//! ## Serving mode: concurrent calls and scoped async
 //!
 //! The resident runtime is **multi-tenant** (see [`crate::serve`]):
 //! calls from any number of client threads are admitted as concurrent
@@ -36,21 +36,23 @@
 //! flop-weighted fairness. Independent calls overlap on the devices;
 //! calls whose operand byte ranges alias are ordered by admission-time
 //! dependency edges and stay bit-for-bit identical to serial
-//! execution. Blocking routines are submit-then-wait; every routine
-//! also has a non-blocking `*_async` variant (e.g. [`gemm_async`])
-//! returning a [`JobHandle`] — call [`JobHandle::wait`] for the
-//! report, and keep the operand buffers untouched until then (the
-//! handle borrows them; dropping it unwaited blocks until the job
-//! completes).
+//! execution. Blocking routines are submit-then-wait; non-blocking
+//! submission goes through [`Context::scope`] (see
+//! [`crate::api::scope`]): inside `ctx.scope(|s| { .. })` jobs issued
+//! via `s.dgemm(..)` etc. return immediately with a
+//! [`crate::serve::JobHandle`], operand ranges may alias *across*
+//! jobs (the admission table orders them), and the scope's close is
+//! the completion barrier — sound by construction, like
+//! [`std::thread::scope`]. The C ABI ([`crate::ffi`]) exposes the same
+//! machinery to cblas-compatible callers over raw pointers.
 
 use super::check;
 use super::types::{Diag, Scalar, Side, Trans, Uplo};
 use crate::batch::{taskize_batch, BatchDesc, BatchedGemm};
-use crate::coordinator::real_engine::{run_real_batch, Mats, OwnedProblem, RealReport};
+use crate::coordinator::real_engine::{run_real_batch, Mats, RealReport};
 use crate::coordinator::{Backend, RunConfig};
-use crate::error::{illegal, Error, Result};
+use crate::error::{illegal, Result};
 use crate::runtime::Runtime;
-use crate::serve::JobHandle;
 use crate::task::{
     taskize_gemm, taskize_symm, taskize_syr2k, taskize_syrk, taskize_trmm, taskize_trsm,
     GemmDesc, SymmDesc, SyrkDesc, TaskSet, TriDesc,
@@ -143,13 +145,13 @@ impl Context {
     }
 
     /// Tile size floor: degenerate matrices still need one tile.
-    fn tile(&self) -> usize {
+    pub(crate) fn tile(&self) -> usize {
         self.cfg.t
     }
 
     /// The resident runtime, booting it (or rebooting on a geometry
     /// change) as needed.
-    fn runtime(&self) -> Arc<Runtime> {
+    pub(crate) fn runtime(&self) -> Arc<Runtime> {
         let mut slot = self.runtime.lock().unwrap_or_else(|e| e.into_inner());
         match slot.as_ref() {
             Some(rt)
@@ -164,6 +166,13 @@ impl Context {
                 rt
             }
         }
+    }
+
+    /// The resident runtime if (and only if) it has already booted —
+    /// for operations that are no-ops on a cold runtime (e.g. the C
+    /// ABI's `blasx_invalidate_host`), which must not trigger a boot.
+    pub(crate) fn runtime_if_booted(&self) -> Option<Arc<Runtime>> {
+        self.runtime.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
     /// Is the resident runtime currently booted? (Observability/tests —
@@ -236,25 +245,138 @@ impl Context {
         }
         self.runtime().submit(&self.cfg, ts, problems)
     }
+}
 
-    /// Admit a task set as a non-blocking job and return its handle.
-    /// Requires the persistent runtime (the one-shot engine has no
-    /// workers to return to).
-    fn execute_async<'buf, T: Scalar>(
-        &self,
-        ts: TaskSet,
-        problems: Vec<OwnedProblem<T>>,
-    ) -> Result<JobHandle<'buf>> {
-        if !self.persistent {
-            return Err(Error::Config(
-                "async submission requires the persistent runtime (Context::with_persistent(true))"
-                    .into(),
-            ));
-        }
-        let rt = self.runtime();
-        let (job, ctl) = rt.submit_owned(&self.cfg, ts, problems)?;
-        Ok(JobHandle::new(rt, job, ctl))
-    }
+// --- Per-routine call plans ------------------------------------------
+//
+// One validation + taskization step shared by every doorway into the
+// engine: the blocking functions below, the scoped-async methods
+// (`crate::api::scope`) and the C ABI (`crate::ffi`). A plan is the
+// task set plus the stored (rows, cols) of each operand — what a
+// caller needs to wrap its buffers, however it owns them.
+
+/// Stored (rows, cols) of each operand of a planned call. `b` is
+/// absent for the single-input routines (SYRK, TRMM, TRSM); `c` is the
+/// output (B for the in-place triangular routines).
+pub(crate) struct OperandDims {
+    pub a: (usize, usize),
+    pub b: Option<(usize, usize)>,
+    pub c: (usize, usize),
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn plan_gemm(
+    t: usize,
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    beta: f64,
+    lda: usize,
+    ldb: usize,
+    ldc: usize,
+) -> Result<(TaskSet, OperandDims)> {
+    check::check_gemm(ta, tb, m, n, k, lda, ldb, ldc)?;
+    let d = GemmDesc { ta, tb, m, n, k, alpha, beta, t };
+    let a = if ta == Trans::No { (m, k) } else { (k, m) };
+    let b = if tb == Trans::No { (k, n) } else { (n, k) };
+    Ok((taskize_gemm(&d), OperandDims { a, b: Some(b), c: (m, n) }))
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn plan_syrk(
+    t: usize,
+    uplo: Uplo,
+    trans: Trans,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    beta: f64,
+    lda: usize,
+    ldc: usize,
+) -> Result<(TaskSet, OperandDims)> {
+    check::check_syrk(trans, n, k, lda, None, ldc, "syrk")?;
+    let d = SyrkDesc { uplo, trans, n, k, alpha, beta, t };
+    let a = if trans == Trans::No { (n, k) } else { (k, n) };
+    Ok((taskize_syrk(&d), OperandDims { a, b: None, c: (n, n) }))
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn plan_syr2k(
+    t: usize,
+    uplo: Uplo,
+    trans: Trans,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    beta: f64,
+    lda: usize,
+    ldb: usize,
+    ldc: usize,
+) -> Result<(TaskSet, OperandDims)> {
+    check::check_syrk(trans, n, k, lda, Some(ldb), ldc, "syr2k")?;
+    let d = SyrkDesc { uplo, trans, n, k, alpha, beta, t };
+    let a = if trans == Trans::No { (n, k) } else { (k, n) };
+    Ok((taskize_syr2k(&d), OperandDims { a, b: Some(a), c: (n, n) }))
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn plan_symm(
+    t: usize,
+    side: Side,
+    uplo: Uplo,
+    m: usize,
+    n: usize,
+    alpha: f64,
+    beta: f64,
+    lda: usize,
+    ldb: usize,
+    ldc: usize,
+) -> Result<(TaskSet, OperandDims)> {
+    check::check_symm(side, m, n, lda, ldb, ldc)?;
+    let d = SymmDesc { side, uplo, m, n, alpha, beta, t };
+    let na = if side == Side::Left { m } else { n };
+    Ok((taskize_symm(&d), OperandDims { a: (na, na), b: Some((m, n)), c: (m, n) }))
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn plan_trmm(
+    t: usize,
+    side: Side,
+    uplo: Uplo,
+    ta: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    alpha: f64,
+    lda: usize,
+    ldb: usize,
+) -> Result<(TaskSet, OperandDims)> {
+    check::check_trxm(side, m, n, lda, ldb, "trmm")?;
+    let d = TriDesc { side, uplo, ta, diag, m, n, alpha, t };
+    let na = if side == Side::Left { m } else { n };
+    Ok((taskize_trmm(&d), OperandDims { a: (na, na), b: None, c: (m, n) }))
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn plan_trsm(
+    t: usize,
+    side: Side,
+    uplo: Uplo,
+    ta: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    alpha: f64,
+    lda: usize,
+    ldb: usize,
+) -> Result<(TaskSet, OperandDims)> {
+    check::check_trxm(side, m, n, lda, ldb, "trsm")?;
+    let d = TriDesc { side, uplo, ta, diag, m, n, alpha, t };
+    let na = if side == Side::Left { m } else { n };
+    Ok((taskize_trsm(&d), OperandDims { a: (na, na), b: None, c: (m, n) }))
 }
 
 /// `C := alpha*op(A)*op(B) + beta*C` (column-major, leading dims).
@@ -275,12 +397,11 @@ pub fn gemm<T: Scalar>(
     c: &mut [T],
     ldc: usize,
 ) -> Result<RealReport> {
-    check::check_gemm(ta, tb, m, n, k, lda, ldb, ldc)?;
     let t = ctx.tile();
-    let d = GemmDesc { ta, tb, m, n, k, alpha: alpha.to_f64(), beta: beta.to_f64(), t };
-    let ts = taskize_gemm(&d);
-    let (ar, ac) = if ta == Trans::No { (m, k) } else { (k, m) };
-    let (br, bc) = if tb == Trans::No { (k, n) } else { (n, k) };
+    let (ts, dims) =
+        plan_gemm(t, ta, tb, m, n, k, alpha.to_f64(), beta.to_f64(), lda, ldb, ldc)?;
+    let (ar, ac) = dims.a;
+    let (br, bc) = dims.b.expect("gemm has a B operand");
     let am = HostMat::new_ro(a, ar, ac, lda, t, MatId::A);
     let bm = HostMat::new_ro(b, br, bc, ldb, t, MatId::B);
     let cm = HostMat::new(c, m, n, ldc, t, MatId::C);
@@ -302,11 +423,9 @@ pub fn syrk<T: Scalar>(
     c: &mut [T],
     ldc: usize,
 ) -> Result<RealReport> {
-    check::check_syrk(trans, n, k, lda, None, ldc, "syrk")?;
     let t = ctx.tile();
-    let d = SyrkDesc { uplo, trans, n, k, alpha: alpha.to_f64(), beta: beta.to_f64(), t };
-    let ts = taskize_syrk(&d);
-    let (ar, ac) = if trans == Trans::No { (n, k) } else { (k, n) };
+    let (ts, dims) = plan_syrk(t, uplo, trans, n, k, alpha.to_f64(), beta.to_f64(), lda, ldc)?;
+    let (ar, ac) = dims.a;
     let am = HostMat::new_ro(a, ar, ac, lda, t, MatId::A);
     let cm = HostMat::new(c, n, n, ldc, t, MatId::C);
     ctx.execute(&ts, vec![Mats { a: &am, b: None, c: &cm }])
@@ -329,11 +448,10 @@ pub fn syr2k<T: Scalar>(
     c: &mut [T],
     ldc: usize,
 ) -> Result<RealReport> {
-    check::check_syrk(trans, n, k, lda, Some(ldb), ldc, "syr2k")?;
     let t = ctx.tile();
-    let d = SyrkDesc { uplo, trans, n, k, alpha: alpha.to_f64(), beta: beta.to_f64(), t };
-    let ts = taskize_syr2k(&d);
-    let (ar, ac) = if trans == Trans::No { (n, k) } else { (k, n) };
+    let (ts, dims) =
+        plan_syr2k(t, uplo, trans, n, k, alpha.to_f64(), beta.to_f64(), lda, ldb, ldc)?;
+    let (ar, ac) = dims.a;
     let am = HostMat::new_ro(a, ar, ac, lda, t, MatId::A);
     let bm = HostMat::new_ro(b, ar, ac, ldb, t, MatId::B);
     let cm = HostMat::new(c, n, n, ldc, t, MatId::C);
@@ -357,11 +475,10 @@ pub fn symm<T: Scalar>(
     c: &mut [T],
     ldc: usize,
 ) -> Result<RealReport> {
-    check::check_symm(side, m, n, lda, ldb, ldc)?;
     let t = ctx.tile();
-    let d = SymmDesc { side, uplo, m, n, alpha: alpha.to_f64(), beta: beta.to_f64(), t };
-    let ts = taskize_symm(&d);
-    let na = if side == Side::Left { m } else { n };
+    let (ts, dims) =
+        plan_symm(t, side, uplo, m, n, alpha.to_f64(), beta.to_f64(), lda, ldb, ldc)?;
+    let (na, _) = dims.a;
     let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
     let bm = HostMat::new_ro(b, m, n, ldb, t, MatId::B);
     let cm = HostMat::new(c, m, n, ldc, t, MatId::C);
@@ -385,11 +502,9 @@ pub fn trmm<T: Scalar>(
     b: &mut [T],
     ldb: usize,
 ) -> Result<RealReport> {
-    check::check_trxm(side, m, n, lda, ldb, "trmm")?;
     let t = ctx.tile();
-    let d = TriDesc { side, uplo, ta, diag, m, n, alpha: alpha.to_f64(), t };
-    let ts = taskize_trmm(&d);
-    let na = if side == Side::Left { m } else { n };
+    let (ts, dims) = plan_trmm(t, side, uplo, ta, diag, m, n, alpha.to_f64(), lda, ldb)?;
+    let (na, _) = dims.a;
     let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
     let cm = HostMat::new(b, m, n, ldb, t, MatId::C);
     ctx.execute(&ts, vec![Mats { a: &am, b: None, c: &cm }])
@@ -412,236 +527,27 @@ pub fn trsm<T: Scalar>(
     b: &mut [T],
     ldb: usize,
 ) -> Result<RealReport> {
-    check::check_trxm(side, m, n, lda, ldb, "trsm")?;
     let t = ctx.tile();
-    let d = TriDesc { side, uplo, ta, diag, m, n, alpha: alpha.to_f64(), t };
-    let ts = taskize_trsm(&d);
-    let na = if side == Side::Left { m } else { n };
+    let (ts, dims) = plan_trsm(t, side, uplo, ta, diag, m, n, alpha.to_f64(), lda, ldb)?;
+    let (na, _) = dims.a;
     let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
     let cm = HostMat::new(b, m, n, ldb, t, MatId::C);
     ctx.execute(&ts, vec![Mats { a: &am, b: None, c: &cm }])
 }
 
-// --- Non-blocking (serving-mode) entry points ------------------------
+// --- Non-blocking (serving-mode) submission --------------------------
 //
-// Every routine has an `*_async` twin: same argument validation, same
-// taskization, but the call is ADMITTED to the resident runtime's
-// multi-tenant scheduler and returns a `JobHandle` immediately instead
-// of parking. The handle borrows the operand buffers for its lifetime
-// (`'buf`): the result is in `c` (or `b` for TRMM/TRSM) only after
-// `wait()` returns, and dropping an unwaited handle blocks until the
-// job completes. Jobs whose buffers alias an in-flight job's are
-// ordered by admission — issuing a chain of aliasing `*_async` calls
-// from one thread is therefore exactly as correct as the blocking
-// sequence, just pipelined.
-
-/// Non-blocking [`gemm`]: `C := alpha*op(A)*op(B) + beta*C`, admitted
-/// to the resident runtime; returns immediately with a [`JobHandle`].
-#[allow(clippy::too_many_arguments)]
-pub fn gemm_async<'buf, T: Scalar>(
-    ctx: &Context,
-    ta: Trans,
-    tb: Trans,
-    m: usize,
-    n: usize,
-    k: usize,
-    alpha: T,
-    a: &'buf [T],
-    lda: usize,
-    b: &'buf [T],
-    ldb: usize,
-    beta: T,
-    c: &'buf mut [T],
-    ldc: usize,
-) -> Result<JobHandle<'buf>> {
-    check::check_gemm(ta, tb, m, n, k, lda, ldb, ldc)?;
-    let t = ctx.tile();
-    let d = GemmDesc { ta, tb, m, n, k, alpha: alpha.to_f64(), beta: beta.to_f64(), t };
-    let ts = taskize_gemm(&d);
-    let (ar, ac) = if ta == Trans::No { (m, k) } else { (k, m) };
-    let (br, bc) = if tb == Trans::No { (k, n) } else { (n, k) };
-    let am = HostMat::new_ro(a, ar, ac, lda, t, MatId::A);
-    let bm = HostMat::new_ro(b, br, bc, ldb, t, MatId::B);
-    let cm = HostMat::new(c, m, n, ldc, t, MatId::C);
-    ctx.execute_async(ts, vec![OwnedProblem { a: am, b: Some(bm), c: cm }])
-}
-
-/// Non-blocking [`syrk`].
-#[allow(clippy::too_many_arguments)]
-pub fn syrk_async<'buf, T: Scalar>(
-    ctx: &Context,
-    uplo: Uplo,
-    trans: Trans,
-    n: usize,
-    k: usize,
-    alpha: T,
-    a: &'buf [T],
-    lda: usize,
-    beta: T,
-    c: &'buf mut [T],
-    ldc: usize,
-) -> Result<JobHandle<'buf>> {
-    check::check_syrk(trans, n, k, lda, None, ldc, "syrk")?;
-    let t = ctx.tile();
-    let d = SyrkDesc { uplo, trans, n, k, alpha: alpha.to_f64(), beta: beta.to_f64(), t };
-    let ts = taskize_syrk(&d);
-    let (ar, ac) = if trans == Trans::No { (n, k) } else { (k, n) };
-    let am = HostMat::new_ro(a, ar, ac, lda, t, MatId::A);
-    let cm = HostMat::new(c, n, n, ldc, t, MatId::C);
-    ctx.execute_async(ts, vec![OwnedProblem { a: am, b: None, c: cm }])
-}
-
-/// Non-blocking [`syr2k`].
-#[allow(clippy::too_many_arguments)]
-pub fn syr2k_async<'buf, T: Scalar>(
-    ctx: &Context,
-    uplo: Uplo,
-    trans: Trans,
-    n: usize,
-    k: usize,
-    alpha: T,
-    a: &'buf [T],
-    lda: usize,
-    b: &'buf [T],
-    ldb: usize,
-    beta: T,
-    c: &'buf mut [T],
-    ldc: usize,
-) -> Result<JobHandle<'buf>> {
-    check::check_syrk(trans, n, k, lda, Some(ldb), ldc, "syr2k")?;
-    let t = ctx.tile();
-    let d = SyrkDesc { uplo, trans, n, k, alpha: alpha.to_f64(), beta: beta.to_f64(), t };
-    let ts = taskize_syr2k(&d);
-    let (ar, ac) = if trans == Trans::No { (n, k) } else { (k, n) };
-    let am = HostMat::new_ro(a, ar, ac, lda, t, MatId::A);
-    let bm = HostMat::new_ro(b, ar, ac, ldb, t, MatId::B);
-    let cm = HostMat::new(c, n, n, ldc, t, MatId::C);
-    ctx.execute_async(ts, vec![OwnedProblem { a: am, b: Some(bm), c: cm }])
-}
-
-/// Non-blocking [`symm`].
-#[allow(clippy::too_many_arguments)]
-pub fn symm_async<'buf, T: Scalar>(
-    ctx: &Context,
-    side: Side,
-    uplo: Uplo,
-    m: usize,
-    n: usize,
-    alpha: T,
-    a: &'buf [T],
-    lda: usize,
-    b: &'buf [T],
-    ldb: usize,
-    beta: T,
-    c: &'buf mut [T],
-    ldc: usize,
-) -> Result<JobHandle<'buf>> {
-    check::check_symm(side, m, n, lda, ldb, ldc)?;
-    let t = ctx.tile();
-    let d = SymmDesc { side, uplo, m, n, alpha: alpha.to_f64(), beta: beta.to_f64(), t };
-    let ts = taskize_symm(&d);
-    let na = if side == Side::Left { m } else { n };
-    let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
-    let bm = HostMat::new_ro(b, m, n, ldb, t, MatId::B);
-    let cm = HostMat::new(c, m, n, ldc, t, MatId::C);
-    ctx.execute_async(ts, vec![OwnedProblem { a: am, b: Some(bm), c: cm }])
-}
-
-/// Non-blocking [`trmm`] (in place in `b`; the handle borrows `b`
-/// mutably until completion).
-#[allow(clippy::too_many_arguments)]
-pub fn trmm_async<'buf, T: Scalar>(
-    ctx: &Context,
-    side: Side,
-    uplo: Uplo,
-    ta: Trans,
-    diag: Diag,
-    m: usize,
-    n: usize,
-    alpha: T,
-    a: &'buf [T],
-    lda: usize,
-    b: &'buf mut [T],
-    ldb: usize,
-) -> Result<JobHandle<'buf>> {
-    check::check_trxm(side, m, n, lda, ldb, "trmm")?;
-    let t = ctx.tile();
-    let d = TriDesc { side, uplo, ta, diag, m, n, alpha: alpha.to_f64(), t };
-    let ts = taskize_trmm(&d);
-    let na = if side == Side::Left { m } else { n };
-    let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
-    let cm = HostMat::new(b, m, n, ldb, t, MatId::C);
-    ctx.execute_async(ts, vec![OwnedProblem { a: am, b: None, c: cm }])
-}
-
-/// Non-blocking [`trsm`] (X overwrites `b`; the handle borrows `b`
-/// mutably until completion).
-#[allow(clippy::too_many_arguments)]
-pub fn trsm_async<'buf, T: Scalar>(
-    ctx: &Context,
-    side: Side,
-    uplo: Uplo,
-    ta: Trans,
-    diag: Diag,
-    m: usize,
-    n: usize,
-    alpha: T,
-    a: &'buf [T],
-    lda: usize,
-    b: &'buf mut [T],
-    ldb: usize,
-) -> Result<JobHandle<'buf>> {
-    check::check_trxm(side, m, n, lda, ldb, "trsm")?;
-    let t = ctx.tile();
-    let d = TriDesc { side, uplo, ta, diag, m, n, alpha: alpha.to_f64(), t };
-    let ts = taskize_trsm(&d);
-    let na = if side == Side::Left { m } else { n };
-    let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
-    let cm = HostMat::new(b, m, n, ldb, t, MatId::C);
-    ctx.execute_async(ts, vec![OwnedProblem { a: am, b: None, c: cm }])
-}
-
-/// Double-precision non-blocking GEMM.
-#[allow(clippy::too_many_arguments)]
-pub fn dgemm_async<'buf>(
-    ctx: &Context,
-    ta: Trans,
-    tb: Trans,
-    m: usize,
-    n: usize,
-    k: usize,
-    alpha: f64,
-    a: &'buf [f64],
-    lda: usize,
-    b: &'buf [f64],
-    ldb: usize,
-    beta: f64,
-    c: &'buf mut [f64],
-    ldc: usize,
-) -> Result<JobHandle<'buf>> {
-    gemm_async(ctx, ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
-}
-
-/// Single-precision non-blocking GEMM.
-#[allow(clippy::too_many_arguments)]
-pub fn sgemm_async<'buf>(
-    ctx: &Context,
-    ta: Trans,
-    tb: Trans,
-    m: usize,
-    n: usize,
-    k: usize,
-    alpha: f32,
-    a: &'buf [f32],
-    lda: usize,
-    b: &'buf [f32],
-    ldb: usize,
-    beta: f32,
-    c: &'buf mut [f32],
-    ldc: usize,
-) -> Result<JobHandle<'buf>> {
-    gemm_async(ctx, ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
-}
+// The old free-function `*_async` surface (a `JobHandle<'buf>` that
+// borrowed the operand buffers and waited on drop) repeated the
+// pre-1.0 `thread::scoped` unsoundness: `std::mem::forget(handle)` was
+// safe code that skipped the drop-side wait, and its borrow rules
+// forbade expressing the cross-job aliasing chains the admission table
+// exists to order. Both are fixed by the closure-scoped API in
+// `crate::api::scope` — see [`Context::scope`]: the completion barrier
+// lives in a stack frame the caller cannot skip, and scope-registered
+// buffers may alias across jobs (ordered by admission edges). C
+// callers get the raw-pointer equivalent through `crate::ffi`
+// (`blasx_*_async` / `blasx_wait`).
 
 // --- Batched entry points (crate::batch) -----------------------------
 
@@ -688,7 +594,9 @@ fn gemm_operand_dims(e: &GemmBatchEntry) -> ((usize, usize), (usize, usize)) {
 
 /// Column-major footprint of an `rows × cols` operand with leading
 /// dimension `ld` — the minimum buffer length `HostMat` accepts.
-fn footprint(ld: usize, rows: usize, cols: usize) -> usize {
+/// Shared by the batch validators here, the scope token checks, and
+/// the C ABI's pointer validation.
+pub(crate) fn footprint(ld: usize, rows: usize, cols: usize) -> usize {
     if cols == 0 {
         0
     } else {
@@ -1136,7 +1044,7 @@ mod tests {
     }
 
     #[test]
-    fn gemm_async_smoke() {
+    fn scope_async_gemm_smoke() {
         let ctx = small_ctx();
         let (m, n, k) = (64, 48, 40);
         let mut p = Prng::new(21);
@@ -1145,11 +1053,15 @@ mod tests {
         let mut c = vec![0.0; m * n];
         p.fill_f64(&mut a, -1.0, 1.0);
         p.fill_f64(&mut b, -1.0, 1.0);
-        let handle =
-            dgemm_async(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m)
-                .unwrap();
-        let rep = handle.wait().unwrap();
-        assert!(rep.transfers.total_host_reads() > 0);
+        ctx.scope(|s| {
+            let (ra, rb) = (s.input(&a), s.input(&b));
+            let rc = s.buffer(&mut c);
+            let h = s.dgemm(Trans::No, Trans::No, m, n, k, 1.0, ra, m, rb, k, 0.0, rc, m)?;
+            let rep = h.wait()?;
+            assert!(rep.transfers.total_host_reads() > 0);
+            Ok(())
+        })
+        .unwrap();
         let mut want = vec![0.0; m * n];
         hostblas::gemm_blocked(Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut want, m);
         let diff = c.iter().zip(&want).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
@@ -1158,29 +1070,28 @@ mod tests {
     }
 
     #[test]
-    fn async_requires_persistent_runtime() {
+    fn scope_requires_persistent_runtime() {
         let ctx = small_ctx().with_persistent(false);
-        let a = vec![0.0; 32 * 32];
-        let b = vec![0.0; 32 * 32];
-        let mut c = vec![0.0; 32 * 32];
-        let err = dgemm_async(&ctx, Trans::No, Trans::No, 32, 32, 32, 1.0, &a, 32, &b, 32, 0.0, &mut c, 32);
+        let err = ctx.scope(|_s| Ok(()));
         assert!(err.is_err());
     }
 
     #[test]
-    fn dropping_unwaited_handle_completes_the_job() {
+    fn scope_close_is_the_completion_barrier() {
         let ctx = small_ctx();
         let n = 64;
         let a = vec![1.0; n * n];
         let b = vec![1.0; n * n];
         let mut c = vec![0.0; n * n];
-        {
-            let _h =
-                dgemm_async(&ctx, Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut c, n)
-                    .unwrap();
-            // dropped unwaited: must block until the workers are done
-        }
-        assert!(c.iter().all(|&x| x == n as f64), "drop is a completion barrier");
+        ctx.scope(|s| {
+            let (ra, rb) = (s.input(&a), s.input(&b));
+            let rc = s.buffer(&mut c);
+            // Detached (never waited): the scope close must still wait.
+            let _ = s.dgemm(Trans::No, Trans::No, n, n, n, 1.0, ra, n, rb, n, 0.0, rc, n)?;
+            Ok(())
+        })
+        .unwrap();
+        assert!(c.iter().all(|&x| x == n as f64), "scope close is a completion barrier");
         assert_eq!(ctx.jobs_in_flight(), 0);
     }
 

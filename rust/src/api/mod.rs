@@ -2,18 +2,20 @@
 //!
 //! [`types`] defines the CBLAS-style parameter enums and the
 //! [`types::Scalar`] trait; `l3` (added with the coordinator) exposes the
-//! six routines with legacy signatures; `check` implements xerbla-style
-//! argument validation.
+//! six routines with legacy signatures; [`scope`] is the closure-scoped
+//! non-blocking surface ([`Context::scope`]); `check` implements
+//! xerbla-style argument validation. C callers link against the
+//! cblas-compatible exports in [`crate::ffi`] instead.
 
 pub mod check;
 pub mod l3;
+pub mod scope;
 pub mod types;
 
 pub use crate::serve::JobHandle;
 pub use l3::{
-    dgemm, dgemm_async, dgemm_batched, dgemm_batched_strided, gemm, gemm_async, gemm_batched,
-    gemm_batched_strided, sgemm, sgemm_async, sgemm_batched, sgemm_batched_strided, symm,
-    symm_async, syr2k, syr2k_async, syrk, syrk_async, trmm, trmm_async, trsm, trsm_async, Context,
-    GemmBatchEntry,
+    dgemm, dgemm_batched, dgemm_batched_strided, gemm, gemm_batched, gemm_batched_strided, sgemm,
+    sgemm_batched, sgemm_batched_strided, symm, syr2k, syrk, trmm, trsm, Context, GemmBatchEntry,
 };
+pub use scope::{BufRef, Scope};
 pub use types::{Diag, Dtype, Routine, Scalar, Side, Trans, Uplo};

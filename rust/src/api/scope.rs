@@ -1,0 +1,609 @@
+//! Closure-scoped asynchronous submission — the sound non-blocking API.
+//!
+//! ## Shape
+//!
+//! ```no_run
+//! use blasx::api::{Context, Trans};
+//!
+//! let ctx = Context::default();
+//! let a = vec![1.0f64; 64 * 64];
+//! let b = vec![1.0f64; 64 * 64];
+//! let d = vec![1.0f64; 64 * 64];
+//! let mut c = vec![0.0f64; 64 * 64];
+//! let mut e = vec![0.0f64; 64 * 64];
+//! ctx.scope(|s| {
+//!     let (ra, rb, rd) = (s.input(&a), s.input(&b), s.input(&d));
+//!     let rc = s.buffer(&mut c); // read-write: usable as output AND input
+//!     let re = s.buffer(&mut e);
+//!     // RAW chain: the second job reads the first's output. Both are
+//!     // admitted immediately; the admission table's conflict edge
+//!     // orders them, bit-for-bit equal to the blocking sequence.
+//!     let _ = s.dgemm(Trans::No, Trans::No, 64, 64, 64, 1.0, ra, 64, rb, 64, 0.0, rc, 64)?;
+//!     let _ = s.dgemm(Trans::No, Trans::No, 64, 64, 64, 1.0, rc, 64, rd, 64, 0.0, re, 64)?;
+//!     Ok(())
+//! }).unwrap();
+//! // Scope closed: every job has retired, c and e hold the results.
+//! ```
+//!
+//! ## Why a scope (and not wait-on-drop handles)
+//!
+//! A non-blocking call hands the runtime raw pointers into the
+//! caller's buffers; *something* must guarantee the buffers outlive
+//! the job. Hanging that guarantee on a handle's destructor is the
+//! pre-1.0 `thread::scoped` bug — `std::mem::forget(handle)` is safe
+//! code that skips the destructor. [`Context::scope`] instead runs the
+//! completion barrier in its **own stack frame**, after the user
+//! closure returns (or unwinds): no safe operation inside the closure
+//! can prevent it, so the `'env` borrows registered via
+//! [`Scope::input`]/[`Scope::buffer`] are always live until every job
+//! has retired. This is the `std::thread::scope` construction applied
+//! to device jobs.
+//!
+//! ## Why tokens (and not `&mut` operands)
+//!
+//! The point of concurrent submission is *pipelined aliasing chains*:
+//! job 2 reading the buffer job 1 writes, in-place solves queued
+//! behind the multiply that produced their input. Passing `&mut [T]`
+//! per call would let the borrow checker reject exactly those chains
+//! (each call would demand exclusive access for the whole scope).
+//! Registering a buffer once — [`Scope::buffer`] takes the one `&'env
+//! mut` borrow and hands back a *copyable* [`BufRef`] token — lets any
+//! number of jobs name the same bytes while the admission table's
+//! RAW/WAR/WAW edges serialize the conflicting ones. Data-race
+//! freedom comes from the scheduler (conflicting jobs never overlap on
+//! the devices), liveness from the scope barrier.
+
+use super::l3::{
+    footprint, plan_gemm, plan_symm, plan_syr2k, plan_syrk, plan_trmm, plan_trsm, Context,
+    OperandDims,
+};
+use super::types::{Diag, Scalar, Side, Trans, Uplo};
+use crate::coordinator::real_engine::OwnedProblem;
+use crate::error::{illegal, Error, Result};
+use crate::serve::handle::ScopeToken;
+use crate::serve::JobHandle;
+use crate::task::TaskSet;
+use crate::tile::{HostMat, MatId};
+use std::marker::PhantomData;
+
+/// A scope-registered operand buffer: a copyable token naming a host
+/// byte range for the jobs of one [`Scope`]. Created by
+/// [`Scope::input`] (read-only) or [`Scope::buffer`] (read-write); the
+/// same token may appear in any number of jobs, as input and output
+/// alike — aliasing across jobs is ordered by the admission table.
+pub struct BufRef<'scope, T: Scalar> {
+    ptr: *mut T,
+    len: usize,
+    writable: bool,
+    _scope: PhantomData<&'scope T>,
+}
+
+// Manual Copy/Clone: derive would bound them on `T: Copy` — true for
+// Scalar, but spelling it out keeps the token unconditionally cheap.
+impl<T: Scalar> Clone for BufRef<'_, T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T: Scalar> Copy for BufRef<'_, T> {}
+
+impl<T: Scalar> std::fmt::Debug for BufRef<'_, T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BufRef")
+            .field("addr", &self.ptr)
+            .field("len", &self.len)
+            .field("writable", &self.writable)
+            .finish()
+    }
+}
+
+impl<T: Scalar> BufRef<'_, T> {
+    /// Elements the token spans.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// May this token be used as a job output?
+    pub fn writable(&self) -> bool {
+        self.writable
+    }
+}
+
+/// A scope for issuing non-blocking L3 jobs (see the module docs).
+/// Obtained from [`Context::scope`]; `'scope` is the scope's own
+/// region, `'env` the enclosing environment the operand buffers live
+/// in (both invariant, mirroring [`std::thread::scope`]).
+pub struct Scope<'scope, 'env: 'scope> {
+    ctx: &'env Context,
+    token: ScopeToken,
+    _scope: PhantomData<&'scope mut &'scope ()>,
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl Context {
+    /// Open a job scope: the closure may issue non-blocking jobs whose
+    /// operand ranges alias across jobs (the admission table orders
+    /// them); the scope's close — which runs in THIS function's frame,
+    /// on the success, error and panic paths alike — waits for every
+    /// admitted job, so all outputs are written back when `scope`
+    /// returns. A closure error takes precedence; otherwise the close
+    /// surfaces the first failure of any job whose handle was detached
+    /// or forgotten (jobs observed via [`JobHandle::wait`] already
+    /// delivered their result and are not re-reported). Requires the
+    /// persistent runtime (the one-shot engine has no resident workers
+    /// to leave a job with).
+    pub fn scope<'env, F, R>(&'env self, f: F) -> Result<R>
+    where
+        F: for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> Result<R>,
+    {
+        if !self.persistent {
+            return Err(Error::Config(
+                "scoped async submission requires the persistent runtime \
+                 (Context::with_persistent(true))"
+                    .into(),
+            ));
+        }
+        let scope = Scope {
+            ctx: self,
+            token: ScopeToken::new(self.runtime()),
+            _scope: PhantomData,
+            _env: PhantomData,
+        };
+        let result = f(&scope);
+        // The completion barrier. If `f` unwound instead of returning,
+        // `scope.token`'s Drop runs a wait-only close during unwinding
+        // — either way no `'env` borrow ends before every job retires.
+        // On the normal path the close also surfaces the first failure
+        // of any job whose handle was detached/forgotten (a waited
+        // handle already delivered its error): a failed kernel must
+        // not let `scope` return Ok over a garbage output buffer.
+        let barrier = scope.token.close_and_report();
+        let value = result?;
+        barrier?;
+        Ok(value)
+    }
+}
+
+impl<'scope, 'env> Scope<'scope, 'env> {
+    /// Register a read-only operand buffer with the scope.
+    pub fn input<T: Scalar>(&'scope self, buf: &'env [T]) -> BufRef<'scope, T> {
+        BufRef {
+            ptr: buf.as_ptr() as *mut T,
+            len: buf.len(),
+            writable: false,
+            _scope: PhantomData,
+        }
+    }
+
+    /// Register a read-write operand buffer with the scope. The `&mut`
+    /// borrow is taken once, here, for the whole `'env`; the returned
+    /// token is freely copyable into any number of jobs (aliasing jobs
+    /// are ordered by admission).
+    pub fn buffer<T: Scalar>(&'scope self, buf: &'env mut [T]) -> BufRef<'scope, T> {
+        BufRef { ptr: buf.as_mut_ptr(), len: buf.len(), writable: true, _scope: PhantomData }
+    }
+
+    /// Wrap a token as one operand of a job, validating length and
+    /// writability (the geometry itself was validated by the plan).
+    #[allow(clippy::too_many_arguments)]
+    fn operand<T: Scalar>(
+        &self,
+        routine: &'static str,
+        index: usize,
+        buf: BufRef<'scope, T>,
+        rows: usize,
+        cols: usize,
+        ld: usize,
+        id: MatId,
+        write: bool,
+    ) -> Result<HostMat<T>> {
+        if write && !buf.writable {
+            return Err(illegal(
+                routine,
+                index,
+                "output operand is a read-only token (register it with Scope::buffer, not Scope::input)",
+            ));
+        }
+        let need = footprint(ld, rows, cols);
+        if buf.len < need {
+            return Err(illegal(
+                routine,
+                index,
+                format!("buffer too small: len {} for ld {ld} × {rows}×{cols}", buf.len),
+            ));
+        }
+        // SAFETY: the token was created from a `'env` borrow; the scope
+        // close barrier (Context::scope's own frame) keeps that borrow
+        // live until every job of this scope has retired, and jobs with
+        // overlapping writes are ordered by the admission table.
+        Ok(unsafe { HostMat::from_raw(buf.ptr, rows, cols, ld, self.ctx.tile(), id) })
+    }
+
+    /// Admit one planned job and hand back its handle.
+    fn submit<T: Scalar>(
+        &'scope self,
+        ts: TaskSet,
+        a: HostMat<T>,
+        b: Option<HostMat<T>>,
+        c: HostMat<T>,
+    ) -> Result<JobHandle<'scope>> {
+        let rt = self.token.runtime().clone();
+        let (job, ctl) = rt.submit_owned(&self.ctx.cfg, ts, vec![OwnedProblem { a, b, c }])?;
+        self.token.register(ctl.clone(), job.clone());
+        Ok(JobHandle::new(rt, job, ctl))
+    }
+
+    /// Non-blocking `C := alpha*op(A)*op(B) + beta*C`; returns
+    /// immediately with the job's [`JobHandle`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm<T: Scalar>(
+        &'scope self,
+        ta: Trans,
+        tb: Trans,
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: T,
+        a: BufRef<'scope, T>,
+        lda: usize,
+        b: BufRef<'scope, T>,
+        ldb: usize,
+        beta: T,
+        c: BufRef<'scope, T>,
+        ldc: usize,
+    ) -> Result<JobHandle<'scope>> {
+        let t = self.ctx.tile();
+        let (ts, dims) =
+            plan_gemm(t, ta, tb, m, n, k, alpha.to_f64(), beta.to_f64(), lda, ldb, ldc)?;
+        let OperandDims { a: (ar, ac), b: bdims, c: _ } = dims;
+        let (br, bc) = bdims.expect("gemm has a B operand");
+        let am = self.operand("gemm", 7, a, ar, ac, lda, MatId::A, false)?;
+        let bm = self.operand("gemm", 9, b, br, bc, ldb, MatId::B, false)?;
+        let cm = self.operand("gemm", 12, c, m, n, ldc, MatId::C, true)?;
+        self.submit(ts, am, Some(bm), cm)
+    }
+
+    /// Non-blocking SYRK: `C := alpha*op(A)*op(A)^T + beta*C`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn syrk<T: Scalar>(
+        &'scope self,
+        uplo: Uplo,
+        trans: Trans,
+        n: usize,
+        k: usize,
+        alpha: T,
+        a: BufRef<'scope, T>,
+        lda: usize,
+        beta: T,
+        c: BufRef<'scope, T>,
+        ldc: usize,
+    ) -> Result<JobHandle<'scope>> {
+        let t = self.ctx.tile();
+        let (ts, dims) =
+            plan_syrk(t, uplo, trans, n, k, alpha.to_f64(), beta.to_f64(), lda, ldc)?;
+        let (ar, ac) = dims.a;
+        let am = self.operand("syrk", 6, a, ar, ac, lda, MatId::A, false)?;
+        let cm = self.operand("syrk", 9, c, n, n, ldc, MatId::C, true)?;
+        self.submit(ts, am, None, cm)
+    }
+
+    /// Non-blocking SYR2K.
+    #[allow(clippy::too_many_arguments)]
+    pub fn syr2k<T: Scalar>(
+        &'scope self,
+        uplo: Uplo,
+        trans: Trans,
+        n: usize,
+        k: usize,
+        alpha: T,
+        a: BufRef<'scope, T>,
+        lda: usize,
+        b: BufRef<'scope, T>,
+        ldb: usize,
+        beta: T,
+        c: BufRef<'scope, T>,
+        ldc: usize,
+    ) -> Result<JobHandle<'scope>> {
+        let t = self.ctx.tile();
+        let (ts, dims) =
+            plan_syr2k(t, uplo, trans, n, k, alpha.to_f64(), beta.to_f64(), lda, ldb, ldc)?;
+        let (ar, ac) = dims.a;
+        let am = self.operand("syr2k", 6, a, ar, ac, lda, MatId::A, false)?;
+        let bm = self.operand("syr2k", 8, b, ar, ac, ldb, MatId::B, false)?;
+        let cm = self.operand("syr2k", 11, c, n, n, ldc, MatId::C, true)?;
+        self.submit(ts, am, Some(bm), cm)
+    }
+
+    /// Non-blocking SYMM.
+    #[allow(clippy::too_many_arguments)]
+    pub fn symm<T: Scalar>(
+        &'scope self,
+        side: Side,
+        uplo: Uplo,
+        m: usize,
+        n: usize,
+        alpha: T,
+        a: BufRef<'scope, T>,
+        lda: usize,
+        b: BufRef<'scope, T>,
+        ldb: usize,
+        beta: T,
+        c: BufRef<'scope, T>,
+        ldc: usize,
+    ) -> Result<JobHandle<'scope>> {
+        let t = self.ctx.tile();
+        let (ts, dims) =
+            plan_symm(t, side, uplo, m, n, alpha.to_f64(), beta.to_f64(), lda, ldb, ldc)?;
+        let (na, _) = dims.a;
+        let am = self.operand("symm", 6, a, na, na, lda, MatId::A, false)?;
+        let bm = self.operand("symm", 8, b, m, n, ldb, MatId::B, false)?;
+        let cm = self.operand("symm", 11, c, m, n, ldc, MatId::C, true)?;
+        self.submit(ts, am, Some(bm), cm)
+    }
+
+    /// Non-blocking TRMM, in place in `b` (the token must be
+    /// writable).
+    #[allow(clippy::too_many_arguments)]
+    pub fn trmm<T: Scalar>(
+        &'scope self,
+        side: Side,
+        uplo: Uplo,
+        ta: Trans,
+        diag: Diag,
+        m: usize,
+        n: usize,
+        alpha: T,
+        a: BufRef<'scope, T>,
+        lda: usize,
+        b: BufRef<'scope, T>,
+        ldb: usize,
+    ) -> Result<JobHandle<'scope>> {
+        let t = self.ctx.tile();
+        let (ts, dims) = plan_trmm(t, side, uplo, ta, diag, m, n, alpha.to_f64(), lda, ldb)?;
+        let (na, _) = dims.a;
+        let am = self.operand("trmm", 8, a, na, na, lda, MatId::A, false)?;
+        let cm = self.operand("trmm", 10, b, m, n, ldb, MatId::C, true)?;
+        self.submit(ts, am, None, cm)
+    }
+
+    /// Non-blocking TRSM: X overwrites `b` (the token must be
+    /// writable).
+    #[allow(clippy::too_many_arguments)]
+    pub fn trsm<T: Scalar>(
+        &'scope self,
+        side: Side,
+        uplo: Uplo,
+        ta: Trans,
+        diag: Diag,
+        m: usize,
+        n: usize,
+        alpha: T,
+        a: BufRef<'scope, T>,
+        lda: usize,
+        b: BufRef<'scope, T>,
+        ldb: usize,
+    ) -> Result<JobHandle<'scope>> {
+        let t = self.ctx.tile();
+        let (ts, dims) = plan_trsm(t, side, uplo, ta, diag, m, n, alpha.to_f64(), lda, ldb)?;
+        let (na, _) = dims.a;
+        let am = self.operand("trsm", 8, a, na, na, lda, MatId::A, false)?;
+        let cm = self.operand("trsm", 10, b, m, n, ldb, MatId::C, true)?;
+        self.submit(ts, am, None, cm)
+    }
+
+    // -- precision-suffixed conveniences (the CBLAS-flavoured names) --
+
+    /// Double-precision non-blocking GEMM.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dgemm(
+        &'scope self,
+        ta: Trans,
+        tb: Trans,
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f64,
+        a: BufRef<'scope, f64>,
+        lda: usize,
+        b: BufRef<'scope, f64>,
+        ldb: usize,
+        beta: f64,
+        c: BufRef<'scope, f64>,
+        ldc: usize,
+    ) -> Result<JobHandle<'scope>> {
+        self.gemm(ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
+    }
+
+    /// Single-precision non-blocking GEMM.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sgemm(
+        &'scope self,
+        ta: Trans,
+        tb: Trans,
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f32,
+        a: BufRef<'scope, f32>,
+        lda: usize,
+        b: BufRef<'scope, f32>,
+        ldb: usize,
+        beta: f32,
+        c: BufRef<'scope, f32>,
+        ldc: usize,
+    ) -> Result<JobHandle<'scope>> {
+        self.gemm(ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
+    }
+
+    /// Double-precision non-blocking SYRK.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dsyrk(
+        &'scope self,
+        uplo: Uplo,
+        trans: Trans,
+        n: usize,
+        k: usize,
+        alpha: f64,
+        a: BufRef<'scope, f64>,
+        lda: usize,
+        beta: f64,
+        c: BufRef<'scope, f64>,
+        ldc: usize,
+    ) -> Result<JobHandle<'scope>> {
+        self.syrk(uplo, trans, n, k, alpha, a, lda, beta, c, ldc)
+    }
+
+    /// Double-precision non-blocking SYR2K.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dsyr2k(
+        &'scope self,
+        uplo: Uplo,
+        trans: Trans,
+        n: usize,
+        k: usize,
+        alpha: f64,
+        a: BufRef<'scope, f64>,
+        lda: usize,
+        b: BufRef<'scope, f64>,
+        ldb: usize,
+        beta: f64,
+        c: BufRef<'scope, f64>,
+        ldc: usize,
+    ) -> Result<JobHandle<'scope>> {
+        self.syr2k(uplo, trans, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
+    }
+
+    /// Double-precision non-blocking SYMM.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dsymm(
+        &'scope self,
+        side: Side,
+        uplo: Uplo,
+        m: usize,
+        n: usize,
+        alpha: f64,
+        a: BufRef<'scope, f64>,
+        lda: usize,
+        b: BufRef<'scope, f64>,
+        ldb: usize,
+        beta: f64,
+        c: BufRef<'scope, f64>,
+        ldc: usize,
+    ) -> Result<JobHandle<'scope>> {
+        self.symm(side, uplo, m, n, alpha, a, lda, b, ldb, beta, c, ldc)
+    }
+
+    /// Double-precision non-blocking TRMM.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dtrmm(
+        &'scope self,
+        side: Side,
+        uplo: Uplo,
+        ta: Trans,
+        diag: Diag,
+        m: usize,
+        n: usize,
+        alpha: f64,
+        a: BufRef<'scope, f64>,
+        lda: usize,
+        b: BufRef<'scope, f64>,
+        ldb: usize,
+    ) -> Result<JobHandle<'scope>> {
+        self.trmm(side, uplo, ta, diag, m, n, alpha, a, lda, b, ldb)
+    }
+
+    /// Double-precision non-blocking TRSM.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dtrsm(
+        &'scope self,
+        side: Side,
+        uplo: Uplo,
+        ta: Trans,
+        diag: Diag,
+        m: usize,
+        n: usize,
+        alpha: f64,
+        a: BufRef<'scope, f64>,
+        lda: usize,
+        b: BufRef<'scope, f64>,
+        ldb: usize,
+    ) -> Result<JobHandle<'scope>> {
+        self.trsm(side, uplo, ta, diag, m, n, alpha, a, lda, b, ldb)
+    }
+}
+
+impl std::fmt::Debug for Scope<'_, '_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Scope").finish_non_exhaustive()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> Context {
+        Context::new(2).with_arena(4 << 20).with_tile(32)
+    }
+
+    #[test]
+    fn tokens_track_writability_and_len() {
+        let c = ctx();
+        let a = vec![0.0f64; 16];
+        let mut b = vec![0.0f64; 8];
+        c.scope(|s| {
+            let ra = s.input(&a);
+            let rb = s.buffer(&mut b);
+            assert_eq!(ra.len(), 16);
+            assert!(!ra.writable());
+            assert!(rb.writable());
+            assert!(!rb.is_empty());
+            // tokens are Copy: both uses below are fine
+            let _ = (ra, ra, rb, rb);
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn read_only_token_rejected_as_output() {
+        let c = ctx();
+        let a = vec![0.0f64; 32 * 32];
+        let b = vec![0.0f64; 32 * 32];
+        let co = vec![0.0f64; 32 * 32];
+        let err = c.scope(|s| {
+            let (ra, rb, rc) = (s.input(&a), s.input(&b), s.input(&co));
+            s.dgemm(Trans::No, Trans::No, 32, 32, 32, 1.0, ra, 32, rb, 32, 0.0, rc, 32)
+                .map(|h| h.detach())
+        });
+        assert!(err.is_err(), "read-only output token must be rejected");
+    }
+
+    #[test]
+    fn short_token_rejected() {
+        let c = ctx();
+        let a = vec![0.0f64; 10]; // far below the 32×32 footprint
+        let b = vec![0.0f64; 32 * 32];
+        let mut co = vec![0.0f64; 32 * 32];
+        let err = c.scope(|s| {
+            let (ra, rb) = (s.input(&a), s.input(&b));
+            let rc = s.buffer(&mut co);
+            s.dgemm(Trans::No, Trans::No, 32, 32, 32, 1.0, ra, 32, rb, 32, 0.0, rc, 32)
+                .map(|h| h.detach())
+        });
+        assert!(err.is_err(), "undersized operand token must be rejected");
+    }
+
+    #[test]
+    fn scope_flattens_closure_errors() {
+        let c = ctx();
+        let out: Result<u32> = c.scope(|_s| Err(Error::Config("user error".into())));
+        assert!(out.is_err());
+        // and passes values through on success
+        assert_eq!(c.scope(|_s| Ok(7u32)).unwrap(), 7);
+    }
+}

@@ -3,9 +3,12 @@
 //! Subcommands:
 //! - `run`   — execute a routine in the real engine and verify numerics
 //! - `serve` — multi-client stress mode over the resident runtime
+//!   (`--verify` adds scope-async chains, `--ffi-verify` drives the C
+//!   ABI entry points against the safe path bit-for-bit)
 //! - `sim`   — simulate a routine on a paper machine under any policy
 //! - `gantt` — render the Fig. 1-style ASCII execution profile
 //! - `info`  — artifact + machine inventory
+//! - `header` — emit the generated C header (`include/blasx.h`)
 
 use crate::api::types::Routine;
 use crate::api::Dtype;
@@ -100,9 +103,10 @@ USAGE:
   blasx run   [--routine dgemm] [--n 1024] [--t 256] [--devices 2] [--pjrt]
               [--kernel-threads 1] [--repeat 1] [--no-persistent]
   blasx serve [--clients 4] [--jobs 8] [--n 512] [--t 256] [--devices 2]
-              [--kernel-threads 1] [--verify]
+              [--kernel-threads 1] [--verify] [--ffi-verify]
   blasx batch <workload.json> [--devices 2] [--t 256] [--pjrt] [--fused]
               [--kernel-threads 1] [--no-persistent]
+  blasx header [--out include/blasx.h]
   blasx info
 
 `sim` runs the discrete-event engine on a paper machine and prints the
@@ -125,7 +129,14 @@ persistent context and each issues `--jobs` DGEMMs concurrently — the
 runtime admits them as concurrent jobs (disjoint buffers overlap on
 the devices; the scheduler interleaves rounds under flop-weighted
 fairness) and reports jobs/sec plus the worker-idle fraction.
-`--verify` checks every client's last result against the host oracle."
+`--verify` checks every client's last result against the host oracle
+AND runs an aliasing dgemm→dtrsm chain per client through the
+scope-async API (`Context::scope`), asserting bit-for-bit equality
+with serial execution. `--ffi-verify` instead drives the C ABI
+(`cblas_dgemm` row+column major, `cblas_dtrsm`, and an aliasing
+`blasx_dgemm_async`→`blasx_dtrsm_async` chain) against the safe path,
+bit-for-bit. `header` prints (or writes with `--out`) the generated C
+header that ships as include/blasx.h."
 }
 
 /// Entry point used by main.rs; returns a process exit code.
@@ -137,6 +148,7 @@ pub fn dispatch(argv: &[String]) -> i32 {
         Some("run") => cmd_run(&args),
         Some("serve") => cmd_serve(&args),
         Some("batch") => cmd_batch(&args),
+        Some("header") => cmd_header(&args),
         Some("info") => cmd_info(),
         _ => {
             println!("{}", usage());
@@ -145,11 +157,181 @@ pub fn dispatch(argv: &[String]) -> i32 {
     }
 }
 
+/// Emit the generated C header (stdout, or `--out path`).
+fn cmd_header(args: &Args) -> i32 {
+    let text = crate::ffi::header::render();
+    match args.get("out") {
+        Some(path) => match std::fs::write(path, &text) {
+            Ok(()) => {
+                println!("wrote {path}");
+                0
+            }
+            Err(e) => {
+                eprintln!("header: cannot write {path}: {e}");
+                1
+            }
+        },
+        None => {
+            print!("{text}");
+            0
+        }
+    }
+}
+
+/// `serve --ffi-verify`: drive the C ABI entry points against the safe
+/// path, bit-for-bit — the drop-in acceptance check, runnable without
+/// a C compiler (the exports are plain functions to Rust).
+fn ffi_verify() -> i32 {
+    use crate::api::{self, types::Diag, types::Side, types::Trans, types::Uplo};
+    use crate::ffi::{self, capi, cblas};
+    use crate::util::prng::Prng;
+
+    // The safe serial reference mirrors the FFI default context's
+    // geometry (same tile size ⇒ same decomposition ⇒ bit-for-bit).
+    let dc = ffi::default_context();
+    let serial = api::Context::new(dc.n_devices)
+        .with_tile(dc.cfg.t)
+        .with_arena(dc.arena_bytes)
+        .with_kernel_threads(dc.cfg.worker_threads)
+        .with_persistent(false);
+    let (m, n, k) = (96usize, 80, 64);
+    let mut p = Prng::new(77);
+    let mut a = vec![0.0f64; m * k];
+    let mut b = vec![0.0f64; k * n];
+    let mut c0 = vec![0.0f64; m * n];
+    p.fill_f64(&mut a, -1.0, 1.0);
+    p.fill_f64(&mut b, -1.0, 1.0);
+    p.fill_f64(&mut c0, -1.0, 1.0);
+    // Declare the inputs per the C invalidation contract (the default
+    // context is process-global and warm across invocations).
+    let declare = |buf: &[f64]| unsafe {
+        capi::blasx_invalidate_host(
+            buf.as_ptr() as *const core::ffi::c_void,
+            std::mem::size_of_val(buf),
+        )
+    };
+    declare(&a);
+    declare(&b);
+    let (mi, ni, ki) = (m as i32, n as i32, k as i32);
+    let mut failures = 0;
+    let mut check = |name: &str, ok: bool| {
+        println!("  ffi-verify {name}: {}", if ok { "OK (bit-for-bit)" } else { "FAILED" });
+        if !ok {
+            failures += 1;
+        }
+    };
+
+    // 1. Column-major cblas_dgemm vs the safe path.
+    let mut c_ffi = c0.clone();
+    // SAFETY: slices sized to the exact BLAS footprints below.
+    unsafe {
+        cblas::cblas_dgemm(
+            ffi::CBLAS_COL_MAJOR, ffi::CBLAS_NO_TRANS, ffi::CBLAS_NO_TRANS, mi, ni, ki, 1.25,
+            a.as_ptr(), mi, b.as_ptr(), ki, -0.5, c_ffi.as_mut_ptr(), mi,
+        );
+    }
+    let mut c_safe = c0.clone();
+    api::dgemm(&serial, Trans::No, Trans::No, m, n, k, 1.25, &a, m, &b, k, -0.5, &mut c_safe, m)
+        .expect("safe dgemm");
+    check("cblas_dgemm (col-major)", c_ffi == c_safe);
+
+    // 2. Row-major cblas_dgemm: row-major buffers are the transposed
+    //    col-major ones; the result must transpose back to the same C.
+    let mut a_rm = vec![0.0f64; m * k];
+    let mut b_rm = vec![0.0f64; k * n];
+    let mut c_rm = vec![0.0f64; m * n];
+    for i in 0..m {
+        for j in 0..k {
+            a_rm[i * k + j] = a[j * m + i];
+        }
+    }
+    for i in 0..k {
+        for j in 0..n {
+            b_rm[i * n + j] = b[j * k + i];
+        }
+    }
+    for i in 0..m {
+        for j in 0..n {
+            c_rm[i * n + j] = c0[j * m + i];
+        }
+    }
+    declare(&a_rm);
+    declare(&b_rm);
+    // SAFETY: row-major buffers sized to the same footprints.
+    unsafe {
+        cblas::cblas_dgemm(
+            ffi::CBLAS_ROW_MAJOR, ffi::CBLAS_NO_TRANS, ffi::CBLAS_NO_TRANS, mi, ni, ki, 1.25,
+            a_rm.as_ptr(), ki, b_rm.as_ptr(), ni, -0.5, c_rm.as_mut_ptr(), ni,
+        );
+    }
+    let mut roundtrip = vec![0.0f64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            roundtrip[j * m + i] = c_rm[i * n + j];
+        }
+    }
+    check("cblas_dgemm (row-major)", roundtrip == c_safe);
+
+    // 3. cblas_dtrsm vs the safe path (in place).
+    let mut tri = vec![0.0f64; m * m];
+    p.fill_f64(&mut tri, -0.1, 0.1);
+    for i in 0..m {
+        tri[i * m + i] = 2.0;
+    }
+    declare(&tri);
+    let mut x_ffi = c_safe.clone();
+    // SAFETY: footprints as above; B is in/out and disjoint from A.
+    unsafe {
+        cblas::cblas_dtrsm(
+            ffi::CBLAS_COL_MAJOR, ffi::CBLAS_LEFT, ffi::CBLAS_UPPER, ffi::CBLAS_NO_TRANS,
+            ffi::CBLAS_NON_UNIT, mi, ni, 1.0, tri.as_ptr(), mi, x_ffi.as_mut_ptr(), mi,
+        );
+    }
+    let mut x_safe = c_safe.clone();
+    api::trsm(&serial, Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, m, n, 1.0, &tri, m, &mut x_safe, m)
+        .expect("safe trsm");
+    check("cblas_dtrsm", x_ffi == x_safe);
+
+    // 4. Aliasing async chain: C := A·B, then solve tri·X = C in place
+    //    on the SAME buffer — the admission RAW edge orders the two
+    //    C-ABI jobs exactly like the serial pair above.
+    let mut c_async = c0.clone();
+    // SAFETY: all buffers outlive the blasx_wait calls below.
+    let (j1, j2) = unsafe {
+        (
+            capi::blasx_dgemm_async(
+                ffi::CBLAS_COL_MAJOR, ffi::CBLAS_NO_TRANS, ffi::CBLAS_NO_TRANS, mi, ni, ki,
+                1.25, a.as_ptr(), mi, b.as_ptr(), ki, -0.5, c_async.as_mut_ptr(), mi,
+            ),
+            capi::blasx_dtrsm_async(
+                ffi::CBLAS_COL_MAJOR, ffi::CBLAS_LEFT, ffi::CBLAS_UPPER, ffi::CBLAS_NO_TRANS,
+                ffi::CBLAS_NON_UNIT, mi, ni, 1.0, tri.as_ptr(), mi, c_async.as_mut_ptr(), mi,
+            ),
+        )
+    };
+    let ok = !j1.is_null() && !j2.is_null();
+    // Wait newest-first: order must not matter.
+    let (s2, s1) = unsafe { (capi::blasx_wait(j2), capi::blasx_wait(j1)) };
+    check("blasx_*_async aliasing chain", ok && s1 == 0 && s2 == 0 && c_async == x_safe);
+
+    if failures == 0 {
+        println!("  ffi-verify: all checks passed");
+        0
+    } else {
+        eprintln!("  ffi-verify: {failures} check(s) FAILED");
+        1
+    }
+}
+
 /// Multi-client stress mode: N threads share one persistent context
 /// and hammer the multi-tenant scheduler with independent DGEMMs.
 fn cmd_serve(args: &Args) -> i32 {
     use crate::api::{self, types::Trans};
     use crate::util::prng::Prng;
+
+    if args.get("ffi-verify").is_some() {
+        return ffi_verify();
+    }
 
     let clients = args.get_usize("clients", 4).max(1);
     let jobs = args.get_usize("jobs", 8).max(1);
@@ -212,6 +394,47 @@ fn cmd_serve(args: &Args) -> i32 {
                         .fold(0.0f64, f64::max);
                     if diff > 1e-9 {
                         eprintln!("serve[client {client}]: verification failed ({diff})");
+                        failed.store(true, std::sync::atomic::Ordering::SeqCst);
+                    }
+                    // Scope path: an aliasing dgemm→dtrsm chain (the
+                    // trsm reads AND overwrites the dgemm's output —
+                    // the RAW edge orders the two in-flight jobs), must
+                    // be bit-for-bit what serial one-shot execution
+                    // produces.
+                    let mut tri = vec![0.0f64; n * n];
+                    p.fill_f64(&mut tri, -0.05, 0.05);
+                    for i in 0..n {
+                        tri[i * n + i] = 2.0;
+                    }
+                    ctx.invalidate_host(&tri);
+                    let mut chain = vec![0.0f64; n * n];
+                    let scope_res = ctx.scope(|s| {
+                        use crate::api::types::{Diag, Side, Uplo};
+                        let (ra, rb, rt) = (s.input(&a), s.input(&b), s.input(&tri));
+                        let rc = s.buffer(&mut chain);
+                        let _ = s.dgemm(Trans::No, Trans::No, n, n, n, 1.0, ra, n, rb, n, 0.0, rc, n)?;
+                        let _ = s.dtrsm(
+                            Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, n, n, 1.0, rt, n,
+                            rc, n,
+                        )?;
+                        Ok(())
+                    });
+                    if let Err(e) = scope_res {
+                        eprintln!("serve[client {client}]: scope chain failed: {e}");
+                        failed.store(true, std::sync::atomic::Ordering::SeqCst);
+                        return;
+                    }
+                    let serial = api::Context::new(devices)
+                        .with_tile(t)
+                        .with_persistent(false);
+                    let mut want_chain = vec![0.0f64; n * n];
+                    use crate::api::types::{Diag, Side, Uplo};
+                    api::dgemm(&serial, Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut want_chain, n)
+                        .expect("serial dgemm");
+                    api::trsm(&serial, Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, n, n, 1.0, &tri, n, &mut want_chain, n)
+                        .expect("serial trsm");
+                    if chain != want_chain {
+                        eprintln!("serve[client {client}]: scope chain diverged from serial");
                         failed.store(true, std::sync::atomic::Ordering::SeqCst);
                     }
                 }
@@ -682,5 +905,22 @@ mod tests {
     fn batch_rejects_missing_file() {
         assert_eq!(dispatch(&sv(&["batch", "/nonexistent/x.json"])), 1);
         assert_eq!(dispatch(&sv(&["batch"])), 2);
+    }
+
+    #[test]
+    fn header_prints_and_writes() {
+        assert_eq!(dispatch(&sv(&["header"])), 0);
+        let path = std::env::temp_dir().join(format!("blasx_h_{}.h", std::process::id()));
+        assert_eq!(dispatch(&sv(&["header", "--out", path.to_str().unwrap()])), 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(text, crate::ffi::header::render());
+    }
+
+    #[test]
+    fn serve_ffi_verify_passes() {
+        // The drop-in acceptance check: C entry points bit-for-bit
+        // against the safe path, including the aliasing async chain.
+        assert_eq!(dispatch(&sv(&["serve", "--ffi-verify"])), 0);
     }
 }

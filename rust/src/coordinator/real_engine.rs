@@ -50,6 +50,7 @@ use crate::runtime::TileExecutor;
 use crate::sched::{task_priority, Station};
 use crate::task::{Step, Task, TaskSet, TileOp, TileRef};
 use crate::tile::{HostMat, MatId, TileKey};
+use crate::util::once::OnceCell;
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
@@ -147,6 +148,13 @@ pub(crate) struct EngineCore {
     /// task enqueue and job completion so sleepers never busy-spin.
     work_mx: Mutex<()>,
     work_cv: Condvar,
+    /// Process-shared PJRT tile executor, built on the first PJRT job
+    /// and reused by every concurrent tenant afterwards (the
+    /// `KernelPool` sharing pattern — previously each job constructed
+    /// its own). The underlying compiled-executable cache is already
+    /// process-wide (`PjrtPool`); this removes the per-job handle and
+    /// artifact-store probe from the submit path.
+    executor: OnceCell<TileExecutor>,
 }
 
 impl EngineCore {
@@ -166,7 +174,15 @@ impl EngineCore {
             alloc,
             work_mx: Mutex::new(()),
             work_cv: Condvar::new(),
+            executor: OnceCell::new(),
         }
+    }
+
+    /// The shared PJRT tile executor (lazy; a failed init — e.g. a
+    /// missing artifact store — is retried by the next PJRT job and
+    /// surfaces as that job's failure, not a poisoned fleet).
+    pub(crate) fn tile_executor(&self) -> Result<&TileExecutor> {
+        self.executor.get_or_try_init(TileExecutor::new)
     }
 
     /// The tile caches, recovering a poisoned lock: a contained worker
@@ -290,8 +306,13 @@ impl TransferCounters {
 /// The per-call half of the engine: one submitted call (or fused
 /// batch). Borrows the task set and operand wraps for `'m`; the
 /// resident runtime erases that lifetime — a blocking caller parks
-/// until the job retires, an async caller's borrows are pinned by its
-/// [`crate::serve::JobHandle`] (which waits on drop).
+/// until the job retires; an async job OWNS its wraps (`OwnedJob` in
+/// `runtime::service`, alive until retirement via the job table's
+/// Arc), and the liveness of the *user buffers* behind them is
+/// guaranteed by the scope close barrier (`Context::scope` waits for
+/// every job in its own frame — handle drop is a plain detach and is
+/// NOT load-bearing) or, on the C ABI, by the caller's `blasx_wait`
+/// contract.
 pub(crate) struct JobState<'m, T: Scalar> {
     cfg: RunConfig,
     tasks: &'m [Task],
@@ -302,7 +323,6 @@ pub(crate) struct JobState<'m, T: Scalar> {
     /// Operand sets, indexed by `Task::p` / `TileRef::p` (a single
     /// routine call is a batch of one).
     mats: Vec<Mats<'m, T>>,
-    executor: Option<TileExecutor>,
     /// First kernel error (poisoning the run).
     failure: Mutex<Option<Error>>,
     /// Steals per device (observability).
@@ -325,10 +345,6 @@ impl<'m, T: Scalar> JobState<'m, T> {
             ts.tasks.iter().all(|t| t.p < problems.len()),
             "task problem index out of range"
         );
-        let executor = match cfg.backend {
-            Backend::Pjrt => Some(TileExecutor::new()?),
-            Backend::Hostblas => None,
-        };
         let state = JobState {
             cfg: cfg.clone(),
             tasks: &ts.tasks,
@@ -337,7 +353,6 @@ impl<'m, T: Scalar> JobState<'m, T> {
             queue: MsQueue::new(),
             stations: (0..n_devices).map(|_| Mutex::new(Station::new(cfg.rs_capacity))).collect(),
             mats: problems,
-            executor,
             failure: Mutex::new(None),
             steals: (0..n_devices).map(|_| AtomicUsize::new(0)).collect(),
             tasks_done: (0..n_devices).map(|_| AtomicUsize::new(0)).collect(),
@@ -842,7 +857,10 @@ fn exec_step<T: Scalar>(
     let beta = T::from_f64(step.beta);
     let c = core.arenas[dev].slice::<T>(c_off, tile_elems);
 
-    if let Some(ex) = &job.executor {
+    if job.cfg.backend == Backend::Pjrt {
+        // One process-shared executor serves every concurrent tenant
+        // (built lazily on the first PJRT step).
+        let ex = core.tile_executor()?;
         // SAFETY: a/b blocks are pinned for the round; kernels never
         // write them. Slices alias no live &mut.
         let a = a_off.map(|o| &*core.arenas[dev].slice::<T>(o, tile_elems));

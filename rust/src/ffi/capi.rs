@@ -1,0 +1,417 @@
+//! `blasx_*` exports: non-blocking submission, waits, and runtime
+//! control for C callers.
+//!
+//! `blasx_{s,d}gemm_async` / `blasx_{s,d}trsm_async` admit a job to
+//! the resident multi-tenant runtime and return an opaque
+//! `blasx_job_t*` immediately; `blasx_wait` parks until the job
+//! retires, frees the handle, and returns a status code. Jobs whose
+//! operand byte ranges alias an in-flight job's are ordered by the
+//! admission table (RAW/WAR/WAW edges), so a chain like
+//!
+//! ```c
+//! blasx_job_t *j1 = blasx_dgemm_async(..., C, ldc);        /* C := A·B   */
+//! blasx_job_t *j2 = blasx_dtrsm_async(..., T, ldt, C, ldc); /* solve in C */
+//! blasx_wait(j2); blasx_wait(j1);
+//! ```
+//!
+//! is pipelined yet bit-for-bit identical to the blocking sequence.
+//!
+//! **Liveness contract**: every buffer passed to an `*_async` entry
+//! must remain valid until `blasx_wait` returns for that job (C has no
+//! borrow checker; this is the standard asynchronous-C-API contract —
+//! the safe-Rust surface gets the same guarantee from
+//! `Context::scope`'s close barrier instead). An unwaited job keeps
+//! running; leaking its handle leaks memory but the runtime owns the
+//! job's backing, so workers never touch a freed task graph.
+
+use super::{
+    default_context, diag_of, dim_of, fold_gemm_row_major, fold_sided_row_major, order_of,
+    raw_operand, record_error, side_of, status_of, trans_of, uplo_of, Order, BLASX_ERR_INTERNAL,
+    BLASX_OK,
+};
+use crate::api::l3::{plan_gemm, plan_trsm};
+use crate::api::types::Scalar;
+use crate::coordinator::real_engine::OwnedProblem;
+use crate::error::{illegal, Error, Result};
+use crate::runtime::Runtime;
+use crate::serve::admission::JobCtl;
+use crate::serve::DeviceJob;
+use crate::task::{taskize_gemm, taskize_trsm, GemmDesc, TriDesc};
+use crate::tile::{HostMat, MatId};
+use core::ffi::{c_char, c_int, c_void};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+/// Opaque in-flight job handle handed across the ABI (`blasx_job_t`).
+/// Holds the runtime alive until waited or leaked.
+pub struct BlasxJob {
+    rt: Arc<Runtime>,
+    job: Arc<dyn DeviceJob>,
+    ctl: Arc<JobCtl>,
+}
+
+/// Admit an owned-problem job on the default context and box its
+/// handle for C.
+fn admit<T: Scalar>(
+    ts: crate::task::TaskSet,
+    problem: OwnedProblem<T>,
+) -> Result<*mut BlasxJob> {
+    let ctx = default_context();
+    if !ctx.persistent {
+        return Err(Error::Config(
+            "async submission requires the persistent runtime (unset BLASX_PERSISTENT=0)".into(),
+        ));
+    }
+    let rt = ctx.runtime();
+    let (job, ctl) = rt.submit_owned(&ctx.cfg, ts, vec![problem])?;
+    Ok(Box::into_raw(Box::new(BlasxJob { rt, job, ctl })))
+}
+
+/// A zero-footprint operand wrap for a degenerate (m==0 or n==0) job.
+/// The blocking `cblas_*` path quick-returns on these, but an async
+/// entry must still hand back a waitable handle (NULL signals error),
+/// so it admits an empty task set over wraps whose pointers — NULL
+/// included, exactly as the blocking path tolerates — are never read.
+///
+/// # Safety
+/// Trivially safe to call (the pointer is stored, never dereferenced:
+/// rows = cols = 0); unsafe only to mirror `raw_operand`'s contract.
+unsafe fn zero_wrap<T: Scalar>(ptr: *mut T, t: usize, id: MatId) -> HostMat<T> {
+    HostMat::from_raw(ptr, 0, 0, 1, t, id)
+}
+
+/// Run `f` with panics contained; null on any error.
+fn async_entry(routine: &'static str, f: impl FnOnce() -> Result<*mut BlasxJob>) -> *mut BlasxJob {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(Ok(p)) => p,
+        Ok(Err(e)) => {
+            record_error(routine, &e);
+            std::ptr::null_mut()
+        }
+        Err(_) => {
+            record_error(routine, &Error::Internal("panic contained at the C ABI".into()));
+            std::ptr::null_mut()
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_async_entry<T: Scalar>(
+    routine: &'static str,
+    order: c_int,
+    transa: c_int,
+    transb: c_int,
+    m: c_int,
+    n: c_int,
+    k: c_int,
+    alpha: T,
+    a: *const T,
+    lda: c_int,
+    b: *const T,
+    ldb: c_int,
+    beta: T,
+    c: *mut T,
+    ldc: c_int,
+) -> *mut BlasxJob {
+    async_entry(routine, || {
+        let order = order_of(order).ok_or_else(|| illegal(routine, 1, "bad order"))?;
+        let mut ta = trans_of(transa).ok_or_else(|| illegal(routine, 2, "bad transA"))?;
+        let mut tb = trans_of(transb).ok_or_else(|| illegal(routine, 3, "bad transB"))?;
+        let mut m = dim_of(m).ok_or_else(|| illegal(routine, 4, "m < 0"))?;
+        let mut n = dim_of(n).ok_or_else(|| illegal(routine, 5, "n < 0"))?;
+        let k = dim_of(k).ok_or_else(|| illegal(routine, 6, "k < 0"))?;
+        let mut lda = dim_of(lda).ok_or_else(|| illegal(routine, 9, "lda < 0"))?;
+        let mut ldb = dim_of(ldb).ok_or_else(|| illegal(routine, 11, "ldb < 0"))?;
+        let ldc = dim_of(ldc).ok_or_else(|| illegal(routine, 14, "ldc < 0"))?;
+        let (mut a, mut b) = (a, b);
+        if order == Order::RowMajor {
+            fold_gemm_row_major(&mut ta, &mut tb, &mut m, &mut n, &mut lda, &mut ldb, &mut a, &mut b);
+        }
+        let t = default_context().tile();
+        if m == 0 || n == 0 {
+            // Degenerate no-op (parity with the blocking quick return):
+            // empty task set, pointers never read.
+            let d = GemmDesc { ta, tb, m, n, k, alpha: alpha.to_f64(), beta: beta.to_f64(), t };
+            // SAFETY: zero-footprint wraps — see `zero_wrap`.
+            let (am, bm, cm) = unsafe {
+                (
+                    zero_wrap(a as *mut T, t, MatId::A),
+                    zero_wrap(b as *mut T, t, MatId::B),
+                    zero_wrap(c, t, MatId::C),
+                )
+            };
+            return admit(taskize_gemm(&d), OwnedProblem { a: am, b: Some(bm), c: cm });
+        }
+        let (ts, dims) =
+            plan_gemm(t, ta, tb, m, n, k, alpha.to_f64(), beta.to_f64(), lda, ldb, ldc)?;
+        let (ar, ac) = dims.a;
+        let (br, bc) = dims.b.expect("gemm has a B operand");
+        // SAFETY: liveness contract (module docs) — buffers valid until
+        // blasx_wait; aliasing writers ordered by admission.
+        let (am, bm, cm) = unsafe {
+            (
+                raw_operand(routine, 8, a as *mut T, ar, ac, lda, t, MatId::A)?,
+                raw_operand(routine, 10, b as *mut T, br, bc, ldb, t, MatId::B)?,
+                raw_operand(routine, 13, c, m, n, ldc, t, MatId::C)?,
+            )
+        };
+        admit(ts, OwnedProblem { a: am, b: Some(bm), c: cm })
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn trsm_async_entry<T: Scalar>(
+    routine: &'static str,
+    order: c_int,
+    side: c_int,
+    uplo: c_int,
+    transa: c_int,
+    diag: c_int,
+    m: c_int,
+    n: c_int,
+    alpha: T,
+    a: *const T,
+    lda: c_int,
+    b: *mut T,
+    ldb: c_int,
+) -> *mut BlasxJob {
+    async_entry(routine, || {
+        let order = order_of(order).ok_or_else(|| illegal(routine, 1, "bad order"))?;
+        let mut side = side_of(side).ok_or_else(|| illegal(routine, 2, "bad side"))?;
+        let mut uplo = uplo_of(uplo).ok_or_else(|| illegal(routine, 3, "bad uplo"))?;
+        let ta = trans_of(transa).ok_or_else(|| illegal(routine, 4, "bad transA"))?;
+        let diag = diag_of(diag).ok_or_else(|| illegal(routine, 5, "bad diag"))?;
+        let mut m = dim_of(m).ok_or_else(|| illegal(routine, 6, "m < 0"))?;
+        let mut n = dim_of(n).ok_or_else(|| illegal(routine, 7, "n < 0"))?;
+        let lda = dim_of(lda).ok_or_else(|| illegal(routine, 10, "lda < 0"))?;
+        let ldb = dim_of(ldb).ok_or_else(|| illegal(routine, 12, "ldb < 0"))?;
+        if order == Order::RowMajor {
+            fold_sided_row_major(&mut side, &mut uplo, &mut m, &mut n);
+        }
+        let t = default_context().tile();
+        if m == 0 || n == 0 {
+            // Degenerate no-op — see the gemm twin above.
+            let d = TriDesc { side, uplo, ta, diag, m, n, alpha: alpha.to_f64(), t };
+            // SAFETY: zero-footprint wraps — see `zero_wrap`.
+            let (am, cm) = unsafe {
+                (zero_wrap(a as *mut T, t, MatId::A), zero_wrap(b, t, MatId::C))
+            };
+            return admit(taskize_trsm(&d), OwnedProblem { a: am, b: None, c: cm });
+        }
+        let (ts, dims) = plan_trsm(t, side, uplo, ta, diag, m, n, alpha.to_f64(), lda, ldb)?;
+        let (na, _) = dims.a;
+        // SAFETY: liveness contract (module docs).
+        let (am, cm) = unsafe {
+            (
+                raw_operand(routine, 9, a as *mut T, na, na, lda, t, MatId::A)?,
+                raw_operand(routine, 11, b, m, n, ldb, t, MatId::C)?,
+            )
+        };
+        admit(ts, OwnedProblem { a: am, b: None, c: cm })
+    })
+}
+
+/// Non-blocking double-precision GEMM; returns a `blasx_job_t*` (NULL
+/// on error — see `blasx_last_error`). Pass the handle to
+/// `blasx_wait`.
+///
+/// # Safety
+/// As the blocking entries (BLAS buffer contract), plus the async
+/// liveness rule: all buffers must stay valid until `blasx_wait`
+/// returns for the job this call created.
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn blasx_dgemm_async(
+    order: c_int,
+    transa: c_int,
+    transb: c_int,
+    m: c_int,
+    n: c_int,
+    k: c_int,
+    alpha: f64,
+    a: *const f64,
+    lda: c_int,
+    b: *const f64,
+    ldb: c_int,
+    beta: f64,
+    c: *mut f64,
+    ldc: c_int,
+) -> *mut BlasxJob {
+    gemm_async_entry(
+        "blasx_dgemm_async", order, transa, transb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc,
+    )
+}
+
+/// Non-blocking single-precision GEMM (see `blasx_dgemm_async`).
+///
+/// # Safety
+/// As the blocking entries (BLAS buffer contract), plus the async
+/// liveness rule: all buffers must stay valid until `blasx_wait`
+/// returns for the job this call created.
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn blasx_sgemm_async(
+    order: c_int,
+    transa: c_int,
+    transb: c_int,
+    m: c_int,
+    n: c_int,
+    k: c_int,
+    alpha: f32,
+    a: *const f32,
+    lda: c_int,
+    b: *const f32,
+    ldb: c_int,
+    beta: f32,
+    c: *mut f32,
+    ldc: c_int,
+) -> *mut BlasxJob {
+    gemm_async_entry(
+        "blasx_sgemm_async", order, transa, transb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc,
+    )
+}
+
+/// Non-blocking double-precision TRSM, X overwriting B (see
+/// `blasx_dgemm_async` for the handle/liveness contract).
+///
+/// # Safety
+/// As the blocking entries (BLAS buffer contract), plus the async
+/// liveness rule: all buffers must stay valid until `blasx_wait`
+/// returns for the job this call created.
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn blasx_dtrsm_async(
+    order: c_int,
+    side: c_int,
+    uplo: c_int,
+    transa: c_int,
+    diag: c_int,
+    m: c_int,
+    n: c_int,
+    alpha: f64,
+    a: *const f64,
+    lda: c_int,
+    b: *mut f64,
+    ldb: c_int,
+) -> *mut BlasxJob {
+    trsm_async_entry("blasx_dtrsm_async", order, side, uplo, transa, diag, m, n, alpha, a, lda, b, ldb)
+}
+
+/// Non-blocking single-precision TRSM.
+///
+/// # Safety
+/// As the blocking entries (BLAS buffer contract), plus the async
+/// liveness rule: all buffers must stay valid until `blasx_wait`
+/// returns for the job this call created.
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn blasx_strsm_async(
+    order: c_int,
+    side: c_int,
+    uplo: c_int,
+    transa: c_int,
+    diag: c_int,
+    m: c_int,
+    n: c_int,
+    alpha: f32,
+    a: *const f32,
+    lda: c_int,
+    b: *mut f32,
+    ldb: c_int,
+) -> *mut BlasxJob {
+    trsm_async_entry("blasx_strsm_async", order, side, uplo, transa, diag, m, n, alpha, a, lda, b, ldb)
+}
+
+/// Park until the job retires, free its handle, and return its status
+/// (0 = success; see `include/blasx.h` for the code table). Outputs
+/// are fully written back when this returns 0. Passing NULL returns
+/// BLASX_ERR_INTERNAL.
+///
+/// # Safety
+/// `job` must be a pointer returned by a `blasx_*_async` entry, not
+/// yet waited (each handle is freed by exactly one wait).
+#[no_mangle]
+pub unsafe extern "C" fn blasx_wait(job: *mut BlasxJob) -> c_int {
+    if job.is_null() {
+        record_error("blasx_wait", &Error::Internal("null job handle".into()));
+        return BLASX_ERR_INTERNAL;
+    }
+    let job = Box::from_raw(job);
+    match catch_unwind(AssertUnwindSafe(|| {
+        job.ctl.wait_retired();
+        job.job.report(job.rt.core()).map(|_| ())
+    })) {
+        Ok(Ok(())) => BLASX_OK,
+        Ok(Err(e)) => {
+            record_error("blasx_wait", &e);
+            status_of(&e)
+        }
+        Err(_) => {
+            record_error("blasx_wait", &Error::Internal("panic contained at the C ABI".into()));
+            BLASX_ERR_INTERNAL
+        }
+    }
+}
+
+/// Has the job retired? 1 = done (wait will not block), 0 = in flight,
+/// -1 = NULL handle. Does not free the handle.
+///
+/// # Safety
+/// `job` must be a live handle from a `blasx_*_async` entry.
+#[no_mangle]
+pub unsafe extern "C" fn blasx_job_done(job: *const BlasxJob) -> c_int {
+    if job.is_null() {
+        return -1;
+    }
+    (*job).ctl.is_retired() as c_int
+}
+
+/// Declare that `bytes` bytes at `ptr` were mutated (or freed and
+/// reallocated) by the caller since a previous call read them: cached
+/// tiles of that range are invalidated. Outputs never need this —
+/// every call re-epochs its output range automatically.
+///
+/// # Safety
+/// `ptr` is only used as an address (never dereferenced); any value is
+/// safe.
+#[no_mangle]
+pub unsafe extern "C" fn blasx_invalidate_host(ptr: *const c_void, bytes: usize) {
+    let lo = ptr as usize;
+    if let Some(rt) = default_context().runtime_if_booted() {
+        rt.invalidate_bytes(lo, lo.saturating_add(bytes));
+    }
+}
+
+/// Shut the default context's resident runtime down (it reboots
+/// lazily on the next call). Call after the last outstanding
+/// `blasx_wait` if the host application wants the worker threads gone.
+#[no_mangle]
+pub extern "C" fn blasx_shutdown() {
+    let _ = catch_unwind(AssertUnwindSafe(|| default_context().shutdown_runtime()));
+}
+
+/// Copy the calling thread's last BLASX error message (NUL-terminated)
+/// into `buf` and return the full message length (excluding the NUL).
+/// A return of 0 means no error has been recorded on this thread.
+///
+/// # Safety
+/// `buf` must point to `cap` writable bytes (or be NULL with cap 0 to
+/// query the length).
+#[no_mangle]
+pub unsafe extern "C" fn blasx_last_error(buf: *mut c_char, cap: usize) -> usize {
+    let msg = super::last_error_message();
+    let bytes = msg.as_bytes();
+    if !buf.is_null() && cap > 0 {
+        let n = bytes.len().min(cap - 1);
+        std::ptr::copy_nonoverlapping(bytes.as_ptr() as *const c_char, buf, n);
+        *buf.add(n) = 0;
+    }
+    bytes.len()
+}
+
+/// Library identification string (static storage).
+#[no_mangle]
+pub extern "C" fn blasx_version() -> *const c_char {
+    // Static NUL-terminated literal: always valid to hand out.
+    concat!("blasx ", env!("CARGO_PKG_VERSION"), "\0").as_ptr() as *const c_char
+}

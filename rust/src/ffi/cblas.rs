@@ -1,0 +1,647 @@
+//! `cblas_*` exports: the drop-in blocking surface.
+//!
+//! Each entry point maps the CBLAS integer enums, folds row-major
+//! calls onto the column-major engine with the standard operand/flag
+//! swaps (row-major X *is* column-major X^T, so GEMM swaps A/B and
+//! their transposes, the symmetric/triangular routines flip
+//! `side`/`uplo` and swap M/N), validates pointers, and executes the
+//! planned call on the process-global default context — i.e. through
+//! the resident multi-tenant runtime. Errors follow CBLAS convention:
+//! an xerbla-style line on stderr, the call returns without computing
+//! (`blasx_last_error` retrieves the message).
+//!
+//! Operands are wrapped through [`super::raw_operand`], **not** Rust
+//! slices: the C ABI advertises that a blocking call may alias an
+//! in-flight async job's buffers (the admission table orders the
+//! accesses), so conjuring a `&mut [T]` over the output here — live
+//! across the submit-and-wait while workers of an ordered-before job
+//! still write the range — would be undefined behavior even though
+//! the bytes never race.
+//!
+//! Panics are contained at the ABI boundary: unwinding across
+//! `extern "C"` is undefined behavior, so every entry runs under
+//! `catch_unwind` and reports instead.
+
+use super::{
+    default_context, diag_of, dim_of, fold_gemm_row_major, fold_sided_row_major,
+    fold_syrk_row_major, order_of, raw_operand, record_error, side_of, trans_of, uplo_of, Order,
+};
+use crate::api::l3::{plan_gemm, plan_symm, plan_syr2k, plan_syrk, plan_trmm, plan_trsm};
+use crate::api::types::{Diag, Scalar, Side, Trans, Uplo};
+use crate::coordinator::real_engine::Mats;
+use crate::error::{illegal, Error, Result};
+use crate::tile::MatId;
+use core::ffi::c_int;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Run `f` with panics contained and errors reported CBLAS-style.
+fn entry(routine: &'static str, f: impl FnOnce() -> Result<()>) {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(Ok(())) => {}
+        Ok(Err(e)) => record_error(routine, &e),
+        Err(_) => record_error(routine, &Error::Internal("panic contained at the C ABI".into())),
+    }
+}
+
+// --- GEMM ------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_entry<T: Scalar>(
+    routine: &'static str,
+    order: c_int,
+    transa: c_int,
+    transb: c_int,
+    m: c_int,
+    n: c_int,
+    k: c_int,
+    alpha: T,
+    a: *const T,
+    lda: c_int,
+    b: *const T,
+    ldb: c_int,
+    beta: T,
+    c: *mut T,
+    ldc: c_int,
+) {
+    entry(routine, || {
+        let order = order_of(order).ok_or_else(|| illegal(routine, 1, "bad order"))?;
+        let mut ta = trans_of(transa).ok_or_else(|| illegal(routine, 2, "bad transA"))?;
+        let mut tb = trans_of(transb).ok_or_else(|| illegal(routine, 3, "bad transB"))?;
+        let mut m = dim_of(m).ok_or_else(|| illegal(routine, 4, "m < 0"))?;
+        let mut n = dim_of(n).ok_or_else(|| illegal(routine, 5, "n < 0"))?;
+        let k = dim_of(k).ok_or_else(|| illegal(routine, 6, "k < 0"))?;
+        let mut lda = dim_of(lda).ok_or_else(|| illegal(routine, 9, "lda < 0"))?;
+        let mut ldb = dim_of(ldb).ok_or_else(|| illegal(routine, 11, "ldb < 0"))?;
+        let ldc = dim_of(ldc).ok_or_else(|| illegal(routine, 14, "ldc < 0"))?;
+        let (mut a, mut b) = (a, b);
+        if order == Order::RowMajor {
+            fold_gemm_row_major(&mut ta, &mut tb, &mut m, &mut n, &mut lda, &mut ldb, &mut a, &mut b);
+        }
+        if m == 0 || n == 0 {
+            return Ok(());
+        }
+        let ctx = default_context();
+        let t = ctx.tile();
+        let (ts, dims) =
+            plan_gemm(t, ta, tb, m, n, k, alpha.to_f64(), beta.to_f64(), lda, ldb, ldc)?;
+        let (ar, ac) = dims.a;
+        let (br, bc) = dims.b.expect("gemm has a B operand");
+        // SAFETY: BLAS buffer contract (footprint per ld/dims), held
+        // for the duration of this blocking call.
+        let (am, bm, cm) = unsafe {
+            (
+                raw_operand(routine, 8, a as *mut T, ar, ac, lda, t, MatId::A)?,
+                raw_operand(routine, 10, b as *mut T, br, bc, ldb, t, MatId::B)?,
+                raw_operand(routine, 13, c, m, n, ldc, t, MatId::C)?,
+            )
+        };
+        ctx.execute(&ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }]).map(|_| ())
+    })
+}
+
+/// `C := alpha*op(A)*op(B) + beta*C`, double precision (CBLAS ABI).
+///
+/// # Safety
+/// Standard BLAS buffer contract: every non-null pointer must cover
+/// the column-/row-major footprint implied by its dimensions and
+/// leading dimension for the duration of the call, and the output
+/// must not overlap the inputs.
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn cblas_dgemm(
+    order: c_int,
+    transa: c_int,
+    transb: c_int,
+    m: c_int,
+    n: c_int,
+    k: c_int,
+    alpha: f64,
+    a: *const f64,
+    lda: c_int,
+    b: *const f64,
+    ldb: c_int,
+    beta: f64,
+    c: *mut f64,
+    ldc: c_int,
+) {
+    gemm_entry("cblas_dgemm", order, transa, transb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
+}
+
+/// Single-precision GEMM (CBLAS ABI).
+///
+/// # Safety
+/// As [`cblas_dgemm`].
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn cblas_sgemm(
+    order: c_int,
+    transa: c_int,
+    transb: c_int,
+    m: c_int,
+    n: c_int,
+    k: c_int,
+    alpha: f32,
+    a: *const f32,
+    lda: c_int,
+    b: *const f32,
+    ldb: c_int,
+    beta: f32,
+    c: *mut f32,
+    ldc: c_int,
+) {
+    gemm_entry("cblas_sgemm", order, transa, transb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
+}
+
+// --- SYRK / SYR2K ----------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn syrk_entry<T: Scalar>(
+    routine: &'static str,
+    order: c_int,
+    uplo: c_int,
+    trans: c_int,
+    n: c_int,
+    k: c_int,
+    alpha: T,
+    a: *const T,
+    lda: c_int,
+    beta: T,
+    c: *mut T,
+    ldc: c_int,
+) {
+    entry(routine, || {
+        let order = order_of(order).ok_or_else(|| illegal(routine, 1, "bad order"))?;
+        let mut uplo = uplo_of(uplo).ok_or_else(|| illegal(routine, 2, "bad uplo"))?;
+        let mut trans = trans_of(trans).ok_or_else(|| illegal(routine, 3, "bad trans"))?;
+        let n = dim_of(n).ok_or_else(|| illegal(routine, 4, "n < 0"))?;
+        let k = dim_of(k).ok_or_else(|| illegal(routine, 5, "k < 0"))?;
+        let lda = dim_of(lda).ok_or_else(|| illegal(routine, 8, "lda < 0"))?;
+        let ldc = dim_of(ldc).ok_or_else(|| illegal(routine, 11, "ldc < 0"))?;
+        if order == Order::RowMajor {
+            fold_syrk_row_major(&mut uplo, &mut trans);
+        }
+        if n == 0 {
+            return Ok(());
+        }
+        let ctx = default_context();
+        let t = ctx.tile();
+        let (ts, dims) =
+            plan_syrk(t, uplo, trans, n, k, alpha.to_f64(), beta.to_f64(), lda, ldc)?;
+        let (ar, ac) = dims.a;
+        // SAFETY: BLAS buffer contract.
+        let (am, cm) = unsafe {
+            (
+                raw_operand(routine, 7, a as *mut T, ar, ac, lda, t, MatId::A)?,
+                raw_operand(routine, 10, c, n, n, ldc, t, MatId::C)?,
+            )
+        };
+        ctx.execute(&ts, vec![Mats { a: &am, b: None, c: &cm }]).map(|_| ())
+    })
+}
+
+/// `C := alpha*op(A)*op(A)^T + beta*C`, double precision (CBLAS ABI).
+///
+/// # Safety
+/// As [`cblas_dgemm`].
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn cblas_dsyrk(
+    order: c_int,
+    uplo: c_int,
+    trans: c_int,
+    n: c_int,
+    k: c_int,
+    alpha: f64,
+    a: *const f64,
+    lda: c_int,
+    beta: f64,
+    c: *mut f64,
+    ldc: c_int,
+) {
+    syrk_entry("cblas_dsyrk", order, uplo, trans, n, k, alpha, a, lda, beta, c, ldc)
+}
+
+/// Single-precision SYRK (CBLAS ABI).
+///
+/// # Safety
+/// As [`cblas_dgemm`].
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn cblas_ssyrk(
+    order: c_int,
+    uplo: c_int,
+    trans: c_int,
+    n: c_int,
+    k: c_int,
+    alpha: f32,
+    a: *const f32,
+    lda: c_int,
+    beta: f32,
+    c: *mut f32,
+    ldc: c_int,
+) {
+    syrk_entry("cblas_ssyrk", order, uplo, trans, n, k, alpha, a, lda, beta, c, ldc)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn syr2k_entry<T: Scalar>(
+    routine: &'static str,
+    order: c_int,
+    uplo: c_int,
+    trans: c_int,
+    n: c_int,
+    k: c_int,
+    alpha: T,
+    a: *const T,
+    lda: c_int,
+    b: *const T,
+    ldb: c_int,
+    beta: T,
+    c: *mut T,
+    ldc: c_int,
+) {
+    entry(routine, || {
+        let order = order_of(order).ok_or_else(|| illegal(routine, 1, "bad order"))?;
+        let mut uplo = uplo_of(uplo).ok_or_else(|| illegal(routine, 2, "bad uplo"))?;
+        let mut trans = trans_of(trans).ok_or_else(|| illegal(routine, 3, "bad trans"))?;
+        let n = dim_of(n).ok_or_else(|| illegal(routine, 4, "n < 0"))?;
+        let k = dim_of(k).ok_or_else(|| illegal(routine, 5, "k < 0"))?;
+        let lda = dim_of(lda).ok_or_else(|| illegal(routine, 8, "lda < 0"))?;
+        let ldb = dim_of(ldb).ok_or_else(|| illegal(routine, 10, "ldb < 0"))?;
+        let ldc = dim_of(ldc).ok_or_else(|| illegal(routine, 13, "ldc < 0"))?;
+        if order == Order::RowMajor {
+            fold_syrk_row_major(&mut uplo, &mut trans);
+        }
+        if n == 0 {
+            return Ok(());
+        }
+        let ctx = default_context();
+        let t = ctx.tile();
+        let (ts, dims) =
+            plan_syr2k(t, uplo, trans, n, k, alpha.to_f64(), beta.to_f64(), lda, ldb, ldc)?;
+        let (ar, ac) = dims.a;
+        // SAFETY: BLAS buffer contract.
+        let (am, bm, cm) = unsafe {
+            (
+                raw_operand(routine, 7, a as *mut T, ar, ac, lda, t, MatId::A)?,
+                raw_operand(routine, 9, b as *mut T, ar, ac, ldb, t, MatId::B)?,
+                raw_operand(routine, 12, c, n, n, ldc, t, MatId::C)?,
+            )
+        };
+        ctx.execute(&ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }]).map(|_| ())
+    })
+}
+
+/// `C := alpha*(op(A)op(B)^T + op(B)op(A)^T) + beta*C`, double
+/// precision (CBLAS ABI).
+///
+/// # Safety
+/// As [`cblas_dgemm`].
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn cblas_dsyr2k(
+    order: c_int,
+    uplo: c_int,
+    trans: c_int,
+    n: c_int,
+    k: c_int,
+    alpha: f64,
+    a: *const f64,
+    lda: c_int,
+    b: *const f64,
+    ldb: c_int,
+    beta: f64,
+    c: *mut f64,
+    ldc: c_int,
+) {
+    syr2k_entry("cblas_dsyr2k", order, uplo, trans, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
+}
+
+/// Single-precision SYR2K (CBLAS ABI).
+///
+/// # Safety
+/// As [`cblas_dgemm`].
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn cblas_ssyr2k(
+    order: c_int,
+    uplo: c_int,
+    trans: c_int,
+    n: c_int,
+    k: c_int,
+    alpha: f32,
+    a: *const f32,
+    lda: c_int,
+    b: *const f32,
+    ldb: c_int,
+    beta: f32,
+    c: *mut f32,
+    ldc: c_int,
+) {
+    syr2k_entry("cblas_ssyr2k", order, uplo, trans, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
+}
+
+// --- SYMM ------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn symm_entry<T: Scalar>(
+    routine: &'static str,
+    order: c_int,
+    side: c_int,
+    uplo: c_int,
+    m: c_int,
+    n: c_int,
+    alpha: T,
+    a: *const T,
+    lda: c_int,
+    b: *const T,
+    ldb: c_int,
+    beta: T,
+    c: *mut T,
+    ldc: c_int,
+) {
+    entry(routine, || {
+        let order = order_of(order).ok_or_else(|| illegal(routine, 1, "bad order"))?;
+        let mut side = side_of(side).ok_or_else(|| illegal(routine, 2, "bad side"))?;
+        let mut uplo = uplo_of(uplo).ok_or_else(|| illegal(routine, 3, "bad uplo"))?;
+        let mut m = dim_of(m).ok_or_else(|| illegal(routine, 4, "m < 0"))?;
+        let mut n = dim_of(n).ok_or_else(|| illegal(routine, 5, "n < 0"))?;
+        let lda = dim_of(lda).ok_or_else(|| illegal(routine, 8, "lda < 0"))?;
+        let ldb = dim_of(ldb).ok_or_else(|| illegal(routine, 10, "ldb < 0"))?;
+        let ldc = dim_of(ldc).ok_or_else(|| illegal(routine, 13, "ldc < 0"))?;
+        if order == Order::RowMajor {
+            fold_sided_row_major(&mut side, &mut uplo, &mut m, &mut n);
+        }
+        if m == 0 || n == 0 {
+            return Ok(());
+        }
+        let ctx = default_context();
+        let t = ctx.tile();
+        let (ts, dims) =
+            plan_symm(t, side, uplo, m, n, alpha.to_f64(), beta.to_f64(), lda, ldb, ldc)?;
+        let (na, _) = dims.a;
+        // SAFETY: BLAS buffer contract.
+        let (am, bm, cm) = unsafe {
+            (
+                raw_operand(routine, 7, a as *mut T, na, na, lda, t, MatId::A)?,
+                raw_operand(routine, 9, b as *mut T, m, n, ldb, t, MatId::B)?,
+                raw_operand(routine, 12, c, m, n, ldc, t, MatId::C)?,
+            )
+        };
+        ctx.execute(&ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }]).map(|_| ())
+    })
+}
+
+/// `C := alpha*sym(A)*B + beta*C` (Left) / `alpha*B*sym(A) + beta*C`
+/// (Right), double precision (CBLAS ABI).
+///
+/// # Safety
+/// As [`cblas_dgemm`].
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn cblas_dsymm(
+    order: c_int,
+    side: c_int,
+    uplo: c_int,
+    m: c_int,
+    n: c_int,
+    alpha: f64,
+    a: *const f64,
+    lda: c_int,
+    b: *const f64,
+    ldb: c_int,
+    beta: f64,
+    c: *mut f64,
+    ldc: c_int,
+) {
+    symm_entry("cblas_dsymm", order, side, uplo, m, n, alpha, a, lda, b, ldb, beta, c, ldc)
+}
+
+/// Single-precision SYMM (CBLAS ABI).
+///
+/// # Safety
+/// As [`cblas_dgemm`].
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn cblas_ssymm(
+    order: c_int,
+    side: c_int,
+    uplo: c_int,
+    m: c_int,
+    n: c_int,
+    alpha: f32,
+    a: *const f32,
+    lda: c_int,
+    b: *const f32,
+    ldb: c_int,
+    beta: f32,
+    c: *mut f32,
+    ldc: c_int,
+) {
+    symm_entry("cblas_ssymm", order, side, uplo, m, n, alpha, a, lda, b, ldb, beta, c, ldc)
+}
+
+// --- TRMM / TRSM -----------------------------------------------------
+
+/// Shared parse + row-major fold for the two in-place triangular
+/// routines; returns the column-major arguments or `None` on quick
+/// return.
+type TriArgs = (Side, Uplo, Trans, Diag, usize, usize, usize, usize);
+
+#[allow(clippy::too_many_arguments)]
+fn trxm_args(
+    routine: &'static str,
+    order: c_int,
+    side: c_int,
+    uplo: c_int,
+    transa: c_int,
+    diag: c_int,
+    m: c_int,
+    n: c_int,
+    lda: c_int,
+    ldb: c_int,
+) -> Result<Option<TriArgs>> {
+    let order = order_of(order).ok_or_else(|| illegal(routine, 1, "bad order"))?;
+    let mut side = side_of(side).ok_or_else(|| illegal(routine, 2, "bad side"))?;
+    let mut uplo = uplo_of(uplo).ok_or_else(|| illegal(routine, 3, "bad uplo"))?;
+    let ta = trans_of(transa).ok_or_else(|| illegal(routine, 4, "bad transA"))?;
+    let diag = diag_of(diag).ok_or_else(|| illegal(routine, 5, "bad diag"))?;
+    let mut m = dim_of(m).ok_or_else(|| illegal(routine, 6, "m < 0"))?;
+    let mut n = dim_of(n).ok_or_else(|| illegal(routine, 7, "n < 0"))?;
+    let lda = dim_of(lda).ok_or_else(|| illegal(routine, 10, "lda < 0"))?;
+    let ldb = dim_of(ldb).ok_or_else(|| illegal(routine, 12, "ldb < 0"))?;
+    if order == Order::RowMajor {
+        fold_sided_row_major(&mut side, &mut uplo, &mut m, &mut n);
+    }
+    if m == 0 || n == 0 {
+        return Ok(None);
+    }
+    Ok(Some((side, uplo, ta, diag, m, n, lda, ldb)))
+}
+
+/// TRMM/TRSM shared executor over the planned task set.
+fn trxm_run<T: Scalar>(
+    routine: &'static str,
+    is_trsm: bool,
+    args: TriArgs,
+    alpha: T,
+    a: *const T,
+    b: *mut T,
+) -> Result<()> {
+    let (side, uplo, ta, diag, m, n, lda, ldb) = args;
+    let ctx = default_context();
+    let t = ctx.tile();
+    let plan = if is_trsm { plan_trsm } else { plan_trmm };
+    let (ts, dims) = plan(t, side, uplo, ta, diag, m, n, alpha.to_f64(), lda, ldb)?;
+    let (na, _) = dims.a;
+    // SAFETY: BLAS buffer contract.
+    let (am, cm) = unsafe {
+        (
+            raw_operand(routine, 9, a as *mut T, na, na, lda, t, MatId::A)?,
+            raw_operand(routine, 11, b, m, n, ldb, t, MatId::C)?,
+        )
+    };
+    ctx.execute(&ts, vec![Mats { a: &am, b: None, c: &cm }]).map(|_| ())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn trmm_entry<T: Scalar>(
+    routine: &'static str,
+    order: c_int,
+    side: c_int,
+    uplo: c_int,
+    transa: c_int,
+    diag: c_int,
+    m: c_int,
+    n: c_int,
+    alpha: T,
+    a: *const T,
+    lda: c_int,
+    b: *mut T,
+    ldb: c_int,
+) {
+    entry(routine, || {
+        match trxm_args(routine, order, side, uplo, transa, diag, m, n, lda, ldb)? {
+            Some(args) => trxm_run(routine, false, args, alpha, a, b),
+            None => Ok(()),
+        }
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn trsm_entry<T: Scalar>(
+    routine: &'static str,
+    order: c_int,
+    side: c_int,
+    uplo: c_int,
+    transa: c_int,
+    diag: c_int,
+    m: c_int,
+    n: c_int,
+    alpha: T,
+    a: *const T,
+    lda: c_int,
+    b: *mut T,
+    ldb: c_int,
+) {
+    entry(routine, || {
+        match trxm_args(routine, order, side, uplo, transa, diag, m, n, lda, ldb)? {
+            Some(args) => trxm_run(routine, true, args, alpha, a, b),
+            None => Ok(()),
+        }
+    })
+}
+
+/// `B := alpha*op(tri(A))*B` (Left) / `alpha*B*op(tri(A))` (Right), in
+/// place, double precision (CBLAS ABI).
+///
+/// # Safety
+/// As [`cblas_dgemm`].
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn cblas_dtrmm(
+    order: c_int,
+    side: c_int,
+    uplo: c_int,
+    transa: c_int,
+    diag: c_int,
+    m: c_int,
+    n: c_int,
+    alpha: f64,
+    a: *const f64,
+    lda: c_int,
+    b: *mut f64,
+    ldb: c_int,
+) {
+    trmm_entry("cblas_dtrmm", order, side, uplo, transa, diag, m, n, alpha, a, lda, b, ldb)
+}
+
+/// Single-precision TRMM (CBLAS ABI).
+///
+/// # Safety
+/// As [`cblas_dgemm`].
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn cblas_strmm(
+    order: c_int,
+    side: c_int,
+    uplo: c_int,
+    transa: c_int,
+    diag: c_int,
+    m: c_int,
+    n: c_int,
+    alpha: f32,
+    a: *const f32,
+    lda: c_int,
+    b: *mut f32,
+    ldb: c_int,
+) {
+    trmm_entry("cblas_strmm", order, side, uplo, transa, diag, m, n, alpha, a, lda, b, ldb)
+}
+
+/// Solve `op(tri(A))*X = alpha*B` (Left) / `X*op(tri(A)) = alpha*B`
+/// (Right), X overwriting B, double precision (CBLAS ABI).
+///
+/// # Safety
+/// As [`cblas_dgemm`].
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn cblas_dtrsm(
+    order: c_int,
+    side: c_int,
+    uplo: c_int,
+    transa: c_int,
+    diag: c_int,
+    m: c_int,
+    n: c_int,
+    alpha: f64,
+    a: *const f64,
+    lda: c_int,
+    b: *mut f64,
+    ldb: c_int,
+) {
+    trsm_entry("cblas_dtrsm", order, side, uplo, transa, diag, m, n, alpha, a, lda, b, ldb)
+}
+
+/// Single-precision TRSM (CBLAS ABI).
+///
+/// # Safety
+/// As [`cblas_dgemm`].
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn cblas_strsm(
+    order: c_int,
+    side: c_int,
+    uplo: c_int,
+    transa: c_int,
+    diag: c_int,
+    m: c_int,
+    n: c_int,
+    alpha: f32,
+    a: *const f32,
+    lda: c_int,
+    b: *mut f32,
+    ldb: c_int,
+) {
+    trsm_entry("cblas_strsm", order, side, uplo, transa, diag, m, n, alpha, a, lda, b, ldb)
+}

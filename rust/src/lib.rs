@@ -71,12 +71,31 @@
 //! byte-range conflict edges (aliasing calls run in submission order,
 //! bit-for-bit equal to serial; disjoint calls overlap on the
 //! devices), the device workers interleave scheduler rounds across all
-//! runnable jobs under flop-weighted fairness, and every blocking
-//! routine gains a non-blocking `*_async` twin returning a
-//! [`serve::JobHandle`]. `tests/serve_concurrent.rs` holds the
+//! runnable jobs under flop-weighted fairness, and non-blocking
+//! submission goes through the closure-scoped API
+//! ([`api::Context::scope`]): jobs issued inside a scope return
+//! [`serve::JobHandle`]s, operand ranges may alias *across* jobs (the
+//! admission edges order them), and the scope's close — a barrier in a
+//! stack frame the caller cannot skip, `std::thread::scope`-style — is
+//! what makes the API sound (`mem::forget` on a handle is harmless).
+//! `tests/serve_concurrent.rs` and `tests/scope_async.rs` hold the
 //! concurrency guarantees; `benches/serve_throughput.rs` measures
 //! jobs/sec and worker-idle fraction versus client count; `blasx serve
 //! --clients N` is the CLI stress mode.
+//!
+//! ## C ABI (drop-in replacement)
+//!
+//! The [`ffi`] module exports a cblas-compatible C surface —
+//! `cblas_{s,d}{gemm,syrk,syr2k,symm,trmm,trsm}` plus non-blocking
+//! `blasx_{s,d}gemm_async` / `blasx_{s,d}trsm_async` with
+//! `blasx_wait` — over a process-global default [`api::Context`], so a
+//! C (or `ctypes`, or legacy Fortran-through-CBLAS) application links
+//! against `libblasx` unchanged and lands on the same multi-tenant
+//! resident runtime (the paper's §I drop-in story). The header is
+//! generated offline (`blasx header` → `include/blasx.h`); see
+//! `examples/c/smoke.c` and `examples/python/blasx_ctypes.py`, and the
+//! README's "C ABI / drop-in use" section for linkage and the
+//! host-liveness contract.
 
 pub mod api;
 pub mod baselines;
@@ -86,6 +105,7 @@ pub mod cache;
 pub mod cli;
 pub mod coordinator;
 pub mod error;
+pub mod ffi;
 pub mod hostblas;
 pub mod mem;
 pub mod queue;

@@ -19,7 +19,7 @@
 //!   [`crate::api::Context`] spawns one worker thread per virtual
 //!   device and allocates the arenas. Clones of a `Context` share the
 //!   booted runtime.
-//! - **Calls** — every call (blocking or `*_async`) is **admitted** as
+//! - **Calls** — every call (blocking, scope-async, or C-ABI) is **admitted** as
 //!   a *job* into the [`crate::serve::admission::JobTable`]: its
 //!   operand byte ranges are compared against every live job's to wire
 //!   dependency edges (aliasing calls run in admission order,
@@ -28,8 +28,8 @@
 //!   same lock, and the resident workers then pull scheduler rounds
 //!   across ALL runnable jobs under flop-weighted fair interleaving
 //!   (see [`crate::serve::fairness`]). Blocking calls are
-//!   submit-then-wait; async calls return a
-//!   [`crate::serve::JobHandle`].
+//!   submit-then-wait; scope-async calls return a
+//!   [`crate::serve::JobHandle`] and the scope close waits for them.
 //! - **Invalidation** — every output matrix bumps an *epoch* for its
 //!   byte range in the [`EpochRegistry`] at admission time; input
 //!   wraps resolve their epoch from the registry. Epochs are folded
@@ -191,26 +191,50 @@ impl EpochRegistry {
     }
 }
 
-/// Owned backing of an async submission: the task set and operand
-/// wraps live inside the job itself (a blocking submit's caller frame
-/// owns them instead). Boxed for stable addresses — `JobState` holds
-/// references into both.
-struct JobBacking<T: Scalar> {
-    ts: Box<TaskSet>,
-    problems: Box<[OwnedProblem<T>]>,
-}
-
-/// A submitted call, erased over its scalar type so one worker fleet
-/// serves f32 and f64 jobs alike.
+/// A blocking submission, erased over its scalar type so one worker
+/// fleet serves f32 and f64 jobs alike. The task set and operand wraps
+/// live in the submitting caller's frame (which parks until the job
+/// retires); the `'static` on `state` is lifetime erasure only.
 struct ErasedJob<T: Scalar> {
-    /// Declared (and therefore dropped) BEFORE `_backing`: the state
-    /// holds references into it.
     state: JobState<'static, T>,
-    /// Keep-alive for async submissions; `None` for blocking ones.
-    _backing: Option<JobBacking<T>>,
 }
 
 impl<T: Scalar> DeviceJob for ErasedJob<T> {
+    fn run_round(&self, dev: usize, core: &EngineCore) -> Round {
+        worker_round(dev, core, &self.state)
+    }
+
+    fn poison(&self, msg: String) {
+        self.state.fail(Error::Internal(msg));
+    }
+
+    fn report(&self, core: &EngineCore) -> Result<RealReport> {
+        self.state.report(core)
+    }
+
+    fn done(&self) -> bool {
+        self.state.done()
+    }
+}
+
+/// An asynchronously submitted job that OWNS its backing: the task set
+/// and operand wraps are fields of the job itself, held alive by the
+/// job table's `Arc` until retirement. This is what closes the old
+/// wait-on-drop forget-hole — no caller-side destructor is load-bearing
+/// for the workers' access to the task graph or the wraps; only the
+/// *user buffers* the wraps point into are borrowed, and the scope
+/// close (or the C caller's `blasx_wait` contract) guarantees those
+/// outlive retirement.
+struct OwnedJob<T: Scalar> {
+    /// Declared (and therefore dropped) BEFORE the backing fields: the
+    /// state holds references into them.
+    state: JobState<'static, T>,
+    /// Boxed for stable addresses — `state` points into both.
+    _ts: Box<TaskSet>,
+    _problems: Box<[OwnedProblem<T>]>,
+}
+
+impl<T: Scalar> DeviceJob for OwnedJob<T> {
     fn run_round(&self, dev: usize, core: &EngineCore) -> Round {
         worker_round(dev, core, &self.state)
     }
@@ -339,15 +363,20 @@ impl Runtime {
 
     /// Admit a constructed job: wire dependency edges, stamp epochs
     /// (same lock, same order), insert into the table, wake workers.
-    fn admit<T: Scalar>(&self, cfg: &RunConfig, job: &Arc<ErasedJob<T>>) -> Arc<JobCtl> {
+    fn admit<T: Scalar>(
+        &self,
+        cfg: &RunConfig,
+        state: &JobState<'static, T>,
+        erased: Arc<dyn DeviceJob>,
+    ) -> Arc<JobCtl> {
         let mut span = JobSpan::default();
-        for m in job.state.problems() {
+        for m in state.problems() {
             for hm in [Some(m.a), m.b].into_iter().flatten() {
                 span.ins.push(hm.byte_range());
             }
             span.outs.push(m.c.byte_range());
         }
-        let weight = job.state.weight();
+        let weight = state.weight();
         let ctl = {
             let mut table = self.inner.table.lock().unwrap_or_else(|e| e.into_inner());
             // Epoch stamping under the admission lock: inputs resolve
@@ -357,18 +386,17 @@ impl Runtime {
             // bit-for-bit equal to serial execution.
             {
                 let mut reg = self.inner.epochs.lock().unwrap_or_else(|e| e.into_inner());
-                for m in job.state.problems() {
+                for m in state.problems() {
                     for hm in [Some(m.a), m.b].into_iter().flatten() {
                         let (lo, hi) = hm.byte_range();
                         hm.set_epoch(reg.epoch_of(lo, hi));
                     }
                 }
-                for m in job.state.problems() {
+                for m in state.problems() {
                     let (lo, hi) = m.c.byte_range();
                     m.c.set_epoch(reg.bump(lo, hi));
                 }
             }
-            let erased: Arc<dyn DeviceJob> = job.clone();
             let (ctl, purge_now) = table.admit(erased, span, weight, cfg.t);
             if purge_now {
                 // Geometry switch into a quiescent table: old-size
@@ -403,8 +431,9 @@ impl Runtime {
         // reference to the borrowed data survives the call.
         let state =
             unsafe { std::mem::transmute::<JobState<'_, T>, JobState<'static, T>>(state) };
-        let job = Arc::new(ErasedJob { state, _backing: None });
-        let ctl = self.admit(cfg, &job);
+        let job = Arc::new(ErasedJob { state });
+        let erased: Arc<dyn DeviceJob> = job.clone();
+        let ctl = self.admit(cfg, &job.state, erased);
         ctl.wait_retired();
         let report = job.state.report(&self.inner.core);
         drop(job);
@@ -412,9 +441,13 @@ impl Runtime {
     }
 
     /// Admit a job that OWNS its task set and operand wraps (the
-    /// `*_async` path) and return the pieces the API layer wraps into
-    /// a [`crate::serve::JobHandle`]. The caller's operand buffers
-    /// must outlive the handle — enforced by the handle's borrow.
+    /// scope-async and C-ABI paths) and return the pieces the API
+    /// layer wraps into a [`crate::serve::JobHandle`] or an FFI
+    /// handle. The runtime's job table keeps the [`OwnedJob`] alive
+    /// until retirement, so no caller-side value is load-bearing for
+    /// the workers; the *user buffers* the wraps point into must
+    /// outlive retirement — guaranteed by the scope close barrier
+    /// (safe API) or the C caller's wait contract (FFI).
     pub(crate) fn submit_owned<T: Scalar>(
         &self,
         cfg: &RunConfig,
@@ -422,18 +455,16 @@ impl Runtime {
         problems: Vec<OwnedProblem<T>>,
     ) -> Result<(Arc<dyn DeviceJob>, Arc<JobCtl>)> {
         self.assert_arena_floor::<T>(cfg);
-        let backing = JobBacking { ts: Box::new(ts), problems: problems.into_boxed_slice() };
+        let ts = Box::new(ts);
+        let problems = problems.into_boxed_slice();
         // SAFETY: the boxes give the task set and operand wraps stable
-        // heap addresses, unaffected by the backing struct moving into
-        // the ErasedJob below. The references created here live inside
-        // the SAME ErasedJob (whose `state` field drops before
-        // `_backing`), and the ErasedJob is dropped only after the job
-        // retires — the JobHandle waits for retirement even on drop.
-        // The user buffers the wraps point into are pinned for the
-        // handle's `'buf`.
-        let ts_ref: &'static TaskSet = unsafe { &*(backing.ts.as_ref() as *const TaskSet) };
-        let mats: Vec<Mats<'static, T>> = backing
-            .problems
+        // heap addresses, unaffected by moving them into the OwnedJob
+        // below. The references created here live inside the SAME
+        // OwnedJob (whose `state` field drops before the backing
+        // fields), and the OwnedJob is kept alive by the job table's
+        // Arc until the job retires.
+        let ts_ref: &'static TaskSet = unsafe { &*(ts.as_ref() as *const TaskSet) };
+        let mats: Vec<Mats<'static, T>> = problems
             .iter()
             .map(|p| {
                 let m = Mats { a: &p.a, b: p.b.as_ref(), c: &p.c };
@@ -442,9 +473,10 @@ impl Runtime {
             })
             .collect();
         let state = JobState::new(cfg, ts_ref, mats, self.inner.n_devices)?;
-        let job = Arc::new(ErasedJob { state, _backing: Some(backing) });
-        let ctl = self.admit(cfg, &job);
-        Ok((job as Arc<dyn DeviceJob>, ctl))
+        let job = Arc::new(OwnedJob { state, _ts: ts, _problems: problems });
+        let erased: Arc<dyn DeviceJob> = job.clone();
+        let ctl = self.admit(cfg, &job.state, erased.clone());
+        Ok((erased, ctl))
     }
 }
 

@@ -63,20 +63,49 @@ impl JobSpan {
     }
 }
 
-/// Per-job completion latch, shared by the waiter (a blocking submit or
-/// a [`super::JobHandle`]) and the retiring worker. `retired` means the
-/// job has left the table and no worker holds a reference to it — the
-/// waiter may reclaim the borrows behind the job.
+/// Per-job completion latch, shared by the waiters (a blocking submit,
+/// a [`super::JobHandle`], the owning scope's
+/// [`super::handle::ScopeToken`], or an FFI wait) and the retiring
+/// worker. `retired` means the job has left the table and no worker
+/// holds a reference to it — the waiter may reclaim the memory behind
+/// the job's operand wraps.
 pub(crate) struct JobCtl {
     pub id: u64,
     retired: AtomicBool,
+    /// Did some waiter deliver this job's report (and therefore its
+    /// failure, if any) to user code? A scope's close re-reports the
+    /// failures of jobs nobody observed — detached handles must not
+    /// swallow errors — and skips the ones a `wait()` already
+    /// surfaced.
+    observed: AtomicBool,
     mx: Mutex<()>,
     cv: Condvar,
 }
 
 impl JobCtl {
     fn new(id: u64) -> JobCtl {
-        JobCtl { id, retired: AtomicBool::new(false), mx: Mutex::new(()), cv: Condvar::new() }
+        JobCtl {
+            id,
+            retired: AtomicBool::new(false),
+            observed: AtomicBool::new(false),
+            mx: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// A waiter is delivering this job's report to user code.
+    pub fn mark_observed(&self) {
+        self.observed.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_observed(&self) -> bool {
+        self.observed.load(Ordering::SeqCst)
+    }
+
+    /// Construct a detached latch (unit tests outside this module).
+    #[cfg(test)]
+    pub(crate) fn new_for_tests(id: u64) -> JobCtl {
+        JobCtl::new(id)
     }
 
     pub fn is_retired(&self) -> bool {

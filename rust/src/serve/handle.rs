@@ -1,4 +1,25 @@
-//! The completion future of an asynchronously submitted job.
+//! Job handles and the scope completion barrier.
+//!
+//! ## Why the barrier lives in a token, not in the handle
+//!
+//! The first async surface made `JobHandle` carry the operand borrows
+//! and *wait on drop* — the pre-1.0 `thread::scoped` design, with the
+//! same hole: `std::mem::forget(handle)` is safe code that skips the
+//! drop-side wait, leaving resident workers writing through pointers
+//! into freed stack buffers. Soundness cannot hang off a destructor
+//! the caller is allowed to skip.
+//!
+//! The sound shape (the one `std::thread::scope` standardized) puts
+//! the barrier in a stack frame the caller *cannot* skip:
+//! [`crate::api::Context::scope`] owns a [`ScopeToken`] in its own
+//! frame, every job admitted through the scope registers its
+//! [`JobCtl`] latch with the token, and the token waits for all of
+//! them after the user closure returns — or unwinds. Handles became
+//! plain observers: [`JobHandle::wait`] fetches a job's report,
+//! dropping (or forgetting!) one changes nothing about buffer
+//! liveness, because the job's backing (task set + operand wraps) is
+//! owned by the runtime's job table until retirement and the scope
+//! close is the barrier.
 
 use super::admission::JobCtl;
 use super::DeviceJob;
@@ -6,44 +27,37 @@ use crate::coordinator::real_engine::RealReport;
 use crate::error::Result;
 use crate::runtime::Runtime;
 use std::marker::PhantomData;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
-/// A submitted-but-possibly-unfinished L3 call (returned by the
-/// `*_async` entry points in [`crate::api::l3`]).
+/// A job admitted through a [`crate::api::Scope`] (returned by the
+/// scope's routine methods, e.g. `s.dgemm(..)`).
 ///
-/// The handle keeps the resident runtime alive and pins the borrows of
-/// the caller's operand buffers (`'buf`): the buffers cannot be freed
-/// or mutably reused while the handle exists. [`JobHandle::wait`]
-/// parks until the job retires and returns its [`RealReport`];
-/// **dropping** an unwaited handle also parks until retirement (and
-/// discards the report), so an early `drop` is a barrier, not a
-/// cancellation.
-///
-/// ## Liveness contract
-///
-/// The runtime's workers read and write the operand buffers through
-/// raw pointers until the job retires. The borrow checker enforces the
-/// buffers' liveness through `'buf` *provided the handle is dropped
-/// normally*; leaking it (`std::mem::forget`) while the job is in
-/// flight voids that guarantee and is undefined behavior, exactly like
-/// leaking a guard that lends local buffers to another thread. This is
-/// the same class of contract as `Context::invalidate_host`: the
-/// library cannot observe what the caller does to host memory behind
-/// its back.
-pub struct JobHandle<'buf> {
+/// The handle is a thin view over the job's completion latch: call
+/// [`JobHandle::wait`] for the job's [`RealReport`] (outputs are fully
+/// written back when it returns), or just let the handle drop — the
+/// **scope close** is the completion barrier, so dropping detaches the
+/// handle without waiting and the jobs keep pipelining. There is no
+/// safety obligation attached: leaking a handle (`std::mem::forget`)
+/// is safe, because the runtime owns the job's backing until
+/// retirement and the scope's own stack frame waits for every admitted
+/// job regardless of what happened to its handle.
+#[must_use = "dropping detaches the job (the scope close still waits); call .wait() for its report or `let _ = ...` to detach explicitly"]
+pub struct JobHandle<'scope> {
     rt: Arc<Runtime>,
-    job: Option<Arc<dyn DeviceJob>>,
+    job: Arc<dyn DeviceJob>,
     ctl: Arc<JobCtl>,
-    _buffers: PhantomData<&'buf mut [u8]>,
+    /// Handles must not outlive their scope (the per-job report is
+    /// only meaningful while the runtime the scope pinned is alive).
+    _scope: PhantomData<&'scope ()>,
 }
 
-impl<'buf> JobHandle<'buf> {
+impl<'scope> JobHandle<'scope> {
     pub(crate) fn new(
         rt: Arc<Runtime>,
         job: Arc<dyn DeviceJob>,
         ctl: Arc<JobCtl>,
-    ) -> JobHandle<'buf> {
-        JobHandle { rt, job: Some(job), ctl, _buffers: PhantomData }
+    ) -> JobHandle<'scope> {
+        JobHandle { rt, job, ctl, _scope: PhantomData }
     }
 
     /// Has the job retired? (Non-blocking; `wait` returns immediately
@@ -58,26 +72,18 @@ impl<'buf> JobHandle<'buf> {
     }
 
     /// Park until the job completes and return its report. Outputs are
-    /// fully written back to the caller's buffers when this returns.
-    pub fn wait(mut self) -> Result<RealReport> {
+    /// fully written back when this returns.
+    pub fn wait(self) -> Result<RealReport> {
+        // The report (and any failure inside it) is being delivered to
+        // user code here — the scope close must not re-surface it.
+        self.ctl.mark_observed();
         self.ctl.wait_retired();
-        let job = self.job.take().expect("job already taken");
-        let report = job.report(self.rt.core());
-        // `job` drops here: the last reference into the borrowed
-        // buffers dies before the caller regains use of them.
-        report
+        self.job.report(self.rt.core())
     }
-}
 
-impl Drop for JobHandle<'_> {
-    fn drop(&mut self) {
-        if self.job.is_some() {
-            // Unwaited handle: block until the workers are done with
-            // the borrowed buffers, then let the job (and its report)
-            // drop.
-            self.ctl.wait_retired();
-        }
-    }
+    /// Explicitly detach: the job keeps running and the scope close
+    /// waits for it. Identical to dropping the handle, spelled out.
+    pub fn detach(self) {}
 }
 
 impl std::fmt::Debug for JobHandle<'_> {
@@ -86,5 +92,147 @@ impl std::fmt::Debug for JobHandle<'_> {
             .field("job_id", &self.ctl.id)
             .field("done", &self.is_done())
             .finish()
+    }
+}
+
+/// The scope's completion barrier: every job admitted through a scope
+/// registers its retirement latch here, and [`ScopeToken::close`]
+/// waits for all of them. The token is owned by
+/// [`crate::api::Context::scope`]'s stack frame — user code only ever
+/// sees `&Scope`, so no safe operation (including `mem::forget` on
+/// handles or on anything else the closure can reach) can prevent the
+/// close from running before the operand borrows (`'env`) end. Close
+/// runs on the normal path *and* on unwind (the token's `Drop` is the
+/// backstop when the user closure panics).
+pub(crate) struct ScopeToken {
+    rt: Arc<Runtime>,
+    jobs: Mutex<Vec<(Arc<JobCtl>, Arc<dyn DeviceJob>)>>,
+}
+
+impl ScopeToken {
+    pub(crate) fn new(rt: Arc<Runtime>) -> ScopeToken {
+        ScopeToken { rt, jobs: Mutex::new(Vec::new()) }
+    }
+
+    /// The runtime this scope pinned (jobs are admitted to it).
+    pub(crate) fn runtime(&self) -> &Arc<Runtime> {
+        &self.rt
+    }
+
+    /// Track a job admitted through the scope.
+    pub(crate) fn register(&self, ctl: Arc<JobCtl>, job: Arc<dyn DeviceJob>) {
+        self.jobs.lock().unwrap_or_else(|e| e.into_inner()).push((ctl, job));
+    }
+
+    /// Wait for every registered job to retire. Idempotent (the list
+    /// is drained), so the explicit close on the normal path and the
+    /// `Drop` backstop on unwind compose.
+    pub(crate) fn close(&self) {
+        let jobs = std::mem::take(&mut *self.jobs.lock().unwrap_or_else(|e| e.into_inner()));
+        for (ctl, _job) in jobs {
+            ctl.wait_retired();
+        }
+    }
+
+    /// The normal-path close: wait for every job, then surface the
+    /// first failure of any job whose report was never delivered to
+    /// user code (a detached or forgotten handle). Without this, a
+    /// failed kernel behind a detached handle would leave the output
+    /// buffer holding garbage while `scope` returned `Ok` — the same
+    /// silent-error hole `std::thread::scope` closes by resuming
+    /// scoped-thread panics at its close.
+    pub(crate) fn close_and_report(&self) -> Result<()> {
+        let jobs = std::mem::take(&mut *self.jobs.lock().unwrap_or_else(|e| e.into_inner()));
+        let mut first_err = None;
+        for (ctl, job) in jobs {
+            ctl.wait_retired();
+            if !ctl.is_observed() {
+                if let Err(e) = job.report(self.rt.core()) {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for ScopeToken {
+    fn drop(&mut self) {
+        // Unwind path: the closure panicked past the explicit close.
+        // In-flight jobs still hold raw pointers into `'env` buffers,
+        // so the barrier must run before this frame's borrows end.
+        self.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::real_engine::{EngineCore, Round};
+    use crate::error::Error;
+    use crate::mem::AllocStrategy;
+
+    /// A job that reports success or a fixed failure.
+    struct StubJob {
+        fail: bool,
+    }
+
+    impl DeviceJob for StubJob {
+        fn run_round(&self, _dev: usize, _core: &EngineCore) -> Round {
+            Round::Finished
+        }
+        fn poison(&self, _msg: String) {}
+        fn done(&self) -> bool {
+            true
+        }
+        fn report(&self, _core: &EngineCore) -> Result<RealReport> {
+            if self.fail {
+                Err(Error::Internal("stub failure".into()))
+            } else {
+                Ok(RealReport {
+                    tasks_per_device: Vec::new(),
+                    cache_stats: Vec::new(),
+                    steals: Vec::new(),
+                    transfers: Default::default(),
+                })
+            }
+        }
+    }
+
+    #[test]
+    fn scope_token_close_is_idempotent_and_waits() {
+        let rt = Arc::new(Runtime::boot(1, 1 << 20, AllocStrategy::FastHeap));
+        let token = ScopeToken::new(rt);
+        let ctl = Arc::new(JobCtl::new_for_tests(3));
+        token.register(ctl.clone(), Arc::new(StubJob { fail: false }));
+        // Latch released from another thread while close blocks on it.
+        let c2 = ctl.clone();
+        let h = std::thread::spawn(move || c2.retire());
+        token.close();
+        h.join().unwrap();
+        assert!(ctl.is_retired());
+        token.close(); // drained: returns immediately
+        drop(token); // Drop backstop: also a no-op now
+    }
+
+    #[test]
+    fn close_and_report_surfaces_unobserved_failures_only() {
+        let rt = Arc::new(Runtime::boot(1, 1 << 20, AllocStrategy::FastHeap));
+        // Unobserved failure → surfaced at close.
+        let token = ScopeToken::new(rt.clone());
+        let ctl = Arc::new(JobCtl::new_for_tests(1));
+        ctl.retire();
+        token.register(ctl, Arc::new(StubJob { fail: true }));
+        assert!(token.close_and_report().is_err(), "detached failure must surface");
+        // Observed failure → the waiter already delivered it.
+        let token = ScopeToken::new(rt);
+        let ctl = Arc::new(JobCtl::new_for_tests(2));
+        ctl.retire();
+        ctl.mark_observed();
+        token.register(ctl, Arc::new(StubJob { fail: true }));
+        assert!(token.close_and_report().is_ok(), "observed failure must not re-surface");
     }
 }

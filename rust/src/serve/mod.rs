@@ -25,9 +25,13 @@
 //!   picking the job with the smallest charged-flops/weight ratio so
 //!   every tenant progresses proportionally to its size and small
 //!   jobs are never starved behind a giant one.
-//! - **Completion** ([`handle`]) — [`JobHandle`] is the future returned
-//!   by the `*_async` API entry points; blocking calls are
-//!   submit-then-wait over the same machinery.
+//! - **Completion** ([`handle`]) — [`JobHandle`] is the per-job future
+//!   returned by [`crate::api::Scope`]'s routine methods and the thin
+//!   Rust side of the C ABI's `blasx_job_t`; blocking calls are
+//!   submit-then-wait over the same machinery. Soundness of the scoped
+//!   form lives in `handle::ScopeToken`: the completion barrier runs
+//!   in `Context::scope`'s own stack frame, so no safe caller-side
+//!   operation (`mem::forget` included) can skip it.
 //!
 //! Coherence across tenants needs no new mechanism: the epoch registry
 //! stamps invalidation generations at admission (under the same lock

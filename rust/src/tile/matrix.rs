@@ -169,6 +169,38 @@ impl<T: Scalar> HostMat<T> {
         }
     }
 
+    /// Wrap a raw column-major buffer (the scope-async and C-ABI
+    /// doorways). Unlike [`HostMat::new`], no Rust reference to the
+    /// buffer is created here — jobs whose operand ranges alias (the
+    /// admission table orders them) must not conjure overlapping `&mut`
+    /// slices even transiently.
+    ///
+    /// # Safety
+    /// `ptr` must be valid for reads (and writes, if this operand is an
+    /// output) of the `ld * (cols-1) + rows` element footprint for as
+    /// long as any job referencing this wrap is in flight, and
+    /// concurrent writers of overlapping ranges must be ordered by the
+    /// caller (the admission table's conflict edges do this for jobs).
+    pub(crate) unsafe fn from_raw(
+        ptr: *mut T,
+        rows: usize,
+        cols: usize,
+        ld: usize,
+        t: usize,
+        id: MatId,
+    ) -> Self {
+        debug_assert!(ld >= rows.max(1), "leading dimension {ld} < rows {rows}");
+        HostMat {
+            ptr,
+            rows,
+            cols,
+            ld,
+            grid: TileGrid::new(rows, cols, t),
+            id,
+            epoch: AtomicU64::new(0),
+        }
+    }
+
     /// Host address (usable as a cache key) of element `(r, c)`.
     #[inline]
     fn elem_addr(&self, r: usize, c: usize) -> usize {

@@ -1,0 +1,431 @@
+//! The C ABI exercised from Rust (the exports are ordinary functions
+//! to a Rust caller): cblas_* blocking entries in both storage orders
+//! against the safe path, the blasx_*_async job surface with aliasing
+//! chains, and the error-reporting contract.
+//!
+//! Everything here shares the process-global default context (the
+//! drop-in configuration: default tile/devices — these tests assume no
+//! BLASX_* environment overrides, as in CI). Run under both the
+//! default harness and `RUST_TEST_THREADS=1`; concurrent tests are
+//! exactly the multi-tenant traffic the default context exists for.
+
+use blasx::api::types::{Diag, Side, Trans, Uplo};
+use blasx::api::{self, Context};
+use blasx::ffi::{capi, cblas};
+use blasx::ffi::{
+    CBLAS_COL_MAJOR, CBLAS_LEFT, CBLAS_LOWER, CBLAS_NON_UNIT, CBLAS_NO_TRANS, CBLAS_ROW_MAJOR,
+    CBLAS_TRANS, CBLAS_UNIT, CBLAS_UPPER,
+};
+use blasx::util::prng::Prng;
+
+/// The safe serial reference with the same geometry as the default
+/// FFI context (same tile ⇒ same decomposition ⇒ bit-for-bit).
+fn serial() -> Context {
+    Context::default().with_persistent(false)
+}
+
+fn rand(p: &mut Prng, n: usize) -> Vec<f64> {
+    let mut v = vec![0.0; n];
+    p.fill_f64(&mut v, -1.0, 1.0);
+    v
+}
+
+
+/// Declare a freshly allocated input buffer to the warm process-global
+/// context — the C ABI's own invalidation contract: tests in this
+/// binary share the default runtime, and the allocator may hand a test
+/// the previous test's freed buffer address (outputs are re-epoched
+/// automatically; inputs are not).
+fn declare<T>(buf: &[T]) {
+    unsafe {
+        capi::blasx_invalidate_host(
+            buf.as_ptr() as *const core::ffi::c_void,
+            std::mem::size_of_val(buf),
+        )
+    }
+}
+
+fn transpose(src: &[f64], rows: usize, cols: usize) -> Vec<f64> {
+    // col-major rows×cols -> row-major (== col-major cols×rows view)
+    let mut out = vec![0.0; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[r * cols + c] = src[c * rows + r];
+        }
+    }
+    out
+}
+
+/// Max absolute elementwise difference — for the row-major folds that
+/// land on a different side/trans code path than the column-major
+/// reference (same math, potentially different float summation order;
+/// the GEMM fold alone is order-preserving and asserted bit-for-bit).
+fn max_diff(x: &[f64], y: &[f64]) -> f64 {
+    x.iter().zip(y).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max)
+}
+
+#[test]
+fn cblas_dgemm_col_major_matches_safe_path() {
+    let (m, n, k) = (96usize, 64, 80);
+    let mut p = Prng::new(11);
+    let a = rand(&mut p, m * k);
+    let b = rand(&mut p, k * n);
+    let c0 = rand(&mut p, m * n);
+    declare(&a);
+    declare(&b);
+    let mut c_ffi = c0.clone();
+    unsafe { cblas::cblas_dgemm(
+        CBLAS_COL_MAJOR, CBLAS_NO_TRANS, CBLAS_TRANS, m as i32, n as i32, k as i32, 1.5,
+        a.as_ptr(), m as i32, b.as_ptr(), n as i32, -0.25, c_ffi.as_mut_ptr(), m as i32,
+    ) };
+    let mut c_safe = c0;
+    // transB: B stored n×k
+    api::dgemm(&serial(), Trans::No, Trans::Yes, m, n, k, 1.5, &a, m, &b, n, -0.25, &mut c_safe, m)
+        .unwrap();
+    assert_eq!(c_ffi, c_safe, "cblas_dgemm must be bit-for-bit the safe path");
+}
+
+#[test]
+fn cblas_dgemm_row_major_matches_transposed_col_major() {
+    let (m, n, k) = (48usize, 56, 40);
+    let mut p = Prng::new(12);
+    let a = rand(&mut p, m * k);
+    let b = rand(&mut p, k * n);
+    let c0 = rand(&mut p, m * n);
+    declare(&a);
+    declare(&b);
+    // col-major reference
+    let mut c_safe = c0.clone();
+    api::dgemm(&serial(), Trans::No, Trans::No, m, n, k, 2.0, &a, m, &b, k, 0.5, &mut c_safe, m)
+        .unwrap();
+    // the same problem handed over in row-major storage
+    let a_rm = transpose(&a, m, k);
+    let b_rm = transpose(&b, k, n);
+    let mut c_rm = transpose(&c0, m, n);
+    declare(&a_rm);
+    declare(&b_rm);
+    unsafe { cblas::cblas_dgemm(
+        CBLAS_ROW_MAJOR, CBLAS_NO_TRANS, CBLAS_NO_TRANS, m as i32, n as i32, k as i32, 2.0,
+        a_rm.as_ptr(), k as i32, b_rm.as_ptr(), n as i32, 0.5, c_rm.as_mut_ptr(), n as i32,
+    ) };
+    assert_eq!(transpose(&c_rm, n, m), c_safe, "row-major fold diverged");
+}
+
+#[test]
+fn cblas_sgemm_works() {
+    let n = 64usize;
+    let a = vec![1.0f32; n * n];
+    let b = vec![2.0f32; n * n];
+    let mut c = vec![0.0f32; n * n];
+    declare(&a);
+    declare(&b);
+    unsafe { cblas::cblas_sgemm(
+        CBLAS_COL_MAJOR, CBLAS_NO_TRANS, CBLAS_NO_TRANS, n as i32, n as i32, n as i32, 1.0,
+        a.as_ptr(), n as i32, b.as_ptr(), n as i32, 0.0, c.as_mut_ptr(), n as i32,
+    ) };
+    assert!(c.iter().all(|&x| x == 2.0 * n as f32));
+}
+
+#[test]
+fn cblas_triangular_and_symmetric_family_matches_safe_path() {
+    let n = 64usize;
+    let k = 48usize;
+    let mut p = Prng::new(13);
+    let a = rand(&mut p, n * n);
+    let ak = rand(&mut p, n * k);
+    let bk = rand(&mut p, n * k);
+    let b = rand(&mut p, n * n);
+    let c0 = rand(&mut p, n * n);
+    let mut tri = rand(&mut p, n * n);
+    for i in 0..n {
+        tri[i * n + i] = 2.0;
+    }
+    declare(&a);
+    declare(&ak);
+    declare(&bk);
+    declare(&b);
+    declare(&tri);
+    let ni = n as i32;
+    let ki = k as i32;
+
+    // syrk (lower, f64)
+    let mut c_ffi = c0.clone();
+    unsafe { cblas::cblas_dsyrk(
+        CBLAS_COL_MAJOR, CBLAS_LOWER, CBLAS_NO_TRANS, ni, ki, 0.7, ak.as_ptr(), ni, 0.3,
+        c_ffi.as_mut_ptr(), ni,
+    ) };
+    let mut c_safe = c0.clone();
+    api::syrk(&serial(), Uplo::Lower, Trans::No, n, k, 0.7, &ak, n, 0.3, &mut c_safe, n).unwrap();
+    assert_eq!(c_ffi, c_safe, "dsyrk");
+    // same logical call handed over in row-major storage
+    let ak_rm = transpose(&ak, n, k);
+    declare(&ak_rm);
+    let mut c_rm = transpose(&c0, n, n);
+    unsafe { cblas::cblas_dsyrk(
+        CBLAS_ROW_MAJOR, CBLAS_LOWER, CBLAS_NO_TRANS, ni, ki, 0.7, ak_rm.as_ptr(), ki, 0.3,
+        c_rm.as_mut_ptr(), ni,
+    ) };
+    assert!(
+        max_diff(&transpose(&c_rm, n, n), &c_safe) < 1e-12,
+        "dsyrk row-major fold diverged"
+    );
+
+    // syr2k (upper)
+    let mut c_ffi = c0.clone();
+    unsafe { cblas::cblas_dsyr2k(
+        CBLAS_COL_MAJOR, CBLAS_UPPER, CBLAS_NO_TRANS, ni, ki, 1.1, ak.as_ptr(), ni,
+        bk.as_ptr(), ni, -0.4, c_ffi.as_mut_ptr(), ni,
+    ) };
+    let mut c_safe = c0.clone();
+    api::syr2k(&serial(), Uplo::Upper, Trans::No, n, k, 1.1, &ak, n, &bk, n, -0.4, &mut c_safe, n)
+        .unwrap();
+    assert_eq!(c_ffi, c_safe, "dsyr2k");
+    let bk_rm = transpose(&bk, n, k);
+    declare(&bk_rm);
+    let mut c_rm = transpose(&c0, n, n);
+    unsafe { cblas::cblas_dsyr2k(
+        CBLAS_ROW_MAJOR, CBLAS_UPPER, CBLAS_NO_TRANS, ni, ki, 1.1, ak_rm.as_ptr(), ki,
+        bk_rm.as_ptr(), ki, -0.4, c_rm.as_mut_ptr(), ni,
+    ) };
+    assert!(
+        max_diff(&transpose(&c_rm, n, n), &c_safe) < 1e-12,
+        "dsyr2k row-major fold diverged"
+    );
+
+    // symm (left/upper)
+    let mut c_ffi = c0.clone();
+    unsafe { cblas::cblas_dsymm(
+        CBLAS_COL_MAJOR, CBLAS_LEFT, CBLAS_UPPER, ni, ni, 0.9, a.as_ptr(), ni, b.as_ptr(), ni,
+        0.2, c_ffi.as_mut_ptr(), ni,
+    ) };
+    let mut c_safe = c0.clone();
+    api::symm(&serial(), Side::Left, Uplo::Upper, n, n, 0.9, &a, n, &b, n, 0.2, &mut c_safe, n)
+        .unwrap();
+    assert_eq!(c_ffi, c_safe, "dsymm");
+    let a_rm = transpose(&a, n, n);
+    let b_row = transpose(&b, n, n);
+    declare(&a_rm);
+    declare(&b_row);
+    let mut c_rm = transpose(&c0, n, n);
+    unsafe { cblas::cblas_dsymm(
+        CBLAS_ROW_MAJOR, CBLAS_LEFT, CBLAS_UPPER, ni, ni, 0.9, a_rm.as_ptr(), ni,
+        b_row.as_ptr(), ni, 0.2, c_rm.as_mut_ptr(), ni,
+    ) };
+    assert!(
+        max_diff(&transpose(&c_rm, n, n), &c_safe) < 1e-12,
+        "dsymm row-major fold diverged"
+    );
+
+    // trmm (left/upper/unit)
+    let mut b_ffi = b.clone();
+    unsafe { cblas::cblas_dtrmm(
+        CBLAS_COL_MAJOR, CBLAS_LEFT, CBLAS_UPPER, CBLAS_NO_TRANS, CBLAS_UNIT, ni, ni, 1.5,
+        tri.as_ptr(), ni, b_ffi.as_mut_ptr(), ni,
+    ) };
+    let mut b_safe = b.clone();
+    api::trmm(&serial(), Side::Left, Uplo::Upper, Trans::No, Diag::Unit, n, n, 1.5, &tri, n, &mut b_safe, n)
+        .unwrap();
+    assert_eq!(b_ffi, b_safe, "dtrmm");
+    let tri_row = transpose(&tri, n, n);
+    declare(&tri_row);
+    let mut b_io = transpose(&b, n, n);
+    unsafe { cblas::cblas_dtrmm(
+        CBLAS_ROW_MAJOR, CBLAS_LEFT, CBLAS_UPPER, CBLAS_NO_TRANS, CBLAS_UNIT, ni, ni, 1.5,
+        tri_row.as_ptr(), ni, b_io.as_mut_ptr(), ni,
+    ) };
+    assert!(
+        max_diff(&transpose(&b_io, n, n), &b_safe) < 1e-12,
+        "dtrmm row-major fold diverged"
+    );
+
+    // trsm (left/upper/non-unit), row-major fold included
+    let mut b_ffi = b.clone();
+    unsafe { cblas::cblas_dtrsm(
+        CBLAS_COL_MAJOR, CBLAS_LEFT, CBLAS_UPPER, CBLAS_NO_TRANS, CBLAS_NON_UNIT, ni, ni, 1.0,
+        tri.as_ptr(), ni, b_ffi.as_mut_ptr(), ni,
+    ) };
+    let mut b_safe = b.clone();
+    api::trsm(&serial(), Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, n, n, 1.0, &tri, n, &mut b_safe, n)
+        .unwrap();
+    assert_eq!(b_ffi, b_safe, "dtrsm");
+
+    let tri_rm = transpose(&tri, n, n);
+    let mut b_rm = transpose(&b, n, n);
+    declare(&tri_rm);
+    unsafe { cblas::cblas_dtrsm(
+        CBLAS_ROW_MAJOR, CBLAS_LEFT, CBLAS_UPPER, CBLAS_NO_TRANS, CBLAS_NON_UNIT, ni, ni, 1.0,
+        tri_rm.as_ptr(), ni, b_rm.as_mut_ptr(), ni,
+    ) };
+    // Tolerance, not bit-for-bit: the fold runs the Right-side solve,
+    // whose substitution/update summation order differs from Left's.
+    assert!(
+        max_diff(&transpose(&b_rm, n, n), &b_safe) < 1e-9,
+        "dtrsm row-major fold diverged"
+    );
+}
+
+#[test]
+fn bad_arguments_are_rejected_without_computing() {
+    let n = 8usize;
+    let a = vec![1.0f64; n * n];
+    let b = vec![1.0f64; n * n];
+    let c0 = vec![42.0f64; n * n];
+
+    // bad order enum
+    let mut c = c0.clone();
+    unsafe { cblas::cblas_dgemm(
+        0, CBLAS_NO_TRANS, CBLAS_NO_TRANS, n as i32, n as i32, n as i32, 1.0, a.as_ptr(),
+        n as i32, b.as_ptr(), n as i32, 0.0, c.as_mut_ptr(), n as i32,
+    ) };
+    assert_eq!(c, c0, "bad order must not compute");
+
+    // negative dimension
+    let mut c = c0.clone();
+    unsafe { cblas::cblas_dgemm(
+        CBLAS_COL_MAJOR, CBLAS_NO_TRANS, CBLAS_NO_TRANS, -3, n as i32, n as i32, 1.0,
+        a.as_ptr(), n as i32, b.as_ptr(), n as i32, 0.0, c.as_mut_ptr(), n as i32,
+    ) };
+    assert_eq!(c, c0, "negative m must not compute");
+
+    // null input pointer
+    let mut c = c0.clone();
+    unsafe { cblas::cblas_dgemm(
+        CBLAS_COL_MAJOR, CBLAS_NO_TRANS, CBLAS_NO_TRANS, n as i32, n as i32, n as i32, 1.0,
+        std::ptr::null(), n as i32, b.as_ptr(), n as i32, 0.0, c.as_mut_ptr(), n as i32,
+    ) };
+    assert_eq!(c, c0, "null A must not compute");
+
+    // the error is retrievable on this thread
+    let mut buf = vec![0u8; 256];
+    let len = unsafe {
+        capi::blasx_last_error(buf.as_mut_ptr() as *mut core::ffi::c_char, buf.len())
+    };
+    assert!(len > 0, "an error message must have been recorded");
+    let msg: String = buf.iter().take_while(|&&c| c != 0).map(|&c| c as char).collect();
+    assert!(msg.contains("cblas_dgemm"), "got: {msg}");
+    // length-query form (NULL buffer)
+    let qlen = unsafe { capi::blasx_last_error(std::ptr::null_mut(), 0) };
+    assert_eq!(qlen, len);
+
+    // degenerate sizes are quick returns, not errors
+    unsafe { cblas::cblas_dgemm(
+        CBLAS_COL_MAJOR, CBLAS_NO_TRANS, CBLAS_NO_TRANS, 0, 0, 0, 1.0, std::ptr::null(), 1,
+        std::ptr::null(), 1, 0.0, std::ptr::null_mut(), 1,
+    ) };
+}
+
+#[test]
+fn async_jobs_wait_out_of_order() {
+    let n = 64usize;
+    let jobs = 4;
+    let mut p = Prng::new(21);
+    let abufs: Vec<Vec<f64>> = (0..jobs).map(|_| rand(&mut p, n * n)).collect();
+    let bbufs: Vec<Vec<f64>> = (0..jobs).map(|_| rand(&mut p, n * n)).collect();
+    let mut cbufs: Vec<Vec<f64>> = (0..jobs).map(|_| vec![0.0; n * n]).collect();
+    for i in 0..jobs {
+        declare(&abufs[i]);
+        declare(&bbufs[i]);
+    }
+    let handles: Vec<*mut capi::BlasxJob> = (0..jobs)
+        .map(|i| {
+            unsafe { capi::blasx_dgemm_async(
+                CBLAS_COL_MAJOR, CBLAS_NO_TRANS, CBLAS_NO_TRANS, n as i32, n as i32, n as i32,
+                1.0, abufs[i].as_ptr(), n as i32, bbufs[i].as_ptr(), n as i32, 0.0,
+                cbufs[i].as_mut_ptr(), n as i32,
+            ) }
+        })
+        .collect();
+    assert!(handles.iter().all(|h| !h.is_null()));
+    for h in handles.into_iter().rev() {
+        assert_eq!(unsafe { capi::blasx_wait(h) }, 0);
+    }
+    for i in 0..jobs {
+        let mut want = vec![0.0; n * n];
+        api::dgemm(
+            &serial(), Trans::No, Trans::No, n, n, n, 1.0, &abufs[i], n, &bbufs[i], n, 0.0,
+            &mut want, n,
+        )
+        .unwrap();
+        assert_eq!(cbufs[i], want, "async job {i} diverged from the safe path");
+    }
+}
+
+#[test]
+fn async_aliasing_chain_is_bit_for_bit_serial() {
+    let n = 96usize;
+    let mut p = Prng::new(22);
+    let a = rand(&mut p, n * n);
+    let b = rand(&mut p, n * n);
+    let mut tri = rand(&mut p, n * n);
+    for i in 0..n {
+        tri[i * n + i] = 2.0 + tri[i * n + i].abs();
+    }
+    let mut c = vec![0.0f64; n * n];
+    declare(&a);
+    declare(&b);
+    declare(&tri);
+    let ni = n as i32;
+    // C := A·B, then solve tri·X = C in place on the SAME buffer: the
+    // admission RAW/WAW edges order the two jobs.
+    let j1 = unsafe { capi::blasx_dgemm_async(
+        CBLAS_COL_MAJOR, CBLAS_NO_TRANS, CBLAS_NO_TRANS, ni, ni, ni, 1.0, a.as_ptr(), ni,
+        b.as_ptr(), ni, 0.0, c.as_mut_ptr(), ni,
+    ) };
+    let j2 = unsafe { capi::blasx_dtrsm_async(
+        CBLAS_COL_MAJOR, CBLAS_LEFT, CBLAS_UPPER, CBLAS_NO_TRANS, CBLAS_NON_UNIT, ni, ni, 1.0,
+        tri.as_ptr(), ni, c.as_mut_ptr(), ni,
+    ) };
+    assert!(!j1.is_null() && !j2.is_null());
+    assert_eq!(unsafe { capi::blasx_wait(j2) }, 0);
+    // j1 retired before j2 could run; done-probe then wait.
+    assert_eq!(unsafe { capi::blasx_job_done(j1) }, 1);
+    assert_eq!(unsafe { capi::blasx_wait(j1) }, 0);
+
+    let mut want = vec![0.0f64; n * n];
+    let s = serial();
+    api::dgemm(&s, Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut want, n).unwrap();
+    api::trsm(&s, Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, n, n, 1.0, &tri, n, &mut want, n)
+        .unwrap();
+    assert_eq!(c, want, "C-ABI aliasing chain diverged from serial");
+}
+
+#[test]
+fn invalidate_host_refreshes_mutated_inputs() {
+    let n = 64usize;
+    let mut a = vec![1.0f64; n * n];
+    let b = vec![1.0f64; n * n];
+    let mut c = vec![0.0f64; n * n];
+    declare(&a);
+    declare(&b);
+    let ni = n as i32;
+    unsafe { cblas::cblas_dgemm(
+        CBLAS_COL_MAJOR, CBLAS_NO_TRANS, CBLAS_NO_TRANS, ni, ni, ni, 1.0, a.as_ptr(), ni,
+        b.as_ptr(), ni, 0.0, c.as_mut_ptr(), ni,
+    ) };
+    assert!(c.iter().all(|&x| x == n as f64));
+    // mutate the input behind the runtime's back, then declare it
+    for x in a.iter_mut() {
+        *x = 2.0;
+    }
+    unsafe {
+        capi::blasx_invalidate_host(a.as_ptr() as *const core::ffi::c_void, n * n * 8);
+    }
+    unsafe { cblas::cblas_dgemm(
+        CBLAS_COL_MAJOR, CBLAS_NO_TRANS, CBLAS_NO_TRANS, ni, ni, ni, 1.0, a.as_ptr(), ni,
+        b.as_ptr(), ni, 0.0, c.as_mut_ptr(), ni,
+    ) };
+    assert!(
+        c.iter().all(|&x| x == 2.0 * n as f64),
+        "declared mutation must be visible to the next call"
+    );
+}
+
+#[test]
+fn wait_rejects_null_and_version_is_static() {
+    assert_ne!(unsafe { capi::blasx_wait(std::ptr::null_mut()) }, 0);
+    assert_eq!(unsafe { capi::blasx_job_done(std::ptr::null()) }, -1);
+    let v = capi::blasx_version();
+    assert!(!v.is_null());
+    let s = unsafe { std::ffi::CStr::from_ptr(v) }.to_str().unwrap();
+    assert!(s.starts_with("blasx "), "got {s}");
+}

@@ -1,0 +1,335 @@
+//! The scoped-async API's guarantees: cross-job aliasing chains
+//! (RAW/WAR/WAW ordered by the admission table, bit-for-bit equal to
+//! serial), and soundness of the scope-close barrier — `mem::forget`
+//! on a handle, early handle drops, and panicking closures must all
+//! leave the scope waiting for every job before the operand borrows
+//! end.
+//!
+//! Run under both the default test harness and `RUST_TEST_THREADS=1`
+//! (CI does both).
+
+use blasx::api::types::{Diag, Side, Trans, Uplo};
+use blasx::api::{self, Context};
+use blasx::coordinator::Backend;
+use blasx::util::prng::Prng;
+
+fn ctx() -> Context {
+    Context::new(2).with_arena(8 << 20).with_tile(32)
+}
+
+fn rand(p: &mut Prng, n: usize) -> Vec<f64> {
+    let mut v = vec![0.0; n];
+    p.fill_f64(&mut v, -1.0, 1.0);
+    v
+}
+
+fn upper_tri(p: &mut Prng, n: usize) -> Vec<f64> {
+    let mut a = rand(p, n * n);
+    for x in a.iter_mut() {
+        *x *= 0.5 / (n as f64).sqrt();
+    }
+    for i in 0..n {
+        a[i * n + i] = 2.0;
+    }
+    a
+}
+
+/// RAW chain across two in-flight jobs: E := (A·B)·D. The second job
+/// reads the buffer the first is still writing; the admission edge
+/// orders them, and the result is bit-for-bit the serial sequence's.
+#[test]
+fn raw_chain_through_one_scope() {
+    let c = ctx();
+    let n = 96;
+    let mut p = Prng::new(1);
+    let a = rand(&mut p, n * n);
+    let b = rand(&mut p, n * n);
+    let d = rand(&mut p, n * n);
+    let mut x = vec![0.0; n * n];
+    let mut e = vec![0.0; n * n];
+    c.scope(|s| {
+        let (ra, rb, rd) = (s.input(&a), s.input(&b), s.input(&d));
+        let rx = s.buffer(&mut x);
+        let re = s.buffer(&mut e);
+        let _ = s.dgemm(Trans::No, Trans::No, n, n, n, 1.0, ra, n, rb, n, 0.0, rx, n)?;
+        // rx is an INPUT here — same token, no new borrow needed.
+        let _ = s.dgemm(Trans::No, Trans::No, n, n, n, 1.0, rx, n, rd, n, 0.0, re, n)?;
+        Ok(())
+    })
+    .unwrap();
+
+    let serial = ctx().with_persistent(false);
+    let mut want_x = vec![0.0; n * n];
+    let mut want_e = vec![0.0; n * n];
+    api::dgemm(&serial, Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut want_x, n)
+        .unwrap();
+    api::dgemm(&serial, Trans::No, Trans::No, n, n, n, 1.0, &want_x, n, &d, n, 0.0, &mut want_e, n)
+        .unwrap();
+    assert_eq!(x, want_x, "first link diverged");
+    assert_eq!(e, want_e, "RAW chain diverged from serial");
+}
+
+/// WAR pair: job 1 reads X (into Y), job 2 then overwrites X. Job 2
+/// must not clobber X before job 1 has consumed it.
+#[test]
+fn war_pair_orders_by_admission() {
+    let c = ctx();
+    let n = 64;
+    let mut p = Prng::new(2);
+    let x0 = rand(&mut p, n * n);
+    let b = rand(&mut p, n * n);
+    let g = rand(&mut p, n * n);
+    let h = rand(&mut p, n * n);
+    let mut x = x0.clone();
+    let mut y = vec![0.0; n * n];
+    c.scope(|s| {
+        let (rb, rg, rh) = (s.input(&b), s.input(&g), s.input(&h));
+        let rx = s.buffer(&mut x);
+        let ry = s.buffer(&mut y);
+        // reader first …
+        let _ = s.dgemm(Trans::No, Trans::No, n, n, n, 1.0, rx, n, rb, n, 0.0, ry, n)?;
+        // … then a writer of the same buffer (WAR edge)
+        let _ = s.dgemm(Trans::No, Trans::No, n, n, n, 1.0, rg, n, rh, n, 0.0, rx, n)?;
+        Ok(())
+    })
+    .unwrap();
+
+    let serial = ctx().with_persistent(false);
+    let mut want_y = vec![0.0; n * n];
+    api::dgemm(&serial, Trans::No, Trans::No, n, n, n, 1.0, &x0, n, &b, n, 0.0, &mut want_y, n)
+        .unwrap();
+    let mut want_x = vec![0.0; n * n];
+    api::dgemm(&serial, Trans::No, Trans::No, n, n, n, 1.0, &g, n, &h, n, 0.0, &mut want_x, n)
+        .unwrap();
+    assert_eq!(y, want_y, "reader saw the overwritten X (WAR violated)");
+    assert_eq!(x, want_x, "writer's result lost");
+}
+
+/// WAW pair: two jobs write the same C; the later admission must win,
+/// exactly as in the serial sequence.
+#[test]
+fn waw_pair_orders_by_admission() {
+    let c = ctx();
+    let n = 64;
+    let mut p = Prng::new(3);
+    let a = rand(&mut p, n * n);
+    let b = rand(&mut p, n * n);
+    let g = rand(&mut p, n * n);
+    let h = rand(&mut p, n * n);
+    let mut out = vec![0.0; n * n];
+    c.scope(|s| {
+        let (ra, rb, rg, rh) = (s.input(&a), s.input(&b), s.input(&g), s.input(&h));
+        let ro = s.buffer(&mut out);
+        let _ = s.dgemm(Trans::No, Trans::No, n, n, n, 1.0, ra, n, rb, n, 0.0, ro, n)?;
+        let _ = s.dgemm(Trans::No, Trans::No, n, n, n, 1.0, rg, n, rh, n, 0.0, ro, n)?;
+        Ok(())
+    })
+    .unwrap();
+    let serial = ctx().with_persistent(false);
+    let mut want = vec![0.0; n * n];
+    api::dgemm(&serial, Trans::No, Trans::No, n, n, n, 1.0, &g, n, &h, n, 0.0, &mut want, n)
+        .unwrap();
+    assert_eq!(out, want, "later WAW writer must win");
+}
+
+/// The forget-safety property the old wait-on-drop API lacked:
+/// `std::mem::forget` on a live handle inside the scope must not skip
+/// the completion barrier — the scope close still waits, so the
+/// buffers hold the finished results and workers never touch freed
+/// memory after the scope returns.
+#[test]
+fn forgotten_handle_still_completes_at_scope_close() {
+    let c = ctx();
+    let n = 128; // big enough that the job genuinely outlives the forget
+    for round in 0..4 {
+        let a = vec![1.0; n * n];
+        let b = vec![1.0; n * n];
+        let mut out = vec![0.0; n * n];
+        c.invalidate_host(&a);
+        c.invalidate_host(&b);
+        c.scope(|s| {
+            let (ra, rb) = (s.input(&a), s.input(&b));
+            let ro = s.buffer(&mut out);
+            let h = s.dgemm(Trans::No, Trans::No, n, n, n, 1.0, ra, n, rb, n, 0.0, ro, n)?;
+            std::mem::forget(h);
+            Ok(())
+        })
+        .unwrap();
+        assert!(
+            out.iter().all(|&x| x == n as f64),
+            "round {round}: scope close must wait for the forgotten handle's job"
+        );
+        assert_eq!(c.jobs_in_flight(), 0, "round {round}");
+        // a/b/out drop and are reallocated next round: if a worker were
+        // still writing after scope close, later rounds would corrupt.
+    }
+}
+
+/// A panicking closure must not unwind past in-flight jobs: the
+/// ScopeToken's drop runs the same barrier, so by the time the panic
+/// propagates out of `scope`, every job has retired.
+#[test]
+fn panicking_scope_still_waits_for_jobs() {
+    let c = ctx();
+    let n = 128;
+    let a = vec![1.0; n * n];
+    let b = vec![1.0; n * n];
+    let mut out = vec![0.0; n * n];
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        c.scope(|s| -> blasx::Result<()> {
+            let (ra, rb) = (s.input(&a), s.input(&b));
+            let ro = s.buffer(&mut out);
+            let _ = s.dgemm(Trans::No, Trans::No, n, n, n, 1.0, ra, n, rb, n, 0.0, ro, n)?;
+            panic!("user closure panics with a job in flight");
+        })
+    }));
+    assert!(result.is_err(), "the panic must propagate");
+    assert!(
+        out.iter().all(|&x| x == n as f64),
+        "unwind path must still run the completion barrier"
+    );
+    assert_eq!(c.jobs_in_flight(), 0);
+}
+
+/// Mixed-routine aliasing chain through one scope: C := A·B, S := C'C
+/// (syrk reads C), then solve T·X = C in place — three jobs, RAW edges
+/// C→syrk and C→trsm, WAR syrk→trsm... all ordered by admission,
+/// bit-for-bit serial.
+#[test]
+fn mixed_routine_chain_matches_serial() {
+    let c = ctx();
+    let n = 64;
+    let mut p = Prng::new(5);
+    let a = rand(&mut p, n * n);
+    let b = rand(&mut p, n * n);
+    let tri = upper_tri(&mut p, n);
+    let mut prod = vec![0.0; n * n];
+    let mut sym = rand(&mut p, n * n);
+    let sym0 = sym.clone();
+    c.scope(|s| {
+        let (ra, rb, rt) = (s.input(&a), s.input(&b), s.input(&tri));
+        let rp = s.buffer(&mut prod);
+        let rs = s.buffer(&mut sym);
+        let _ = s.dgemm(Trans::No, Trans::No, n, n, n, 1.0, ra, n, rb, n, 0.0, rp, n)?;
+        let _ = s.dsyrk(Uplo::Lower, Trans::No, n, n, 0.7, rp, n, 0.4, rs, n)?;
+        let _ = s.dtrsm(Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, n, n, 1.0, rt, n, rp, n)?;
+        Ok(())
+    })
+    .unwrap();
+
+    let serial = ctx().with_persistent(false);
+    let mut want_prod = vec![0.0; n * n];
+    let mut want_sym = sym0;
+    api::dgemm(&serial, Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut want_prod, n)
+        .unwrap();
+    api::syrk(&serial, Uplo::Lower, Trans::No, n, n, 0.7, &want_prod, n, 0.4, &mut want_sym, n)
+        .unwrap();
+    api::trsm(&serial, Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, n, n, 1.0, &tri, n, &mut want_prod, n)
+        .unwrap();
+    assert_eq!(prod, want_prod, "dgemm→dtrsm in-place chain diverged");
+    assert_eq!(sym, want_sym, "interleaved syrk diverged");
+}
+
+/// A detached (or forgotten) job's failure must surface at the scope
+/// close — `scope` returning Ok over a garbage output buffer would be
+/// a silent-error hole. A failure the user already observed via
+/// `wait()` is NOT re-reported. (The PJRT backend is a deterministic
+/// failure injector here: the offline xla stub errors on first use.)
+#[test]
+fn detached_job_failure_surfaces_at_scope_close() {
+    let c = ctx().with_backend(Backend::Pjrt);
+    let n = 64;
+    let a = vec![1.0; n * n];
+    let b = vec![1.0; n * n];
+    let mut out = vec![0.0; n * n];
+    let res = c.scope(|s| {
+        let (ra, rb) = (s.input(&a), s.input(&b));
+        let ro = s.buffer(&mut out);
+        let _ = s.dgemm(Trans::No, Trans::No, n, n, n, 1.0, ra, n, rb, n, 0.0, ro, n)?;
+        Ok(())
+    });
+    assert!(res.is_err(), "detached failing job must fail the scope");
+
+    // Same failure, but waited: delivered through the handle, so the
+    // scope itself succeeds with the closure's value.
+    let mut out2 = vec![0.0; n * n];
+    let res2 = c.scope(|s| {
+        let (ra, rb) = (s.input(&a), s.input(&b));
+        let ro = s.buffer(&mut out2);
+        let h = s.dgemm(Trans::No, Trans::No, n, n, n, 1.0, ra, n, rb, n, 0.0, ro, n)?;
+        assert!(h.wait().is_err(), "the job itself still fails");
+        Ok(7u32)
+    });
+    assert_eq!(res2.unwrap(), 7, "observed failure must not re-surface at close");
+    assert_eq!(c.jobs_in_flight(), 0);
+}
+
+/// Handles observe per-job completion (`is_done`, out-of-order waits)
+/// and carry per-job reports.
+#[test]
+fn handles_report_per_job() {
+    let c = ctx();
+    let n = 64;
+    let mut p = Prng::new(6);
+    let a = rand(&mut p, n * n);
+    let b = rand(&mut p, n * n);
+    let mut o1 = vec![0.0; n * n];
+    let mut o2 = vec![0.0; n * n];
+    c.scope(|s| {
+        let (ra, rb) = (s.input(&a), s.input(&b));
+        let r1 = s.buffer(&mut o1);
+        let r2 = s.buffer(&mut o2);
+        let h1 = s.dgemm(Trans::No, Trans::No, n, n, n, 1.0, ra, n, rb, n, 0.0, r1, n)?;
+        let h2 = s.dgemm(Trans::Yes, Trans::No, n, n, n, 1.0, ra, n, rb, n, 0.0, r2, n)?;
+        assert_ne!(h1.job_id(), h2.job_id());
+        let rep2 = h2.wait()?;
+        assert!(rep2.transfers.total_host_reads() > 0 || rep2.transfers.l1_hits > 0);
+        let rep1 = h1.wait()?;
+        assert!(rep1.tasks_per_device.iter().sum::<usize>() > 0);
+        Ok(())
+    })
+    .unwrap();
+    assert_eq!(c.runtime_calls(), 2);
+}
+
+/// Scopes compose: sequential scopes on one context, concurrent scopes
+/// on clones from different threads, and f32 jobs share the fleet.
+#[test]
+fn scopes_compose_across_threads_and_dtypes() {
+    let c = ctx();
+    // empty scope is a no-op
+    c.scope(|_s| Ok(())).unwrap();
+    std::thread::scope(|ts| {
+        let c1 = c.clone();
+        ts.spawn(move || {
+            let n = 48;
+            let a = vec![2.0f64; n * n];
+            let b = vec![1.0f64; n * n];
+            let mut o = vec![0.0f64; n * n];
+            c1.scope(|s| {
+                let (ra, rb) = (s.input(&a), s.input(&b));
+                let ro = s.buffer(&mut o);
+                s.dgemm(Trans::No, Trans::No, n, n, n, 1.0, ra, n, rb, n, 0.0, ro, n)
+                    .map(|h| h.detach())
+            })
+            .unwrap();
+            assert!(o.iter().all(|&x| x == 2.0 * n as f64));
+        });
+        let c2 = c.clone();
+        ts.spawn(move || {
+            let n = 56;
+            let a = vec![1.0f32; n * n];
+            let b = vec![3.0f32; n * n];
+            let mut o = vec![0.0f32; n * n];
+            c2.scope(|s| {
+                let (ra, rb) = (s.input(&a), s.input(&b));
+                let ro = s.buffer(&mut o);
+                s.sgemm(Trans::No, Trans::No, n, n, n, 1.0, ra, n, rb, n, 0.0, ro, n)
+                    .map(|h| h.detach())
+            })
+            .unwrap();
+            assert!(o.iter().all(|&x| x == 3.0 * n as f32));
+        });
+    });
+    assert_eq!(c.jobs_in_flight(), 0);
+}

@@ -100,8 +100,9 @@ fn concurrent_mixed_routines_match_serial_bit_for_bit() {
     }
 }
 
-/// Async jobs on disjoint buffers are admitted concurrently, may be
-/// waited out of order, and each lands the exact blocking-call result.
+/// Scope-async jobs on disjoint buffers are admitted concurrently, may
+/// be waited out of order, and each lands the exact blocking-call
+/// result.
 #[test]
 fn async_jobs_overlap_and_complete_out_of_order() {
     let ctx = serve_ctx();
@@ -112,21 +113,24 @@ fn async_jobs_overlap_and_complete_out_of_order() {
     let bbufs: Vec<Vec<f64>> = (0..jobs).map(|_| rand(&mut p, k * n)).collect();
     let mut cbufs: Vec<Vec<f64>> = (0..jobs).map(|_| vec![0.0; m * n]).collect();
 
-    let handles: Vec<_> = cbufs
-        .iter_mut()
-        .enumerate()
-        .map(|(i, c)| {
-            api::dgemm_async(
-                &ctx, Trans::No, Trans::No, m, n, k, 1.0, &abufs[i], m, &bbufs[i], k, 0.0, c, m,
-            )
-            .unwrap()
-        })
-        .collect();
-    assert!(ctx.jobs_in_flight() <= jobs);
-    // Wait newest-first: completion order must not matter.
-    for h in handles.into_iter().rev() {
-        h.wait().unwrap();
-    }
+    ctx.scope(|s| {
+        let handles: Vec<_> = cbufs
+            .iter_mut()
+            .enumerate()
+            .map(|(i, c)| {
+                let (ra, rb) = (s.input(&abufs[i]), s.input(&bbufs[i]));
+                let rc = s.buffer(c);
+                s.dgemm(Trans::No, Trans::No, m, n, k, 1.0, ra, m, rb, k, 0.0, rc, m).unwrap()
+            })
+            .collect();
+        assert!(ctx.jobs_in_flight() <= jobs);
+        // Wait newest-first: completion order must not matter.
+        for h in handles.into_iter().rev() {
+            h.wait().unwrap();
+        }
+        Ok(())
+    })
+    .unwrap();
     assert_eq!(ctx.runtime_calls(), jobs);
     for i in 0..jobs {
         let mut want = vec![0.0; m * n];
@@ -141,7 +145,7 @@ fn async_jobs_overlap_and_complete_out_of_order() {
 
 /// A blocking read-after-write chain (call 2 reads call 1's output —
 /// the epoch-dependency path) stays bit-for-bit correct while an
-/// unrelated async job churns the same devices and caches.
+/// unrelated scope-async job churns the same devices and caches.
 #[test]
 fn raw_chain_stays_coherent_under_concurrent_load() {
     let ctx = serve_ctx();
@@ -154,20 +158,25 @@ fn raw_chain_stays_coherent_under_concurrent_load() {
     let big_a = rand(&mut p, 160 * 160);
     let big_b = rand(&mut p, 160 * 160);
     let mut big_c = vec![0.0; 160 * 160];
-    let bg = api::dgemm_async(
-        &ctx, Trans::No, Trans::No, 160, 160, 160, 1.0, &big_a, 160, &big_b, 160, 0.0, &mut big_c,
-        160,
-    )
-    .unwrap();
-
-    // foreground chain: x := a*b, then e := x*d (reads the buffer the
-    // first call just rewrote — served through the bumped epoch, never
-    // from stale tiles)
     let mut x = vec![0.0; n * n];
     let mut e = vec![0.0; n * n];
-    api::dgemm(&ctx, Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut x, n).unwrap();
-    api::dgemm(&ctx, Trans::No, Trans::No, n, n, n, 1.0, &x, n, &d, n, 0.0, &mut e, n).unwrap();
-    bg.wait().unwrap();
+    ctx.scope(|s| {
+        let (rba, rbb) = (s.input(&big_a), s.input(&big_b));
+        let rbc = s.buffer(&mut big_c);
+        let bg = s.dgemm(
+            Trans::No, Trans::No, 160, 160, 160, 1.0, rba, 160, rbb, 160, 0.0, rbc, 160,
+        )?;
+
+        // foreground chain: x := a*b, then e := x*d (reads the buffer
+        // the first call just rewrote — served through the bumped
+        // epoch, never from stale tiles); blocking calls interleave
+        // freely with the in-flight scope job.
+        api::dgemm(&ctx, Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut x, n)?;
+        api::dgemm(&ctx, Trans::No, Trans::No, n, n, n, 1.0, &x, n, &d, n, 0.0, &mut e, n)?;
+        bg.wait()?;
+        Ok(())
+    })
+    .unwrap();
 
     let serial = serve_ctx().with_persistent(false);
     let mut want_x = vec![0.0; n * n];
