@@ -3,13 +3,16 @@
 //! for small repeated DGEMMs — the serving-workload regime the
 //! resident runtime exists for.
 //!
-//! Three configurations per size:
+//! Four configurations per size:
 //! - `one-shot`  — `Context::with_persistent(false)`: fresh scoped
 //!   threads, arenas and caches every call (the pre-runtime engine);
 //! - `cold-boot` — a brand-new persistent `Context` per call: measures
 //!   runtime boot + first-touch transfers;
 //! - `warm`      — one persistent `Context`, repeated calls: resident
-//!   workers, warm tile caches (zero host reads after call 1).
+//!   workers, warm tile caches (zero host reads after call 1);
+//! - `warm-traced` — warm calls with the span recorder enabled: the
+//!   observability layer's tracing tax (the `warm` row doubles as the
+//!   disabled-recorder gate — recording off is the default).
 //!
 //! Results print as a table and land in `bench_out/BENCH_runtime.json`
 //! plus the repo-root `BENCH_runtime.json` (committed snapshot —
@@ -80,6 +83,17 @@ fn bench_size(n: usize, rows: &mut Vec<Row>) {
     let samples: Vec<_> = (0..REPS).map(|_| time_call(&warm, n, &a, &b, &mut c)).collect();
     assert_eq!(samples.last().unwrap().1, 0, "warm calls must be transfer-free");
     record("warm", &samples);
+
+    // warm + span recorder enabled: the observability tax when tracing.
+    // The disabled-recorder path (the "warm" row above) is one relaxed
+    // atomic load per probe site — the two rows bounding the recorder's
+    // cost is the perf gate the observability PR ships under.
+    warm.set_tracing(true);
+    let _ = time_call(&warm, n, &a, &b, &mut c);
+    let samples: Vec<_> = (0..REPS).map(|_| time_call(&warm, n, &a, &b, &mut c)).collect();
+    warm.set_tracing(false);
+    warm.reset_trace();
+    record("warm-traced", &samples);
 }
 
 fn main() {
@@ -122,6 +136,27 @@ fn main() {
         arr.push(o);
     }
     json.set("results", Json::Arr(arr));
+    // Recorder overhead per size: warm-traced best vs warm best. The
+    // disabled-recorder case is the "warm" rows themselves (recording
+    // off is the default), so any warm regression IS the disabled cost.
+    let mut overhead = Vec::new();
+    for &n in &sizes {
+        let best = |mode: &str| {
+            rows.iter()
+                .filter(|r| r.n == n && r.mode == mode)
+                .map(|r| r.best_ms)
+                .next()
+                .unwrap_or(0.0)
+        };
+        let (off, on) = (best("warm"), best("warm-traced"));
+        let mut o = Json::obj();
+        o.set("n", Json::Num(n as f64));
+        o.set("warm_best_ms", Json::Num(off));
+        o.set("traced_best_ms", Json::Num(on));
+        o.set("trace_overhead_ms", Json::Num(on - off));
+        overhead.push(o);
+    }
+    json.set("recorder_overhead", Json::Arr(overhead));
     write_json("BENCH_runtime", &json);
     let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_runtime.json");
     match std::fs::write(&root, json.to_string_pretty()) {

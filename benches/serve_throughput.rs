@@ -13,6 +13,10 @@
 //!   scheduler rounds vs wall × device count (the under-utilization
 //!   the multi-tenant table removes: with 1 client the workers idle
 //!   between submit gaps, with 4/16 they stay fed);
+//! - **latency percentiles** — per-job end-to-end and queue-wait
+//!   p50/p95/p99 pulled from the runtime's own metrics registry (the
+//!   same histograms `blasx serve` and `--metrics-out` report), not
+//!   bench-side timers;
 //! - **speedup** — jobs/s relative to the 1-client row.
 //!
 //! The overlap acceptance check of the serve PR also lands here: with
@@ -45,6 +49,12 @@ struct Row {
     wall_ms: f64,
     jobs_per_sec: f64,
     busy_frac: f64,
+    /// End-to-end latency percentiles (ms) from the runtime's metrics
+    /// registry (per-routine histogram), not bench-side timers.
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    queue_p95_ms: f64,
 }
 
 /// One client's buffers (private ⇒ jobs are admission-independent).
@@ -92,12 +102,26 @@ fn bench_clients(n_clients: usize, rows: &mut Vec<Row>) {
     let busy1: u64 = ctx.runtime_busy_nanos().iter().sum();
     let jobs = n_clients * JOBS_PER_CLIENT;
     let busy_frac = ((busy1.saturating_sub(busy0)) as f64 / 1e9) / (wall * DEVICES as f64);
+    let snap = ctx.snapshot_metrics();
+    let q = |field: &str, p: &str| {
+        snap.as_ref()
+            .and_then(|m| m.get("per_routine"))
+            .and_then(|r| r.get("gemm"))
+            .and_then(|g| g.get(field))
+            .and_then(|h| h.get(p))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+    };
     rows.push(Row {
         clients: n_clients,
         jobs,
         wall_ms: wall * 1e3,
         jobs_per_sec: jobs as f64 / wall,
         busy_frac: busy_frac.min(1.0),
+        p50_ms: q("end_to_end_ms", "p50"),
+        p95_ms: q("end_to_end_ms", "p95"),
+        p99_ms: q("end_to_end_ms", "p99"),
+        queue_p95_ms: q("queue_wait_ms", "p95"),
     });
 }
 
@@ -143,13 +167,15 @@ fn main() {
                 format!("{:.1}", r.jobs_per_sec),
                 format!("{:.2}", r.busy_frac),
                 format!("{:.2}", 1.0 - r.busy_frac),
+                format!("{:.2}/{:.2}/{:.2}", r.p50_ms, r.p95_ms, r.p99_ms),
+                format!("{:.2}", r.queue_p95_ms),
                 format!("{:.2}x", r.jobs_per_sec / base),
             ]
         })
         .collect();
     print_table(
         "serve throughput: concurrent clients over one resident runtime",
-        &["clients", "jobs", "wall ms", "jobs/s", "busy", "idle", "speedup"],
+        &["clients", "jobs", "wall ms", "jobs/s", "busy", "idle", "lat p50/p95/p99 ms", "queue p95 ms", "speedup"],
         &table,
     );
 
@@ -174,6 +200,10 @@ fn main() {
         o.set("jobs_per_sec", Json::Num(r.jobs_per_sec));
         o.set("worker_busy_fraction", Json::Num(r.busy_frac));
         o.set("worker_idle_fraction", Json::Num(1.0 - r.busy_frac));
+        o.set("latency_p50_ms", Json::Num(r.p50_ms));
+        o.set("latency_p95_ms", Json::Num(r.p95_ms));
+        o.set("latency_p99_ms", Json::Num(r.p99_ms));
+        o.set("queue_wait_p95_ms", Json::Num(r.queue_p95_ms));
         arr.push(o);
     }
     json.set("results", Json::Arr(arr));

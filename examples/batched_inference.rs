@@ -66,7 +66,7 @@ fn main() {
         gflops(total_flops, fused_secs)
     );
     println!("  tasks/device {:?}  steals {:?}", report.tasks_per_device, report.steals);
-    println!("  cache (hits, misses, evictions): {:?}", report.cache_stats);
+    println!("  cache activity this call: {:?}", report.cache_delta);
 
     // -- looped single calls: identical numerics, N scheduler ramp-ups
     let mut ys_loop: Vec<Vec<f64>> = entries.iter().map(|e| vec![0.0f64; e.m * out]).collect();

@@ -101,6 +101,29 @@ int main(void) {
         fprintf(stderr, "async submission failed: %s\n", msg);
         return 1;
     }
+    /* live observability: blasx_job_stats is valid any time between
+     * submit and wait (counters are monotone). Once j2 retires, j1 has
+     * too (the chain edge orders them), so its counters are final. */
+    blasx_stats_t live;
+    if (blasx_job_stats(j1, &live) != BLASX_OK) {
+        fprintf(stderr, "blasx_job_stats failed on a live handle\n");
+        return 1;
+    }
+    while (blasx_job_done(j2) == 0) { /* spin: the smoke problem is tiny */ }
+    if (blasx_job_stats(j1, &live) != BLASX_OK) {
+        fprintf(stderr, "blasx_job_stats failed on a retired handle\n");
+        return 1;
+    }
+    printf("  gemm job stats: tasks %llu  host reads A/B/C %llu/%llu/%llu  "
+           "peer %llu  L1 hits %llu  steals %llu\n",
+           (unsigned long long)live.tasks, (unsigned long long)live.host_reads_a,
+           (unsigned long long)live.host_reads_b, (unsigned long long)live.host_reads_c,
+           (unsigned long long)live.peer_copies, (unsigned long long)live.l1_hits,
+           (unsigned long long)live.steals);
+    if (live.tasks == 0) {
+        fprintf(stderr, "retired gemm job reports zero tasks\n");
+        failures++;
+    }
     int s2 = blasx_wait(j2); /* newest first: order must not matter */
     int s1 = blasx_wait(j1);
     if (s1 != BLASX_OK || s2 != BLASX_OK) {

@@ -73,9 +73,9 @@ fn main() {
     let cm = HostMat::new(&mut c, m2, m2, m2, t2, MatId::C);
     let cfg = RunConfig { t: t2, ..Default::default() };
     let rep = run_real(&cfg, &ts, Mats { a: &am, b: Some(&bm), c: &cm }, 2, arena).expect("run");
-    println!("  cache stats (hit, miss, evict) per device: {:?}", rep.cache_stats);
+    println!("  cache stats per device: {:?}", rep.cache_delta);
     assert!(
-        rep.cache_stats.iter().any(|&(_, _, e)| e > 0),
+        rep.cache_delta.iter().any(|s| s.evictions > 0),
         "expected evictions under pressure"
     );
 

@@ -56,10 +56,28 @@ def declare(lib):
     lib.blasx_dtrsm_async.restype = ctypes.c_void_p
     lib.blasx_wait.argtypes = [ctypes.c_void_p]
     lib.blasx_wait.restype = i
+    lib.blasx_job_done.argtypes = [ctypes.c_void_p]
+    lib.blasx_job_done.restype = i
+    lib.blasx_job_stats.argtypes = [ctypes.c_void_p, ctypes.POINTER(BlasxStats)]
+    lib.blasx_job_stats.restype = i
     lib.blasx_last_error.argtypes = [ctypes.c_char_p, szt]
     lib.blasx_last_error.restype = szt
     lib.blasx_version.restype = ctypes.c_char_p
     lib.blasx_shutdown.restype = None
+
+
+class BlasxStats(ctypes.Structure):
+    """struct blasx_stats (include/blasx.h): live per-job counters."""
+
+    _fields_ = [
+        ("tasks", ctypes.c_uint64),
+        ("host_reads_a", ctypes.c_uint64),
+        ("host_reads_b", ctypes.c_uint64),
+        ("host_reads_c", ctypes.c_uint64),
+        ("peer_copies", ctypes.c_uint64),
+        ("l1_hits", ctypes.c_uint64),
+        ("steals", ctypes.c_uint64),
+    ]
 
 
 def buf(values):
@@ -93,6 +111,17 @@ def main():
         msg = ctypes.create_string_buffer(256)
         lib.blasx_last_error(msg, 256)
         sys.exit(f"async submission failed: {msg.value.decode()}")
+    # -- live observability: per-job counters, valid before the wait
+    while lib.blasx_job_done(j2) == 0:
+        pass  # spin: the example problem is tiny
+    stats = BlasxStats()
+    assert lib.blasx_job_stats(j1, ctypes.byref(stats)) == 0
+    print(
+        f"gemm job stats: tasks {stats.tasks}, host reads "
+        f"A/B/C {stats.host_reads_a}/{stats.host_reads_b}/{stats.host_reads_c}, "
+        f"peer {stats.peer_copies}, L1 hits {stats.l1_hits}, steals {stats.steals}"
+    )
+    assert stats.tasks > 0, "retired gemm job reports zero tasks"
     assert lib.blasx_wait(j2) == 0  # newest first — order must not matter
     assert lib.blasx_wait(j1) == 0
 

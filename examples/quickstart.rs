@@ -51,7 +51,7 @@ fn main() {
 
     println!("DGEMM {n}x{n}x{n}: {:.3}s  ({:.2} GFLOPS)", secs, gflops(2.0 * (n as f64).powi(3), secs));
     println!("tasks per device: {:?}", report.tasks_per_device);
-    println!("cache (hits, misses, evictions): {:?}", report.cache_stats);
+    println!("cache activity this call: {:?}", report.cache_delta);
 
     // verify against the single-threaded host oracle
     let mut want = c0;

@@ -29,6 +29,7 @@
 #define BLASX_H
 
 #include <stddef.h>
+#include <stdint.h>
 
 #ifdef __cplusplus
 extern "C" {
@@ -135,6 +136,23 @@ int blasx_wait(blasx_job_t *job);
 /* 1 = retired (wait will not block), 0 = in flight, -1 = NULL. Does
  * not free the handle. */
 int blasx_job_done(const blasx_job_t *job);
+
+/* Observability counters of one job — the numbers blasx_wait discards
+ * with its report. Counters are monotone while the job runs. */
+typedef struct blasx_stats {
+    uint64_t tasks;        /* scheduler tasks executed so far          */
+    uint64_t host_reads_a; /* host->device tile reads of operand A     */
+    uint64_t host_reads_b; /* host->device tile reads of operand B     */
+    uint64_t host_reads_c; /* host->device tile reads of operand C     */
+    uint64_t peer_copies;  /* device->device (peer) tile copies        */
+    uint64_t l1_hits;      /* tile-cache hits (no bytes moved)         */
+    uint64_t steals;       /* tasks obtained by work stealing          */
+} blasx_stats_t;
+
+/* Snapshot the job's live counters into *out. Non-blocking; valid
+ * while the job is in flight; does not free the handle. Returns
+ * BLASX_OK, or BLASX_ERR_INTERNAL on a NULL argument. */
+int blasx_job_stats(const blasx_job_t *job, blasx_stats_t *out);
 
 /* ---- runtime control ----------------------------------------------- */
 

@@ -58,6 +58,8 @@ use crate::task::{
     GemmDesc, SymmDesc, SyrkDesc, TaskSet, TriDesc,
 };
 use crate::tile::{HostMat, MatId};
+use crate::trace::{chrome_trace, Trace};
+use crate::util::json::Json;
 use std::sync::{Arc, Mutex};
 
 /// Execution context: how many virtual devices, how much arena each,
@@ -230,20 +232,75 @@ impl Context {
         }
     }
 
+    /// Turn the wall-clock span recorder on or off (see
+    /// `crate::trace::spans`). Boots the resident runtime if needed so
+    /// the recorder exists to flip; a no-op for non-persistent contexts
+    /// (their one-shot cores read `BLASX_TRACE` at construction).
+    pub fn set_tracing(&self, on: bool) {
+        if self.persistent {
+            self.runtime().core().rec.set_enabled(on);
+        }
+    }
+
+    /// Is the span recorder currently capturing? `false` when the
+    /// runtime has not booted.
+    pub fn tracing_enabled(&self) -> bool {
+        self.runtime_if_booted().map_or(false, |rt| rt.core().rec.is_enabled())
+    }
+
+    /// The spans captured so far as a sim-compatible [`Trace`] with
+    /// real timestamps — feed it to
+    /// [`crate::trace::device_profile`] / [`crate::trace::comm_volumes`]
+    /// for the paper's Fig. 8 / Table V breakdowns on wall-clock data.
+    /// `None` when the runtime has not booted.
+    pub fn snapshot_trace(&self) -> Option<Trace> {
+        self.runtime_if_booted().map(|rt| rt.core().rec.to_trace())
+    }
+
+    /// The captured spans + job lifecycles as a Chrome trace-event
+    /// JSON document (load in Perfetto / `chrome://tracing`). `None`
+    /// when the runtime has not booted.
+    pub fn chrome_trace_json(&self) -> Option<String> {
+        self.runtime_if_booted().map(|rt| {
+            let rec = &rt.core().rec;
+            chrome_trace(&rec.spans(), &rec.job_records()).to_string_compact()
+        })
+    }
+
+    /// Drop every captured span and job record (the enabled flag is
+    /// unchanged). No-op when the runtime has not booted.
+    pub fn reset_trace(&self) {
+        if let Some(rt) = self.runtime_if_booted() {
+            rt.core().rec.reset();
+        }
+    }
+
+    /// Snapshot of the resident runtime's metrics registry (job
+    /// counters, per-worker busy fractions, per-tenant / per-routine
+    /// latency quantiles) as JSON. `None` when the runtime has not
+    /// booted. Schema: see README §Observability.
+    pub fn snapshot_metrics(&self) -> Option<Json> {
+        self.runtime_if_booted().map(|rt| rt.metrics().snapshot())
+    }
+
     /// Route a task set to the resident runtime (persistent) or the
     /// one-shot engine. Under the resident runtime this is
     /// submit-then-wait through the multi-tenant scheduler: the call
     /// parks, but OTHER threads' calls interleave with it on the
-    /// devices.
+    /// devices. `routine` labels the call in the metrics registry and
+    /// trace exports.
     pub(crate) fn execute<T: Scalar>(
         &self,
+        routine: &'static str,
         ts: &TaskSet,
         problems: Vec<Mats<'_, T>>,
     ) -> Result<RealReport> {
+        let mut cfg = self.cfg.clone();
+        cfg.routine = routine;
         if !self.persistent {
-            return run_real_batch(&self.cfg, ts, problems, self.n_devices, self.arena_bytes);
+            return run_real_batch(&cfg, ts, problems, self.n_devices, self.arena_bytes);
         }
-        self.runtime().submit(&self.cfg, ts, problems)
+        self.runtime().submit(&cfg, ts, problems)
     }
 }
 
@@ -405,7 +462,7 @@ pub fn gemm<T: Scalar>(
     let am = HostMat::new_ro(a, ar, ac, lda, t, MatId::A);
     let bm = HostMat::new_ro(b, br, bc, ldb, t, MatId::B);
     let cm = HostMat::new(c, m, n, ldc, t, MatId::C);
-    ctx.execute(&ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }])
+    ctx.execute("gemm", &ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }])
 }
 
 /// `C := alpha*op(A)*op(A)^T + beta*C`, C symmetric stored in `uplo`.
@@ -428,7 +485,7 @@ pub fn syrk<T: Scalar>(
     let (ar, ac) = dims.a;
     let am = HostMat::new_ro(a, ar, ac, lda, t, MatId::A);
     let cm = HostMat::new(c, n, n, ldc, t, MatId::C);
-    ctx.execute(&ts, vec![Mats { a: &am, b: None, c: &cm }])
+    ctx.execute("syrk", &ts, vec![Mats { a: &am, b: None, c: &cm }])
 }
 
 /// `C := alpha*(op(A)op(B)^T + op(B)op(A)^T) + beta*C`.
@@ -455,7 +512,7 @@ pub fn syr2k<T: Scalar>(
     let am = HostMat::new_ro(a, ar, ac, lda, t, MatId::A);
     let bm = HostMat::new_ro(b, ar, ac, ldb, t, MatId::B);
     let cm = HostMat::new(c, n, n, ldc, t, MatId::C);
-    ctx.execute(&ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }])
+    ctx.execute("syr2k", &ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }])
 }
 
 /// `C := alpha*sym(A)*B + beta*C` (Left) / `alpha*B*sym(A) + beta*C`.
@@ -482,7 +539,7 @@ pub fn symm<T: Scalar>(
     let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
     let bm = HostMat::new_ro(b, m, n, ldb, t, MatId::B);
     let cm = HostMat::new(c, m, n, ldc, t, MatId::C);
-    ctx.execute(&ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }])
+    ctx.execute("symm", &ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }])
 }
 
 /// `B := alpha*op(tri(A))*B` (Left) / `alpha*B*op(tri(A))` (Right),
@@ -507,7 +564,7 @@ pub fn trmm<T: Scalar>(
     let (na, _) = dims.a;
     let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
     let cm = HostMat::new(b, m, n, ldb, t, MatId::C);
-    ctx.execute(&ts, vec![Mats { a: &am, b: None, c: &cm }])
+    ctx.execute("trmm", &ts, vec![Mats { a: &am, b: None, c: &cm }])
 }
 
 /// Solve `op(tri(A))*X = alpha*B` (Left) / `X*op(tri(A)) = alpha*B`,
@@ -532,7 +589,7 @@ pub fn trsm<T: Scalar>(
     let (na, _) = dims.a;
     let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
     let cm = HostMat::new(b, m, n, ldb, t, MatId::C);
-    ctx.execute(&ts, vec![Mats { a: &am, b: None, c: &cm }])
+    ctx.execute("trsm", &ts, vec![Mats { a: &am, b: None, c: &cm }])
 }
 
 // --- Non-blocking (serving-mode) submission --------------------------
@@ -671,7 +728,7 @@ pub fn gemm_batched<T: Scalar>(
     // Fused batches ride the same doorway as single calls: through the
     // resident runtime (quanta-ordered heads land in the persistent
     // workers' stations) or the one-shot engine when persistence is off.
-    ctx.execute(&ts, problems)
+    ctx.execute("gemm_batched", &ts, problems)
 }
 
 /// Batched GEMM, strided flavour: problem `i` reads `a[i*stride_a..]`,

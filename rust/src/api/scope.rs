@@ -226,13 +226,16 @@ impl<'scope, 'env> Scope<'scope, 'env> {
     /// Admit one planned job and hand back its handle.
     fn submit<T: Scalar>(
         &'scope self,
+        routine: &'static str,
         ts: TaskSet,
         a: HostMat<T>,
         b: Option<HostMat<T>>,
         c: HostMat<T>,
     ) -> Result<JobHandle<'scope>> {
         let rt = self.token.runtime().clone();
-        let (job, ctl) = rt.submit_owned(&self.ctx.cfg, ts, vec![OwnedProblem { a, b, c }])?;
+        let mut cfg = self.ctx.cfg.clone();
+        cfg.routine = routine;
+        let (job, ctl) = rt.submit_owned(&cfg, ts, vec![OwnedProblem { a, b, c }])?;
         self.token.register(ctl.clone(), job.clone());
         Ok(JobHandle::new(rt, job, ctl))
     }
@@ -264,7 +267,7 @@ impl<'scope, 'env> Scope<'scope, 'env> {
         let am = self.operand("gemm", 7, a, ar, ac, lda, MatId::A, false)?;
         let bm = self.operand("gemm", 9, b, br, bc, ldb, MatId::B, false)?;
         let cm = self.operand("gemm", 12, c, m, n, ldc, MatId::C, true)?;
-        self.submit(ts, am, Some(bm), cm)
+        self.submit("gemm", ts, am, Some(bm), cm)
     }
 
     /// Non-blocking SYRK: `C := alpha*op(A)*op(A)^T + beta*C`.
@@ -288,7 +291,7 @@ impl<'scope, 'env> Scope<'scope, 'env> {
         let (ar, ac) = dims.a;
         let am = self.operand("syrk", 6, a, ar, ac, lda, MatId::A, false)?;
         let cm = self.operand("syrk", 9, c, n, n, ldc, MatId::C, true)?;
-        self.submit(ts, am, None, cm)
+        self.submit("syrk", ts, am, None, cm)
     }
 
     /// Non-blocking SYR2K.
@@ -315,7 +318,7 @@ impl<'scope, 'env> Scope<'scope, 'env> {
         let am = self.operand("syr2k", 6, a, ar, ac, lda, MatId::A, false)?;
         let bm = self.operand("syr2k", 8, b, ar, ac, ldb, MatId::B, false)?;
         let cm = self.operand("syr2k", 11, c, n, n, ldc, MatId::C, true)?;
-        self.submit(ts, am, Some(bm), cm)
+        self.submit("syr2k", ts, am, Some(bm), cm)
     }
 
     /// Non-blocking SYMM.
@@ -342,7 +345,7 @@ impl<'scope, 'env> Scope<'scope, 'env> {
         let am = self.operand("symm", 6, a, na, na, lda, MatId::A, false)?;
         let bm = self.operand("symm", 8, b, m, n, ldb, MatId::B, false)?;
         let cm = self.operand("symm", 11, c, m, n, ldc, MatId::C, true)?;
-        self.submit(ts, am, Some(bm), cm)
+        self.submit("symm", ts, am, Some(bm), cm)
     }
 
     /// Non-blocking TRMM, in place in `b` (the token must be
@@ -367,7 +370,7 @@ impl<'scope, 'env> Scope<'scope, 'env> {
         let (na, _) = dims.a;
         let am = self.operand("trmm", 8, a, na, na, lda, MatId::A, false)?;
         let cm = self.operand("trmm", 10, b, m, n, ldb, MatId::C, true)?;
-        self.submit(ts, am, None, cm)
+        self.submit("trmm", ts, am, None, cm)
     }
 
     /// Non-blocking TRSM: X overwrites `b` (the token must be
@@ -392,7 +395,7 @@ impl<'scope, 'env> Scope<'scope, 'env> {
         let (na, _) = dims.a;
         let am = self.operand("trsm", 8, a, na, na, lda, MatId::A, false)?;
         let cm = self.operand("trsm", 10, b, m, n, ldb, MatId::C, true)?;
-        self.submit(ts, am, None, cm)
+        self.submit("trsm", ts, am, None, cm)
     }
 
     // -- precision-suffixed conveniences (the CBLAS-flavoured names) --

@@ -301,7 +301,7 @@ pub fn run_baseline(
         tasks_per_worker: workers.iter().map(|w| w.tasks_done).collect(),
         alloc_cost: 0.0,
         cache_stats: (0..n)
-            .map(|d| caches.as_ref().map(|c| c.stats(d)).unwrap_or((0, 0, 0)))
+            .map(|d| caches.as_ref().map(|c| c.stats(d)).unwrap_or_default())
             .collect(),
         steals: vec![0; n],
         dma_throughput: topo.measured_throughput(),

@@ -11,4 +11,4 @@ pub mod tile_cache;
 
 pub use alru::{Alru, LruBlock};
 pub use coherence::{Directory, TileState};
-pub use tile_cache::{Acquire, Source, TileCacheSet};
+pub use tile_cache::{Acquire, CacheStats, Source, TileCacheSet};

@@ -48,6 +48,34 @@ pub struct Acquire {
     pub alloc_cost: f64,
 }
 
+/// Hit/miss/eviction counters of one device's ALRU.
+///
+/// Under a persistent runtime these are **cumulative since the cache
+/// was built** (the ALRUs live across calls); use
+/// [`CacheStats::delta_since`] with a snapshot taken at job admission
+/// for a per-call view. Note the devices are shared: a delta taken over
+/// a job's in-flight window also counts concurrent tenants' traffic on
+/// the same devices.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Per-call view: counter increments since `earlier` was
+    /// snapshotted (saturating — a cache purge resets the ALRUs, and a
+    /// delta across a purge must not wrap).
+    pub fn delta_since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            evictions: self.evictions.saturating_sub(earlier.evictions),
+        }
+    }
+}
+
 /// Per-device ALRUs + the global coherence directory.
 pub struct TileCacheSet {
     alrus: Vec<Alru>,
@@ -151,10 +179,11 @@ impl TileCacheSet {
         let _ = dev;
     }
 
-    /// Cache statistics of one device: (hits, misses, evictions).
-    pub fn stats(&self, dev: usize) -> (u64, u64, u64) {
+    /// Cache statistics of one device (cumulative since construction;
+    /// see [`CacheStats::delta_since`] for the per-call view).
+    pub fn stats(&self, dev: usize) -> CacheStats {
         let a = &self.alrus[dev];
-        (a.hits, a.misses, a.evictions)
+        CacheStats { hits: a.hits, misses: a.misses, evictions: a.evictions }
     }
 
     /// Residency probe for tests.

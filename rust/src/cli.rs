@@ -102,8 +102,10 @@ USAGE:
               [--json out.json]
   blasx run   [--routine dgemm] [--n 1024] [--t 256] [--devices 2] [--pjrt]
               [--kernel-threads 1] [--repeat 1] [--no-persistent]
+              [--trace-out trace.json] [--metrics-out metrics.json]
   blasx serve [--clients 4] [--jobs 8] [--n 512] [--t 256] [--devices 2]
               [--kernel-threads 1] [--verify] [--ffi-verify]
+              [--trace-out trace.json] [--metrics-out metrics.json]
   blasx batch <workload.json> [--devices 2] [--t 256] [--pjrt] [--fused]
               [--kernel-threads 1] [--no-persistent]
   blasx header [--out include/blasx.h]
@@ -136,7 +138,16 @@ with serial execution. `--ffi-verify` instead drives the C ABI
 (`cblas_dgemm` row+column major, `cblas_dtrsm`, and an aliasing
 `blasx_dgemm_async`→`blasx_dtrsm_async` chain) against the safe path,
 bit-for-bit. `header` prints (or writes with `--out`) the generated C
-header that ships as include/blasx.h."
+header that ships as include/blasx.h.
+
+Observability (run/serve): `--trace-out FILE` enables the span
+recorder and writes a Chrome trace-event JSON (open in Perfetto or
+chrome://tracing; one track per device worker, one per admitted job);
+`run` then also prints the paper's COMPT/COMM/OTHER split and H<->D /
+P2P volumes from the real spans. `--metrics-out FILE` dumps the
+metrics-registry snapshot (per-tenant and per-routine latency
+percentiles, worker busy fractions). BLASX_TRACE=1 enables the
+recorder from the environment. See README \"Observability\"."
 }
 
 /// Entry point used by main.rs; returns a process exit code.
@@ -327,6 +338,7 @@ fn ffi_verify() -> i32 {
 /// and hammer the multi-tenant scheduler with independent DGEMMs.
 fn cmd_serve(args: &Args) -> i32 {
     use crate::api::{self, types::Trans};
+    use crate::util::json::Json;
     use crate::util::prng::Prng;
 
     if args.get("ffi-verify").is_some() {
@@ -339,9 +351,14 @@ fn cmd_serve(args: &Args) -> i32 {
     let t = args.get_usize("t", 256);
     let devices = args.get_usize("devices", 2);
     let verify = args.get("verify").is_some();
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let metrics_out = args.get("metrics-out").map(str::to_string);
     let ctx = api::Context::new(devices)
         .with_tile(t)
         .with_kernel_threads(args.get_usize("kernel-threads", 1));
+    if trace_out.is_some() {
+        ctx.set_tracing(true);
+    }
 
     println!("SERVE clients={clients} jobs={jobs} DGEMM N={n} T={t} devices={devices}");
 
@@ -461,6 +478,65 @@ fn cmd_serve(args: &Args) -> i32 {
         (1.0 - busy_frac).max(0.0),
         ctx.runtime_calls(),
     );
+    // Per-worker and per-client breakdowns from the metrics registry
+    // (the same snapshot `--metrics-out` serializes), not ad-hoc
+    // timers. Columns are documented in README "Observability".
+    let metrics = ctx.snapshot_metrics();
+    if let Some(m) = &metrics {
+        if let Some(workers) = m.get("workers").and_then(Json::as_arr) {
+            for w in workers {
+                println!(
+                    "  worker dev{}: busy {} ({:.0}% of uptime)  rounds {}",
+                    w.get("dev").and_then(Json::as_usize).unwrap_or(0),
+                    fmt_secs(w.get("busy_s").and_then(Json::as_f64).unwrap_or(0.0)),
+                    100.0 * w.get("busy_fraction").and_then(Json::as_f64).unwrap_or(0.0),
+                    w.get("rounds").and_then(Json::as_usize).unwrap_or(0),
+                );
+            }
+        }
+        if let Some(Json::Obj(tenants)) = m.get("per_tenant") {
+            let q = |o: &Json, field: &str, p: &str| {
+                o.get(field).and_then(|h| h.get(p)).and_then(Json::as_f64).unwrap_or(0.0)
+            };
+            println!("  client latency (ms): tenant jobs queue-wait p50/p95/p99 | end-to-end p50/p95/p99");
+            for (tenant, o) in tenants {
+                println!(
+                    "    t{tenant} {} {:.2}/{:.2}/{:.2} | {:.2}/{:.2}/{:.2}",
+                    o.get("jobs").and_then(Json::as_usize).unwrap_or(0),
+                    q(o, "queue_wait_ms", "p50"),
+                    q(o, "queue_wait_ms", "p95"),
+                    q(o, "queue_wait_ms", "p99"),
+                    q(o, "end_to_end_ms", "p50"),
+                    q(o, "end_to_end_ms", "p95"),
+                    q(o, "end_to_end_ms", "p99"),
+                );
+            }
+        }
+    }
+    if let Some(path) = &trace_out {
+        match ctx.chrome_trace_json() {
+            Some(json) => {
+                if let Err(e) = std::fs::write(path, json) {
+                    eprintln!("cannot write {path}: {e}");
+                    return 1;
+                }
+                println!("  chrome trace written to {path} (load in Perfetto / chrome://tracing)");
+            }
+            None => eprintln!("serve: tracing unavailable; no trace written"),
+        }
+    }
+    if let Some(path) = &metrics_out {
+        match &metrics {
+            Some(m) => {
+                if let Err(e) = std::fs::write(path, m.to_string_pretty()) {
+                    eprintln!("cannot write {path}: {e}");
+                    return 1;
+                }
+                println!("  metrics written to {path}");
+            }
+            None => eprintln!("serve: metrics unavailable; nothing written"),
+        }
+    }
     0
 }
 
@@ -638,8 +714,8 @@ fn cmd_batch_fused(ctx: &crate::api::Context, calls: &[crate::util::json::Json])
         gflops(total_flops, secs)
     );
     println!(
-        "  tasks/device {:?}  steals {:?}  cache (hit,miss,evict) {:?}",
-        rep.tasks_per_device, rep.steals, rep.cache_stats
+        "  tasks/device {:?}  steals {:?}  cache this-call {:?}",
+        rep.tasks_per_device, rep.steals, rep.cache_delta
     );
     0
 }
@@ -716,12 +792,21 @@ fn cmd_run(args: &Args) -> i32 {
     let t = args.get_usize("t", 256);
     let devices = args.get_usize("devices", 2);
     let repeat = args.get_usize("repeat", 1).max(1);
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let metrics_out = args.get("metrics-out").map(str::to_string);
     let mut ctx = api::Context::new(devices)
         .with_tile(t)
         .with_kernel_threads(args.get_usize("kernel-threads", 1))
         .with_persistent(args.persistent());
     if args.get("pjrt").is_some() {
         ctx = ctx.with_backend(crate::coordinator::Backend::Pjrt);
+    }
+    if trace_out.is_some() {
+        if ctx.persistent {
+            ctx.set_tracing(true);
+        } else {
+            eprintln!("run: --trace-out requires the persistent runtime; ignoring");
+        }
     }
 
     let mut p = Prng::new(2015);
@@ -761,9 +846,51 @@ fn cmd_run(args: &Args) -> i32 {
         );
         if call + 1 == repeat {
             println!(
-                "  tasks/device {:?}  cache (hit,miss,evict) {:?}",
-                rep.tasks_per_device, rep.cache_stats
+                "  tasks/device {:?}  cache this-call {:?}  cumulative {:?}",
+                rep.tasks_per_device, rep.cache_delta, rep.cache_stats
             );
+        }
+    }
+    if ctx.tracing_enabled() {
+        // The paper's Fig. 8 / Table V splits, from real wall-clock
+        // spans instead of the discrete-event simulator.
+        if let Some(trace) = ctx.snapshot_trace() {
+            for (d, p) in all_profiles(&trace).iter().enumerate() {
+                println!(
+                    "  dev{d}: COMPT {}  COMM {}  OTHER {}",
+                    fmt_secs(p.compt),
+                    fmt_secs(p.comm),
+                    fmt_secs(p.other)
+                );
+            }
+            for (d, v) in comm_volumes(&trace).iter().enumerate() {
+                println!(
+                    "  dev{d}: H<->D {}  P2P {}",
+                    fmt_bytes(v.hd_bytes as u64),
+                    fmt_bytes(v.p2p_bytes as u64)
+                );
+            }
+        }
+        if let (Some(path), Some(json)) = (&trace_out, ctx.chrome_trace_json()) {
+            match std::fs::write(path, json) {
+                Ok(()) => println!("  chrome trace written to {path} (load in Perfetto / chrome://tracing)"),
+                Err(e) => {
+                    eprintln!("cannot write {path}: {e}");
+                    return 1;
+                }
+            }
+        }
+    }
+    if let Some(path) = &metrics_out {
+        match ctx.snapshot_metrics() {
+            Some(m) => {
+                if let Err(e) = std::fs::write(path, m.to_string_pretty()) {
+                    eprintln!("cannot write {path}: {e}");
+                    return 1;
+                }
+                println!("  metrics written to {path}");
+            }
+            None => eprintln!("run: --metrics-out requires the persistent runtime; ignoring"),
         }
     }
     println!("  verification: see `cargo test` for the full oracle grid");

@@ -99,6 +99,12 @@ pub struct RunConfig {
     /// noise hits every policy identically, so dynamic schedulers win
     /// exactly by absorbing it.
     pub jitter: f64,
+    /// Routine label of the call ("gemm", "syrk", ...), stamped by the
+    /// API entry points so the metrics registry can aggregate
+    /// per-routine latency/flops without threading a parameter through
+    /// every engine layer. Purely observational — never branches
+    /// execution.
+    pub routine: &'static str,
 }
 
 impl Default for RunConfig {
@@ -116,6 +122,7 @@ impl Default for RunConfig {
             vram_override: None,
             k_chunk: 4,
             jitter: 0.05,
+            routine: "l3",
         }
     }
 }

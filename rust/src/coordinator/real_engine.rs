@@ -41,7 +41,7 @@
 
 use super::config::{Backend, RunConfig};
 use crate::api::Scalar;
-use crate::cache::{Source, TileCacheSet};
+use crate::cache::{CacheStats, Source, TileCacheSet};
 use crate::error::{Error, Result};
 use crate::hostblas;
 use crate::mem::{AllocStrategy, Offset};
@@ -50,9 +50,10 @@ use crate::runtime::TileExecutor;
 use crate::sched::{task_priority, Station};
 use crate::task::{Step, Task, TaskSet, TileOp, TileRef};
 use crate::tile::{HostMat, MatId, TileKey};
+use crate::trace::{Recorder, SpanKind};
 use crate::util::once::OnceCell;
 use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
@@ -155,6 +156,12 @@ pub(crate) struct EngineCore {
     /// process-wide (`PjrtPool`); this removes the per-job handle and
     /// artifact-store probe from the submit path.
     executor: OnceCell<TileExecutor>,
+    /// Wall-clock span recorder shared by every worker and every job
+    /// on this core (disabled by default; `BLASX_TRACE=1`,
+    /// `Context::set_tracing` or `--trace-out` switch it on). Lives on
+    /// the core because spans are per *device worker*, which is a
+    /// core-level concept — jobs come and go.
+    pub(crate) rec: Recorder,
 }
 
 impl EngineCore {
@@ -175,6 +182,7 @@ impl EngineCore {
             work_mx: Mutex::new(()),
             work_cv: Condvar::new(),
             executor: OnceCell::new(),
+            rec: Recorder::new(n_devices),
         }
     }
 
@@ -266,6 +274,24 @@ impl TransferStats {
     }
 }
 
+/// Live per-job observability counters, readable *before* the job
+/// retires (unlike [`RealReport`], which exists only after). This is
+/// what the C ABI's `blasx_job_stats` and `JobHandle::stats` surface —
+/// the counters `blasx_wait` used to discard.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct JobStats {
+    /// Tasks executed so far (across all devices).
+    pub tasks: usize,
+    /// Host→arena tile reads per operand (A, B, C order).
+    pub host_reads: [usize; 3],
+    /// Arena→arena copies (L2 peer hits).
+    pub peer_copies: usize,
+    /// Acquires served from a device's own L1 — no bytes moved.
+    pub l1_hits: usize,
+    /// Intra-job work steals (across all devices).
+    pub steals: usize,
+}
+
 struct TransferCounters {
     host_reads: [AtomicUsize; 3],
     peer_copies: AtomicUsize,
@@ -332,6 +358,16 @@ pub(crate) struct JobState<'m, T: Scalar> {
     /// Total chain flops of the job (the multi-tenant scheduler's
     /// fair-share weight; cached at construction).
     total_flops: f64,
+    /// Admission id under the resident runtime (0 for the one-shot
+    /// engine) — stamps this job's spans so the Chrome export can
+    /// attribute device time to jobs.
+    trace_id: AtomicU64,
+    /// Per-device cache counters snapshotted at admission, so
+    /// [`RealReport::cache_delta`] can report *this call's* cache
+    /// behaviour even though the ALRUs are cumulative across the
+    /// resident core's lifetime. Empty for the one-shot engine (fresh
+    /// core ⇒ cumulative == per-call).
+    cache_baseline: Mutex<Vec<CacheStats>>,
 }
 
 impl<'m, T: Scalar> JobState<'m, T> {
@@ -358,6 +394,8 @@ impl<'m, T: Scalar> JobState<'m, T> {
             tasks_done: (0..n_devices).map(|_| AtomicUsize::new(0)).collect(),
             transfers: TransferCounters::new(),
             total_flops: ts.total_flops(),
+            trace_id: AtomicU64::new(0),
+            cache_baseline: Mutex::new(Vec::new()),
         };
         for &h in &ts.heads {
             state.queue.enqueue(h);
@@ -387,12 +425,47 @@ impl<'m, T: Scalar> JobState<'m, T> {
             return Err(Error::Internal(format!("real engine stalled with {rem} tasks")));
         }
         let caches = core.lock_caches();
+        let cache_stats: Vec<CacheStats> =
+            (0..self.stations.len()).map(|d| caches.stats(d)).collect();
+        drop(caches);
+        let baseline = self.cache_baseline.lock().unwrap_or_else(|e| e.into_inner());
+        let cache_delta = cache_stats
+            .iter()
+            .enumerate()
+            .map(|(d, s)| s.delta_since(&baseline.get(d).copied().unwrap_or_default()))
+            .collect();
+        drop(baseline);
         Ok(RealReport {
             tasks_per_device: self.tasks_done.iter().map(|a| a.load(Ordering::SeqCst)).collect(),
-            cache_stats: (0..self.stations.len()).map(|d| caches.stats(d)).collect(),
+            cache_stats,
+            cache_delta,
             steals: self.steals.iter().map(|a| a.load(Ordering::SeqCst)).collect(),
             transfers: self.transfers.snapshot(),
         })
+    }
+
+    /// Stamp the resident runtime's admission id onto this job's spans.
+    pub(crate) fn set_trace_id(&self, id: u64) {
+        self.trace_id.store(id, Ordering::Relaxed);
+    }
+
+    /// Snapshot the per-device cache counters at admission so the
+    /// report can expose a per-call delta (see `cache_baseline`).
+    pub(crate) fn set_cache_baseline(&self, baseline: Vec<CacheStats>) {
+        *self.cache_baseline.lock().unwrap_or_else(|e| e.into_inner()) = baseline;
+    }
+
+    /// Live counters of this job so far — readable while it is still
+    /// in flight (the report exists only after retirement).
+    pub(crate) fn stats(&self) -> JobStats {
+        let t = self.transfers.snapshot();
+        JobStats {
+            tasks: self.tasks_done.iter().map(|a| a.load(Ordering::Relaxed)).sum(),
+            host_reads: t.host_reads,
+            peer_copies: t.peer_copies,
+            l1_hits: t.l1_hits,
+            steals: self.steals.iter().map(|a| a.load(Ordering::Relaxed)).sum(),
+        }
     }
 
     /// The operand sets of this job (admission derives conflict byte
@@ -469,12 +542,21 @@ pub fn run_real_batch<'m, T: Scalar>(
 /// Observability output of a real run (numerics land in the C matrix).
 ///
 /// Under the persistent runtime `cache_stats` is *cumulative* since
-/// the runtime booted (the ALRUs live across calls); `transfers`,
+/// the runtime booted (the ALRUs live across calls) — read
+/// `cache_delta` for this call's cache behaviour; `transfers`,
 /// `tasks_per_device` and `steals` are per-call.
 #[derive(Debug)]
 pub struct RealReport {
     pub tasks_per_device: Vec<usize>,
-    pub cache_stats: Vec<(u64, u64, u64)>,
+    /// Per-device ALRU counters, cumulative since the core was built.
+    pub cache_stats: Vec<CacheStats>,
+    /// Per-device ALRU counters accrued *since this job was admitted*
+    /// (`cache_stats` minus the admission-time baseline). Note: on a
+    /// shared resident core this window also contains the traffic of
+    /// concurrently in-flight tenants — the devices are shared, so the
+    /// delta is "what the caches did while this call ran", not "what
+    /// this call alone did" (the job-private view is `transfers`).
+    pub cache_delta: Vec<CacheStats>,
     pub steals: Vec<usize>,
     /// Per-call transfer trace (host reads / peer copies / L1 hits).
     pub transfers: TransferStats,
@@ -523,6 +605,8 @@ pub(crate) fn worker_round<T: Scalar>(
         core.notify_work();
         return Round::Failed;
     }
+    let jid = job.trace_id.load(Ordering::Relaxed);
+    let round_t0 = core.rec.now();
     // ---- refill the reservation station (lines 11–15)
     let mut bound: Vec<usize> = Vec::new();
     {
@@ -542,6 +626,8 @@ pub(crate) fn worker_round<T: Scalar>(
             // steal from the fullest victim (within this job — tasks
             // of other live jobs are reached by the multi-job loop,
             // not by cross-job steals)
+            let steal_t0 = core.rec.now();
+            let mut stole = 0.0;
             let victim = (0..job.stations.len())
                 .filter(|&v| v != dev)
                 .max_by_key(|&v| job.stations[v].lock().unwrap().len());
@@ -549,8 +635,10 @@ pub(crate) fn worker_round<T: Scalar>(
                 if let Some(slot) = job.stations[v].lock().unwrap().steal_worst() {
                     job.stations[dev].lock().unwrap().insert(slot.task, slot.priority);
                     job.steals[dev].fetch_add(1, Ordering::Relaxed);
+                    stole = 1.0;
                 }
             }
+            core.rec.record(dev, SpanKind::Steal, steal_t0, stole, jid);
             rs = job.stations[dev].lock().unwrap();
         }
         // refresh priorities after arrivals, then bind top tasks
@@ -611,6 +699,7 @@ pub(crate) fn worker_round<T: Scalar>(
         caches.release(dev, &key);
     }
     drop(caches);
+    core.rec.record(dev, SpanKind::Round, round_t0, flops, jid);
     Round::Progress { flops }
 }
 
@@ -629,9 +718,11 @@ pub(crate) fn worker_loop<T: Scalar>(dev: usize, core: &EngineCore, job: &JobSta
                 // between our check and the wait cannot be missed; the
                 // timeout is a backstop that lets us periodically
                 // retry stealing station-held surplus.
+                let park_t0 = core.rec.now();
                 core.park_for_work(Some(PARK_TIMEOUT), || {
                     job.queue.is_empty() && job.remaining.load(Ordering::SeqCst) != 0
                 });
+                core.rec.record(dev, SpanKind::Park, park_t0, 0.0, 0);
             }
         }
     }
@@ -651,6 +742,7 @@ fn run_task<T: Scalar>(
     let task = &job.tasks[tid];
     let cmat = job.mats[task.p].of(MatId::C);
     let ckey = cmat.tile_key(task.ci, task.cj);
+    let jid = job.trace_id.load(Ordering::Relaxed);
 
     // -- C accumulator block
     let c_off = {
@@ -684,13 +776,17 @@ fn run_task<T: Scalar>(
         // acquire cost, EXPERIMENTS.md §Perf)
         let (h, w) = cmat.grid.tile_dims(task.ci, task.cj);
         if h < t || w < t || !task.reads_c {
+            let pack_t0 = core.rec.now();
             for x in cbuf.iter_mut() {
                 *x = T::zero();
             }
+            core.rec.record(dev, SpanKind::Pack, pack_t0, 0.0, jid);
         }
         if task.reads_c {
+            let h2d_t0 = core.rec.now();
             cmat.read_tile(task.ci, task.cj, cbuf, t);
             job.transfers.count_host(MatId::C);
+            core.rec.record(dev, SpanKind::H2d, h2d_t0, tile_bytes as f64, jid);
         }
         acq.offset
     };
@@ -716,10 +812,12 @@ fn run_task<T: Scalar>(
 
     // -- write-back (M → I): store the masked extent to host RAM
     {
+        let d2h_t0 = core.rec.now();
         let caches = core.lock_caches();
         let cbuf = core.arenas[dev].slice::<T>(c_off, tile_elems);
         write_back_masked(cmat, task, cbuf, t);
         drop(caches);
+        core.rec.record(dev, SpanKind::D2h, d2h_t0, tile_bytes as f64, jid);
     }
     let mut caches = core.lock_caches();
     caches.writeback(dev, &ckey);
@@ -767,6 +865,7 @@ fn acquire_input<T: Scalar>(
         }
     };
     releases.push(key);
+    let jid = job.trace_id.load(Ordering::Relaxed);
     match acq.source {
         Source::L1 => {
             job.transfers.l1_hits.fetch_add(1, Ordering::Relaxed);
@@ -774,12 +873,15 @@ fn acquire_input<T: Scalar>(
         Source::Peer { src, src_offset } => {
             // arena→arena copy under the cache lock (the source block is
             // pinned by the directory entry while we hold the lock).
+            let p2p_t0 = core.rec.now();
             let dst = core.arenas[dev].slice::<T>(acq.offset, tile_elems);
             let srcbuf = core.arenas[src].slice::<T>(src_offset, tile_elems);
             dst.copy_from_slice(srcbuf);
             job.transfers.peer_copies.fetch_add(1, Ordering::Relaxed);
+            core.rec.record(dev, SpanKind::P2p, p2p_t0, tile_bytes as f64, jid);
         }
         Source::Host => {
+            let h2d_t0 = core.rec.now();
             let dst = core.arenas[dev].slice::<T>(acq.offset, tile_elems);
             let (h, w) = mat.grid.tile_dims(tile.ti, tile.tj);
             if h < t || w < t {
@@ -791,6 +893,7 @@ fn acquire_input<T: Scalar>(
             }
             mat.read_tile(tile.ti, tile.tj, dst, t);
             job.transfers.count_host(tile.mat);
+            core.rec.record(dev, SpanKind::H2d, h2d_t0, tile_bytes as f64, jid);
         }
     }
     // Identity-pad diagonal input tiles of the A/B operands: exact for
@@ -804,10 +907,12 @@ fn acquire_input<T: Scalar>(
     if tile.mat != MatId::C && tile.ti == tile.tj {
         let (h, _) = mat.grid.tile_dims(tile.ti, tile.tj);
         if h < t {
+            let pack_t0 = core.rec.now();
             let dst = core.arenas[dev].slice::<T>(acq.offset, tile_elems);
             for j in h..t {
                 dst[j * t + j] = T::one();
             }
+            core.rec.record(dev, SpanKind::Pack, pack_t0, 0.0, jid);
         }
     }
     Ok(acq.offset)
@@ -856,6 +961,13 @@ fn exec_step<T: Scalar>(
     let alpha = T::from_f64(step.alpha);
     let beta = T::from_f64(step.beta);
     let c = core.arenas[dev].slice::<T>(c_off, tile_elems);
+    let jid = job.trace_id.load(Ordering::Relaxed);
+    let (m, n, k) = step.dims;
+    // 2mnk is the GEMM-family flop count; for the triangular/symmetric
+    // diagonal ops it over-counts by a small constant factor, which the
+    // COMPT *time* split does not care about (the span length is real).
+    let step_flops = 2.0 * m as f64 * n as f64 * k.max(1) as f64;
+    let kern_t0 = core.rec.now();
 
     if job.cfg.backend == Backend::Pjrt {
         // One process-shared executor serves every concurrent tenant
@@ -865,7 +977,11 @@ fn exec_step<T: Scalar>(
         // write them. Slices alias no live &mut.
         let a = a_off.map(|o| &*core.arenas[dev].slice::<T>(o, tile_elems));
         let b = b_off.map(|o| &*core.arenas[dev].slice::<T>(o, tile_elems));
-        return ex.run(&step.op.kernel_name(), t, a, b, c, alpha, beta);
+        let out = ex.run(&step.op.kernel_name(), t, a, b, c, alpha, beta);
+        if out.is_ok() {
+            core.rec.record(dev, SpanKind::Kernel, kern_t0, step_flops, jid);
+        }
+        return out;
     }
 
     // Every tile op dispatches to the packed kernel engine — the naive
@@ -875,7 +991,6 @@ fn exec_step<T: Scalar>(
     // (paper §IV-C.2's "multithreaded BLAS kernel"); `gemm_mt` applies
     // its flop-based serial cutoff internally and runs its cells on the
     // persistent kernel pool, so per-thread pack scratch is reused.
-    let (m, n, k) = step.dims;
     let a = a_off.map(|o| &*core.arenas[dev].slice::<T>(o, tile_elems));
     let b = b_off.map(|o| &*core.arenas[dev].slice::<T>(o, tile_elems));
     let wt = job.cfg.worker_threads.max(1);
@@ -906,5 +1021,6 @@ fn exec_step<T: Scalar>(
             }
         }
     }
+    core.rec.record(dev, SpanKind::Kernel, kern_t0, step_flops, jid);
     Ok(())
 }

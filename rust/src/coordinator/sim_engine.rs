@@ -26,7 +26,7 @@
 use super::config::RunConfig;
 use super::keymap::KeyMap;
 use crate::api::Dtype;
-use crate::cache::{Source, TileCacheSet};
+use crate::cache::{CacheStats, Source, TileCacheSet};
 use crate::mem::AllocStrategy;
 use crate::sched::{task_priority, Station};
 use crate::sim::{Dir, EventQueue, Lane, Machine, SimTime, Topology};
@@ -47,7 +47,7 @@ pub struct SimReport {
     /// Total allocator cost paid (Fig. 5 signal; ~0 under FastHeap).
     pub alloc_cost: f64,
     /// L1 hits, misses, evictions per device.
-    pub cache_stats: Vec<(u64, u64, u64)>,
+    pub cache_stats: Vec<CacheStats>,
     /// Steals performed per device.
     pub steals: Vec<u64>,
     /// Measured DMA throughputs (hd, p2p) bytes/s — Table IV.

@@ -53,6 +53,7 @@ pub struct BlasxJob {
 /// Admit an owned-problem job on the default context and box its
 /// handle for C.
 fn admit<T: Scalar>(
+    routine: &'static str,
     ts: crate::task::TaskSet,
     problem: OwnedProblem<T>,
 ) -> Result<*mut BlasxJob> {
@@ -63,7 +64,9 @@ fn admit<T: Scalar>(
         ));
     }
     let rt = ctx.runtime();
-    let (job, ctl) = rt.submit_owned(&ctx.cfg, ts, vec![problem])?;
+    let mut cfg = ctx.cfg.clone();
+    cfg.routine = routine;
+    let (job, ctl) = rt.submit_owned(&cfg, ts, vec![problem])?;
     Ok(Box::into_raw(Box::new(BlasxJob { rt, job, ctl })))
 }
 
@@ -140,7 +143,7 @@ fn gemm_async_entry<T: Scalar>(
                     zero_wrap(c, t, MatId::C),
                 )
             };
-            return admit(taskize_gemm(&d), OwnedProblem { a: am, b: Some(bm), c: cm });
+            return admit(routine, taskize_gemm(&d), OwnedProblem { a: am, b: Some(bm), c: cm });
         }
         let (ts, dims) =
             plan_gemm(t, ta, tb, m, n, k, alpha.to_f64(), beta.to_f64(), lda, ldb, ldc)?;
@@ -155,7 +158,7 @@ fn gemm_async_entry<T: Scalar>(
                 raw_operand(routine, 13, c, m, n, ldc, t, MatId::C)?,
             )
         };
-        admit(ts, OwnedProblem { a: am, b: Some(bm), c: cm })
+        admit(routine, ts, OwnedProblem { a: am, b: Some(bm), c: cm })
     })
 }
 
@@ -196,7 +199,7 @@ fn trsm_async_entry<T: Scalar>(
             let (am, cm) = unsafe {
                 (zero_wrap(a as *mut T, t, MatId::A), zero_wrap(b, t, MatId::C))
             };
-            return admit(taskize_trsm(&d), OwnedProblem { a: am, b: None, c: cm });
+            return admit(routine, taskize_trsm(&d), OwnedProblem { a: am, b: None, c: cm });
         }
         let (ts, dims) = plan_trsm(t, side, uplo, ta, diag, m, n, alpha.to_f64(), lda, ldb)?;
         let (na, _) = dims.a;
@@ -207,7 +210,7 @@ fn trsm_async_entry<T: Scalar>(
                 raw_operand(routine, 11, b, m, n, ldb, t, MatId::C)?,
             )
         };
-        admit(ts, OwnedProblem { a: am, b: None, c: cm })
+        admit(routine, ts, OwnedProblem { a: am, b: None, c: cm })
     })
 }
 
@@ -364,6 +367,57 @@ pub unsafe extern "C" fn blasx_job_done(job: *const BlasxJob) -> c_int {
         return -1;
     }
     (*job).ctl.is_retired() as c_int
+}
+
+/// Observability counters of one job (`struct blasx_stats`), the
+/// numbers `blasx_wait` discards with the report: scheduler tasks
+/// executed, host→device tile reads per operand, device→device peer
+/// copies, L1 tile-cache hits, and tasks obtained by work stealing.
+#[repr(C)]
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BlasxStatsC {
+    /// Scheduler tasks executed so far.
+    pub tasks: u64,
+    /// Host→device tile reads of operand A.
+    pub host_reads_a: u64,
+    /// Host→device tile reads of operand B.
+    pub host_reads_b: u64,
+    /// Host→device tile reads of operand C.
+    pub host_reads_c: u64,
+    /// Device→device (peer) tile copies.
+    pub peer_copies: u64,
+    /// L1 tile-cache hits (reads served without any transfer).
+    pub l1_hits: u64,
+    /// Tasks obtained by work stealing.
+    pub steals: u64,
+}
+
+/// Snapshot the job's live observability counters into `*out`.
+/// Non-blocking and valid while the job is in flight — counters are
+/// monotone, so polling draws the job's transfer/locality profile over
+/// time. Returns 0 on success, BLASX_ERR_INTERNAL on a NULL argument.
+/// Does not free the handle (the handle stays waitable).
+///
+/// # Safety
+/// `job` must be a live handle from a `blasx_*_async` entry (not yet
+/// waited); `out` must point to a writable `struct blasx_stats`.
+#[no_mangle]
+pub unsafe extern "C" fn blasx_job_stats(job: *const BlasxJob, out: *mut BlasxStatsC) -> c_int {
+    if job.is_null() || out.is_null() {
+        record_error("blasx_job_stats", &Error::Internal("null argument".into()));
+        return BLASX_ERR_INTERNAL;
+    }
+    let s = (*job).job.stats();
+    *out = BlasxStatsC {
+        tasks: s.tasks as u64,
+        host_reads_a: s.host_reads[0] as u64,
+        host_reads_b: s.host_reads[1] as u64,
+        host_reads_c: s.host_reads[2] as u64,
+        peer_copies: s.peer_copies as u64,
+        l1_hits: s.l1_hits as u64,
+        steals: s.steals as u64,
+    };
+    BLASX_OK
 }
 
 /// Declare that `bytes` bytes at `ptr` were mutated (or freed and

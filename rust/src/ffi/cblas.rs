@@ -95,7 +95,7 @@ fn gemm_entry<T: Scalar>(
                 raw_operand(routine, 13, c, m, n, ldc, t, MatId::C)?,
             )
         };
-        ctx.execute(&ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }]).map(|_| ())
+        ctx.execute(routine, &ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }]).map(|_| ())
     })
 }
 
@@ -195,7 +195,7 @@ fn syrk_entry<T: Scalar>(
                 raw_operand(routine, 10, c, n, n, ldc, t, MatId::C)?,
             )
         };
-        ctx.execute(&ts, vec![Mats { a: &am, b: None, c: &cm }]).map(|_| ())
+        ctx.execute(routine, &ts, vec![Mats { a: &am, b: None, c: &cm }]).map(|_| ())
     })
 }
 
@@ -288,7 +288,7 @@ fn syr2k_entry<T: Scalar>(
                 raw_operand(routine, 12, c, n, n, ldc, t, MatId::C)?,
             )
         };
-        ctx.execute(&ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }]).map(|_| ())
+        ctx.execute(routine, &ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }]).map(|_| ())
     })
 }
 
@@ -388,7 +388,7 @@ fn symm_entry<T: Scalar>(
                 raw_operand(routine, 12, c, m, n, ldc, t, MatId::C)?,
             )
         };
-        ctx.execute(&ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }]).map(|_| ())
+        ctx.execute(routine, &ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }]).map(|_| ())
     })
 }
 
@@ -501,7 +501,7 @@ fn trxm_run<T: Scalar>(
             raw_operand(routine, 11, b, m, n, ldb, t, MatId::C)?,
         )
     };
-    ctx.execute(&ts, vec![Mats { a: &am, b: None, c: &cm }]).map(|_| ())
+    ctx.execute(routine, &ts, vec![Mats { a: &am, b: None, c: &cm }]).map(|_| ())
 }
 
 #[allow(clippy::too_many_arguments)]

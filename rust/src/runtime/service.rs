@@ -52,19 +52,21 @@
 //! the next globally-quiescent point.
 
 use crate::api::Scalar;
+use crate::cache::CacheStats;
 use crate::coordinator::config::RunConfig;
 use crate::coordinator::real_engine::{
-    block_bytes, worker_round, EngineCore, JobState, Mats, OwnedProblem, RealReport, Round,
-    PARK_TIMEOUT,
+    block_bytes, worker_round, EngineCore, JobState, JobStats, Mats, OwnedProblem, RealReport,
+    Round, PARK_TIMEOUT,
 };
 use crate::error::{Error, Result};
 use crate::mem::AllocStrategy;
 use crate::serve::admission::{JobCtl, JobSpan, JobTable};
 use crate::serve::{fairness, DeviceJob};
 use crate::task::TaskSet;
+use crate::trace::{tenant_id, JobRec, MetricsRegistry, SpanKind};
 use std::collections::{BTreeMap, HashSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -215,6 +217,10 @@ impl<T: Scalar> DeviceJob for ErasedJob<T> {
     fn done(&self) -> bool {
         self.state.done()
     }
+
+    fn stats(&self) -> JobStats {
+        self.state.stats()
+    }
 }
 
 /// An asynchronously submitted job that OWNS its backing: the task set
@@ -250,6 +256,10 @@ impl<T: Scalar> DeviceJob for OwnedJob<T> {
     fn done(&self) -> bool {
         self.state.done()
     }
+
+    fn stats(&self) -> JobStats {
+        self.state.stats()
+    }
 }
 
 struct Inner {
@@ -264,10 +274,12 @@ struct Inner {
     shutdown: AtomicBool,
     /// Jobs served since boot (observability).
     calls: AtomicUsize,
-    /// Per-device nanoseconds spent inside scheduler rounds — the
-    /// worker-idle fraction of `benches/serve_throughput.rs` falls out
-    /// of this against wall time.
-    busy_nanos: Vec<AtomicU64>,
+    /// Per-tenant/per-routine latency histograms + per-device busy
+    /// accounting. The single source of truth for `blasx serve`'s
+    /// stress output and `benches/serve_throughput.rs` — no ad-hoc
+    /// timers elsewhere. Lock order: may be taken while holding
+    /// `table` (admission), never the reverse.
+    metrics: MetricsRegistry,
 }
 
 /// The resident device runtime (see module docs). Cloneably shared via
@@ -301,7 +313,7 @@ impl Runtime {
             epochs: Mutex::new(EpochRegistry::default()),
             shutdown: AtomicBool::new(false),
             calls: AtomicUsize::new(0),
-            busy_nanos: (0..n_devices).map(|_| AtomicU64::new(0)).collect(),
+            metrics: MetricsRegistry::new(n_devices),
         });
         let handles = (0..n_devices)
             .map(|dev| {
@@ -332,7 +344,14 @@ impl Runtime {
     /// rounds) since boot. Compare against wall time × device count
     /// for the worker-idle fraction.
     pub fn busy_nanos(&self) -> Vec<u64> {
-        self.inner.busy_nanos.iter().map(|a| a.load(Ordering::Relaxed)).collect()
+        self.inner.metrics.busy_nanos()
+    }
+
+    /// The runtime's metrics registry (per-tenant/per-routine latency
+    /// histograms, worker busy accounting). Snapshot with
+    /// [`MetricsRegistry::snapshot`].
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.inner.metrics
     }
 
     /// Live jobs currently admitted (in flight or queued behind
@@ -403,6 +422,24 @@ impl Runtime {
                 // blocks must be unreachable before this job runs.
                 self.inner.core.purge();
             }
+            // Stamp the admission id onto the job's spans and snapshot
+            // the cache counters (post-purge) as the per-call delta
+            // baseline. Under the table lock so no worker round of
+            // this job can precede either stamp.
+            state.set_trace_id(ctl.id);
+            {
+                let caches = self.inner.core.lock_caches();
+                state.set_cache_baseline(
+                    (0..self.inner.n_devices).map(|d| caches.stats(d)).collect::<Vec<CacheStats>>(),
+                );
+            }
+            self.inner.metrics.on_admit(
+                ctl.id,
+                tenant_id(),
+                cfg.routine,
+                weight,
+                self.inner.core.rec.now(),
+            );
             ctl
         };
         self.inner.core.notify_work();
@@ -535,6 +572,7 @@ fn device_worker(inner: Arc<Inner>, dev: usize) {
         }
         match next_round(&inner, &mut tried, &mut seen_version) {
             Pick::Run(id, job) => {
+                inner.metrics.on_round_start(id, inner.core.rec.now());
                 let t0 = Instant::now();
                 // Contain panics (a poisoned kernel must not kill the
                 // resident worker — the job fails, the fleet stays
@@ -547,7 +585,7 @@ fn device_worker(inner: Arc<Inner>, dev: usize) {
                             Round::Failed
                         }
                     };
-                inner.busy_nanos[dev].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                inner.metrics.on_round_end(dev, t0.elapsed().as_nanos() as u64);
                 let (flops, finished, failed) = match round {
                     // A Progress round may have executed the job's
                     // last task — fold that observation in now rather
@@ -572,6 +610,17 @@ fn device_worker(inner: Arc<Inner>, dev: usize) {
                 };
                 if let Some(ctl) = retired {
                     inner.calls.fetch_add(1, Ordering::Relaxed);
+                    if let Some(r) = inner.metrics.on_retire(id, failed, inner.core.rec.now()) {
+                        inner.core.rec.record_job(JobRec {
+                            job: id,
+                            tenant: r.tenant,
+                            routine: r.routine,
+                            admit: r.admit_s,
+                            first_round: r.first_round_s,
+                            retire: r.retire_s,
+                            failed,
+                        });
+                    }
                     ctl.retire();
                     // Dependents of the retired job may be runnable now.
                     inner.core.notify_work();
@@ -586,6 +635,7 @@ fn device_worker(inner: Arc<Inner>, dev: usize) {
             }
             Pick::Park { indefinitely } => {
                 let timeout = if indefinitely { None } else { Some(PARK_TIMEOUT) };
+                let park_t0 = inner.core.rec.now();
                 inner.core.park_for_work(timeout, || {
                     !inner.shutdown.load(Ordering::SeqCst)
                         && (!indefinitely
@@ -595,6 +645,7 @@ fn device_worker(inner: Arc<Inner>, dev: usize) {
                                 .unwrap_or_else(|e| e.into_inner())
                                 .is_empty())
                 });
+                inner.core.rec.record(dev, SpanKind::Park, park_t0, 0.0, 0);
                 tried.clear();
             }
         }

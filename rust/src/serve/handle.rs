@@ -71,6 +71,14 @@ impl<'scope> JobHandle<'scope> {
         self.ctl.id
     }
 
+    /// Live observability counters of the job so far (tasks executed,
+    /// host/peer transfers, L1 hits, steals). Non-blocking and safe
+    /// while the job is in flight — unlike [`JobHandle::wait`], which
+    /// consumes the handle for the full report.
+    pub fn stats(&self) -> crate::coordinator::JobStats {
+        self.job.stats()
+    }
+
     /// Park until the job completes and return its report. Outputs are
     /// fully written back when this returns.
     pub fn wait(self) -> Result<RealReport> {
@@ -195,6 +203,7 @@ mod tests {
                 Ok(RealReport {
                     tasks_per_device: Vec::new(),
                     cache_stats: Vec::new(),
+                    cache_delta: Vec::new(),
                     steals: Vec::new(),
                     transfers: Default::default(),
                 })

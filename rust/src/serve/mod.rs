@@ -69,4 +69,11 @@ pub(crate) trait DeviceJob: Send + Sync {
     /// Assemble the job's call report. Call once, after the job has
     /// retired (the failure slot is drained).
     fn report(&self, core: &EngineCore) -> Result<RealReport>;
+
+    /// Live observability counters of the job so far — safe to call
+    /// while it is in flight (unlike `report`). The default is all
+    /// zeros so test doubles need not care.
+    fn stats(&self) -> crate::coordinator::JobStats {
+        crate::coordinator::JobStats::default()
+    }
 }

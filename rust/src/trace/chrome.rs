@@ -1,0 +1,253 @@
+//! Chrome trace-event JSON export.
+//!
+//! Converts the [`Recorder`](super::spans::Recorder)'s wall-clock spans
+//! and job lifecycles into the Trace Event Format consumed by
+//! `chrome://tracing` and [Perfetto](https://ui.perfetto.dev): open the
+//! file emitted by `blasx run --trace-out trace.json` (or
+//! `blasx serve ... --trace-out`) and the scheduler's interleaving —
+//! kernels overlapping transfers, steal probes, condvar parks, queued
+//! vs running jobs — becomes a zoomable timeline.
+//!
+//! Track layout:
+//! - `pid 0` ("devices"): one `tid` per device worker, carrying the
+//!   per-device phase spans (`kernel`, `h2d`, `d2h`, `p2p`, `pack`,
+//!   `round`, `steal`, `park`).
+//! - `pid 1` ("jobs"): one `tid` per admitted job, carrying two spans —
+//!   `queued` (admission → first scheduler round) and `running`
+//!   (first round → retire) — so queue-wait is visually separable from
+//!   service time.
+//!
+//! Timestamps are microseconds since the recorder epoch ("X" complete
+//! events with `ts`/`dur`), with "M" metadata events naming every
+//! process and thread. Events are emitted sorted by `ts` so validators
+//! and streaming viewers see a monotone file.
+
+use super::spans::{JobRec, Span, SpanKind};
+use crate::util::json::Json;
+
+const PID_DEVICES: usize = 0;
+const PID_JOBS: usize = 1;
+
+fn span_name(kind: SpanKind) -> &'static str {
+    match kind {
+        SpanKind::Kernel => "kernel",
+        SpanKind::H2d => "h2d",
+        SpanKind::D2h => "d2h",
+        SpanKind::P2p => "p2p",
+        SpanKind::Pack => "pack",
+        SpanKind::Round => "round",
+        SpanKind::Steal => "steal",
+        SpanKind::Park => "park",
+    }
+}
+
+fn micros(seconds: f64) -> f64 {
+    (seconds * 1e6).max(0.0)
+}
+
+fn meta_event(pid: usize, tid: Option<usize>, name: &str, value: &str) -> Json {
+    let mut ev = Json::obj();
+    ev.set("ph", Json::Str("M".into()))
+        .set("pid", Json::Num(pid as f64))
+        .set("name", Json::Str(name.into()));
+    if let Some(tid) = tid {
+        ev.set("tid", Json::Num(tid as f64));
+    }
+    let mut args = Json::obj();
+    args.set("name", Json::Str(value.into()));
+    ev.set("args", args);
+    ev
+}
+
+fn complete_event(
+    pid: usize,
+    tid: usize,
+    name: &str,
+    start_s: f64,
+    end_s: f64,
+    args: Json,
+) -> Json {
+    let ts = micros(start_s);
+    let dur = (micros(end_s) - ts).max(0.0);
+    let mut ev = Json::obj();
+    ev.set("ph", Json::Str("X".into()))
+        .set("pid", Json::Num(pid as f64))
+        .set("tid", Json::Num(tid as f64))
+        .set("name", Json::Str(name.into()))
+        .set("ts", Json::Num(ts))
+        .set("dur", Json::Num(dur))
+        .set("args", args);
+    ev
+}
+
+/// Build a Chrome trace-event document from recorder snapshots.
+///
+/// The result has the standard top-level shape
+/// `{"traceEvents": [...], "displayTimeUnit": "ms"}`; serialize it with
+/// [`Json::to_string_compact`] and load the file in Perfetto.
+pub fn chrome_trace(spans: &[Span], jobs: &[JobRec]) -> Json {
+    let mut events: Vec<(f64, Json)> = Vec::new();
+
+    // Metadata first: name both processes and every track that will
+    // carry events.
+    let mut meta: Vec<Json> = vec![
+        meta_event(PID_DEVICES, None, "process_name", "devices"),
+        meta_event(PID_JOBS, None, "process_name", "jobs"),
+    ];
+    let mut devs: Vec<usize> = spans.iter().map(|s| s.dev).collect();
+    devs.sort_unstable();
+    devs.dedup();
+    for dev in devs {
+        meta.push(meta_event(
+            PID_DEVICES,
+            Some(dev),
+            "thread_name",
+            &format!("device {dev}"),
+        ));
+    }
+    for j in jobs {
+        meta.push(meta_event(
+            PID_JOBS,
+            Some(j.job as usize),
+            "thread_name",
+            &format!("job {} [{} t{}]", j.job, j.routine, j.tenant),
+        ));
+    }
+
+    for s in spans {
+        let mut args = Json::obj();
+        args.set("amount", Json::Num(s.amount));
+        if s.job != 0 {
+            args.set("job", Json::Num(s.job as f64));
+        }
+        events.push((
+            s.start,
+            complete_event(PID_DEVICES, s.dev, span_name(s.kind), s.start, s.end, args),
+        ));
+    }
+
+    for j in jobs {
+        let tid = j.job as usize;
+        let mut qargs = Json::obj();
+        qargs
+            .set("tenant", Json::Num(j.tenant as f64))
+            .set("routine", Json::Str(j.routine.into()));
+        events.push((
+            j.admit,
+            complete_event(PID_JOBS, tid, "queued", j.admit, j.first_round, qargs),
+        ));
+        let mut rargs = Json::obj();
+        rargs
+            .set("tenant", Json::Num(j.tenant as f64))
+            .set("routine", Json::Str(j.routine.into()))
+            .set("failed", Json::Bool(j.failed));
+        events.push((
+            j.first_round,
+            complete_event(PID_JOBS, tid, "running", j.first_round, j.retire, rargs),
+        ));
+    }
+
+    // Monotone ts within the X events (metadata leads the array).
+    events.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut all = meta;
+    all.extend(events.into_iter().map(|(_, ev)| ev));
+
+    let mut doc = Json::obj();
+    doc.set("traceEvents", Json::Arr(all))
+        .set("displayTimeUnit", Json::Str("ms".into()));
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn sample_spans() -> Vec<Span> {
+        vec![
+            Span { dev: 0, kind: SpanKind::Kernel, start: 0.002, end: 0.004, amount: 1e6, job: 3 },
+            Span { dev: 1, kind: SpanKind::H2d, start: 0.001, end: 0.003, amount: 4096.0, job: 3 },
+            Span { dev: 0, kind: SpanKind::Park, start: 0.004, end: 0.005, amount: 0.0, job: 0 },
+        ]
+    }
+
+    fn sample_jobs() -> Vec<JobRec> {
+        vec![JobRec {
+            job: 3,
+            tenant: 1,
+            routine: "gemm",
+            admit: 0.0005,
+            first_round: 0.001,
+            retire: 0.005,
+            failed: false,
+        }]
+    }
+
+    #[test]
+    fn export_roundtrips_and_ts_is_monotone() {
+        let doc = chrome_trace(&sample_spans(), &sample_jobs());
+        let text = doc.to_string_compact();
+        let parsed = json::parse(&text).expect("chrome trace must be valid JSON");
+        let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        assert!(!events.is_empty());
+        let mut last_ts = f64::NEG_INFINITY;
+        let mut saw_x = 0;
+        for ev in events {
+            let ph = ev.get("ph").and_then(|p| p.as_str()).unwrap();
+            assert!(ev.get("pid").is_some());
+            match ph {
+                "M" => assert!(last_ts == f64::NEG_INFINITY, "metadata must lead"),
+                "X" => {
+                    saw_x += 1;
+                    let ts = ev.get("ts").and_then(|t| t.as_f64()).unwrap();
+                    let dur = ev.get("dur").and_then(|d| d.as_f64()).unwrap();
+                    assert!(ts >= last_ts, "X events must be ts-sorted");
+                    assert!(ts >= 0.0 && dur >= 0.0);
+                    assert!(ev.get("tid").is_some());
+                    last_ts = ts;
+                }
+                other => panic!("unexpected phase {other:?}"),
+            }
+        }
+        assert_eq!(saw_x, 5, "3 device spans + queued + running");
+    }
+
+    #[test]
+    fn device_and_job_tracks_are_separate_pids() {
+        let doc = chrome_trace(&sample_spans(), &sample_jobs());
+        let events = doc.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        let pid_of = |name: &str| -> f64 {
+            events
+                .iter()
+                .find(|ev| ev.get("name").and_then(|n| n.as_str()) == Some(name))
+                .and_then(|ev| ev.get("pid"))
+                .and_then(|p| p.as_f64())
+                .unwrap()
+        };
+        assert_eq!(pid_of("kernel"), PID_DEVICES as f64);
+        assert_eq!(pid_of("queued"), PID_JOBS as f64);
+        assert_eq!(pid_of("running"), PID_JOBS as f64);
+        // The queued span ends where the running span begins.
+        let queued = events
+            .iter()
+            .find(|ev| ev.get("name").and_then(|n| n.as_str()) == Some("queued"))
+            .unwrap();
+        let running = events
+            .iter()
+            .find(|ev| ev.get("name").and_then(|n| n.as_str()) == Some("running"))
+            .unwrap();
+        let q_end = queued.get("ts").unwrap().as_f64().unwrap()
+            + queued.get("dur").unwrap().as_f64().unwrap();
+        let r_ts = running.get("ts").unwrap().as_f64().unwrap();
+        assert!((q_end - r_ts).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_recorder_exports_valid_shell() {
+        let doc = chrome_trace(&[], &[]);
+        let parsed = json::parse(&doc.to_string_compact()).unwrap();
+        let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        // Just the two process_name metadata records.
+        assert_eq!(events.len(), 2);
+    }
+}

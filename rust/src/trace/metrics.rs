@@ -1,0 +1,452 @@
+//! Per-tenant / per-routine runtime metrics: counters and latency
+//! histograms over the resident runtime's job lifecycle.
+//!
+//! The registry is owned by the resident [`crate::runtime::Runtime`]
+//! and fed by its admission path and device workers:
+//!
+//! - **admit** — opens a live record stamped with the submitting
+//!   tenant (one id per submitting thread, assigned on first use) and
+//!   the routine label carried by the call's `RunConfig`;
+//! - **first round** — closes the *queue-wait* window (admission →
+//!   first scheduler round that picked the job);
+//! - **retire** — closes the *end-to-end* window and folds both
+//!   latencies into per-(tenant, routine) histograms.
+//!
+//! Worker busy time is accounted here too (nanoseconds inside
+//! scheduler rounds, per device), so `blasx serve`'s busy/idle line
+//! and `benches/serve_throughput.rs` read one source of truth instead
+//! of ad-hoc timers.
+//!
+//! [`MetricsRegistry::snapshot`] renders everything as a
+//! [`Json`] object (schema documented in the README's Observability
+//! section; validated by CI).
+
+use crate::util::json::Json;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+// --- tenants ---------------------------------------------------------
+
+static NEXT_TENANT: AtomicU32 = AtomicU32::new(1);
+
+thread_local! {
+    static TENANT: std::cell::Cell<u32> = const { std::cell::Cell::new(0) };
+}
+
+/// The calling thread's tenant id (assigned on first use). A *tenant*
+/// is a submitting thread: every client thread of a serving daemon —
+/// or C thread entering through the FFI — gets its own latency
+/// aggregates.
+pub fn tenant_id() -> u32 {
+    TENANT.with(|t| {
+        let v = t.get();
+        if v != 0 {
+            return v;
+        }
+        let v = NEXT_TENANT.fetch_add(1, Ordering::Relaxed);
+        t.set(v);
+        v
+    })
+}
+
+// --- latency histogram -----------------------------------------------
+
+/// Buckets per octave (factor-of-two range) — bucket boundaries grow
+/// by 2^(1/8) ≈ 9.05%, which bounds the relative quantile error.
+const BUCKETS_PER_OCTAVE: usize = 8;
+/// Smallest resolvable latency (seconds): 1 ns.
+const V_MIN: f64 = 1e-9;
+/// 40 octaves above 1 ns ≈ 1100 s — everything slower saturates the
+/// last bucket.
+const N_BUCKETS: usize = 40 * BUCKETS_PER_OCTAVE;
+
+/// Log-bucketed latency histogram: fixed 320-bucket footprint,
+/// quantiles within ~9% relative error (one bucket width), exact
+/// count/sum/min/max.
+#[derive(Clone)]
+pub struct Histogram {
+    counts: Vec<u32>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram { counts: vec![0; N_BUCKETS], count: 0, sum: 0.0, min: f64::INFINITY, max: 0.0 }
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        if v <= V_MIN {
+            return 0;
+        }
+        let idx = ((v / V_MIN).log2() * BUCKETS_PER_OCTAVE as f64).floor() as isize;
+        idx.clamp(0, N_BUCKETS as isize - 1) as usize
+    }
+
+    /// Lower bound of bucket `i` in seconds.
+    fn bucket_lo(i: usize) -> f64 {
+        V_MIN * (i as f64 / BUCKETS_PER_OCTAVE as f64).exp2()
+    }
+
+    /// Record one latency sample (seconds; negatives clamp to 0).
+    pub fn record(&mut self, v: f64) {
+        let v = v.max(0.0);
+        self.counts[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// The `pct`-th percentile (0..=100), linearly interpolated inside
+    /// the containing bucket and clamped to the exact observed
+    /// [min, max]. 0.0 for an empty histogram.
+    pub fn percentile(&self, pct: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        // Same rank convention as util::stats::percentile_sorted:
+        // rank 0 = min sample, rank count-1 = max sample.
+        let rank = (pct / 100.0).clamp(0.0, 1.0) * (self.count - 1) as f64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let hi_rank = (seen + c as u64) as f64 - 1.0;
+            if rank <= hi_rank {
+                let lo = Self::bucket_lo(i);
+                let hi = Self::bucket_lo(i + 1);
+                let within = if c > 1 { (rank - seen as f64) / (c - 1) as f64 } else { 0.5 };
+                return (lo + within * (hi - lo)).clamp(self.min, self.max);
+            }
+            seen += c as u64;
+        }
+        self.max
+    }
+
+    /// p50/p95/p99 as a JSON object in milliseconds.
+    fn quantiles_ms(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("p50", Json::Num(self.percentile(50.0) * 1e3))
+            .set("p95", Json::Num(self.percentile(95.0) * 1e3))
+            .set("p99", Json::Num(self.percentile(99.0) * 1e3))
+            .set("mean", Json::Num(self.mean() * 1e3))
+            .set("count", Json::Num(self.count as f64));
+        o
+    }
+}
+
+// --- registry --------------------------------------------------------
+
+/// A job in flight: admitted but not yet retired.
+struct LiveJob {
+    tenant: u32,
+    routine: &'static str,
+    flops: f64,
+    admit: Instant,
+    /// Seconds from the recorder epoch (for span export) — carried
+    /// through so job tracks line up with device tracks.
+    admit_s: f64,
+    first_round: Option<Instant>,
+    first_round_s: f64,
+}
+
+/// Aggregates of one (tenant, routine) group.
+#[derive(Default)]
+struct GroupStats {
+    jobs: u64,
+    failed: u64,
+    flops: f64,
+    queue_wait: Histogram,
+    end_to_end: Histogram,
+}
+
+/// A retired job's lifecycle, handed back to the caller so the worker
+/// can forward it to the span recorder without the registry holding
+/// two locks.
+pub struct RetiredJob {
+    pub tenant: u32,
+    pub routine: &'static str,
+    pub admit_s: f64,
+    pub first_round_s: f64,
+    pub retire_s: f64,
+}
+
+#[derive(Default)]
+struct Inner {
+    live: HashMap<u64, LiveJob>,
+    groups: BTreeMap<(u32, &'static str), GroupStats>,
+    admitted: u64,
+    retired: u64,
+    failed: u64,
+}
+
+/// The resident runtime's metrics registry (see module docs).
+pub struct MetricsRegistry {
+    booted: Instant,
+    /// Per-device nanoseconds spent inside scheduler rounds.
+    busy_nanos: Vec<AtomicU64>,
+    /// Per-device scheduler rounds that made progress.
+    rounds: Vec<AtomicU64>,
+    inner: Mutex<Inner>,
+}
+
+impl MetricsRegistry {
+    pub fn new(n_devices: usize) -> MetricsRegistry {
+        MetricsRegistry {
+            booted: Instant::now(),
+            busy_nanos: (0..n_devices).map(|_| AtomicU64::new(0)).collect(),
+            rounds: (0..n_devices).map(|_| AtomicU64::new(0)).collect(),
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// A job was admitted. `now_s` is the span-recorder clock (0.0
+    /// when tracing is off — only used for track alignment).
+    pub fn on_admit(&self, job: u64, tenant: u32, routine: &'static str, flops: f64, now_s: f64) {
+        let mut inner = self.lock();
+        inner.admitted += 1;
+        inner.live.insert(
+            job,
+            LiveJob {
+                tenant,
+                routine,
+                flops,
+                admit: Instant::now(),
+                admit_s: now_s,
+                first_round: None,
+                first_round_s: now_s,
+            },
+        );
+    }
+
+    /// A device worker started a scheduler round of `job`. Cheap after
+    /// the first call per job (one map probe under the mutex).
+    pub fn on_round_start(&self, job: u64, now_s: f64) {
+        let mut inner = self.lock();
+        if let Some(live) = inner.live.get_mut(&job) {
+            if live.first_round.is_none() {
+                live.first_round = Some(Instant::now());
+                live.first_round_s = now_s;
+            }
+        }
+    }
+
+    /// A round finished on `dev` after `nanos` inside the scheduler.
+    pub fn on_round_end(&self, dev: usize, nanos: u64) {
+        if dev < self.busy_nanos.len() {
+            self.busy_nanos[dev].fetch_add(nanos, Ordering::Relaxed);
+            self.rounds[dev].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// A job retired: fold its latencies into the aggregates and hand
+    /// back the lifecycle for the span recorder.
+    pub fn on_retire(&self, job: u64, failed: bool, now_s: f64) -> Option<RetiredJob> {
+        let mut inner = self.lock();
+        let live = inner.live.remove(&job)?;
+        inner.retired += 1;
+        if failed {
+            inner.failed += 1;
+        }
+        let end_to_end = live.admit.elapsed().as_secs_f64();
+        let queue_wait = match live.first_round {
+            Some(first) => (end_to_end - first.elapsed().as_secs_f64()).max(0.0),
+            None => end_to_end, // retired without ever running (barrier)
+        };
+        let g = inner.groups.entry((live.tenant, live.routine)).or_default();
+        g.jobs += 1;
+        if failed {
+            g.failed += 1;
+        }
+        g.flops += live.flops;
+        g.queue_wait.record(queue_wait);
+        g.end_to_end.record(end_to_end);
+        Some(RetiredJob {
+            tenant: live.tenant,
+            routine: live.routine,
+            admit_s: live.admit_s,
+            first_round_s: if live.first_round.is_some() { live.first_round_s } else { now_s },
+            retire_s: now_s,
+        })
+    }
+
+    /// Cumulative per-device busy nanoseconds since boot.
+    pub fn busy_nanos(&self) -> Vec<u64> {
+        self.busy_nanos.iter().map(|a| a.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Seconds since the registry (== runtime) booted.
+    pub fn uptime(&self) -> f64 {
+        self.booted.elapsed().as_secs_f64()
+    }
+
+    /// Render the registry as JSON: global job counters, per-worker
+    /// busy/idle fractions against runtime uptime, and per-tenant /
+    /// per-routine latency quantiles (milliseconds).
+    pub fn snapshot(&self) -> Json {
+        let wall = self.uptime().max(1e-9);
+        let inner = self.lock();
+        let mut workers = Vec::new();
+        for (dev, busy) in self.busy_nanos.iter().enumerate() {
+            let busy_s = busy.load(Ordering::Relaxed) as f64 / 1e9;
+            let mut w = Json::obj();
+            w.set("dev", Json::Num(dev as f64))
+                .set("busy_s", Json::Num(busy_s))
+                .set("busy_fraction", Json::Num((busy_s / wall).min(1.0)))
+                .set("rounds", Json::Num(self.rounds[dev].load(Ordering::Relaxed) as f64));
+            workers.push(w);
+        }
+        // Roll the (tenant, routine) groups up both ways.
+        #[derive(Default)]
+        struct Roll {
+            jobs: u64,
+            flops: f64,
+            queue_wait: Histogram,
+            end_to_end: Histogram,
+        }
+        impl Roll {
+            fn fold(&mut self, g: &GroupStats) {
+                self.jobs += g.jobs;
+                self.flops += g.flops;
+                merge(&mut self.queue_wait, &g.queue_wait);
+                merge(&mut self.end_to_end, &g.end_to_end);
+            }
+            fn json(&self, with_flops: bool) -> Json {
+                let mut o = Json::obj();
+                o.set("jobs", Json::Num(self.jobs as f64))
+                    .set("queue_wait_ms", self.queue_wait.quantiles_ms())
+                    .set("end_to_end_ms", self.end_to_end.quantiles_ms());
+                if with_flops {
+                    o.set("flops", Json::Num(self.flops));
+                }
+                o
+            }
+        }
+        let mut tenants: BTreeMap<u32, Roll> = BTreeMap::new();
+        let mut routines: BTreeMap<&'static str, Roll> = BTreeMap::new();
+        for (&(tenant, routine), g) in &inner.groups {
+            tenants.entry(tenant).or_default().fold(g);
+            routines.entry(routine).or_default().fold(g);
+        }
+        let mut per_tenant = Json::obj();
+        for (tenant, roll) in &tenants {
+            per_tenant.set(&format!("{tenant}"), roll.json(false));
+        }
+        let mut per_routine = Json::obj();
+        for (routine, roll) in &routines {
+            per_routine.set(routine, roll.json(true));
+        }
+        let mut out = Json::obj();
+        out.set("uptime_s", Json::Num(wall))
+            .set("jobs_admitted", Json::Num(inner.admitted as f64))
+            .set("jobs_retired", Json::Num(inner.retired as f64))
+            .set("jobs_failed", Json::Num(inner.failed as f64))
+            .set("jobs_in_flight", Json::Num(inner.live.len() as f64))
+            .set("workers", Json::Arr(workers))
+            .set("per_tenant", per_tenant)
+            .set("per_routine", per_routine);
+        out
+    }
+}
+
+/// Merge `src` into `dst` (bucket-wise — both share the fixed layout).
+fn merge(dst: &mut Histogram, src: &Histogram) {
+    for (d, s) in dst.counts.iter_mut().zip(&src.counts) {
+        *d += s;
+    }
+    dst.count += src.count;
+    dst.sum += src.sum;
+    dst.min = dst.min.min(src.min);
+    dst.max = dst.max.max(src.max);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tenant_ids_are_stable_per_thread_and_distinct_across() {
+        let mine = tenant_id();
+        assert_eq!(tenant_id(), mine);
+        let other = std::thread::spawn(tenant_id).join().unwrap();
+        assert_ne!(mine, other);
+    }
+
+    #[test]
+    fn histogram_percentiles_track_the_samples() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3); // 1ms .. 100ms
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile(50.0);
+        assert!((p50 - 0.050).abs() / 0.050 < 0.10, "p50 {p50}");
+        let p99 = h.percentile(99.0);
+        assert!((p99 - 0.099).abs() / 0.099 < 0.10, "p99 {p99}");
+        assert!(h.percentile(0.0) >= 1e-3 * 0.9);
+        assert!(h.percentile(100.0) <= 0.1);
+        assert!((h.mean() - 0.0505).abs() < 1e-4);
+    }
+
+    #[test]
+    fn histogram_empty_and_single() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(50.0), 0.0);
+        let mut h = Histogram::new();
+        h.record(0.25);
+        // A single sample answers every quantile with (about) itself.
+        assert!((h.percentile(1.0) - 0.25).abs() / 0.25 < 0.10);
+        assert!((h.percentile(99.0) - 0.25).abs() / 0.25 < 0.10);
+    }
+
+    #[test]
+    fn registry_lifecycle_folds_into_groups() {
+        let reg = MetricsRegistry::new(2);
+        reg.on_admit(1, 3, "gemm", 100.0, 0.0);
+        reg.on_round_start(1, 0.1);
+        reg.on_round_start(1, 0.2); // second round: first-round stamp holds
+        reg.on_round_end(0, 5_000_000);
+        let retired = reg.on_retire(1, false, 0.3).expect("live job retires");
+        assert_eq!(retired.tenant, 3);
+        assert_eq!(retired.routine, "gemm");
+        assert!(reg.on_retire(1, false, 0.4).is_none(), "double retire is ignored");
+        let snap = reg.snapshot();
+        assert_eq!(snap.get("jobs_retired").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(snap.get("jobs_in_flight").and_then(Json::as_f64), Some(0.0));
+        let routines = snap.get("per_routine").expect("per_routine");
+        let gemm = routines.get("gemm").expect("gemm group");
+        assert_eq!(gemm.get("jobs").and_then(Json::as_f64), Some(1.0));
+        assert!(gemm.get("end_to_end_ms").and_then(|q| q.get("p50")).is_some());
+        let workers = snap.get("workers").and_then(Json::as_arr).expect("workers");
+        assert_eq!(workers.len(), 2);
+        assert!(workers[0].get("busy_s").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+}

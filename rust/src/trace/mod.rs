@@ -3,9 +3,15 @@
 //! split H↔D vs P2P (Table V), DMA throughput (Table IV), load-balance
 //! gaps, and ASCII gantt snapshots (Fig. 1).
 
+pub mod chrome;
 pub mod events;
 pub mod gantt;
+pub mod metrics;
 pub mod profile;
+pub mod spans;
 
+pub use chrome::chrome_trace;
 pub use events::{EvKind, Event, Trace};
+pub use metrics::{tenant_id, Histogram, MetricsRegistry, RetiredJob};
 pub use profile::{all_profiles, balance_gap, comm_volumes, device_profile, CommVolume, DeviceProfile};
+pub use spans::{JobRec, Recorder, Span, SpanKind};

@@ -1,0 +1,305 @@
+//! Wall-clock span recorder for the **real** execution path.
+//!
+//! The sim engine books virtual time straight into [`crate::trace::Trace`],
+//! which is what the paper-figure analyses (`device_profile`,
+//! `comm_volumes`, `balance_gap`) consume. The resident runtime was
+//! blind by comparison: one `RealReport` of counters per call, no
+//! timeline. The [`Recorder`] closes that gap — device workers emit
+//! timed [`Span`]s for kernels, tile movement, pack work, scheduler
+//! rounds, steal retries and condvar parks, and the recorder converts
+//! the subset matching the sim-era [`EvKind`] taxonomy into a `Trace`
+//! with **real timestamps**, so Fig. 8's COMPT/COMM/OTHER split and
+//! Table V's H↔D vs P2P volumes run unchanged against wall-clock data.
+//!
+//! ## Overhead contract
+//!
+//! The recorder is owned by the [`crate::coordinator::real_engine::EngineCore`]
+//! and sits on the hot path of every tile acquire and kernel dispatch,
+//! so the *disabled* path must cost nothing measurable: one relaxed
+//! atomic load per probe, no clock read, no allocation
+//! (`rust/tests/observability.rs` pins the no-allocation property with
+//! a counting allocator, and `benches/call_overhead.rs` compares warm
+//! call latency with the recorder on vs off). Enabled, spans go to
+//! per-device shards (one mutex each — a device's spans are recorded
+//! by its own worker thread, so sharded pushes never contend).
+//!
+//! Enable with `BLASX_TRACE=1` in the environment (read at core
+//! construction) or programmatically via
+//! [`crate::api::Context::set_tracing`] / `blasx run --trace-out`.
+
+use super::events::{EvKind, Trace};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// What a recorded interval was spent on. The first four variants are
+/// the sim-era [`EvKind`] taxonomy (they flow into [`Trace`] and the
+/// paper-figure analyses); the rest are runtime-internal phases that
+/// only the Chrome export and the span tests see.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Kernel execution (COMPT). `amount` = flops.
+    Kernel,
+    /// Host→arena tile read (the engine's DMA analogue; includes the
+    /// strided gather out of the user's matrix). `amount` = bytes.
+    H2d,
+    /// Arena→host write-back of a C tile. `amount` = bytes.
+    D2h,
+    /// Arena→arena peer copy (L2 hit). `amount` = bytes.
+    P2p,
+    /// Tile staging that moves no host bytes: zero-fill of edge/non-
+    /// accumulating C blocks, identity-padding of diagonal tiles.
+    Pack,
+    /// One scheduler round (refill → bind → execute → sync) that made
+    /// progress. `amount` = flops charged to the fair-share ledger.
+    Round,
+    /// A work-steal attempt on a dry station. `amount` = 1.0 if a task
+    /// was stolen, 0.0 if the probe came up empty.
+    Steal,
+    /// The worker was parked on the idle condvar.
+    Park,
+}
+
+impl SpanKind {
+    /// The sim-era event kind this span maps onto, if any.
+    pub fn ev(self) -> Option<EvKind> {
+        match self {
+            SpanKind::Kernel => Some(EvKind::Kernel),
+            SpanKind::H2d => Some(EvKind::H2d),
+            SpanKind::D2h => Some(EvKind::D2h),
+            SpanKind::P2p => Some(EvKind::P2p),
+            _ => None,
+        }
+    }
+}
+
+/// One timed interval on one device worker. Timestamps are seconds
+/// since the recorder's epoch (core construction), captured with a
+/// monotonic clock.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub dev: usize,
+    pub kind: SpanKind,
+    pub start: f64,
+    pub end: f64,
+    /// Bytes (transfers), flops (kernels/rounds), or a flag (steals).
+    pub amount: f64,
+    /// Admission id of the owning job; 0 for the one-shot engine and
+    /// for spans outside any job (parks).
+    pub job: u64,
+}
+
+/// Admission→first-round→retire lifecycle of one job, recorded when
+/// the job retires. Feeds the per-job tracks of the Chrome export.
+#[derive(Clone, Debug)]
+pub struct JobRec {
+    pub job: u64,
+    pub tenant: u32,
+    pub routine: &'static str,
+    /// Seconds since the recorder epoch.
+    pub admit: f64,
+    /// First scheduler round that picked the job (== `retire` if the
+    /// job retired without running, e.g. a barrier job).
+    pub first_round: f64,
+    pub retire: f64,
+    pub failed: bool,
+}
+
+/// Low-overhead wall-clock span recorder (see module docs).
+pub struct Recorder {
+    enabled: AtomicBool,
+    epoch: Instant,
+    /// One shard per device: a device's spans are pushed by its own
+    /// worker thread, so these mutexes are uncontended in steady state
+    /// (snapshot readers are the only cross-thread lockers).
+    shards: Vec<Mutex<Vec<Span>>>,
+    jobs: Mutex<Vec<JobRec>>,
+}
+
+impl Recorder {
+    /// A recorder for `n_devices` workers, initially enabled iff the
+    /// `BLASX_TRACE` environment variable is truthy.
+    pub fn new(n_devices: usize) -> Recorder {
+        let env_on = matches!(
+            std::env::var("BLASX_TRACE").ok().as_deref().map(str::trim),
+            Some("1") | Some("true") | Some("on") | Some("yes")
+        );
+        Recorder {
+            enabled: AtomicBool::new(env_on),
+            epoch: Instant::now(),
+            shards: (0..n_devices.max(1)).map(|_| Mutex::new(Vec::new())).collect(),
+            jobs: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Is the recorder capturing spans? One relaxed load — this is the
+    /// entire cost of every probe on the disabled path.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Start (or stop) capturing. Previously captured spans are kept;
+    /// call [`Recorder::reset`] to drop them.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Seconds since the recorder epoch — `0.0` when disabled, so the
+    /// disabled path never reads the clock.
+    #[inline]
+    pub fn now(&self) -> f64 {
+        if !self.is_enabled() {
+            return 0.0;
+        }
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Record one span. `start` must come from [`Recorder::now`] taken
+    /// while enabled; if the recorder was disabled when the span
+    /// opened (start == 0.0 sentinel with a disabled flag now), the
+    /// span is dropped rather than recorded with a bogus start.
+    #[inline]
+    pub fn record(&self, dev: usize, kind: SpanKind, start: f64, amount: f64, job: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        let end = self.epoch.elapsed().as_secs_f64();
+        // A span opened before `set_enabled(true)` has a zero start
+        // but a large end; clamp instead of dropping so the first
+        // enabled round is not lost (starts are still monotone).
+        let start = if start <= 0.0 { end } else { start.min(end) };
+        let shard = dev.min(self.shards.len() - 1);
+        let mut spans = self.shards[shard].lock().unwrap_or_else(|e| e.into_inner());
+        spans.push(Span { dev, kind, start, end, amount, job });
+    }
+
+    /// Record one job's lifecycle (called by the resident worker that
+    /// retires it).
+    pub fn record_job(&self, rec: JobRec) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.jobs.lock().unwrap_or_else(|e| e.into_inner()).push(rec);
+    }
+
+    /// Snapshot every span captured so far (all shards, unsorted
+    /// across devices; per-device order is record order).
+    pub fn spans(&self) -> Vec<Span> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            out.extend(shard.lock().unwrap_or_else(|e| e.into_inner()).iter().copied());
+        }
+        out
+    }
+
+    /// Snapshot the retired-job lifecycles captured so far.
+    pub fn job_records(&self) -> Vec<JobRec> {
+        self.jobs.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Drop every captured span and job record (enabled state is
+    /// unchanged).
+    pub fn reset(&self) {
+        for shard in &self.shards {
+            shard.lock().unwrap_or_else(|e| e.into_inner()).clear();
+        }
+        self.jobs.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    }
+
+    /// Convert the captured spans into a sim-compatible [`Trace`] with
+    /// real timestamps: only the [`EvKind`] subset flows in (kernels
+    /// and tile movement), timestamps are shifted so the first event
+    /// starts at 0, and the makespan is the active window — exactly
+    /// the shape `device_profile` / `comm_volumes` / `balance_gap`
+    /// expect, so the paper's Fig. 8 / Table V analyses run unchanged
+    /// on wall-clock data.
+    pub fn to_trace(&self) -> Trace {
+        let spans = self.spans();
+        let mut trace = Trace::new();
+        let t0 = spans
+            .iter()
+            .filter(|s| s.kind.ev().is_some())
+            .map(|s| s.start)
+            .fold(f64::INFINITY, f64::min);
+        if !t0.is_finite() {
+            return trace;
+        }
+        for s in &spans {
+            if let Some(kind) = s.kind.ev() {
+                trace.record(s.dev, 0, kind, s.start - t0, s.end - t0, s.amount);
+                trace.makespan = trace.makespan.max(s.end - t0);
+            }
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::profile::{comm_volumes, device_profile};
+
+    fn enabled_recorder(n: usize) -> Recorder {
+        let r = Recorder::new(n);
+        r.set_enabled(true);
+        r
+    }
+
+    #[test]
+    fn disabled_recorder_drops_everything() {
+        let r = Recorder::new(2);
+        r.set_enabled(false);
+        r.record(0, SpanKind::Kernel, 0.0, 1.0, 0);
+        r.record_job(JobRec {
+            job: 1,
+            tenant: 0,
+            routine: "gemm",
+            admit: 0.0,
+            first_round: 0.0,
+            retire: 0.0,
+            failed: false,
+        });
+        assert!(r.spans().is_empty());
+        assert!(r.job_records().is_empty());
+        assert_eq!(r.now(), 0.0, "disabled probe must not read the clock");
+    }
+
+    #[test]
+    fn spans_flow_into_a_profileable_trace() {
+        let r = enabled_recorder(2);
+        let t0 = r.now();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        r.record(0, SpanKind::Kernel, t0, 1000.0, 7);
+        let t1 = r.now();
+        r.record(1, SpanKind::H2d, t1, 4096.0, 7);
+        r.record(1, SpanKind::Park, t1, 0.0, 0); // non-EvKind: excluded
+        let trace = r.to_trace();
+        assert_eq!(trace.events.len(), 2, "only EvKind spans flow into the Trace");
+        assert!(trace.makespan > 0.0);
+        assert!(trace.events.iter().all(|e| e.start >= 0.0 && e.end >= e.start));
+        let p = device_profile(&trace, 0);
+        assert!(p.compt > 0.0, "kernel span must surface as COMPT");
+        let vols = comm_volumes(&trace);
+        assert_eq!(vols[1].hd_bytes, 4096.0);
+    }
+
+    #[test]
+    fn reset_clears_but_keeps_enabled() {
+        let r = enabled_recorder(1);
+        let t = r.now();
+        r.record(0, SpanKind::Round, t, 1.0, 1);
+        assert_eq!(r.spans().len(), 1);
+        r.reset();
+        assert!(r.spans().is_empty());
+        assert!(r.is_enabled());
+    }
+
+    #[test]
+    fn empty_recorder_yields_empty_trace() {
+        let r = enabled_recorder(1);
+        let t = r.to_trace();
+        assert!(t.events.is_empty());
+        assert_eq!(t.makespan, 0.0);
+    }
+}

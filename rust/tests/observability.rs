@@ -1,0 +1,294 @@
+//! Observability-layer contract tests: span recording under
+//! multi-client load, histogram percentiles against a brute-force
+//! oracle, Chrome trace-event export validity, and the
+//! zero-allocation guarantee of the disabled recorder.
+//!
+//! The whole test binary runs under a counting global allocator
+//! (thread-local counters, so concurrent tests don't interfere) —
+//! that is what makes the disabled-recorder check a real measurement
+//! rather than a code-reading exercise.
+
+use blasx::api::types::Trans;
+use blasx::api::{self, Context};
+use blasx::trace::{all_profiles, comm_volumes, Histogram, Recorder, SpanKind};
+use blasx::util::json::{self, Json};
+use blasx::util::prng::Prng;
+use blasx::util::stats::percentile_sorted;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+// ---- counting allocator (thread-local, drop-free TLS) --------------
+
+thread_local! {
+    // Cell<u64> has no destructor, so the TLS slot is never torn down
+    // and counting from inside the allocator can never re-enter a
+    // destroyed key.
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: delegates every operation to `System`; the only addition is
+// a thread-local counter bump, which does not allocate.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(p, l, new)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn thread_allocs() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+// ---- helpers -------------------------------------------------------
+
+const N: usize = 192;
+const T: usize = 64;
+const DEVICES: usize = 2;
+const CLIENTS: usize = 4;
+const JOBS_PER_CLIENT: usize = 2;
+
+/// Run a 4-client DGEMM load over one traced persistent context and
+/// return it (trace + metrics retained inside).
+fn traced_load() -> Context {
+    let ctx = Context::new(DEVICES).with_tile(T).with_arena(32 << 20);
+    ctx.set_tracing(true);
+    std::thread::scope(|scope| {
+        for client in 0..CLIENTS {
+            let ctx = ctx.clone();
+            scope.spawn(move || {
+                let mut p = Prng::new(900 + client as u64);
+                let mut a = vec![0.0f64; N * N];
+                let mut b = vec![0.0f64; N * N];
+                let mut c = vec![0.0f64; N * N];
+                p.fill_f64(&mut a, -1.0, 1.0);
+                p.fill_f64(&mut b, -1.0, 1.0);
+                for _ in 0..JOBS_PER_CLIENT {
+                    api::dgemm(
+                        &ctx, Trans::No, Trans::No, N, N, N, 1.0, &a, N, &b, N, 0.0, &mut c, N,
+                    )
+                    .expect("traced dgemm");
+                }
+            });
+        }
+    });
+    ctx
+}
+
+/// All "X" (complete) events of a parsed Chrome trace document.
+fn complete_events(doc: &Json) -> Vec<&Json> {
+    doc.get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array")
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+        .collect()
+}
+
+fn num(e: &Json, key: &str) -> f64 {
+    e.get(key).and_then(Json::as_f64).unwrap_or_else(|| panic!("event field {key}"))
+}
+
+// ---- tests ---------------------------------------------------------
+
+/// Under concurrent multi-client load the recorder must yield (a) a
+/// profileable trace with compute and H2D time on the devices, (b)
+/// kernel spans nested inside scheduler-round spans on their worker's
+/// track, and (c) per-job queued→running lifecycles in admission
+/// order per track, labelled with tenant and routine.
+#[test]
+fn spans_nest_and_order_under_concurrent_load() {
+    let ctx = traced_load();
+
+    // (a) The sim-era analyses run unchanged on the real spans.
+    let trace = ctx.snapshot_trace().expect("trace snapshot");
+    let profiles = all_profiles(&trace);
+    assert_eq!(profiles.len(), DEVICES);
+    let compt: f64 = profiles.iter().map(|p| p.compt).sum();
+    assert!(compt > 0.0, "no compute time recorded");
+    let hd: f64 = comm_volumes(&trace).iter().map(|v| v.hd_bytes).sum();
+    assert!(hd > 0.0, "cold first calls must move host tiles");
+
+    let doc = json::parse(&ctx.chrome_trace_json().expect("chrome json")).expect("valid json");
+    let xs = complete_events(&doc);
+    assert!(!xs.is_empty());
+
+    // (b) Kernel-in-round nesting per device track (pid 0). Rounds on
+    // one track come from one worker thread, so containment is exact.
+    let eps = 1.0; // µs slack for f64 rounding in ts/dur
+    let mut kernels = 0;
+    for e in xs.iter().filter(|e| num(e, "pid") == 0.0) {
+        if e.get("name").and_then(Json::as_str) != Some("kernel") {
+            continue;
+        }
+        kernels += 1;
+        let (tid, ts, dur) = (num(e, "tid"), num(e, "ts"), num(e, "dur"));
+        assert!(tid < DEVICES as f64, "kernel on unknown device track");
+        let contained = xs.iter().any(|r| {
+            r.get("name").and_then(Json::as_str) == Some("round")
+                && num(r, "pid") == 0.0
+                && num(r, "tid") == tid
+                && num(r, "ts") <= ts + eps
+                && ts + dur <= num(r, "ts") + num(r, "dur") + eps
+        });
+        assert!(contained, "kernel span outside every round span on its track");
+    }
+    assert!(kernels > 0, "no kernel spans exported");
+
+    // (c) Job lifecycles on pid 1: queued precedes running on each
+    // track, labels carry tenant + routine.
+    let mut running = 0;
+    for e in xs.iter().filter(|e| num(e, "pid") == 1.0) {
+        let name = e.get("name").and_then(Json::as_str).unwrap_or("");
+        let args = e.get("args").expect("job event args");
+        assert_eq!(args.get("routine").and_then(Json::as_str), Some("gemm"));
+        assert!(args.get("tenant").and_then(Json::as_f64).unwrap_or(0.0) > 0.0);
+        if name == "running" {
+            running += 1;
+            let tid = num(e, "tid");
+            let queued = xs
+                .iter()
+                .find(|q| {
+                    num(q, "pid") == 1.0
+                        && num(q, "tid") == tid
+                        && q.get("name").and_then(Json::as_str) == Some("queued")
+                })
+                .expect("running job without a queued span");
+            let handoff = num(queued, "ts") + num(queued, "dur");
+            assert!(
+                (handoff - num(e, "ts")).abs() <= eps,
+                "queued must end where running starts"
+            );
+        }
+    }
+    assert_eq!(running, CLIENTS * JOBS_PER_CLIENT, "one running span per admitted job");
+
+    // The metrics registry saw the same story.
+    let m = ctx.snapshot_metrics().expect("metrics");
+    let retired = m.get("jobs_retired").and_then(Json::as_usize).unwrap_or(0);
+    assert_eq!(retired, CLIENTS * JOBS_PER_CLIENT);
+    assert!(m.get("per_routine").and_then(|r| r.get("gemm")).is_some());
+}
+
+/// Histogram percentiles must track the brute-force oracle
+/// (`percentile_sorted` over all recorded samples) within the
+/// log-bucket resolution, across a skewed distribution.
+#[test]
+fn histogram_percentiles_match_brute_force_oracle() {
+    let mut h = Histogram::new();
+    let mut p = Prng::new(4242);
+    let mut u = vec![0.0f64; 4000];
+    p.fill_f64(&mut u, 0.0, 1.0);
+    // Skew: square the uniform draw and spread over ~5 decades.
+    let vals: Vec<f64> = u.iter().map(|x| 1e-5 + x * x * 2.0).collect();
+    for &v in &vals {
+        h.record(v);
+    }
+    let mut sorted = vals.clone();
+    sorted.sort_by(f64::total_cmp);
+
+    assert_eq!(h.count(), vals.len() as u64);
+    let mean_oracle = vals.iter().sum::<f64>() / vals.len() as f64;
+    assert!((h.mean() - mean_oracle).abs() <= 1e-9 * vals.len() as f64, "mean is exact");
+
+    for pct in [10.0, 50.0, 90.0, 95.0, 99.0] {
+        let got = h.percentile(pct);
+        let want = percentile_sorted(&sorted, pct);
+        let rel = (got - want).abs() / want.abs().max(1e-12);
+        assert!(
+            rel <= 0.15,
+            "p{pct}: histogram {got} vs oracle {want} (rel err {rel:.3})"
+        );
+    }
+    // Percentiles are clamped to the observed range.
+    assert!(h.percentile(0.0) >= sorted[0] * 0.999);
+    assert!(h.percentile(100.0) <= sorted[sorted.len() - 1] * 1.001);
+}
+
+/// The exported Chrome trace document must be loadable by Perfetto:
+/// parseable JSON, metadata first, complete events time-sorted with
+/// non-negative ts/dur, and every event on a known pid/tid track.
+#[test]
+fn chrome_trace_export_is_golden_valid() {
+    let ctx = traced_load();
+    let text = ctx.chrome_trace_json().expect("chrome json");
+    let doc = json::parse(&text).expect("chrome trace must parse");
+    assert_eq!(doc.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+
+    let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+    // Metadata events lead the array and name both process tracks.
+    let mut seen_x = false;
+    let mut process_names = Vec::new();
+    for e in events {
+        match e.get("ph").and_then(Json::as_str) {
+            Some("M") => {
+                assert!(!seen_x, "metadata must precede all complete events");
+                if e.get("name").and_then(Json::as_str) == Some("process_name") {
+                    if let Some(n) =
+                        e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str)
+                    {
+                        process_names.push(n.to_string());
+                    }
+                }
+            }
+            Some("X") => seen_x = true,
+            ph => panic!("unexpected event phase {ph:?}"),
+        }
+    }
+    assert!(seen_x, "trace has no complete events");
+    assert!(process_names.iter().any(|n| n == "devices"));
+    assert!(process_names.iter().any(|n| n == "jobs"));
+
+    let xs = complete_events(&doc);
+    let mut prev_ts = f64::NEG_INFINITY;
+    for e in &xs {
+        let (pid, ts, dur) = (num(e, "pid"), num(e, "ts"), num(e, "dur"));
+        assert!(pid == 0.0 || pid == 1.0, "unknown pid track");
+        if pid == 0.0 {
+            assert!(num(e, "tid") < DEVICES as f64);
+        }
+        assert!(ts >= 0.0 && dur >= 0.0, "negative ts/dur");
+        assert!(ts >= prev_ts, "complete events must be ts-sorted");
+        prev_ts = ts;
+    }
+}
+
+/// The disabled recorder is the default for every call — its probes
+/// must not allocate at all (one relaxed atomic load per site, no
+/// clock reads, no span pushes).
+#[test]
+fn disabled_recorder_records_without_allocating() {
+    let rec = Recorder::new(DEVICES);
+    rec.set_enabled(false);
+    let _ = thread_allocs(); // warm the TLS slot outside the window
+    let before = thread_allocs();
+    for i in 0..10_000u64 {
+        let t0 = rec.now();
+        rec.record((i % DEVICES as u64) as usize, SpanKind::Kernel, t0, 128.0, i);
+        rec.record((i % DEVICES as u64) as usize, SpanKind::Round, t0, 0.0, 0);
+    }
+    assert_eq!(thread_allocs(), before, "disabled recorder allocated");
+    assert!(rec.spans().is_empty(), "disabled recorder must drop spans");
+
+    // Flipping it on makes the same probes record (sanity that the
+    // zero-allocation path is the *disabled* branch, not a stub).
+    rec.set_enabled(true);
+    let t0 = rec.now();
+    rec.record(0, SpanKind::Kernel, t0, 1.0, 7);
+    assert_eq!(rec.spans().len(), 1);
+}

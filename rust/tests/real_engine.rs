@@ -209,7 +209,7 @@ fn cache_pressure_still_correct() {
     let (cfg, arena) = cfg(9);
     let rep = run_real(&cfg, &ts, Mats { a: &am, b: Some(&bm), c: &cm }, 3, arena).unwrap();
     // eviction must actually have happened for this test to mean anything
-    assert!(rep.cache_stats.iter().any(|&(_, _, ev)| ev > 0), "{:?}", rep.cache_stats);
+    assert!(rep.cache_delta.iter().any(|s| s.evictions > 0), "{:?}", rep.cache_delta);
 
     hostblas::gemm_blocked(Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 1.0, &mut want, m);
     assert!(max_diff(&c, &want) < 1e-10);
