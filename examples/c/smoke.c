@@ -66,6 +66,18 @@ static void check(const char *name, double diff, double tol) {
 }
 
 int main(void) {
+    /* Explicit configuration — must precede every other BLASX entry.
+     * Zero-init means "all defaults"; we pin the fleet shape so the
+     * smoke run is independent of BLASX_* environment knobs. */
+    blasx_config_t cfg = {0};
+    cfg.devices = 2;
+    cfg.arena_mb = 32;
+    if (blasx_init(&cfg) != BLASX_OK) {
+        char msg[256];
+        blasx_last_error(msg, sizeof msg);
+        fprintf(stderr, "blasx_init failed: %s\n", msg);
+        return 1;
+    }
     printf("%s C smoke client\n", blasx_version());
     unsigned seed = 2015;
     size_t bytes = (size_t)N * N * sizeof(double);
@@ -146,6 +158,43 @@ int main(void) {
     ref_gemm(N, 1.0, a, b, 0.25, want);
     check("post-invalidate cblas_dgemm", max_abs_diff(c, want, (size_t)N * N),
           1e-10);
+
+    /* 4. cooperative cancellation: re-run the chain but cancel the
+     *    solve. Cancellation is honoured at a round boundary, so the
+     *    trsm either aborts with BLASX_ERR_CANCELLED (buffer holds the
+     *    gemm result) or won the race and finished (buffer holds the
+     *    chain result) — both are verified, anything else fails. */
+    memset(c, 0, bytes);
+    blasx_job_t *j3 = blasx_dgemm_async(CblasColMajor, CblasNoTrans,
+                                        CblasNoTrans, N, N, N, 1.0, a, N, b, N,
+                                        0.0, c, N);
+    blasx_job_t *j4 = blasx_dtrsm_async(CblasColMajor, CblasLeft, CblasUpper,
+                                        CblasNoTrans, CblasNonUnit, N, N, 1.0,
+                                        t, N, c, N);
+    if (!j3 || !j4) {
+        fprintf(stderr, "async submission failed in cancel section\n");
+        return 1;
+    }
+    blasx_job_cancel(j4);
+    blasx_job_cancel(j4); /* idempotent */
+    int s3 = blasx_wait(j3);
+    int s4 = blasx_wait(j4);
+    if (s3 != BLASX_OK) {
+        fprintf(stderr, "predecessor of a cancelled job failed: %d\n", s3);
+        return 1;
+    }
+    memset(want, 0, bytes);
+    ref_gemm(N, 1.0, a, b, 0.0, want);
+    if (s4 == BLASX_OK) {
+        ref_trsm_upper(N, t, want); /* cancel lost the race: full chain */
+    } else if (s4 != BLASX_ERR_CANCELLED) {
+        fprintf(stderr, "cancelled job reported %d, want %d or %d\n", s4,
+                BLASX_ERR_CANCELLED, BLASX_OK);
+        return 1;
+    }
+    check(s4 == BLASX_OK ? "cancel raced: chain intact"
+                         : "cancelled solve left gemm result",
+          max_abs_diff(c, want, (size_t)N * N), 1e-9);
 
     blasx_shutdown();
     free(a); free(b); free(c); free(want); free(t);

@@ -48,6 +48,8 @@ def load_libblasx():
 def declare(lib):
     i, d, szt = ctypes.c_int, ctypes.c_double, ctypes.c_size_t
     pd = ctypes.POINTER(ctypes.c_double)
+    lib.blasx_init.argtypes = [ctypes.POINTER(BlasxConfig)]
+    lib.blasx_init.restype = i
     lib.cblas_dgemm.argtypes = [i, i, i, i, i, i, d, pd, i, pd, i, d, pd, i]
     lib.cblas_dgemm.restype = None
     lib.blasx_dgemm_async.argtypes = lib.cblas_dgemm.argtypes
@@ -58,12 +60,30 @@ def declare(lib):
     lib.blasx_wait.restype = i
     lib.blasx_job_done.argtypes = [ctypes.c_void_p]
     lib.blasx_job_done.restype = i
+    lib.blasx_job_cancel.argtypes = [ctypes.c_void_p]
+    lib.blasx_job_cancel.restype = i
     lib.blasx_job_stats.argtypes = [ctypes.c_void_p, ctypes.POINTER(BlasxStats)]
     lib.blasx_job_stats.restype = i
     lib.blasx_last_error.argtypes = [ctypes.c_char_p, szt]
     lib.blasx_last_error.restype = szt
     lib.blasx_version.restype = ctypes.c_char_p
     lib.blasx_shutdown.restype = None
+
+
+class BlasxConfig(ctypes.Structure):
+    """struct blasx_config (include/blasx.h): zero = use the default."""
+
+    _fields_ = [
+        ("devices", ctypes.c_int),
+        ("tile", ctypes.c_int),
+        ("arena_mb", ctypes.c_int),
+        ("kernel_threads", ctypes.c_int),
+        ("one_shot", ctypes.c_int),
+        ("deadline_ms", ctypes.c_uint64),
+        ("max_inflight", ctypes.c_int),
+        ("tenant_quota", ctypes.c_int),
+        ("faults", ctypes.c_char_p),
+    ]
 
 
 class BlasxStats(ctypes.Structure):
@@ -87,6 +107,11 @@ def buf(values):
 def main():
     lib = load_libblasx()
     declare(lib)
+    # Explicit configuration — must be the first BLASX call. Zeroed
+    # fields keep their defaults; `faults` would take a BLASX_FAULTS
+    # schedule (e.g. b"kill@dev1:op40") for chaos runs.
+    cfg = BlasxConfig(devices=2, arena_mb=32)
+    assert lib.blasx_init(ctypes.byref(cfg)) == 0, "blasx_init must be first"
     print(lib.blasx_version().decode(), "from Python/ctypes")
 
     n = 32

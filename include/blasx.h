@@ -23,7 +23,9 @@
  *    declare; blasx_*_async then fails).
  *  - Environment (read once, at first call): BLASX_DEVICES,
  *    BLASX_TILE, BLASX_ARENA_MB, BLASX_KERNEL_THREADS,
- *    BLASX_PERSISTENT.
+ *    BLASX_PERSISTENT, BLASX_FAULTS (fault-injection schedule).
+ *    Alternatively call blasx_init() with an explicit configuration
+ *    BEFORE any other BLASX entry.
  */
 #ifndef BLASX_H
 #define BLASX_H
@@ -51,6 +53,37 @@ typedef enum { CblasLeft = 141, CblasRight = 142 } CBLAS_SIDE;
 #define BLASX_ERR_RUNTIME   3  /* kernel/artifact/I-O failure          */
 #define BLASX_ERR_OOM       4  /* device arena exhausted               */
 #define BLASX_ERR_INTERNAL  5  /* invariant violation / contained panic */
+#define BLASX_ERR_DEGRADED  6  /* device lost; recovery exhausted      */
+#define BLASX_ERR_DEADLINE  7  /* job overran its deadline, reaped     */
+#define BLASX_ERR_CANCELLED 8  /* job cancelled via blasx_job_cancel   */
+#define BLASX_ERR_BACKPRESSURE 9 /* admission refused: queue/quota full;
+                                  * nothing enqueued — retry later     */
+
+/* ---- initialization (optional) ------------------------------------- */
+
+/* Explicit configuration — the programmatic twin of the BLASX_* env
+ * knobs. Zero-initialize, then set the fields of interest: every
+ * numeric field treats <= 0 (0 for deadline_ms) as "use the default". */
+typedef struct blasx_config {
+    int devices;            /* devices to run on            (<=0: default) */
+    int tile;               /* square tile edge             (<=0: default) */
+    int arena_mb;           /* per-device arena, MiB        (<=0: default) */
+    int kernel_threads;     /* kernel threads per device    (<=0: default) */
+    int one_shot;           /* nonzero: no resident runtime (async fails)  */
+    uint64_t deadline_ms;   /* per-job deadline             (0: none)      */
+    int max_inflight;       /* admission-queue capacity     (<=0: default) */
+    int tenant_quota;       /* per-tenant in-flight quota   (<=0: default) */
+    const char *faults;     /* fault schedule, BLASX_FAULTS grammar
+                             * (NULL/empty: none), e.g.
+                             * "kill@dev1:op40; h2d@dev0:op5x2; seed=7"    */
+} blasx_config_t;
+
+/* Configure the process-global runtime. Must be the FIRST BLASX call:
+ * once any other entry has booted the env-driven defaults, this
+ * returns BLASX_ERR_CONFIG. A malformed faults string returns
+ * BLASX_ERR_PARAM and configures nothing. cfg may be NULL (claim the
+ * defaults). The struct is copied; faults need not outlive the call. */
+int blasx_init(const blasx_config_t *cfg);
 
 /* ---- blocking CBLAS-compatible entry points ------------------------ */
 /* Errors are reported CBLAS-style: a diagnostic on stderr, the call
@@ -136,6 +169,12 @@ int blasx_wait(blasx_job_t *job);
 /* 1 = retired (wait will not block), 0 = in flight, -1 = NULL. Does
  * not free the handle. */
 int blasx_job_done(const blasx_job_t *job);
+
+/* Request cooperative cancellation: the job aborts with
+ * BLASX_ERR_CANCELLED at its next round boundary (outputs are never
+ * torn mid-tile) — unless it finished first. Idempotent; does not free
+ * the handle, so blasx_wait must still run and returns the verdict. */
+int blasx_job_cancel(const blasx_job_t *job);
 
 /* Observability counters of one job — the numbers blasx_wait discards
  * with its report. Counters are monotone while the job runs. */

@@ -146,6 +146,44 @@ impl Context {
         self
     }
 
+    /// Arm the fault-injection plane (see [`crate::fault`]): the plan
+    /// is installed when this context's runtime boots, so a derived
+    /// context gets its own runtime slot — chaos never leaks into a
+    /// sibling's warm engine. `None` disarms (modulo the
+    /// `BLASX_FAULTS` environment fallback).
+    pub fn with_fault_plan(mut self, plan: Option<crate::fault::FaultPlan>) -> Context {
+        self.cfg.fault_plan = plan;
+        self.runtime = Arc::new(Mutex::new(None));
+        self
+    }
+
+    /// Per-job deadline in milliseconds: a call still unfinished this
+    /// long after admission aborts with
+    /// [`crate::error::Error::DeadlineExceeded`] at the next round
+    /// boundary, leaving other tenants' jobs untouched. `None`
+    /// (default) disables deadlines.
+    pub fn with_deadline_ms(mut self, ms: Option<u64>) -> Context {
+        self.cfg.deadline_ms = ms;
+        self
+    }
+
+    /// Bound the admission queue: at `cap` live jobs further calls
+    /// fail fast with [`crate::error::Error::Backpressure`] instead of
+    /// queueing unboundedly (floored at 1).
+    pub fn with_admit_capacity(mut self, cap: usize) -> Context {
+        self.cfg.admit_capacity = cap.max(1);
+        self
+    }
+
+    /// Bound one tenant's (= submitting thread's) concurrently live
+    /// jobs; over quota its calls fail with
+    /// [`crate::error::Error::Backpressure`] while other tenants admit
+    /// freely (floored at 1).
+    pub fn with_tenant_quota(mut self, quota: usize) -> Context {
+        self.cfg.tenant_quota = quota.max(1);
+        self
+    }
+
     /// Tile size floor: degenerate matrices still need one tile.
     pub(crate) fn tile(&self) -> usize {
         self.cfg.t
@@ -164,6 +202,9 @@ impl Context {
             _ => {
                 let rt =
                     Arc::new(Runtime::boot(self.n_devices, self.arena_bytes, self.cfg.alloc));
+                if let Some(plan) = &self.cfg.fault_plan {
+                    rt.install_fault_plan(plan.clone());
+                }
                 *slot = Some(rt.clone());
                 rt
             }

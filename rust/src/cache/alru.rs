@@ -137,6 +137,11 @@ impl Alru {
     pub fn insert(&mut self, key: TileKey, len: usize) -> Option<(Offset, Vec<TileKey>, f64)> {
         debug_assert!(!self.map.contains_key(&key), "insert of resident tile");
         self.misses += 1;
+        // Fault-injection hook: a forced failure refuses the whole
+        // request up front, exactly as an unevictable-full arena would.
+        if self.alloc.take_forced_failure() {
+            return None;
+        }
         let mut evicted = Vec::new();
         let mut total_cost = 0.0;
         loop {
@@ -253,6 +258,12 @@ impl Alru {
     /// Number of resident (non-doomed) tiles.
     pub fn resident(&self) -> usize {
         self.map.len()
+    }
+
+    /// Keys of every resident (non-doomed) tile — the worklist for
+    /// surgical whole-device invalidation on device loss.
+    pub fn resident_keys(&self) -> Vec<TileKey> {
+        self.map.keys().copied().collect()
     }
 
     /// Offset of a resident tile without touching LRU order or readers
@@ -424,5 +435,28 @@ mod tests {
     fn release_unknown_panics() {
         let mut c = alru(100);
         c.release(&key(42));
+    }
+
+    #[test]
+    fn forced_failure_refuses_one_insert_then_recovers() {
+        let mut c = alru(1000);
+        c.insert(key(1), 100).unwrap();
+        c.release(&key(1));
+        c.alloc.force_fail(1);
+        assert!(c.insert(key(2), 100).is_none(), "armed insert must fail");
+        assert!(c.probe(&key(1)), "a forced failure evicts nothing");
+        let (_, ev, _) = c.insert(key(2), 100).unwrap();
+        assert!(ev.is_empty(), "the retry succeeds without pressure");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn resident_keys_lists_live_blocks_only() {
+        let mut c = alru(1000);
+        c.insert(key(1), 100).unwrap();
+        c.insert(key(2), 100).unwrap();
+        c.invalidate(&key(1)); // doomed (readers in flight)
+        let keys = c.resident_keys();
+        assert_eq!(keys, vec![key(2)], "doomed blocks are not resident");
     }
 }

@@ -107,6 +107,24 @@ impl Directory {
         }
     }
 
+    /// Surgical device-loss invalidation: remove `dev` from every
+    /// holder set (a faulted device's copies are gone, but peer
+    /// replicas on survivors — and the host master copies — stay
+    /// valid). Returns how many tiles lost a holder.
+    pub fn drop_device(&mut self, dev: usize) -> usize {
+        let mut dropped = 0;
+        self.entries.retain(|_, e| {
+            let before = e.holders.len();
+            e.holders.retain(|&d| d != dev);
+            if e.holders.len() < before {
+                dropped += 1;
+                self.invalidations += 1;
+            }
+            !e.holders.is_empty()
+        });
+        dropped
+    }
+
     /// The M-state write-back: returns the holder set that must be
     /// invalidated (the caller invalidates each ALRU and writes the data
     /// to host); directory entry is removed (→ I).
@@ -189,6 +207,22 @@ mod tests {
         assert_eq!(d.peer_source(&key(1), 2, &[1]), None);
         // self is never a source
         assert_eq!(d.peer_source(&key(1), 0, &[0]), None);
+    }
+
+    #[test]
+    fn drop_device_spares_peer_replicas() {
+        let mut d = Directory::new(3);
+        d.add_holder(key(1), 0); // exclusive to the dying device
+        d.add_holder(key(2), 0); // shared with a survivor
+        d.add_holder(key(2), 2);
+        d.add_holder(key(3), 1); // untouched device
+        assert_eq!(d.drop_device(0), 2);
+        assert_eq!(d.state(&key(1)), TileState::Invalid);
+        assert_eq!(d.state(&key(2)), TileState::Exclusive(2), "peer replica survives");
+        assert_eq!(d.state(&key(3)), TileState::Exclusive(1));
+        assert_eq!(d.tracked(), 2);
+        // idempotent
+        assert_eq!(d.drop_device(0), 0);
     }
 
     #[test]

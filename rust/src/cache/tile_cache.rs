@@ -179,6 +179,28 @@ impl TileCacheSet {
         let _ = dev;
     }
 
+    /// Surgical whole-device invalidation for device loss: every block
+    /// resident on `dev` is dropped (doomed if readers are in flight —
+    /// the migrating task's releases reclaim them), and the directory
+    /// forgets `dev` as a holder everywhere. Peer replicas on surviving
+    /// devices stay valid, as do the host master copies; nothing on any
+    /// other device is touched. Returns the number of tiles evicted.
+    pub fn evict_device(&mut self, dev: usize) -> usize {
+        let keys = self.alrus[dev].resident_keys();
+        for k in &keys {
+            self.alrus[dev].invalidate(k);
+        }
+        self.dir.drop_device(dev);
+        keys.len()
+    }
+
+    /// Fault-injection hook: the next `n` allocation requests on `dev`
+    /// are refused as if the arena were exhausted (see
+    /// [`DeviceAllocator::force_fail`]).
+    pub fn force_alloc_failure(&mut self, dev: usize, n: u64) {
+        self.alrus[dev].alloc.force_fail(n);
+    }
+
     /// Cache statistics of one device (cumulative since construction;
     /// see [`CacheStats::delta_since`] for the per-call view).
     pub fn stats(&self, dev: usize) -> CacheStats {
@@ -308,6 +330,33 @@ mod tests {
         // dev 0's copy must be gone (it would read stale data next round)
         assert_eq!(s.locality_score(0, &key(5)), 1, "only dev1's copy remains");
         assert_eq!(s.dir.holders(&key(5)), &[1]);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn evict_device_is_surgical() {
+        let mut s = set3();
+        s.acquire(0, key(1), 100).unwrap(); // exclusive to the dying device
+        s.acquire(0, key(2), 100).unwrap(); // shared with dev 1
+        s.acquire(1, key(2), 100).unwrap();
+        s.acquire(2, key(3), 100).unwrap(); // bystander
+        assert_eq!(s.evict_device(0), 2);
+        assert_eq!(s.resident(0), 0);
+        assert_eq!(s.dir.holders(&key(2)), &[1], "peer replica survives");
+        assert_eq!(s.locality_score(2, &key(3)), 2, "bystander untouched");
+        // in-flight readers on the dead device release safely (doomed)
+        s.release(0, &key(1));
+        s.release(0, &key(2));
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn forced_alloc_failure_reaches_the_device() {
+        let mut s = set3();
+        s.force_alloc_failure(0, 1);
+        assert!(s.acquire(0, key(1), 100).is_none(), "armed acquire refused");
+        assert!(s.acquire(0, key(1), 100).is_some(), "retry succeeds");
+        assert!(s.acquire(1, key(2), 100).is_some(), "other devices unaffected");
         s.validate().unwrap();
     }
 

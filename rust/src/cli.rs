@@ -105,6 +105,8 @@ USAGE:
               [--trace-out trace.json] [--metrics-out metrics.json]
   blasx serve [--clients 4] [--jobs 8] [--n 512] [--t 256] [--devices 2]
               [--kernel-threads 1] [--verify] [--ffi-verify]
+              [--chaos] [--faults \"kill@dev1:op40; h2d@dev0:op5x2\"]
+              [--deadline-ms 0] [--max-inflight 256] [--tenant-quota 64]
               [--trace-out trace.json] [--metrics-out metrics.json]
   blasx batch <workload.json> [--devices 2] [--t 256] [--pjrt] [--fused]
               [--kernel-threads 1] [--no-persistent]
@@ -139,6 +141,16 @@ with serial execution. `--ffi-verify` instead drives the C ABI
 `blasx_dgemm_async`→`blasx_dtrsm_async` chain) against the safe path,
 bit-for-bit. `header` prints (or writes with `--out`) the generated C
 header that ships as include/blasx.h.
+
+Fault tolerance (serve): `--chaos` arms the default chaos schedule
+(kill the last device early, transient kernel/H2D failures on dev 0 —
+seeded via `--seed`); `--faults SPEC` installs an explicit schedule in
+the BLASX_FAULTS grammar. Under either, jobs migrate off lost devices
+and results must STILL verify bit-for-bit (combine with `--verify`).
+`--deadline-ms N` reaps jobs that overrun N ms; `--max-inflight` /
+`--tenant-quota` bound admission (rejected calls fail fast with a
+backpressure error). The stress report then includes per-tenant
+rejected/retried/degraded/migrated counters.
 
 Observability (run/serve): `--trace-out FILE` enables the span
 recorder and writes a Chrome trace-event JSON (open in Perfetto or
@@ -353,14 +365,48 @@ fn cmd_serve(args: &Args) -> i32 {
     let verify = args.get("verify").is_some();
     let trace_out = args.get("trace-out").map(str::to_string);
     let metrics_out = args.get("metrics-out").map(str::to_string);
-    let ctx = api::Context::new(devices)
+    let mut ctx = api::Context::new(devices)
         .with_tile(t)
         .with_kernel_threads(args.get_usize("kernel-threads", 1));
+    // Fault-tolerance knobs: an explicit schedule beats the default
+    // chaos plan; both install at runtime boot.
+    let plan = if let Some(spec) = args.get("faults") {
+        match crate::fault::FaultPlan::parse(spec) {
+            Ok(p) => Some(p),
+            Err(e) => {
+                eprintln!("serve: bad --faults schedule: {e}");
+                return 2;
+            }
+        }
+    } else if args.get("chaos").is_some() {
+        Some(crate::fault::FaultPlan::chaos_default(
+            devices,
+            args.get_usize("seed", 7) as u64,
+        ))
+    } else {
+        None
+    };
+    let chaos = plan.is_some();
+    if let Some(p) = plan {
+        ctx = ctx.with_fault_plan(Some(p));
+    }
+    if let Some(ms) = args.get("deadline-ms").and_then(|v| v.parse().ok()) {
+        ctx = ctx.with_deadline_ms(Some(ms));
+    }
+    if let Some(cap) = args.get("max-inflight").and_then(|v| v.parse().ok()) {
+        ctx = ctx.with_admit_capacity(cap);
+    }
+    if let Some(q) = args.get("tenant-quota").and_then(|v| v.parse().ok()) {
+        ctx = ctx.with_tenant_quota(q);
+    }
     if trace_out.is_some() {
         ctx.set_tracing(true);
     }
 
-    println!("SERVE clients={clients} jobs={jobs} DGEMM N={n} T={t} devices={devices}");
+    println!(
+        "SERVE clients={clients} jobs={jobs} DGEMM N={n} T={t} devices={devices}{}",
+        if chaos { " [chaos armed]" } else { "" }
+    );
 
     // Warm the runtime (boot + first-touch) outside the timed window.
     {
@@ -510,6 +556,30 @@ fn cmd_serve(args: &Args) -> i32 {
                     q(o, "end_to_end_ms", "p95"),
                     q(o, "end_to_end_ms", "p99"),
                 );
+            }
+            // Fault-tolerance ledger: only printed when something
+            // actually happened (quiet runs stay quiet).
+            let n = |o: &Json, field: &str| o.get(field).and_then(Json::as_usize).unwrap_or(0);
+            let eventful: Vec<_> = tenants
+                .iter()
+                .filter(|(_, o)| {
+                    n(o, "failed") + n(o, "rejected") + n(o, "retried") + n(o, "degraded")
+                        + n(o, "migrated")
+                        > 0
+                })
+                .collect();
+            if !eventful.is_empty() {
+                println!("  faults: tenant failed rejected retried degraded migrated");
+                for (tenant, o) in eventful {
+                    println!(
+                        "    t{tenant} {} {} {} {} {}",
+                        n(o, "failed"),
+                        n(o, "rejected"),
+                        n(o, "retried"),
+                        n(o, "degraded"),
+                        n(o, "migrated"),
+                    );
+                }
             }
         }
     }
@@ -1026,6 +1096,24 @@ mod tests {
             "serve", "--clients", "3", "--jobs", "2", "--n", "64", "--t", "32", "--verify",
         ]));
         assert_eq!(rc, 0);
+    }
+
+    #[test]
+    fn serve_chaos_smoke() {
+        // Chaos armed: the last device dies early, transient faults hit
+        // dev0 — every client's result must still verify against the
+        // host oracle (recovery is correctness-preserving).
+        let rc = dispatch(&sv(&[
+            "serve", "--clients", "2", "--jobs", "2", "--n", "96", "--t", "32", "--devices",
+            "2", "--chaos", "--verify",
+        ]));
+        assert_eq!(rc, 0);
+    }
+
+    #[test]
+    fn serve_rejects_bad_faults_spec() {
+        let rc = dispatch(&sv(&["serve", "--faults", "explode@dev0:op1"]));
+        assert_eq!(rc, 2);
     }
 
     #[test]

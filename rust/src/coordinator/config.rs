@@ -1,5 +1,6 @@
 //! Runtime configuration for a BLASX run.
 
+use crate::fault::FaultPlan;
 use crate::mem::AllocStrategy;
 
 /// Which scheduling policy drives the run (BLASX or a baseline
@@ -105,6 +106,21 @@ pub struct RunConfig {
     /// every engine layer. Purely observational — never branches
     /// execution.
     pub routine: &'static str,
+    /// Deterministic fault-injection schedule installed at runtime
+    /// boot (`None` = consult `BLASX_FAULTS`, which is itself usually
+    /// unset — the injector stays disarmed and costs one relaxed load
+    /// per probe).
+    pub fault_plan: Option<FaultPlan>,
+    /// Per-job wall-clock deadline in milliseconds (None = unbounded).
+    /// Checked cooperatively at round boundaries; an expired job fails
+    /// with `Error::DeadlineExceeded` without disturbing other tenants.
+    pub deadline_ms: Option<u64>,
+    /// Admission bound: jobs refused with `Error::Backpressure` while
+    /// this many are already in flight.
+    pub admit_capacity: usize,
+    /// Per-tenant in-flight quota, enforced at admission against the
+    /// fairness ledger's tenant column.
+    pub tenant_quota: usize,
 }
 
 impl Default for RunConfig {
@@ -123,6 +139,10 @@ impl Default for RunConfig {
             k_chunk: 4,
             jitter: 0.05,
             routine: "l3",
+            fault_plan: None,
+            deadline_ms: None,
+            admit_capacity: 256,
+            tenant_quota: 64,
         }
     }
 }
@@ -176,5 +196,8 @@ mod tests {
         assert!(c.rs_capacity >= c.n_streams);
         assert_eq!(c.worker_threads, 1, "kernels single-threaded unless asked");
         assert_eq!(RunConfig::paper().t, 1024);
+        assert!(c.fault_plan.is_none(), "no chaos unless asked");
+        assert!(c.deadline_ms.is_none(), "jobs unbounded unless asked");
+        assert!(c.admit_capacity >= c.tenant_quota, "one tenant can't starve the table alone");
     }
 }

@@ -15,5 +15,5 @@ pub mod sim_engine;
 pub use config::{Backend, Policy, RunConfig};
 pub use dispatch::{gemm_batch_workload, run_sim, square_workload, Workload};
 pub use keymap::KeyMap;
-pub use real_engine::{run_real, run_real_batch, JobStats, Mats, RealReport};
+pub use real_engine::{run_real, run_real_batch, FaultStats, JobStats, Mats, RealReport};
 pub use sim_engine::{simulate, SimEngine, SimReport};

@@ -43,6 +43,7 @@ use super::config::{Backend, RunConfig};
 use crate::api::Scalar;
 use crate::cache::{CacheStats, Source, TileCacheSet};
 use crate::error::{Error, Result};
+use crate::fault::{FaultAction, FaultPlan, Injector, OpKind};
 use crate::hostblas;
 use crate::mem::{AllocStrategy, Offset};
 use crate::queue::MsQueue;
@@ -53,7 +54,7 @@ use crate::tile::{HostMat, MatId, TileKey};
 use crate::trace::{Recorder, SpanKind};
 use crate::util::once::OnceCell;
 use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
@@ -162,6 +163,20 @@ pub(crate) struct EngineCore {
     /// the core because spans are per *device worker*, which is a
     /// core-level concept — jobs come and go.
     pub(crate) rec: Recorder,
+    /// Fault-injection plane (deterministic chaos). Disarmed — one
+    /// relaxed load per probe — unless a plan is installed at boot
+    /// (`RunConfig::fault_plan` / `BLASX_FAULTS`).
+    pub(crate) faults: Injector,
+    /// Devices lost to a fault. A dead device schedules nothing, its
+    /// stations drain back to the job queues (migration), and its
+    /// cache entries were surgically invalidated at kill time (peer
+    /// replicas and host master copies stay valid).
+    dead: Vec<AtomicBool>,
+    /// Jobs currently runnable on the resident runtime (maintained by
+    /// its scheduler; 0 under the one-shot engine). The k-chunk
+    /// splitter consults this to bound per-round step bursts when the
+    /// admission table is contended.
+    pub(crate) runnable_jobs: AtomicUsize,
 }
 
 impl EngineCore {
@@ -173,7 +188,7 @@ impl EngineCore {
         let peers: Vec<Vec<usize>> =
             (0..n_devices).map(|d| (0..n_devices).filter(|&x| x != d).collect()).collect();
         let capacities = vec![arena_bytes; n_devices];
-        EngineCore {
+        let core = EngineCore {
             caches: Mutex::new(TileCacheSet::new(&capacities, peers.clone(), alloc)),
             arenas: (0..n_devices).map(|_| Arena::new(arena_bytes)).collect(),
             capacities,
@@ -183,7 +198,45 @@ impl EngineCore {
             work_cv: Condvar::new(),
             executor: OnceCell::new(),
             rec: Recorder::new(n_devices),
+            faults: Injector::new(n_devices),
+            dead: (0..n_devices).map(|_| AtomicBool::new(false)).collect(),
+            runnable_jobs: AtomicUsize::new(0),
+        };
+        // Environment fallback (`BLASX_FAULTS`) arms both execution
+        // modes; the resident runtime overrides with the config plan
+        // at boot when one is set.
+        if let Some(plan) = FaultPlan::from_env() {
+            core.faults.install(plan);
         }
+        core
+    }
+
+    /// Is `dev` lost? (Relaxed: a stale `false` just means one more
+    /// round takes the error path before observing the kill.)
+    pub(crate) fn is_dead(&self, dev: usize) -> bool {
+        self.dead[dev].load(Ordering::Relaxed)
+    }
+
+    /// Devices still alive.
+    pub(crate) fn alive_count(&self) -> usize {
+        self.dead.iter().filter(|d| !d.load(Ordering::Relaxed)).count()
+    }
+
+    /// Mark `dev` lost: surgically invalidate its cache entries (host
+    /// master copies and peer replicas stay valid — NOT a global
+    /// purge) and wake every worker so migration starts immediately.
+    /// Returns `true` for the call that performed the kill.
+    ///
+    /// Lock discipline: callers must not hold the caches lock.
+    pub(crate) fn kill_device(&self, dev: usize) -> bool {
+        let first = !self.dead[dev].swap(true, Ordering::SeqCst);
+        if first {
+            let t0 = self.rec.now();
+            self.lock_caches().evict_device(dev);
+            self.rec.record(dev, SpanKind::Fault, t0, dev as f64, 0);
+            self.notify_work();
+        }
+        first
     }
 
     /// The shared PJRT tile executor (lazy; a failed init — e.g. a
@@ -355,6 +408,17 @@ pub(crate) struct JobState<'m, T: Scalar> {
     steals: Vec<AtomicUsize>,
     tasks_done: Vec<AtomicUsize>,
     transfers: TransferCounters,
+    /// Per-task resume cursor for the k-chunk splitter: index of the
+    /// first unexecuted step (nonzero only while a split task waits
+    /// to resume; a task is owned by one worker at a time, so plain
+    /// relaxed loads/stores suffice).
+    resume: Vec<AtomicUsize>,
+    /// Ops retried after transient faults or arena pressure.
+    retried: AtomicUsize,
+    /// Operands served through the host-path fallback after arena OOM.
+    degraded: AtomicUsize,
+    /// Tasks migrated off dead devices (re-queued or drained).
+    migrated: AtomicUsize,
     /// Total chain flops of the job (the multi-tenant scheduler's
     /// fair-share weight; cached at construction).
     total_flops: f64,
@@ -393,6 +457,10 @@ impl<'m, T: Scalar> JobState<'m, T> {
             steals: (0..n_devices).map(|_| AtomicUsize::new(0)).collect(),
             tasks_done: (0..n_devices).map(|_| AtomicUsize::new(0)).collect(),
             transfers: TransferCounters::new(),
+            resume: ts.tasks.iter().map(|_| AtomicUsize::new(0)).collect(),
+            retried: AtomicUsize::new(0),
+            degraded: AtomicUsize::new(0),
+            migrated: AtomicUsize::new(0),
             total_flops: ts.total_flops(),
             trace_id: AtomicU64::new(0),
             cache_baseline: Mutex::new(Vec::new()),
@@ -485,6 +553,35 @@ impl<'m, T: Scalar> JobState<'m, T> {
     pub(crate) fn done(&self) -> bool {
         self.remaining.load(Ordering::SeqCst) == 0
     }
+
+    /// Fault-recovery counters so far — live, like [`JobState::stats`]
+    /// (the metrics registry reads them at retirement).
+    pub(crate) fn fault_stats(&self) -> FaultStats {
+        FaultStats {
+            retried: self.retried.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
+            migrated: self.migrated.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Fault-recovery counters of one job: how much of the fault-tolerance
+/// machinery it exercised. All zero on a healthy run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Operations retried after transient faults or arena pressure.
+    pub retried: usize,
+    /// Operands served through the host-path OOM fallback.
+    pub degraded: usize,
+    /// Tasks migrated off dead devices (re-queued or drained).
+    pub migrated: usize,
+}
+
+impl FaultStats {
+    /// Did any recovery path fire?
+    pub fn any(&self) -> bool {
+        self.retried + self.degraded + self.migrated > 0
+    }
 }
 
 /// Run a task set over `mats` with `n_devices` worker threads.
@@ -571,6 +668,44 @@ pub struct RealReport {
 /// resident runtime's multi-job loop uses the same backstop.
 pub(crate) const PARK_TIMEOUT: Duration = Duration::from_millis(1);
 
+/// Bounded attempts for transient-fault retries and arena-OOM
+/// eviction-retry before escalating: kernels escalate to a device
+/// loss, allocations to the host-path fallback.
+const RETRY_MAX: u32 = 3;
+
+/// How long a wedged worker stalls before resuming (the injection
+/// plane's `wedge` fault — long enough that siblings visibly absorb
+/// the load, short enough for tests).
+const WEDGE_STALL: Duration = Duration::from_millis(20);
+
+/// Where a task operand lives for the duration of its kernels: a
+/// pinned arena block (the normal, cached path) or a private host-side
+/// copy (the arena-OOM degradation path — correctness preserved,
+/// locality lost for this operand only).
+enum Operand<T: Scalar> {
+    Arena(Offset),
+    Host(Vec<T>),
+}
+
+impl<T: Scalar> Operand<T> {
+    /// The operand's elements (arena block or host copy).
+    fn slice<'s>(&'s self, core: &'s EngineCore, dev: usize, n: usize) -> &'s [T] {
+        match self {
+            Operand::Arena(off) => &*core.arenas[dev].slice::<T>(*off, n),
+            Operand::Host(v) => &v[..n],
+        }
+    }
+}
+
+/// Outcome of one [`run_task`] invocation.
+enum TaskRun {
+    /// Every remaining step executed; the task retired.
+    Done { flops: f64 },
+    /// A k-chunk executed and the task re-queued (contended table);
+    /// `flops` is the chunk's share of the task total.
+    Split { flops: f64 },
+}
+
 /// Outcome of one scheduler round (refill → bind → execute → sync) of
 /// one job on one device. The one-shot [`worker_loop`] reacts by
 /// parking or exiting; the resident runtime's multi-job worker uses it
@@ -606,6 +741,26 @@ pub(crate) fn worker_round<T: Scalar>(
         return Round::Failed;
     }
     let jid = job.trace_id.load(Ordering::Relaxed);
+    if core.is_dead(dev) {
+        // A dead device schedules nothing; its station drains back to
+        // the shared queue so survivors pick the work up (the steal
+        // path generalized to migration).
+        let moved = drain_station(dev, job);
+        if moved > 0 {
+            job.migrated.fetch_add(moved, Ordering::Relaxed);
+            core.rec.record(dev, SpanKind::Migrate, core.rec.now(), moved as f64, jid);
+            core.notify_work();
+        }
+        if job.done() {
+            return Round::Finished;
+        }
+        if core.alive_count() == 0 {
+            job.fail(Error::Degraded("all devices lost".into()));
+            core.notify_work();
+            return Round::Failed;
+        }
+        return Round::Idle;
+    }
     let round_t0 = core.rec.now();
     // ---- refill the reservation station (lines 11–15)
     let mut bound: Vec<usize> = Vec::new();
@@ -665,31 +820,70 @@ pub(crate) fn worker_round<T: Scalar>(
     // ---- the round: solve the bound tasks (lines 18–25)
     let mut flops = 0.0;
     let mut releases: Vec<TileKey> = Vec::new();
-    for tid in bound {
-        if let Err(e) = run_task(dev, core, job, tid, &mut releases) {
-            job.fail(e);
-            // Release what this round had pinned (the failed task's C
-            // block stays pinned — the runtime purges after a failed
-            // job retires).
-            let mut caches = core.lock_caches();
-            for key in releases.drain(..) {
-                caches.release(dev, &key);
-            }
-            drop(caches);
-            core.notify_work();
-            return Round::Failed;
-        }
-        flops += job.tasks[tid].flops;
-        job.tasks_done[dev].fetch_add(1, Ordering::Relaxed);
-        if job.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
-            // last task: wake parked siblings so they observe
-            // completion and exit promptly
-            core.notify_work();
-        }
-        if let Some(succ) = job.tasks[tid].successor {
-            if job.deps[succ].fetch_sub(1, Ordering::SeqCst) == 1 {
-                job.queue.enqueue(succ);
+    let mut bound = bound.into_iter();
+    while let Some(tid) = bound.next() {
+        match run_task(dev, core, job, tid, &mut releases) {
+            Err(e) => {
+                // Unpin the round's readers on either error path
+                // (run_task already unpinned the failed task's C
+                // block).
+                let mut caches = core.lock_caches();
+                for key in releases.drain(..) {
+                    caches.release(dev, &key);
+                }
+                drop(caches);
+                if core.is_dead(dev) {
+                    // The device was lost mid-task. Nothing of the
+                    // task escaped to host RAM (C writes back only at
+                    // chunk/task end), so re-admitting it — and
+                    // everything else this round had bound — onto the
+                    // surviving devices is bit-for-bit safe. The job
+                    // fails only if no device survives.
+                    if core.alive_count() == 0 {
+                        job.fail(Error::Degraded(format!(
+                            "device {dev} lost and no devices survive: {e}"
+                        )));
+                        core.notify_work();
+                        return Round::Failed;
+                    }
+                    let migrate_t0 = core.rec.now();
+                    let mut moved = 1;
+                    job.queue.enqueue(tid);
+                    for rest in bound.by_ref() {
+                        job.queue.enqueue(rest);
+                        moved += 1;
+                    }
+                    moved += drain_station(dev, job);
+                    job.migrated.fetch_add(moved, Ordering::Relaxed);
+                    core.rec.record(dev, SpanKind::Migrate, migrate_t0, moved as f64, jid);
+                    core.notify_work();
+                    return Round::Idle;
+                }
+                job.fail(e);
                 core.notify_work();
+                return Round::Failed;
+            }
+            Ok(TaskRun::Split { flops: f }) => {
+                // Partial k-chunk: the task went back to the queue
+                // with its resume cursor advanced — charge only the
+                // chunk's share and leave the dependency counters
+                // untouched.
+                flops += f;
+            }
+            Ok(TaskRun::Done { flops: f }) => {
+                flops += f;
+                job.tasks_done[dev].fetch_add(1, Ordering::Relaxed);
+                if job.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+                    // last task: wake parked siblings so they observe
+                    // completion and exit promptly
+                    core.notify_work();
+                }
+                if let Some(succ) = job.tasks[tid].successor {
+                    if job.deps[succ].fetch_sub(1, Ordering::SeqCst) == 1 {
+                        job.queue.enqueue(succ);
+                        core.notify_work();
+                    }
+                }
             }
         }
     }
@@ -720,7 +914,10 @@ pub(crate) fn worker_loop<T: Scalar>(dev: usize, core: &EngineCore, job: &JobSta
                 // retry stealing station-held surplus.
                 let park_t0 = core.rec.now();
                 core.park_for_work(Some(PARK_TIMEOUT), || {
-                    job.queue.is_empty() && job.remaining.load(Ordering::SeqCst) != 0
+                    // A dead device parks even with a non-empty queue:
+                    // that work belongs to the survivors now.
+                    (core.is_dead(dev) || job.queue.is_empty())
+                        && job.remaining.load(Ordering::SeqCst) != 0
                 });
                 core.rec.record(dev, SpanKind::Park, park_t0, 0.0, 0);
             }
@@ -728,14 +925,36 @@ pub(crate) fn worker_loop<T: Scalar>(dev: usize, core: &EngineCore, job: &JobSta
     }
 }
 
+/// Drain every slot of this job's reservation station on `dev` back to
+/// the shared queue (device-loss migration). Returns how many moved.
+fn drain_station<T: Scalar>(dev: usize, job: &JobState<'_, T>) -> usize {
+    let mut rs = job.stations[dev].lock().unwrap_or_else(|e| e.into_inner());
+    let mut n = 0;
+    while let Some(slot) = rs.steal_worst() {
+        job.queue.enqueue(slot.task);
+        n += 1;
+    }
+    n
+}
+
 /// Solve one task: acquire C, stream the k-steps, write C back.
+///
+/// Under a contended job table the k-chunk splitter may stop early —
+/// write the partial accumulator back, re-queue the task with its
+/// resume cursor advanced, and return [`TaskRun::Split`] — so long
+/// step chains yield the device between chunks instead of holding it
+/// for the whole k-loop. Arena pressure and injected transfer faults
+/// degrade to retries and host-path fallbacks; the only error this
+/// returns on a *surviving* device is a genuine kernel failure, and
+/// the C pin is released on every path (leaking it is what used to
+/// force a global cache purge after any failed job).
 fn run_task<T: Scalar>(
     dev: usize,
     core: &EngineCore,
     job: &JobState<'_, T>,
     tid: usize,
     releases: &mut Vec<TileKey>,
-) -> Result<()> {
+) -> Result<TaskRun> {
     let t = job.cfg.t;
     let tile_elems = t * t;
     let tile_bytes = block_bytes::<T>(t);
@@ -744,12 +963,32 @@ fn run_task<T: Scalar>(
     let ckey = cmat.tile_key(task.ci, task.cj);
     let jid = job.trace_id.load(Ordering::Relaxed);
 
-    // -- C accumulator block
-    let c_off = {
-        let mut caches = core.lock_caches();
-        let acq = {
+    // k-chunk window. Resumable only for full-mask tasks: a triangle-
+    // masked write-back cannot round-trip the unmasked half of the
+    // accumulator through host RAM bit-for-bit.
+    let total = task.steps.len();
+    let start = job.resume[tid].load(Ordering::Relaxed);
+    let splittable = matches!(task.mask, crate::task::WriteMask::Full);
+    let contended = core.runnable_jobs.load(Ordering::Relaxed) > 1;
+    let end = if splittable && contended {
+        total.min(start + job.cfg.k_chunk.max(1))
+    } else {
+        total
+    };
+    let resumed = start > 0;
+
+    // -- C accumulator block: arena if the cache can hold it, private
+    // host scratch if arena pressure persists (the OOM degradation
+    // ladder — never an error).
+    if core.faults.tick(dev, OpKind::Alloc) {
+        core.lock_caches().force_alloc_failure(dev, 1);
+    }
+    let mut c_loc: Operand<T> = {
+        let mut attempt = 0u32;
+        loop {
+            let mut caches = core.lock_caches();
             let mut acq = caches.acquire_output(dev, ckey, tile_bytes);
-            if acq.is_none() {
+            if acq.is_none() && attempt == 0 {
                 // Cache pressure: this is the paper's "sync & retry" —
                 // kernels already issued this round are complete (real
                 // mode is synchronous), so the round's readers can be
@@ -760,74 +999,143 @@ fn run_task<T: Scalar>(
                 acq = caches.acquire_output(dev, ckey, tile_bytes);
             }
             match acq {
-                Some(a) => a,
+                Some(a) => break Operand::Arena(a.offset),
+                None if attempt < RETRY_MAX => {
+                    // Bounded backoff: peer workers release readers at
+                    // their round sync points; give them a moment.
+                    drop(caches);
+                    attempt += 1;
+                    job.retried.fetch_add(1, Ordering::Relaxed);
+                    core.rec.record(dev, SpanKind::Retry, core.rec.now(), attempt as f64, jid);
+                    std::thread::sleep(Duration::from_micros(50 * attempt as u64));
+                }
                 None => {
-                    return Err(Error::OutOfDeviceMemory {
-                        device: dev,
-                        need: tile_bytes,
-                        capacity: caches.resident(dev) * tile_bytes,
-                    });
+                    drop(caches);
+                    job.degraded.fetch_add(1, Ordering::Relaxed);
+                    break Operand::Host(vec![T::zero(); tile_elems]);
                 }
             }
+        }
+    };
+    {
+        // Initialize the accumulator (under the cache lock, like every
+        // arena-block mutation): zero-pad edge tiles, pre-load C when
+        // the task reads it — or when resuming a split chunk, whose
+        // partial accumulator round-trips through host RAM.
+        let preload = task.reads_c || resumed;
+        let caches = core.lock_caches();
+        let cbuf: &mut [T] = match &mut c_loc {
+            Operand::Arena(off) => core.arenas[dev].slice::<T>(*off, tile_elems),
+            Operand::Host(v) => v,
         };
-        let cbuf = core.arenas[dev].slice::<T>(acq.offset, tile_elems);
         // zero-pad only edge tiles (interior tiles are fully overwritten
         // by read_tile / the kernels — the memset was 15% of small-tile
         // acquire cost, EXPERIMENTS.md §Perf)
         let (h, w) = cmat.grid.tile_dims(task.ci, task.cj);
-        if h < t || w < t || !task.reads_c {
+        if h < t || w < t || !preload {
             let pack_t0 = core.rec.now();
             for x in cbuf.iter_mut() {
                 *x = T::zero();
             }
             core.rec.record(dev, SpanKind::Pack, pack_t0, 0.0, jid);
         }
-        if task.reads_c {
+        if preload {
             let h2d_t0 = core.rec.now();
             cmat.read_tile(task.ci, task.cj, cbuf, t);
             job.transfers.count_host(MatId::C);
             core.rec.record(dev, SpanKind::H2d, h2d_t0, tile_bytes as f64, jid);
         }
-        acq.offset
-    };
-
-    // -- k-steps
-    for step in &task.steps {
-        let mut a_off: Option<Offset> = None;
-        let mut b_off: Option<Offset> = None;
-        // Readers acquired for THIS step must survive any pressure
-        // flush until its kernel has run.
-        let keep_from = releases.len();
-        for (slot, tile) in [(0, step.a), (1, step.b)] {
-            let Some(tile) = tile else { continue };
-            let off = acquire_input(dev, core, job, tile, releases, keep_from)?;
-            if slot == 0 {
-                a_off = Some(off);
-            } else {
-                b_off = Some(off);
-            }
-        }
-        exec_step(dev, core, job, step, a_off, b_off, c_off)?;
+        drop(caches);
     }
 
-    // -- write-back (M → I): store the masked extent to host RAM
+    // -- k-steps of this chunk
+    let step_res: Result<()> = (|| {
+        for step in &task.steps[start..end] {
+            let mut a_op: Option<Operand<T>> = None;
+            let mut b_op: Option<Operand<T>> = None;
+            // Readers acquired for THIS step must survive any pressure
+            // flush until its kernel has run.
+            let keep_from = releases.len();
+            for (slot, tile) in [(0, step.a), (1, step.b)] {
+                let Some(tile) = tile else { continue };
+                let op = acquire_input(dev, core, job, tile, releases, keep_from)?;
+                if slot == 0 {
+                    a_op = Some(op);
+                } else {
+                    b_op = Some(op);
+                }
+            }
+            let a = a_op.as_ref().map(|o| o.slice(core, dev, tile_elems));
+            let b = b_op.as_ref().map(|o| o.slice(core, dev, tile_elems));
+            let c: &mut [T] = match &mut c_loc {
+                Operand::Arena(off) => core.arenas[dev].slice::<T>(*off, tile_elems),
+                Operand::Host(v) => v,
+            };
+            exec_step(dev, core, job, step, a, b, c)?;
+        }
+        Ok(())
+    })();
+    if let Err(e) = step_res {
+        // Unpin and discard the C block on the way out: no bytes
+        // reached host RAM, so the task can re-run from scratch.
+        if let Operand::Arena(_) = c_loc {
+            let mut caches = core.lock_caches();
+            caches.writeback(dev, &ckey);
+            caches.release(dev, &ckey);
+        }
+        return Err(e);
+    }
+
+    // -- write-back (M → I): store the masked extent to host RAM. A
+    // split chunk writes back too; the resuming worker re-reads the
+    // exact bytes.
     {
         let d2h_t0 = core.rec.now();
         let caches = core.lock_caches();
-        let cbuf = core.arenas[dev].slice::<T>(c_off, tile_elems);
+        let cbuf: &[T] = match &c_loc {
+            Operand::Arena(off) => &*core.arenas[dev].slice::<T>(*off, tile_elems),
+            Operand::Host(v) => v,
+        };
         write_back_masked(cmat, task, cbuf, t);
         drop(caches);
+        let mut attempt = 0u32;
+        while attempt < RETRY_MAX && core.faults.tick(dev, OpKind::D2h) {
+            // transient write-back fault: redo the store (idempotent)
+            attempt += 1;
+            job.retried.fetch_add(1, Ordering::Relaxed);
+            core.rec.record(dev, SpanKind::Retry, d2h_t0, attempt as f64, jid);
+            let caches = core.lock_caches();
+            let cbuf: &[T] = match &c_loc {
+                Operand::Arena(off) => &*core.arenas[dev].slice::<T>(*off, tile_elems),
+                Operand::Host(v) => v,
+            };
+            write_back_masked(cmat, task, cbuf, t);
+            drop(caches);
+        }
         core.rec.record(dev, SpanKind::D2h, d2h_t0, tile_bytes as f64, jid);
     }
-    let mut caches = core.lock_caches();
-    caches.writeback(dev, &ckey);
-    caches.release(dev, &ckey);
-    Ok(())
+    if let Operand::Arena(_) = c_loc {
+        let mut caches = core.lock_caches();
+        caches.writeback(dev, &ckey);
+        caches.release(dev, &ckey);
+    }
+    let frac = if total == 0 { 1.0 } else { (end - start) as f64 / total as f64 };
+    let flops = task.flops * frac;
+    if end < total {
+        job.resume[tid].store(end, Ordering::Relaxed);
+        job.queue.enqueue(tid);
+        core.notify_work();
+        return Ok(TaskRun::Split { flops });
+    }
+    Ok(TaskRun::Done { flops })
 }
 
-/// Acquire an input tile into the device arena (L1 hit, peer copy, or
-/// host copy), returning its offset. The reader reference is pushed to
-/// `releases` for the round's sync point.
+/// Acquire an input tile for a step: normally a pinned arena block (L1
+/// hit, peer copy, or host copy — the reader reference is pushed to
+/// `releases` for the round's sync point), or a private host-side copy
+/// if the arena cannot hold it even after bounded eviction retries
+/// (the OOM degradation ladder — no pin, no cache entry, locality lost
+/// for this step only, correctness untouched).
 fn acquire_input<T: Scalar>(
     dev: usize,
     core: &EngineCore,
@@ -835,16 +1143,24 @@ fn acquire_input<T: Scalar>(
     tile: TileRef,
     releases: &mut Vec<TileKey>,
     keep_from: usize,
-) -> Result<Offset> {
+) -> Result<Operand<T>> {
     let t = job.cfg.t;
     let tile_elems = t * t;
     let tile_bytes = block_bytes::<T>(t);
     let mat = job.mats[tile.p].of(tile.mat);
     let key = job.mats[tile.p].key(tile);
-    let mut caches = core.lock_caches();
-    let acq = {
+    let jid = job.trace_id.load(Ordering::Relaxed);
+    if core.faults.tick(dev, OpKind::Alloc) {
+        core.lock_caches().force_alloc_failure(dev, 1);
+    }
+    let mut attempt = 0u32;
+    // The guard is held through the source handling below: peer copies
+    // read a source block that stays pinned only while the directory
+    // cannot shift under us.
+    let (acq, _caches) = loop {
+        let mut caches = core.lock_caches();
         let mut acq = caches.acquire(dev, key, tile_bytes);
-        if acq.is_none() {
+        if acq.is_none() && attempt == 0 {
             // sync & retry (see the C-block acquire above): release
             // readers of *prior* steps only — the current step's other
             // operand must stay pinned until its kernel runs.
@@ -854,18 +1170,36 @@ fn acquire_input<T: Scalar>(
             acq = caches.acquire(dev, key, tile_bytes);
         }
         match acq {
-            Some(a) => a,
+            Some(a) => break (a, caches),
+            None if attempt < RETRY_MAX => {
+                drop(caches);
+                attempt += 1;
+                job.retried.fetch_add(1, Ordering::Relaxed);
+                core.rec.record(dev, SpanKind::Retry, core.rec.now(), attempt as f64, jid);
+                std::thread::sleep(Duration::from_micros(50 * attempt as u64));
+            }
             None => {
-                return Err(Error::OutOfDeviceMemory {
-                    device: dev,
-                    need: tile_bytes,
-                    capacity: caches.resident(dev) * tile_bytes,
-                })
+                // Host-path fallback: a private copy, padded exactly
+                // as the cached path pads (zero edges, identity
+                // diagonal).
+                drop(caches);
+                job.degraded.fetch_add(1, Ordering::Relaxed);
+                let h2d_t0 = core.rec.now();
+                let mut v = vec![T::zero(); tile_elems];
+                mat.read_tile(tile.ti, tile.tj, &mut v, t);
+                if tile.mat != MatId::C && tile.ti == tile.tj {
+                    let (h, _) = mat.grid.tile_dims(tile.ti, tile.tj);
+                    for j in h..t {
+                        v[j * t + j] = T::one();
+                    }
+                }
+                job.transfers.count_host(tile.mat);
+                core.rec.record(dev, SpanKind::H2d, h2d_t0, tile_bytes as f64, jid);
+                return Ok(Operand::Host(v));
             }
         }
     };
     releases.push(key);
-    let jid = job.trace_id.load(Ordering::Relaxed);
     match acq.source {
         Source::L1 => {
             job.transfers.l1_hits.fetch_add(1, Ordering::Relaxed);
@@ -877,6 +1211,14 @@ fn acquire_input<T: Scalar>(
             let dst = core.arenas[dev].slice::<T>(acq.offset, tile_elems);
             let srcbuf = core.arenas[src].slice::<T>(src_offset, tile_elems);
             dst.copy_from_slice(srcbuf);
+            let mut xfer = 0u32;
+            while xfer < RETRY_MAX && core.faults.tick(dev, OpKind::P2p) {
+                // transient P2P fault: redo the copy (idempotent)
+                xfer += 1;
+                job.retried.fetch_add(1, Ordering::Relaxed);
+                core.rec.record(dev, SpanKind::Retry, p2p_t0, xfer as f64, jid);
+                dst.copy_from_slice(srcbuf);
+            }
             job.transfers.peer_copies.fetch_add(1, Ordering::Relaxed);
             core.rec.record(dev, SpanKind::P2p, p2p_t0, tile_bytes as f64, jid);
         }
@@ -892,6 +1234,14 @@ fn acquire_input<T: Scalar>(
                 }
             }
             mat.read_tile(tile.ti, tile.tj, dst, t);
+            let mut xfer = 0u32;
+            while xfer < RETRY_MAX && core.faults.tick(dev, OpKind::H2d) {
+                // transient DMA fault: redo the read (idempotent)
+                xfer += 1;
+                job.retried.fetch_add(1, Ordering::Relaxed);
+                core.rec.record(dev, SpanKind::Retry, h2d_t0, xfer as f64, jid);
+                mat.read_tile(tile.ti, tile.tj, dst, t);
+            }
             job.transfers.count_host(tile.mat);
             core.rec.record(dev, SpanKind::H2d, h2d_t0, tile_bytes as f64, jid);
         }
@@ -915,7 +1265,7 @@ fn acquire_input<T: Scalar>(
             core.rec.record(dev, SpanKind::Pack, pack_t0, 0.0, jid);
         }
     }
-    Ok(acq.offset)
+    Ok(Operand::Arena(acq.offset))
 }
 
 /// Write the accumulator back to the host C tile honouring the task's
@@ -946,21 +1296,21 @@ fn write_back_masked<T: Scalar>(cmat: &HostMat<T>, task: &Task, cbuf: &[T], t: u
     }
 }
 
-/// Execute one step's kernel on arena tiles (hostblas or PJRT).
+/// Execute one step's kernel on resolved operand slices (hostblas or
+/// PJRT). The slices may live in the device arena (pinned blocks) or
+/// in host scratch (the OOM fallback) — the kernels cannot tell.
 fn exec_step<T: Scalar>(
     dev: usize,
     core: &EngineCore,
     job: &JobState<'_, T>,
     step: &Step,
-    a_off: Option<Offset>,
-    b_off: Option<Offset>,
-    c_off: Offset,
+    a: Option<&[T]>,
+    b: Option<&[T]>,
+    c: &mut [T],
 ) -> Result<()> {
     let t = job.cfg.t;
-    let tile_elems = t * t;
     let alpha = T::from_f64(step.alpha);
     let beta = T::from_f64(step.beta);
-    let c = core.arenas[dev].slice::<T>(c_off, tile_elems);
     let jid = job.trace_id.load(Ordering::Relaxed);
     let (m, n, k) = step.dims;
     // 2mnk is the GEMM-family flop count; for the triangular/symmetric
@@ -969,14 +1319,35 @@ fn exec_step<T: Scalar>(
     let step_flops = 2.0 * m as f64 * n as f64 * k.max(1) as f64;
     let kern_t0 = core.rec.now();
 
+    // Fault-injection probe: the kernel stream anchors kills and
+    // wedges. Transient kernel failures retry (bounded) and then
+    // escalate to a device loss — the caller's migration path takes
+    // it from there.
+    let mut attempt = 0u32;
+    loop {
+        match core.faults.tick_kernel(dev) {
+            FaultAction::None => break,
+            FaultAction::Wedge => {
+                core.rec.record(dev, SpanKind::Fault, kern_t0, dev as f64, jid);
+                std::thread::sleep(WEDGE_STALL);
+                break;
+            }
+            FaultAction::FailOp if attempt < RETRY_MAX => {
+                attempt += 1;
+                job.retried.fetch_add(1, Ordering::Relaxed);
+                core.rec.record(dev, SpanKind::Retry, kern_t0, attempt as f64, jid);
+            }
+            FaultAction::Kill | FaultAction::FailOp => {
+                core.kill_device(dev);
+                return Err(Error::Degraded(format!("device {dev} lost (injected fault)")));
+            }
+        }
+    }
+
     if job.cfg.backend == Backend::Pjrt {
         // One process-shared executor serves every concurrent tenant
         // (built lazily on the first PJRT step).
         let ex = core.tile_executor()?;
-        // SAFETY: a/b blocks are pinned for the round; kernels never
-        // write them. Slices alias no live &mut.
-        let a = a_off.map(|o| &*core.arenas[dev].slice::<T>(o, tile_elems));
-        let b = b_off.map(|o| &*core.arenas[dev].slice::<T>(o, tile_elems));
         let out = ex.run(&step.op.kernel_name(), t, a, b, c, alpha, beta);
         if out.is_ok() {
             core.rec.record(dev, SpanKind::Kernel, kern_t0, step_flops, jid);
@@ -991,8 +1362,6 @@ fn exec_step<T: Scalar>(
     // (paper §IV-C.2's "multithreaded BLAS kernel"); `gemm_mt` applies
     // its flop-based serial cutoff internally and runs its cells on the
     // persistent kernel pool, so per-thread pack scratch is reused.
-    let a = a_off.map(|o| &*core.arenas[dev].slice::<T>(o, tile_elems));
-    let b = b_off.map(|o| &*core.arenas[dev].slice::<T>(o, tile_elems));
     let wt = job.cfg.worker_threads.max(1);
     match step.op {
         TileOp::Gemm { ta, tb } => {

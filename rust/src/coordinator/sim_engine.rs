@@ -143,6 +143,12 @@ pub struct SimEngine<'a> {
     caches: TileCacheSet,
     topo: Topology,
     workers: Vec<Worker>,
+    /// Devices the config's fault plan kills — modeled as absent from
+    /// t=0 (the discrete-event engine has no mid-run recovery; the
+    /// real engine is where kills fire live). Never kicked, never
+    /// woken: the survivors absorb the whole workload, which is the
+    /// degraded-machine throughput the simulator should predict.
+    dead: Vec<bool>,
     /// CPU worker (consumes whole tasks) if enabled.
     cpu: Option<CpuWorker>,
     events: EventQueue<WakeEvent>,
@@ -197,6 +203,14 @@ impl<'a> SimEngine<'a> {
             .collect();
         let deps: Vec<usize> = ts.tasks.iter().map(|t| t.n_deps).collect();
         let queue: VecDeque<usize> = ts.heads.iter().copied().collect();
+        let mut dead: Vec<bool> = (0..n)
+            .map(|d| cfg.fault_plan.as_ref().is_some_and(|p| p.kills_device(d)))
+            .collect();
+        if dead.iter().all(|&x| x) {
+            // A plan that kills every device would stall the sim; model
+            // it as no machine change (the real engine fails the jobs).
+            dead.iter_mut().for_each(|x| *x = false);
+        }
         let cpu = if cfg.use_cpu && machine.cpu.is_some() {
             Some(CpuWorker { busy_until: 0.0, scheduled: false, tasks_done: 0, current: None })
         } else {
@@ -214,6 +228,7 @@ impl<'a> SimEngine<'a> {
             caches,
             topo,
             workers,
+            dead,
             cpu,
             events: EventQueue::new(),
             trace: Trace::new(),
@@ -223,8 +238,11 @@ impl<'a> SimEngine<'a> {
 
     /// Run to completion, returning the report.
     pub fn run(mut self) -> SimReport {
-        // Kick every worker at t=0.
+        // Kick every (surviving) worker at t=0.
         for d in 0..self.workers.len() {
+            if self.dead[d] {
+                continue;
+            }
             self.workers[d].scheduled = true;
             self.events.schedule(0.0, WakeEvent::Device(d));
         }
@@ -273,6 +291,9 @@ impl<'a> SimEngine<'a> {
     // device worker round (Alg. 1 lines 10–25)
 
     fn device_round(&mut self, d: usize, now: SimTime) {
+        if self.dead[d] {
+            return;
+        }
         self.workers[d].scheduled = false;
         // Progress accounting for the no-spin drain below: a round that
         // entered with pending releases/write-backs can always change
@@ -562,6 +583,9 @@ impl<'a> SimEngine<'a> {
     /// Wake any dormant workers (new tasks became ready).
     fn wake_idlers(&mut self, now: SimTime) {
         for d in 0..self.workers.len() {
+            if self.dead[d] {
+                continue;
+            }
             if self.workers[d].idle && !self.workers[d].scheduled {
                 self.workers[d].scheduled = true;
                 self.events.schedule(now, WakeEvent::Device(d));
@@ -646,6 +670,29 @@ mod tests {
     use crate::api::{Dtype, Routine};
     use crate::coordinator::dispatch::square_workload;
     use crate::sim::toy;
+
+    #[test]
+    fn fault_plan_kill_models_a_degraded_machine() {
+        use crate::fault::FaultPlan;
+        let machine = toy(3, 64 << 20);
+        let w = square_workload(Routine::Gemm, 512, 128, Dtype::F64);
+        let cfg = RunConfig { t: 128, ..Default::default() };
+        let healthy = simulate(&cfg, &machine, &w.ts, w.keymap.clone(), w.dtype);
+        let cfg_degraded = RunConfig {
+            t: 128,
+            fault_plan: Some(FaultPlan::parse("kill@dev2:op0").unwrap()),
+            ..Default::default()
+        };
+        let degraded = simulate(&cfg_degraded, &machine, &w.ts, w.keymap.clone(), w.dtype);
+        assert!(degraded.feasible);
+        assert_eq!(degraded.tasks_per_worker[2], 0, "killed device must execute nothing");
+        let total: usize = degraded.tasks_per_worker.iter().sum();
+        assert_eq!(total, w.ts.tasks.len(), "survivors absorb the whole workload");
+        assert!(
+            degraded.makespan > healthy.makespan,
+            "losing a device must not speed the machine up"
+        );
+    }
 
     #[test]
     #[should_panic(expected = "simulation stalled")]

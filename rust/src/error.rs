@@ -41,6 +41,25 @@ pub enum Error {
 
     /// I/O error (artifact files, trace export…).
     Io(std::io::Error),
+
+    /// The device set degraded below what the job needs (every device
+    /// faulted mid-run and no survivor can retire the remaining tasks).
+    Degraded(String),
+
+    /// The job's per-call deadline elapsed before it retired; the job
+    /// was aborted at a round boundary.
+    DeadlineExceeded {
+        /// The configured limit, in milliseconds.
+        limit_ms: u64,
+    },
+
+    /// The job was cancelled via `JobHandle::cancel` (cooperative,
+    /// honoured at the next round boundary).
+    Cancelled,
+
+    /// Admission refused the job: the runtime's in-flight bound or the
+    /// tenant's quota is full. Retry after in-flight jobs retire.
+    Backpressure(String),
 }
 
 impl fmt::Display for Error {
@@ -60,6 +79,12 @@ impl fmt::Display for Error {
             }
             Error::Internal(msg) => write!(f, "blasx internal error: {msg}"),
             Error::Io(e) => write!(f, "blasx io error: {e}"),
+            Error::Degraded(msg) => write!(f, "blasx degraded beyond recovery: {msg}"),
+            Error::DeadlineExceeded { limit_ms } => {
+                write!(f, "blasx job deadline exceeded ({limit_ms} ms)")
+            }
+            Error::Cancelled => write!(f, "blasx job cancelled"),
+            Error::Backpressure(msg) => write!(f, "blasx admission backpressure: {msg}"),
         }
     }
 }
@@ -104,6 +129,26 @@ mod tests {
         assert!(e.to_string().contains("#3"));
         let e = Error::MissingArtifact("gemm_nn_f64_256".into());
         assert!(e.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn fault_tolerance_errors_render_distinctly() {
+        let texts = [
+            Error::Degraded("all 2 devices lost".into()).to_string(),
+            Error::DeadlineExceeded { limit_ms: 250 }.to_string(),
+            Error::Cancelled.to_string(),
+            Error::Backpressure("tenant 3 at quota 8".into()).to_string(),
+        ];
+        assert!(texts[0].contains("degraded"));
+        assert!(texts[1].contains("deadline") && texts[1].contains("250"));
+        assert!(texts[2].contains("cancelled"));
+        assert!(texts[3].contains("backpressure") && texts[3].contains("quota"));
+        // each message is distinguishable from the others
+        for (i, a) in texts.iter().enumerate() {
+            for b in texts.iter().skip(i + 1) {
+                assert_ne!(a, b);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,237 @@
+//! Fault-injection plane (system S17): deterministic chaos for the
+//! resident runtime.
+//!
+//! Production multi-GPU serving cannot assume devices never fail or
+//! arenas never fill; this module makes those events *schedulable* so
+//! the recovery paths (task migration, surgical cache invalidation,
+//! OOM degradation) are exercised by ordinary tests instead of waiting
+//! for hardware to oblige. Two halves:
+//!
+//! - [`plan`]: the declarative schedule ([`FaultPlan`]), parsed from
+//!   `BLASX_FAULTS` / `blasx_init` / `RunConfig::fault_plan`.
+//! - [`Injector`]: the runtime side the engine consults at each
+//!   operation site. **Zero cost when no plan is installed** — every
+//!   probe is one relaxed atomic load, the same discipline as the
+//!   span recorder.
+//!
+//! The injector only *reports* faults; the engine owns the reactions
+//! (retry, migrate, degrade). That keeps every injection site a
+//! one-line probe and the recovery logic testable against real fault
+//! sources too (a genuine kernel error takes the same path as an
+//! injected one).
+
+pub mod plan;
+
+pub use plan::{FaultKind, FaultPlan, FaultSpec, OpKind, Trigger};
+
+use plan::prob_coin;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// What the engine should do about the operation it just probed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Proceed normally.
+    None,
+    /// This operation fails (transient) — retry it.
+    FailOp,
+    /// The device is lost as of this operation — migrate and degrade.
+    Kill,
+    /// The worker wedges here (bounded stall), then continues.
+    Wedge,
+}
+
+/// Per-device op counters (one per [`OpKind`] stream).
+struct DevCounters {
+    ops: [AtomicU64; 5],
+}
+
+impl DevCounters {
+    fn new() -> DevCounters {
+        DevCounters { ops: Default::default() }
+    }
+}
+
+/// The runtime half of the injection plane. One per `EngineCore`;
+/// shared by all device workers.
+pub struct Injector {
+    /// Gate for the zero-cost-when-off contract: checked with one
+    /// relaxed load before anything else.
+    armed: AtomicBool,
+    counters: Vec<DevCounters>,
+    /// Installed plan (compiled form). Locked only on the armed path.
+    plan: Mutex<FaultPlan>,
+}
+
+impl Injector {
+    /// A disarmed injector for `n_devices` devices.
+    pub fn new(n_devices: usize) -> Injector {
+        Injector {
+            armed: AtomicBool::new(false),
+            counters: (0..n_devices).map(|_| DevCounters::new()).collect(),
+            plan: Mutex::new(FaultPlan::default()),
+        }
+    }
+
+    /// Install (or replace) the active plan. An empty plan disarms.
+    /// Op counters restart from zero so a plan means the same thing
+    /// regardless of when it is installed.
+    pub fn install(&self, plan: FaultPlan) {
+        for c in &self.counters {
+            for op in &c.ops {
+                op.store(0, Ordering::Relaxed);
+            }
+        }
+        let armed = !plan.specs.is_empty();
+        *self.plan.lock().unwrap_or_else(|p| p.into_inner()) = plan;
+        self.armed.store(armed, Ordering::Relaxed);
+    }
+
+    pub fn is_armed(&self) -> bool {
+        self.armed.load(Ordering::Relaxed)
+    }
+
+    /// Probe a kernel op on `dev`. Kernel is the anchoring stream for
+    /// `kill`/`wedge`, so this is the only probe that can return more
+    /// than fail/none.
+    #[inline]
+    pub fn tick_kernel(&self, dev: usize) -> FaultAction {
+        if !self.armed.load(Ordering::Relaxed) {
+            return FaultAction::None;
+        }
+        self.tick_slow(dev, OpKind::Kernel)
+    }
+
+    /// Probe a transfer/alloc op on `dev`: `true` = this op fails.
+    #[inline]
+    pub fn tick(&self, dev: usize, kind: OpKind) -> bool {
+        if !self.armed.load(Ordering::Relaxed) {
+            return false;
+        }
+        self.tick_slow(dev, kind) == FaultAction::FailOp
+    }
+
+    fn tick_slow(&self, dev: usize, kind: OpKind) -> FaultAction {
+        let Some(counters) = self.counters.get(dev) else {
+            return FaultAction::None;
+        };
+        let op = counters.ops[kind.index()].fetch_add(1, Ordering::Relaxed);
+        let plan = self.plan.lock().unwrap_or_else(|p| p.into_inner());
+        let mut action = FaultAction::None;
+        for spec in plan.specs.iter().filter(|s| s.dev == dev && s.kind.anchor() == kind) {
+            let fires = match spec.trigger {
+                Trigger::At { op: at, count } => op >= at && op < at + count,
+                Trigger::Prob(p) => prob_coin(plan.seed, dev, kind, op) < p,
+            };
+            if !fires {
+                continue;
+            }
+            // Severity order: a kill outranks a wedge outranks a
+            // transient failure on the same op.
+            let a = match spec.kind {
+                FaultKind::Kill => FaultAction::Kill,
+                FaultKind::Wedge => FaultAction::Wedge,
+                FaultKind::FailOp(_) => FaultAction::FailOp,
+            };
+            if severity(a) > severity(action) {
+                action = a;
+            }
+        }
+        action
+    }
+}
+
+fn severity(a: FaultAction) -> u8 {
+    match a {
+        FaultAction::None => 0,
+        FaultAction::FailOp => 1,
+        FaultAction::Wedge => 2,
+        FaultAction::Kill => 3,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(text: &str) -> FaultPlan {
+        FaultPlan::parse(text).unwrap()
+    }
+
+    #[test]
+    fn disarmed_injector_never_fires() {
+        let inj = Injector::new(2);
+        assert!(!inj.is_armed());
+        for _ in 0..100 {
+            assert_eq!(inj.tick_kernel(0), FaultAction::None);
+            assert!(!inj.tick(1, OpKind::H2d));
+        }
+    }
+
+    #[test]
+    fn exact_op_triggers_fire_once_per_stream() {
+        let inj = Injector::new(2);
+        inj.install(plan("kernel@dev0:op2; h2d@dev1:op0x2"));
+        assert!(inj.is_armed());
+        let kernel_hits: Vec<bool> =
+            (0..5).map(|_| inj.tick_kernel(0) == FaultAction::FailOp).collect();
+        assert_eq!(kernel_hits, [false, false, true, false, false]);
+        // a different device's stream is untouched
+        assert_eq!(inj.tick_kernel(1), FaultAction::None);
+        let h2d_hits: Vec<bool> = (0..4).map(|_| inj.tick(1, OpKind::H2d)).collect();
+        assert_eq!(h2d_hits, [true, true, false, false], "x2 fails two consecutive ops");
+    }
+
+    #[test]
+    fn kill_and_wedge_anchor_on_the_kernel_stream() {
+        let inj = Injector::new(3);
+        inj.install(plan("kill@dev2:op1; wedge@dev1:op0"));
+        assert_eq!(inj.tick_kernel(1), FaultAction::Wedge);
+        assert_eq!(inj.tick_kernel(1), FaultAction::None);
+        assert_eq!(inj.tick_kernel(2), FaultAction::None);
+        assert_eq!(inj.tick_kernel(2), FaultAction::Kill);
+        // kill/wedge never fire on transfer probes
+        assert!(!inj.tick(2, OpKind::H2d));
+    }
+
+    #[test]
+    fn kill_outranks_transient_on_the_same_op() {
+        let inj = Injector::new(1);
+        inj.install(plan("kernel@dev0:op0; kill@dev0:op0"));
+        assert_eq!(inj.tick_kernel(0), FaultAction::Kill);
+    }
+
+    #[test]
+    fn probabilistic_triggers_are_seed_deterministic() {
+        let run = |seed: u64| -> Vec<bool> {
+            let inj = Injector::new(1);
+            let mut p = plan("p2p@dev0:p0.3");
+            p.seed = seed;
+            inj.install(p);
+            (0..64).map(|_| inj.tick(0, OpKind::P2p)).collect()
+        };
+        assert_eq!(run(5), run(5));
+        assert_ne!(run(5), run(6));
+        let fires = run(5).iter().filter(|&&b| b).count();
+        assert!(fires > 5 && fires < 40, "p=0.3 over 64 ops fired {fires} times");
+    }
+
+    #[test]
+    fn install_resets_counters_and_empty_plan_disarms() {
+        let inj = Injector::new(1);
+        inj.install(plan("kernel@dev0:op0"));
+        assert_eq!(inj.tick_kernel(0), FaultAction::FailOp);
+        inj.install(plan("kernel@dev0:op0"));
+        assert_eq!(inj.tick_kernel(0), FaultAction::FailOp, "reinstall restarts op counting");
+        inj.install(FaultPlan::default());
+        assert!(!inj.is_armed());
+        assert_eq!(inj.tick_kernel(0), FaultAction::None);
+    }
+
+    #[test]
+    fn out_of_range_device_is_ignored() {
+        let inj = Injector::new(1);
+        inj.install(plan("kernel@dev7:op0"));
+        assert_eq!(inj.tick_kernel(7), FaultAction::None);
+    }
+}

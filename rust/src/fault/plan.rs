@@ -1,0 +1,332 @@
+//! Fault *plans*: the declarative half of the injection plane.
+//!
+//! A plan is a list of specs, each naming a device, an anchoring
+//! operation stream on that device, and a trigger. The grammar (used
+//! by `BLASX_FAULTS`, `blasx_init`'s `faults` field and
+//! `RunConfig::fault_plan`) is one spec per `;`/`,`-separated token:
+//!
+//! ```text
+//! kind@devD:opN[xC]     fire at the D-th device's N-th op (0-based),
+//!                       C consecutive ops for transient kinds
+//! kind@devD:pF          fire each op with probability F (seeded,
+//!                       deterministic per (seed, dev, kind, op))
+//! seed=S                seed for probabilistic triggers (default 0)
+//! ```
+//!
+//! Kinds: `kill` (device lost), `wedge` (worker stalls once), `kernel`,
+//! `h2d`, `d2h`, `p2p` (that single operation fails, the engine
+//! retries), `oom` (the next arena allocation on the device fails).
+//! `kill` and `wedge` anchor on the device's kernel-op stream; the
+//! transient kinds anchor on their own stream. The `dev` prefix is
+//! optional (`kill@1:op40` ≡ `kill@dev1:op40`).
+//!
+//! Example — the schedule used by the CI chaos job:
+//!
+//! ```text
+//! BLASX_FAULTS="kill@dev1:op40; kernel@dev0:op3; h2d@dev0:op5x2"
+//! ```
+
+use crate::util::prng::splitmix64;
+
+/// Operation streams that can be failed individually. Each device
+/// counts each stream separately, starting at op 0.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// A tile-kernel execution (one k-step).
+    Kernel,
+    /// A host→device tile read.
+    H2d,
+    /// A device→host tile write-back.
+    D2h,
+    /// A device→device peer tile copy.
+    P2p,
+    /// A device-arena tile allocation.
+    Alloc,
+}
+
+impl OpKind {
+    pub const ALL: [OpKind; 5] =
+        [OpKind::Kernel, OpKind::H2d, OpKind::D2h, OpKind::P2p, OpKind::Alloc];
+
+    pub(crate) fn index(self) -> usize {
+        match self {
+            OpKind::Kernel => 0,
+            OpKind::H2d => 1,
+            OpKind::D2h => 2,
+            OpKind::P2p => 3,
+            OpKind::Alloc => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Kernel => "kernel",
+            OpKind::H2d => "h2d",
+            OpKind::D2h => "d2h",
+            OpKind::P2p => "p2p",
+            OpKind::Alloc => "oom",
+        }
+    }
+}
+
+/// What a spec does when its trigger fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The anchored operation fails once; the engine retries it.
+    FailOp(OpKind),
+    /// The device is lost: its tasks migrate to survivors, its cache
+    /// entries are invalidated surgically, and it never runs again.
+    Kill,
+    /// The worker stalls (a bounded sleep) once — a wedged device that
+    /// recovers; survivors steal its queued work meanwhile.
+    Wedge,
+}
+
+impl FaultKind {
+    /// The op stream whose counter this spec is matched against.
+    pub(crate) fn anchor(self) -> OpKind {
+        match self {
+            FaultKind::FailOp(op) => op,
+            // kill/wedge fire at a point in the device's kernel stream
+            FaultKind::Kill | FaultKind::Wedge => OpKind::Kernel,
+        }
+    }
+}
+
+/// When a spec fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Trigger {
+    /// Ops `[op, op + count)` of the anchoring stream.
+    At { op: u64, count: u64 },
+    /// Every op independently with probability `p`, decided by a
+    /// deterministic hash of (plan seed, dev, kind, op index).
+    Prob(f64),
+}
+
+/// One injected fault.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    pub dev: usize,
+    pub kind: FaultKind,
+    pub trigger: Trigger,
+}
+
+/// A deterministic, seeded schedule of faults.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// Parse the `BLASX_FAULTS` grammar. Returns `Err` with a message
+    /// naming the first bad token.
+    pub fn parse(text: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for token in text.split([';', ',']) {
+            let token = token.trim();
+            if token.is_empty() {
+                continue;
+            }
+            if let Some(seed) = token.strip_prefix("seed=") {
+                plan.seed =
+                    seed.trim().parse().map_err(|_| format!("bad seed in `{token}`"))?;
+                continue;
+            }
+            plan.specs.push(parse_spec(token)?);
+        }
+        Ok(plan)
+    }
+
+    /// Read and parse `BLASX_FAULTS`. An unset/empty variable is no
+    /// plan; a malformed one is reported on stderr and ignored (chaos
+    /// schedules must never take correct runs down with a typo).
+    pub fn from_env() -> Option<FaultPlan> {
+        let text = std::env::var("BLASX_FAULTS").ok()?;
+        if text.trim().is_empty() {
+            return None;
+        }
+        match FaultPlan::parse(&text) {
+            Ok(plan) if plan.specs.is_empty() => None,
+            Ok(plan) => Some(plan),
+            Err(e) => {
+                eprintln!("blasx: ignoring malformed BLASX_FAULTS: {e}");
+                None
+            }
+        }
+    }
+
+    /// The `serve --chaos` default: kill the highest device early in
+    /// its kernel stream and sprinkle transient kernel/H2D failures on
+    /// device 0 — a schedule every recovery path must survive.
+    pub fn chaos_default(n_devices: usize, seed: u64) -> FaultPlan {
+        let victim = n_devices.saturating_sub(1);
+        let mut specs = vec![FaultSpec {
+            dev: victim,
+            kind: FaultKind::Kill,
+            trigger: Trigger::At { op: 8, count: 1 },
+        }];
+        if n_devices > 1 {
+            specs.push(FaultSpec {
+                dev: 0,
+                kind: FaultKind::FailOp(OpKind::Kernel),
+                trigger: Trigger::At { op: 3, count: 1 },
+            });
+            specs.push(FaultSpec {
+                dev: 0,
+                kind: FaultKind::FailOp(OpKind::H2d),
+                trigger: Trigger::At { op: 5, count: 2 },
+            });
+        }
+        FaultPlan { seed, specs }
+    }
+
+    /// Does the plan hold a kill for `dev`? (The simulator uses this to
+    /// model a degraded machine; the real engine fires it mid-run.)
+    pub fn kills_device(&self, dev: usize) -> bool {
+        self.specs.iter().any(|s| s.dev == dev && s.kind == FaultKind::Kill)
+    }
+}
+
+fn parse_spec(token: &str) -> Result<FaultSpec, String> {
+    let (kind_s, rest) =
+        token.split_once('@').ok_or_else(|| format!("missing `@` in `{token}`"))?;
+    let kind = match kind_s.trim() {
+        "kill" => FaultKind::Kill,
+        "wedge" => FaultKind::Wedge,
+        "kernel" => FaultKind::FailOp(OpKind::Kernel),
+        "h2d" => FaultKind::FailOp(OpKind::H2d),
+        "d2h" => FaultKind::FailOp(OpKind::D2h),
+        "p2p" => FaultKind::FailOp(OpKind::P2p),
+        "oom" | "alloc" => FaultKind::FailOp(OpKind::Alloc),
+        other => return Err(format!("unknown fault kind `{other}` in `{token}`")),
+    };
+    let (dev_s, trig_s) =
+        rest.split_once(':').ok_or_else(|| format!("missing `:` in `{token}`"))?;
+    let dev_s = dev_s.trim();
+    let dev_s = dev_s.strip_prefix("dev").unwrap_or(dev_s);
+    let dev: usize =
+        dev_s.parse().map_err(|_| format!("bad device in `{token}`"))?;
+    let trig_s = trig_s.trim();
+    let trigger = if let Some(p) = trig_s.strip_prefix('p') {
+        let p: f64 = p.parse().map_err(|_| format!("bad probability in `{token}`"))?;
+        if !(0.0..=1.0).contains(&p) {
+            return Err(format!("probability out of [0,1] in `{token}`"));
+        }
+        Trigger::Prob(p)
+    } else {
+        let trig_s = trig_s.strip_prefix("op").unwrap_or(trig_s);
+        let (op_s, count_s) = match trig_s.split_once('x') {
+            Some((o, c)) => (o, Some(c)),
+            None => (trig_s, None),
+        };
+        let op: u64 = op_s.parse().map_err(|_| format!("bad op index in `{token}`"))?;
+        let count: u64 = match count_s {
+            Some(c) => c.parse().map_err(|_| format!("bad repeat count in `{token}`"))?,
+            None => 1,
+        };
+        if count == 0 {
+            return Err(format!("zero repeat count in `{token}`"));
+        }
+        Trigger::At { op, count }
+    };
+    Ok(FaultSpec { dev, kind, trigger })
+}
+
+/// Deterministic per-op coin for probabilistic triggers: a hash of
+/// (seed, dev, anchor kind, op index) mapped to [0, 1).
+pub(crate) fn prob_coin(seed: u64, dev: usize, kind: OpKind, op: u64) -> f64 {
+    let mut s = seed
+        ^ (dev as u64).wrapping_mul(0xD1B5_4A32_D192_ED03)
+        ^ (kind.index() as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ op.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    let x = splitmix64(&mut s);
+    (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let p = FaultPlan::parse(
+            "seed=7; kill@dev1:op40, wedge@2:3; kernel@dev0:op10x2; p2p@dev3:p0.25; oom@0:op1",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.specs.len(), 5);
+        assert_eq!(
+            p.specs[0],
+            FaultSpec { dev: 1, kind: FaultKind::Kill, trigger: Trigger::At { op: 40, count: 1 } }
+        );
+        assert_eq!(
+            p.specs[1],
+            FaultSpec { dev: 2, kind: FaultKind::Wedge, trigger: Trigger::At { op: 3, count: 1 } }
+        );
+        assert_eq!(
+            p.specs[2],
+            FaultSpec {
+                dev: 0,
+                kind: FaultKind::FailOp(OpKind::Kernel),
+                trigger: Trigger::At { op: 10, count: 2 },
+            }
+        );
+        assert_eq!(
+            p.specs[3],
+            FaultSpec { dev: 3, kind: FaultKind::FailOp(OpKind::P2p), trigger: Trigger::Prob(0.25) }
+        );
+        assert_eq!(
+            p.specs[4],
+            FaultSpec {
+                dev: 0,
+                kind: FaultKind::FailOp(OpKind::Alloc),
+                trigger: Trigger::At { op: 1, count: 1 },
+            }
+        );
+        assert!(p.kills_device(1));
+        assert!(!p.kills_device(0));
+    }
+
+    #[test]
+    fn rejects_malformed_tokens() {
+        for bad in [
+            "kill",
+            "kill@dev1",
+            "explode@dev0:op1",
+            "kernel@devX:op1",
+            "kernel@dev0:opY",
+            "kernel@dev0:p1.5",
+            "kernel@dev0:op1x0",
+            "seed=abc",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn empty_and_whitespace_plans_are_empty() {
+        assert!(FaultPlan::parse("").unwrap().specs.is_empty());
+        assert!(FaultPlan::parse(" ; , ").unwrap().specs.is_empty());
+    }
+
+    #[test]
+    fn prob_coin_is_deterministic_and_uniform_ish() {
+        let a = prob_coin(9, 1, OpKind::Kernel, 17);
+        assert_eq!(a, prob_coin(9, 1, OpKind::Kernel, 17));
+        assert_ne!(a, prob_coin(10, 1, OpKind::Kernel, 17));
+        let n = 10_000;
+        let mean: f64 =
+            (0..n).map(|op| prob_coin(42, 0, OpKind::H2d, op)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn chaos_default_kills_the_last_device() {
+        let p = FaultPlan::chaos_default(4, 1);
+        assert!(p.kills_device(3));
+        assert!(p.specs.len() >= 2, "chaos plan should also inject transient faults");
+        let single = FaultPlan::chaos_default(1, 1);
+        assert_eq!(single.specs.len(), 1, "one device: nothing survives transient noise");
+    }
+}

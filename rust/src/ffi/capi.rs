@@ -26,13 +26,15 @@
 
 use super::{
     default_context, diag_of, dim_of, fold_gemm_row_major, fold_sided_row_major, order_of,
-    raw_operand, record_error, side_of, status_of, trans_of, uplo_of, Order, BLASX_ERR_INTERNAL,
-    BLASX_OK,
+    raw_operand, record_error, seed_default_context, side_of, status_of, trans_of, uplo_of,
+    Order, BLASX_ERR_CONFIG, BLASX_ERR_INTERNAL, BLASX_OK,
 };
 use crate::api::l3::{plan_gemm, plan_trsm};
 use crate::api::types::Scalar;
+use crate::api::Context;
 use crate::coordinator::real_engine::OwnedProblem;
 use crate::error::{illegal, Error, Result};
+use crate::fault::FaultPlan;
 use crate::runtime::Runtime;
 use crate::serve::admission::JobCtl;
 use crate::serve::DeviceJob;
@@ -48,6 +50,127 @@ pub struct BlasxJob {
     rt: Arc<Runtime>,
     job: Arc<dyn DeviceJob>,
     ctl: Arc<JobCtl>,
+}
+
+/// Explicit library configuration (`blasx_config_t`): the programmatic
+/// twin of the `BLASX_*` environment knobs, consumed by `blasx_init`.
+/// A zero-initialized struct means "all defaults": every numeric field
+/// treats `<= 0` (or `0` for `deadline_ms`) as "use the default", so
+/// `blasx_config_t cfg = {0};` followed by setting just the fields of
+/// interest is the intended idiom.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct BlasxConfigC {
+    /// Devices to run on (`<= 0`: default).
+    pub devices: c_int,
+    /// Square tile edge (`<= 0`: default).
+    pub tile: c_int,
+    /// Per-device arena size in MiB (`<= 0`: default).
+    pub arena_mb: c_int,
+    /// Kernel threads per device worker (`<= 0`: default).
+    pub kernel_threads: c_int,
+    /// Nonzero: disable the resident runtime (one-shot engine per
+    /// call; async entries will refuse).
+    pub one_shot: c_int,
+    /// Per-job deadline in milliseconds (`0`: no deadline). Overrun
+    /// jobs fail with `BLASX_ERR_DEADLINE`.
+    pub deadline_ms: u64,
+    /// Admission-queue capacity across all tenants (`<= 0`: default).
+    /// At capacity, calls fail fast with `BLASX_ERR_BACKPRESSURE`.
+    pub max_inflight: c_int,
+    /// Per-tenant in-flight job quota (`<= 0`: default).
+    pub tenant_quota: c_int,
+    /// Fault-injection schedule in the `BLASX_FAULTS` grammar
+    /// (NUL-terminated; NULL or empty: no injected faults).
+    pub faults: *const c_char,
+}
+
+/// Configure the process-global BLASX context before first use.
+/// Returns `BLASX_OK`, `BLASX_ERR_PARAM` (malformed `faults` string —
+/// nothing is configured), or `BLASX_ERR_CONFIG` (some BLASX entry
+/// already materialized the env-driven default context; init must be
+/// the first BLASX call in the process). `cfg` may be NULL to claim
+/// the defaults explicitly. The struct is copied; the `faults` string
+/// is parsed during the call and need not outlive it.
+///
+/// # Safety
+/// `cfg`, when non-NULL, must point to a readable `blasx_config_t`
+/// whose `faults` field is NULL or a NUL-terminated string.
+#[no_mangle]
+pub unsafe extern "C" fn blasx_init(cfg: *const BlasxConfigC) -> c_int {
+    match catch_unwind(AssertUnwindSafe(|| init_context(cfg))) {
+        Ok(Ok(ctx)) => match seed_default_context(ctx) {
+            Ok(()) => BLASX_OK,
+            Err(_) => {
+                record_error(
+                    "blasx_init",
+                    &Error::Config(
+                        "default context already initialized (blasx_init must be the first \
+                         BLASX call)"
+                            .into(),
+                    ),
+                );
+                BLASX_ERR_CONFIG
+            }
+        },
+        Ok(Err(e)) => {
+            record_error("blasx_init", &e);
+            status_of(&e)
+        }
+        Err(_) => {
+            record_error("blasx_init", &Error::Internal("panic contained at the C ABI".into()));
+            BLASX_ERR_INTERNAL
+        }
+    }
+}
+
+/// Build a [`Context`] from a C config (NULL = defaults).
+///
+/// # Safety
+/// See `blasx_init`.
+unsafe fn init_context(cfg: *const BlasxConfigC) -> Result<Context> {
+    let mut ctx = Context::default();
+    if cfg.is_null() {
+        return Ok(ctx);
+    }
+    let c = *cfg;
+    if c.devices > 0 {
+        ctx.n_devices = c.devices as usize;
+    }
+    if c.tile > 0 {
+        ctx = ctx.with_tile(c.tile as usize);
+    }
+    if c.arena_mb > 0 {
+        ctx = ctx.with_arena((c.arena_mb as usize) << 20);
+    }
+    if c.kernel_threads > 0 {
+        ctx = ctx.with_kernel_threads(c.kernel_threads as usize);
+    }
+    if c.one_shot != 0 {
+        ctx = ctx.with_persistent(false);
+    }
+    if c.deadline_ms > 0 {
+        ctx = ctx.with_deadline_ms(Some(c.deadline_ms));
+    }
+    if c.max_inflight > 0 {
+        ctx = ctx.with_admit_capacity(c.max_inflight as usize);
+    }
+    if c.tenant_quota > 0 {
+        ctx = ctx.with_tenant_quota(c.tenant_quota as usize);
+    }
+    if !c.faults.is_null() {
+        let text = std::ffi::CStr::from_ptr(c.faults)
+            .to_str()
+            .map_err(|_| illegal("blasx_init", 9, "faults string is not UTF-8"))?;
+        if !text.trim().is_empty() {
+            let plan = FaultPlan::parse(text)
+                .map_err(|e| illegal("blasx_init", 9, format!("bad faults schedule: {e}")))?;
+            if !plan.specs.is_empty() {
+                ctx = ctx.with_fault_plan(Some(plan));
+            }
+        }
+    }
+    Ok(ctx)
 }
 
 /// Admit an owned-problem job on the default context and box its
@@ -367,6 +490,27 @@ pub unsafe extern "C" fn blasx_job_done(job: *const BlasxJob) -> c_int {
         return -1;
     }
     (*job).ctl.is_retired() as c_int
+}
+
+/// Request cooperative cancellation of an in-flight job: it is aborted
+/// with `BLASX_ERR_CANCELLED` at the next round boundary (outputs are
+/// never torn mid-tile) — the subsequent `blasx_wait` on the handle
+/// returns that code, unless the job finished first and reports
+/// normally. Idempotent; does not free the handle (the wait still
+/// must run). Returns 0, or BLASX_ERR_INTERNAL for a NULL handle.
+///
+/// # Safety
+/// `job` must be a live handle from a `blasx_*_async` entry (not yet
+/// waited).
+#[no_mangle]
+pub unsafe extern "C" fn blasx_job_cancel(job: *const BlasxJob) -> c_int {
+    if job.is_null() {
+        record_error("blasx_job_cancel", &Error::Internal("null job handle".into()));
+        return BLASX_ERR_INTERNAL;
+    }
+    (*job).ctl.request_cancel();
+    (*job).rt.core().notify_work();
+    BLASX_OK
 }
 
 /// Observability counters of one job (`struct blasx_stats`), the

@@ -105,6 +105,7 @@ pub mod cache;
 pub mod cli;
 pub mod coordinator;
 pub mod error;
+pub mod fault;
 pub mod ffi;
 pub mod hostblas;
 pub mod mem;

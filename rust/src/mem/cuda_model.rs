@@ -73,6 +73,9 @@ pub struct DeviceAllocator {
     pub syncs: u64,
     /// lifetime allocation count (fragmentation model input)
     pub n_allocs: u64,
+    /// fault-injection hook: this many upcoming allocation requests are
+    /// refused before the heap is even consulted (arena-OOM chaos).
+    forced_failures: u64,
 }
 
 impl DeviceAllocator {
@@ -84,6 +87,27 @@ impl DeviceAllocator {
             alloc_time_s: 0.0,
             syncs: 0,
             n_allocs: 0,
+            forced_failures: 0,
+        }
+    }
+
+    /// Arm the arena-OOM injection hook: the next `n` allocation
+    /// requests are refused as if the heap were exhausted (consumed by
+    /// [`DeviceAllocator::take_forced_failure`] at the request level,
+    /// so one forced failure fails one whole insert, not one heap
+    /// probe of the eviction loop).
+    pub fn force_fail(&mut self, n: u64) {
+        self.forced_failures = self.forced_failures.saturating_add(n);
+    }
+
+    /// Consume one forced failure if armed. Callers check this once
+    /// per allocation *request* before touching the heap.
+    pub fn take_forced_failure(&mut self) -> bool {
+        if self.forced_failures > 0 {
+            self.forced_failures -= 1;
+            true
+        } else {
+            false
         }
     }
 
@@ -138,6 +162,18 @@ mod tests {
         assert_eq!(fcost, 0.0);
         assert!(!sync);
         assert_eq!(d.alloc_time_s, 0.0);
+    }
+
+    #[test]
+    fn forced_failures_arm_and_drain() {
+        let mut d = DeviceAllocator::new(1 << 20, AllocStrategy::FastHeap);
+        assert!(!d.take_forced_failure());
+        d.force_fail(2);
+        assert!(d.take_forced_failure());
+        assert!(d.take_forced_failure());
+        assert!(!d.take_forced_failure(), "hook drains after n requests");
+        // the heap itself is untouched by the hook
+        assert!(d.alloc(4096).is_some());
     }
 
     #[test]

@@ -47,9 +47,23 @@
 //! switching job waits for every live job, later jobs wait for it, and
 //! the caches are purged wholesale at the quiescent point in between
 //! (block geometry participates in tile addressing, so cross-size
-//! reuse would be incoherent). A failed job also schedules a purge
-//! (readers may have been left pinned on the abort path), executed at
-//! the next globally-quiescent point.
+//! reuse would be incoherent). A failed job schedules **no** purge:
+//! the engine releases its pins on every abort path, and a lost
+//! device's cache entries are evicted surgically, so other tenants'
+//! warm tiles survive a neighbour's failure.
+//!
+//! ## Tenant protection
+//!
+//! Admission is bounded ([`RunConfig::admit_capacity`] live jobs
+//! overall, [`RunConfig::tenant_quota`] per submitting tenant); over
+//! either limit the call fails fast with [`Error::Backpressure`]
+//! instead of queueing unboundedly. Jobs may carry a deadline
+//! ([`RunConfig::deadline_ms`]) and every [`crate::serve::JobHandle`]
+//! can [`cancel`](crate::serve::JobHandle::cancel); both are enforced
+//! cooperatively at round boundaries by
+//! [`crate::serve::admission::JobTable::reap_expired`], so a reaped
+//! job aborts with [`Error::DeadlineExceeded`] / [`Error::Cancelled`]
+//! while its neighbours' rounds run undisturbed.
 
 use crate::api::Scalar;
 use crate::cache::CacheStats;
@@ -58,7 +72,9 @@ use crate::coordinator::real_engine::{
     block_bytes, worker_round, EngineCore, JobState, JobStats, Mats, OwnedProblem, RealReport,
     Round, PARK_TIMEOUT,
 };
+use crate::coordinator::FaultStats;
 use crate::error::{Error, Result};
+use crate::fault::FaultPlan;
 use crate::mem::AllocStrategy;
 use crate::serve::admission::{JobCtl, JobSpan, JobTable};
 use crate::serve::{fairness, DeviceJob};
@@ -69,7 +85,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Host-buffer invalidation generations, keyed by byte range.
 ///
@@ -210,6 +226,10 @@ impl<T: Scalar> DeviceJob for ErasedJob<T> {
         self.state.fail(Error::Internal(msg));
     }
 
+    fn abort(&self, err: Error) {
+        self.state.fail(err);
+    }
+
     fn report(&self, core: &EngineCore) -> Result<RealReport> {
         self.state.report(core)
     }
@@ -220,6 +240,10 @@ impl<T: Scalar> DeviceJob for ErasedJob<T> {
 
     fn stats(&self) -> JobStats {
         self.state.stats()
+    }
+
+    fn fault_stats(&self) -> FaultStats {
+        self.state.fault_stats()
     }
 }
 
@@ -249,6 +273,10 @@ impl<T: Scalar> DeviceJob for OwnedJob<T> {
         self.state.fail(Error::Internal(msg));
     }
 
+    fn abort(&self, err: Error) {
+        self.state.fail(err);
+    }
+
     fn report(&self, core: &EngineCore) -> Result<RealReport> {
         self.state.report(core)
     }
@@ -259,6 +287,10 @@ impl<T: Scalar> DeviceJob for OwnedJob<T> {
 
     fn stats(&self) -> JobStats {
         self.state.stats()
+    }
+
+    fn fault_stats(&self) -> FaultStats {
+        self.state.fault_stats()
     }
 }
 
@@ -364,6 +396,15 @@ impl Runtime {
         &self.inner.core
     }
 
+    /// Arm (or re-arm) the fault-injection plane for this runtime.
+    /// Called at boot by the API layer when `RunConfig.fault_plan` is
+    /// set, and by `blasx serve --chaos`; the `BLASX_FAULTS`
+    /// environment fallback was already installed at core
+    /// construction.
+    pub fn install_fault_plan(&self, plan: FaultPlan) {
+        self.inner.core.faults.install(plan);
+    }
+
     /// Open a new invalidation generation for `[lo, hi)`: tiles cached
     /// from host bytes in that range become unreachable. The public
     /// doorway is [`crate::api::Context::invalidate_host`].
@@ -380,14 +421,17 @@ impl Runtime {
         );
     }
 
-    /// Admit a constructed job: wire dependency edges, stamp epochs
-    /// (same lock, same order), insert into the table, wake workers.
+    /// Admit a constructed job: enforce the backpressure bounds, wire
+    /// dependency edges, stamp epochs (same lock, same order), insert
+    /// into the table, wake workers. Fails fast with
+    /// [`Error::Backpressure`] when the table is at capacity or the
+    /// submitting tenant is at its in-flight quota.
     fn admit<T: Scalar>(
         &self,
         cfg: &RunConfig,
         state: &JobState<'static, T>,
         erased: Arc<dyn DeviceJob>,
-    ) -> Arc<JobCtl> {
+    ) -> Result<Arc<JobCtl>> {
         let mut span = JobSpan::default();
         for m in state.problems() {
             for hm in [Some(m.a), m.b].into_iter().flatten() {
@@ -396,8 +440,26 @@ impl Runtime {
             span.outs.push(m.c.byte_range());
         }
         let weight = state.weight();
+        let tenant = tenant_id();
         let ctl = {
             let mut table = self.inner.table.lock().unwrap_or_else(|e| e.into_inner());
+            // Bounded admission: refuse BEFORE stamping epochs so a
+            // rejected call leaves no trace in the registry.
+            if table.live_count() >= cfg.admit_capacity.max(1) {
+                self.inner.metrics.on_reject(tenant, cfg.routine);
+                return Err(Error::Backpressure(format!(
+                    "admission queue full ({} jobs in flight, capacity {})",
+                    table.live_count(),
+                    cfg.admit_capacity.max(1)
+                )));
+            }
+            if table.tenant_inflight(tenant) >= cfg.tenant_quota.max(1) {
+                self.inner.metrics.on_reject(tenant, cfg.routine);
+                return Err(Error::Backpressure(format!(
+                    "tenant {tenant} at its in-flight quota ({})",
+                    cfg.tenant_quota.max(1)
+                )));
+            }
             // Epoch stamping under the admission lock: inputs resolve
             // against the current generation map, then every output
             // range opens a fresh one. Epoch order == dependency-edge
@@ -416,7 +478,9 @@ impl Runtime {
                     m.c.set_epoch(reg.bump(lo, hi));
                 }
             }
-            let (ctl, purge_now) = table.admit(erased, span, weight, cfg.t);
+            let deadline =
+                cfg.deadline_ms.map(|ms| (Instant::now() + Duration::from_millis(ms), ms));
+            let (ctl, purge_now) = table.admit(erased, span, weight, cfg.t, tenant, deadline);
             if purge_now {
                 // Geometry switch into a quiescent table: old-size
                 // blocks must be unreachable before this job runs.
@@ -435,7 +499,7 @@ impl Runtime {
             }
             self.inner.metrics.on_admit(
                 ctl.id,
-                tenant_id(),
+                tenant,
                 cfg.routine,
                 weight,
                 self.inner.core.rec.now(),
@@ -443,7 +507,7 @@ impl Runtime {
             ctl
         };
         self.inner.core.notify_work();
-        ctl
+        Ok(ctl)
     }
 
     /// Execute a task set over the resident engine; parks the caller
@@ -470,7 +534,7 @@ impl Runtime {
             unsafe { std::mem::transmute::<JobState<'_, T>, JobState<'static, T>>(state) };
         let job = Arc::new(ErasedJob { state });
         let erased: Arc<dyn DeviceJob> = job.clone();
-        let ctl = self.admit(cfg, &job.state, erased);
+        let ctl = self.admit(cfg, &job.state, erased)?;
         ctl.wait_retired();
         let report = job.state.report(&self.inner.core);
         drop(job);
@@ -512,7 +576,7 @@ impl Runtime {
         let state = JobState::new(cfg, ts_ref, mats, self.inner.n_devices)?;
         let job = Arc::new(OwnedJob { state, _ts: ts, _problems: problems });
         let erased: Arc<dyn DeviceJob> = job.clone();
-        let ctl = self.admit(cfg, &job.state, erased.clone());
+        let ctl = self.admit(cfg, &job.state, erased.clone())?;
         Ok((erased, ctl))
     }
 }
@@ -536,28 +600,63 @@ enum Pick {
     Park { indefinitely: bool },
 }
 
-fn next_round(inner: &Inner, tried: &mut HashSet<u64>, seen_version: &mut u64) -> Pick {
-    let mut table = inner.table.lock().unwrap_or_else(|e| e.into_inner());
-    if table.version != *seen_version {
-        *seen_version = table.version;
-        tried.clear();
+/// Post-retirement bookkeeping shared by the worker path and the reap
+/// path: count the call, fold the metrics, forward the lifecycle to
+/// the span recorder. Must run with the table lock released.
+fn retire_bookkeeping(inner: &Inner, id: u64, failed: bool, faults: &FaultStats) {
+    inner.calls.fetch_add(1, Ordering::Relaxed);
+    if let Some(r) = inner.metrics.on_retire(id, failed, inner.core.rec.now(), faults) {
+        inner.core.rec.record_job(JobRec {
+            job: id,
+            tenant: r.tenant,
+            routine: r.routine,
+            admit: r.admit_s,
+            first_round: r.first_round_s,
+            retire: r.retire_s,
+            failed,
+        });
     }
-    if table.purge_pending {
-        if table.rounds_active == 0 {
-            // Globally quiescent: no round holds arena offsets, safe
-            // to rebuild the caches (failed-job pin recovery).
+}
+
+fn next_round(inner: &Inner, tried: &mut HashSet<u64>, seen_version: &mut u64) -> Pick {
+    let (pick, reaped) = {
+        let mut table = inner.table.lock().unwrap_or_else(|e| e.into_inner());
+        // Deadline/cancel enforcement lives at the round boundary:
+        // expired or cancelled jobs abort with their distinct error
+        // and, if no round of theirs is in flight, retire on the spot
+        // — neighbours' rounds are untouched.
+        let reap = table.reap_expired();
+        if reap.purge_now {
+            // A reap drained a geometry barrier's last dependency at
+            // global quiescence: purge before anything runs on the
+            // new tile size.
             inner.core.purge();
             table.purge_done();
-        } else {
-            // Block new rounds until the in-flight ones drain.
-            return Pick::Park { indefinitely: false };
         }
+        if table.version != *seen_version {
+            *seen_version = table.version;
+            tried.clear();
+        }
+        let shares = table.runnable_shares();
+        // The k-chunk splitter consults this: under a contended table
+        // a task's step chain executes in bounded chunks so the round
+        // quantum stays fair.
+        inner.core.runnable_jobs.store(shares.len(), Ordering::Relaxed);
+        let pick = match fairness::pick(&shares, tried) {
+            Some(id) => Pick::Run(id, table.start_round(id)),
+            None => Pick::Park { indefinitely: table.is_empty() },
+        };
+        (pick, reap.retired)
+    };
+    if !reaped.is_empty() {
+        for (ctl, faults) in &reaped {
+            retire_bookkeeping(inner, ctl.id, true, faults);
+            ctl.retire();
+        }
+        // Dependents of the reaped jobs may be runnable now.
+        inner.core.notify_work();
     }
-    let shares = table.runnable_shares();
-    match fairness::pick(&shares, tried) {
-        Some(id) => Pick::Run(id, table.start_round(id)),
-        None => Pick::Park { indefinitely: table.is_empty() },
-    }
+    pick
 }
 
 fn device_worker(inner: Arc<Inner>, dev: usize) {
@@ -595,32 +694,23 @@ fn device_worker(inner: Arc<Inner>, dev: usize) {
                     Round::Finished => (0.0, true, false),
                     Round::Failed => (0.0, false, true),
                 };
-                // Drop our job reference BEFORE retirement can become
-                // observable: once the latch is set, the waiter
-                // reclaims the borrows behind the job.
+                // Snapshot the fault counters, then drop our job
+                // reference BEFORE retirement can become observable:
+                // once the latch is set, the waiter reclaims the
+                // borrows behind the job.
+                let faults = job.fault_stats();
                 drop(job);
-                let retired = {
+                let (retired, retired_failed) = {
                     let mut table = inner.table.lock().unwrap_or_else(|e| e.into_inner());
                     let actions = table.finish_round(id, flops, finished, failed);
                     if actions.purge_now {
                         inner.core.purge();
                         table.purge_done();
                     }
-                    actions.retired
+                    (actions.retired, actions.retired_failed)
                 };
                 if let Some(ctl) = retired {
-                    inner.calls.fetch_add(1, Ordering::Relaxed);
-                    if let Some(r) = inner.metrics.on_retire(id, failed, inner.core.rec.now()) {
-                        inner.core.rec.record_job(JobRec {
-                            job: id,
-                            tenant: r.tenant,
-                            routine: r.routine,
-                            admit: r.admit_s,
-                            first_round: r.first_round_s,
-                            retire: r.retire_s,
-                            failed,
-                        });
-                    }
+                    retire_bookkeeping(&inner, id, retired_failed, &faults);
                     ctl.retire();
                     // Dependents of the retired job may be runnable now.
                     inner.core.notify_work();

@@ -29,15 +29,31 @@
 //! `last_barrier`), and the caches are purged at the quiescent point
 //! where its dependencies have drained (`rounds_active == 0` is
 //! guaranteed there — no other job can be mid-round). A *failed* job
-//! may leave pinned blocks behind (its aborted task's C pin), so its
-//! retirement sets `purge_pending`; workers stop starting rounds and
-//! the first one to observe global quiescence performs the purge.
+//! needs no purge anymore: the engine releases its pins on every abort
+//! path and a lost device's cache entries are invalidated surgically
+//! (`TileCaches::evict_device`), so other tenants' warm tiles survive
+//! a neighbour's failure.
+//!
+//! ## Deadlines, cancellation and backpressure
+//!
+//! Tenant protection also lives here. An entry may carry an absolute
+//! **deadline**; every [`JobCtl`] carries a cooperative **cancel**
+//! flag ([`JobCtl::request_cancel`]); and [`JobTable::reap_expired`] —
+//! run by workers before each round pick — aborts expired/cancelled
+//! jobs with [`Error::DeadlineExceeded`] / [`Error::Cancelled`]
+//! without disturbing their neighbours (checks happen at round
+//! boundaries, never mid-kernel). Admission-side occupancy
+//! ([`JobTable::live_count`], [`JobTable::tenant_inflight`]) lets the
+//! runtime refuse work with an explicit [`Error::Backpressure`]
+//! instead of queueing unboundedly.
 
 use super::fairness::JobShare;
 use super::DeviceJob;
+use crate::error::Error;
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 /// Host byte ranges a job reads (`ins`) and writes (`outs`), one entry
 /// per operand per problem.
@@ -78,6 +94,11 @@ pub(crate) struct JobCtl {
     /// swallow errors — and skips the ones a `wait()` already
     /// surfaced.
     observed: AtomicBool,
+    /// Cooperative cancellation request ([`super::JobHandle::cancel`]
+    /// or an FFI cancel). Honored by [`JobTable::reap_expired`] at the
+    /// next round boundary; a job that finishes first wins the race
+    /// and reports normally.
+    cancelled: AtomicBool,
     mx: Mutex<()>,
     cv: Condvar,
 }
@@ -88,6 +109,7 @@ impl JobCtl {
             id,
             retired: AtomicBool::new(false),
             observed: AtomicBool::new(false),
+            cancelled: AtomicBool::new(false),
             mx: Mutex::new(()),
             cv: Condvar::new(),
         }
@@ -96,6 +118,17 @@ impl JobCtl {
     /// A waiter is delivering this job's report to user code.
     pub fn mark_observed(&self) {
         self.observed.store(true, Ordering::SeqCst);
+    }
+
+    /// Request cooperative cancellation: the job is aborted with
+    /// [`Error::Cancelled`] at the next round boundary (in-flight
+    /// rounds finish their tasks — outputs are never torn mid-tile).
+    pub fn request_cancel(&self) {
+        self.cancelled.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::SeqCst)
     }
 
     pub fn is_observed(&self) -> bool {
@@ -151,6 +184,11 @@ pub(crate) struct JobEntry {
     /// Fair-share ledger (see `super::fairness`).
     pub weight: f64,
     pub charged: f64,
+    /// Submitting tenant (admission-side quota accounting).
+    pub tenant: u32,
+    /// Absolute deadline plus the configured limit in milliseconds
+    /// (carried for the error message).
+    pub deadline: Option<(Instant, u64)>,
 }
 
 /// What the caller (holding the table lock) must do after
@@ -163,6 +201,25 @@ pub(crate) struct FinishActions {
     /// The retired job's latch: count the call, then (outside the
     /// table lock) `retire()` it and wake the worker fleet.
     pub retired: Option<Arc<JobCtl>>,
+    /// The retired entry's accumulated failed flag — may be true even
+    /// when this round reported success (the job was reaped or failed
+    /// on another device while this round was in flight).
+    pub retired_failed: bool,
+}
+
+/// What the caller (holding the table lock) must do after
+/// [`JobTable::reap_expired`].
+#[derive(Default)]
+pub(crate) struct ReapActions {
+    /// Jobs reaped with no round in flight, paired with their fault
+    /// counters (snapshotted before the table dropped its job
+    /// reference): outside the table lock, `retire()` each latch and
+    /// wake the fleet (their dependents may be runnable now).
+    pub retired: Vec<(Arc<JobCtl>, crate::coordinator::FaultStats)>,
+    /// A geometry barrier's dependencies drained at a reap: purge the
+    /// caches NOW, then call [`JobTable::purge_done`] (still under the
+    /// lock). Only set at global quiescence.
+    pub purge_now: bool,
 }
 
 /// The multi-job slot table (see module docs).
@@ -172,9 +229,6 @@ pub(crate) struct JobTable {
     /// Bumped on every admission/retirement; workers use it to
     /// invalidate their "probed idle" memory cheaply.
     pub version: u64,
-    /// A failed job retired with blocks possibly pinned: purge at the
-    /// next globally-quiescent point; no new rounds start meanwhile.
-    pub purge_pending: bool,
     /// Rounds in flight across all jobs (Σ active_rounds).
     pub rounds_active: usize,
     /// Latest live tile-size barrier; later admissions depend on it.
@@ -195,7 +249,6 @@ impl JobTable {
             jobs: Vec::new(),
             next_id: 0,
             version: 0,
-            purge_pending: false,
             rounds_active: 0,
             last_barrier: None,
             last_t: None,
@@ -204,6 +257,17 @@ impl JobTable {
 
     pub fn is_empty(&self) -> bool {
         self.jobs.is_empty()
+    }
+
+    /// Jobs currently admitted (running, queued, or finishing) — the
+    /// quantity the runtime's admission capacity bounds.
+    pub fn live_count(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Live jobs submitted by `tenant` (per-tenant in-flight quota).
+    pub fn tenant_inflight(&self, tenant: u32) -> usize {
+        self.jobs.iter().filter(|e| e.tenant == tenant).count()
     }
 
     fn entry(&mut self, id: u64) -> &mut JobEntry {
@@ -220,6 +284,8 @@ impl JobTable {
         span: JobSpan,
         weight: f64,
         t: usize,
+        tenant: u32,
+        deadline: Option<(Instant, u64)>,
     ) -> (Arc<JobCtl>, bool) {
         let id = self.next_id;
         self.next_id += 1;
@@ -264,6 +330,8 @@ impl JobTable {
             needs_purge: needs_purge && !purge_immediately,
             weight,
             charged: 0.0,
+            tenant,
+            deadline,
         });
         self.version += 1;
         debug_assert!(!purge_immediately || self.rounds_active == 0);
@@ -276,8 +344,73 @@ impl JobTable {
         self.jobs
             .iter()
             .filter(|e| e.deps.is_empty() && !e.finishing)
-            .map(|e| JobShare { id: e.id, weight: e.weight, charged: e.charged })
+            .map(|e| JobShare {
+                id: e.id,
+                weight: e.weight,
+                charged: e.charged,
+                tenant: e.tenant,
+            })
             .collect()
+    }
+
+    /// Abort every expired or cancelled job: its state is failed with
+    /// the matching error ([`Error::DeadlineExceeded`] /
+    /// [`Error::Cancelled`]), it stops being runnable, and — if no
+    /// device is inside one of its rounds — it retires on the spot.
+    /// Jobs with rounds in flight retire through the normal
+    /// [`JobTable::finish_round`] path when those rounds drain (an
+    /// in-flight round finishes its tasks; outputs are never torn).
+    /// Called by workers before each round pick; the no-deadline,
+    /// no-cancel fast path is one scan without a clock read.
+    pub fn reap_expired(&mut self) -> ReapActions {
+        let mut acts = ReapActions::default();
+        if !self
+            .jobs
+            .iter()
+            .any(|e| !e.finishing && (e.deadline.is_some() || e.ctl.is_cancelled()))
+        {
+            return acts;
+        }
+        let now = Instant::now();
+        let mut doomed: Vec<u64> = Vec::new();
+        for e in &mut self.jobs {
+            if e.finishing {
+                continue;
+            }
+            let expired = e.deadline.is_some_and(|(at, _)| now >= at);
+            if !expired && !e.ctl.is_cancelled() {
+                continue;
+            }
+            let err = if expired {
+                Error::DeadlineExceeded { limit_ms: e.deadline.expect("expired").1 }
+            } else {
+                Error::Cancelled
+            };
+            e.job.abort(err);
+            e.finishing = true;
+            e.failed = true;
+            if e.active_rounds == 0 {
+                doomed.push(e.id);
+            }
+        }
+        for id in doomed {
+            let idx = self.jobs.iter().position(|e| e.id == id).expect("reaped id");
+            let entry = self.jobs.remove(idx);
+            self.version += 1;
+            if self.last_barrier == Some(id) {
+                self.last_barrier = None;
+            }
+            for other in &mut self.jobs {
+                other.deps.remove(&id);
+            }
+            let faults = entry.job.fault_stats();
+            acts.retired.push((entry.ctl, faults));
+        }
+        // A reap can be what drains a geometry barrier's last
+        // dependency; same quiescent-purge rule as finish_round.
+        let barrier_ready = self.jobs.iter().any(|e| e.deps.is_empty() && e.needs_purge);
+        acts.purge_now = barrier_ready && self.rounds_active == 0;
+        acts
     }
 
     /// Begin a round of job `id` on some device: pins the job in the
@@ -316,23 +449,23 @@ impl JobTable {
             let idx = self.jobs.iter().position(|e| e.id == id).unwrap();
             let entry = self.jobs.remove(idx);
             self.version += 1;
-            if entry.failed {
-                self.purge_pending = true;
-            }
             if self.last_barrier == Some(id) {
                 self.last_barrier = None;
             }
             for other in &mut self.jobs {
                 other.deps.remove(&id);
             }
+            actions.retired_failed = entry.failed;
             actions.retired = Some(entry.ctl);
         }
         // A geometry barrier whose dependencies just drained purges at
         // this quiescent point (no other job can be mid-round: all its
-        // predecessors retired, all its successors still dep on it);
-        // a failure purge waits for global quiescence the same way.
+        // predecessors retired, all its successors still dep on it).
+        // Failed jobs schedule NO purge: the engine releases their
+        // pins on every abort path, and lost-device state is evicted
+        // surgically — neighbours keep their warm tiles.
         let barrier_ready = self.jobs.iter().any(|e| e.deps.is_empty() && e.needs_purge);
-        if (barrier_ready || self.purge_pending) && self.rounds_active == 0 {
+        if barrier_ready && self.rounds_active == 0 {
             actions.purge_now = true;
         }
         actions
@@ -341,7 +474,6 @@ impl JobTable {
     /// The caller purged the caches (under the table lock, at a
     /// quiescent point): clear every discharged purge obligation.
     pub fn purge_done(&mut self) {
-        self.purge_pending = false;
         for e in &mut self.jobs {
             if e.deps.is_empty() {
                 e.needs_purge = false;
@@ -381,8 +513,8 @@ mod tests {
     #[test]
     fn disjoint_jobs_are_concurrently_runnable() {
         let mut t = JobTable::new();
-        let (c0, p0) = t.admit(stub(), span(&[(0, 100)], &[(100, 200)]), 10.0, 32);
-        let (c1, p1) = t.admit(stub(), span(&[(300, 400)], &[(400, 500)]), 10.0, 32);
+        let (c0, p0) = t.admit(stub(), span(&[(0, 100)], &[(100, 200)]), 10.0, 32, 0, None);
+        let (c1, p1) = t.admit(stub(), span(&[(300, 400)], &[(400, 500)]), 10.0, 32, 0, None);
         assert!(!p0 && !p1);
         let ids: Vec<u64> = t.runnable_shares().iter().map(|s| s.id).collect();
         assert_eq!(ids, vec![c0.id, c1.id]);
@@ -392,8 +524,8 @@ mod tests {
     fn raw_conflict_orders_by_admission() {
         let mut t = JobTable::new();
         // job0 writes [100,200); job1 reads it → dependency edge.
-        let (c0, _) = t.admit(stub(), span(&[(0, 100)], &[(100, 200)]), 10.0, 32);
-        let (c1, _) = t.admit(stub(), span(&[(150, 160)], &[(500, 600)]), 10.0, 32);
+        let (c0, _) = t.admit(stub(), span(&[(0, 100)], &[(100, 200)]), 10.0, 32, 0, None);
+        let (c1, _) = t.admit(stub(), span(&[(150, 160)], &[(500, 600)]), 10.0, 32, 0, None);
         let ids: Vec<u64> = t.runnable_shares().iter().map(|s| s.id).collect();
         assert_eq!(ids, vec![c0.id], "reader must wait for the live writer");
         // retire job0: one idle probe then a finished round
@@ -408,23 +540,23 @@ mod tests {
     #[test]
     fn waw_and_war_conflicts_also_order() {
         let mut t = JobTable::new();
-        let (w0, _) = t.admit(stub(), span(&[], &[(100, 200)]), 1.0, 32);
+        let (w0, _) = t.admit(stub(), span(&[], &[(100, 200)]), 1.0, 32, 0, None);
         // WAW: same output range
-        let (w1, _) = t.admit(stub(), span(&[], &[(150, 250)]), 1.0, 32);
+        let (w1, _) = t.admit(stub(), span(&[], &[(150, 250)]), 1.0, 32, 0, None);
         // WAR: writes what job0 reads
-        let (_r, _) = t.admit(stub(), span(&[(0, 50)], &[(300, 400)]), 1.0, 32);
-        let (w2, _) = t.admit(stub(), span(&[], &[(0, 10)]), 1.0, 32);
+        let (_r, _) = t.admit(stub(), span(&[(0, 50)], &[(300, 400)]), 1.0, 32, 0, None);
+        let (w2, _) = t.admit(stub(), span(&[], &[(0, 10)]), 1.0, 32, 0, None);
         assert!(t.jobs.iter().find(|e| e.id == w1.id).unwrap().deps.contains(&w0.id));
         assert!(t.jobs.iter().find(|e| e.id == w2.id).unwrap().deps.is_empty());
         // read-read sharing creates no edge
-        let (rr, _) = t.admit(stub(), span(&[(0, 50)], &[(700, 800)]), 1.0, 32);
+        let (rr, _) = t.admit(stub(), span(&[(0, 50)], &[(700, 800)]), 1.0, 32, 0, None);
         assert!(t.jobs.iter().find(|e| e.id == rr.id).unwrap().deps.is_empty());
     }
 
     #[test]
     fn retire_waits_for_active_rounds() {
         let mut t = JobTable::new();
-        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32);
+        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32, 0, None);
         let _ = t.start_round(c0.id);
         let _ = t.start_round(c0.id); // second device mid-round
         let a = t.finish_round(c0.id, 1.0, true, false);
@@ -439,15 +571,15 @@ mod tests {
     #[test]
     fn tile_size_switch_is_a_full_barrier_with_purge() {
         let mut t = JobTable::new();
-        let (c0, p) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32);
+        let (c0, p) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32, 0, None);
         assert!(!p, "first job establishes the geometry, nothing to purge");
         // disjoint ranges, but a different tile size ⇒ waits for job0
-        let (c1, p) = t.admit(stub(), span(&[], &[(100, 108)]), 1.0, 64);
+        let (c1, p) = t.admit(stub(), span(&[], &[(100, 108)]), 1.0, 64, 0, None);
         assert!(!p, "job0 is live: purge deferred to the barrier point");
         assert!(t.jobs.iter().find(|e| e.id == c1.id).unwrap().needs_purge);
         assert!(t.jobs.iter().find(|e| e.id == c1.id).unwrap().deps.contains(&c0.id));
         // a same-size job admitted behind the barrier must not overtake it
-        let (c2, _) = t.admit(stub(), span(&[], &[(200, 208)]), 1.0, 64);
+        let (c2, _) = t.admit(stub(), span(&[], &[(200, 208)]), 1.0, 64, 0, None);
         assert!(t.jobs.iter().find(|e| e.id == c2.id).unwrap().deps.contains(&c1.id));
         // retiring job0 reaches the barrier's quiescent point → purge now
         let _ = t.start_round(c0.id);
@@ -463,38 +595,149 @@ mod tests {
     #[test]
     fn switch_into_empty_table_purges_at_admission() {
         let mut t = JobTable::new();
-        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32);
+        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32, 0, None);
         let _ = t.start_round(c0.id);
         let _ = t.finish_round(c0.id, 0.0, true, false);
         assert!(t.is_empty());
-        let (_c1, purge_now) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 64);
+        let (_c1, purge_now) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 64, 0, None);
         assert!(purge_now, "stale 32-blocks must go before the 64-job runs");
         t.purge_done();
     }
 
     #[test]
-    fn failed_job_schedules_a_quiescent_purge() {
+    fn failed_job_retires_without_scheduling_a_purge() {
+        // Regression: a failed job used to set a global purge flag that
+        // wiped every tenant's warm tiles. The engine now releases its
+        // pins on the abort path (and evicts a lost device
+        // surgically), so failure must not trigger any purge.
         let mut t = JobTable::new();
-        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32);
-        let (c1, _) = t.admit(stub(), span(&[], &[(100, 108)]), 1.0, 32);
+        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32, 0, None);
+        let (c1, _) = t.admit(stub(), span(&[], &[(100, 108)]), 1.0, 32, 0, None);
         let _ = t.start_round(c0.id);
         let _ = t.start_round(c1.id);
-        // job0 fails while job1 is mid-round: purge must wait
         let a = t.finish_round(c0.id, 0.0, false, true);
         assert!(a.retired.is_some());
-        assert!(t.purge_pending);
-        assert!(!a.purge_now, "job1 still holds arena offsets");
-        let a = t.finish_round(c1.id, 1.0, false, false);
-        assert!(a.purge_now, "quiescent now");
+        assert!(!a.purge_now, "failure must not purge neighbours' warm tiles");
+        let a = t.finish_round(c1.id, 1.0, true, false);
+        assert!(a.retired.is_some());
+        assert!(!a.purge_now, "still no purge at quiescence");
+    }
+
+    /// Stub that records the abort error `reap_expired` delivers.
+    struct AbortStub {
+        aborted: Mutex<Option<Error>>,
+    }
+
+    impl DeviceJob for AbortStub {
+        fn run_round(&self, _dev: usize, _core: &EngineCore) -> Round {
+            Round::Idle
+        }
+        fn poison(&self, _msg: String) {}
+        fn done(&self) -> bool {
+            false
+        }
+        fn report(&self, _core: &EngineCore) -> Result<RealReport> {
+            Err(Error::Internal("stub".into()))
+        }
+        fn abort(&self, err: Error) {
+            *self.aborted.lock().unwrap() = Some(err);
+        }
+    }
+
+    #[test]
+    fn reap_is_a_no_op_without_deadlines_or_cancels() {
+        let mut t = JobTable::new();
+        let (_c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32, 0, None);
+        let v = t.version;
+        let acts = t.reap_expired();
+        assert!(acts.retired.is_empty());
+        assert!(!acts.purge_now);
+        assert_eq!(t.version, v, "fast path must not disturb the table");
+        assert_eq!(t.live_count(), 1);
+    }
+
+    #[test]
+    fn deadline_expiry_reaps_with_the_right_error() {
+        let mut t = JobTable::new();
+        let job = Arc::new(AbortStub { aborted: Mutex::new(None) });
+        let deadline = Some((Instant::now(), 5)); // already expired
+        let (c0, _) = t.admit(job.clone(), span(&[], &[(0, 8)]), 1.0, 32, 0, deadline);
+        let acts = t.reap_expired();
+        assert_eq!(acts.retired.len(), 1, "no round in flight: reaped on the spot");
+        assert_eq!(acts.retired[0].0.id, c0.id);
+        assert!(t.is_empty());
+        match job.aborted.lock().unwrap().take() {
+            Some(Error::DeadlineExceeded { limit_ms: 5 }) => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cancel_reaps_a_dep_blocked_job_and_spares_its_blocker() {
+        let mut t = JobTable::new();
+        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32, 0, None);
+        let job = Arc::new(AbortStub { aborted: Mutex::new(None) });
+        // Same output range: job1 is dependency-blocked behind job0.
+        let (c1, _) = t.admit(job.clone(), span(&[], &[(0, 8)]), 1.0, 32, 0, None);
+        c1.request_cancel();
+        let acts = t.reap_expired();
+        assert_eq!(acts.retired.len(), 1);
+        assert_eq!(acts.retired[0].0.id, c1.id);
+        assert!(matches!(job.aborted.lock().unwrap().take(), Some(Error::Cancelled)));
+        let ids: Vec<u64> = t.runnable_shares().iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![c0.id], "the blocker keeps running untouched");
+    }
+
+    #[test]
+    fn reaped_job_with_an_active_round_retires_at_round_end() {
+        let mut t = JobTable::new();
+        let deadline = Some((Instant::now(), 1));
+        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32, 0, deadline);
+        let _ = t.start_round(c0.id);
+        let acts = t.reap_expired();
+        assert!(acts.retired.is_empty(), "a device is still inside a round");
+        assert!(t.runnable_shares().is_empty(), "but no new rounds start");
+        let a = t.finish_round(c0.id, 0.0, false, false);
+        assert!(a.retired.is_some(), "round drain retires the reaped job");
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn reap_drains_a_barrier_dependency_and_purges() {
+        let mut t = JobTable::new();
+        let deadline = Some((Instant::now(), 1));
+        let (_c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32, 0, deadline);
+        // Different tile size: barrier depending on job0.
+        let (c1, _) = t.admit(stub(), span(&[], &[(100, 108)]), 1.0, 64, 0, None);
+        let acts = t.reap_expired();
+        assert_eq!(acts.retired.len(), 1);
+        assert!(acts.purge_now, "the reap drained the barrier's last dependency");
         t.purge_done();
-        assert!(!t.purge_pending);
+        let ids: Vec<u64> = t.runnable_shares().iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![c1.id]);
+    }
+
+    #[test]
+    fn live_count_and_tenant_inflight_track_admissions() {
+        let mut t = JobTable::new();
+        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32, 7, None);
+        let (_c1, _) = t.admit(stub(), span(&[], &[(100, 108)]), 1.0, 32, 7, None);
+        let (_c2, _) = t.admit(stub(), span(&[], &[(200, 208)]), 1.0, 32, 9, None);
+        assert_eq!(t.live_count(), 3);
+        assert_eq!(t.tenant_inflight(7), 2);
+        assert_eq!(t.tenant_inflight(9), 1);
+        assert_eq!(t.tenant_inflight(1), 0);
+        let _ = t.start_round(c0.id);
+        let _ = t.finish_round(c0.id, 0.0, true, false);
+        assert_eq!(t.live_count(), 2);
+        assert_eq!(t.tenant_inflight(7), 1);
     }
 
     #[test]
     fn version_bumps_on_admission_and_retirement() {
         let mut t = JobTable::new();
         let v0 = t.version;
-        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32);
+        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32, 0, None);
         assert!(t.version > v0);
         let v1 = t.version;
         let _ = t.start_round(c0.id);

@@ -27,6 +27,10 @@ pub struct JobShare {
     pub weight: f64,
     /// Flops executed on the job's behalf so far.
     pub charged: f64,
+    /// Submitting tenant — carried through the ledger so quota
+    /// accounting and per-tenant observability read the same record
+    /// the picker does.
+    pub tenant: u32,
 }
 
 impl JobShare {
@@ -60,7 +64,7 @@ mod tests {
     use std::collections::HashSet;
 
     fn share(id: u64, weight: f64, charged: f64) -> JobShare {
-        JobShare { id, weight, charged }
+        JobShare { id, weight, charged, tenant: 0 }
     }
 
     fn skip(ids: &[u64]) -> HashSet<u64> {

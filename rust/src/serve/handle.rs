@@ -79,6 +79,20 @@ impl<'scope> JobHandle<'scope> {
         self.job.stats()
     }
 
+    /// Request cooperative cancellation: the job is aborted with
+    /// [`crate::error::Error::Cancelled`] at the next round boundary.
+    /// In-flight rounds finish their current tasks (outputs are never
+    /// torn mid-tile), no new rounds start, and a subsequent
+    /// [`JobHandle::wait`] returns the `Cancelled` error — unless the
+    /// job finished first, in which case it won the race and reports
+    /// normally. Idempotent; other tenants' jobs are unaffected.
+    pub fn cancel(&self) {
+        self.ctl.request_cancel();
+        // Wake parked workers so the reap runs promptly even on an
+        // otherwise-idle runtime.
+        self.rt.core().notify_work();
+    }
+
     /// Park until the job completes and return its report. Outputs are
     /// fully written back when this returns.
     pub fn wait(self) -> Result<RealReport> {

@@ -61,6 +61,21 @@ pub(crate) trait DeviceJob: Send + Sync {
     /// wedging the fleet.
     fn poison(&self, msg: String);
 
+    /// Abort the job with a specific error (deadline expiry,
+    /// cooperative cancellation). First failure wins; in-flight rounds
+    /// finish their current tasks, no new rounds start. The default is
+    /// a no-op so test doubles need not care.
+    fn abort(&self, err: crate::error::Error) {
+        let _ = err;
+    }
+
+    /// The job's fault-recovery counters (operations retried, tasks
+    /// degraded to the host path, tasks migrated off a lost device).
+    /// Safe while in flight; all zeros by default.
+    fn fault_stats(&self) -> crate::coordinator::FaultStats {
+        crate::coordinator::FaultStats::default()
+    }
+
     /// Have all of the job's tasks completed? (A `Progress` round may
     /// have executed the last task without observing `Finished`; the
     /// worker folds this in to retire without an extra idle probe.)

@@ -38,6 +38,9 @@ fn span_name(kind: SpanKind) -> &'static str {
         SpanKind::Round => "round",
         SpanKind::Steal => "steal",
         SpanKind::Park => "park",
+        SpanKind::Fault => "fault",
+        SpanKind::Retry => "retry",
+        SpanKind::Migrate => "migrate",
     }
 }
 

@@ -21,6 +21,7 @@
 //! [`Json`] object (schema documented in the README's Observability
 //! section; validated by CI).
 
+use crate::coordinator::FaultStats;
 use crate::util::json::Json;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
@@ -179,6 +180,16 @@ struct LiveJob {
 struct GroupStats {
     jobs: u64,
     failed: u64,
+    /// Admissions refused with a backpressure error (capacity or
+    /// tenant quota) — these never became jobs.
+    rejected: u64,
+    /// Fault-recovery work done on this group's behalf: operations
+    /// retried after transient faults/arena pressure, operands served
+    /// through the host-path OOM fallback, tasks migrated off dead
+    /// devices.
+    retried: u64,
+    degraded: u64,
+    migrated: u64,
     flops: f64,
     queue_wait: Histogram,
     end_to_end: Histogram,
@@ -202,6 +213,7 @@ struct Inner {
     admitted: u64,
     retired: u64,
     failed: u64,
+    rejected: u64,
 }
 
 /// The resident runtime's metrics registry (see module docs).
@@ -267,9 +279,25 @@ impl MetricsRegistry {
         }
     }
 
-    /// A job retired: fold its latencies into the aggregates and hand
-    /// back the lifecycle for the span recorder.
-    pub fn on_retire(&self, job: u64, failed: bool, now_s: f64) -> Option<RetiredJob> {
+    /// An admission was refused with a backpressure error (queue at
+    /// capacity or tenant over its in-flight quota). The call never
+    /// became a job — only the rejection counters move.
+    pub fn on_reject(&self, tenant: u32, routine: &'static str) {
+        let mut inner = self.lock();
+        inner.rejected += 1;
+        inner.groups.entry((tenant, routine)).or_default().rejected += 1;
+    }
+
+    /// A job retired: fold its latencies and fault-recovery counters
+    /// into the aggregates and hand back the lifecycle for the span
+    /// recorder.
+    pub fn on_retire(
+        &self,
+        job: u64,
+        failed: bool,
+        now_s: f64,
+        faults: &FaultStats,
+    ) -> Option<RetiredJob> {
         let mut inner = self.lock();
         let live = inner.live.remove(&job)?;
         inner.retired += 1;
@@ -286,6 +314,9 @@ impl MetricsRegistry {
         if failed {
             g.failed += 1;
         }
+        g.retried += faults.retried as u64;
+        g.degraded += faults.degraded as u64;
+        g.migrated += faults.migrated as u64;
         g.flops += live.flops;
         g.queue_wait.record(queue_wait);
         g.end_to_end.record(end_to_end);
@@ -328,6 +359,11 @@ impl MetricsRegistry {
         #[derive(Default)]
         struct Roll {
             jobs: u64,
+            failed: u64,
+            rejected: u64,
+            retried: u64,
+            degraded: u64,
+            migrated: u64,
             flops: f64,
             queue_wait: Histogram,
             end_to_end: Histogram,
@@ -335,6 +371,11 @@ impl MetricsRegistry {
         impl Roll {
             fn fold(&mut self, g: &GroupStats) {
                 self.jobs += g.jobs;
+                self.failed += g.failed;
+                self.rejected += g.rejected;
+                self.retried += g.retried;
+                self.degraded += g.degraded;
+                self.migrated += g.migrated;
                 self.flops += g.flops;
                 merge(&mut self.queue_wait, &g.queue_wait);
                 merge(&mut self.end_to_end, &g.end_to_end);
@@ -342,6 +383,11 @@ impl MetricsRegistry {
             fn json(&self, with_flops: bool) -> Json {
                 let mut o = Json::obj();
                 o.set("jobs", Json::Num(self.jobs as f64))
+                    .set("failed", Json::Num(self.failed as f64))
+                    .set("rejected", Json::Num(self.rejected as f64))
+                    .set("retried", Json::Num(self.retried as f64))
+                    .set("degraded", Json::Num(self.degraded as f64))
+                    .set("migrated", Json::Num(self.migrated as f64))
                     .set("queue_wait_ms", self.queue_wait.quantiles_ms())
                     .set("end_to_end_ms", self.end_to_end.quantiles_ms());
                 if with_flops {
@@ -369,6 +415,7 @@ impl MetricsRegistry {
             .set("jobs_admitted", Json::Num(inner.admitted as f64))
             .set("jobs_retired", Json::Num(inner.retired as f64))
             .set("jobs_failed", Json::Num(inner.failed as f64))
+            .set("jobs_rejected", Json::Num(inner.rejected as f64))
             .set("jobs_in_flight", Json::Num(inner.live.len() as f64))
             .set("workers", Json::Arr(workers))
             .set("per_tenant", per_tenant)
@@ -434,10 +481,11 @@ mod tests {
         reg.on_round_start(1, 0.1);
         reg.on_round_start(1, 0.2); // second round: first-round stamp holds
         reg.on_round_end(0, 5_000_000);
-        let retired = reg.on_retire(1, false, 0.3).expect("live job retires");
+        let none = FaultStats::default();
+        let retired = reg.on_retire(1, false, 0.3, &none).expect("live job retires");
         assert_eq!(retired.tenant, 3);
         assert_eq!(retired.routine, "gemm");
-        assert!(reg.on_retire(1, false, 0.4).is_none(), "double retire is ignored");
+        assert!(reg.on_retire(1, false, 0.4, &none).is_none(), "double retire is ignored");
         let snap = reg.snapshot();
         assert_eq!(snap.get("jobs_retired").and_then(Json::as_f64), Some(1.0));
         assert_eq!(snap.get("jobs_in_flight").and_then(Json::as_f64), Some(0.0));
@@ -448,5 +496,24 @@ mod tests {
         let workers = snap.get("workers").and_then(Json::as_arr).expect("workers");
         assert_eq!(workers.len(), 2);
         assert!(workers[0].get("busy_s").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn rejections_and_fault_counters_surface_per_tenant() {
+        let reg = MetricsRegistry::new(1);
+        reg.on_reject(5, "gemm");
+        reg.on_reject(5, "gemm");
+        reg.on_admit(1, 5, "gemm", 10.0, 0.0);
+        let faults = FaultStats { retried: 3, degraded: 1, migrated: 2 };
+        reg.on_retire(1, true, 0.1, &faults).expect("retires");
+        let snap = reg.snapshot();
+        assert_eq!(snap.get("jobs_rejected").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(snap.get("jobs_failed").and_then(Json::as_f64), Some(1.0));
+        let tenant = snap.get("per_tenant").and_then(|t| t.get("5")).expect("tenant 5");
+        assert_eq!(tenant.get("rejected").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(tenant.get("failed").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(tenant.get("retried").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(tenant.get("degraded").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(tenant.get("migrated").and_then(Json::as_f64), Some(2.0));
     }
 }

@@ -58,6 +58,16 @@ pub enum SpanKind {
     Steal,
     /// The worker was parked on the idle condvar.
     Park,
+    /// A fault fired from the injection plane (device kill, wedge, or a
+    /// forced op failure). `amount` = the faulted device index.
+    Fault,
+    /// A faulted or refused operation being retried (transient kernel/
+    /// transfer failure, arena-OOM eviction-retry backoff). `amount` =
+    /// the attempt number.
+    Retry,
+    /// A task abandoned on a dead device and re-admitted, or drained
+    /// from a dead device's station by a survivor. `amount` = task id.
+    Migrate,
 }
 
 impl SpanKind {

@@ -23,6 +23,13 @@ impl<T> OnceCell<T> {
         self.cell.get()
     }
 
+    /// Set the value if the cell is still empty; hands the value back
+    /// if another initializer already won.
+    pub fn set(&self, v: T) -> Result<(), T> {
+        let _guard = self.init.lock().unwrap_or_else(|e| e.into_inner());
+        self.cell.set(v)
+    }
+
     /// Get the value, running `f` to create it if empty. If `f` fails
     /// the cell stays empty and a later call may retry.
     pub fn get_or_try_init<F, E>(&self, f: F) -> Result<&T, E>
@@ -72,6 +79,14 @@ mod tests {
         // Subsequent initializers are ignored.
         assert_eq!(*c.get_or_try_init(|| Ok::<u32, &str>(9)).unwrap(), 7);
         assert_eq!(c.get(), Some(&7));
+    }
+
+    #[test]
+    fn set_wins_only_while_empty() {
+        let c: OnceCell<u32> = OnceCell::new();
+        assert!(c.set(3).is_ok());
+        assert_eq!(c.set(4), Err(4));
+        assert_eq!(*c.get_or_init(|| 9), 3);
     }
 
     #[test]

@@ -1,0 +1,332 @@
+//! Fault tolerance and tenant protection of the resident runtime.
+//!
+//! The contract under test: a seeded fault schedule (device kill,
+//! transient kernel/transfer failures, forced arena OOM) may change
+//! *where and when* work executes, but never *what* it computes —
+//! recovery re-runs each interrupted task from its host master copies
+//! in the same k-order, so results stay bit-for-bit equal to serial
+//! execution on a healthy machine. Deadlines, cancellation and
+//! admission backpressure abort or refuse individual jobs with
+//! distinct error variants while other tenants complete unaffected.
+//!
+//! Run under both the default harness and `RUST_TEST_THREADS=1`, and
+//! in CI additionally with a `BLASX_FAULTS` schedule over the whole
+//! suite (the chaos job).
+
+use blasx::api::types::{Diag, Side, Trans, Uplo};
+use blasx::api::{self, Context};
+use blasx::error::Error;
+use blasx::fault::FaultPlan;
+use blasx::util::json::Json;
+use blasx::util::prng::Prng;
+
+fn ctx_with_plan(plan: Option<FaultPlan>) -> Context {
+    Context::new(2).with_arena(8 << 20).with_tile(32).with_fault_plan(plan)
+}
+
+fn serial_ctx() -> Context {
+    // The healthy reference: same geometry, one-shot engine, no plan.
+    Context::new(2).with_arena(8 << 20).with_tile(32).with_persistent(false)
+}
+
+fn rand(p: &mut Prng, n: usize) -> Vec<f64> {
+    let mut v = vec![0.0; n];
+    p.fill_f64(&mut v, -1.0, 1.0);
+    v
+}
+
+fn upper_tri(p: &mut Prng, n: usize) -> Vec<f64> {
+    let mut a = rand(p, n * n);
+    for x in a.iter_mut() {
+        *x *= 0.5 / (n as f64).sqrt();
+    }
+    for i in 0..n {
+        a[i * n + i] = 2.0;
+    }
+    a
+}
+
+/// One client's mixed-routine workload (dgemm → dsyrk → in-place
+/// dtrsm on the dgemm output, twice). Returns the chain result and
+/// the syrk output.
+fn client_workload(ctx: &Context, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let (m, n, k) = (96, 64, 48);
+    let mut p = Prng::new(seed);
+    let a = rand(&mut p, m * k);
+    let b = rand(&mut p, k * n);
+    let tri = upper_tri(&mut p, m);
+    let sa = rand(&mut p, n * k);
+    let mut c = vec![0.0; m * n];
+    let mut sc = rand(&mut p, n * n);
+    ctx.invalidate_host(&a);
+    ctx.invalidate_host(&b);
+    ctx.invalidate_host(&tri);
+    ctx.invalidate_host(&sa);
+    for _ in 0..2 {
+        api::dgemm(ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m)
+            .unwrap();
+        api::syrk(ctx, Uplo::Lower, Trans::No, n, k, 0.7, &sa, n, 0.4, &mut sc, n).unwrap();
+        api::trsm(ctx, Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, m, n, 1.0, &tri, m, &mut c, m)
+            .unwrap();
+    }
+    (c, sc)
+}
+
+/// Sum a per-tenant counter across the metrics snapshot.
+fn tenant_counter_sum(m: &Json, field: &str) -> usize {
+    match m.get("per_tenant") {
+        Some(Json::Obj(tenants)) => tenants
+            .iter()
+            .map(|(_, o)| o.get(field).and_then(Json::as_usize).unwrap_or(0))
+            .sum(),
+        _ => 0,
+    }
+}
+
+/// The tentpole acceptance test: a device dies mid-run under a
+/// 4-client mixed-routine stress, transient faults hit the survivor —
+/// and every client's result is bit-for-bit what the healthy serial
+/// engine produces. The trace records the fault; the metrics ledger
+/// records the recovery work.
+#[test]
+fn device_kill_mid_serve_matches_serial_bit_for_bit() {
+    let plan = FaultPlan::parse("kill@dev1:op12; kernel@dev0:op3; h2d@dev0:op5x2").unwrap();
+    let ctx = ctx_with_plan(Some(plan));
+    ctx.set_tracing(true);
+    let results: Vec<(u64, Vec<f64>, Vec<f64>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4u64)
+            .map(|seed| {
+                let ctx = ctx.clone();
+                scope.spawn(move || {
+                    let (c, sc) = client_workload(&ctx, 800 + seed);
+                    (seed, c, sc)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(ctx.jobs_in_flight(), 0);
+    for (seed, c, sc) in results {
+        let (want_c, want_sc) = client_workload(&serial_ctx(), 800 + seed);
+        assert_eq!(c, want_c, "client {seed}: chain diverged under device kill");
+        assert_eq!(sc, want_sc, "client {seed}: syrk diverged under device kill");
+    }
+    // The kill left a Fault span in the trace…
+    let trace = ctx.chrome_trace_json().expect("tracing was enabled");
+    assert!(trace.contains("\"fault\""), "device kill must be visible in the trace");
+    // …and the recovery shows up in the per-tenant fault ledger (the
+    // transient kernel/h2d specs guarantee at least a retry even if
+    // the kill fired while device 1 held no tasks).
+    let m = ctx.snapshot_metrics().expect("persistent runtime has metrics");
+    let recovery = tenant_counter_sum(&m, "retried")
+        + tenant_counter_sum(&m, "degraded")
+        + tenant_counter_sum(&m, "migrated");
+    assert!(
+        recovery > 0,
+        "fault schedule fired but no recovery was recorded:\n{}",
+        m.to_string_pretty()
+    );
+}
+
+/// Forced arena-allocation failures degrade to eviction-retry and then
+/// the per-task host path — never a panic, never a wrong result.
+#[test]
+fn injected_oom_degrades_to_host_path_not_panic() {
+    // Both a deterministic burst and a seeded probabilistic drizzle.
+    for spec in ["oom@dev0:op0x8", "oom@dev0:p0.3; oom@dev1:p0.2; seed=11"] {
+        let ctx = ctx_with_plan(Some(FaultPlan::parse(spec).unwrap()));
+        let (m, n, k) = (96, 64, 48);
+        let mut p = Prng::new(31);
+        let a = rand(&mut p, m * k);
+        let b = rand(&mut p, k * n);
+        let tri = upper_tri(&mut p, m);
+        let mut c = vec![0.0; m * n];
+        api::dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m)
+            .unwrap_or_else(|e| panic!("{spec}: OOM must degrade, not fail: {e}"));
+        api::trsm(&ctx, Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, m, n, 1.0, &tri, m, &mut c, m)
+            .unwrap_or_else(|e| panic!("{spec}: OOM must degrade, not fail: {e}"));
+        let mut want = vec![0.0; m * n];
+        let serial = serial_ctx();
+        api::dgemm(&serial, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut want, m)
+            .unwrap();
+        api::trsm(&serial, Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, m, n, 1.0, &tri, m, &mut want, m)
+            .unwrap();
+        assert_eq!(c, want, "{spec}: degraded path diverged from serial");
+    }
+}
+
+/// A zero deadline reaps the job with `DeadlineExceeded` at the first
+/// round boundary, while a concurrent tenant on the same runtime (no
+/// deadline) completes normally.
+#[test]
+fn deadline_reaps_one_tenant_and_spares_the_other() {
+    let ctx = ctx_with_plan(None);
+    let doomed = ctx.clone().with_deadline_ms(Some(0));
+    let n = 64;
+    std::thread::scope(|scope| {
+        let d = &doomed;
+        scope.spawn(move || {
+            let mut p = Prng::new(51);
+            let a = rand(&mut p, n * n);
+            let b = rand(&mut p, n * n);
+            let mut c = vec![0.0; n * n];
+            let err = api::dgemm(d, Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut c, n)
+                .expect_err("a 0ms deadline must reap the job");
+            assert!(
+                matches!(err, Error::DeadlineExceeded { limit_ms: 0 }),
+                "wrong error for an expired deadline: {err}"
+            );
+        });
+        let healthy = &ctx;
+        scope.spawn(move || {
+            let mut p = Prng::new(52);
+            let a = rand(&mut p, n * n);
+            let b = rand(&mut p, n * n);
+            let mut c = vec![0.0; n * n];
+            api::dgemm(healthy, Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut c, n)
+                .expect("the deadline-free tenant must be unaffected");
+            let mut want = vec![0.0; n * n];
+            api::dgemm(&serial_ctx(), Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut want, n)
+                .unwrap();
+            assert_eq!(c, want);
+        });
+    });
+    assert_eq!(ctx.jobs_in_flight(), 0);
+}
+
+/// Cancelling the dep-blocked second job of an aliasing chain aborts
+/// it with `Cancelled` — deterministically, because the reap runs
+/// before the scheduler can ever pick the job — and leaves the first
+/// job's output intact.
+#[test]
+fn cancel_aborts_a_chained_job_and_keeps_the_predecessor_result() {
+    let ctx = ctx_with_plan(None);
+    // Big enough that the dgemm cannot retire (and unblock the trsm)
+    // in the microseconds before the cancel request lands.
+    let n = 256;
+    let mut p = Prng::new(61);
+    let a = rand(&mut p, n * n);
+    let b = rand(&mut p, n * n);
+    let tri = upper_tri(&mut p, n);
+    let mut c = vec![0.0; n * n];
+    ctx.scope(|s| {
+        let (ra, rb, rt) = (s.input(&a), s.input(&b), s.input(&tri));
+        let rc = s.buffer(&mut c);
+        let h1 = s.dgemm(Trans::No, Trans::No, n, n, n, 1.0, ra, n, rb, n, 0.0, rc, n)?;
+        // The trsm reads AND overwrites the dgemm's output, so it is
+        // dep-blocked behind h1 — cancelled before it can ever run.
+        let h2 = s.dtrsm(Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, n, n, 1.0, rt, n, rc, n)?;
+        h2.cancel();
+        h2.cancel(); // idempotent
+        let err = h2.wait().expect_err("a cancelled dep-blocked job must not run");
+        assert!(matches!(err, Error::Cancelled), "wrong error for cancel: {err}");
+        h1.wait().expect("the predecessor must be unaffected");
+        Ok(())
+    })
+    .unwrap();
+    // c holds exactly the dgemm result: the cancelled trsm never
+    // touched it.
+    let mut want = vec![0.0; n * n];
+    api::dgemm(&serial_ctx(), Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut want, n)
+        .unwrap();
+    assert_eq!(c, want, "cancelled successor must leave the chain at the predecessor's output");
+}
+
+/// At `admit_capacity` (or a tenant's quota) further submissions fail
+/// fast with `Backpressure` — nothing is enqueued, the rejection is
+/// counted, and the runtime keeps serving afterwards.
+#[test]
+fn backpressure_rejects_at_capacity_and_recovers() {
+    let ctx = ctx_with_plan(None).with_admit_capacity(1);
+    let n = 192;
+    let mut p = Prng::new(71);
+    let a = rand(&mut p, n * n);
+    let b = rand(&mut p, n * n);
+    let mut c1 = vec![0.0; n * n];
+    let mut c2 = vec![0.0; n * n];
+    ctx.scope(|s| {
+        let (ra, rb) = (s.input(&a), s.input(&b));
+        let rc1 = s.buffer(&mut c1);
+        let rc2 = s.buffer(&mut c2);
+        let h1 = s.dgemm(Trans::No, Trans::No, n, n, n, 1.0, ra, n, rb, n, 0.0, rc1, n)?;
+        let err = s
+            .dgemm(Trans::No, Trans::No, n, n, n, 1.0, ra, n, rb, n, 0.0, rc2, n)
+            .map(|h| h.detach())
+            .expect_err("the queue is at capacity: the second job must be refused");
+        assert!(matches!(err, Error::Backpressure(_)), "wrong error at capacity: {err}");
+        h1.wait()?;
+        // Capacity freed: the runtime serves again.
+        let h3 = s.dgemm(Trans::No, Trans::No, n, n, n, 1.0, ra, n, rb, n, 0.0, rc2, n)?;
+        h3.wait()?;
+        Ok(())
+    })
+    .unwrap();
+    assert_eq!(c1, c2, "identical inputs must give identical outputs after backpressure");
+    let m = ctx.snapshot_metrics().expect("persistent runtime has metrics");
+    assert!(
+        m.get("jobs_rejected").and_then(Json::as_usize).unwrap_or(0) >= 1,
+        "the rejection must be counted:\n{}",
+        m.to_string_pretty()
+    );
+    assert!(tenant_counter_sum(&m, "rejected") >= 1);
+
+    // The per-tenant quota takes the same fail-fast path.
+    let ctx = ctx_with_plan(None).with_tenant_quota(1);
+    let mut q1 = vec![0.0; n * n];
+    let mut q2 = vec![0.0; n * n];
+    ctx.scope(|s| {
+        let (ra, rb) = (s.input(&a), s.input(&b));
+        let rq1 = s.buffer(&mut q1);
+        let rq2 = s.buffer(&mut q2);
+        let h1 = s.dgemm(Trans::No, Trans::No, n, n, n, 1.0, ra, n, rb, n, 0.0, rq1, n)?;
+        let err = s
+            .dgemm(Trans::No, Trans::No, n, n, n, 1.0, ra, n, rb, n, 0.0, rq2, n)
+            .map(|h| h.detach())
+            .expect_err("this tenant is at quota: the second job must be refused");
+        assert!(matches!(err, Error::Backpressure(_)), "wrong error at quota: {err}");
+        h1.wait()?;
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// Regression for the tentpole's surgical-invalidation claim: a failed
+/// job must NOT purge the shared tile caches. A warm tenant stays warm
+/// (zero host reads) across another tenant's deadline failure.
+#[test]
+fn failed_job_does_not_purge_warm_caches() {
+    let ctx = ctx_with_plan(None);
+    let (m, n, k) = (96, 64, 48);
+    let mut p = Prng::new(81);
+    let a = rand(&mut p, m * k);
+    let b = rand(&mut p, k * n);
+    let mut c = vec![0.0; m * n];
+    // Warm up: the second call must already be transfer-free (beta = 0,
+    // so C is never host-read).
+    api::dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m).unwrap();
+    let warm =
+        api::dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m)
+            .unwrap();
+    assert_eq!(warm.transfers.input_host_reads(), 0, "call 2 must run fully warm");
+
+    // Another tenant fails on the same runtime (disjoint buffers).
+    let doomed = ctx.clone().with_deadline_ms(Some(0));
+    let mut p2 = Prng::new(82);
+    let da = rand(&mut p2, m * k);
+    let db = rand(&mut p2, k * n);
+    let mut dc = vec![0.0; m * n];
+    let err = api::dgemm(&doomed, Trans::No, Trans::No, m, n, k, 1.0, &da, m, &db, k, 0.0, &mut dc, m)
+        .expect_err("the doomed tenant must be reaped");
+    assert!(matches!(err, Error::DeadlineExceeded { .. }));
+
+    // The warm tenant is still warm: the failure was retired without a
+    // global purge.
+    let after =
+        api::dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m)
+            .unwrap();
+    assert_eq!(
+        after.transfers.input_host_reads(),
+        0,
+        "a failed job must not purge other tenants' warm tiles"
+    );
+}
