@@ -1,0 +1,208 @@
+//! The mixed-tile workload the PR-8 dispatch work exists for: tenants
+//! alternating DIFFERENT tile sizes through one resident runtime.
+//!
+//! Pre-PR-8 the runtime serialized every tile-size change behind an
+//! admission barrier and then purged EVERY device cache, so an
+//! alternating two-tenant workload re-staged its whole working set on
+//! each call. With the tile size folded into `TileKey`, each geometry
+//! is its own cache generation and alternation is transfer-free after
+//! one cold call per tenant. Three scenarios make the gap measurable:
+//!
+//! - **single-tile warm** — one tenant, fixed `t` (the best case the
+//!   old runtime could reach: never switch);
+//! - **mixed-tile warm** — two tenants alternating `t`=64/128 over one
+//!   shared runtime (the case the old runtime thrashed on; the column
+//!   `warm host reads` must be 0 — that IS the acceptance property);
+//! - **mixed-tile cold** — the same alternation with every call on a
+//!   fresh one-shot engine: a faithful floor for what the purge made
+//!   each switch cost (the old path also paid the barrier drain).
+//!
+//! A second probe measures dispatcher overhead: warm single-tenant
+//! calls with a profile-backed dispatcher on the hot path vs without
+//! (one BTreeMap lookup per call — the table shows it is noise).
+//!
+//! Results print as a table and land in `bench_out/BENCH_dispatch.json`
+//! plus the repo-root `BENCH_dispatch.json` (committed snapshot —
+//! regenerate on a host with cargo; the committed numbers are from the
+//! authoring container).
+
+use blasx::api::types::{Dtype, Trans};
+use blasx::api::{self, Context};
+use blasx::bench::{print_table, write_json};
+use blasx::dispatch::{shape_key, Choice, Placement, Profile};
+use blasx::util::json::Json;
+use blasx::util::prng::Prng;
+use std::time::Instant;
+
+const N: usize = 256;
+const DEVICES: usize = 2;
+const TILES: [usize; 2] = [64, 128];
+const ROUNDS: usize = 6;
+
+struct Tenant {
+    a: Vec<f64>,
+    b: Vec<f64>,
+    c: Vec<f64>,
+}
+
+fn tenant(seed: u64) -> Tenant {
+    let mut p = Prng::new(seed);
+    let mut a = vec![0.0; N * N];
+    let mut b = vec![0.0; N * N];
+    p.fill_f64(&mut a, -1.0, 1.0);
+    p.fill_f64(&mut b, -1.0, 1.0);
+    Tenant { a, b, c: vec![0.0; N * N] }
+}
+
+fn call(ctx: &Context, t: &mut Tenant) -> usize {
+    let rep = api::dgemm(
+        ctx, Trans::No, Trans::No, N, N, N, 1.0, &t.a, N, &t.b, N, 0.0, &mut t.c, N,
+    )
+    .expect("bench dgemm");
+    rep.transfers.input_host_reads()
+}
+
+struct Row {
+    scenario: &'static str,
+    calls: usize,
+    wall_ms: f64,
+    calls_per_sec: f64,
+    /// Host→device tile reads summed over every post-warmup call (the
+    /// purge-era runtime re-read everything here; PR-8 reads nothing).
+    warm_host_reads: usize,
+}
+
+fn row(scenario: &'static str, calls: usize, wall: f64, warm_host_reads: usize) -> Row {
+    Row { scenario, calls, wall_ms: wall * 1e3, calls_per_sec: calls as f64 / wall, warm_host_reads }
+}
+
+/// One tenant, one tile size, warm repeats.
+fn single_tile_warm() -> Row {
+    let ctx = Context::new(DEVICES).with_arena(32 << 20).with_tile(TILES[0]);
+    let mut t = tenant(7);
+    call(&ctx, &mut t); // warm
+    let start = Instant::now();
+    let mut reads = 0;
+    for _ in 0..2 * ROUNDS {
+        reads += call(&ctx, &mut t);
+    }
+    row("single-tile warm", 2 * ROUNDS, start.elapsed().as_secs_f64(), reads)
+}
+
+/// Two tenants alternating tile sizes over ONE shared runtime.
+fn mixed_tile_warm() -> Row {
+    let ctx_a = Context::new(DEVICES).with_arena(32 << 20).with_tile(TILES[0]);
+    let ctx_b = ctx_a.clone().with_tile(TILES[1]);
+    let mut ta = tenant(8);
+    let mut tb = tenant(9);
+    call(&ctx_a, &mut ta); // one cold call per generation
+    call(&ctx_b, &mut tb);
+    let start = Instant::now();
+    let mut reads = 0;
+    for _ in 0..ROUNDS {
+        reads += call(&ctx_a, &mut ta);
+        reads += call(&ctx_b, &mut tb);
+    }
+    row("mixed-tile warm", 2 * ROUNDS, start.elapsed().as_secs_f64(), reads)
+}
+
+/// The purge-era floor: every switch pays full re-staging (fresh
+/// one-shot engine per call, cold caches — the old runtime additionally
+/// paid the admission-barrier drain).
+fn mixed_tile_cold() -> Row {
+    let mut ta = tenant(8);
+    let mut tb = tenant(9);
+    let start = Instant::now();
+    let mut reads = 0;
+    for _ in 0..ROUNDS {
+        for (tile, t) in [(TILES[0], &mut ta), (TILES[1], &mut tb)] {
+            let ctx = Context::new(DEVICES)
+                .with_arena(32 << 20)
+                .with_tile(tile)
+                .with_persistent(false);
+            reads += call(&ctx, t);
+        }
+    }
+    row("mixed-tile cold (purge floor)", 2 * ROUNDS, start.elapsed().as_secs_f64(), reads)
+}
+
+/// Dispatcher hot-path overhead: warm calls with a profile entry
+/// covering the shape vs the dispatch-free context.
+fn overhead_probe() -> (f64, f64) {
+    let warm_best = |ctx: &Context| {
+        let mut t = tenant(10);
+        call(ctx, &mut t);
+        (0..5)
+            .map(|_| {
+                let t0 = Instant::now();
+                call(ctx, &mut t);
+                t0.elapsed().as_secs_f64()
+            })
+            .fold(f64::INFINITY, f64::min)
+    };
+    let plain = Context::new(DEVICES).with_arena(32 << 20).with_tile(TILES[0]);
+    let base_ms = warm_best(&plain) * 1e3;
+    let mut prof = Profile::new();
+    prof.set(
+        shape_key("gemm", Dtype::F64, N, N, N),
+        Choice { t: TILES[0], kernel_threads: 1, mt_cutoff: None, place: Placement::Device },
+    );
+    let dispatched =
+        Context::new(DEVICES).with_arena(32 << 20).with_tile(TILES[0]).with_profile(prof);
+    let disp_ms = warm_best(&dispatched) * 1e3;
+    (base_ms, disp_ms)
+}
+
+fn main() {
+    let rows = vec![single_tile_warm(), mixed_tile_warm(), mixed_tile_cold()];
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.scenario.to_string(),
+                r.calls.to_string(),
+                format!("{:.1}", r.wall_ms),
+                format!("{:.1}", r.calls_per_sec),
+                r.warm_host_reads.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        "mixed-tile dispatch: alternating tile sizes over one resident runtime",
+        &["scenario", "calls", "wall ms", "calls/s", "warm host reads"],
+        &table,
+    );
+    let (base_ms, disp_ms) = overhead_probe();
+    println!(
+        "\ndispatch overhead probe: warm call {base_ms:.3} ms plain vs {disp_ms:.3} ms \
+         with a profile-backed dispatcher on the hot path"
+    );
+
+    let mut json = Json::obj();
+    json.set("bench", Json::Str("dispatch_mixed".into()));
+    json.set("n", Json::Num(N as f64));
+    json.set("devices", Json::Num(DEVICES as f64));
+    json.set("tiles", Json::Arr(TILES.iter().map(|&t| Json::Num(t as f64)).collect()));
+    json.set("rounds", Json::Num(ROUNDS as f64));
+    let mut arr = Vec::new();
+    for r in &rows {
+        let mut o = Json::obj();
+        o.set("scenario", Json::Str(r.scenario.into()));
+        o.set("calls", Json::Num(r.calls as f64));
+        o.set("wall_ms", Json::Num(r.wall_ms));
+        o.set("calls_per_sec", Json::Num(r.calls_per_sec));
+        o.set("warm_host_reads", Json::Num(r.warm_host_reads as f64));
+        arr.push(o);
+    }
+    json.set("results", Json::Arr(arr));
+    let mut probe = Json::obj();
+    probe.set("warm_call_ms_plain", Json::Num(base_ms));
+    probe.set("warm_call_ms_dispatched", Json::Num(disp_ms));
+    json.set("overhead_probe", probe);
+    write_json("BENCH_dispatch", &json);
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_dispatch.json");
+    match std::fs::write(&root, json.to_string_pretty()) {
+        Ok(()) => println!("[bench] wrote {}", root.display()),
+        Err(e) => eprintln!("[bench] cannot write {}: {e}", root.display()),
+    }
+}

@@ -83,6 +83,7 @@ class BlasxConfig(ctypes.Structure):
         ("max_inflight", ctypes.c_int),
         ("tenant_quota", ctypes.c_int),
         ("faults", ctypes.c_char_p),
+        ("profile", ctypes.c_char_p),
     ]
 
 
@@ -109,7 +110,8 @@ def main():
     declare(lib)
     # Explicit configuration — must be the first BLASX call. Zeroed
     # fields keep their defaults; `faults` would take a BLASX_FAULTS
-    # schedule (e.g. b"kill@dev1:op40") for chaos runs.
+    # schedule (e.g. b"kill@dev1:op40") for chaos runs, `profile` a
+    # `blasx tune` dispatch-profile path (e.g. b"profile.json").
     cfg = BlasxConfig(devices=2, arena_mb=32)
     assert lib.blasx_init(ctypes.byref(cfg)) == 0, "blasx_init must be first"
     print(lib.blasx_version().decode(), "from Python/ctypes")

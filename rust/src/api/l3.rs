@@ -47,11 +47,14 @@
 //! machinery to cblas-compatible callers over raw pointers.
 
 use super::check;
-use super::types::{Diag, Scalar, Side, Trans, Uplo};
+use super::types::{Diag, Dtype, Scalar, Side, Trans, Uplo};
 use crate::batch::{taskize_batch, BatchDesc, BatchedGemm};
-use crate::coordinator::real_engine::{run_real_batch, Mats, RealReport};
+use crate::cache::CacheStats;
+use crate::coordinator::real_engine::{run_real_batch, Mats, RealReport, TransferStats};
 use crate::coordinator::{Backend, RunConfig};
+use crate::dispatch::{Choice, Dispatcher, Placement, Profile};
 use crate::error::{illegal, Result};
+use crate::hostblas;
 use crate::runtime::Runtime;
 use crate::task::{
     taskize_gemm, taskize_symm, taskize_syr2k, taskize_syrk, taskize_trmm, taskize_trsm,
@@ -74,6 +77,11 @@ pub struct Context {
     /// calls (default). `false` restores the one-shot engine: fresh
     /// threads and cold caches per call.
     pub persistent: bool,
+    /// Per-shape adaptive dispatch (see [`crate::dispatch`]): when set,
+    /// blocking calls consult it for tile size, kernel fan-out, the
+    /// gemm_mt cutoff and host-vs-device placement. `None` (default)
+    /// keeps the historical fixed-`cfg` behaviour exactly.
+    dispatch: Option<Arc<Dispatcher>>,
     /// The lazily-booted resident runtime, shared by clones.
     runtime: Arc<Mutex<Option<Arc<Runtime>>>>,
 }
@@ -93,6 +101,7 @@ impl Default for Context {
             arena_bytes: 64 << 20,
             cfg: RunConfig { t: 256, ..Default::default() },
             persistent: true,
+            dispatch: None,
             runtime: Arc::new(Mutex::new(None)),
         }
     }
@@ -105,10 +114,11 @@ impl Context {
 
     pub fn with_tile(mut self, t: usize) -> Context {
         self.cfg.t = t;
-        // Same reasoning as `with_arena`: a derived context with a
-        // different tile size gets its own runtime slot, so alternating
-        // calls on two clones don't ping-pong-purge one shared cache.
-        self.runtime = Arc::new(Mutex::new(None));
+        // Tile-size clones deliberately KEEP the shared runtime slot:
+        // the tile size is a discriminant of `crate::tile::TileKey`, so
+        // each geometry is its own cache generation — clones with
+        // different tile sizes share the warm engine and never disturb
+        // each other's cached tiles.
         self
     }
 
@@ -144,6 +154,36 @@ impl Context {
     pub fn with_persistent(mut self, on: bool) -> Context {
         self.persistent = on;
         self
+    }
+
+    /// Dispatch from a recorded profile (`blasx tune` output): blocking
+    /// calls look their shape bucket up and get that exact tile size /
+    /// kernel fan-out / cutoff / placement, deterministically, falling
+    /// back to the static heuristic for unseen shapes. See
+    /// [`crate::dispatch`].
+    pub fn with_profile(mut self, profile: Profile) -> Context {
+        self.dispatch = Some(Arc::new(Dispatcher::from_profile(profile)));
+        self
+    }
+
+    /// Load and install a dispatch profile from a JSON file (see
+    /// [`Context::with_profile`]).
+    pub fn with_profile_file(self, path: &str) -> Result<Context> {
+        Ok(self.with_profile(Profile::load(path)?))
+    }
+
+    /// Adaptive per-shape dispatch with no recorded profile: choices
+    /// start at the heuristic, explore the tile-size candidates in a
+    /// deterministic rotation, and settle on the best measured
+    /// throughput per shape bucket. See [`crate::dispatch`].
+    pub fn with_adaptive_dispatch(mut self) -> Context {
+        self.dispatch = Some(Arc::new(Dispatcher::adaptive(Profile::new())));
+        self
+    }
+
+    /// The installed dispatcher, if any (shared by clones).
+    pub fn dispatcher(&self) -> Option<&Arc<Dispatcher>> {
+        self.dispatch.as_ref()
     }
 
     /// Arm the fault-injection plane (see [`crate::fault`]): the plan
@@ -338,10 +378,111 @@ impl Context {
     ) -> Result<RealReport> {
         let mut cfg = self.cfg.clone();
         cfg.routine = routine;
+        self.execute_cfg(&cfg, ts, problems)
+    }
+
+    /// [`Context::execute`] with a fully-resolved per-call config (the
+    /// dispatcher may have overridden tile size / fan-out / cutoff).
+    pub(crate) fn execute_cfg<T: Scalar>(
+        &self,
+        cfg: &RunConfig,
+        ts: &TaskSet,
+        problems: Vec<Mats<'_, T>>,
+    ) -> Result<RealReport> {
         if !self.persistent {
-            return run_real_batch(&cfg, ts, problems, self.n_devices, self.arena_bytes);
+            return run_real_batch(cfg, ts, problems, self.n_devices, self.arena_bytes);
         }
-        self.runtime().submit(&cfg, ts, problems)
+        self.runtime().submit(cfg, ts, problems)
+    }
+
+    /// The dispatcher's decision for a blocking call, when one is
+    /// installed. The base choice carries this context's own defaults;
+    /// the chosen tile size is halved until the arena can hold the
+    /// engine's 8-tile round working set (a profile recorded on a
+    /// bigger machine must not wedge a smaller one).
+    fn dispatch_choice(
+        &self,
+        routine: &'static str,
+        dt: Dtype,
+        m: usize,
+        n: usize,
+        k: usize,
+    ) -> Option<Choice> {
+        let d = self.dispatch.as_ref()?;
+        let base = Choice {
+            t: self.cfg.t,
+            kernel_threads: self.cfg.worker_threads,
+            mt_cutoff: self.cfg.mt_cutoff,
+            place: Placement::Device,
+        };
+        let mut ch = d.choose(routine, dt, m, n, k, &base);
+        let esz = dt.size_bytes();
+        while ch.t > 64 && self.arena_bytes < 8 * ch.t * ch.t * esz {
+            ch.t /= 2;
+        }
+        Some(ch)
+    }
+
+    /// Resolve a blocking call's effective (tile size, run config):
+    /// the context defaults, overridden by the dispatcher's
+    /// device-placement choice when one is installed. Host placement
+    /// is resolved by the caller (only `gemm` has a host fast path) —
+    /// this helper applies Device choices only, so every other routine
+    /// can use it unconditionally.
+    fn plan_call(
+        &self,
+        routine: &'static str,
+        dt: Dtype,
+        m: usize,
+        n: usize,
+        k: usize,
+    ) -> (usize, RunConfig) {
+        let mut cfg = self.cfg.clone();
+        cfg.routine = routine;
+        if let Some(ch) = self.dispatch_choice(routine, dt, m, n, k) {
+            if ch.place == Placement::Device {
+                cfg.t = ch.t;
+                cfg.worker_threads = ch.kernel_threads.max(1);
+                if ch.mt_cutoff.is_some() {
+                    cfg.mt_cutoff = ch.mt_cutoff;
+                }
+            }
+        }
+        (cfg.t, cfg)
+    }
+
+    /// Execute a dispatched call and feed the wall time back to the
+    /// dispatcher (adaptive mode refines its per-shape EWMAs; profile
+    /// mode ignores it). `(m, n, k)` is the shape key the choice was
+    /// made under, not necessarily the routine's own letters.
+    #[allow(clippy::too_many_arguments)]
+    fn execute_planned<T: Scalar>(
+        &self,
+        cfg: &RunConfig,
+        m: usize,
+        n: usize,
+        k: usize,
+        ts: &TaskSet,
+        problems: Vec<Mats<'_, T>>,
+    ) -> Result<RealReport> {
+        let t0 = std::time::Instant::now();
+        let rep = self.execute_cfg(cfg, ts, problems)?;
+        if let Some(d) = &self.dispatch {
+            d.observe(cfg.routine, T::DTYPE, m, n, k, cfg.t, t0.elapsed().as_secs_f64());
+        }
+        Ok(rep)
+    }
+}
+
+/// The all-zeros report of a host-placed call: nothing was staged, no
+/// tiles moved, no cache was touched — which is the point.
+fn host_report(n_devices: usize) -> RealReport {
+    RealReport {
+        tasks_per_device: vec![0; n_devices],
+        cache_stats: vec![CacheStats::default(); n_devices],
+        cache_delta: vec![CacheStats::default(); n_devices],
+        steals: vec![0; n_devices],
+        transfers: TransferStats::default(),
     }
 }
 
@@ -495,7 +636,33 @@ pub fn gemm<T: Scalar>(
     c: &mut [T],
     ldc: usize,
 ) -> Result<RealReport> {
-    let t = ctx.tile();
+    // Host placement: a dispatcher may route sub-tile problems around
+    // the tiled engine entirely — one host kernel shot, still
+    // admission-ordered against aliasing device jobs when persistent.
+    if let Some(ch) = ctx.dispatch_choice("gemm", T::DTYPE, m, n, k) {
+        if ch.place == Placement::Host {
+            check::check_gemm(ta, tb, m, n, k, lda, ldb, ldc)?;
+            let threads = ch.kernel_threads.max(1);
+            let cutoff = ch
+                .mt_cutoff
+                .or(ctx.cfg.mt_cutoff)
+                .unwrap_or_else(hostblas::mt_flop_cutoff);
+            if ctx.persistent {
+                let mut cfg = ctx.cfg.clone();
+                cfg.routine = "gemm";
+                cfg.worker_threads = threads;
+                cfg.mt_cutoff = Some(cutoff);
+                return ctx
+                    .runtime()
+                    .submit_host(&cfg, ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc);
+            }
+            hostblas::gemm_mt_with_cutoff(
+                threads, cutoff, ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc,
+            );
+            return Ok(host_report(ctx.n_devices));
+        }
+    }
+    let (t, cfg) = ctx.plan_call("gemm", T::DTYPE, m, n, k);
     let (ts, dims) =
         plan_gemm(t, ta, tb, m, n, k, alpha.to_f64(), beta.to_f64(), lda, ldb, ldc)?;
     let (ar, ac) = dims.a;
@@ -503,7 +670,7 @@ pub fn gemm<T: Scalar>(
     let am = HostMat::new_ro(a, ar, ac, lda, t, MatId::A);
     let bm = HostMat::new_ro(b, br, bc, ldb, t, MatId::B);
     let cm = HostMat::new(c, m, n, ldc, t, MatId::C);
-    ctx.execute("gemm", &ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }])
+    ctx.execute_planned(&cfg, m, n, k, &ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }])
 }
 
 /// `C := alpha*op(A)*op(A)^T + beta*C`, C symmetric stored in `uplo`.
@@ -521,12 +688,12 @@ pub fn syrk<T: Scalar>(
     c: &mut [T],
     ldc: usize,
 ) -> Result<RealReport> {
-    let t = ctx.tile();
+    let (t, cfg) = ctx.plan_call("syrk", T::DTYPE, n, n, k);
     let (ts, dims) = plan_syrk(t, uplo, trans, n, k, alpha.to_f64(), beta.to_f64(), lda, ldc)?;
     let (ar, ac) = dims.a;
     let am = HostMat::new_ro(a, ar, ac, lda, t, MatId::A);
     let cm = HostMat::new(c, n, n, ldc, t, MatId::C);
-    ctx.execute("syrk", &ts, vec![Mats { a: &am, b: None, c: &cm }])
+    ctx.execute_planned(&cfg, n, n, k, &ts, vec![Mats { a: &am, b: None, c: &cm }])
 }
 
 /// `C := alpha*(op(A)op(B)^T + op(B)op(A)^T) + beta*C`.
@@ -546,14 +713,14 @@ pub fn syr2k<T: Scalar>(
     c: &mut [T],
     ldc: usize,
 ) -> Result<RealReport> {
-    let t = ctx.tile();
+    let (t, cfg) = ctx.plan_call("syr2k", T::DTYPE, n, n, k);
     let (ts, dims) =
         plan_syr2k(t, uplo, trans, n, k, alpha.to_f64(), beta.to_f64(), lda, ldb, ldc)?;
     let (ar, ac) = dims.a;
     let am = HostMat::new_ro(a, ar, ac, lda, t, MatId::A);
     let bm = HostMat::new_ro(b, ar, ac, ldb, t, MatId::B);
     let cm = HostMat::new(c, n, n, ldc, t, MatId::C);
-    ctx.execute("syr2k", &ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }])
+    ctx.execute_planned(&cfg, n, n, k, &ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }])
 }
 
 /// `C := alpha*sym(A)*B + beta*C` (Left) / `alpha*B*sym(A) + beta*C`.
@@ -573,14 +740,15 @@ pub fn symm<T: Scalar>(
     c: &mut [T],
     ldc: usize,
 ) -> Result<RealReport> {
-    let t = ctx.tile();
+    let na = if side == Side::Left { m } else { n };
+    let (t, cfg) = ctx.plan_call("symm", T::DTYPE, m, n, na);
     let (ts, dims) =
         plan_symm(t, side, uplo, m, n, alpha.to_f64(), beta.to_f64(), lda, ldb, ldc)?;
     let (na, _) = dims.a;
     let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
     let bm = HostMat::new_ro(b, m, n, ldb, t, MatId::B);
     let cm = HostMat::new(c, m, n, ldc, t, MatId::C);
-    ctx.execute("symm", &ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }])
+    ctx.execute_planned(&cfg, m, n, na, &ts, vec![Mats { a: &am, b: Some(&bm), c: &cm }])
 }
 
 /// `B := alpha*op(tri(A))*B` (Left) / `alpha*B*op(tri(A))` (Right),
@@ -600,12 +768,13 @@ pub fn trmm<T: Scalar>(
     b: &mut [T],
     ldb: usize,
 ) -> Result<RealReport> {
-    let t = ctx.tile();
+    let na = if side == Side::Left { m } else { n };
+    let (t, cfg) = ctx.plan_call("trmm", T::DTYPE, m, n, na);
     let (ts, dims) = plan_trmm(t, side, uplo, ta, diag, m, n, alpha.to_f64(), lda, ldb)?;
     let (na, _) = dims.a;
     let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
     let cm = HostMat::new(b, m, n, ldb, t, MatId::C);
-    ctx.execute("trmm", &ts, vec![Mats { a: &am, b: None, c: &cm }])
+    ctx.execute_planned(&cfg, m, n, na, &ts, vec![Mats { a: &am, b: None, c: &cm }])
 }
 
 /// Solve `op(tri(A))*X = alpha*B` (Left) / `X*op(tri(A)) = alpha*B`,
@@ -625,12 +794,13 @@ pub fn trsm<T: Scalar>(
     b: &mut [T],
     ldb: usize,
 ) -> Result<RealReport> {
-    let t = ctx.tile();
+    let na = if side == Side::Left { m } else { n };
+    let (t, cfg) = ctx.plan_call("trsm", T::DTYPE, m, n, na);
     let (ts, dims) = plan_trsm(t, side, uplo, ta, diag, m, n, alpha.to_f64(), lda, ldb)?;
     let (na, _) = dims.a;
     let am = HostMat::new_ro(a, na, na, lda, t, MatId::A);
     let cm = HostMat::new(b, m, n, ldb, t, MatId::C);
-    ctx.execute("trsm", &ts, vec![Mats { a: &am, b: None, c: &cm }])
+    ctx.execute_planned(&cfg, m, n, na, &ts, vec![Mats { a: &am, b: None, c: &cm }])
 }
 
 // --- Non-blocking (serving-mode) submission --------------------------
@@ -1191,6 +1361,89 @@ mod tests {
         .unwrap();
         assert!(c.iter().all(|&x| x == n as f64), "scope close is a completion barrier");
         assert_eq!(ctx.jobs_in_flight(), 0);
+    }
+
+    #[test]
+    fn host_placement_matches_the_tiled_oracle() {
+        // A profile that routes this shape bucket to the host: the call
+        // must produce the exact serial-kernel bytes and touch neither
+        // tiles nor caches — on both the persistent (admission-ordered
+        // HostGemm job) and one-shot paths.
+        use crate::dispatch::shape_key;
+        let (m, n, k) = (48, 40, 44);
+        let mut prof = Profile::new();
+        prof.set(
+            shape_key("gemm", Dtype::F64, m, n, k),
+            Choice { t: 32, kernel_threads: 1, mt_cutoff: None, place: Placement::Host },
+        );
+        let mut p = Prng::new(31);
+        let mut a = vec![0.0; m * k];
+        let mut b = vec![0.0; k * n];
+        let mut c0 = vec![0.0; m * n];
+        p.fill_f64(&mut a, -1.0, 1.0);
+        p.fill_f64(&mut b, -1.0, 1.0);
+        p.fill_f64(&mut c0, -1.0, 1.0);
+        let mut want = c0.clone();
+        hostblas::gemm_mt(1, Trans::No, Trans::No, m, n, k, 1.5, &a, m, &b, k, -0.25, &mut want, m);
+        for persistent in [true, false] {
+            let ctx = small_ctx().with_profile(prof.clone()).with_persistent(persistent);
+            let mut c = c0.clone();
+            let rep =
+                dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.5, &a, m, &b, k, -0.25, &mut c, m)
+                    .unwrap();
+            assert_eq!(c, want, "persistent={persistent}");
+            assert_eq!(rep.transfers, TransferStats::default(), "host call stages nothing");
+            assert_eq!(rep.tasks_per_device.iter().sum::<usize>(), 0);
+        }
+    }
+
+    #[test]
+    fn profile_overrides_the_tile_size() {
+        use crate::dispatch::shape_key;
+        let (m, n, k) = (64, 64, 64);
+        let mut prof = Profile::new();
+        prof.set(
+            shape_key("gemm", Dtype::F64, m, n, k),
+            Choice { t: 16, kernel_threads: 1, mt_cutoff: None, place: Placement::Device },
+        );
+        let ctx = small_ctx().with_profile(prof);
+        let mut p = Prng::new(32);
+        let mut a = vec![0.0; m * k];
+        let mut b = vec![0.0; k * n];
+        let mut c = vec![0.0; m * n];
+        p.fill_f64(&mut a, -1.0, 1.0);
+        p.fill_f64(&mut b, -1.0, 1.0);
+        p.fill_f64(&mut c, -1.0, 1.0);
+        let mut want = c.clone();
+        dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.5, &mut c, m).unwrap();
+        hostblas::gemm_blocked(Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.5, &mut want, m);
+        let diff = c.iter().zip(&want).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+        assert!(diff < 1e-10, "profile-chosen t=16 run diverged: {diff}");
+    }
+
+    #[test]
+    fn adaptive_dispatch_stays_correct_across_exploration() {
+        // The adaptive explorer rotates tile sizes call-to-call; every
+        // choice must stay bit-level-accurate against the oracle.
+        let ctx = Context::new(2).with_arena(8 << 20).with_tile(64).with_adaptive_dispatch();
+        assert!(ctx.dispatcher().unwrap().is_adaptive());
+        let (m, n, k) = (100, 90, 110);
+        let mut p = Prng::new(33);
+        let mut a = vec![0.0; m * k];
+        let mut b = vec![0.0; k * n];
+        p.fill_f64(&mut a, -1.0, 1.0);
+        p.fill_f64(&mut b, -1.0, 1.0);
+        for call in 0..5 {
+            let mut c = vec![1.0; m * n];
+            let mut want = c.clone();
+            dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 1.0, &mut c, m)
+                .unwrap();
+            hostblas::gemm_blocked(
+                Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 1.0, &mut want, m,
+            );
+            let diff = c.iter().zip(&want).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+            assert!(diff < 1e-10, "call {call}: {diff}");
+        }
     }
 
     #[test]

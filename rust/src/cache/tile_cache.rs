@@ -65,8 +65,9 @@ pub struct CacheStats {
 
 impl CacheStats {
     /// Per-call view: counter increments since `earlier` was
-    /// snapshotted (saturating — a cache purge resets the ALRUs, and a
-    /// delta across a purge must not wrap).
+    /// snapshotted (saturating, so a delta taken across a cache
+    /// rebuild — e.g. a runtime reboot on a geometry change — must
+    /// not wrap).
     pub fn delta_since(&self, earlier: &CacheStats) -> CacheStats {
         CacheStats {
             hits: self.hits.saturating_sub(earlier.hits),

@@ -5,6 +5,9 @@
 //! - `serve` — multi-client stress mode over the resident runtime
 //!   (`--verify` adds scope-async chains, `--ffi-verify` drives the C
 //!   ABI entry points against the safe path bit-for-bit)
+//! - `tune`  — shape-grid sweep recording a dispatch profile
+//!   (`crate::dispatch::sweep`); `run`/`serve` consume it via
+//!   `--profile`
 //! - `sim`   — simulate a routine on a paper machine under any policy
 //! - `gantt` — render the Fig. 1-style ASCII execution profile
 //! - `info`  — artifact + machine inventory
@@ -102,12 +105,16 @@ USAGE:
               [--json out.json]
   blasx run   [--routine dgemm] [--n 1024] [--t 256] [--devices 2] [--pjrt]
               [--kernel-threads 1] [--repeat 1] [--no-persistent]
+              [--profile profile.json] [--adaptive]
               [--trace-out trace.json] [--metrics-out metrics.json]
   blasx serve [--clients 4] [--jobs 8] [--n 512] [--t 256] [--devices 2]
               [--kernel-threads 1] [--verify] [--ffi-verify]
+              [--profile profile.json]
               [--chaos] [--faults \"kill@dev1:op40; h2d@dev0:op5x2\"]
               [--deadline-ms 0] [--max-inflight 256] [--tenant-quota 64]
               [--trace-out trace.json] [--metrics-out metrics.json]
+  blasx tune  [--out profile.json] [--quick] [--devices 2] [--reps 2]
+              [--shapes 256,448,768] [--small-shapes 64,128]
   blasx batch <workload.json> [--devices 2] [--t 256] [--pjrt] [--fused]
               [--kernel-threads 1] [--no-persistent]
   blasx header [--out include/blasx.h]
@@ -152,6 +159,17 @@ and results must STILL verify bit-for-bit (combine with `--verify`).
 backpressure error). The stress report then includes per-tenant
 rejected/retried/degraded/migrated counters.
 
+Adaptive dispatch: `tune` measures a compact shape grid (tile-size
+candidates, kernel fan-out, host-vs-device placement for sub-tile
+problems) and records the winners as a JSON profile keyed by ×2 shape
+buckets. `run`/`serve` load it with `--profile FILE`: every call then
+gets its bucket's recorded tile size/fan-out/placement, deterministically
+(mixed tile sizes coexist in the warm caches — each geometry is its own
+cache generation, no barrier, no purge). `run --adaptive` instead
+refines choices online from call feedback. Library callers use
+`Context::with_profile{,_file}` / `with_adaptive_dispatch`, or the
+BLASX_PROFILE env var through the C ABI.
+
 Observability (run/serve): `--trace-out FILE` enables the span
 recorder and writes a Chrome trace-event JSON (open in Perfetto or
 chrome://tracing; one track per device worker, one per admitted job);
@@ -170,12 +188,67 @@ pub fn dispatch(argv: &[String]) -> i32 {
         Some("gantt") => cmd_sim(&args, true),
         Some("run") => cmd_run(&args),
         Some("serve") => cmd_serve(&args),
+        Some("tune") => cmd_tune(&args),
         Some("batch") => cmd_batch(&args),
         Some("header") => cmd_header(&args),
         Some("info") => cmd_info(),
         _ => {
             println!("{}", usage());
             2
+        }
+    }
+}
+
+/// Parse a comma-separated size list (`--shapes 256,448`).
+fn parse_sizes(s: &str) -> Option<Vec<usize>> {
+    s.split(',').map(|x| x.trim().parse().ok()).collect()
+}
+
+/// `blasx tune`: run the dispatch shape-grid sweep and persist the
+/// recorded profile (consumed by `run`/`serve` `--profile`,
+/// `Context::with_profile_file`, or BLASX_PROFILE).
+fn cmd_tune(args: &Args) -> i32 {
+    use crate::dispatch::sweep::{sweep, SweepOpts};
+
+    let mut opts = if args.get("quick").is_some() { SweepOpts::quick() } else { SweepOpts::full() };
+    opts.n_devices = args.get_usize("devices", opts.n_devices).max(1);
+    opts.reps = args.get_usize("reps", opts.reps).max(1);
+    if let Some(s) = args.get("shapes") {
+        match parse_sizes(s) {
+            Some(v) => opts.shapes = v,
+            None => {
+                eprintln!("tune: bad --shapes list (want e.g. 256,448,768)");
+                return 2;
+            }
+        }
+    }
+    if let Some(s) = args.get("small-shapes") {
+        match parse_sizes(s) {
+            Some(v) => opts.small_shapes = v,
+            None => {
+                eprintln!("tune: bad --small-shapes list (want e.g. 64,128)");
+                return 2;
+            }
+        }
+    }
+    let out = args.get("out").unwrap_or("profile.json");
+    println!(
+        "TUNE devices={} shapes={:?} small-shapes={:?} reps={}",
+        opts.n_devices, opts.shapes, opts.small_shapes, opts.reps
+    );
+    let prof = sweep(&opts, |line| println!("{line}"));
+    if prof.is_empty() {
+        eprintln!("tune: sweep produced no entries (empty shape grid?)");
+        return 1;
+    }
+    match prof.save(out) {
+        Ok(()) => {
+            println!("profile with {} entries written to {out}", prof.len());
+            0
+        }
+        Err(e) => {
+            eprintln!("tune: {e}");
+            1
         }
     }
 }
@@ -368,6 +441,15 @@ fn cmd_serve(args: &Args) -> i32 {
     let mut ctx = api::Context::new(devices)
         .with_tile(t)
         .with_kernel_threads(args.get_usize("kernel-threads", 1));
+    if let Some(path) = args.get("profile") {
+        ctx = match ctx.with_profile_file(path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("serve: {e}");
+                return 2;
+            }
+        };
+    }
     // Fault-tolerance knobs: an explicit schedule beats the default
     // chaos plan; both install at runtime boot.
     let plan = if let Some(spec) = args.get("faults") {
@@ -871,6 +953,17 @@ fn cmd_run(args: &Args) -> i32 {
     if args.get("pjrt").is_some() {
         ctx = ctx.with_backend(crate::coordinator::Backend::Pjrt);
     }
+    if let Some(path) = args.get("profile") {
+        ctx = match ctx.with_profile_file(path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("run: {e}");
+                return 2;
+            }
+        };
+    } else if args.get("adaptive").is_some() {
+        ctx = ctx.with_adaptive_dispatch();
+    }
     if trace_out.is_some() {
         if ctx.persistent {
             ctx.set_tracing(true);
@@ -1130,6 +1223,45 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         std::fs::remove_file(&path).unwrap();
         assert_eq!(text, crate::ffi::header::render());
+    }
+
+    #[test]
+    fn tune_writes_a_profile_that_run_and_serve_consume() {
+        // End-to-end satellite check: a tiny sweep → profile on disk →
+        // `run --profile` and `serve --profile --verify` both succeed
+        // under dispatched tile sizes.
+        let path = std::env::temp_dir().join(format!("blasx_prof_{}.json", std::process::id()));
+        let p = path.to_str().unwrap();
+        let rc = dispatch(&sv(&[
+            "tune", "--quick", "--devices", "1", "--shapes", "96", "--small-shapes", "48",
+            "--reps", "1", "--out", p,
+        ]));
+        assert_eq!(rc, 0);
+        let prof = crate::dispatch::Profile::load(p).unwrap();
+        assert!(!prof.is_empty(), "tune must record entries");
+        assert_eq!(dispatch(&sv(&["run", "--n", "96", "--t", "64", "--profile", p])), 0);
+        let rc = dispatch(&sv(&[
+            "serve", "--clients", "2", "--jobs", "1", "--n", "96", "--t", "64", "--profile", p,
+            "--verify",
+        ]));
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(rc, 0);
+    }
+
+    #[test]
+    fn run_rejects_missing_profile() {
+        assert_eq!(dispatch(&sv(&["run", "--profile", "/nonexistent/p.json"])), 2);
+        assert_eq!(dispatch(&sv(&["serve", "--profile", "/nonexistent/p.json"])), 2);
+    }
+
+    #[test]
+    fn tune_rejects_bad_shape_list() {
+        assert_eq!(dispatch(&sv(&["tune", "--shapes", "96,banana"])), 2);
+    }
+
+    #[test]
+    fn run_adaptive_smoke() {
+        assert_eq!(dispatch(&sv(&["run", "--n", "96", "--t", "64", "--adaptive", "--repeat", "2"])), 0);
     }
 
     #[test]

@@ -121,6 +121,12 @@ pub struct RunConfig {
     /// Per-tenant in-flight quota, enforced at admission against the
     /// fairness ledger's tenant column.
     pub tenant_quota: usize,
+    /// Per-call serial/fork flop cutoff for `hostblas::gemm_mt` inside
+    /// tile kernels (None = the process-wide
+    /// `hostblas::mt_flop_cutoff()`, i.e. `MT_FLOP_CUTOFF` or its
+    /// `BLASX_MT_CUTOFF` override). The adaptive dispatcher stamps this
+    /// per shape.
+    pub mt_cutoff: Option<f64>,
 }
 
 impl Default for RunConfig {
@@ -143,6 +149,7 @@ impl Default for RunConfig {
             deadline_ms: None,
             admit_capacity: 256,
             tenant_quota: 64,
+            mt_cutoff: None,
         }
     }
 }

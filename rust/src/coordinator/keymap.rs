@@ -87,7 +87,7 @@ impl KeyMap {
         let base = SPAN * (1 + 3 * r.p + Self::idx(r.mat));
         let addr = base + (g.col_origin(r.tj) * g.rows + g.row_origin(r.ti)) * self.esz;
         let (h, w) = g.tile_dims(r.ti, r.tj);
-        TileKey { addr, mat: r.mat, ti: r.ti, tj: r.tj, ld: g.rows.max(1), epoch: 0, h, w }
+        TileKey { addr, mat: r.mat, ti: r.ti, tj: r.tj, ld: g.rows.max(1), epoch: 0, h, w, t: g.t }
     }
 
     /// Cache-block bytes of any tile (uniform t×t padding — what the

@@ -143,9 +143,6 @@ impl Arena {
 pub(crate) struct EngineCore {
     pub(crate) caches: Mutex<TileCacheSet>,
     arenas: Vec<Arena>,
-    capacities: Vec<usize>,
-    peers: Vec<Vec<usize>>,
-    alloc: AllocStrategy,
     /// Idle-worker parking: guards the "queue empty" check; notified on
     /// task enqueue and job completion so sleepers never busy-spin.
     work_mx: Mutex<()>,
@@ -189,11 +186,8 @@ impl EngineCore {
             (0..n_devices).map(|d| (0..n_devices).filter(|&x| x != d).collect()).collect();
         let capacities = vec![arena_bytes; n_devices];
         let core = EngineCore {
-            caches: Mutex::new(TileCacheSet::new(&capacities, peers.clone(), alloc)),
+            caches: Mutex::new(TileCacheSet::new(&capacities, peers, alloc)),
             arenas: (0..n_devices).map(|_| Arena::new(arena_bytes)).collect(),
-            capacities,
-            peers,
-            alloc,
             work_mx: Mutex::new(()),
             work_cv: Condvar::new(),
             executor: OnceCell::new(),
@@ -248,19 +242,12 @@ impl EngineCore {
 
     /// The tile caches, recovering a poisoned lock: a contained worker
     /// panic (see `runtime::service`) may have died mid-update while
-    /// holding it. The panicking job is failed and the error path
-    /// purges the caches, so recovering the guard keeps the resident
-    /// fleet serviceable instead of cascading `PoisonError` panics
-    /// through every later call.
+    /// holding it. The panicking job is failed (its pins are released
+    /// on the abort path — no purge exists anymore), so recovering the
+    /// guard keeps the resident fleet serviceable instead of cascading
+    /// `PoisonError` panics through every later call.
     pub(crate) fn lock_caches(&self) -> std::sync::MutexGuard<'_, TileCacheSet> {
         self.caches.lock().unwrap_or_else(|e| e.into_inner())
-    }
-
-    /// Drop every cached tile (tile-size switch or failed-job
-    /// recovery): the next job starts on a cold cache.
-    pub(crate) fn purge(&self) {
-        let mut caches = self.lock_caches();
-        *caches = TileCacheSet::new(&self.capacities, self.peers.clone(), self.alloc);
     }
 
     /// Wake parked workers (new ready tasks, a job finished, or a new
@@ -1359,13 +1346,32 @@ fn exec_step<T: Scalar>(
     // `*_ref` oracles are test-only (EXPERIMENTS.md §Perf documents the
     // order-of-magnitude gap this targets). GEMM k-steps additionally
     // fan out across `worker_threads` when the tile is big enough
-    // (paper §IV-C.2's "multithreaded BLAS kernel"); `gemm_mt` applies
-    // its flop-based serial cutoff internally and runs its cells on the
-    // persistent kernel pool, so per-thread pack scratch is reused.
+    // (paper §IV-C.2's "multithreaded BLAS kernel"); the flop-based
+    // serial cutoff is per-job (`RunConfig::mt_cutoff`, stamped by the
+    // adaptive dispatcher) falling back to the process-wide value, and
+    // cells run on the persistent kernel pool, so per-thread pack
+    // scratch is reused.
     let wt = job.cfg.worker_threads.max(1);
+    let cutoff = job.cfg.mt_cutoff.unwrap_or_else(hostblas::mt_flop_cutoff);
     match step.op {
         TileOp::Gemm { ta, tb } => {
-            hostblas::gemm_mt(wt, ta, tb, m, n, k, alpha, a.unwrap(), t, b.unwrap(), t, beta, c, t);
+            hostblas::gemm_mt_with_cutoff(
+                wt,
+                cutoff,
+                ta,
+                tb,
+                m,
+                n,
+                k,
+                alpha,
+                a.unwrap(),
+                t,
+                b.unwrap(),
+                t,
+                beta,
+                c,
+                t,
+            );
         }
         TileOp::SyrkDiag { uplo, trans } => {
             hostblas::syrk_packed(uplo, trans, n, k, alpha, a.unwrap(), t, beta, c, t);

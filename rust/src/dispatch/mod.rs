@@ -1,0 +1,534 @@
+//! Adaptive per-shape dispatch (the tile-size barrier's replacement as
+//! the system's tuning story).
+//!
+//! The paper tunes ONE parameter — the tile size — and the pre-PR-8
+//! runtime made changing it between calls catastrophically expensive (a
+//! full admission barrier plus a global cache purge). With the tile
+//! size folded into [`crate::tile::TileKey`], mixed geometries are
+//! free, which unlocks *choosing* the geometry per call: this module
+//! picks, per `(routine, m, n, k, dtype)`:
+//!
+//! - the tile size `t` (a per-geometry cache generation),
+//! - the kernel-thread fan-out of each tile task,
+//! - the serial/fork flop cutoff of `hostblas::gemm_mt`
+//!   ([`RunConfig::mt_cutoff`](crate::coordinator::RunConfig)),
+//! - host-vs-device placement (small problems skip tiling/staging
+//!   entirely and run on the host through
+//!   `Runtime::submit_host`, still admission-ordered).
+//!
+//! Choices come from three sources, in priority order:
+//! 1. a **recorded profile** ([`Profile`], JSON; produced by the
+//!    `blasx tune` shape-grid sweep in [`sweep`], loadable via
+//!    `Context::with_profile`, the `BLASX_PROFILE` env var, or the C
+//!    ABI's `blasx_config_t.profile`),
+//! 2. **online feedback** (per-shape throughput EWMAs refined from
+//!    call reports in adaptive mode — deterministic round-robin
+//!    exploration of the `t` candidates, then exploitation),
+//! 3. a **static heuristic** (sub-tile problems go to the host; `t`
+//!    shrinks until a call has enough output tiles to spread across
+//!    devices).
+//!
+//! The dispatcher is strictly **opt-in**: a `Context` without one
+//! behaves exactly as before (fixed `cfg.t`, device placement), so
+//! every existing caller and test is unaffected.
+
+pub mod sweep;
+
+use crate::api::Dtype;
+use crate::error::{Error, Result};
+use crate::util::json::{parse, Json};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Tile sizes the heuristic/adaptive/sweep layers choose between.
+/// Bounded below by kernel register blocking (64) and above by what a
+/// sane arena holds (512² f64 = 2 MiB/tile).
+pub const T_CANDIDATES: [usize; 4] = [64, 128, 256, 512];
+
+/// Where a call executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Tiled, through the device engine (the default).
+    Device,
+    /// One host kernel shot, admission-ordered but never staged
+    /// (`Runtime::submit_host`). Only taken for blocking GEMM.
+    Host,
+}
+
+impl Placement {
+    pub fn name(self) -> &'static str {
+        match self {
+            Placement::Device => "device",
+            Placement::Host => "host",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Placement> {
+        match s {
+            "device" => Some(Placement::Device),
+            "host" => Some(Placement::Host),
+            _ => None,
+        }
+    }
+}
+
+/// One dispatch decision: everything the API layer stamps onto a call.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Choice {
+    /// Tile size (its own cache generation — see `crate::tile::TileKey`).
+    pub t: usize,
+    /// Kernel-thread fan-out per tile task (`RunConfig::worker_threads`).
+    pub kernel_threads: usize,
+    /// Serial/fork flop cutoff override for `hostblas::gemm_mt`
+    /// (`None` = the process-wide `hostblas::mt_flop_cutoff()`).
+    pub mt_cutoff: Option<f64>,
+    pub place: Placement,
+}
+
+impl Choice {
+    fn to_json(self) -> Json {
+        let mut o = Json::obj();
+        o.set("t", self.t.into())
+            .set("kernel_threads", self.kernel_threads.into())
+            .set(
+                "mt_cutoff",
+                self.mt_cutoff.map_or(Json::Null, Json::Num),
+            )
+            .set("place", self.place.name().into());
+        o
+    }
+
+    fn from_json(v: &Json) -> Option<Choice> {
+        let t = v.get("t")?.as_usize()?;
+        if t == 0 {
+            return None;
+        }
+        let kernel_threads = v.get("kernel_threads")?.as_usize()?.max(1);
+        let mt_cutoff = match v.get("mt_cutoff") {
+            None | Some(Json::Null) => None,
+            Some(x) => Some(x.as_f64()?).filter(|&c| c.is_finite() && c > 0.0),
+        };
+        let place = Placement::from_name(v.get("place")?.as_str()?)?;
+        Some(Choice { t, kernel_threads, mt_cutoff, place })
+    }
+}
+
+/// Power-of-two shape bucket: problems within a ×2 band share a
+/// dispatch decision, so a compact sweep generalizes.
+fn bucket(x: usize) -> u32 {
+    x.max(1).next_power_of_two().trailing_zeros()
+}
+
+/// The profile/EWMA key of a call shape: `"gemm/f64/m7n7k7"` for a
+/// GEMM with every dimension in (64, 128].
+pub fn shape_key(routine: &str, dtype: Dtype, m: usize, n: usize, k: usize) -> String {
+    let dt = match dtype {
+        Dtype::F32 => "f32",
+        Dtype::F64 => "f64",
+    };
+    format!("{routine}/{dt}/m{}n{}k{}", bucket(m), bucket(n), bucket(k))
+}
+
+/// A recorded dispatch table: shape-bucket key → [`Choice`].
+/// Persistable as JSON (`blasx tune --out profile.json`), loadable by
+/// `Context::with_profile` / `BLASX_PROFILE` / the C ABI.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Profile {
+    entries: BTreeMap<String, Choice>,
+}
+
+impl Profile {
+    pub fn new() -> Profile {
+        Profile::default()
+    }
+
+    pub fn set(&mut self, key: String, choice: Choice) {
+        self.entries.insert(key, choice);
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Choice> {
+        self.entries.get(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut table = Json::obj();
+        for (k, c) in &self.entries {
+            table.set(k, c.to_json());
+        }
+        let mut o = Json::obj();
+        o.set("schema", "blasx-profile-v1".into()).set("choices", table);
+        o
+    }
+
+    pub fn from_json(v: &Json) -> Result<Profile> {
+        match v.get("schema").and_then(Json::as_str) {
+            Some("blasx-profile-v1") => {}
+            other => {
+                return Err(Error::Config(format!(
+                    "not a blasx dispatch profile (schema {other:?})"
+                )))
+            }
+        }
+        let Some(Json::Obj(table)) = v.get("choices") else {
+            return Err(Error::Config("profile has no `choices` object".into()));
+        };
+        let mut p = Profile::new();
+        for (k, cv) in table {
+            let c = Choice::from_json(cv).ok_or_else(|| {
+                Error::Config(format!("malformed profile choice for shape {k}"))
+            })?;
+            p.set(k.clone(), c);
+        }
+        Ok(p)
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty() + "\n")
+            .map_err(|e| Error::Config(format!("cannot write profile {path}: {e}")))
+    }
+
+    pub fn load(path: &str) -> Result<Profile> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read profile {path}: {e}")))?;
+        let v = parse(&text)
+            .map_err(|e| Error::Config(format!("profile {path} is not JSON: {e}")))?;
+        Profile::from_json(&v)
+    }
+}
+
+/// Per-(shape, t) online throughput estimate.
+#[derive(Clone, Copy, Debug, Default)]
+struct Ewma {
+    gflops: f64,
+    n: u64,
+}
+
+const EWMA_ALPHA: f64 = 0.3;
+
+impl Ewma {
+    fn observe(&mut self, gflops: f64) {
+        self.gflops = if self.n == 0 {
+            gflops
+        } else {
+            EWMA_ALPHA * gflops + (1.0 - EWMA_ALPHA) * self.gflops
+        };
+        self.n += 1;
+    }
+}
+
+/// Minimum observations of a `t` before its EWMA may win over the
+/// exploration rotation.
+const MIN_OBS: u64 = 2;
+
+/// The per-context dispatch brain. Deterministic: [`Dispatcher::choose`]
+/// depends only on the profile, the sequence of prior
+/// [`Dispatcher::observe`] calls for the same shape bucket, and the
+/// static heuristic — never on wall-clock or randomness.
+#[derive(Debug)]
+pub struct Dispatcher {
+    profile: Profile,
+    /// Online throughput EWMAs: shape key → (t → estimate). Only
+    /// consulted/extended in adaptive mode.
+    online: Mutex<BTreeMap<String, BTreeMap<usize, Ewma>>>,
+    adaptive: bool,
+}
+
+impl Dispatcher {
+    /// Dispatch from a recorded profile, falling back to the static
+    /// heuristic for unseen shapes. No online refinement: a profile
+    /// reproduces identical choices call after call (the round-trip
+    /// guarantee `blasx tune` relies on).
+    pub fn from_profile(profile: Profile) -> Dispatcher {
+        Dispatcher { profile, online: Mutex::new(BTreeMap::new()), adaptive: false }
+    }
+
+    /// Dispatch adaptively: start from the heuristic (or `profile`
+    /// entries where present), explore the `t` candidates in a
+    /// deterministic rotation, then exploit the best observed EWMA.
+    pub fn adaptive(profile: Profile) -> Dispatcher {
+        Dispatcher { profile, online: Mutex::new(BTreeMap::new()), adaptive: true }
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        self.adaptive
+    }
+
+    /// The static no-measurement fallback. `base` carries the context
+    /// defaults (its `cfg.t`, `cfg.worker_threads`, ...).
+    pub fn heuristic(routine: &str, m: usize, n: usize, k: usize, base: &Choice) -> Choice {
+        // A problem that fits inside ONE tile of the context's own
+        // geometry gains nothing from the tiled engine (one task, no
+        // parallelism) and pays staging for it: run it on the host,
+        // still admission-ordered. Only GEMM has a host fast path.
+        if routine == "gemm" && m.max(n).max(k) <= base.t && m * n * k > 0 {
+            return Choice { place: Placement::Host, ..*base };
+        }
+        // Otherwise shrink t until the output plane has enough tiles
+        // to spread across devices and streams (≥ 8, the engine's
+        // round working set), starting from the largest candidate not
+        // above the context default.
+        let mut t = base.t;
+        for &cand in T_CANDIDATES.iter().rev() {
+            if cand > base.t {
+                continue;
+            }
+            t = cand;
+            if m.div_ceil(cand) * n.div_ceil(cand) >= 8 {
+                break;
+            }
+        }
+        Choice { t, ..*base }
+    }
+
+    /// Decide the call's configuration. Priority: exact profile entry →
+    /// adaptive explore/exploit (adaptive mode only) → heuristic.
+    pub fn choose(
+        &self,
+        routine: &str,
+        dtype: Dtype,
+        m: usize,
+        n: usize,
+        k: usize,
+        base: &Choice,
+    ) -> Choice {
+        let key = shape_key(routine, dtype, m, n, k);
+        if let Some(c) = self.profile.get(&key) {
+            return *c;
+        }
+        let fallback = Self::heuristic(routine, m, n, k, base);
+        if !self.adaptive || fallback.place == Placement::Host {
+            return fallback;
+        }
+        let online = self.online.lock().unwrap_or_else(|e| e.into_inner());
+        let Some(stats) = online.get(&key) else { return fallback };
+        // Candidates eligible on this context (never above the base
+        // geometry — the arena was sized for it).
+        let cands: Vec<usize> =
+            T_CANDIDATES.iter().copied().filter(|&c| c <= base.t).collect();
+        if cands.is_empty() {
+            return fallback;
+        }
+        let total_obs: u64 = stats.values().map(|e| e.n).sum();
+        // Exploration: give every candidate MIN_OBS measurements, in
+        // rotation order keyed by the observation count (deterministic
+        // for a deterministic call sequence).
+        if let Some(&t) = cands
+            .iter()
+            .find(|&&c| stats.get(&c).map_or(0, |e| e.n) < MIN_OBS)
+        {
+            let idx = (total_obs as usize) % cands.len();
+            // Rotate the start so a single under-observed candidate
+            // doesn't monopolize the probe budget.
+            let t = cands[idx..]
+                .iter()
+                .chain(&cands[..idx])
+                .copied()
+                .find(|c| stats.get(c).map_or(0, |e| e.n) < MIN_OBS)
+                .unwrap_or(t);
+            return Choice { t, ..fallback };
+        }
+        // Exploitation: argmax EWMA throughput.
+        let best = cands
+            .iter()
+            .copied()
+            .max_by(|&a, &b| {
+                let ga = stats.get(&a).map_or(0.0, |e| e.gflops);
+                let gb = stats.get(&b).map_or(0.0, |e| e.gflops);
+                ga.partial_cmp(&gb).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .unwrap_or(fallback.t);
+        Choice { t: best, ..fallback }
+    }
+
+    /// Feed a call's measured outcome back (adaptive mode; a no-op
+    /// otherwise). `elapsed_s` is wall time of the blocking call.
+    pub fn observe(
+        &self,
+        routine: &str,
+        dtype: Dtype,
+        m: usize,
+        n: usize,
+        k: usize,
+        t_used: usize,
+        elapsed_s: f64,
+    ) {
+        if !self.adaptive || elapsed_s <= 0.0 {
+            return;
+        }
+        let gflops = 2.0 * m as f64 * n as f64 * k as f64 / elapsed_s / 1e9;
+        let key = shape_key(routine, dtype, m, n, k);
+        let mut online = self.online.lock().unwrap_or_else(|e| e.into_inner());
+        online.entry(key).or_default().entry(t_used).or_default().observe(gflops);
+        // First-touch bootstrap: make the shape visible to choose()
+        // even before any alternative t has run.
+    }
+
+    /// The dispatcher's current knowledge as a profile: recorded
+    /// entries plus, in adaptive mode, the online winner of every
+    /// fully-explored shape. What `blasx tune` persists after a sweep.
+    pub fn snapshot_profile(&self, base: &Choice) -> Profile {
+        let mut p = self.profile.clone();
+        let online = self.online.lock().unwrap_or_else(|e| e.into_inner());
+        for (key, stats) in online.iter() {
+            if p.get(key).is_some() {
+                continue;
+            }
+            let done = stats.values().filter(|e| e.n >= MIN_OBS).count() >= 2;
+            if !done {
+                continue;
+            }
+            if let Some((&t, _)) = stats.iter().max_by(|a, b| {
+                a.1.gflops.partial_cmp(&b.1.gflops).unwrap_or(std::cmp::Ordering::Equal)
+            }) {
+                p.set(key.clone(), Choice { t, ..*base });
+            }
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> Choice {
+        Choice { t: 256, kernel_threads: 1, mt_cutoff: None, place: Placement::Device }
+    }
+
+    #[test]
+    fn buckets_are_pow2_bands() {
+        assert_eq!(bucket(1), 0);
+        assert_eq!(bucket(64), 6);
+        assert_eq!(bucket(65), 7);
+        assert_eq!(bucket(128), 7);
+        assert_eq!(bucket(129), 8);
+        assert_eq!(shape_key("gemm", Dtype::F64, 100, 128, 65), "gemm/f64/m7n7k7");
+        assert_ne!(
+            shape_key("gemm", Dtype::F32, 100, 100, 100),
+            shape_key("gemm", Dtype::F64, 100, 100, 100)
+        );
+    }
+
+    #[test]
+    fn profile_json_roundtrip() {
+        let mut p = Profile::new();
+        p.set(
+            "gemm/f64/m9n9k9".into(),
+            Choice { t: 128, kernel_threads: 4, mt_cutoff: Some(2e6), place: Placement::Device },
+        );
+        p.set(
+            "gemm/f64/m6n6k6".into(),
+            Choice { t: 64, kernel_threads: 1, mt_cutoff: None, place: Placement::Host },
+        );
+        let text = p.to_json().to_string_pretty();
+        let back = Profile::from_json(&parse(&text).unwrap()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn profile_rejects_garbage() {
+        assert!(Profile::from_json(&parse("{}").unwrap()).is_err());
+        let bad = r#"{"schema":"blasx-profile-v1","choices":{"x":{"t":0,"kernel_threads":1,"place":"device"}}}"#;
+        assert!(Profile::from_json(&parse(bad).unwrap()).is_err());
+        let bad_place = r#"{"schema":"blasx-profile-v1","choices":{"x":{"t":64,"kernel_threads":1,"place":"moon"}}}"#;
+        assert!(Profile::from_json(&parse(bad_place).unwrap()).is_err());
+    }
+
+    #[test]
+    fn profile_entries_are_deterministic_choices() {
+        let mut p = Profile::new();
+        let key = shape_key("gemm", Dtype::F64, 300, 300, 300);
+        let want =
+            Choice { t: 128, kernel_threads: 2, mt_cutoff: Some(1e6), place: Placement::Device };
+        p.set(key, want);
+        let d = Dispatcher::from_profile(p);
+        for _ in 0..5 {
+            assert_eq!(d.choose("gemm", Dtype::F64, 300, 300, 300, &base()), want);
+        }
+        // Same bucket, different exact shape: same choice.
+        assert_eq!(d.choose("gemm", Dtype::F64, 257, 270, 260, &base()), want);
+    }
+
+    #[test]
+    fn heuristic_places_subtile_gemm_on_host() {
+        let c = Dispatcher::heuristic("gemm", 64, 64, 64, &base());
+        assert_eq!(c.place, Placement::Host);
+        // Any dimension above the tile → device.
+        let c = Dispatcher::heuristic("gemm", 64, 300, 64, &base());
+        assert_eq!(c.place, Placement::Device);
+        // Degenerate problems stay on the normal path.
+        let c = Dispatcher::heuristic("gemm", 0, 64, 64, &base());
+        assert_eq!(c.place, Placement::Device);
+        // Non-GEMM routines never go to the host.
+        let c = Dispatcher::heuristic("syrk", 64, 64, 64, &base());
+        assert_eq!(c.place, Placement::Device);
+    }
+
+    #[test]
+    fn heuristic_shrinks_t_for_parallelism() {
+        // 600×600 at t=256 is a 3×3 = 9-tile plane: big enough.
+        assert_eq!(Dispatcher::heuristic("gemm", 600, 600, 600, &base()).t, 256);
+        // 300×300 at t=256 is 2×2 = 4 tiles; at 128 it's 3×3 = 9.
+        assert_eq!(Dispatcher::heuristic("gemm", 300, 300, 300, &base()).t, 128);
+        // Never grows above the context geometry.
+        let small = Choice { t: 64, ..base() };
+        assert_eq!(Dispatcher::heuristic("gemm", 4000, 4000, 4000, &small).t, 64);
+    }
+
+    #[test]
+    fn adaptive_explores_then_exploits_deterministically() {
+        let d = Dispatcher::adaptive(Profile::new());
+        let b = base();
+        let (m, n, k) = (300, 300, 300);
+        // Drive a fixed feedback schedule: t=64 is fastest.
+        let speed = |t: usize| match t {
+            64 => 100.0,
+            128 => 60.0,
+            256 => 30.0,
+            _ => 1.0,
+        };
+        let mut seen = Vec::new();
+        for _ in 0..12 {
+            let c = d.choose("gemm", Dtype::F64, m, n, k, &b);
+            seen.push(c.t);
+            let gflops_target = speed(c.t);
+            let elapsed = 2.0 * (m * n * k) as f64 / (gflops_target * 1e9);
+            d.observe("gemm", Dtype::F64, m, n, k, c.t, elapsed);
+        }
+        // Converged on the fastest candidate.
+        assert_eq!(*seen.last().unwrap(), 64, "sequence: {seen:?}");
+        // And the whole sequence is reproducible.
+        let d2 = Dispatcher::adaptive(Profile::new());
+        let mut seen2 = Vec::new();
+        for _ in 0..12 {
+            let c = d2.choose("gemm", Dtype::F64, m, n, k, &b);
+            seen2.push(c.t);
+            let elapsed = 2.0 * (m * n * k) as f64 / (speed(c.t) * 1e9);
+            d2.observe("gemm", Dtype::F64, m, n, k, c.t, elapsed);
+        }
+        assert_eq!(seen, seen2, "adaptive dispatch must be deterministic");
+    }
+
+    #[test]
+    fn snapshot_profile_records_online_winners() {
+        let d = Dispatcher::adaptive(Profile::new());
+        let b = base();
+        let (m, n, k) = (300, 300, 300);
+        for _ in 0..10 {
+            let c = d.choose("gemm", Dtype::F64, m, n, k, &b);
+            let gf = if c.t == 128 { 90.0 } else { 20.0 };
+            d.observe("gemm", Dtype::F64, m, n, k, c.t, 2.0 * (m * n * k) as f64 / (gf * 1e9));
+        }
+        let p = d.snapshot_profile(&b);
+        let key = shape_key("gemm", Dtype::F64, m, n, k);
+        assert_eq!(p.get(&key).map(|c| c.t), Some(128));
+    }
+}

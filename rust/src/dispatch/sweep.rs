@@ -1,0 +1,172 @@
+//! The `blasx tune` shape-grid sweep: measure a compact grid of square
+//! GEMMs across the tile-size candidates (extending the spirit of the
+//! `hostblas::tune` KC/MC probe one level up, to whole-call geometry)
+//! and record the winners as a [`Profile`].
+//!
+//! The grid is deliberately small — a handful of shapes, seconds of
+//! wall time — because the profile keys are ×2 shape *buckets*: each
+//! measured point generalizes to its whole band, and unseen bands fall
+//! back to the heuristic. Timing here only ever changes *performance*
+//! decisions (tile size, fan-out, placement), never numerics.
+
+use super::{shape_key, Choice, Placement, Profile, T_CANDIDATES};
+use crate::api::types::Trans;
+use crate::api::{l3, Context, Dtype};
+use crate::hostblas;
+use crate::util::prng::Prng;
+use std::time::Instant;
+
+/// What to sweep. The defaults ([`SweepOpts::full`]) take a few
+/// seconds; [`SweepOpts::quick`] is the CI smoke variant.
+#[derive(Clone, Debug)]
+pub struct SweepOpts {
+    pub n_devices: usize,
+    pub arena_bytes: usize,
+    /// Square GEMM sizes for the device-side tile-size sweep.
+    pub shapes: Vec<usize>,
+    /// Sub-tile sizes for the host-vs-device placement probe.
+    pub small_shapes: Vec<usize>,
+    /// Timing repetitions per point (the minimum is kept).
+    pub reps: usize,
+}
+
+impl SweepOpts {
+    pub fn full() -> SweepOpts {
+        SweepOpts {
+            n_devices: 2,
+            arena_bytes: 64 << 20,
+            shapes: vec![256, 448, 768],
+            small_shapes: vec![64, 128],
+            reps: 2,
+        }
+    }
+
+    pub fn quick() -> SweepOpts {
+        SweepOpts {
+            n_devices: 2,
+            arena_bytes: 32 << 20,
+            shapes: vec![192],
+            small_shapes: vec![96],
+            reps: 1,
+        }
+    }
+}
+
+/// Seconds for one tiled n×n×n dgemm at tile size `t` with
+/// `kernel_threads` fan-out, on a fresh one-shot engine (cold staging
+/// included — that's part of what the choice pays for).
+fn time_tiled(n: usize, t: usize, kernel_threads: usize, opts: &SweepOpts) -> f64 {
+    let ctx = Context::new(opts.n_devices)
+        .with_arena(opts.arena_bytes)
+        .with_tile(t)
+        .with_kernel_threads(kernel_threads)
+        .with_persistent(false);
+    let mut rng = Prng::new(97);
+    let mut a = vec![0.0f64; n * n];
+    let mut b = vec![0.0f64; n * n];
+    let mut c = vec![0.0f64; n * n];
+    rng.fill_f64(&mut a, -1.0, 1.0);
+    rng.fill_f64(&mut b, -1.0, 1.0);
+    let mut best = f64::INFINITY;
+    for _ in 0..opts.reps.max(1) {
+        c.fill(0.0);
+        let t0 = Instant::now();
+        l3::dgemm(&ctx, Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut c, n)
+            .expect("sweep gemm");
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Seconds for one host-path n×n×n dgemm (what `Placement::Host`
+/// executes).
+fn time_host(n: usize, reps: usize) -> f64 {
+    let mut rng = Prng::new(98);
+    let mut a = vec![0.0f64; n * n];
+    let mut b = vec![0.0f64; n * n];
+    let mut c = vec![0.0f64; n * n];
+    rng.fill_f64(&mut a, -1.0, 1.0);
+    rng.fill_f64(&mut b, -1.0, 1.0);
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        c.fill(0.0);
+        let t0 = Instant::now();
+        hostblas::gemm_mt(1, Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut c, n);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Run the sweep and return the recorded profile. `log` receives one
+/// human-readable line per measured point (the CLI passes a printer;
+/// tests pass `|_| {}`).
+pub fn sweep(opts: &SweepOpts, mut log: impl FnMut(&str)) -> Profile {
+    let mut prof = Profile::new();
+    for &n in &opts.shapes {
+        let mut best: Option<(usize, f64)> = None;
+        for &t in T_CANDIDATES.iter().filter(|&&t| t <= n) {
+            if opts.arena_bytes < 8 * t * t * 8 {
+                continue; // arena can't hold a round's working set
+            }
+            let secs = time_tiled(n, t, 1, opts);
+            log(&format!("  gemm n={n} t={t}: {:.1} ms", secs * 1e3));
+            if best.map_or(true, |(_, b)| secs < b) {
+                best = Some((t, secs));
+            }
+        }
+        let Some((t, tiled_secs)) = best else { continue };
+        // Does fanning each tile kernel across threads pay at this
+        // shape? (Big tiles fork internally; small ones stay serial
+        // under the flop cutoff either way.)
+        let mt_secs = time_tiled(n, t, 4, opts);
+        log(&format!("  gemm n={n} t={t} kt=4: {:.1} ms", mt_secs * 1e3));
+        let kernel_threads = if mt_secs < tiled_secs { 4 } else { 1 };
+        prof.set(
+            shape_key("gemm", Dtype::F64, n, n, n),
+            Choice { t, kernel_threads, mt_cutoff: None, place: Placement::Device },
+        );
+    }
+    for &n in &opts.small_shapes {
+        let t = T_CANDIDATES.iter().copied().filter(|&t| t <= n).max().unwrap_or(T_CANDIDATES[0]);
+        let host = time_host(n, opts.reps);
+        let tiled = time_tiled(n, t.min(n), 1, opts);
+        log(&format!(
+            "  gemm n={n}: host {:.2} ms vs tiled {:.2} ms",
+            host * 1e3,
+            tiled * 1e3
+        ));
+        let place = if host <= tiled { Placement::Host } else { Placement::Device };
+        prof.set(
+            shape_key("gemm", Dtype::F64, n, n, n),
+            Choice { t, kernel_threads: 1, mt_cutoff: None, place },
+        );
+    }
+    prof
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_sweep_produces_a_loadable_profile() {
+        // A deliberately minuscule grid: this checks plumbing (sweep →
+        // profile → JSON → profile), not measurement quality.
+        let opts = SweepOpts {
+            n_devices: 1,
+            arena_bytes: 8 << 20,
+            shapes: vec![96],
+            small_shapes: vec![48],
+            reps: 1,
+        };
+        let prof = sweep(&opts, |_| {});
+        assert_eq!(prof.len(), 2, "one grid entry + one placement entry");
+        let text = prof.to_json().to_string_pretty();
+        let back = Profile::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, prof);
+        // The measured grid point must be a device-placement choice
+        // with a candidate tile size.
+        let c = back.get(&shape_key("gemm", Dtype::F64, 96, 96, 96)).unwrap();
+        assert!(T_CANDIDATES.contains(&c.t));
+    }
+}

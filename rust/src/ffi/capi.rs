@@ -83,6 +83,10 @@ pub struct BlasxConfigC {
     /// Fault-injection schedule in the `BLASX_FAULTS` grammar
     /// (NUL-terminated; NULL or empty: no injected faults).
     pub faults: *const c_char,
+    /// Path to a `blasx tune` dispatch profile (NUL-terminated; NULL
+    /// or empty: no per-shape dispatch — fixed tile size, device
+    /// placement). See the "Adaptive dispatch" section of the README.
+    pub profile: *const c_char,
 }
 
 /// Configure the process-global BLASX context before first use.
@@ -168,6 +172,17 @@ unsafe fn init_context(cfg: *const BlasxConfigC) -> Result<Context> {
             if !plan.specs.is_empty() {
                 ctx = ctx.with_fault_plan(Some(plan));
             }
+        }
+    }
+    if !c.profile.is_null() {
+        let path = std::ffi::CStr::from_ptr(c.profile)
+            .to_str()
+            .map_err(|_| illegal("blasx_init", 10, "profile path is not UTF-8"))?;
+        if !path.trim().is_empty() {
+            // Unlike the BLASX_PROFILE env fallback (which must not
+            // break legacy callers), an explicit init with a bad
+            // profile is a caller error and fails loudly.
+            ctx = ctx.with_profile_file(path.trim())?;
         }
     }
     Ok(ctx)

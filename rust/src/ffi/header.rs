@@ -36,7 +36,11 @@ pub fn render() -> String {
  *    declare; blasx_*_async then fails).
  *  - Environment (read once, at first call): BLASX_DEVICES,
  *    BLASX_TILE, BLASX_ARENA_MB, BLASX_KERNEL_THREADS,
- *    BLASX_PERSISTENT, BLASX_FAULTS (fault-injection schedule).
+ *    BLASX_PERSISTENT, BLASX_FAULTS (fault-injection schedule),
+ *    BLASX_PROFILE (path to a `blasx tune` dispatch profile: per-shape
+ *    tile size / kernel fan-out / host-vs-device placement; unreadable
+ *    profiles are reported on stderr and ignored), BLASX_MT_CUTOFF
+ *    (serial/fork flop cutoff of the multithreaded host kernel).
  *    Alternatively call blasx_init() with an explicit configuration
  *    BEFORE any other BLASX entry.
  */
@@ -89,6 +93,10 @@ typedef struct blasx_config {{
     const char *faults;     /* fault schedule, BLASX_FAULTS grammar
                              * (NULL/empty: none), e.g.
                              * "kill@dev1:op40; h2d@dev0:op5x2; seed=7"    */
+    const char *profile;    /* dispatch-profile path (`blasx tune` JSON;
+                             * NULL/empty: fixed tile size, no per-shape
+                             * dispatch). Unlike BLASX_PROFILE, a bad
+                             * path here fails the init loudly.          */
 }} blasx_config_t;
 
 /* Configure the process-global runtime. Must be the FIRST BLASX call:

@@ -30,6 +30,6 @@ pub mod tune;
 pub use gemm::{gemm_blocked, gemm_packed, gemm_packed_with, gemm_ref};
 pub use pack::{give_buf, take_buf, PackBuf};
 pub use sy::{symm_packed, symm_ref, syr2k_packed, syr2k_ref, syrk_packed, syrk_ref};
-pub use threaded::{gemm_mt, MT_FLOP_CUTOFF};
+pub use threaded::{gemm_mt, gemm_mt_with_cutoff, mt_flop_cutoff, MT_FLOP_CUTOFF};
 pub use tri::{trmm_packed, trmm_ref, trsm_packed, trsm_ref};
 pub use tune::{block_dims, BlockDims, DEFAULT_DIMS};

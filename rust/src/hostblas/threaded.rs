@@ -11,9 +11,13 @@
 //! small n) entirely serial; the 2D grid splits whichever dimensions
 //! have the work.
 //!
-//! The serial cutoff is flop-based: a 2·m·n·k budget below
-//! [`MT_FLOP_CUTOFF`] is cheaper to run in-place than to fork for
-//! (see EXPERIMENTS.md §Perf for the sizing rationale).
+//! The serial cutoff is flop-based: a 2·m·n·k budget below the cutoff
+//! is cheaper to run in-place than to fork for (see EXPERIMENTS.md
+//! §Perf for the sizing rationale). [`MT_FLOP_CUTOFF`] is the built-in
+//! *default*; the effective process-wide value ([`mt_flop_cutoff`])
+//! can be overridden with `BLASX_MT_CUTOFF`, and the adaptive
+//! dispatcher (`crate::dispatch`) overrides it per call via
+//! [`gemm_mt_with_cutoff`] / `RunConfig::mt_cutoff`.
 //!
 //! Cells execute on the process-wide persistent
 //! [`crate::runtime::KernelPool`] (plus the submitting thread, which
@@ -30,8 +34,29 @@ use super::tune::block_dims;
 use crate::api::types::{Scalar, Trans};
 use crate::runtime::KernelPool;
 
-/// Minimum flops (2·m·n·k) before forking pays for itself.
+/// Minimum flops (2·m·n·k) before forking pays for itself — the
+/// built-in default of the dispatch table (see [`mt_flop_cutoff`] for
+/// the effective value).
 pub const MT_FLOP_CUTOFF: f64 = 8.4e6; // ≈ 2·160³
+
+/// Parse a `BLASX_MT_CUTOFF`-style override: any positive float (`2e6`,
+/// `500000`) replaces the default; absent, empty, non-numeric or
+/// non-positive values keep [`MT_FLOP_CUTOFF`]. Pure so the policy is
+/// testable without mutating process-global environment.
+fn parse_cutoff(env: Option<&str>) -> f64 {
+    env.and_then(|s| s.trim().parse::<f64>().ok())
+        .filter(|&v| v.is_finite() && v > 0.0)
+        .unwrap_or(MT_FLOP_CUTOFF)
+}
+
+/// The process-wide effective serial/fork cutoff: [`MT_FLOP_CUTOFF`]
+/// unless `BLASX_MT_CUTOFF` overrides it. Read once (the env is not
+/// re-consulted after the first call); per-call overrides go through
+/// [`gemm_mt_with_cutoff`].
+pub fn mt_flop_cutoff() -> f64 {
+    static CUTOFF: std::sync::OnceLock<f64> = std::sync::OnceLock::new();
+    *CUTOFF.get_or_init(|| parse_cutoff(std::env::var("BLASX_MT_CUTOFF").ok().as_deref()))
+}
 
 /// A raw C pointer that may cross into the kernel pool's threads. Each
 /// submitted cell derives from it a pointer to a *disjoint* sub-block
@@ -69,10 +94,50 @@ fn grid_for(threads: usize, m: usize, n: usize) -> (usize, usize) {
 }
 
 /// Multithreaded GEMM with [`gemm_packed`] semantics, partitioning C's
-/// M×N output plane across up to `threads` workers.
+/// M×N output plane across up to `threads` workers. Uses the
+/// process-wide serial/fork cutoff ([`mt_flop_cutoff`]).
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_mt<T: Scalar>(
     threads: usize,
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) {
+    gemm_mt_with_cutoff(
+        threads,
+        mt_flop_cutoff(),
+        ta,
+        tb,
+        m,
+        n,
+        k,
+        alpha,
+        a,
+        lda,
+        b,
+        ldb,
+        beta,
+        c,
+        ldc,
+    );
+}
+
+/// [`gemm_mt`] with an explicit serial/fork cutoff — the adaptive
+/// dispatcher's per-call doorway (`RunConfig::mt_cutoff`).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_mt_with_cutoff<T: Scalar>(
+    threads: usize,
+    cutoff: f64,
     ta: Trans,
     tb: Trans,
     m: usize,
@@ -95,7 +160,7 @@ pub fn gemm_mt<T: Scalar>(
     // alpha == 0 joins the serial path: BLAS says A/B are unreferenced
     // then, so the fork path's &a[aoff..] shrink would be the only
     // reader — and a legally undersized A/B would make it panic.
-    if threads == 1 || alpha == T::zero() || flops < MT_FLOP_CUTOFF {
+    if threads == 1 || alpha == T::zero() || flops < cutoff {
         gemm_packed(ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc);
         return;
     }
@@ -242,6 +307,79 @@ mod tests {
         gemm_mt(16, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c3, m);
         assert!(close(&c1, &c2));
         assert!(close(&c1, &c3));
+    }
+
+    #[test]
+    fn tall_skinny_stays_fixed_under_any_cutoff() {
+        // Satellite regression: the tall-skinny serial-trap fix must
+        // hold both at the default cutoff (forked 2D path) and under an
+        // overridden cutoff that forces the opposite branch — both must
+        // match the oracle, so a `BLASX_MT_CUTOFF` override can shift
+        // the fork point but never the answer.
+        let mut rng = Prng::new(43);
+        let (m, n, k) = (2048, 8, 300);
+        let flops = 2.0 * (m * n * k) as f64;
+        let mut a = vec![0.0; m * k];
+        let mut b = vec![0.0; k * n];
+        rng.fill_f64(&mut a, -1.0, 1.0);
+        rng.fill_f64(&mut b, -1.0, 1.0);
+        let mut c0 = vec![0.0; m * n];
+        rng.fill_f64(&mut c0, -1.0, 1.0);
+        let mut c_ref = c0.clone();
+        gemm_ref(Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.5, &mut c_ref, m);
+        // Cutoff far below the problem: fork engages (default-like).
+        let mut c_fork = c0.clone();
+        assert!(flops >= MT_FLOP_CUTOFF);
+        gemm_mt_with_cutoff(
+            4,
+            1.0,
+            Trans::No,
+            Trans::No,
+            m,
+            n,
+            k,
+            1.0,
+            &a,
+            m,
+            &b,
+            k,
+            0.5,
+            &mut c_fork,
+            m,
+        );
+        assert!(close(&c_ref, &c_fork));
+        // Cutoff far above the problem: serial path, same answer.
+        let mut c_serial = c0.clone();
+        gemm_mt_with_cutoff(
+            4,
+            flops * 10.0,
+            Trans::No,
+            Trans::No,
+            m,
+            n,
+            k,
+            1.0,
+            &a,
+            m,
+            &b,
+            k,
+            0.5,
+            &mut c_serial,
+            m,
+        );
+        assert!(close(&c_ref, &c_serial));
+    }
+
+    #[test]
+    fn cutoff_parse_policy() {
+        assert_eq!(parse_cutoff(None), MT_FLOP_CUTOFF);
+        assert_eq!(parse_cutoff(Some("")), MT_FLOP_CUTOFF);
+        assert_eq!(parse_cutoff(Some("banana")), MT_FLOP_CUTOFF);
+        assert_eq!(parse_cutoff(Some("-5")), MT_FLOP_CUTOFF);
+        assert_eq!(parse_cutoff(Some("0")), MT_FLOP_CUTOFF);
+        assert_eq!(parse_cutoff(Some("inf")), MT_FLOP_CUTOFF);
+        assert_eq!(parse_cutoff(Some("2e6")), 2e6);
+        assert_eq!(parse_cutoff(Some(" 500000 ")), 5e5);
     }
 
     #[test]

@@ -104,6 +104,7 @@ pub mod bench;
 pub mod cache;
 pub mod cli;
 pub mod coordinator;
+pub mod dispatch;
 pub mod error;
 pub mod fault;
 pub mod ffi;

@@ -43,11 +43,12 @@
 //!   clone, plus any outstanding `JobHandle`s, which keep the runtime
 //!   alive) signals the workers and joins them.
 //!
-//! Tile-size changes between calls are admitted as *barrier* jobs: the
-//! switching job waits for every live job, later jobs wait for it, and
-//! the caches are purged wholesale at the quiescent point in between
-//! (block geometry participates in tile addressing, so cross-size
-//! reuse would be incoherent). A failed job schedules **no** purge:
+//! Tile-size changes between calls cost **nothing**: the tile size is
+//! a discriminant of [`crate::tile::TileKey`], so each geometry is its
+//! own cache generation — mixed-`t` jobs coexist in the caches and
+//! overlap on the devices like any other disjoint jobs, and a switch
+//! neither barriers nor purges (stale generations age out of the ALRU
+//! like any other cold tiles). A failed job schedules **no** purge:
 //! the engine releases its pins on every abort path, and a lost
 //! device's cache entries are evicted surgically, so other tenants'
 //! warm tiles survive a neighbour's failure.
@@ -65,16 +66,18 @@
 //! job aborts with [`Error::DeadlineExceeded`] / [`Error::Cancelled`]
 //! while its neighbours' rounds run undisturbed.
 
+use crate::api::types::Trans;
 use crate::api::Scalar;
 use crate::cache::CacheStats;
 use crate::coordinator::config::RunConfig;
 use crate::coordinator::real_engine::{
     block_bytes, worker_round, EngineCore, JobState, JobStats, Mats, OwnedProblem, RealReport,
-    Round, PARK_TIMEOUT,
+    Round, TransferStats, PARK_TIMEOUT,
 };
 use crate::coordinator::FaultStats;
 use crate::error::{Error, Result};
 use crate::fault::FaultPlan;
+use crate::hostblas;
 use crate::mem::AllocStrategy;
 use crate::serve::admission::{JobCtl, JobSpan, JobTable};
 use crate::serve::{fairness, DeviceJob};
@@ -294,13 +297,142 @@ impl<T: Scalar> DeviceJob for OwnedJob<T> {
     }
 }
 
+/// A shared-read operand pointer that may cross into a device worker.
+/// Safety rests on the submit-then-wait contract of [`Runtime::submit_host`]:
+/// the caller's borrows outlive retirement, and the kernel only reads.
+struct HostRead<T>(*const T, usize);
+unsafe impl<T> Send for HostRead<T> {}
+unsafe impl<T> Sync for HostRead<T> {}
+
+/// The output pointer of a host-placed job. Exactly one worker claims
+/// the kernel (the `claimed` latch), so the `&mut` reconstructed from
+/// it is unique.
+struct HostWrite<T>(*mut T, usize);
+unsafe impl<T> Send for HostWrite<T> {}
+unsafe impl<T> Sync for HostWrite<T> {}
+
+/// A host-placed GEMM, admitted through the job table like any device
+/// job — the byte-range dependency edges order it against aliasing
+/// in-flight work and its output epoch bump invalidates cached C tiles
+/// — but executed as a single `hostblas::gemm_mt_with_cutoff` shot on
+/// whichever resident worker claims it first. This is the adaptive
+/// dispatcher's `Placement::Host` arm: small/skinny shapes where tiling
+/// and staging cost more than the multiply itself.
+struct HostGemm<T: Scalar> {
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    beta: T,
+    a: HostRead<T>,
+    lda: usize,
+    b: HostRead<T>,
+    ldb: usize,
+    c: HostWrite<T>,
+    ldc: usize,
+    /// Kernel fan-out + serial/fork cutoff, resolved at submission.
+    threads: usize,
+    cutoff: f64,
+    n_devices: usize,
+    /// First-claim latch: the winning worker runs the kernel; probing
+    /// workers see an in-flight (not finished!) job and go idle — the
+    /// claimer's active round pins the table entry until `done`.
+    claimed: AtomicBool,
+    done: AtomicBool,
+    failure: Mutex<Option<Error>>,
+}
+
+impl<T: Scalar> HostGemm<T> {
+    fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+}
+
+impl<T: Scalar> DeviceJob for HostGemm<T> {
+    fn run_round(&self, _dev: usize, _core: &EngineCore) -> Round {
+        if self.claimed.swap(true, Ordering::SeqCst) {
+            // Claimed by another worker. Report Idle while the kernel
+            // is mid-flight (premature Finished would retire the job
+            // under the claimer); Finished once it lands.
+            return if self.done.load(Ordering::SeqCst) { Round::Finished } else { Round::Idle };
+        }
+        // SAFETY: submit_host parks its caller until retirement, so
+        // the operand borrows behind these pointers are live; a/b are
+        // shared reads and the claim latch above makes this the only
+        // path that ever touches c.
+        let (a, b, c) = unsafe {
+            (
+                std::slice::from_raw_parts(self.a.0, self.a.1),
+                std::slice::from_raw_parts(self.b.0, self.b.1),
+                std::slice::from_raw_parts_mut(self.c.0, self.c.1),
+            )
+        };
+        hostblas::gemm_mt_with_cutoff(
+            self.threads,
+            self.cutoff,
+            self.ta,
+            self.tb,
+            self.m,
+            self.n,
+            self.k,
+            self.alpha,
+            a,
+            self.lda,
+            b,
+            self.ldb,
+            self.beta,
+            c,
+            self.ldc,
+        );
+        self.done.store(true, Ordering::SeqCst);
+        Round::Progress { flops: self.flops() }
+    }
+
+    fn poison(&self, msg: String) {
+        self.abort(Error::Internal(msg));
+    }
+
+    fn abort(&self, err: Error) {
+        let mut f = self.failure.lock().unwrap_or_else(|e| e.into_inner());
+        if f.is_none() {
+            *f = Some(err);
+        }
+    }
+
+    fn report(&self, _core: &EngineCore) -> Result<RealReport> {
+        if let Some(e) = self.failure.lock().unwrap_or_else(|e| e.into_inner()).take() {
+            return Err(e);
+        }
+        // Host placement moves no tiles: the report is all-zeros by
+        // construction (warm-path assertions on host_reads stay valid).
+        Ok(RealReport {
+            tasks_per_device: vec![0; self.n_devices],
+            cache_stats: vec![CacheStats::default(); self.n_devices],
+            cache_delta: vec![CacheStats::default(); self.n_devices],
+            steals: vec![0; self.n_devices],
+            transfers: TransferStats::default(),
+        })
+    }
+
+    fn done(&self) -> bool {
+        self.done.load(Ordering::SeqCst)
+    }
+
+    fn stats(&self) -> JobStats {
+        JobStats::default()
+    }
+}
+
 struct Inner {
     core: EngineCore,
     n_devices: usize,
     arena_bytes: usize,
     /// The multi-job slot table: the single shared scheduler state.
-    /// Lock order: `table` → `caches` (purges) and `table` → `epochs`;
-    /// never call [`EngineCore::notify_work`] while holding it.
+    /// Lock order: `table` → `caches` (the admission-time counter
+    /// baseline snapshot) and `table` → `epochs`; never call
+    /// [`EngineCore::notify_work`] while holding it.
     table: Mutex<JobTable>,
     epochs: Mutex<EpochRegistry>,
     shutdown: AtomicBool,
@@ -421,25 +553,23 @@ impl Runtime {
         );
     }
 
-    /// Admit a constructed job: enforce the backpressure bounds, wire
-    /// dependency edges, stamp epochs (same lock, same order), insert
-    /// into the table, wake workers. Fails fast with
-    /// [`Error::Backpressure`] when the table is at capacity or the
-    /// submitting tenant is at its in-flight quota.
-    fn admit<T: Scalar>(
+    /// Admission core shared by every submission path: enforce the
+    /// backpressure bounds, stamp epochs via `stamp_epochs` (same lock,
+    /// same order), insert into the table wiring dependency edges, run
+    /// `after_admit` still under the table lock (trace-id / baseline
+    /// stamps — no worker round of the job can precede them), wake
+    /// workers. Fails fast with [`Error::Backpressure`] when the table
+    /// is at capacity or the submitting tenant is at its in-flight
+    /// quota.
+    fn admit_raw(
         &self,
         cfg: &RunConfig,
-        state: &JobState<'static, T>,
+        span: JobSpan,
+        weight: f64,
         erased: Arc<dyn DeviceJob>,
+        stamp_epochs: impl FnOnce(&mut EpochRegistry),
+        after_admit: impl FnOnce(&JobCtl),
     ) -> Result<Arc<JobCtl>> {
-        let mut span = JobSpan::default();
-        for m in state.problems() {
-            for hm in [Some(m.a), m.b].into_iter().flatten() {
-                span.ins.push(hm.byte_range());
-            }
-            span.outs.push(m.c.byte_range());
-        }
-        let weight = state.weight();
         let tenant = tenant_id();
         let ctl = {
             let mut table = self.inner.table.lock().unwrap_or_else(|e| e.into_inner());
@@ -467,36 +597,12 @@ impl Runtime {
             // bit-for-bit equal to serial execution.
             {
                 let mut reg = self.inner.epochs.lock().unwrap_or_else(|e| e.into_inner());
-                for m in state.problems() {
-                    for hm in [Some(m.a), m.b].into_iter().flatten() {
-                        let (lo, hi) = hm.byte_range();
-                        hm.set_epoch(reg.epoch_of(lo, hi));
-                    }
-                }
-                for m in state.problems() {
-                    let (lo, hi) = m.c.byte_range();
-                    m.c.set_epoch(reg.bump(lo, hi));
-                }
+                stamp_epochs(&mut reg);
             }
             let deadline =
                 cfg.deadline_ms.map(|ms| (Instant::now() + Duration::from_millis(ms), ms));
-            let (ctl, purge_now) = table.admit(erased, span, weight, cfg.t, tenant, deadline);
-            if purge_now {
-                // Geometry switch into a quiescent table: old-size
-                // blocks must be unreachable before this job runs.
-                self.inner.core.purge();
-            }
-            // Stamp the admission id onto the job's spans and snapshot
-            // the cache counters (post-purge) as the per-call delta
-            // baseline. Under the table lock so no worker round of
-            // this job can precede either stamp.
-            state.set_trace_id(ctl.id);
-            {
-                let caches = self.inner.core.lock_caches();
-                state.set_cache_baseline(
-                    (0..self.inner.n_devices).map(|d| caches.stats(d)).collect::<Vec<CacheStats>>(),
-                );
-            }
+            let ctl = table.admit(erased, span, weight, tenant, deadline);
+            after_admit(&ctl);
             self.inner.metrics.on_admit(
                 ctl.id,
                 tenant,
@@ -508,6 +614,51 @@ impl Runtime {
         };
         self.inner.core.notify_work();
         Ok(ctl)
+    }
+
+    /// Admit a constructed tiled job (see [`Runtime::admit_raw`] for
+    /// the shared admission mechanics).
+    fn admit<T: Scalar>(
+        &self,
+        cfg: &RunConfig,
+        state: &JobState<'static, T>,
+        erased: Arc<dyn DeviceJob>,
+    ) -> Result<Arc<JobCtl>> {
+        let mut span = JobSpan::default();
+        for m in state.problems() {
+            for hm in [Some(m.a), m.b].into_iter().flatten() {
+                span.ins.push(hm.byte_range());
+            }
+            span.outs.push(m.c.byte_range());
+        }
+        self.admit_raw(
+            cfg,
+            span,
+            state.weight(),
+            erased,
+            |reg| {
+                for m in state.problems() {
+                    for hm in [Some(m.a), m.b].into_iter().flatten() {
+                        let (lo, hi) = hm.byte_range();
+                        hm.set_epoch(reg.epoch_of(lo, hi));
+                    }
+                }
+                for m in state.problems() {
+                    let (lo, hi) = m.c.byte_range();
+                    m.c.set_epoch(reg.bump(lo, hi));
+                }
+            },
+            |ctl| {
+                // Stamp the admission id onto the job's spans and
+                // snapshot the cache counters as the per-call delta
+                // baseline.
+                state.set_trace_id(ctl.id);
+                let caches = self.inner.core.lock_caches();
+                state.set_cache_baseline(
+                    (0..self.inner.n_devices).map(|d| caches.stats(d)).collect::<Vec<CacheStats>>(),
+                );
+            },
+        )
     }
 
     /// Execute a task set over the resident engine; parks the caller
@@ -579,6 +730,82 @@ impl Runtime {
         let ctl = self.admit(cfg, &job.state, erased.clone())?;
         Ok((erased, ctl))
     }
+
+    /// Execute a GEMM *on the host*, admitted through the job table so
+    /// it orders correctly against aliasing in-flight tiled jobs (RAW/
+    /// WAR/WAW edges from the same byte ranges) and bumps the output
+    /// epoch so previously cached C tiles become unreachable — but
+    /// without tiling, staging, or touching the device caches. This is
+    /// the dispatcher's `Placement::Host` arm for shapes where the
+    /// multiply is cheaper than the staging it would take to ship it.
+    /// Blocking (submit-then-wait), mirroring [`Runtime::submit`].
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn submit_host<T: Scalar>(
+        &self,
+        cfg: &RunConfig,
+        ta: Trans,
+        tb: Trans,
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: T,
+        a: &[T],
+        lda: usize,
+        b: &[T],
+        ldb: usize,
+        beta: T,
+        c: &mut [T],
+        ldc: usize,
+    ) -> Result<RealReport> {
+        let esz = std::mem::size_of::<T>();
+        let range = |p: *const T, len: usize| (p as usize, p as usize + len * esz);
+        let span = JobSpan {
+            ins: vec![range(a.as_ptr(), a.len()), range(b.as_ptr(), b.len())],
+            outs: vec![range(c.as_ptr(), c.len())],
+        };
+        let (c_lo, c_hi) = range(c.as_ptr(), c.len());
+        let job = Arc::new(HostGemm {
+            ta,
+            tb,
+            m,
+            n,
+            k,
+            alpha,
+            beta,
+            a: HostRead(a.as_ptr(), a.len()),
+            lda,
+            b: HostRead(b.as_ptr(), b.len()),
+            ldb,
+            c: HostWrite(c.as_mut_ptr(), c.len()),
+            ldc,
+            threads: cfg.worker_threads.max(1),
+            cutoff: cfg.mt_cutoff.unwrap_or_else(hostblas::mt_flop_cutoff),
+            n_devices: self.inner.n_devices,
+            claimed: AtomicBool::new(false),
+            done: AtomicBool::new(false),
+            failure: Mutex::new(None),
+        });
+        let weight = job.flops();
+        let erased: Arc<dyn DeviceJob> = job.clone();
+        let ctl = self.admit_raw(
+            cfg,
+            span,
+            weight,
+            erased,
+            // Inputs are read straight from host memory (always
+            // current), so only the output generation matters: the
+            // bump makes stale cached C tiles unreachable for every
+            // later tiled job.
+            |reg| {
+                reg.bump(c_lo, c_hi);
+            },
+            |_| {},
+        )?;
+        ctl.wait_retired();
+        let report = job.report(&self.inner.core);
+        drop(job);
+        report
+    }
 }
 
 impl Drop for Runtime {
@@ -626,13 +853,6 @@ fn next_round(inner: &Inner, tried: &mut HashSet<u64>, seen_version: &mut u64) -
         // and, if no round of theirs is in flight, retire on the spot
         // — neighbours' rounds are untouched.
         let reap = table.reap_expired();
-        if reap.purge_now {
-            // A reap drained a geometry barrier's last dependency at
-            // global quiescence: purge before anything runs on the
-            // new tile size.
-            inner.core.purge();
-            table.purge_done();
-        }
         if table.version != *seen_version {
             *seen_version = table.version;
             tried.clear();
@@ -703,10 +923,6 @@ fn device_worker(inner: Arc<Inner>, dev: usize) {
                 let (retired, retired_failed) = {
                     let mut table = inner.table.lock().unwrap_or_else(|e| e.into_inner());
                     let actions = table.finish_round(id, flops, finished, failed);
-                    if actions.purge_now {
-                        inner.core.purge();
-                        table.purge_done();
-                    }
                     (actions.retired, actions.retired_failed)
                 };
                 if let Some(ctl) = retired {

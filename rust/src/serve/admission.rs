@@ -20,19 +20,20 @@
 //! tile-cache epoch discipline equivalent to the serialized PR 3
 //! runtime.
 //!
-//! ## Tile-size barriers and cache purges
+//! ## Per-geometry cache generations (no barriers, no purges)
 //!
-//! Block geometry participates in tile addressing, so jobs with
-//! different tile sizes must never share the cache. A job whose `t`
-//! differs from the table's current one is admitted as a **barrier**:
-//! it depends on every live job, every later job depends on it (via
-//! `last_barrier`), and the caches are purged at the quiescent point
-//! where its dependencies have drained (`rounds_active == 0` is
-//! guaranteed there — no other job can be mid-round). A *failed* job
-//! needs no purge anymore: the engine releases its pins on every abort
-//! path and a lost device's cache entries are invalidated surgically
-//! (`TileCaches::evict_device`), so other tenants' warm tiles survive
-//! a neighbour's failure.
+//! Block geometry is a discriminant of [`crate::tile::TileKey`]: tiles
+//! cached at `t=64` and `t=96` have different keys, so jobs with
+//! different tile sizes coexist in one cache the same way two epochs
+//! of one buffer do. A tile-size switch therefore needs **no
+//! ordering at all** — the old barrier-job + global-purge path is
+//! gone, and mixed-`t` tenants overlap on the devices like any other
+//! disjoint jobs while each geometry's warm set survives untouched.
+//! Stale generations fall out of the ALRU like any other cold tiles.
+//! A *failed* job likewise needs no purge: the engine releases its
+//! pins on every abort path and a lost device's cache entries are
+//! invalidated surgically (`TileCaches::evict_device`), so other
+//! tenants' warm tiles survive a neighbour's failure.
 //!
 //! ## Deadlines, cancellation and backpressure
 //!
@@ -176,11 +177,11 @@ pub(crate) struct JobEntry {
     /// All tasks done (or the job failed): retire once `active_rounds`
     /// reaches zero.
     pub finishing: bool,
-    /// Poisoned/errored — retirement schedules a cache purge.
+    /// Poisoned/errored — recorded for retirement bookkeeping (the
+    /// waiter's report carries the failure). Failure schedules **no**
+    /// cache purge: the engine releases the job's pins on every abort
+    /// path, so neighbours keep their warm tiles.
     pub failed: bool,
-    /// Tile-size barrier: purge the caches when this job becomes
-    /// runnable (cleared once the purge has happened).
-    pub needs_purge: bool,
     /// Fair-share ledger (see `super::fairness`).
     pub weight: f64,
     pub charged: f64,
@@ -195,9 +196,6 @@ pub(crate) struct JobEntry {
 /// [`JobTable::finish_round`].
 #[derive(Default)]
 pub(crate) struct FinishActions {
-    /// Purge the engine caches NOW, then call [`JobTable::purge_done`]
-    /// (still under the lock). Only set at global quiescence.
-    pub purge_now: bool,
     /// The retired job's latch: count the call, then (outside the
     /// table lock) `retire()` it and wake the worker fleet.
     pub retired: Option<Arc<JobCtl>>,
@@ -216,10 +214,6 @@ pub(crate) struct ReapActions {
     /// reference): outside the table lock, `retire()` each latch and
     /// wake the fleet (their dependents may be runnable now).
     pub retired: Vec<(Arc<JobCtl>, crate::coordinator::FaultStats)>,
-    /// A geometry barrier's dependencies drained at a reap: purge the
-    /// caches NOW, then call [`JobTable::purge_done`] (still under the
-    /// lock). Only set at global quiescence.
-    pub purge_now: bool,
 }
 
 /// The multi-job slot table (see module docs).
@@ -231,10 +225,6 @@ pub(crate) struct JobTable {
     pub version: u64,
     /// Rounds in flight across all jobs (Σ active_rounds).
     pub rounds_active: usize,
-    /// Latest live tile-size barrier; later admissions depend on it.
-    last_barrier: Option<u64>,
-    /// Tile size of the current cache generation.
-    last_t: Option<usize>,
 }
 
 impl Default for JobTable {
@@ -245,14 +235,7 @@ impl Default for JobTable {
 
 impl JobTable {
     pub fn new() -> JobTable {
-        JobTable {
-            jobs: Vec::new(),
-            next_id: 0,
-            version: 0,
-            rounds_active: 0,
-            last_barrier: None,
-            last_t: None,
-        }
+        JobTable { jobs: Vec::new(), next_id: 0, version: 0, rounds_active: 0 }
     }
 
     pub fn is_empty(&self) -> bool {
@@ -275,47 +258,26 @@ impl JobTable {
     }
 
     /// Admit a job: compute its dependency edges (byte-range conflicts
-    /// against every live job, plus barrier ordering), insert it, and
-    /// report whether the caller must purge the caches immediately (a
-    /// barrier admitted into an already-quiescent table).
+    /// against every live job — the *only* ordering that exists; tile
+    /// geometry is a cache-key discriminant, not an ordering concern)
+    /// and insert it.
     pub fn admit(
         &mut self,
         job: Arc<dyn DeviceJob>,
         span: JobSpan,
         weight: f64,
-        t: usize,
         tenant: u32,
         deadline: Option<(Instant, u64)>,
-    ) -> (Arc<JobCtl>, bool) {
+    ) -> Arc<JobCtl> {
         let id = self.next_id;
         self.next_id += 1;
-        let switch = self.last_t != Some(t);
-        let needs_purge = switch && self.last_t.is_some();
-        self.last_t = Some(t);
-        let deps: HashSet<u64> = if needs_purge {
-            // Barrier: wait for everything live, regardless of ranges.
-            self.jobs.iter().map(|e| e.id).collect()
-        } else {
-            let mut d: HashSet<u64> = self
-                .jobs
-                .iter()
-                .filter(|e| JobSpan::conflicts(&span, &e.span))
-                .map(|e| e.id)
-                .collect();
-            // Nothing may overtake a pending geometry barrier: its
-            // purge must not wipe blocks a newer job is computing on.
-            if let Some(b) = self.last_barrier {
-                if self.jobs.iter().any(|e| e.id == b) {
-                    d.insert(b);
-                }
-            }
-            d
-        };
-        if needs_purge {
-            self.last_barrier = Some(id);
-        }
+        let deps: HashSet<u64> = self
+            .jobs
+            .iter()
+            .filter(|e| JobSpan::conflicts(&span, &e.span))
+            .map(|e| e.id)
+            .collect();
         let ctl = Arc::new(JobCtl::new(id));
-        let purge_immediately = needs_purge && deps.is_empty();
         self.jobs.push(JobEntry {
             id,
             job,
@@ -325,17 +287,13 @@ impl JobTable {
             active_rounds: 0,
             finishing: false,
             failed: false,
-            // An immediate purge (performed by the admitting caller
-            // while it still holds the table lock) discharges the flag.
-            needs_purge: needs_purge && !purge_immediately,
             weight,
             charged: 0.0,
             tenant,
             deadline,
         });
         self.version += 1;
-        debug_assert!(!purge_immediately || self.rounds_active == 0);
-        (ctl, purge_immediately)
+        ctl
     }
 
     /// Fair-share ledgers of the currently runnable jobs (dependencies
@@ -397,19 +355,12 @@ impl JobTable {
             let idx = self.jobs.iter().position(|e| e.id == id).expect("reaped id");
             let entry = self.jobs.remove(idx);
             self.version += 1;
-            if self.last_barrier == Some(id) {
-                self.last_barrier = None;
-            }
             for other in &mut self.jobs {
                 other.deps.remove(&id);
             }
             let faults = entry.job.fault_stats();
             acts.retired.push((entry.ctl, faults));
         }
-        // A reap can be what drains a geometry barrier's last
-        // dependency; same quiescent-purge rule as finish_round.
-        let barrier_ready = self.jobs.iter().any(|e| e.deps.is_empty() && e.needs_purge);
-        acts.purge_now = barrier_ready && self.rounds_active == 0;
         acts
     }
 
@@ -449,36 +400,17 @@ impl JobTable {
             let idx = self.jobs.iter().position(|e| e.id == id).unwrap();
             let entry = self.jobs.remove(idx);
             self.version += 1;
-            if self.last_barrier == Some(id) {
-                self.last_barrier = None;
-            }
             for other in &mut self.jobs {
                 other.deps.remove(&id);
             }
             actions.retired_failed = entry.failed;
             actions.retired = Some(entry.ctl);
         }
-        // A geometry barrier whose dependencies just drained purges at
-        // this quiescent point (no other job can be mid-round: all its
-        // predecessors retired, all its successors still dep on it).
-        // Failed jobs schedule NO purge: the engine releases their
-        // pins on every abort path, and lost-device state is evicted
-        // surgically — neighbours keep their warm tiles.
-        let barrier_ready = self.jobs.iter().any(|e| e.deps.is_empty() && e.needs_purge);
-        if barrier_ready && self.rounds_active == 0 {
-            actions.purge_now = true;
-        }
+        // Neither retirement nor failure schedules any cache purge:
+        // the engine releases a failed job's pins on every abort path,
+        // lost-device state is evicted surgically, and tile-geometry
+        // changes are cache-key generations, not cache-wide events.
         actions
-    }
-
-    /// The caller purged the caches (under the table lock, at a
-    /// quiescent point): clear every discharged purge obligation.
-    pub fn purge_done(&mut self) {
-        for e in &mut self.jobs {
-            if e.deps.is_empty() {
-                e.needs_purge = false;
-            }
-        }
     }
 }
 
@@ -513,9 +445,8 @@ mod tests {
     #[test]
     fn disjoint_jobs_are_concurrently_runnable() {
         let mut t = JobTable::new();
-        let (c0, p0) = t.admit(stub(), span(&[(0, 100)], &[(100, 200)]), 10.0, 32, 0, None);
-        let (c1, p1) = t.admit(stub(), span(&[(300, 400)], &[(400, 500)]), 10.0, 32, 0, None);
-        assert!(!p0 && !p1);
+        let c0 = t.admit(stub(), span(&[(0, 100)], &[(100, 200)]), 10.0, 0, None);
+        let c1 = t.admit(stub(), span(&[(300, 400)], &[(400, 500)]), 10.0, 0, None);
         let ids: Vec<u64> = t.runnable_shares().iter().map(|s| s.id).collect();
         assert_eq!(ids, vec![c0.id, c1.id]);
     }
@@ -524,15 +455,14 @@ mod tests {
     fn raw_conflict_orders_by_admission() {
         let mut t = JobTable::new();
         // job0 writes [100,200); job1 reads it → dependency edge.
-        let (c0, _) = t.admit(stub(), span(&[(0, 100)], &[(100, 200)]), 10.0, 32, 0, None);
-        let (c1, _) = t.admit(stub(), span(&[(150, 160)], &[(500, 600)]), 10.0, 32, 0, None);
+        let c0 = t.admit(stub(), span(&[(0, 100)], &[(100, 200)]), 10.0, 0, None);
+        let c1 = t.admit(stub(), span(&[(150, 160)], &[(500, 600)]), 10.0, 0, None);
         let ids: Vec<u64> = t.runnable_shares().iter().map(|s| s.id).collect();
         assert_eq!(ids, vec![c0.id], "reader must wait for the live writer");
         // retire job0: one idle probe then a finished round
         let _ = t.start_round(c0.id);
         let a = t.finish_round(c0.id, 0.0, true, false);
         assert!(a.retired.is_some());
-        assert!(!a.purge_now);
         let ids: Vec<u64> = t.runnable_shares().iter().map(|s| s.id).collect();
         assert_eq!(ids, vec![c1.id], "dependency drained at retirement");
     }
@@ -540,23 +470,23 @@ mod tests {
     #[test]
     fn waw_and_war_conflicts_also_order() {
         let mut t = JobTable::new();
-        let (w0, _) = t.admit(stub(), span(&[], &[(100, 200)]), 1.0, 32, 0, None);
+        let w0 = t.admit(stub(), span(&[], &[(100, 200)]), 1.0, 0, None);
         // WAW: same output range
-        let (w1, _) = t.admit(stub(), span(&[], &[(150, 250)]), 1.0, 32, 0, None);
+        let w1 = t.admit(stub(), span(&[], &[(150, 250)]), 1.0, 0, None);
         // WAR: writes what job0 reads
-        let (_r, _) = t.admit(stub(), span(&[(0, 50)], &[(300, 400)]), 1.0, 32, 0, None);
-        let (w2, _) = t.admit(stub(), span(&[], &[(0, 10)]), 1.0, 32, 0, None);
+        let _r = t.admit(stub(), span(&[(0, 50)], &[(300, 400)]), 1.0, 0, None);
+        let w2 = t.admit(stub(), span(&[], &[(0, 10)]), 1.0, 0, None);
         assert!(t.jobs.iter().find(|e| e.id == w1.id).unwrap().deps.contains(&w0.id));
         assert!(t.jobs.iter().find(|e| e.id == w2.id).unwrap().deps.is_empty());
         // read-read sharing creates no edge
-        let (rr, _) = t.admit(stub(), span(&[(0, 50)], &[(700, 800)]), 1.0, 32, 0, None);
+        let rr = t.admit(stub(), span(&[(0, 50)], &[(700, 800)]), 1.0, 0, None);
         assert!(t.jobs.iter().find(|e| e.id == rr.id).unwrap().deps.is_empty());
     }
 
     #[test]
     fn retire_waits_for_active_rounds() {
         let mut t = JobTable::new();
-        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32, 0, None);
+        let c0 = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 0, None);
         let _ = t.start_round(c0.id);
         let _ = t.start_round(c0.id); // second device mid-round
         let a = t.finish_round(c0.id, 1.0, true, false);
@@ -569,58 +499,50 @@ mod tests {
     }
 
     #[test]
-    fn tile_size_switch_is_a_full_barrier_with_purge() {
+    fn mixed_tile_sizes_need_no_ordering() {
+        // Regression for the deleted barrier path: geometry lives in
+        // the cache key now, so two disjoint jobs are both immediately
+        // runnable no matter what tile sizes they were planned with —
+        // there is no geometry ordering left in the table at all.
         let mut t = JobTable::new();
-        let (c0, p) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32, 0, None);
-        assert!(!p, "first job establishes the geometry, nothing to purge");
-        // disjoint ranges, but a different tile size ⇒ waits for job0
-        let (c1, p) = t.admit(stub(), span(&[], &[(100, 108)]), 1.0, 64, 0, None);
-        assert!(!p, "job0 is live: purge deferred to the barrier point");
-        assert!(t.jobs.iter().find(|e| e.id == c1.id).unwrap().needs_purge);
-        assert!(t.jobs.iter().find(|e| e.id == c1.id).unwrap().deps.contains(&c0.id));
-        // a same-size job admitted behind the barrier must not overtake it
-        let (c2, _) = t.admit(stub(), span(&[], &[(200, 208)]), 1.0, 64, 0, None);
-        assert!(t.jobs.iter().find(|e| e.id == c2.id).unwrap().deps.contains(&c1.id));
-        // retiring job0 reaches the barrier's quiescent point → purge now
-        let _ = t.start_round(c0.id);
-        let a = t.finish_round(c0.id, 0.0, true, false);
-        assert!(a.retired.is_some());
-        assert!(a.purge_now, "barrier became runnable at quiescence");
-        t.purge_done();
-        assert!(!t.jobs.iter().any(|e| e.needs_purge));
+        let c0 = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 0, None); // planned at t=32
+        let c1 = t.admit(stub(), span(&[], &[(100, 108)]), 1.0, 1, None); // planned at t=64
         let ids: Vec<u64> = t.runnable_shares().iter().map(|s| s.id).collect();
-        assert_eq!(ids, vec![c1.id], "c2 still waits for the barrier job itself");
-    }
-
-    #[test]
-    fn switch_into_empty_table_purges_at_admission() {
-        let mut t = JobTable::new();
-        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32, 0, None);
-        let _ = t.start_round(c0.id);
-        let _ = t.finish_round(c0.id, 0.0, true, false);
-        assert!(t.is_empty());
-        let (_c1, purge_now) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 64, 0, None);
-        assert!(purge_now, "stale 32-blocks must go before the 64-job runs");
-        t.purge_done();
+        assert_eq!(ids, vec![c0.id, c1.id], "mixed-t jobs overlap like any disjoint pair");
+        assert!(t.jobs.iter().all(|e| e.deps.is_empty()));
+        // …and a third job admitted later only waits for *range*
+        // conflicts, never for a geometry predecessor.
+        let c2 = t.admit(stub(), span(&[(100, 108)], &[(200, 208)]), 1.0, 2, None);
+        let deps = &t.jobs.iter().find(|e| e.id == c2.id).unwrap().deps;
+        assert!(deps.contains(&c1.id) && !deps.contains(&c0.id));
     }
 
     #[test]
     fn failed_job_retires_without_scheduling_a_purge() {
-        // Regression: a failed job used to set a global purge flag that
-        // wiped every tenant's warm tiles. The engine now releases its
-        // pins on the abort path (and evicts a lost device
-        // surgically), so failure must not trigger any purge.
+        // Regression (and the documented contract in this module +
+        // `runtime::service`): a failed job used to set a global purge
+        // flag that wiped every tenant's warm tiles. The engine now
+        // releases its pins on the abort path (and evicts a lost
+        // device surgically), so failure triggers no purge — its
+        // retirement only drains dependency edges, leaving neighbours
+        // runnable with their warm tiles intact.
         let mut t = JobTable::new();
-        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32, 0, None);
-        let (c1, _) = t.admit(stub(), span(&[], &[(100, 108)]), 1.0, 32, 0, None);
+        let c0 = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 0, None);
+        let c1 = t.admit(stub(), span(&[], &[(100, 108)]), 1.0, 0, None);
+        // A dependent behind the failing writer: its edge must drain.
+        let c2 = t.admit(stub(), span(&[(0, 8)], &[(300, 308)]), 1.0, 0, None);
         let _ = t.start_round(c0.id);
         let _ = t.start_round(c1.id);
         let a = t.finish_round(c0.id, 0.0, false, true);
         assert!(a.retired.is_some());
-        assert!(!a.purge_now, "failure must not purge neighbours' warm tiles");
+        assert!(a.retired_failed, "failure is reported to the waiter…");
+        assert!(
+            t.jobs.iter().find(|e| e.id == c2.id).unwrap().deps.is_empty(),
+            "…and the dependent is unblocked"
+        );
         let a = t.finish_round(c1.id, 1.0, true, false);
         assert!(a.retired.is_some());
-        assert!(!a.purge_now, "still no purge at quiescence");
+        assert!(!a.retired_failed, "the healthy neighbour is untouched");
     }
 
     /// Stub that records the abort error `reap_expired` delivers.
@@ -647,11 +569,10 @@ mod tests {
     #[test]
     fn reap_is_a_no_op_without_deadlines_or_cancels() {
         let mut t = JobTable::new();
-        let (_c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32, 0, None);
+        let _c0 = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 0, None);
         let v = t.version;
         let acts = t.reap_expired();
         assert!(acts.retired.is_empty());
-        assert!(!acts.purge_now);
         assert_eq!(t.version, v, "fast path must not disturb the table");
         assert_eq!(t.live_count(), 1);
     }
@@ -661,7 +582,7 @@ mod tests {
         let mut t = JobTable::new();
         let job = Arc::new(AbortStub { aborted: Mutex::new(None) });
         let deadline = Some((Instant::now(), 5)); // already expired
-        let (c0, _) = t.admit(job.clone(), span(&[], &[(0, 8)]), 1.0, 32, 0, deadline);
+        let c0 = t.admit(job.clone(), span(&[], &[(0, 8)]), 1.0, 0, deadline);
         let acts = t.reap_expired();
         assert_eq!(acts.retired.len(), 1, "no round in flight: reaped on the spot");
         assert_eq!(acts.retired[0].0.id, c0.id);
@@ -675,10 +596,10 @@ mod tests {
     #[test]
     fn cancel_reaps_a_dep_blocked_job_and_spares_its_blocker() {
         let mut t = JobTable::new();
-        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32, 0, None);
+        let c0 = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 0, None);
         let job = Arc::new(AbortStub { aborted: Mutex::new(None) });
         // Same output range: job1 is dependency-blocked behind job0.
-        let (c1, _) = t.admit(job.clone(), span(&[], &[(0, 8)]), 1.0, 32, 0, None);
+        let c1 = t.admit(job.clone(), span(&[], &[(0, 8)]), 1.0, 0, None);
         c1.request_cancel();
         let acts = t.reap_expired();
         assert_eq!(acts.retired.len(), 1);
@@ -692,7 +613,7 @@ mod tests {
     fn reaped_job_with_an_active_round_retires_at_round_end() {
         let mut t = JobTable::new();
         let deadline = Some((Instant::now(), 1));
-        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32, 0, deadline);
+        let c0 = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 0, deadline);
         let _ = t.start_round(c0.id);
         let acts = t.reap_expired();
         assert!(acts.retired.is_empty(), "a device is still inside a round");
@@ -703,16 +624,15 @@ mod tests {
     }
 
     #[test]
-    fn reap_drains_a_barrier_dependency_and_purges() {
+    fn reap_drains_a_dependency_edge() {
+        // A reaped writer's dependents become runnable exactly as if
+        // it had retired normally (no purge, no barrier bookkeeping).
         let mut t = JobTable::new();
         let deadline = Some((Instant::now(), 1));
-        let (_c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32, 0, deadline);
-        // Different tile size: barrier depending on job0.
-        let (c1, _) = t.admit(stub(), span(&[], &[(100, 108)]), 1.0, 64, 0, None);
+        let _c0 = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 0, deadline);
+        let c1 = t.admit(stub(), span(&[(0, 8)], &[(100, 108)]), 1.0, 0, None);
         let acts = t.reap_expired();
         assert_eq!(acts.retired.len(), 1);
-        assert!(acts.purge_now, "the reap drained the barrier's last dependency");
-        t.purge_done();
         let ids: Vec<u64> = t.runnable_shares().iter().map(|s| s.id).collect();
         assert_eq!(ids, vec![c1.id]);
     }
@@ -720,9 +640,9 @@ mod tests {
     #[test]
     fn live_count_and_tenant_inflight_track_admissions() {
         let mut t = JobTable::new();
-        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32, 7, None);
-        let (_c1, _) = t.admit(stub(), span(&[], &[(100, 108)]), 1.0, 32, 7, None);
-        let (_c2, _) = t.admit(stub(), span(&[], &[(200, 208)]), 1.0, 32, 9, None);
+        let c0 = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 7, None);
+        let _c1 = t.admit(stub(), span(&[], &[(100, 108)]), 1.0, 7, None);
+        let _c2 = t.admit(stub(), span(&[], &[(200, 208)]), 1.0, 9, None);
         assert_eq!(t.live_count(), 3);
         assert_eq!(t.tenant_inflight(7), 2);
         assert_eq!(t.tenant_inflight(9), 1);
@@ -737,7 +657,7 @@ mod tests {
     fn version_bumps_on_admission_and_retirement() {
         let mut t = JobTable::new();
         let v0 = t.version;
-        let (c0, _) = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 32, 0, None);
+        let c0 = t.admit(stub(), span(&[], &[(0, 8)]), 1.0, 0, None);
         assert!(t.version > v0);
         let v1 = t.version;
         let _ = t.start_round(c0.id);

@@ -36,10 +36,11 @@
 //! Coherence across tenants needs no new mechanism: the epoch registry
 //! stamps invalidation generations at admission (under the same lock
 //! that computes conflict edges, so epoch order == admission order),
-//! and tile-cache keys already carry address + stride + epoch. A job
-//! that changes the tile size is admitted as a *barrier* (it waits for
-//! every live job, later jobs wait for it) and the caches are purged at
-//! the quiescent point in between.
+//! and tile-cache keys already carry address + stride + epoch **and
+//! tile size** — each geometry is its own cache generation, so jobs
+//! with different tile sizes coexist in the caches and overlap on the
+//! devices like any other disjoint jobs; a tile-size switch needs no
+//! barrier and no purge.
 
 pub mod admission;
 pub mod fairness;
@@ -52,7 +53,8 @@ use crate::error::Result;
 
 /// A submitted job, erased over its scalar type so one worker fleet
 /// serves f32 and f64 tenants alike. Implemented by the runtime's
-/// `ErasedJob` (see `crate::runtime::service`).
+/// `ErasedJob`/`OwnedJob` (tiled) and `HostGemm` (host-placed) — see
+/// `crate::runtime::service`.
 pub(crate) trait DeviceJob: Send + Sync {
     /// Execute one scheduler round of this job on device `dev`.
     fn run_round(&self, dev: usize, core: &EngineCore) -> Round;

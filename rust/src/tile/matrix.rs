@@ -53,6 +53,18 @@ pub enum MatId {
 ///   in the same-origin cache block (an edge tile of the narrow view
 ///   is an interior tile of the wide one); without the extent in the
 ///   key, cross-role reuse would serve the wrong padding.
+/// - `t` — the tile grid's nominal tile size: the *cache generation*
+///   discriminant that lets tiles of different geometries coexist in
+///   one cache. `h`/`w` alone cannot carry this: a 96-row matrix
+///   viewed at `t=64` produces tile (1,0) with origin row 64 and
+///   `h=32`, while the same buffer viewed at `t=32` produces tile
+///   (2,0) with the *same* origin and the same `h=32` — identical
+///   `(addr, ld, epoch, h, w)` — yet their cache blocks are stored
+///   `t×t`-padded with layout stride `t`, so sharing one block across
+///   the two views would serve bytes at the wrong stride. With `t` in
+///   the key, a tile-size switch is simply a different generation of
+///   keys: no barrier, no purge, and warm sets of other geometries
+///   survive untouched.
 #[derive(Clone, Copy, Debug)]
 pub struct TileKey {
     /// Host address of the tile origin (the cache key, paper Alg. 2 "HA").
@@ -69,6 +81,10 @@ pub struct TileKey {
     /// Actual tile extent (geometry discriminant; 0 for synthetic keys).
     pub h: usize,
     pub w: usize,
+    /// Nominal tile size of the owning grid (per-geometry cache
+    /// generation; 0 for synthetic keys). See the type docs for why
+    /// `h`/`w` cannot substitute for it.
+    pub t: usize,
 }
 
 impl PartialEq for TileKey {
@@ -81,6 +97,7 @@ impl PartialEq for TileKey {
             && self.epoch == o.epoch
             && self.h == o.h
             && self.w == o.w
+            && self.t == o.t
     }
 }
 
@@ -96,6 +113,7 @@ impl std::hash::Hash for TileKey {
         self.epoch.hash(state);
         self.h.hash(state);
         self.w.hash(state);
+        self.t.hash(state);
     }
 }
 
@@ -104,7 +122,7 @@ impl TileKey {
     /// tests and synthetic cache exercises where `addr` is already
     /// unique.
     pub fn synthetic(addr: usize, mat: MatId, ti: usize, tj: usize) -> TileKey {
-        TileKey { addr, mat, ti, tj, ld: 0, epoch: 0, h: 0, w: 0 }
+        TileKey { addr, mat, ti, tj, ld: 0, epoch: 0, h: 0, w: 0, t: 0 }
     }
 }
 
@@ -220,6 +238,7 @@ impl<T: Scalar> HostMat<T> {
             epoch: self.epoch(),
             h,
             w,
+            t: self.grid.t,
         }
     }
 
@@ -427,6 +446,28 @@ mod tests {
         let kn = narrow.tile_key(2, 0);
         assert_eq!(kw.addr, kn.addr);
         assert_ne!(kw, kn, "edge-vs-interior views must not alias");
+    }
+
+    #[test]
+    fn different_tile_size_generations_never_alias() {
+        // The h/w-collision case from the TileKey docs: a 96-row
+        // buffer at t=64 puts tile (1,0) at origin row 64 with h=32;
+        // at t=32 tile (2,0) sits at the same origin with the same
+        // h=32. Same addr/ld/epoch/h/w — only `t` keeps the two cache
+        // generations apart (their blocks differ in stride and size).
+        let buf = vec![0.0f64; 96 * 32];
+        let g64 = HostMat::<f64>::new_ro(&buf, 96, 32, 96, 64, MatId::A);
+        let g32 = HostMat::<f64>::new_ro(&buf, 96, 32, 96, 32, MatId::A);
+        let k64 = g64.tile_key(1, 0);
+        let k32 = g32.tile_key(2, 0);
+        assert_eq!(k64.addr, k32.addr);
+        assert_eq!((k64.ld, k64.epoch, k64.h), (k32.ld, k32.epoch, k32.h));
+        assert_ne!(k64, k32, "tile-size generations must not share blocks");
+        let mut set = std::collections::HashSet::new();
+        set.insert(k64);
+        assert!(!set.contains(&k32));
+        // Within one generation the key is stable as ever.
+        assert_eq!(g64.tile_key(1, 0), k64);
     }
 
     #[test]

@@ -307,7 +307,9 @@ impl MetricsRegistry {
         let end_to_end = live.admit.elapsed().as_secs_f64();
         let queue_wait = match live.first_round {
             Some(first) => (end_to_end - first.elapsed().as_secs_f64()).max(0.0),
-            None => end_to_end, // retired without ever running (barrier)
+            // Retired without ever running — e.g. cancelled or reaped
+            // while still queued behind dependency edges.
+            None => end_to_end,
         };
         let g = inner.groups.entry((live.tenant, live.routine)).or_default();
         g.jobs += 1;

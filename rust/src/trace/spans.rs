@@ -109,7 +109,8 @@ pub struct JobRec {
     /// Seconds since the recorder epoch.
     pub admit: f64,
     /// First scheduler round that picked the job (== `retire` if the
-    /// job retired without running, e.g. a barrier job).
+    /// job retired without running, e.g. cancelled while still queued
+    /// behind its dependency edges).
     pub first_round: f64,
     pub retire: f64,
     pub failed: bool,

@@ -1,0 +1,307 @@
+//! PR-8 acceptance properties of adaptive dispatch and per-geometry
+//! cache generations: tenants alternating two tile sizes through one
+//! shared runtime stay warm (no barrier jobs, no global purges — those
+//! code paths are gone, and these tests pin the behaviour that made
+//! deleting them sound), generations are isolated, a saved profile
+//! reproduces identical choices after a load round-trip, and
+//! host-placed calls stay admission-ordered through the epoch
+//! registry.
+
+use blasx::api::types::{Dtype, Trans};
+use blasx::api::{self, Context};
+use blasx::coordinator::real_engine::TransferStats;
+use blasx::dispatch::{shape_key, Choice, Dispatcher, Placement, Profile};
+use blasx::hostblas;
+use blasx::util::prng::Prng;
+
+fn base_ctx() -> Context {
+    Context::new(2).with_arena(8 << 20).with_tile(64)
+}
+
+fn rand(p: &mut Prng, n: usize) -> Vec<f64> {
+    let mut v = vec![0.0; n];
+    p.fill_f64(&mut v, -1.0, 1.0);
+    v
+}
+
+fn max_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+/// The tentpole acceptance run: two tenants alternating DIFFERENT tile
+/// sizes through one shared resident runtime. Pre-PR-8 every switch
+/// was a barrier job plus a global cache purge, so alternation
+/// thrashed: each call re-fetched everything. With `t` in the tile
+/// key, each geometry is its own cache generation — after one cold
+/// call per tenant, every later call is transfer-free, and both
+/// tenants match a serial one-shot engine bit-for-bit.
+#[test]
+fn alternating_tile_sizes_stay_warm_with_no_purges() {
+    let ctx64 = base_ctx();
+    // `with_tile` keeps the shared runtime slot on purpose: mixed
+    // geometries coexist in one cache.
+    let ctx96 = ctx64.clone().with_tile(96);
+    let (m, n, k) = (128, 128, 128);
+    let mut p = Prng::new(810);
+    let a64 = rand(&mut p, m * k);
+    let b64 = rand(&mut p, k * n);
+    let a96 = rand(&mut p, m * k);
+    let b96 = rand(&mut p, k * n);
+    let mut c64 = vec![0.0; m * n];
+    let mut c96 = vec![0.0; m * n];
+
+    // One cold call per tenant populates its generation.
+    let cold64 = api::dgemm(&ctx64, Trans::No, Trans::No, m, n, k, 1.0, &a64, m, &b64, k, 0.0, &mut c64, m)
+        .unwrap();
+    let cold96 = api::dgemm(&ctx96, Trans::No, Trans::No, m, n, k, 1.0, &a96, m, &b96, k, 0.0, &mut c96, m)
+        .unwrap();
+    assert!(cold64.transfers.input_host_reads() > 0);
+    assert!(cold96.transfers.input_host_reads() > 0);
+    let first64 = c64.clone();
+    let first96 = c96.clone();
+
+    // Alternate. Every call after the cold pair must be transfer-free:
+    // a surviving purge path would zero one generation on each switch
+    // and show up here as host re-reads.
+    for round in 0..3 {
+        let r64 = api::dgemm(
+            &ctx64, Trans::No, Trans::No, m, n, k, 1.0, &a64, m, &b64, k, 0.0, &mut c64, m,
+        )
+        .unwrap();
+        assert_eq!(
+            r64.transfers.input_host_reads(),
+            0,
+            "round {round}: t=64 tenant purged by the t=96 tenant: {:?}",
+            r64.transfers
+        );
+        assert!(r64.transfers.l1_hits + r64.transfers.peer_copies > 0, "round {round}");
+        let r96 = api::dgemm(
+            &ctx96, Trans::No, Trans::No, m, n, k, 1.0, &a96, m, &b96, k, 0.0, &mut c96, m,
+        )
+        .unwrap();
+        assert_eq!(
+            r96.transfers.input_host_reads(),
+            0,
+            "round {round}: t=96 tenant purged by the t=64 tenant: {:?}",
+            r96.transfers
+        );
+        assert_eq!(c64, first64, "round {round}: warm t=64 numerics drifted");
+        assert_eq!(c96, first96, "round {round}: warm t=96 numerics drifted");
+    }
+    assert_eq!(ctx64.runtime_calls(), 8, "both tenants share one resident runtime");
+    assert_eq!(ctx64.jobs_in_flight(), 0);
+
+    // Bit-for-bit vs a serial one-shot engine at each geometry.
+    for (t, a, b, got) in [(64, &a64, &b64, &c64), (96, &a96, &b96, &c96)] {
+        let fresh = Context::new(2).with_arena(8 << 20).with_tile(t).with_persistent(false);
+        let mut want = vec![0.0; m * n];
+        api::dgemm(&fresh, Trans::No, Trans::No, m, n, k, 1.0, a, m, b, k, 0.0, &mut want, m)
+            .unwrap();
+        assert_eq!(got, &want, "t={t}: mixed-tile serve diverged from serial");
+    }
+}
+
+/// The same property under real concurrency: mixed-tile tenants hammer
+/// the shared runtime from separate threads, every result verified
+/// against a serial one-shot engine at the same geometry.
+#[test]
+fn mixed_tile_tenants_overlap_concurrently() {
+    let ctx64 = base_ctx();
+    let ctx96 = ctx64.clone().with_tile(96);
+    std::thread::scope(|scope| {
+        for (t, ctx, seed) in [(64usize, ctx64.clone(), 820u64), (96, ctx96.clone(), 821)] {
+            scope.spawn(move || {
+                let (m, n, k) = (128, 96, 112);
+                let mut p = Prng::new(seed);
+                let a = rand(&mut p, m * k);
+                let b = rand(&mut p, k * n);
+                let c0 = rand(&mut p, m * n);
+                ctx.invalidate_host(&a);
+                ctx.invalidate_host(&b);
+                for call in 0..3 {
+                    let mut c = c0.clone();
+                    api::dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.2, &a, m, &b, k, -0.4, &mut c, m)
+                        .unwrap();
+                    let fresh =
+                        Context::new(2).with_arena(8 << 20).with_tile(t).with_persistent(false);
+                    let mut want = c0.clone();
+                    api::dgemm(
+                        &fresh, Trans::No, Trans::No, m, n, k, 1.2, &a, m, &b, k, -0.4, &mut want, m,
+                    )
+                    .unwrap();
+                    assert_eq!(c, want, "t={t} call {call}: diverged from serial");
+                }
+            });
+        }
+    });
+    assert_eq!(ctx64.runtime_calls(), 6);
+    assert_eq!(ctx64.jobs_in_flight(), 0);
+}
+
+/// Cache generations are keyed by tile size: one host buffer warmed at
+/// t=64 is COLD at t=96 (separate generation, fetched fresh) and the
+/// t=96 traffic leaves the t=64 generation untouched.
+#[test]
+fn tile_generations_are_isolated() {
+    let ctx64 = base_ctx();
+    let ctx96 = ctx64.clone().with_tile(96);
+    let n = 128;
+    let mut p = Prng::new(830);
+    let shared_a = rand(&mut p, n * n);
+    let b64 = rand(&mut p, n * n);
+    let b96 = rand(&mut p, n * n);
+    let mut c = vec![0.0; n * n];
+
+    // Warm A's t=64 generation.
+    api::dgemm(&ctx64, Trans::No, Trans::No, n, n, n, 1.0, &shared_a, n, &b64, n, 0.0, &mut c, n)
+        .unwrap();
+    let warm = api::dgemm(
+        &ctx64, Trans::No, Trans::No, n, n, n, 1.0, &shared_a, n, &b64, n, 0.0, &mut c, n,
+    )
+    .unwrap();
+    assert_eq!(warm.transfers.host_reads[0], 0, "A must be warm at t=64");
+
+    // The SAME buffer through the t=96 tenant: its own generation,
+    // fetched from the host even though A is resident at t=64.
+    let gen96 = api::dgemm(
+        &ctx96, Trans::No, Trans::No, n, n, n, 1.0, &shared_a, n, &b96, n, 0.0, &mut c, n,
+    )
+    .unwrap();
+    assert!(
+        gen96.transfers.host_reads[0] > 0,
+        "t=96 generation of A must be populated independently: {:?}",
+        gen96.transfers
+    );
+
+    // ...and populating it did not disturb the t=64 generation.
+    let still_warm = api::dgemm(
+        &ctx64, Trans::No, Trans::No, n, n, n, 1.0, &shared_a, n, &b64, n, 0.0, &mut c, n,
+    )
+    .unwrap();
+    assert_eq!(
+        still_warm.transfers.host_reads[0],
+        0,
+        "t=96 traffic evicted the t=64 generation: {:?}",
+        still_warm.transfers
+    );
+
+    let mut want = vec![0.0; n * n];
+    hostblas::gemm_blocked(Trans::No, Trans::No, n, n, n, 1.0, &shared_a, n, &b64, n, 0.0, &mut want, n);
+    assert!(max_diff(&c, &want) < 1e-10);
+}
+
+/// `Profile::save` → `Profile::load` reproduces byte-identical
+/// dispatch: the loaded table equals the saved one and a dispatcher
+/// built from each makes the same choice for every probed shape —
+/// including heuristic fallbacks for shapes the profile doesn't cover.
+#[test]
+fn profile_roundtrip_reproduces_identical_choices() {
+    let mut prof = Profile::new();
+    prof.set(
+        shape_key("gemm", Dtype::F64, 300, 300, 300),
+        Choice { t: 128, kernel_threads: 3, mt_cutoff: Some(2.5e6), place: Placement::Device },
+    );
+    prof.set(
+        shape_key("gemm", Dtype::F64, 48, 48, 48),
+        Choice { t: 64, kernel_threads: 2, mt_cutoff: None, place: Placement::Host },
+    );
+    prof.set(
+        shape_key("gemm", Dtype::F32, 500, 500, 500),
+        Choice { t: 256, kernel_threads: 1, mt_cutoff: None, place: Placement::Device },
+    );
+    prof.set(
+        shape_key("syrk", Dtype::F64, 200, 200, 100),
+        Choice { t: 64, kernel_threads: 4, mt_cutoff: Some(1e6), place: Placement::Device },
+    );
+
+    let path = std::env::temp_dir().join(format!("blasx_profile_rt_{}.json", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    prof.save(&path).unwrap();
+    let loaded = Profile::load(&path).unwrap();
+    assert_eq!(loaded, prof, "profile changed across save/load");
+
+    let saved_d = Dispatcher::from_profile(prof);
+    let loaded_d = Dispatcher::from_profile(loaded);
+    let base = Choice { t: 256, kernel_threads: 1, mt_cutoff: None, place: Placement::Device };
+    for routine in ["gemm", "syrk", "trsm"] {
+        for dt in [Dtype::F32, Dtype::F64] {
+            for &(m, n, k) in
+                &[(48, 48, 48), (64, 64, 64), (100, 90, 110), (300, 300, 300), (500, 500, 500), (1000, 40, 7)]
+            {
+                assert_eq!(
+                    saved_d.choose(routine, dt, m, n, k, &base),
+                    loaded_d.choose(routine, dt, m, n, k, &base),
+                    "{routine}/{dt:?} {m}x{n}x{k}: choice changed across the round-trip"
+                );
+            }
+        }
+    }
+
+    // The same guarantee through the Context builders the CLI uses.
+    let from_mem = base_ctx().with_profile(Profile::load(&path).unwrap());
+    let from_file = base_ctx().with_profile_file(&path).unwrap();
+    let (dm, df) = (from_mem.dispatcher().unwrap(), from_file.dispatcher().unwrap());
+    assert_eq!(
+        dm.choose("gemm", Dtype::F64, 300, 300, 300, &base),
+        df.choose("gemm", Dtype::F64, 300, 300, 300, &base),
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Host-placed calls flow through the SAME admission/epoch machinery
+/// as tiled ones: a host-placed GEMM that rewrites a buffer whose
+/// tiles are warm on the devices must epoch-bump it, so the next tiled
+/// reader re-fetches instead of serving stale tiles.
+#[test]
+fn host_placement_epoch_bumps_its_output() {
+    let mut prof = Profile::new();
+    // 48^3 lands in bucket m6n6k6 → forced host placement; the 96-row
+    // device calls land in m7n6k6, which the profile does not cover,
+    // so they take the normal tiled path at the context geometry.
+    prof.set(
+        shape_key("gemm", Dtype::F64, 48, 48, 48),
+        Choice { t: 64, kernel_threads: 1, mt_cutoff: None, place: Placement::Host },
+    );
+    let ctx = base_ctx().with_profile(prof);
+    let (m, n, k) = (96, 48, 48);
+    let mut p = Prng::new(840);
+    let a1 = rand(&mut p, m * k);
+    let mut x = rand(&mut p, k * n);
+    let a2 = rand(&mut p, k * k);
+    let b2 = rand(&mut p, k * n);
+    let mut y = vec![0.0; m * n];
+
+    // Tiled call warms x's tiles (as the B operand).
+    api::dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a1, m, &x, k, 0.0, &mut y, m).unwrap();
+    let calls_before = ctx.runtime_calls();
+
+    // Host-placed rewrite of x: admission-ordered, never staged.
+    let host_rep =
+        api::dgemm(&ctx, Trans::No, Trans::No, k, n, k, 1.0, &a2, k, &b2, k, 0.0, &mut x, k)
+            .unwrap();
+    assert_eq!(
+        host_rep.transfers,
+        TransferStats::default(),
+        "host-placed call must not stage tiles"
+    );
+    assert_eq!(host_rep.tasks_per_device.iter().sum::<usize>(), 0);
+    assert_eq!(ctx.runtime_calls(), calls_before + 1, "host call must flow through the runtime");
+    let mut want_x = vec![0.0; k * n];
+    hostblas::gemm_mt(1, Trans::No, Trans::No, k, n, k, 1.0, &a2, k, &b2, k, 0.0, &mut want_x, k);
+    assert_eq!(x, want_x, "host-placed gemm diverged from the host kernel");
+
+    // The tiled reader of the rewritten x must see the NEW values: the
+    // host job's epoch bump forces a re-fetch of x's warm tiles.
+    let rep = api::dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a1, m, &x, k, 0.0, &mut y, m)
+        .unwrap();
+    assert!(
+        rep.transfers.host_reads[1] > 0,
+        "rewritten x must be re-fetched, not served stale: {:?}",
+        rep.transfers
+    );
+    let fresh = Context::new(2).with_arena(8 << 20).with_tile(64).with_persistent(false);
+    let mut want = vec![0.0; m * n];
+    api::dgemm(&fresh, Trans::No, Trans::No, m, n, k, 1.0, &a1, m, &x, k, 0.0, &mut want, m)
+        .unwrap();
+    assert_eq!(y, want, "tiled call after a host-placed rewrite served stale tiles");
+}

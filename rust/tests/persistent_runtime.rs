@@ -276,10 +276,14 @@ fn cross_role_warm_hit_a_then_b() {
     assert_eq!(c, want, "cross-role reuse changed the numerics");
 }
 
-/// Changing the tile size between calls purges the cache (block
-/// geometry changed) and stays correct.
+/// Changing the tile size between calls starts a NEW cache generation
+/// (`t` is a `TileKey` discriminant) without disturbing the old one:
+/// the first call at the new geometry fetches its own tiles, and
+/// switching back finds the original generation still warm. The
+/// pre-PR-8 runtime instead ran a barrier job and purged every cache
+/// here; `tests/dispatch_adaptive.rs` covers the multi-tenant version.
 #[test]
-fn tile_size_switch_purges_and_recomputes() {
+fn tile_size_switch_keeps_both_generations_warm() {
     let mut ctx = warm_ctx();
     let (m, n, k) = (96, 96, 96);
     let mut p = Prng::new(77);
@@ -297,7 +301,25 @@ fn tile_size_switch_purges_and_recomputes() {
         .unwrap();
     assert!(
         rep.transfers.input_host_reads() > 0,
-        "tile-size switch must refetch (purged cache): {:?}",
+        "a new geometry's generation starts cold: {:?}",
+        rep.transfers
+    );
+    assert!(max_diff(&c, &want) < 1e-10);
+
+    // Warm repeat at the new geometry...
+    let rep = api::dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m)
+        .unwrap();
+    assert_eq!(rep.transfers.input_host_reads(), 0, "t=48 generation: {:?}", rep.transfers);
+
+    // ...and the ORIGINAL generation survived the switch: no purge,
+    // no refetch when the tile size goes back.
+    ctx.cfg.t = 32;
+    let rep = api::dgemm(&ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m)
+        .unwrap();
+    assert_eq!(
+        rep.transfers.input_host_reads(),
+        0,
+        "switching back must find the old generation warm: {:?}",
         rep.transfers
     );
     assert!(max_diff(&c, &want) < 1e-10);

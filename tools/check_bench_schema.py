@@ -1,0 +1,148 @@
+#!/usr/bin/env python3
+"""Schema gate for the BENCH_*.json artifacts (stdlib only).
+
+Every bench in benches/ writes two copies of its result document: a
+fresh `bench_out/BENCH_*.json` on each run and a committed repo-root
+snapshot. This gate keeps both machine-consumable:
+
+- every document must be an object with a string `bench` name and a
+  `results` array;
+- an EMPTY `results` array is legal only for a placeholder snapshot
+  (authored without a Rust toolchain) and must carry a `note` saying
+  how to regenerate — an empty array without one means the bench
+  silently measured nothing;
+- non-empty results are checked per bench: rows must be flat objects
+  with the columns the analyses read, and the acceptance numbers ride
+  along (the mixed-tile dispatch bench must show ZERO post-warmup host
+  reads in the `mixed-tile warm` scenario — the PR-8 property that
+  deleting the tile-size purge was sound).
+
+Usage:
+    python3 tools/check_bench_schema.py [BENCH_a.json ...]
+
+With no arguments, checks every BENCH_*.json at the repo root.
+Exits 1 on the first malformed document.
+"""
+
+import glob
+import json
+import os
+import sys
+
+
+def fail(path, msg):
+    sys.exit(f"{path}: {msg}")
+
+
+def is_num(x):
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def check_rows(path, rows, required, numeric):
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            fail(path, f"results[{i}] is not an object")
+        for col in required:
+            if col not in row:
+                fail(path, f"results[{i}] lacks column {col!r}")
+        for col in numeric:
+            if col in row and not is_num(row[col]):
+                fail(path, f"results[{i}].{col} is not a number: {row[col]!r}")
+
+
+def check_dispatch(path, doc):
+    rows = doc["results"]
+    check_rows(
+        path,
+        rows,
+        required=("scenario", "calls", "wall_ms", "calls_per_sec", "warm_host_reads"),
+        numeric=("calls", "wall_ms", "calls_per_sec", "warm_host_reads"),
+    )
+    by_scenario = {r["scenario"]: r for r in rows}
+    warm = by_scenario.get("mixed-tile warm")
+    if warm is None:
+        fail(path, "no 'mixed-tile warm' scenario row")
+    if warm["warm_host_reads"] != 0:
+        fail(
+            path,
+            "mixed-tile warm scenario re-read "
+            f"{warm['warm_host_reads']} tiles from the host — alternating "
+            "tile sizes must be transfer-free (per-geometry generations)",
+        )
+    probe = doc.get("overhead_probe") or {}
+    if probe:
+        for key in ("warm_call_ms_plain", "warm_call_ms_dispatched"):
+            if not is_num(probe.get(key)):
+                fail(path, f"overhead_probe.{key} missing or not a number")
+
+
+def check_serve(path, doc):
+    check_rows(
+        path,
+        doc["results"],
+        required=("clients", "jobs", "wall_ms", "jobs_per_sec", "latency_p99_ms"),
+        numeric=("clients", "jobs", "wall_ms", "jobs_per_sec", "latency_p99_ms"),
+    )
+
+
+def check_runtime(path, doc):
+    check_rows(path, doc["results"], required=(), numeric=())
+    if not doc.get("recorder_overhead"):
+        fail(path, "call_overhead lost its recorder perf gate (recorder_overhead)")
+
+
+# Extra per-bench validation once real numbers are present, keyed by
+# the document's `bench` field. Benches absent here get the generic
+# object/array checks only.
+EXTRA = {
+    "dispatch_mixed": check_dispatch,
+    "serve_throughput": check_serve,
+    "call_overhead": check_runtime,
+}
+
+
+def check(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(path, f"unreadable: {e}")
+    if not isinstance(doc, dict):
+        fail(path, "top level is not an object")
+    bench = doc.get("bench")
+    if not isinstance(bench, str) or not bench:
+        fail(path, "missing string `bench` name")
+    results = doc.get("results")
+    if not isinstance(results, list):
+        fail(path, "missing `results` array")
+    if not results:
+        note = doc.get("note", "")
+        if not isinstance(note, str) or "cargo bench" not in note:
+            fail(
+                path,
+                "empty results without a regeneration note — "
+                "the bench silently measured nothing",
+            )
+        print(f"{path}: placeholder ok ({bench}; schema-only)")
+        return
+    extra = EXTRA.get(bench)
+    if extra:
+        extra(path, doc)
+    else:
+        check_rows(path, results, required=(), numeric=())
+    print(f"{path}: ok ({bench}, {len(results)} rows)")
+
+
+def main():
+    paths = sys.argv[1:]
+    if not paths:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    if not paths:
+        sys.exit("no BENCH_*.json found")
+    for path in paths:
+        check(path)
+
+
+if __name__ == "__main__":
+    main()
