@@ -132,6 +132,11 @@ int main(void) {
            (unsigned long long)live.host_reads_b, (unsigned long long)live.host_reads_c,
            (unsigned long long)live.peer_copies, (unsigned long long)live.l1_hits,
            (unsigned long long)live.steals);
+    /* the fault-recovery ledger: all zero on this healthy run, nonzero
+     * under a BLASX_FAULTS chaos schedule */
+    printf("  fault ledger:   retried %llu  degraded %llu  migrated %llu\n",
+           (unsigned long long)live.retried, (unsigned long long)live.degraded,
+           (unsigned long long)live.migrated);
     if (live.tasks == 0) {
         fprintf(stderr, "retired gemm job reports zero tasks\n");
         failures++;
@@ -195,6 +200,20 @@ int main(void) {
     check(s4 == BLASX_OK ? "cancel raced: chain intact"
                          : "cancelled solve left gemm result",
           max_abs_diff(c, want, (size_t)N * N), 1e-9);
+
+    /* 5. live telemetry through the C ABI: the same Prometheus text
+     *    `blasx serve --telemetry-addr` exposes at /metrics. Call with
+     *    (NULL, 0) to size the buffer, then fetch. */
+    size_t need = blasx_telemetry_text(NULL, 0);
+    char *metrics = malloc(need + 1);
+    if (!metrics || blasx_telemetry_text(metrics, need + 1) != need ||
+        strstr(metrics, "blasx_up 1") == NULL) {
+        fprintf(stderr, "blasx_telemetry_text: bad scrape\n");
+        failures++;
+    } else {
+        printf("  %-34s %zu bytes  OK\n", "blasx_telemetry_text scrape", need);
+    }
+    free(metrics);
 
     blasx_shutdown();
     free(a); free(b); free(c); free(want); free(t);

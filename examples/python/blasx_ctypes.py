@@ -66,6 +66,8 @@ def declare(lib):
     lib.blasx_job_stats.restype = i
     lib.blasx_last_error.argtypes = [ctypes.c_char_p, szt]
     lib.blasx_last_error.restype = szt
+    lib.blasx_telemetry_text.argtypes = [ctypes.c_char_p, szt]
+    lib.blasx_telemetry_text.restype = szt
     lib.blasx_version.restype = ctypes.c_char_p
     lib.blasx_shutdown.restype = None
 
@@ -98,6 +100,9 @@ class BlasxStats(ctypes.Structure):
         ("peer_copies", ctypes.c_uint64),
         ("l1_hits", ctypes.c_uint64),
         ("steals", ctypes.c_uint64),
+        ("retried", ctypes.c_uint64),
+        ("degraded", ctypes.c_uint64),
+        ("migrated", ctypes.c_uint64),
     ]
 
 
@@ -148,7 +153,22 @@ def main():
         f"A/B/C {stats.host_reads_a}/{stats.host_reads_b}/{stats.host_reads_c}, "
         f"peer {stats.peer_copies}, L1 hits {stats.l1_hits}, steals {stats.steals}"
     )
+    # The fault-recovery ledger: zero on a healthy run, nonzero when a
+    # BLASX_FAULTS schedule (or cfg.faults) injects chaos.
+    print(
+        f"fault ledger: retried {stats.retried}, degraded {stats.degraded}, "
+        f"migrated {stats.migrated}"
+    )
     assert stats.tasks > 0, "retired gemm job reports zero tasks"
+
+    # -- live telemetry through the C ABI: the Prometheus text that
+    #    `blasx serve --telemetry-addr` exposes at /metrics.
+    need = lib.blasx_telemetry_text(None, 0)
+    raw = ctypes.create_string_buffer(need + 1)
+    lib.blasx_telemetry_text(raw, need + 1)
+    text = raw.value.decode()
+    assert "blasx_up 1" in text, "telemetry scrape must report the runtime up"
+    print(f"telemetry scrape: {need} bytes, {len(text.splitlines())} lines of Prometheus text")
     assert lib.blasx_wait(j2) == 0  # newest first — order must not matter
     assert lib.blasx_wait(j1) == 0
 

@@ -27,7 +27,11 @@
  *    BLASX_PROFILE (path to a `blasx tune` dispatch profile: per-shape
  *    tile size / kernel fan-out / host-vs-device placement; unreadable
  *    profiles are reported on stderr and ignored), BLASX_MT_CUTOFF
- *    (serial/fork flop cutoff of the multithreaded host kernel).
+ *    (serial/fork flop cutoff of the multithreaded host kernel),
+ *    BLASX_TELEMETRY_MS (background gauge-sampler period, ms; 0/unset
+ *    = off: no thread, no allocation), BLASX_FLIGHT_DIR (arms the
+ *    flight recorder's automatic incident dumps), BLASX_LOG
+ *    (diagnostic verbosity: off|error|warn|info|debug|trace).
  *    Alternatively call blasx_init() with an explicit configuration
  *    BEFORE any other BLASX entry.
  */
@@ -194,6 +198,9 @@ typedef struct blasx_stats {
     uint64_t peer_copies;  /* device->device (peer) tile copies        */
     uint64_t l1_hits;      /* tile-cache hits (no bytes moved)         */
     uint64_t steals;       /* tasks obtained by work stealing          */
+    uint64_t retried;      /* ops retried after transient faults       */
+    uint64_t degraded;     /* operands served via host OOM fallback    */
+    uint64_t migrated;     /* tasks migrated off lost devices          */
 } blasx_stats_t;
 
 /* Snapshot the job's live counters into *out. Non-blocking; valid
@@ -209,6 +216,26 @@ void blasx_shutdown(void);
 /* Copy this thread's last error (NUL-terminated) into buf; returns the
  * full message length (0 = no error recorded). */
 size_t blasx_last_error(char *buf, size_t cap);
+
+/* ---- live telemetry & flight recorder ------------------------------ */
+
+/* Render the live runtime gauges (arena bytes, cache hit rates, queue
+ * depth, per-tenant in-flight, worker busy fractions) in Prometheus
+ * text exposition format — the same body `blasx serve
+ * --telemetry-addr` serves at /metrics. Copies the NUL-terminated text
+ * into buf and returns the full length (excluding the NUL); call with
+ * NULL/0 to size a buffer. A cold library reports `blasx_up 0` without
+ * booting the runtime. */
+size_t blasx_telemetry_text(char *buf, size_t cap);
+
+/* Dump the always-on flight recorder (the black box: the last ~256
+ * admissions/faults/migrations per device) into directory `dir` as an
+ * incident report — structured JSON plus a Chrome trace. The same
+ * dump fires automatically on a device loss, deadline reap, or worker
+ * panic when BLASX_FLIGHT_DIR is set. Returns BLASX_OK,
+ * BLASX_ERR_CONFIG when the runtime never booted, or
+ * BLASX_ERR_INTERNAL on I/O failure (see blasx_last_error). */
+int blasx_flight_dump(const char *dir);
 
 /* Static identification string, e.g. "blasx 0.2.0". */
 const char *blasx_version(void);

@@ -197,6 +197,18 @@ impl Context {
         self
     }
 
+    /// Background telemetry sampler interval in milliseconds
+    /// (`Some(0)` forces it off, `None` — the default — defers to
+    /// `BLASX_TELEMETRY_MS`). The sampler thread is spawned at runtime
+    /// boot, so the derived context gets its own runtime slot; when
+    /// off, no thread is spawned and no telemetry memory is allocated
+    /// (see [`crate::trace::telemetry`]).
+    pub fn with_telemetry_ms(mut self, ms: Option<u64>) -> Context {
+        self.cfg.telemetry_ms = ms;
+        self.runtime = Arc::new(Mutex::new(None));
+        self
+    }
+
     /// Per-job deadline in milliseconds: a call still unfinished this
     /// long after admission aborts with
     /// [`crate::error::Error::DeadlineExceeded`] at the next round
@@ -240,8 +252,12 @@ impl Context {
                 rt.clone()
             }
             _ => {
-                let rt =
-                    Arc::new(Runtime::boot(self.n_devices, self.arena_bytes, self.cfg.alloc));
+                let rt = Arc::new(Runtime::boot_with_telemetry(
+                    self.n_devices,
+                    self.arena_bytes,
+                    self.cfg.alloc,
+                    self.cfg.telemetry_ms,
+                ));
                 if let Some(plan) = &self.cfg.fault_plan {
                     rt.install_fault_plan(plan.clone());
                 }
@@ -358,10 +374,75 @@ impl Context {
 
     /// Snapshot of the resident runtime's metrics registry (job
     /// counters, per-worker busy fractions, per-tenant / per-routine
-    /// latency quantiles) as JSON. `None` when the runtime has not
+    /// latency quantiles) as JSON, plus the fleet-health section
+    /// (`devices[].up`, `fleet_healthy`) sourced from the SAME device-
+    /// death ledger `/healthz` reads. `None` when the runtime has not
     /// booted. Schema: see README §Observability.
     pub fn snapshot_metrics(&self) -> Option<Json> {
-        self.runtime_if_booted().map(|rt| rt.metrics().snapshot())
+        self.runtime_if_booted().map(|rt| rt.snapshot_metrics())
+    }
+
+    /// Render the live gauges in Prometheus text exposition format
+    /// (0.0.4) — the body `/metrics` serves. A cold (unbooted) runtime
+    /// renders the `blasx_up 0` stub without triggering a boot; a
+    /// booted one gathers a fresh sample (works with the background
+    /// sampler off) and overlays the dispatcher's online-EWMA gauges,
+    /// which live on the `Context`, not the runtime.
+    pub fn render_prometheus(&self) -> String {
+        let Some(rt) = self.runtime_if_booted() else {
+            return crate::trace::prometheus::render_unbooted();
+        };
+        let mut s = rt.telemetry_now();
+        if let Some(d) = self.dispatch.as_ref() {
+            let (shapes, obs) = d.online_stats();
+            s.dispatch_shapes = shapes;
+            s.dispatch_observations = obs;
+        }
+        crate::trace::prometheus::render(&s)
+    }
+
+    /// Fleet health: `(healthy, dead_devices)` from the fault plane's
+    /// device-death ledger — the single source `/healthz`,
+    /// `snapshot_metrics` and the telemetry gauges all read. An
+    /// unbooted runtime is vacuously healthy (and stays unbooted).
+    pub fn health(&self) -> (bool, Vec<usize>) {
+        match self.runtime_if_booted() {
+            None => (true, Vec::new()),
+            Some(rt) => {
+                let dead = rt.dead_devices();
+                (dead.is_empty(), dead)
+            }
+        }
+    }
+
+    /// Point the flight recorder's auto-dump at `dir` (`None` disarms).
+    /// Boots the runtime if needed — arming the black box is an
+    /// explicit request for a live fleet to observe.
+    pub fn set_flight_dir(&self, dir: Option<std::path::PathBuf>) {
+        if self.persistent {
+            self.runtime().flight().set_dump_dir(dir);
+        }
+    }
+
+    /// Dump the flight ring to `dir` right now (manual incident
+    /// capture, reason `"manual"`), returning the report path. `None`
+    /// when the runtime has not booted.
+    pub fn flight_dump(&self, dir: &std::path::Path) -> Option<std::io::Result<std::path::PathBuf>> {
+        self.runtime_if_booted().map(|rt| {
+            let dead = rt.dead_devices();
+            rt.flight().dump(dir, "manual", &dead)
+        })
+    }
+
+    /// Telemetry sample history from the background sampler's ring
+    /// (empty when the sampler is off or the runtime unbooted).
+    pub fn telemetry_history(&self) -> Vec<crate::trace::TelemetrySample> {
+        self.runtime_if_booted().map_or_else(Vec::new, |rt| rt.telemetry().history())
+    }
+
+    /// Is a background telemetry sampler thread running?
+    pub fn sampler_running(&self) -> bool {
+        self.runtime_if_booted().map_or(false, |rt| rt.sampler_running())
     }
 
     /// Route a task set to the resident runtime (persistent) or the

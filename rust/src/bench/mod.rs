@@ -49,7 +49,10 @@ pub fn write_json(name: &str, value: &Json) {
             let _ = f.write_all(value.to_string_pretty().as_bytes());
             println!("[bench] wrote {}", path.display());
         }
-        Err(e) => eprintln!("[bench] cannot write {}: {e}", path.display()),
+        Err(e) => crate::util::logger::warn(
+            "bench",
+            &format!("cannot write {}: {e}", path.display()),
+        ),
     }
 }
 

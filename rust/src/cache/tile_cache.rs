@@ -214,6 +214,13 @@ impl TileCacheSet {
         self.alrus[dev].resident()
     }
 
+    /// The device arena's allocator counters (bytes in use, high
+    /// watermark, alloc/free totals) — the telemetry sampler's view of
+    /// arena pressure.
+    pub fn heap_stats(&self, dev: usize) -> crate::mem::HeapStats {
+        self.alrus[dev].alloc.heap.stats()
+    }
+
     /// Consistency check across ALRUs and the directory (tests).
     pub fn validate(&self) -> Result<(), String> {
         for (d, a) in self.alrus.iter().enumerate() {

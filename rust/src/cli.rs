@@ -113,6 +113,9 @@ USAGE:
               [--chaos] [--faults \"kill@dev1:op40; h2d@dev0:op5x2\"]
               [--deadline-ms 0] [--max-inflight 256] [--tenant-quota 64]
               [--trace-out trace.json] [--metrics-out metrics.json]
+              [--telemetry-addr 127.0.0.1:9464] [--telemetry-ms 100]
+              [--flight-dir incidents/] [--linger-ms 0]
+  blasx top   [--addr 127.0.0.1:9464] [--interval-ms 1000] [--iters 0]
   blasx tune  [--out profile.json] [--quick] [--devices 2] [--reps 2]
               [--shapes 256,448,768] [--small-shapes 64,128]
   blasx batch <workload.json> [--devices 2] [--t 256] [--pjrt] [--fused]
@@ -177,7 +180,23 @@ chrome://tracing; one track per device worker, one per admitted job);
 P2P volumes from the real spans. `--metrics-out FILE` dumps the
 metrics-registry snapshot (per-tenant and per-routine latency
 percentiles, worker busy fractions). BLASX_TRACE=1 enables the
-recorder from the environment. See README \"Observability\"."
+recorder from the environment. See README \"Observability\".
+
+Live telemetry (serve): `--telemetry-addr HOST:PORT` serves live
+gauges over HTTP — `/metrics` in Prometheus text format (arena bytes,
+windowed cache hit rates, queue depth, per-tenant in-flight, worker
+busy fractions) and `/healthz` (503 once any device is dead). Every
+scrape gathers a fresh sample; `--telemetry-ms N` additionally runs
+the background sampler every N ms for history (`BLASX_TELEMETRY_MS`
+from the environment; 0/unset = off, zero threads, zero allocation).
+`--linger-ms N` keeps the endpoint up N ms after the workload drains
+so external scrapers can land. `blasx top` renders a refreshing
+terminal view from any such endpoint. `--flight-dir DIR` arms the
+always-on flight recorder's auto-dump: on a device kill, deadline
+reap, or worker panic the last ~256 events per device are written as
+an incident report (JSON + Chrome trace) naming the dead devices —
+`BLASX_FLIGHT_DIR` arms it from the environment. See README \"Live
+telemetry & flight recorder\"."
 }
 
 /// Entry point used by main.rs; returns a process exit code.
@@ -188,6 +207,7 @@ pub fn dispatch(argv: &[String]) -> i32 {
         Some("gantt") => cmd_sim(&args, true),
         Some("run") => cmd_run(&args),
         Some("serve") => cmd_serve(&args),
+        Some("top") => cmd_top(&args),
         Some("tune") => cmd_tune(&args),
         Some("batch") => cmd_batch(&args),
         Some("header") => cmd_header(&args),
@@ -481,9 +501,31 @@ fn cmd_serve(args: &Args) -> i32 {
     if let Some(q) = args.get("tenant-quota").and_then(|v| v.parse().ok()) {
         ctx = ctx.with_tenant_quota(q);
     }
+    // Live telemetry plane: an explicit --telemetry-ms runs the
+    // background sampler; the scrape endpoint works either way (each
+    // scrape gathers a fresh sample).
+    if let Some(ms) = args.get("telemetry-ms").and_then(|v| v.parse().ok()) {
+        ctx = ctx.with_telemetry_ms(Some(ms));
+    }
     if trace_out.is_some() {
         ctx.set_tracing(true);
     }
+    if let Some(dir) = args.get("flight-dir") {
+        ctx.set_flight_dir(Some(std::path::PathBuf::from(dir)));
+    }
+    let telemetry_server = match args.get("telemetry-addr") {
+        None => None,
+        Some(addr) => match crate::trace::TelemetryServer::start(addr, ctx.clone()) {
+            Ok(s) => {
+                println!("  telemetry: http://{}/metrics (+ /healthz)", s.addr());
+                Some(s)
+            }
+            Err(e) => {
+                eprintln!("serve: cannot bind telemetry endpoint {addr}: {e}");
+                return 2;
+            }
+        },
+    };
 
     println!(
         "SERVE clients={clients} jobs={jobs} DGEMM N={n} T={t} devices={devices}{}",
@@ -689,7 +731,115 @@ fn cmd_serve(args: &Args) -> i32 {
             None => eprintln!("serve: metrics unavailable; nothing written"),
         }
     }
+    if let Some(mut server) = telemetry_server {
+        // Give external scrapers (CI, `blasx top`) a window to land
+        // after the workload drains, then take the endpoint down
+        // cleanly (drop would too; this logs intent).
+        let linger = args.get_usize("linger-ms", 0);
+        if linger > 0 {
+            println!("  telemetry endpoint lingering {linger} ms for scrapers");
+            std::thread::sleep(std::time::Duration::from_millis(linger as u64));
+        }
+        server.stop();
+    }
     0
+}
+
+/// Minimal HTTP/1.0 GET against a telemetry endpoint (stdlib only);
+/// returns the response body.
+fn http_get(addr: &str, path: &str) -> std::io::Result<String> {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(std::time::Duration::from_secs(2)))?;
+    write!(s, "GET {path} HTTP/1.0\r\nHost: blasx\r\nConnection: close\r\n\r\n")?;
+    let mut buf = String::new();
+    s.read_to_string(&mut buf)?;
+    Ok(buf.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("").to_string())
+}
+
+/// `blasx top`: a refreshing terminal view over any `--telemetry-addr`
+/// endpoint — scrape `/metrics`, parse the text format back, render
+/// the fleet's live gauges. `--iters 0` (default) refreshes forever.
+fn cmd_top(args: &Args) -> i32 {
+    use crate::trace::prometheus;
+    use std::collections::BTreeMap;
+
+    let addr = args.get("addr").unwrap_or("127.0.0.1:9464");
+    let interval = args.get_usize("interval-ms", 1000).max(50);
+    let iters = args.get_usize("iters", 0);
+    let mut done = 0usize;
+    loop {
+        let text = match http_get(addr, "/metrics") {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("top: cannot scrape {addr}: {e}");
+                return 1;
+            }
+        };
+        let metrics = prometheus::parse(&text);
+        // Index: name → [(labels, value)] for the families we render.
+        let mut by_name: BTreeMap<&str, Vec<(&[(String, String)], f64)>> = BTreeMap::new();
+        for (name, labels, value) in &metrics {
+            by_name.entry(name.as_str()).or_default().push((labels.as_slice(), *value));
+        }
+        let scalar = |name: &str| {
+            by_name.get(name).and_then(|v| v.first()).map_or(0.0, |(_, val)| *val)
+        };
+        let by_label = |name: &str, key: &str| -> BTreeMap<String, f64> {
+            by_name.get(name).map_or_else(BTreeMap::new, |v| {
+                v.iter()
+                    .filter_map(|(labels, val)| {
+                        labels.iter().find(|(k, _)| k == key).map(|(_, lv)| (lv.clone(), *val))
+                    })
+                    .collect()
+            })
+        };
+        println!(
+            "blasx top — {addr}  up={}  uptime {}  [sample {}]",
+            scalar("blasx_up") as u64,
+            fmt_secs(scalar("blasx_uptime_seconds")),
+            done + 1,
+        );
+        println!(
+            "  jobs: queue {} (runnable {}, blocked {})  in-flight {}  admitted {}  retired {}  failed {}  rejected {}",
+            scalar("blasx_queue_depth") as u64,
+            scalar("blasx_jobs_runnable") as u64,
+            scalar("blasx_jobs_blocked") as u64,
+            scalar("blasx_jobs_in_flight") as u64,
+            scalar("blasx_jobs_admitted_total") as u64,
+            scalar("blasx_jobs_retired_total") as u64,
+            scalar("blasx_jobs_failed_total") as u64,
+            scalar("blasx_jobs_rejected_total") as u64,
+        );
+        let up = by_label("blasx_device_up", "dev");
+        let busy = by_label("blasx_worker_busy_fraction", "dev");
+        let hit = by_label("blasx_cache_hit_rate", "dev");
+        let resident = by_label("blasx_cache_resident_tiles", "dev");
+        let arena = by_label("blasx_arena_bytes_in_use", "dev");
+        let hw = by_label("blasx_arena_high_water_bytes", "dev");
+        for (dev, alive) in &up {
+            println!(
+                "  dev{dev}: {}  busy {:3.0}%  hit-rate {:.2}  resident {} tiles  arena {} (hw {})",
+                if *alive > 0.0 { "up  " } else { "DEAD" },
+                100.0 * busy.get(dev).copied().unwrap_or(0.0),
+                hit.get(dev).copied().unwrap_or(0.0),
+                resident.get(dev).copied().unwrap_or(0.0) as u64,
+                fmt_bytes(arena.get(dev).copied().unwrap_or(0.0) as u64),
+                fmt_bytes(hw.get(dev).copied().unwrap_or(0.0) as u64),
+            );
+        }
+        let tenants = by_label("blasx_tenant_inflight", "tenant");
+        if !tenants.is_empty() {
+            let line: Vec<String> =
+                tenants.iter().map(|(t, v)| format!("t{t}={}", *v as u64)).collect();
+            println!("  tenants in-flight: {}", line.join(" "));
+        }
+        done += 1;
+        if iters > 0 && done >= iters {
+            return 0;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(interval as u64));
+    }
 }
 
 /// Execute a JSON workload script through the real runtime: the
@@ -1207,6 +1357,24 @@ mod tests {
     fn serve_rejects_bad_faults_spec() {
         let rc = dispatch(&sv(&["serve", "--faults", "explode@dev0:op1"]));
         assert_eq!(rc, 2);
+    }
+
+    #[test]
+    fn serve_with_telemetry_endpoint_smoke() {
+        // Port 0 = ephemeral bind; the endpoint serves fresh scrapes
+        // during the run and shuts down with the command.
+        let rc = dispatch(&sv(&[
+            "serve", "--clients", "2", "--jobs", "1", "--n", "64", "--t", "32",
+            "--telemetry-addr", "127.0.0.1:0",
+        ]));
+        assert_eq!(rc, 0);
+    }
+
+    #[test]
+    fn top_reports_unreachable_endpoint() {
+        // Nothing listens on the reserved port 1: top must fail fast
+        // with a scrape error, not hang.
+        assert_eq!(dispatch(&sv(&["top", "--addr", "127.0.0.1:1", "--iters", "1"])), 1);
     }
 
     #[test]

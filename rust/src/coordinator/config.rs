@@ -127,6 +127,12 @@ pub struct RunConfig {
     /// `BLASX_MT_CUTOFF` override). The adaptive dispatcher stamps this
     /// per shape.
     pub mt_cutoff: Option<f64>,
+    /// Telemetry sampler interval in milliseconds, applied at runtime
+    /// boot (`None` = consult `BLASX_TELEMETRY_MS`, itself usually
+    /// unset; `Some(0)` forces the sampler off regardless of
+    /// environment). When off, no sampler thread exists and no
+    /// telemetry memory is allocated — see `crate::trace::telemetry`.
+    pub telemetry_ms: Option<u64>,
 }
 
 impl Default for RunConfig {
@@ -150,6 +156,7 @@ impl Default for RunConfig {
             admit_capacity: 256,
             tenant_quota: 64,
             mt_cutoff: None,
+            telemetry_ms: None,
         }
     }
 }
@@ -205,6 +212,7 @@ mod tests {
         assert_eq!(RunConfig::paper().t, 1024);
         assert!(c.fault_plan.is_none(), "no chaos unless asked");
         assert!(c.deadline_ms.is_none(), "jobs unbounded unless asked");
+        assert!(c.telemetry_ms.is_none(), "no sampler thread unless asked");
         assert!(c.admit_capacity >= c.tenant_quota, "one tenant can't starve the table alone");
     }
 }

@@ -51,7 +51,7 @@ use crate::runtime::TileExecutor;
 use crate::sched::{task_priority, Station};
 use crate::task::{Step, Task, TaskSet, TileOp, TileRef};
 use crate::tile::{HostMat, MatId, TileKey};
-use crate::trace::{Recorder, SpanKind};
+use crate::trace::{FlightRecorder, Recorder, SpanKind};
 use crate::util::once::OnceCell;
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -174,6 +174,10 @@ pub(crate) struct EngineCore {
     /// splitter consults this to bound per-round step bursts when the
     /// admission table is contended.
     pub(crate) runnable_jobs: AtomicUsize,
+    /// Always-on black-box event trail (bounded memory even with the
+    /// span recorder off) + incident auto-dump. See
+    /// [`crate::trace::flight`].
+    pub(crate) flight: FlightRecorder,
 }
 
 impl EngineCore {
@@ -195,6 +199,7 @@ impl EngineCore {
             faults: Injector::new(n_devices),
             dead: (0..n_devices).map(|_| AtomicBool::new(false)).collect(),
             runnable_jobs: AtomicUsize::new(0),
+            flight: FlightRecorder::new(n_devices),
         };
         // Environment fallback (`BLASX_FAULTS`) arms both execution
         // modes; the resident runtime overrides with the config plan
@@ -216,6 +221,19 @@ impl EngineCore {
         self.dead.iter().filter(|d| !d.load(Ordering::Relaxed)).count()
     }
 
+    /// Indices of devices lost to faults — THE source of truth for
+    /// fleet health: `/healthz`, `snapshot_metrics()["devices"]` and
+    /// the `blasx_device_up` gauge all derive from this one ledger (a
+    /// regression test pins the agreement).
+    pub(crate) fn dead_devices(&self) -> Vec<usize> {
+        self.dead
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.load(Ordering::Relaxed))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
     /// Mark `dev` lost: surgically invalidate its cache entries (host
     /// master copies and peer replicas stay valid — NOT a global
     /// purge) and wake every worker so migration starts immediately.
@@ -228,6 +246,11 @@ impl EngineCore {
             let t0 = self.rec.now();
             self.lock_caches().evict_device(dev);
             self.rec.record(dev, SpanKind::Fault, t0, dev as f64, 0);
+            self.flight.record(Some(dev), "fault", 0, 0, dev as f64);
+            // The black box: a device death is THE incident the flight
+            // recorder exists for — dump the ring (no-op unless a dump
+            // directory is armed).
+            self.flight.maybe_dump("device-kill", &self.dead_devices());
             self.notify_work();
         }
         first
@@ -736,6 +759,7 @@ pub(crate) fn worker_round<T: Scalar>(
         if moved > 0 {
             job.migrated.fetch_add(moved, Ordering::Relaxed);
             core.rec.record(dev, SpanKind::Migrate, core.rec.now(), moved as f64, jid);
+            core.flight.record(Some(dev), "migrate", jid, 0, moved as f64);
             core.notify_work();
         }
         if job.done() {
@@ -843,6 +867,7 @@ pub(crate) fn worker_round<T: Scalar>(
                     moved += drain_station(dev, job);
                     job.migrated.fetch_add(moved, Ordering::Relaxed);
                     core.rec.record(dev, SpanKind::Migrate, migrate_t0, moved as f64, jid);
+                    core.flight.record(Some(dev), "migrate", jid, 0, moved as f64);
                     core.notify_work();
                     return Round::Idle;
                 }
@@ -999,6 +1024,7 @@ fn run_task<T: Scalar>(
                 None => {
                     drop(caches);
                     job.degraded.fetch_add(1, Ordering::Relaxed);
+                    core.flight.record(Some(dev), "degrade", jid, 0, 0.0);
                     break Operand::Host(vec![T::zero(); tile_elems]);
                 }
             }
@@ -1171,6 +1197,7 @@ fn acquire_input<T: Scalar>(
                 // diagonal).
                 drop(caches);
                 job.degraded.fetch_add(1, Ordering::Relaxed);
+                core.flight.record(Some(dev), "degrade", jid, 0, 0.0);
                 let h2d_t0 = core.rec.now();
                 let mut v = vec![T::zero(); tile_elems];
                 mat.read_tile(tile.ti, tile.tj, &mut v, t);
@@ -1316,6 +1343,7 @@ fn exec_step<T: Scalar>(
             FaultAction::None => break,
             FaultAction::Wedge => {
                 core.rec.record(dev, SpanKind::Fault, kern_t0, dev as f64, jid);
+                core.flight.record(Some(dev), "fault", jid, 0, dev as f64);
                 std::thread::sleep(WEDGE_STALL);
                 break;
             }
@@ -1323,6 +1351,7 @@ fn exec_step<T: Scalar>(
                 attempt += 1;
                 job.retried.fetch_add(1, Ordering::Relaxed);
                 core.rec.record(dev, SpanKind::Retry, kern_t0, attempt as f64, jid);
+                core.flight.record(Some(dev), "retry", jid, 0, attempt as f64);
             }
             FaultAction::Kill | FaultAction::FailOp => {
                 core.kill_device(dev);

@@ -261,6 +261,14 @@ impl Dispatcher {
         self.adaptive
     }
 
+    /// Online-EWMA state for the telemetry gauges: `(shape buckets
+    /// tracked, total observations folded in)`.
+    pub fn online_stats(&self) -> (usize, u64) {
+        let online = self.online.lock().unwrap_or_else(|e| e.into_inner());
+        let obs = online.values().flat_map(|m| m.values()).map(|e| e.n).sum();
+        (online.len(), obs)
+    }
+
     /// The static no-measurement fallback. `base` carries the context
     /// defaults (its `cfg.t`, `cfg.worker_threads`, ...).
     pub fn heuristic(routine: &str, m: usize, n: usize, k: usize, base: &Choice) -> Choice {

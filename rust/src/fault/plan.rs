@@ -150,7 +150,10 @@ impl FaultPlan {
             Ok(plan) if plan.specs.is_empty() => None,
             Ok(plan) => Some(plan),
             Err(e) => {
-                eprintln!("blasx: ignoring malformed BLASX_FAULTS: {e}");
+                crate::util::logger::warn(
+                    "fault",
+                    &format!("ignoring malformed BLASX_FAULTS: {e}"),
+                );
                 None
             }
         }

@@ -549,6 +549,12 @@ pub struct BlasxStatsC {
     pub l1_hits: u64,
     /// Tasks obtained by work stealing.
     pub steals: u64,
+    /// Operations retried after transient injected/hardware faults.
+    pub retried: u64,
+    /// Operands served through the host-path OOM degradation ladder.
+    pub degraded: u64,
+    /// Tasks migrated off devices lost mid-job.
+    pub migrated: u64,
 }
 
 /// Snapshot the job's live observability counters into `*out`.
@@ -567,6 +573,7 @@ pub unsafe extern "C" fn blasx_job_stats(job: *const BlasxJob, out: *mut BlasxSt
         return BLASX_ERR_INTERNAL;
     }
     let s = (*job).job.stats();
+    let f = (*job).job.fault_stats();
     *out = BlasxStatsC {
         tasks: s.tasks as u64,
         host_reads_a: s.host_reads[0] as u64,
@@ -575,8 +582,81 @@ pub unsafe extern "C" fn blasx_job_stats(job: *const BlasxJob, out: *mut BlasxSt
         peer_copies: s.peer_copies as u64,
         l1_hits: s.l1_hits as u64,
         steals: s.steals as u64,
+        retried: f.retried as u64,
+        degraded: f.degraded as u64,
+        migrated: f.migrated as u64,
     };
     BLASX_OK
+}
+
+/// Render the library's live telemetry gauges in Prometheus text
+/// exposition format (the same body `blasx serve --telemetry-addr`
+/// serves at `/metrics`), copy the NUL-terminated text into `buf`, and
+/// return the full text length (excluding the NUL) — call with NULL/0
+/// to size a buffer. A cold (never-used) library renders the
+/// `blasx_up 0` stub without booting the runtime.
+///
+/// # Safety
+/// `buf` must point to `cap` writable bytes (or be NULL with cap 0 to
+/// query the length).
+#[no_mangle]
+pub unsafe extern "C" fn blasx_telemetry_text(buf: *mut c_char, cap: usize) -> usize {
+    let text = catch_unwind(AssertUnwindSafe(|| default_context().render_prometheus()))
+        .unwrap_or_default();
+    let bytes = text.as_bytes();
+    if !buf.is_null() && cap > 0 {
+        let n = bytes.len().min(cap - 1);
+        std::ptr::copy_nonoverlapping(bytes.as_ptr() as *const c_char, buf, n);
+        *buf.add(n) = 0;
+    }
+    bytes.len()
+}
+
+/// Dump the flight recorder's event ring (the black box: last ~256
+/// admissions/faults/migrations per device) into directory `dir` as an
+/// incident report — a structured JSON file plus a Chrome trace —
+/// with reason `"manual"`. Returns 0 on success, BLASX_ERR_CONFIG when
+/// the runtime has not booted (nothing recorded yet), BLASX_ERR_INTERNAL
+/// on an I/O failure (see `blasx_last_error`).
+///
+/// # Safety
+/// `dir` must be a NUL-terminated path string.
+#[no_mangle]
+pub unsafe extern "C" fn blasx_flight_dump(dir: *const c_char) -> c_int {
+    if dir.is_null() {
+        record_error("blasx_flight_dump", &Error::Internal("null dir".into()));
+        return BLASX_ERR_INTERNAL;
+    }
+    let Ok(path) = std::ffi::CStr::from_ptr(dir).to_str() else {
+        record_error("blasx_flight_dump", &Error::Config("dir is not UTF-8".into()));
+        return BLASX_ERR_CONFIG;
+    };
+    match catch_unwind(AssertUnwindSafe(|| {
+        default_context().flight_dump(std::path::Path::new(path))
+    })) {
+        Ok(Some(Ok(_))) => BLASX_OK,
+        Ok(Some(Err(e))) => {
+            record_error(
+                "blasx_flight_dump",
+                &Error::Internal(format!("cannot write incident report: {e}")),
+            );
+            BLASX_ERR_INTERNAL
+        }
+        Ok(None) => {
+            record_error(
+                "blasx_flight_dump",
+                &Error::Config("runtime not booted; nothing recorded".into()),
+            );
+            BLASX_ERR_CONFIG
+        }
+        Err(_) => {
+            record_error(
+                "blasx_flight_dump",
+                &Error::Internal("panic contained at the C ABI".into()),
+            );
+            BLASX_ERR_INTERNAL
+        }
+    }
 }
 
 /// Declare that `bytes` bytes at `ptr` were mutated (or freed and

@@ -82,7 +82,9 @@ use crate::mem::AllocStrategy;
 use crate::serve::admission::{JobCtl, JobSpan, JobTable};
 use crate::serve::{fairness, DeviceJob};
 use crate::task::TaskSet;
-use crate::trace::{tenant_id, JobRec, MetricsRegistry, SpanKind};
+use crate::trace::telemetry::{fill_windowed_rates, DevGauges, Telemetry, TelemetrySample};
+use crate::trace::{tenant_id, FlightRecorder, JobRec, MetricsRegistry, SpanKind};
+use crate::util::json::Json;
 use std::collections::{BTreeMap, HashSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -444,6 +446,11 @@ struct Inner {
     /// timers elsewhere. Lock order: may be taken while holding
     /// `table` (admission), never the reverse.
     metrics: MetricsRegistry,
+    /// Live telemetry plane: the sample ring the background sampler
+    /// (when enabled) feeds and the scrape endpoint reads. Allocation-
+    /// free and thread-free when disabled (the default) — see
+    /// [`crate::trace::telemetry`].
+    telemetry: Telemetry,
 }
 
 /// The resident device runtime (see module docs). Cloneably shared via
@@ -453,6 +460,9 @@ struct Inner {
 pub struct Runtime {
     inner: Arc<Inner>,
     handles: Vec<JoinHandle<()>>,
+    /// Whether a background telemetry sampler thread was spawned at
+    /// boot (`BLASX_TELEMETRY_MS` / `RunConfig::telemetry_ms`).
+    sampler_active: bool,
 }
 
 impl std::fmt::Debug for Runtime {
@@ -467,8 +477,26 @@ impl std::fmt::Debug for Runtime {
 
 impl Runtime {
     /// Spawn the resident workers and allocate the persistent arenas.
+    /// The telemetry sampler interval comes from `BLASX_TELEMETRY_MS`
+    /// (unset/0 = off); use [`Runtime::boot_with_telemetry`] for a
+    /// programmatic interval.
     pub fn boot(n_devices: usize, arena_bytes: usize, alloc: AllocStrategy) -> Runtime {
+        Runtime::boot_with_telemetry(n_devices, arena_bytes, alloc, None)
+    }
+
+    /// [`Runtime::boot`] with an explicit telemetry interval override:
+    /// `Some(ms)` wins over the environment (`Some(0)` forces the
+    /// sampler off), `None` consults `BLASX_TELEMETRY_MS`. When the
+    /// resolved interval is 0 no sampler thread is spawned and no
+    /// telemetry memory is allocated.
+    pub fn boot_with_telemetry(
+        n_devices: usize,
+        arena_bytes: usize,
+        alloc: AllocStrategy,
+        telemetry_ms: Option<u64>,
+    ) -> Runtime {
         assert!(n_devices >= 1);
+        let interval_ms = Telemetry::interval_from_env(telemetry_ms);
         let inner = Arc::new(Inner {
             core: EngineCore::new(n_devices, arena_bytes, alloc),
             n_devices,
@@ -478,8 +506,9 @@ impl Runtime {
             shutdown: AtomicBool::new(false),
             calls: AtomicUsize::new(0),
             metrics: MetricsRegistry::new(n_devices),
+            telemetry: Telemetry::new(interval_ms),
         });
-        let handles = (0..n_devices)
+        let mut handles: Vec<JoinHandle<()>> = (0..n_devices)
             .map(|dev| {
                 let inner = inner.clone();
                 std::thread::Builder::new()
@@ -488,7 +517,17 @@ impl Runtime {
                     .expect("spawn device worker")
             })
             .collect();
-        Runtime { inner, handles }
+        let sampler_active = interval_ms > 0;
+        if sampler_active {
+            let inner2 = inner.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name("blasx-telemetry".into())
+                    .spawn(move || telemetry_sampler(inner2))
+                    .expect("spawn telemetry sampler"),
+            );
+        }
+        Runtime { inner, handles, sampler_active }
     }
 
     pub fn n_devices(&self) -> usize {
@@ -516,6 +555,57 @@ impl Runtime {
     /// [`MetricsRegistry::snapshot`].
     pub fn metrics(&self) -> &MetricsRegistry {
         &self.inner.metrics
+    }
+
+    /// The metrics snapshot *plus* the fleet-health section — the one
+    /// JSON document `blasx serve --metrics-out`, the C ABI and tests
+    /// consume. Device-death state comes from the same
+    /// `EngineCore::dead_devices` ledger `/healthz` reads, so the two
+    /// views can never disagree (regression-tested).
+    pub fn snapshot_metrics(&self) -> Json {
+        let mut snap = self.inner.metrics.snapshot();
+        let dead = self.inner.core.dead_devices();
+        let mut devices = Vec::with_capacity(self.inner.n_devices);
+        for dev in 0..self.inner.n_devices {
+            let mut d = Json::obj();
+            d.set("dev", dev.into()).set("up", (!dead.contains(&dev)).into());
+            devices.push(d);
+        }
+        snap.set("devices", Json::Arr(devices)).set("fleet_healthy", dead.is_empty().into());
+        snap
+    }
+
+    /// Devices lost to faults (the `/healthz` + `blasx_device_up`
+    /// source of truth).
+    pub fn dead_devices(&self) -> Vec<usize> {
+        self.inner.core.dead_devices()
+    }
+
+    /// Gather a fresh telemetry sample NOW (windowed rates computed
+    /// against the sampler's most recent ring entry when one exists).
+    /// This is what `/metrics` scrapes render, so the exporter works
+    /// even with the background sampler off.
+    pub fn telemetry_now(&self) -> TelemetrySample {
+        let mut s = gather_sample(&self.inner);
+        let prev = self.inner.telemetry.latest();
+        fill_windowed_rates(&mut s, prev.as_ref());
+        s
+    }
+
+    /// The telemetry sample ring (history inspection; empty unless the
+    /// background sampler is on).
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.inner.telemetry
+    }
+
+    /// Is a background sampler thread running for this runtime?
+    pub fn sampler_running(&self) -> bool {
+        self.sampler_active
+    }
+
+    /// The always-on flight recorder (bounded incident trail).
+    pub fn flight(&self) -> &FlightRecorder {
+        &self.inner.core.flight
     }
 
     /// Live jobs currently admitted (in flight or queued behind
@@ -577,6 +667,7 @@ impl Runtime {
             // rejected call leaves no trace in the registry.
             if table.live_count() >= cfg.admit_capacity.max(1) {
                 self.inner.metrics.on_reject(tenant, cfg.routine);
+                self.inner.core.flight.record(None, "reject", 0, tenant, table.live_count() as f64);
                 return Err(Error::Backpressure(format!(
                     "admission queue full ({} jobs in flight, capacity {})",
                     table.live_count(),
@@ -585,6 +676,7 @@ impl Runtime {
             }
             if table.tenant_inflight(tenant) >= cfg.tenant_quota.max(1) {
                 self.inner.metrics.on_reject(tenant, cfg.routine);
+                self.inner.core.flight.record(None, "reject", 0, tenant, 0.0);
                 return Err(Error::Backpressure(format!(
                     "tenant {tenant} at its in-flight quota ({})",
                     cfg.tenant_quota.max(1)
@@ -610,6 +702,7 @@ impl Runtime {
                 weight,
                 self.inner.core.rec.now(),
             );
+            self.inner.core.flight.record(None, "admit", ctl.id, tenant, weight);
             ctl
         };
         self.inner.core.notify_work();
@@ -811,10 +904,81 @@ impl Runtime {
 impl Drop for Runtime {
     fn drop(&mut self) {
         self.inner.shutdown.store(true, Ordering::SeqCst);
+        // Wake the sampler first (condvar latch): otherwise the join
+        // below would block for up to one full sampling interval.
+        self.inner.telemetry.request_stop();
         self.inner.core.notify_work();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+    }
+}
+
+/// Collect one telemetry sample. The three lock holders are visited
+/// strictly *sequentially* — table, then caches, then the metrics
+/// registry's own lock (inside `job_gauges`) — never nested, which
+/// keeps the sampler trivially compatible with the runtime's
+/// `table` → `caches` lock order no matter which workers it races.
+/// Dispatch gauges stay 0 here: the dispatcher lives on the API-layer
+/// `Context`, which overlays them in `render_prometheus`.
+fn gather_sample(inner: &Inner) -> TelemetrySample {
+    let mut s = TelemetrySample { t_s: inner.metrics.uptime(), ..Default::default() };
+    {
+        let table = inner.table.lock().unwrap_or_else(|e| e.into_inner());
+        s.queue_depth = table.live_count();
+        for e in &table.jobs {
+            if e.finishing {
+                continue;
+            }
+            if e.deps.is_empty() {
+                s.runnable += 1;
+            } else {
+                s.blocked += 1;
+            }
+        }
+    }
+    let busy = inner.metrics.busy_nanos();
+    let rounds = inner.metrics.rounds();
+    {
+        let caches = inner.core.lock_caches();
+        for dev in 0..inner.n_devices {
+            let hs = caches.heap_stats(dev);
+            let cs = caches.stats(dev);
+            s.devices.push(DevGauges {
+                dev,
+                dead: inner.core.is_dead(dev),
+                arena_in_use: hs.bytes_in_use,
+                arena_high_water: hs.high_water,
+                cache_resident: caches.resident(dev),
+                cache_hits: cs.hits,
+                cache_misses: cs.misses,
+                cache_evictions: cs.evictions,
+                hit_rate: 0.0,
+                busy_nanos: busy.get(dev).copied().unwrap_or(0),
+                busy_fraction: 0.0,
+                rounds: rounds.get(dev).copied().unwrap_or(0),
+            });
+        }
+    }
+    let jg = inner.metrics.job_gauges();
+    s.in_flight = jg.in_flight;
+    s.admitted = jg.admitted;
+    s.retired = jg.retired;
+    s.failed = jg.failed;
+    s.rejected = jg.rejected;
+    s.per_tenant = jg.per_tenant_inflight;
+    s
+}
+
+/// Body of the background sampler thread: park one interval (woken
+/// early by `Drop`), gather, rate-fill against the previous ring entry,
+/// push. Exits as soon as `request_stop` fires.
+fn telemetry_sampler(inner: Arc<Inner>) {
+    while inner.telemetry.park_interval() {
+        let mut s = gather_sample(&inner);
+        let prev = inner.telemetry.latest();
+        fill_windowed_rates(&mut s, prev.as_ref());
+        inner.telemetry.push(s);
     }
 }
 
@@ -833,6 +997,7 @@ enum Pick {
 fn retire_bookkeeping(inner: &Inner, id: u64, failed: bool, faults: &FaultStats) {
     inner.calls.fetch_add(1, Ordering::Relaxed);
     if let Some(r) = inner.metrics.on_retire(id, failed, inner.core.rec.now(), faults) {
+        inner.core.flight.record(None, "retire", id, r.tenant, if failed { 1.0 } else { 0.0 });
         inner.core.rec.record_job(JobRec {
             job: id,
             tenant: r.tenant,
@@ -842,6 +1007,8 @@ fn retire_bookkeeping(inner: &Inner, id: u64, failed: bool, faults: &FaultStats)
             retire: r.retire_s,
             failed,
         });
+    } else {
+        inner.core.flight.record(None, "retire", id, 0, if failed { 1.0 } else { 0.0 });
     }
 }
 
@@ -870,9 +1037,14 @@ fn next_round(inner: &Inner, tried: &mut HashSet<u64>, seen_version: &mut u64) -
     };
     if !reaped.is_empty() {
         for (ctl, faults) in &reaped {
+            inner.core.flight.record(None, "reap", ctl.id, 0, reaped.len() as f64);
             retire_bookkeeping(inner, ctl.id, true, faults);
             ctl.retire();
         }
+        // A reap is a black-box incident: a tenant lost work to a
+        // deadline or cancellation. Dump the flight ring (bounded per
+        // reason — see `FlightRecorder::maybe_dump`).
+        inner.core.flight.maybe_dump("deadline-reap", &inner.core.dead_devices());
         // Dependents of the reaped jobs may be runnable now.
         inner.core.notify_work();
     }
@@ -901,6 +1073,8 @@ fn device_worker(inner: Arc<Inner>, dev: usize) {
                         Ok(r) => r,
                         Err(_) => {
                             job.poison(format!("device worker {dev} panicked"));
+                            inner.core.flight.record(Some(dev), "panic", id, 0, 0.0);
+                            inner.core.flight.maybe_dump("worker-panic", &inner.core.dead_devices());
                             Round::Failed
                         }
                     };

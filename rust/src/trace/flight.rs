@@ -1,0 +1,391 @@
+//! Black-box flight recorder: the always-on incident trail.
+//!
+//! The span [`Recorder`](super::spans::Recorder) is opt-in and
+//! unbounded — perfect for a profiling session, useless for explaining
+//! why device 1 died at 03:12 on a fleet that was not being traced.
+//! The [`FlightRecorder`] is the complement: **always on**, **bounded
+//! memory** (fixed-capacity rings of fixed-size events, allocated once
+//! at core construction), recording the last [`FLIGHT_RING`] scheduler
+//! and per-device events — admissions, backpressure rejections,
+//! retirements, faults, migrations, deadline reaps, worker panics.
+//!
+//! When something goes wrong (a `FaultAction` kill, a deadline reap, a
+//! contained worker panic) the runtime calls
+//! [`FlightRecorder::maybe_dump`], which — if `BLASX_FLIGHT_DIR` is set
+//! or a directory was installed programmatically — writes an **incident
+//! report**: a structured JSON document (schema `blasx-incident-v1`)
+//! plus a Chrome trace-event file of the ring contents, so the minutes
+//! before the event are replayable in Perfetto. PR 7's "bit-for-bit
+//! recovery" claim stops being trust-the-test and becomes an artifact.
+//!
+//! ## Overhead contract
+//!
+//! Recording is lock-push-unlock into a preallocated ring slot: no
+//! allocation ever happens after construction (pinned by
+//! `rust/tests/telemetry.rs` with the counting allocator), and events
+//! are recorded at *job* frequency (admit/retire/fault), not tile
+//! frequency, so the clock read per event is noise. Dumps are bounded
+//! per reason ([`DUMPS_PER_REASON`]) so a chaos schedule cannot fill a
+//! disk.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Events retained per ring (one ring per device + one scheduler ring).
+pub const FLIGHT_RING: usize = 256;
+
+/// Auto-dumps written per distinct reason before suppression kicks in
+/// (a kill schedule with `x20` repeats must not write 20 reports).
+pub const DUMPS_PER_REASON: u64 = 4;
+
+/// One fixed-size flight event. `dev < 0` means "scheduler" (admission
+/// plane) rather than a device worker.
+#[derive(Clone, Copy, Debug)]
+pub struct FlightEvent {
+    /// Seconds since the recorder epoch (core construction).
+    pub t_s: f64,
+    /// `admit`, `reject`, `retire`, `fault`, `migrate`, `reap`,
+    /// `panic`, `retry`, `degrade`.
+    pub kind: &'static str,
+    pub dev: i64,
+    pub job: u64,
+    pub tenant: u32,
+    /// Kind-specific payload: weight (admit), failed flag (retire),
+    /// moved tasks (migrate), attempt (retry), ...
+    pub amount: f64,
+}
+
+/// Fixed-capacity overwrite ring. The backing `Vec` is allocated to
+/// capacity up front; pushes past capacity overwrite the oldest slot.
+struct Ring {
+    buf: Vec<FlightEvent>,
+    /// Next slot to overwrite once the ring is full.
+    head: usize,
+    /// Lifetime events pushed (≥ `buf.len()`).
+    total: u64,
+}
+
+impl Ring {
+    fn new() -> Ring {
+        Ring { buf: Vec::with_capacity(FLIGHT_RING), head: 0, total: 0 }
+    }
+
+    fn push(&mut self, e: FlightEvent) {
+        if self.buf.len() < FLIGHT_RING {
+            self.buf.push(e);
+        } else {
+            self.buf[self.head] = e;
+            self.head = (self.head + 1) % FLIGHT_RING;
+        }
+        self.total += 1;
+    }
+
+    /// Events oldest-first.
+    fn ordered(&self) -> Vec<FlightEvent> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+}
+
+/// The always-on black box (see module docs). One per `EngineCore`.
+pub struct FlightRecorder {
+    epoch: Instant,
+    /// `rings[dev]` per device; `rings[n_devices]` is the scheduler
+    /// ring (admission/backpressure/retire/reap events have no device).
+    rings: Vec<Mutex<Ring>>,
+    /// Fast gate for [`FlightRecorder::maybe_dump`]: set iff a dump
+    /// directory is installed.
+    armed: AtomicBool,
+    dir: Mutex<Option<PathBuf>>,
+    /// Incident sequence number (names the report files).
+    seq: AtomicU64,
+    /// Per-reason dump counts (bounded flood control). Reasons are a
+    /// small closed set of static strings, so this map never grows past
+    /// a handful of entries.
+    per_reason: Mutex<std::collections::HashMap<&'static str, u64>>,
+}
+
+impl FlightRecorder {
+    /// A recorder for `n_devices`, auto-dump armed iff
+    /// `BLASX_FLIGHT_DIR` names a directory.
+    pub fn new(n_devices: usize) -> FlightRecorder {
+        let dir = std::env::var("BLASX_FLIGHT_DIR")
+            .ok()
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .map(PathBuf::from);
+        FlightRecorder {
+            epoch: Instant::now(),
+            rings: (0..n_devices.max(1) + 1).map(|_| Mutex::new(Ring::new())).collect(),
+            armed: AtomicBool::new(dir.is_some()),
+            dir: Mutex::new(dir),
+            seq: AtomicU64::new(0),
+            per_reason: Mutex::new(std::collections::HashMap::new()),
+        }
+    }
+
+    fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Install (or clear) the auto-dump directory programmatically —
+    /// the test-friendly override of `BLASX_FLIGHT_DIR`.
+    pub fn set_dump_dir(&self, dir: Option<PathBuf>) {
+        self.armed.store(dir.is_some(), Ordering::Relaxed);
+        *self.dir.lock().unwrap_or_else(|e| e.into_inner()) = dir;
+    }
+
+    /// Is auto-dump armed (a directory installed)?
+    pub fn is_armed(&self) -> bool {
+        self.armed.load(Ordering::Relaxed)
+    }
+
+    /// Record one event. `dev = None` targets the scheduler ring.
+    /// Never allocates: the ring slot is preallocated.
+    pub fn record(&self, dev: Option<usize>, kind: &'static str, job: u64, tenant: u32, amount: f64) {
+        let n = self.rings.len() - 1;
+        let ring = dev.map_or(n, |d| d.min(n - (n > 0) as usize).min(n));
+        let e = FlightEvent {
+            t_s: self.now(),
+            kind,
+            dev: dev.map_or(-1, |d| d as i64),
+            job,
+            tenant,
+            amount,
+        };
+        self.rings[ring].lock().unwrap_or_else(|p| p.into_inner()).push(e);
+    }
+
+    /// Every retained event, oldest-first per ring, then merged by
+    /// timestamp.
+    pub fn snapshot(&self) -> Vec<FlightEvent> {
+        let mut out = Vec::new();
+        for ring in &self.rings {
+            out.extend(ring.lock().unwrap_or_else(|p| p.into_inner()).ordered());
+        }
+        out.sort_by(|a, b| a.t_s.total_cmp(&b.t_s));
+        out
+    }
+
+    /// Lifetime events recorded (across all rings; not capped by ring
+    /// capacity).
+    pub fn total_events(&self) -> u64 {
+        self.rings.iter().map(|r| r.lock().unwrap_or_else(|p| p.into_inner()).total).sum()
+    }
+
+    /// Events currently retained (bounded by
+    /// `(n_devices + 1) × FLIGHT_RING` forever).
+    pub fn retained(&self) -> usize {
+        self.rings.iter().map(|r| r.lock().unwrap_or_else(|p| p.into_inner()).buf.len()).sum()
+    }
+
+    /// Auto-dump on an incident trigger: no-op unless a dump directory
+    /// is armed and the per-reason budget remains. Returns the report
+    /// path when a dump was written. Dump failures are reported through
+    /// the logger, never panicked — the flight recorder must not make
+    /// an incident worse.
+    pub fn maybe_dump(&self, reason: &'static str, dead_devices: &[usize]) -> Option<PathBuf> {
+        if !self.is_armed() {
+            return None;
+        }
+        {
+            let mut counts = self.per_reason.lock().unwrap_or_else(|p| p.into_inner());
+            let c = counts.entry(reason).or_insert(0);
+            if *c >= DUMPS_PER_REASON {
+                return None;
+            }
+            *c += 1;
+        }
+        let dir = self.dir.lock().unwrap_or_else(|p| p.into_inner()).clone()?;
+        match self.dump(&dir, reason, dead_devices) {
+            Ok(path) => Some(path),
+            Err(e) => {
+                crate::util::logger::warn("flight", &format!("incident dump failed: {e}"));
+                None
+            }
+        }
+    }
+
+    /// Write an incident report now: `incident_<seq>_<reason>.json`
+    /// (schema `blasx-incident-v1`) plus the matching
+    /// `incident_<seq>_<reason>.trace.json` Chrome trace of the ring
+    /// contents. Returns the JSON report path.
+    pub fn dump(&self, dir: &Path, reason: &str, dead_devices: &[usize]) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst);
+        let safe_reason: String =
+            reason.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '-' }).collect();
+        let events = self.snapshot();
+        let report = incident_report(seq, reason, dead_devices, &events, self.now());
+        let trace = flight_chrome_trace(&events, self.rings.len() - 1);
+        let report_path = dir.join(format!("incident_{seq:04}_{safe_reason}.json"));
+        let trace_path = dir.join(format!("incident_{seq:04}_{safe_reason}.trace.json"));
+        std::fs::write(&report_path, report.to_string_pretty())?;
+        std::fs::write(&trace_path, trace.to_string_compact())?;
+        Ok(report_path)
+    }
+}
+
+/// Build the structured incident report (schema `blasx-incident-v1`).
+fn incident_report(
+    seq: u64,
+    reason: &str,
+    dead_devices: &[usize],
+    events: &[FlightEvent],
+    t_s: f64,
+) -> Json {
+    let mut doc = Json::obj();
+    doc.set("schema", "blasx-incident-v1".into())
+        .set("seq", seq.into())
+        .set("reason", reason.into())
+        .set("t_s", Json::Num(t_s))
+        .set("dead_devices", dead_devices.to_vec().into());
+    let mut evs = Vec::with_capacity(events.len());
+    let mut by_kind: std::collections::BTreeMap<&'static str, u64> = Default::default();
+    for e in events {
+        *by_kind.entry(e.kind).or_insert(0) += 1;
+        let mut o = Json::obj();
+        o.set("t_s", Json::Num(e.t_s))
+            .set("kind", e.kind.into())
+            .set("dev", e.dev.into())
+            .set("job", e.job.into())
+            .set("tenant", (e.tenant as u64).into())
+            .set("amount", Json::Num(e.amount));
+        evs.push(o);
+    }
+    doc.set("events", Json::Arr(evs));
+    let mut counters = Json::obj();
+    for (k, v) in by_kind {
+        counters.set(k, v.into());
+    }
+    doc.set("event_counts", counters);
+    doc
+}
+
+/// Render the ring contents as a Chrome trace-event document: instant
+/// events ("i" phase) on one track per device plus a `scheduler` track,
+/// loadable in Perfetto alongside the full PR 6 trace when one exists.
+fn flight_chrome_trace(events: &[FlightEvent], n_devices: usize) -> Json {
+    let mut all: Vec<Json> = Vec::with_capacity(events.len() + n_devices + 2);
+    let mut meta = |tid: usize, name: &str| {
+        let mut ev = Json::obj();
+        ev.set("ph", "M".into())
+            .set("pid", 0usize.into())
+            .set("tid", tid.into())
+            .set("name", "thread_name".into());
+        let mut args = Json::obj();
+        args.set("name", name.into());
+        ev.set("args", args);
+        ev
+    };
+    {
+        let mut p = Json::obj();
+        p.set("ph", "M".into()).set("pid", 0usize.into()).set("name", "process_name".into());
+        let mut args = Json::obj();
+        args.set("name", "flight".into());
+        p.set("args", args);
+        all.push(p);
+    }
+    for d in 0..n_devices {
+        all.push(meta(d, &format!("device {d}")));
+    }
+    all.push(meta(n_devices, "scheduler"));
+    for e in events {
+        let tid = if e.dev < 0 { n_devices } else { e.dev as usize };
+        let mut ev = Json::obj();
+        ev.set("ph", "i".into())
+            .set("s", "t".into())
+            .set("pid", 0usize.into())
+            .set("tid", tid.into())
+            .set("name", e.kind.into())
+            .set("ts", Json::Num((e.t_s * 1e6).max(0.0)));
+        let mut args = Json::obj();
+        args.set("job", e.job.into())
+            .set("tenant", (e.tenant as u64).into())
+            .set("amount", Json::Num(e.amount));
+        ev.set("args", args);
+        all.push(ev);
+    }
+    let mut doc = Json::obj();
+    doc.set("traceEvents", Json::Arr(all)).set("displayTimeUnit", "ms".into());
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn ring_overwrites_at_capacity() {
+        let fr = FlightRecorder::new(1);
+        for i in 0..(FLIGHT_RING * 3) as u64 {
+            fr.record(Some(0), "admit", i, 1, 0.0);
+        }
+        let events = fr.snapshot();
+        assert_eq!(events.len(), FLIGHT_RING, "ring must stay bounded");
+        // The retained window is the most recent FLIGHT_RING events.
+        assert_eq!(events[0].job, (FLIGHT_RING * 2) as u64);
+        assert_eq!(events.last().unwrap().job, (FLIGHT_RING * 3 - 1) as u64);
+        assert_eq!(fr.total_events(), (FLIGHT_RING * 3) as u64);
+    }
+
+    #[test]
+    fn scheduler_events_take_their_own_ring() {
+        let fr = FlightRecorder::new(2);
+        fr.record(None, "admit", 1, 7, 2.0);
+        fr.record(Some(1), "fault", 0, 0, 1.0);
+        let events = fr.snapshot();
+        assert_eq!(events.len(), 2);
+        assert!(events.iter().any(|e| e.kind == "admit" && e.dev == -1 && e.tenant == 7));
+        assert!(events.iter().any(|e| e.kind == "fault" && e.dev == 1));
+    }
+
+    #[test]
+    fn dump_writes_parseable_report_and_trace() {
+        let dir = std::env::temp_dir().join(format!("blasx_flight_{}", std::process::id()));
+        let fr = FlightRecorder::new(2);
+        fr.record(None, "admit", 1, 1, 100.0);
+        fr.record(Some(1), "fault", 0, 0, 1.0);
+        let path = fr.dump(&dir, "device-kill", &[1]).expect("dump");
+        let report = json::parse(&std::fs::read_to_string(&path).unwrap()).expect("report parses");
+        assert_eq!(report.get("schema").and_then(Json::as_str), Some("blasx-incident-v1"));
+        assert_eq!(report.get("reason").and_then(Json::as_str), Some("device-kill"));
+        let dead = report.get("dead_devices").and_then(Json::as_arr).unwrap();
+        assert_eq!(dead[0].as_usize(), Some(1));
+        assert_eq!(report.get("events").and_then(Json::as_arr).unwrap().len(), 2);
+        let trace_path = path.with_extension("").with_extension("");
+        let trace_file = dir.join(format!(
+            "{}.trace.json",
+            trace_path.file_name().unwrap().to_str().unwrap()
+        ));
+        let trace =
+            json::parse(&std::fs::read_to_string(&trace_file).unwrap()).expect("trace parses");
+        assert!(trace.get("traceEvents").and_then(Json::as_arr).unwrap().len() >= 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn maybe_dump_respects_arming_and_reason_budget() {
+        let fr = FlightRecorder::new(1);
+        fr.set_dump_dir(None);
+        assert!(fr.maybe_dump("device-kill", &[0]).is_none(), "disarmed = no dump");
+        let dir = std::env::temp_dir().join(format!("blasx_flightb_{}", std::process::id()));
+        fr.set_dump_dir(Some(dir.clone()));
+        assert!(fr.is_armed());
+        fr.record(Some(0), "fault", 0, 0, 0.0);
+        let mut written = 0;
+        for _ in 0..(DUMPS_PER_REASON + 3) {
+            if fr.maybe_dump("device-kill", &[0]).is_some() {
+                written += 1;
+            }
+        }
+        assert_eq!(written, DUMPS_PER_REASON, "per-reason flood control");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -195,6 +195,19 @@ struct GroupStats {
     end_to_end: Histogram,
 }
 
+/// One-lock counter snapshot for the telemetry sampler (see
+/// [`MetricsRegistry::job_gauges`]).
+#[derive(Clone, Debug, Default)]
+pub struct JobGauges {
+    pub admitted: u64,
+    pub retired: u64,
+    pub failed: u64,
+    pub rejected: u64,
+    pub in_flight: usize,
+    /// `(tenant, live jobs)` for tenants with work in flight.
+    pub per_tenant_inflight: Vec<(u32, usize)>,
+}
+
 /// A retired job's lifecycle, handed back to the caller so the worker
 /// can forward it to the span recorder without the registry holding
 /// two locks.
@@ -334,6 +347,30 @@ impl MetricsRegistry {
     /// Cumulative per-device busy nanoseconds since boot.
     pub fn busy_nanos(&self) -> Vec<u64> {
         self.busy_nanos.iter().map(|a| a.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Cumulative per-device scheduler rounds since boot.
+    pub fn rounds(&self) -> Vec<u64> {
+        self.rounds.iter().map(|a| a.load(Ordering::Relaxed)).collect()
+    }
+
+    /// One-lock gauge read for the telemetry sampler: cumulative job
+    /// counters plus the per-tenant in-flight breakdown, without
+    /// building the full JSON snapshot every tick.
+    pub fn job_gauges(&self) -> JobGauges {
+        let inner = self.lock();
+        let mut per_tenant: BTreeMap<u32, usize> = BTreeMap::new();
+        for live in inner.live.values() {
+            *per_tenant.entry(live.tenant).or_insert(0) += 1;
+        }
+        JobGauges {
+            admitted: inner.admitted,
+            retired: inner.retired,
+            failed: inner.failed,
+            rejected: inner.rejected,
+            in_flight: inner.live.len(),
+            per_tenant_inflight: per_tenant.into_iter().collect(),
+        }
     }
 
     /// Seconds since the registry (== runtime) booted.

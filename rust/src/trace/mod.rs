@@ -5,13 +5,19 @@
 
 pub mod chrome;
 pub mod events;
+pub mod flight;
 pub mod gantt;
 pub mod metrics;
 pub mod profile;
+pub mod prometheus;
 pub mod spans;
+pub mod telemetry;
 
 pub use chrome::chrome_trace;
 pub use events::{EvKind, Event, Trace};
+pub use flight::{FlightEvent, FlightRecorder, FLIGHT_RING};
 pub use metrics::{tenant_id, Histogram, MetricsRegistry, RetiredJob};
 pub use profile::{all_profiles, balance_gap, comm_volumes, device_profile, CommVolume, DeviceProfile};
+pub use prometheus::TelemetryServer;
 pub use spans::{JobRec, Recorder, Span, SpanKind};
+pub use telemetry::{DevGauges, Telemetry, TelemetrySample, TELEMETRY_RING};

@@ -1,0 +1,385 @@
+//! Prometheus text-format exporter + stdlib-only scrape endpoint.
+//!
+//! [`render`] turns one [`TelemetrySample`] into Prometheus text
+//! exposition format 0.0.4 (`# HELP` / `# TYPE` per family, labels in
+//! `{}`), and [`TelemetryServer`] serves it over a bare
+//! [`std::net::TcpListener`] — no HTTP crate, because the protocol
+//! surface we need is one request line and two routes:
+//!
+//! - `GET /metrics` — the gauge catalog below, gathered fresh at
+//!   scrape time (works even with the background sampler off);
+//! - `GET /healthz` — `200 ok` while every device is alive, `503`
+//!   naming the dead devices per PR 7's fault ledger. The death state
+//!   comes from the same [`EngineCore::dead_devices`] source the
+//!   metrics snapshot uses — one source of truth, pinned by a
+//!   regression test.
+//!
+//! `blasx serve --telemetry-addr 127.0.0.1:9464` starts one; `blasx
+//! top` and `tools/check_prometheus.py` scrape it.
+//!
+//! [`EngineCore::dead_devices`]: crate::coordinator::real_engine::EngineCore::dead_devices
+
+use super::telemetry::TelemetrySample;
+use crate::api::Context;
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Render one sample as Prometheus text exposition format 0.0.4.
+pub fn render(s: &TelemetrySample) -> String {
+    let mut out = String::with_capacity(4096);
+    let mut family = |name: &str, help: &str, kind: &str| {
+        out.push_str("# HELP blasx_");
+        out.push_str(name);
+        out.push(' ');
+        out.push_str(help);
+        out.push_str("\n# TYPE blasx_");
+        out.push_str(name);
+        out.push(' ');
+        out.push_str(kind);
+        out.push('\n');
+    };
+    macro_rules! emit {
+        ($name:expr, $value:expr) => {
+            out.push_str(concat!("blasx_", $name));
+            out.push(' ');
+            out.push_str(&fmt_value($value));
+            out.push('\n');
+        };
+        ($name:expr, $label:expr, $lv:expr, $value:expr) => {
+            out.push_str(concat!("blasx_", $name));
+            out.push_str(concat!("{", $label, "=\""));
+            out.push_str(&$lv.to_string());
+            out.push_str("\"} ");
+            out.push_str(&fmt_value($value));
+            out.push('\n');
+        };
+    }
+
+    family("up", "Whether the resident runtime is booted.", "gauge");
+    emit!("up", 1.0);
+    family("uptime_seconds", "Seconds since the resident runtime booted.", "gauge");
+    emit!("uptime_seconds", s.t_s);
+
+    family("device_up", "1 while the device is alive, 0 once the fault plane killed it.", "gauge");
+    for d in &s.devices {
+        emit!("device_up", "dev", d.dev, if d.dead { 0.0 } else { 1.0 });
+    }
+    family("arena_bytes_in_use", "FastHeap bytes currently allocated on the device arena.", "gauge");
+    for d in &s.devices {
+        emit!("arena_bytes_in_use", "dev", d.dev, d.arena_in_use as f64);
+    }
+    family("arena_high_water_bytes", "FastHeap lifetime allocation high watermark.", "gauge");
+    for d in &s.devices {
+        emit!("arena_high_water_bytes", "dev", d.dev, d.arena_high_water as f64);
+    }
+    family("cache_resident_tiles", "Tiles resident in the device's ALRU cache.", "gauge");
+    for d in &s.devices {
+        emit!("cache_resident_tiles", "dev", d.dev, d.cache_resident as f64);
+    }
+    family(
+        "cache_hit_rate",
+        "ALRU hit rate over the last sampling window (0 when idle).",
+        "gauge",
+    );
+    for d in &s.devices {
+        emit!("cache_hit_rate", "dev", d.dev, d.hit_rate);
+    }
+    family("cache_hits_total", "Cumulative ALRU tile hits.", "counter");
+    for d in &s.devices {
+        emit!("cache_hits_total", "dev", d.dev, d.cache_hits as f64);
+    }
+    family("cache_misses_total", "Cumulative ALRU tile misses.", "counter");
+    for d in &s.devices {
+        emit!("cache_misses_total", "dev", d.dev, d.cache_misses as f64);
+    }
+    family("cache_evictions_total", "Cumulative ALRU tile evictions.", "counter");
+    for d in &s.devices {
+        emit!("cache_evictions_total", "dev", d.dev, d.cache_evictions as f64);
+    }
+    family(
+        "worker_busy_fraction",
+        "Fraction of the last sampling window the device worker spent inside rounds.",
+        "gauge",
+    );
+    for d in &s.devices {
+        emit!("worker_busy_fraction", "dev", d.dev, d.busy_fraction);
+    }
+    family("worker_rounds_total", "Cumulative scheduler rounds executed by the worker.", "counter");
+    for d in &s.devices {
+        emit!("worker_rounds_total", "dev", d.dev, d.rounds as f64);
+    }
+
+    family("queue_depth", "Jobs occupying admission-table slots.", "gauge");
+    emit!("queue_depth", s.queue_depth as f64);
+    family("jobs_runnable", "Admitted jobs with no unmet dependency edges.", "gauge");
+    emit!("jobs_runnable", s.runnable as f64);
+    family("jobs_blocked", "Admitted jobs waiting on dependency edges.", "gauge");
+    emit!("jobs_blocked", s.blocked as f64);
+    family("jobs_in_flight", "Jobs admitted and not yet retired.", "gauge");
+    emit!("jobs_in_flight", s.in_flight as f64);
+    family("jobs_admitted_total", "Jobs admitted since boot.", "counter");
+    emit!("jobs_admitted_total", s.admitted as f64);
+    family("jobs_retired_total", "Jobs retired since boot.", "counter");
+    emit!("jobs_retired_total", s.retired as f64);
+    family("jobs_failed_total", "Jobs retired with a failure since boot.", "counter");
+    emit!("jobs_failed_total", s.failed as f64);
+    family(
+        "jobs_rejected_total",
+        "Admissions refused with backpressure (capacity or tenant quota).",
+        "counter",
+    );
+    emit!("jobs_rejected_total", s.rejected as f64);
+
+    family("tenant_inflight", "Live jobs per submitting tenant.", "gauge");
+    for &(tenant, n) in &s.per_tenant {
+        emit!("tenant_inflight", "tenant", tenant, n as f64);
+    }
+
+    family("dispatch_shapes", "Shape buckets tracked by the adaptive dispatcher.", "gauge");
+    emit!("dispatch_shapes", s.dispatch_shapes as f64);
+    family(
+        "dispatch_observations_total",
+        "Timing observations folded into the dispatcher's online EWMAs.",
+        "counter",
+    );
+    emit!("dispatch_observations_total", s.dispatch_observations as f64);
+    out
+}
+
+/// The scrape body of a context whose runtime has not booted: the
+/// liveness gauge alone, so a scraper sees a valid exposition instead
+/// of an error.
+pub fn render_unbooted() -> String {
+    "# HELP blasx_up Whether the resident runtime is booted.\n# TYPE blasx_up gauge\nblasx_up 0\n"
+        .to_string()
+}
+
+/// Prometheus floats: integral values print without a fraction (what
+/// every exporter emits for counters); non-integral keep full
+/// precision.
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// One parsed exposition line: `(family, labels, value)`. Used by
+/// `blasx top` and the tests; the CI checker re-implements this in
+/// Python on the scrape side.
+pub fn parse(text: &str) -> Vec<(String, Vec<(String, String)>, f64)> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name_part, value_part) = match line.rsplit_once(' ') {
+            Some(p) => p,
+            None => continue,
+        };
+        let Ok(value) = value_part.parse::<f64>() else { continue };
+        let (name, labels) = match name_part.split_once('{') {
+            None => (name_part.to_string(), Vec::new()),
+            Some((n, rest)) => {
+                let body = rest.trim_end_matches('}');
+                let labels = body
+                    .split(',')
+                    .filter_map(|kv| {
+                        let (k, v) = kv.split_once('=')?;
+                        Some((k.trim().to_string(), v.trim().trim_matches('"').to_string()))
+                    })
+                    .collect();
+                (n.to_string(), labels)
+            }
+        };
+        out.push((name, labels, value));
+    }
+    out
+}
+
+/// The stdlib scrape endpoint (see module docs). Stop + join via
+/// [`TelemetryServer::stop`] (also runs on drop).
+pub struct TelemetryServer {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    addr: std::net::SocketAddr,
+}
+
+impl TelemetryServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9464`; port 0 picks a free one)
+    /// and serve `/metrics` + `/healthz` for `ctx` until stopped.
+    pub fn start(addr: &str, ctx: Context) -> std::io::Result<TelemetryServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("blasx-telemetry-http".into())
+            .spawn(move || serve_loop(listener, ctx, stop2))
+            .expect("spawn telemetry http thread");
+        Ok(TelemetryServer { stop, handle: Some(handle), addr: local })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the server thread.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TelemetryServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_loop(listener: TcpListener, ctx: Context, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // One request per connection, handled inline: scrapers
+                // are few and the body is tiny, so a thread pool would
+                // be machinery without a workload.
+                let _ = handle_conn(stream, &ctx);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+fn handle_conn(mut stream: std::net::TcpStream, ctx: &Context) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_millis(500)))?;
+    let mut buf = [0u8; 1024];
+    let n = stream.read(&mut buf)?;
+    let req = String::from_utf8_lossy(&buf[..n]);
+    let path = req.split_whitespace().nth(1).unwrap_or("/");
+    let (status, ctype, body) = match path {
+        p if p.starts_with("/metrics") => (
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            ctx.render_prometheus(),
+        ),
+        p if p.starts_with("/healthz") => {
+            let (healthy, dead) = ctx.health();
+            if healthy {
+                ("200 OK", "text/plain; charset=utf-8", "ok\n".to_string())
+            } else {
+                (
+                    "503 Service Unavailable",
+                    "text/plain; charset=utf-8",
+                    format!(
+                        "degraded: dead devices {}\n",
+                        dead.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")
+                    ),
+                )
+            }
+        }
+        _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string()),
+    };
+    let resp = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::telemetry::DevGauges;
+
+    fn sample() -> TelemetrySample {
+        let mut s = TelemetrySample { t_s: 12.5, ..Default::default() };
+        s.devices.push(DevGauges {
+            dev: 0,
+            arena_in_use: 1024,
+            arena_high_water: 4096,
+            cache_resident: 7,
+            cache_hits: 30,
+            cache_misses: 10,
+            hit_rate: 0.75,
+            busy_fraction: 0.5,
+            rounds: 42,
+            ..Default::default()
+        });
+        s.devices.push(DevGauges { dev: 1, dead: true, ..Default::default() });
+        s.queue_depth = 3;
+        s.runnable = 2;
+        s.blocked = 1;
+        s.in_flight = 3;
+        s.admitted = 10;
+        s.retired = 7;
+        s.rejected = 1;
+        s.per_tenant = vec![(1, 2), (2, 1)];
+        s
+    }
+
+    #[test]
+    fn render_emits_every_required_family() {
+        let text = render(&sample());
+        for family in [
+            "blasx_up",
+            "blasx_arena_bytes_in_use",
+            "blasx_cache_hit_rate",
+            "blasx_queue_depth",
+            "blasx_tenant_inflight",
+            "blasx_device_up",
+            "blasx_jobs_rejected_total",
+            "blasx_worker_busy_fraction",
+        ] {
+            assert!(text.contains(&format!("# TYPE {family} ")), "missing family {family}");
+        }
+        assert!(text.contains("blasx_device_up{dev=\"1\"} 0"), "dead device renders 0");
+        assert!(text.contains("blasx_cache_hit_rate{dev=\"0\"} 0.75"));
+        assert!(text.contains("blasx_tenant_inflight{tenant=\"2\"} 1"));
+    }
+
+    #[test]
+    fn parse_roundtrips_render() {
+        let text = render(&sample());
+        let parsed = parse(&text);
+        let find = |name: &str, label: Option<(&str, &str)>| -> f64 {
+            parsed
+                .iter()
+                .find(|(n, ls, _)| {
+                    n == name
+                        && label.map_or(true, |(k, v)| {
+                            ls.iter().any(|(lk, lv)| lk == k && lv == v)
+                        })
+                })
+                .unwrap_or_else(|| panic!("{name} not parsed"))
+                .2
+        };
+        assert_eq!(find("blasx_up", None), 1.0);
+        assert_eq!(find("blasx_queue_depth", None), 3.0);
+        assert_eq!(find("blasx_arena_bytes_in_use", Some(("dev", "0"))), 1024.0);
+        assert_eq!(find("blasx_device_up", Some(("dev", "1"))), 0.0);
+        assert_eq!(find("blasx_cache_hit_rate", Some(("dev", "0"))), 0.75);
+    }
+
+    #[test]
+    fn unbooted_body_is_valid_exposition() {
+        let parsed = parse(&render_unbooted());
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0].0, "blasx_up");
+        assert_eq!(parsed[0].2, 0.0);
+    }
+}

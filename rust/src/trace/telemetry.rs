@@ -1,0 +1,300 @@
+//! Live telemetry plane: periodically sampled runtime gauges.
+//!
+//! PR 6's metrics are pull-based post-mortems — you read a snapshot
+//! after a call returns. This module adds the *live* half: a
+//! low-priority sampler thread (owned by the resident `Runtime`) that
+//! every `BLASX_TELEMETRY_MS` milliseconds (default 100 when enabled;
+//! unset or `0` = **off**, the default) snapshots cheap gauges into a
+//! fixed-capacity ring:
+//!
+//! - per-device arena bytes in use / high watermark (FastHeap stats)
+//! - ALRU occupancy and a *windowed* hit rate (delta between
+//!   consecutive samples, not lifetime average)
+//! - admission-table depth, runnable/blocked job counts
+//! - per-tenant in-flight and global backpressure counters
+//! - worker busy fraction and rounds
+//! - dispatcher online-EWMA state (shapes tracked / observations)
+//!
+//! ## Zero-cost-when-off contract
+//!
+//! When the sampler is off (the default) **no thread is spawned and no
+//! allocation happens** — `Telemetry::new` with `interval_ms == 0`
+//! builds empty vectors (capacity 0) and `Runtime::boot` skips the
+//! spawn entirely. `rust/tests/telemetry.rs` pins this with the
+//! counting allocator. When on, each sample allocates a few small
+//! `Vec`s; the ring is bounded at [`TELEMETRY_RING`] samples so a
+//! long-running serve holds constant memory.
+//!
+//! The *gathering* of a sample lives in `runtime/service.rs`
+//! (`Runtime::telemetry_now`) because it needs the table / caches /
+//! metrics locks; this module owns the data shape, the ring, and the
+//! sampler lifecycle primitives.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Samples retained in the history ring (60 s at the default 100 ms).
+pub const TELEMETRY_RING: usize = 600;
+
+/// Default sampling interval when telemetry is enabled without an
+/// explicit period.
+pub const DEFAULT_INTERVAL_MS: u64 = 100;
+
+/// Per-device gauge block within one sample.
+#[derive(Clone, Debug, Default)]
+pub struct DevGauges {
+    pub dev: usize,
+    /// Device is dead per the fault plane (PR 7 ledger).
+    pub dead: bool,
+    /// FastHeap bytes currently allocated.
+    pub arena_in_use: usize,
+    /// FastHeap lifetime high watermark.
+    pub arena_high_water: usize,
+    /// Tiles resident in the ALRU.
+    pub cache_resident: usize,
+    /// Cumulative cache counters (for rate computation downstream).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    /// Hit rate over the window since the previous sample
+    /// (`NaN`-free: 0.0 when the window saw no lookups).
+    pub hit_rate: f64,
+    /// Cumulative busy nanoseconds for this device's worker.
+    pub busy_nanos: u64,
+    /// Busy fraction over the window since the previous sample.
+    pub busy_fraction: f64,
+    /// Cumulative scheduling rounds executed by this worker.
+    pub rounds: u64,
+}
+
+/// One telemetry sample: everything the exporter needs, gathered at a
+/// single instant.
+#[derive(Clone, Debug, Default)]
+pub struct TelemetrySample {
+    /// Seconds since runtime boot.
+    pub t_s: f64,
+    pub devices: Vec<DevGauges>,
+    /// Jobs occupying admission-table slots (live, any state).
+    pub queue_depth: usize,
+    /// Jobs with no unmet dependency edges.
+    pub runnable: usize,
+    /// Jobs blocked on dependency edges.
+    pub blocked: usize,
+    /// Jobs admitted and not yet retired.
+    pub in_flight: usize,
+    /// Cumulative admission counters.
+    pub admitted: u64,
+    pub retired: u64,
+    pub failed: u64,
+    /// Backpressure rejections (bounded admission, tenant quota).
+    pub rejected: u64,
+    /// `(tenant, in_flight)` for tenants with live jobs.
+    pub per_tenant: Vec<(u32, usize)>,
+    /// Dispatcher online state: `(shape buckets tracked, observations)`
+    /// — `(0, 0)` when no adaptive dispatcher is attached.
+    pub dispatch_shapes: usize,
+    pub dispatch_observations: u64,
+}
+
+/// Sampler state: history ring plus the stop latch the background
+/// thread parks on (condvar so `Drop for Runtime` can wake it
+/// immediately instead of waiting out the interval).
+pub struct Telemetry {
+    interval_ms: u64,
+    ring: Mutex<VecDeque<TelemetrySample>>,
+    stop: Mutex<bool>,
+    stop_cv: Condvar,
+}
+
+impl Telemetry {
+    /// `interval_ms == 0` builds a disabled, allocation-free shell
+    /// (`enabled()` false, ring capacity 0).
+    pub fn new(interval_ms: u64) -> Telemetry {
+        Telemetry {
+            interval_ms,
+            ring: Mutex::new(VecDeque::with_capacity(if interval_ms == 0 {
+                0
+            } else {
+                TELEMETRY_RING
+            })),
+            stop: Mutex::new(false),
+            stop_cv: Condvar::new(),
+        }
+    }
+
+    /// Resolve the sampling interval: a programmatic override wins,
+    /// else `BLASX_TELEMETRY_MS` (unset or `0` = off; set but
+    /// unparseable = the default interval, honoring intent to enable).
+    pub fn interval_from_env(override_ms: Option<u64>) -> u64 {
+        if let Some(ms) = override_ms {
+            return ms;
+        }
+        match std::env::var("BLASX_TELEMETRY_MS") {
+            Err(_) => 0,
+            Ok(s) => match s.trim().parse::<u64>() {
+                Ok(ms) => ms,
+                Err(_) => DEFAULT_INTERVAL_MS,
+            },
+        }
+    }
+
+    /// Is the sampler configured to run?
+    pub fn enabled(&self) -> bool {
+        self.interval_ms > 0
+    }
+
+    pub fn interval_ms(&self) -> u64 {
+        self.interval_ms
+    }
+
+    /// Append a sample, evicting the oldest once the ring is full.
+    pub fn push(&self, s: TelemetrySample) {
+        let mut ring = self.ring.lock().unwrap_or_else(|p| p.into_inner());
+        if ring.len() >= TELEMETRY_RING {
+            ring.pop_front();
+        }
+        ring.push_back(s);
+    }
+
+    /// Samples retained (oldest first).
+    pub fn history(&self) -> Vec<TelemetrySample> {
+        self.ring.lock().unwrap_or_else(|p| p.into_inner()).iter().cloned().collect()
+    }
+
+    /// Most recent sample, if any.
+    pub fn latest(&self) -> Option<TelemetrySample> {
+        self.ring.lock().unwrap_or_else(|p| p.into_inner()).back().cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Park the sampler thread for one interval; returns `false` when
+    /// the runtime asked it to stop (wake is immediate via condvar).
+    pub fn park_interval(&self) -> bool {
+        let stop = self.stop.lock().unwrap_or_else(|p| p.into_inner());
+        let (stop, _timeout) = self
+            .stop_cv
+            .wait_timeout_while(stop, Duration::from_millis(self.interval_ms.max(1)), |s| !*s)
+            .unwrap_or_else(|p| p.into_inner());
+        !*stop
+    }
+
+    /// Tell the sampler thread to exit and wake it now.
+    pub fn request_stop(&self) {
+        *self.stop.lock().unwrap_or_else(|p| p.into_inner()) = true;
+        self.stop_cv.notify_all();
+    }
+}
+
+/// Fill the windowed rates on `cur` from the previous sample (if any).
+/// Windowed hit rate and busy fraction come from deltas between
+/// consecutive cumulative counters — a lifetime average hides a cold
+/// cache turning hot (or a hot one being invalidated).
+pub fn fill_windowed_rates(cur: &mut TelemetrySample, prev: Option<&TelemetrySample>) {
+    let Some(prev) = prev else {
+        for d in &mut cur.devices {
+            let total = d.cache_hits + d.cache_misses;
+            d.hit_rate = if total == 0 { 0.0 } else { d.cache_hits as f64 / total as f64 };
+        }
+        return;
+    };
+    let dt_s = (cur.t_s - prev.t_s).max(0.0);
+    for d in &mut cur.devices {
+        let p = prev.devices.iter().find(|p| p.dev == d.dev);
+        let (ph, pm, pb) = p.map_or((0, 0, 0), |p| (p.cache_hits, p.cache_misses, p.busy_nanos));
+        let dh = d.cache_hits.saturating_sub(ph);
+        let dm = d.cache_misses.saturating_sub(pm);
+        let lookups = dh + dm;
+        d.hit_rate = if lookups == 0 { 0.0 } else { dh as f64 / lookups as f64 };
+        let dbusy = d.busy_nanos.saturating_sub(pb) as f64 / 1e9;
+        d.busy_fraction = if dt_s > 0.0 { (dbusy / dt_s).clamp(0.0, 1.0) } else { 0.0 };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_shell_holds_no_capacity() {
+        let t = Telemetry::new(0);
+        assert!(!t.enabled());
+        assert!(t.is_empty());
+        assert_eq!(t.ring.lock().unwrap().capacity(), 0);
+    }
+
+    #[test]
+    fn ring_is_bounded() {
+        let t = Telemetry::new(5);
+        for i in 0..(TELEMETRY_RING + 50) {
+            t.push(TelemetrySample { t_s: i as f64, ..Default::default() });
+        }
+        assert_eq!(t.len(), TELEMETRY_RING);
+        let hist = t.history();
+        // Oldest samples were evicted.
+        assert_eq!(hist[0].t_s, 50.0);
+        assert_eq!(t.latest().unwrap().t_s, (TELEMETRY_RING + 49) as f64);
+    }
+
+    #[test]
+    fn windowed_rates_use_deltas() {
+        let mut prev = TelemetrySample { t_s: 1.0, ..Default::default() };
+        prev.devices.push(DevGauges {
+            dev: 0,
+            cache_hits: 100,
+            cache_misses: 100,
+            busy_nanos: 0,
+            ..Default::default()
+        });
+        let mut cur = TelemetrySample { t_s: 2.0, ..Default::default() };
+        cur.devices.push(DevGauges {
+            dev: 0,
+            cache_hits: 200, // +100 hits
+            cache_misses: 100, // +0 misses
+            busy_nanos: 500_000_000, // 0.5 s busy over a 1 s window
+            ..Default::default()
+        });
+        fill_windowed_rates(&mut cur, Some(&prev));
+        assert_eq!(cur.devices[0].hit_rate, 1.0, "window was all hits");
+        assert!((cur.devices[0].busy_fraction - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn first_sample_falls_back_to_lifetime_rate() {
+        let mut cur = TelemetrySample { t_s: 1.0, ..Default::default() };
+        cur.devices.push(DevGauges {
+            dev: 0,
+            cache_hits: 3,
+            cache_misses: 1,
+            ..Default::default()
+        });
+        fill_windowed_rates(&mut cur, None);
+        assert!((cur.devices[0].hit_rate - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn park_returns_false_after_stop() {
+        let t = std::sync::Arc::new(Telemetry::new(10_000));
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || t2.park_interval());
+        std::thread::sleep(Duration::from_millis(20));
+        t.request_stop();
+        assert!(!h.join().unwrap(), "stop must wake the parked sampler");
+    }
+
+    #[test]
+    fn env_resolution_precedence() {
+        // Programmatic override wins regardless of env.
+        assert_eq!(Telemetry::interval_from_env(Some(25)), 25);
+        assert_eq!(Telemetry::interval_from_env(Some(0)), 0);
+        // NOTE: env-var cases are covered in tests/telemetry.rs where
+        // the process env can be controlled before runtime boot.
+    }
+}

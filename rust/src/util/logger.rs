@@ -2,10 +2,21 @@
 //! unreachable offline, and nothing in the crate needs more than a
 //! leveled eprintln).
 //!
-//! Controlled by `BLASX_LOG` (error|warn|info|debug|trace, default warn).
+//! Controlled by `BLASX_LOG` (off|error|warn|info|debug|trace, default
+//! warn). Every diagnostic the library emits goes through here — the
+//! xerbla path, the fault plane, serve-mode warnings — so one
+//! environment knob silences or amplifies all of them consistently.
+//!
+//! Hot paths (a fault schedule hammering retries, a backpressured
+//! admission loop) use [`log_limited`]: per-site rate limiting caps
+//! emission at [`MAX_PER_WINDOW`] lines per site per second and then
+//! reports how many were suppressed when the window rolls, so a
+//! misbehaving fleet cannot turn stderr into the bottleneck.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::Once;
+use std::sync::{Mutex, Once, OnceLock};
+use std::time::{Duration, Instant};
 
 /// Log severity, most to least severe.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -29,26 +40,48 @@ impl Level {
     }
 }
 
-/// Current max level as its numeric value (Warn before init()).
+/// Lines a single site may emit per [`RATE_WINDOW`] before
+/// [`log_limited`] starts suppressing.
+pub const MAX_PER_WINDOW: u32 = 8;
+/// Rate-limit window.
+pub const RATE_WINDOW: Duration = Duration::from_secs(1);
+
+/// Current max level as its numeric value (0 = off; Warn before init).
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
 static INIT: Once = Once::new();
 
+/// Per-site rate-limit ledger, keyed by the `target` string.
+struct Site {
+    window_start: Instant,
+    emitted: u32,
+    suppressed: u64,
+}
+
+fn sites() -> &'static Mutex<HashMap<String, Site>> {
+    static SITES: OnceLock<Mutex<HashMap<String, Site>>> = OnceLock::new();
+    SITES.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
 /// Install the logger (idempotent). Reads `BLASX_LOG` for the level.
+/// Called lazily by every emission path, so explicit init is optional.
 pub fn init() {
     INIT.call_once(|| {
         let level = match std::env::var("BLASX_LOG").as_deref() {
-            Ok("error") => Level::Error,
-            Ok("info") => Level::Info,
-            Ok("debug") => Level::Debug,
-            Ok("trace") => Level::Trace,
-            _ => Level::Warn,
+            Ok("off") | Ok("none") | Ok("0") => 0,
+            Ok("error") => Level::Error as u8,
+            Ok("warn") => Level::Warn as u8,
+            Ok("info") => Level::Info as u8,
+            Ok("debug") => Level::Debug as u8,
+            Ok("trace") => Level::Trace as u8,
+            _ => Level::Warn as u8,
         };
-        LEVEL.store(level as u8, Ordering::Relaxed);
+        LEVEL.store(level, Ordering::Relaxed);
     });
 }
 
 /// Would a message at `level` be emitted?
 pub fn enabled(level: Level) -> bool {
+    init();
     (level as u8) <= LEVEL.load(Ordering::Relaxed)
 }
 
@@ -59,9 +92,60 @@ pub fn log(level: Level, target: &str, msg: &str) {
     }
 }
 
+/// [`log`] with per-site rate limiting: at most [`MAX_PER_WINDOW`]
+/// lines per `target` per [`RATE_WINDOW`]; overflow is counted and
+/// reported in one summary line when the window rolls. Returns whether
+/// the message itself was emitted (tests).
+pub fn log_limited(level: Level, target: &str, msg: &str) -> bool {
+    if !enabled(level) {
+        return false;
+    }
+    let mut sites = sites().lock().unwrap_or_else(|e| e.into_inner());
+    let now = Instant::now();
+    let site = sites.entry(target.to_string()).or_insert(Site {
+        window_start: now,
+        emitted: 0,
+        suppressed: 0,
+    });
+    if now.duration_since(site.window_start) >= RATE_WINDOW {
+        if site.suppressed > 0 {
+            eprintln!(
+                "[blasx {:5} {}] ... {} similar message(s) suppressed in the last {:?}",
+                level.tag(),
+                target,
+                site.suppressed,
+                RATE_WINDOW,
+            );
+        }
+        site.window_start = now;
+        site.emitted = 0;
+        site.suppressed = 0;
+    }
+    if site.emitted < MAX_PER_WINDOW {
+        site.emitted += 1;
+        drop(sites);
+        eprintln!("[blasx {:5} {}] {}", level.tag(), target, msg);
+        true
+    } else {
+        site.suppressed += 1;
+        false
+    }
+}
+
 /// Convenience: warn-level message.
 pub fn warn(target: &str, msg: &str) {
     log(Level::Warn, target, msg);
+}
+
+/// Convenience: error-level message (the xerbla path).
+pub fn error(target: &str, msg: &str) {
+    log(Level::Error, target, msg);
+}
+
+/// Convenience: rate-limited warn (fault-plane and backpressure
+/// hot paths).
+pub fn warn_limited(target: &str, msg: &str) -> bool {
+    log_limited(Level::Warn, target, msg)
 }
 
 #[cfg(test)]
@@ -74,5 +158,31 @@ mod tests {
         init();
         warn("logger", "logger smoke test");
         assert!(enabled(Level::Error));
+    }
+
+    #[test]
+    fn rate_limit_caps_a_hot_site() {
+        // The first MAX_PER_WINDOW lines of a burst emit; the rest of
+        // the window suppresses. Use a dedicated target so parallel
+        // tests can't share the ledger entry.
+        let target = "logger-test-burst";
+        let mut emitted = 0;
+        for i in 0..(MAX_PER_WINDOW * 3) {
+            if log_limited(Level::Error, target, &format!("burst {i}")) {
+                emitted += 1;
+            }
+        }
+        assert_eq!(emitted, MAX_PER_WINDOW, "burst must be capped per window");
+    }
+
+    #[test]
+    fn distinct_sites_do_not_share_budgets() {
+        assert!(log_limited(Level::Error, "logger-test-site-a", "x"));
+        for _ in 0..MAX_PER_WINDOW {
+            log_limited(Level::Error, "logger-test-site-b", "y");
+        }
+        // Site B exhausted its budget; site A still has its own.
+        assert!(!log_limited(Level::Error, "logger-test-site-b", "y"));
+        assert!(log_limited(Level::Error, "logger-test-site-a", "x"));
     }
 }

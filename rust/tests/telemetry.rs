@@ -1,0 +1,364 @@
+//! Telemetry-plane and flight-recorder contract tests: the sampler's
+//! zero-cost-when-off guarantee (counting allocator), gauge
+//! monotonicity under multi-client load, bounded flight-ring memory,
+//! incident auto-dump on a seeded device kill, the
+//! `/healthz`-vs-metrics single-source-of-truth regression, and an
+//! end-to-end scrape of the stdlib HTTP endpoint.
+
+use blasx::api::types::{Diag, Side, Trans, Uplo};
+use blasx::api::{self, Context};
+use blasx::fault::FaultPlan;
+use blasx::trace::prometheus;
+use blasx::trace::{FlightRecorder, TelemetryServer, FLIGHT_RING};
+use blasx::util::json::{self, Json};
+use blasx::util::prng::Prng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::time::Duration;
+
+// ---- counting allocator (thread-local, drop-free TLS) --------------
+
+thread_local! {
+    // Cell<u64> has no destructor, so the TLS slot is never torn down
+    // and counting from inside the allocator can never re-enter a
+    // destroyed key.
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: delegates every operation to `System`; the only addition is
+// a thread-local counter bump, which does not allocate.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(p, l, new)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn thread_allocs() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+// ---- helpers -------------------------------------------------------
+
+const DEVICES: usize = 2;
+
+fn rand(p: &mut Prng, n: usize) -> Vec<f64> {
+    let mut v = vec![0.0; n];
+    p.fill_f64(&mut v, -1.0, 1.0);
+    v
+}
+
+fn upper_tri(p: &mut Prng, n: usize) -> Vec<f64> {
+    let mut a = rand(p, n * n);
+    for x in a.iter_mut() {
+        *x *= 0.5 / (n as f64).sqrt();
+    }
+    for i in 0..n {
+        a[i * n + i] = 2.0;
+    }
+    a
+}
+
+/// One client's chain: dgemm then an in-place dtrsm on its output,
+/// twice — enough tile traffic on both devices to trip any `op`-indexed
+/// fault trigger and populate every gauge family.
+fn chain_workload(ctx: &Context, seed: u64) {
+    let (m, n, k) = (96, 64, 48);
+    let mut p = Prng::new(seed);
+    let a = rand(&mut p, m * k);
+    let b = rand(&mut p, k * n);
+    let tri = upper_tri(&mut p, m);
+    let mut c = vec![0.0; m * n];
+    for _ in 0..2 {
+        api::dgemm(ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m)
+            .expect("dgemm");
+        api::trsm(
+            ctx, Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, m, n, 1.0, &tri, m, &mut c, m,
+        )
+        .expect("trsm");
+    }
+}
+
+/// A context whose fault plan kills device 1 mid-run, driven by a
+/// 4-client load so the kill reliably fires. Returns after the load
+/// completed (recovery makes the jobs succeed regardless).
+fn killed_ctx() -> Context {
+    let plan = FaultPlan::parse("kill@dev1:op12").expect("plan parses");
+    let ctx = Context::new(DEVICES).with_arena(8 << 20).with_tile(32).with_fault_plan(Some(plan));
+    std::thread::scope(|scope| {
+        for seed in 0..4u64 {
+            let ctx = ctx.clone();
+            scope.spawn(move || chain_workload(&ctx, 7100 + seed));
+        }
+    });
+    ctx
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("blasx_telem_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Minimal HTTP/1.0 GET; returns (status line, body).
+fn http_get(addr: std::net::SocketAddr, path: &str) -> (String, String) {
+    let mut stream = std::net::TcpStream::connect(addr).expect("connect scrape endpoint");
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    write!(stream, "GET {path} HTTP/1.0\r\nHost: blasx\r\n\r\n").expect("send request");
+    let mut text = String::new();
+    stream.read_to_string(&mut text).expect("read response");
+    let status = text.lines().next().unwrap_or("").to_string();
+    let body = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+fn metric(parsed: &[(String, Vec<(String, String)>, f64)], name: &str, label: Option<(&str, &str)>) -> Option<f64> {
+    parsed
+        .iter()
+        .find(|(n, ls, _)| {
+            n == name && label.map_or(true, |(k, v)| ls.iter().any(|(lk, lv)| lk == k && lv == v))
+        })
+        .map(|e| e.2)
+}
+
+// ---- tests ---------------------------------------------------------
+
+/// `BLASX_TELEMETRY_MS` unset (the default) means no sampler thread
+/// and no sample ring — warm calls pay nothing for the telemetry
+/// plane. A cold context still renders a valid `blasx_up 0` scrape
+/// without booting anything.
+#[test]
+fn sampler_off_by_default_no_thread_no_history() {
+    let cold = Context::new(DEVICES).with_tile(64).with_arena(16 << 20);
+    let text = cold.render_prometheus();
+    let parsed = prometheus::parse(&text);
+    assert_eq!(metric(&parsed, "blasx_up", None), Some(0.0), "cold context reports down");
+    assert!(!cold.sampler_running());
+
+    // Boot with a real call: still no sampler, still no history.
+    chain_workload(&cold, 11);
+    assert!(!cold.sampler_running(), "no BLASX_TELEMETRY_MS => no sampler thread");
+    assert!(cold.telemetry_history().is_empty(), "no sampler => empty ring");
+
+    // The booted scrape works anyway: gathered fresh at scrape time.
+    let parsed = prometheus::parse(&cold.render_prometheus());
+    assert_eq!(metric(&parsed, "blasx_up", None), Some(1.0));
+    assert!(metric(&parsed, "blasx_jobs_retired_total", None).unwrap_or(0.0) >= 4.0);
+}
+
+/// The always-on flight recorder must never allocate on the record
+/// path — its rings are preallocated at construction. Measured, not
+/// asserted from code reading: the whole binary runs under the
+/// counting allocator.
+#[test]
+fn flight_recording_never_allocates() {
+    let fr = FlightRecorder::new(DEVICES);
+    let _ = thread_allocs(); // warm the TLS slot outside the window
+    let before = thread_allocs();
+    for i in 0..10_000u64 {
+        fr.record(Some((i % DEVICES as u64) as usize), "retry", i, 1, 0.5);
+        fr.record(None, "admit", i, 2, 1.0);
+    }
+    assert_eq!(thread_allocs(), before, "flight record path allocated");
+    assert_eq!(fr.total_events(), 20_000);
+    assert!(fr.retained() <= (DEVICES + 1) * FLIGHT_RING, "rings exceeded their bound");
+}
+
+/// With the sampler on, the ring fills with time-ordered samples whose
+/// counters are monotone and whose rates stay in range, under a
+/// 4-client concurrent load.
+#[test]
+fn sampler_gauges_are_monotone_under_load() {
+    let ctx = Context::new(DEVICES)
+        .with_tile(64)
+        .with_arena(32 << 20)
+        .with_telemetry_ms(Some(5));
+    std::thread::scope(|scope| {
+        for seed in 0..4u64 {
+            let ctx = ctx.clone();
+            scope.spawn(move || chain_workload(&ctx, 400 + seed));
+        }
+    });
+    assert!(ctx.sampler_running(), "with_telemetry_ms must start the sampler");
+    // Let the sampler observe the post-load steady state too.
+    std::thread::sleep(Duration::from_millis(40));
+    let history = ctx.telemetry_history();
+    assert!(history.len() >= 2, "5 ms cadence must have produced samples");
+
+    for w in history.windows(2) {
+        assert!(w[1].t_s >= w[0].t_s, "samples must be time-ordered");
+        assert!(w[1].admitted >= w[0].admitted, "admitted counter regressed");
+        assert!(w[1].retired >= w[0].retired, "retired counter regressed");
+        for (d0, d1) in w[0].devices.iter().zip(&w[1].devices) {
+            assert_eq!(d0.dev, d1.dev);
+            assert!(d1.cache_hits >= d0.cache_hits, "cache hits regressed");
+            assert!(d1.rounds >= d0.rounds, "worker rounds regressed");
+            assert!(d1.arena_high_water >= d0.arena_high_water, "high water regressed");
+        }
+    }
+    let last = history.last().unwrap();
+    assert_eq!(last.devices.len(), DEVICES);
+    // 4 clients x 2 iterations x (dgemm + trsm) = 16 jobs.
+    assert!(last.retired >= 16, "final sample missing retired jobs: {}", last.retired);
+    for d in &last.devices {
+        assert!((0.0..=1.0).contains(&d.hit_rate), "hit rate out of range");
+        assert!((0.0..=1.0).contains(&d.busy_fraction), "busy fraction out of range");
+        assert!(d.arena_high_water >= d.arena_in_use);
+    }
+}
+
+/// A healthy run leaves an admit/retire trail in the flight rings; a
+/// manual dump writes a parseable, bounded incident report.
+#[test]
+fn flight_trail_is_bounded_and_dumpable() {
+    let ctx = Context::new(DEVICES).with_tile(64).with_arena(16 << 20);
+    chain_workload(&ctx, 55);
+    let dir = tmp_dir("manual");
+    let path = ctx
+        .flight_dump(&dir)
+        .expect("booted runtime has a flight recorder")
+        .expect("dump writes");
+    let report = json::parse(&std::fs::read_to_string(&path).unwrap()).expect("report parses");
+    assert_eq!(report.get("schema").and_then(Json::as_str), Some("blasx-incident-v1"));
+    assert_eq!(report.get("reason").and_then(Json::as_str), Some("manual"));
+    assert_eq!(
+        report.get("dead_devices").and_then(Json::as_arr).map(<[Json]>::len),
+        Some(0),
+        "healthy run must not name dead devices"
+    );
+    let events = report.get("events").and_then(Json::as_arr).expect("events array");
+    assert!(!events.is_empty(), "admissions/retirements must leave a trail");
+    assert!(events.len() <= (DEVICES + 1) * FLIGHT_RING, "retained trail exceeds ring bound");
+    let counts = report.get("event_counts").expect("event_counts");
+    assert!(counts.get("admit").and_then(Json::as_usize).unwrap_or(0) > 0);
+    assert!(counts.get("retire").and_then(Json::as_usize).unwrap_or(0) > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The acceptance scenario: a seeded kill schedule plus an armed
+/// flight directory auto-dumps an incident report that parses and
+/// names the dead device — no tracing, no sampler, just the always-on
+/// black box.
+#[test]
+fn kill_schedule_dumps_incident_naming_dead_device() {
+    let dir = tmp_dir("kill");
+    let plan = FaultPlan::parse("kill@dev1:op12").expect("plan parses");
+    let ctx = Context::new(DEVICES).with_arena(8 << 20).with_tile(32).with_fault_plan(Some(plan));
+    ctx.set_flight_dir(Some(dir.clone()));
+    std::thread::scope(|scope| {
+        for seed in 0..4u64 {
+            let ctx = ctx.clone();
+            scope.spawn(move || chain_workload(&ctx, 9300 + seed));
+        }
+    });
+
+    let reports: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .expect("flight dir exists after the kill")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map_or(false, |n| n.contains("device-kill") && !n.contains("trace"))
+        })
+        .collect();
+    assert!(!reports.is_empty(), "device kill must auto-dump an incident report");
+
+    let report =
+        json::parse(&std::fs::read_to_string(&reports[0]).unwrap()).expect("incident parses");
+    assert_eq!(report.get("schema").and_then(Json::as_str), Some("blasx-incident-v1"));
+    assert_eq!(report.get("reason").and_then(Json::as_str), Some("device-kill"));
+    let dead = report.get("dead_devices").and_then(Json::as_arr).expect("dead_devices");
+    assert!(
+        dead.iter().any(|d| d.as_usize() == Some(1)),
+        "incident must name the killed device"
+    );
+    assert!(
+        !report.get("events").and_then(Json::as_arr).unwrap().is_empty(),
+        "incident must carry the ring trail"
+    );
+    // The companion Chrome trace is there and loads.
+    let trace_file = reports[0].to_str().unwrap().replace(".json", ".trace.json");
+    let trace = json::parse(&std::fs::read_to_string(&trace_file).unwrap()).expect("trace parses");
+    assert!(!trace.get("traceEvents").and_then(Json::as_arr).unwrap().is_empty());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Regression: `/healthz`, `snapshot_metrics()` and the Prometheus
+/// rendering must agree on device death, because all three read
+/// `EngineCore::dead_devices()` — one source of truth.
+#[test]
+fn healthz_metrics_and_prometheus_agree_on_death() {
+    let ctx = killed_ctx();
+
+    let (healthy, dead) = ctx.health();
+    assert!(!healthy, "killed device must fail the health check");
+    assert_eq!(dead, vec![1]);
+
+    let m = ctx.snapshot_metrics().expect("metrics snapshot");
+    assert_eq!(m.get("fleet_healthy").and_then(Json::as_bool), Some(false));
+    let devices = m.get("devices").and_then(Json::as_arr).expect("devices array");
+    assert_eq!(devices.len(), DEVICES);
+    for d in devices {
+        let dev = d.get("dev").and_then(Json::as_usize).unwrap();
+        let up = d.get("up").and_then(Json::as_bool).unwrap();
+        assert_eq!(up, dev != 1, "device {dev}: snapshot disagrees with the fault ledger");
+    }
+
+    let parsed = prometheus::parse(&ctx.render_prometheus());
+    assert_eq!(metric(&parsed, "blasx_device_up", Some(("dev", "1"))), Some(0.0));
+    assert_eq!(metric(&parsed, "blasx_device_up", Some(("dev", "0"))), Some(1.0));
+    assert_eq!(metric(&parsed, "blasx_up", None), Some(1.0), "runtime itself is still up");
+}
+
+/// End-to-end scrape: the stdlib HTTP endpoint serves a parseable
+/// /metrics body and a /healthz that flips to 503 (naming the device)
+/// once the fault plane kills one.
+#[test]
+fn telemetry_server_round_trip() {
+    // Healthy context first.
+    let ctx = Context::new(DEVICES).with_tile(64).with_arena(16 << 20);
+    chain_workload(&ctx, 77);
+    let mut server = TelemetryServer::start("127.0.0.1:0", ctx.clone()).expect("bind");
+    let addr = server.addr();
+
+    let (status, body) = http_get(addr, "/metrics");
+    assert!(status.contains("200"), "metrics scrape failed: {status}");
+    let parsed = prometheus::parse(&body);
+    assert_eq!(metric(&parsed, "blasx_up", None), Some(1.0));
+    assert!(metric(&parsed, "blasx_arena_bytes_in_use", Some(("dev", "0"))).is_some());
+    assert!(metric(&parsed, "blasx_queue_depth", None).is_some());
+
+    let (status, body) = http_get(addr, "/healthz");
+    assert!(status.contains("200"), "healthy fleet must 200: {status}");
+    assert_eq!(body.trim(), "ok");
+
+    let (status, _) = http_get(addr, "/nope");
+    assert!(status.contains("404"));
+    server.stop();
+
+    // Now a fleet with a dead device: 503 naming it.
+    let ctx = killed_ctx();
+    let mut server = TelemetryServer::start("127.0.0.1:0", ctx.clone()).expect("bind");
+    let (status, body) = http_get(server.addr(), "/healthz");
+    assert!(status.contains("503"), "dead device must 503: {status}");
+    assert!(body.contains('1'), "health body must name the dead device: {body}");
+    server.stop();
+}

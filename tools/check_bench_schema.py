@@ -17,8 +17,15 @@ snapshot. This gate keeps both machine-consumable:
   reads in the `mixed-tile warm` scenario — the PR-8 property that
   deleting the tile-size purge was sound).
 
+The same gate validates flight-recorder incident reports (schema
+`blasx-incident-v1`, written by the runtime's auto-dump on a device
+kill / deadline reap / worker panic, or by `blasx_flight_dump`):
+
+    python3 tools/check_bench_schema.py --incident incidents/*.json
+
 Usage:
     python3 tools/check_bench_schema.py [BENCH_a.json ...]
+    python3 tools/check_bench_schema.py --incident incident_*.json
 
 With no arguments, checks every BENCH_*.json at the repo root.
 Exits 1 on the first malformed document.
@@ -133,8 +140,69 @@ def check(path):
     print(f"{path}: ok ({bench}, {len(results)} rows)")
 
 
+EVENT_KINDS = {
+    "admit", "reject", "retire", "fault", "migrate",
+    "reap", "panic", "retry", "degrade",
+}
+
+
+def check_incident(path):
+    """Validate one blasx-incident-v1 flight-recorder report."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(path, f"unreadable: {e}")
+    if not isinstance(doc, dict):
+        fail(path, "top level is not an object")
+    if doc.get("schema") != "blasx-incident-v1":
+        fail(path, f"unknown schema: {doc.get('schema')!r}")
+    if not isinstance(doc.get("seq"), int) or doc["seq"] < 0:
+        fail(path, "missing non-negative integer `seq`")
+    if not isinstance(doc.get("reason"), str) or not doc["reason"]:
+        fail(path, "missing string `reason`")
+    if not is_num(doc.get("t_s")) or doc["t_s"] < 0:
+        fail(path, "missing non-negative `t_s`")
+    dead = doc.get("dead_devices")
+    if not isinstance(dead, list) or any(
+        not isinstance(d, int) or d < 0 for d in dead
+    ):
+        fail(path, "`dead_devices` must be a list of device indices")
+    events = doc.get("events")
+    if not isinstance(events, list):
+        fail(path, "missing `events` array")
+    counted = {}
+    for i, e in enumerate(events):
+        if not isinstance(e, dict):
+            fail(path, f"events[{i}] is not an object")
+        if e.get("kind") not in EVENT_KINDS:
+            fail(path, f"events[{i}] has unknown kind {e.get('kind')!r}")
+        for col in ("t_s", "dev", "job", "tenant", "amount"):
+            if not is_num(e.get(col)):
+                fail(path, f"events[{i}].{col} missing or not a number")
+        if e["dev"] < -1:
+            fail(path, f"events[{i}].dev out of range: {e['dev']}")
+        counted[e["kind"]] = counted.get(e["kind"], 0) + 1
+    counts = doc.get("event_counts")
+    if not isinstance(counts, dict):
+        fail(path, "missing `event_counts` object")
+    if counts != counted:
+        fail(path, f"event_counts {counts} disagree with events {counted}")
+    print(
+        f"{path}: incident ok (reason {doc['reason']!r}, "
+        f"{len(events)} events, dead devices {dead})"
+    )
+
+
 def main():
     paths = sys.argv[1:]
+    if paths and paths[0] == "--incident":
+        paths = paths[1:]
+        if not paths:
+            sys.exit("--incident needs at least one report path")
+        for path in paths:
+            check_incident(path)
+        return
     if not paths:
         root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
         paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))

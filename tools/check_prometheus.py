@@ -1,0 +1,157 @@
+#!/usr/bin/env python3
+"""Scrape gate for the live telemetry endpoint (stdlib only).
+
+Polls `http://ADDR/metrics` until the endpoint answers (the serve run
+may still be booting), then validates the body as Prometheus text
+exposition format 0.0.4:
+
+- every sample line parses as `name[{labels}] value` with a float value;
+- every sampled family is announced by `# HELP` and `# TYPE` lines;
+- the required families for a live blasx runtime are present with at
+  least one sample: blasx_up (== 1), blasx_device_up,
+  blasx_arena_bytes_in_use, blasx_cache_hit_rate, blasx_queue_depth,
+  blasx_jobs_retired_total, blasx_worker_busy_fraction;
+- gauge ranges hold (hit rate and busy fraction in [0, 1]).
+
+Then checks `/healthz`: 200/`ok` for a healthy fleet, or — with
+`--expect-unhealthy` — 503 naming at least one dead device.
+
+Usage:
+    python3 tools/check_prometheus.py [--addr 127.0.0.1:9464]
+        [--timeout 30] [--expect-unhealthy]
+
+Exits non-zero on the first violation.
+"""
+
+import argparse
+import re
+import sys
+import time
+import urllib.error
+import urllib.request
+
+REQUIRED_FAMILIES = (
+    "blasx_up",
+    "blasx_device_up",
+    "blasx_arena_bytes_in_use",
+    "blasx_cache_hit_rate",
+    "blasx_queue_depth",
+    "blasx_jobs_retired_total",
+    "blasx_worker_busy_fraction",
+)
+
+SAMPLE_RE = re.compile(r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{[^}]*\})?\s+(\S+)$")
+
+
+def fetch(url, timeout):
+    """GET url, returning (status, body) without raising on HTTP errors."""
+    try:
+        with urllib.request.urlopen(url, timeout=timeout) as resp:
+            return resp.status, resp.read().decode("utf-8", "replace")
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode("utf-8", "replace")
+
+
+def poll(url, deadline):
+    """Retry until the endpoint answers or the deadline passes."""
+    last = None
+    while time.monotonic() < deadline:
+        try:
+            return fetch(url, timeout=2)
+        except (urllib.error.URLError, OSError) as e:
+            last = e
+            time.sleep(0.2)
+    sys.exit(f"endpoint never answered: {url} ({last})")
+
+
+def parse_exposition(body):
+    """Return (samples, families): samples as (name, labels, value),
+    families as the set announced by # TYPE lines."""
+    samples, families = [], set()
+    for lineno, line in enumerate(body.splitlines(), 1):
+        line = line.strip()
+        if not line:
+            continue
+        if line.startswith("#"):
+            m = re.match(r"^# (HELP|TYPE) (\S+)", line)
+            if not m:
+                sys.exit(f"line {lineno}: malformed comment line: {line!r}")
+            if m.group(1) == "TYPE":
+                families.add(m.group(2))
+            continue
+        m = SAMPLE_RE.match(line)
+        if not m:
+            sys.exit(f"line {lineno}: unparseable sample line: {line!r}")
+        name, labels, value = m.group(1), m.group(2) or "", m.group(3)
+        try:
+            value = float(value)
+        except ValueError:
+            sys.exit(f"line {lineno}: non-numeric value: {line!r}")
+        samples.append((name, labels, value))
+    return samples, families
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--addr", default="127.0.0.1:9464")
+    ap.add_argument("--timeout", type=float, default=30.0)
+    ap.add_argument(
+        "--expect-unhealthy",
+        action="store_true",
+        help="require /healthz to report 503 with a dead device",
+    )
+    args = ap.parse_args()
+    deadline = time.monotonic() + args.timeout
+
+    status, body = poll(f"http://{args.addr}/metrics", deadline)
+    if status != 200:
+        sys.exit(f"/metrics returned {status}")
+    samples, families = parse_exposition(body)
+    if not samples:
+        sys.exit("/metrics body has no samples")
+
+    by_name = {}
+    for name, labels, value in samples:
+        by_name.setdefault(name, []).append((labels, value))
+        if name not in families:
+            sys.exit(f"sample {name} has no # TYPE announcement")
+
+    for family in REQUIRED_FAMILIES:
+        if family not in by_name:
+            sys.exit(f"required family missing from scrape: {family}")
+    up = by_name["blasx_up"][0][1]
+    if up != 1.0:
+        sys.exit(f"blasx_up is {up}, runtime not booted behind the endpoint")
+    for labels, value in by_name["blasx_cache_hit_rate"]:
+        if not (0.0 <= value <= 1.0):
+            sys.exit(f"cache hit rate out of range: {labels} {value}")
+    for labels, value in by_name["blasx_worker_busy_fraction"]:
+        if not (0.0 <= value <= 1.0):
+            sys.exit(f"busy fraction out of range: {labels} {value}")
+
+    # The expected health state may lag the first scrape (a kill
+    # schedule fires mid-run), so retry until the deadline.
+    want = 503 if args.expect_unhealthy else 200
+    while True:
+        status, health = poll(f"http://{args.addr}/healthz", deadline)
+        if status == want:
+            break
+        if time.monotonic() >= deadline:
+            sys.exit(f"/healthz stuck at {status} ({health!r}), wanted {want}")
+        time.sleep(0.3)
+    if args.expect_unhealthy:
+        if not re.search(r"\d", health):
+            sys.exit(f"unhealthy /healthz names no device: {health!r}")
+    elif health.strip() != "ok":
+        sys.exit(f"healthy /healthz body is {health!r}, expected 'ok'")
+
+    devices = len(by_name["blasx_device_up"])
+    print(
+        f"scrape ok: {len(samples)} samples across {len(families)} families, "
+        f"{devices} device(s), healthz "
+        + ("503 as expected" if args.expect_unhealthy else "ok")
+    )
+
+
+if __name__ == "__main__":
+    main()
