@@ -1,0 +1,200 @@
+//! Comm/compute overlap of the asynchronous transfer pipeline — the
+//! measurement half of the prefetch PR (paper Fig. 8's claim that a
+//! multi-GPU L3 call hides its PCI-E traffic under tile kernels).
+//!
+//! Four scenarios: prefetch off/on × cold/warm, each a multi-tile
+//! DGEMM on a fresh resident runtime with the span recorder on.
+//! Reported per row:
+//!
+//! - **wall ms** — end-to-end call time;
+//! - **overlap fraction** — from [`blasx::trace::overlap_report`]:
+//!   the fraction of wall-clock comm span time (H2D/P2P/D2H) covered
+//!   by concurrent compute spans anywhere in the fleet;
+//! - **prefetch hits / wasted** — the pipeline's own ledger counters;
+//! - **host tiles read** — A/B/C host reads summed (warm rows must be
+//!   zero: lookahead must never break residency).
+//!
+//! A **lock-hold probe** rides along: while a cold prefetch-on DGEMM
+//! runs, a sampler thread hammers `Context::render_prometheus` (whose
+//! gauge gather takes the global cache lock) and records its latency.
+//! With every byte move off-lock, the max stall stays small and — the
+//! actual acceptance — does not grow with prefetch on vs off.
+//!
+//! Results print as a table and land in `bench_out/BENCH_overlap.json`
+//! plus the committed repo-root `BENCH_overlap.json` (regenerate on a
+//! host with cargo; an empty committed `results` array means the
+//! snapshot was authored without a toolchain — see its `note`).
+
+use blasx::api::types::Trans;
+use blasx::api::{self, Context};
+use blasx::bench::{print_table, write_json};
+use blasx::trace::overlap_report;
+use blasx::util::json::Json;
+use blasx::util::prng::Prng;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+const N: usize = 384;
+const T: usize = 64;
+const DEVICES: usize = 2;
+const ARENA: usize = 32 << 20;
+
+fn ctx(prefetch: usize) -> Context {
+    Context::new(DEVICES).with_arena(ARENA).with_tile(T).with_prefetch(Some(prefetch))
+}
+
+struct Row {
+    config: &'static str,
+    phase: &'static str,
+    wall_ms: f64,
+    overlap_fraction: f64,
+    comm_s: f64,
+    comm_hidden_s: f64,
+    prefetch_hits: usize,
+    prefetch_wasted: usize,
+    host_read_tiles: usize,
+}
+
+fn one_call(ctx: &Context, a: &[f64], b: &[f64], c: &mut [f64]) -> (f64, blasx::coordinator::real_engine::TransferStats) {
+    let t0 = Instant::now();
+    let rep = api::dgemm(ctx, Trans::No, Trans::No, N, N, N, 1.0, a, N, b, N, 0.0, c, N)
+        .expect("overlap bench dgemm");
+    (t0.elapsed().as_secs_f64() * 1e3, rep.transfers)
+}
+
+fn scenario(config: &'static str, prefetch: usize, rows: &mut Vec<Row>) {
+    let ctx = ctx(prefetch);
+    ctx.set_tracing(true);
+    let mut p = Prng::new(11);
+    let mut a = vec![0.0; N * N];
+    let mut b = vec![0.0; N * N];
+    p.fill_f64(&mut a, -1.0, 1.0);
+    p.fill_f64(&mut b, -1.0, 1.0);
+    let mut c = vec![0.0; N * N];
+    for phase in ["cold", "warm"] {
+        ctx.reset_trace();
+        let (wall_ms, tr) = one_call(&ctx, &a, &b, &mut c);
+        let trace = ctx.snapshot_trace().expect("runtime booted");
+        let ov = overlap_report(&trace);
+        rows.push(Row {
+            config,
+            phase,
+            wall_ms,
+            overlap_fraction: ov.hidden_frac(),
+            comm_s: ov.comm_total,
+            comm_hidden_s: ov.comm_hidden,
+            prefetch_hits: tr.prefetch_hits,
+            prefetch_wasted: tr.prefetch_wasted,
+            host_read_tiles: tr.host_reads.iter().sum(),
+        });
+    }
+}
+
+/// Latency of a cache-lock-taking observer while a cold DGEMM runs:
+/// `render_prometheus` gathers gauges under the global cache lock, so
+/// its worst-case stall bounds how long any worker holds that lock.
+/// Returns `(samples, max_ms, mean_ms)`.
+fn lock_probe(prefetch: usize) -> (usize, f64, f64) {
+    let ctx = ctx(prefetch);
+    // Boot the runtime (and its caches) before sampling begins.
+    let mut p = Prng::new(12);
+    let mut a = vec![0.0; N * N];
+    let mut b = vec![0.0; N * N];
+    p.fill_f64(&mut a, -1.0, 1.0);
+    p.fill_f64(&mut b, -1.0, 1.0);
+    let mut warm = vec![0.0; 64 * 64];
+    api::dgemm(&ctx, Trans::No, Trans::No, 64, 64, 64, 1.0, &a[..64 * 64], 64, &b[..64 * 64], 64, 0.0, &mut warm, 64)
+        .expect("probe warmup");
+    let stop = AtomicBool::new(false);
+    let mut c = vec![0.0; N * N];
+    std::thread::scope(|s| {
+        let sampler = s.spawn(|| {
+            let (mut n, mut max_s, mut sum_s) = (0usize, 0.0f64, 0.0f64);
+            while !stop.load(Ordering::Relaxed) {
+                let t0 = Instant::now();
+                let _ = ctx.render_prometheus();
+                let dt = t0.elapsed().as_secs_f64();
+                n += 1;
+                sum_s += dt;
+                max_s = max_s.max(dt);
+            }
+            (n, max_s, sum_s)
+        });
+        for _ in 0..3 {
+            let _ = one_call(&ctx, &a, &b, &mut c);
+        }
+        stop.store(true, Ordering::Relaxed);
+        let (n, max_s, sum_s) = sampler.join().expect("sampler thread");
+        (n, max_s * 1e3, if n == 0 { 0.0 } else { sum_s * 1e3 / n as f64 })
+    })
+}
+
+fn main() {
+    let mut rows = Vec::new();
+    scenario("prefetch-off", 0, &mut rows);
+    scenario("prefetch-on", 8, &mut rows);
+
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.config.to_string(),
+                r.phase.to_string(),
+                format!("{:.1}", r.wall_ms),
+                format!("{:.0}%", 100.0 * r.overlap_fraction),
+                format!("{:.3}/{:.3}", r.comm_hidden_s, r.comm_s),
+                format!("{}/{}", r.prefetch_hits, r.prefetch_wasted),
+                r.host_read_tiles.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        "transfer overlap: comm hidden under compute, prefetch off vs on",
+        &["config", "phase", "wall ms", "overlap", "hidden/comm s", "pf hit/waste", "host tiles"],
+        &table,
+    );
+
+    let (off_n, off_max, off_mean) = lock_probe(0);
+    let (on_n, on_max, on_mean) = lock_probe(8);
+    println!(
+        "\nlock probe (gauge gather under the cache lock, during 3 cold dgemms):\n\
+         \x20 prefetch off: {off_n} samples, max {off_max:.3} ms, mean {off_mean:.3} ms\n\
+         \x20 prefetch on:  {on_n} samples, max {on_max:.3} ms, mean {on_mean:.3} ms\n\
+         (copies run off-lock: turning the prefetcher on must not stretch the max)"
+    );
+
+    let mut json = Json::obj();
+    json.set("bench", Json::Str("transfer_overlap".into()));
+    json.set("n", Json::Num(N as f64));
+    json.set("tile", Json::Num(T as f64));
+    json.set("devices", Json::Num(DEVICES as f64));
+    let mut arr = Vec::new();
+    for r in &rows {
+        let mut o = Json::obj();
+        o.set("config", Json::Str(r.config.into()));
+        o.set("phase", Json::Str(r.phase.into()));
+        o.set("wall_ms", Json::Num(r.wall_ms));
+        o.set("overlap_fraction", Json::Num(r.overlap_fraction));
+        o.set("comm_s", Json::Num(r.comm_s));
+        o.set("comm_hidden_s", Json::Num(r.comm_hidden_s));
+        o.set("prefetch_hits", Json::Num(r.prefetch_hits as f64));
+        o.set("prefetch_wasted", Json::Num(r.prefetch_wasted as f64));
+        o.set("host_read_tiles", Json::Num(r.host_read_tiles as f64));
+        arr.push(o);
+    }
+    json.set("results", Json::Arr(arr));
+    let mut probe = Json::obj();
+    probe.set("off_samples", Json::Num(off_n as f64));
+    probe.set("off_max_ms", Json::Num(off_max));
+    probe.set("off_mean_ms", Json::Num(off_mean));
+    probe.set("on_samples", Json::Num(on_n as f64));
+    probe.set("on_max_ms", Json::Num(on_max));
+    probe.set("on_mean_ms", Json::Num(on_mean));
+    json.set("lock_probe", probe);
+    write_json("BENCH_overlap", &json);
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_overlap.json");
+    match std::fs::write(&root, json.to_string_pretty()) {
+        Ok(()) => println!("[bench] wrote {}", root.display()),
+        Err(e) => eprintln!("[bench] cannot write {}: {e}", root.display()),
+    }
+}

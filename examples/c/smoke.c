@@ -72,6 +72,8 @@ int main(void) {
     blasx_config_t cfg = {0};
     cfg.devices = 2;
     cfg.arena_mb = 32;
+    cfg.prefetch = 4; /* lookahead transfer pipeline on: results must
+                       * be bit-identical to prefetch off */
     if (blasx_init(&cfg) != BLASX_OK) {
         char msg[256];
         blasx_last_error(msg, sizeof msg);
@@ -137,6 +139,10 @@ int main(void) {
     printf("  fault ledger:   retried %llu  degraded %llu  migrated %llu\n",
            (unsigned long long)live.retried, (unsigned long long)live.degraded,
            (unsigned long long)live.migrated);
+    /* the transfer pipeline's lookahead ledger (cfg.prefetch above) */
+    printf("  prefetch:       hits %llu  wasted %llu\n",
+           (unsigned long long)live.prefetch_hits,
+           (unsigned long long)live.prefetch_wasted);
     if (live.tasks == 0) {
         fprintf(stderr, "retired gemm job reports zero tasks\n");
         failures++;

@@ -84,6 +84,7 @@ class BlasxConfig(ctypes.Structure):
         ("deadline_ms", ctypes.c_uint64),
         ("max_inflight", ctypes.c_int),
         ("tenant_quota", ctypes.c_int),
+        ("prefetch", ctypes.c_int),
         ("faults", ctypes.c_char_p),
         ("profile", ctypes.c_char_p),
     ]
@@ -103,6 +104,8 @@ class BlasxStats(ctypes.Structure):
         ("retried", ctypes.c_uint64),
         ("degraded", ctypes.c_uint64),
         ("migrated", ctypes.c_uint64),
+        ("prefetch_hits", ctypes.c_uint64),
+        ("prefetch_wasted", ctypes.c_uint64),
     ]
 
 
@@ -117,7 +120,9 @@ def main():
     # fields keep their defaults; `faults` would take a BLASX_FAULTS
     # schedule (e.g. b"kill@dev1:op40") for chaos runs, `profile` a
     # `blasx tune` dispatch-profile path (e.g. b"profile.json").
-    cfg = BlasxConfig(devices=2, arena_mb=32)
+    # prefetch=4 arms the lookahead transfer pipeline (results are
+    # bit-identical with it off; the counters below show it working).
+    cfg = BlasxConfig(devices=2, arena_mb=32, prefetch=4)
     assert lib.blasx_init(ctypes.byref(cfg)) == 0, "blasx_init must be first"
     print(lib.blasx_version().decode(), "from Python/ctypes")
 
@@ -159,6 +164,8 @@ def main():
         f"fault ledger: retried {stats.retried}, degraded {stats.degraded}, "
         f"migrated {stats.migrated}"
     )
+    # The transfer pipeline's lookahead ledger (cfg.prefetch above).
+    print(f"prefetch: hits {stats.prefetch_hits}, wasted {stats.prefetch_wasted}")
     assert stats.tasks > 0, "retired gemm job reports zero tasks"
 
     # -- live telemetry through the C ABI: the Prometheus text that

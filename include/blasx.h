@@ -28,7 +28,9 @@
  *    tile size / kernel fan-out / host-vs-device placement; unreadable
  *    profiles are reported on stderr and ignored), BLASX_MT_CUTOFF
  *    (serial/fork flop cutoff of the multithreaded host kernel),
- *    BLASX_TELEMETRY_MS (background gauge-sampler period, ms; 0/unset
+ *    BLASX_PREFETCH_DEPTH (lookahead tiles each device worker stages
+ *    ahead of demand; 0/unset = off — results are bit-identical
+ *    either way), BLASX_TELEMETRY_MS (background gauge-sampler period, ms; 0/unset
  *    = off: no thread, no allocation), BLASX_FLIGHT_DIR (arms the
  *    flight recorder's automatic incident dumps), BLASX_LOG
  *    (diagnostic verbosity: off|error|warn|info|debug|trace).
@@ -81,6 +83,9 @@ typedef struct blasx_config {
     uint64_t deadline_ms;   /* per-job deadline             (0: none)      */
     int max_inflight;       /* admission-queue capacity     (<=0: default) */
     int tenant_quota;       /* per-tenant in-flight quota   (<=0: default) */
+    int prefetch;           /* lookahead prefetch depth, tiles staged
+                             * ahead of demand per device worker
+                             * (<=0: BLASX_PREFETCH_DEPTH, else off)       */
     const char *faults;     /* fault schedule, BLASX_FAULTS grammar
                              * (NULL/empty: none), e.g.
                              * "kill@dev1:op40; h2d@dev0:op5x2; seed=7"    */
@@ -201,6 +206,8 @@ typedef struct blasx_stats {
     uint64_t retried;      /* ops retried after transient faults       */
     uint64_t degraded;     /* operands served via host OOM fallback    */
     uint64_t migrated;     /* tasks migrated off lost devices          */
+    uint64_t prefetch_hits;   /* acquires served by a prefetched tile  */
+    uint64_t prefetch_wasted; /* prefetched tiles dropped unconsumed   */
 } blasx_stats_t;
 
 /* Snapshot the job's live counters into *out. Non-blocking; valid

@@ -209,6 +209,18 @@ impl Context {
         self
     }
 
+    /// Lookahead prefetch depth: each device worker stages up to
+    /// `depth` not-yet-resident input tiles of its upcoming scheduler
+    /// window ahead of demand (L2/peer-first, eviction-aware — see the
+    /// README's "Transfer pipeline & prefetch"). `Some(0)` forces
+    /// prefetch off; `None` (default) defers to `BLASX_PREFETCH_DEPTH`
+    /// (unset: off). Takes effect from the next call — no runtime
+    /// reboot, results are bit-identical either way.
+    pub fn with_prefetch(mut self, depth: Option<usize>) -> Context {
+        self.cfg.prefetch = depth;
+        self
+    }
+
     /// Per-job deadline in milliseconds: a call still unfinished this
     /// long after admission aborts with
     /// [`crate::error::Error::DeadlineExceeded`] at the next round

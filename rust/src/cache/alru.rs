@@ -15,6 +15,64 @@
 use crate::mem::{DeviceAllocator, Offset};
 use crate::tile::TileKey;
 use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Fill progress of a reserved cache block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum FillState {
+    /// Reserved under the cache lock; the filler is copying bytes in
+    /// *without* the lock. The block is pinned (readers ≥ 1) so it can
+    /// never be evicted mid-fill.
+    Pending,
+    /// Bytes landed and the block was latched ready; contents are
+    /// immutable until the block is freed.
+    Ready,
+    /// The fill was abandoned (transfer fault exhausted its retries, or
+    /// the block was invalidated mid-fill). Waiters must re-acquire.
+    Aborted,
+}
+
+/// The latch a reserved block carries while its bytes are in flight.
+///
+/// The filler reserves the block under the global cache lock, **drops
+/// the lock**, performs the copy, then calls [`FillLatch::complete`].
+/// Concurrent acquirers of the same key pin the block under the lock,
+/// drop it, and block on [`FillLatch::wait`] — so a slow H2D read or
+/// peer memcpy never stalls unrelated cache traffic.
+#[derive(Debug)]
+pub struct FillLatch {
+    state: Mutex<FillState>,
+    cv: Condvar,
+}
+
+impl FillLatch {
+    pub fn new() -> Arc<FillLatch> {
+        Arc::new(FillLatch { state: Mutex::new(FillState::Pending), cv: Condvar::new() })
+    }
+
+    /// Latch the fill finished: `ok` = the bytes are valid and the block
+    /// is live; `!ok` = waiters must drop their pins and retry.
+    pub fn complete(&self, ok: bool) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        *st = if ok { FillState::Ready } else { FillState::Aborted };
+        self.cv.notify_all();
+    }
+
+    /// Block until the fill completes. Returns true if the block's
+    /// bytes are valid (Ready), false if the fill was aborted.
+    pub fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        while *st == FillState::Pending {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        *st == FillState::Ready
+    }
+
+    /// Non-blocking probe (tests / prefetch-skip heuristics).
+    pub fn is_ready(&self) -> bool {
+        *self.state.lock().unwrap_or_else(|e| e.into_inner()) == FillState::Ready
+    }
+}
 
 /// A cache block: one tile resident in device memory.
 #[derive(Clone, Debug)]
@@ -27,6 +85,10 @@ pub struct LruBlock {
     pub readers: u32,
     /// Invalidated while readers > 0: free on last release.
     pub doomed: bool,
+    /// `Some` while the block's bytes are being filled off-lock; the
+    /// latch lets same-key acquirers wait for the copy instead of the
+    /// global mutex. Cleared (→ ready) by [`Alru::take_pending`].
+    pub pending: Option<Arc<FillLatch>>,
     // intrusive LRU list (indices into `blocks`, NONE = none)
     prev: usize,
     next: usize,
@@ -135,6 +197,30 @@ impl Alru {
     /// cannot be found even after eviction (caller syncs & retries or
     /// reports OOM).
     pub fn insert(&mut self, key: TileKey, len: usize) -> Option<(Offset, Vec<TileKey>, f64)> {
+        self.insert_with(key, len, None)
+    }
+
+    /// Miss path for the asynchronous transfer pipeline: like
+    /// [`Alru::insert`], but the block is born *pending* — carrying a
+    /// fresh [`FillLatch`] that the filler completes after copying the
+    /// bytes in off-lock. The insert's reader pin (readers = 1) makes a
+    /// pending block unevictable by construction.
+    pub fn insert_pending(
+        &mut self,
+        key: TileKey,
+        len: usize,
+    ) -> Option<(Offset, Vec<TileKey>, f64, Arc<FillLatch>)> {
+        let latch = FillLatch::new();
+        let (off, evicted, cost) = self.insert_with(key, len, Some(latch.clone()))?;
+        Some((off, evicted, cost, latch))
+    }
+
+    fn insert_with(
+        &mut self,
+        key: TileKey,
+        len: usize,
+        pending: Option<Arc<FillLatch>>,
+    ) -> Option<(Offset, Vec<TileKey>, f64)> {
         debug_assert!(!self.map.contains_key(&key), "insert of resident tile");
         self.misses += 1;
         // Fault-injection hook: a forced failure refuses the whole
@@ -154,6 +240,7 @@ impl Alru {
                         len,
                         readers: 1,
                         doomed: false,
+                        pending,
                         prev: NONE,
                         next: NONE,
                     };
@@ -272,6 +359,56 @@ impl Alru {
         self.map.get(key).map(|&i| self.blocks[i].offset)
     }
 
+    /// Offset of a resident tile whose bytes are *ready* (not mid-fill).
+    /// Peer-source selection in the async pipeline uses this so a block
+    /// still being filled is never served over P2P.
+    pub fn ready_offset(&self, key: &TileKey) -> Option<Offset> {
+        let &i = self.map.get(key)?;
+        if self.blocks[i].pending.is_some() {
+            return None;
+        }
+        Some(self.blocks[i].offset)
+    }
+
+    /// The fill latch of a resident-but-pending block, if any. A caller
+    /// that found the tile via [`Alru::lookup`] (pin taken) checks this
+    /// to decide whether it must wait off-lock for the bytes.
+    pub fn pending_latch(&self, key: &TileKey) -> Option<Arc<FillLatch>> {
+        let &i = self.map.get(key)?;
+        self.blocks[i].pending.clone()
+    }
+
+    /// Add one reader pin to a resident block *without* touching LRU
+    /// order or hit counters (peer-source pinning: the filler pins its
+    /// P2P source under the lock so the source cannot be evicted while
+    /// the off-lock memcpy reads it). Returns false if not resident.
+    pub fn pin(&mut self, key: &TileKey) -> bool {
+        match self.map.get(key) {
+            Some(&i) => {
+                self.blocks[i].readers += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Clear the pending marker on a block (live or doomed), returning
+    /// its latch so the caller can complete it outside this structure.
+    /// Returns `None` if the key has no pending block.
+    pub fn take_pending(&mut self, key: &TileKey) -> Option<Arc<FillLatch>> {
+        if let Some(&i) = self.map.get(key) {
+            return self.blocks[i].pending.take();
+        }
+        // Invalidated mid-fill: the block moved to the doomed list but
+        // the filler still owns its latch.
+        for &i in &self.doomed {
+            if self.blocks[i].key == *key {
+                return self.blocks[i].pending.take();
+            }
+        }
+        None
+    }
+
     /// Invariant check for tests: list ↔ map consistency, reader sanity.
     pub fn validate(&self) -> Result<(), String> {
         let mut count = 0;
@@ -286,6 +423,9 @@ impl Alru {
             }
             if self.map.get(&self.blocks[i].key) != Some(&i) {
                 return Err(format!("map missing list block {i}"));
+            }
+            if self.blocks[i].pending.is_some() && self.blocks[i].readers == 0 {
+                return Err(format!("pending block {i} lost its filler pin"));
             }
             count += 1;
             prev = i;
@@ -448,6 +588,76 @@ mod tests {
         let (_, ev, _) = c.insert(key(2), 100).unwrap();
         assert!(ev.is_empty(), "the retry succeeds without pressure");
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn pending_block_is_pinned_and_invisible_to_peers() {
+        let mut c = alru(300);
+        let (off, ev, _, latch) = c.insert_pending(key(1), 100).unwrap();
+        assert!(ev.is_empty());
+        assert!(!latch.is_ready());
+        // mid-fill: resident for lookups (they get the latch), but not
+        // servable as a ready peer source, and never evictable.
+        assert!(c.probe(&key(1)));
+        assert_eq!(c.ready_offset(&key(1)), None);
+        assert_eq!(c.peek_offset(&key(1)), Some(off));
+        assert!(c.pending_latch(&key(1)).is_some());
+        c.insert(key(2), 100).unwrap();
+        c.release(&key(2));
+        let (_, ev, _) = c.insert(key(3), 200).unwrap();
+        assert_eq!(ev, vec![key(2)], "pending block must survive pressure");
+        // latch ready: block becomes a normal ready resident
+        let l = c.take_pending(&key(1)).unwrap();
+        l.complete(true);
+        assert!(latch.wait());
+        assert_eq!(c.ready_offset(&key(1)), Some(off));
+        assert!(c.pending_latch(&key(1)).is_none());
+        c.release(&key(1));
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn pin_adds_reader_without_touching_lru() {
+        let mut c = alru(300);
+        c.insert(key(1), 100).unwrap();
+        c.insert(key(2), 100).unwrap();
+        c.release(&key(1));
+        c.release(&key(2));
+        let hits = c.hits;
+        assert!(c.pin(&key(1)));
+        assert_eq!(c.hits, hits, "pin is not a hit");
+        // key1 pinned: pressure must evict key2 even though key1 is older
+        let (_, ev, _) = c.insert(key(3), 100).unwrap();
+        assert_eq!(ev, vec![key(2)]);
+        c.release(&key(1));
+        assert!(!c.pin(&key(9)), "pin of absent tile refused");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn take_pending_finds_doomed_blocks() {
+        let mut c = alru(300);
+        let (_, _, _, latch) = c.insert_pending(key(1), 100).unwrap();
+        // invalidated mid-fill (e.g. a C write-back): block is doomed
+        // but the filler can still retrieve its latch to abort waiters.
+        assert!(c.invalidate(&key(1)));
+        let l = c.take_pending(&key(1)).unwrap();
+        l.complete(false);
+        assert!(!latch.wait(), "waiters must see the abort");
+        assert!(c.take_pending(&key(1)).is_none());
+        c.release(&key(1)); // filler pin; doomed block frees
+        assert_eq!(c.alloc.heap.in_use(), 0);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn latch_wait_blocks_until_complete() {
+        let latch = FillLatch::new();
+        let l2 = latch.clone();
+        let waiter = std::thread::spawn(move || l2.wait());
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        latch.complete(true);
+        assert!(waiter.join().unwrap());
     }
 
     #[test]

@@ -9,6 +9,6 @@ pub mod alru;
 pub mod coherence;
 pub mod tile_cache;
 
-pub use alru::{Alru, LruBlock};
+pub use alru::{Alru, FillLatch, LruBlock};
 pub use coherence::{Directory, TileState};
-pub use tile_cache::{Acquire, CacheStats, Source, TileCacheSet};
+pub use tile_cache::{Acquire, AsyncAcquire, CacheStats, FillTicket, Source, TileCacheSet};

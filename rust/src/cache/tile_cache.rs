@@ -16,10 +16,11 @@
 //! module pure policy — shared verbatim by the DES and the threaded
 //! runtime (DESIGN.md §6.1).
 
-use super::alru::Alru;
+use super::alru::{Alru, FillLatch};
 use super::coherence::Directory;
 use crate::mem::{AllocStrategy, DeviceAllocator, Offset};
 use crate::tile::TileKey;
+use std::sync::Arc;
 
 /// Where the bytes for an acquired tile come from.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -46,6 +47,50 @@ pub struct Acquire {
     /// Allocator cost in seconds (nonzero only under the CudaMalloc
     /// strategy — the Fig. 5 experiment).
     pub alloc_cost: f64,
+}
+
+/// Outcome of an asynchronous (narrow-lock) acquire.
+///
+/// The contract that keeps every copy **off** the global cache lock:
+///
+/// - `Ready` — the bytes are resident and valid; use them (pin already
+///   taken, release at the sync point as usual).
+/// - `InFlight` — another filler reserved this block and is copying
+///   off-lock. The pin is already taken; drop the global lock and block
+///   on the latch. `wait() == true` → consume `offset` as an L1 hit;
+///   `false` → release the pin and re-acquire from scratch.
+/// - `Fill` — this caller reserved the block and owns the fill: drop
+///   the lock, move the bytes per `ticket.source`, then re-lock briefly
+///   for [`TileCacheSet::complete_fill`] (or
+///   [`TileCacheSet::abort_fill`] on failure).
+#[derive(Debug)]
+pub enum AsyncAcquire {
+    Ready(Acquire),
+    InFlight { offset: Offset, latch: Arc<FillLatch> },
+    Fill(FillTicket),
+}
+
+/// A reserved destination block whose bytes the holder must move in
+/// off-lock, then latch ready. If `source` is `Peer`, the source block
+/// is reader-pinned (so the off-lock memcpy can read it safely); the
+/// pin is dropped by `complete_fill` / `abort_fill`.
+#[derive(Debug)]
+pub struct FillTicket {
+    pub offset: Offset,
+    pub source: Source,
+    pub evicted: Vec<TileKey>,
+    pub alloc_cost: f64,
+    pub latch: Arc<FillLatch>,
+}
+
+impl FillTicket {
+    /// The pinned peer-source device, if the plan is a P2P copy.
+    pub fn peer_src(&self) -> Option<usize> {
+        match self.source {
+            Source::Peer { src, .. } => Some(src),
+            _ => None,
+        }
+    }
 }
 
 /// Hit/miss/eviction counters of one device's ALRU.
@@ -142,6 +187,117 @@ impl TileCacheSet {
         Some(Acquire { offset, source, evicted, alloc_cost })
     }
 
+    /// Narrow-lock variant of [`TileCacheSet::acquire`] for the
+    /// asynchronous transfer pipeline: instead of expecting the caller
+    /// to copy while holding whatever lock guards this set, a miss
+    /// reserves a *pending* block (born pinned, carrying a
+    /// [`FillLatch`]) and returns a [`FillTicket`] — the caller drops
+    /// the lock, fills the block, then calls
+    /// [`TileCacheSet::complete_fill`]. A concurrent same-key acquirer
+    /// gets [`AsyncAcquire::InFlight`] and waits on the latch off-lock.
+    ///
+    /// Peer-source selection only considers *ready* holders (a block
+    /// mid-fill is never served over P2P) and reader-pins the chosen
+    /// source so the off-lock memcpy cannot race an eviction.
+    ///
+    /// Returns `None` on arena exhaustion, exactly like `acquire`.
+    pub fn acquire_async(&mut self, dev: usize, key: TileKey, len: usize) -> Option<AsyncAcquire> {
+        if let Some(offset) = self.alrus[dev].lookup(&key) {
+            if let Some(latch) = self.alrus[dev].pending_latch(&key) {
+                return Some(AsyncAcquire::InFlight { offset, latch });
+            }
+            return Some(AsyncAcquire::Ready(Acquire {
+                offset,
+                source: Source::L1,
+                evicted: Vec::new(),
+                alloc_cost: 0.0,
+            }));
+        }
+        // Ready P2P source among current holders, selected *before*
+        // inserting ourselves (we are not a valid source).
+        let peer = self
+            .dir
+            .holders(&key)
+            .iter()
+            .copied()
+            .filter(|&h| h != dev && self.peers[dev].contains(&h))
+            .find_map(|h| self.alrus[h].ready_offset(&key).map(|off| (h, off)));
+        let (offset, evicted, alloc_cost, latch) = self.alrus[dev].insert_pending(key, len)?;
+        for ek in &evicted {
+            self.dir.drop_holder(ek, dev);
+        }
+        self.dir.add_holder(key, dev);
+        let source = match peer {
+            Some((src, src_offset)) => {
+                assert!(self.alrus[src].pin(&key), "directory/ALRU desync");
+                Source::Peer { src, src_offset }
+            }
+            None => Source::Host,
+        };
+        Some(AsyncAcquire::Fill(FillTicket { offset, source, evicted, alloc_cost, latch }))
+    }
+
+    /// Narrow-lock variant of [`TileCacheSet::acquire_output`]: the C
+    /// destination block is reserved pending so the zero-fill / host
+    /// preload happens off-lock. C tiles are never peer-served, so the
+    /// ticket's source is always `Host`.
+    pub fn acquire_output_async(
+        &mut self,
+        dev: usize,
+        key: TileKey,
+        len: usize,
+    ) -> Option<FillTicket> {
+        for holder in self.dir.write_back(&key) {
+            self.alrus[holder].invalidate(&key);
+        }
+        let (offset, evicted, alloc_cost, latch) = self.alrus[dev].insert_pending(key, len)?;
+        for ek in &evicted {
+            self.dir.drop_holder(ek, dev);
+        }
+        self.dir.add_holder(key, dev);
+        Some(FillTicket { offset, source: Source::Host, evicted, alloc_cost, latch })
+    }
+
+    /// Latch a filled block ready and drop the peer-source pin (if the
+    /// ticket's plan was a P2P copy). Returns `true` if the block is
+    /// still live — `false` means it was invalidated mid-fill (a write-
+    /// back raced the copy): the bytes are stale, the latch aborts its
+    /// waiters, and the filler must release its pin and re-acquire.
+    pub fn complete_fill(&mut self, dev: usize, key: &TileKey, peer_src: Option<usize>) -> bool {
+        if let Some(src) = peer_src {
+            self.alrus[src].release(key);
+        }
+        let live = self.alrus[dev].probe(key);
+        if let Some(latch) = self.alrus[dev].take_pending(key) {
+            latch.complete(live);
+        }
+        live
+    }
+
+    /// Abandon a fill (transfer fault exhausted its retries): the
+    /// reserved block is torn down, same-key waiters are aborted (they
+    /// re-acquire), and the peer-source pin is dropped. The filler's
+    /// own pin is consumed — do **not** release the key afterwards.
+    pub fn abort_fill(&mut self, dev: usize, key: &TileKey, peer_src: Option<usize>) {
+        if let Some(src) = peer_src {
+            self.alrus[src].release(key);
+        }
+        let latch = self.alrus[dev].take_pending(key);
+        if self.alrus[dev].probe(key) {
+            // Drop the filler pin first so a waiter-free block frees
+            // immediately; waiters keep it doomed until they wake.
+            self.alrus[dev].release(key);
+            self.alrus[dev].invalidate(key);
+            self.dir.drop_holder(key, dev);
+        } else {
+            // Already invalidated mid-fill: just drop the filler pin.
+            self.alrus[dev].release(key);
+        }
+        if let Some(latch) = latch {
+            latch.complete(false);
+        }
+    }
+
     /// Allocate space for a task's C accumulator tile on `dev`. C tiles
     /// are *not* cached (M is ephemeral, paper Fig. 3): they are tracked
     /// by the ALRU only while the task runs, then written back and
@@ -219,6 +375,14 @@ impl TileCacheSet {
     /// arena pressure.
     pub fn heap_stats(&self, dev: usize) -> crate::mem::HeapStats {
         self.alrus[dev].alloc.heap.stats()
+    }
+
+    /// Free bytes in `dev`'s arena *without* eviction — the prefetch
+    /// depth-adaptation signal: lookahead spends spare headroom only,
+    /// never eviction pressure.
+    pub fn arena_headroom(&self, dev: usize) -> usize {
+        let heap = &self.alrus[dev].alloc.heap;
+        heap.capacity().saturating_sub(heap.in_use())
     }
 
     /// Consistency check across ALRUs and the directory (tests).
@@ -365,6 +529,151 @@ mod tests {
         assert!(s.acquire(0, key(1), 100).is_none(), "armed acquire refused");
         assert!(s.acquire(0, key(1), 100).is_some(), "retry succeeds");
         assert!(s.acquire(1, key(2), 100).is_some(), "other devices unaffected");
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn async_fill_roundtrip_miss_then_hit() {
+        let mut s = set3();
+        let ticket = match s.acquire_async(0, key(1), 100).unwrap() {
+            AsyncAcquire::Fill(t) => t,
+            other => panic!("expected Fill, got {other:?}"),
+        };
+        assert_eq!(ticket.source, Source::Host);
+        assert!(ticket.peer_src().is_none());
+        // mid-fill the tile is a directory holder but not peer-servable
+        assert_eq!(s.dir.holders(&key(1)), &[0]);
+        match s.acquire_async(1, key(1), 100).unwrap() {
+            AsyncAcquire::Fill(t) => assert_eq!(t.source, Source::Host, "pending peer skipped"),
+            other => panic!("expected independent Fill on dev1, got {other:?}"),
+        }
+        assert!(s.complete_fill(0, &key(1), None));
+        assert!(ticket.latch.is_ready());
+        s.release(0, &key(1));
+        // ready now: dev0 L1-hits, and dev2 gets dev0 as a pinned peer
+        match s.acquire_async(0, key(1), 100).unwrap() {
+            AsyncAcquire::Ready(a) => assert_eq!(a.source, Source::L1),
+            other => panic!("expected Ready, got {other:?}"),
+        }
+        s.release(0, &key(1));
+        let t2 = match s.acquire_async(2, key(1), 100).unwrap() {
+            AsyncAcquire::Fill(t) => t,
+            other => panic!("expected Fill, got {other:?}"),
+        };
+        assert_eq!(t2.peer_src(), Some(0));
+        assert!(s.complete_fill(2, &key(1), t2.peer_src()));
+        s.release(2, &key(1));
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn same_key_acquire_waits_on_the_latch() {
+        let mut s = set3();
+        let ticket = match s.acquire_async(0, key(1), 100).unwrap() {
+            AsyncAcquire::Fill(t) => t,
+            other => panic!("expected Fill, got {other:?}"),
+        };
+        let (offset, latch) = match s.acquire_async(0, key(1), 100).unwrap() {
+            AsyncAcquire::InFlight { offset, latch } => (offset, latch),
+            other => panic!("expected InFlight, got {other:?}"),
+        };
+        assert_eq!(offset, ticket.offset);
+        let waiter = std::thread::spawn(move || latch.wait());
+        assert!(s.complete_fill(0, &key(1), None));
+        assert!(waiter.join().unwrap());
+        s.release(0, &key(1)); // filler pin
+        s.release(0, &key(1)); // waiter pin
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn abort_fill_tears_down_and_wakes_waiters_with_retry() {
+        let mut s = set3();
+        let ticket = match s.acquire_async(0, key(1), 100).unwrap() {
+            AsyncAcquire::Fill(t) => t,
+            other => panic!("expected Fill, got {other:?}"),
+        };
+        let latch = match s.acquire_async(0, key(1), 100).unwrap() {
+            AsyncAcquire::InFlight { latch, .. } => latch,
+            other => panic!("expected InFlight, got {other:?}"),
+        };
+        s.abort_fill(0, &key(1), ticket.peer_src());
+        assert!(!latch.wait(), "waiter must be told to retry");
+        assert!(s.dir.holders(&key(1)).is_empty());
+        s.release(0, &key(1)); // waiter pin frees the doomed block
+        assert_eq!(s.alrus[0].alloc.heap.in_use(), 0);
+        // a fresh acquire starts over from host
+        match s.acquire_async(0, key(1), 100).unwrap() {
+            AsyncAcquire::Fill(t) => assert_eq!(t.source, Source::Host),
+            other => panic!("expected Fill after abort, got {other:?}"),
+        }
+        s.complete_fill(0, &key(1), None);
+        s.release(0, &key(1));
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn peer_source_pin_blocks_source_eviction_mid_copy() {
+        let mut s = set3();
+        s.acquire(0, key(1), 100).unwrap();
+        s.release(0, &key(1));
+        // dev1 plans a P2P copy from dev0; source must be pinned
+        let t = match s.acquire_async(1, key(1), 100).unwrap() {
+            AsyncAcquire::Fill(t) => t,
+            other => panic!("expected Fill, got {other:?}"),
+        };
+        assert_eq!(t.peer_src(), Some(0));
+        // pressure on dev0 cannot evict the pinned source
+        assert!(s.acquire(0, key(2), 100).is_some());
+        s.release(0, &key(2));
+        assert!(s.acquire(0, key(3), 250).is_none(), "only the pinned source's bytes would fit");
+        assert!(s.alrus[0].probe(&key(1)), "source survived mid-copy pressure");
+        assert!(s.complete_fill(1, &key(1), t.peer_src()));
+        s.release(1, &key(1));
+        // pin dropped: dev0 can evict key1 now
+        assert!(s.acquire(0, key(3), 250).is_some());
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn writeback_racing_a_fill_aborts_consumers() {
+        let mut s = set3();
+        let t = match s.acquire_async(0, key(7), 100).unwrap() {
+            AsyncAcquire::Fill(t) => t,
+            other => panic!("expected Fill, got {other:?}"),
+        };
+        // a C write-back invalidates the tile while its bytes are in flight
+        s.writeback(1, &key(7));
+        assert!(!s.complete_fill(0, &key(7), t.peer_src()), "stale fill must not go live");
+        assert!(!t.latch.wait());
+        s.release(0, &key(7)); // filler pin frees the doomed block
+        assert_eq!(s.alrus[0].alloc.heap.in_use(), 0);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn async_oom_returns_none_like_acquire() {
+        let mut s = set3();
+        s.acquire(0, key(1), 150).unwrap(); // pinned
+        s.acquire(0, key(2), 150).unwrap(); // pinned
+        assert!(s.acquire_async(0, key(3), 100).is_none());
+        s.release(0, &key(1));
+        assert!(matches!(s.acquire_async(0, key(3), 100), Some(AsyncAcquire::Fill(_))));
+        s.complete_fill(0, &key(3), None);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn acquire_output_async_invalidates_then_reserves() {
+        let mut s = set3();
+        s.acquire(0, key(5), 100).unwrap();
+        s.release(0, &key(5));
+        let t = s.acquire_output_async(1, key(5), 100).unwrap();
+        assert_eq!(t.source, Source::Host);
+        assert_eq!(s.dir.holders(&key(5)), &[1]);
+        assert!(s.locality_score(0, &key(5)) < 2, "stale input copy invalidated");
+        assert!(s.complete_fill(1, &key(5), None));
+        s.release(1, &key(5));
         s.validate().unwrap();
     }
 

@@ -105,7 +105,7 @@ USAGE:
               [--json out.json]
   blasx run   [--routine dgemm] [--n 1024] [--t 256] [--devices 2] [--pjrt]
               [--kernel-threads 1] [--repeat 1] [--no-persistent]
-              [--profile profile.json] [--adaptive]
+              [--profile profile.json] [--adaptive] [--prefetch 0]
               [--trace-out trace.json] [--metrics-out metrics.json]
   blasx serve [--clients 4] [--jobs 8] [--n 512] [--t 256] [--devices 2]
               [--kernel-threads 1] [--verify] [--ffi-verify]
@@ -176,8 +176,13 @@ BLASX_PROFILE env var through the C ABI.
 Observability (run/serve): `--trace-out FILE` enables the span
 recorder and writes a Chrome trace-event JSON (open in Perfetto or
 chrome://tracing; one track per device worker, one per admitted job);
-`run` then also prints the paper's COMPT/COMM/OTHER split and H<->D /
-P2P volumes from the real spans. `--metrics-out FILE` dumps the
+`run` then also prints the paper's COMPT/COMM/OTHER split, H<->D /
+P2P volumes, and the comm-hidden-under-compute overlap fraction from
+the real spans. `run --prefetch K` arms the lookahead transfer
+pipeline: each device worker stages up to K upcoming input tiles
+ahead of demand (`BLASX_PREFETCH_DEPTH` from the environment; results
+are bit-identical either way — see README \"Transfer pipeline &
+prefetch\"). `--metrics-out FILE` dumps the
 metrics-registry snapshot (per-tenant and per-routine latency
 percentiles, worker busy fractions). BLASX_TRACE=1 enables the
 recorder from the environment. See README \"Observability\".
@@ -817,16 +822,24 @@ fn cmd_top(args: &Args) -> i32 {
         let resident = by_label("blasx_cache_resident_tiles", "dev");
         let arena = by_label("blasx_arena_bytes_in_use", "dev");
         let hw = by_label("blasx_arena_high_water_bytes", "dev");
+        let pf_hits = by_label("blasx_prefetch_hits_total", "dev");
+        let pf_wasted = by_label("blasx_prefetch_wasted_total", "dev");
         for (dev, alive) in &up {
             println!(
-                "  dev{dev}: {}  busy {:3.0}%  hit-rate {:.2}  resident {} tiles  arena {} (hw {})",
+                "  dev{dev}: {}  busy {:3.0}%  hit-rate {:.2}  resident {} tiles  arena {} (hw {})  prefetch {}/{} hit/wasted",
                 if *alive > 0.0 { "up  " } else { "DEAD" },
                 100.0 * busy.get(dev).copied().unwrap_or(0.0),
                 hit.get(dev).copied().unwrap_or(0.0),
                 resident.get(dev).copied().unwrap_or(0.0) as u64,
                 fmt_bytes(arena.get(dev).copied().unwrap_or(0.0) as u64),
                 fmt_bytes(hw.get(dev).copied().unwrap_or(0.0) as u64),
+                pf_hits.get(dev).copied().unwrap_or(0.0) as u64,
+                pf_wasted.get(dev).copied().unwrap_or(0.0) as u64,
             );
+        }
+        let inflight_xfers = scalar("blasx_inflight_transfers") as u64;
+        if inflight_xfers > 0 {
+            println!("  transfers in flight: {inflight_xfers}");
         }
         let tenants = by_label("blasx_tenant_inflight", "tenant");
         if !tenants.is_empty() {
@@ -1103,6 +1116,15 @@ fn cmd_run(args: &Args) -> i32 {
     if args.get("pjrt").is_some() {
         ctx = ctx.with_backend(crate::coordinator::Backend::Pjrt);
     }
+    if let Some(depth) = args.get("prefetch") {
+        match depth.parse::<usize>() {
+            Ok(d) => ctx = ctx.with_prefetch(Some(d)),
+            Err(_) => {
+                eprintln!("run: --prefetch wants a tile count, got {depth:?}");
+                return 2;
+            }
+        }
+    }
     if let Some(path) = args.get("profile") {
         ctx = match ctx.with_profile_file(path) {
             Ok(c) => c,
@@ -1150,12 +1172,14 @@ fn cmd_run(args: &Args) -> i32 {
         };
         let secs = start.elapsed().as_secs_f64();
         println!(
-            "  call {call}: {} wall, {:.2} GFLOPS  host-reads (A,B,C) {:?}  peer {}  L1 hits {}",
+            "  call {call}: {} wall, {:.2} GFLOPS  host-reads (A,B,C) {:?}  peer {}  L1 hits {}  prefetch {}/{} hit/wasted",
             fmt_secs(secs),
             gflops(flops, secs),
             rep.transfers.host_reads,
             rep.transfers.peer_copies,
             rep.transfers.l1_hits,
+            rep.transfers.prefetch_hits,
+            rep.transfers.prefetch_wasted,
         );
         if call + 1 == repeat {
             println!(
@@ -1183,6 +1207,13 @@ fn cmd_run(args: &Args) -> i32 {
                     fmt_bytes(v.p2p_bytes as u64)
                 );
             }
+            let ov = crate::trace::overlap_report(&trace);
+            println!(
+                "  comm hidden under compute: {:.0}% ({} of {} comm)",
+                100.0 * ov.hidden_frac(),
+                fmt_secs(ov.comm_hidden),
+                fmt_secs(ov.comm_total),
+            );
         }
         if let (Some(path), Some(json)) = (&trace_out, ctx.chrome_trace_json()) {
             match std::fs::write(path, json) {

@@ -133,6 +133,14 @@ pub struct RunConfig {
     /// environment). When off, no sampler thread exists and no
     /// telemetry memory is allocated — see `crate::trace::telemetry`.
     pub telemetry_ms: Option<u64>,
+    /// Lookahead depth of the asynchronous transfer pipeline: how many
+    /// upcoming reservation-station tasks each device worker walks to
+    /// issue tile prefetches ahead of execution (`None` = consult
+    /// `BLASX_PREFETCH_DEPTH`, itself usually unset; resolved 0 =
+    /// prefetch off). Prefetched blocks are pinned with a
+    /// consume-or-expire TTL and the effective depth adapts to arena
+    /// headroom, so prefetch can never wedge the arena.
+    pub prefetch: Option<usize>,
 }
 
 impl Default for RunConfig {
@@ -157,6 +165,7 @@ impl Default for RunConfig {
             tenant_quota: 64,
             mt_cutoff: None,
             telemetry_ms: None,
+            prefetch: None,
         }
     }
 }
@@ -188,6 +197,23 @@ impl RunConfig {
         self.t = t;
         self
     }
+
+    pub fn with_prefetch(mut self, depth: usize) -> RunConfig {
+        self.prefetch = Some(depth);
+        self
+    }
+
+    /// Resolved prefetch lookahead depth: the config field if set, else
+    /// the `BLASX_PREFETCH_DEPTH` environment variable, else 0 (off).
+    pub fn prefetch_depth(&self) -> usize {
+        if let Some(d) = self.prefetch {
+            return d;
+        }
+        std::env::var("BLASX_PREFETCH_DEPTH")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .unwrap_or(0)
+    }
 }
 
 #[cfg(test)]
@@ -214,5 +240,13 @@ mod tests {
         assert!(c.deadline_ms.is_none(), "jobs unbounded unless asked");
         assert!(c.telemetry_ms.is_none(), "no sampler thread unless asked");
         assert!(c.admit_capacity >= c.tenant_quota, "one tenant can't starve the table alone");
+        assert!(c.prefetch.is_none(), "no prefetch unless asked (env decides)");
+    }
+
+    #[test]
+    fn prefetch_depth_resolution() {
+        // Explicit config wins outright (no env consult).
+        assert_eq!(RunConfig::default().with_prefetch(3).prefetch_depth(), 3);
+        assert_eq!(RunConfig::default().with_prefetch(0).prefetch_depth(), 0);
     }
 }

@@ -41,7 +41,7 @@
 
 use super::config::{Backend, RunConfig};
 use crate::api::Scalar;
-use crate::cache::{CacheStats, Source, TileCacheSet};
+use crate::cache::{AsyncAcquire, CacheStats, FillTicket, Source, TileCacheSet};
 use crate::error::{Error, Result};
 use crate::fault::{FaultAction, FaultPlan, Injector, OpKind};
 use crate::hostblas;
@@ -104,10 +104,20 @@ pub(crate) struct Arena {
     bytes: usize,
 }
 
-// SAFETY: the cache directory serializes access — a block offset is
-// handed to exactly one writer at a time, and cross-thread reads of a
-// peer block happen only under the cache lock while the block is
-// pinned (see `acquire_input`).
+// SAFETY: the cache set serializes *ownership*, not the copies. A
+// block's bytes are written only by its filler between the reserve
+// (`acquire_async` under the cache lock, which pins the block and
+// marks it pending) and the ready latch (`complete_fill`): the pending
+// state makes the block invisible to peer-source selection and parks
+// same-key acquirers on the latch, so the filler is the exclusive
+// writer even though the copy itself runs WITHOUT the lock. Once
+// latched ready, an input block is immutable until it is freed (the
+// identity pad is applied at fill time, never on hits), so off-lock
+// peer reads — whose source block is reader-pinned by the fill ticket
+// — race nothing. C accumulator blocks stay pending (never
+// peer-servable) for their whole task and are written back and
+// invalidated before the dependency graph lets any consumer read the
+// tile.
 unsafe impl Send for Arena {}
 unsafe impl Sync for Arena {}
 
@@ -178,6 +188,19 @@ pub(crate) struct EngineCore {
     /// span recorder off) + incident auto-dump. See
     /// [`crate::trace::flight`].
     pub(crate) flight: FlightRecorder,
+    /// Transfers currently copying bytes off-lock (demand fills and
+    /// prefetches alike) — the in-flight-transfer gauge.
+    inflight_transfers: AtomicUsize,
+    /// Per-device lifetime prefetch counters (telemetry/Prometheus;
+    /// the per-job view lives in each job's `TransferCounters`).
+    prefetch_hits: Vec<AtomicUsize>,
+    prefetch_wasted: Vec<AtomicUsize>,
+    /// Per-device prefetch ledger: tiles fetched ahead of execution,
+    /// still holding their consume-or-expire reader pin. The value is
+    /// the remaining TTL in scheduler rounds; the round sync point
+    /// decrements it and expiry releases the pin, so prefetch can
+    /// never wedge the arena.
+    prefetched: Vec<Mutex<std::collections::HashMap<TileKey, u32>>>,
 }
 
 impl EngineCore {
@@ -200,6 +223,10 @@ impl EngineCore {
             dead: (0..n_devices).map(|_| AtomicBool::new(false)).collect(),
             runnable_jobs: AtomicUsize::new(0),
             flight: FlightRecorder::new(n_devices),
+            inflight_transfers: AtomicUsize::new(0),
+            prefetch_hits: (0..n_devices).map(|_| AtomicUsize::new(0)).collect(),
+            prefetch_wasted: (0..n_devices).map(|_| AtomicUsize::new(0)).collect(),
+            prefetched: (0..n_devices).map(|_| Mutex::new(std::collections::HashMap::new())).collect(),
         };
         // Environment fallback (`BLASX_FAULTS`) arms both execution
         // modes; the resident runtime overrides with the config plan
@@ -308,6 +335,106 @@ impl EngineCore {
             }
         }
     }
+
+    /// Transfers currently moving bytes off-lock (gauge).
+    pub(crate) fn inflight_transfers(&self) -> usize {
+        self.inflight_transfers.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime (prefetch_hits, prefetch_wasted) of one device.
+    pub(crate) fn prefetch_counters(&self, dev: usize) -> (usize, usize) {
+        (
+            self.prefetch_hits[dev].load(Ordering::Relaxed),
+            self.prefetch_wasted[dev].load(Ordering::Relaxed),
+        )
+    }
+
+    /// Consume-check of the prefetch ledger: if `key` was prefetched on
+    /// `dev`, drop the ledger entry and its reader pin (the caller
+    /// holds the caches lock) and count the hit. The demand acquire
+    /// that triggered this holds its own pin, so the block stays
+    /// resident. Lock order is caches → ledger, everywhere.
+    fn prefetch_consume(&self, caches: &mut TileCacheSet, dev: usize, key: &TileKey) -> bool {
+        let mut ledger = self.prefetched[dev].lock().unwrap_or_else(|e| e.into_inner());
+        if ledger.remove(key).is_none() {
+            return false;
+        }
+        drop(ledger);
+        caches.release(dev, key);
+        self.prefetch_hits[dev].fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// The output path is about to invalidate a prefetched tile (an
+    /// input staged ahead is being overwritten as a C block): drop its
+    /// ledger entry + pin *first*, counted wasted — the staged bytes
+    /// never served anyone, and the pin must not keep the doomed block's
+    /// bytes allocated.
+    fn prefetch_discard(&self, caches: &mut TileCacheSet, dev: usize, key: &TileKey) -> bool {
+        let mut ledger = self.prefetched[dev].lock().unwrap_or_else(|e| e.into_inner());
+        if ledger.remove(key).is_none() {
+            return false;
+        }
+        drop(ledger);
+        caches.release(dev, key);
+        self.prefetch_wasted[dev].fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Pressure valve: drop EVERY ledger pin on `dev` (counted wasted;
+    /// the blocks stay resident unpinned, so a later demand still L1-
+    /// hits them). The demand path's sync&retry calls this before
+    /// entering the OOM ladder, so lookahead pins can never turn arena
+    /// pressure into a degradation that prefetch-off would not have
+    /// had. Returns how many pins were dropped.
+    fn prefetch_flush(&self, caches: &mut TileCacheSet, dev: usize) -> usize {
+        let keys: Vec<TileKey> = {
+            let mut ledger = self.prefetched[dev].lock().unwrap_or_else(|e| e.into_inner());
+            ledger.drain().map(|(k, _)| k).collect()
+        };
+        for k in &keys {
+            caches.release(dev, k);
+        }
+        if !keys.is_empty() {
+            self.prefetch_wasted[dev].fetch_add(keys.len(), Ordering::Relaxed);
+        }
+        keys.len()
+    }
+
+    /// Round-sync TTL sweep of the prefetch ledger: age every entry,
+    /// release the pins of expired ones (counted as wasted prefetch).
+    /// Cheap no-op while the ledger is empty — the prefetch-off path
+    /// costs one mutex probe of an empty map per round. Returns the
+    /// number of expired entries so the sweeping round can charge its
+    /// job's counters.
+    pub(crate) fn prefetch_sweep(&self, dev: usize) -> usize {
+        let mut expired: Vec<TileKey> = Vec::new();
+        {
+            let mut ledger = self.prefetched[dev].lock().unwrap_or_else(|e| e.into_inner());
+            if ledger.is_empty() {
+                return 0;
+            }
+            ledger.retain(|key, ttl| {
+                if *ttl <= 1 {
+                    expired.push(*key);
+                    false
+                } else {
+                    *ttl -= 1;
+                    true
+                }
+            });
+        }
+        if expired.is_empty() {
+            return 0;
+        }
+        let mut caches = self.lock_caches();
+        for key in &expired {
+            caches.release(dev, key);
+        }
+        drop(caches);
+        self.prefetch_wasted[dev].fetch_add(expired.len(), Ordering::Relaxed);
+        expired.len()
+    }
 }
 
 /// Per-call host→device transfer trace: how each input acquire was
@@ -322,6 +449,14 @@ pub struct TransferStats {
     pub peer_copies: usize,
     /// Acquires served from the device's own L1 — no bytes moved.
     pub l1_hits: usize,
+    /// Demand acquires that found their tile already staged by the
+    /// lookahead prefetcher (the transfer itself is also counted in
+    /// `host_reads`/`peer_copies` — a hit means it was *early*, not
+    /// free).
+    pub prefetch_hits: usize,
+    /// Prefetched tiles whose consume-or-expire TTL lapsed before any
+    /// task touched them — bytes moved for nothing.
+    pub prefetch_wasted: usize,
 }
 
 impl TransferStats {
@@ -353,12 +488,18 @@ pub struct JobStats {
     pub l1_hits: usize,
     /// Intra-job work steals (across all devices).
     pub steals: usize,
+    /// Demand acquires served early by the lookahead prefetcher.
+    pub prefetch_hits: usize,
+    /// Prefetched tiles that expired unconsumed.
+    pub prefetch_wasted: usize,
 }
 
 struct TransferCounters {
     host_reads: [AtomicUsize; 3],
     peer_copies: AtomicUsize,
     l1_hits: AtomicUsize,
+    prefetch_hits: AtomicUsize,
+    prefetch_wasted: AtomicUsize,
 }
 
 impl TransferCounters {
@@ -367,6 +508,8 @@ impl TransferCounters {
             host_reads: [AtomicUsize::new(0), AtomicUsize::new(0), AtomicUsize::new(0)],
             peer_copies: AtomicUsize::new(0),
             l1_hits: AtomicUsize::new(0),
+            prefetch_hits: AtomicUsize::new(0),
+            prefetch_wasted: AtomicUsize::new(0),
         }
     }
 
@@ -388,6 +531,8 @@ impl TransferCounters {
             ],
             peer_copies: self.peer_copies.load(Ordering::Relaxed),
             l1_hits: self.l1_hits.load(Ordering::Relaxed),
+            prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
+            prefetch_wasted: self.prefetch_wasted.load(Ordering::Relaxed),
         }
     }
 }
@@ -543,6 +688,8 @@ impl<'m, T: Scalar> JobState<'m, T> {
             peer_copies: t.peer_copies,
             l1_hits: t.l1_hits,
             steals: self.steals.iter().map(|a| a.load(Ordering::Relaxed)).sum(),
+            prefetch_hits: t.prefetch_hits,
+            prefetch_wasted: t.prefetch_wasted,
         }
     }
 
@@ -751,6 +898,15 @@ pub(crate) fn worker_round<T: Scalar>(
         return Round::Failed;
     }
     let jid = job.trace_id.load(Ordering::Relaxed);
+    // Consume-or-expire: age this device's prefetch ledger once per
+    // round (dead devices included — their doomed blocks hold bytes
+    // until the ledger pins drop). Attribution of the expiries to the
+    // sweeping job is approximate under multi-tenancy (the ledger is
+    // core-level); the core's per-device counters are exact.
+    let expired = core.prefetch_sweep(dev);
+    if expired > 0 {
+        job.transfers.prefetch_wasted.fetch_add(expired, Ordering::Relaxed);
+    }
     if core.is_dead(dev) {
         // A dead device schedules nothing; its station drains back to
         // the shared queue so survivors pick the work up (the steal
@@ -827,6 +983,12 @@ pub(crate) fn worker_round<T: Scalar>(
         }
         return Round::Idle;
     }
+
+    // ---- lookahead prefetch (paper §V overlap, made explicit): stage
+    // not-yet-resident operands of upcoming tasks before this round's
+    // kernels run, so their H2D/P2P time sits under compute elsewhere
+    // on the machine.
+    prefetch_pass(dev, core, job, &bound);
 
     // ---- the round: solve the bound tasks (lines 18–25)
     let mut flops = 0.0;
@@ -995,23 +1157,40 @@ fn run_task<T: Scalar>(
     if core.faults.tick(dev, OpKind::Alloc) {
         core.lock_caches().force_alloc_failure(dev, 1);
     }
+    let mut c_ticket: Option<FillTicket> = None;
     let mut c_loc: Operand<T> = {
         let mut attempt = 0u32;
         loop {
             let mut caches = core.lock_caches();
-            let mut acq = caches.acquire_output(dev, ckey, tile_bytes);
+            // If the lookahead staged this tile as an *input*, the
+            // write below invalidates it: drop the ledger pin first so
+            // the doomed block's bytes free immediately.
+            if core.prefetch_discard(&mut caches, dev, &ckey) {
+                job.transfers.prefetch_wasted.fetch_add(1, Ordering::Relaxed);
+            }
+            let mut acq = caches.acquire_output_async(dev, ckey, tile_bytes);
             if acq.is_none() && attempt == 0 {
                 // Cache pressure: this is the paper's "sync & retry" —
                 // kernels already issued this round are complete (real
                 // mode is synchronous), so the round's readers can be
-                // released early and the acquire retried.
+                // released early and the acquire retried. Lookahead
+                // pins go too: prefetch must never turn pressure into
+                // a degradation that prefetch-off would not have had.
                 for key in releases.drain(..) {
                     caches.release(dev, &key);
                 }
-                acq = caches.acquire_output(dev, ckey, tile_bytes);
+                let flushed = core.prefetch_flush(&mut caches, dev);
+                if flushed > 0 {
+                    job.transfers.prefetch_wasted.fetch_add(flushed, Ordering::Relaxed);
+                }
+                acq = caches.acquire_output_async(dev, ckey, tile_bytes);
             }
             match acq {
-                Some(a) => break Operand::Arena(a.offset),
+                Some(ticket) => {
+                    let off = ticket.offset;
+                    c_ticket = Some(ticket);
+                    break Operand::Arena(off);
+                }
                 None if attempt < RETRY_MAX => {
                     // Bounded backoff: peer workers release readers at
                     // their round sync points; give them a moment.
@@ -1031,12 +1210,15 @@ fn run_task<T: Scalar>(
         }
     };
     {
-        // Initialize the accumulator (under the cache lock, like every
-        // arena-block mutation): zero-pad edge tiles, pre-load C when
-        // the task reads it — or when resuming a split chunk, whose
-        // partial accumulator round-trips through host RAM.
+        // Initialize the accumulator OFF the cache lock: the reserved
+        // block is pending — born pinned, invisible to peer-source
+        // selection, and C blocks never latch ready — so this worker is
+        // its exclusive writer until the write-back invalidates it.
+        // Zero-pad edge tiles, pre-load C when the task reads it — or
+        // when resuming a split chunk, whose partial accumulator
+        // round-trips through host RAM.
         let preload = task.reads_c || resumed;
-        let caches = core.lock_caches();
+        let degraded_c = matches!(c_loc, Operand::Host(_));
         let cbuf: &mut [T] = match &mut c_loc {
             Operand::Arena(off) => core.arenas[dev].slice::<T>(*off, tile_elems),
             Operand::Host(v) => v,
@@ -1054,11 +1236,16 @@ fn run_task<T: Scalar>(
         }
         if preload {
             let h2d_t0 = core.rec.now();
+            core.inflight_transfers.fetch_add(1, Ordering::Relaxed);
             cmat.read_tile(task.ci, task.cj, cbuf, t);
+            core.inflight_transfers.fetch_sub(1, Ordering::Relaxed);
             job.transfers.count_host(MatId::C);
-            core.rec.record(dev, SpanKind::H2d, h2d_t0, tile_bytes as f64, jid);
+            // A degraded accumulator pre-load lands in private host
+            // scratch — no DMA lane crossed, so it must not record as
+            // H2d (that inflated COMM and the Table V volumes).
+            let kind = if degraded_c { SpanKind::HostFallback } else { SpanKind::H2d };
+            core.rec.record(dev, kind, h2d_t0, tile_bytes as f64, jid);
         }
-        drop(caches);
     }
 
     // -- k-steps of this chunk
@@ -1090,11 +1277,17 @@ fn run_task<T: Scalar>(
     })();
     if let Err(e) = step_res {
         // Unpin and discard the C block on the way out: no bytes
-        // reached host RAM, so the task can re-run from scratch.
+        // reached host RAM, so the task can re-run from scratch. The
+        // never-readied latch aborts, telling any (dependency-excluded,
+        // so in practice nonexistent) same-key waiter to re-acquire.
         if let Operand::Arena(_) = c_loc {
             let mut caches = core.lock_caches();
             caches.writeback(dev, &ckey);
             caches.release(dev, &ckey);
+            drop(caches);
+            if let Some(ticket) = c_ticket.take() {
+                ticket.latch.complete(false);
+            }
         }
         return Err(e);
     }
@@ -1103,34 +1296,41 @@ fn run_task<T: Scalar>(
     // split chunk writes back too; the resuming worker re-reads the
     // exact bytes.
     {
+        // OFF the cache lock: the accumulator block is pending-pinned
+        // (this worker is its exclusive owner), so the D2h store races
+        // nothing — cache traffic on every device proceeds while the
+        // bytes drain to host RAM.
         let d2h_t0 = core.rec.now();
-        let caches = core.lock_caches();
+        core.inflight_transfers.fetch_add(1, Ordering::Relaxed);
         let cbuf: &[T] = match &c_loc {
             Operand::Arena(off) => &*core.arenas[dev].slice::<T>(*off, tile_elems),
             Operand::Host(v) => v,
         };
         write_back_masked(cmat, task, cbuf, t);
-        drop(caches);
         let mut attempt = 0u32;
         while attempt < RETRY_MAX && core.faults.tick(dev, OpKind::D2h) {
             // transient write-back fault: redo the store (idempotent)
             attempt += 1;
             job.retried.fetch_add(1, Ordering::Relaxed);
             core.rec.record(dev, SpanKind::Retry, d2h_t0, attempt as f64, jid);
-            let caches = core.lock_caches();
-            let cbuf: &[T] = match &c_loc {
-                Operand::Arena(off) => &*core.arenas[dev].slice::<T>(*off, tile_elems),
-                Operand::Host(v) => v,
-            };
             write_back_masked(cmat, task, cbuf, t);
-            drop(caches);
         }
+        core.inflight_transfers.fetch_sub(1, Ordering::Relaxed);
         core.rec.record(dev, SpanKind::D2h, d2h_t0, tile_bytes as f64, jid);
     }
     if let Operand::Arena(_) = c_loc {
+        // M → I: the host copy is the master again. The accumulator
+        // block spent its whole life pending (never peer-servable); the
+        // abort below points any same-key waiter — none can exist while
+        // the dependency graph serializes writers before readers — back
+        // at the freshly written host bytes.
         let mut caches = core.lock_caches();
         caches.writeback(dev, &ckey);
         caches.release(dev, &ckey);
+        drop(caches);
+        if let Some(ticket) = c_ticket.take() {
+            ticket.latch.complete(false);
+        }
     }
     let frac = if total == 0 { 1.0 } else { (end - start) as f64 / total as f64 };
     let flops = task.flops * frac;
@@ -1149,6 +1349,12 @@ fn run_task<T: Scalar>(
 /// if the arena cannot hold it even after bounded eviction retries
 /// (the OOM degradation ladder — no pin, no cache entry, locality lost
 /// for this step only, correctness untouched).
+///
+/// Narrow-lock protocol (the tentpole): the global cache lock is held
+/// only to *reserve or hit* — every H2D read and arena→arena peer copy
+/// runs with the lock dropped, behind the destination block's pending
+/// latch. No copy in this function (or anywhere in the engine) moves
+/// bytes while holding the cache lock.
 fn acquire_input<T: Scalar>(
     dev: usize,
     core: &EngineCore,
@@ -1167,63 +1373,132 @@ fn acquire_input<T: Scalar>(
         core.lock_caches().force_alloc_failure(dev, 1);
     }
     let mut attempt = 0u32;
-    // The guard is held through the source handling below: peer copies
-    // read a source block that stays pinned only while the directory
-    // cannot shift under us.
-    let (acq, _caches) = loop {
-        let mut caches = core.lock_caches();
-        let mut acq = caches.acquire(dev, key, tile_bytes);
-        if acq.is_none() && attempt == 0 {
-            // sync & retry (see the C-block acquire above): release
-            // readers of *prior* steps only — the current step's other
-            // operand must stay pinned until its kernel runs.
-            for key in releases.drain(..keep_from) {
-                caches.release(dev, &key);
-            }
-            acq = caches.acquire(dev, key, tile_bytes);
-        }
-        match acq {
-            Some(a) => break (a, caches),
-            None if attempt < RETRY_MAX => {
-                drop(caches);
-                attempt += 1;
-                job.retried.fetch_add(1, Ordering::Relaxed);
-                core.rec.record(dev, SpanKind::Retry, core.rec.now(), attempt as f64, jid);
-                std::thread::sleep(Duration::from_micros(50 * attempt as u64));
-            }
-            None => {
-                // Host-path fallback: a private copy, padded exactly
-                // as the cached path pads (zero edges, identity
-                // diagonal).
-                drop(caches);
-                job.degraded.fetch_add(1, Ordering::Relaxed);
-                core.flight.record(Some(dev), "degrade", jid, 0, 0.0);
-                let h2d_t0 = core.rec.now();
-                let mut v = vec![T::zero(); tile_elems];
-                mat.read_tile(tile.ti, tile.tj, &mut v, t);
-                if tile.mat != MatId::C && tile.ti == tile.tj {
-                    let (h, _) = mat.grid.tile_dims(tile.ti, tile.tj);
-                    for j in h..t {
-                        v[j * t + j] = T::one();
-                    }
+    loop {
+        let ticket: FillTicket = loop {
+            let mut caches = core.lock_caches();
+            let mut acq = caches.acquire_async(dev, key, tile_bytes);
+            if acq.is_none() && attempt == 0 {
+                // sync & retry (see the C-block acquire above): release
+                // readers of *prior* steps only — the current step's
+                // other operand must stay pinned until its kernel runs.
+                // Lookahead pins are flushed wholesale: prefetch must
+                // never cost a degradation that prefetch-off avoids.
+                for key in releases.drain(..keep_from) {
+                    caches.release(dev, &key);
                 }
-                job.transfers.count_host(tile.mat);
-                core.rec.record(dev, SpanKind::H2d, h2d_t0, tile_bytes as f64, jid);
-                return Ok(Operand::Host(v));
+                let flushed = core.prefetch_flush(&mut caches, dev);
+                if flushed > 0 {
+                    job.transfers.prefetch_wasted.fetch_add(flushed, Ordering::Relaxed);
+                }
+                acq = caches.acquire_async(dev, key, tile_bytes);
             }
+            match acq {
+                Some(AsyncAcquire::Ready(a)) => {
+                    // Resident and valid. If the lookahead staged it,
+                    // consume the ledger entry: its TTL pin drops here,
+                    // while the pin this acquire just took rides to the
+                    // round's sync point as usual.
+                    if core.prefetch_consume(&mut caches, dev, &key) {
+                        job.transfers.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    drop(caches);
+                    job.transfers.l1_hits.fetch_add(1, Ordering::Relaxed);
+                    releases.push(key);
+                    return Ok(Operand::Arena(a.offset));
+                }
+                Some(AsyncAcquire::InFlight { offset, latch }) => {
+                    // Another filler is moving these bytes right now:
+                    // wait on the latch WITHOUT the global lock (the
+                    // lookup already pinned the block for us).
+                    drop(caches);
+                    if latch.wait() {
+                        job.transfers.l1_hits.fetch_add(1, Ordering::Relaxed);
+                        releases.push(key);
+                        return Ok(Operand::Arena(offset));
+                    }
+                    // The fill aborted (write-back raced it): drop our
+                    // pin on the doomed block and start over.
+                    core.lock_caches().release(dev, &key);
+                }
+                Some(AsyncAcquire::Fill(ticket)) => break ticket,
+                None if attempt < RETRY_MAX => {
+                    drop(caches);
+                    attempt += 1;
+                    job.retried.fetch_add(1, Ordering::Relaxed);
+                    core.rec.record(dev, SpanKind::Retry, core.rec.now(), attempt as f64, jid);
+                    std::thread::sleep(Duration::from_micros(50 * attempt as u64));
+                }
+                None => {
+                    // Host-path fallback: a private copy, padded exactly
+                    // as the cached path pads (zero edges, identity
+                    // diagonal). Recorded as `HostFallback`, NOT `H2d`:
+                    // these bytes never cross a DMA lane, so they must
+                    // not inflate COMM or the Table V transfer volumes.
+                    drop(caches);
+                    job.degraded.fetch_add(1, Ordering::Relaxed);
+                    core.flight.record(Some(dev), "degrade", jid, 0, 0.0);
+                    let fb_t0 = core.rec.now();
+                    let mut v = vec![T::zero(); tile_elems];
+                    mat.read_tile(tile.ti, tile.tj, &mut v, t);
+                    if tile.mat != MatId::C && tile.ti == tile.tj {
+                        let (h, _) = mat.grid.tile_dims(tile.ti, tile.tj);
+                        for j in h..t {
+                            v[j * t + j] = T::one();
+                        }
+                    }
+                    job.transfers.count_host(tile.mat);
+                    core.rec.record(dev, SpanKind::HostFallback, fb_t0, tile_bytes as f64, jid);
+                    return Ok(Operand::Host(v));
+                }
+            }
+        };
+        // Reserved: this worker owns the fill. Copy off-lock, then
+        // latch ready under a brief re-lock.
+        let offset = ticket.offset;
+        fill_input_block(dev, core, job, tile, &ticket);
+        let live = core.lock_caches().complete_fill(dev, &key, ticket.peer_src());
+        if live {
+            releases.push(key);
+            return Ok(Operand::Arena(offset));
         }
-    };
-    releases.push(key);
-    match acq.source {
-        Source::L1 => {
-            job.transfers.l1_hits.fetch_add(1, Ordering::Relaxed);
-        }
+        // A write-back invalidated the tile mid-fill: the bytes are
+        // stale (host RAM is the master again). Drop the filler pin on
+        // the doomed block and re-acquire from scratch.
+        core.lock_caches().release(dev, &key);
+    }
+}
+
+/// Move one input tile's bytes into a reserved (pending) arena block —
+/// the off-lock half of the narrow-lock fill protocol. The pending
+/// state makes this worker the block's exclusive writer, and a P2P
+/// source is reader-pinned by the ticket, so neither copy direction
+/// races cache traffic. Applies the bounded idempotent-redo transfer
+/// fault ladder and the fill-time pads (zero edges; identity diagonal
+/// for A/B diagonal tiles — exact for every consumer since zero
+/// rows/cols elsewhere annihilate the pad 1s, and it must land BEFORE
+/// the ready latch: once ready a block is immutable and may be
+/// peer-read off-lock). Charges the job's transfer counters and the
+/// true-kind span (H2d / P2p) — shared verbatim by demand fills and
+/// the lookahead prefetcher.
+fn fill_input_block<T: Scalar>(
+    dev: usize,
+    core: &EngineCore,
+    job: &JobState<'_, T>,
+    tile: TileRef,
+    ticket: &FillTicket,
+) {
+    let t = job.cfg.t;
+    let tile_elems = t * t;
+    let tile_bytes = block_bytes::<T>(t);
+    let mat = job.mats[tile.p].of(tile.mat);
+    let jid = job.trace_id.load(Ordering::Relaxed);
+    core.inflight_transfers.fetch_add(1, Ordering::Relaxed);
+    match ticket.source {
+        Source::L1 => unreachable!("a fill ticket never plans an L1 hit"),
         Source::Peer { src, src_offset } => {
-            // arena→arena copy under the cache lock (the source block is
-            // pinned by the directory entry while we hold the lock).
             let p2p_t0 = core.rec.now();
-            let dst = core.arenas[dev].slice::<T>(acq.offset, tile_elems);
-            let srcbuf = core.arenas[src].slice::<T>(src_offset, tile_elems);
+            let dst = core.arenas[dev].slice::<T>(ticket.offset, tile_elems);
+            let srcbuf: &[T] = &*core.arenas[src].slice::<T>(src_offset, tile_elems);
             dst.copy_from_slice(srcbuf);
             let mut xfer = 0u32;
             while xfer < RETRY_MAX && core.faults.tick(dev, OpKind::P2p) {
@@ -1238,7 +1513,7 @@ fn acquire_input<T: Scalar>(
         }
         Source::Host => {
             let h2d_t0 = core.rec.now();
-            let dst = core.arenas[dev].slice::<T>(acq.offset, tile_elems);
+            let dst = core.arenas[dev].slice::<T>(ticket.offset, tile_elems);
             let (h, w) = mat.grid.tile_dims(tile.ti, tile.tj);
             if h < t || w < t {
                 // edge tiles: zero padding is semantically load-bearing
@@ -1260,26 +1535,111 @@ fn acquire_input<T: Scalar>(
             core.rec.record(dev, SpanKind::H2d, h2d_t0, tile_bytes as f64, jid);
         }
     }
-    // Identity-pad diagonal input tiles of the A/B operands: exact for
-    // every consumer (zero rows/cols elsewhere annihilate the pad 1s)
-    // and required by the TRSM/TRMM diagonal solves. Applied on EVERY
-    // acquire, not just host loads: cache keys ignore the operand role,
-    // so an L1/L2 hit may serve a tile that was cached through a role
-    // (a C chain read) that left zeros on the padded diagonal. The
-    // write is idempotent, runs under the cache lock, and is harmless
-    // to concurrent same-role consumers (they want the same 1s).
     if tile.mat != MatId::C && tile.ti == tile.tj {
         let (h, _) = mat.grid.tile_dims(tile.ti, tile.tj);
         if h < t {
             let pack_t0 = core.rec.now();
-            let dst = core.arenas[dev].slice::<T>(acq.offset, tile_elems);
+            let dst = core.arenas[dev].slice::<T>(ticket.offset, tile_elems);
             for j in h..t {
                 dst[j * t + j] = T::one();
             }
             core.rec.record(dev, SpanKind::Pack, pack_t0, 0.0, jid);
         }
     }
-    Ok(Operand::Arena(acq.offset))
+    core.inflight_transfers.fetch_sub(1, Ordering::Relaxed);
+}
+
+/// How many scheduler rounds a prefetched-but-unused tile keeps its
+/// ledger pin before the consume-or-expire sweep reclaims it.
+const PREFETCH_TTL: u32 = 3;
+
+/// The lookahead prefetch pass: walk the upcoming tasks in this
+/// device's scheduler window — the round's still-unexecuted bound
+/// tasks, then the reservation-station backlog — and stage their
+/// first-unexecuted-step operands ahead of demand. Fetches reuse the
+/// narrow-lock fill protocol (L2/peer-first, true-kind spans), are
+/// TTL-pinned through the consume-or-expire ledger, and the depth
+/// adapts to free arena headroom: lookahead never evicts on behalf of
+/// a guess and never enters the OOM ladder — pressure simply stops the
+/// pass.
+fn prefetch_pass<T: Scalar>(dev: usize, core: &EngineCore, job: &JobState<'_, T>, bound: &[usize]) {
+    let depth = job.cfg.prefetch_depth();
+    if depth == 0 {
+        return;
+    }
+    let tile_bytes = block_bytes::<T>(job.cfg.t);
+    let jid = job.trace_id.load(Ordering::Relaxed);
+    // Candidate operands in expected execution order. bound[0] is
+    // skipped: its demand fetch starts immediately after this pass, so
+    // staging it buys no overlap.
+    let mut cands: Vec<TileRef> = Vec::new();
+    {
+        let rs = job.stations[dev].lock().unwrap_or_else(|e| e.into_inner());
+        let upcoming = bound.iter().copied().skip(1).chain(rs.iter().map(|s| s.task));
+        'walk: for tid in upcoming {
+            let task = &job.tasks[tid];
+            let start = job.resume[tid].load(Ordering::Relaxed);
+            let Some(step) = task.steps.get(start) else { continue };
+            for tile in [step.a, step.b].into_iter().flatten() {
+                cands.push(tile);
+                if cands.len() >= depth {
+                    break 'walk;
+                }
+            }
+        }
+    }
+    if cands.is_empty() {
+        return;
+    }
+    let pf_t0 = core.rec.now();
+    let mut staged_bytes = 0.0f64;
+    for tile in cands {
+        let key = job.mats[tile.p].key(tile);
+        let mut caches = core.lock_caches();
+        // Adaptive depth: spend spare headroom only, keeping blocks
+        // free for the demand path's working set (C + two inputs).
+        if caches.arena_headroom(dev) < tile_bytes.saturating_mul(3) {
+            break;
+        }
+        // Already resident (ready, mid-fill, or a previous ledger
+        // entry): residency is the goal, skip without touching LRU
+        // order or hit counters.
+        if caches.locality_score(dev, &key) == 2 {
+            continue;
+        }
+        match caches.acquire_async(dev, key, tile_bytes) {
+            Some(AsyncAcquire::Fill(ticket)) => {
+                drop(caches);
+                fill_input_block(dev, core, job, tile, &ticket);
+                let live = core.lock_caches().complete_fill(dev, &key, ticket.peer_src());
+                if live {
+                    core.prefetched[dev]
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .insert(key, PREFETCH_TTL);
+                    staged_bytes += tile_bytes as f64;
+                } else {
+                    // Write-back raced the staging copy: drop the pin,
+                    // demand will refetch if the tile still matters.
+                    core.lock_caches().release(dev, &key);
+                }
+            }
+            // Raced to residency between probe and reserve (defensive —
+            // the probe and acquire share one guard): drop the lookup's
+            // pin and move on.
+            Some(AsyncAcquire::Ready(_)) | Some(AsyncAcquire::InFlight { .. }) => {
+                caches.release(dev, &key);
+            }
+            // Arena pressure: the lookahead lane stops; no retries, no
+            // ladder, no wedging the demand path.
+            None => break,
+        }
+    }
+    if staged_bytes > 0.0 {
+        // One envelope span per pass (ev() == None keeps it out of the
+        // COMM analyses; the copies above recorded their true kinds).
+        core.rec.record(dev, SpanKind::Prefetch, pf_t0, staged_bytes, jid);
+    }
 }
 
 /// Write the accumulator back to the host C tile honouring the task's

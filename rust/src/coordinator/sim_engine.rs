@@ -522,6 +522,56 @@ impl<'a> SimEngine<'a> {
             return;
         }
 
+        // -- lookahead prefetch (real-engine parity): with a configured
+        //    depth, stage input tiles of upcoming RS tasks behind this
+        //    round's work so their transfers ride out the sync wait,
+        //    exactly like the per-stream double buffering above but
+        //    across the scheduler window. Runs only in rounds that
+        //    otherwise progressed (a parked round staging L1 hits would
+        //    re-wake itself forever), stops at the first admission
+        //    failure (never wedges the cache), and at depth 0 — the
+        //    default — leaves the historical schedule byte-identical.
+        let depth = self.cfg.prefetch_depth();
+        if depth > 0 {
+            let backlog: Vec<usize> = self.workers[d].rs.iter().map(|s| s.task).collect();
+            let stream = 0;
+            let mut done_at = self.workers[d].stream_free[stream];
+            let mut staged = 0usize;
+            'lookahead: for tid in backlog {
+                let Some(step) = self.tasks[tid].steps.first() else { continue };
+                for tile in step.inputs() {
+                    if staged >= depth {
+                        break 'lookahead;
+                    }
+                    let key = self.keymap.key(tile);
+                    if self.caches.locality_score(d, &key) == 2 {
+                        continue; // already resident: nothing to stage
+                    }
+                    let Some(acq) = self.caches.acquire(d, key, self.keymap.tile_bytes()) else {
+                        break 'lookahead; // cache pressure: stop here
+                    };
+                    self.alloc_cost += acq.alloc_cost;
+                    let bytes = self.keymap.transfer_bytes(tile);
+                    match acq.source {
+                        Source::L1 => {}
+                        Source::Peer { src, .. } => {
+                            let done = self.topo.book_p2p(src, d, bytes, done_at);
+                            self.trace.record(d, stream, EvKind::P2p, done_at, done, bytes as f64);
+                            done_at = done;
+                        }
+                        Source::Host => {
+                            let done = self.topo.book_hd(d, Dir::H2D, bytes, done_at);
+                            self.trace.record(d, stream, EvKind::H2d, done_at, done, bytes as f64);
+                            done_at = done;
+                        }
+                    }
+                    self.workers[d].deferred_releases.push(key);
+                    staged += 1;
+                }
+            }
+            self.workers[d].stream_free[stream] = done_at;
+        }
+
         // -- line 16: schedule the sync point closing the round; the
         //    prefetches above keep the barrier off the transfer path.
         let t_sync = self.workers[d]
@@ -692,6 +742,35 @@ mod tests {
             degraded.makespan > healthy.makespan,
             "losing a device must not speed the machine up"
         );
+    }
+
+    #[test]
+    fn prefetch_depth_keeps_the_sim_sound() {
+        // Lookahead staging must not change what executes — only when
+        // transfers are booked. Same tasks, still feasible, and the
+        // trace keeps the same span taxonomy (every byte is H2d/P2p,
+        // so comm_volumes stays comparable with the real engine).
+        let machine = toy(3, 64 << 20);
+        let w = square_workload(Routine::Gemm, 512, 128, Dtype::F64);
+        let plain = simulate(
+            &RunConfig { t: 128, ..Default::default() },
+            &machine, &w.ts, w.keymap.clone(), w.dtype,
+        );
+        let pf = simulate(
+            &RunConfig { t: 128, prefetch: Some(4), ..Default::default() },
+            &machine, &w.ts, w.keymap.clone(), w.dtype,
+        );
+        assert!(pf.feasible);
+        assert_eq!(
+            pf.tasks_per_worker.iter().sum::<usize>(),
+            plain.tasks_per_worker.iter().sum::<usize>(),
+        );
+        assert!(pf.makespan > 0.0 && pf.makespan.is_finite());
+        let vol_plain: f64 = crate::trace::comm_volumes(&plain.trace)
+            .iter().map(|v| v.hd_bytes + v.p2p_bytes).sum();
+        let vol_pf: f64 = crate::trace::comm_volumes(&pf.trace)
+            .iter().map(|v| v.hd_bytes + v.p2p_bytes).sum();
+        assert!(vol_pf >= vol_plain * 0.5, "prefetch cannot erase demand transfers");
     }
 
     #[test]

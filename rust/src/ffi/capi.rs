@@ -80,6 +80,9 @@ pub struct BlasxConfigC {
     pub max_inflight: c_int,
     /// Per-tenant in-flight job quota (`<= 0`: default).
     pub tenant_quota: c_int,
+    /// Lookahead prefetch depth: tiles each device worker stages ahead
+    /// of demand (`<= 0`: default — `BLASX_PREFETCH_DEPTH`, else off).
+    pub prefetch: c_int,
     /// Fault-injection schedule in the `BLASX_FAULTS` grammar
     /// (NUL-terminated; NULL or empty: no injected faults).
     pub faults: *const c_char,
@@ -161,6 +164,9 @@ unsafe fn init_context(cfg: *const BlasxConfigC) -> Result<Context> {
     }
     if c.tenant_quota > 0 {
         ctx = ctx.with_tenant_quota(c.tenant_quota as usize);
+    }
+    if c.prefetch > 0 {
+        ctx = ctx.with_prefetch(Some(c.prefetch as usize));
     }
     if !c.faults.is_null() {
         let text = std::ffi::CStr::from_ptr(c.faults)
@@ -555,6 +561,12 @@ pub struct BlasxStatsC {
     pub degraded: u64,
     /// Tasks migrated off devices lost mid-job.
     pub migrated: u64,
+    /// Demand acquires served from a tile staged by lookahead prefetch
+    /// (the transfer happened early, off the critical path).
+    pub prefetch_hits: u64,
+    /// Prefetched tiles dropped unconsumed (TTL expiry, invalidation,
+    /// or memory-pressure flush).
+    pub prefetch_wasted: u64,
 }
 
 /// Snapshot the job's live observability counters into `*out`.
@@ -585,6 +597,8 @@ pub unsafe extern "C" fn blasx_job_stats(job: *const BlasxJob, out: *mut BlasxSt
         retried: f.retried as u64,
         degraded: f.degraded as u64,
         migrated: f.migrated as u64,
+        prefetch_hits: s.prefetch_hits as u64,
+        prefetch_wasted: s.prefetch_wasted as u64,
     };
     BLASX_OK
 }

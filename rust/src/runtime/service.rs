@@ -944,6 +944,7 @@ fn gather_sample(inner: &Inner) -> TelemetrySample {
         for dev in 0..inner.n_devices {
             let hs = caches.heap_stats(dev);
             let cs = caches.stats(dev);
+            let (pf_hits, pf_wasted) = inner.core.prefetch_counters(dev);
             s.devices.push(DevGauges {
                 dev,
                 dead: inner.core.is_dead(dev),
@@ -954,12 +955,15 @@ fn gather_sample(inner: &Inner) -> TelemetrySample {
                 cache_misses: cs.misses,
                 cache_evictions: cs.evictions,
                 hit_rate: 0.0,
+                prefetch_hits: pf_hits as u64,
+                prefetch_wasted: pf_wasted as u64,
                 busy_nanos: busy.get(dev).copied().unwrap_or(0),
                 busy_fraction: 0.0,
                 rounds: rounds.get(dev).copied().unwrap_or(0),
             });
         }
     }
+    s.inflight_transfers = inner.core.inflight_transfers();
     let jg = inner.metrics.job_gauges();
     s.in_flight = jg.in_flight;
     s.admitted = jg.admitted;

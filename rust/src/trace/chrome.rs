@@ -41,6 +41,8 @@ fn span_name(kind: SpanKind) -> &'static str {
         SpanKind::Fault => "fault",
         SpanKind::Retry => "retry",
         SpanKind::Migrate => "migrate",
+        SpanKind::Prefetch => "prefetch",
+        SpanKind::HostFallback => "host-fallback",
     }
 }
 

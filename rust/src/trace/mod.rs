@@ -17,7 +17,10 @@ pub use chrome::chrome_trace;
 pub use events::{EvKind, Event, Trace};
 pub use flight::{FlightEvent, FlightRecorder, FLIGHT_RING};
 pub use metrics::{tenant_id, Histogram, MetricsRegistry, RetiredJob};
-pub use profile::{all_profiles, balance_gap, comm_volumes, device_profile, CommVolume, DeviceProfile};
+pub use profile::{
+    all_profiles, balance_gap, comm_volumes, device_profile, overlap_report, CommVolume,
+    DeviceOverlap, DeviceProfile, OverlapReport,
+};
 pub use prometheus::TelemetryServer;
 pub use spans::{JobRec, Recorder, Span, SpanKind};
 pub use telemetry::{DevGauges, Telemetry, TelemetrySample, TELEMETRY_RING};

@@ -64,6 +64,84 @@ pub fn comm_volumes(trace: &Trace) -> Vec<CommVolume> {
         .collect()
 }
 
+/// Comm/compute overlap of one device, in seconds: how much of its
+/// communication window ran concurrently with kernels.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DeviceOverlap {
+    /// Union length of this device's comm intervals (H2D + D2H + P2P).
+    pub comm: f64,
+    /// Comm time covered by this device's *own* kernels (nonzero only
+    /// when a device truly double-buffers: a transfer lane moving bytes
+    /// while the same device computes).
+    pub hidden_local: f64,
+    /// Comm time covered by kernels running concurrently on *any*
+    /// device — the machine-level "communication hidden under
+    /// computation" of the paper's overlap claim.
+    pub hidden_global: f64,
+}
+
+/// The paper's Fig. 8 made quantitative: the fraction of communication
+/// time hidden under concurrently executing kernels.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OverlapReport {
+    pub per_device: Vec<DeviceOverlap>,
+    /// Σ over devices of the per-device comm unions.
+    pub comm_total: f64,
+    /// Σ over devices of `hidden_global`.
+    pub comm_hidden: f64,
+}
+
+impl OverlapReport {
+    /// The headline number: comm-hidden-under-compute fraction in
+    /// `[0, 1]` (0 when the trace moved no bytes).
+    pub fn hidden_frac(&self) -> f64 {
+        if self.comm_total > 0.0 {
+            (self.comm_hidden / self.comm_total).clamp(0.0, 1.0)
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Quantify comm/compute overlap from a (wall-clock or simulated)
+/// trace: for each device, how much of its communication-interval
+/// union is covered by its own kernels (`hidden_local`) and by kernels
+/// anywhere on the machine (`hidden_global`). Degraded host-fallback
+/// copies never reach the `Trace` (`SpanKind::HostFallback` has no
+/// `EvKind`), so they cannot inflate these numbers.
+pub fn overlap_report(trace: &Trace) -> OverlapReport {
+    let n = trace.n_devices();
+    let mut all_kern: Vec<(f64, f64)> = Vec::new();
+    let mut per_comm: Vec<Vec<(f64, f64)>> = vec![Vec::new(); n];
+    let mut per_kern: Vec<Vec<(f64, f64)>> = vec![Vec::new(); n];
+    for (d, (comm, kern)) in per_comm.iter_mut().zip(per_kern.iter_mut()).enumerate() {
+        for e in trace.of_device(d) {
+            match e.kind {
+                EvKind::Kernel => {
+                    kern.push((e.start, e.end));
+                    all_kern.push((e.start, e.end));
+                }
+                _ => comm.push((e.start, e.end)),
+            }
+        }
+    }
+    let mut report = OverlapReport::default();
+    for d in 0..n {
+        let comm = union_len(&mut per_comm[d].clone());
+        let uncovered_local = uncovered_len(&mut per_comm[d].clone(), &mut per_kern[d].clone());
+        let uncovered_global = uncovered_len(&mut per_comm[d].clone(), &mut all_kern.clone());
+        let dd = DeviceOverlap {
+            comm,
+            hidden_local: (comm - uncovered_local).max(0.0),
+            hidden_global: (comm - uncovered_global).max(0.0),
+        };
+        report.comm_total += dd.comm;
+        report.comm_hidden += dd.hidden_global;
+        report.per_device.push(dd);
+    }
+    report
+}
+
 /// The paper's load-balance gap: elapsed-time difference between the
 /// busiest and least-busy device (using COMPT+COMM as "busy").
 pub fn balance_gap(trace: &Trace) -> f64 {
@@ -113,6 +191,32 @@ mod tests {
         assert_eq!(v[0].hd_bytes, 8e6);
         assert_eq!(v[0].p2p_bytes, 0.0);
         assert_eq!(v[1].p2p_bytes, 4e6);
+    }
+
+    #[test]
+    fn overlap_fractions_local_vs_global() {
+        let t = mk_trace();
+        let r = overlap_report(&t);
+        // dev0: comm [1,3) (2s), own kernel [0,2) covers [1,2) → 1s local
+        assert_eq!(r.per_device[0].comm, 2.0);
+        assert_eq!(r.per_device[0].hidden_local, 1.0);
+        assert_eq!(r.per_device[0].hidden_global, 1.0);
+        // dev1: comm [0,1), no own kernels, but dev0's kernel [0,2)
+        // covers it entirely → machine-level overlap
+        assert_eq!(r.per_device[1].comm, 1.0);
+        assert_eq!(r.per_device[1].hidden_local, 0.0);
+        assert_eq!(r.per_device[1].hidden_global, 1.0);
+        assert_eq!(r.comm_total, 3.0);
+        assert_eq!(r.comm_hidden, 2.0);
+        assert!((r.hidden_frac() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_of_empty_trace_is_zero() {
+        let r = overlap_report(&Trace::new());
+        assert_eq!(r.comm_total, 0.0);
+        assert_eq!(r.hidden_frac(), 0.0);
+        assert!(r.per_device.is_empty());
     }
 
     #[test]

@@ -112,6 +112,28 @@ pub fn render(s: &TelemetrySample) -> String {
     for d in &s.devices {
         emit!("worker_rounds_total", "dev", d.dev, d.rounds as f64);
     }
+    family(
+        "prefetch_hits_total",
+        "Demand acquires served by a tile staged ahead of time by lookahead prefetch.",
+        "counter",
+    );
+    for d in &s.devices {
+        emit!("prefetch_hits_total", "dev", d.dev, d.prefetch_hits as f64);
+    }
+    family(
+        "prefetch_wasted_total",
+        "Prefetched tiles dropped unconsumed (TTL expiry, invalidation, pressure flush).",
+        "counter",
+    );
+    for d in &s.devices {
+        emit!("prefetch_wasted_total", "dev", d.dev, d.prefetch_wasted as f64);
+    }
+    family(
+        "inflight_transfers",
+        "Tile transfers (fills, preloads, write-backs) currently executing off the cache lock.",
+        "gauge",
+    );
+    emit!("inflight_transfers", s.inflight_transfers as f64);
 
     family("queue_depth", "Jobs occupying admission-table slots.", "gauge");
     emit!("queue_depth", s.queue_depth as f64);
@@ -316,6 +338,8 @@ mod tests {
             cache_hits: 30,
             cache_misses: 10,
             hit_rate: 0.75,
+            prefetch_hits: 9,
+            prefetch_wasted: 2,
             busy_fraction: 0.5,
             rounds: 42,
             ..Default::default()
@@ -344,12 +368,17 @@ mod tests {
             "blasx_device_up",
             "blasx_jobs_rejected_total",
             "blasx_worker_busy_fraction",
+            "blasx_prefetch_hits_total",
+            "blasx_prefetch_wasted_total",
+            "blasx_inflight_transfers",
         ] {
             assert!(text.contains(&format!("# TYPE {family} ")), "missing family {family}");
         }
         assert!(text.contains("blasx_device_up{dev=\"1\"} 0"), "dead device renders 0");
         assert!(text.contains("blasx_cache_hit_rate{dev=\"0\"} 0.75"));
         assert!(text.contains("blasx_tenant_inflight{tenant=\"2\"} 1"));
+        assert!(text.contains("blasx_prefetch_hits_total{dev=\"0\"} 9"));
+        assert!(text.contains("blasx_prefetch_wasted_total{dev=\"0\"} 2"));
     }
 
     #[test]

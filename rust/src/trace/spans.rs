@@ -68,6 +68,18 @@ pub enum SpanKind {
     /// A task abandoned on a dead device and re-admitted, or drained
     /// from a dead device's station by a survivor. `amount` = task id.
     Migrate,
+    /// One lookahead-prefetch pass of the asynchronous transfer
+    /// pipeline (the individual copies it issues are recorded with
+    /// their true kinds, `H2d`/`P2p`, so the Fig. 8 / Table V analyses
+    /// see them; this span is the pass envelope). `amount` = bytes
+    /// prefetched.
+    Prefetch,
+    /// A private host-side operand copy on the degradation ladder
+    /// (arena OOM after bounded retries, or a transfer-fault fallback).
+    /// Deliberately distinct from `H2d`: no arena DMA happened, so
+    /// these bytes must NOT inflate the COMM fraction or the Table V
+    /// transfer volumes. `amount` = bytes copied.
+    HostFallback,
 }
 
 impl SpanKind {
@@ -293,6 +305,25 @@ mod tests {
         assert!(p.compt > 0.0, "kernel span must surface as COMPT");
         let vols = comm_volumes(&trace);
         assert_eq!(vols[1].hd_bytes, 4096.0);
+    }
+
+    #[test]
+    fn host_fallback_and_prefetch_stay_out_of_comm_analyses() {
+        // Regression: the degraded host-fallback copy used to be
+        // recorded as H2d, inflating the Fig. 8 COMM fraction and the
+        // Table V transfer volumes with bytes that never crossed an
+        // arena boundary. The distinct kinds must not map to an EvKind.
+        assert_eq!(SpanKind::HostFallback.ev(), None);
+        assert_eq!(SpanKind::Prefetch.ev(), None);
+        let r = enabled_recorder(1);
+        let t0 = r.now();
+        r.record(0, SpanKind::H2d, t0, 1024.0, 1);
+        r.record(0, SpanKind::HostFallback, t0, 4096.0, 1);
+        r.record(0, SpanKind::Prefetch, t0, 2048.0, 1);
+        let trace = r.to_trace();
+        assert_eq!(trace.events.len(), 1, "only the true H2d flows into the Trace");
+        let vols = comm_volumes(&trace);
+        assert_eq!(vols[0].hd_bytes, 1024.0, "fallback/prefetch-envelope bytes excluded");
     }
 
     #[test]

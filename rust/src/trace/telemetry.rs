@@ -60,6 +60,11 @@ pub struct DevGauges {
     /// Hit rate over the window since the previous sample
     /// (`NaN`-free: 0.0 when the window saw no lookups).
     pub hit_rate: f64,
+    /// Cumulative demand acquires served by a prefetched tile.
+    pub prefetch_hits: u64,
+    /// Cumulative prefetched tiles dropped unconsumed (TTL expiry,
+    /// invalidation, or pressure flush).
+    pub prefetch_wasted: u64,
     /// Cumulative busy nanoseconds for this device's worker.
     pub busy_nanos: u64,
     /// Busy fraction over the window since the previous sample.
@@ -83,6 +88,9 @@ pub struct TelemetrySample {
     pub blocked: usize,
     /// Jobs admitted and not yet retired.
     pub in_flight: usize,
+    /// Tile transfers (fills, preloads, write-backs) in flight off the
+    /// cache lock at the sampling instant.
+    pub inflight_transfers: usize,
     /// Cumulative admission counters.
     pub admitted: u64,
     pub retired: u64,

@@ -1,0 +1,323 @@
+//! The asynchronous tile-transfer pipeline: lookahead prefetch must be
+//! an *invisible* optimization — bit-for-bit identical results with it
+//! on or off, under concurrent mixed-routine load, under injected
+//! transfer/OOM faults, and under arena pressure where prefetched
+//! blocks must expire rather than wedge the OOM ladder. The cache-level
+//! tests pin the latch protocol itself: one racer fills, everyone else
+//! waits off-lock, and a block mid-fill is never served over P2P.
+//!
+//! Run under both the default test harness and `RUST_TEST_THREADS=1`,
+//! and in CI additionally with a `BLASX_FAULTS` schedule (the chaos
+//! job) and with `BLASX_PREFETCH_DEPTH` exported over the concurrency
+//! suites.
+
+use blasx::api::types::{Diag, Side, Trans, Uplo};
+use blasx::api::{self, Context};
+use blasx::cache::{AsyncAcquire, Source, TileCacheSet};
+use blasx::fault::FaultPlan;
+use blasx::mem::AllocStrategy;
+use blasx::tile::{MatId, TileKey};
+use blasx::util::prng::Prng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+
+fn prefetch_ctx() -> Context {
+    Context::new(2).with_arena(8 << 20).with_tile(32).with_prefetch(Some(4))
+}
+
+/// The healthy serial reference: same geometry, one-shot engine,
+/// prefetch forced off (hermetic against `BLASX_PREFETCH_DEPTH` in the
+/// environment — the chaos job exports it over this whole suite).
+fn serial_ctx() -> Context {
+    Context::new(2)
+        .with_arena(8 << 20)
+        .with_tile(32)
+        .with_persistent(false)
+        .with_prefetch(Some(0))
+}
+
+fn rand(p: &mut Prng, n: usize) -> Vec<f64> {
+    let mut v = vec![0.0; n];
+    p.fill_f64(&mut v, -1.0, 1.0);
+    v
+}
+
+fn upper_tri(p: &mut Prng, n: usize) -> Vec<f64> {
+    let mut a = rand(p, n * n);
+    for x in a.iter_mut() {
+        *x *= 0.5 / (n as f64).sqrt();
+    }
+    for i in 0..n {
+        a[i * n + i] = 2.0;
+    }
+    a
+}
+
+/// One client's mixed-routine workload (dgemm → dsyrk → in-place
+/// dtrsm on the dgemm output, twice). Returns the chain result and
+/// the syrk output.
+fn client_workload(ctx: &Context, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let (m, n, k) = (96, 64, 48);
+    let mut p = Prng::new(seed);
+    let a = rand(&mut p, m * k);
+    let b = rand(&mut p, k * n);
+    let tri = upper_tri(&mut p, m);
+    let sa = rand(&mut p, n * k);
+    let mut c = vec![0.0; m * n];
+    let mut sc = rand(&mut p, n * n);
+    ctx.invalidate_host(&a);
+    ctx.invalidate_host(&b);
+    ctx.invalidate_host(&tri);
+    ctx.invalidate_host(&sa);
+    for _ in 0..2 {
+        api::dgemm(ctx, Trans::No, Trans::No, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c, m)
+            .unwrap();
+        api::syrk(ctx, Uplo::Lower, Trans::No, n, k, 0.7, &sa, n, 0.4, &mut sc, n).unwrap();
+        api::trsm(ctx, Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, m, n, 1.0, &tri, m, &mut c, m)
+            .unwrap();
+    }
+    (c, sc)
+}
+
+/// The headline invariant: 4 clients hammering one runtime with
+/// lookahead prefetch enabled produce results bit-for-bit identical to
+/// serial execution with prefetch off. Prefetch may move bytes early;
+/// it must never change what a kernel computes or in which k-order.
+#[test]
+fn prefetch_on_concurrent_load_matches_serial_bit_for_bit() {
+    let ctx = prefetch_ctx();
+    let results: Vec<(u64, Vec<f64>, Vec<f64>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4u64)
+            .map(|seed| {
+                let ctx = ctx.clone();
+                scope.spawn(move || {
+                    let (c, sc) = client_workload(&ctx, 600 + seed);
+                    (seed, c, sc)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(ctx.runtime_calls(), 24);
+    assert_eq!(ctx.jobs_in_flight(), 0);
+    for (seed, c, sc) in results {
+        let (want_c, want_sc) = client_workload(&serial_ctx(), 600 + seed);
+        assert_eq!(c, want_c, "client {seed}: chain diverged with prefetch on");
+        assert_eq!(sc, want_sc, "client {seed}: syrk diverged with prefetch on");
+    }
+}
+
+/// Transfer and allocation faults landing on the prefetch path must be
+/// absorbed by the same ladders as demand fills: bounded idempotent
+/// redo for h2d/p2p, sync-and-retry (which flushes the prefetch
+/// ledger) then host degradation for OOM. No wedge, no divergence.
+#[test]
+fn faults_on_prefetch_path_stay_bit_for_bit() {
+    let plan =
+        FaultPlan::parse("h2d@dev0:op2x3; p2p@dev1:op4x2; oom@dev0:op6; kernel@dev1:op8")
+            .unwrap();
+    let ctx = Context::new(2)
+        .with_arena(8 << 20)
+        .with_tile(32)
+        .with_prefetch(Some(4))
+        .with_fault_plan(Some(plan));
+    let results: Vec<(u64, Vec<f64>, Vec<f64>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4u64)
+            .map(|seed| {
+                let ctx = ctx.clone();
+                scope.spawn(move || {
+                    let (c, sc) = client_workload(&ctx, 650 + seed);
+                    (seed, c, sc)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(ctx.jobs_in_flight(), 0, "fault recovery must not leak in-flight jobs");
+    for (seed, c, sc) in results {
+        let (want_c, want_sc) = client_workload(&serial_ctx(), 650 + seed);
+        assert_eq!(c, want_c, "client {seed}: chain diverged under faulted prefetch");
+        assert_eq!(sc, want_sc, "client {seed}: syrk diverged under faulted prefetch");
+    }
+}
+
+/// A cold multi-tile dgemm with deep lookahead actually *uses* the
+/// prefetcher (nonzero hit counter), stays bit-for-bit equal to the
+/// prefetch-off engine — and a warm repeat still moves zero host
+/// bytes, prefetch or not.
+#[test]
+fn cold_run_scores_prefetch_hits_and_warm_run_moves_no_host_bytes() {
+    let ctx = Context::new(2).with_arena(8 << 20).with_tile(32).with_prefetch(Some(8));
+    let n = 192;
+    let mut p = Prng::new(660);
+    let a = rand(&mut p, n * n);
+    let b = rand(&mut p, n * n);
+    let mut c = vec![0.0; n * n];
+    let rep1 =
+        api::dgemm(&ctx, Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut c, n)
+            .unwrap();
+    assert!(
+        rep1.transfers.prefetch_hits > 0,
+        "a cold 6x6-tile dgemm with depth-8 lookahead must serve some acquires from \
+         prefetched tiles (got {:?})",
+        rep1.transfers
+    );
+
+    let mut want = vec![0.0; n * n];
+    api::dgemm(&serial_ctx(), Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut want, n)
+        .unwrap();
+    assert_eq!(c, want, "prefetch-on cold run diverged from the prefetch-off engine");
+
+    // Warm repeat: A and B tiles are resident, beta == 0 so C is never
+    // read — the call must move zero bytes from the host even with the
+    // prefetcher walking the lookahead window.
+    let rep2 =
+        api::dgemm(&ctx, Trans::No, Trans::No, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut c, n)
+            .unwrap();
+    assert_eq!(c, want);
+    assert_eq!(
+        rep2.transfers.host_reads,
+        [0, 0, 0],
+        "warm call must be served entirely from the device caches"
+    );
+}
+
+/// Under real arena pressure the prefetcher must yield: TTL pins
+/// expire (or the OOM retry flushes them) so demand fills always win,
+/// the run completes without wedging, and the result is still
+/// bit-for-bit the prefetch-off answer. The engagement assertion
+/// (hits + wasted > 0) pins that the prefetcher did run before the
+/// headroom gate closed — this workload is ~2.4x the per-device arena.
+#[test]
+fn prefetch_ttl_yields_under_arena_pressure() {
+    let n = 320; // 10x10 grid of 8 KiB tiles: ~2.4 MiB of operands
+    let ctx = Context::new(2).with_arena(1 << 20).with_tile(32).with_prefetch(Some(16));
+    let mut p = Prng::new(670);
+    let a = rand(&mut p, n * n);
+    let b = rand(&mut p, n * n);
+    let c0 = rand(&mut p, n * n);
+    let mut c = c0.clone();
+    let rep = api::dgemm(&ctx, Trans::No, Trans::No, n, n, n, 1.1, &a, n, &b, n, -0.3, &mut c, n)
+        .unwrap();
+    assert!(
+        rep.transfers.prefetch_hits + rep.transfers.prefetch_wasted > 0,
+        "the prefetcher must have engaged before pressure gated it (got {:?})",
+        rep.transfers
+    );
+    let serial =
+        Context::new(2).with_arena(1 << 20).with_tile(32).with_persistent(false).with_prefetch(Some(0));
+    let mut want = c0.clone();
+    api::dgemm(&serial, Trans::No, Trans::No, n, n, n, 1.1, &a, n, &b, n, -0.3, &mut want, n)
+        .unwrap();
+    assert_eq!(c, want, "pressure-gated prefetch changed the result");
+}
+
+/// The latch protocol, raced directly: four threads demand the same
+/// cold tile on one device. Exactly one gets a `Fill` ticket and moves
+/// the bytes off-lock; the rest get `InFlight` (or `Ready` if they
+/// arrive after completion) and consume the same block as a hit.
+#[test]
+fn latch_contention_one_fill_everyone_else_waits() {
+    let set = Arc::new(Mutex::new(TileCacheSet::new(
+        &[1 << 16, 1 << 16],
+        vec![vec![1], vec![0]],
+        AllocStrategy::FastHeap,
+    )));
+    let key = TileKey::synthetic(0x1000, MatId::A, 0, 0);
+    let barrier = Arc::new(Barrier::new(4));
+    let fills = Arc::new(AtomicUsize::new(0));
+    let hits = Arc::new(AtomicUsize::new(0));
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let (set, barrier, fills, hits) =
+                (set.clone(), barrier.clone(), fills.clone(), hits.clone());
+            s.spawn(move || {
+                barrier.wait();
+                // The guard drops at the end of this statement — the
+                // classify step is the only time the cache lock is held.
+                let got = set.lock().unwrap().acquire_async(0, key, 4096).expect("arena fits");
+                match got {
+                    AsyncAcquire::Fill(t) => {
+                        assert!(matches!(t.source, Source::Host), "no holders anywhere yet");
+                        // Simulated off-lock copy: everyone else must be
+                        // parked on the latch, not spinning on the lock.
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                        let live = set.lock().unwrap().complete_fill(0, &key, t.peer_src());
+                        assert!(live, "nothing invalidated this block mid-fill");
+                        fills.fetch_add(1, Ordering::SeqCst);
+                    }
+                    AsyncAcquire::InFlight { latch, .. } => {
+                        assert!(latch.wait(), "the fill succeeded; waiters must see ready");
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }
+                    AsyncAcquire::Ready(acq) => {
+                        assert!(matches!(acq.source, Source::L1));
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(fills.load(Ordering::SeqCst), 1, "exactly one racer may own the copy");
+    assert_eq!(hits.load(Ordering::SeqCst), 3, "the other three consume the same block");
+    // All four took reader pins; the block frees once they release.
+    let mut set = set.lock().unwrap();
+    for _ in 0..4 {
+        set.release(0, &key);
+    }
+}
+
+/// Cross-device race on one key: while device 0's copy is mid-flight,
+/// device 1 must get its own independent *host* fill — a pending block
+/// is never selected as a P2P source. Once device 0 latches ready, it
+/// becomes a legitimate peer source for later keys.
+#[test]
+fn pending_block_is_never_a_peer_source() {
+    let mut set = TileCacheSet::new(
+        &[1 << 16, 1 << 16],
+        vec![vec![1], vec![0]],
+        AllocStrategy::FastHeap,
+    );
+    let key = TileKey::synthetic(0x2000, MatId::B, 1, 2);
+
+    let t0 = match set.acquire_async(0, key, 4096) {
+        Some(AsyncAcquire::Fill(t)) => t,
+        other => panic!("cold acquire must be a fill, got {other:?}"),
+    };
+    // Device 1 wants the same tile while device 0 is still copying.
+    match set.acquire_async(1, key, 4096) {
+        Some(AsyncAcquire::Fill(t1)) => {
+            assert!(
+                matches!(t1.source, Source::Host),
+                "a block mid-fill must not be served over P2P (got {:?})",
+                t1.source
+            );
+            assert!(set.complete_fill(1, &key, t1.peer_src()));
+        }
+        other => panic!("expected an independent host fill, got {other:?}"),
+    }
+    assert!(set.complete_fill(0, &key, t0.peer_src()));
+    set.release(0, &key);
+    set.release(1, &key);
+
+    // Control: once a holder is *ready*, the async path does plan P2P.
+    let key2 = TileKey::synthetic(0x3000, MatId::A, 0, 0);
+    let t2 = match set.acquire_async(0, key2, 4096) {
+        Some(AsyncAcquire::Fill(t)) => t,
+        other => panic!("cold acquire must be a fill, got {other:?}"),
+    };
+    assert!(set.complete_fill(0, &key2, t2.peer_src()));
+    match set.acquire_async(1, key2, 4096) {
+        Some(AsyncAcquire::Fill(t)) => {
+            assert!(
+                matches!(t.source, Source::Peer { src: 0, .. }),
+                "ready holder must be preferred over a host read (got {:?})",
+                t.source
+            );
+            assert!(set.complete_fill(1, &key2, t.peer_src()));
+        }
+        other => panic!("expected a P2P fill, got {other:?}"),
+    }
+    set.release(0, &key2);
+    set.release(1, &key2);
+}

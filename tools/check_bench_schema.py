@@ -92,6 +92,47 @@ def check_serve(path, doc):
     )
 
 
+def check_overlap(path, doc):
+    rows = doc["results"]
+    check_rows(
+        path,
+        rows,
+        required=(
+            "config", "phase", "wall_ms", "overlap_fraction",
+            "prefetch_hits", "prefetch_wasted", "host_read_tiles",
+        ),
+        numeric=(
+            "wall_ms", "overlap_fraction", "comm_s", "comm_hidden_s",
+            "prefetch_hits", "prefetch_wasted", "host_read_tiles",
+        ),
+    )
+    by_key = {(r["config"], r["phase"]): r for r in rows}
+    cold_on = by_key.get(("prefetch-on", "cold"))
+    if cold_on is None:
+        fail(path, "no ('prefetch-on', 'cold') row")
+    if not cold_on["overlap_fraction"] > 0:
+        fail(
+            path,
+            "prefetch-on cold run hid no comm under compute "
+            f"(overlap_fraction {cold_on['overlap_fraction']!r}) — the "
+            "lookahead pipeline measured zero overlap",
+        )
+    warm_on = by_key.get(("prefetch-on", "warm"))
+    if warm_on is None:
+        fail(path, "no ('prefetch-on', 'warm') row")
+    if warm_on["host_read_tiles"] != 0:
+        fail(
+            path,
+            f"prefetch-on warm call read {warm_on['host_read_tiles']} "
+            "tiles from the host — lookahead must never break residency",
+        )
+    probe = doc.get("lock_probe") or {}
+    if probe:
+        for key in ("off_max_ms", "on_max_ms"):
+            if not is_num(probe.get(key)):
+                fail(path, f"lock_probe.{key} missing or not a number")
+
+
 def check_runtime(path, doc):
     check_rows(path, doc["results"], required=(), numeric=())
     if not doc.get("recorder_overhead"):
@@ -105,6 +146,7 @@ EXTRA = {
     "dispatch_mixed": check_dispatch,
     "serve_throughput": check_serve,
     "call_overhead": check_runtime,
+    "transfer_overlap": check_overlap,
 }
 
 
